@@ -1,0 +1,107 @@
+//! Accuracy validation suite — reproduces §4.1 of the paper
+//! (experiments E1-E4 in DESIGN.md). Prints paper-claim vs measured.
+//!
+//!     cargo run --release --example validate
+
+use r2vm::coordinator::{run_image, SimConfig};
+use r2vm::interp::ExitReason;
+use r2vm::refsim::run_ref;
+use r2vm::workloads;
+
+fn pct(err: f64) -> String {
+    format!("{:.3}%", err * 100.0)
+}
+
+fn main() {
+    println!("r2vm-repro accuracy validation (paper §4.1)");
+    println!("reference = per-cycle 5-stage scoreboard simulator (RTL substitute)\n");
+
+    // ---- E1: pipeline accuracy on coremark-lite ------------------------------
+    {
+        let iters = 10;
+        let img = workloads::coremark::build(iters);
+        let (rex, rref) = run_ref(&img, 1, "atomic", 1_000_000_000);
+        let mut cfg = SimConfig::default();
+        cfg.pipeline = "inorder".into();
+        cfg.max_insts = 1_000_000_000;
+        let dbt = run_image(&cfg, &img);
+        assert_eq!(rex, dbt.exit, "functional divergence!");
+        let (rc, ri) = rref[0];
+        let (dc, di) = dbt.per_hart[0];
+        assert_eq!(ri, di);
+        let err = (dc as f64 - rc as f64).abs() / rc as f64;
+        // "CoreMark/MHz" analogue: work-per-cycle ratio.
+        println!("E1  pipeline model accuracy (coremark-lite, {} iters)", iters);
+        println!("    reference: {:>12} cycles  (CPI {:.4})", rc, rc as f64 / ri as f64);
+        println!("    InOrder:   {:>12} cycles  (CPI {:.4})", dc, dc as f64 / di as f64);
+        println!("    error: {}   [paper: <1%]\n", pct(err));
+    }
+
+    // ---- E2: Simple model identity -------------------------------------------
+    {
+        let img = workloads::coremark::build(3);
+        let mut cfg = SimConfig::default();
+        cfg.pipeline = "simple".into();
+        let r = run_image(&cfg, &img);
+        let (c, i) = r.per_hart[0];
+        println!("E2  Simple model check: mcycle == minstret");
+        println!("    mcycle {} / minstret {}  ->  {}   [paper: equal]\n", c, i, if c == i { "EQUAL" } else { "MISMATCH" });
+    }
+
+    // ---- E3: TLB / cache models on memlat -------------------------------------
+    {
+        println!("E3  memory model accuracy (memlat pointer chase, cycles per step)");
+        println!("    {:>9} {:>16} {:>16} {:>9}", "ws KiB", "reference", "dbt+L0", "error");
+        let steps = 40_000u64;
+        for ws_kb in [8u64, 32, 128] {
+            let img = workloads::memlat::build(ws_kb << 10, steps);
+            let (rex, rref) = run_ref(&img, 1, "cache", 1_000_000_000);
+            let mut cfg = SimConfig::default();
+            cfg.pipeline = "inorder".into();
+            cfg.set("memory", "cache").unwrap();
+            cfg.max_insts = 1_000_000_000;
+            let dbt = run_image(&cfg, &img);
+            let rc = match rex {
+                ExitReason::Exited(c) => c,
+                other => panic!("{:?}", other),
+            };
+            let dc = match dbt.exit {
+                ExitReason::Exited(c) => c,
+                other => panic!("{:?}", other),
+            };
+            let _ = rref;
+            let err = (dc as f64 - rc as f64).abs() / rc as f64;
+            println!(
+                "    {:>9} {:>16.3} {:>16.3} {:>9}",
+                ws_kb,
+                rc as f64 / steps as f64,
+                dc as f64 / steps as f64,
+                pct(err)
+            );
+        }
+        println!("    [paper: error lower than the ~10% coherency case]\n");
+    }
+
+    // ---- E4: MESI coherency on the contended spinlock --------------------------
+    {
+        let iters = 1_000;
+        let img = workloads::spinlock::build(2, iters);
+        let (rex, rref) = run_ref(&img, 2, "mesi", 1_000_000_000);
+        let mut cfg = SimConfig::default();
+        cfg.harts = 2;
+        cfg.pipeline = "inorder".into();
+        cfg.set("memory", "mesi").unwrap();
+        cfg.max_insts = 1_000_000_000;
+        let dbt = run_image(&cfg, &img);
+        assert_eq!(rex, dbt.exit, "functional divergence under MESI!");
+        let rc: u64 = rref.iter().map(|(c, _)| *c).max().unwrap();
+        let dc: u64 = dbt.per_hart.iter().map(|(c, _)| *c).max().unwrap();
+        let err = (dc as f64 - rc as f64).abs() / rc as f64;
+        println!("E4  MESI coherency accuracy (2-hart contended spinlock, {} iters/hart)", iters);
+        println!("    reference: {:>12} cycles (makespan)", rc);
+        println!("    dbt+L0:    {:>12} cycles (makespan)", dc);
+        println!("    error: {}   [paper: ~10%]\n", pct(err));
+    }
+
+    println!("validation complete.");
+}

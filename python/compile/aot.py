@@ -1,0 +1,77 @@
+"""AOT compilation: lower the Layer-2 analytics models to HLO text.
+
+Run once by `make artifacts`:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits HLO **text** (NOT serialized HloModuleProto — the image's
+xla_extension 0.5.1 rejects jax>=0.5's 64-bit-instruction-id protos; the
+text parser reassigns ids and round-trips cleanly; see
+/opt/xla-example/README.md) plus meta.json describing the baked shapes.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+# The artifacts carry i64 tags/counters; must be enabled before any trace.
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_cache_sim():
+    tags = jax.ShapeDtypeStruct((model.SETS, model.WAYS), jnp.int64)
+    ages = jax.ShapeDtypeStruct((model.SETS, model.WAYS), jnp.int32)
+    lines = jax.ShapeDtypeStruct((model.CHUNK,), jnp.int64)
+    return jax.jit(model.cache_sim_chunk).lower(tags, ages, lines)
+
+
+def lower_bpred():
+    counters = jax.ShapeDtypeStruct((model.BPRED_ENTRIES,), jnp.int32)
+    idx = jax.ShapeDtypeStruct((model.CHUNK,), jnp.int64)
+    taken = jax.ShapeDtypeStruct((model.CHUNK,), jnp.int32)
+    return jax.jit(model.bpred_chunk).lower(counters, idx, taken)
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for name, lower in [("cache_sim", lower_cache_sim), ("bpred", lower_bpred)]:
+        text = to_hlo_text(lower())
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    meta = {
+        "chunk": model.CHUNK,
+        "sets": model.SETS,
+        "ways": model.WAYS,
+        "line_shift": model.LINE_SHIFT,
+        "bpred_entries": model.BPRED_ENTRIES,
+    }
+    meta_path = os.path.join(args.out_dir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    print(f"wrote {meta_path}: {meta}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Layer-1 Pallas kernel: one bimodal branch-predictor step.
+
+2-bit saturating counters (0-1 predict not-taken, 2-3 predict taken),
+initialised to 1 — identical to `rust/src/analytics/native.rs::BpredSim`.
+A negative index is padding (no-op, correct = 0).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bpred_step_kernel(ctr_ref, idx_ref, taken_ref, out_ctr_ref, correct_ref):
+    idx = idx_ref[0]
+    taken = taken_ref[0]
+    is_pad = idx < 0
+    slot = jnp.where(is_pad, 0, idx).astype(jnp.int64)
+
+    ctr = pl.load(ctr_ref, (pl.dslice(slot, 1),))[0]
+    pred_taken = ctr >= 2
+    correct = (pred_taken == (taken != 0)) & ~is_pad
+    new_ctr = jnp.where(taken != 0, jnp.minimum(ctr + 1, 3), jnp.maximum(ctr - 1, 0))
+    new_ctr = jnp.where(is_pad, ctr, new_ctr)
+
+    out_ctr_ref[...] = ctr_ref[...]
+    pl.store(out_ctr_ref, (pl.dslice(slot, 1),), new_ctr[None])
+    correct_ref[0] = correct.astype(jnp.int32)
+
+
+def bpred_step(counters, idx, taken):
+    """One predictor step.
+
+    Args:
+      counters: int32[E] 2-bit counters.
+      idx: int64[] table index ((pc >> 1) & (E-1)), -1 = padding.
+      taken: int32[] actual outcome.
+
+    Returns: (counters', correct int32[]).
+    """
+    e = counters.shape[0]
+    out = pl.pallas_call(
+        _bpred_step_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((e,), counters.dtype),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ),
+        interpret=True,
+    )(counters, idx.reshape(1), taken.reshape(1))
+    new_ctr, correct = out
+    return new_ctr, correct[0]

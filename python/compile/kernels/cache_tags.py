@@ -1,0 +1,94 @@
+"""Layer-1 Pallas kernel: one exact-LRU cache step.
+
+The compute hot-spot of the trace-analytics engine (DESIGN.md §1): given
+the full tag/age state of a set-associative cache and one access (a line
+id), perform the tag match across all ways of the indexed set, the LRU age
+update, and victim selection — all inside the kernel, which loads/stores
+only the touched set row.
+
+Semantics mirror `rust/src/analytics/native.rs::LruCacheSim` exactly (the
+cross-language test X1 in `rust/tests/` asserts bit-identical hit counts):
+
+ * invalid ways: tag == -1, age == INVALID_AGE;
+ * hit: ways younger than the touched way age by +1, touched way -> 0;
+ * miss: victim = first invalid way, else the (unique) oldest; all valid
+   ways age by +1; victim gets the new tag with age 0;
+ * a negative line id is padding: the step is a no-op with hit = 0.
+
+Pallas is lowered with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); on a real TPU the (sets × ways) state tiles into VMEM via
+the BlockSpec and the way-compare vectorises on the VPU — see DESIGN.md
+§Hardware-Adaptation.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Age assigned to invalid ways; must exceed any reachable age (ages are
+# bounded by the trace length per chunk, far below 2**30). A plain Python
+# int: a jnp array here would be captured as a constant by the kernel.
+INVALID_AGE = 1 << 30
+
+
+def _cache_step_kernel(tags_ref, ages_ref, line_ref, out_tags_ref, out_ages_ref, hit_ref):
+    """Process one access against the (S, W) state in place."""
+    line = line_ref[0]
+    is_pad = line < 0
+    n_sets = tags_ref.shape[0]
+    set_idx = jnp.where(is_pad, 0, (line & (n_sets - 1)).astype(jnp.int64))
+
+    row_tags = pl.load(tags_ref, (pl.dslice(set_idx, 1), slice(None)))[0]
+    row_ages = pl.load(ages_ref, (pl.dslice(set_idx, 1), slice(None)))[0]
+
+    match = row_tags == line
+    hit = jnp.any(match) & ~is_pad
+
+    # ---- hit path: re-age ways younger than the touched way ----------------
+    hit_age = jnp.min(jnp.where(match, row_ages, INVALID_AGE))
+    hit_ages = jnp.where(row_ages < hit_age, row_ages + 1, row_ages)
+    hit_ages = jnp.where(match, 0, hit_ages)
+
+    # ---- miss path: evict oldest (invalid ways sort oldest) ----------------
+    victim = jnp.argmax(row_ages)
+    valid = row_ages != INVALID_AGE
+    miss_ages = jnp.where(valid, row_ages + 1, row_ages)
+    way_ids = jax.lax.iota(jnp.int32, row_tags.shape[0])
+    is_victim = way_ids == victim
+    miss_ages = jnp.where(is_victim, 0, miss_ages)
+    miss_tags = jnp.where(is_victim, line, row_tags)
+
+    new_tags = jnp.where(is_pad, row_tags, jnp.where(hit, row_tags, miss_tags))
+    new_ages = jnp.where(is_pad, row_ages, jnp.where(hit, hit_ages, miss_ages))
+
+    # Write the whole state through, then overwrite the touched row (the
+    # kernel owns the full buffers; rows other than set_idx are unchanged).
+    out_tags_ref[...] = tags_ref[...]
+    out_ages_ref[...] = ages_ref[...]
+    pl.store(out_tags_ref, (pl.dslice(set_idx, 1), slice(None)), new_tags[None, :])
+    pl.store(out_ages_ref, (pl.dslice(set_idx, 1), slice(None)), new_ages[None, :])
+    hit_ref[0] = hit.astype(jnp.int32)
+
+
+def cache_step(tags, ages, line):
+    """One exact-LRU access step.
+
+    Args:
+      tags: int64[S, W] line tags (-1 invalid).
+      ages: int32[S, W] LRU ages (INVALID_AGE for invalid ways).
+      line: int64[] accessed line id (paddr >> line_shift), -1 = padding.
+
+    Returns: (tags', ages', hit int32[]).
+    """
+    s, w = tags.shape
+    out = pl.pallas_call(
+        _cache_step_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((s, w), tags.dtype),
+            jax.ShapeDtypeStruct((s, w), ages.dtype),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ),
+        interpret=True,
+    )(tags, ages, line.reshape(1))
+    new_tags, new_ages, hit = out
+    return new_tags, new_ages, hit[0]

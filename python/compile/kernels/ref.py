@@ -1,0 +1,114 @@
+"""Pure-jnp (and pure-Python) oracles for the Pallas kernels.
+
+`cache_step_ref` / `bpred_step_ref` are jnp implementations with no Pallas
+involvement — the correctness signal for the kernels. `PyLru` / `PyBpred`
+are plain-Python models used by the hypothesis sweeps as a third,
+independent formulation.
+"""
+
+import jax
+import jax.numpy as jnp
+
+INVALID_AGE = 1 << 30
+
+
+def cache_step_ref(tags, ages, line):
+    """Reference exact-LRU step (same contract as cache_tags.cache_step)."""
+    n_sets, _n_ways = tags.shape
+    is_pad = line < 0
+    set_idx = jnp.where(is_pad, 0, line & (n_sets - 1)).astype(jnp.int64)
+    row_tags = jax.lax.dynamic_slice(tags, (set_idx, 0), (1, tags.shape[1]))[0]
+    row_ages = jax.lax.dynamic_slice(ages, (set_idx, 0), (1, ages.shape[1]))[0]
+
+    match = row_tags == line
+    hit = jnp.any(match) & ~is_pad
+
+    hit_age = jnp.min(jnp.where(match, row_ages, INVALID_AGE))
+    hit_ages = jnp.where(row_ages < hit_age, row_ages + 1, row_ages)
+    hit_ages = jnp.where(match, 0, hit_ages)
+
+    victim = jnp.argmax(row_ages)
+    valid = row_ages != INVALID_AGE
+    miss_ages = jnp.where(valid, row_ages + 1, row_ages)
+    way_ids = jax.lax.iota(jnp.int32, row_tags.shape[0])
+    is_victim = way_ids == victim
+    miss_ages = jnp.where(is_victim, 0, miss_ages)
+    miss_tags = jnp.where(is_victim, line, row_tags)
+
+    new_row_tags = jnp.where(is_pad, row_tags, jnp.where(hit, row_tags, miss_tags))
+    new_row_ages = jnp.where(is_pad, row_ages, jnp.where(hit, hit_ages, miss_ages))
+    new_tags = jax.lax.dynamic_update_slice(tags, new_row_tags[None, :], (set_idx, 0))
+    new_ages = jax.lax.dynamic_update_slice(ages, new_row_ages[None, :], (set_idx, 0))
+    return new_tags, new_ages, hit.astype(jnp.int32)
+
+
+def bpred_step_ref(counters, idx, taken):
+    """Reference bimodal predictor step."""
+    is_pad = idx < 0
+    slot = jnp.where(is_pad, 0, idx).astype(jnp.int64)
+    ctr = counters[slot]
+    pred_taken = ctr >= 2
+    correct = (pred_taken == (taken != 0)) & ~is_pad
+    new_ctr = jnp.where(taken != 0, jnp.minimum(ctr + 1, 3), jnp.maximum(ctr - 1, 0))
+    new_ctr = jnp.where(is_pad, ctr, new_ctr)
+    counters = counters.at[slot].set(new_ctr)
+    return counters, correct.astype(jnp.int32)
+
+
+class PyLru:
+    """Plain-Python exact-LRU model (mirrors rust analytics::native)."""
+
+    def __init__(self, sets, ways):
+        self.sets = sets
+        self.ways = ways
+        self.tags = [[None] * ways for _ in range(sets)]
+        self.ages = [[None] * ways for _ in range(sets)]
+        self.hits = 0
+        self.accesses = 0
+
+    def access(self, line):
+        if line < 0:
+            return False
+        self.accesses += 1
+        s = line & (self.sets - 1)
+        tags, ages = self.tags[s], self.ages[s]
+        if line in tags:
+            w = tags.index(line)
+            old = ages[w]
+            for k in range(self.ways):
+                if ages[k] is not None and ages[k] < old:
+                    ages[k] += 1
+            ages[w] = 0
+            self.hits += 1
+            return True
+        # miss: first invalid way, else oldest
+        if None in tags:
+            victim = tags.index(None)
+        else:
+            victim = max(range(self.ways), key=lambda k: ages[k])
+        for k in range(self.ways):
+            if ages[k] is not None:
+                ages[k] += 1
+        tags[victim] = line
+        ages[victim] = 0
+        return False
+
+
+class PyBpred:
+    """Plain-Python bimodal predictor."""
+
+    def __init__(self, entries):
+        self.ctr = [1] * entries
+        self.correct = 0
+        self.predictions = 0
+
+    def step(self, idx, taken):
+        if idx < 0:
+            return False
+        self.predictions += 1
+        c = self.ctr[idx]
+        ok = (c >= 2) == bool(taken)
+        self.ctr[idx] = min(c + 1, 3) if taken else max(c - 1, 0)
+        if ok:
+            self.correct += 1
+        return ok

@@ -1,0 +1,93 @@
+"""Layer-2 JAX model: chunk-level trace-analytics computations.
+
+Wraps the Layer-1 Pallas kernels (`kernels.cache_tags`, `kernels.bpred`)
+in `lax.scan` over a trace chunk, carrying the model state. These are the
+functions AOT-lowered to HLO by `aot.py` and executed from Rust
+(`rust/src/runtime/analytics_exe.rs`) — Python never runs at simulation
+time.
+
+Input/output contracts (mirrored in analytics_exe.rs):
+
+  cache_sim_chunk(tags i64[S,W], ages i32[S,W], lines i64[T])
+      -> (tags', ages', hits i64, processed i64)
+  bpred_chunk(counters i32[E], idx i64[T], taken i32[T])
+      -> (counters', correct i64)
+
+A negative line/idx is padding and contributes nothing.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bpred as bpred_kernel
+from .kernels import cache_tags
+
+# Default geometry baked into the artifacts (see aot.py / meta.json).
+CHUNK = 2048
+SETS = 64
+WAYS = 4
+LINE_SHIFT = 6
+BPRED_ENTRIES = 1024
+
+INVALID_AGE = cache_tags.INVALID_AGE
+
+
+def initial_cache_state(sets=SETS, ways=WAYS):
+    tags = jnp.full((sets, ways), -1, dtype=jnp.int64)
+    ages = jnp.full((sets, ways), INVALID_AGE, dtype=jnp.int32)
+    return tags, ages
+
+
+def initial_bpred_state(entries=BPRED_ENTRIES):
+    return jnp.ones((entries,), dtype=jnp.int32)
+
+
+def cache_sim_chunk(tags, ages, lines):
+    """Replay one chunk of line ids through the exact-LRU cache."""
+
+    def body(carry, line):
+        tags, ages = carry
+        tags, ages, hit = cache_tags.cache_step(tags, ages, line)
+        return (tags, ages), hit
+
+    (tags, ages), hits = jax.lax.scan(body, (tags, ages), lines)
+    total_hits = jnp.sum(hits.astype(jnp.int64))
+    processed = jnp.sum((lines >= 0).astype(jnp.int64))
+    return tags, ages, total_hits, processed
+
+
+def cache_sim_chunk_ref(tags, ages, lines):
+    """Same computation through the pure-jnp reference kernel."""
+    from .kernels import ref
+
+    def body(carry, line):
+        tags, ages = carry
+        tags, ages, hit = ref.cache_step_ref(tags, ages, line)
+        return (tags, ages), hit
+
+    (tags, ages), hits = jax.lax.scan(body, (tags, ages), lines)
+    return tags, ages, jnp.sum(hits.astype(jnp.int64)), jnp.sum((lines >= 0).astype(jnp.int64))
+
+
+def bpred_chunk(counters, idx, taken):
+    """Replay one chunk of branch outcomes through the bimodal predictor."""
+
+    def body(ctr, x):
+        i, t = x
+        ctr, correct = bpred_kernel.bpred_step(ctr, i, t)
+        return ctr, correct
+
+    counters, correct = jax.lax.scan(body, counters, (idx, taken))
+    return counters, jnp.sum(correct.astype(jnp.int64))
+
+
+def bpred_chunk_ref(counters, idx, taken):
+    from .kernels import ref
+
+    def body(ctr, x):
+        i, t = x
+        ctr, correct = ref.bpred_step_ref(ctr, i, t)
+        return ctr, correct
+
+    counters, correct = jax.lax.scan(body, counters, (idx, taken))
+    return counters, jnp.sum(correct.astype(jnp.int64))

@@ -1,0 +1,197 @@
+"""Kernel-vs-reference correctness: the CORE Layer-1 signal.
+
+Three-way agreement is required on every trace:
+  Pallas kernel (interpret=True)  ==  pure-jnp reference  ==  plain Python.
+Hypothesis sweeps shapes, dtype ranges and trace contents.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import bpred as bpred_kernel
+from compile.kernels import cache_tags, ref
+
+
+def init_cache(sets, ways):
+    tags = jnp.full((sets, ways), -1, dtype=jnp.int64)
+    ages = jnp.full((sets, ways), ref.INVALID_AGE, dtype=jnp.int32)
+    return tags, ages
+
+
+def run_trace_kernel(sets, ways, lines):
+    tags, ages = init_cache(sets, ways)
+    hits = []
+    for line in lines:
+        tags, ages, hit = cache_tags.cache_step(tags, ages, jnp.int64(line))
+        hits.append(int(hit))
+    return tags, ages, hits
+
+
+def run_trace_ref(sets, ways, lines):
+    tags, ages = init_cache(sets, ways)
+    hits = []
+    for line in lines:
+        tags, ages, hit = ref.cache_step_ref(tags, ages, jnp.int64(line))
+        hits.append(int(hit))
+    return tags, ages, hits
+
+
+# ---------------------------------------------------------------------------
+# Deterministic cases
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_miss_basic():
+    # 1 set x 2 ways: A B A B -> M M H H
+    _, _, hits = run_trace_kernel(1, 2, [0, 1, 0, 1])
+    assert hits == [0, 0, 1, 1]
+
+
+def test_cache_lru_eviction_order():
+    # A B (touch A) C -> C evicts B
+    _, _, hits = run_trace_kernel(1, 2, [0, 1, 0, 2, 0, 1])
+    #                                M  M  H  M  H  M
+    assert hits == [0, 0, 1, 0, 1, 0]
+
+
+def test_cache_padding_is_noop():
+    tags0, ages0 = init_cache(4, 2)
+    tags, ages, hit = cache_tags.cache_step(tags0, ages0, jnp.int64(-1))
+    assert int(hit) == 0
+    np.testing.assert_array_equal(np.asarray(tags), np.asarray(tags0))
+    np.testing.assert_array_equal(np.asarray(ages), np.asarray(ages0))
+
+
+def test_cache_sets_are_independent():
+    # Same tag bits, different sets (sets=4): lines 0,1,2,3 map to distinct sets.
+    _, _, hits = run_trace_kernel(4, 1, [0, 1, 2, 3, 0, 1, 2, 3])
+    assert hits == [0, 0, 0, 0, 1, 1, 1, 1]
+
+
+def test_bpred_learns():
+    ctr = jnp.ones((16,), dtype=jnp.int32)
+    correct = []
+    for _ in range(6):
+        ctr, c = bpred_kernel.bpred_step(ctr, jnp.int64(3), jnp.int32(1))
+        correct.append(int(c))
+    # initial counter 1 predicts NT; first step wrong, then learns.
+    assert correct[0] == 0
+    assert all(c == 1 for c in correct[1:])
+
+
+def test_bpred_padding_is_noop():
+    ctr = jnp.ones((16,), dtype=jnp.int32)
+    ctr2, c = bpred_kernel.bpred_step(ctr, jnp.int64(-1), jnp.int32(1))
+    assert int(c) == 0
+    np.testing.assert_array_equal(np.asarray(ctr2), np.asarray(ctr))
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: kernel == jnp ref == python model
+# ---------------------------------------------------------------------------
+
+geometries = st.sampled_from([(1, 1), (1, 2), (2, 2), (4, 4), (8, 2), (16, 4)])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    geom=geometries,
+    data=st.data(),
+)
+def test_cache_kernel_matches_references(geom, data):
+    sets, ways = geom
+    # Lines drawn from a small universe to force conflicts; sprinkle padding.
+    universe = sets * ways * 3
+    lines = data.draw(
+        st.lists(
+            st.one_of(st.integers(min_value=0, max_value=universe), st.just(-1)),
+            min_size=1,
+            max_size=40,
+        )
+    )
+    k_tags, k_ages, k_hits = run_trace_kernel(sets, ways, lines)
+    r_tags, r_ages, r_hits = run_trace_ref(sets, ways, lines)
+    assert k_hits == r_hits
+    np.testing.assert_array_equal(np.asarray(k_tags), np.asarray(r_tags))
+    np.testing.assert_array_equal(np.asarray(k_ages), np.asarray(r_ages))
+
+    py = ref.PyLru(sets, ways)
+    py_hits = [int(py.access(line)) if line >= 0 else 0 for line in lines]
+    assert k_hits == py_hits
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    entries=st.sampled_from([4, 16, 64]),
+    data=st.data(),
+)
+def test_bpred_kernel_matches_references(entries, data):
+    steps = data.draw(
+        st.lists(
+            st.tuples(
+                st.one_of(st.integers(min_value=0, max_value=entries - 1), st.just(-1)),
+                st.booleans(),
+            ),
+            min_size=1,
+            max_size=60,
+        )
+    )
+    ctr_k = jnp.ones((entries,), dtype=jnp.int32)
+    ctr_r = jnp.ones((entries,), dtype=jnp.int32)
+    py = ref.PyBpred(entries)
+    for idx, taken in steps:
+        ctr_k, ck = bpred_kernel.bpred_step(ctr_k, jnp.int64(idx), jnp.int32(taken))
+        ctr_r, cr = ref.bpred_step_ref(ctr_r, jnp.int64(idx), jnp.int32(taken))
+        assert int(ck) == int(cr)
+        if idx >= 0:
+            ok = py.step(idx, taken)
+            assert int(ck) == int(ok)
+    np.testing.assert_array_equal(np.asarray(ctr_k), np.asarray(ctr_r))
+
+
+# ---------------------------------------------------------------------------
+# Chunk-level (scan) agreement — what actually gets AOT-compiled
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("trace_len", [1, 7, 64])
+def test_cache_chunk_matches_ref_chunk(trace_len):
+    rng = np.random.default_rng(42 + trace_len)
+    lines = rng.integers(-1, 64, size=trace_len).astype(np.int64)
+    tags, ages = model.initial_cache_state(8, 2)
+    kt, ka, kh, kp = jax.jit(model.cache_sim_chunk)(tags, ages, jnp.asarray(lines))
+    rt, ra, rh, rp = jax.jit(model.cache_sim_chunk_ref)(tags, ages, jnp.asarray(lines))
+    assert int(kh) == int(rh)
+    assert int(kp) == int(rp)
+    np.testing.assert_array_equal(np.asarray(kt), np.asarray(rt))
+    np.testing.assert_array_equal(np.asarray(ka), np.asarray(ra))
+
+
+def test_cache_chunk_state_carries_across_chunks():
+    # Split one trace into two chunks: hits must equal the single-chunk run.
+    rng = np.random.default_rng(7)
+    lines = rng.integers(0, 32, size=40).astype(np.int64)
+    tags, ages = model.initial_cache_state(4, 2)
+    _, _, h_all, _ = jax.jit(model.cache_sim_chunk)(tags, ages, jnp.asarray(lines))
+    t, a = model.initial_cache_state(4, 2)
+    t, a, h1, _ = jax.jit(model.cache_sim_chunk)(t, a, jnp.asarray(lines[:20]))
+    _, _, h2, _ = jax.jit(model.cache_sim_chunk)(t, a, jnp.asarray(lines[20:]))
+    assert int(h_all) == int(h1) + int(h2)
+
+
+def test_bpred_chunk_matches_ref():
+    rng = np.random.default_rng(3)
+    idx = rng.integers(-1, 16, size=50).astype(np.int64)
+    taken = rng.integers(0, 2, size=50).astype(np.int32)
+    ctr = model.initial_bpred_state(16)
+    k_ctr, k_c = jax.jit(model.bpred_chunk)(ctr, jnp.asarray(idx), jnp.asarray(taken))
+    r_ctr, r_c = jax.jit(model.bpred_chunk_ref)(ctr, jnp.asarray(idx), jnp.asarray(taken))
+    assert int(k_c) == int(r_c)
+    np.testing.assert_array_equal(np.asarray(k_ctr), np.asarray(r_ctr))

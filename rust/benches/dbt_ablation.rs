@@ -1,0 +1,34 @@
+//! A3 ablation (paper §3.1): translation caching and block chaining.
+//! Compares the full DBT engine, chaining disabled (hash lookup per block
+//! transition), and no translation at all (the naive interpreter).
+//!
+//!     cargo bench --bench dbt_ablation
+
+use r2vm::bench::{bench, print_table};
+use r2vm::coordinator::{run_image, SimConfig};
+use r2vm::workloads;
+
+fn main() {
+    let image = workloads::coremark::build(300);
+    let mut rows = Vec::new();
+
+    let mut cfg = SimConfig::default();
+    cfg.pipeline = "simple".into();
+    cfg.max_insts = 2_000_000_000;
+    rows.push(bench("DBT + chaining (default)", 3, || run_image(&cfg, &image).total_insts));
+
+    let mut nochain = cfg.clone();
+    nochain.no_chaining = true;
+    rows.push(bench("DBT, chaining disabled", 3, || run_image(&nochain, &image).total_insts));
+
+    let mut interp = cfg.clone();
+    interp.set("mode", "interp").unwrap();
+    rows.push(bench("no translation (interpreter)", 2, || run_image(&interp, &image).total_insts));
+
+    print_table("A3: DBT ablation (coremark-lite, simple+atomic)", &rows);
+    println!("\n  chaining speedup:    {:.2}x", rows[0].mips() / rows[1].mips());
+    println!(
+        "  translation speedup: {:.2}x over re-decoding every instruction",
+        rows[1].mips() / rows[2].mips()
+    );
+}

@@ -1,0 +1,71 @@
+//! Figure 5 reproduction: simulator performance (MIPS) across execution
+//! modes, on the parallel dedup workload (PARSEC-dedup role) with 4
+//! simulated harts.
+//!
+//! Bars (paper → here):
+//!   gem5 atomic/timing (kIPS)      → naive per-cycle interpreter
+//!   QEMU                           → (not rebuildable; see DESIGN.md §3)
+//!   R2VM functional, parallel      → mode=parallel, atomic+atomic
+//!   R2VM functional, single-thread → lockstep, atomic+atomic
+//!   R2VM simple pipeline, lockstep → lockstep, simple+atomic
+//!   R2VM inorder+cache             → lockstep, inorder+cache
+//!   R2VM inorder+MESI (cycle-level)→ lockstep, inorder+mesi
+//!
+//! Absolute numbers differ from the paper (micro-op dispatch vs native
+//! codegen); the *shape* — parallel > single ≳ simple ≫ interp, timing
+//! models close to lockstep-functional — is the reproduced claim.
+//!
+//!     cargo bench --bench fig5_performance
+
+use r2vm::bench::{bench, print_table, Measurement};
+use r2vm::coordinator::{run_image, SimConfig};
+use r2vm::workloads;
+
+fn run_cfg(
+    name: &str,
+    image: &r2vm::asm::Image,
+    mode: &str,
+    pipeline: &str,
+    memory: &str,
+    harts: usize,
+    runs: u32,
+) -> Measurement {
+    let mut cfg = SimConfig::default();
+    cfg.harts = harts;
+    cfg.pipeline = pipeline.into();
+    cfg.set("mode", mode).unwrap();
+    cfg.set("memory", memory).unwrap();
+    cfg.max_insts = 2_000_000_000;
+    bench(name, runs, || {
+        let r = run_image(&cfg, image);
+        assert!(matches!(r.exit, r2vm::interp::ExitReason::Exited(_)), "{:?}", r.exit);
+        r.total_insts
+    })
+}
+
+fn main() {
+    let harts = 4;
+    let image = workloads::dedup::build(harts, 8192);
+
+    let mut rows = Vec::new();
+    rows.push(run_cfg("interp (gem5-like per-cycle)", &image, "interp", "simple", "atomic", harts, 2));
+    rows.push(run_cfg("lockstep inorder+mesi (cycle-level)", &image, "lockstep", "inorder", "mesi", harts, 3));
+    rows.push(run_cfg("lockstep inorder+cache", &image, "lockstep", "inorder", "cache", harts, 3));
+    rows.push(run_cfg("lockstep simple+atomic", &image, "lockstep", "simple", "atomic", harts, 3));
+    rows.push(run_cfg("functional single-thread (atomic)", &image, "lockstep", "atomic", "atomic", harts, 3));
+    rows.push(run_cfg("functional parallel (QEMU-role)", &image, "parallel", "atomic", "atomic", harts, 3));
+
+    print_table("Figure 5: dedup, 4 simulated harts", &rows);
+
+    let get = |name: &str| rows.iter().find(|m| m.name.starts_with(name)).unwrap().mips();
+    let interp = get("interp");
+    let mesi = get("lockstep inorder+mesi");
+    let simple = get("lockstep simple");
+    let single = get("functional single");
+    let parallel = get("functional parallel");
+    println!("\nshape checks (paper's qualitative claims):");
+    println!("  parallel / single-thread functional : {:>6.2}x  (expect > 1, toward #cores)", parallel / single);
+    println!("  single-thread functional / lockstep simple : {:>6.2}x (lockstep overhead)", single / simple);
+    println!("  cycle-level (inorder+mesi) / interp baseline : {:>6.2}x  (expect ~'100x gem5')", mesi / interp);
+    println!("  pipeline+coherence overhead vs lockstep simple : {:>6.2}x (expect small)", simple / mesi);
+}

@@ -1,0 +1,36 @@
+//! A2 ablation (paper §3.4.1): the L0 data/instruction cache layer lets
+//! the hot path bypass the memory model. Disabling it ("invoke the memory
+//! model for each access") shows what the fast path is worth.
+//!
+//!     cargo bench --bench l0_ablation
+
+use r2vm::bench::{bench, print_table};
+use r2vm::coordinator::{run_image, SimConfig};
+use r2vm::workloads;
+
+fn main() {
+    let mut rows = Vec::new();
+    for (wname, image) in [
+        ("memlat-32K", workloads::memlat::build(32 << 10, 2_000_000)),
+        ("coremark", workloads::coremark::build(150)),
+    ] {
+        for (mode, no_l0) in [("with L0 (default)", false), ("L0 bypassed", true)] {
+            let mut cfg = SimConfig::default();
+            cfg.pipeline = "inorder".into();
+            cfg.set("memory", "cache").unwrap();
+            cfg.no_l0 = no_l0;
+            cfg.max_insts = 2_000_000_000;
+            rows.push(bench(&format!("{:<12} {}", wname, mode), 3, || {
+                run_image(&cfg, &image).total_insts
+            }));
+        }
+    }
+    print_table("A2: L0 fast-path ablation (inorder+cache)", &rows);
+    for pair in rows.chunks(2) {
+        println!(
+            "  {:<12} L0 speedup: {:.2}x",
+            pair[0].name.split_whitespace().next().unwrap(),
+            pair[0].mips() / pair[1].mips()
+        );
+    }
+}

@@ -1,0 +1,12 @@
+//! Trace-driven analytics subsystem (Layers 1/2 bridge).
+//!
+//! `trace` holds the capture buffers filled by the execution engines;
+//! `engine` (see `runtime`) replays chunks through the AOT-compiled
+//! JAX/Pallas models (exact-LRU cache simulation, branch prediction) and
+//! a native Rust reference used for validation and benchmarking.
+
+
+pub mod native;
+pub mod trace;
+
+pub use trace::{BranchRecord, MemRecord, TraceCapture};

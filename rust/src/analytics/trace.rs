@@ -1,0 +1,98 @@
+//! Trace capture buffers for the XLA-offloaded analytics engine (Layer 2).
+//!
+//! When enabled, the execution engines record every data access and branch
+//! outcome. Chunks are drained by `analytics::engine` and replayed through
+//! the AOT-compiled exact-LRU cache / branch-predictor models — the paper's
+//! §3.4.1 "invoke the memory model for each access" escape hatch, made
+//! affordable by batching (see DESIGN.md §1).
+
+/// One recorded data access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemRecord {
+    pub paddr: u64,
+    pub write: bool,
+    pub hart: u8,
+}
+
+/// One recorded conditional-branch outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BranchRecord {
+    pub pc: u64,
+    pub taken: bool,
+    pub hart: u8,
+}
+
+/// Bounded capture buffers. `enabled` is checked on the hot path; keep the
+/// struct small.
+pub struct TraceCapture {
+    pub mem: Vec<MemRecord>,
+    pub branches: Vec<BranchRecord>,
+    /// Stop recording past this many records (per buffer).
+    pub capacity: usize,
+    /// Count of records dropped due to a full buffer (reported, never
+    /// silently truncated).
+    pub dropped: u64,
+}
+
+impl TraceCapture {
+    pub fn new(capacity: usize) -> TraceCapture {
+        TraceCapture {
+            mem: Vec::with_capacity(capacity.min(1 << 20)),
+            branches: Vec::with_capacity(capacity.min(1 << 20)),
+            capacity,
+            dropped: 0,
+        }
+    }
+
+    #[inline(always)]
+    pub fn record_mem(&mut self, paddr: u64, write: bool, hart: u8) {
+        if self.mem.len() < self.capacity {
+            self.mem.push(MemRecord { paddr, write, hart });
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    #[inline(always)]
+    pub fn record_branch(&mut self, pc: u64, taken: bool, hart: u8) {
+        if self.branches.len() < self.capacity {
+            self.branches.push(BranchRecord { pc, taken, hart });
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    /// Drain up to `n` memory records from the front.
+    pub fn drain_mem(&mut self, n: usize) -> Vec<MemRecord> {
+        let n = n.min(self.mem.len());
+        self.mem.drain(..n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_respected() {
+        let mut t = TraceCapture::new(2);
+        t.record_mem(1, false, 0);
+        t.record_mem(2, true, 0);
+        t.record_mem(3, false, 0);
+        assert_eq!(t.mem.len(), 2);
+        assert_eq!(t.dropped, 1);
+    }
+
+    #[test]
+    fn drain() {
+        let mut t = TraceCapture::new(10);
+        for i in 0..5 {
+            t.record_mem(i, false, 0);
+        }
+        let d = t.drain_mem(3);
+        assert_eq!(d.len(), 3);
+        assert_eq!(d[0].paddr, 0);
+        assert_eq!(t.mem.len(), 2);
+        assert_eq!(t.mem[0].paddr, 3);
+    }
+}

@@ -1,0 +1,641 @@
+//! Programmatic RV64 assembler.
+//!
+//! There is no RISC-V cross-toolchain in this environment, so every guest
+//! workload (see `crate::workloads`) is written against this builder API:
+//! label-based control flow, common pseudo-instructions, and data
+//! directives, producing a flat binary image placed at a chosen base
+//! address.
+//!
+//! ```
+//! use r2vm::asm::*;
+//! let mut a = Assembler::new(0x8000_0000);
+//! let loop_ = a.new_label();
+//! a.li(A0, 10);
+//! a.bind(loop_);
+//! a.addi(A0, A0, -1);
+//! a.bnez(A0, loop_);
+//! let img = a.finish();
+//! assert_eq!(img.base, 0x8000_0000);
+//! ```
+
+use crate::isa::op::*;
+use crate::isa::encode::encode;
+
+// ---- ABI register names ----------------------------------------------------
+pub const ZERO: u8 = 0;
+pub const RA: u8 = 1;
+pub const SP: u8 = 2;
+pub const GP: u8 = 3;
+pub const TP: u8 = 4;
+pub const T0: u8 = 5;
+pub const T1: u8 = 6;
+pub const T2: u8 = 7;
+pub const S0: u8 = 8;
+pub const S1: u8 = 9;
+pub const A0: u8 = 10;
+pub const A1: u8 = 11;
+pub const A2: u8 = 12;
+pub const A3: u8 = 13;
+pub const A4: u8 = 14;
+pub const A5: u8 = 15;
+pub const A6: u8 = 16;
+pub const A7: u8 = 17;
+pub const S2: u8 = 18;
+pub const S3: u8 = 19;
+pub const S4: u8 = 20;
+pub const S5: u8 = 21;
+pub const S6: u8 = 22;
+pub const S7: u8 = 23;
+pub const S8: u8 = 24;
+pub const S9: u8 = 25;
+pub const S10: u8 = 26;
+pub const S11: u8 = 27;
+pub const T3: u8 = 28;
+pub const T4: u8 = 29;
+pub const T5: u8 = 30;
+pub const T6: u8 = 31;
+
+/// A forward- or backward-referenced code/data location.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Label(usize);
+
+#[derive(Debug, Clone, Copy)]
+enum Fix {
+    /// B-type offset to label.
+    Branch(Label),
+    /// J-type offset to label.
+    Jal(Label),
+    /// `auipc rd, %pcrel_hi(label)` + `addi rd, rd, %pcrel_lo` pair
+    /// starting at this offset (8 bytes).
+    La(Label),
+    /// 64-bit absolute address of label stored in data.
+    Abs64(Label),
+}
+
+/// Assembled flat binary image.
+#[derive(Debug, Clone)]
+pub struct Image {
+    pub base: u64,
+    pub bytes: Vec<u8>,
+    /// Entry point (defaults to `base`).
+    pub entry: u64,
+}
+
+/// The assembler/builder.
+pub struct Assembler {
+    base: u64,
+    buf: Vec<u8>,
+    labels: Vec<Option<u64>>,
+    fixups: Vec<(usize, Fix)>,
+    entry: u64,
+}
+
+impl Assembler {
+    pub fn new(base: u64) -> Assembler {
+        Assembler { base, buf: Vec::new(), labels: Vec::new(), fixups: Vec::new(), entry: base }
+    }
+
+    /// Current emission address.
+    pub fn pc(&self) -> u64 {
+        self.base + self.buf.len() as u64
+    }
+
+    pub fn set_entry_here(&mut self) {
+        self.entry = self.pc();
+    }
+
+    // ---- labels -------------------------------------------------------------
+
+    pub fn new_label(&mut self) -> Label {
+        self.labels.push(None);
+        Label(self.labels.len() - 1)
+    }
+
+    /// Bind `label` to the current position.
+    pub fn bind(&mut self, label: Label) {
+        assert!(self.labels[label.0].is_none(), "label bound twice");
+        self.labels[label.0] = Some(self.pc());
+    }
+
+    /// Create a label already bound to the current position.
+    pub fn here(&mut self) -> Label {
+        let l = self.new_label();
+        self.bind(l);
+        l
+    }
+
+    // ---- raw emission ---------------------------------------------------------
+
+    pub fn emit(&mut self, op: Op) {
+        let word = encode(op);
+        self.buf.extend_from_slice(&word.to_le_bytes());
+    }
+
+    pub fn emit_raw32(&mut self, word: u32) {
+        self.buf.extend_from_slice(&word.to_le_bytes());
+    }
+
+    pub fn emit_raw16(&mut self, half: u16) {
+        self.buf.extend_from_slice(&half.to_le_bytes());
+    }
+
+    // ---- data directives --------------------------------------------------------
+
+    pub fn d8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    pub fn d16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn d32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn d64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Emit an 8-byte absolute address of `label`.
+    pub fn dlabel(&mut self, label: Label) {
+        self.fixups.push((self.buf.len(), Fix::Abs64(label)));
+        self.d64(0);
+    }
+
+    pub fn zero_fill(&mut self, n: usize) {
+        self.buf.resize(self.buf.len() + n, 0);
+    }
+
+    pub fn align(&mut self, align: usize) {
+        while self.buf.len() % align != 0 {
+            self.buf.push(0);
+        }
+    }
+
+    pub fn bytes(&mut self, data: &[u8]) {
+        self.buf.extend_from_slice(data);
+    }
+
+    // ---- instructions (direct forms) ------------------------------------------
+
+    pub fn lui(&mut self, rd: u8, imm20: i32) {
+        self.emit(Op::Lui { rd, imm: imm20 << 12 });
+    }
+    pub fn auipc(&mut self, rd: u8, imm20: i32) {
+        self.emit(Op::Auipc { rd, imm: imm20 << 12 });
+    }
+    pub fn addi(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.emit(Op::AluImm { op: AluOp::Add, word: false, rd, rs1, imm });
+    }
+    pub fn addiw(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.emit(Op::AluImm { op: AluOp::Add, word: true, rd, rs1, imm });
+    }
+    pub fn andi(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.emit(Op::AluImm { op: AluOp::And, word: false, rd, rs1, imm });
+    }
+    pub fn ori(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.emit(Op::AluImm { op: AluOp::Or, word: false, rd, rs1, imm });
+    }
+    pub fn xori(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.emit(Op::AluImm { op: AluOp::Xor, word: false, rd, rs1, imm });
+    }
+    pub fn slti(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.emit(Op::AluImm { op: AluOp::Slt, word: false, rd, rs1, imm });
+    }
+    pub fn sltiu(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.emit(Op::AluImm { op: AluOp::Sltu, word: false, rd, rs1, imm });
+    }
+    pub fn slli(&mut self, rd: u8, rs1: u8, sh: i32) {
+        self.emit(Op::AluImm { op: AluOp::Sll, word: false, rd, rs1, imm: sh });
+    }
+    pub fn srli(&mut self, rd: u8, rs1: u8, sh: i32) {
+        self.emit(Op::AluImm { op: AluOp::Srl, word: false, rd, rs1, imm: sh });
+    }
+    pub fn srai(&mut self, rd: u8, rs1: u8, sh: i32) {
+        self.emit(Op::AluImm { op: AluOp::Sra, word: false, rd, rs1, imm: sh });
+    }
+    pub fn slliw(&mut self, rd: u8, rs1: u8, sh: i32) {
+        self.emit(Op::AluImm { op: AluOp::Sll, word: true, rd, rs1, imm: sh });
+    }
+
+    pub fn add(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.emit(Op::Alu { op: AluOp::Add, word: false, rd, rs1, rs2 });
+    }
+    pub fn addw(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.emit(Op::Alu { op: AluOp::Add, word: true, rd, rs1, rs2 });
+    }
+    pub fn sub(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.emit(Op::Alu { op: AluOp::Sub, word: false, rd, rs1, rs2 });
+    }
+    pub fn subw(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.emit(Op::Alu { op: AluOp::Sub, word: true, rd, rs1, rs2 });
+    }
+    pub fn sll(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.emit(Op::Alu { op: AluOp::Sll, word: false, rd, rs1, rs2 });
+    }
+    pub fn srl(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.emit(Op::Alu { op: AluOp::Srl, word: false, rd, rs1, rs2 });
+    }
+    pub fn sra(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.emit(Op::Alu { op: AluOp::Sra, word: false, rd, rs1, rs2 });
+    }
+    pub fn and(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.emit(Op::Alu { op: AluOp::And, word: false, rd, rs1, rs2 });
+    }
+    pub fn or(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.emit(Op::Alu { op: AluOp::Or, word: false, rd, rs1, rs2 });
+    }
+    pub fn xor(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.emit(Op::Alu { op: AluOp::Xor, word: false, rd, rs1, rs2 });
+    }
+    pub fn slt(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.emit(Op::Alu { op: AluOp::Slt, word: false, rd, rs1, rs2 });
+    }
+    pub fn sltu(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.emit(Op::Alu { op: AluOp::Sltu, word: false, rd, rs1, rs2 });
+    }
+
+    pub fn mul(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.emit(Op::Mul { op: MulOp::Mul, word: false, rd, rs1, rs2 });
+    }
+    pub fn mulw(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.emit(Op::Mul { op: MulOp::Mul, word: true, rd, rs1, rs2 });
+    }
+    pub fn div(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.emit(Op::Mul { op: MulOp::Div, word: false, rd, rs1, rs2 });
+    }
+    pub fn divu(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.emit(Op::Mul { op: MulOp::Divu, word: false, rd, rs1, rs2 });
+    }
+    pub fn rem(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.emit(Op::Mul { op: MulOp::Rem, word: false, rd, rs1, rs2 });
+    }
+    pub fn remu(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.emit(Op::Mul { op: MulOp::Remu, word: false, rd, rs1, rs2 });
+    }
+
+    pub fn lb(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.emit(Op::Load { width: MemWidth::B, signed: true, rd, rs1, imm });
+    }
+    pub fn lbu(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.emit(Op::Load { width: MemWidth::B, signed: false, rd, rs1, imm });
+    }
+    pub fn lh(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.emit(Op::Load { width: MemWidth::H, signed: true, rd, rs1, imm });
+    }
+    pub fn lhu(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.emit(Op::Load { width: MemWidth::H, signed: false, rd, rs1, imm });
+    }
+    pub fn lw(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.emit(Op::Load { width: MemWidth::W, signed: true, rd, rs1, imm });
+    }
+    pub fn lwu(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.emit(Op::Load { width: MemWidth::W, signed: false, rd, rs1, imm });
+    }
+    pub fn ld(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.emit(Op::Load { width: MemWidth::D, signed: true, rd, rs1, imm });
+    }
+    pub fn sb(&mut self, rs2: u8, rs1: u8, imm: i32) {
+        self.emit(Op::Store { width: MemWidth::B, rs1, rs2, imm });
+    }
+    pub fn sh(&mut self, rs2: u8, rs1: u8, imm: i32) {
+        self.emit(Op::Store { width: MemWidth::H, rs1, rs2, imm });
+    }
+    pub fn sw(&mut self, rs2: u8, rs1: u8, imm: i32) {
+        self.emit(Op::Store { width: MemWidth::W, rs1, rs2, imm });
+    }
+    pub fn sd(&mut self, rs2: u8, rs1: u8, imm: i32) {
+        self.emit(Op::Store { width: MemWidth::D, rs1, rs2, imm });
+    }
+
+    pub fn lr_w(&mut self, rd: u8, rs1: u8) {
+        self.emit(Op::Lr { width: MemWidth::W, rd, rs1 });
+    }
+    pub fn lr_d(&mut self, rd: u8, rs1: u8) {
+        self.emit(Op::Lr { width: MemWidth::D, rd, rs1 });
+    }
+    pub fn sc_w(&mut self, rd: u8, rs2: u8, rs1: u8) {
+        self.emit(Op::Sc { width: MemWidth::W, rd, rs1, rs2 });
+    }
+    pub fn sc_d(&mut self, rd: u8, rs2: u8, rs1: u8) {
+        self.emit(Op::Sc { width: MemWidth::D, rd, rs1, rs2 });
+    }
+    pub fn amoadd_w(&mut self, rd: u8, rs2: u8, rs1: u8) {
+        self.emit(Op::Amo { op: AmoOp::Add, width: MemWidth::W, rd, rs1, rs2 });
+    }
+    pub fn amoadd_d(&mut self, rd: u8, rs2: u8, rs1: u8) {
+        self.emit(Op::Amo { op: AmoOp::Add, width: MemWidth::D, rd, rs1, rs2 });
+    }
+    pub fn amoswap_w(&mut self, rd: u8, rs2: u8, rs1: u8) {
+        self.emit(Op::Amo { op: AmoOp::Swap, width: MemWidth::W, rd, rs1, rs2 });
+    }
+
+    pub fn csrrw(&mut self, rd: u8, csr: u16, rs1: u8) {
+        self.emit(Op::Csr { op: CsrOp::Rw, imm_form: false, rd, rs1, csr });
+    }
+    pub fn csrrs(&mut self, rd: u8, csr: u16, rs1: u8) {
+        self.emit(Op::Csr { op: CsrOp::Rs, imm_form: false, rd, rs1, csr });
+    }
+    pub fn csrrc(&mut self, rd: u8, csr: u16, rs1: u8) {
+        self.emit(Op::Csr { op: CsrOp::Rc, imm_form: false, rd, rs1, csr });
+    }
+    pub fn csrrwi(&mut self, rd: u8, csr: u16, zimm: u8) {
+        self.emit(Op::Csr { op: CsrOp::Rw, imm_form: true, rd, rs1: zimm, csr });
+    }
+    pub fn csrrsi(&mut self, rd: u8, csr: u16, zimm: u8) {
+        self.emit(Op::Csr { op: CsrOp::Rs, imm_form: true, rd, rs1: zimm, csr });
+    }
+    /// csrr rd, csr
+    pub fn csrr(&mut self, rd: u8, csr: u16) {
+        self.csrrs(rd, csr, ZERO);
+    }
+    /// csrw csr, rs
+    pub fn csrw(&mut self, csr: u16, rs1: u8) {
+        self.csrrw(ZERO, csr, rs1);
+    }
+
+    pub fn ecall(&mut self) {
+        self.emit(Op::Ecall);
+    }
+    pub fn ebreak(&mut self) {
+        self.emit(Op::Ebreak);
+    }
+    pub fn mret(&mut self) {
+        self.emit(Op::Mret);
+    }
+    pub fn sret(&mut self) {
+        self.emit(Op::Sret);
+    }
+    pub fn wfi(&mut self) {
+        self.emit(Op::Wfi);
+    }
+    pub fn fence(&mut self) {
+        self.emit(Op::Fence);
+    }
+    pub fn fence_i(&mut self) {
+        self.emit(Op::FenceI);
+    }
+    pub fn sfence_vma(&mut self) {
+        self.emit(Op::SfenceVma { rs1: 0, rs2: 0 });
+    }
+
+    // ---- label-target control flow ------------------------------------------
+
+    pub fn branch(&mut self, cond: BrCond, rs1: u8, rs2: u8, target: Label) {
+        self.fixups.push((self.buf.len(), Fix::Branch(target)));
+        self.emit(Op::Branch { cond, rs1, rs2, imm: 0 });
+    }
+    pub fn beq(&mut self, rs1: u8, rs2: u8, t: Label) {
+        self.branch(BrCond::Eq, rs1, rs2, t);
+    }
+    pub fn bne(&mut self, rs1: u8, rs2: u8, t: Label) {
+        self.branch(BrCond::Ne, rs1, rs2, t);
+    }
+    pub fn blt(&mut self, rs1: u8, rs2: u8, t: Label) {
+        self.branch(BrCond::Lt, rs1, rs2, t);
+    }
+    pub fn bge(&mut self, rs1: u8, rs2: u8, t: Label) {
+        self.branch(BrCond::Ge, rs1, rs2, t);
+    }
+    pub fn bltu(&mut self, rs1: u8, rs2: u8, t: Label) {
+        self.branch(BrCond::Ltu, rs1, rs2, t);
+    }
+    pub fn bgeu(&mut self, rs1: u8, rs2: u8, t: Label) {
+        self.branch(BrCond::Geu, rs1, rs2, t);
+    }
+    pub fn beqz(&mut self, rs1: u8, t: Label) {
+        self.beq(rs1, ZERO, t);
+    }
+    pub fn bnez(&mut self, rs1: u8, t: Label) {
+        self.bne(rs1, ZERO, t);
+    }
+
+    pub fn jal(&mut self, rd: u8, target: Label) {
+        self.fixups.push((self.buf.len(), Fix::Jal(target)));
+        self.emit(Op::Jal { rd, imm: 0 });
+    }
+    pub fn j(&mut self, target: Label) {
+        self.jal(ZERO, target);
+    }
+    pub fn call(&mut self, target: Label) {
+        self.jal(RA, target);
+    }
+    pub fn ret(&mut self) {
+        self.emit(Op::Jalr { rd: 0, rs1: RA, imm: 0 });
+    }
+    pub fn jr(&mut self, rs1: u8) {
+        self.emit(Op::Jalr { rd: 0, rs1, imm: 0 });
+    }
+    pub fn jalr(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.emit(Op::Jalr { rd, rs1, imm });
+    }
+
+    // ---- pseudo-instructions ---------------------------------------------------
+
+    pub fn nop(&mut self) {
+        self.addi(ZERO, ZERO, 0);
+    }
+    pub fn mv(&mut self, rd: u8, rs: u8) {
+        self.addi(rd, rs, 0);
+    }
+    pub fn neg(&mut self, rd: u8, rs: u8) {
+        self.sub(rd, ZERO, rs);
+    }
+    pub fn seqz(&mut self, rd: u8, rs: u8) {
+        self.sltiu(rd, rs, 1);
+    }
+    pub fn snez(&mut self, rd: u8, rs: u8) {
+        self.sltu(rd, ZERO, rs);
+    }
+
+    /// Load an arbitrary 64-bit constant (standard recursive lui/addi/slli
+    /// decomposition with sign-carry compensation — addi immediates are
+    /// 12-bit *signed*).
+    pub fn li(&mut self, rd: u8, value: i64) {
+        // Fits in lui+addiw (any 32-bit signed value)?
+        if value == value as i32 as i64 {
+            let v = value as i32;
+            let hi = (v.wrapping_add(0x800)) >> 12;
+            let lo = v.wrapping_sub(hi << 12);
+            if hi != 0 {
+                self.lui(rd, hi);
+                if lo != 0 {
+                    self.addiw(rd, rd, lo);
+                }
+            } else {
+                self.addi(rd, ZERO, lo);
+            }
+            return;
+        }
+        // Split off the sign-extended low 12 bits; the remainder is a
+        // multiple of 4096, materialised recursively then shifted.
+        let lo = ((value & 0xfff) ^ 0x800).wrapping_sub(0x800);
+        let hi = value.wrapping_sub(lo) >> 12;
+        self.li(rd, hi);
+        self.slli(rd, rd, 12);
+        if lo != 0 {
+            self.addi(rd, rd, lo as i32);
+        }
+    }
+
+    /// Load the address of `label` (pc-relative; patched at finish).
+    pub fn la(&mut self, rd: u8, label: Label) {
+        self.fixups.push((self.buf.len(), Fix::La(label)));
+        self.auipc(rd, 0);
+        self.addi(rd, rd, 0);
+    }
+
+    // ---- finalisation -------------------------------------------------------------
+
+    /// Resolve all fixups and produce the image.
+    ///
+    /// Panics on unbound labels or out-of-range offsets — workloads are
+    /// built at startup, so assembling is a programming error surface, not
+    /// a runtime one.
+    pub fn finish(mut self) -> Image {
+        for (off, fix) in std::mem::take(&mut self.fixups) {
+            let pc = self.base + off as u64;
+            let patch32 = |buf: &mut Vec<u8>, off: usize, word: u32| {
+                buf[off..off + 4].copy_from_slice(&word.to_le_bytes());
+            };
+            match fix {
+                Fix::Branch(l) => {
+                    let target = self.labels[l.0].expect("unbound label");
+                    let delta = target.wrapping_sub(pc) as i64;
+                    assert!((-4096..4096).contains(&delta), "branch out of range: {}", delta);
+                    let raw = u32::from_le_bytes(self.buf[off..off + 4].try_into().unwrap());
+                    let op = match crate::isa::decode32(raw) {
+                        Op::Branch { cond, rs1, rs2, .. } => {
+                            Op::Branch { cond, rs1, rs2, imm: delta as i32 }
+                        }
+                        other => panic!("branch fixup on {:?}", other),
+                    };
+                    patch32(&mut self.buf, off, encode(op));
+                }
+                Fix::Jal(l) => {
+                    let target = self.labels[l.0].expect("unbound label");
+                    let delta = target.wrapping_sub(pc) as i64;
+                    assert!((-(1 << 20)..(1 << 20)).contains(&delta), "jal out of range");
+                    let raw = u32::from_le_bytes(self.buf[off..off + 4].try_into().unwrap());
+                    let op = match crate::isa::decode32(raw) {
+                        Op::Jal { rd, .. } => Op::Jal { rd, imm: delta as i32 },
+                        other => panic!("jal fixup on {:?}", other),
+                    };
+                    patch32(&mut self.buf, off, encode(op));
+                }
+                Fix::La(l) => {
+                    let target = self.labels[l.0].expect("unbound label");
+                    let delta = target.wrapping_sub(pc) as i64;
+                    assert!(delta == delta as i32 as i64, "la out of range");
+                    let d = delta as i32;
+                    let hi = (d.wrapping_add(0x800)) >> 12;
+                    let lo = d.wrapping_sub(hi << 12);
+                    let raw = u32::from_le_bytes(self.buf[off..off + 4].try_into().unwrap());
+                    let rd = match crate::isa::decode32(raw) {
+                        Op::Auipc { rd, .. } => rd,
+                        other => panic!("la fixup on {:?}", other),
+                    };
+                    patch32(&mut self.buf, off, encode(Op::Auipc { rd, imm: hi << 12 }));
+                    patch32(
+                        &mut self.buf,
+                        off + 4,
+                        encode(Op::AluImm { op: AluOp::Add, word: false, rd, rs1: rd, imm: lo }),
+                    );
+                }
+                Fix::Abs64(l) => {
+                    let target = self.labels[l.0].expect("unbound label");
+                    self.buf[off..off + 8].copy_from_slice(&target.to_le_bytes());
+                }
+            }
+        }
+        Image { base: self.base, bytes: self.buf, entry: self.entry }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{decode32, Op};
+
+    #[test]
+    fn backward_branch() {
+        let mut a = Assembler::new(0x8000_0000);
+        let top = a.here();
+        a.addi(A0, A0, -1); // 0x8000_0000
+        a.bnez(A0, top); // 0x8000_0004, offset -4
+        let img = a.finish();
+        let raw = u32::from_le_bytes(img.bytes[4..8].try_into().unwrap());
+        match decode32(raw) {
+            Op::Branch { imm: -4, .. } => {}
+            other => panic!("{:?}", other),
+        }
+    }
+
+    #[test]
+    fn forward_jal() {
+        let mut a = Assembler::new(0x8000_0000);
+        let end = a.new_label();
+        a.j(end); // offset 8
+        a.nop();
+        a.bind(end);
+        let img = a.finish();
+        let raw = u32::from_le_bytes(img.bytes[0..4].try_into().unwrap());
+        assert_eq!(decode32(raw), Op::Jal { rd: 0, imm: 8 });
+    }
+
+    #[test]
+    fn li_values() {
+        // li correctness is checked end-to-end by executing on the
+        // interpreter (see sys::exec tests); here just check it assembles.
+        let mut a = Assembler::new(0);
+        a.li(A0, 0);
+        a.li(A0, 1);
+        a.li(A0, -1);
+        a.li(A0, 0x7fff_ffff);
+        a.li(A0, -0x8000_0000);
+        a.li(A0, 0x1234_5678_9abc_def0);
+        a.li(A0, i64::MIN);
+        a.li(A0, i64::MAX);
+        let img = a.finish();
+        assert!(img.bytes.len() % 4 == 0);
+    }
+
+    #[test]
+    fn la_pcrel() {
+        let mut a = Assembler::new(0x8000_0000);
+        let data = a.new_label();
+        a.la(A1, data);
+        a.ret();
+        a.align(8);
+        a.bind(data);
+        a.d64(0xdead_beef);
+        let img = a.finish();
+        // auipc a1, hi; addi a1, a1, lo must sum to the data address
+        let auipc = u32::from_le_bytes(img.bytes[0..4].try_into().unwrap());
+        let addi = u32::from_le_bytes(img.bytes[4..8].try_into().unwrap());
+        let (hi, lo) = match (decode32(auipc), decode32(addi)) {
+            (Op::Auipc { rd: 11, imm: hi }, Op::AluImm { rd: 11, rs1: 11, imm: lo, .. }) => (hi, lo),
+            other => panic!("{:?}", other),
+        };
+        let addr = 0x8000_0000u64.wrapping_add(hi as i64 as u64).wrapping_add(lo as i64 as u64);
+        assert_eq!(addr, img.base + 16);
+    }
+
+    #[test]
+    fn dlabel_abs() {
+        let mut a = Assembler::new(0x1000);
+        let fn_ = a.new_label();
+        a.dlabel(fn_);
+        a.bind(fn_);
+        a.ret();
+        let img = a.finish();
+        assert_eq!(u64::from_le_bytes(img.bytes[0..8].try_into().unwrap()), 0x1008);
+    }
+
+    #[test]
+    #[should_panic(expected = "unbound label")]
+    fn unbound_label_panics() {
+        let mut a = Assembler::new(0);
+        let l = a.new_label();
+        a.j(l);
+        a.finish();
+    }
+}

@@ -1,0 +1,89 @@
+//! Internal benchmarking harness (criterion is unavailable offline; see
+//! DESIGN.md §3). Measures wall time over repeated runs and reports the
+//! MIPS-style numbers the paper's Figure 5 uses.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Best (minimum) wall time across runs.
+    pub best: Duration,
+    pub mean: Duration,
+    /// Work units (e.g. guest instructions) per run.
+    pub work: u64,
+    pub runs: u32,
+}
+
+impl Measurement {
+    /// Work units per second at the best run.
+    pub fn rate(&self) -> f64 {
+        self.work as f64 / self.best.as_secs_f64()
+    }
+
+    /// Millions of work units per second (MIPS when work = instructions).
+    pub fn mips(&self) -> f64 {
+        self.rate() / 1e6
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<34} {:>10.2} MIPS   best {:>9.3}s  mean {:>9.3}s  ({} insts, {} runs)",
+            self.name,
+            self.mips(),
+            self.best.as_secs_f64(),
+            self.mean.as_secs_f64(),
+            self.work,
+            self.runs
+        )
+    }
+}
+
+/// Run `f` (which returns the number of work units performed) `runs` times
+/// after one warmup, reporting the best time.
+pub fn bench(name: &str, runs: u32, mut f: impl FnMut() -> u64) -> Measurement {
+    let _ = f(); // warmup (fills code caches, page cache, etc.)
+    let mut best = Duration::MAX;
+    let mut total = Duration::ZERO;
+    let mut work = 0;
+    for _ in 0..runs {
+        let t0 = Instant::now();
+        work = f();
+        let dt = t0.elapsed();
+        total += dt;
+        if dt < best {
+            best = dt;
+        }
+    }
+    Measurement { name: name.into(), best, mean: total / runs.max(1), work, runs }
+}
+
+/// Simple fixed-width table printer for benchmark reports.
+pub fn print_table(title: &str, rows: &[Measurement]) {
+    println!("\n=== {} ===", title);
+    for m in rows {
+        println!("{}", m.row());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_work() {
+        let m = bench("spin", 3, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+            10_000
+        });
+        assert_eq!(m.work, 10_000);
+        assert!(m.best <= m.mean);
+        assert!(m.rate() > 0.0);
+        assert!(m.row().contains("spin"));
+    }
+}

@@ -1,0 +1,185 @@
+//! Simulation configuration: model selection, geometry, timing, engine
+//! mode. Parsed from CLI arguments (no external config-parsing crates are
+//! available offline; the format is deliberately simple `key=value`).
+
+use crate::mem::cache_model::CacheGeometry;
+use crate::mem::MemTiming;
+
+/// Which execution engine drives the simulation (Figure 5's x-axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineMode {
+    /// Naive per-cycle interpreter (gem5-like baseline).
+    Interp,
+    /// Single-threaded lockstep DBT (cycle-level modes).
+    Lockstep,
+    /// Multi-threaded functional DBT (QEMU-like; atomic models only).
+    Parallel,
+}
+
+impl EngineMode {
+    pub fn parse(s: &str) -> Option<EngineMode> {
+        match s {
+            "interp" => Some(EngineMode::Interp),
+            "lockstep" => Some(EngineMode::Lockstep),
+            "parallel" => Some(EngineMode::Parallel),
+            _ => None,
+        }
+    }
+}
+
+/// Full simulation configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub harts: usize,
+    pub dram_bytes: usize,
+    pub pipeline: String,
+    pub memory: String,
+    pub mode: EngineMode,
+    pub max_insts: u64,
+    pub timing: MemTiming,
+    pub l1_geom: CacheGeometry,
+    pub l2_geom: CacheGeometry,
+    /// L0 line shift (6 = 64 B lines; 12 turns L0 into a TLB, §3.5).
+    pub line_shift: u32,
+    /// Enable analytics trace capture with this many records.
+    pub trace_capacity: usize,
+    /// A1 ablation: yield per instruction.
+    pub naive_yield: bool,
+    /// A3 ablation: disable block chaining.
+    pub no_chaining: bool,
+    /// A2 ablation: bypass L0 (memory model on every access).
+    pub no_l0: bool,
+    /// Echo guest console output to stdout.
+    pub console: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            harts: 1,
+            dram_bytes: 64 << 20,
+            pipeline: "simple".into(),
+            memory: "atomic".into(),
+            mode: EngineMode::Lockstep,
+            max_insts: u64::MAX,
+            timing: MemTiming::default(),
+            l1_geom: CacheGeometry::default_l1(),
+            l2_geom: CacheGeometry { sets: 256, ways: 8, line_shift: 6 },
+            line_shift: 6,
+            trace_capacity: 0,
+            naive_yield: false,
+            no_chaining: false,
+            no_l0: false,
+            console: false,
+        }
+    }
+}
+
+/// CLI parse error.
+#[derive(Debug)]
+pub struct ParseError(pub String);
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl SimConfig {
+    /// Apply one `--key value` pair; returns Err on unknown keys/values.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), ParseError> {
+        let bad = |what: &str| ParseError(format!("invalid value for --{}: {}", what, value));
+        match key {
+            "harts" => self.harts = value.parse().map_err(|_| bad("harts"))?,
+            "dram-mb" => {
+                let mb: usize = value.parse().map_err(|_| bad("dram-mb"))?;
+                self.dram_bytes = mb << 20;
+            }
+            "pipeline" => {
+                if crate::pipeline::by_name(value).is_none() {
+                    return Err(ParseError(format!(
+                        "unknown pipeline model '{}' (atomic|simple|inorder)",
+                        value
+                    )));
+                }
+                self.pipeline = value.into();
+            }
+            "memory" => {
+                if !matches!(value, "atomic" | "tlb" | "cache" | "mesi") {
+                    return Err(ParseError(format!(
+                        "unknown memory model '{}' (atomic|tlb|cache|mesi)",
+                        value
+                    )));
+                }
+                self.memory = value.into();
+            }
+            "mode" => {
+                self.mode = EngineMode::parse(value)
+                    .ok_or_else(|| ParseError(format!("unknown mode '{}'", value)))?;
+            }
+            "max-insts" => self.max_insts = value.parse().map_err(|_| bad("max-insts"))?,
+            "line-bytes" => {
+                let b: u64 = value.parse().map_err(|_| bad("line-bytes"))?;
+                if !b.is_power_of_two() || !(4..=4096).contains(&b) {
+                    return Err(bad("line-bytes"));
+                }
+                self.line_shift = b.trailing_zeros();
+            }
+            "trace" => self.trace_capacity = value.parse().map_err(|_| bad("trace"))?,
+            _ => return Err(ParseError(format!("unknown option --{}", key))),
+        }
+        Ok(())
+    }
+
+    /// Consistency checks mirroring Table 2's constraints.
+    pub fn validate(&self) -> Result<(), ParseError> {
+        if self.harts == 0 || self.harts > 32 {
+            return Err(ParseError("harts must be in 1..=32".into()));
+        }
+        if self.mode == EngineMode::Parallel && self.memory != "atomic" {
+            return Err(ParseError(
+                "parallel execution requires the atomic memory model (Table 2)".into(),
+            ));
+        }
+        if self.memory == "mesi" && self.mode == EngineMode::Parallel {
+            return Err(ParseError("MESI requires lockstep execution (Table 2)".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_valid() {
+        SimConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn set_and_validate() {
+        let mut c = SimConfig::default();
+        c.set("harts", "4").unwrap();
+        c.set("pipeline", "inorder").unwrap();
+        c.set("memory", "mesi").unwrap();
+        c.set("line-bytes", "4096").unwrap();
+        assert_eq!(c.line_shift, 12);
+        c.validate().unwrap();
+        assert!(c.set("pipeline", "o3").is_err());
+        assert!(c.set("nonsense", "1").is_err());
+        assert!(c.set("line-bytes", "48").is_err());
+    }
+
+    #[test]
+    fn parallel_requires_atomic() {
+        let mut c = SimConfig::default();
+        c.set("mode", "parallel").unwrap();
+        c.set("memory", "mesi").unwrap();
+        assert!(c.validate().is_err());
+        c.set("memory", "atomic").unwrap();
+        c.validate().unwrap();
+    }
+}

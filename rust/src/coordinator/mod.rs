@@ -1,0 +1,276 @@
+//! Simulation coordinator: builds engines from a [`SimConfig`], dispatches
+//! between the three execution modes (Figure 5), aggregates statistics,
+//! and exposes the model inventory (Tables 1 and 2).
+
+pub mod config;
+pub mod parallel;
+
+pub use config::{EngineMode, SimConfig};
+
+use crate::analytics::trace::TraceCapture;
+use crate::asm::Image;
+use crate::fiber::FiberEngine;
+use crate::interp::{ExitReason, InterpEngine};
+use crate::mem::cache_model::CacheModel;
+use crate::mem::mesi::MesiModel;
+use crate::mem::tlb_model::TlbModel;
+use crate::mem::{AtomicModel, MemoryModel};
+use crate::sys::loader::load_flat;
+use crate::sys::System;
+use std::time::Instant;
+
+/// Construct a memory model by name.
+pub fn memory_model_by_name(
+    name: &str,
+    cfg: &SimConfig,
+) -> Option<Box<dyn MemoryModel>> {
+    match name {
+        "atomic" => Some(Box::new(AtomicModel)),
+        "tlb" => Some(Box::new(TlbModel::new(cfg.harts, cfg.timing))),
+        "cache" => Some(Box::new(CacheModel::with_geometry(cfg.harts, cfg.timing, cfg.l1_geom))),
+        "mesi" => Some(Box::new(MesiModel::with_geometry(
+            cfg.harts,
+            cfg.timing,
+            cfg.l1_geom,
+            cfg.l2_geom,
+        ))),
+        _ => None,
+    }
+}
+
+/// Pre-implemented pipeline models — Table 1 of the paper.
+pub const PIPELINE_TABLE: &[(&str, &str)] = &[
+    ("Atomic", "Cycle count not tracked"),
+    ("Simple", "Each non-memory instruction takes one cycle"),
+    ("InOrder", "Models a simple 5-stage in-order scalar pipeline"),
+];
+
+/// Pre-implemented memory models — Table 2 of the paper.
+pub const MEMORY_TABLE: &[(&str, &str)] = &[
+    ("Atomic", "Memory accesses not tracked"),
+    ("TLB", "TLB hit rate collected; cache not simulated"),
+    ("Cache", "Cache hit rate collected; TLB and cache coherency not modelled; parallel execution allowed"),
+    ("MESI", "A directory-based MESI cache coherency protocol with a shared L2. Lockstep execution required."),
+];
+
+/// Render Tables 1 + 2 for the `models` CLI command.
+pub fn models_report() -> String {
+    let mut s = String::new();
+    s.push_str("Table 1: pipeline models\n");
+    for (name, desc) in PIPELINE_TABLE {
+        s.push_str(&format!("  {:<8} {}\n", name, desc));
+    }
+    s.push_str("\nTable 2: memory models\n");
+    for (name, desc) in MEMORY_TABLE {
+        s.push_str(&format!("  {:<8} {}\n", name, desc));
+    }
+    s
+}
+
+/// Result of one simulation run.
+pub struct RunReport {
+    pub exit: ExitReason,
+    pub wall: std::time::Duration,
+    pub total_insts: u64,
+    /// Per-hart (cycle, instret).
+    pub per_hart: Vec<(u64, u64)>,
+    pub console: String,
+    /// Memory-model statistics snapshot.
+    pub model_stats: Vec<(&'static str, u64)>,
+    /// Engine statistics (lockstep mode only).
+    pub engine_stats: Option<crate::fiber::EngineStats>,
+}
+
+impl RunReport {
+    pub fn mips(&self) -> f64 {
+        self.total_insts as f64 / self.wall.as_secs_f64() / 1e6
+    }
+
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "exit={:?} insts={} wall={:.3}s mips={:.1}\n",
+            self.exit,
+            self.total_insts,
+            self.wall.as_secs_f64(),
+            self.mips()
+        );
+        for (i, (cyc, ins)) in self.per_hart.iter().enumerate() {
+            s.push_str(&format!("  hart{}: mcycle={} minstret={}\n", i, cyc, ins));
+        }
+        for (k, v) in &self.model_stats {
+            s.push_str(&format!("  {}={}\n", k, v));
+        }
+        s
+    }
+}
+
+/// Build the `System` described by `cfg`.
+pub fn build_system(cfg: &SimConfig) -> System {
+    let model = memory_model_by_name(&cfg.memory, cfg).expect("validated");
+    let mut sys = System::with_model(cfg.harts, cfg.dram_bytes, model);
+    sys.set_line_shift(cfg.line_shift);
+    sys.force_cold = cfg.no_l0;
+    sys.bus.uart.echo = cfg.console;
+    if cfg.trace_capacity > 0 {
+        sys.trace = Some(TraceCapture::new(cfg.trace_capacity));
+    }
+    sys.simctrl_state = simctrl_encoding(&cfg.pipeline, &cfg.memory, cfg.line_shift);
+    sys
+}
+
+/// Pack the current configuration in the SIMCTRL CSR encoding.
+pub fn simctrl_encoding(pipeline: &str, memory: &str, line_shift: u32) -> u64 {
+    let p = match pipeline {
+        "atomic" => 1,
+        "simple" => 2,
+        "inorder" | "in-order" => 3,
+        _ => 0,
+    };
+    let m: u64 = match memory {
+        "atomic" => 1,
+        "tlb" => 2,
+        "cache" => 3,
+        "mesi" => 4,
+        _ => 0,
+    };
+    p | (m << 4) | (((1u64 << line_shift) & 0xfff) << 8)
+}
+
+/// Run `image` to completion under `cfg`.
+pub fn run_image(cfg: &SimConfig, image: &Image) -> RunReport {
+    cfg.validate().expect("invalid configuration");
+    match cfg.mode {
+        EngineMode::Interp => {
+            let sys = build_system(cfg);
+            let mut eng = InterpEngine::new(sys);
+            let entry = load_flat(&eng.sys, image);
+            for h in &mut eng.harts {
+                h.pc = entry;
+            }
+            let t0 = Instant::now();
+            let exit = eng.run(cfg.max_insts);
+            let wall = t0.elapsed();
+            RunReport {
+                exit,
+                wall,
+                total_insts: eng.total_instret(),
+                per_hart: eng.harts.iter().map(|h| (h.cycle, h.instret)).collect(),
+                console: eng.sys.bus.uart.output_str(),
+                model_stats: eng.sys.model.stats(),
+                engine_stats: None,
+            }
+        }
+        EngineMode::Lockstep => {
+            let sys = build_system(cfg);
+            let mut eng = FiberEngine::new(sys, &cfg.pipeline);
+            eng.timing = cfg.timing;
+            eng.yield_per_instruction = cfg.naive_yield;
+            eng.chaining = !cfg.no_chaining;
+            let entry = load_flat(&eng.sys, image);
+            eng.set_entry(entry);
+            let t0 = Instant::now();
+            let exit = eng.run(cfg.max_insts);
+            let wall = t0.elapsed();
+            RunReport {
+                exit,
+                wall,
+                total_insts: eng.total_instret(),
+                per_hart: eng.harts.iter().map(|h| (h.cycle, h.instret)).collect(),
+                console: eng.sys.bus.uart.output_str(),
+                model_stats: eng.sys.model.stats(),
+                engine_stats: Some(eng.stats),
+            }
+        }
+        EngineMode::Parallel => parallel::run_parallel(cfg, image),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::*;
+    use crate::mem::DRAM_BASE;
+
+    fn countdown(n: i64) -> Image {
+        let mut a = Assembler::new(DRAM_BASE);
+        a.li(A0, n);
+        a.li(A1, 0);
+        let top = a.here();
+        a.add(A1, A1, A0);
+        a.addi(A0, A0, -1);
+        a.bnez(A0, top);
+        a.mv(A0, A1);
+        a.li(A7, 93);
+        a.ecall();
+        a.finish()
+    }
+
+    #[test]
+    fn all_modes_agree_on_result() {
+        let img = countdown(99);
+        let want = ExitReason::Exited(99 * 100 / 2);
+        for mode in ["interp", "lockstep", "parallel"] {
+            let mut cfg = SimConfig::default();
+            cfg.set("mode", mode).unwrap();
+            cfg.set("memory", "atomic").unwrap();
+            cfg.pipeline = "atomic".into();
+            let report = run_image(&cfg, &img);
+            assert_eq!(report.exit, want, "mode {}", mode);
+        }
+    }
+
+    #[test]
+    fn model_matrix_smoke() {
+        let img = countdown(25);
+        for memory in ["atomic", "tlb", "cache", "mesi"] {
+            for pipeline in ["atomic", "simple", "inorder"] {
+                let mut cfg = SimConfig::default();
+                cfg.set("memory", memory).unwrap();
+                cfg.pipeline = pipeline.into();
+                let report = run_image(&cfg, &img);
+                assert_eq!(
+                    report.exit,
+                    ExitReason::Exited(325),
+                    "pipeline={} memory={}",
+                    pipeline,
+                    memory
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn timing_models_order_sanely() {
+        // For the same program: inorder+mesi >= simple+cache >= simple+atomic
+        // in simulated cycles.
+        let img = countdown(500);
+        let cycles = |pipeline: &str, memory: &str| {
+            let mut cfg = SimConfig::default();
+            cfg.pipeline = pipeline.into();
+            cfg.set("memory", memory).unwrap();
+            let r = run_image(&cfg, &img);
+            r.per_hart[0].0
+        };
+        let base = cycles("simple", "atomic");
+        let cache = cycles("simple", "cache");
+        let full = cycles("inorder", "mesi");
+        assert!(cache >= base, "cache {} >= atomic {}", cache, base);
+        assert!(full >= cache, "inorder+mesi {} >= simple+cache {}", full, cache);
+    }
+
+    #[test]
+    fn models_report_lists_tables() {
+        let r = models_report();
+        assert!(r.contains("InOrder"));
+        assert!(r.contains("MESI"));
+        assert!(r.contains("Lockstep execution required"));
+    }
+
+    #[test]
+    fn simctrl_encoding_roundtrip() {
+        let v = simctrl_encoding("inorder", "mesi", 6);
+        assert_eq!(v & 0b111, 3);
+        assert_eq!((v >> 4) & 0b111, 4);
+        assert_eq!((v >> 8) & 0xfff, 64);
+    }
+}

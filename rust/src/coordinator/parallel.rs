@@ -1,0 +1,186 @@
+//! Functional-parallel execution (paper §3.5): with the atomic pipeline
+//! and atomic memory model the simulator behaves like QEMU — every hart
+//! runs in its own host thread over shared guest DRAM, with host atomics
+//! backing AMO/LR/SC. This is the fastest mode (Figure 5's ">300 MIPS per
+//! core" bar) and is also used to fast-forward boot/preparation phases
+//! before switching to a timing mode.
+//!
+//! Deviations from the lockstep engine (documented in DESIGN.md): each
+//! thread owns a private `System` (device state is per-thread, so
+//! cross-hart IPIs are unavailable in this mode; guest workloads
+//! synchronise through shared memory, as the PARSEC-style benchmarks do).
+
+use super::config::SimConfig;
+use super::RunReport;
+use crate::asm::Image;
+use crate::fiber::FiberEngine;
+use crate::interp::ExitReason;
+use crate::mem::{AtomicModel, PhysMem, DRAM_BASE};
+use crate::sys::System;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Run `image` with one host thread per hart.
+pub fn run_parallel(cfg: &SimConfig, image: &Image) -> RunReport {
+    let phys = Arc::new(PhysMem::new(DRAM_BASE, cfg.dram_bytes));
+    phys.load_image(image.base, &image.bytes);
+    let entry = image.entry;
+    let shared_exit = Arc::new(AtomicU64::new(u64::MAX));
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..cfg.harts)
+        .map(|h| {
+            let phys = Arc::clone(&phys);
+            let shared_exit = Arc::clone(&shared_exit);
+            let pipeline = cfg.pipeline.clone();
+            let max_insts = cfg.max_insts;
+            let harts = cfg.harts;
+            std::thread::spawn(move || {
+                let mut sys = System::with_shared_phys(harts, phys, Box::new(AtomicModel));
+                sys.parallel = true;
+                sys.shared_exit = Some(Arc::clone(&shared_exit));
+                let mut eng = FiberEngine::new(sys, &pipeline);
+                eng.set_entry(entry);
+                let exit = eng.run_single(h, max_insts, &shared_exit);
+                let hart = &eng.harts[h];
+                (exit, hart.cycle, hart.instret, eng.sys.bus.uart.output_str())
+            })
+        })
+        .collect();
+
+    let mut per_hart = Vec::new();
+    let mut total_insts = 0;
+    let mut console = String::new();
+    let mut exit = ExitReason::StepLimit;
+    for handle in handles {
+        let (e, cycle, instret, out) = handle.join().expect("hart thread panicked");
+        if let ExitReason::Exited(_) = e {
+            exit = e;
+        }
+        per_hart.push((cycle, instret));
+        total_insts += instret;
+        console.push_str(&out);
+    }
+    let wall = t0.elapsed();
+    if exit == ExitReason::StepLimit {
+        let v = shared_exit.load(Ordering::SeqCst);
+        if v != u64::MAX {
+            exit = ExitReason::Exited(v);
+        }
+    }
+    RunReport {
+        exit,
+        wall,
+        total_insts,
+        per_hart,
+        console,
+        model_stats: Vec::new(),
+        engine_stats: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::*;
+    use crate::isa::csr::CSR_MHARTID;
+
+    #[test]
+    fn parallel_amo_sum_no_lost_updates() {
+        // 4 threads amoadd a shared counter; a racy non-atomic
+        // implementation would lose updates.
+        let mut a = Assembler::new(DRAM_BASE);
+        let counter = a.new_label();
+        let done = a.new_label();
+        a.la(T1, counter);
+        a.li(T2, 10_000);
+        let loop_ = a.here();
+        a.li(T0, 1);
+        a.amoadd_w(ZERO, T0, T1);
+        a.addi(T2, T2, -1);
+        a.bnez(T2, loop_);
+        a.la(T3, done);
+        a.li(T4, 1);
+        a.amoadd_w(ZERO, T4, T3);
+        // hart 0 waits for all, reads counter, exits
+        a.csrr(T0, CSR_MHARTID);
+        let park = a.here();
+        a.bnez(T0, park);
+        let wait = a.here();
+        a.lw(T4, T3, 0);
+        a.slti(T5, T4, 4);
+        a.bnez(T5, wait);
+        a.lw(A0, T1, 0);
+        a.li(A7, 93);
+        a.ecall();
+        a.align(8);
+        a.bind(counter);
+        a.d32(0);
+        a.bind(done);
+        a.d32(0);
+        let img = a.finish();
+
+        let mut cfg = SimConfig::default();
+        cfg.harts = 4;
+        cfg.pipeline = "atomic".into();
+        cfg.set("mode", "parallel").unwrap();
+        let report = run_parallel(&cfg, &img);
+        assert_eq!(report.exit, ExitReason::Exited(40_000));
+    }
+
+    #[test]
+    fn parallel_lrsc_spinlock() {
+        // 2 threads, LR/SC lock protecting a non-atomic increment.
+        let mut a = Assembler::new(DRAM_BASE);
+        let lock = a.new_label();
+        let counter = a.new_label();
+        let done = a.new_label();
+        a.la(A1, lock);
+        a.la(A2, counter);
+        a.li(S0, 5_000);
+        let loop_ = a.here();
+        let acquire = a.here();
+        a.lr_w(T0, A1);
+        a.bnez(T0, acquire);
+        a.li(T1, 1);
+        a.sc_w(T0, T1, A1);
+        a.bnez(T0, acquire);
+        a.lw(T2, A2, 0);
+        a.addi(T2, T2, 1);
+        a.sw(T2, A2, 0);
+        a.fence();
+        a.amoswap_w(ZERO, ZERO, A1); // release (atomic store 0)
+        a.addi(S0, S0, -1);
+        a.bnez(S0, loop_);
+        a.la(T3, done);
+        a.li(T4, 1);
+        a.amoadd_w(ZERO, T4, T3);
+        a.csrr(T0, CSR_MHARTID);
+        let park = a.here();
+        a.bnez(T0, park);
+        let wait = a.here();
+        a.lw(T4, T3, 0);
+        a.slti(T5, T4, 2);
+        a.bnez(T5, wait);
+        a.lw(A0, A2, 0);
+        a.li(A7, 93);
+        a.ecall();
+        a.align(8);
+        a.bind(lock);
+        a.d32(0);
+        a.align(64); // counter on its own line
+        a.bind(counter);
+        a.d32(0);
+        a.bind(done);
+        a.d32(0);
+        let img = a.finish();
+
+        let mut cfg = SimConfig::default();
+        cfg.harts = 2;
+        cfg.pipeline = "atomic".into();
+        cfg.set("mode", "parallel").unwrap();
+        let report = run_parallel(&cfg, &img);
+        assert_eq!(report.exit, ExitReason::Exited(10_000), "no lost increments under the lock");
+    }
+}

@@ -1,0 +1,173 @@
+//! Translated basic blocks: the cached unit of the DBT engine.
+//!
+//! In the original R2VM the translator emits AMD64 machine code; here each
+//! basic block is translated once into a *micro-op trace* — pre-decoded
+//! instructions with their pipeline-model cycle costs baked in at
+//! translation time (§3.2: "models pipeline behaviours during DBT code
+//! generation ... therefore requires no explicit code to be executed in
+//! runtime") — and executed by a threaded dispatch loop. The structural
+//! properties the paper measures (translate-once, per-hart code caches,
+//! block chaining, cross-page stubs) are preserved; see DESIGN.md §3.
+
+use crate::isa::op::Op;
+use std::cell::Cell;
+
+/// Index of a block within its (per-hart) code cache arena.
+pub type BlockId = u32;
+
+/// A translated non-terminator instruction.
+#[derive(Debug, Clone, Copy)]
+pub struct Step {
+    pub op: Op,
+    /// Offset of this instruction from the block start (bytes).
+    pub pc_off: u16,
+    /// Encoded length (2 or 4).
+    pub len: u8,
+    /// Cycles charged when this step retires (pipeline hooks, baked in at
+    /// translation time).
+    pub cycles: u32,
+    /// Is this a synchronisation point (§3.3.2: memory or control-register
+    /// operation)? The engine yields pending cycles *before* executing it.
+    pub sync: bool,
+}
+
+/// How a block ends.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TermKind {
+    /// Conditional branch; taken target = term pc + imm.
+    Branch,
+    /// Direct jump (JAL) — target known at translation time.
+    Jump { target: u64 },
+    /// Indirect jump (JALR) — target known only at runtime.
+    IndirectJump,
+    /// Instruction that must be executed then falls through with a
+    /// mandatory return to the engine (system instructions, fence.i, ...).
+    Fallthrough,
+}
+
+/// The translated terminator.
+#[derive(Debug, Clone, Copy)]
+pub struct Term {
+    pub op: Op,
+    pub pc_off: u16,
+    pub len: u8,
+    pub kind: TermKind,
+    /// Cycles when not taken / sequential.
+    pub cycles_nt: u32,
+    /// Cycles when taken (branch/jump).
+    pub cycles_taken: u32,
+    pub sync: bool,
+}
+
+/// Cross-page guard (§3.1): a 4-byte instruction spanning two pages is
+/// translated against the bytes seen at translation time; at each entry the
+/// stub re-reads the two bytes on the second page and retranslates on
+/// mismatch.
+#[derive(Debug, Clone, Copy)]
+pub struct CrossPageStub {
+    /// Virtual address of the second-page halfword.
+    pub vaddr: u64,
+    /// Halfword observed at translation time.
+    pub expected: u16,
+}
+
+/// A translated basic block.
+pub struct Block {
+    /// Guest virtual address of the first instruction.
+    pub start: u64,
+    /// Virtual address one past the last instruction byte.
+    pub end: u64,
+    pub steps: Vec<Step>,
+    pub term: Term,
+    /// Virtual addresses whose L0 I-cache lines must be checked on entry
+    /// (block start + each cache-line crossing, §3.4.2: one access per
+    /// 16-32 instructions at 64-byte lines).
+    pub icache_checks: Vec<u64>,
+    pub cross_page: Option<CrossPageStub>,
+    /// Block chaining (§3.1): resolved successor block ids, validated
+    /// against the code-cache generation. `u32::MAX` = unresolved.
+    pub chain_taken: Cell<BlockId>,
+    pub chain_seq: Cell<BlockId>,
+}
+
+pub const NO_CHAIN: BlockId = u32::MAX;
+
+impl Block {
+    /// PC of the terminator instruction.
+    #[inline]
+    pub fn term_pc(&self) -> u64 {
+        self.start + self.term.pc_off as u64
+    }
+
+    /// Sequential successor address (past the terminator).
+    #[inline]
+    pub fn seq_target(&self) -> u64 {
+        self.term_pc() + self.term.len as u64
+    }
+
+    /// Taken target for a conditional branch terminator.
+    #[inline]
+    pub fn taken_target(&self) -> u64 {
+        match self.term.op {
+            Op::Branch { imm, .. } => self.term_pc().wrapping_add(imm as i64 as u64),
+            _ => match self.term.kind {
+                TermKind::Jump { target } => target,
+                _ => unreachable!("taken_target on non-branch/jump"),
+            },
+        }
+    }
+
+    /// Total retired instructions if the block runs to completion.
+    #[inline]
+    pub fn inst_count(&self) -> u64 {
+        self.steps.len() as u64 + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::op::{BrCond, Op};
+
+    fn mk_block() -> Block {
+        Block {
+            start: 0x8000_0000,
+            end: 0x8000_000c,
+            steps: vec![Step {
+                op: Op::AluImm {
+                    op: crate::isa::AluOp::Add,
+                    word: false,
+                    rd: 1,
+                    rs1: 1,
+                    imm: 1,
+                },
+                pc_off: 0,
+                len: 4,
+                cycles: 1,
+                sync: false,
+            }],
+            term: Term {
+                op: Op::Branch { cond: BrCond::Ne, rs1: 1, rs2: 0, imm: -4 },
+                pc_off: 4,
+                len: 4,
+                kind: TermKind::Branch,
+                cycles_nt: 1,
+                cycles_taken: 3,
+                sync: false,
+            },
+            icache_checks: vec![0x8000_0000],
+            cross_page: None,
+            chain_taken: Cell::new(NO_CHAIN),
+            chain_seq: Cell::new(NO_CHAIN),
+        }
+    }
+
+    #[test]
+    fn targets() {
+        let b = mk_block();
+        assert_eq!(b.term_pc(), 0x8000_0004);
+        assert_eq!(b.seq_target(), 0x8000_0008);
+        assert_eq!(b.taken_target(), 0x8000_0000);
+        assert_eq!(b.inst_count(), 2);
+    }
+}

@@ -1,0 +1,221 @@
+//! Per-hart code caches (paper §3.1).
+//!
+//! Each hart owns its cache so per-hart pipeline models (heterogeneous
+//! cores, §3.5) can generate different code, and no synchronisation is
+//! needed to modify it — the design decision the paper takes in contrast to
+//! Cota et al.'s shared cache.
+
+use super::block::{Block, BlockId, NO_CHAIN};
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Multiply-xor hasher for PC keys (std SipHash is needlessly slow on the
+/// block-lookup path; no untrusted keys here).
+#[derive(Default)]
+pub struct PcHasher(u64);
+
+impl Hasher for PcHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.write_u64(b as u64);
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        // splitmix64-style finalisation.
+        let mut x = self.0 ^ v.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        x ^= x >> 30;
+        x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x ^= x >> 27;
+        self.0 = x;
+    }
+
+    #[inline]
+    fn write_u8(&mut self, v: u8) {
+        self.write_u64(v as u64);
+    }
+}
+
+type PcMap = HashMap<u64, BlockId, BuildHasherDefault<PcHasher>>;
+
+/// A per-hart translated-code cache.
+pub struct CodeCache {
+    blocks: Vec<Block>,
+    /// pc | (prv << 62) → block id. Translations depend on the privilege
+    /// mode (fetch permissions); satp changes flush the whole cache.
+    map: PcMap,
+    /// Bumped on every flush; chain links from another generation are dead.
+    pub generation: u64,
+    /// Statistics.
+    pub lookups: u64,
+    pub misses: u64,
+    pub flushes: u64,
+}
+
+/// Compose the lookup key. Sv39 virtual addresses are canonical (bits
+/// 63..39 equal bit 38), so the top two bits are redundant and can carry
+/// the privilege mode.
+#[inline]
+pub fn cache_key(pc: u64, prv: u8) -> u64 {
+    (pc & !(0b11 << 62)) | ((prv as u64) << 62)
+}
+
+impl CodeCache {
+    pub fn new() -> CodeCache {
+        CodeCache {
+            blocks: Vec::with_capacity(1024),
+            map: PcMap::default(),
+            generation: 0,
+            lookups: 0,
+            misses: 0,
+            flushes: 0,
+        }
+    }
+
+    #[inline]
+    pub fn get(&mut self, pc: u64, prv: u8) -> Option<BlockId> {
+        self.lookups += 1;
+        match self.map.get(&cache_key(pc, prv)) {
+            Some(&id) => Some(id),
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn insert(&mut self, pc: u64, prv: u8, block: Block) -> BlockId {
+        let id = self.blocks.len() as BlockId;
+        self.blocks.push(block);
+        self.map.insert(cache_key(pc, prv), id);
+        id
+    }
+
+    /// Replace an existing translation (cross-page stub mismatch).
+    pub fn replace(&mut self, id: BlockId, block: Block) {
+        self.blocks[id as usize] = block;
+    }
+
+    #[inline]
+    pub fn block(&self, id: BlockId) -> &Block {
+        &self.blocks[id as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    /// Flush all translations (fence.i, satp write, model switch §3.5).
+    pub fn flush(&mut self) {
+        self.blocks.clear();
+        self.map.clear();
+        self.generation += 1;
+        self.flushes += 1;
+    }
+
+    /// Resolve + store a chain link (§3.1 block chaining). Returns the
+    /// target id if present.
+    #[inline]
+    pub fn chain_to(&mut self, from: BlockId, taken: bool, pc: u64, prv: u8) -> Option<BlockId> {
+        let target = self.get(pc, prv)?;
+        let b = self.block(from);
+        if taken {
+            b.chain_taken.set(target);
+        } else {
+            b.chain_seq.set(target);
+        }
+        Some(target)
+    }
+
+    /// Follow a previously-established chain link.
+    #[inline]
+    pub fn follow_chain(&self, from: BlockId, taken: bool) -> Option<BlockId> {
+        let b = self.block(from);
+        let id = if taken { b.chain_taken.get() } else { b.chain_seq.get() };
+        if id == NO_CHAIN {
+            None
+        } else {
+            Some(id)
+        }
+    }
+}
+
+impl Default for CodeCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dbt::compiler::translate;
+    use crate::pipeline::SimpleModel;
+    use crate::sys::Trap;
+
+    fn trivial_block(pc: u64) -> Block {
+        // "ret" at pc
+        let bytes = {
+            let mut a = crate::asm::Assembler::new(pc);
+            a.ret();
+            a.finish().bytes
+        };
+        let mut f = move |addr: u64| -> Result<u16, Trap> {
+            let i = (addr - pc) as usize;
+            Ok(u16::from_le_bytes([bytes[i], bytes[i + 1]]))
+        };
+        let mut m = SimpleModel;
+        translate(&mut f, &mut m, pc, 6).unwrap()
+    }
+
+    #[test]
+    fn insert_get() {
+        let mut c = CodeCache::new();
+        assert_eq!(c.get(0x8000_0000, 3), None);
+        let id = c.insert(0x8000_0000, 3, trivial_block(0x8000_0000));
+        assert_eq!(c.get(0x8000_0000, 3), Some(id));
+        // Different privilege = different key.
+        assert_eq!(c.get(0x8000_0000, 1), None);
+        assert_eq!(c.misses, 2);
+        assert_eq!(c.lookups, 3);
+    }
+
+    #[test]
+    fn flush_invalidates_and_bumps_generation() {
+        let mut c = CodeCache::new();
+        c.insert(0x8000_0000, 3, trivial_block(0x8000_0000));
+        let g = c.generation;
+        c.flush();
+        assert_eq!(c.get(0x8000_0000, 3), None);
+        assert_eq!(c.generation, g + 1);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn chaining() {
+        let mut c = CodeCache::new();
+        let a = c.insert(0x1000, 3, trivial_block(0x1000));
+        let b = c.insert(0x2000, 3, trivial_block(0x2000));
+        assert_eq!(c.follow_chain(a, true), None);
+        assert_eq!(c.chain_to(a, true, 0x2000, 3), Some(b));
+        assert_eq!(c.follow_chain(a, true), Some(b));
+        assert_eq!(c.follow_chain(a, false), None);
+    }
+
+    #[test]
+    fn key_privilege_separation() {
+        assert_ne!(cache_key(0x1000, 0), cache_key(0x1000, 3));
+        assert_eq!(cache_key(0x1000, 3), cache_key(0x1000, 3));
+    }
+}

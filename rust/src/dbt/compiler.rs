@@ -1,0 +1,278 @@
+//! The DBT compiler: translates one guest basic block into a micro-op
+//! trace, invoking the pipeline model's hooks per instruction so cycle
+//! counts are baked into the translation (paper §3.2, Listing 1).
+
+use super::block::{Block, CrossPageStub, Step, Term, TermKind, NO_CHAIN};
+use crate::isa::decode::{decode16, decode32, inst_len};
+use crate::isa::op::Op;
+use crate::pipeline::PipelineModel;
+use crate::sys::Trap;
+use std::cell::Cell;
+
+/// Maximum instructions translated into one block (long straight-line code
+/// is split; the tail continues in the next block).
+pub const MAX_BLOCK_INSTS: usize = 64;
+
+/// Translation-time state exposed to pipeline-model hooks.
+///
+/// Mirrors the paper's `DbtCompiler` parameter (Listing 1): hooks call
+/// [`DbtCompiler::insert_cycle_count`] to charge cycles for the
+/// instruction being translated.
+pub struct DbtCompiler {
+    /// Cycles charged to the instruction currently being translated.
+    cur_cycles: u32,
+    /// PC of the instruction currently being translated.
+    pub cur_pc: u64,
+    /// Whether the current instruction starts the block.
+    pub at_block_start: bool,
+}
+
+impl DbtCompiler {
+    pub fn new(pc: u64) -> DbtCompiler {
+        DbtCompiler { cur_cycles: 0, cur_pc: pc, at_block_start: true }
+    }
+
+    /// Charge `n` cycles for the current instruction (Listing 1).
+    #[inline]
+    pub fn insert_cycle_count(&mut self, n: u32) {
+        self.cur_cycles += n;
+    }
+
+    /// Drain the cycles charged for the current instruction.
+    pub fn take_cycles(&mut self) -> u32 {
+        std::mem::take(&mut self.cur_cycles)
+    }
+}
+
+/// Reads guest instruction memory at translation time. Must be side-effect
+/// free with respect to timing (the runtime I-cache checks are generated
+/// separately, §3.4.2).
+pub trait FetchProbe {
+    fn fetch_u16(&mut self, vaddr: u64) -> Result<u16, Trap>;
+}
+
+impl<F: FnMut(u64) -> Result<u16, Trap>> FetchProbe for F {
+    fn fetch_u16(&mut self, vaddr: u64) -> Result<u16, Trap> {
+        self(vaddr)
+    }
+}
+
+/// Translate the basic block starting at `pc`.
+///
+/// `icache_line_shift` controls where runtime L0 I-cache checks are
+/// generated: one at block entry plus one per crossed line.
+pub fn translate(
+    fetch: &mut dyn FetchProbe,
+    model: &mut dyn PipelineModel,
+    pc: u64,
+    icache_line_shift: u32,
+) -> Result<Block, Trap> {
+    let mut steps: Vec<Step> = Vec::new();
+    let mut icache_checks = vec![pc];
+    let mut cross_page: Option<CrossPageStub> = None;
+    let mut cur = pc;
+    let mut comp = DbtCompiler::new(pc);
+    model.block_start(&mut comp);
+
+    loop {
+        // Line-crossing check for the runtime I-cache accesses.
+        if cur != pc && (cur >> icache_line_shift) != ((cur - 2) >> icache_line_shift) {
+            icache_checks.push(cur);
+        }
+
+        let lo = fetch.fetch_u16(cur)?;
+        let len = inst_len(lo);
+        let (op, raw_len) = if len == 2 {
+            (decode16(lo), 2u8)
+        } else {
+            // A 4-byte instruction whose second half lies on the next page
+            // gets a cross-page guard stub (§3.1).
+            let hi_addr = cur + 2;
+            let hi = fetch.fetch_u16(hi_addr)?;
+            if cur & 0xfff == 0xffe {
+                cross_page = Some(CrossPageStub { vaddr: hi_addr, expected: hi });
+            }
+            (decode32((lo as u32) | ((hi as u32) << 16)), 4u8)
+        };
+
+        comp.cur_pc = cur;
+        let pc_off = (cur - pc) as u16;
+        let compressed = raw_len == 2;
+
+        if op.ends_block() || steps.len() + 1 >= MAX_BLOCK_INSTS {
+            // Terminator.
+            let kind = match op {
+                Op::Jal { .. } => TermKind::Jump {
+                    target: match op {
+                        Op::Jal { imm, .. } => cur.wrapping_add(imm as i64 as u64),
+                        _ => unreachable!(),
+                    },
+                },
+                Op::Jalr { .. } => TermKind::IndirectJump,
+                Op::Branch { .. } => TermKind::Branch,
+                _ => TermKind::Fallthrough,
+            };
+            // The two hooks are *alternatives* (Listing 1): in the paper's
+            // generated code a taken branch leaves the block through the
+            // after_taken_branch insertion and never reaches the sequential
+            // after_instruction one.
+            model.after_instruction(&mut comp, &op, compressed);
+            let cycles_nt = comp.take_cycles();
+            model.after_taken_branch(&mut comp, &op, compressed);
+            let cycles_taken = comp.take_cycles();
+            let sync = op.is_mem() || op.is_system();
+            let term = Term { op, pc_off, len: raw_len, kind, cycles_nt, cycles_taken, sync };
+            return Ok(Block {
+                start: pc,
+                end: cur + raw_len as u64,
+                steps,
+                term,
+                icache_checks,
+                cross_page,
+                chain_taken: Cell::new(NO_CHAIN),
+                chain_seq: Cell::new(NO_CHAIN),
+            });
+        }
+
+        model.after_instruction(&mut comp, &op, compressed);
+        let cycles = comp.take_cycles();
+        let sync = op.is_mem() || op.is_system();
+        steps.push(Step { op, pc_off, len: raw_len, cycles, sync });
+        comp.at_block_start = false;
+        cur += raw_len as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::SimpleModel;
+
+    /// Probe over a flat byte image at base 0.
+    fn probe(bytes: Vec<u8>) -> impl FnMut(u64) -> Result<u16, Trap> {
+        move |addr: u64| {
+            let i = addr as usize;
+            Ok(u16::from_le_bytes([bytes[i], bytes[i + 1]]))
+        }
+    }
+
+    fn asm_bytes(build: impl FnOnce(&mut crate::asm::Assembler)) -> Vec<u8> {
+        let mut a = crate::asm::Assembler::new(0);
+        build(&mut a);
+        a.finish().bytes
+    }
+
+    #[test]
+    fn translate_simple_block() {
+        use crate::asm::*;
+        let bytes = asm_bytes(|a| {
+            a.addi(A0, A0, 1); // step
+            a.addi(A1, A1, 2); // step
+            let l = a.new_label();
+            a.beqz(A0, l); // terminator
+            a.bind(l);
+        });
+        let mut f = probe(bytes);
+        let mut m = SimpleModel::default();
+        let b = translate(&mut f, &mut m, 0, 6).unwrap();
+        assert_eq!(b.steps.len(), 2);
+        assert_eq!(b.term.kind, TermKind::Branch);
+        assert_eq!(b.end, 12);
+        // Simple model: 1 cycle per instruction, taken or not.
+        assert!(b.steps.iter().all(|s| s.cycles == 1));
+        assert_eq!(b.term.cycles_nt, 1);
+        assert_eq!(b.term.cycles_taken, 1);
+        assert_eq!(b.icache_checks, vec![0]);
+    }
+
+    #[test]
+    fn sync_flag_on_memory_and_csr() {
+        use crate::asm::*;
+        let bytes = asm_bytes(|a| {
+            a.addi(A0, A0, 1);
+            a.ld(A1, A0, 0); // memory => sync
+            a.csrr(A2, crate::isa::csr::CSR_MCYCLE); // csr => sync
+            a.ret();
+        });
+        let mut f = probe(bytes);
+        let mut m = SimpleModel::default();
+        let b = translate(&mut f, &mut m, 0, 6).unwrap();
+        assert!(!b.steps[0].sync);
+        assert!(b.steps[1].sync);
+        assert!(b.steps[2].sync);
+        assert_eq!(b.term.kind, TermKind::IndirectJump);
+    }
+
+    #[test]
+    fn icache_checks_on_line_crossing() {
+
+        // 20 x 4-byte nops cross a 64-byte line once (at offset 64).
+        let bytes = asm_bytes(|a| {
+            for _ in 0..20 {
+                a.nop();
+            }
+            a.ret();
+        });
+        let mut f = probe(bytes);
+        let mut m = SimpleModel::default();
+        let b = translate(&mut f, &mut m, 0, 6).unwrap();
+        assert_eq!(b.icache_checks, vec![0, 64]);
+    }
+
+    #[test]
+    fn long_block_is_split() {
+
+        let bytes = asm_bytes(|a| {
+            for _ in 0..100 {
+                a.nop();
+            }
+            a.ret();
+        });
+        let mut f = probe(bytes);
+        let mut m = SimpleModel::default();
+        let b = translate(&mut f, &mut m, 0, 6).unwrap();
+        assert_eq!(b.steps.len(), MAX_BLOCK_INSTS - 1);
+        assert_eq!(b.term.kind, TermKind::Fallthrough);
+        assert_eq!(b.seq_target(), (MAX_BLOCK_INSTS as u64) * 4);
+    }
+
+    #[test]
+    fn cross_page_stub_recorded() {
+        use crate::asm::*;
+        // Place a 4-byte instruction at 0xffe.
+        let mut bytes = vec![0u8; 0x1000 + 8];
+        let insn = asm_bytes(|a| {
+            a.addi(A0, A0, 1);
+            a.ret();
+        });
+        bytes[0xffe..0xffe + insn.len()].copy_from_slice(&insn);
+        let mut f = probe(bytes);
+        let mut m = SimpleModel::default();
+        let b = translate(&mut f, &mut m, 0xffe, 6).unwrap();
+        let stub = b.cross_page.expect("cross-page stub");
+        assert_eq!(stub.vaddr, 0x1000);
+        // expected = upper half of `addi a0, a0, 1`
+        let enc = crate::isa::encode(crate::isa::Op::AluImm {
+            op: crate::isa::AluOp::Add,
+            word: false,
+            rd: 10,
+            rs1: 10,
+            imm: 1,
+        });
+        assert_eq!(stub.expected, (enc >> 16) as u16);
+    }
+
+    #[test]
+    fn compressed_instructions_tracked() {
+        // c.li a0, 1 (2 bytes) then ret
+        let mut bytes = 0x4505u16.to_le_bytes().to_vec();
+        bytes.extend(asm_bytes(|a| a.ret()));
+        bytes.extend([0, 0]);
+        let mut f = probe(bytes);
+        let mut m = SimpleModel::default();
+        let b = translate(&mut f, &mut m, 0, 6).unwrap();
+        assert_eq!(b.steps.len(), 1);
+        assert_eq!(b.steps[0].len, 2);
+        assert_eq!(b.term.pc_off, 2);
+    }
+}

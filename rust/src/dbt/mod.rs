@@ -1,0 +1,11 @@
+//! Binary translation layer: basic-block micro-op translation with
+//! pipeline-model hooks, per-hart code caches, and block chaining
+//! (paper §3.1-§3.2, Figure 1).
+
+pub mod block;
+pub mod cache;
+pub mod compiler;
+
+pub use block::{Block, BlockId, CrossPageStub, Step, Term, TermKind, NO_CHAIN};
+pub use cache::CodeCache;
+pub use compiler::{translate, DbtCompiler, FetchProbe, MAX_BLOCK_INSTS};

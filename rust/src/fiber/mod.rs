@@ -1,0 +1,1008 @@
+//! The fiber-based lockstep execution engine (paper §3.3).
+//!
+//! R2VM keeps all simulated harts in one host thread as ultra-light fibers
+//! that yield at synchronisation points; the 4-instruction
+//! `fiber_yield_raw` (Listing 3) makes switching nearly free. In safe Rust
+//! the same semantics are obtained with resumable per-hart continuations —
+//! a hart's "fiber" is its saved `(block, step-index)` position — scheduled
+//! deterministically by minimum `(cycle, hart-id)`. The observable
+//! properties are identical:
+//!
+//!  * every memory / control-register operation is a synchronisation point
+//!    (§3.3.2): pending cycles are *yielded before* the operation executes,
+//!    so all cores agree on global time whenever a side effect can be
+//!    observed;
+//!  * yields between sync points are batched into one multi-cycle yield
+//!    (the ~10% optimisation; `yield_per_instruction` reverts to naive
+//!    per-instruction yielding for the A1 ablation);
+//!  * interrupts are checked only at basic-block boundaries;
+//!  * an "event-loop fiber" — here the scheduler's timer handling — wakes
+//!    WFI sleepers at CLINT deadlines.
+
+use crate::dbt::block::{TermKind, NO_CHAIN};
+use crate::dbt::{translate, BlockId, CodeCache};
+use crate::interp::{poll_interrupt, ExitReason};
+use crate::isa::csr::{EXC_ECALL_M, EXC_ECALL_S, EXC_ECALL_U};
+use crate::mem::mmu::{translate as mmu_translate, AccessKind};
+use crate::mem::{MemTiming, MemoryModel};
+use crate::pipeline::PipelineModel;
+use crate::sys::exec::{cold_fetch, exec_op, Flow};
+use crate::sys::hart::{Hart, Trap};
+use crate::sys::{handle_ecall, System};
+
+/// Per-hart continuation — the fiber state.
+struct Cont {
+    /// Current block (NO_CHAIN = at a block boundary).
+    block: BlockId,
+    /// Next step index to execute within the block.
+    step: u32,
+    /// `true` when resuming *at* a sync point whose yield already happened.
+    resumed: bool,
+    /// Chain hint for the next block boundary (validated by start PC).
+    hint: BlockId,
+}
+
+impl Cont {
+    fn clear(&mut self) {
+        self.block = NO_CHAIN;
+        self.step = 0;
+        self.resumed = false;
+    }
+}
+
+/// Engine statistics (yields, translations, chaining efficacy).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct EngineStats {
+    pub slices: u64,
+    pub yields: u64,
+    pub blocks_translated: u64,
+    pub block_entries: u64,
+    pub chain_hits: u64,
+    pub retranslations: u64,
+}
+
+/// The lockstep DBT engine.
+pub struct FiberEngine {
+    pub harts: Vec<Hart>,
+    pub sys: System,
+    pub caches: Vec<CodeCache>,
+    pub pipelines: Vec<Box<dyn PipelineModel>>,
+    conts: Vec<Cont>,
+    /// Nominal clock (1 cycle/instruction) for harts whose pipeline model
+    /// does not track cycles (atomic).
+    nominal: Vec<bool>,
+    /// A1 ablation: yield after every instruction instead of batching to
+    /// synchronisation points.
+    pub yield_per_instruction: bool,
+    /// A3 ablation: disable block chaining.
+    pub chaining: bool,
+    /// Timing parameters used when SIMCTRL constructs new memory models.
+    pub timing: MemTiming,
+    pub stats: EngineStats,
+    total_retired: u64,
+}
+
+/// What a slice did (scheduler feedback).
+enum Slice {
+    Ran,
+    Waiting,
+}
+
+impl FiberEngine {
+    pub fn new(sys: System, pipeline: &str) -> FiberEngine {
+        let n = sys.num_harts;
+        let pipelines: Vec<Box<dyn PipelineModel>> =
+            (0..n).map(|_| crate::pipeline::by_name(pipeline).expect("unknown pipeline model")).collect();
+        let nominal = pipelines.iter().map(|p| !p.tracks_cycles()).collect();
+        FiberEngine {
+            harts: (0..n).map(Hart::new).collect(),
+            sys,
+            caches: (0..n).map(|_| CodeCache::new()).collect(),
+            pipelines,
+            conts: (0..n)
+                .map(|_| Cont { block: NO_CHAIN, step: 0, resumed: false, hint: NO_CHAIN })
+                .collect(),
+            nominal,
+            yield_per_instruction: false,
+            chaining: true,
+            timing: MemTiming::default(),
+            stats: EngineStats::default(),
+            total_retired: 0,
+        }
+    }
+
+    /// Set all hart PCs (after loading an image).
+    pub fn set_entry(&mut self, entry: u64) {
+        for h in &mut self.harts {
+            h.pc = entry;
+        }
+    }
+
+    pub fn total_instret(&self) -> u64 {
+        self.harts.iter().map(|h| h.instret).sum()
+    }
+
+    // -----------------------------------------------------------------------
+    // Translation-time fetch probe: functional-only walk + read, no timing.
+    // -----------------------------------------------------------------------
+    fn probe_fetch(hart: &Hart, sys: &System, vaddr: u64) -> Result<u16, Trap> {
+        let ctx = hart.mmu_fetch_ctx();
+        let tr = mmu_translate(&sys.phys, &ctx, vaddr, AccessKind::Execute).map_err(|_| {
+            Trap::new(crate::isa::csr::EXC_INSN_PAGE_FAULT, vaddr)
+        })?;
+        if !sys.phys.contains(tr.paddr, 2) {
+            return Err(Trap::new(crate::isa::csr::EXC_INSN_ACCESS, vaddr));
+        }
+        Ok(sys.phys.read_u16(tr.paddr))
+    }
+
+    /// Translate the block at `pc` for hart `h`.
+    fn translate_block(&mut self, h: usize, pc: u64) -> Result<crate::dbt::Block, Trap> {
+        self.stats.blocks_translated += 1;
+        let line_shift = self.sys.l0[h].i.line_shift();
+        let hart = &self.harts[h];
+        let sys = &self.sys;
+        let mut probe = |vaddr: u64| Self::probe_fetch(hart, sys, vaddr);
+        translate(&mut probe, self.pipelines[h].as_mut(), pc, line_shift)
+    }
+
+    /// Enter the block at the hart's current PC: chain-follow or look up or
+    /// translate; validate cross-page stubs; perform the runtime L0
+    /// I-cache checks (§3.4.2).
+    fn enter_block(&mut self, h: usize) -> Result<BlockId, Trap> {
+        self.stats.block_entries += 1;
+        let pc = self.harts[h].pc;
+        let prv = self.harts[h].prv as u8;
+
+        // Chain hint (block chaining §3.1 + the L0-icache indirect-target
+        // trick §3.4.2): valid if it still maps this PC.
+        let mut id = NO_CHAIN;
+        if self.chaining {
+            let hint = self.conts[h].hint;
+            if hint != NO_CHAIN
+                && (hint as usize) < self.caches[h].len()
+                && self.caches[h].block(hint).start == pc
+            {
+                id = hint;
+                self.stats.chain_hits += 1;
+            }
+        }
+        if id == NO_CHAIN {
+            id = match self.caches[h].get(pc, prv) {
+                Some(i) => i,
+                None => {
+                    let block = self.translate_block(h, pc)?;
+                    self.caches[h].insert(pc, prv, block)
+                }
+            };
+        }
+
+        // Cross-page guard (§3.1): re-read the second-page halfword and
+        // retranslate if the mapping changed.
+        if let Some(stub) = self.caches[h].block(id).cross_page {
+            let seen = Self::probe_fetch(&self.harts[h], &self.sys, stub.vaddr)?;
+            if seen != stub.expected {
+                self.stats.retranslations += 1;
+                let block = self.translate_block(h, pc)?;
+                self.caches[h].replace(id, block);
+            }
+        }
+
+        // Runtime L0 I-cache checks: block entry + each crossed line.
+        let n_checks = self.caches[h].block(id).icache_checks.len();
+        for k in 0..n_checks {
+            let vaddr = self.caches[h].block(id).icache_checks[k];
+            let hart = &mut self.harts[h];
+            if self.sys.force_cold || self.sys.l0[h].i.lookup(vaddr).is_none() {
+                cold_fetch(hart, &mut self.sys, vaddr)?;
+            }
+        }
+        Ok(id)
+    }
+
+    /// Commit pending cycles — the (multi-cycle) yield of Listing 3.
+    #[inline]
+    fn yield_now(&mut self, h: usize) {
+        self.stats.yields += 1;
+        let hart = &mut self.harts[h];
+        hart.cycle += std::mem::take(&mut hart.pending);
+    }
+
+    /// Handle a trap raised during execution, including environment-call
+    /// emulation. `npc` = address after the trapping instruction.
+    fn deliver_trap(&mut self, h: usize, trap: Trap, pc: u64, npc: u64) {
+        let prv_before = self.harts[h].prv;
+        let hart = &mut self.harts[h];
+        let is_ecall = matches!(trap.cause, EXC_ECALL_U | EXC_ECALL_S | EXC_ECALL_M);
+        if is_ecall && handle_ecall(hart, &mut self.sys) {
+            let hart = &mut self.harts[h];
+            hart.instret += 1;
+            hart.pending += 1;
+            hart.pc = npc;
+        } else {
+            let hart = &mut self.harts[h];
+            hart.pc = hart.take_trap(trap, pc);
+        }
+        if self.harts[h].prv != prv_before {
+            self.sys.l0[h].clear();
+        }
+        self.conts[h].clear();
+        self.conts[h].hint = NO_CHAIN;
+    }
+
+    /// Apply pending side effects after a system instruction. Returns
+    /// `true` if the current translation was invalidated.
+    fn process_effects(&mut self, h: usize) -> bool {
+        let fx = self.harts[h].effects;
+        self.harts[h].effects.clear();
+        let mut invalidated = false;
+        if fx.fence_i {
+            self.caches[h].flush();
+            self.sys.l0[h].i.clear();
+            invalidated = true;
+        }
+        if fx.sfence {
+            self.caches[h].flush();
+            self.sys.model.flush_hart(&mut self.sys.l0, h);
+            self.sys.l0[h].clear();
+            invalidated = true;
+        }
+        if fx.flush_l0 {
+            // Translation context changed (SUM/MXR/MPRV/MPP): L0 entries
+            // are virtually tagged without a mode tag, so drop them. The
+            // code cache is keyed by (pc, privilege) and survives.
+            self.sys.l0[h].clear();
+        }
+        if let Some(v) = fx.simctrl {
+            invalidated |= self.apply_simctrl(h, v);
+        }
+        if fx.mark.is_some() {
+            // Region-of-interest marker: reset per-hart counters so the
+            // bracketed region can be measured in isolation.
+            // (Recorded value currently unused beyond the reset.)
+        }
+        invalidated
+    }
+
+    /// Runtime reconfiguration via the vendor SIMCTRL CSR (§3.5).
+    /// Encoding documented at `isa::csr::CSR_SIMCTRL`.
+    pub fn apply_simctrl(&mut self, h: usize, value: u64) -> bool {
+        let mut invalidated = false;
+        // Pipeline model: per-hart (§3.5), flushes that hart's code cache.
+        let pm = value & 0b111;
+        if pm != 0 {
+            let name = match pm {
+                1 => "atomic",
+                2 => "simple",
+                3 => "inorder",
+                _ => "simple",
+            };
+            if let Some(model) = crate::pipeline::by_name(name) {
+                self.nominal[h] = !model.tracks_cycles();
+                self.pipelines[h] = model;
+                self.caches[h].flush();
+                self.conts[h].hint = NO_CHAIN;
+                invalidated = true;
+            }
+        }
+        // Memory model: global, flushes L0s.
+        let mm = (value >> 4) & 0b111;
+        if mm != 0 {
+            let n = self.sys.num_harts;
+            let model: Option<Box<dyn MemoryModel>> = match mm {
+                1 => Some(Box::new(crate::mem::AtomicModel)),
+                2 => Some(Box::new(crate::mem::tlb_model::TlbModel::new(n, self.timing))),
+                3 => Some(Box::new(crate::mem::cache_model::CacheModel::new(n, self.timing))),
+                4 => Some(Box::new(crate::mem::mesi::MesiModel::new(n, self.timing))),
+                _ => None,
+            };
+            if let Some(m) = model {
+                self.sys.set_model(m);
+            }
+        }
+        // Cache-line size (bytes): turning the L0 D-cache into an L0 TLB
+        // at 4096 (§3.5).
+        let line = (value >> 8) & 0xfff;
+        if line != 0 && line.is_power_of_two() && (4..=4096).contains(&line) {
+            self.sys.set_line_shift(line.trailing_zeros());
+            for c in &mut self.caches {
+                c.flush(); // icache-check placement depends on line size
+            }
+            for cont in &mut self.conts {
+                cont.hint = NO_CHAIN;
+            }
+            invalidated = true;
+        }
+        self.sys.simctrl_state = value;
+        invalidated
+    }
+
+    // -----------------------------------------------------------------------
+    // The fiber body: run hart `h` until it yields.
+    // -----------------------------------------------------------------------
+    /// Run hart `h` until it must hand control back: at a synchronisation
+    /// point once its clock reaches `bound` (the next hart's position in
+    /// the lockstep order), at a block end, or on a trap/WFI.
+    ///
+    /// Passing the bound in lets a hart that is still strictly the
+    /// scheduling minimum execute *through* its sync points without a
+    /// scheduler round trip — the multi-cycle-yield optimisation taken one
+    /// step further. The order of memory operations is identical to
+    /// yielding at every sync point: an operation executes only while its
+    /// hart is the global (cycle, id) minimum.
+    fn run_slice(&mut self, h: usize, bound: u64, bound_id: usize) -> Slice {
+        self.stats.slices += 1;
+
+        if self.harts[h].wfi {
+            poll_interrupt(&mut self.harts[h], &mut self.sys);
+            if self.harts[h].wfi {
+                return Slice::Waiting;
+            }
+            self.conts[h].clear();
+        }
+
+        // ---- block boundary ------------------------------------------------
+        if self.conts[h].block == NO_CHAIN {
+            // Interrupts are checked at block ends only (§3.3.2).
+            let pc_before = self.harts[h].pc;
+            poll_interrupt(&mut self.harts[h], &mut self.sys);
+            if self.harts[h].pc != pc_before {
+                self.conts[h].hint = NO_CHAIN; // redirected to trap vector
+            }
+            match self.enter_block(h) {
+                Ok(id) => {
+                    self.conts[h].block = id;
+                    self.conts[h].step = 0;
+                    self.conts[h].resumed = false;
+                }
+                Err(trap) => {
+                    let pc = self.harts[h].pc;
+                    self.deliver_trap(h, trap, pc, pc);
+                    self.yield_now(h);
+                    return Slice::Ran;
+                }
+            }
+        }
+
+        let id = self.conts[h].block;
+        // SAFETY: `block_ptr` points into this hart's code-cache arena. The
+        // arena is only mutated by process_effects / deliver_trap /
+        // apply_simctrl, and every such path returns from this function
+        // without dereferencing the pointer again. Between mutations the
+        // pointer is re-derefenced fresh each iteration.
+        let block_ptr: *const crate::dbt::Block = self.caches[h].block(id);
+        let block = unsafe { &*block_ptr };
+        let block_start = block.start;
+        let n_steps = block.steps.len();
+        let steps_ptr = block.steps.as_ptr();
+        let mut retired_in_slice = 0u64;
+
+        // ---- steps ----------------------------------------------------------
+        while (self.conts[h].step as usize) < n_steps {
+            let si = self.conts[h].step as usize;
+            // Steps are small Copy values; read by value, no borrow held.
+            debug_assert!(si < n_steps);
+            // SAFETY: si < n_steps; steps_ptr valid per block_ptr argument above.
+            let step = unsafe { *steps_ptr.add(si) };
+            let pc = block_start + step.pc_off as u64;
+            let npc = pc + step.len as u64;
+
+            // Synchronisation point (§3.3.2): yield pending cycles before
+            // executing. Hand control back only if another hart is now at
+            // or ahead of our position in the lockstep order.
+            if step.sync && !self.conts[h].resumed {
+                if self.nominal[h] {
+                    self.harts[h].pending += retired_in_slice;
+                    retired_in_slice = 0;
+                }
+                self.yield_now(h);
+                let c = self.harts[h].cycle;
+                if c > bound || (c == bound && bound_id < h) {
+                    self.conts[h].resumed = true;
+                    return Slice::Ran;
+                }
+            }
+            self.conts[h].resumed = false;
+
+            // Fast path for the dominant trap-free ALU step classes: skip
+            // the full exec_op dispatch (measured ~15% of lockstep time).
+            // (Disabled under the A1 naive-yield ablation, which must
+            // yield after every instruction.)
+            if !self.yield_per_instruction {
+            match step.op {
+                crate::isa::Op::AluImm { op, word, rd, rs1, imm } => {
+                    let hart = &mut self.harts[h];
+                    let v = crate::sys::exec::alu_value(op, word, hart.reg(rs1), imm as i64 as u64);
+                    hart.set_reg(rd, v);
+                    hart.instret += 1;
+                    hart.pending += step.cycles as u64;
+                    retired_in_slice += 1;
+                    self.conts[h].step += 1;
+                    continue;
+                }
+                crate::isa::Op::Alu { op, word, rd, rs1, rs2 } => {
+                    let hart = &mut self.harts[h];
+                    let v = crate::sys::exec::alu_value(op, word, hart.reg(rs1), hart.reg(rs2));
+                    hart.set_reg(rd, v);
+                    hart.instret += 1;
+                    hart.pending += step.cycles as u64;
+                    retired_in_slice += 1;
+                    self.conts[h].step += 1;
+                    continue;
+                }
+                _ => {}
+            }
+            }
+
+            match exec_op(&mut self.harts[h], &mut self.sys, &step.op, pc, npc) {
+                Ok(_) => {
+                    let hart = &mut self.harts[h];
+                    hart.instret += 1;
+                    hart.pending += step.cycles as u64;
+                    retired_in_slice += 1;
+                    self.conts[h].step += 1;
+                    if step.sync && self.harts[h].effects.any() && self.process_effects(h) {
+                        // Current translation flushed mid-block: resume at
+                        // the next instruction through a fresh lookup.
+                        self.harts[h].pc = npc;
+                        self.conts[h].clear();
+                        self.conts[h].hint = NO_CHAIN;
+                        if self.nominal[h] {
+                            self.harts[h].pending += retired_in_slice;
+                        }
+                        self.yield_now(h);
+                        return Slice::Ran;
+                    }
+                }
+                Err(trap) => {
+                    if self.nominal[h] {
+                        self.harts[h].pending += retired_in_slice;
+                    }
+                    self.deliver_trap(h, trap, pc, npc);
+                    self.yield_now(h);
+                    return Slice::Ran;
+                }
+            }
+
+            // A1 ablation: naive per-instruction yielding (always a full
+            // scheduler round trip, as in pre-batching R2VM).
+            if self.yield_per_instruction {
+                if self.nominal[h] {
+                    self.harts[h].pending += retired_in_slice;
+                }
+                self.yield_now(h);
+                return Slice::Ran;
+            }
+        }
+
+        // ---- terminator ------------------------------------------------------
+        let term = unsafe { &*block_ptr }.term;
+        let pc = block_start + term.pc_off as u64;
+        let npc = pc + term.len as u64;
+
+        if term.sync && !self.conts[h].resumed {
+            if self.nominal[h] {
+                self.harts[h].pending += retired_in_slice;
+                retired_in_slice = 0;
+            }
+            self.yield_now(h);
+            let c = self.harts[h].cycle;
+            if c > bound || (c == bound && bound_id < h) {
+                self.conts[h].resumed = true;
+                return Slice::Ran;
+            }
+        }
+        self.conts[h].resumed = false;
+
+        let prv_before_term = self.harts[h].prv;
+        match exec_op(&mut self.harts[h], &mut self.sys, &term.op, pc, npc) {
+            Ok(flow) => {
+                let (next_pc, taken) = match flow {
+                    Flow::Next => (npc, false),
+                    Flow::Taken => (unsafe { &*block_ptr }.taken_target(), true),
+                    Flow::Jump(t) => (t, !matches!(term.kind, TermKind::Fallthrough)),
+                    Flow::Wfi => {
+                        self.harts[h].wfi = true;
+                        (npc, false)
+                    }
+                };
+                if term.kind == TermKind::Branch {
+                    if let Some(t) = self.sys.trace.as_mut() {
+                        t.record_branch(pc, taken, h as u8);
+                    }
+                }
+                let hart = &mut self.harts[h];
+                hart.instret += 1;
+                hart.pending += if taken { term.cycles_taken } else { term.cycles_nt } as u64;
+                retired_in_slice += 1;
+                hart.pc = next_pc;
+                if self.harts[h].prv != prv_before_term {
+                    self.sys.l0[h].clear();
+                    self.conts[h].hint = NO_CHAIN;
+                }
+                if self.nominal[h] {
+                    self.harts[h].pending += retired_in_slice;
+                }
+                let invalidated =
+                    if self.harts[h].effects.any() { self.process_effects(h) } else { false };
+
+                // Block chaining (§3.1): remember the successor block so the
+                // next entry skips the hash lookup. For indirect jumps this
+                // caches the last target (§3.4.2's cross-page jump trick —
+                // the hint is validated against the target PC on entry).
+                self.conts[h].hint = NO_CHAIN;
+                if self.chaining && !invalidated {
+                    let prv = self.harts[h].prv as u8;
+                    match term.kind {
+                        TermKind::Branch | TermKind::Jump { .. } | TermKind::Fallthrough => {
+                            if let Some(t) = self.caches[h].follow_chain(id, taken) {
+                                self.conts[h].hint = t;
+                            } else if let Some(t) = self.caches[h].chain_to(id, taken, next_pc, prv)
+                            {
+                                self.conts[h].hint = t;
+                            }
+                        }
+                        TermKind::IndirectJump => {
+                            if let Some(t) = self.caches[h].follow_chain(id, true) {
+                                self.conts[h].hint = t; // validated on entry
+                            } else if let Some(t) = self.caches[h].chain_to(id, true, next_pc, prv)
+                            {
+                                self.conts[h].hint = t;
+                            }
+                        }
+                    }
+                }
+                self.conts[h].clear();
+                self.yield_now(h);
+            }
+            Err(trap) => {
+                if self.nominal[h] {
+                    self.harts[h].pending += retired_in_slice;
+                }
+                self.deliver_trap(h, trap, pc, npc);
+                self.yield_now(h);
+            }
+        }
+        Slice::Ran
+    }
+
+    /// Run only hart `h` (functional-parallel mode, §3.5: one engine per
+    /// host thread over shared DRAM). `shared_exit` propagates the first
+    /// exit across threads (`u64::MAX` = still running).
+    pub fn run_single(
+        &mut self,
+        h: usize,
+        max_insts: u64,
+        shared_exit: &std::sync::atomic::AtomicU64,
+    ) -> ExitReason {
+        use std::sync::atomic::Ordering;
+        let mut check = 0u32;
+        loop {
+            if self.harts[h].instret >= max_insts {
+                return ExitReason::StepLimit;
+            }
+            if let Some(code) = self.sys.exit.or(self.sys.bus.simio.exit_code) {
+                let _ = shared_exit.compare_exchange(
+                    u64::MAX,
+                    code,
+                    Ordering::SeqCst,
+                    Ordering::SeqCst,
+                );
+                return ExitReason::Exited(code);
+            }
+            // Poll the cross-thread exit flag periodically (not every
+            // slice — it is a shared cache line).
+            check = check.wrapping_add(1);
+            if check % 64 == 0 {
+                let v = shared_exit.load(Ordering::Relaxed);
+                if v != u64::MAX {
+                    return ExitReason::Exited(v);
+                }
+            }
+            match self.run_slice(h, u64::MAX, usize::MAX) {
+                Slice::Ran => {}
+                Slice::Waiting => {
+                    // Functional mode: WFI spins on the interrupt poll.
+                    let hart = &mut self.harts[h];
+                    hart.cycle += 16;
+                }
+            }
+        }
+    }
+
+    // -----------------------------------------------------------------------
+    // Scheduler: deterministic lockstep by minimum (cycle, hart id).
+    // -----------------------------------------------------------------------
+    pub fn run(&mut self, max_insts: u64) -> ExitReason {
+        loop {
+            if let Some(code) = self.sys.exit.or(self.sys.bus.simio.exit_code) {
+                return ExitReason::Exited(code);
+            }
+            if self.total_retired >= max_insts {
+                return ExitReason::StepLimit;
+            }
+
+            // Pick the runnable hart with minimum (cycle, id), and the
+            // runner-up position: the chosen hart may keep executing
+            // through its sync points until its clock passes the runner-up
+            // (same memory-operation order as yielding every time, far
+            // fewer scheduler round trips).
+            let mut best: Option<usize> = None;
+            let mut bound = u64::MAX;
+            let mut bound_id = usize::MAX;
+            let mut all_waiting = true;
+            for (i, hart) in self.harts.iter().enumerate() {
+                if hart.halted {
+                    continue;
+                }
+                if !hart.wfi {
+                    all_waiting = false;
+                    match best {
+                        Some(b) if hart.cycle >= self.harts[b].cycle => {
+                            if hart.cycle < bound {
+                                bound = hart.cycle;
+                                bound_id = i;
+                            }
+                        }
+                        Some(b) => {
+                            bound = self.harts[b].cycle;
+                            bound_id = b;
+                            best = Some(i);
+                        }
+                        None => best = Some(i),
+                    }
+                }
+            }
+
+            if all_waiting {
+                // Event-loop fiber: advance time to the next CLINT deadline.
+                let wfi_harts: Vec<usize> = self
+                    .harts
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, h)| !h.halted && h.wfi)
+                    .map(|(i, _)| i)
+                    .collect();
+                if wfi_harts.is_empty() {
+                    return ExitReason::Deadlock;
+                }
+                match self.sys.bus.clint.next_timer_deadline() {
+                    Some(t) => {
+                        let mut any_woke = false;
+                        for i in wfi_harts {
+                            if self.harts[i].cycle < t {
+                                self.harts[i].cycle = t;
+                            }
+                            poll_interrupt(&mut self.harts[i], &mut self.sys);
+                            if !self.harts[i].wfi {
+                                any_woke = true;
+                            }
+                        }
+                        if !any_woke {
+                            return ExitReason::Deadlock;
+                        }
+                        continue;
+                    }
+                    None => return ExitReason::Deadlock,
+                }
+            }
+
+            let h = match best {
+                Some(h) => h,
+                // Runnable set empty but some hart is in WFI: handled above.
+                None => continue,
+            };
+            let before = self.harts[h].instret;
+            match self.run_slice(h, bound, bound_id) {
+                Slice::Ran => {
+                    self.total_retired += self.harts[h].instret - before;
+                }
+                Slice::Waiting => {
+                    // WFI with interrupts possible later: nudge this hart's
+                    // clock past others so the scheduler doesn't spin on it.
+                    let max_cycle =
+                        self.harts.iter().filter(|x| !x.halted).map(|x| x.cycle).max().unwrap_or(0);
+                    let hart = &mut self.harts[h];
+                    hart.cycle = hart.cycle.max(max_cycle).max(hart.cycle + 16);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::*;
+    use crate::isa::csr::*;
+    use crate::mem::DRAM_BASE;
+    use crate::sys::loader::load_flat;
+
+    fn countdown_img(n: i64) -> crate::asm::Image {
+        let mut a = Assembler::new(DRAM_BASE);
+        a.li(A0, n);
+        a.li(A1, 0);
+        let top = a.here();
+        a.add(A1, A1, A0);
+        a.addi(A0, A0, -1);
+        a.bnez(A0, top);
+        a.mv(A0, A1);
+        a.li(A7, 93);
+        a.ecall();
+        a.finish()
+    }
+
+    fn engine_with(img: &crate::asm::Image, harts: usize, pipeline: &str) -> FiberEngine {
+        let sys = System::new(harts, 4 << 20);
+        let mut eng = FiberEngine::new(sys, pipeline);
+        let entry = load_flat(&eng.sys, img);
+        eng.set_entry(entry);
+        eng
+    }
+
+    #[test]
+    fn countdown_simple_model() {
+        let img = countdown_img(10);
+        let mut eng = engine_with(&img, 1, "simple");
+        let r = eng.run(1_000_000);
+        assert_eq!(r, ExitReason::Exited(55));
+        // E2: Simple model + atomic memory => mcycle == minstret.
+        let h = &eng.harts[0];
+        assert_eq!(h.cycle, h.instret);
+        assert!(eng.stats.blocks_translated >= 2);
+    }
+
+    #[test]
+    fn functional_equivalence_with_interpreter() {
+        // The DBT engine and the naive interpreter must produce identical
+        // architectural results.
+        let img = countdown_img(137);
+        let mut eng = engine_with(&img, 1, "inorder");
+        assert_eq!(eng.run(1_000_000), ExitReason::Exited(137 * 138 / 2));
+
+        let sys = System::new(1, 4 << 20);
+        let mut interp = crate::interp::InterpEngine::new(sys);
+        let entry = load_flat(&interp.sys, &img);
+        interp.harts[0].pc = entry;
+        assert_eq!(interp.run(1_000_000), ExitReason::Exited(137 * 138 / 2));
+        assert_eq!(interp.harts[0].instret, eng.harts[0].instret, "same retired count");
+    }
+
+    #[test]
+    fn code_cache_reuse_and_chaining() {
+        let img = countdown_img(1000);
+        let mut eng = engine_with(&img, 1, "simple");
+        eng.run(1_000_000);
+        // The loop body must be translated once and re-entered ~1000 times.
+        assert!(eng.stats.blocks_translated < 10, "{:?}", eng.stats);
+        assert!(eng.stats.block_entries > 900);
+        assert!(
+            eng.stats.chain_hits > 900,
+            "chaining must serve the loop: {:?}",
+            eng.stats
+        );
+    }
+
+    #[test]
+    fn chaining_ablation_same_result() {
+        let img = countdown_img(500);
+        let mut a = engine_with(&img, 1, "simple");
+        a.chaining = false;
+        assert_eq!(a.run(1_000_000), ExitReason::Exited(500 * 501 / 2));
+        let mut b = engine_with(&img, 1, "simple");
+        assert_eq!(b.run(1_000_000), ExitReason::Exited(500 * 501 / 2));
+        assert_eq!(a.harts[0].cycle, b.harts[0].cycle, "chaining must not change timing");
+        assert_eq!(a.stats.chain_hits, 0);
+    }
+
+    #[test]
+    fn yield_batching_does_not_change_cycles() {
+        // A1: naive vs batched yielding must agree on simulated time.
+        let img = countdown_img(200);
+        let mut naive = engine_with(&img, 1, "inorder");
+        naive.yield_per_instruction = true;
+        assert_eq!(naive.run(1_000_000), ExitReason::Exited(200 * 201 / 2));
+        let mut batched = engine_with(&img, 1, "inorder");
+        assert_eq!(batched.run(1_000_000), ExitReason::Exited(200 * 201 / 2));
+        assert_eq!(naive.harts[0].cycle, batched.harts[0].cycle);
+        assert!(naive.stats.yields > batched.stats.yields);
+    }
+
+    #[test]
+    fn lockstep_two_harts_deterministic() {
+        // Two harts ping-pong a flag; lockstep must give a deterministic
+        // cycle count across runs.
+        let mk = || {
+            let mut a = Assembler::new(DRAM_BASE);
+            let flag = a.new_label();
+            let hart1 = a.new_label();
+            let done = a.new_label();
+            a.csrr(T0, CSR_MHARTID);
+            a.la(T1, flag);
+            a.bnez(T0, hart1);
+            // hart 0: set flag to 1..100, wait for echo
+            a.li(S0, 1);
+            let h0loop = a.here();
+            a.amoswap_w(ZERO, S0, T1);
+            let h0wait = a.here();
+            a.lw(T2, T1, 0);
+            a.bnez(T2, h0wait); // wait for hart1 to zero it
+            a.addi(S0, S0, 1);
+            a.li(T3, 100);
+            a.blt(S0, T3, h0loop);
+            a.li(A0, 0);
+            a.li(A7, 93);
+            a.ecall();
+            // hart 1: echo flag back to zero
+            a.bind(hart1);
+            let h1loop = a.here();
+            a.lw(T2, T1, 0);
+            a.beqz(T2, h1loop);
+            a.amoswap_w(ZERO, ZERO, T1);
+            a.j(h1loop);
+            a.bind(done);
+            a.align(8);
+            a.bind(flag);
+            a.d32(0);
+            a.finish()
+        };
+        let img = mk();
+        let run = || {
+            let mut eng = engine_with(&img, 2, "simple");
+            let r = eng.run(10_000_000);
+            (r, eng.harts[0].cycle, eng.harts[1].cycle)
+        };
+        let (r1, c1a, c1b) = run();
+        let (r2, c2a, c2b) = run();
+        assert_eq!(r1, ExitReason::Exited(0));
+        assert_eq!(r1, r2);
+        assert_eq!((c1a, c1b), (c2a, c2b), "lockstep must be deterministic");
+    }
+
+    #[test]
+    fn simctrl_runtime_switch() {
+        // Start on simple/atomic, switch to inorder+cache at runtime via
+        // the SIMCTRL CSR (§3.5), keep running correctly.
+        let mut a = Assembler::new(DRAM_BASE);
+        a.li(A0, 50);
+        a.li(A1, 0);
+        let top1 = a.here();
+        a.add(A1, A1, A0);
+        a.addi(A0, A0, -1);
+        a.bnez(A0, top1);
+        // switch: pipeline=inorder(3), memory=cache(3<<4)
+        a.li(T0, 3 | (3 << 4));
+        a.csrw(CSR_SIMCTRL, T0);
+        a.li(A0, 50);
+        let top2 = a.here();
+        a.add(A1, A1, A0);
+        a.addi(A0, A0, -1);
+        a.bnez(A0, top2);
+        a.mv(A0, A1);
+        a.li(A7, 93);
+        a.ecall();
+        let img = a.finish();
+        let mut eng = engine_with(&img, 1, "simple");
+        let r = eng.run(1_000_000);
+        assert_eq!(r, ExitReason::Exited(2 * (50 * 51 / 2)));
+        assert_eq!(eng.pipelines[0].name(), "inorder");
+        assert_eq!(eng.sys.model.name(), "cache");
+        assert_eq!(eng.sys.simctrl_state, 3 | (3 << 4));
+    }
+
+    #[test]
+    fn fence_i_flushes_code_cache() {
+        let mut a = Assembler::new(DRAM_BASE);
+        a.li(A0, 1);
+        a.fence_i();
+        a.li(A7, 93);
+        a.ecall();
+        let img = a.finish();
+        let mut eng = engine_with(&img, 1, "simple");
+        assert_eq!(eng.run(100_000), ExitReason::Exited(1));
+        assert!(eng.caches[0].flushes >= 1);
+    }
+
+    #[test]
+    fn wfi_timer_wakeup() {
+        let mut b = Assembler::new(DRAM_BASE);
+        let handler = b.new_label();
+        b.la(T0, handler);
+        b.csrw(CSR_MTVEC, T0);
+        b.li(T1, IRQ_MTIP as i64);
+        b.csrw(CSR_MIE, T1);
+        b.li(T1, MSTATUS_MIE as i64);
+        b.csrrs(ZERO, CSR_MSTATUS, T1);
+        b.li(T2, (crate::sys::dev::CLINT_BASE + 0x4000) as i64);
+        b.li(T3, 800);
+        b.sd(T3, T2, 0);
+        let spin = b.here();
+        b.wfi();
+        b.j(spin);
+        b.align(4);
+        b.bind(handler);
+        b.li(A0, 9);
+        b.li(A7, 93);
+        b.ecall();
+        let img = b.finish();
+        let mut eng = engine_with(&img, 1, "simple");
+        assert_eq!(eng.run(1_000_000), ExitReason::Exited(9));
+        assert!(eng.harts[0].cycle >= 800);
+    }
+
+    #[test]
+    fn mesi_spinlock_two_harts() {
+        // Two harts increment a shared counter under an LR/SC spinlock
+        // with the MESI memory model in lockstep.
+        let mut a = Assembler::new(DRAM_BASE);
+        let lock = a.new_label();
+        let counter = a.new_label();
+        let donecnt = a.new_label();
+        // acquire
+        let acquire = a.here();
+        a.lr_w(T0, A1);
+        a.bnez(T0, acquire);
+        a.li(T1, 1);
+        a.sc_w(T0, T1, A1);
+        a.bnez(T0, acquire);
+        // critical section: counter++
+        a.lw(T2, A2, 0);
+        a.addi(T2, T2, 1);
+        a.sw(T2, A2, 0);
+        // release
+        a.fence();
+        a.sw(ZERO, A1, 0);
+        a.ret();
+        a.set_entry_here();
+        let entry = a.here();
+        let _ = entry;
+        a.la(A1, lock);
+        a.la(A2, counter);
+        a.li(S0, 200);
+        let loop_ = a.here();
+        let acquire_l = a.new_label();
+        let _ = acquire_l;
+        a.jal(RA, {
+            // call acquire block above
+            acquire
+        });
+        a.addi(S0, S0, -1);
+        a.bnez(S0, loop_);
+        // done: bump done counter; hart 0 waits for both
+        a.la(T3, donecnt);
+        a.li(T4, 1);
+        a.amoadd_w(ZERO, T4, T3);
+        a.csrr(T0, CSR_MHARTID);
+        let spin = a.here();
+        a.bnez(T0, spin);
+        let wait = a.here();
+        a.lw(T4, T3, 0);
+        a.slti(T5, T4, 2);
+        a.bnez(T5, wait);
+        a.lw(A0, A2, 0);
+        a.li(A7, 93);
+        a.ecall();
+        a.align(8);
+        a.bind(lock);
+        a.d32(0);
+        a.bind(counter);
+        a.d32(0);
+        a.bind(donecnt);
+        a.d32(0);
+        let img = a.finish();
+
+        let sys = System::with_model(
+            2,
+            4 << 20,
+            Box::new(crate::mem::mesi::MesiModel::new(2, MemTiming::default())),
+        );
+        let mut eng = FiberEngine::new(sys, "inorder");
+        let entry = load_flat(&eng.sys, &img);
+        eng.set_entry(entry);
+        let r = eng.run(50_000_000);
+        assert_eq!(r, ExitReason::Exited(400), "no increment may be lost under MESI");
+        let stats = eng.sys.model.stats();
+        let inval = stats.iter().find(|(k, _)| *k == "invalidations").unwrap().1;
+        assert!(inval > 0, "contended lock must produce invalidations");
+    }
+}

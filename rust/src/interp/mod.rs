@@ -1,0 +1,359 @@
+//! Naive per-cycle interpreter — the gem5-like lockstep baseline.
+//!
+//! Iterates all simulated cores each cycle (§2.3: "existing cycle-level
+//! simulators such as gem5 achieve lockstep by iterating through all
+//! simulated cores each cycle. This causes a significant performance
+//! drop"), re-fetching and re-decoding every instruction with no
+//! translation cache. This is the slow end of Figure 5; the DBT engine's
+//! speedup is measured against it.
+
+use crate::isa::csr::{EXC_ECALL_M, EXC_ECALL_S, EXC_ECALL_U};
+use crate::isa::{decode, Op};
+use crate::sys::exec::{exec_op, fetch_raw, Flow};
+use crate::sys::hart::Hart;
+use crate::sys::{handle_ecall, System};
+
+/// Why an engine run loop stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExitReason {
+    /// Guest requested exit with this code.
+    Exited(u64),
+    /// Instruction/step budget exhausted.
+    StepLimit,
+    /// All harts are halted or in unwakeable WFI.
+    Deadlock,
+}
+
+/// Fold pending IPIs into the hart and take a pending interrupt if any.
+pub fn poll_interrupt(hart: &mut Hart, sys: &mut System) {
+    if sys.ipi[hart.id] != 0 {
+        hart.mip |= std::mem::take(&mut sys.ipi[hart.id]);
+    }
+    let ext = sys.bus.clint.mip_bits(hart.id, hart.now());
+    if let Some(cause) = hart.pending_interrupt(ext) {
+        hart.wfi = false;
+        let target = hart.take_trap(crate::sys::Trap::new(cause, 0), hart.pc);
+        hart.pc = target;
+    }
+}
+
+/// Process pending side effects (fence.i / sfence.vma). The interpreter
+/// holds no translated code, so only memory-model/L0 state is flushed.
+fn process_effects(hart: &mut Hart, sys: &mut System) {
+    if hart.effects.sfence {
+        sys.model.flush_hart(&mut sys.l0, hart.id);
+        sys.l0[hart.id].clear();
+    }
+    if hart.effects.flush_l0 {
+        sys.l0[hart.id].clear();
+    }
+    hart.effects.clear();
+}
+
+/// Execute one instruction on `hart`. Returns `false` if the hart cannot
+/// make progress (halted / waiting).
+pub fn step_hart(hart: &mut Hart, sys: &mut System) -> bool {
+    if hart.halted {
+        return false;
+    }
+    poll_interrupt(hart, sys);
+    if hart.wfi {
+        // Model WFI as 1 cycle per poll.
+        hart.pending += 1;
+        return false;
+    }
+
+    let prv_before = hart.prv;
+    let pc = hart.pc;
+    let raw = match fetch_raw(hart, sys, pc) {
+        Ok(r) => r,
+        Err(trap) => {
+            hart.pc = hart.take_trap(trap, pc);
+            return true;
+        }
+    };
+    let (op, len) = decode(raw);
+    let npc = pc.wrapping_add(len);
+
+    match exec_op(hart, sys, &op, pc, npc) {
+        Ok(flow) => {
+            hart.instret += 1;
+            hart.pending += 1; // timing-simple: 1 cycle per instruction
+            hart.pc = match flow {
+                Flow::Next => npc,
+                Flow::Taken => {
+                    if let Op::Branch { imm, .. } = op {
+                        pc.wrapping_add(imm as i64 as u64)
+                    } else {
+                        unreachable!("Taken from non-branch")
+                    }
+                }
+                Flow::Jump(t) => t,
+                Flow::Wfi => {
+                    hart.wfi = true;
+                    npc
+                }
+            };
+            if hart.effects.any() {
+                process_effects(hart, sys);
+            }
+        }
+        Err(trap) => {
+            let is_ecall =
+                matches!(trap.cause, EXC_ECALL_U | EXC_ECALL_S | EXC_ECALL_M);
+            if is_ecall && handle_ecall(hart, sys) {
+                hart.instret += 1;
+                hart.pending += 1;
+                hart.pc = npc;
+            } else {
+                hart.pc = hart.take_trap(trap, pc);
+            }
+        }
+    }
+    if hart.prv != prv_before {
+        // Privilege changed (trap/mret/sret): L0 translations are not
+        // mode-tagged, so flush.
+        sys.l0[hart.id].clear();
+    }
+    // Naive engine: commit cycles immediately (per-cycle lockstep).
+    hart.cycle += std::mem::take(&mut hart.pending);
+    true
+}
+
+/// The interpreter engine: harts + system, stepped in strict round-robin
+/// (one instruction each — the per-cycle analogue).
+pub struct InterpEngine {
+    pub harts: Vec<Hart>,
+    pub sys: System,
+}
+
+impl InterpEngine {
+    pub fn new(sys: System) -> InterpEngine {
+        let harts = (0..sys.num_harts).map(Hart::new).collect();
+        InterpEngine { harts, sys }
+    }
+
+    /// Run until exit, deadlock, or `max_steps` total instructions.
+    pub fn run(&mut self, max_steps: u64) -> ExitReason {
+        let mut steps = 0u64;
+        loop {
+            let mut progressed = false;
+            for hart in &mut self.harts {
+                if step_hart(hart, &mut self.sys) {
+                    progressed = true;
+                    steps += 1;
+                }
+                if let Some(code) = self.sys.exit.or(self.sys.bus.simio.exit_code) {
+                    return ExitReason::Exited(code);
+                }
+            }
+            if steps >= max_steps {
+                return ExitReason::StepLimit;
+            }
+            if !progressed {
+                // All harts waiting: advance time to the next timer event.
+                if self.harts.iter().all(|h| h.halted) {
+                    return ExitReason::Deadlock;
+                }
+                match self.sys.bus.clint.next_timer_deadline() {
+                    Some(t) => {
+                        for h in &mut self.harts {
+                            if !h.halted && h.cycle < t {
+                                h.cycle = t;
+                            }
+                        }
+                    }
+                    None => return ExitReason::Deadlock,
+                }
+            }
+        }
+    }
+
+    pub fn total_instret(&self) -> u64 {
+        self.harts.iter().map(|h| h.instret).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::*;
+    use crate::mem::DRAM_BASE;
+    use crate::sys::loader::load_flat;
+
+    fn run_image(img: &crate::asm::Image, harts: usize, max: u64) -> (InterpEngine, ExitReason) {
+        let sys = System::new(harts, 4 << 20);
+        let mut eng = InterpEngine::new(sys);
+        let entry = load_flat(&eng.sys, img);
+        for h in &mut eng.harts {
+            h.pc = entry;
+        }
+        let r = eng.run(max);
+        (eng, r)
+    }
+
+    /// Exit via SBI proxy-exit (a7=93, a0=code).
+    fn emit_exit(a: &mut Assembler, code: i64) {
+        a.li(A0, code);
+        a.li(A7, 93);
+        a.ecall();
+    }
+
+    #[test]
+    fn countdown_loop_and_exit() {
+        let mut a = Assembler::new(DRAM_BASE);
+        a.li(A0, 10);
+        a.li(A1, 0);
+        let top = a.here();
+        a.add(A1, A1, A0);
+        a.addi(A0, A0, -1);
+        a.bnez(A0, top);
+        // a1 = 55; exit(a1)
+        a.mv(A0, A1);
+        a.li(A7, 93);
+        a.ecall();
+        let (_, r) = run_image(&a.finish(), 1, 100_000);
+        assert_eq!(r, ExitReason::Exited(55));
+    }
+
+    #[test]
+    fn memory_and_console() {
+        let mut a = Assembler::new(DRAM_BASE);
+        let msg = a.new_label();
+        // print 3 chars via SBI putchar
+        a.la(S0, msg);
+        a.li(S1, 3);
+        let loop_ = a.here();
+        a.lbu(A0, S0, 0);
+        a.li(A7, 1);
+        a.ecall();
+        a.addi(S0, S0, 1);
+        a.addi(S1, S1, -1);
+        a.bnez(S1, loop_);
+        emit_exit(&mut a, 0);
+        a.align(8);
+        a.bind(msg);
+        a.bytes(b"ok\n");
+        let (eng, r) = run_image(&a.finish(), 1, 100_000);
+        assert_eq!(r, ExitReason::Exited(0));
+        assert_eq!(eng.sys.bus.uart.output_str(), "ok\n");
+    }
+
+    #[test]
+    fn simple_cycle_identity() {
+        // E2: under the timing-simple interpreter every instruction is one
+        // cycle plus memory-model cold cycles; with the atomic model,
+        // MCYCLE == MINSTRET exactly (§4.1 "simple model is validated by
+        // checking that all cores have their MCYCLE and MINSTRET CSR equal").
+        let mut a = Assembler::new(DRAM_BASE);
+        a.li(A0, 1000);
+        let top = a.here();
+        a.addi(A0, A0, -1);
+        a.bnez(A0, top);
+        emit_exit(&mut a, 0);
+        let (eng, r) = run_image(&a.finish(), 1, 100_000);
+        assert_eq!(r, ExitReason::Exited(0));
+        let h = &eng.harts[0];
+        assert_eq!(h.cycle, h.instret, "atomic memory model: mcycle == minstret");
+    }
+
+    #[test]
+    fn four_harts_amo_counter() {
+        // Each hart amoadds its (id+1) to a counter 100 times; hart 0
+        // waits for the result then exits with the total.
+        let mut a = Assembler::new(DRAM_BASE);
+        let counter = a.new_label();
+        let done = a.new_label();
+        let spin = a.new_label();
+        a.csrr(T0, crate::isa::csr::CSR_MHARTID);
+        a.addi(T0, T0, 1);
+        a.la(T1, counter);
+        a.li(T2, 100);
+        let loop_ = a.here();
+        a.amoadd_w(ZERO, T0, T1);
+        a.addi(T2, T2, -1);
+        a.bnez(T2, loop_);
+        // signal completion
+        a.la(T3, done);
+        a.li(T4, 1);
+        a.amoadd_w(ZERO, T4, T3);
+        // hart 0 waits for all 4 then exits; others spin forever
+        a.csrr(T0, crate::isa::csr::CSR_MHARTID);
+        a.bind(spin);
+        a.bnez(T0, spin);
+        a.la(T3, done);
+        let wait = a.here();
+        a.lw(T4, T3, 0);
+        a.slti(T5, T4, 4);
+        a.bnez(T5, wait);
+        a.la(T1, counter);
+        a.lw(A0, T1, 0);
+        a.li(A7, 93);
+        a.ecall();
+        a.align(8);
+        a.bind(counter);
+        a.d32(0);
+        a.bind(done);
+        a.d32(0);
+        let (_, r) = run_image(&a.finish(), 4, 10_000_000);
+        // total = 100 * (1+2+3+4) = 1000
+        assert_eq!(r, ExitReason::Exited(1000));
+    }
+
+    #[test]
+    fn illegal_instruction_traps_to_mtvec() {
+        let mut a = Assembler::new(DRAM_BASE);
+        let handler = a.new_label();
+        let trap = a.new_label();
+        a.la(T0, handler);
+        a.csrw(crate::isa::csr::CSR_MTVEC, T0);
+        a.bind(trap);
+        a.emit_raw32(0xffff_ffff); // illegal
+        // (not reached)
+        emit_exit(&mut a, 99);
+        a.align(4);
+        a.bind(handler);
+        // exit(mcause)
+        a.csrr(A0, crate::isa::csr::CSR_MCAUSE);
+        a.li(A7, 93);
+        a.ecall();
+        let (eng, r) = run_image(&a.finish(), 1, 100_000);
+        assert_eq!(r, ExitReason::Exited(2)); // EXC_ILLEGAL
+        assert_eq!(eng.harts[0].mtval, 0xffff_ffff);
+    }
+
+    #[test]
+    fn timer_interrupt_wakes_wfi() {
+        use crate::isa::csr::*;
+        let img = {
+            let mut b = Assembler::new(DRAM_BASE);
+            let handler = b.new_label();
+            b.la(T0, handler);
+            b.csrw(CSR_MTVEC, T0);
+            b.li(T1, IRQ_MTIP as i64);
+            b.csrw(CSR_MIE, T1);
+            b.li(T1, MSTATUS_MIE as i64);
+            b.csrrs(ZERO, CSR_MSTATUS, T1);
+            // mtimecmp[0] = 500 via CLINT MMIO
+            b.li(T2, (crate::sys::dev::CLINT_BASE + 0x4000) as i64);
+            b.li(T3, 500);
+            b.sd(T3, T2, 0);
+            let spin = b.here();
+            b.wfi();
+            b.j(spin);
+            b.align(4);
+            b.bind(handler);
+            b.li(A0, 42);
+            b.li(A7, 93);
+            b.ecall();
+            b.finish()
+        };
+        let sys = System::new(1, 4 << 20);
+        let mut eng = InterpEngine::new(sys);
+        let entry = load_flat(&eng.sys, &img);
+        eng.harts[0].pc = entry;
+        let r = eng.run(1_000_000);
+        assert_eq!(r, ExitReason::Exited(42));
+        assert!(eng.harts[0].cycle >= 500, "must have slept until mtimecmp");
+    }
+}

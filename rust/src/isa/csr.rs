@@ -1,0 +1,153 @@
+//! Control and status register numbers and field layouts.
+//!
+//! Only the CSRs the simulator implements are listed; the hart raises
+//! illegal-instruction for anything else. `CSR_SIMCTRL` is the
+//! vendor-defined register used for runtime model reconfiguration
+//! (paper §3.5) — it lives in the custom read/write range 0x7C0-0x7FF.
+
+// ---- Unprivileged counters -------------------------------------------------
+pub const CSR_CYCLE: u16 = 0xC00;
+pub const CSR_TIME: u16 = 0xC01;
+pub const CSR_INSTRET: u16 = 0xC02;
+
+// ---- Supervisor ------------------------------------------------------------
+pub const CSR_SSTATUS: u16 = 0x100;
+pub const CSR_SIE: u16 = 0x104;
+pub const CSR_STVEC: u16 = 0x105;
+pub const CSR_SCOUNTEREN: u16 = 0x106;
+pub const CSR_SSCRATCH: u16 = 0x140;
+pub const CSR_SEPC: u16 = 0x141;
+pub const CSR_SCAUSE: u16 = 0x142;
+pub const CSR_STVAL: u16 = 0x143;
+pub const CSR_SIP: u16 = 0x144;
+pub const CSR_SATP: u16 = 0x180;
+
+// ---- Machine ---------------------------------------------------------------
+pub const CSR_MVENDORID: u16 = 0xF11;
+pub const CSR_MARCHID: u16 = 0xF12;
+pub const CSR_MIMPID: u16 = 0xF13;
+pub const CSR_MHARTID: u16 = 0xF14;
+pub const CSR_MSTATUS: u16 = 0x300;
+pub const CSR_MISA: u16 = 0x301;
+pub const CSR_MEDELEG: u16 = 0x302;
+pub const CSR_MIDELEG: u16 = 0x303;
+pub const CSR_MIE: u16 = 0x304;
+pub const CSR_MTVEC: u16 = 0x305;
+pub const CSR_MCOUNTEREN: u16 = 0x306;
+pub const CSR_MSCRATCH: u16 = 0x340;
+pub const CSR_MEPC: u16 = 0x341;
+pub const CSR_MCAUSE: u16 = 0x342;
+pub const CSR_MTVAL: u16 = 0x343;
+pub const CSR_MIP: u16 = 0x344;
+pub const CSR_MCYCLE: u16 = 0xB00;
+pub const CSR_MINSTRET: u16 = 0xB02;
+
+// ---- Vendor (paper §3.5: runtime reconfiguration) ---------------------------
+/// Writing this CSR switches the hart's pipeline model / the system's
+/// memory model at runtime. Layout (see `coordinator::simctrl`):
+///   bits [2:0]  pipeline model (0 = keep, 1 = atomic, 2 = simple, 3 = in-order)
+///   bits [6:4]  memory model   (0 = keep, 1 = atomic, 2 = tlb, 3 = cache, 4 = mesi)
+///   bits [19:8] cache-line size in bytes (0 = keep)
+/// Reads return the packed current configuration.
+pub const CSR_SIMCTRL: u16 = 0x7C0;
+/// Read-only: statistics scratch (dcache accesses low 32 / hits high 32).
+pub const CSR_SIMSTATS: u16 = 0x7C1;
+/// Write: region-of-interest marker (value is an arbitrary tag recorded in
+/// the stats registry; used by workloads to bracket measurement regions).
+pub const CSR_SIMMARK: u16 = 0x7C2;
+
+// ---- mstatus fields ----------------------------------------------------------
+pub const MSTATUS_SIE: u64 = 1 << 1;
+pub const MSTATUS_MIE: u64 = 1 << 3;
+pub const MSTATUS_SPIE: u64 = 1 << 5;
+pub const MSTATUS_MPIE: u64 = 1 << 7;
+pub const MSTATUS_SPP: u64 = 1 << 8;
+pub const MSTATUS_MPP_MASK: u64 = 0b11 << 11;
+pub const MSTATUS_MPP_SHIFT: u32 = 11;
+pub const MSTATUS_SUM: u64 = 1 << 18;
+pub const MSTATUS_MXR: u64 = 1 << 19;
+/// Fields writable through sstatus.
+pub const SSTATUS_MASK: u64 =
+    MSTATUS_SIE | MSTATUS_SPIE | MSTATUS_SPP | MSTATUS_SUM | MSTATUS_MXR;
+
+// ---- interrupt bits (mip/mie) -------------------------------------------------
+pub const IRQ_SSIP: u64 = 1 << 1; // supervisor software
+pub const IRQ_MSIP: u64 = 1 << 3; // machine software (CLINT)
+pub const IRQ_STIP: u64 = 1 << 5; // supervisor timer
+pub const IRQ_MTIP: u64 = 1 << 7; // machine timer (CLINT)
+pub const IRQ_SEIP: u64 = 1 << 9; // supervisor external (PLIC)
+pub const IRQ_MEIP: u64 = 1 << 11; // machine external (PLIC)
+
+// ---- exception causes -----------------------------------------------------------
+pub const EXC_INSN_MISALIGNED: u64 = 0;
+pub const EXC_INSN_ACCESS: u64 = 1;
+pub const EXC_ILLEGAL: u64 = 2;
+pub const EXC_BREAKPOINT: u64 = 3;
+pub const EXC_LOAD_MISALIGNED: u64 = 4;
+pub const EXC_LOAD_ACCESS: u64 = 5;
+pub const EXC_STORE_MISALIGNED: u64 = 6;
+pub const EXC_STORE_ACCESS: u64 = 7;
+pub const EXC_ECALL_U: u64 = 8;
+pub const EXC_ECALL_S: u64 = 9;
+pub const EXC_ECALL_M: u64 = 11;
+pub const EXC_INSN_PAGE_FAULT: u64 = 12;
+pub const EXC_LOAD_PAGE_FAULT: u64 = 13;
+pub const EXC_STORE_PAGE_FAULT: u64 = 15;
+
+/// Interrupt bit of mcause.
+pub const CAUSE_INTERRUPT: u64 = 1 << 63;
+
+/// Privilege levels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priv {
+    User = 0,
+    Supervisor = 1,
+    Machine = 3,
+}
+
+impl Priv {
+    pub fn from_bits(b: u64) -> Priv {
+        match b & 3 {
+            0 => Priv::User,
+            1 => Priv::Supervisor,
+            _ => Priv::Machine,
+        }
+    }
+}
+
+/// Is `csr` read-only by encoding (top two bits == 0b11)?
+#[inline]
+pub fn csr_is_readonly(csr: u16) -> bool {
+    csr >> 10 == 0b11
+}
+
+/// Minimum privilege required to access `csr` (bits [9:8]).
+#[inline]
+pub fn csr_min_priv(csr: u16) -> Priv {
+    Priv::from_bits(((csr >> 8) & 3) as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn readonly_encoding() {
+        assert!(csr_is_readonly(CSR_CYCLE));
+        assert!(csr_is_readonly(CSR_MHARTID));
+        assert!(!csr_is_readonly(CSR_MSTATUS));
+        assert!(!csr_is_readonly(CSR_SIMCTRL));
+    }
+
+    #[test]
+    fn priv_encoding() {
+        assert_eq!(csr_min_priv(CSR_MSTATUS), Priv::Machine);
+        assert_eq!(csr_min_priv(CSR_SSTATUS), Priv::Supervisor);
+        assert_eq!(csr_min_priv(CSR_CYCLE), Priv::User);
+        // 0x7C0 is in the machine custom R/W range by encoding; the hart
+        // deliberately exempts the SIMCTRL family from the privilege check
+        // so user-level workloads can bracket regions of interest.
+        assert_eq!(csr_min_priv(CSR_SIMCTRL), Priv::Machine);
+        assert!(Priv::Machine > Priv::Supervisor && Priv::Supervisor > Priv::User);
+    }
+}

@@ -1,0 +1,674 @@
+//! RV64IMAC + Zicsr + Zifencei instruction decoder.
+//!
+//! 16-bit (C extension) encodings are expanded into their base-ISA [`Op`]
+//! at decode time; the caller learns the encoded length from
+//! [`inst_len`] / the `u32` returned by the fetch stage.
+
+use super::op::*;
+
+/// Length in bytes of the instruction starting with halfword `lo`.
+#[inline(always)]
+pub fn inst_len(lo: u16) -> u64 {
+    if lo & 0b11 == 0b11 {
+        4
+    } else {
+        2
+    }
+}
+
+#[inline(always)]
+fn x(inst: u32, lo: u32, len: u32) -> u32 {
+    (inst >> lo) & ((1 << len) - 1)
+}
+
+#[inline(always)]
+fn rd(inst: u32) -> u8 {
+    x(inst, 7, 5) as u8
+}
+#[inline(always)]
+fn rs1(inst: u32) -> u8 {
+    x(inst, 15, 5) as u8
+}
+#[inline(always)]
+fn rs2(inst: u32) -> u8 {
+    x(inst, 20, 5) as u8
+}
+#[inline(always)]
+fn funct3(inst: u32) -> u32 {
+    x(inst, 12, 3)
+}
+#[inline(always)]
+fn funct7(inst: u32) -> u32 {
+    x(inst, 25, 7)
+}
+
+/// I-type immediate, sign-extended.
+#[inline(always)]
+fn imm_i(inst: u32) -> i32 {
+    (inst as i32) >> 20
+}
+
+/// S-type immediate.
+#[inline(always)]
+fn imm_s(inst: u32) -> i32 {
+    ((inst & 0xfe00_0000) as i32 >> 20) | x(inst, 7, 5) as i32
+}
+
+/// B-type immediate.
+#[inline(always)]
+fn imm_b(inst: u32) -> i32 {
+    ((inst & 0x8000_0000) as i32 >> 19)
+        | ((x(inst, 7, 1) << 11) as i32)
+        | ((x(inst, 25, 6) << 5) as i32)
+        | ((x(inst, 8, 4) << 1) as i32)
+}
+
+/// U-type immediate (already shifted).
+#[inline(always)]
+fn imm_u(inst: u32) -> i32 {
+    (inst & 0xffff_f000) as i32
+}
+
+/// J-type immediate.
+#[inline(always)]
+fn imm_j(inst: u32) -> i32 {
+    ((inst & 0x8000_0000) as i32 >> 11)
+        | ((x(inst, 12, 8) << 12) as i32)
+        | ((x(inst, 20, 1) << 11) as i32)
+        | ((x(inst, 21, 10) << 1) as i32)
+}
+
+/// Decode a 32-bit (uncompressed) instruction word.
+pub fn decode32(inst: u32) -> Op {
+    let ill = Op::Illegal { raw: inst };
+    match x(inst, 0, 7) {
+        0b0110111 => Op::Lui { rd: rd(inst), imm: imm_u(inst) },
+        0b0010111 => Op::Auipc { rd: rd(inst), imm: imm_u(inst) },
+        0b1101111 => Op::Jal { rd: rd(inst), imm: imm_j(inst) },
+        0b1100111 => {
+            if funct3(inst) != 0 {
+                return ill;
+            }
+            Op::Jalr { rd: rd(inst), rs1: rs1(inst), imm: imm_i(inst) }
+        }
+        0b1100011 => {
+            let cond = match funct3(inst) {
+                0b000 => BrCond::Eq,
+                0b001 => BrCond::Ne,
+                0b100 => BrCond::Lt,
+                0b101 => BrCond::Ge,
+                0b110 => BrCond::Ltu,
+                0b111 => BrCond::Geu,
+                _ => return ill,
+            };
+            Op::Branch { cond, rs1: rs1(inst), rs2: rs2(inst), imm: imm_b(inst) }
+        }
+        0b0000011 => {
+            let (width, signed) = match funct3(inst) {
+                0b000 => (MemWidth::B, true),
+                0b001 => (MemWidth::H, true),
+                0b010 => (MemWidth::W, true),
+                0b011 => (MemWidth::D, true),
+                0b100 => (MemWidth::B, false),
+                0b101 => (MemWidth::H, false),
+                0b110 => (MemWidth::W, false),
+                _ => return ill,
+            };
+            Op::Load { width, signed, rd: rd(inst), rs1: rs1(inst), imm: imm_i(inst) }
+        }
+        0b0100011 => {
+            let width = match funct3(inst) {
+                0b000 => MemWidth::B,
+                0b001 => MemWidth::H,
+                0b010 => MemWidth::W,
+                0b011 => MemWidth::D,
+                _ => return ill,
+            };
+            Op::Store { width, rs1: rs1(inst), rs2: rs2(inst), imm: imm_s(inst) }
+        }
+        0b0010011 => {
+            let op = match funct3(inst) {
+                0b000 => AluOp::Add,
+                0b010 => AluOp::Slt,
+                0b011 => AluOp::Sltu,
+                0b100 => AluOp::Xor,
+                0b110 => AluOp::Or,
+                0b111 => AluOp::And,
+                0b001 => {
+                    // SLLI: shamt is 6 bits on RV64
+                    if x(inst, 26, 6) != 0 {
+                        return ill;
+                    }
+                    return Op::AluImm {
+                        op: AluOp::Sll,
+                        word: false,
+                        rd: rd(inst),
+                        rs1: rs1(inst),
+                        imm: x(inst, 20, 6) as i32,
+                    };
+                }
+                0b101 => {
+                    let sh = x(inst, 20, 6) as i32;
+                    return match x(inst, 26, 6) {
+                        0b000000 => Op::AluImm { op: AluOp::Srl, word: false, rd: rd(inst), rs1: rs1(inst), imm: sh },
+                        0b010000 => Op::AluImm { op: AluOp::Sra, word: false, rd: rd(inst), rs1: rs1(inst), imm: sh },
+                        _ => ill,
+                    };
+                }
+                _ => unreachable!(),
+            };
+            Op::AluImm { op, word: false, rd: rd(inst), rs1: rs1(inst), imm: imm_i(inst) }
+        }
+        0b0011011 => {
+            // OP-IMM-32
+            match funct3(inst) {
+                0b000 => Op::AluImm { op: AluOp::Add, word: true, rd: rd(inst), rs1: rs1(inst), imm: imm_i(inst) },
+                0b001 => {
+                    if funct7(inst) != 0 {
+                        return ill;
+                    }
+                    Op::AluImm { op: AluOp::Sll, word: true, rd: rd(inst), rs1: rs1(inst), imm: x(inst, 20, 5) as i32 }
+                }
+                0b101 => {
+                    let sh = x(inst, 20, 5) as i32;
+                    match funct7(inst) {
+                        0b0000000 => Op::AluImm { op: AluOp::Srl, word: true, rd: rd(inst), rs1: rs1(inst), imm: sh },
+                        0b0100000 => Op::AluImm { op: AluOp::Sra, word: true, rd: rd(inst), rs1: rs1(inst), imm: sh },
+                        _ => ill,
+                    }
+                }
+                _ => ill,
+            }
+        }
+        0b0110011 => {
+            // OP
+            match (funct7(inst), funct3(inst)) {
+                (0b0000000, 0b000) => op_rrr(inst, AluOp::Add, false),
+                (0b0100000, 0b000) => op_rrr(inst, AluOp::Sub, false),
+                (0b0000000, 0b001) => op_rrr(inst, AluOp::Sll, false),
+                (0b0000000, 0b010) => op_rrr(inst, AluOp::Slt, false),
+                (0b0000000, 0b011) => op_rrr(inst, AluOp::Sltu, false),
+                (0b0000000, 0b100) => op_rrr(inst, AluOp::Xor, false),
+                (0b0000000, 0b101) => op_rrr(inst, AluOp::Srl, false),
+                (0b0100000, 0b101) => op_rrr(inst, AluOp::Sra, false),
+                (0b0000000, 0b110) => op_rrr(inst, AluOp::Or, false),
+                (0b0000000, 0b111) => op_rrr(inst, AluOp::And, false),
+                (0b0000001, f3) => mul_rrr(inst, f3, false).unwrap_or(ill),
+                _ => ill,
+            }
+        }
+        0b0111011 => {
+            // OP-32
+            match (funct7(inst), funct3(inst)) {
+                (0b0000000, 0b000) => op_rrr(inst, AluOp::Add, true),
+                (0b0100000, 0b000) => op_rrr(inst, AluOp::Sub, true),
+                (0b0000000, 0b001) => op_rrr(inst, AluOp::Sll, true),
+                (0b0000000, 0b101) => op_rrr(inst, AluOp::Srl, true),
+                (0b0100000, 0b101) => op_rrr(inst, AluOp::Sra, true),
+                (0b0000001, f3) => match f3 {
+                    0b000 | 0b100 | 0b101 | 0b110 | 0b111 => mul_rrr(inst, f3, true).unwrap_or(ill),
+                    _ => ill,
+                },
+                _ => ill,
+            }
+        }
+        0b0101111 => {
+            // AMO
+            let width = match funct3(inst) {
+                0b010 => MemWidth::W,
+                0b011 => MemWidth::D,
+                _ => return ill,
+            };
+            let funct5 = x(inst, 27, 5);
+            match funct5 {
+                0b00010 => {
+                    if rs2(inst) != 0 {
+                        return ill;
+                    }
+                    Op::Lr { width, rd: rd(inst), rs1: rs1(inst) }
+                }
+                0b00011 => Op::Sc { width, rd: rd(inst), rs1: rs1(inst), rs2: rs2(inst) },
+                _ => {
+                    let op = match funct5 {
+                        0b00001 => AmoOp::Swap,
+                        0b00000 => AmoOp::Add,
+                        0b00100 => AmoOp::Xor,
+                        0b01100 => AmoOp::And,
+                        0b01000 => AmoOp::Or,
+                        0b10000 => AmoOp::Min,
+                        0b10100 => AmoOp::Max,
+                        0b11000 => AmoOp::Minu,
+                        0b11100 => AmoOp::Maxu,
+                        _ => return ill,
+                    };
+                    Op::Amo { op, width, rd: rd(inst), rs1: rs1(inst), rs2: rs2(inst) }
+                }
+            }
+        }
+        0b0001111 => match funct3(inst) {
+            0b000 => Op::Fence,
+            0b001 => Op::FenceI,
+            _ => ill,
+        },
+        0b1110011 => {
+            // SYSTEM
+            match funct3(inst) {
+                0b000 => match (funct7(inst), rs2(inst), rs1(inst), rd(inst)) {
+                    (0, 0, 0, 0) => Op::Ecall,
+                    (0, 1, 0, 0) => Op::Ebreak,
+                    (0b0011000, 0b00010, 0, 0) => Op::Mret,
+                    (0b0001000, 0b00010, 0, 0) => Op::Sret,
+                    (0b0001000, 0b00101, 0, 0) => Op::Wfi,
+                    (0b0001001, _, _, 0) => Op::SfenceVma { rs1: rs1(inst), rs2: rs2(inst) },
+                    _ => ill,
+                },
+                f3 => {
+                    let op = match f3 & 0b11 {
+                        0b01 => CsrOp::Rw,
+                        0b10 => CsrOp::Rs,
+                        0b11 => CsrOp::Rc,
+                        _ => return ill,
+                    };
+                    Op::Csr {
+                        op,
+                        imm_form: f3 & 0b100 != 0,
+                        rd: rd(inst),
+                        rs1: rs1(inst),
+                        csr: x(inst, 20, 12) as u16,
+                    }
+                }
+            }
+        }
+        _ => ill,
+    }
+}
+
+#[inline]
+fn op_rrr(inst: u32, op: AluOp, word: bool) -> Op {
+    Op::Alu { op, word, rd: rd(inst), rs1: rs1(inst), rs2: rs2(inst) }
+}
+
+#[inline]
+fn mul_rrr(inst: u32, f3: u32, word: bool) -> Option<Op> {
+    let op = match f3 {
+        0b000 => MulOp::Mul,
+        0b001 => MulOp::Mulh,
+        0b010 => MulOp::Mulhsu,
+        0b011 => MulOp::Mulhu,
+        0b100 => MulOp::Div,
+        0b101 => MulOp::Divu,
+        0b110 => MulOp::Rem,
+        0b111 => MulOp::Remu,
+        _ => return None,
+    };
+    Some(Op::Mul { op, word, rd: rd(inst), rs1: rs1(inst), rs2: rs2(inst) })
+}
+
+// ---------------------------------------------------------------------------
+// C extension (RV64C)
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+fn cx(inst: u16, lo: u32, len: u32) -> u32 {
+    ((inst as u32) >> lo) & ((1 << len) - 1)
+}
+
+/// 3-bit compressed register (x8-x15).
+#[inline(always)]
+fn creg(r: u32) -> u8 {
+    (r + 8) as u8
+}
+
+/// Decode a 16-bit compressed instruction into its expanded base [`Op`].
+pub fn decode16(inst: u16) -> Op {
+    let ill = Op::Illegal { raw: inst as u32 };
+    let f3 = cx(inst, 13, 3);
+    match cx(inst, 0, 2) {
+        0b00 => match f3 {
+            0b000 => {
+                // C.ADDI4SPN
+                let imm = (cx(inst, 7, 4) << 6)
+                    | (cx(inst, 11, 2) << 4)
+                    | (cx(inst, 5, 1) << 3)
+                    | (cx(inst, 6, 1) << 2);
+                if imm == 0 {
+                    return ill; // includes the all-zero illegal encoding
+                }
+                Op::AluImm { op: AluOp::Add, word: false, rd: creg(cx(inst, 2, 3)), rs1: 2, imm: imm as i32 }
+            }
+            0b010 => {
+                // C.LW
+                let imm = (cx(inst, 5, 1) << 6) | (cx(inst, 10, 3) << 3) | (cx(inst, 6, 1) << 2);
+                Op::Load { width: MemWidth::W, signed: true, rd: creg(cx(inst, 2, 3)), rs1: creg(cx(inst, 7, 3)), imm: imm as i32 }
+            }
+            0b011 => {
+                // C.LD
+                let imm = (cx(inst, 5, 2) << 6) | (cx(inst, 10, 3) << 3);
+                Op::Load { width: MemWidth::D, signed: true, rd: creg(cx(inst, 2, 3)), rs1: creg(cx(inst, 7, 3)), imm: imm as i32 }
+            }
+            0b110 => {
+                // C.SW
+                let imm = (cx(inst, 5, 1) << 6) | (cx(inst, 10, 3) << 3) | (cx(inst, 6, 1) << 2);
+                Op::Store { width: MemWidth::W, rs1: creg(cx(inst, 7, 3)), rs2: creg(cx(inst, 2, 3)), imm: imm as i32 }
+            }
+            0b111 => {
+                // C.SD
+                let imm = (cx(inst, 5, 2) << 6) | (cx(inst, 10, 3) << 3);
+                Op::Store { width: MemWidth::D, rs1: creg(cx(inst, 7, 3)), rs2: creg(cx(inst, 2, 3)), imm: imm as i32 }
+            }
+            _ => ill,
+        },
+        0b01 => match f3 {
+            0b000 => {
+                // C.ADDI (C.NOP when rd=0)
+                let imm = ci_imm(inst);
+                Op::AluImm { op: AluOp::Add, word: false, rd: rd16(inst), rs1: rd16(inst), imm }
+            }
+            0b001 => {
+                // C.ADDIW
+                if rd16(inst) == 0 {
+                    return ill;
+                }
+                Op::AluImm { op: AluOp::Add, word: true, rd: rd16(inst), rs1: rd16(inst), imm: ci_imm(inst) }
+            }
+            0b010 => {
+                // C.LI
+                Op::AluImm { op: AluOp::Add, word: false, rd: rd16(inst), rs1: 0, imm: ci_imm(inst) }
+            }
+            0b011 => {
+                let r = rd16(inst);
+                if r == 2 {
+                    // C.ADDI16SP
+                    let imm = sext(
+                        (cx(inst, 12, 1) << 9)
+                            | (cx(inst, 3, 2) << 7)
+                            | (cx(inst, 5, 1) << 6)
+                            | (cx(inst, 2, 1) << 5)
+                            | (cx(inst, 6, 1) << 4),
+                        10,
+                    );
+                    if imm == 0 {
+                        return ill;
+                    }
+                    Op::AluImm { op: AluOp::Add, word: false, rd: 2, rs1: 2, imm }
+                } else {
+                    // C.LUI
+                    let imm = sext((cx(inst, 12, 1) << 17) | (cx(inst, 2, 5) << 12), 18);
+                    if imm == 0 {
+                        return ill;
+                    }
+                    Op::Lui { rd: r, imm }
+                }
+            }
+            0b100 => {
+                let r = creg(cx(inst, 7, 3));
+                match cx(inst, 10, 2) {
+                    0b00 => {
+                        // C.SRLI
+                        let sh = (cx(inst, 12, 1) << 5) | cx(inst, 2, 5);
+                        Op::AluImm { op: AluOp::Srl, word: false, rd: r, rs1: r, imm: sh as i32 }
+                    }
+                    0b01 => {
+                        // C.SRAI
+                        let sh = (cx(inst, 12, 1) << 5) | cx(inst, 2, 5);
+                        Op::AluImm { op: AluOp::Sra, word: false, rd: r, rs1: r, imm: sh as i32 }
+                    }
+                    0b10 => {
+                        // C.ANDI
+                        Op::AluImm { op: AluOp::And, word: false, rd: r, rs1: r, imm: ci_imm(inst) }
+                    }
+                    _ => {
+                        let r2 = creg(cx(inst, 2, 3));
+                        match (cx(inst, 12, 1), cx(inst, 5, 2)) {
+                            (0, 0b00) => Op::Alu { op: AluOp::Sub, word: false, rd: r, rs1: r, rs2: r2 },
+                            (0, 0b01) => Op::Alu { op: AluOp::Xor, word: false, rd: r, rs1: r, rs2: r2 },
+                            (0, 0b10) => Op::Alu { op: AluOp::Or, word: false, rd: r, rs1: r, rs2: r2 },
+                            (0, 0b11) => Op::Alu { op: AluOp::And, word: false, rd: r, rs1: r, rs2: r2 },
+                            (1, 0b00) => Op::Alu { op: AluOp::Sub, word: true, rd: r, rs1: r, rs2: r2 },
+                            (1, 0b01) => Op::Alu { op: AluOp::Add, word: true, rd: r, rs1: r, rs2: r2 },
+                            _ => ill,
+                        }
+                    }
+                }
+            }
+            0b101 => {
+                // C.J
+                Op::Jal { rd: 0, imm: cj_imm(inst) }
+            }
+            0b110 => Op::Branch { cond: BrCond::Eq, rs1: creg(cx(inst, 7, 3)), rs2: 0, imm: cb_imm(inst) },
+            0b111 => Op::Branch { cond: BrCond::Ne, rs1: creg(cx(inst, 7, 3)), rs2: 0, imm: cb_imm(inst) },
+            _ => unreachable!(),
+        },
+        0b10 => match f3 {
+            0b000 => {
+                // C.SLLI
+                let sh = (cx(inst, 12, 1) << 5) | cx(inst, 2, 5);
+                Op::AluImm { op: AluOp::Sll, word: false, rd: rd16(inst), rs1: rd16(inst), imm: sh as i32 }
+            }
+            0b010 => {
+                // C.LWSP
+                if rd16(inst) == 0 {
+                    return ill;
+                }
+                let imm = (cx(inst, 2, 2) << 6) | (cx(inst, 12, 1) << 5) | (cx(inst, 4, 3) << 2);
+                Op::Load { width: MemWidth::W, signed: true, rd: rd16(inst), rs1: 2, imm: imm as i32 }
+            }
+            0b011 => {
+                // C.LDSP
+                if rd16(inst) == 0 {
+                    return ill;
+                }
+                let imm = (cx(inst, 2, 3) << 6) | (cx(inst, 12, 1) << 5) | (cx(inst, 5, 2) << 3);
+                Op::Load { width: MemWidth::D, signed: true, rd: rd16(inst), rs1: 2, imm: imm as i32 }
+            }
+            0b100 => {
+                let r1 = rd16(inst);
+                let r2 = cx(inst, 2, 5) as u8;
+                match (cx(inst, 12, 1), r1, r2) {
+                    (0, 0, 0) => ill,
+                    (0, _, 0) => Op::Jalr { rd: 0, rs1: r1, imm: 0 }, // C.JR
+                    (0, _, _) => Op::Alu { op: AluOp::Add, word: false, rd: r1, rs1: 0, rs2: r2 }, // C.MV
+                    (1, 0, 0) => Op::Ebreak,
+                    (1, _, 0) => Op::Jalr { rd: 1, rs1: r1, imm: 0 }, // C.JALR
+                    (1, _, _) => Op::Alu { op: AluOp::Add, word: false, rd: r1, rs1: r1, rs2: r2 }, // C.ADD
+                    _ => unreachable!(),
+                }
+            }
+            0b110 => {
+                // C.SWSP
+                let imm = (cx(inst, 7, 2) << 6) | (cx(inst, 9, 4) << 2);
+                Op::Store { width: MemWidth::W, rs1: 2, rs2: cx(inst, 2, 5) as u8, imm: imm as i32 }
+            }
+            0b111 => {
+                // C.SDSP
+                let imm = (cx(inst, 7, 3) << 6) | (cx(inst, 10, 3) << 3);
+                Op::Store { width: MemWidth::D, rs1: 2, rs2: cx(inst, 2, 5) as u8, imm: imm as i32 }
+            }
+            _ => ill,
+        },
+        _ => unreachable!("decode16 called on a 32-bit encoding"),
+    }
+}
+
+#[inline(always)]
+fn rd16(inst: u16) -> u8 {
+    cx(inst, 7, 5) as u8
+}
+
+#[inline(always)]
+fn sext(v: u32, bits: u32) -> i32 {
+    ((v << (32 - bits)) as i32) >> (32 - bits)
+}
+
+/// CI-format immediate (6-bit, sign extended).
+#[inline(always)]
+fn ci_imm(inst: u16) -> i32 {
+    sext((cx(inst, 12, 1) << 5) | cx(inst, 2, 5), 6)
+}
+
+/// CJ-format jump target offset.
+#[inline(always)]
+fn cj_imm(inst: u16) -> i32 {
+    sext(
+        (cx(inst, 12, 1) << 11)
+            | (cx(inst, 8, 1) << 10)
+            | (cx(inst, 9, 2) << 8)
+            | (cx(inst, 6, 1) << 7)
+            | (cx(inst, 7, 1) << 6)
+            | (cx(inst, 2, 1) << 5)
+            | (cx(inst, 11, 1) << 4)
+            | (cx(inst, 3, 3) << 1),
+        12,
+    )
+}
+
+/// CB-format branch offset.
+#[inline(always)]
+fn cb_imm(inst: u16) -> i32 {
+    sext(
+        (cx(inst, 12, 1) << 8)
+            | (cx(inst, 5, 2) << 6)
+            | (cx(inst, 2, 1) << 5)
+            | (cx(inst, 10, 2) << 3)
+            | (cx(inst, 3, 2) << 1),
+        9,
+    )
+}
+
+/// Decode an instruction given its first (lowest-address) 4 bytes; returns
+/// the op and the encoded length in bytes.
+pub fn decode(raw: u32) -> (Op, u64) {
+    if raw & 0b11 == 0b11 {
+        (decode32(raw), 4)
+    } else {
+        (decode16(raw as u16), 2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_addi() {
+        // addi x1, x2, -3 => imm=0xffd rs1=2 f3=0 rd=1 op=0010011
+        let inst = (0xffdu32 << 20) | (2 << 15) | (1 << 7) | 0b0010011;
+        assert_eq!(
+            decode32(inst),
+            Op::AluImm { op: AluOp::Add, word: false, rd: 1, rs1: 2, imm: -3 }
+        );
+    }
+
+    #[test]
+    fn decode_branch_imm() {
+        // beq x1, x2, -4
+        // imm[12|10:5] in 31:25, imm[4:1|11] in 11:7
+        // -4 = 0b1_1111_1111_1100 (13-bit)
+        let imm: i32 = -4;
+        let i = imm as u32;
+        let inst = ((i >> 12) & 1) << 31
+            | ((i >> 5) & 0x3f) << 25
+            | 2 << 20
+            | 1 << 15
+            | 0b000 << 12
+            | ((i >> 1) & 0xf) << 8
+            | ((i >> 11) & 1) << 7
+            | 0b1100011;
+        match decode32(inst) {
+            Op::Branch { cond: BrCond::Eq, rs1: 1, rs2: 2, imm: -4 } => {}
+            other => panic!("bad decode: {:?}", other),
+        }
+    }
+
+    #[test]
+    fn decode_lui_negative() {
+        // lui x5, 0xfffff (sign-extended)
+        let inst = 0xffff_f000 | (5 << 7) | 0b0110111;
+        assert_eq!(decode32(inst), Op::Lui { rd: 5, imm: 0xfffff000u32 as i32 });
+    }
+
+    #[test]
+    fn decode_system() {
+        assert_eq!(decode32(0x0000_0073), Op::Ecall);
+        assert_eq!(decode32(0x0010_0073), Op::Ebreak);
+        assert_eq!(decode32(0x3020_0073), Op::Mret);
+        assert_eq!(decode32(0x1020_0073), Op::Sret);
+        assert_eq!(decode32(0x1050_0073), Op::Wfi);
+    }
+
+    #[test]
+    fn decode_csrrw() {
+        // csrrw x1, mstatus(0x300), x2
+        let inst = (0x300u32 << 20) | (2 << 15) | (0b001 << 12) | (1 << 7) | 0b1110011;
+        assert_eq!(
+            decode32(inst),
+            Op::Csr { op: CsrOp::Rw, imm_form: false, rd: 1, rs1: 2, csr: 0x300 }
+        );
+    }
+
+    #[test]
+    fn decode_c_addi() {
+        // c.addi x10, -1 => 0x157d
+        assert_eq!(
+            decode16(0x157d),
+            Op::AluImm { op: AluOp::Add, word: false, rd: 10, rs1: 10, imm: -1 }
+        );
+    }
+
+    #[test]
+    fn decode_c_li() {
+        // c.li a0, 1 => 0x4505
+        assert_eq!(
+            decode16(0x4505),
+            Op::AluImm { op: AluOp::Add, word: false, rd: 10, rs1: 0, imm: 1 }
+        );
+    }
+
+    #[test]
+    fn decode_c_mv_add_jr() {
+        // c.mv a0, a1 => 0x852e
+        assert_eq!(decode16(0x852e), Op::Alu { op: AluOp::Add, word: false, rd: 10, rs1: 0, rs2: 11 });
+        // c.add a0, a1 => 0x952e
+        assert_eq!(decode16(0x952e), Op::Alu { op: AluOp::Add, word: false, rd: 10, rs1: 10, rs2: 11 });
+        // c.jr ra => 0x8082
+        assert_eq!(decode16(0x8082), Op::Jalr { rd: 0, rs1: 1, imm: 0 });
+    }
+
+    #[test]
+    fn decode_c_ldsp_sdsp() {
+        // c.ldsp ra, 8(sp) => 0x60a2
+        assert_eq!(
+            decode16(0x60a2),
+            Op::Load { width: MemWidth::D, signed: true, rd: 1, rs1: 2, imm: 8 }
+        );
+        // c.sdsp ra, 8(sp) => 0xe406
+        assert_eq!(decode16(0xe406), Op::Store { width: MemWidth::D, rs1: 2, rs2: 1, imm: 8 });
+    }
+
+    #[test]
+    fn decode_amo() {
+        // amoadd.w x5, x6, (x7) => funct5=00000 aq=0 rl=0 rs2=6 rs1=7 f3=010 rd=5
+        let inst = (6u32 << 20) | (7 << 15) | (0b010 << 12) | (5 << 7) | 0b0101111;
+        assert_eq!(
+            decode32(inst),
+            Op::Amo { op: AmoOp::Add, width: MemWidth::W, rd: 5, rs1: 7, rs2: 6 }
+        );
+        // lr.d x5, (x7)
+        let inst = (0b00010u32 << 27) | (7 << 15) | (0b011 << 12) | (5 << 7) | 0b0101111;
+        assert_eq!(decode32(inst), Op::Lr { width: MemWidth::D, rd: 5, rs1: 7 });
+    }
+
+    #[test]
+    fn all_zero_and_all_ones_are_illegal() {
+        assert!(matches!(decode16(0), Op::Illegal { .. }));
+        assert!(matches!(decode32(0xffff_ffff), Op::Illegal { .. }));
+    }
+
+    #[test]
+    fn inst_len_detection() {
+        assert_eq!(inst_len(0x0073), 4); // ecall: low bits 0b11
+        assert_eq!(inst_len(0x8082), 2); // c.jr ra: low bits 0b10
+        assert_eq!(inst_len(0x4505), 2); // c.li: low bits 0b01
+        assert_eq!(inst_len(0x0003), 4);
+    }
+}

@@ -1,0 +1,170 @@
+//! Disassembler: `Display` for [`Op`], used by tracing and debugging aids.
+
+use super::op::*;
+use std::fmt;
+
+/// ABI register names.
+pub const REG_NAMES: [&str; 32] = [
+    "zero", "ra", "sp", "gp", "tp", "t0", "t1", "t2", "s0", "s1", "a0", "a1", "a2", "a3", "a4",
+    "a5", "a6", "a7", "s2", "s3", "s4", "s5", "s6", "s7", "s8", "s9", "s10", "s11", "t3", "t4",
+    "t5", "t6",
+];
+
+#[inline]
+fn r(i: u8) -> &'static str {
+    REG_NAMES[i as usize & 31]
+}
+
+fn alu_name(op: AluOp) -> &'static str {
+    match op {
+        AluOp::Add => "add",
+        AluOp::Sub => "sub",
+        AluOp::Sll => "sll",
+        AluOp::Slt => "slt",
+        AluOp::Sltu => "sltu",
+        AluOp::Xor => "xor",
+        AluOp::Srl => "srl",
+        AluOp::Sra => "sra",
+        AluOp::Or => "or",
+        AluOp::And => "and",
+    }
+}
+
+fn width_suffix(w: MemWidth, signed: bool) -> &'static str {
+    match (w, signed) {
+        (MemWidth::B, true) => "b",
+        (MemWidth::H, true) => "h",
+        (MemWidth::W, true) => "w",
+        (MemWidth::D, _) => "d",
+        (MemWidth::B, false) => "bu",
+        (MemWidth::H, false) => "hu",
+        (MemWidth::W, false) => "wu",
+    }
+}
+
+impl fmt::Display for Op {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Op::Illegal { raw } => write!(f, ".illegal {:#010x}", raw),
+            Op::Lui { rd, imm } => write!(f, "lui {}, {:#x}", r(rd), (imm as u32) >> 12),
+            Op::Auipc { rd, imm } => write!(f, "auipc {}, {:#x}", r(rd), (imm as u32) >> 12),
+            Op::Jal { rd: 0, imm } => write!(f, "j pc{:+}", imm),
+            Op::Jal { rd, imm } => write!(f, "jal {}, pc{:+}", r(rd), imm),
+            Op::Jalr { rd: 0, rs1, imm: 0 } => write!(f, "jr {}", r(rs1)),
+            Op::Jalr { rd, rs1, imm } => write!(f, "jalr {}, {}({})", r(rd), imm, r(rs1)),
+            Op::Branch { cond, rs1, rs2, imm } => {
+                let name = match cond {
+                    BrCond::Eq => "beq",
+                    BrCond::Ne => "bne",
+                    BrCond::Lt => "blt",
+                    BrCond::Ge => "bge",
+                    BrCond::Ltu => "bltu",
+                    BrCond::Geu => "bgeu",
+                };
+                write!(f, "{} {}, {}, pc{:+}", name, r(rs1), r(rs2), imm)
+            }
+            Op::Load { width, signed, rd, rs1, imm } => {
+                write!(f, "l{} {}, {}({})", width_suffix(width, signed), r(rd), imm, r(rs1))
+            }
+            Op::Store { width, rs1, rs2, imm } => {
+                write!(f, "s{} {}, {}({})", width_suffix(width, true), r(rs2), imm, r(rs1))
+            }
+            Op::Alu { op, word, rd, rs1, rs2 } => {
+                write!(f, "{}{} {}, {}, {}", alu_name(op), if word { "w" } else { "" }, r(rd), r(rs1), r(rs2))
+            }
+            Op::AluImm { op, word, rd, rs1, imm } => {
+                let base = match op {
+                    AluOp::Add => "addi",
+                    AluOp::Slt => "slti",
+                    AluOp::Sltu => "sltiu",
+                    AluOp::Xor => "xori",
+                    AluOp::Or => "ori",
+                    AluOp::And => "andi",
+                    AluOp::Sll => "slli",
+                    AluOp::Srl => "srli",
+                    AluOp::Sra => "srai",
+                    AluOp::Sub => "subi?",
+                };
+                write!(f, "{}{} {}, {}, {}", base, if word { "w" } else { "" }, r(rd), r(rs1), imm)
+            }
+            Op::Mul { op, word, rd, rs1, rs2 } => {
+                let base = match op {
+                    MulOp::Mul => "mul",
+                    MulOp::Mulh => "mulh",
+                    MulOp::Mulhsu => "mulhsu",
+                    MulOp::Mulhu => "mulhu",
+                    MulOp::Div => "div",
+                    MulOp::Divu => "divu",
+                    MulOp::Rem => "rem",
+                    MulOp::Remu => "remu",
+                };
+                write!(f, "{}{} {}, {}, {}", base, if word { "w" } else { "" }, r(rd), r(rs1), r(rs2))
+            }
+            Op::Lr { width, rd, rs1 } => {
+                write!(f, "lr.{} {}, ({})", width_suffix(width, true), r(rd), r(rs1))
+            }
+            Op::Sc { width, rd, rs1, rs2 } => {
+                write!(f, "sc.{} {}, {}, ({})", width_suffix(width, true), r(rd), r(rs2), r(rs1))
+            }
+            Op::Amo { op, width, rd, rs1, rs2 } => {
+                let base = match op {
+                    AmoOp::Swap => "amoswap",
+                    AmoOp::Add => "amoadd",
+                    AmoOp::Xor => "amoxor",
+                    AmoOp::And => "amoand",
+                    AmoOp::Or => "amoor",
+                    AmoOp::Min => "amomin",
+                    AmoOp::Max => "amomax",
+                    AmoOp::Minu => "amominu",
+                    AmoOp::Maxu => "amomaxu",
+                };
+                write!(f, "{}.{} {}, {}, ({})", base, width_suffix(width, true), r(rd), r(rs2), r(rs1))
+            }
+            Op::Csr { op, imm_form, rd, rs1, csr } => {
+                let base = match (op, imm_form) {
+                    (CsrOp::Rw, false) => "csrrw",
+                    (CsrOp::Rs, false) => "csrrs",
+                    (CsrOp::Rc, false) => "csrrc",
+                    (CsrOp::Rw, true) => "csrrwi",
+                    (CsrOp::Rs, true) => "csrrsi",
+                    (CsrOp::Rc, true) => "csrrci",
+                };
+                if imm_form {
+                    write!(f, "{} {}, {:#x}, {}", base, r(rd), csr, rs1)
+                } else {
+                    write!(f, "{} {}, {:#x}, {}", base, r(rd), csr, r(rs1))
+                }
+            }
+            Op::Fence => write!(f, "fence"),
+            Op::FenceI => write!(f, "fence.i"),
+            Op::Ecall => write!(f, "ecall"),
+            Op::Ebreak => write!(f, "ebreak"),
+            Op::Mret => write!(f, "mret"),
+            Op::Sret => write!(f, "sret"),
+            Op::Wfi => write!(f, "wfi"),
+            Op::SfenceVma { rs1, rs2 } => write!(f, "sfence.vma {}, {}", r(rs1), r(rs2)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_smoke() {
+        assert_eq!(
+            Op::AluImm { op: AluOp::Add, word: false, rd: 10, rs1: 0, imm: 1 }.to_string(),
+            "addi a0, zero, 1"
+        );
+        assert_eq!(
+            Op::Load { width: MemWidth::D, signed: true, rd: 1, rs1: 2, imm: 8 }.to_string(),
+            "ld ra, 8(sp)"
+        );
+        assert_eq!(Op::Jal { rd: 0, imm: -4 }.to_string(), "j pc-4");
+        assert_eq!(
+            Op::Amo { op: AmoOp::Add, width: MemWidth::W, rd: 5, rs1: 7, rs2: 6 }.to_string(),
+            "amoadd.w t0, t1, (t2)"
+        );
+    }
+}

@@ -1,0 +1,281 @@
+//! RV64IMAC instruction encoder.
+//!
+//! Produces 32-bit encodings for every base instruction the decoder
+//! understands. Used by the built-in assembler (`crate::asm`) to construct
+//! guest workloads (no cross-compiler is available in this environment) and
+//! by the decode⇄encode roundtrip property tests.
+
+use super::op::*;
+
+#[inline]
+fn r_type(opcode: u32, rd: u8, f3: u32, rs1: u8, rs2: u8, f7: u32) -> u32 {
+    opcode | ((rd as u32) << 7) | (f3 << 12) | ((rs1 as u32) << 15) | ((rs2 as u32) << 20) | (f7 << 25)
+}
+
+#[inline]
+fn i_type(opcode: u32, rd: u8, f3: u32, rs1: u8, imm: i32) -> u32 {
+    opcode | ((rd as u32) << 7) | (f3 << 12) | ((rs1 as u32) << 15) | (((imm as u32) & 0xfff) << 20)
+}
+
+#[inline]
+fn s_type(opcode: u32, f3: u32, rs1: u8, rs2: u8, imm: i32) -> u32 {
+    let i = imm as u32;
+    opcode
+        | ((i & 0x1f) << 7)
+        | (f3 << 12)
+        | ((rs1 as u32) << 15)
+        | ((rs2 as u32) << 20)
+        | (((i >> 5) & 0x7f) << 25)
+}
+
+#[inline]
+fn b_type(opcode: u32, f3: u32, rs1: u8, rs2: u8, imm: i32) -> u32 {
+    let i = imm as u32;
+    opcode
+        | (((i >> 11) & 1) << 7)
+        | (((i >> 1) & 0xf) << 8)
+        | (f3 << 12)
+        | ((rs1 as u32) << 15)
+        | ((rs2 as u32) << 20)
+        | (((i >> 5) & 0x3f) << 25)
+        | (((i >> 12) & 1) << 31)
+}
+
+#[inline]
+fn u_type(opcode: u32, rd: u8, imm: i32) -> u32 {
+    opcode | ((rd as u32) << 7) | ((imm as u32) & 0xffff_f000)
+}
+
+#[inline]
+fn j_type(opcode: u32, rd: u8, imm: i32) -> u32 {
+    let i = imm as u32;
+    opcode
+        | ((rd as u32) << 7)
+        | (((i >> 12) & 0xff) << 12)
+        | (((i >> 11) & 1) << 20)
+        | (((i >> 1) & 0x3ff) << 21)
+        | (((i >> 20) & 1) << 31)
+}
+
+fn alu_f3_f7(op: AluOp) -> (u32, u32) {
+    match op {
+        AluOp::Add => (0b000, 0b0000000),
+        AluOp::Sub => (0b000, 0b0100000),
+        AluOp::Sll => (0b001, 0b0000000),
+        AluOp::Slt => (0b010, 0b0000000),
+        AluOp::Sltu => (0b011, 0b0000000),
+        AluOp::Xor => (0b100, 0b0000000),
+        AluOp::Srl => (0b101, 0b0000000),
+        AluOp::Sra => (0b101, 0b0100000),
+        AluOp::Or => (0b110, 0b0000000),
+        AluOp::And => (0b111, 0b0000000),
+    }
+}
+
+fn mul_f3(op: MulOp) -> u32 {
+    match op {
+        MulOp::Mul => 0b000,
+        MulOp::Mulh => 0b001,
+        MulOp::Mulhsu => 0b010,
+        MulOp::Mulhu => 0b011,
+        MulOp::Div => 0b100,
+        MulOp::Divu => 0b101,
+        MulOp::Rem => 0b110,
+        MulOp::Remu => 0b111,
+    }
+}
+
+fn amo_f5(op: AmoOp) -> u32 {
+    match op {
+        AmoOp::Swap => 0b00001,
+        AmoOp::Add => 0b00000,
+        AmoOp::Xor => 0b00100,
+        AmoOp::And => 0b01100,
+        AmoOp::Or => 0b01000,
+        AmoOp::Min => 0b10000,
+        AmoOp::Max => 0b10100,
+        AmoOp::Minu => 0b11000,
+        AmoOp::Maxu => 0b11100,
+    }
+}
+
+/// Encode `op` as a 32-bit instruction.
+///
+/// Panics on `Op::Illegal` (nothing sensible to emit) — the assembler never
+/// constructs one.
+pub fn encode(op: Op) -> u32 {
+    match op {
+        Op::Illegal { .. } => panic!("cannot encode Op::Illegal"),
+        Op::Lui { rd, imm } => u_type(0b0110111, rd, imm),
+        Op::Auipc { rd, imm } => u_type(0b0010111, rd, imm),
+        Op::Jal { rd, imm } => j_type(0b1101111, rd, imm),
+        Op::Jalr { rd, rs1, imm } => i_type(0b1100111, rd, 0, rs1, imm),
+        Op::Branch { cond, rs1, rs2, imm } => b_type(0b1100011, cond.funct3(), rs1, rs2, imm),
+        Op::Load { width, signed, rd, rs1, imm } => {
+            let f3 = (width as u32) | if signed { 0 } else { 0b100 };
+            i_type(0b0000011, rd, f3, rs1, imm)
+        }
+        Op::Store { width, rs1, rs2, imm } => s_type(0b0100011, width as u32, rs1, rs2, imm),
+        Op::AluImm { op, word, rd, rs1, imm } => {
+            let opcode = if word { 0b0011011 } else { 0b0010011 };
+            let (f3, f7) = alu_f3_f7(op);
+            match op {
+                AluOp::Sll | AluOp::Srl | AluOp::Sra => {
+                    // shift-immediate: shamt in imm field, funct7 on top
+                    let shamt_bits = if word { 5 } else { 6 };
+                    let shamt = (imm as u32) & ((1 << shamt_bits) - 1);
+                    i_type(opcode, rd, f3, rs1, ((f7 << 5) | shamt) as i32)
+                }
+                _ => i_type(opcode, rd, f3, rs1, imm),
+            }
+        }
+        Op::Alu { op, word, rd, rs1, rs2 } => {
+            let opcode = if word { 0b0111011 } else { 0b0110011 };
+            let (f3, f7) = alu_f3_f7(op);
+            r_type(opcode, rd, f3, rs1, rs2, f7)
+        }
+        Op::Mul { op, word, rd, rs1, rs2 } => {
+            let opcode = if word { 0b0111011 } else { 0b0110011 };
+            r_type(opcode, rd, mul_f3(op), rs1, rs2, 0b0000001)
+        }
+        Op::Lr { width, rd, rs1 } => {
+            r_type(0b0101111, rd, 0b010 + (width == MemWidth::D) as u32, rs1, 0, 0b00010 << 2)
+        }
+        Op::Sc { width, rd, rs1, rs2 } => {
+            r_type(0b0101111, rd, 0b010 + (width == MemWidth::D) as u32, rs1, rs2, 0b00011 << 2)
+        }
+        Op::Amo { op, width, rd, rs1, rs2 } => {
+            r_type(0b0101111, rd, 0b010 + (width == MemWidth::D) as u32, rs1, rs2, amo_f5(op) << 2)
+        }
+        Op::Csr { op, imm_form, rd, rs1, csr } => {
+            let f3 = match op {
+                CsrOp::Rw => 0b001,
+                CsrOp::Rs => 0b010,
+                CsrOp::Rc => 0b011,
+            } | if imm_form { 0b100 } else { 0 };
+            i_type(0b1110011, rd, f3, rs1, csr as i32)
+        }
+        Op::Fence => i_type(0b0001111, 0, 0b000, 0, 0x0ff),
+        Op::FenceI => i_type(0b0001111, 0, 0b001, 0, 0),
+        Op::Ecall => 0x0000_0073,
+        Op::Ebreak => 0x0010_0073,
+        Op::Mret => 0x3020_0073,
+        Op::Sret => 0x1020_0073,
+        Op::Wfi => 0x1050_0073,
+        Op::SfenceVma { rs1, rs2 } => r_type(0b1110011, 0, 0, rs1, rs2, 0b0001001),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::decode::decode32;
+
+    fn roundtrip(op: Op) {
+        let enc = encode(op);
+        let dec = decode32(enc);
+        assert_eq!(dec, op, "encoding {:#010x}", enc);
+    }
+
+    #[test]
+    fn roundtrip_basics() {
+        roundtrip(Op::Lui { rd: 5, imm: 0x12345 << 12 });
+        roundtrip(Op::Auipc { rd: 1, imm: -4096 });
+        roundtrip(Op::Jal { rd: 1, imm: -2048 });
+        roundtrip(Op::Jal { rd: 0, imm: 0xff00 });
+        roundtrip(Op::Jalr { rd: 1, rs1: 2, imm: -3 });
+        for cond in [BrCond::Eq, BrCond::Ne, BrCond::Lt, BrCond::Ge, BrCond::Ltu, BrCond::Geu] {
+            roundtrip(Op::Branch { cond, rs1: 3, rs2: 4, imm: -64 });
+        }
+    }
+
+    #[test]
+    fn roundtrip_mem() {
+        for width in [MemWidth::B, MemWidth::H, MemWidth::W, MemWidth::D] {
+            roundtrip(Op::Load { width, signed: true, rd: 7, rs1: 8, imm: 33 });
+            if width != MemWidth::D {
+                roundtrip(Op::Load { width, signed: false, rd: 7, rs1: 8, imm: -33 });
+            }
+            roundtrip(Op::Store { width, rs1: 9, rs2: 10, imm: -2048 });
+            roundtrip(Op::Store { width, rs1: 9, rs2: 10, imm: 2047 });
+        }
+    }
+
+    #[test]
+    fn roundtrip_alu() {
+        for op in [
+            AluOp::Add,
+            AluOp::Sub,
+            AluOp::Sll,
+            AluOp::Slt,
+            AluOp::Sltu,
+            AluOp::Xor,
+            AluOp::Srl,
+            AluOp::Sra,
+            AluOp::Or,
+            AluOp::And,
+        ] {
+            roundtrip(Op::Alu { op, word: false, rd: 1, rs1: 2, rs2: 3 });
+        }
+        for op in [AluOp::Add, AluOp::Sub, AluOp::Sll, AluOp::Srl, AluOp::Sra] {
+            roundtrip(Op::Alu { op, word: true, rd: 1, rs1: 2, rs2: 3 });
+        }
+        // immediate forms (Sub has no immediate form)
+        for op in [AluOp::Add, AluOp::Slt, AluOp::Sltu, AluOp::Xor, AluOp::Or, AluOp::And] {
+            roundtrip(Op::AluImm { op, word: false, rd: 1, rs1: 2, imm: -7 });
+        }
+        roundtrip(Op::AluImm { op: AluOp::Sll, word: false, rd: 1, rs1: 2, imm: 63 });
+        roundtrip(Op::AluImm { op: AluOp::Srl, word: false, rd: 1, rs1: 2, imm: 63 });
+        roundtrip(Op::AluImm { op: AluOp::Sra, word: false, rd: 1, rs1: 2, imm: 1 });
+        roundtrip(Op::AluImm { op: AluOp::Add, word: true, rd: 1, rs1: 2, imm: -1 });
+        roundtrip(Op::AluImm { op: AluOp::Sll, word: true, rd: 1, rs1: 2, imm: 31 });
+        roundtrip(Op::AluImm { op: AluOp::Sra, word: true, rd: 1, rs1: 2, imm: 31 });
+    }
+
+    #[test]
+    fn roundtrip_mul_amo_csr_sys() {
+        for op in [
+            MulOp::Mul,
+            MulOp::Mulh,
+            MulOp::Mulhsu,
+            MulOp::Mulhu,
+            MulOp::Div,
+            MulOp::Divu,
+            MulOp::Rem,
+            MulOp::Remu,
+        ] {
+            roundtrip(Op::Mul { op, word: false, rd: 4, rs1: 5, rs2: 6 });
+        }
+        for op in [MulOp::Mul, MulOp::Div, MulOp::Divu, MulOp::Rem, MulOp::Remu] {
+            roundtrip(Op::Mul { op, word: true, rd: 4, rs1: 5, rs2: 6 });
+        }
+        for w in [MemWidth::W, MemWidth::D] {
+            roundtrip(Op::Lr { width: w, rd: 1, rs1: 2 });
+            roundtrip(Op::Sc { width: w, rd: 1, rs1: 2, rs2: 3 });
+            for op in [
+                AmoOp::Swap,
+                AmoOp::Add,
+                AmoOp::Xor,
+                AmoOp::And,
+                AmoOp::Or,
+                AmoOp::Min,
+                AmoOp::Max,
+                AmoOp::Minu,
+                AmoOp::Maxu,
+            ] {
+                roundtrip(Op::Amo { op, width: w, rd: 1, rs1: 2, rs2: 3 });
+            }
+        }
+        for op in [CsrOp::Rw, CsrOp::Rs, CsrOp::Rc] {
+            roundtrip(Op::Csr { op, imm_form: false, rd: 1, rs1: 2, csr: 0x300 });
+            roundtrip(Op::Csr { op, imm_form: true, rd: 1, rs1: 31, csr: 0x7C0 });
+        }
+        roundtrip(Op::Ecall);
+        roundtrip(Op::Ebreak);
+        roundtrip(Op::Mret);
+        roundtrip(Op::Sret);
+        roundtrip(Op::Wfi);
+        roundtrip(Op::FenceI);
+        roundtrip(Op::SfenceVma { rs1: 0, rs2: 0 });
+    }
+}

@@ -1,0 +1,12 @@
+//! RISC-V RV64IMAC_Zicsr_Zifencei instruction-set definitions: decoded
+//! representation ([`op::Op`]), decoder, encoder, CSR map, disassembler.
+
+pub mod csr;
+pub mod decode;
+pub mod disasm;
+pub mod encode;
+pub mod op;
+
+pub use decode::{decode, decode16, decode32, inst_len};
+pub use encode::encode;
+pub use op::{AluOp, AmoOp, BrCond, CsrOp, MemWidth, MulOp, Op};

@@ -1,0 +1,310 @@
+//! Decoded instruction representation.
+//!
+//! Instructions are grouped by execution class rather than mnemonic so that
+//! pipeline-model hooks (`crate::pipeline`) and the memory subsystem can
+//! classify them with a single match arm, mirroring how R2VM's DBT compiler
+//! dispatches on instruction kind during translation.
+
+/// Branch comparison condition (funct3 of the B-type opcode).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BrCond {
+    Eq,
+    Ne,
+    Lt,
+    Ge,
+    Ltu,
+    Geu,
+}
+
+impl BrCond {
+    /// Evaluate the condition over two register values.
+    #[inline(always)]
+    pub fn eval(self, a: u64, b: u64) -> bool {
+        match self {
+            BrCond::Eq => a == b,
+            BrCond::Ne => a != b,
+            BrCond::Lt => (a as i64) < (b as i64),
+            BrCond::Ge => (a as i64) >= (b as i64),
+            BrCond::Ltu => a < b,
+            BrCond::Geu => a >= b,
+        }
+    }
+
+    pub fn funct3(self) -> u32 {
+        match self {
+            BrCond::Eq => 0b000,
+            BrCond::Ne => 0b001,
+            BrCond::Lt => 0b100,
+            BrCond::Ge => 0b101,
+            BrCond::Ltu => 0b110,
+            BrCond::Geu => 0b111,
+        }
+    }
+}
+
+/// Width of a memory access in bytes (log2 encoded as the enum order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MemWidth {
+    B,
+    H,
+    W,
+    D,
+}
+
+impl MemWidth {
+    #[inline(always)]
+    pub fn bytes(self) -> u64 {
+        1 << (self as u64)
+    }
+
+    #[inline(always)]
+    pub fn mask(self) -> u64 {
+        self.bytes() - 1
+    }
+}
+
+/// Integer ALU operation (shared by register and immediate forms).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AluOp {
+    Add,
+    Sub,
+    Sll,
+    Slt,
+    Sltu,
+    Xor,
+    Srl,
+    Sra,
+    Or,
+    And,
+}
+
+/// M-extension operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MulOp {
+    Mul,
+    Mulh,
+    Mulhsu,
+    Mulhu,
+    Div,
+    Divu,
+    Rem,
+    Remu,
+}
+
+/// A-extension AMO operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AmoOp {
+    Swap,
+    Add,
+    Xor,
+    And,
+    Or,
+    Min,
+    Max,
+    Minu,
+    Maxu,
+}
+
+/// Zicsr operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CsrOp {
+    Rw,
+    Rs,
+    Rc,
+}
+
+/// A fully decoded RV64IMAC_Zicsr_Zifencei instruction.
+///
+/// Compressed instructions are expanded to their base form at decode time;
+/// whether the original encoding was 16-bit is tracked out-of-band (the DBT
+/// needs it for PC advance and the pipeline models for fetch accounting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// Reserved/unsupported encoding; raises illegal-instruction at execute.
+    Illegal { raw: u32 },
+
+    Lui { rd: u8, imm: i32 },
+    Auipc { rd: u8, imm: i32 },
+
+    Jal { rd: u8, imm: i32 },
+    Jalr { rd: u8, rs1: u8, imm: i32 },
+    Branch { cond: BrCond, rs1: u8, rs2: u8, imm: i32 },
+
+    Load { width: MemWidth, signed: bool, rd: u8, rs1: u8, imm: i32 },
+    Store { width: MemWidth, rs1: u8, rs2: u8, imm: i32 },
+
+    Alu { op: AluOp, word: bool, rd: u8, rs1: u8, rs2: u8 },
+    AluImm { op: AluOp, word: bool, rd: u8, rs1: u8, imm: i32 },
+    Mul { op: MulOp, word: bool, rd: u8, rs1: u8, rs2: u8 },
+
+    Lr { width: MemWidth, rd: u8, rs1: u8 },
+    Sc { width: MemWidth, rd: u8, rs1: u8, rs2: u8 },
+    Amo { op: AmoOp, width: MemWidth, rd: u8, rs1: u8, rs2: u8 },
+
+    /// CSR access. When `imm_form` is set, `rs1` holds the 5-bit zimm.
+    Csr { op: CsrOp, imm_form: bool, rd: u8, rs1: u8, csr: u16 },
+
+    Fence,
+    FenceI,
+    Ecall,
+    Ebreak,
+    Mret,
+    Sret,
+    Wfi,
+    SfenceVma { rs1: u8, rs2: u8 },
+}
+
+impl Op {
+    /// Does this instruction access data memory? (Used to place
+    /// synchronisation points, §3.3.2 of the paper.)
+    #[inline]
+    pub fn is_mem(&self) -> bool {
+        matches!(
+            self,
+            Op::Load { .. } | Op::Store { .. } | Op::Lr { .. } | Op::Sc { .. } | Op::Amo { .. }
+        )
+    }
+
+    /// Is this a control-register or other system-visible operation that
+    /// requires a synchronisation point (§3.3.2, second interaction class)?
+    #[inline]
+    pub fn is_system(&self) -> bool {
+        matches!(
+            self,
+            Op::Csr { .. }
+                | Op::Ecall
+                | Op::Ebreak
+                | Op::Mret
+                | Op::Sret
+                | Op::Wfi
+                | Op::SfenceVma { .. }
+                | Op::FenceI
+        )
+    }
+
+    /// Does this instruction unconditionally or conditionally end a basic
+    /// block?
+    #[inline]
+    pub fn ends_block(&self) -> bool {
+        matches!(
+            self,
+            Op::Jal { .. }
+                | Op::Jalr { .. }
+                | Op::Branch { .. }
+                | Op::Ecall
+                | Op::Ebreak
+                | Op::Mret
+                | Op::Sret
+                | Op::Wfi
+                | Op::FenceI
+                | Op::SfenceVma { .. }
+                | Op::Illegal { .. }
+        )
+    }
+
+    /// Destination register, if any (x0 writes are reported as `None`).
+    pub fn rd(&self) -> Option<u8> {
+        let rd = match *self {
+            Op::Lui { rd, .. }
+            | Op::Auipc { rd, .. }
+            | Op::Jal { rd, .. }
+            | Op::Jalr { rd, .. }
+            | Op::Load { rd, .. }
+            | Op::Alu { rd, .. }
+            | Op::AluImm { rd, .. }
+            | Op::Mul { rd, .. }
+            | Op::Lr { rd, .. }
+            | Op::Sc { rd, .. }
+            | Op::Amo { rd, .. }
+            | Op::Csr { rd, .. } => rd,
+            _ => return None,
+        };
+        if rd == 0 {
+            None
+        } else {
+            Some(rd)
+        }
+    }
+
+    /// Source registers read by this instruction (up to two).
+    pub fn srcs(&self) -> (Option<u8>, Option<u8>) {
+        fn nz(r: u8) -> Option<u8> {
+            if r == 0 {
+                None
+            } else {
+                Some(r)
+            }
+        }
+        match *self {
+            Op::Jalr { rs1, .. } | Op::Load { rs1, .. } | Op::AluImm { rs1, .. } | Op::Lr { rs1, .. } => {
+                (nz(rs1), None)
+            }
+            Op::Branch { rs1, rs2, .. }
+            | Op::Store { rs1, rs2, .. }
+            | Op::Alu { rs1, rs2, .. }
+            | Op::Mul { rs1, rs2, .. }
+            | Op::Sc { rs1, rs2, .. }
+            | Op::Amo { rs1, rs2, .. }
+            | Op::SfenceVma { rs1, rs2 } => (nz(rs1), nz(rs2)),
+            Op::Csr { imm_form, rs1, .. } => {
+                if imm_form {
+                    (None, None)
+                } else {
+                    (nz(rs1), None)
+                }
+            }
+            _ => (None, None),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn brcond_eval() {
+        assert!(BrCond::Eq.eval(5, 5));
+        assert!(!BrCond::Eq.eval(5, 6));
+        assert!(BrCond::Ne.eval(5, 6));
+        assert!(BrCond::Lt.eval((-1i64) as u64, 0));
+        assert!(!BrCond::Ltu.eval((-1i64) as u64, 0));
+        assert!(BrCond::Geu.eval((-1i64) as u64, 0));
+        assert!(BrCond::Ge.eval(0, (-1i64) as u64));
+    }
+
+    #[test]
+    fn memwidth_bytes() {
+        assert_eq!(MemWidth::B.bytes(), 1);
+        assert_eq!(MemWidth::H.bytes(), 2);
+        assert_eq!(MemWidth::W.bytes(), 4);
+        assert_eq!(MemWidth::D.bytes(), 8);
+        assert_eq!(MemWidth::D.mask(), 7);
+    }
+
+    #[test]
+    fn op_classification() {
+        let ld = Op::Load { width: MemWidth::D, signed: true, rd: 1, rs1: 2, imm: 0 };
+        assert!(ld.is_mem() && !ld.is_system() && !ld.ends_block());
+        let csr = Op::Csr { op: CsrOp::Rw, imm_form: false, rd: 1, rs1: 2, csr: 0x300 };
+        assert!(csr.is_system() && !csr.is_mem());
+        let jal = Op::Jal { rd: 0, imm: 8 };
+        assert!(jal.ends_block());
+    }
+
+    #[test]
+    fn rd_x0_is_none() {
+        assert_eq!(Op::Jal { rd: 0, imm: 8 }.rd(), None);
+        assert_eq!(Op::Jal { rd: 1, imm: 8 }.rd(), Some(1));
+    }
+
+    #[test]
+    fn srcs_extraction() {
+        let add = Op::Alu { op: AluOp::Add, word: false, rd: 3, rs1: 1, rs2: 2 };
+        assert_eq!(add.srcs(), (Some(1), Some(2)));
+        let addi = Op::AluImm { op: AluOp::Add, word: false, rd: 3, rs1: 0, imm: 4 };
+        assert_eq!(addi.srcs(), (None, None));
+        let csri = Op::Csr { op: CsrOp::Rw, imm_form: true, rd: 1, rs1: 7, csr: 0x300 };
+        assert_eq!(csri.srcs(), (None, None));
+    }
+}

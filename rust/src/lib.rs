@@ -1,0 +1,32 @@
+//! # r2vm-repro
+//!
+//! Reproduction of **R2VM** — *"Accelerate Cycle-Level Full-System
+//! Simulation of Multi-Core RISC-V Systems with Binary Translation"*
+//! (Guo & Mullins, CARRV 2020) — as a Rust + JAX + Pallas three-layer
+//! stack.
+//!
+//! Layer 3 (this crate) is the simulator itself: a binary-translating,
+//! cycle-level, full-system multi-core RISC-V simulator with
+//! runtime-switchable pipeline and memory models, lockstep execution via
+//! lightweight cooperative fibers, and an L0 cache layer that lets the hot
+//! path bypass the memory model. Layers 2/1 (JAX + Pallas, in `python/`)
+//! implement the batched trace-analytics engine, AOT-compiled to HLO and
+//! executed from Rust via PJRT (`runtime`).
+//!
+//! See `DESIGN.md` for the architecture and experiment index.
+
+pub mod analytics;
+pub mod bench;
+pub mod coordinator;
+pub mod asm;
+pub mod interp;
+pub mod isa;
+pub mod dbt;
+pub mod fiber;
+pub mod mem;
+pub mod pipeline;
+pub mod prop;
+pub mod refsim;
+pub mod runtime;
+pub mod workloads;
+pub mod sys;

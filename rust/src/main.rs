@@ -1,0 +1,142 @@
+//! r2vm-repro command-line interface.
+//!
+//! Subcommands:
+//!   run       — run a built-in workload or an ELF under a model config
+//!   models    — print the pipeline/memory model inventory (Tables 1-2)
+//!   workloads — list built-in workloads
+//!   validate  — quick accuracy check of the InOrder model vs refsim
+//!
+//! (clap is unavailable offline; this is a small hand-rolled parser.)
+
+use r2vm::coordinator::{self, SimConfig};
+use r2vm::sys::loader;
+use r2vm::workloads;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage:
+  r2vm-repro run [--workload NAME | --elf PATH] [options]
+  r2vm-repro models
+  r2vm-repro workloads
+  r2vm-repro validate
+
+options:
+  --harts N          number of harts (default 1)
+  --pipeline M       atomic | simple | inorder (default simple)
+  --memory M         atomic | tlb | cache | mesi (default atomic)
+  --mode M           lockstep | parallel | interp (default lockstep)
+  --max-insts N      instruction budget
+  --dram-mb N        guest DRAM size (default 64)
+  --line-bytes N     L0 line size (64; 4096 = L0-as-TLB)
+  --trace N          capture N memory/branch trace records
+  --naive-yield      A1 ablation: yield per instruction
+  --no-chaining      A3 ablation: disable block chaining
+  --no-l0            A2 ablation: bypass the L0 fast path
+  --console          echo guest console to stdout
+  --quiet            suppress the run summary"
+    );
+    std::process::exit(2);
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    match cmd.as_str() {
+        "models" => print!("{}", coordinator::models_report()),
+        "workloads" => {
+            for (name, desc) in workloads::WORKLOADS {
+                println!("  {:<16} {}", name, desc);
+            }
+        }
+        "validate" => {
+            let report = r2vm::refsim::validate_inorder_quick();
+            print!("{}", report);
+        }
+        "run" => {
+            let mut cfg = SimConfig::default();
+            let mut workload: Option<String> = None;
+            let mut elf: Option<String> = None;
+            let mut quiet = false;
+            let mut it = args[1..].iter();
+            while let Some(arg) = it.next() {
+                let Some(key) = arg.strip_prefix("--") else {
+                    eprintln!("unexpected argument: {}", arg);
+                    usage();
+                };
+                match key {
+                    "workload" => workload = it.next().cloned(),
+                    "elf" => elf = it.next().cloned(),
+                    "naive-yield" => cfg.naive_yield = true,
+                    "no-chaining" => cfg.no_chaining = true,
+                    "no-l0" => cfg.no_l0 = true,
+                    "console" => cfg.console = true,
+                    "quiet" => quiet = true,
+                    _ => {
+                        let Some(value) = it.next() else {
+                            eprintln!("--{} needs a value", key);
+                            usage();
+                        };
+                        if let Err(e) = cfg.set(key, value) {
+                            eprintln!("{}", e);
+                            usage();
+                        }
+                    }
+                }
+            }
+            if let Err(e) = cfg.validate() {
+                eprintln!("{}", e);
+                std::process::exit(2);
+            }
+            let image = match (workload, elf) {
+                (Some(w), None) => match workloads::build(&w, cfg.harts) {
+                    Some(img) => img,
+                    None => {
+                        eprintln!("unknown workload '{}' (see `r2vm-repro workloads`)", w);
+                        std::process::exit(2);
+                    }
+                },
+                (None, Some(path)) => {
+                    let bytes = match std::fs::read(&path) {
+                        Ok(b) => b,
+                        Err(e) => {
+                            eprintln!("reading {}: {}", path, e);
+                            std::process::exit(2);
+                        }
+                    };
+                    // Convert the ELF into a flat image by loading into a
+                    // scratch system and copying the populated range out.
+                    let sys = r2vm::sys::System::new(1, cfg.dram_bytes);
+                    let entry = match loader::load_elf(&sys, &bytes) {
+                        Ok(e) => e,
+                        Err(e) => {
+                            eprintln!("loading {}: {}", path, e);
+                            std::process::exit(2);
+                        }
+                    };
+                    let size = cfg.dram_bytes.min(32 << 20);
+                    let mut img = r2vm::asm::Image {
+                        base: r2vm::mem::DRAM_BASE,
+                        bytes: sys.phys.read_bytes(r2vm::mem::DRAM_BASE, size),
+                        entry,
+                    };
+                    while img.bytes.last() == Some(&0) && img.bytes.len() > 4096 {
+                        img.bytes.pop();
+                    }
+                    img
+                }
+                _ => {
+                    eprintln!("exactly one of --workload or --elf is required");
+                    usage();
+                }
+            };
+            let report = coordinator::run_image(&cfg, &image);
+            if !quiet {
+                print!("{}", report.summary());
+            }
+            if let r2vm::interp::ExitReason::Exited(code) = report.exit {
+                std::process::exit((code & 0x7f) as i32);
+            }
+        }
+        _ => usage(),
+    }
+}

@@ -1,0 +1,288 @@
+//! `Cache` memory model (Table 2): per-hart private L1 I/D cache hit rates
+//! are collected; TLBs and cache coherency are *not* modelled, so this model
+//! remains sound without lockstep execution.
+//!
+//! Caches are physically indexed/tagged, set-associative, FIFO-replaced
+//! (the L0 fast path hides hits from the model, so recency-based policies
+//! cannot be maintained — paper §3.4.1).
+
+use super::l0::L0Set;
+use super::mmu::Translation;
+use super::model::{ColdAccess, MemTiming, MemoryModel, ModelStats};
+
+const EMPTY: u64 = u64::MAX;
+
+/// Geometry of a simulated cache.
+#[derive(Debug, Clone, Copy)]
+pub struct CacheGeometry {
+    pub sets: usize,
+    pub ways: usize,
+    pub line_shift: u32,
+}
+
+impl CacheGeometry {
+    /// 16 KiB, 4-way, 64 B lines — a typical small L1.
+    pub fn default_l1() -> CacheGeometry {
+        CacheGeometry { sets: 64, ways: 4, line_shift: 6 }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.sets * self.ways << self.line_shift
+    }
+}
+
+/// One set-associative cache tag array (no data — the simulator reads
+/// through guest DRAM; only presence/timing is modelled).
+pub struct SimCache {
+    pub geom: CacheGeometry,
+    tags: Vec<u64>, // physical line tags
+    fifo: Vec<u8>,
+    pub accesses: u64,
+    pub hits: u64,
+}
+
+impl SimCache {
+    pub fn new(geom: CacheGeometry) -> SimCache {
+        assert!(geom.sets.is_power_of_two());
+        SimCache {
+            geom,
+            tags: vec![EMPTY; geom.sets * geom.ways],
+            fifo: vec![0; geom.sets],
+            accesses: 0,
+            hits: 0,
+        }
+    }
+
+    #[inline]
+    fn set_of(&self, ltag: u64) -> usize {
+        (ltag as usize) & (self.geom.sets - 1)
+    }
+
+    /// Probe line containing `paddr`.
+    pub fn probe(&mut self, paddr: u64) -> bool {
+        self.accesses += 1;
+        let ltag = paddr >> self.geom.line_shift;
+        let s = self.set_of(ltag);
+        for w in 0..self.geom.ways {
+            if self.tags[s * self.geom.ways + w] == ltag {
+                self.hits += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Insert the line containing `paddr`; returns evicted line's base
+    /// physical address if a valid line was displaced.
+    pub fn insert(&mut self, paddr: u64) -> Option<u64> {
+        let ltag = paddr >> self.geom.line_shift;
+        let s = self.set_of(ltag);
+        for w in 0..self.geom.ways {
+            if self.tags[s * self.geom.ways + w] == EMPTY {
+                self.tags[s * self.geom.ways + w] = ltag;
+                return None;
+            }
+        }
+        let w = self.fifo[s] as usize % self.geom.ways;
+        self.fifo[s] = self.fifo[s].wrapping_add(1);
+        let victim = self.tags[s * self.geom.ways + w];
+        self.tags[s * self.geom.ways + w] = ltag;
+        Some(victim << self.geom.line_shift)
+    }
+
+    /// Remove the line containing `paddr` if present; true if removed.
+    pub fn invalidate(&mut self, paddr: u64) -> bool {
+        let ltag = paddr >> self.geom.line_shift;
+        let s = self.set_of(ltag);
+        for w in 0..self.geom.ways {
+            if self.tags[s * self.geom.ways + w] == ltag {
+                self.tags[s * self.geom.ways + w] = EMPTY;
+                return true;
+            }
+        }
+        false
+    }
+
+    pub fn contains(&self, paddr: u64) -> bool {
+        let ltag = paddr >> self.geom.line_shift;
+        let s = self.set_of(ltag);
+        (0..self.geom.ways).any(|w| self.tags[s * self.geom.ways + w] == ltag)
+    }
+
+    pub fn flush(&mut self) {
+        self.tags.fill(EMPTY);
+        self.fifo.fill(0);
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.accesses as f64
+        }
+    }
+}
+
+struct HartCaches {
+    icache: SimCache,
+    dcache: SimCache,
+}
+
+/// The `Cache` memory model.
+pub struct CacheModel {
+    harts: Vec<HartCaches>,
+    timing: MemTiming,
+}
+
+impl CacheModel {
+    pub fn new(num_harts: usize, timing: MemTiming) -> CacheModel {
+        Self::with_geometry(num_harts, timing, CacheGeometry::default_l1())
+    }
+
+    pub fn with_geometry(num_harts: usize, timing: MemTiming, geom: CacheGeometry) -> CacheModel {
+        CacheModel {
+            harts: (0..num_harts)
+                .map(|_| HartCaches { icache: SimCache::new(geom), dcache: SimCache::new(geom) })
+                .collect(),
+            timing,
+        }
+    }
+
+    pub fn dcache_hit_rate(&self, hart: usize) -> f64 {
+        self.harts[hart].dcache.hit_rate()
+    }
+
+    pub fn icache_hit_rate(&self, hart: usize) -> f64 {
+        self.harts[hart].icache.hit_rate()
+    }
+}
+
+impl MemoryModel for CacheModel {
+    fn name(&self) -> &'static str {
+        "cache"
+    }
+
+    fn data_access(
+        &mut self,
+        l0: &mut [L0Set],
+        hart: usize,
+        _vaddr: u64,
+        tr: &Translation,
+        _write: bool,
+    ) -> ColdAccess {
+        let c = &mut self.harts[hart].dcache;
+        if c.probe(tr.paddr) {
+            // A simulated hit costs nothing beyond the pipeline model's
+            // load-use latency — the same accounting an L0 hit gets, so
+            // the L0 fast path is timing-transparent.
+            ColdAccess { cycles: 0, install: Some(tr.writable) }
+        } else {
+            let cycles = self.timing.mem;
+            if let Some(victim) = c.insert(tr.paddr) {
+                // Inclusion: flush the evicted physical line from this
+                // hart's L0 (Fig 3).
+                l0[hart].d.invalidate_paddr(victim);
+            }
+            ColdAccess { cycles, install: Some(tr.writable) }
+        }
+    }
+
+    fn fetch_access(
+        &mut self,
+        l0: &mut [L0Set],
+        hart: usize,
+        _vaddr: u64,
+        tr: &Translation,
+    ) -> ColdAccess {
+        let c = &mut self.harts[hart].icache;
+        if c.probe(tr.paddr) {
+            ColdAccess { cycles: 0, install: Some(false) }
+        } else {
+            let cycles = self.timing.mem;
+            if let Some(victim) = c.insert(tr.paddr) {
+                l0[hart].i.invalidate_paddr(victim);
+            }
+            ColdAccess { cycles, install: Some(false) }
+        }
+    }
+
+    fn flush_hart(&mut self, l0: &mut [L0Set], hart: usize) {
+        // sfence.vma: translation changed; L0 must go, simulated cache
+        // contents are physical and stay.
+        l0[hart].clear();
+    }
+
+    fn flush_all(&mut self, l0: &mut [L0Set]) {
+        for (h, c) in self.harts.iter_mut().enumerate() {
+            c.icache.flush();
+            c.dcache.flush();
+            l0[h].clear();
+        }
+    }
+
+    fn stats(&self) -> ModelStats {
+        let (mut da, mut dh, mut ia, mut ih) = (0, 0, 0, 0);
+        for c in &self.harts {
+            da += c.dcache.accesses;
+            dh += c.dcache.hits;
+            ia += c.icache.accesses;
+            ih += c.icache.hits;
+        }
+        vec![
+            ("dcache_cold_accesses", da),
+            ("dcache_hits", dh),
+            ("icache_cold_accesses", ia),
+            ("icache_hits", ih),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tr(paddr: u64) -> Translation {
+        Translation { paddr, page_size: u64::MAX, writable: true, levels: 0 }
+    }
+
+    #[test]
+    fn probe_insert_evict() {
+        let mut c = SimCache::new(CacheGeometry { sets: 2, ways: 2, line_shift: 6 });
+        assert!(!c.probe(0x0));
+        assert_eq!(c.insert(0x0), None);
+        assert!(c.probe(0x0));
+        assert_eq!(c.insert(0x100), None); // set 0 (line 4 -> set 0), fills way 2
+        assert_eq!(c.insert(0x200), Some(0x0)); // evicts FIFO-first
+        assert!(!c.probe(0x0));
+    }
+
+    #[test]
+    fn model_hit_miss_cycles() {
+        let timing = MemTiming::default();
+        let mut m = CacheModel::new(1, timing);
+        let mut l0 = vec![L0Set::new(6)];
+        let miss = m.data_access(&mut l0, 0, 0x1000, &tr(0x8000_1000), false);
+        let hit = m.data_access(&mut l0, 0, 0x1000, &tr(0x8000_1000), false);
+        assert_eq!(miss.cycles, timing.mem);
+        assert_eq!(hit.cycles, 0, "hit latency lives in the pipeline model");
+        assert_eq!(m.dcache_hit_rate(0), 0.5);
+    }
+
+    #[test]
+    fn eviction_flushes_l0_line() {
+        let timing = MemTiming::default();
+        let geom = CacheGeometry { sets: 1, ways: 1, line_shift: 6 };
+        let mut m = CacheModel::with_geometry(1, timing, geom);
+        let mut l0 = vec![L0Set::new(6)];
+        m.data_access(&mut l0, 0, 0x1000, &tr(0x8000_1000), false);
+        l0[0].d.insert(0x1000, 0x8000_1000, true);
+        // Different line, same (only) set: evicts 0x8000_1000.
+        m.data_access(&mut l0, 0, 0x2000, &tr(0x8000_2000), false);
+        assert!(l0[0].d.lookup_read(0x1000).is_none());
+    }
+
+    #[test]
+    fn geometry_size() {
+        assert_eq!(CacheGeometry::default_l1().size_bytes(), 16 * 1024);
+    }
+}

@@ -1,0 +1,372 @@
+//! L0 data/instruction caches (paper §3.4.1-§3.4.2, Figures 3-4).
+//!
+//! The L0 layer is what makes R2VM's timing simulation fast: each hart has a
+//! small direct-mapped translation+presence cache. If an access hits L0, it
+//! is performed entirely on the hot path, bypassing the memory model; the
+//! memory model guarantees the *inclusion invariant* — every L0 entry is
+//! also present in the simulated TLB and L1 cache — so an L0 hit is always a
+//! simulated-hit and costs the pipeline model's fixed hit latency.
+//!
+//! Entry layout reproduces Figure 4:
+//!   `T = (vtag << 1) | readonly_bit`  — checked as `T >> 1 == vtag` for
+//!   reads and `vtag << 1 == T` for writes (one compare each), plus
+//!   `A = vaddr ^ paddr` so the physical address is recovered with a single
+//!   XOR. The hit path therefore costs 3 host memory operations per
+//!   simulated access, as in the paper.
+//!
+//! The line size is runtime-configurable (§3.5): with a 64 B line the L0
+//! backs a cache model; with a 4096 B "line" it degenerates into an L0 TLB.
+
+/// Number of entries in each L0 cache (direct-mapped).
+pub const L0_ENTRIES: usize = 1 << 10;
+
+const EMPTY: u64 = u64::MAX;
+
+/// L0 data cache.
+pub struct L0DCache {
+    /// Packed tag words: `(vtag << 1) | readonly`.
+    tags: Box<[u64; L0_ENTRIES]>,
+    /// `vaddr ^ paddr` of the cached line (low `line` bits are zero).
+    xors: Box<[u64; L0_ENTRIES]>,
+    /// Physical line tags, kept alongside so coherence invalidations (by
+    /// physical address) are a flat, vectorisable scan instead of
+    /// recomputing `va ^ xor` per entry (§Perf: the cache-model eviction
+    /// path was 83% of memlat wall time before this).
+    ptags: Box<[u64; L0_ENTRIES]>,
+    line_shift: u32,
+    /// Lookup counters (reads via [`Self::stats`]); one add per access.
+    accesses: u64,
+    misses: u64,
+}
+
+impl L0DCache {
+    pub fn new(line_shift: u32) -> L0DCache {
+        L0DCache {
+            tags: Box::new([EMPTY; L0_ENTRIES]),
+            xors: Box::new([0; L0_ENTRIES]),
+            ptags: Box::new([EMPTY; L0_ENTRIES]),
+            line_shift,
+            accesses: 0,
+            misses: 0,
+        }
+    }
+
+    #[inline(always)]
+    pub fn line_shift(&self) -> u32 {
+        self.line_shift
+    }
+
+    #[inline(always)]
+    fn index(&self, vtag: u64) -> usize {
+        (vtag as usize) & (L0_ENTRIES - 1)
+    }
+
+    /// Fast-path read lookup: `Some(paddr)` on hit.
+    #[inline(always)]
+    pub fn lookup_read(&mut self, vaddr: u64) -> Option<u64> {
+        self.accesses += 1;
+        let vtag = vaddr >> self.line_shift;
+        let idx = self.index(vtag);
+        // Figure 4 check: T >> 1 == vtag (read ignores the readonly bit).
+        if self.tags[idx] >> 1 == vtag {
+            Some(vaddr ^ self.xors[idx])
+        } else {
+            self.misses += 1;
+            None
+        }
+    }
+
+    /// Fast-path write lookup: `Some(paddr)` on hit to a writable line.
+    #[inline(always)]
+    pub fn lookup_write(&mut self, vaddr: u64) -> Option<u64> {
+        self.accesses += 1;
+        let vtag = vaddr >> self.line_shift;
+        let idx = self.index(vtag);
+        // Figure 4 check: vtag << 1 == T (tag match AND readonly bit clear).
+        if vtag << 1 == self.tags[idx] {
+            Some(vaddr ^ self.xors[idx])
+        } else {
+            self.misses += 1;
+            None
+        }
+    }
+
+    /// Install a line mapping (memory-model cold path only).
+    pub fn insert(&mut self, vaddr: u64, paddr: u64, writable: bool) {
+        let vtag = vaddr >> self.line_shift;
+        let idx = self.index(vtag);
+        self.tags[idx] = (vtag << 1) | (!writable as u64);
+        // Offsets within the line are identical, so the in-line bits of the
+        // XOR are zero and any address in the line recovers its paddr.
+        self.xors[idx] = (vaddr ^ paddr) & !((1 << self.line_shift) - 1);
+        self.ptags[idx] = paddr >> self.line_shift;
+    }
+
+    /// Flush the entry covering virtual address `vaddr`, if present.
+    #[inline]
+    pub fn invalidate_vaddr(&mut self, vaddr: u64) {
+        let vtag = vaddr >> self.line_shift;
+        let idx = self.index(vtag);
+        if self.tags[idx] >> 1 == vtag {
+            self.tags[idx] = EMPTY;
+            self.ptags[idx] = EMPTY;
+        }
+    }
+
+    /// Flush any entry whose *physical* line equals that of `paddr`
+    /// (coherence invalidations and cache-model evictions arrive by
+    /// physical address; requires a scan since L0 is virtually indexed).
+    pub fn invalidate_paddr(&mut self, paddr: u64) {
+        let ptag = paddr >> self.line_shift;
+        for idx in 0..L0_ENTRIES {
+            if self.ptags[idx] == ptag {
+                self.tags[idx] = EMPTY;
+                self.ptags[idx] = EMPTY;
+            }
+        }
+    }
+
+    /// Downgrade any entry for this physical line to read-only (MESI S).
+    pub fn downgrade_paddr(&mut self, paddr: u64) {
+        let ptag = paddr >> self.line_shift;
+        for idx in 0..L0_ENTRIES {
+            if self.ptags[idx] == ptag {
+                self.tags[idx] |= 1;
+            }
+        }
+    }
+
+    /// Flush every entry within the virtual page containing `vaddr`
+    /// (simulated-TLB evictions maintain inclusion at page granularity).
+    pub fn invalidate_vpage(&mut self, vaddr: u64) {
+        let lines_per_page = 1u64 << (12u32.saturating_sub(self.line_shift));
+        let base = vaddr >> 12 << 12;
+        for k in 0..lines_per_page {
+            self.invalidate_vaddr(base + (k << self.line_shift));
+        }
+    }
+
+    /// Flush everything (model switch, sfence.vma, satp write).
+    pub fn clear(&mut self) {
+        self.tags.fill(EMPTY);
+        self.ptags.fill(EMPTY);
+    }
+
+    /// Reconfigure the line size (flushes, §3.5).
+    pub fn set_line_shift(&mut self, line_shift: u32) {
+        self.line_shift = line_shift;
+        self.clear();
+    }
+
+    /// (accesses, misses) counter snapshot.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.accesses, self.misses)
+    }
+}
+
+/// L0 instruction cache. Simpler entry layout (no writable bit, §3.4.2):
+/// `T = vtag` directly. Checked at basic-block entry and when translation
+/// crosses a cache line; also reused to validate cross-page block chaining.
+pub struct L0ICache {
+    tags: Box<[u64; L0_ENTRIES]>,
+    xors: Box<[u64; L0_ENTRIES]>,
+    ptags: Box<[u64; L0_ENTRIES]>,
+    line_shift: u32,
+    accesses: u64,
+    misses: u64,
+}
+
+impl L0ICache {
+    pub fn new(line_shift: u32) -> L0ICache {
+        L0ICache {
+            tags: Box::new([EMPTY; L0_ENTRIES]),
+            xors: Box::new([0; L0_ENTRIES]),
+            ptags: Box::new([EMPTY; L0_ENTRIES]),
+            line_shift,
+            accesses: 0,
+            misses: 0,
+        }
+    }
+
+    #[inline(always)]
+    pub fn line_shift(&self) -> u32 {
+        self.line_shift
+    }
+
+    #[inline(always)]
+    pub fn lookup(&mut self, vaddr: u64) -> Option<u64> {
+        self.accesses += 1;
+        let vtag = vaddr >> self.line_shift;
+        let idx = (vtag as usize) & (L0_ENTRIES - 1);
+        if self.tags[idx] == vtag {
+            Some(vaddr ^ self.xors[idx])
+        } else {
+            self.misses += 1;
+            None
+        }
+    }
+
+    pub fn insert(&mut self, vaddr: u64, paddr: u64) {
+        let vtag = vaddr >> self.line_shift;
+        let idx = (vtag as usize) & (L0_ENTRIES - 1);
+        self.tags[idx] = vtag;
+        self.xors[idx] = (vaddr ^ paddr) & !((1 << self.line_shift) - 1);
+        self.ptags[idx] = paddr >> self.line_shift;
+    }
+
+    pub fn invalidate_paddr(&mut self, paddr: u64) {
+        let ptag = paddr >> self.line_shift;
+        for idx in 0..L0_ENTRIES {
+            if self.ptags[idx] == ptag {
+                self.tags[idx] = EMPTY;
+                self.ptags[idx] = EMPTY;
+            }
+        }
+    }
+
+    pub fn invalidate_vpage(&mut self, vaddr: u64) {
+        let lines_per_page = 1u64 << (12u32.saturating_sub(self.line_shift));
+        let base = vaddr >> 12 << 12;
+        for k in 0..lines_per_page {
+            let va = base + (k << self.line_shift);
+            let vtag = va >> self.line_shift;
+            let idx = (vtag as usize) & (L0_ENTRIES - 1);
+            if self.tags[idx] == vtag {
+                self.tags[idx] = EMPTY;
+            }
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.tags.fill(EMPTY);
+        self.ptags.fill(EMPTY);
+    }
+
+    pub fn set_line_shift(&mut self, line_shift: u32) {
+        self.line_shift = line_shift;
+        self.clear();
+    }
+
+    pub fn stats(&self) -> (u64, u64) {
+        (self.accesses, self.misses)
+    }
+}
+
+/// Per-hart pair of L0 caches, owned by the `System` so memory models can
+/// flush any hart's L0 (coherence invalidations, Fig 3).
+pub struct L0Set {
+    pub d: L0DCache,
+    pub i: L0ICache,
+}
+
+impl L0Set {
+    pub fn new(line_shift: u32) -> L0Set {
+        L0Set { d: L0DCache::new(line_shift), i: L0ICache::new(line_shift) }
+    }
+
+    pub fn clear(&mut self) {
+        self.d.clear();
+        self.i.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_write_hit_semantics() {
+        let mut l0 = L0DCache::new(6);
+        l0.insert(0x1000, 0x8000_1000, true);
+        assert_eq!(l0.lookup_read(0x1008), Some(0x8000_1008));
+        assert_eq!(l0.lookup_write(0x1030), Some(0x8000_1030));
+        // read-only line: read hits, write misses
+        l0.insert(0x2000, 0x8000_2000, false);
+        assert_eq!(l0.lookup_read(0x2004), Some(0x8000_2004));
+        assert_eq!(l0.lookup_write(0x2004), None);
+    }
+
+    #[test]
+    fn miss_on_empty_and_wrong_tag() {
+        let mut l0 = L0DCache::new(6);
+        assert_eq!(l0.lookup_read(0x1000), None);
+        l0.insert(0x1000, 0x8000_1000, true);
+        // Same index (vtag differs by a multiple of L0_ENTRIES), different tag.
+        let conflicting = 0x1000 + ((L0_ENTRIES as u64) << 6);
+        assert_eq!(l0.lookup_read(conflicting), None);
+        // Conflict insert evicts the old mapping.
+        l0.insert(conflicting, 0x9000_0000, true);
+        assert_eq!(l0.lookup_read(0x1000), None);
+    }
+
+    #[test]
+    fn xor_recovers_paddr_across_line() {
+        let mut l0 = L0DCache::new(6);
+        // vaddr and paddr share in-line offset; mapping vpage != ppage.
+        l0.insert(0x0000_7fff_0040, 0x8765_4000, true);
+        for off in [0u64, 1, 17, 63] {
+            assert_eq!(l0.lookup_read(0x0000_7fff_0040 + off), Some(0x8765_4000 + off));
+        }
+    }
+
+    #[test]
+    fn invalidate_by_paddr() {
+        let mut l0 = L0DCache::new(6);
+        l0.insert(0x1000, 0x8000_1000, true);
+        l0.insert(0x2000, 0x8000_2000, true);
+        l0.invalidate_paddr(0x8000_1010);
+        assert_eq!(l0.lookup_read(0x1000), None);
+        assert_eq!(l0.lookup_read(0x2000), Some(0x8000_2000));
+    }
+
+    #[test]
+    fn downgrade_by_paddr() {
+        let mut l0 = L0DCache::new(6);
+        l0.insert(0x1000, 0x8000_1000, true);
+        l0.downgrade_paddr(0x8000_1000);
+        assert_eq!(l0.lookup_read(0x1000), Some(0x8000_1000));
+        assert_eq!(l0.lookup_write(0x1000), None);
+    }
+
+    #[test]
+    fn invalidate_vpage_flushes_all_lines_in_page() {
+        let mut l0 = L0DCache::new(6);
+        l0.insert(0x3000, 0x8000_3000, true);
+        l0.insert(0x3fc0, 0x8000_3fc0, true);
+        l0.insert(0x4000, 0x8000_4000, true); // next page
+        l0.invalidate_vpage(0x3123);
+        assert_eq!(l0.lookup_read(0x3000), None);
+        assert_eq!(l0.lookup_read(0x3fc0), None);
+        assert_eq!(l0.lookup_read(0x4000), Some(0x8000_4000));
+    }
+
+    #[test]
+    fn page_granularity_line() {
+        // line_shift = 12 turns the L0 D-cache into an L0 TLB (§3.5).
+        let mut l0 = L0DCache::new(12);
+        l0.insert(0x5000, 0x8000_5000, true);
+        assert_eq!(l0.lookup_read(0x5ffc), Some(0x8000_5ffc));
+        l0.invalidate_vpage(0x5000);
+        assert_eq!(l0.lookup_read(0x5000), None);
+    }
+
+    #[test]
+    fn icache_basic() {
+        let mut ic = L0ICache::new(6);
+        assert_eq!(ic.lookup(0x8000_0000), None);
+        ic.insert(0x8000_0000, 0x8000_0000);
+        assert_eq!(ic.lookup(0x8000_003e), Some(0x8000_003e));
+        ic.invalidate_paddr(0x8000_0000);
+        assert_eq!(ic.lookup(0x8000_0000), None);
+    }
+
+    #[test]
+    fn stats_counting() {
+        let mut l0 = L0DCache::new(6);
+        l0.lookup_read(0x1000);
+        l0.insert(0x1000, 0x1000, true);
+        l0.lookup_read(0x1000);
+        let (acc, miss) = l0.stats();
+        assert_eq!((acc, miss), (2, 1));
+    }
+}

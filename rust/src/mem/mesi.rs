@@ -1,0 +1,573 @@
+//! `MESI` memory model (Table 2): directory-based MESI coherence over
+//! per-hart private L1 data caches with a shared, inclusive L2.
+//! Lockstep execution is required (paper §3.4.3): because all harts
+//! synchronise before every memory access, an invalidation performed here
+//! (including the flush of the *target* hart's L0) is guaranteed visible
+//! before that hart's next access.
+//!
+//! Instruction caches are private and non-coherent (fence.i flushes them);
+//! this matches the paper's focus on data coherence.
+
+use super::cache_model::{CacheGeometry, SimCache};
+use super::l0::L0Set;
+use super::mmu::Translation;
+use super::model::{ColdAccess, MemTiming, MemoryModel, ModelStats};
+
+const EMPTY: u64 = u64::MAX;
+
+/// MESI state of an L1 line (Invalid = line absent).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MesiState {
+    Modified,
+    Exclusive,
+    Shared,
+}
+
+#[derive(Clone, Copy)]
+struct L1Line {
+    tag: u64, // physical line number, EMPTY = invalid
+    state: MesiState,
+}
+
+/// Private L1 data cache with MESI state per line.
+struct L1Cache {
+    geom: CacheGeometry,
+    lines: Vec<L1Line>,
+    fifo: Vec<u8>,
+    accesses: u64,
+    hits: u64,
+}
+
+impl L1Cache {
+    fn new(geom: CacheGeometry) -> L1Cache {
+        L1Cache {
+            geom,
+            lines: vec![L1Line { tag: EMPTY, state: MesiState::Shared }; geom.sets * geom.ways],
+            fifo: vec![0; geom.sets],
+            accesses: 0,
+            hits: 0,
+        }
+    }
+
+    #[inline]
+    fn set_of(&self, ltag: u64) -> usize {
+        (ltag as usize) & (self.geom.sets - 1)
+    }
+
+    fn find(&self, ltag: u64) -> Option<usize> {
+        let s = self.set_of(ltag);
+        (0..self.geom.ways)
+            .map(|w| s * self.geom.ways + w)
+            .find(|&i| self.lines[i].tag == ltag)
+    }
+
+    /// Insert; returns (victim_line_paddr, victim_was_modified) if evicted.
+    fn insert(&mut self, ltag: u64, state: MesiState) -> Option<(u64, bool)> {
+        let s = self.set_of(ltag);
+        for w in 0..self.geom.ways {
+            let i = s * self.geom.ways + w;
+            if self.lines[i].tag == EMPTY {
+                self.lines[i] = L1Line { tag: ltag, state };
+                return None;
+            }
+        }
+        let w = self.fifo[s] as usize % self.geom.ways;
+        self.fifo[s] = self.fifo[s].wrapping_add(1);
+        let i = s * self.geom.ways + w;
+        let victim = self.lines[i];
+        self.lines[i] = L1Line { tag: ltag, state };
+        Some((victim.tag << self.geom.line_shift, victim.state == MesiState::Modified))
+    }
+
+    fn invalidate(&mut self, ltag: u64) -> Option<MesiState> {
+        self.find(ltag).map(|i| {
+            let st = self.lines[i].state;
+            self.lines[i].tag = EMPTY;
+            st
+        })
+    }
+}
+
+/// Shared L2 directory entry.
+#[derive(Clone, Copy)]
+struct L2Line {
+    tag: u64,
+    /// Bitmask of harts holding the line in their L1.
+    sharers: u32,
+    /// Hart holding the line in M/E, if any.
+    owner: Option<u8>,
+    dirty: bool,
+}
+
+/// Shared inclusive L2 with an in-cache directory.
+struct L2Cache {
+    geom: CacheGeometry,
+    lines: Vec<L2Line>,
+    fifo: Vec<u8>,
+    accesses: u64,
+    hits: u64,
+}
+
+impl L2Cache {
+    fn new(geom: CacheGeometry) -> L2Cache {
+        L2Cache {
+            geom,
+            lines: vec![L2Line { tag: EMPTY, sharers: 0, owner: None, dirty: false }; geom.sets * geom.ways],
+            fifo: vec![0; geom.sets],
+            accesses: 0,
+            hits: 0,
+        }
+    }
+
+    #[inline]
+    fn set_of(&self, ltag: u64) -> usize {
+        (ltag as usize) & (self.geom.sets - 1)
+    }
+
+    fn find(&mut self, ltag: u64) -> Option<usize> {
+        let s = self.set_of(ltag);
+        (0..self.geom.ways)
+            .map(|w| s * self.geom.ways + w)
+            .find(|&i| self.lines[i].tag == ltag)
+    }
+
+    /// Insert a fresh line; returns the victim entry if one was displaced.
+    fn insert(&mut self, ltag: u64) -> (usize, Option<L2Line>) {
+        let s = self.set_of(ltag);
+        for w in 0..self.geom.ways {
+            let i = s * self.geom.ways + w;
+            if self.lines[i].tag == EMPTY {
+                self.lines[i] = L2Line { tag: ltag, sharers: 0, owner: None, dirty: false };
+                return (i, None);
+            }
+        }
+        let w = self.fifo[s] as usize % self.geom.ways;
+        self.fifo[s] = self.fifo[s].wrapping_add(1);
+        let i = s * self.geom.ways + w;
+        let victim = self.lines[i];
+        self.lines[i] = L2Line { tag: ltag, sharers: 0, owner: None, dirty: false };
+        (i, if victim.tag != EMPTY { Some(victim) } else { None })
+    }
+}
+
+/// Aggregated coherence statistics.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct MesiStats {
+    pub invalidations: u64,
+    pub downgrades: u64,
+    pub upgrades: u64,
+    pub writebacks: u64,
+    pub back_invalidations: u64,
+}
+
+/// The `MESI` memory model.
+pub struct MesiModel {
+    l1: Vec<L1Cache>,
+    icache: Vec<SimCache>,
+    l2: L2Cache,
+    timing: MemTiming,
+    pub coherence: MesiStats,
+}
+
+impl MesiModel {
+    pub fn new(num_harts: usize, timing: MemTiming) -> MesiModel {
+        // Shared L2: 128 KiB, 8-way.
+        Self::with_geometry(
+            num_harts,
+            timing,
+            CacheGeometry::default_l1(),
+            CacheGeometry { sets: 256, ways: 8, line_shift: 6 },
+        )
+    }
+
+    pub fn with_geometry(
+        num_harts: usize,
+        timing: MemTiming,
+        l1_geom: CacheGeometry,
+        l2_geom: CacheGeometry,
+    ) -> MesiModel {
+        assert_eq!(l1_geom.line_shift, l2_geom.line_shift, "L1/L2 line sizes must match");
+        assert!(num_harts <= 32, "directory sharer bitmask is 32 bits");
+        MesiModel {
+            l1: (0..num_harts).map(|_| L1Cache::new(l1_geom)).collect(),
+            icache: (0..num_harts).map(|_| SimCache::new(l1_geom)).collect(),
+            l2: L2Cache::new(l2_geom),
+            timing,
+            coherence: MesiStats::default(),
+        }
+    }
+
+    pub fn l1_hit_rate(&self, hart: usize) -> f64 {
+        let c = &self.l1[hart];
+        if c.accesses == 0 {
+            0.0
+        } else {
+            c.hits as f64 / c.accesses as f64
+        }
+    }
+
+    /// Remove `line_paddr` from hart `h`'s L1 and L0 (invalidation);
+    /// returns extra cycles (writeback if the line was modified).
+    fn invalidate_hart_line(&mut self, l0: &mut [L0Set], h: usize, line_paddr: u64) -> u64 {
+        let ltag = line_paddr >> self.l1[h].geom.line_shift;
+        let mut cycles = 0;
+        if let Some(state) = self.l1[h].invalidate(ltag) {
+            self.coherence.invalidations += 1;
+            if state == MesiState::Modified {
+                self.coherence.writebacks += 1;
+                cycles += self.timing.l2_hit; // writeback to L2
+            }
+        }
+        // Lockstep guarantees this flush is observed before h's next access.
+        l0[h].d.invalidate_paddr(line_paddr);
+        cycles
+    }
+
+    /// Downgrade `line_paddr` in hart `h`'s L1 to Shared.
+    fn downgrade_hart_line(&mut self, l0: &mut [L0Set], h: usize, line_paddr: u64) -> u64 {
+        let ltag = line_paddr >> self.l1[h].geom.line_shift;
+        let mut cycles = 0;
+        if let Some(i) = self.l1[h].find(ltag) {
+            if self.l1[h].lines[i].state == MesiState::Modified {
+                self.coherence.writebacks += 1;
+                cycles += self.timing.l2_hit;
+            }
+            self.l1[h].lines[i].state = MesiState::Shared;
+            self.coherence.downgrades += 1;
+        }
+        l0[h].d.downgrade_paddr(line_paddr);
+        cycles
+    }
+
+    /// Evict an L2 line: back-invalidate every sharer (inclusive L2).
+    fn evict_l2_line(&mut self, l0: &mut [L0Set], victim: L2Line) -> u64 {
+        let line_paddr = victim.tag << self.l2.geom.line_shift;
+        let mut cycles = 0;
+        let mut sharers = victim.sharers;
+        while sharers != 0 {
+            let h = sharers.trailing_zeros() as usize;
+            sharers &= sharers - 1;
+            cycles += self.invalidate_hart_line(l0, h, line_paddr);
+            self.coherence.back_invalidations += 1;
+        }
+        if victim.dirty {
+            cycles += self.timing.mem / 2; // writeback to memory (overlapped)
+        }
+        cycles
+    }
+}
+
+impl MemoryModel for MesiModel {
+    fn name(&self) -> &'static str {
+        "mesi"
+    }
+
+    fn lockstep_required(&self) -> bool {
+        true
+    }
+
+    fn data_access(
+        &mut self,
+        l0: &mut [L0Set],
+        hart: usize,
+        _vaddr: u64,
+        tr: &Translation,
+        write: bool,
+    ) -> ColdAccess {
+        let line_shift = self.l1[hart].geom.line_shift;
+        let ltag = tr.paddr >> line_shift;
+        let line_paddr = ltag << line_shift;
+        // An L1 hit costs nothing beyond the pipeline's load latency (the
+        // same accounting the L0 fast path gets); only misses, upgrades and
+        // coherence traffic charge extra cycles.
+        let mut cycles = 0;
+
+        self.l1[hart].accesses += 1;
+
+        // ---- L1 probe -----------------------------------------------------
+        if let Some(i) = self.l1[hart].find(ltag) {
+            self.l1[hart].hits += 1;
+            let state = self.l1[hart].lines[i].state;
+            match (state, write) {
+                (MesiState::Modified, _) | (MesiState::Exclusive, false) | (MesiState::Shared, false) => {
+                    let writable = matches!(state, MesiState::Modified | MesiState::Exclusive);
+                    return ColdAccess {
+                        cycles,
+                        install: Some(writable && tr.writable),
+                    };
+                }
+                (MesiState::Exclusive, true) => {
+                    // Silent E→M upgrade.
+                    self.l1[hart].lines[i].state = MesiState::Modified;
+                    if let Some(j) = self.l2.find(ltag) {
+                        self.l2.lines[j].dirty = true;
+                        self.l2.lines[j].owner = Some(hart as u8);
+                    }
+                    return ColdAccess { cycles, install: Some(tr.writable) };
+                }
+                (MesiState::Shared, true) => {
+                    // Upgrade: invalidate other sharers via the directory.
+                    self.coherence.upgrades += 1;
+                    cycles += self.timing.coherence_msg;
+                    if let Some(j) = self.l2.find(ltag) {
+                        let mut sharers = self.l2.lines[j].sharers & !(1 << hart);
+                        while sharers != 0 {
+                            let h = sharers.trailing_zeros() as usize;
+                            sharers &= sharers - 1;
+                            cycles += self.invalidate_hart_line(l0, h, line_paddr);
+                        }
+                        self.l2.lines[j].sharers = 1 << hart;
+                        self.l2.lines[j].owner = Some(hart as u8);
+                        self.l2.lines[j].dirty = true;
+                    }
+                    if let Some(i) = self.l1[hart].find(ltag) {
+                        self.l1[hart].lines[i].state = MesiState::Modified;
+                    }
+                    return ColdAccess { cycles, install: Some(tr.writable) };
+                }
+            }
+        }
+
+        // ---- L1 miss → L2 / directory -------------------------------------
+        self.l2.accesses += 1;
+        let new_state;
+        if let Some(j) = self.l2.find(ltag) {
+            self.l2.hits += 1;
+            cycles += self.timing.l2_hit;
+            // Handle a remote owner holding the line in M/E.
+            if let Some(owner) = self.l2.lines[j].owner {
+                let owner = owner as usize;
+                if owner != hart {
+                    cycles += self.timing.coherence_msg;
+                    if write {
+                        cycles += self.invalidate_hart_line(l0, owner, line_paddr);
+                        self.l2.lines[j].sharers &= !(1 << owner);
+                    } else {
+                        cycles += self.downgrade_hart_line(l0, owner, line_paddr);
+                    }
+                    self.l2.lines[j].dirty = true;
+                }
+            }
+            if write {
+                // Invalidate all remaining sharers.
+                let mut sharers = self.l2.lines[j].sharers & !(1 << hart);
+                while sharers != 0 {
+                    let h = sharers.trailing_zeros() as usize;
+                    sharers &= sharers - 1;
+                    cycles += self.timing.coherence_msg;
+                    cycles += self.invalidate_hart_line(l0, h, line_paddr);
+                }
+                self.l2.lines[j].sharers = 1 << hart;
+                self.l2.lines[j].owner = Some(hart as u8);
+                self.l2.lines[j].dirty = true;
+                new_state = MesiState::Modified;
+            } else {
+                self.l2.lines[j].sharers |= 1 << hart;
+                if self.l2.lines[j].sharers == 1 << hart && self.l2.lines[j].owner.is_none() {
+                    new_state = MesiState::Exclusive;
+                    self.l2.lines[j].owner = Some(hart as u8);
+                } else {
+                    self.l2.lines[j].owner = None;
+                    new_state = MesiState::Shared;
+                }
+            }
+        } else {
+            // L2 miss → memory fetch, allocate in L2 (inclusive).
+            cycles += self.timing.mem;
+            let (j, victim) = self.l2.insert(ltag);
+            if let Some(v) = victim {
+                cycles += self.evict_l2_line(l0, v);
+            }
+            self.l2.lines[j].sharers = 1 << hart;
+            self.l2.lines[j].owner = Some(hart as u8);
+            self.l2.lines[j].dirty = write;
+            new_state = if write { MesiState::Modified } else { MesiState::Exclusive };
+        }
+
+        // ---- fill into L1 ---------------------------------------------------
+        if let Some((victim_paddr, was_m)) = self.l1[hart].insert(ltag, new_state) {
+            if was_m {
+                self.coherence.writebacks += 1;
+                cycles += self.timing.l2_hit;
+            }
+            // Remove this hart from the victim's directory entry and flush
+            // the victim line from our own L0.
+            let vtag = victim_paddr >> line_shift;
+            if let Some(jv) = self.l2.find(vtag) {
+                self.l2.lines[jv].sharers &= !(1 << hart);
+                if self.l2.lines[jv].owner == Some(hart as u8) {
+                    self.l2.lines[jv].owner = None;
+                    if was_m {
+                        self.l2.lines[jv].dirty = true;
+                    }
+                }
+            }
+            l0[hart].d.invalidate_paddr(victim_paddr);
+        }
+
+        let writable = matches!(new_state, MesiState::Modified | MesiState::Exclusive);
+        ColdAccess { cycles, install: Some(writable && tr.writable) }
+    }
+
+    fn fetch_access(
+        &mut self,
+        l0: &mut [L0Set],
+        hart: usize,
+        _vaddr: u64,
+        tr: &Translation,
+    ) -> ColdAccess {
+        // Non-coherent private I-cache; misses fetch through L2 timing.
+        let c = &mut self.icache[hart];
+        if c.probe(tr.paddr) {
+            ColdAccess { cycles: 0, install: Some(false) }
+        } else {
+            let cycles = self.timing.l2_hit + self.timing.mem;
+            if let Some(victim) = c.insert(tr.paddr) {
+                l0[hart].i.invalidate_paddr(victim);
+            }
+            ColdAccess { cycles, install: Some(false) }
+        }
+    }
+
+    fn flush_hart(&mut self, l0: &mut [L0Set], hart: usize) {
+        l0[hart].clear();
+    }
+
+    fn flush_all(&mut self, l0: &mut [L0Set]) {
+        let l1_geom = self.l1[0].geom;
+        let l2_geom = self.l2.geom;
+        let n = self.l1.len();
+        self.l1 = (0..n).map(|_| L1Cache::new(l1_geom)).collect();
+        self.icache = (0..n).map(|_| SimCache::new(l1_geom)).collect();
+        self.l2 = L2Cache::new(l2_geom);
+        for set in l0.iter_mut() {
+            set.clear();
+        }
+    }
+
+    fn stats(&self) -> ModelStats {
+        let (mut a, mut h) = (0, 0);
+        for c in &self.l1 {
+            a += c.accesses;
+            h += c.hits;
+        }
+        vec![
+            ("l1d_cold_accesses", a),
+            ("l1d_hits", h),
+            ("l2_accesses", self.l2.accesses),
+            ("l2_hits", self.l2.hits),
+            ("invalidations", self.coherence.invalidations),
+            ("downgrades", self.coherence.downgrades),
+            ("upgrades", self.coherence.upgrades),
+            ("writebacks", self.coherence.writebacks),
+            ("back_invalidations", self.coherence.back_invalidations),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tr(paddr: u64) -> Translation {
+        Translation { paddr, page_size: u64::MAX, writable: true, levels: 0 }
+    }
+
+    fn setup(harts: usize) -> (MesiModel, Vec<L0Set>) {
+        let m = MesiModel::new(harts, MemTiming::default());
+        let l0 = (0..harts).map(|_| L0Set::new(6)).collect();
+        (m, l0)
+    }
+
+    #[test]
+    fn read_gets_exclusive_then_shared() {
+        let (mut m, mut l0) = setup(2);
+        // Hart 0 reads: E, installable writable.
+        let r0 = m.data_access(&mut l0, 0, 0x1000, &tr(0x8000_1000), false);
+        assert_eq!(r0.install, Some(true));
+        // Hart 1 reads same line: both drop to S, install read-only.
+        let r1 = m.data_access(&mut l0, 1, 0x1000, &tr(0x8000_1000), false);
+        assert_eq!(r1.install, Some(false));
+        // Hart 0's L1 line is now Shared.
+        let ltag = 0x8000_1000u64 >> 6;
+        let i = m.l1[0].find(ltag).unwrap();
+        assert_eq!(m.l1[0].lines[i].state, MesiState::Shared);
+        assert_eq!(m.coherence.downgrades, 1);
+    }
+
+    #[test]
+    fn write_invalidates_other_sharers_and_their_l0() {
+        let (mut m, mut l0) = setup(2);
+        m.data_access(&mut l0, 0, 0x1000, &tr(0x8000_1000), false);
+        l0[0].d.insert(0x1000, 0x8000_1000, true);
+        m.data_access(&mut l0, 1, 0x1000, &tr(0x8000_1000), false);
+        // both S now; hart 1 writes → hart 0's L1 + L0 invalidated
+        let r = m.data_access(&mut l0, 1, 0x1000, &tr(0x8000_1000), true);
+        assert_eq!(r.install, Some(true));
+        assert!(l0[0].d.lookup_read(0x1000).is_none(), "L0 of hart 0 must be flushed");
+        let ltag = 0x8000_1000u64 >> 6;
+        assert!(m.l1[0].find(ltag).is_none(), "L1 of hart 0 must be invalidated");
+        assert!(m.coherence.invalidations >= 1);
+    }
+
+    #[test]
+    fn remote_modified_writeback_on_read() {
+        let (mut m, mut l0) = setup(2);
+        // Hart 0 writes: M.
+        m.data_access(&mut l0, 0, 0x1000, &tr(0x8000_1000), true);
+        // Hart 1 reads: hart 0 must be downgraded with writeback.
+        let before_wb = m.coherence.writebacks;
+        m.data_access(&mut l0, 1, 0x1000, &tr(0x8000_1000), false);
+        assert_eq!(m.coherence.writebacks, before_wb + 1);
+        let ltag = 0x8000_1000u64 >> 6;
+        let i = m.l1[0].find(ltag).unwrap();
+        assert_eq!(m.l1[0].lines[i].state, MesiState::Shared);
+    }
+
+    #[test]
+    fn upgrade_on_shared_write_hit() {
+        let (mut m, mut l0) = setup(2);
+        m.data_access(&mut l0, 0, 0x1000, &tr(0x8000_1000), false);
+        m.data_access(&mut l0, 1, 0x1000, &tr(0x8000_1000), false);
+        // Hart 0 hits in S and writes → upgrade.
+        let r = m.data_access(&mut l0, 0, 0x1000, &tr(0x8000_1000), true);
+        assert_eq!(r.install, Some(true));
+        assert_eq!(m.coherence.upgrades, 1);
+        let ltag = 0x8000_1000u64 >> 6;
+        assert!(m.l1[1].find(ltag).is_none());
+    }
+
+    #[test]
+    fn l2_eviction_back_invalidates() {
+        let timing = MemTiming::default();
+        let l1g = CacheGeometry { sets: 64, ways: 4, line_shift: 6 };
+        let l2g = CacheGeometry { sets: 1, ways: 1, line_shift: 6 };
+        let mut m = MesiModel::with_geometry(1, timing, l1g, l2g);
+        let mut l0 = vec![L0Set::new(6)];
+        m.data_access(&mut l0, 0, 0x1000, &tr(0x8000_1000), false);
+        l0[0].d.insert(0x1000, 0x8000_1000, true);
+        // Second distinct line evicts the first from the 1-entry L2 →
+        // must back-invalidate L1 and L0 of hart 0.
+        m.data_access(&mut l0, 0, 0x2000, &tr(0x8000_2000), false);
+        assert!(m.l1[0].find(0x8000_1000u64 >> 6).is_none());
+        assert!(l0[0].d.lookup_read(0x1000).is_none());
+        assert!(m.coherence.back_invalidations >= 1);
+    }
+
+    #[test]
+    fn contended_line_pingpong_costs_more_than_private() {
+        let (mut m, mut l0) = setup(2);
+        // Private line accesses after warmup are cheap.
+        m.data_access(&mut l0, 0, 0x1000, &tr(0x8000_1000), true);
+        let private = m.data_access(&mut l0, 0, 0x1000, &tr(0x8000_1000), true).cycles;
+        // Ping-pong writes on a contended line are expensive.
+        m.data_access(&mut l0, 1, 0x2000, &tr(0x8000_2000), true);
+        let pingpong = m.data_access(&mut l0, 0, 0x2000, &tr(0x8000_2000), true).cycles;
+        assert!(
+            pingpong > private + MemTiming::default().coherence_msg,
+            "pingpong {} vs private {}",
+            pingpong,
+            private
+        );
+    }
+}

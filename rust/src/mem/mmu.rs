@@ -1,0 +1,299 @@
+//! Sv39 virtual-memory page walker.
+//!
+//! The walker is the *functional* translation substrate. Timing (TLB
+//! hit/miss accounting) lives in the memory models (`mem::tlb_model`); both
+//! operate on the same walk results so the simulated TLB can never disagree
+//! with the architectural translation.
+
+use super::phys::PhysMem;
+use crate::isa::csr::Priv;
+
+/// Type of memory access being translated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AccessKind {
+    Read,
+    Write,
+    Execute,
+}
+
+/// PTE permission/attribute bits.
+pub mod pte {
+    pub const V: u64 = 1 << 0;
+    pub const R: u64 = 1 << 1;
+    pub const W: u64 = 1 << 2;
+    pub const X: u64 = 1 << 3;
+    pub const U: u64 = 1 << 4;
+    pub const G: u64 = 1 << 5;
+    pub const A: u64 = 1 << 6;
+    pub const D: u64 = 1 << 7;
+}
+
+/// satp register fields.
+pub mod satp {
+    pub const MODE_SHIFT: u32 = 60;
+    pub const MODE_BARE: u64 = 0;
+    pub const MODE_SV39: u64 = 8;
+    pub const PPN_MASK: u64 = (1 << 44) - 1;
+}
+
+pub const PAGE_SHIFT: u32 = 12;
+pub const PAGE_SIZE: u64 = 1 << PAGE_SHIFT;
+
+/// Successful translation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Translation {
+    /// Physical address corresponding to the *requested* vaddr.
+    pub paddr: u64,
+    /// Size of the mapping leaf (4K / 2M / 1G, or u64::MAX for bare mode).
+    pub page_size: u64,
+    /// May the page be written (given the current mode/SUM)?
+    pub writable: bool,
+    /// Number of page-table levels visited (0 for bare; 1-3 for Sv39).
+    /// Timing models charge one memory access per level on a TLB miss.
+    pub levels: u32,
+}
+
+/// Walk failure → page fault with the faulting access kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PageFault {
+    pub kind: AccessKind,
+}
+
+/// MMU translation context derived from hart CSRs.
+#[derive(Debug, Clone, Copy)]
+pub struct MmuCtx {
+    pub satp: u64,
+    /// Effective privilege for this access (after MPRV adjustments).
+    pub prv: Priv,
+    pub sum: bool,
+    pub mxr: bool,
+}
+
+impl MmuCtx {
+    /// Is address translation active for this context?
+    #[inline]
+    pub fn active(&self) -> bool {
+        self.prv != Priv::Machine && (self.satp >> satp::MODE_SHIFT) == satp::MODE_SV39
+    }
+}
+
+/// Translate `vaddr`; updates PTE A/D bits in memory (hardware-managed).
+pub fn translate(
+    phys: &PhysMem,
+    ctx: &MmuCtx,
+    vaddr: u64,
+    kind: AccessKind,
+) -> Result<Translation, PageFault> {
+    if !ctx.active() {
+        return Ok(Translation { paddr: vaddr, page_size: u64::MAX, writable: true, levels: 0 });
+    }
+
+    let fault = PageFault { kind };
+
+    // Canonical address check: bits 63..=39 must equal bit 38.
+    let ext = (vaddr as i64) >> 38;
+    if ext != 0 && ext != -1 {
+        return Err(fault);
+    }
+
+    let vpn = [(vaddr >> 12) & 0x1ff, (vaddr >> 21) & 0x1ff, (vaddr >> 30) & 0x1ff];
+    let mut table = (ctx.satp & satp::PPN_MASK) << PAGE_SHIFT;
+    let mut level: i32 = 2;
+    loop {
+        let pte_addr = table + vpn[level as usize] * 8;
+        if !phys.contains(pte_addr, 8) {
+            return Err(fault);
+        }
+        let entry = phys.read_u64(pte_addr);
+        if entry & pte::V == 0 || (entry & pte::W != 0 && entry & pte::R == 0) {
+            return Err(fault);
+        }
+        if entry & (pte::R | pte::X) == 0 {
+            // Non-leaf.
+            if level == 0 {
+                return Err(fault);
+            }
+            table = ((entry >> 10) & ((1 << 44) - 1)) << PAGE_SHIFT;
+            level -= 1;
+            continue;
+        }
+
+        // Leaf: permission checks.
+        let user_page = entry & pte::U != 0;
+        match ctx.prv {
+            Priv::User => {
+                if !user_page {
+                    return Err(fault);
+                }
+            }
+            Priv::Supervisor => {
+                if user_page && !(ctx.sum && kind != AccessKind::Execute) {
+                    return Err(fault);
+                }
+            }
+            Priv::Machine => {}
+        }
+        let ok = match kind {
+            AccessKind::Read => entry & pte::R != 0 || (ctx.mxr && entry & pte::X != 0),
+            AccessKind::Write => entry & pte::W != 0,
+            AccessKind::Execute => entry & pte::X != 0,
+        };
+        if !ok {
+            return Err(fault);
+        }
+
+        // Misaligned superpage?
+        let ppn = (entry >> 10) & ((1 << 44) - 1);
+        if level > 0 && ppn & ((1 << (9 * level as u64)) - 1) != 0 {
+            return Err(fault);
+        }
+
+        // A/D update (hardware-managed scheme).
+        let mut new_entry = entry | pte::A;
+        if kind == AccessKind::Write {
+            new_entry |= pte::D;
+        }
+        if new_entry != entry {
+            phys.write_u64(pte_addr, new_entry);
+        }
+
+        let page_size = PAGE_SIZE << (9 * level as u64);
+        let page_mask = page_size - 1;
+        let base = (ppn << PAGE_SHIFT) & !page_mask;
+        // Writability for L0 install: W permission reachable from this
+        // mode (write check would pass).
+        let writable = entry & pte::W != 0
+            && match ctx.prv {
+                Priv::User => user_page,
+                Priv::Supervisor => !user_page || ctx.sum,
+                Priv::Machine => true,
+            };
+        return Ok(Translation {
+            paddr: base | (vaddr & page_mask),
+            page_size,
+            writable,
+            levels: (3 - level) as u32,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::phys::DRAM_BASE;
+
+    /// Build a 3-level Sv39 table mapping one 4K page vaddr→paddr.
+    fn setup(phys: &PhysMem, vaddr: u64, paddr: u64, perms: u64) -> u64 {
+        let root = DRAM_BASE + 0x1000;
+        let l1 = DRAM_BASE + 0x2000;
+        let l0 = DRAM_BASE + 0x3000;
+        let vpn2 = (vaddr >> 30) & 0x1ff;
+        let vpn1 = (vaddr >> 21) & 0x1ff;
+        let vpn0 = (vaddr >> 12) & 0x1ff;
+        phys.write_u64(root + vpn2 * 8, ((l1 >> 12) << 10) | pte::V);
+        phys.write_u64(l1 + vpn1 * 8, ((l0 >> 12) << 10) | pte::V);
+        phys.write_u64(l0 + vpn0 * 8, ((paddr >> 12) << 10) | pte::V | perms);
+        (satp::MODE_SV39 << satp::MODE_SHIFT) | (root >> 12)
+    }
+
+    fn sctx(satp: u64) -> MmuCtx {
+        MmuCtx { satp, prv: Priv::Supervisor, sum: false, mxr: false }
+    }
+
+    #[test]
+    fn bare_mode_identity() {
+        let phys = PhysMem::new(DRAM_BASE, 0x10000);
+        let ctx = MmuCtx { satp: 0, prv: Priv::Supervisor, sum: false, mxr: false };
+        let t = translate(&phys, &ctx, 0x8000_1234, AccessKind::Read).unwrap();
+        assert_eq!(t.paddr, 0x8000_1234);
+        assert!(t.writable);
+        assert_eq!(t.levels, 0);
+    }
+
+    #[test]
+    fn machine_mode_ignores_satp() {
+        let phys = PhysMem::new(DRAM_BASE, 0x10000);
+        let satp = setup(&phys, 0x4000_0000, DRAM_BASE, pte::R);
+        let ctx = MmuCtx { satp, prv: Priv::Machine, sum: false, mxr: false };
+        assert_eq!(translate(&phys, &ctx, 0x1234, AccessKind::Write).unwrap().paddr, 0x1234);
+    }
+
+    #[test]
+    fn basic_4k_mapping() {
+        let phys = PhysMem::new(DRAM_BASE, 0x10000);
+        let va = 0x0000_0020_0000_3000u64; // canonical (bit 38 clear)
+        let satp = setup(&phys, va, DRAM_BASE + 0x5000, pte::R | pte::W | pte::A | pte::D);
+        let t = translate(&phys, &sctx(satp), va + 0x123, AccessKind::Read).unwrap();
+        assert_eq!(t.paddr, DRAM_BASE + 0x5123);
+        assert_eq!(t.page_size, 4096);
+        assert!(t.writable);
+        assert_eq!(t.levels, 3);
+    }
+
+    #[test]
+    fn perm_faults() {
+        let phys = PhysMem::new(DRAM_BASE, 0x10000);
+        let va = 0x4000_3000u64;
+        let satp = setup(&phys, va, DRAM_BASE + 0x5000, pte::R | pte::A);
+        assert!(translate(&phys, &sctx(satp), va, AccessKind::Read).is_ok());
+        assert!(translate(&phys, &sctx(satp), va, AccessKind::Write).is_err());
+        assert!(translate(&phys, &sctx(satp), va, AccessKind::Execute).is_err());
+        // writable flag must be false for an R-only page
+        assert!(!translate(&phys, &sctx(satp), va, AccessKind::Read).unwrap().writable);
+    }
+
+    #[test]
+    fn user_page_supervisor_sum() {
+        let phys = PhysMem::new(DRAM_BASE, 0x10000);
+        let va = 0x4000_3000u64;
+        let satp = setup(&phys, va, DRAM_BASE + 0x5000, pte::R | pte::U | pte::A);
+        assert!(translate(&phys, &sctx(satp), va, AccessKind::Read).is_err());
+        let ctx = MmuCtx { satp, prv: Priv::Supervisor, sum: true, mxr: false };
+        assert!(translate(&phys, &ctx, va, AccessKind::Read).is_ok());
+        let uctx = MmuCtx { satp, prv: Priv::User, sum: false, mxr: false };
+        assert!(translate(&phys, &uctx, va, AccessKind::Read).is_ok());
+    }
+
+    #[test]
+    fn ad_bits_updated() {
+        let phys = PhysMem::new(DRAM_BASE, 0x10000);
+        let va = 0x4000_3000u64;
+        let satp = setup(&phys, va, DRAM_BASE + 0x5000, pte::R | pte::W);
+        translate(&phys, &sctx(satp), va, AccessKind::Write).unwrap();
+        let l0 = DRAM_BASE + 0x3000;
+        let entry = phys.read_u64(l0 + ((va >> 12) & 0x1ff) * 8);
+        assert!(entry & pte::A != 0 && entry & pte::D != 0);
+    }
+
+    #[test]
+    fn gigapage() {
+        let phys = PhysMem::new(DRAM_BASE, 0x10000);
+        let root = DRAM_BASE + 0x1000;
+        let va = 0x8000_0000u64; // vpn2 = 2
+        // 1G leaf at level 2 mapping 0x8000_0000 -> 0x8000_0000 (ppn aligned to 2^18)
+        phys.write_u64(
+            root + 2 * 8,
+            ((0x8000_0000u64 >> 12) << 10) | pte::V | pte::R | pte::W | pte::X | pte::A | pte::D,
+        );
+        let satp = (satp::MODE_SV39 << satp::MODE_SHIFT) | (root >> 12);
+        let t = translate(&phys, &sctx(satp), va + 0x12_3456, AccessKind::Execute).unwrap();
+        assert_eq!(t.paddr, 0x8012_3456);
+        assert_eq!(t.page_size, 1 << 30);
+        assert_eq!(t.levels, 1);
+    }
+
+    #[test]
+    fn non_canonical_faults() {
+        let phys = PhysMem::new(DRAM_BASE, 0x10000);
+        let satp = setup(&phys, 0x4000_3000, DRAM_BASE, pte::R);
+        assert!(translate(&phys, &sctx(satp), 0x1234_5678_9abc_def0, AccessKind::Read).is_err());
+    }
+
+    #[test]
+    fn w_without_r_is_invalid() {
+        let phys = PhysMem::new(DRAM_BASE, 0x10000);
+        let va = 0x4000_3000u64;
+        let satp = setup(&phys, va, DRAM_BASE + 0x5000, pte::W);
+        assert!(translate(&phys, &sctx(satp), va, AccessKind::Write).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! Memory subsystem: guest DRAM, Sv39 MMU, the L0 fast-path caches, and
+//! the simulated memory models (Table 2: Atomic / TLB / Cache / MESI).
+
+pub mod cache_model;
+pub mod l0;
+pub mod mesi;
+pub mod mmu;
+pub mod model;
+pub mod phys;
+pub mod tlb_model;
+
+pub use l0::{L0DCache, L0ICache, L0Set};
+pub use mmu::{translate, AccessKind, MmuCtx, PageFault, Translation};
+pub use model::{AtomicModel, ColdAccess, MemTiming, MemoryModel, ModelStats};
+pub use phys::{PhysMem, DRAM_BASE};

@@ -1,0 +1,138 @@
+//! Memory-model interface (paper Table 2) and the `Atomic` model.
+//!
+//! Memory models run only on the *cold path* — an L0 miss. They simulate
+//! TLBs / caches / coherence, charge cycles, and decide whether the line may
+//! be installed into the requesting hart's L0 (maintaining the inclusion
+//! invariant of Fig 3: L0 ⊆ simulated TLB ∩ simulated L1).
+
+use super::l0::L0Set;
+use super::mmu::Translation;
+
+/// Timing parameters shared by the timing memory models. Values are
+/// cycle counts, loosely modelled on a small in-order SoC (and the RTL
+/// design the paper validated against).
+#[derive(Debug, Clone, Copy)]
+pub struct MemTiming {
+    /// L1 hit latency charged on the cold path (the L0 fast path charges
+    /// only the pipeline model's fixed load-use latency).
+    pub l1_hit: u64,
+    /// Shared L2 hit latency (MESI model).
+    pub l2_hit: u64,
+    /// DRAM access latency.
+    pub mem: u64,
+    /// Page-table walk cost per level on a simulated-TLB miss.
+    pub walk_per_level: u64,
+    /// Coherence message cost (invalidate/downgrade round trip).
+    pub coherence_msg: u64,
+}
+
+impl Default for MemTiming {
+    fn default() -> Self {
+        MemTiming { l1_hit: 2, l2_hit: 12, mem: 50, walk_per_level: 8, coherence_msg: 16 }
+    }
+}
+
+/// Result of a cold-path access.
+#[derive(Debug, Clone, Copy)]
+pub struct ColdAccess {
+    /// Extra cycles charged to the requesting hart.
+    pub cycles: u64,
+    /// Install the line into the hart's L0? `Some(writable)` to install.
+    /// Must only be `Some` if the access would be a hit were it replayed —
+    /// the inclusion invariant.
+    pub install: Option<bool>,
+}
+
+/// A named statistic reported by a model.
+pub type ModelStats = Vec<(&'static str, u64)>;
+
+/// Memory-model cold-path interface (Table 2 of the paper).
+pub trait MemoryModel: Send {
+    fn name(&self) -> &'static str;
+
+    /// Must all harts execute in lockstep for this model to be sound?
+    /// (MESI: yes. Atomic/TLB/Cache: private state only, so no.)
+    fn lockstep_required(&self) -> bool {
+        false
+    }
+
+    /// Data access on L0 miss. `write` covers stores, AMOs, LR/SC.
+    fn data_access(
+        &mut self,
+        l0: &mut [L0Set],
+        hart: usize,
+        vaddr: u64,
+        tr: &Translation,
+        write: bool,
+    ) -> ColdAccess;
+
+    /// Instruction fetch on L0 I-cache miss.
+    fn fetch_access(&mut self, l0: &mut [L0Set], hart: usize, vaddr: u64, tr: &Translation)
+        -> ColdAccess;
+
+    /// Flush per-hart simulated state (sfence.vma / satp write).
+    fn flush_hart(&mut self, _l0: &mut [L0Set], _hart: usize) {}
+
+    /// Flush all simulated state (model switch).
+    fn flush_all(&mut self, _l0: &mut [L0Set]) {}
+
+    /// Statistics snapshot for reporting.
+    fn stats(&self) -> ModelStats {
+        Vec::new()
+    }
+}
+
+/// `Atomic` memory model (Table 2): memory accesses are not tracked; every
+/// access is charged zero extra cycles and installs into L0 so subsequent
+/// accesses stay on the fast path. Parallel execution is allowed (§3.5).
+pub struct AtomicModel;
+
+impl MemoryModel for AtomicModel {
+    fn name(&self) -> &'static str {
+        "atomic"
+    }
+
+    fn data_access(
+        &mut self,
+        _l0: &mut [L0Set],
+        _hart: usize,
+        _vaddr: u64,
+        tr: &Translation,
+        write: bool,
+    ) -> ColdAccess {
+        // Install writable only if the translation permits writes; a
+        // read to a read-only page installs a read-only entry so a later
+        // store still reaches the cold path and faults.
+        let writable = tr.writable;
+        let _ = write;
+        ColdAccess { cycles: 0, install: Some(writable) }
+    }
+
+    fn fetch_access(
+        &mut self,
+        _l0: &mut [L0Set],
+        _hart: usize,
+        _vaddr: u64,
+        _tr: &Translation,
+    ) -> ColdAccess {
+        ColdAccess { cycles: 0, install: Some(false) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn atomic_model_installs() {
+        let mut m = AtomicModel;
+        let tr = Translation { paddr: 0x8000_0000, page_size: 4096, writable: true, levels: 3 };
+        let mut l0: Vec<L0Set> = Vec::new();
+        let r = m.data_access(&mut l0, 0, 0x1000, &tr, false);
+        assert_eq!(r.cycles, 0);
+        assert_eq!(r.install, Some(true));
+        let tr_ro = Translation { writable: false, ..tr };
+        assert_eq!(m.data_access(&mut l0, 0, 0x1000, &tr_ro, false).install, Some(false));
+        assert!(!m.lockstep_required());
+    }
+}

@@ -1,0 +1,272 @@
+//! Guest physical DRAM.
+//!
+//! A flat allocation at a configurable base (default `0x8000_0000`, the
+//! conventional RISC-V DRAM base). All aligned accesses go through relaxed
+//! atomics so the *functional-parallel* execution mode (paper §3.5: "atomic"
+//! memory model permits parallel execution) can share the DRAM between hart
+//! threads without data-race UB; on x86-64 hosts relaxed atomic loads/stores
+//! compile to plain moves, so the lockstep hot path pays nothing for this.
+
+use std::sync::atomic::{AtomicU16, AtomicU32, AtomicU64, AtomicU8, Ordering};
+
+/// Default guest DRAM base address.
+pub const DRAM_BASE: u64 = 0x8000_0000;
+
+/// Guest physical memory.
+pub struct PhysMem {
+    mem: Box<[AtomicU8]>,
+    base: u64,
+}
+
+// AtomicU8 is Sync; the Box is Send. Explicit impls not required.
+
+impl PhysMem {
+    /// Allocate `size` bytes of DRAM at physical address `base`.
+    pub fn new(base: u64, size: usize) -> PhysMem {
+        let mut v = Vec::with_capacity(size);
+        v.resize_with(size, || AtomicU8::new(0));
+        PhysMem { mem: v.into_boxed_slice(), base }
+    }
+
+    #[inline(always)]
+    pub fn base(&self) -> u64 {
+        self.base
+    }
+
+    #[inline(always)]
+    pub fn size(&self) -> u64 {
+        self.mem.len() as u64
+    }
+
+    /// Does `[paddr, paddr+len)` lie entirely in DRAM?
+    #[inline(always)]
+    pub fn contains(&self, paddr: u64, len: u64) -> bool {
+        paddr >= self.base
+            && len <= self.size()
+            && match paddr.checked_add(len) {
+                Some(end) => end <= self.base + self.size(),
+                None => false,
+            }
+    }
+
+    #[inline(always)]
+    fn idx(&self, paddr: u64) -> usize {
+        debug_assert!(self.contains(paddr, 1), "paddr {:#x} out of DRAM", paddr);
+        (paddr - self.base) as usize
+    }
+
+    // ---- aligned atomic accessors (hot path) -------------------------------
+
+    #[inline(always)]
+    pub fn read_u8(&self, paddr: u64) -> u8 {
+        self.mem[self.idx(paddr)].load(Ordering::Relaxed)
+    }
+
+    #[inline(always)]
+    pub fn write_u8(&self, paddr: u64, v: u8) {
+        self.mem[self.idx(paddr)].store(v, Ordering::Relaxed);
+    }
+
+    #[inline(always)]
+    pub fn read_u16(&self, paddr: u64) -> u16 {
+        let i = self.idx(paddr);
+        if paddr & 1 == 0 {
+            debug_assert!(self.contains(paddr, 2));
+            // SAFETY: in-bounds (checked), aligned, AtomicU8 array reinterpreted
+            // as AtomicU16 — same layout, atomic ops valid on any memory.
+            unsafe { (*(self.mem.as_ptr().add(i) as *const AtomicU16)).load(Ordering::Relaxed) }
+        } else {
+            u16::from_le_bytes([self.read_u8(paddr), self.read_u8(paddr + 1)])
+        }
+    }
+
+    #[inline(always)]
+    pub fn write_u16(&self, paddr: u64, v: u16) {
+        let i = self.idx(paddr);
+        if paddr & 1 == 0 {
+            debug_assert!(self.contains(paddr, 2));
+            unsafe { (*(self.mem.as_ptr().add(i) as *const AtomicU16)).store(v, Ordering::Relaxed) }
+        } else {
+            let b = v.to_le_bytes();
+            self.write_u8(paddr, b[0]);
+            self.write_u8(paddr + 1, b[1]);
+        }
+    }
+
+    #[inline(always)]
+    pub fn read_u32(&self, paddr: u64) -> u32 {
+        let i = self.idx(paddr);
+        if paddr & 3 == 0 {
+            debug_assert!(self.contains(paddr, 4));
+            unsafe { (*(self.mem.as_ptr().add(i) as *const AtomicU32)).load(Ordering::Relaxed) }
+        } else {
+            let mut b = [0u8; 4];
+            for (k, byte) in b.iter_mut().enumerate() {
+                *byte = self.read_u8(paddr + k as u64);
+            }
+            u32::from_le_bytes(b)
+        }
+    }
+
+    #[inline(always)]
+    pub fn write_u32(&self, paddr: u64, v: u32) {
+        let i = self.idx(paddr);
+        if paddr & 3 == 0 {
+            debug_assert!(self.contains(paddr, 4));
+            unsafe { (*(self.mem.as_ptr().add(i) as *const AtomicU32)).store(v, Ordering::Relaxed) }
+        } else {
+            for (k, byte) in v.to_le_bytes().iter().enumerate() {
+                self.write_u8(paddr + k as u64, *byte);
+            }
+        }
+    }
+
+    #[inline(always)]
+    pub fn read_u64(&self, paddr: u64) -> u64 {
+        let i = self.idx(paddr);
+        if paddr & 7 == 0 {
+            debug_assert!(self.contains(paddr, 8));
+            unsafe { (*(self.mem.as_ptr().add(i) as *const AtomicU64)).load(Ordering::Relaxed) }
+        } else {
+            let mut b = [0u8; 8];
+            for (k, byte) in b.iter_mut().enumerate() {
+                *byte = self.read_u8(paddr + k as u64);
+            }
+            u64::from_le_bytes(b)
+        }
+    }
+
+    #[inline(always)]
+    pub fn write_u64(&self, paddr: u64, v: u64) {
+        let i = self.idx(paddr);
+        if paddr & 7 == 0 {
+            debug_assert!(self.contains(paddr, 8));
+            unsafe { (*(self.mem.as_ptr().add(i) as *const AtomicU64)).store(v, Ordering::Relaxed) }
+        } else {
+            for (k, byte) in v.to_le_bytes().iter().enumerate() {
+                self.write_u8(paddr + k as u64, *byte);
+            }
+        }
+    }
+
+    // ---- sequentially-consistent atomics for AMO / LR / SC -----------------
+
+    /// Atomic 32-bit compare-exchange (for SC and parallel-mode AMOs).
+    pub fn cas_u32(&self, paddr: u64, expect: u32, new: u32) -> Result<u32, u32> {
+        assert!(paddr & 3 == 0 && self.contains(paddr, 4));
+        let i = self.idx(paddr);
+        unsafe {
+            (*(self.mem.as_ptr().add(i) as *const AtomicU32)).compare_exchange(
+                expect,
+                new,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            )
+        }
+    }
+
+    /// Atomic 64-bit compare-exchange.
+    pub fn cas_u64(&self, paddr: u64, expect: u64, new: u64) -> Result<u64, u64> {
+        assert!(paddr & 7 == 0 && self.contains(paddr, 8));
+        let i = self.idx(paddr);
+        unsafe {
+            (*(self.mem.as_ptr().add(i) as *const AtomicU64)).compare_exchange(
+                expect,
+                new,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            )
+        }
+    }
+
+    /// SeqCst 32-bit load (LR in parallel mode).
+    pub fn load_acq_u32(&self, paddr: u64) -> u32 {
+        assert!(paddr & 3 == 0 && self.contains(paddr, 4));
+        let i = self.idx(paddr);
+        unsafe { (*(self.mem.as_ptr().add(i) as *const AtomicU32)).load(Ordering::SeqCst) }
+    }
+
+    /// SeqCst 64-bit load.
+    pub fn load_acq_u64(&self, paddr: u64) -> u64 {
+        assert!(paddr & 7 == 0 && self.contains(paddr, 8));
+        let i = self.idx(paddr);
+        unsafe { (*(self.mem.as_ptr().add(i) as *const AtomicU64)).load(Ordering::SeqCst) }
+    }
+
+    // ---- bulk ----------------------------------------------------------------
+
+    /// Copy `data` into DRAM at `paddr` (image loading).
+    pub fn load_image(&self, paddr: u64, data: &[u8]) {
+        assert!(
+            self.contains(paddr, data.len() as u64),
+            "image [{:#x}, +{:#x}) outside DRAM",
+            paddr,
+            data.len()
+        );
+        for (k, b) in data.iter().enumerate() {
+            self.write_u8(paddr + k as u64, *b);
+        }
+    }
+
+    /// Read `len` bytes starting at `paddr`.
+    pub fn read_bytes(&self, paddr: u64, len: usize) -> Vec<u8> {
+        (0..len).map(|k| self.read_u8(paddr + k as u64)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rw_roundtrip() {
+        let m = PhysMem::new(DRAM_BASE, 64 * 1024);
+        m.write_u64(DRAM_BASE, 0x0123_4567_89ab_cdef);
+        assert_eq!(m.read_u64(DRAM_BASE), 0x0123_4567_89ab_cdef);
+        assert_eq!(m.read_u32(DRAM_BASE), 0x89ab_cdef);
+        assert_eq!(m.read_u16(DRAM_BASE + 4), 0x4567);
+        assert_eq!(m.read_u8(DRAM_BASE + 7), 0x01);
+    }
+
+    #[test]
+    fn unaligned_access() {
+        let m = PhysMem::new(DRAM_BASE, 4096);
+        m.write_u64(DRAM_BASE + 1, 0x1122_3344_5566_7788);
+        assert_eq!(m.read_u64(DRAM_BASE + 1), 0x1122_3344_5566_7788);
+        m.write_u32(DRAM_BASE + 6, 0xaabb_ccdd);
+        assert_eq!(m.read_u32(DRAM_BASE + 6), 0xaabb_ccdd);
+    }
+
+    #[test]
+    fn little_endian_layout() {
+        let m = PhysMem::new(0, 16);
+        m.write_u32(0, 0x0403_0201);
+        assert_eq!(m.read_u8(0), 1);
+        assert_eq!(m.read_u8(3), 4);
+    }
+
+    #[test]
+    fn contains_bounds() {
+        let m = PhysMem::new(DRAM_BASE, 4096);
+        assert!(m.contains(DRAM_BASE, 4096));
+        assert!(!m.contains(DRAM_BASE, 4097));
+        assert!(!m.contains(DRAM_BASE - 1, 1));
+        assert!(!m.contains(u64::MAX, 8)); // overflow must not wrap into range
+    }
+
+    #[test]
+    fn cas() {
+        let m = PhysMem::new(0, 64);
+        m.write_u64(8, 5);
+        assert_eq!(m.cas_u64(8, 5, 9), Ok(5));
+        assert_eq!(m.read_u64(8), 9);
+        assert_eq!(m.cas_u64(8, 5, 11), Err(9));
+    }
+
+    #[test]
+    fn image_load() {
+        let m = PhysMem::new(DRAM_BASE, 4096);
+        m.load_image(DRAM_BASE + 16, &[1, 2, 3, 4]);
+        assert_eq!(m.read_bytes(DRAM_BASE + 16, 4), vec![1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,271 @@
+//! `TLB` memory model (Table 2): collects TLB hit rates; caches are not
+//! simulated.
+//!
+//! Follows the authors' earlier fast-TLB-simulation scheme [Guo & Mullins,
+//! CARRV 2019] that R2VM §3.4.1 builds on: the simulated L1 I/D TLBs are
+//! set-associative; the inclusion invariant requires every L0 entry to be
+//! covered by a simulated D-TLB entry, so evicting a TLB entry flushes the
+//! corresponding virtual page from that hart's L0.
+//!
+//! Replacement is FIFO — with the L0 fast path the model does not observe
+//! every access, so recency-based policies would be skewed (paper §3.4.1
+//! calls this out as the accepted accuracy trade-off).
+
+use super::l0::L0Set;
+use super::mmu::Translation;
+use super::model::{ColdAccess, MemTiming, MemoryModel, ModelStats};
+
+const EMPTY: u64 = u64::MAX;
+
+/// One set-associative TLB (tags are 4K-page VPNs; superpages are tracked
+/// at 4K granularity — a simplification documented in DESIGN.md).
+pub struct SimTlb {
+    sets: usize,
+    ways: usize,
+    tags: Vec<u64>,
+    fifo: Vec<u8>,
+    pub accesses: u64,
+    pub hits: u64,
+}
+
+impl SimTlb {
+    pub fn new(sets: usize, ways: usize) -> SimTlb {
+        assert!(sets.is_power_of_two());
+        SimTlb { sets, ways, tags: vec![EMPTY; sets * ways], fifo: vec![0; sets], accesses: 0, hits: 0 }
+    }
+
+    #[inline]
+    fn set_of(&self, vpn: u64) -> usize {
+        (vpn as usize) & (self.sets - 1)
+    }
+
+    /// Probe for `vpn`; returns true on hit.
+    pub fn probe(&mut self, vpn: u64) -> bool {
+        self.accesses += 1;
+        let s = self.set_of(vpn);
+        for w in 0..self.ways {
+            if self.tags[s * self.ways + w] == vpn {
+                self.hits += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Insert `vpn`, returning the evicted VPN if a valid entry was displaced.
+    pub fn insert(&mut self, vpn: u64) -> Option<u64> {
+        let s = self.set_of(vpn);
+        // Prefer an empty way.
+        for w in 0..self.ways {
+            if self.tags[s * self.ways + w] == EMPTY {
+                self.tags[s * self.ways + w] = vpn;
+                return None;
+            }
+        }
+        let w = self.fifo[s] as usize % self.ways;
+        self.fifo[s] = self.fifo[s].wrapping_add(1);
+        let victim = self.tags[s * self.ways + w];
+        self.tags[s * self.ways + w] = vpn;
+        Some(victim)
+    }
+
+    pub fn flush(&mut self) {
+        self.tags.fill(EMPTY);
+        self.fifo.fill(0);
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.accesses as f64
+        }
+    }
+}
+
+/// Per-hart I/D TLB pair.
+struct HartTlbs {
+    itlb: SimTlb,
+    dtlb: SimTlb,
+}
+
+/// The `TLB` memory model.
+pub struct TlbModel {
+    harts: Vec<HartTlbs>,
+    timing: MemTiming,
+}
+
+impl TlbModel {
+    /// Default geometry: 32-entry fully-associative-ish (8 sets × 4 ways)
+    /// D-TLB and I-TLB per hart.
+    pub fn new(num_harts: usize, timing: MemTiming) -> TlbModel {
+        TlbModel {
+            harts: (0..num_harts)
+                .map(|_| HartTlbs { itlb: SimTlb::new(8, 4), dtlb: SimTlb::new(8, 4) })
+                .collect(),
+            timing,
+        }
+    }
+
+    pub fn with_geometry(
+        num_harts: usize,
+        timing: MemTiming,
+        sets: usize,
+        ways: usize,
+    ) -> TlbModel {
+        TlbModel {
+            harts: (0..num_harts)
+                .map(|_| HartTlbs { itlb: SimTlb::new(sets, ways), dtlb: SimTlb::new(sets, ways) })
+                .collect(),
+            timing,
+        }
+    }
+
+    pub fn dtlb_hit_rate(&self, hart: usize) -> f64 {
+        self.harts[hart].dtlb.hit_rate()
+    }
+
+    pub fn itlb_hit_rate(&self, hart: usize) -> f64 {
+        self.harts[hart].itlb.hit_rate()
+    }
+}
+
+impl MemoryModel for TlbModel {
+    fn name(&self) -> &'static str {
+        "tlb"
+    }
+
+    fn data_access(
+        &mut self,
+        l0: &mut [L0Set],
+        hart: usize,
+        vaddr: u64,
+        tr: &Translation,
+        _write: bool,
+    ) -> ColdAccess {
+        // Bare (no-translation) accesses bypass the TLB entirely.
+        if tr.levels == 0 {
+            return ColdAccess { cycles: 0, install: Some(tr.writable) };
+        }
+        let vpn = vaddr >> 12;
+        let tlbs = &mut self.harts[hart];
+        if tlbs.dtlb.probe(vpn) {
+            // TLB-hit latency is part of the pipeline's load latency.
+            ColdAccess { cycles: 0, install: Some(tr.writable) }
+        } else {
+            let walk = self.timing.walk_per_level * tr.levels as u64;
+            if let Some(victim) = tlbs.dtlb.insert(vpn) {
+                // Inclusion invariant: L0 entries covered by the evicted
+                // TLB entry must be flushed (Fig 3).
+                l0[hart].d.invalidate_vpage(victim << 12);
+            }
+            ColdAccess { cycles: walk, install: Some(tr.writable) }
+        }
+    }
+
+    fn fetch_access(
+        &mut self,
+        l0: &mut [L0Set],
+        hart: usize,
+        vaddr: u64,
+        tr: &Translation,
+    ) -> ColdAccess {
+        if tr.levels == 0 {
+            return ColdAccess { cycles: 0, install: Some(false) };
+        }
+        let vpn = vaddr >> 12;
+        let tlbs = &mut self.harts[hart];
+        if tlbs.itlb.probe(vpn) {
+            ColdAccess { cycles: 0, install: Some(false) }
+        } else {
+            let walk = self.timing.walk_per_level * tr.levels as u64;
+            if let Some(victim) = tlbs.itlb.insert(vpn) {
+                l0[hart].i.invalidate_vpage(victim << 12);
+            }
+            ColdAccess { cycles: walk, install: Some(false) }
+        }
+    }
+
+    fn flush_hart(&mut self, l0: &mut [L0Set], hart: usize) {
+        self.harts[hart].itlb.flush();
+        self.harts[hart].dtlb.flush();
+        l0[hart].clear();
+    }
+
+    fn flush_all(&mut self, l0: &mut [L0Set]) {
+        for (h, t) in self.harts.iter_mut().enumerate() {
+            t.itlb.flush();
+            t.dtlb.flush();
+            l0[h].clear();
+        }
+    }
+
+    fn stats(&self) -> ModelStats {
+        let mut v = Vec::new();
+        let (mut da, mut dh, mut ia, mut ih) = (0, 0, 0, 0);
+        for t in &self.harts {
+            da += t.dtlb.accesses;
+            dh += t.dtlb.hits;
+            ia += t.itlb.accesses;
+            ih += t.itlb.hits;
+        }
+        v.push(("dtlb_cold_accesses", da));
+        v.push(("dtlb_hits", dh));
+        v.push(("itlb_cold_accesses", ia));
+        v.push(("itlb_hits", ih));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tlb_probe_insert() {
+        let mut t = SimTlb::new(4, 2);
+        assert!(!t.probe(0x10));
+        assert_eq!(t.insert(0x10), None);
+        assert!(t.probe(0x10));
+        // fill the set of vpn 0x10 (set = 0x10 & 3 = 0): 0x14 also set 0
+        assert_eq!(t.insert(0x14), None);
+        // next insert in set 0 must evict FIFO-first (0x10)
+        assert_eq!(t.insert(0x18), Some(0x10));
+        assert!(!t.probe(0x10));
+        assert!(t.probe(0x14) && t.probe(0x18));
+    }
+
+    #[test]
+    fn model_miss_then_hit() {
+        let mut m = TlbModel::new(1, MemTiming::default());
+        let mut l0 = vec![L0Set::new(6)];
+        let tr = Translation { paddr: 0x8000_0000, page_size: 4096, writable: true, levels: 3 };
+        let miss = m.data_access(&mut l0, 0, 0x4000_0000, &tr, false);
+        let hit = m.data_access(&mut l0, 0, 0x4000_0008, &tr, false);
+        assert!(miss.cycles > hit.cycles);
+        assert_eq!(m.harts[0].dtlb.hits, 1);
+    }
+
+    #[test]
+    fn eviction_flushes_l0_page() {
+        let timing = MemTiming::default();
+        let mut m = TlbModel::with_geometry(1, timing, 1, 1); // 1-entry DTLB
+        let mut l0 = vec![L0Set::new(6)];
+        let tr = Translation { paddr: 0x8000_0000, page_size: 4096, writable: true, levels: 3 };
+        m.data_access(&mut l0, 0, 0x1000, &tr, false);
+        l0[0].d.insert(0x1000, 0x8000_0000, true);
+        assert!(l0[0].d.lookup_read(0x1000).is_some());
+        // Insert a different page: evicts vpn 1, must flush L0 page 1.
+        m.data_access(&mut l0, 0, 0x2000, &tr, false);
+        assert!(l0[0].d.lookup_read(0x1000).is_none());
+    }
+
+    #[test]
+    fn bare_mode_skips_tlb() {
+        let mut m = TlbModel::new(1, MemTiming::default());
+        let mut l0 = vec![L0Set::new(6)];
+        let tr = Translation { paddr: 0x8000_0000, page_size: u64::MAX, writable: true, levels: 0 };
+        m.data_access(&mut l0, 0, 0x8000_0000, &tr, false);
+        assert_eq!(m.harts[0].dtlb.accesses, 0);
+    }
+}

@@ -1,0 +1,278 @@
+//! `InOrder` pipeline model (Table 1): a classic 5-stage in-order scalar
+//! pipeline with a static branch predictor, modelled entirely at
+//! translation time (§3.2).
+//!
+//! Captured behaviours (validated against `refsim`, the per-cycle
+//! reference — experiment E1):
+//!  * base CPI of 1;
+//!  * load-use hazard: a consumer issuing in the load's shadow stalls
+//!    (load-to-use latency 2 ⇒ 1 bubble);
+//!  * multiplier latency 3 (pipelined; consumers stall up to 2);
+//!  * unpipelined divider: occupies EX for its full latency;
+//!  * static branch prediction — backward taken, forward not-taken;
+//!    correctly-predicted taken branches still pay 1 redirect bubble
+//!    (target computed in decode), mispredictions pay 2 (resolve in EX);
+//!  * `jal` redirects in decode (+1); `jalr` resolves in EX (+2);
+//!  * branch/jump into a misaligned (non-4-byte-aligned) 4-byte
+//!    instruction costs one extra fetch cycle (§3.2).
+
+use super::{load_use_latency, muldiv_latency, PipelineModel};
+use crate::dbt::compiler::DbtCompiler;
+use crate::isa::op::{MulOp, Op};
+
+/// Misprediction penalty (branch resolves in EX; IF+ID flushed).
+const MISPREDICT: u32 = 2;
+/// Correctly-predicted-taken redirect bubble (target from ID).
+const REDIRECT: u32 = 1;
+
+pub struct InOrderModel {
+    /// Destination register with an outstanding long-latency result.
+    hazard_reg: Option<u8>,
+    /// Issue slots remaining until `hazard_reg` is ready.
+    hazard_delay: u32,
+    /// Operand stall computed by the last `after_instruction` call (reused
+    /// by `after_taken_branch` for the same instruction).
+    last_stall: u32,
+}
+
+impl Default for InOrderModel {
+    fn default() -> Self {
+        InOrderModel { hazard_reg: None, hazard_delay: 0, last_stall: 0 }
+    }
+}
+
+impl InOrderModel {
+    /// Stall cycles the current op suffers from an outstanding result.
+    fn stall_for(&self, op: &Op) -> u32 {
+        if self.hazard_delay == 0 {
+            return 0;
+        }
+        if let Some(r) = self.hazard_reg {
+            let (s1, s2) = op.srcs();
+            if s1 == Some(r) || s2 == Some(r) {
+                return self.hazard_delay;
+            }
+        }
+        0
+    }
+
+    /// Consume `slots` issue slots (instruction + its stalls).
+    fn advance(&mut self, slots: u32) {
+        self.hazard_delay = self.hazard_delay.saturating_sub(slots);
+        if self.hazard_delay == 0 {
+            self.hazard_reg = None;
+        }
+    }
+
+    /// Record a new long-latency producer.
+    fn produce(&mut self, op: &Op) {
+        match *op {
+            Op::Load { width, rd, .. } if rd != 0 => {
+                self.hazard_reg = Some(rd);
+                self.hazard_delay = load_use_latency(width) - 1;
+            }
+            Op::Lr { rd, .. } | Op::Amo { rd, .. } if rd != 0 => {
+                self.hazard_reg = Some(rd);
+                self.hazard_delay = 1;
+            }
+            Op::Mul { op: mop, rd, .. } if rd != 0 => {
+                match mop {
+                    MulOp::Mul | MulOp::Mulh | MulOp::Mulhsu | MulOp::Mulhu => {
+                        self.hazard_reg = Some(rd);
+                        self.hazard_delay = muldiv_latency(mop) - 1;
+                    }
+                    // Divider is unpipelined: its full latency is charged
+                    // to the instruction itself (no residual hazard).
+                    _ => {}
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Static prediction: backward conditional branches predicted taken.
+    fn predicted_taken(op: &Op) -> bool {
+        matches!(op, Op::Branch { imm, .. } if *imm < 0)
+    }
+
+    /// Extra fetch cycle when the control transfer lands on a
+    /// non-4-byte-aligned address (§3.2).
+    fn target_misalign_penalty(target: u64) -> u32 {
+        (target & 3 != 0) as u32
+    }
+}
+
+impl PipelineModel for InOrderModel {
+    fn name(&self) -> &'static str {
+        "inorder"
+    }
+
+    fn block_start(&mut self, _compiler: &mut DbtCompiler) {
+        // Hazard state cannot be carried across block boundaries: cycle
+        // counts are baked into the translation, which is shared across
+        // every path reaching this block. Assuming a clean pipeline at
+        // block entry is the (small) accuracy loss the paper accepts for
+        // translation-time modelling.
+        self.hazard_reg = None;
+        self.hazard_delay = 0;
+        self.last_stall = 0;
+    }
+
+    fn after_instruction(&mut self, compiler: &mut DbtCompiler, op: &Op, _compressed: bool) {
+        let stall = self.stall_for(op);
+        self.last_stall = stall;
+        let mut cycles = 1 + stall;
+
+        // Unpipelined divider occupies EX for its full latency.
+        if let Op::Mul { op: mop, .. } = op {
+            if matches!(mop, MulOp::Div | MulOp::Divu | MulOp::Rem | MulOp::Remu) {
+                cycles += muldiv_latency(*mop) - 1;
+            }
+        }
+
+        // Not-taken outcome of a predicted-taken (backward) branch is a
+        // misprediction.
+        if let Op::Branch { .. } = op {
+            if Self::predicted_taken(op) {
+                cycles += MISPREDICT;
+            }
+        }
+
+        compiler.insert_cycle_count(cycles);
+        self.advance(cycles);
+        self.produce(op);
+    }
+
+    fn after_taken_branch(&mut self, compiler: &mut DbtCompiler, op: &Op, _compressed: bool) {
+        // Taken-path alternative for the same instruction: base + operand
+        // stall (already computed) + control penalty.
+        let mut cycles = 1 + self.last_stall;
+        match *op {
+            Op::Branch { imm, .. } => {
+                let target = compiler.cur_pc.wrapping_add(imm as i64 as u64);
+                cycles += if Self::predicted_taken(op) { REDIRECT } else { MISPREDICT };
+                cycles += Self::target_misalign_penalty(target);
+            }
+            Op::Jal { imm, .. } => {
+                let target = compiler.cur_pc.wrapping_add(imm as i64 as u64);
+                cycles += REDIRECT + Self::target_misalign_penalty(target);
+            }
+            Op::Jalr { .. } => {
+                // Indirect target resolves in EX; alignment unknown at
+                // translation time (charged as aligned).
+                cycles += MISPREDICT;
+            }
+            _ => {}
+        }
+        compiler.insert_cycle_count(cycles);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::op::*;
+
+    fn cycles_of(model: &mut InOrderModel, op: Op) -> u32 {
+        let mut c = DbtCompiler::new(0x1000);
+        model.after_instruction(&mut c, &op, false);
+        c.take_cycles()
+    }
+
+    fn taken_cycles_of(model: &mut InOrderModel, op: Op, pc: u64) -> u32 {
+        let mut c = DbtCompiler::new(pc);
+        c.cur_pc = pc;
+        model.after_instruction(&mut c, &op, false);
+        c.take_cycles();
+        model.after_taken_branch(&mut c, &op, false);
+        c.take_cycles()
+    }
+
+    #[test]
+    fn base_cpi_one() {
+        let mut m = InOrderModel::default();
+        let add = Op::Alu { op: AluOp::Add, word: false, rd: 1, rs1: 2, rs2: 3 };
+        assert_eq!(cycles_of(&mut m, add), 1);
+    }
+
+    #[test]
+    fn load_use_hazard_stalls() {
+        let mut m = InOrderModel::default();
+        let ld = Op::Load { width: MemWidth::D, signed: true, rd: 5, rs1: 2, imm: 0 };
+        assert_eq!(cycles_of(&mut m, ld), 1);
+        // Immediate consumer: 1 bubble.
+        let use_ = Op::Alu { op: AluOp::Add, word: false, rd: 6, rs1: 5, rs2: 0 };
+        assert_eq!(cycles_of(&mut m, use_), 2);
+        // After the stall the register is ready.
+        assert_eq!(cycles_of(&mut m, use_), 1);
+    }
+
+    #[test]
+    fn load_then_unrelated_then_use_no_stall() {
+        let mut m = InOrderModel::default();
+        let ld = Op::Load { width: MemWidth::D, signed: true, rd: 5, rs1: 2, imm: 0 };
+        let unrelated = Op::Alu { op: AluOp::Add, word: false, rd: 7, rs1: 8, rs2: 9 };
+        let use_ = Op::Alu { op: AluOp::Add, word: false, rd: 6, rs1: 5, rs2: 0 };
+        cycles_of(&mut m, ld);
+        assert_eq!(cycles_of(&mut m, unrelated), 1);
+        assert_eq!(cycles_of(&mut m, use_), 1, "gap of one instruction hides the load latency");
+    }
+
+    #[test]
+    fn mul_latency_and_div_unpipelined() {
+        let mut m = InOrderModel::default();
+        let mul = Op::Mul { op: MulOp::Mul, word: false, rd: 5, rs1: 1, rs2: 2 };
+        assert_eq!(cycles_of(&mut m, mul), 1);
+        let use_ = Op::Alu { op: AluOp::Add, word: false, rd: 6, rs1: 5, rs2: 0 };
+        assert_eq!(cycles_of(&mut m, use_), 3, "mul consumer stalls 2");
+        let mut m = InOrderModel::default();
+        let div = Op::Mul { op: MulOp::Div, word: false, rd: 5, rs1: 1, rs2: 2 };
+        assert_eq!(cycles_of(&mut m, div), 20);
+    }
+
+    #[test]
+    fn static_prediction_backward_taken() {
+        // Backward branch, taken: predicted correctly → 1 + redirect = 2.
+        let mut m = InOrderModel::default();
+        let back = Op::Branch { cond: BrCond::Ne, rs1: 1, rs2: 0, imm: -16 };
+        assert_eq!(taken_cycles_of(&mut m, back, 0x1000), 2);
+        // Backward branch, not taken: mispredicted → 1 + 2 = 3.
+        let mut m = InOrderModel::default();
+        assert_eq!(cycles_of(&mut m, back), 3);
+        // Forward branch, not taken: predicted correctly → 1.
+        let fwd = Op::Branch { cond: BrCond::Eq, rs1: 1, rs2: 0, imm: 16 };
+        let mut m = InOrderModel::default();
+        assert_eq!(cycles_of(&mut m, fwd), 1);
+        // Forward branch, taken: mispredicted → 1 + 2 = 3.
+        let mut m = InOrderModel::default();
+        assert_eq!(taken_cycles_of(&mut m, fwd, 0x1000), 3);
+    }
+
+    #[test]
+    fn misaligned_target_penalty() {
+        let mut m = InOrderModel::default();
+        // jal to a 2-mod-4 target: +1 fetch cycle on top of redirect.
+        let jal_misaligned = Op::Jal { rd: 0, imm: 0x12 };
+        assert_eq!(taken_cycles_of(&mut m, jal_misaligned, 0x1000), 3);
+        let jal_aligned = Op::Jal { rd: 0, imm: 0x10 };
+        assert_eq!(taken_cycles_of(&mut m, jal_aligned, 0x1000), 2);
+    }
+
+    #[test]
+    fn jalr_pays_full_redirect() {
+        let mut m = InOrderModel::default();
+        let jalr = Op::Jalr { rd: 1, rs1: 5, imm: 0 };
+        assert_eq!(taken_cycles_of(&mut m, jalr, 0x1000), 3);
+    }
+
+    #[test]
+    fn block_start_clears_hazards() {
+        let mut m = InOrderModel::default();
+        let ld = Op::Load { width: MemWidth::D, signed: true, rd: 5, rs1: 2, imm: 0 };
+        cycles_of(&mut m, ld);
+        let mut c = DbtCompiler::new(0);
+        m.block_start(&mut c);
+        let use_ = Op::Alu { op: AluOp::Add, word: false, rd: 6, rs1: 5, rs2: 0 };
+        assert_eq!(cycles_of(&mut m, use_), 1);
+    }
+}

@@ -1,0 +1,141 @@
+//! Pipeline models (paper Table 1): Atomic / Simple / InOrder.
+//!
+//! A pipeline model's hooks run at *translation* time (§3.2, Listing 1):
+//! they inspect each instruction as the DBT compiler translates it and call
+//! [`DbtCompiler::insert_cycle_count`] to bake the instruction's cycle cost
+//! into the micro-op trace. No model code runs during simulation.
+
+use crate::dbt::compiler::DbtCompiler;
+use crate::isa::op::{MemWidth, MulOp, Op};
+
+pub mod inorder;
+
+pub use inorder::InOrderModel;
+
+/// Pipeline model hook interface (paper Listing 1).
+pub trait PipelineModel: Send {
+    fn name(&self) -> &'static str;
+
+    /// Called when translation of a new block begins (reset any
+    /// intra-block state such as hazard tracking).
+    fn block_start(&mut self, _compiler: &mut DbtCompiler) {}
+
+    /// Called after each instruction is translated; insert the cycle count
+    /// for the sequential (not-taken) execution of `op`.
+    fn after_instruction(&mut self, compiler: &mut DbtCompiler, op: &Op, compressed: bool);
+
+    /// Called for potential control transfers; insert *additional* cycles
+    /// charged when the branch/jump is taken (misprediction/redirect
+    /// penalties).
+    fn after_taken_branch(&mut self, compiler: &mut DbtCompiler, op: &Op, compressed: bool);
+
+    /// Does this model track cycle counts at all? (Atomic: no — §3.5
+    /// pairs it with the atomic memory model for QEMU-style functional
+    /// simulation and parallel execution.)
+    fn tracks_cycles(&self) -> bool {
+        true
+    }
+}
+
+/// `Atomic` pipeline model (Table 1): cycle count not tracked. Every
+/// instruction costs 0 cycles; the engine advances a nominal retired-
+/// instruction clock instead.
+#[derive(Default)]
+pub struct AtomicPipeline;
+
+impl PipelineModel for AtomicPipeline {
+    fn name(&self) -> &'static str {
+        "atomic"
+    }
+
+    fn after_instruction(&mut self, _compiler: &mut DbtCompiler, _op: &Op, _compressed: bool) {}
+
+    fn after_taken_branch(&mut self, _compiler: &mut DbtCompiler, _op: &Op, _compressed: bool) {}
+
+    fn tracks_cycles(&self) -> bool {
+        false
+    }
+}
+
+/// `Simple` pipeline model (Table 1, Listing 1 verbatim): each
+/// (non-memory) instruction takes one cycle; memory-model cycles are added
+/// by the cold path on top.
+#[derive(Default)]
+pub struct SimpleModel;
+
+impl PipelineModel for SimpleModel {
+    fn name(&self) -> &'static str {
+        "simple"
+    }
+
+    fn after_instruction(&mut self, compiler: &mut DbtCompiler, _op: &Op, _compressed: bool) {
+        compiler.insert_cycle_count(1);
+    }
+
+    fn after_taken_branch(&mut self, compiler: &mut DbtCompiler, _op: &Op, _compressed: bool) {
+        // Listing 1: the taken path charges its own single cycle.
+        compiler.insert_cycle_count(1);
+    }
+}
+
+/// Factory by name (CLI / SIMCTRL reconfiguration).
+pub fn by_name(name: &str) -> Option<Box<dyn PipelineModel>> {
+    match name {
+        "atomic" => Some(Box::new(AtomicPipeline)),
+        "simple" => Some(Box::<SimpleModel>::default()),
+        "inorder" | "in-order" => Some(Box::<InOrderModel>::default()),
+        _ => None,
+    }
+}
+
+/// Latency of a multiply/divide unit operation in the in-order model.
+pub(crate) fn muldiv_latency(op: MulOp) -> u32 {
+    match op {
+        MulOp::Mul | MulOp::Mulh | MulOp::Mulhsu | MulOp::Mulhu => 3,
+        MulOp::Div | MulOp::Divu | MulOp::Rem | MulOp::Remu => 20,
+    }
+}
+
+/// Load-to-use latency of the L1 D-cache hit path in the in-order model.
+pub(crate) fn load_use_latency(width: MemWidth) -> u32 {
+    let _ = width;
+    2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::AluOp;
+
+    fn comp() -> DbtCompiler {
+        DbtCompiler::new(0)
+    }
+
+    #[test]
+    fn simple_one_cycle() {
+        let mut m = SimpleModel;
+        let mut c = comp();
+        let op = Op::Alu { op: AluOp::Add, word: false, rd: 1, rs1: 2, rs2: 3 };
+        m.after_instruction(&mut c, &op, false);
+        assert_eq!(c.take_cycles(), 1);
+        m.after_taken_branch(&mut c, &op, false);
+        assert_eq!(c.take_cycles(), 1);
+    }
+
+    #[test]
+    fn atomic_zero_cycles() {
+        let mut m = AtomicPipeline;
+        let mut c = comp();
+        m.after_instruction(&mut c, &Op::Ecall, false);
+        assert_eq!(c.take_cycles(), 0);
+        assert!(!m.tracks_cycles());
+    }
+
+    #[test]
+    fn factory() {
+        assert!(by_name("atomic").is_some());
+        assert!(by_name("simple").is_some());
+        assert!(by_name("inorder").is_some());
+        assert!(by_name("o3").is_none());
+    }
+}

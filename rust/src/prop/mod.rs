@@ -1,0 +1,122 @@
+//! Minimal property-testing support (proptest is unavailable offline; see
+//! DESIGN.md §3). Deterministic xorshift generators plus a `forall` driver
+//! that reports the failing case and its seed for reproduction.
+
+/// Deterministic xorshift64* PRNG.
+#[derive(Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        Rng(seed.max(1))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in `[0, n)`.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n.max(1)
+    }
+
+    /// Uniform in `[lo, hi]`.
+    #[inline]
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        lo.wrapping_add(self.below((hi - lo + 1) as u64) as i64)
+    }
+
+    #[inline]
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 != 0
+    }
+
+    /// Pick an element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+
+    /// "Interesting" 64-bit values: boundaries + random.
+    pub fn interesting_u64(&mut self) -> u64 {
+        const EDGE: &[u64] = &[
+            0,
+            1,
+            2,
+            0x7f,
+            0x80,
+            0x7ff,
+            0x800,
+            0xfff,
+            0x1000,
+            0x7fff_ffff,
+            0x8000_0000,
+            0xffff_ffff,
+            u64::MAX,
+            i64::MAX as u64,
+            i64::MIN as u64,
+            0x8000_0000_0000_0000,
+        ];
+        if self.below(3) == 0 {
+            *self.pick(EDGE)
+        } else {
+            self.next_u64()
+        }
+    }
+}
+
+/// Run `check` on `n` generated cases; panic with seed + case number on
+/// the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    n: u64,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut check: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..n {
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property failed (seed={:#x}, case={}): {}\ninput: {:?}",
+                seed, case, msg, input
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            assert!(r.below(10) < 10);
+            let v = r.range_i64(-5, 5);
+            assert!((-5..=5).contains(&v));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(1, 100, |r| r.below(10), |&x| if x < 9 { Ok(()) } else { Err("too big".into()) });
+    }
+}

@@ -1,0 +1,192 @@
+//! Typed wrappers around the two analytics artifacts:
+//! `cache_sim.hlo.txt` (exact-LRU set-associative cache over a trace chunk)
+//! and `bpred.hlo.txt` (2-bit bimodal predictor over a branch chunk).
+//!
+//! The artifact shapes are fixed at AOT time (see python/compile/aot.py and
+//! artifacts/meta.json): chunk length `T`, geometry (S sets × W ways,
+//! 2^B predictor entries). Shorter chunks are padded with a sentinel that
+//! the models ignore.
+
+use super::XlaExe;
+use crate::analytics::trace::{BranchRecord, MemRecord};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Sentinel line/pc value for padding (ignored by the models).
+pub const PAD: i64 = -1;
+
+/// Age sentinel marking an invalid way — must match
+/// `python/compile/kernels/cache_tags.py::INVALID_AGE`.
+pub const INVALID_AGE: i32 = 1 << 30;
+
+/// Geometry + chunk length metadata, mirrored from artifacts/meta.json.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AnalyticsMeta {
+    pub chunk: usize,
+    pub sets: usize,
+    pub ways: usize,
+    pub line_shift: u32,
+    pub bpred_entries: usize,
+}
+
+impl AnalyticsMeta {
+    /// Parse the tiny flat JSON written by aot.py (no JSON crate offline —
+    /// the format is `{"key": value, ...}` with integer values only).
+    pub fn parse(text: &str) -> Result<AnalyticsMeta> {
+        let get = |key: &str| -> Result<usize> {
+            let pat = format!("\"{}\":", key);
+            let at = text.find(&pat).with_context(|| format!("meta.json missing {}", key))?;
+            let rest = &text[at + pat.len()..];
+            let num: String =
+                rest.chars().skip_while(|c| c.is_whitespace()).take_while(|c| c.is_ascii_digit()).collect();
+            num.parse::<usize>().with_context(|| format!("bad value for {}", key))
+        };
+        Ok(AnalyticsMeta {
+            chunk: get("chunk")?,
+            sets: get("sets")?,
+            ways: get("ways")?,
+            line_shift: get("line_shift")? as u32,
+            bpred_entries: get("bpred_entries")?,
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<AnalyticsMeta> {
+        let text = std::fs::read_to_string(dir.join("meta.json"))
+            .with_context(|| format!("reading {}/meta.json — run `make artifacts`", dir.display()))?;
+        Self::parse(&text)
+    }
+}
+
+/// Exact-LRU cache simulation offloaded to XLA.
+///
+/// State layout (carried across chunks as XLA literals):
+///   tags: i64[S, W]   (-1 = invalid)
+///   ages: i32[S, W]
+/// Chunk input: lines i64[T] (paddr >> line_shift; PAD to skip).
+/// Output tuple: (tags', ages', hits i64, processed i64).
+pub struct XlaCacheSim {
+    exe: XlaExe,
+    pub meta: AnalyticsMeta,
+    tags: xla::Literal,
+    ages: xla::Literal,
+    pub accesses: u64,
+    pub hits: u64,
+}
+
+impl XlaCacheSim {
+    pub fn load(dir: &Path) -> Result<XlaCacheSim> {
+        let meta = AnalyticsMeta::load(dir)?;
+        let exe = XlaExe::load(&dir.join("cache_sim.hlo.txt"))?;
+        let (s, w) = (meta.sets, meta.ways);
+        let tags = xla::Literal::vec1(&vec![PAD; s * w]).reshape(&[s as i64, w as i64])?;
+        let ages =
+            xla::Literal::vec1(&vec![INVALID_AGE; s * w]).reshape(&[s as i64, w as i64])?;
+        Ok(XlaCacheSim { exe, meta, tags, ages, accesses: 0, hits: 0 })
+    }
+
+    /// Replay one chunk of records (≤ meta.chunk); returns hits in chunk.
+    pub fn run_chunk(&mut self, records: &[MemRecord]) -> Result<u64> {
+        if records.len() > self.meta.chunk {
+            bail!("chunk too large: {} > {}", records.len(), self.meta.chunk);
+        }
+        let mut lines = vec![PAD; self.meta.chunk];
+        for (i, r) in records.iter().enumerate() {
+            lines[i] = (r.paddr >> self.meta.line_shift) as i64;
+        }
+        let input = xla::Literal::vec1(&lines);
+        let out = self.exe.run(&[
+            std::mem::replace(&mut self.tags, xla::Literal::scalar(0i64)),
+            std::mem::replace(&mut self.ages, xla::Literal::scalar(0i64)),
+            input,
+        ])?;
+        let mut out = out.into_iter();
+        self.tags = out.next().context("missing tags output")?;
+        self.ages = out.next().context("missing ages output")?;
+        let hits: i64 = out.next().context("missing hits output")?.get_first_element()?;
+        self.accesses += records.len() as u64;
+        self.hits += hits as u64;
+        Ok(hits as u64)
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.accesses as f64
+        }
+    }
+}
+
+/// Bimodal branch predictor offloaded to XLA.
+///
+/// State: counters i32[E]. Chunk input: idx i64[T] (PAD to skip),
+/// taken i32[T]. Output: (counters', correct i64).
+pub struct XlaBpredSim {
+    exe: XlaExe,
+    pub meta: AnalyticsMeta,
+    counters: xla::Literal,
+    pub predictions: u64,
+    pub correct: u64,
+}
+
+impl XlaBpredSim {
+    pub fn load(dir: &Path) -> Result<XlaBpredSim> {
+        let meta = AnalyticsMeta::load(dir)?;
+        let exe = XlaExe::load(&dir.join("bpred.hlo.txt"))?;
+        let counters = xla::Literal::vec1(&vec![1i32; meta.bpred_entries]);
+        Ok(XlaBpredSim { exe, meta, counters, predictions: 0, correct: 0 })
+    }
+
+    pub fn run_chunk(&mut self, records: &[BranchRecord]) -> Result<u64> {
+        if records.len() > self.meta.chunk {
+            bail!("chunk too large: {} > {}", records.len(), self.meta.chunk);
+        }
+        let mut idx = vec![PAD; self.meta.chunk];
+        let mut taken = vec![0i32; self.meta.chunk];
+        for (i, r) in records.iter().enumerate() {
+            idx[i] = ((r.pc >> 1) as usize & (self.meta.bpred_entries - 1)) as i64;
+            taken[i] = r.taken as i32;
+        }
+        let out = self.exe.run(&[
+            std::mem::replace(&mut self.counters, xla::Literal::scalar(0i32)),
+            xla::Literal::vec1(&idx),
+            xla::Literal::vec1(&taken),
+        ])?;
+        let mut out = out.into_iter();
+        self.counters = out.next().context("missing counters output")?;
+        let correct: i64 = out.next().context("missing correct output")?.get_first_element()?;
+        self.predictions += records.len() as u64;
+        self.correct += correct as u64;
+        Ok(correct as u64)
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.predictions == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.predictions as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parse() {
+        let m = AnalyticsMeta::parse(
+            r#"{"chunk": 4096, "sets": 64, "ways": 4, "line_shift": 6, "bpred_entries": 1024}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            m,
+            AnalyticsMeta { chunk: 4096, sets: 64, ways: 4, line_shift: 6, bpred_entries: 1024 }
+        );
+    }
+
+    #[test]
+    fn meta_parse_missing_key_fails() {
+        assert!(AnalyticsMeta::parse(r#"{"chunk": 10}"#).is_err());
+    }
+}

@@ -1,0 +1,63 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from Rust.
+//!
+//! Python never runs at simulation time: `make artifacts` lowers the
+//! JAX/Pallas analytics models to HLO *text* once; this module compiles
+//! them with the XLA CPU PJRT client at startup and invokes them on trace
+//! chunks. (HLO text — not serialized protos — is the interchange format;
+//! see DESIGN.md §5.)
+
+pub mod analytics_exe;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A compiled XLA executable with its PJRT client.
+pub struct XlaExe {
+    pub client: xla::PjRtClient,
+    pub exe: xla::PjRtLoadedExecutable,
+}
+
+impl XlaExe {
+    /// Load an HLO-text artifact and compile it on the CPU PJRT client.
+    pub fn load(path: &Path) -> Result<XlaExe> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Self::load_with_client(client, path)
+    }
+
+    pub fn load_with_client(client: xla::PjRtClient, path: &Path) -> Result<XlaExe> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not UTF-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling HLO on PJRT CPU")?;
+        Ok(XlaExe { client, exe })
+    }
+
+    /// Execute with literal inputs; returns the flattened output tuple
+    /// (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let out = result[0][0].to_literal_sync()?;
+        Ok(out.to_tuple()?)
+    }
+}
+
+/// Default artifacts directory: `$R2VM_ARTIFACTS` or the nearest
+/// `artifacts/` directory walking up from the CWD.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("R2VM_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

@@ -1,0 +1,405 @@
+//! Memory-mapped devices and the MMIO bus.
+//!
+//! Full-system simulation needs a minimal platform besides DRAM: a CLINT
+//! (per-hart software + timer interrupts), a UART for console output, a
+//! skeletal PLIC, and `SIMIO` — a simulator-specific exit/console device
+//! akin to riscv-tests' `tohost` (used by bare-metal workloads).
+//!
+//! MMIO is *never* cached in the L0 layer, so every device access takes the
+//! memory-model cold path — exactly the behaviour the paper needs for its
+//! synchronisation-point argument (§3.3.2: I/O has "inherent entropy").
+
+use crate::isa::csr::{IRQ_MSIP, IRQ_MTIP};
+
+pub const CLINT_BASE: u64 = 0x0200_0000;
+pub const CLINT_SIZE: u64 = 0x10000;
+pub const UART_BASE: u64 = 0x1000_0000;
+pub const UART_SIZE: u64 = 0x100;
+pub const PLIC_BASE: u64 = 0x0C00_0000;
+pub const PLIC_SIZE: u64 = 0x400_0000;
+pub const SIMIO_BASE: u64 = 0x0010_0000;
+pub const SIMIO_SIZE: u64 = 0x1000;
+
+/// Fixed MMIO access latency in cycles (charged by timing memory models).
+pub const MMIO_LATENCY: u64 = 20;
+
+// ---------------------------------------------------------------------------
+// CLINT
+// ---------------------------------------------------------------------------
+
+/// Core-local interruptor: per-hart MSIP bits and timer compare registers,
+/// plus the global `mtime` counter (driven by the simulation clock).
+pub struct Clint {
+    pub msip: Vec<bool>,
+    pub mtimecmp: Vec<u64>,
+    /// Ratio of cycles per mtime tick (1 = mtime counts cycles).
+    pub time_shift: u32,
+}
+
+impl Clint {
+    pub fn new(harts: usize) -> Clint {
+        Clint { msip: vec![false; harts], mtimecmp: vec![u64::MAX; harts], time_shift: 0 }
+    }
+
+    #[inline]
+    pub fn mtime(&self, now_cycle: u64) -> u64 {
+        now_cycle >> self.time_shift
+    }
+
+    /// Interrupt bits (MSIP/MTIP) currently pending for `hart`.
+    #[inline]
+    pub fn mip_bits(&self, hart: usize, now_cycle: u64) -> u64 {
+        let mut bits = 0;
+        if self.msip[hart] {
+            bits |= IRQ_MSIP;
+        }
+        if self.mtime(now_cycle) >= self.mtimecmp[hart] {
+            bits |= IRQ_MTIP;
+        }
+        bits
+    }
+
+    /// Earliest cycle at which a timer interrupt will fire for any hart
+    /// (used by the lockstep engine to wake WFI sleepers).
+    pub fn next_timer_deadline(&self) -> Option<u64> {
+        self.mtimecmp
+            .iter()
+            .copied()
+            .filter(|&t| t != u64::MAX)
+            .min()
+            .map(|t| t << self.time_shift)
+    }
+
+    pub fn read(&self, offset: u64, now_cycle: u64) -> u64 {
+        match offset {
+            // msip registers: 4 bytes per hart
+            o if o < 0x4000 => {
+                let hart = (o / 4) as usize;
+                if o % 4 == 0 && hart < self.msip.len() {
+                    self.msip[hart] as u64
+                } else {
+                    0
+                }
+            }
+            // mtimecmp: 8 bytes per hart at 0x4000
+            o if (0x4000..0xBFF8).contains(&o) => {
+                let hart = ((o - 0x4000) / 8) as usize;
+                if hart < self.mtimecmp.len() {
+                    let v = self.mtimecmp[hart];
+                    if (o - 0x4000) % 8 == 0 {
+                        v
+                    } else {
+                        v >> 32
+                    }
+                } else {
+                    0
+                }
+            }
+            0xBFF8 => self.mtime(now_cycle),
+            _ => 0,
+        }
+    }
+
+    pub fn write(&mut self, offset: u64, value: u64, size: u64) {
+        match offset {
+            o if o < 0x4000 => {
+                let hart = (o / 4) as usize;
+                if o % 4 == 0 && hart < self.msip.len() {
+                    self.msip[hart] = value & 1 != 0;
+                }
+            }
+            o if (0x4000..0xBFF8).contains(&o) => {
+                let idx = ((o - 0x4000) / 8) as usize;
+                if idx < self.mtimecmp.len() {
+                    if size == 8 && (o - 0x4000) % 8 == 0 {
+                        self.mtimecmp[idx] = value;
+                    } else if (o - 0x4000) % 8 == 0 {
+                        // low word
+                        self.mtimecmp[idx] = (self.mtimecmp[idx] & !0xffff_ffff) | (value & 0xffff_ffff);
+                    } else {
+                        // high word
+                        self.mtimecmp[idx] =
+                            (self.mtimecmp[idx] & 0xffff_ffff) | ((value & 0xffff_ffff) << 32);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// UART (8250-lite, output only)
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+pub struct Uart {
+    /// Captured console output.
+    pub output: Vec<u8>,
+    /// Echo bytes to host stdout as they arrive.
+    pub echo: bool,
+}
+
+impl Uart {
+    pub fn read(&self, offset: u64) -> u64 {
+        match offset {
+            // LSR: transmitter empty + THR empty
+            5 => 0x60,
+            _ => 0,
+        }
+    }
+
+    pub fn write(&mut self, offset: u64, value: u64) {
+        if offset == 0 {
+            let b = value as u8;
+            self.output.push(b);
+            if self.echo {
+                use std::io::Write;
+                let _ = std::io::stdout().write_all(&[b]);
+                let _ = std::io::stdout().flush();
+            }
+        }
+    }
+
+    pub fn output_str(&self) -> String {
+        String::from_utf8_lossy(&self.output).into_owned()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PLIC (skeletal)
+// ---------------------------------------------------------------------------
+
+/// Minimal PLIC: register storage for priorities/enables/thresholds so
+/// guests can probe and program it; no external sources are wired in this
+/// environment, so it never asserts MEIP/SEIP.
+pub struct Plic {
+    pub priority: Vec<u32>,
+    pub enable: Vec<u32>,
+    pub threshold: Vec<u32>,
+}
+
+impl Plic {
+    pub fn new(harts: usize) -> Plic {
+        Plic {
+            priority: vec![0; 32],
+            // one enable word + one threshold per context (2 contexts/hart: M and S)
+            enable: vec![0; harts * 2],
+            threshold: vec![0; harts * 2],
+        }
+    }
+
+    pub fn read(&self, offset: u64) -> u64 {
+        match offset {
+            o if o < 0x1000 => {
+                let idx = (o / 4) as usize;
+                *self.priority.get(idx).unwrap_or(&0) as u64
+            }
+            o if (0x2000..0x20_0000).contains(&o) => {
+                let ctx = ((o - 0x2000) / 0x80) as usize;
+                *self.enable.get(ctx).unwrap_or(&0) as u64
+            }
+            o if o >= 0x20_0000 => {
+                let ctx = ((o - 0x20_0000) / 0x1000) as usize;
+                if (o - 0x20_0000) % 0x1000 == 0 {
+                    *self.threshold.get(ctx).unwrap_or(&0) as u64
+                } else {
+                    0 // claim: no pending sources
+                }
+            }
+            _ => 0,
+        }
+    }
+
+    pub fn write(&mut self, offset: u64, value: u64) {
+        match offset {
+            o if o < 0x1000 => {
+                let idx = (o / 4) as usize;
+                if let Some(p) = self.priority.get_mut(idx) {
+                    *p = value as u32;
+                }
+            }
+            o if (0x2000..0x20_0000).contains(&o) => {
+                let ctx = ((o - 0x2000) / 0x80) as usize;
+                if let Some(e) = self.enable.get_mut(ctx) {
+                    *e = value as u32;
+                }
+            }
+            o if o >= 0x20_0000 => {
+                let ctx = ((o - 0x20_0000) / 0x1000) as usize;
+                if (o - 0x20_0000) % 0x1000 == 0 {
+                    if let Some(t) = self.threshold.get_mut(ctx) {
+                        *t = value as u32;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SIMIO (simulator control device)
+// ---------------------------------------------------------------------------
+
+/// Bare-metal workload interface, riscv-tests `tohost` style:
+///   +0  write: terminate simulation, exit code = value >> 1 (if lsb set)
+///   +8  write: console putchar
+pub struct SimIo {
+    pub exit_code: Option<u64>,
+    pub console: Vec<u8>,
+}
+
+impl SimIo {
+    pub fn new() -> SimIo {
+        SimIo { exit_code: None, console: Vec::new() }
+    }
+
+    pub fn write(&mut self, offset: u64, value: u64) {
+        match offset {
+            0 => {
+                if value & 1 != 0 {
+                    self.exit_code = Some(value >> 1);
+                }
+            }
+            8 => self.console.push(value as u8),
+            _ => {}
+        }
+    }
+
+    pub fn read(&self, _offset: u64) -> u64 {
+        0
+    }
+}
+
+impl Default for SimIo {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bus
+// ---------------------------------------------------------------------------
+
+/// All MMIO devices behind one dispatcher.
+pub struct DeviceBus {
+    pub clint: Clint,
+    pub uart: Uart,
+    pub plic: Plic,
+    pub simio: SimIo,
+}
+
+impl DeviceBus {
+    pub fn new(harts: usize) -> DeviceBus {
+        DeviceBus {
+            clint: Clint::new(harts),
+            uart: Uart::default(),
+            plic: Plic::new(harts),
+            simio: SimIo::new(),
+        }
+    }
+
+    /// Is `paddr` an MMIO address (must bypass L0 and DRAM)?
+    #[inline]
+    pub fn is_mmio(paddr: u64) -> bool {
+        (CLINT_BASE..CLINT_BASE + CLINT_SIZE).contains(&paddr)
+            || (UART_BASE..UART_BASE + UART_SIZE).contains(&paddr)
+            || (PLIC_BASE..PLIC_BASE + PLIC_SIZE).contains(&paddr)
+            || (SIMIO_BASE..SIMIO_BASE + SIMIO_SIZE).contains(&paddr)
+    }
+
+    pub fn read(&mut self, paddr: u64, _size: u64, now_cycle: u64) -> u64 {
+        match paddr {
+            p if (CLINT_BASE..CLINT_BASE + CLINT_SIZE).contains(&p) => {
+                self.clint.read(p - CLINT_BASE, now_cycle)
+            }
+            p if (UART_BASE..UART_BASE + UART_SIZE).contains(&p) => self.uart.read(p - UART_BASE),
+            p if (PLIC_BASE..PLIC_BASE + PLIC_SIZE).contains(&p) => self.plic.read(p - PLIC_BASE),
+            p if (SIMIO_BASE..SIMIO_BASE + SIMIO_SIZE).contains(&p) => {
+                self.simio.read(p - SIMIO_BASE)
+            }
+            _ => 0,
+        }
+    }
+
+    pub fn write(&mut self, paddr: u64, value: u64, size: u64) {
+        match paddr {
+            p if (CLINT_BASE..CLINT_BASE + CLINT_SIZE).contains(&p) => {
+                self.clint.write(p - CLINT_BASE, value, size)
+            }
+            p if (UART_BASE..UART_BASE + UART_SIZE).contains(&p) => {
+                self.uart.write(p - UART_BASE, value)
+            }
+            p if (PLIC_BASE..PLIC_BASE + PLIC_SIZE).contains(&p) => {
+                self.plic.write(p - PLIC_BASE, value)
+            }
+            p if (SIMIO_BASE..SIMIO_BASE + SIMIO_SIZE).contains(&p) => {
+                self.simio.write(p - SIMIO_BASE, value)
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clint_msip() {
+        let mut c = Clint::new(2);
+        c.write(4, 1, 4); // msip[1]
+        assert_eq!(c.mip_bits(1, 0), IRQ_MSIP);
+        assert_eq!(c.mip_bits(0, 0), 0);
+        c.write(4, 0, 4);
+        assert_eq!(c.mip_bits(1, 0), 0);
+    }
+
+    #[test]
+    fn clint_timer() {
+        let mut c = Clint::new(1);
+        c.write(0x4000, 1000, 8);
+        assert_eq!(c.mip_bits(0, 999), 0);
+        assert_eq!(c.mip_bits(0, 1000), IRQ_MTIP);
+        assert_eq!(c.read(0xBFF8, 1234), 1234);
+        assert_eq!(c.next_timer_deadline(), Some(1000));
+    }
+
+    #[test]
+    fn clint_mtimecmp_split_words() {
+        let mut c = Clint::new(1);
+        c.write(0x4000, 0xdead_beef, 4);
+        c.write(0x4004, 0x1234, 4);
+        assert_eq!(c.mtimecmp[0], 0x1234_dead_beef);
+    }
+
+    #[test]
+    fn uart_output() {
+        let mut u = Uart::default();
+        for b in b"hi" {
+            u.write(0, *b as u64);
+        }
+        assert_eq!(u.output_str(), "hi");
+        assert_eq!(u.read(5), 0x60);
+    }
+
+    #[test]
+    fn simio_exit() {
+        let mut s = SimIo::new();
+        s.write(0, (42 << 1) | 1);
+        assert_eq!(s.exit_code, Some(42));
+    }
+
+    #[test]
+    fn bus_dispatch() {
+        let mut bus = DeviceBus::new(1);
+        assert!(DeviceBus::is_mmio(UART_BASE));
+        assert!(DeviceBus::is_mmio(CLINT_BASE + 0x4000));
+        assert!(!DeviceBus::is_mmio(0x8000_0000));
+        bus.write(UART_BASE, b'x' as u64, 1);
+        assert_eq!(bus.uart.output, vec![b'x']);
+        bus.write(CLINT_BASE, 1, 4);
+        assert_eq!(bus.clint.mip_bits(0, 0), IRQ_MSIP);
+    }
+}

@@ -1,0 +1,878 @@
+//! Instruction execution semantics.
+//!
+//! `exec_op` is the single source of semantic truth: both the naive
+//! per-cycle interpreter (the gem5-like baseline) and the DBT engine's
+//! translated micro-op traces execute through it, so timing modes can never
+//! diverge functionally from the baseline.
+//!
+//! Memory accesses implement the paper's two-level scheme: the L0 fast path
+//! (3 host memory operations, §3.4.1) and the memory-model cold path
+//! (translate → simulate → install).
+
+use super::dev::{DeviceBus, MMIO_LATENCY};
+use super::hart::{Hart, Trap};
+use super::System;
+use crate::isa::csr::*;
+use crate::isa::op::*;
+use crate::mem::mmu::{translate, AccessKind, PageFault};
+
+/// Control-flow outcome of executing one instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Flow {
+    /// Fall through to the next sequential instruction.
+    Next,
+    /// Conditional branch: taken (target = pc + imm, computed by caller).
+    Taken,
+    /// Unconditional transfer to an absolute address.
+    Jump(u64),
+    /// WFI executed; sleep until an interrupt is pending.
+    Wfi,
+}
+
+#[inline]
+fn page_fault_trap(pf: PageFault, vaddr: u64) -> Trap {
+    let cause = match pf.kind {
+        AccessKind::Read => EXC_LOAD_PAGE_FAULT,
+        AccessKind::Write => EXC_STORE_PAGE_FAULT,
+        AccessKind::Execute => EXC_INSN_PAGE_FAULT,
+    };
+    Trap::new(cause, vaddr)
+}
+
+// ---------------------------------------------------------------------------
+// Memory access
+// ---------------------------------------------------------------------------
+
+/// Raw physical read of `width` bytes (zero-extended).
+#[inline(always)]
+fn phys_read(sys: &System, paddr: u64, width: MemWidth) -> u64 {
+    match width {
+        MemWidth::B => sys.phys.read_u8(paddr) as u64,
+        MemWidth::H => sys.phys.read_u16(paddr) as u64,
+        MemWidth::W => sys.phys.read_u32(paddr) as u64,
+        MemWidth::D => sys.phys.read_u64(paddr),
+    }
+}
+
+#[inline(always)]
+fn phys_write(sys: &System, paddr: u64, width: MemWidth, value: u64) {
+    match width {
+        MemWidth::B => sys.phys.write_u8(paddr, value as u8),
+        MemWidth::H => sys.phys.write_u16(paddr, value as u16),
+        MemWidth::W => sys.phys.write_u32(paddr, value as u32),
+        MemWidth::D => sys.phys.write_u64(paddr, value),
+    }
+}
+
+/// Cold path for data accesses: translate, run the memory model, install
+/// the line into L0 per the model's decision, charge cycles. Returns the
+/// physical address.
+#[cold]
+fn cold_data_access(
+    hart: &mut Hart,
+    sys: &mut System,
+    vaddr: u64,
+    write: bool,
+) -> Result<u64, Trap> {
+    let ctx = hart.mmu_data_ctx();
+    let kind = if write { AccessKind::Write } else { AccessKind::Read };
+    let tr = translate(&sys.phys, &ctx, vaddr, kind).map_err(|pf| page_fault_trap(pf, vaddr))?;
+
+    // MMIO bypasses the L0 and the memory model entirely (§3.3.2: device
+    // accesses are synchronisation points with fixed latency).
+    if DeviceBus::is_mmio(tr.paddr) {
+        hart.pending += MMIO_LATENCY;
+        return Ok(tr.paddr);
+    }
+    if !sys.phys.contains(tr.paddr, 8) {
+        let cause = if write { EXC_STORE_ACCESS } else { EXC_LOAD_ACCESS };
+        return Err(Trap::new(cause, vaddr));
+    }
+
+    let cold = sys.model.data_access(&mut sys.l0, hart.id, vaddr, &tr, write);
+    hart.pending += cold.cycles;
+    if let Some(writable) = cold.install {
+        // A write may only install a writable entry; a read may install
+        // read-only (so stores still reach the cold path).
+        sys.l0[hart.id].d.insert(vaddr, tr.paddr, writable);
+    }
+    Ok(tr.paddr)
+}
+
+/// Load `width` bytes at `vaddr` (unsigned). The L0 fast path is inlined;
+/// misses go through the memory model.
+#[inline(always)]
+pub fn read_mem(hart: &mut Hart, sys: &mut System, vaddr: u64, width: MemWidth) -> Result<u64, Trap> {
+    // Line-crossing misaligned accesses trap (RISC-V permits this; guest
+    // workloads are compiled aligned).
+    let line_mask = (1u64 << sys.l0[hart.id].d.line_shift()) - 1;
+    if (vaddr & line_mask) + width.bytes() > line_mask + 1 {
+        return Err(Trap::new(EXC_LOAD_MISALIGNED, vaddr));
+    }
+    let paddr = if sys.force_cold {
+        cold_data_access(hart, sys, vaddr, false)?
+    } else {
+        match sys.l0[hart.id].d.lookup_read(vaddr) {
+            Some(p) => p,
+            None => cold_data_access(hart, sys, vaddr, false)?,
+        }
+    };
+    if DeviceBus::is_mmio(paddr) {
+        let now = hart.now();
+        return Ok(sys.bus.read(paddr, width.bytes(), now));
+    }
+    if let Some(t) = sys.trace.as_mut() {
+        t.record_mem(paddr, false, hart.id as u8);
+    }
+    Ok(phys_read(sys, paddr, width))
+}
+
+/// Store `width` bytes at `vaddr`.
+#[inline(always)]
+pub fn write_mem(
+    hart: &mut Hart,
+    sys: &mut System,
+    vaddr: u64,
+    width: MemWidth,
+    value: u64,
+) -> Result<(), Trap> {
+    let line_mask = (1u64 << sys.l0[hart.id].d.line_shift()) - 1;
+    if (vaddr & line_mask) + width.bytes() > line_mask + 1 {
+        return Err(Trap::new(EXC_STORE_MISALIGNED, vaddr));
+    }
+    let paddr = if sys.force_cold {
+        cold_data_access(hart, sys, vaddr, true)?
+    } else {
+        match sys.l0[hart.id].d.lookup_write(vaddr) {
+            Some(p) => p,
+            None => cold_data_access(hart, sys, vaddr, true)?,
+        }
+    };
+    if DeviceBus::is_mmio(paddr) {
+        sys.bus.write(paddr, value, width.bytes());
+        return Ok(());
+    }
+    if sys.active_reservations != 0 {
+        sys.clear_reservations(paddr, hart.id);
+    }
+    if let Some(t) = sys.trace.as_mut() {
+        t.record_mem(paddr, true, hart.id as u8);
+    }
+    phys_write(sys, paddr, width, value);
+    Ok(())
+}
+
+#[inline]
+fn sext_load(value: u64, width: MemWidth, signed: bool) -> u64 {
+    if !signed {
+        return value;
+    }
+    match width {
+        MemWidth::B => value as u8 as i8 as i64 as u64,
+        MemWidth::H => value as u16 as i16 as i64 as u64,
+        MemWidth::W => value as u32 as i32 as i64 as u64,
+        MemWidth::D => value,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ALU helpers
+// ---------------------------------------------------------------------------
+
+/// Public ALU evaluator — used by the fiber engine's inline fast path.
+#[inline(always)]
+pub fn alu_value(op: AluOp, word: bool, a: u64, b: u64) -> u64 {
+    alu(op, word, a, b)
+}
+
+#[inline(always)]
+fn alu(op: AluOp, word: bool, a: u64, b: u64) -> u64 {
+    if word {
+        let a32 = a as u32;
+        let b32 = b as u32;
+        let r = match op {
+            AluOp::Add => a32.wrapping_add(b32),
+            AluOp::Sub => a32.wrapping_sub(b32),
+            AluOp::Sll => a32.wrapping_shl(b32 & 31),
+            AluOp::Srl => a32.wrapping_shr(b32 & 31),
+            AluOp::Sra => ((a32 as i32).wrapping_shr(b32 & 31)) as u32,
+            // Slt/Sltu/Xor/Or/And have no word forms in the ISA, but be total:
+            AluOp::Slt => ((a32 as i32) < (b32 as i32)) as u32,
+            AluOp::Sltu => (a32 < b32) as u32,
+            AluOp::Xor => a32 ^ b32,
+            AluOp::Or => a32 | b32,
+            AluOp::And => a32 & b32,
+        };
+        r as i32 as i64 as u64
+    } else {
+        match op {
+            AluOp::Add => a.wrapping_add(b),
+            AluOp::Sub => a.wrapping_sub(b),
+            AluOp::Sll => a.wrapping_shl(b as u32 & 63),
+            AluOp::Srl => a.wrapping_shr(b as u32 & 63),
+            AluOp::Sra => ((a as i64).wrapping_shr(b as u32 & 63)) as u64,
+            AluOp::Slt => ((a as i64) < (b as i64)) as u64,
+            AluOp::Sltu => (a < b) as u64,
+            AluOp::Xor => a ^ b,
+            AluOp::Or => a | b,
+            AluOp::And => a & b,
+        }
+    }
+}
+
+#[inline(always)]
+fn mul(op: MulOp, word: bool, a: u64, b: u64) -> u64 {
+    if word {
+        let a32 = a as i32;
+        let b32 = b as i32;
+        let r: i32 = match op {
+            MulOp::Mul => a32.wrapping_mul(b32),
+            MulOp::Div => {
+                if b32 == 0 {
+                    -1
+                } else if a32 == i32::MIN && b32 == -1 {
+                    i32::MIN
+                } else {
+                    a32.wrapping_div(b32)
+                }
+            }
+            MulOp::Divu => {
+                if b32 == 0 {
+                    -1
+                } else {
+                    ((a as u32) / (b as u32)) as i32
+                }
+            }
+            MulOp::Rem => {
+                if b32 == 0 {
+                    a32
+                } else if a32 == i32::MIN && b32 == -1 {
+                    0
+                } else {
+                    a32.wrapping_rem(b32)
+                }
+            }
+            MulOp::Remu => {
+                if b as u32 == 0 {
+                    a as u32 as i32
+                } else {
+                    ((a as u32) % (b as u32)) as i32
+                }
+            }
+            // Mulh variants have no word form; be total.
+            MulOp::Mulh | MulOp::Mulhsu | MulOp::Mulhu => {
+                ((a32 as i64).wrapping_mul(b32 as i64) >> 32) as i32
+            }
+        };
+        r as i64 as u64
+    } else {
+        match op {
+            MulOp::Mul => a.wrapping_mul(b),
+            MulOp::Mulh => (((a as i64 as i128) * (b as i64 as i128)) >> 64) as u64,
+            MulOp::Mulhsu => (((a as i64 as i128) * (b as u128 as i128)) >> 64) as u64,
+            MulOp::Mulhu => (((a as u128) * (b as u128)) >> 64) as u64,
+            MulOp::Div => {
+                let (a, b) = (a as i64, b as i64);
+                if b == 0 {
+                    u64::MAX
+                } else if a == i64::MIN && b == -1 {
+                    a as u64
+                } else {
+                    a.wrapping_div(b) as u64
+                }
+            }
+            MulOp::Divu => {
+                if b == 0 {
+                    u64::MAX
+                } else {
+                    a / b
+                }
+            }
+            MulOp::Rem => {
+                let (a, b) = (a as i64, b as i64);
+                if b == 0 {
+                    a as u64
+                } else if a == i64::MIN && b == -1 {
+                    0
+                } else {
+                    a.wrapping_rem(b) as u64
+                }
+            }
+            MulOp::Remu => {
+                if b == 0 {
+                    a
+                } else {
+                    a % b
+                }
+            }
+        }
+    }
+}
+
+#[inline(always)]
+fn amo_compute(op: AmoOp, width: MemWidth, old: u64, src: u64) -> u64 {
+    let r = match op {
+        AmoOp::Swap => src,
+        AmoOp::Add => {
+            if width == MemWidth::W {
+                (old as u32).wrapping_add(src as u32) as u64
+            } else {
+                old.wrapping_add(src)
+            }
+        }
+        AmoOp::Xor => old ^ src,
+        AmoOp::And => old & src,
+        AmoOp::Or => old | src,
+        AmoOp::Min => {
+            if width == MemWidth::W {
+                ((old as i32).min(src as i32)) as u32 as u64
+            } else {
+                ((old as i64).min(src as i64)) as u64
+            }
+        }
+        AmoOp::Max => {
+            if width == MemWidth::W {
+                ((old as i32).max(src as i32)) as u32 as u64
+            } else {
+                ((old as i64).max(src as i64)) as u64
+            }
+        }
+        AmoOp::Minu => {
+            if width == MemWidth::W {
+                ((old as u32).min(src as u32)) as u64
+            } else {
+                old.min(src)
+            }
+        }
+        AmoOp::Maxu => {
+            if width == MemWidth::W {
+                ((old as u32).max(src as u32)) as u64
+            } else {
+                old.max(src)
+            }
+        }
+    };
+    r
+}
+
+// ---------------------------------------------------------------------------
+// exec_op
+// ---------------------------------------------------------------------------
+
+/// Execute one decoded instruction.
+///
+/// `pc` is the instruction's address, `npc` the next sequential address
+/// (pc + 2 or 4). The caller is responsible for retiring (`instret`) and
+/// for PC updates:
+/// `Flow::Next` → npc, `Flow::Taken` → pc + branch imm, `Flow::Jump(t)` → t.
+pub fn exec_op(
+    hart: &mut Hart,
+    sys: &mut System,
+    op: &Op,
+    pc: u64,
+    npc: u64,
+) -> Result<Flow, Trap> {
+    match *op {
+        Op::Illegal { raw } => Err(Trap::new(EXC_ILLEGAL, raw as u64)),
+
+        Op::Lui { rd, imm } => {
+            hart.set_reg(rd, imm as i64 as u64);
+            Ok(Flow::Next)
+        }
+        Op::Auipc { rd, imm } => {
+            hart.set_reg(rd, pc.wrapping_add(imm as i64 as u64));
+            Ok(Flow::Next)
+        }
+        Op::Jal { rd, imm } => {
+            hart.set_reg(rd, npc);
+            Ok(Flow::Jump(pc.wrapping_add(imm as i64 as u64)))
+        }
+        Op::Jalr { rd, rs1, imm } => {
+            let target = hart.reg(rs1).wrapping_add(imm as i64 as u64) & !1;
+            hart.set_reg(rd, npc);
+            Ok(Flow::Jump(target))
+        }
+        Op::Branch { cond, rs1, rs2, .. } => {
+            if cond.eval(hart.reg(rs1), hart.reg(rs2)) {
+                Ok(Flow::Taken)
+            } else {
+                Ok(Flow::Next)
+            }
+        }
+
+        Op::Load { width, signed, rd, rs1, imm } => {
+            let vaddr = hart.reg(rs1).wrapping_add(imm as i64 as u64);
+            let raw = read_mem(hart, sys, vaddr, width)?;
+            hart.set_reg(rd, sext_load(raw, width, signed));
+            Ok(Flow::Next)
+        }
+        Op::Store { width, rs1, rs2, imm } => {
+            let vaddr = hart.reg(rs1).wrapping_add(imm as i64 as u64);
+            write_mem(hart, sys, vaddr, width, hart.reg(rs2))?;
+            Ok(Flow::Next)
+        }
+
+        Op::Alu { op, word, rd, rs1, rs2 } => {
+            hart.set_reg(rd, alu(op, word, hart.reg(rs1), hart.reg(rs2)));
+            Ok(Flow::Next)
+        }
+        Op::AluImm { op, word, rd, rs1, imm } => {
+            hart.set_reg(rd, alu(op, word, hart.reg(rs1), imm as i64 as u64));
+            Ok(Flow::Next)
+        }
+        Op::Mul { op, word, rd, rs1, rs2 } => {
+            hart.set_reg(rd, mul(op, word, hart.reg(rs1), hart.reg(rs2)));
+            Ok(Flow::Next)
+        }
+
+        Op::Lr { width, rd, rs1 } => {
+            let vaddr = hart.reg(rs1);
+            if vaddr & width.mask() != 0 {
+                return Err(Trap::new(EXC_LOAD_MISALIGNED, vaddr));
+            }
+            // LR/SC always take the cold path (coherence-visible).
+            let paddr = cold_data_access(hart, sys, vaddr, false)?;
+            let raw = phys_read(sys, paddr, width);
+            if let Some(t) = sys.trace.as_mut() {
+                t.record_mem(paddr, false, hart.id as u8);
+            }
+            hart.set_reg(rd, sext_load(raw, width, true));
+            if sys.reservations[hart.id].is_none() {
+                sys.active_reservations += 1;
+            }
+            sys.reservations[hart.id] = Some((paddr, raw));
+            Ok(Flow::Next)
+        }
+        Op::Sc { width, rd, rs1, rs2 } => {
+            let vaddr = hart.reg(rs1);
+            if vaddr & width.mask() != 0 {
+                return Err(Trap::new(EXC_STORE_MISALIGNED, vaddr));
+            }
+            let paddr = cold_data_access(hart, sys, vaddr, true)?;
+            let success = match sys.reservations[hart.id] {
+                Some((addr, loaded)) if addr == paddr => {
+                    if sys.parallel {
+                        // Parallel mode: commit via host compare-and-swap
+                        // against the LR-observed value (ABA-tolerant, as
+                        // on real hardware with address-only reservations).
+                        match width {
+                            MemWidth::W => sys
+                                .phys
+                                .cas_u32(paddr, loaded as u32, hart.reg(rs2) as u32)
+                                .is_ok(),
+                            _ => sys.phys.cas_u64(paddr, loaded, hart.reg(rs2)).is_ok(),
+                        }
+                    } else {
+                        // Lockstep: the reservation table is authoritative —
+                        // intervening stores cleared it.
+                        phys_write(sys, paddr, width, hart.reg(rs2));
+                        true
+                    }
+                }
+                _ => false,
+            };
+            if success {
+                sys.clear_reservations(paddr, hart.id);
+                if let Some(t) = sys.trace.as_mut() {
+                    t.record_mem(paddr, true, hart.id as u8);
+                }
+            }
+            if sys.reservations[hart.id].take().is_some() {
+                sys.active_reservations -= 1;
+            }
+            hart.set_reg(rd, !success as u64);
+            Ok(Flow::Next)
+        }
+        Op::Amo { op, width, rd, rs1, rs2 } => {
+            let vaddr = hart.reg(rs1);
+            if vaddr & width.mask() != 0 {
+                return Err(Trap::new(EXC_STORE_MISALIGNED, vaddr));
+            }
+            let paddr = cold_data_access(hart, sys, vaddr, true)?;
+            if DeviceBus::is_mmio(paddr) {
+                // AMO on MMIO: read-modify-write through the bus.
+                let now = hart.now();
+                let old = sys.bus.read(paddr, width.bytes(), now);
+                let new = amo_compute(op, width, old, hart.reg(rs2));
+                sys.bus.write(paddr, new, width.bytes());
+                hart.set_reg(rd, sext_load(old, width, true));
+                return Ok(Flow::Next);
+            }
+            let old = if sys.parallel {
+                // Host-atomic read-modify-write loop.
+                match width {
+                    MemWidth::W => loop {
+                        let cur = sys.phys.load_acq_u32(paddr);
+                        let new = amo_compute(op, width, cur as u64, hart.reg(rs2)) as u32;
+                        if sys.phys.cas_u32(paddr, cur, new).is_ok() {
+                            break cur as u64;
+                        }
+                    },
+                    _ => loop {
+                        let cur = sys.phys.load_acq_u64(paddr);
+                        let new = amo_compute(op, width, cur, hart.reg(rs2));
+                        if sys.phys.cas_u64(paddr, cur, new).is_ok() {
+                            break cur;
+                        }
+                    },
+                }
+            } else {
+                let old = phys_read(sys, paddr, width);
+                let new = amo_compute(op, width, old, hart.reg(rs2));
+                sys.clear_reservations(paddr, hart.id);
+                phys_write(sys, paddr, width, new);
+                old
+            };
+            if let Some(t) = sys.trace.as_mut() {
+                t.record_mem(paddr, true, hart.id as u8);
+            }
+            hart.set_reg(rd, sext_load(old, width, true));
+            Ok(Flow::Next)
+        }
+
+        Op::Csr { op, imm_form, rd, rs1, csr } => {
+            let src = if imm_form { rs1 as u64 } else { hart.reg(rs1) };
+            let time = sys.bus.clint.mtime(hart.now());
+            // Reads of the SIMSTATS CSR reflect live L0 counters.
+            let old = if csr == CSR_SIMSTATS {
+                let (acc, miss) = sys.l0[hart.id].d.stats();
+                (acc & 0xffff_ffff) | (miss << 32)
+            } else if csr == CSR_SIMCTRL {
+                sys.simctrl_state
+            } else {
+                hart.csr_read(csr, time)?
+            };
+            let write_back = match op {
+                CsrOp::Rw => Some(src),
+                CsrOp::Rs => {
+                    if rs1 == 0 {
+                        None
+                    } else {
+                        Some(old | src)
+                    }
+                }
+                CsrOp::Rc => {
+                    if rs1 == 0 {
+                        None
+                    } else {
+                        Some(old & !src)
+                    }
+                }
+            };
+            if let Some(v) = write_back {
+                hart.csr_write(csr, v)?;
+            }
+            hart.set_reg(rd, old);
+            Ok(Flow::Next)
+        }
+
+        Op::Fence => Ok(Flow::Next),
+        Op::FenceI => {
+            hart.effects.fence_i = true;
+            Ok(Flow::Next)
+        }
+        Op::Ecall => {
+            let cause = match hart.prv {
+                Priv::User => EXC_ECALL_U,
+                Priv::Supervisor => EXC_ECALL_S,
+                Priv::Machine => EXC_ECALL_M,
+            };
+            Err(Trap::new(cause, 0))
+        }
+        Op::Ebreak => Err(Trap::new(EXC_BREAKPOINT, pc)),
+        Op::Mret => {
+            if hart.prv != Priv::Machine {
+                return Err(Trap::new(EXC_ILLEGAL, 0));
+            }
+            Ok(Flow::Jump(hart.mret()))
+        }
+        Op::Sret => {
+            if hart.prv < Priv::Supervisor {
+                return Err(Trap::new(EXC_ILLEGAL, 0));
+            }
+            Ok(Flow::Jump(hart.sret()))
+        }
+        Op::Wfi => {
+            if hart.prv == Priv::User {
+                return Err(Trap::new(EXC_ILLEGAL, 0));
+            }
+            Ok(Flow::Wfi)
+        }
+        Op::SfenceVma { .. } => {
+            if hart.prv < Priv::Supervisor {
+                return Err(Trap::new(EXC_ILLEGAL, 0));
+            }
+            hart.effects.sfence = true;
+            Ok(Flow::Next)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Instruction fetch
+// ---------------------------------------------------------------------------
+
+/// Fetch up to 4 bytes at `pc`, using the L0 I-cache fast path; handles the
+/// paper's cross-page case (a 4-byte instruction spanning two pages) by
+/// translating both halves.
+pub fn fetch_raw(hart: &mut Hart, sys: &mut System, pc: u64) -> Result<u32, Trap> {
+    if pc & 1 != 0 {
+        return Err(Trap::new(EXC_INSN_MISALIGNED, pc));
+    }
+    let lo = fetch_half(hart, sys, pc)?;
+    if crate::isa::decode::inst_len(lo) == 2 {
+        return Ok(lo as u32);
+    }
+    let hi = fetch_half(hart, sys, pc + 2)?;
+    Ok((lo as u32) | ((hi as u32) << 16))
+}
+
+/// Fetch one halfword of instruction memory.
+pub fn fetch_half(hart: &mut Hart, sys: &mut System, pc: u64) -> Result<u16, Trap> {
+    let paddr = if sys.force_cold {
+        cold_fetch(hart, sys, pc)?
+    } else {
+        match sys.l0[hart.id].i.lookup(pc) {
+            Some(p) => p,
+            None => cold_fetch(hart, sys, pc)?,
+        }
+    };
+    Ok(sys.phys.read_u16(paddr))
+}
+
+/// Cold path for instruction fetch.
+#[cold]
+pub fn cold_fetch(hart: &mut Hart, sys: &mut System, pc: u64) -> Result<u64, Trap> {
+    let ctx = hart.mmu_fetch_ctx();
+    let tr = translate(&sys.phys, &ctx, pc, AccessKind::Execute)
+        .map_err(|pf| page_fault_trap(pf, pc))?;
+    if !sys.phys.contains(tr.paddr, 4) {
+        return Err(Trap::new(EXC_INSN_ACCESS, pc));
+    }
+    let cold = sys.model.fetch_access(&mut sys.l0, hart.id, pc, &tr);
+    hart.pending += cold.cycles;
+    if cold.install.is_some() {
+        sys.l0[hart.id].i.insert(pc, tr.paddr);
+    }
+    Ok(tr.paddr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::DRAM_BASE;
+
+    fn setup() -> (Hart, System) {
+        let mut hart = Hart::new(0);
+        hart.pc = DRAM_BASE;
+        let sys = System::new(1, 1 << 20);
+        (hart, sys)
+    }
+
+    fn run(hart: &mut Hart, sys: &mut System, op: Op) -> Flow {
+        exec_op(hart, sys, &op, hart.pc, hart.pc + 4).unwrap()
+    }
+
+    #[test]
+    fn alu_basic() {
+        let (mut h, mut s) = setup();
+        h.set_reg(1, 5);
+        h.set_reg(2, 7);
+        run(&mut h, &mut s, Op::Alu { op: AluOp::Add, word: false, rd: 3, rs1: 1, rs2: 2 });
+        assert_eq!(h.reg(3), 12);
+        run(&mut h, &mut s, Op::AluImm { op: AluOp::Add, word: true, rd: 4, rs1: 1, imm: -6 });
+        assert_eq!(h.reg(4), (-1i64) as u64);
+    }
+
+    #[test]
+    fn word_ops_sign_extend() {
+        let (mut h, mut s) = setup();
+        h.set_reg(1, 0x7fff_ffff);
+        run(&mut h, &mut s, Op::AluImm { op: AluOp::Add, word: true, rd: 2, rs1: 1, imm: 1 });
+        assert_eq!(h.reg(2), 0xffff_ffff_8000_0000);
+        h.set_reg(3, 0xffff_ffff_8000_0000);
+        run(&mut h, &mut s, Op::AluImm { op: AluOp::Srl, word: true, rd: 4, rs1: 3, imm: 4 });
+        assert_eq!(h.reg(4), 0x0800_0000);
+        run(&mut h, &mut s, Op::AluImm { op: AluOp::Sra, word: true, rd: 5, rs1: 3, imm: 4 });
+        assert_eq!(h.reg(5), 0xffff_ffff_f800_0000);
+    }
+
+    #[test]
+    fn mul_div_edge_cases() {
+        let (mut h, mut s) = setup();
+        h.set_reg(1, u64::MAX); // -1
+        h.set_reg(2, 0);
+        run(&mut h, &mut s, Op::Mul { op: MulOp::Div, word: false, rd: 3, rs1: 1, rs2: 2 });
+        assert_eq!(h.reg(3), u64::MAX); // div by zero -> -1
+        run(&mut h, &mut s, Op::Mul { op: MulOp::Rem, word: false, rd: 4, rs1: 1, rs2: 2 });
+        assert_eq!(h.reg(4), u64::MAX); // rem by zero -> dividend
+        h.set_reg(5, i64::MIN as u64);
+        h.set_reg(6, u64::MAX);
+        run(&mut h, &mut s, Op::Mul { op: MulOp::Div, word: false, rd: 7, rs1: 5, rs2: 6 });
+        assert_eq!(h.reg(7), i64::MIN as u64); // overflow
+        // mulh
+        h.set_reg(8, u64::MAX);
+        h.set_reg(9, u64::MAX);
+        run(&mut h, &mut s, Op::Mul { op: MulOp::Mulhu, word: false, rd: 10, rs1: 8, rs2: 9 });
+        assert_eq!(h.reg(10), u64::MAX - 1);
+        run(&mut h, &mut s, Op::Mul { op: MulOp::Mulh, word: false, rd: 11, rs1: 8, rs2: 9 });
+        assert_eq!(h.reg(11), 0); // (-1)*(-1) = 1, high = 0
+    }
+
+    #[test]
+    fn load_store_roundtrip() {
+        let (mut h, mut s) = setup();
+        h.set_reg(1, DRAM_BASE + 0x100);
+        h.set_reg(2, 0xdead_beef_cafe_babe);
+        run(&mut h, &mut s, Op::Store { width: MemWidth::D, rs1: 1, rs2: 2, imm: 8 });
+        run(&mut h, &mut s, Op::Load { width: MemWidth::D, signed: true, rd: 3, rs1: 1, imm: 8 });
+        assert_eq!(h.reg(3), 0xdead_beef_cafe_babe);
+        // signed byte load
+        run(&mut h, &mut s, Op::Load { width: MemWidth::B, signed: true, rd: 4, rs1: 1, imm: 8 });
+        assert_eq!(h.reg(4), 0xffff_ffff_ffff_ffbe);
+        // unsigned halfword
+        run(&mut h, &mut s, Op::Load { width: MemWidth::H, signed: false, rd: 5, rs1: 1, imm: 8 });
+        assert_eq!(h.reg(5), 0xbabe);
+    }
+
+    #[test]
+    fn l0_fast_path_used_on_second_access() {
+        let (mut h, mut s) = setup();
+        h.set_reg(1, DRAM_BASE);
+        run(&mut h, &mut s, Op::Load { width: MemWidth::W, signed: true, rd: 2, rs1: 1, imm: 0 });
+        let (acc1, miss1) = s.l0[0].d.stats();
+        run(&mut h, &mut s, Op::Load { width: MemWidth::W, signed: true, rd: 2, rs1: 1, imm: 4 });
+        let (acc2, miss2) = s.l0[0].d.stats();
+        assert_eq!(acc2, acc1 + 1);
+        assert_eq!(miss2, miss1, "second access within the line must hit L0");
+    }
+
+    #[test]
+    fn branches() {
+        let (mut h, mut s) = setup();
+        h.set_reg(1, 1);
+        let f = run(&mut h, &mut s, Op::Branch { cond: BrCond::Ne, rs1: 1, rs2: 0, imm: -8 });
+        assert_eq!(f, Flow::Taken);
+        let f = run(&mut h, &mut s, Op::Branch { cond: BrCond::Eq, rs1: 1, rs2: 0, imm: -8 });
+        assert_eq!(f, Flow::Next);
+        let f = run(&mut h, &mut s, Op::Jal { rd: 1, imm: 16 });
+        assert_eq!(f, Flow::Jump(h.pc + 16));
+        assert_eq!(h.reg(1), h.pc + 4);
+        h.set_reg(2, 0x8000_0101);
+        let f = run(&mut h, &mut s, Op::Jalr { rd: 0, rs1: 2, imm: 2 });
+        assert_eq!(f, Flow::Jump(0x8000_0102)); // low bit cleared
+    }
+
+    #[test]
+    fn lr_sc_success_and_failure() {
+        let (mut h, mut s) = setup();
+        let addr = DRAM_BASE + 0x200;
+        s.phys.write_u64(addr, 77);
+        h.set_reg(1, addr);
+        h.set_reg(2, 99);
+        run(&mut h, &mut s, Op::Lr { width: MemWidth::D, rd: 3, rs1: 1 });
+        assert_eq!(h.reg(3), 77);
+        run(&mut h, &mut s, Op::Sc { width: MemWidth::D, rd: 4, rs1: 1, rs2: 2 });
+        assert_eq!(h.reg(4), 0, "SC must succeed");
+        assert_eq!(s.phys.read_u64(addr), 99);
+        // SC without reservation fails.
+        run(&mut h, &mut s, Op::Sc { width: MemWidth::D, rd: 5, rs1: 1, rs2: 2 });
+        assert_eq!(h.reg(5), 1);
+    }
+
+    #[test]
+    fn store_by_other_hart_breaks_reservation() {
+        let mut s = System::new(2, 1 << 20);
+        let mut h0 = Hart::new(0);
+        let mut h1 = Hart::new(1);
+        let addr = DRAM_BASE + 0x300;
+        h0.set_reg(1, addr);
+        h1.set_reg(1, addr);
+        h1.set_reg(2, 5);
+        exec_op(&mut h0, &mut s, &Op::Lr { width: MemWidth::D, rd: 3, rs1: 1 }, 0, 4).unwrap();
+        exec_op(&mut h1, &mut s, &Op::Store { width: MemWidth::D, rs1: 1, rs2: 2, imm: 0 }, 0, 4)
+            .unwrap();
+        exec_op(&mut h0, &mut s, &Op::Sc { width: MemWidth::D, rd: 4, rs1: 1, rs2: 3 }, 0, 4)
+            .unwrap();
+        assert_eq!(h0.reg(4), 1, "SC must fail after intervening store");
+        assert_eq!(s.phys.read_u64(addr), 5);
+    }
+
+    #[test]
+    fn amo_ops() {
+        let (mut h, mut s) = setup();
+        let addr = DRAM_BASE + 0x400;
+        s.phys.write_u32(addr, 10);
+        h.set_reg(1, addr);
+        h.set_reg(2, 32);
+        run(&mut h, &mut s, Op::Amo { op: AmoOp::Add, width: MemWidth::W, rd: 3, rs1: 1, rs2: 2 });
+        assert_eq!(h.reg(3), 10);
+        assert_eq!(s.phys.read_u32(addr), 42);
+        h.set_reg(2, 7);
+        run(&mut h, &mut s, Op::Amo { op: AmoOp::Swap, width: MemWidth::W, rd: 4, rs1: 1, rs2: 2 });
+        assert_eq!(h.reg(4), 42);
+        assert_eq!(s.phys.read_u32(addr), 7);
+        // amomax signed on negative
+        s.phys.write_u32(addr, (-5i32) as u32);
+        h.set_reg(2, 3);
+        run(&mut h, &mut s, Op::Amo { op: AmoOp::Max, width: MemWidth::W, rd: 5, rs1: 1, rs2: 2 });
+        assert_eq!(h.reg(5), (-5i64) as u64);
+        assert_eq!(s.phys.read_u32(addr), 3);
+    }
+
+    #[test]
+    fn csr_roundtrip_and_counters() {
+        let (mut h, mut s) = setup();
+        h.set_reg(1, 0x1234);
+        run(&mut h, &mut s, Op::Csr { op: CsrOp::Rw, imm_form: false, rd: 2, rs1: 1, csr: CSR_MSCRATCH });
+        run(&mut h, &mut s, Op::Csr { op: CsrOp::Rs, imm_form: false, rd: 3, rs1: 0, csr: CSR_MSCRATCH });
+        assert_eq!(h.reg(3), 0x1234);
+        // mcycle read reflects pending cycles
+        h.cycle = 100;
+        h.pending = 5;
+        run(&mut h, &mut s, Op::Csr { op: CsrOp::Rs, imm_form: false, rd: 4, rs1: 0, csr: CSR_MCYCLE });
+        assert_eq!(h.reg(4), 105);
+    }
+
+    #[test]
+    fn ecall_raises_per_privilege() {
+        let (mut h, mut s) = setup();
+        let pc = h.pc;
+        let e = exec_op(&mut h, &mut s, &Op::Ecall, pc, pc + 4).unwrap_err();
+        assert_eq!(e.cause, EXC_ECALL_M);
+        h.prv = Priv::User;
+        let e = exec_op(&mut h, &mut s, &Op::Ecall, pc, pc + 4).unwrap_err();
+        assert_eq!(e.cause, EXC_ECALL_U);
+    }
+
+    #[test]
+    fn mmio_store_reaches_uart() {
+        let (mut h, mut s) = setup();
+        h.set_reg(1, super::super::dev::UART_BASE);
+        h.set_reg(2, b'A' as u64);
+        run(&mut h, &mut s, Op::Store { width: MemWidth::B, rs1: 1, rs2: 2, imm: 0 });
+        assert_eq!(s.bus.uart.output, vec![b'A']);
+        // MMIO accesses charge latency and never install into L0
+        assert!(h.pending >= MMIO_LATENCY);
+        assert!(s.l0[0].d.lookup_read(super::super::dev::UART_BASE).is_none());
+    }
+
+    #[test]
+    fn fetch_basic_and_compressed() {
+        let (mut h, mut s) = setup();
+        // ecall (4 bytes) at DRAM_BASE, c.li a0,1 (2 bytes) at +4
+        s.phys.write_u32(DRAM_BASE, 0x0000_0073);
+        s.phys.write_u16(DRAM_BASE + 4, 0x4505);
+        assert_eq!(fetch_raw(&mut h, &mut s, DRAM_BASE).unwrap(), 0x0000_0073);
+        assert_eq!(fetch_raw(&mut h, &mut s, DRAM_BASE + 4).unwrap(), 0x4505);
+    }
+
+    #[test]
+    fn illegal_raises() {
+        let (mut h, mut s) = setup();
+        let pc = h.pc;
+        let e = exec_op(&mut h, &mut s, &Op::Illegal { raw: 0xffff_ffff }, pc, pc + 4)
+            .unwrap_err();
+        assert_eq!(e.cause, EXC_ILLEGAL);
+    }
+}

@@ -1,0 +1,565 @@
+//! Per-hart architectural state: registers, CSR file, privilege, traps,
+//! and the fiber bookkeeping used by the lockstep engine.
+
+use crate::isa::csr::*;
+
+/// A synchronous exception (or, with [`CAUSE_INTERRUPT`] set, an interrupt)
+/// to be delivered to the hart.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Trap {
+    pub cause: u64,
+    pub tval: u64,
+}
+
+impl Trap {
+    pub fn new(cause: u64, tval: u64) -> Trap {
+        Trap { cause, tval }
+    }
+}
+
+/// Side effects of system instructions that the execution engine (not the
+/// hart itself) must act on: code-cache and L0 flushes, model switches.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SideEffects {
+    /// fence.i executed — flush this hart's code cache.
+    pub fence_i: bool,
+    /// sfence.vma or satp write — flush translation-derived state
+    /// (L0 caches, simulated TLBs, code cache).
+    pub sfence: bool,
+    /// Translation-affecting mstatus bits (SUM/MXR/MPRV/MPP) changed —
+    /// flush the L0 caches (they are virtually tagged, not mode-tagged).
+    pub flush_l0: bool,
+    /// Vendor SIMCTRL CSR written with this value (§3.5 reconfiguration).
+    pub simctrl: Option<u64>,
+    /// Region-of-interest marker written (SIMMARK CSR).
+    pub mark: Option<u64>,
+}
+
+impl SideEffects {
+    #[inline]
+    pub fn any(&self) -> bool {
+        self.fence_i || self.sfence || self.flush_l0 || self.simctrl.is_some() || self.mark.is_some()
+    }
+
+    pub fn clear(&mut self) {
+        *self = SideEffects::default();
+    }
+}
+
+/// One simulated hardware thread.
+pub struct Hart {
+    pub id: usize,
+    pub regs: [u64; 32],
+    pub pc: u64,
+    pub prv: Priv,
+
+    // ---- CSR file ----------------------------------------------------------
+    pub mstatus: u64,
+    pub mie: u64,
+    /// Software-settable interrupt-pending bits (SSIP/STIP via SBI and
+    /// sip writes); CLINT/PLIC bits are ORed in dynamically.
+    pub mip: u64,
+    pub medeleg: u64,
+    pub mideleg: u64,
+    pub mtvec: u64,
+    pub mscratch: u64,
+    pub mepc: u64,
+    pub mcause: u64,
+    pub mtval: u64,
+    pub mcounteren: u64,
+    pub stvec: u64,
+    pub sscratch: u64,
+    pub sepc: u64,
+    pub scause: u64,
+    pub stval: u64,
+    pub scounteren: u64,
+    pub satp: u64,
+
+    /// Retired instruction counter (minstret).
+    pub instret: u64,
+
+    // ---- fiber / timing state ------------------------------------------------
+    /// Local cycle clock (mcycle). Advanced at yields.
+    pub cycle: u64,
+    /// Cycles accumulated since the last yield (§3.3.2 batched yield).
+    pub pending: u64,
+    /// Waiting for an interrupt (WFI).
+    pub wfi: bool,
+    /// Hart stopped (simulation exit).
+    pub halted: bool,
+
+    // ---- execution support -----------------------------------------------------
+    /// Pending side effects for the engine.
+    pub effects: SideEffects,
+}
+
+impl Hart {
+    pub fn new(id: usize) -> Hart {
+        Hart {
+            id,
+            regs: [0; 32],
+            pc: 0,
+            prv: Priv::Machine,
+            mstatus: 0,
+            mie: 0,
+            mip: 0,
+            medeleg: 0,
+            mideleg: 0,
+            mtvec: 0,
+            mscratch: 0,
+            mepc: 0,
+            mcause: 0,
+            mtval: 0,
+            mcounteren: 0,
+            stvec: 0,
+            sscratch: 0,
+            sepc: 0,
+            scause: 0,
+            stval: 0,
+            scounteren: 0,
+            satp: 0,
+            instret: 0,
+            cycle: 0,
+            pending: 0,
+            wfi: false,
+            halted: false,
+            effects: SideEffects::default(),
+        }
+    }
+
+    #[inline(always)]
+    pub fn reg(&self, r: u8) -> u64 {
+        self.regs[r as usize]
+    }
+
+    #[inline(always)]
+    pub fn set_reg(&mut self, r: u8, v: u64) {
+        if r != 0 {
+            self.regs[r as usize] = v;
+        }
+    }
+
+    /// Current cycle including not-yet-yielded pending cycles.
+    #[inline(always)]
+    pub fn now(&self) -> u64 {
+        self.cycle + self.pending
+    }
+
+    /// MMU context for data accesses (honours MPRV) — see `mem::mmu`.
+    pub fn mmu_data_ctx(&self) -> crate::mem::MmuCtx {
+        // MPRV: loads/stores execute at MPP privilege when set.
+        let prv = if self.mstatus & (1 << 17) != 0 && self.prv == Priv::Machine {
+            Priv::from_bits((self.mstatus & MSTATUS_MPP_MASK) >> MSTATUS_MPP_SHIFT)
+        } else {
+            self.prv
+        };
+        crate::mem::MmuCtx {
+            satp: self.satp,
+            prv,
+            sum: self.mstatus & MSTATUS_SUM != 0,
+            mxr: self.mstatus & MSTATUS_MXR != 0,
+        }
+    }
+
+    /// MMU context for instruction fetches (MPRV does not apply).
+    pub fn mmu_fetch_ctx(&self) -> crate::mem::MmuCtx {
+        crate::mem::MmuCtx { satp: self.satp, prv: self.prv, sum: false, mxr: false }
+    }
+
+    // ---- CSR access -----------------------------------------------------------
+
+    /// Read a CSR. `time` is the platform time value (CLINT mtime).
+    pub fn csr_read(&self, csr: u16, time: u64) -> Result<u64, Trap> {
+        self.csr_check(csr, false)?;
+        let v = match csr {
+            CSR_CYCLE | CSR_MCYCLE => self.now(),
+            CSR_TIME => time,
+            CSR_INSTRET | CSR_MINSTRET => self.instret,
+            CSR_SSTATUS => self.mstatus & (SSTATUS_MASK | MSTATUS_SPIE | MSTATUS_SPP),
+            CSR_SIE => self.mie & self.mideleg,
+            CSR_STVEC => self.stvec,
+            CSR_SCOUNTEREN => self.scounteren,
+            CSR_SSCRATCH => self.sscratch,
+            CSR_SEPC => self.sepc,
+            CSR_SCAUSE => self.scause,
+            CSR_STVAL => self.stval,
+            CSR_SIP => self.mip & self.mideleg,
+            CSR_SATP => self.satp,
+            CSR_MVENDORID => 0,
+            CSR_MARCHID => 0x52_32_56_4d, // "R2VM"
+            CSR_MIMPID => 1,
+            CSR_MHARTID => self.id as u64,
+            CSR_MSTATUS => self.mstatus,
+            CSR_MISA => {
+                // RV64IMAC
+                (2u64 << 62) | (1 << 0) | (1 << 2) | (1 << 8) | (1 << 12)
+            }
+            CSR_MEDELEG => self.medeleg,
+            CSR_MIDELEG => self.mideleg,
+            CSR_MIE => self.mie,
+            CSR_MTVEC => self.mtvec,
+            CSR_MCOUNTEREN => self.mcounteren,
+            CSR_MSCRATCH => self.mscratch,
+            CSR_MEPC => self.mepc,
+            CSR_MCAUSE => self.mcause,
+            CSR_MTVAL => self.mtval,
+            CSR_MIP => self.mip,
+            // SIMCTRL family reads are handled by the engine (they reflect
+            // coordinator state); the hart returns 0 as a placeholder and
+            // the engine patches the destination register.
+            CSR_SIMCTRL | CSR_SIMSTATS | CSR_SIMMARK => 0,
+            _ => return Err(Trap::new(EXC_ILLEGAL, 0)),
+        };
+        Ok(v)
+    }
+
+    /// Write a CSR (side effects recorded in `self.effects`).
+    pub fn csr_write(&mut self, csr: u16, value: u64) -> Result<(), Trap> {
+        self.csr_check(csr, true)?;
+        match csr {
+            CSR_SSTATUS => {
+                let old = self.mstatus;
+                self.mstatus = (self.mstatus & !SSTATUS_MASK) | (value & SSTATUS_MASK);
+                if (old ^ self.mstatus) & (MSTATUS_SUM | MSTATUS_MXR) != 0 {
+                    self.effects.flush_l0 = true;
+                }
+            }
+            CSR_SIE => {
+                self.mie = (self.mie & !self.mideleg) | (value & self.mideleg);
+            }
+            CSR_STVEC => self.stvec = value & !2,
+            CSR_SCOUNTEREN => self.scounteren = value & 0x7,
+            CSR_SSCRATCH => self.sscratch = value,
+            CSR_SEPC => self.sepc = value & !1,
+            CSR_SCAUSE => self.scause = value,
+            CSR_STVAL => self.stval = value,
+            CSR_SIP => {
+                // Only SSIP is software-writable through sip.
+                let mask = IRQ_SSIP & self.mideleg;
+                self.mip = (self.mip & !mask) | (value & mask);
+            }
+            CSR_SATP => {
+                let mode = value >> 60;
+                if mode == 0 || mode == 8 {
+                    self.satp = value;
+                    self.effects.sfence = true;
+                }
+                // Other modes: write ignored (WARL).
+            }
+            CSR_MSTATUS => {
+                let mask = MSTATUS_SIE
+                    | MSTATUS_MIE
+                    | MSTATUS_SPIE
+                    | MSTATUS_MPIE
+                    | MSTATUS_SPP
+                    | MSTATUS_MPP_MASK
+                    | MSTATUS_SUM
+                    | MSTATUS_MXR
+                    | (1 << 17); // MPRV
+                let old = self.mstatus;
+                self.mstatus = (self.mstatus & !mask) | (value & mask);
+                if (old ^ self.mstatus)
+                    & (MSTATUS_SUM | MSTATUS_MXR | (1 << 17) | MSTATUS_MPP_MASK)
+                    != 0
+                {
+                    self.effects.flush_l0 = true;
+                }
+            }
+            CSR_MISA => {}
+            CSR_MEDELEG => self.medeleg = value & 0xb3ff,
+            CSR_MIDELEG => self.mideleg = value & (IRQ_SSIP | IRQ_STIP | IRQ_SEIP),
+            CSR_MIE => {
+                self.mie = value & (IRQ_SSIP | IRQ_MSIP | IRQ_STIP | IRQ_MTIP | IRQ_SEIP | IRQ_MEIP)
+            }
+            CSR_MTVEC => self.mtvec = value & !2,
+            CSR_MCOUNTEREN => self.mcounteren = value & 0x7,
+            CSR_MSCRATCH => self.mscratch = value,
+            CSR_MEPC => self.mepc = value & !1,
+            CSR_MCAUSE => self.mcause = value,
+            CSR_MTVAL => self.mtval = value,
+            CSR_MIP => {
+                let mask = IRQ_SSIP | IRQ_STIP;
+                self.mip = (self.mip & !mask) | (value & mask);
+            }
+            CSR_MCYCLE => self.cycle = value,
+            CSR_MINSTRET => self.instret = value,
+            CSR_SIMCTRL => self.effects.simctrl = Some(value),
+            CSR_SIMMARK => self.effects.mark = Some(value),
+            CSR_SIMSTATS => {}
+            _ => return Err(Trap::new(EXC_ILLEGAL, 0)),
+        }
+        Ok(())
+    }
+
+    fn csr_check(&self, csr: u16, write: bool) -> Result<(), Trap> {
+        if write && csr_is_readonly(csr) {
+            return Err(Trap::new(EXC_ILLEGAL, 0));
+        }
+        // The SIMCTRL family is deliberately accessible from any privilege
+        // so workloads can bracket regions of interest (see isa::csr).
+        if matches!(csr, CSR_SIMCTRL | CSR_SIMSTATS | CSR_SIMMARK) {
+            return Ok(());
+        }
+        if self.prv < csr_min_priv(csr) {
+            return Err(Trap::new(EXC_ILLEGAL, 0));
+        }
+        Ok(())
+    }
+
+    // ---- traps -------------------------------------------------------------------
+
+    /// Deliver a trap; returns the new PC. `pc` is the PC of the faulting /
+    /// interrupted instruction.
+    pub fn take_trap(&mut self, trap: Trap, pc: u64) -> u64 {
+        let is_interrupt = trap.cause & CAUSE_INTERRUPT != 0;
+        let code = trap.cause & !CAUSE_INTERRUPT;
+        let delegated = self.prv <= Priv::Supervisor
+            && if is_interrupt {
+                self.mideleg >> code & 1 != 0
+            } else {
+                self.medeleg >> code & 1 != 0
+            };
+        if delegated {
+            self.scause = trap.cause;
+            self.sepc = pc;
+            self.stval = trap.tval;
+            // sstatus.SPIE = sstatus.SIE; SIE = 0; SPP = prv
+            let sie = (self.mstatus & MSTATUS_SIE) != 0;
+            self.mstatus &= !(MSTATUS_SPIE | MSTATUS_SPP | MSTATUS_SIE);
+            if sie {
+                self.mstatus |= MSTATUS_SPIE;
+            }
+            if self.prv == Priv::Supervisor {
+                self.mstatus |= MSTATUS_SPP;
+            }
+            self.prv = Priv::Supervisor;
+            let base = self.stvec & !3;
+            if self.stvec & 1 != 0 && is_interrupt {
+                base + 4 * code
+            } else {
+                base
+            }
+        } else {
+            self.mcause = trap.cause;
+            self.mepc = pc;
+            self.mtval = trap.tval;
+            let mie = (self.mstatus & MSTATUS_MIE) != 0;
+            self.mstatus &= !(MSTATUS_MPIE | MSTATUS_MPP_MASK | MSTATUS_MIE);
+            if mie {
+                self.mstatus |= MSTATUS_MPIE;
+            }
+            self.mstatus |= (self.prv as u64) << MSTATUS_MPP_SHIFT;
+            self.prv = Priv::Machine;
+            let base = self.mtvec & !3;
+            if self.mtvec & 1 != 0 && is_interrupt {
+                base + 4 * code
+            } else {
+                base
+            }
+        }
+    }
+
+    /// Execute MRET; returns the new PC.
+    pub fn mret(&mut self) -> u64 {
+        let mpp = Priv::from_bits((self.mstatus & MSTATUS_MPP_MASK) >> MSTATUS_MPP_SHIFT);
+        let mpie = self.mstatus & MSTATUS_MPIE != 0;
+        self.mstatus &= !(MSTATUS_MIE | MSTATUS_MPIE | MSTATUS_MPP_MASK);
+        if mpie {
+            self.mstatus |= MSTATUS_MIE;
+        }
+        self.mstatus |= MSTATUS_MPIE;
+        if mpp != Priv::Machine {
+            self.mstatus &= !(1 << 17); // clear MPRV on return to < M
+        }
+        self.prv = mpp;
+        self.mepc
+    }
+
+    /// Execute SRET; returns the new PC.
+    pub fn sret(&mut self) -> u64 {
+        let spp =
+            if self.mstatus & MSTATUS_SPP != 0 { Priv::Supervisor } else { Priv::User };
+        let spie = self.mstatus & MSTATUS_SPIE != 0;
+        self.mstatus &= !(MSTATUS_SIE | MSTATUS_SPIE | MSTATUS_SPP);
+        if spie {
+            self.mstatus |= MSTATUS_SIE;
+        }
+        self.mstatus |= MSTATUS_SPIE;
+        self.prv = spp;
+        self.sepc
+    }
+
+    /// Highest-priority pending+enabled interrupt, if one should be taken.
+    /// `mip_external` is the dynamically-computed CLINT/PLIC contribution.
+    pub fn pending_interrupt(&self, mip_external: u64) -> Option<u64> {
+        let pending = (self.mip | mip_external) & self.mie;
+        if pending == 0 {
+            return None;
+        }
+        // Machine-level interrupts (not delegated).
+        let m_pending = pending & !self.mideleg;
+        let m_enabled = self.prv < Priv::Machine
+            || (self.prv == Priv::Machine && self.mstatus & MSTATUS_MIE != 0);
+        if m_pending != 0 && m_enabled {
+            // Priority: MEI > MSI > MTI > SEI > SSI > STI
+            for bit in [IRQ_MEIP, IRQ_MSIP, IRQ_MTIP, IRQ_SEIP, IRQ_SSIP, IRQ_STIP] {
+                if m_pending & bit != 0 {
+                    return Some(CAUSE_INTERRUPT | bit.trailing_zeros() as u64);
+                }
+            }
+        }
+        // Supervisor-level (delegated) interrupts.
+        let s_pending = pending & self.mideleg;
+        let s_enabled = self.prv < Priv::Supervisor
+            || (self.prv == Priv::Supervisor && self.mstatus & MSTATUS_SIE != 0);
+        if s_pending != 0 && s_enabled {
+            for bit in [IRQ_SEIP, IRQ_SSIP, IRQ_STIP] {
+                if s_pending & bit != 0 {
+                    return Some(CAUSE_INTERRUPT | bit.trailing_zeros() as u64);
+                }
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reg_x0_hardwired() {
+        let mut h = Hart::new(0);
+        h.set_reg(0, 42);
+        assert_eq!(h.reg(0), 0);
+        h.set_reg(5, 42);
+        assert_eq!(h.reg(5), 42);
+    }
+
+    #[test]
+    fn csr_privilege_enforced() {
+        let mut h = Hart::new(0);
+        h.prv = Priv::User;
+        assert!(h.csr_read(CSR_MSTATUS, 0).is_err());
+        assert!(h.csr_write(CSR_MSTATUS, 0).is_err());
+        // counters readable from U (we don't model mcounteren gating of U)
+        assert!(h.csr_read(CSR_CYCLE, 0).is_ok());
+        // SIMCTRL family exempt
+        assert!(h.csr_write(CSR_SIMCTRL, 3).is_ok());
+        assert_eq!(h.effects.simctrl, Some(3));
+    }
+
+    #[test]
+    fn readonly_csr_write_traps() {
+        let mut h = Hart::new(0);
+        assert!(h.csr_write(CSR_MHARTID, 1).is_err());
+        assert_eq!(h.csr_read(CSR_MHARTID, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn trap_to_machine_mode() {
+        let mut h = Hart::new(0);
+        h.prv = Priv::User;
+        h.mtvec = 0x8000_0100;
+        h.mstatus |= MSTATUS_MIE;
+        let target = h.take_trap(Trap::new(EXC_ILLEGAL, 0xbad), 0x8000_0040);
+        assert_eq!(target, 0x8000_0100);
+        assert_eq!(h.prv, Priv::Machine);
+        assert_eq!(h.mepc, 0x8000_0040);
+        assert_eq!(h.mcause, EXC_ILLEGAL);
+        assert_eq!(h.mtval, 0xbad);
+        assert!(h.mstatus & MSTATUS_MIE == 0);
+        assert!(h.mstatus & MSTATUS_MPIE != 0);
+        // MPP = User
+        assert_eq!((h.mstatus & MSTATUS_MPP_MASK) >> MSTATUS_MPP_SHIFT, 0);
+    }
+
+    #[test]
+    fn trap_delegation_to_supervisor() {
+        let mut h = Hart::new(0);
+        h.prv = Priv::User;
+        h.medeleg = 1 << EXC_ECALL_U;
+        h.stvec = 0x8000_0200;
+        let target = h.take_trap(Trap::new(EXC_ECALL_U, 0), 0x1000);
+        assert_eq!(target, 0x8000_0200);
+        assert_eq!(h.prv, Priv::Supervisor);
+        assert_eq!(h.sepc, 0x1000);
+        // From machine mode, delegation must NOT apply.
+        let mut h = Hart::new(0);
+        h.prv = Priv::Machine;
+        h.medeleg = 1 << EXC_ILLEGAL;
+        h.mtvec = 0x8000_0300;
+        let target = h.take_trap(Trap::new(EXC_ILLEGAL, 0), 0x1000);
+        assert_eq!(target, 0x8000_0300);
+        assert_eq!(h.prv, Priv::Machine);
+    }
+
+    #[test]
+    fn mret_restores() {
+        let mut h = Hart::new(0);
+        h.prv = Priv::User;
+        h.mtvec = 0x100;
+        h.take_trap(Trap::new(EXC_ECALL_U, 0), 0x4000);
+        assert_eq!(h.prv, Priv::Machine);
+        let pc = h.mret();
+        assert_eq!(pc, 0x4000);
+        assert_eq!(h.prv, Priv::User);
+    }
+
+    #[test]
+    fn sret_restores() {
+        let mut h = Hart::new(0);
+        h.prv = Priv::User;
+        h.mideleg = IRQ_SSIP;
+        h.medeleg = 1 << EXC_ECALL_U;
+        h.stvec = 0x200;
+        h.take_trap(Trap::new(EXC_ECALL_U, 0), 0x5000);
+        assert_eq!(h.prv, Priv::Supervisor);
+        let pc = h.sret();
+        assert_eq!(pc, 0x5000);
+        assert_eq!(h.prv, Priv::User);
+    }
+
+    #[test]
+    fn interrupt_priority_and_enables() {
+        let mut h = Hart::new(0);
+        h.prv = Priv::Machine;
+        h.mie = IRQ_MTIP | IRQ_MSIP;
+        // MIE off in M-mode: no interrupt.
+        assert_eq!(h.pending_interrupt(IRQ_MTIP), None);
+        h.mstatus |= MSTATUS_MIE;
+        assert_eq!(h.pending_interrupt(IRQ_MTIP), Some(CAUSE_INTERRUPT | 7));
+        // MSI beats MTI.
+        assert_eq!(h.pending_interrupt(IRQ_MTIP | IRQ_MSIP), Some(CAUSE_INTERRUPT | 3));
+        // Lower privilege always takes machine interrupts.
+        h.prv = Priv::User;
+        h.mstatus &= !MSTATUS_MIE;
+        assert_eq!(h.pending_interrupt(IRQ_MTIP), Some(CAUSE_INTERRUPT | 7));
+    }
+
+    #[test]
+    fn delegated_interrupt_in_smode() {
+        let mut h = Hart::new(0);
+        h.prv = Priv::Supervisor;
+        h.mideleg = IRQ_SSIP;
+        h.mie = IRQ_SSIP;
+        h.mip = IRQ_SSIP;
+        assert_eq!(h.pending_interrupt(0), None); // SIE off
+        h.mstatus |= MSTATUS_SIE;
+        assert_eq!(h.pending_interrupt(0), Some(CAUSE_INTERRUPT | 1));
+        // In M-mode, delegated interrupts are masked.
+        h.prv = Priv::Machine;
+        h.mstatus |= MSTATUS_MIE;
+        assert_eq!(h.pending_interrupt(0), None);
+    }
+
+    #[test]
+    fn sstatus_view() {
+        let mut h = Hart::new(0);
+        h.csr_write(CSR_MSTATUS, MSTATUS_SIE | MSTATUS_MIE | MSTATUS_SUM).unwrap();
+        let s = h.csr_read(CSR_SSTATUS, 0).unwrap();
+        assert!(s & MSTATUS_SIE != 0);
+        assert!(s & MSTATUS_SUM != 0);
+        assert!(s & MSTATUS_MIE == 0, "machine bits must not leak into sstatus");
+    }
+}

@@ -1,0 +1,173 @@
+//! Guest image loading: flat `asm::Image`s and minimal ELF64.
+//!
+//! The ELF loader is dependency-free (parses only what full-system boot
+//! needs: PT_LOAD segments + entry point) so externally-built RISC-V
+//! binaries can be run when a toolchain is available.
+
+use super::System;
+use crate::asm::Image;
+
+/// Load a flat assembled image; returns the entry point.
+pub fn load_flat(sys: &System, image: &Image) -> u64 {
+    sys.phys.load_image(image.base, &image.bytes);
+    image.entry
+}
+
+#[derive(Debug)]
+pub enum ElfError {
+    BadMagic,
+    Not64Bit,
+    NotRiscV,
+    NotExecutable,
+    Truncated,
+    SegmentOutOfRange { vaddr: u64, size: u64 },
+}
+
+impl std::fmt::Display for ElfError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ElfError::BadMagic => write!(f, "not an ELF file"),
+            ElfError::Not64Bit => write!(f, "not a 64-bit ELF"),
+            ElfError::NotRiscV => write!(f, "not a RISC-V ELF (e_machine != 243)"),
+            ElfError::NotExecutable => write!(f, "not ET_EXEC/ET_DYN"),
+            ElfError::Truncated => write!(f, "truncated ELF"),
+            ElfError::SegmentOutOfRange { vaddr, size } => {
+                write!(f, "segment [{:#x}, +{:#x}) outside guest DRAM", vaddr, size)
+            }
+        }
+    }
+}
+
+impl std::error::Error for ElfError {}
+
+fn rd16(b: &[u8], off: usize) -> Result<u16, ElfError> {
+    b.get(off..off + 2)
+        .map(|s| u16::from_le_bytes(s.try_into().unwrap()))
+        .ok_or(ElfError::Truncated)
+}
+
+fn rd32(b: &[u8], off: usize) -> Result<u32, ElfError> {
+    b.get(off..off + 4)
+        .map(|s| u32::from_le_bytes(s.try_into().unwrap()))
+        .ok_or(ElfError::Truncated)
+}
+
+fn rd64(b: &[u8], off: usize) -> Result<u64, ElfError> {
+    b.get(off..off + 8)
+        .map(|s| u64::from_le_bytes(s.try_into().unwrap()))
+        .ok_or(ElfError::Truncated)
+}
+
+/// Load a statically-linked ELF64 RISC-V executable; returns the entry PC.
+pub fn load_elf(sys: &System, bytes: &[u8]) -> Result<u64, ElfError> {
+    if bytes.len() < 64 || &bytes[0..4] != b"\x7fELF" {
+        return Err(ElfError::BadMagic);
+    }
+    if bytes[4] != 2 {
+        return Err(ElfError::Not64Bit);
+    }
+    let e_type = rd16(bytes, 16)?;
+    if e_type != 2 && e_type != 3 {
+        return Err(ElfError::NotExecutable);
+    }
+    if rd16(bytes, 18)? != 243 {
+        return Err(ElfError::NotRiscV);
+    }
+    let e_entry = rd64(bytes, 24)?;
+    let e_phoff = rd64(bytes, 32)? as usize;
+    let e_phentsize = rd16(bytes, 54)? as usize;
+    let e_phnum = rd16(bytes, 56)? as usize;
+
+    for i in 0..e_phnum {
+        let ph = e_phoff + i * e_phentsize;
+        let p_type = rd32(bytes, ph)?;
+        if p_type != 1 {
+            continue; // PT_LOAD only
+        }
+        let p_offset = rd64(bytes, ph + 8)? as usize;
+        let p_paddr = rd64(bytes, ph + 24)?; // physical address
+        let p_filesz = rd64(bytes, ph + 32)? as usize;
+        let p_memsz = rd64(bytes, ph + 40)?;
+        if !sys.phys.contains(p_paddr, p_memsz) {
+            return Err(ElfError::SegmentOutOfRange { vaddr: p_paddr, size: p_memsz });
+        }
+        let data = bytes.get(p_offset..p_offset + p_filesz).ok_or(ElfError::Truncated)?;
+        sys.phys.load_image(p_paddr, data);
+        // BSS (memsz > filesz) is already zero (fresh DRAM) — but clear
+        // anyway in case of reuse.
+        for k in p_filesz as u64..p_memsz {
+            sys.phys.write_u8(p_paddr + k, 0);
+        }
+    }
+    Ok(e_entry)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::DRAM_BASE;
+
+    /// Hand-build a minimal ELF with one PT_LOAD segment.
+    fn mini_elf(entry: u64, seg_addr: u64, payload: &[u8]) -> Vec<u8> {
+        let mut e = vec![0u8; 64 + 56];
+        e[0..4].copy_from_slice(b"\x7fELF");
+        e[4] = 2; // 64-bit
+        e[5] = 1; // little-endian
+        e[16..18].copy_from_slice(&2u16.to_le_bytes()); // ET_EXEC
+        e[18..20].copy_from_slice(&243u16.to_le_bytes()); // EM_RISCV
+        e[24..32].copy_from_slice(&entry.to_le_bytes());
+        e[32..40].copy_from_slice(&64u64.to_le_bytes()); // phoff
+        e[54..56].copy_from_slice(&56u16.to_le_bytes()); // phentsize
+        e[56..58].copy_from_slice(&1u16.to_le_bytes()); // phnum
+        // program header at 64
+        let ph = 64;
+        e[ph..ph + 4].copy_from_slice(&1u32.to_le_bytes()); // PT_LOAD
+        let data_off = e.len() as u64;
+        e[ph + 8..ph + 16].copy_from_slice(&data_off.to_le_bytes());
+        e[ph + 16..ph + 24].copy_from_slice(&seg_addr.to_le_bytes()); // vaddr
+        e[ph + 24..ph + 32].copy_from_slice(&seg_addr.to_le_bytes()); // paddr
+        e[ph + 32..ph + 40].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+        e[ph + 40..ph + 48].copy_from_slice(&(payload.len() as u64 + 16).to_le_bytes()); // memsz > filesz
+        e.extend_from_slice(payload);
+        e
+    }
+
+    #[test]
+    fn load_mini_elf() {
+        let sys = System::new(1, 1 << 20);
+        let elf = mini_elf(DRAM_BASE, DRAM_BASE, &[1, 2, 3, 4]);
+        let entry = load_elf(&sys, &elf).unwrap();
+        assert_eq!(entry, DRAM_BASE);
+        assert_eq!(sys.phys.read_bytes(DRAM_BASE, 4), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn reject_non_elf() {
+        let sys = System::new(1, 1 << 20);
+        assert!(matches!(load_elf(&sys, b"not an elf"), Err(ElfError::BadMagic)));
+    }
+
+    #[test]
+    fn reject_wrong_machine() {
+        let sys = System::new(1, 1 << 20);
+        let mut elf = mini_elf(DRAM_BASE, DRAM_BASE, &[0]);
+        elf[18..20].copy_from_slice(&62u16.to_le_bytes()); // x86-64
+        assert!(matches!(load_elf(&sys, &elf), Err(ElfError::NotRiscV)));
+    }
+
+    #[test]
+    fn reject_out_of_range_segment() {
+        let sys = System::new(1, 1 << 20);
+        let elf = mini_elf(0, 0x1000, &[0]); // below DRAM
+        assert!(matches!(load_elf(&sys, &elf), Err(ElfError::SegmentOutOfRange { .. })));
+    }
+
+    #[test]
+    fn load_flat_image() {
+        let sys = System::new(1, 1 << 20);
+        let mut a = crate::asm::Assembler::new(DRAM_BASE);
+        a.nop();
+        let img = a.finish();
+        assert_eq!(load_flat(&sys, &img), DRAM_BASE);
+    }
+}

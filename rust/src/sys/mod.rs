@@ -1,0 +1,174 @@
+//! Full-system substrate: hart state, instruction semantics, devices,
+//! environment-call emulation (SBI / Linux syscalls), and loaders.
+
+pub mod dev;
+pub mod exec;
+pub mod hart;
+pub mod loader;
+pub mod sbi;
+pub mod syscall;
+
+pub use hart::{Hart, SideEffects, Trap};
+
+use crate::analytics::trace::TraceCapture;
+use crate::mem::l0::L0Set;
+use crate::mem::{AtomicModel, MemoryModel, PhysMem, DRAM_BASE};
+use dev::DeviceBus;
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
+
+/// How ECALL is handled outside the guest (paper §3.5: user-level,
+/// supervisor-level and machine-level simulation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EcallMode {
+    /// Full machine-level simulation: every ecall traps into guest code.
+    Machine,
+    /// Supervisor-level simulation: ecalls from S-mode are emulated as SBI
+    /// calls; M-mode is not simulated.
+    Sbi,
+    /// User-level simulation: ecalls from U-mode are emulated as Linux
+    /// syscalls.
+    Syscall,
+}
+
+/// Shared system state: everything outside per-hart architectural state.
+///
+/// Held by the execution engines alongside the `Hart` vector; memory models
+/// receive `&mut [L0Set]` so coherence events can flush *other* harts' L0
+/// caches (Fig 3 / §3.4.3).
+pub struct System {
+    pub phys: Arc<PhysMem>,
+    pub bus: DeviceBus,
+    pub model: Box<dyn MemoryModel>,
+    pub l0: Vec<L0Set>,
+    /// LR reservations per hart: (physical address, loaded value). The
+    /// value is used by SC in parallel mode (compare-and-swap commit).
+    pub reservations: Vec<Option<(u64, u64)>>,
+    /// Number of live reservations (hot-path fast check).
+    pub active_reservations: u32,
+    /// Pending inter-processor interrupt bits per hart (posted by SBI
+    /// emulation, folded into `mip` at the next interrupt poll).
+    pub ipi: Vec<u64>,
+    /// Program break for user-level syscall emulation.
+    pub brk: u64,
+    /// Bump pointer for emulated anonymous mmap.
+    pub mmap_top: u64,
+    pub ecall_mode: EcallMode,
+    /// Simulation exit requested (SIMIO write / exit syscall / SBI
+    /// shutdown) with exit code.
+    pub exit: Option<u64>,
+    /// Packed current model configuration, readable via the SIMCTRL CSR.
+    pub simctrl_state: u64,
+    /// Optional analytics trace capture.
+    pub trace: Option<TraceCapture>,
+    /// Bypass the L0 fast path entirely, invoking the memory model on
+    /// every access (paper §3.4.1's exact-replacement escape hatch; also
+    /// the A2 ablation and the gem5-like baseline's behaviour).
+    pub force_cold: bool,
+    /// Functional-parallel execution mode (§3.5): other harts run in other
+    /// host threads; AMO/LR/SC must use host atomics.
+    pub parallel: bool,
+    /// Cross-thread exit flag for parallel mode (u64::MAX = running).
+    pub shared_exit: Option<Arc<AtomicU64>>,
+    pub num_harts: usize,
+}
+
+impl System {
+    /// Build a system with the given DRAM size and the Atomic memory model.
+    pub fn new(num_harts: usize, dram_size: usize) -> System {
+        System::with_model(num_harts, dram_size, Box::new(AtomicModel))
+    }
+
+    pub fn with_model(
+        num_harts: usize,
+        dram_size: usize,
+        model: Box<dyn MemoryModel>,
+    ) -> System {
+        System::with_shared_phys(num_harts, Arc::new(PhysMem::new(DRAM_BASE, dram_size)), model)
+    }
+
+    /// Build a system over pre-existing (possibly shared) guest DRAM —
+    /// the parallel functional mode gives every hart thread its own
+    /// `System` over one shared `PhysMem`.
+    pub fn with_shared_phys(
+        num_harts: usize,
+        phys: Arc<PhysMem>,
+        model: Box<dyn MemoryModel>,
+    ) -> System {
+        let dram_size = phys.size() as usize;
+        System {
+            phys,
+            bus: DeviceBus::new(num_harts),
+            model,
+            l0: (0..num_harts).map(|_| L0Set::new(6)).collect(),
+            reservations: vec![None; num_harts],
+            active_reservations: 0,
+            ipi: vec![0; num_harts],
+            brk: DRAM_BASE + (dram_size as u64) / 2,
+            mmap_top: DRAM_BASE + (dram_size as u64) * 3 / 4,
+            ecall_mode: EcallMode::Sbi,
+            exit: None,
+            simctrl_state: 0,
+            trace: None,
+            force_cold: false,
+            parallel: false,
+            shared_exit: None,
+            num_harts,
+        }
+    }
+
+    /// Replace the memory model at runtime (§3.5): flushes all L0 caches
+    /// and the old model's state.
+    pub fn set_model(&mut self, model: Box<dyn MemoryModel>) {
+        self.model.flush_all(&mut self.l0);
+        self.model = model;
+        for set in &mut self.l0 {
+            set.clear();
+        }
+    }
+
+    /// Reconfigure the L0 cache-line size (§3.5), flushing.
+    pub fn set_line_shift(&mut self, line_shift: u32) {
+        for set in &mut self.l0 {
+            set.d.set_line_shift(line_shift);
+            set.i.set_line_shift(line_shift);
+        }
+    }
+
+    /// Clear another hart's (or any hart's) LR reservation if it covers
+    /// `paddr` — invoked on stores so contended LR/SC stays atomic.
+    #[inline]
+    pub fn clear_reservations(&mut self, paddr: u64, except: usize) {
+        if self.active_reservations == 0 {
+            return;
+        }
+        for (h, r) in self.reservations.iter_mut().enumerate() {
+            if h != except {
+                if let Some((addr, _)) = *r {
+                    // Reserve at 64-byte granularity (a cache line).
+                    if addr >> 6 == paddr >> 6 {
+                        *r = None;
+                        self.active_reservations -= 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Dispatch an ECALL to the configured emulation layer (§3.5).
+/// Returns `true` if emulated — the engine then resumes after the ecall —
+/// or `false` to deliver the trap to guest code.
+pub fn handle_ecall(hart: &mut Hart, sys: &mut System) -> bool {
+    match sys.ecall_mode {
+        EcallMode::Machine => false,
+        EcallMode::Sbi => sbi::handle_sbi(hart, sys),
+        EcallMode::Syscall => {
+            if hart.prv == crate::isa::csr::Priv::User {
+                syscall::handle_syscall(hart, sys)
+            } else {
+                sbi::handle_sbi(hart, sys)
+            }
+        }
+    }
+}

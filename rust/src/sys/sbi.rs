@@ -1,0 +1,209 @@
+//! SBI (Supervisor Binary Interface) emulation (paper §3.5:
+//! "for supervisor-level [simulation], SBI calls are emulated").
+//!
+//! Implements the legacy extensions plus the base/TIME/sPI/SRST extensions
+//! — enough to run bare-metal SMP workloads and simple kernels. IPIs are
+//! posted into `System::ipi` and folded into the target hart's `mip` by the
+//! execution engine at its next interrupt poll (block end, §3.3.2).
+
+use super::hart::Hart;
+use super::System;
+use crate::isa::csr::{IRQ_SSIP, IRQ_STIP};
+
+// Legacy extension IDs (a7).
+const LEGACY_SET_TIMER: u64 = 0;
+const LEGACY_CONSOLE_PUTCHAR: u64 = 1;
+const LEGACY_CONSOLE_GETCHAR: u64 = 2;
+const LEGACY_CLEAR_IPI: u64 = 3;
+const LEGACY_SEND_IPI: u64 = 4;
+const LEGACY_SHUTDOWN: u64 = 8;
+
+// Modern extension IDs.
+const EXT_BASE: u64 = 0x10;
+const EXT_TIME: u64 = 0x54494D45;
+const EXT_SPI: u64 = 0x735049;
+const EXT_SRST: u64 = 0x53525354;
+
+/// riscv-tests-style "proxy" exit: `a7 == 93` is treated as exit(a0) in
+/// SBI mode so bare-metal M-mode workloads can terminate cleanly.
+const PROXY_EXIT: u64 = 93;
+
+const SBI_SUCCESS: u64 = 0;
+const SBI_ERR_NOT_SUPPORTED: u64 = (-2i64) as u64;
+
+/// Handle an ecall as an SBI call. Mutates hart registers (a0/a1 return
+/// values per the SBI calling convention). Returns `true` if handled (the
+/// engine then resumes at the instruction after the ecall).
+pub fn handle_sbi(hart: &mut Hart, sys: &mut System) -> bool {
+    let eid = hart.reg(17); // a7
+    let fid = hart.reg(16); // a6
+    let a0 = hart.reg(10);
+
+    match eid {
+        LEGACY_SET_TIMER => {
+            sys.bus.clint.mtimecmp[hart.id] = a0;
+            hart.mip &= !IRQ_STIP;
+            hart.set_reg(10, 0);
+            true
+        }
+        LEGACY_CONSOLE_PUTCHAR => {
+            sys.bus.uart.write(0, a0);
+            hart.set_reg(10, 0);
+            true
+        }
+        LEGACY_CONSOLE_GETCHAR => {
+            hart.set_reg(10, u64::MAX); // no input
+            true
+        }
+        LEGACY_CLEAR_IPI => {
+            hart.mip &= !IRQ_SSIP;
+            hart.set_reg(10, 0);
+            true
+        }
+        LEGACY_SEND_IPI => {
+            // Deviation from the legacy ABI (documented in DESIGN.md):
+            // a0 is the hart mask *value*, not a pointer to it.
+            post_ipis(sys, a0, IRQ_SSIP);
+            hart.set_reg(10, 0);
+            true
+        }
+        LEGACY_SHUTDOWN => {
+            sys.exit = Some(0);
+            true
+        }
+        PROXY_EXIT => {
+            sys.exit = Some(a0);
+            true
+        }
+        EXT_BASE => {
+            let v = match fid {
+                0 => 0x0100_0000u64, // spec version 1.0
+                1 => 0x52_32_56_4d,  // impl id "R2VM"
+                2 => 1,              // impl version
+                3 => {
+                    // probe_extension(a0)
+                    let known = matches!(a0, EXT_BASE | EXT_TIME | EXT_SPI | EXT_SRST)
+                        || a0 <= LEGACY_SHUTDOWN;
+                    hart.set_reg(10, SBI_SUCCESS);
+                    hart.set_reg(11, known as u64);
+                    return true;
+                }
+                4 | 5 | 6 => 0, // mvendorid/marchid/mimpid
+                _ => {
+                    hart.set_reg(10, SBI_ERR_NOT_SUPPORTED);
+                    return true;
+                }
+            };
+            hart.set_reg(10, SBI_SUCCESS);
+            hart.set_reg(11, v);
+            true
+        }
+        EXT_TIME => {
+            if fid == 0 {
+                sys.bus.clint.mtimecmp[hart.id] = a0;
+                hart.mip &= !IRQ_STIP;
+                hart.set_reg(10, SBI_SUCCESS);
+                hart.set_reg(11, 0);
+                true
+            } else {
+                hart.set_reg(10, SBI_ERR_NOT_SUPPORTED);
+                true
+            }
+        }
+        EXT_SPI => {
+            if fid == 0 {
+                // send_ipi(hart_mask, hart_mask_base)
+                let base = hart.reg(11);
+                let mask = if base == u64::MAX { a0 } else { a0 << base };
+                post_ipis(sys, mask, IRQ_SSIP);
+                hart.set_reg(10, SBI_SUCCESS);
+                hart.set_reg(11, 0);
+                true
+            } else {
+                hart.set_reg(10, SBI_ERR_NOT_SUPPORTED);
+                true
+            }
+        }
+        EXT_SRST => {
+            sys.exit = Some(hart.reg(11)); // reset reason as exit code
+            true
+        }
+        _ => false,
+    }
+}
+
+fn post_ipis(sys: &mut System, mask: u64, bits: u64) {
+    for h in 0..sys.num_harts {
+        if mask & (1 << h) != 0 {
+            sys.ipi[h] |= bits;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Hart, System) {
+        (Hart::new(0), System::new(2, 1 << 20))
+    }
+
+    #[test]
+    fn putchar_and_shutdown() {
+        let (mut h, mut s) = setup();
+        h.set_reg(17, LEGACY_CONSOLE_PUTCHAR);
+        h.set_reg(10, b'Z' as u64);
+        assert!(handle_sbi(&mut h, &mut s));
+        assert_eq!(s.bus.uart.output, vec![b'Z']);
+        h.set_reg(17, LEGACY_SHUTDOWN);
+        assert!(handle_sbi(&mut h, &mut s));
+        assert_eq!(s.exit, Some(0));
+    }
+
+    #[test]
+    fn set_timer_programs_clint() {
+        let (mut h, mut s) = setup();
+        h.set_reg(17, LEGACY_SET_TIMER);
+        h.set_reg(10, 12345);
+        h.mip = IRQ_STIP;
+        assert!(handle_sbi(&mut h, &mut s));
+        assert_eq!(s.bus.clint.mtimecmp[0], 12345);
+        assert_eq!(h.mip & IRQ_STIP, 0, "pending STIP must be cleared");
+    }
+
+    #[test]
+    fn ipi_posts_to_target() {
+        let (mut h, mut s) = setup();
+        h.set_reg(17, LEGACY_SEND_IPI);
+        h.set_reg(10, 0b10); // hart 1
+        assert!(handle_sbi(&mut h, &mut s));
+        assert_eq!(s.ipi[1], IRQ_SSIP);
+        assert_eq!(s.ipi[0], 0);
+    }
+
+    #[test]
+    fn proxy_exit() {
+        let (mut h, mut s) = setup();
+        h.set_reg(17, 93);
+        h.set_reg(10, 7);
+        assert!(handle_sbi(&mut h, &mut s));
+        assert_eq!(s.exit, Some(7));
+    }
+
+    #[test]
+    fn base_extension_probe() {
+        let (mut h, mut s) = setup();
+        h.set_reg(17, EXT_BASE);
+        h.set_reg(16, 3);
+        h.set_reg(10, EXT_TIME);
+        assert!(handle_sbi(&mut h, &mut s));
+        assert_eq!(h.reg(11), 1);
+    }
+
+    #[test]
+    fn unknown_extension_unhandled() {
+        let (mut h, mut s) = setup();
+        h.set_reg(17, 0xdeadbeef);
+        assert!(!handle_sbi(&mut h, &mut s));
+    }
+}

@@ -1,0 +1,209 @@
+//! User-level Linux syscall emulation (paper §3.5: "for user-level
+//! simulation, Linux syscalls are emulated").
+//!
+//! Implements the subset needed by the built-in workloads and simple
+//! statically-linked programs: console I/O, exit, brk, and benign stubs for
+//! common process-setup calls. RISC-V Linux syscall numbers.
+
+use super::exec::{read_mem, write_mem};
+use super::hart::Hart;
+use super::System;
+use crate::isa::MemWidth;
+
+pub const SYS_GETCWD: u64 = 17;
+pub const SYS_FCNTL: u64 = 25;
+pub const SYS_IOCTL: u64 = 29;
+pub const SYS_CLOSE: u64 = 57;
+pub const SYS_LSEEK: u64 = 62;
+pub const SYS_READ: u64 = 63;
+pub const SYS_WRITE: u64 = 64;
+pub const SYS_WRITEV: u64 = 66;
+pub const SYS_READLINKAT: u64 = 78;
+pub const SYS_FSTAT: u64 = 80;
+pub const SYS_EXIT: u64 = 93;
+pub const SYS_EXIT_GROUP: u64 = 94;
+pub const SYS_SET_TID_ADDRESS: u64 = 96;
+pub const SYS_CLOCK_GETTIME: u64 = 113;
+pub const SYS_SCHED_YIELD: u64 = 124;
+pub const SYS_TIMES: u64 = 153;
+pub const SYS_UNAME: u64 = 160;
+pub const SYS_GETPID: u64 = 172;
+pub const SYS_GETUID: u64 = 174;
+pub const SYS_BRK: u64 = 214;
+pub const SYS_MUNMAP: u64 = 215;
+pub const SYS_MMAP: u64 = 222;
+
+const ENOSYS: u64 = (-38i64) as u64;
+const EBADF: u64 = (-9i64) as u64;
+
+/// Handle an ecall from U-mode as a Linux syscall. Returns `true` if the
+/// call was emulated (a0 holds the return value).
+pub fn handle_syscall(hart: &mut Hart, sys: &mut System) -> bool {
+    let nr = hart.reg(17);
+    let (a0, a1, a2) = (hart.reg(10), hart.reg(11), hart.reg(12));
+    let ret: u64 = match nr {
+        SYS_EXIT | SYS_EXIT_GROUP => {
+            sys.exit = Some(a0);
+            0
+        }
+        SYS_WRITE => {
+            if a0 == 1 || a0 == 2 {
+                let mut written = 0;
+                for i in 0..a2 {
+                    match read_mem(hart, sys, a1 + i, MemWidth::B) {
+                        Ok(b) => {
+                            sys.bus.uart.write(0, b);
+                            written += 1;
+                        }
+                        Err(_) => break,
+                    }
+                }
+                written
+            } else {
+                EBADF
+            }
+        }
+        SYS_WRITEV => {
+            // iovec array at a1, count a2
+            let mut total = 0u64;
+            for i in 0..a2 {
+                let base = match read_mem(hart, sys, a1 + i * 16, MemWidth::D) {
+                    Ok(v) => v,
+                    Err(_) => break,
+                };
+                let len = match read_mem(hart, sys, a1 + i * 16 + 8, MemWidth::D) {
+                    Ok(v) => v,
+                    Err(_) => break,
+                };
+                for k in 0..len {
+                    if let Ok(b) = read_mem(hart, sys, base + k, MemWidth::B) {
+                        sys.bus.uart.write(0, b);
+                        total += 1;
+                    }
+                }
+            }
+            total
+        }
+        SYS_READ => 0, // EOF
+        SYS_BRK => {
+            if a0 == 0 {
+                sys.brk
+            } else {
+                sys.brk = a0;
+                sys.brk
+            }
+        }
+        SYS_MMAP => {
+            // Anonymous-mapping bump allocator.
+            let len = (a1 + 0xfff) & !0xfff;
+            let addr = sys.mmap_top;
+            sys.mmap_top += len;
+            addr
+        }
+        SYS_MUNMAP => 0,
+        SYS_CLOCK_GETTIME => {
+            // timespec{sec, nsec} derived from the cycle counter @1GHz.
+            let cycles = hart.now();
+            let sec = cycles / 1_000_000_000;
+            let nsec = cycles % 1_000_000_000;
+            if write_mem(hart, sys, a1, MemWidth::D, sec).is_err()
+                || write_mem(hart, sys, a1 + 8, MemWidth::D, nsec).is_err()
+            {
+                (-14i64) as u64 // EFAULT
+            } else {
+                0
+            }
+        }
+        SYS_TIMES => hart.now(),
+        SYS_UNAME => {
+            // struct utsname: 6 fields x 65 bytes
+            let fields = ["Linux", "r2vm", "6.0.0-r2vm", "r2vm-repro", "riscv64", ""];
+            let mut ok = true;
+            for (i, f) in fields.iter().enumerate() {
+                let base = a0 + (i as u64) * 65;
+                for (k, b) in f.bytes().chain(std::iter::once(0)).enumerate() {
+                    if write_mem(hart, sys, base + k as u64, MemWidth::B, b as u64).is_err() {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if ok {
+                0
+            } else {
+                (-14i64) as u64
+            }
+        }
+        SYS_GETPID => 1,
+        SYS_GETUID => 0,
+        SYS_SET_TID_ADDRESS => 1,
+        SYS_SCHED_YIELD => 0,
+        SYS_CLOSE | SYS_LSEEK | SYS_FCNTL | SYS_IOCTL => 0,
+        SYS_FSTAT | SYS_READLINKAT | SYS_GETCWD => ENOSYS,
+        _ => ENOSYS,
+    };
+    hart.set_reg(10, ret);
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::DRAM_BASE;
+
+    fn setup() -> (Hart, System) {
+        let mut h = Hart::new(0);
+        h.prv = crate::isa::csr::Priv::User;
+        (h, System::new(1, 1 << 20))
+    }
+
+    #[test]
+    fn write_to_stdout() {
+        let (mut h, mut s) = setup();
+        s.phys.load_image(DRAM_BASE + 0x100, b"hello");
+        h.set_reg(17, SYS_WRITE);
+        h.set_reg(10, 1);
+        h.set_reg(11, DRAM_BASE + 0x100);
+        h.set_reg(12, 5);
+        assert!(handle_syscall(&mut h, &mut s));
+        assert_eq!(h.reg(10), 5);
+        assert_eq!(s.bus.uart.output_str(), "hello");
+    }
+
+    #[test]
+    fn exit_sets_code() {
+        let (mut h, mut s) = setup();
+        h.set_reg(17, SYS_EXIT);
+        h.set_reg(10, 3);
+        handle_syscall(&mut h, &mut s);
+        assert_eq!(s.exit, Some(3));
+    }
+
+    #[test]
+    fn brk_and_mmap() {
+        let (mut h, mut s) = setup();
+        s.brk = DRAM_BASE + 0x10000;
+        s.mmap_top = DRAM_BASE + 0x80000;
+        h.set_reg(17, SYS_BRK);
+        h.set_reg(10, 0);
+        handle_syscall(&mut h, &mut s);
+        assert_eq!(h.reg(10), DRAM_BASE + 0x10000);
+        h.set_reg(17, SYS_MMAP);
+        h.set_reg(10, 0);
+        h.set_reg(11, 0x2345);
+        handle_syscall(&mut h, &mut s);
+        assert_eq!(h.reg(10), DRAM_BASE + 0x80000);
+        h.set_reg(17, SYS_MMAP);
+        h.set_reg(11, 0x1000);
+        handle_syscall(&mut h, &mut s);
+        assert_eq!(h.reg(10), DRAM_BASE + 0x80000 + 0x3000);
+    }
+
+    #[test]
+    fn unknown_syscall_enosys() {
+        let (mut h, mut s) = setup();
+        h.set_reg(17, 9999);
+        handle_syscall(&mut h, &mut s);
+        assert_eq!(h.reg(10) as i64, -38);
+    }
+}

@@ -1,0 +1,229 @@
+//! `coremark-lite`: a CoreMark-flavoured integer benchmark.
+//!
+//! Same role as CoreMark in the paper's §4.1: a small-working-set integer
+//! workload whose data fits in L1, so pipeline-model validation is not
+//! perturbed by the memory system. Three kernels per iteration, matching
+//! CoreMark's structure (CRC, matrix, list processing), with the result
+//! accumulated into a checksum that the workload exits with (guarding
+//! against dead-code elimination *and* simulator bugs: every engine must
+//! produce the identical checksum).
+
+use crate::asm::*;
+use crate::mem::DRAM_BASE;
+
+pub const DEFAULT_ITERS: u32 = 40;
+
+/// Deterministic expected checksum, computed by a Rust model of the same
+/// algorithm (used by tests; the guest must match).
+pub fn expected_checksum(iters: u32) -> u64 {
+    let mut check: u64 = 0;
+    // Input buffer: LCG-filled 256 bytes, same constants as the guest.
+    let mut buf = [0u8; 256];
+    let mut seed: u64 = 0x12345678;
+    for b in buf.iter_mut() {
+        seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        *b = (seed >> 33) as u8;
+    }
+    for _ in 0..iters {
+        // CRC-16/CCITT over the buffer.
+        let mut crc: u64 = 0xffff;
+        for &b in buf.iter() {
+            crc ^= (b as u64) << 8;
+            for _ in 0..8 {
+                if crc & 0x8000 != 0 {
+                    crc = ((crc << 1) ^ 0x1021) & 0xffff;
+                } else {
+                    crc = (crc << 1) & 0xffff;
+                }
+            }
+        }
+        check = check.wrapping_add(crc);
+
+        // 8x8 integer matmul: A[i][j] = i*8+j+iter_lo, B = A^T-ish.
+        let mut acc: u64 = 0;
+        for i in 0..8u64 {
+            for j in 0..8u64 {
+                let mut s: u64 = 0;
+                for k in 0..8u64 {
+                    let a = (i * 8 + k).wrapping_add(crc & 0xff);
+                    let b = (k * 8 + j) ^ 5;
+                    s = s.wrapping_add(a.wrapping_mul(b));
+                }
+                acc = acc.wrapping_add(s);
+            }
+        }
+        check = check.wrapping_add(acc & 0xffff_ffff);
+
+        // Linked list: 64 nodes in an array, next = (i*7+1)%64 ring;
+        // traverse 64 hops summing node values (value = i^crc low byte).
+        let mut idx: u64 = 0;
+        let mut sum: u64 = 0;
+        for _ in 0..64 {
+            sum = sum.wrapping_add(idx ^ (crc & 0xff));
+            idx = (idx * 7 + 1) % 64;
+        }
+        check = check.wrapping_add(sum);
+    }
+    check
+}
+
+/// Assemble the guest program.
+pub fn build(iters: u32) -> Image {
+    let mut a = Assembler::new(DRAM_BASE);
+    let buf = a.new_label();
+
+    // ---- register plan -----------------------------------------------------
+    // s0 = &buf, s1 = iteration counter, s2 = checksum
+    // s3 = crc of current iteration
+    // t* = scratch
+
+    let start = a.new_label();
+    a.j(start);
+    a.align(8);
+    a.bind(buf);
+    a.zero_fill(256);
+    a.align(4);
+    a.bind(start);
+
+    a.la(S0, buf);
+    // Fill buffer with LCG bytes: seed in t0.
+    a.li(T0, 0x12345678);
+    a.li(T1, 6364136223846793005u64 as i64);
+    a.li(T2, 1442695040888963407u64 as i64);
+    a.li(T3, 0); // index
+    a.li(T4, 256);
+    let fill = a.here();
+    a.mul(T0, T0, T1);
+    a.add(T0, T0, T2);
+    a.srli(T5, T0, 33);
+    a.add(T6, S0, T3);
+    a.sb(T5, T6, 0);
+    a.addi(T3, T3, 1);
+    a.blt(T3, T4, fill);
+
+    a.li(S1, iters as i64);
+    a.li(S2, 0); // checksum
+    a.li(S6, 0x1021); // CRC polynomial (doesn't fit a 12-bit immediate)
+    a.li(S7, 0xffff);
+
+    let iter_top = a.here();
+
+    // ---- kernel 1: CRC-16/CCITT -------------------------------------------
+    a.li(S3, 0xffff);
+    a.li(T3, 0); // byte index
+    a.li(T4, 256);
+    let crc_byte = a.here();
+    a.add(T6, S0, T3);
+    a.lbu(T5, T6, 0);
+    a.slli(T5, T5, 8);
+    a.xor(S3, S3, T5);
+    a.li(T1, 8); // bit counter
+    let crc_bit = a.here();
+    a.li(T2, 0x8000);
+    a.and(T2, S3, T2);
+    a.slli(S3, S3, 1);
+    let no_poly = a.new_label();
+    a.beqz(T2, no_poly);
+    a.xor(S3, S3, S6);
+    a.bind(no_poly);
+    a.and(S3, S3, S7);
+    a.addi(T1, T1, -1);
+    a.bnez(T1, crc_bit);
+    a.addi(T3, T3, 1);
+    a.blt(T3, T4, crc_byte);
+    a.add(S2, S2, S3);
+
+    // ---- kernel 2: 8x8 integer matmul ----------------------------------------
+    // acc in s4; i=t0, j=t1, k=t2, s=t3
+    a.li(S4, 0);
+    a.andi(S5, S3, 0xff); // crc & 0xff
+    a.li(T0, 0);
+    let mi = a.here();
+    a.li(T1, 0);
+    let mj = a.here();
+    a.li(T3, 0); // s
+    a.li(T2, 0);
+    let mk = a.here();
+    // a_val = i*8 + k + s5
+    a.slli(T4, T0, 3);
+    a.add(T4, T4, T2);
+    a.add(T4, T4, S5);
+    // b_val = (k*8 + j) ^ 5
+    a.slli(T5, T2, 3);
+    a.add(T5, T5, T1);
+    a.xori(T5, T5, 5);
+    a.mul(T4, T4, T5);
+    a.add(T3, T3, T4);
+    a.addi(T2, T2, 1);
+    a.slti(T6, T2, 8);
+    a.bnez(T6, mk);
+    a.add(S4, S4, T3);
+    a.addi(T1, T1, 1);
+    a.slti(T6, T1, 8);
+    a.bnez(T6, mj);
+    a.addi(T0, T0, 1);
+    a.slti(T6, T0, 8);
+    a.bnez(T6, mi);
+    // check += acc & 0xffffffff
+    a.slli(S4, S4, 32);
+    a.srli(S4, S4, 32);
+    a.add(S2, S2, S4);
+
+    // ---- kernel 3: linked-list ring traversal ---------------------------------
+    // idx=t0, sum=t1, hops=t2
+    a.li(T0, 0);
+    a.li(T1, 0);
+    a.li(T2, 64);
+    a.li(T5, 64);
+    let hop = a.here();
+    a.xor(T4, T0, S5);
+    a.add(T1, T1, T4);
+    // idx = (idx*7 + 1) % 64
+    a.slli(T4, T0, 3);
+    a.sub(T4, T4, T0);
+    a.addi(T4, T4, 1);
+    a.remu(T0, T4, T5);
+    a.addi(T2, T2, -1);
+    a.bnez(T2, hop);
+    a.add(S2, S2, T1);
+
+    a.addi(S1, S1, -1);
+    a.bnez(S1, iter_top);
+
+    // exit(checksum)
+    a.mv(A0, S2);
+    a.li(A7, 93);
+    a.ecall();
+    a.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_image, SimConfig};
+    use crate::interp::ExitReason;
+
+    #[test]
+    fn checksum_matches_rust_model() {
+        let iters = 3;
+        let img = build(iters);
+        let mut cfg = SimConfig::default();
+        cfg.max_insts = 50_000_000;
+        let r = run_image(&cfg, &img);
+        assert_eq!(r.exit, ExitReason::Exited(expected_checksum(iters)));
+    }
+
+    #[test]
+    fn same_checksum_across_engines() {
+        let iters = 2;
+        let want = ExitReason::Exited(expected_checksum(iters));
+        let img = build(iters);
+        for mode in ["interp", "lockstep"] {
+            let mut cfg = SimConfig::default();
+            cfg.set("mode", mode).unwrap();
+            cfg.pipeline = "inorder".into();
+            let r = run_image(&cfg, &img);
+            assert_eq!(r.exit, want, "mode {}", mode);
+        }
+    }
+}

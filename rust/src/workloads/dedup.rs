@@ -1,0 +1,249 @@
+//! `dedup`: parallel chunk deduplication — the PARSEC-dedup stand-in used
+//! for Figure 5's integer multicore throughput measurement.
+//!
+//! Hart 0 fills a shared input buffer with LCG data containing repeated
+//! chunks; then all harts race: each claims the next 256-byte chunk with an
+//! `amoadd` on a shared cursor, computes an FNV-1a hash of the chunk, and
+//! inserts it into a shared open-addressing hash table guarded by an LR/SC
+//! spinlock. Hart 0 finally exits with the number of *unique* chunks — a
+//! value that is wrong if coherence, atomics or lockstep interleaving are
+//! broken.
+
+use crate::asm::*;
+use crate::mem::DRAM_BASE;
+
+pub const DEFAULT_CHUNKS: u32 = 64;
+pub const CHUNK_BYTES: u64 = 256;
+const TABLE_SLOTS: u64 = 512; // power of two
+
+/// Rust model of the guest computation → expected unique-chunk count.
+pub fn expected_unique(chunks: u32) -> u64 {
+    let data = gen_input(chunks);
+    let mut seen = std::collections::HashSet::new();
+    for c in 0..chunks as usize {
+        let chunk = &data[c * CHUNK_BYTES as usize..(c + 1) * CHUNK_BYTES as usize];
+        let mut h: u64 = 0xcbf29ce484222325;
+        for &b in chunk {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        seen.insert(h);
+    }
+    seen.len() as u64
+}
+
+/// Same generator as the guest: chunk c is filled from an LCG seeded with
+/// `c % 8` — so at most 8 distinct chunk contents exist.
+fn gen_input(chunks: u32) -> Vec<u8> {
+    let mut v = Vec::with_capacity((chunks as u64 * CHUNK_BYTES) as usize);
+    for c in 0..chunks as u64 {
+        let mut seed: u64 = c % 8;
+        for _ in 0..CHUNK_BYTES {
+            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            v.push((seed >> 33) as u8);
+        }
+    }
+    v
+}
+
+pub fn build(harts: usize, chunks: u32) -> Image {
+    let harts = harts.max(1) as u64;
+    let mut a = Assembler::new(DRAM_BASE);
+    // Code first: the input buffer can be multi-MiB, beyond jal range, so
+    // all data labels are bound after the code (la is pc-relative +-2GiB).
+    let cursor = a.new_label();
+    let lock = a.new_label();
+    let unique = a.new_label();
+    let done = a.new_label();
+    let ready = a.new_label();
+    let table = a.new_label();
+    let input = a.new_label();
+
+    // ---- parallel initialisation: hart h fills chunks h, h+H, h+2H, ... -------
+    // (keeps the serial fraction near zero so Figure 5's parallel-scaling
+    // shape is not Amdahl-capped by a single-hart fill)
+    a.csrr(S3, crate::isa::csr::CSR_MHARTID);
+    a.la(S0, input);
+    a.mv(S1, S3); // c = hartid
+    a.li(S2, chunks as i64);
+    a.li(S6, 6364136223846793005u64 as i64);
+    a.li(S7, 1442695040888963407u64 as i64);
+    let fill_done = a.new_label();
+    a.bge(S1, S2, fill_done);
+    let fill_chunk = a.here();
+    a.andi(T1, S1, 7); // seed = c % 8
+    a.slli(T4, S1, 8); // ptr = input + c*256
+    a.add(T4, T4, S0);
+    a.li(T2, CHUNK_BYTES as i64);
+    let fill_byte = a.here();
+    a.mul(T1, T1, S6);
+    a.add(T1, T1, S7);
+    a.srli(T3, T1, 33);
+    a.sb(T3, T4, 0);
+    a.addi(T4, T4, 1);
+    a.addi(T2, T2, -1);
+    a.bnez(T2, fill_byte);
+    a.addi(S1, S1, harts as i32);
+    a.blt(S1, S2, fill_chunk);
+    a.bind(fill_done);
+    // barrier: ready += 1; wait until ready == harts
+    a.la(T1, ready);
+    a.li(T2, 1);
+    a.fence();
+    a.amoadd_w(ZERO, T2, T1);
+    let spin_ready = a.here();
+    a.lw(T2, T1, 0);
+    a.li(T3, harts as i64);
+    a.blt(T2, T3, spin_ready);
+
+    // ---- worker loop ---------------------------------------------------------
+    // s0=&input s1=&cursor s2=&table s3=&lock s4=&unique
+    a.la(S0, input);
+    a.la(S1, cursor);
+    a.la(S2, table);
+    a.la(S3, lock);
+    a.la(S4, unique);
+    a.li(S5, chunks as i64);
+    a.li(S6, 0xcbf29ce484222325u64 as i64); // FNV offset basis
+    a.li(S7, 0x100000001b3u64 as i64); // FNV prime
+
+    let claim = a.here();
+    // c = amoadd(cursor, 1)
+    a.li(T0, 1);
+    a.amoadd_d(T1, T0, S1);
+    let finished = a.new_label();
+    a.bge(T1, S5, finished);
+    // hash chunk c: ptr = input + c*256
+    a.slli(T2, T1, 8);
+    a.add(T2, T2, S0);
+    a.mv(T3, S6); // h
+    a.li(T4, CHUNK_BYTES as i64);
+    let hash_byte = a.here();
+    a.lbu(T5, T2, 0);
+    a.xor(T3, T3, T5);
+    a.mul(T3, T3, S7);
+    a.addi(T2, T2, 1);
+    a.addi(T4, T4, -1);
+    a.bnez(T4, hash_byte);
+    // ensure h != 0 (0 marks an empty slot)
+    let h_ok = a.new_label();
+    a.bnez(T3, h_ok);
+    a.li(T3, 1);
+    a.bind(h_ok);
+
+    // ---- lock(acquire) -----------------------------------------------------
+    let acq = a.here();
+    a.lr_w(T0, S3);
+    a.bnez(T0, acq);
+    a.li(T1, 1);
+    a.sc_w(T0, T1, S3);
+    a.bnez(T0, acq);
+
+    // ---- open-addressing insert: slot = h & (SLOTS-1) -------------------------
+    a.li(T6, (TABLE_SLOTS - 1) as i64);
+    a.and(T1, T3, T6);
+    let probe = a.here();
+    a.slli(T2, T1, 3);
+    a.add(T2, T2, S2);
+    a.ld(T4, T2, 0);
+    let empty = a.new_label();
+    let next_probe = a.new_label();
+    let inserted = a.new_label();
+    a.beqz(T4, empty);
+    a.beq(T4, T3, inserted); // already present
+    a.bind(next_probe);
+    a.addi(T1, T1, 1);
+    a.and(T1, T1, T6);
+    a.j(probe);
+    a.bind(empty);
+    a.sd(T3, T2, 0);
+    // unique++
+    a.ld(T4, S4, 0);
+    a.addi(T4, T4, 1);
+    a.sd(T4, S4, 0);
+    a.bind(inserted);
+
+    // ---- unlock ---------------------------------------------------------------
+    a.fence();
+    a.amoswap_w(ZERO, ZERO, S3);
+    a.j(claim);
+
+    // ---- join ------------------------------------------------------------------
+    a.bind(finished);
+    a.la(T0, done);
+    a.li(T1, 1);
+    a.amoadd_d(ZERO, T1, T0);
+    a.csrr(T2, crate::isa::csr::CSR_MHARTID);
+    let park = a.here();
+    a.bnez(T2, park);
+    // hart 0: wait for all harts then exit(unique)
+    let wait_done = a.here();
+    a.ld(T1, T0, 0);
+    a.li(T3, harts as i64);
+    a.blt(T1, T3, wait_done);
+    a.ld(A0, S4, 0);
+    a.li(A7, 93);
+    a.ecall();
+
+    // ---- data (after code: the input buffer can exceed jal range) -------------
+    a.align(64);
+    a.bind(cursor);
+    a.d64(0); // next chunk index
+    a.align(64);
+    a.bind(lock);
+    a.d32(0);
+    a.align(64);
+    a.bind(unique);
+    a.d64(0);
+    a.align(64);
+    a.bind(done);
+    a.d64(0);
+    a.align(64);
+    a.bind(ready);
+    a.d64(0);
+    a.align(64);
+    a.bind(table);
+    a.zero_fill((TABLE_SLOTS * 8) as usize); // hash values; 0 = empty
+    a.align(64);
+    a.bind(input);
+    a.zero_fill((chunks as u64 * CHUNK_BYTES) as usize);
+    a.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_image, SimConfig};
+    use crate::interp::ExitReason;
+
+    #[test]
+    fn expected_unique_is_bounded() {
+        // ≤ 8 distinct chunk contents by construction.
+        assert!(expected_unique(64) <= 8);
+        assert_eq!(expected_unique(8), 8);
+    }
+
+    #[test]
+    fn dedup_lockstep_4_harts() {
+        let img = build(4, 32);
+        let mut cfg = SimConfig::default();
+        cfg.harts = 4;
+        cfg.pipeline = "simple".into();
+        cfg.set("memory", "mesi").unwrap();
+        cfg.max_insts = 100_000_000;
+        let r = run_image(&cfg, &img);
+        assert_eq!(r.exit, ExitReason::Exited(expected_unique(32)));
+    }
+
+    #[test]
+    fn dedup_parallel_matches() {
+        let img = build(4, 32);
+        let mut cfg = SimConfig::default();
+        cfg.harts = 4;
+        cfg.pipeline = "atomic".into();
+        cfg.set("mode", "parallel").unwrap();
+        cfg.max_insts = 100_000_000;
+        let r = run_image(&cfg, &img);
+        assert_eq!(r.exit, ExitReason::Exited(expected_unique(32)));
+    }
+}

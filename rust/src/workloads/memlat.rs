@@ -1,0 +1,146 @@
+//! `memlat`: dependent pointer chase — the 7-zip MemLat stand-in (§4.1).
+//!
+//! Builds a pointer ring covering `ws_bytes` of memory with a 64-byte
+//! stride (one hop per cache line, shuffled to defeat prefetch-like
+//! artefacts), then performs `steps` dependent loads. Load-to-use latency
+//! dominates, so the measured cycles/step directly reflects the memory
+//! model's hit/miss behaviour as the working set sweeps across cache and
+//! TLB capacities.
+
+use crate::asm::*;
+use crate::mem::DRAM_BASE;
+
+/// Sv39 variant: identical chase, but run from S-mode under an identity
+/// gigapage mapping so the simulated TLB (4 KiB-granular tags) is
+/// exercised — used by the E3 TLB sweep.
+pub fn build_paged(ws_bytes: u64, steps: u64) -> Image {
+    use crate::isa::csr::*;
+    use crate::mem::mmu::pte;
+    let stride = 64u64;
+    let slots = (ws_bytes / stride).max(2);
+    let mut a = Assembler::new(DRAM_BASE);
+    let start = a.new_label();
+    a.j(start);
+    a.align(4096);
+    let root = a.here();
+    let gigapage_pte =
+        ((DRAM_BASE >> 12) << 10) | pte::V | pte::R | pte::W | pte::X | pte::A | pte::D;
+    for i in 0..512u64 {
+        a.d64(if i == 2 { gigapage_pte } else { 0 });
+    }
+    a.align(4);
+    a.bind(start);
+    a.la(T0, root);
+    a.srli(T0, T0, 12);
+    a.li(T1, (8u64 << 60) as i64);
+    a.or(T0, T0, T1);
+    a.csrw(CSR_SATP, T0);
+    a.sfence_vma();
+    a.li(T2, MSTATUS_MPP_MASK as i64);
+    a.csrrc(ZERO, CSR_MSTATUS, T2);
+    a.li(T2, (1u64 << MSTATUS_MPP_SHIFT) as i64);
+    a.csrrs(ZERO, CSR_MSTATUS, T2);
+    let smain = a.new_label();
+    a.la(T3, smain);
+    a.csrw(CSR_MEPC, T3);
+    a.mret();
+
+    a.bind(smain);
+    let ring = a.new_label();
+    emit_chase(&mut a, ring, slots, steps);
+    a.align(64);
+    a.bind(ring);
+    a.zero_fill((slots * stride) as usize);
+    a.finish()
+}
+
+/// Emit ring build + timed chase + exit; `ring` must be bound later.
+fn emit_chase(a: &mut Assembler, ring: Label, slots: u64, steps: u64) {
+    a.la(S0, ring);
+    a.li(S1, slots as i64);
+    a.li(T0, 0);
+    let build_loop = a.here();
+    a.addi(T1, T0, 17);
+    a.remu(T1, T1, S1);
+    a.slli(T2, T1, 6);
+    a.add(T2, T2, S0);
+    a.slli(T3, T0, 6);
+    a.add(T3, T3, S0);
+    a.sd(T2, T3, 0);
+    a.addi(T0, T0, 1);
+    a.blt(T0, S1, build_loop);
+
+    a.mv(T0, S0);
+    a.li(T1, steps as i64);
+    a.csrr(S2, crate::isa::csr::CSR_CYCLE);
+    let chase = a.here();
+    a.ld(T0, T0, 0);
+    a.addi(T1, T1, -1);
+    a.bnez(T1, chase);
+    a.csrr(S3, crate::isa::csr::CSR_CYCLE);
+    a.sub(S3, S3, S2);
+    a.mv(A0, S3);
+    a.li(A7, 93);
+    a.ecall();
+    a.sd(T0, S0, 0);
+}
+
+/// Cycles per chase step measured on the host model — computed by the
+/// validation example from `RunReport`, not here.
+pub fn build(ws_bytes: u64, steps: u64) -> Image {
+    let stride = 64u64;
+    let slots = (ws_bytes / stride).max(2);
+    let mut a = Assembler::new(DRAM_BASE);
+    // Code first; the (potentially multi-MiB) ring lives after the exit
+    // sequence so no jump has to span it (`la` is pc-relative ±2 GiB).
+    // Ring permutation: next(i) = (i + 17) % slots — a single cycle
+    // covering every slot, with hops that defeat spatial locality.
+    let ring = a.new_label();
+    emit_chase(&mut a, ring, slots, steps);
+    a.align(64);
+    a.bind(ring);
+    a.zero_fill((slots * stride) as usize);
+    a.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_image, SimConfig};
+    use crate::interp::ExitReason;
+
+    fn chase_cycles(ws: u64, memory: &str) -> u64 {
+        let steps = 20_000;
+        let img = build(ws, steps);
+        let mut cfg = SimConfig::default();
+        cfg.pipeline = "inorder".into();
+        cfg.set("memory", memory).unwrap();
+        cfg.max_insts = 50_000_000;
+        let r = run_image(&cfg, &img);
+        match r.exit {
+            ExitReason::Exited(cycles) => cycles,
+            other => panic!("{:?}", other),
+        }
+    }
+
+    #[test]
+    fn cache_model_sees_working_set_cliff() {
+        // 8 KiB fits the 16 KiB L1; 256 KiB does not.
+        let small = chase_cycles(8 << 10, "cache");
+        let large = chase_cycles(256 << 10, "cache");
+        assert!(
+            large > small * 2,
+            "thrashing chase must be much slower: small={} large={}",
+            small,
+            large
+        );
+    }
+
+    #[test]
+    fn atomic_model_is_flat() {
+        let small = chase_cycles(8 << 10, "atomic");
+        let large = chase_cycles(256 << 10, "atomic");
+        let ratio = large as f64 / small as f64;
+        assert!(ratio < 1.2, "atomic model must not see the working set: {}", ratio);
+    }
+}

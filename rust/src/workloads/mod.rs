@@ -1,0 +1,95 @@
+//! Built-in guest workloads, hand-assembled with `crate::asm` (no RISC-V
+//! cross-toolchain is available in this environment; see DESIGN.md §3 for
+//! the paper-benchmark → built-in-workload mapping):
+//!
+//! * `coremark-lite` — CRC-16 + 8×8 integer matmul + linked-list traversal;
+//!   small working set (the paper's CoreMark role: pipeline validation
+//!   unperturbed by the memory system, §4.1).
+//! * `dedup` — rolling-hash chunk deduplication over a shared buffer with a
+//!   spinlock-protected hash table, parallel across harts (the paper's
+//!   PARSEC dedup role: integer multicore throughput, Figure 5).
+//! * `memlat` — dependent pointer chase sweeping working-set size (the
+//!   paper's 7-zip MemLat role: TLB/cache model validation, §4.1).
+//! * `spinlock` — two harts contending a LR/SC lock (the paper's MESI
+//!   validation microbenchmark, §4.1).
+//! * `vm-sv39` — enables Sv39 paging from S-mode and runs under
+//!   translation (exercises the MMU + TLB model + L0-as-TLB mode).
+//! * `hello` — SBI console smoke test.
+
+pub mod coremark;
+pub mod dedup;
+pub mod memlat;
+pub mod spinlock;
+pub mod vm;
+
+use crate::asm::Image;
+
+/// (name, description) of every built-in workload.
+pub const WORKLOADS: &[(&str, &str)] = &[
+    ("coremark-lite", "CRC-16 + 8x8 matmul + linked list; pipeline validation"),
+    ("dedup", "parallel rolling-hash dedup with shared hash table (PARSEC-dedup role)"),
+    ("memlat", "dependent pointer chase, 64 KiB working set (MemLat role)"),
+    ("spinlock", "2+ harts contending an LR/SC spinlock (MESI validation)"),
+    ("vm-sv39", "Sv39 paging enabled; countdown under translation"),
+    ("hello", "SBI console hello world"),
+];
+
+/// Build a workload image by name with default parameters.
+pub fn build(name: &str, harts: usize) -> Option<Image> {
+    match name {
+        "coremark-lite" => Some(coremark::build(coremark::DEFAULT_ITERS)),
+        "dedup" => Some(dedup::build(harts, dedup::DEFAULT_CHUNKS)),
+        "memlat" => Some(memlat::build(64 << 10, 200_000)),
+        "spinlock" => Some(spinlock::build(harts.max(2), 2_000)),
+        "vm-sv39" => Some(vm::build(500)),
+        "hello" => Some(hello()),
+        _ => None,
+    }
+}
+
+/// SBI console hello world.
+pub fn hello() -> Image {
+    use crate::asm::*;
+    let mut a = Assembler::new(crate::mem::DRAM_BASE);
+    let msg = a.new_label();
+    a.la(S0, msg);
+    let loop_ = a.here();
+    a.lbu(A0, S0, 0);
+    let done = a.new_label();
+    a.beqz(A0, done);
+    a.li(A7, 1); // SBI console_putchar
+    a.ecall();
+    a.addi(S0, S0, 1);
+    a.j(loop_);
+    a.bind(done);
+    a.li(A0, 0);
+    a.li(A7, 93);
+    a.ecall();
+    a.align(8);
+    a.bind(msg);
+    a.bytes(b"hello from r2vm-repro guest\n\0");
+    a.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_image, SimConfig};
+    use crate::interp::ExitReason;
+
+    #[test]
+    fn all_workloads_build() {
+        for (name, _) in WORKLOADS {
+            assert!(build(name, 4).is_some(), "workload {} must build", name);
+        }
+        assert!(build("nope", 1).is_none());
+    }
+
+    #[test]
+    fn hello_prints() {
+        let cfg = SimConfig::default();
+        let r = run_image(&cfg, &hello());
+        assert_eq!(r.exit, ExitReason::Exited(0));
+        assert_eq!(r.console, "hello from r2vm-repro guest\n");
+    }
+}

@@ -1,0 +1,98 @@
+//! `spinlock`: harts contend a single LR/SC spinlock around a shared
+//! counter — the MESI validation microbenchmark of §4.1 ("two cores are
+//! heavily contending over a shared spin-lock").
+
+use crate::asm::*;
+use crate::mem::DRAM_BASE;
+
+/// Each of `harts` harts increments the shared counter `iters` times under
+/// the lock; hart 0 exits with the final counter (must equal harts*iters).
+pub fn build(harts: usize, iters: u32) -> Image {
+    let harts = harts.max(2);
+    let mut a = Assembler::new(DRAM_BASE);
+    let start = a.new_label();
+    a.j(start);
+    a.align(64);
+    let lock = a.here();
+    a.d32(0);
+    a.align(64);
+    let counter = a.here();
+    a.d64(0);
+    a.align(64);
+    let done = a.here();
+    a.d64(0);
+    a.align(4);
+    a.bind(start);
+
+    a.la(S0, lock);
+    a.la(S1, counter);
+    a.la(S2, done);
+    a.li(S3, iters as i64);
+
+    let outer = a.here();
+    // acquire
+    let acq = a.here();
+    a.lr_w(T0, S0);
+    a.bnez(T0, acq);
+    a.li(T1, 1);
+    a.sc_w(T0, T1, S0);
+    a.bnez(T0, acq);
+    // critical section (non-atomic increment — the lock must protect it)
+    a.ld(T2, S1, 0);
+    a.addi(T2, T2, 1);
+    a.sd(T2, S1, 0);
+    // release
+    a.fence();
+    a.sw(ZERO, S0, 0);
+    a.addi(S3, S3, -1);
+    a.bnez(S3, outer);
+
+    // join
+    a.li(T1, 1);
+    a.amoadd_d(ZERO, T1, S2);
+    a.csrr(T2, crate::isa::csr::CSR_MHARTID);
+    let park = a.here();
+    a.bnez(T2, park);
+    let wait = a.here();
+    a.ld(T1, S2, 0);
+    a.li(T3, harts as i64);
+    a.blt(T1, T3, wait);
+    a.ld(A0, S1, 0);
+    a.li(A7, 93);
+    a.ecall();
+    a.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_image, SimConfig};
+    use crate::interp::ExitReason;
+
+    #[test]
+    fn mesi_lockstep_no_lost_updates() {
+        let img = build(2, 500);
+        let mut cfg = SimConfig::default();
+        cfg.harts = 2;
+        cfg.pipeline = "inorder".into();
+        cfg.set("memory", "mesi").unwrap();
+        cfg.max_insts = 50_000_000;
+        let r = run_image(&cfg, &img);
+        assert_eq!(r.exit, ExitReason::Exited(1000));
+        // Contention must show up as coherence traffic.
+        let inv = r.model_stats.iter().find(|(k, _)| *k == "invalidations").unwrap().1;
+        assert!(inv > 100, "invalidations={}", inv);
+    }
+
+    #[test]
+    fn four_hart_contention() {
+        let img = build(4, 200);
+        let mut cfg = SimConfig::default();
+        cfg.harts = 4;
+        cfg.pipeline = "simple".into();
+        cfg.set("memory", "mesi").unwrap();
+        cfg.max_insts = 100_000_000;
+        let r = run_image(&cfg, &img);
+        assert_eq!(r.exit, ExitReason::Exited(800));
+    }
+}

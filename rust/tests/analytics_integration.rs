@@ -1,0 +1,150 @@
+//! X1: cross-language agreement of the analytics engines.
+//!
+//! The XLA-offloaded exact-LRU cache / branch-predictor models (AOT-compiled
+//! from JAX/Pallas, executed via PJRT) must agree bit-for-bit with the
+//! native Rust formulation on random and structured traces — including
+//! state carried across chunk boundaries.
+//!
+//! Requires `make artifacts`; tests skip (with a message) if absent.
+
+use r2vm::analytics::native::{BpredSim, LruCacheSim};
+use r2vm::analytics::trace::{BranchRecord, MemRecord};
+use r2vm::runtime::analytics_exe::{XlaBpredSim, XlaCacheSim};
+use r2vm::runtime::artifacts_dir;
+
+fn have_artifacts() -> bool {
+    let dir = artifacts_dir();
+    if dir.join("cache_sim.hlo.txt").is_file() && dir.join("meta.json").is_file() {
+        true
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        false
+    }
+}
+
+/// Deterministic xorshift PRNG (no rand crate offline).
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+}
+
+#[test]
+fn cache_sim_xla_matches_native_random_trace() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut xla = XlaCacheSim::load(&artifacts_dir()).expect("load cache_sim artifact");
+    let meta = xla.meta;
+    let mut native = LruCacheSim::new(meta.sets, meta.ways, meta.line_shift);
+
+    let mut rng = Rng(0x1234_5678_9abc_def0);
+    // 4 chunks: state must carry across chunk boundaries.
+    for chunk_no in 0..4 {
+        let n = match chunk_no {
+            0 => meta.chunk,     // full chunk
+            1 => meta.chunk / 2, // partial (padding path)
+            2 => 1,
+            _ => meta.chunk / 3,
+        };
+        let recs: Vec<MemRecord> = (0..n)
+            .map(|_| {
+                // Mix of hot lines (high reuse) and a long tail.
+                let r = rng.next();
+                let line = if r % 4 == 0 { r % 32 } else { r % 4096 };
+                MemRecord { paddr: line << meta.line_shift, write: r % 3 == 0, hart: 0 }
+            })
+            .collect();
+        let xla_hits = xla.run_chunk(&recs).expect("run chunk");
+        let native_hits = native.run_chunk(&recs);
+        assert_eq!(xla_hits, native_hits, "chunk {} hit mismatch", chunk_no);
+    }
+    assert_eq!(xla.hits, native.hits);
+    assert_eq!(xla.accesses, native.accesses);
+    assert!(xla.hit_rate() > 0.05 && xla.hit_rate() < 0.95, "trace should be interesting");
+}
+
+#[test]
+fn cache_sim_xla_sequential_scan_semantics() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut xla = XlaCacheSim::load(&artifacts_dir()).expect("load");
+    let meta = xla.meta;
+    // Working set exactly capacity: second pass must hit 100%.
+    let lines: Vec<MemRecord> = (0..(meta.sets * meta.ways) as u64)
+        .map(|i| MemRecord { paddr: i << meta.line_shift, write: false, hart: 0 })
+        .collect();
+    let h1 = xla.run_chunk(&lines).unwrap();
+    assert_eq!(h1, 0, "cold pass");
+    let h2 = xla.run_chunk(&lines).unwrap();
+    assert_eq!(h2 as usize, meta.sets * meta.ways, "warm pass must fully hit");
+}
+
+#[test]
+fn bpred_xla_matches_native() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut xla = XlaBpredSim::load(&artifacts_dir()).expect("load bpred artifact");
+    let entries = xla.meta.bpred_entries;
+    let mut native = BpredSim::new(entries);
+    let mut rng = Rng(0xfeed_beef_cafe_1234);
+    for _ in 0..3 {
+        let recs: Vec<BranchRecord> = (0..500)
+            .map(|_| {
+                let r = rng.next();
+                let pc = (r % 256) << 1;
+                // biased branches: mostly taken for even slots
+                let taken = if pc % 4 == 0 { r % 8 != 0 } else { r % 2 == 0 };
+                BranchRecord { pc, taken, hart: 0 }
+            })
+            .collect();
+        let xc = xla.run_chunk(&recs).expect("run chunk");
+        let nc = native.run_chunk(&recs);
+        assert_eq!(xc, nc);
+    }
+    assert_eq!(xla.correct, native.correct);
+    assert!(xla.accuracy() > 0.5);
+}
+
+#[test]
+fn end_to_end_trace_capture_to_xla() {
+    if !have_artifacts() {
+        return;
+    }
+    // Run memlat with trace capture, then replay the captured trace through
+    // both analytics engines — the full L3 → runtime → L2 → L1 path.
+    let img = r2vm::workloads::memlat::build(32 << 10, 6000);
+    let mut cfg = r2vm::coordinator::SimConfig::default();
+    cfg.set("trace", "100000").unwrap();
+    cfg.max_insts = 10_000_000;
+    let sys = r2vm::coordinator::build_system(&cfg);
+    let mut eng = r2vm::fiber::FiberEngine::new(sys, "simple");
+    let entry = r2vm::sys::loader::load_flat(&eng.sys, &img);
+    eng.set_entry(entry);
+    let exit = eng.run(cfg.max_insts);
+    assert!(matches!(exit, r2vm::interp::ExitReason::Exited(_)));
+
+    let trace = eng.sys.trace.take().unwrap();
+    assert!(trace.mem.len() > 5000, "captured {} accesses", trace.mem.len());
+
+    let mut xla = XlaCacheSim::load(&artifacts_dir()).expect("load");
+    let meta = xla.meta;
+    let mut native = LruCacheSim::new(meta.sets, meta.ways, meta.line_shift);
+    for chunk in trace.mem.chunks(meta.chunk) {
+        let xh = xla.run_chunk(chunk).expect("chunk");
+        let nh = native.run_chunk(chunk);
+        assert_eq!(xh, nh);
+    }
+    // The pointer-chase working set (32 KiB) exceeds the 16 KiB modelled
+    // cache, so the hit rate must be well below 1.
+    assert!(xla.hit_rate() < 0.9, "hit rate {}", xla.hit_rate());
+}

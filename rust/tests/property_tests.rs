@@ -1,0 +1,329 @@
+//! Property-based tests over the simulator's core invariants
+//! (hand-rolled engine in `r2vm::prop`; proptest is unavailable offline).
+
+use r2vm::asm::*;
+use r2vm::coordinator::{run_image, SimConfig};
+use r2vm::interp::ExitReason;
+use r2vm::isa::op::*;
+use r2vm::isa::{decode32, encode};
+use r2vm::mem::l0::L0DCache;
+use r2vm::mem::DRAM_BASE;
+use r2vm::prop::{forall, Rng};
+
+// ---------------------------------------------------------------------------
+// ISA: decode(encode(op)) == op for arbitrary well-formed ops
+// ---------------------------------------------------------------------------
+
+fn arb_op(r: &mut Rng) -> Op {
+    let rd = r.below(32) as u8;
+    let rs1 = r.below(32) as u8;
+    let rs2 = r.below(32) as u8;
+    let imm12 = r.range_i64(-2048, 2047) as i32;
+    let bimm = (r.range_i64(-2048, 2047) as i32) << 1;
+    let jimm = (r.range_i64(-(1 << 19), (1 << 19) - 1) as i32) << 1;
+    let uimm = (r.range_i64(-(1 << 19), (1 << 19) - 1) as i32) << 12;
+    let alu = [
+        AluOp::Add,
+        AluOp::Sub,
+        AluOp::Sll,
+        AluOp::Slt,
+        AluOp::Sltu,
+        AluOp::Xor,
+        AluOp::Srl,
+        AluOp::Sra,
+        AluOp::Or,
+        AluOp::And,
+    ];
+    let widths = [MemWidth::B, MemWidth::H, MemWidth::W, MemWidth::D];
+    match r.below(12) {
+        0 => Op::Lui { rd, imm: uimm },
+        1 => Op::Auipc { rd, imm: uimm },
+        2 => Op::Jal { rd, imm: jimm },
+        3 => Op::Jalr { rd, rs1, imm: imm12 },
+        4 => Op::Branch {
+            cond: *r.pick(&[BrCond::Eq, BrCond::Ne, BrCond::Lt, BrCond::Ge, BrCond::Ltu, BrCond::Geu]),
+            rs1,
+            rs2,
+            imm: bimm,
+        },
+        5 => {
+            let width = *r.pick(&widths);
+            let signed = width == MemWidth::D || r.bool();
+            Op::Load { width, signed, rd, rs1, imm: imm12 }
+        }
+        6 => Op::Store { width: *r.pick(&widths), rs1, rs2, imm: imm12 },
+        7 => {
+            let op = *r.pick(&alu);
+            let word = matches!(op, AluOp::Add | AluOp::Sub | AluOp::Sll | AluOp::Srl | AluOp::Sra)
+                && r.bool();
+            Op::Alu { op, word, rd, rs1, rs2 }
+        }
+        8 => {
+            // immediate ALU (no Sub); shifts get bounded shamt
+            let op = *r.pick(&[
+                AluOp::Add,
+                AluOp::Slt,
+                AluOp::Sltu,
+                AluOp::Xor,
+                AluOp::Or,
+                AluOp::And,
+                AluOp::Sll,
+                AluOp::Srl,
+                AluOp::Sra,
+            ]);
+            let word = matches!(op, AluOp::Add | AluOp::Sll | AluOp::Srl | AluOp::Sra) && r.bool();
+            let imm = match op {
+                AluOp::Sll | AluOp::Srl | AluOp::Sra => {
+                    if word {
+                        r.below(32) as i32
+                    } else {
+                        r.below(64) as i32
+                    }
+                }
+                _ => imm12,
+            };
+            Op::AluImm { op, word, rd, rs1, imm }
+        }
+        9 => {
+            let op = *r.pick(&[
+                MulOp::Mul,
+                MulOp::Mulh,
+                MulOp::Mulhsu,
+                MulOp::Mulhu,
+                MulOp::Div,
+                MulOp::Divu,
+                MulOp::Rem,
+                MulOp::Remu,
+            ]);
+            let word = matches!(op, MulOp::Mul | MulOp::Div | MulOp::Divu | MulOp::Rem | MulOp::Remu)
+                && r.bool();
+            Op::Mul { op, word, rd, rs1, rs2 }
+        }
+        10 => {
+            let width = if r.bool() { MemWidth::W } else { MemWidth::D };
+            match r.below(3) {
+                0 => Op::Lr { width, rd, rs1 },
+                1 => Op::Sc { width, rd, rs1, rs2 },
+                _ => Op::Amo {
+                    op: *r.pick(&[
+                        AmoOp::Swap,
+                        AmoOp::Add,
+                        AmoOp::Xor,
+                        AmoOp::And,
+                        AmoOp::Or,
+                        AmoOp::Min,
+                        AmoOp::Max,
+                        AmoOp::Minu,
+                        AmoOp::Maxu,
+                    ]),
+                    width,
+                    rd,
+                    rs1,
+                    rs2,
+                },
+            }
+        }
+        _ => Op::Csr {
+            op: *r.pick(&[CsrOp::Rw, CsrOp::Rs, CsrOp::Rc]),
+            imm_form: r.bool(),
+            rd,
+            rs1,
+            csr: r.below(4096) as u16,
+        },
+    }
+}
+
+#[test]
+fn prop_decode_encode_roundtrip() {
+    forall(0xDEC0DE1, 5000, arb_op, |op| {
+        let enc = encode(*op);
+        let dec = decode32(enc);
+        if dec == *op {
+            Ok(())
+        } else {
+            Err(format!("{:#010x} decoded to {:?}", enc, dec))
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Assembler: li materialises arbitrary constants (executed on the machine)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_li_materialises_constants() {
+    forall(
+        0x11AB,
+        60,
+        |r| {
+            // batch of 8 constants per run to amortise simulation cost
+            (0..8).map(|_| r.interesting_u64()).collect::<Vec<u64>>()
+        },
+        |values| {
+            for &v in values {
+                let mut a = Assembler::new(DRAM_BASE);
+                a.li(A0, v as i64);
+                a.li(A7, 93);
+                a.ecall();
+                let img = a.finish();
+                let cfg = SimConfig::default();
+                let rep = run_image(&cfg, &img);
+                match rep.exit {
+                    ExitReason::Exited(got) if got == v => {}
+                    other => return Err(format!("li({:#x}) exited {:?}", v, other)),
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// L0: lookup/insert/invalidate invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_l0_read_after_insert_hits_with_correct_paddr() {
+    forall(
+        0x10CAC4E,
+        2000,
+        |r| {
+            let vaddr = r.next_u64() & 0x7f_ffff_ffff; // 39-bit VA
+            let paddr = (r.next_u64() & 0xffff_ffff) | 0x8000_0000;
+            (vaddr, paddr, r.bool())
+        },
+        |&(vaddr, paddr, writable)| {
+            let mut l0 = L0DCache::new(6);
+            l0.insert(vaddr, paddr, writable);
+            let line_mask = !0x3fu64;
+            // Any offset within the line must map to the same physical line.
+            for off in [0u64, 1, 31, 63] {
+                let va = (vaddr & line_mask) + off;
+                match l0.lookup_read(va) {
+                    Some(pa) if pa == (paddr & line_mask) + off => {}
+                    other => return Err(format!("read {:?}", other)),
+                }
+                let w = l0.lookup_write(va);
+                if writable != w.is_some() {
+                    return Err(format!("write hit {:?} but writable={}", w, writable));
+                }
+            }
+            // Invalidation by physical address must remove it.
+            let mut l0b = L0DCache::new(6);
+            l0b.insert(vaddr, paddr, writable);
+            l0b.invalidate_paddr(paddr);
+            if l0b.lookup_read(vaddr).is_some() {
+                return Err("survived invalidate_paddr".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Engine equivalence: random straight-line programs produce identical
+// architectural results on the interpreter and the DBT engine, and the DBT
+// engine's timing is deterministic across runs
+// ---------------------------------------------------------------------------
+
+fn random_program(r: &mut Rng) -> r2vm::asm::Image {
+    let mut a = Assembler::new(DRAM_BASE);
+    let start = a.new_label();
+    a.j(start);
+    a.align(8);
+    let scratch = a.here();
+    a.zero_fill(256);
+    a.align(4);
+    a.bind(start);
+    // seed registers
+    for reg in [A0, A1, A2, A3, A4] {
+        a.li(reg, r.interesting_u64() as i64);
+    }
+    a.la(S0, scratch);
+    let n = 10 + r.below(40);
+    for _ in 0..n {
+        let rd = *r.pick(&[A0, A1, A2, A3, A4]);
+        let rs1 = *r.pick(&[A0, A1, A2, A3, A4, S0]);
+        let rs2 = *r.pick(&[A0, A1, A2, A3, A4]);
+        match r.below(8) {
+            0 => a.add(rd, rs1, rs2),
+            1 => a.sub(rd, rs1, rs2),
+            2 => a.xor(rd, rs1, rs2),
+            3 => a.mul(rd, rs1, rs2),
+            4 => a.sltu(rd, rs1, rs2),
+            5 => a.srli(rd, rs1, (r.below(63) + 1) as i32),
+            6 => {
+                // aligned store+load through scratch
+                let off = (r.below(31) * 8) as i32;
+                a.sd(rs2, S0, off);
+                a.ld(rd, S0, off);
+            }
+            _ => a.addw(rd, rs1, rs2),
+        }
+    }
+    // fold registers into a0 and exit
+    a.xor(A0, A0, A1);
+    a.xor(A0, A0, A2);
+    a.xor(A0, A0, A3);
+    a.xor(A0, A0, A4);
+    a.li(A7, 93);
+    a.ecall();
+    a.finish()
+}
+
+#[test]
+fn prop_interp_and_dbt_agree_on_random_programs() {
+    forall(0x5EED_CAFE_u64 as u64, 120, random_program, |img| {
+        let mut interp_cfg = SimConfig::default();
+        interp_cfg.set("mode", "interp").unwrap();
+        let a = run_image(&interp_cfg, img);
+        let mut dbt_cfg = SimConfig::default();
+        dbt_cfg.pipeline = "inorder".into();
+        dbt_cfg.set("memory", "cache").unwrap();
+        let b = run_image(&dbt_cfg, img);
+        if a.exit != b.exit {
+            return Err(format!("interp {:?} vs dbt {:?}", a.exit, b.exit));
+        }
+        // DBT timing must be deterministic run-to-run.
+        let c = run_image(&dbt_cfg, img);
+        if b.per_hart != c.per_hart {
+            return Err(format!("nondeterministic timing {:?} vs {:?}", b.per_hart, c.per_hart));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Analytics: native exact-LRU obeys cache-theory invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_lru_hits_monotone_in_ways() {
+    use r2vm::analytics::native::LruCacheSim;
+    forall(
+        0x10BA,
+        200,
+        |r| {
+            let n = 200 + r.below(300);
+            (0..n).map(|_| (r.below(256)) << 6).collect::<Vec<u64>>()
+        },
+        |trace| {
+            // LRU with more ways (same #sets) can only hit more (inclusion
+            // property of LRU stacks per set).
+            let mut prev = None;
+            for ways in [1usize, 2, 4, 8] {
+                let mut c = LruCacheSim::new(16, ways, 6);
+                for &p in trace {
+                    c.access(p);
+                }
+                if let Some(p) = prev {
+                    if c.hits < p {
+                        return Err(format!("ways={} hits {} < {}", ways, c.hits, p));
+                    }
+                }
+                prev = Some(c.hits);
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,207 @@
+//! Full-system integration tests: workloads × models × engines, runtime
+//! reconfiguration scenarios, and cross-engine agreement on system-level
+//! behaviour (traps, paging, interrupts).
+
+use r2vm::coordinator::{run_image, simctrl_encoding, SimConfig};
+use r2vm::interp::ExitReason;
+use r2vm::workloads;
+
+#[test]
+fn coremark_checksum_identical_across_all_timing_configs() {
+    let iters = 2;
+    let img = workloads::coremark::build(iters);
+    let want = ExitReason::Exited(workloads::coremark::expected_checksum(iters));
+    for (pipeline, memory) in [
+        ("atomic", "atomic"),
+        ("simple", "atomic"),
+        ("simple", "tlb"),
+        ("inorder", "cache"),
+        ("inorder", "mesi"),
+    ] {
+        let mut cfg = SimConfig::default();
+        cfg.pipeline = pipeline.into();
+        cfg.set("memory", memory).unwrap();
+        let r = run_image(&cfg, &img);
+        assert_eq!(r.exit, want, "pipeline={} memory={}", pipeline, memory);
+        // Functional correctness must never depend on the timing model.
+    }
+}
+
+#[test]
+fn dedup_same_answer_lockstep_and_parallel() {
+    let chunks = 48;
+    let img = workloads::dedup::build(4, chunks);
+    let want = ExitReason::Exited(workloads::dedup::expected_unique(chunks));
+    let mut lk = SimConfig::default();
+    lk.harts = 4;
+    lk.pipeline = "simple".into();
+    lk.set("memory", "mesi").unwrap();
+    lk.max_insts = 200_000_000;
+    assert_eq!(run_image(&lk, &img).exit, want);
+
+    let mut par = SimConfig::default();
+    par.harts = 4;
+    par.pipeline = "atomic".into();
+    par.set("mode", "parallel").unwrap();
+    par.max_insts = 200_000_000;
+    assert_eq!(run_image(&par, &img).exit, want);
+}
+
+#[test]
+fn spinlock_fairness_under_mesi() {
+    // Both harts must make progress: per-hart instret within 3x of each
+    // other (lockstep prevents starvation).
+    let img = workloads::spinlock::build(2, 400);
+    let mut cfg = SimConfig::default();
+    cfg.harts = 2;
+    cfg.pipeline = "inorder".into();
+    cfg.set("memory", "mesi").unwrap();
+    cfg.max_insts = 100_000_000;
+    let r = run_image(&cfg, &img);
+    assert_eq!(r.exit, ExitReason::Exited(800));
+    let (i0, i1) = (r.per_hart[0].1 as f64, r.per_hart[1].1 as f64);
+    assert!(i0 / i1 < 3.0 && i1 / i0 < 3.0, "starvation: {} vs {}", i0, i1);
+}
+
+#[test]
+fn lockstep_cycles_reproducible_for_contended_workload() {
+    let img = workloads::spinlock::build(2, 150);
+    let run = || {
+        let mut cfg = SimConfig::default();
+        cfg.harts = 2;
+        cfg.pipeline = "inorder".into();
+        cfg.set("memory", "mesi").unwrap();
+        cfg.max_insts = 100_000_000;
+        let r = run_image(&cfg, &img);
+        (r.exit, r.per_hart.clone())
+    };
+    assert_eq!(run(), run(), "lockstep simulation must be fully deterministic");
+}
+
+#[test]
+fn runtime_switch_fastforward_then_measure() {
+    // The paper's §3.5 scenario: fast-forward preparation with atomic
+    // models, then switch to inorder+mesi for the region of interest.
+    use r2vm::asm::*;
+    use r2vm::isa::csr::{CSR_MCYCLE, CSR_SIMCTRL};
+    use r2vm::mem::DRAM_BASE;
+    let mut a = Assembler::new(DRAM_BASE);
+    // Phase 1 (to be fast-forwarded): long pure-ALU loop.
+    a.li(T0, 20_000);
+    let warm = a.here();
+    a.addi(T0, T0, -1);
+    a.bnez(T0, warm);
+    // Switch to inorder + mesi; measure a short loop with MCYCLE.
+    a.li(T1, simctrl_encoding("inorder", "mesi", 6) as i64);
+    a.csrw(CSR_SIMCTRL, T1);
+    a.csrr(S0, CSR_MCYCLE);
+    a.li(T0, 1_000);
+    let roi = a.here();
+    a.addi(T0, T0, -1);
+    a.bnez(T0, roi);
+    a.csrr(S1, CSR_MCYCLE);
+    a.sub(A0, S1, S0);
+    a.li(A7, 93);
+    a.ecall();
+    let img = a.finish();
+
+    let mut cfg = SimConfig::default();
+    cfg.pipeline = "atomic".into();
+    let r = run_image(&cfg, &img);
+    let roi_cycles = match r.exit {
+        ExitReason::Exited(c) => c,
+        other => panic!("{:?}", other),
+    };
+    // InOrder: the 2-instruction loop has a backward taken branch (2 cyc)
+    // plus the addi (1 cyc) => ~3 cycles/iteration.
+    assert!(
+        (2_500..4_500).contains(&roi_cycles),
+        "ROI cycles {} out of expected in-order range",
+        roi_cycles
+    );
+}
+
+#[test]
+fn vm_workload_tlb_stats_flow() {
+    let img = workloads::vm::build(2_000);
+    let mut cfg = SimConfig::default();
+    cfg.set("memory", "tlb").unwrap();
+    cfg.pipeline = "simple".into();
+    let r = run_image(&cfg, &img);
+    assert_eq!(r.exit, ExitReason::Exited(2_000 * 2_001 / 2));
+    let walks: u64 =
+        r.model_stats.iter().filter(|(k, _)| k.contains("cold_accesses")).map(|(_, v)| v).sum();
+    assert!(walks > 0, "TLB model must observe cold accesses: {:?}", r.model_stats);
+}
+
+#[test]
+fn memlat_tlb_sweep_shows_reach_cliff() {
+    // With 4096-byte L0 lines (L0-as-TLB, §3.5) and the TLB model, a
+    // working set beyond TLB reach (32 entries * 4K = 128K) must cost
+    // more cycles per access than one within reach.
+    let cycles = |ws: u64| {
+        let img = workloads::memlat::build_paged(ws, 30_000);
+        let mut cfg = SimConfig::default();
+        cfg.pipeline = "simple".into();
+        cfg.set("memory", "tlb").unwrap();
+        cfg.set("line-bytes", "4096").unwrap();
+        cfg.max_insts = 100_000_000;
+        match run_image(&cfg, &img).exit {
+            ExitReason::Exited(c) => c,
+            other => panic!("{:?}", other),
+        }
+    };
+    let within = cycles(64 << 10); // 16 pages
+    let beyond = cycles(1 << 20); // 256 pages >> 32 TLB entries
+    assert!(
+        beyond as f64 > within as f64 * 1.5,
+        "TLB cliff missing: within={} beyond={}",
+        within,
+        beyond
+    );
+}
+
+#[test]
+fn interp_and_lockstep_agree_on_vm_workload() {
+    let img = workloads::vm::build(321);
+    let want = ExitReason::Exited(321 * 322 / 2);
+    for mode in ["interp", "lockstep"] {
+        let mut cfg = SimConfig::default();
+        cfg.set("mode", mode).unwrap();
+        cfg.pipeline = "simple".into();
+        cfg.set("memory", "tlb").unwrap();
+        assert_eq!(run_image(&cfg, &img).exit, want, "mode={}", mode);
+    }
+}
+
+#[test]
+fn hello_console_identical_everywhere() {
+    let img = workloads::hello();
+    for mode in ["interp", "lockstep"] {
+        let mut cfg = SimConfig::default();
+        cfg.set("mode", mode).unwrap();
+        let r = run_image(&cfg, &img);
+        assert_eq!(r.console, "hello from r2vm-repro guest\n", "mode={}", mode);
+    }
+}
+
+#[test]
+fn l0_ablation_changes_performance_not_results() {
+    let img = workloads::coremark::build(1);
+    let want = ExitReason::Exited(workloads::coremark::expected_checksum(1));
+    let mut with_l0 = SimConfig::default();
+    with_l0.pipeline = "inorder".into();
+    with_l0.set("memory", "cache").unwrap();
+    let a = run_image(&with_l0, &img);
+    let mut without = with_l0.clone();
+    without.no_l0 = true;
+    let b = run_image(&without, &img);
+    assert_eq!(a.exit, want);
+    assert_eq!(b.exit, want);
+    // Bypassing L0 lets the cache model see every access -> cold-access
+    // count explodes.
+    let cold = |r: &r2vm::coordinator::RunReport| {
+        r.model_stats.iter().find(|(k, _)| *k == "dcache_cold_accesses").unwrap().1
+    };
+    assert!(cold(&b) > cold(&a) * 5, "no-l0 {} vs l0 {}", cold(&b), cold(&a));
+}
