@@ -1,12 +1,17 @@
-//! Runtime model reconfiguration (paper §3.5): fast-forward a preparation
-//! phase under the atomic models, then switch to InOrder + MESI *from
-//! inside the guest* by writing the vendor SIMCTRL CSR, and measure only
-//! the region of interest.
+//! Run-time *engine* hand-off (paper §3.5, extended to engine-level
+//! switching): the boot/preparation phase runs under the parallel
+//! functional engine (QEMU-like, one host thread per hart, atomic models,
+//! maximum MIPS). The guest then writes the vendor SIMCTRL CSR with the
+//! engine field set to `lockstep`, which suspends the parallel engine,
+//! captures a SystemSnapshot (hart state, DRAM, device state), and
+//! warm-starts the lockstep cycle-level engine with the InOrder pipeline
+//! and MESI memory model — so only the region of interest pays for
+//! cycle-level simulation.
 //!
-//!     cargo run --release --example runtime_switch
+//! Run with: cargo run --release --example runtime_switch
 
 use r2vm::asm::*;
-use r2vm::coordinator::{run_image, simctrl_encoding, SimConfig};
+use r2vm::coordinator::{run_image, simctrl_encoding_full, EngineMode, SimConfig};
 use r2vm::isa::csr::{CSR_MCYCLE, CSR_SIMCTRL};
 use r2vm::mem::DRAM_BASE;
 
@@ -14,7 +19,7 @@ fn build_image() -> r2vm::asm::Image {
     let mut a = Assembler::new(DRAM_BASE);
     let scratch = a.new_label();
 
-    // ---- phase 1: "boot / preparation" (fast-forwarded) ---------------------
+    // ---- phase 1: "boot / preparation" (fast-forwarded in parallel) --------
     // Touch a buffer with a long initialisation loop.
     a.la(S0, scratch);
     a.li(T0, 4096 / 8);
@@ -24,11 +29,11 @@ fn build_image() -> r2vm::asm::Image {
     a.addi(T0, T0, -1);
     a.bnez(T0, init);
 
-    // ---- switch: pipeline=inorder, memory=mesi, 64-byte lines ----------------
-    a.li(T1, simctrl_encoding("inorder", "mesi", 6) as i64);
+    // ---- engine hand-off: parallel/atomic -> lockstep/inorder+mesi ---------
+    a.li(T1, simctrl_encoding_full(EngineMode::Lockstep, "inorder", "mesi", 6) as i64);
     a.csrw(CSR_SIMCTRL, T1);
 
-    // ---- phase 2: region of interest (measured) -------------------------------
+    // ---- phase 2: region of interest (measured cycle-level) ----------------
     a.csrr(S2, CSR_MCYCLE);
     a.la(S0, scratch);
     a.li(T0, 4096 / 8);
@@ -52,24 +57,37 @@ fn build_image() -> r2vm::asm::Image {
 fn main() {
     let image = build_image();
 
-    // Start under atomic/atomic (the QEMU-equivalent fast-forward mode).
+    // Start under the parallel functional engine (the QEMU-equivalent
+    // fast-forward mode). The guest itself triggers the hand-off.
     let mut cfg = SimConfig::default();
+    cfg.set("mode", "parallel").unwrap();
     cfg.pipeline = "atomic".into();
     cfg.set("memory", "atomic").unwrap();
     let report = run_image(&cfg, &image);
 
-    println!("started as: atomic pipeline + atomic memory (fast-forward)");
-    println!("guest switched to: inorder + MESI via SIMCTRL CSR (0x7C0)\n");
+    println!("engine stages: {}", report.stages.join("  ->  "));
+    assert!(report.stages.len() == 2, "expected exactly one engine hand-off");
     match report.exit {
         r2vm::interp::ExitReason::Exited(roi_cycles) => {
-            println!("region of interest: {} cycles for 512 loads + loop overhead", roi_cycles);
+            assert!(roi_cycles > 0, "ROI must report a nonzero cycle count");
+            println!(
+                "region of interest: {} cycles for 512 dependent loads + loop overhead",
+                roi_cycles
+            );
             println!("  -> {:.3} cycles per ROI iteration", roi_cycles as f64 / 512.0);
         }
-        other => println!("unexpected exit: {:?}", other),
+        other => {
+            eprintln!("unexpected exit: {:?}", other);
+            std::process::exit(1);
+        }
     }
-    println!("\nfinal memory-model stats (MESI, ROI only):");
+    println!("\nfinal memory-model stats (MESI, measured stage only):");
     for (k, v) in &report.model_stats {
         println!("  {:<24} {}", k, v);
     }
-    println!("\ntotal wall time {:.3}s, overall rate {:.1} MIPS", report.wall.as_secs_f64(), report.mips());
+    println!(
+        "\ntotal wall time {:.3}s, overall rate {:.1} MIPS",
+        report.wall.as_secs_f64(),
+        report.mips()
+    );
 }

@@ -25,6 +25,33 @@ impl EngineMode {
             _ => None,
         }
     }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EngineMode::Interp => "interp",
+            EngineMode::Lockstep => "lockstep",
+            EngineMode::Parallel => "parallel",
+        }
+    }
+
+    /// SIMCTRL engine-field code (see `isa::csr::CSR_SIMCTRL`).
+    pub fn code(self) -> u64 {
+        match self {
+            EngineMode::Interp => 1,
+            EngineMode::Lockstep => 2,
+            EngineMode::Parallel => 3,
+        }
+    }
+
+    /// Inverse of [`EngineMode::code`]; 0 and invalid codes mean "keep".
+    pub fn from_code(code: u64) -> Option<EngineMode> {
+        match code {
+            1 => Some(EngineMode::Interp),
+            2 => Some(EngineMode::Lockstep),
+            3 => Some(EngineMode::Parallel),
+            _ => None,
+        }
+    }
 }
 
 /// Full simulation configuration.
@@ -51,6 +78,12 @@ pub struct SimConfig {
     pub no_l0: bool,
     /// Echo guest console output to stdout.
     pub console: bool,
+    /// Engine hand-off budget: after this many retired instructions
+    /// (per hart in parallel mode) suspend the engine and warm-start the
+    /// `switch_to` target — the fast-forward → measure workflow.
+    pub switch_at: Option<u64>,
+    /// Hand-off target as `mode:pipeline:memory`.
+    pub switch_to: String,
 }
 
 impl Default for SimConfig {
@@ -71,6 +104,8 @@ impl Default for SimConfig {
             no_chaining: false,
             no_l0: false,
             console: false,
+            switch_at: None,
+            switch_to: "lockstep:inorder:mesi".into(),
         }
     }
 }
@@ -107,7 +142,7 @@ impl SimConfig {
                 self.pipeline = value.into();
             }
             "memory" => {
-                if !matches!(value, "atomic" | "tlb" | "cache" | "mesi") {
+                if !crate::engine::MEMORY_MODEL_NAMES.contains(&value) {
                     return Err(ParseError(format!(
                         "unknown memory model '{}' (atomic|tlb|cache|mesi)",
                         value
@@ -128,9 +163,21 @@ impl SimConfig {
                 self.line_shift = b.trailing_zeros();
             }
             "trace" => self.trace_capacity = value.parse().map_err(|_| bad("trace"))?,
+            "switch-at" => {
+                self.switch_at = Some(value.parse().map_err(|_| bad("switch-at"))?)
+            }
+            "switch-to" => {
+                parse_switch_target(value)?; // validate eagerly for a good error
+                self.switch_to = value.into();
+            }
             _ => return Err(ParseError(format!("unknown option --{}", key))),
         }
         Ok(())
+    }
+
+    /// Parse and validate the `switch_to` hand-off target.
+    pub fn switch_target(&self) -> Result<(EngineMode, String, String), ParseError> {
+        parse_switch_target(&self.switch_to)
     }
 
     /// Consistency checks mirroring Table 2's constraints.
@@ -146,8 +193,37 @@ impl SimConfig {
         if self.memory == "mesi" && self.mode == EngineMode::Parallel {
             return Err(ParseError("MESI requires lockstep execution (Table 2)".into()));
         }
+        if self.switch_at.is_some() {
+            self.switch_target()?;
+        }
         Ok(())
     }
+}
+
+/// Parse a `mode:pipeline:memory` hand-off target (the `--switch-to`
+/// value), enforcing Table 2's engine/model constraints.
+pub fn parse_switch_target(s: &str) -> Result<(EngineMode, String, String), ParseError> {
+    let parts: Vec<&str> = s.split(':').collect();
+    if parts.len() != 3 {
+        return Err(ParseError(format!(
+            "--switch-to must be mode:pipeline:memory, got '{}'",
+            s
+        )));
+    }
+    let mode = EngineMode::parse(parts[0])
+        .ok_or_else(|| ParseError(format!("unknown switch-to mode '{}'", parts[0])))?;
+    if crate::pipeline::by_name(parts[1]).is_none() {
+        return Err(ParseError(format!("unknown switch-to pipeline '{}'", parts[1])));
+    }
+    if !crate::engine::MEMORY_MODEL_NAMES.contains(&parts[2]) {
+        return Err(ParseError(format!("unknown switch-to memory '{}'", parts[2])));
+    }
+    if mode == EngineMode::Parallel && parts[2] != "atomic" {
+        return Err(ParseError(
+            "switch-to parallel requires the atomic memory model (Table 2)".into(),
+        ));
+    }
+    Ok((mode, parts[1].into(), parts[2].into()))
 }
 
 #[cfg(test)]
@@ -171,6 +247,37 @@ mod tests {
         assert!(c.set("pipeline", "o3").is_err());
         assert!(c.set("nonsense", "1").is_err());
         assert!(c.set("line-bytes", "48").is_err());
+    }
+
+    #[test]
+    fn switch_flags_parse_and_validate() {
+        let mut c = SimConfig::default();
+        c.set("switch-at", "100000").unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.switch_at, Some(100_000));
+        assert_eq!(
+            c.switch_target().unwrap(),
+            (EngineMode::Lockstep, "inorder".into(), "mesi".into())
+        );
+        c.set("switch-to", "interp:simple:tlb").unwrap();
+        assert_eq!(
+            c.switch_target().unwrap(),
+            (EngineMode::Interp, "simple".into(), "tlb".into())
+        );
+        assert!(c.set("switch-to", "lockstep:inorder").is_err(), "missing field");
+        assert!(c.set("switch-to", "warp:inorder:mesi").is_err(), "bad mode");
+        assert!(c.set("switch-to", "parallel:atomic:mesi").is_err(), "Table 2 violation");
+        assert!(c.set("switch-at", "soon").is_err());
+    }
+
+    #[test]
+    fn engine_mode_codes_round_trip() {
+        for mode in [EngineMode::Interp, EngineMode::Lockstep, EngineMode::Parallel] {
+            assert_eq!(EngineMode::from_code(mode.code()), Some(mode));
+            assert_eq!(EngineMode::parse(mode.as_str()), Some(mode));
+        }
+        assert_eq!(EngineMode::from_code(0), None);
+        assert_eq!(EngineMode::from_code(7), None);
     }
 
     #[test]

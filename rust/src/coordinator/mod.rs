@@ -1,22 +1,37 @@
-//! Simulation coordinator: builds engines from a [`SimConfig`], dispatches
-//! between the three execution modes (Figure 5), aggregates statistics,
-//! and exposes the model inventory (Tables 1 and 2).
+//! Simulation coordinator: builds engines from a [`SimConfig`], drives
+//! them through the [`ExecutionEngine`] interface, performs run-time
+//! engine hand-offs (guest SIMCTRL requests or the `--switch-at` budget),
+//! aggregates statistics, and exposes the model inventory (Tables 1-2).
+//!
+//! A run is a sequence of *stages*. Each stage is one engine built over
+//! the same guest DRAM; between stages the guest travels as a
+//! [`SystemSnapshot`]. The canonical workflow (paper §3.5, Schnerr et
+//! al.'s fast-forward-then-measure): boot under `parallel/atomic` at
+//! maximum MIPS, then hand off to `lockstep/inorder+mesi` for the region
+//! of interest.
 
 pub mod config;
 pub mod parallel;
 
 pub use config::{EngineMode, SimConfig};
+pub use parallel::ParallelEngine;
 
 use crate::analytics::trace::TraceCapture;
 use crate::asm::Image;
+use crate::engine::{
+    line_shift_by_code, memory_name_by_code, pipeline_name_by_code, EngineStats, ExecutionEngine,
+    ExitReason,
+};
 use crate::fiber::FiberEngine;
-use crate::interp::{ExitReason, InterpEngine};
+use crate::interp::InterpEngine;
+use crate::isa::csr::SIMCTRL_ENGINE_SHIFT;
 use crate::mem::cache_model::CacheModel;
 use crate::mem::mesi::MesiModel;
 use crate::mem::tlb_model::TlbModel;
-use crate::mem::{AtomicModel, MemoryModel};
+use crate::mem::{AtomicModel, MemoryModel, PhysMem, DRAM_BASE};
 use crate::sys::loader::load_flat;
-use crate::sys::System;
+use crate::sys::{System, SystemSnapshot};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Construct a memory model by name.
@@ -53,7 +68,14 @@ pub const MEMORY_TABLE: &[(&str, &str)] = &[
     ("MESI", "A directory-based MESI cache coherency protocol with a shared L2. Lockstep execution required."),
 ];
 
-/// Render Tables 1 + 2 for the `models` CLI command.
+/// Execution engines — run-time switchable (§3.5 extended).
+pub const ENGINE_TABLE: &[(&str, &str)] = &[
+    ("interp", "Naive per-cycle interpreter (gem5-like lockstep baseline)"),
+    ("lockstep", "Single-threaded lockstep DBT; supports every timing model"),
+    ("parallel", "One host thread per hart over shared DRAM; atomic memory model only"),
+];
+
+/// Render Tables 1 + 2 and the engine inventory for the `models` command.
 pub fn models_report() -> String {
     let mut s = String::new();
     s.push_str("Table 1: pipeline models\n");
@@ -64,6 +86,17 @@ pub fn models_report() -> String {
     for (name, desc) in MEMORY_TABLE {
         s.push_str(&format!("  {:<8} {}\n", name, desc));
     }
+    s.push_str("\nExecution engines (run-time switchable):\n");
+    for (name, desc) in ENGINE_TABLE {
+        s.push_str(&format!("  {:<8} {}\n", name, desc));
+    }
+    s.push_str(
+        "\nEngine hand-off: the guest writes SIMCTRL (0x7C0) bits [22:20]\n\
+         (1=interp 2=lockstep 3=parallel, 0=keep), or pass --switch-at N to\n\
+         hand off to the --switch-to target after N retired instructions.\n\
+         Hart state, DRAM, IPIs and device state carry over; the new engine\n\
+         starts with cold code caches and L0s.\n",
+    );
     s
 }
 
@@ -75,15 +108,24 @@ pub struct RunReport {
     /// Per-hart (cycle, instret).
     pub per_hart: Vec<(u64, u64)>,
     pub console: String,
-    /// Memory-model statistics snapshot.
+    /// Memory-model statistics snapshot (final stage).
     pub model_stats: Vec<(&'static str, u64)>,
-    /// Engine statistics (lockstep mode only).
-    pub engine_stats: Option<crate::fiber::EngineStats>,
+    /// Engine statistics accumulated across all stages.
+    pub engine_stats: Option<EngineStats>,
+    /// Engine/model configuration of each stage, in hand-off order.
+    pub stages: Vec<String>,
 }
 
 impl RunReport {
+    /// Host-side simulation rate. Guarded against zero/denormal wall
+    /// clocks: trivial runs on fast hosts can complete between two timer
+    /// ticks, and `inf`/`NaN` rates poison downstream statistics.
     pub fn mips(&self) -> f64 {
-        self.total_insts as f64 / self.wall.as_secs_f64() / 1e6
+        let secs = self.wall.as_secs_f64();
+        if secs <= 0.0 || self.total_insts == 0 {
+            return 0.0;
+        }
+        self.total_insts as f64 / secs / 1e6
     }
 
     pub fn summary(&self) -> String {
@@ -94,6 +136,9 @@ impl RunReport {
             self.wall.as_secs_f64(),
             self.mips()
         );
+        if self.stages.len() > 1 {
+            s.push_str(&format!("  stages: {}\n", self.stages.join(" -> ")));
+        }
         for (i, (cyc, ins)) in self.per_hart.iter().enumerate() {
             s.push_str(&format!("  hart{}: mcycle={} minstret={}\n", i, cyc, ins));
         }
@@ -104,21 +149,29 @@ impl RunReport {
     }
 }
 
-/// Build the `System` described by `cfg`.
-pub fn build_system(cfg: &SimConfig) -> System {
+/// Build a `System` for `cfg` over existing guest DRAM (hand-off path).
+fn system_over(cfg: &SimConfig, phys: Arc<PhysMem>) -> System {
     let model = memory_model_by_name(&cfg.memory, cfg).expect("validated");
-    let mut sys = System::with_model(cfg.harts, cfg.dram_bytes, model);
+    let mut sys = System::with_shared_phys(cfg.harts, phys, model);
     sys.set_line_shift(cfg.line_shift);
     sys.force_cold = cfg.no_l0;
     sys.bus.uart.echo = cfg.console;
+    sys.timing = cfg.timing;
     if cfg.trace_capacity > 0 {
         sys.trace = Some(TraceCapture::new(cfg.trace_capacity));
     }
-    sys.simctrl_state = simctrl_encoding(&cfg.pipeline, &cfg.memory, cfg.line_shift);
+    sys.simctrl_state =
+        simctrl_encoding_full(cfg.mode, &cfg.pipeline, &cfg.memory, cfg.line_shift);
     sys
 }
 
-/// Pack the current configuration in the SIMCTRL CSR encoding.
+/// Build the `System` described by `cfg` with fresh guest DRAM.
+pub fn build_system(cfg: &SimConfig) -> System {
+    system_over(cfg, Arc::new(PhysMem::new(DRAM_BASE, cfg.dram_bytes)))
+}
+
+/// Pack the current model configuration in the SIMCTRL CSR encoding
+/// (engine field left at 0 = keep).
 pub fn simctrl_encoding(pipeline: &str, memory: &str, line_shift: u32) -> u64 {
     let p = match pipeline {
         "atomic" => 1,
@@ -136,9 +189,47 @@ pub fn simctrl_encoding(pipeline: &str, memory: &str, line_shift: u32) -> u64 {
     p | (m << 4) | (((1u64 << line_shift) & 0xfff) << 8)
 }
 
-/// Run `image` to completion under `cfg`.
-pub fn run_image(cfg: &SimConfig, image: &Image) -> RunReport {
-    cfg.validate().expect("invalid configuration");
+/// Full SIMCTRL encoding including the engine-request field — what a
+/// guest writes to trigger an engine-level hand-off (§3.5 extended).
+pub fn simctrl_encoding_full(
+    mode: EngineMode,
+    pipeline: &str,
+    memory: &str,
+    line_shift: u32,
+) -> u64 {
+    simctrl_encoding(pipeline, memory, line_shift) | (mode.code() << SIMCTRL_ENGINE_SHIFT)
+}
+
+/// Decode a SIMCTRL write into a stage configuration: nonzero fields
+/// override, zero fields keep the current value. Combinations that
+/// violate Table 2 (the parallel engine requires the atomic memory model)
+/// are sanitised rather than rejected — a guest-triggered hand-off must
+/// not abort the simulation.
+pub fn apply_simctrl_to_config(cfg: &mut SimConfig, value: u64) {
+    if let Some(mode) = EngineMode::from_code((value >> SIMCTRL_ENGINE_SHIFT) & 0b111) {
+        cfg.mode = mode;
+    }
+    if let Some(pipeline) = pipeline_name_by_code(value & 0b111) {
+        cfg.pipeline = pipeline.into();
+    }
+    if let Some(memory) = memory_name_by_code((value >> 4) & 0b111) {
+        cfg.memory = memory.into();
+    }
+    if let Some(shift) = line_shift_by_code(value) {
+        cfg.line_shift = shift;
+    }
+    if cfg.mode == EngineMode::Parallel && cfg.memory != "atomic" {
+        cfg.memory = "atomic".into();
+    }
+}
+
+/// Human-readable stage label for reports.
+fn stage_label(cfg: &SimConfig) -> String {
+    format!("{}/{}+{}", cfg.mode.as_str(), cfg.pipeline, cfg.memory)
+}
+
+/// Build an engine for `cfg` and boot it from a flat image.
+pub fn build_engine(cfg: &SimConfig, image: &Image) -> Box<dyn ExecutionEngine> {
     match cfg.mode {
         EngineMode::Interp => {
             let sys = build_system(cfg);
@@ -147,41 +238,106 @@ pub fn run_image(cfg: &SimConfig, image: &Image) -> RunReport {
             for h in &mut eng.harts {
                 h.pc = entry;
             }
-            let t0 = Instant::now();
-            let exit = eng.run(cfg.max_insts);
-            let wall = t0.elapsed();
-            RunReport {
-                exit,
-                wall,
-                total_insts: eng.total_instret(),
-                per_hart: eng.harts.iter().map(|h| (h.cycle, h.instret)).collect(),
-                console: eng.sys.bus.uart.output_str(),
-                model_stats: eng.sys.model.stats(),
-                engine_stats: None,
-            }
+            Box::new(eng)
         }
         EngineMode::Lockstep => {
             let sys = build_system(cfg);
             let mut eng = FiberEngine::new(sys, &cfg.pipeline);
-            eng.timing = cfg.timing;
             eng.yield_per_instruction = cfg.naive_yield;
             eng.chaining = !cfg.no_chaining;
             let entry = load_flat(&eng.sys, image);
             eng.set_entry(entry);
-            let t0 = Instant::now();
-            let exit = eng.run(cfg.max_insts);
-            let wall = t0.elapsed();
-            RunReport {
-                exit,
-                wall,
-                total_insts: eng.total_instret(),
-                per_hart: eng.harts.iter().map(|h| (h.cycle, h.instret)).collect(),
-                console: eng.sys.bus.uart.output_str(),
-                model_stats: eng.sys.model.stats(),
-                engine_stats: Some(eng.stats),
-            }
+            Box::new(eng)
         }
-        EngineMode::Parallel => parallel::run_parallel(cfg, image),
+        EngineMode::Parallel => Box::new(ParallelEngine::from_image(cfg, image)),
+    }
+}
+
+/// Build an engine for `cfg` warm-started from a snapshot (the second
+/// half of an engine hand-off).
+pub fn resume_engine(cfg: &SimConfig, snapshot: SystemSnapshot) -> Box<dyn ExecutionEngine> {
+    match cfg.mode {
+        EngineMode::Interp => {
+            let sys = system_over(cfg, Arc::clone(&snapshot.phys));
+            let mut eng = InterpEngine::new(sys);
+            eng.resume(snapshot);
+            Box::new(eng)
+        }
+        EngineMode::Lockstep => {
+            let sys = system_over(cfg, Arc::clone(&snapshot.phys));
+            let mut eng = FiberEngine::new(sys, &cfg.pipeline);
+            eng.yield_per_instruction = cfg.naive_yield;
+            eng.chaining = !cfg.no_chaining;
+            eng.resume(snapshot);
+            Box::new(eng)
+        }
+        EngineMode::Parallel => Box::new(ParallelEngine::from_snapshot(cfg, snapshot)),
+    }
+}
+
+/// Run `image` to completion under `cfg`, performing engine hand-offs as
+/// requested by the guest (SIMCTRL engine field) or by `--switch-at`.
+pub fn run_image(cfg: &SimConfig, image: &Image) -> RunReport {
+    cfg.validate().expect("invalid configuration");
+    let t0 = Instant::now();
+    let mut stage = cfg.clone();
+    let mut engine = build_engine(&stage, image);
+    let mut stages = vec![stage_label(&stage)];
+    let mut acc_stats = EngineStats::default();
+    let mut switch_at = stage.switch_at;
+
+    let exit = loop {
+        // Budgets are in the unit the engine's `run` consumes: total
+        // retired instructions for serial engines, per-hart for the
+        // parallel engine (`budget_progress` reports the same unit).
+        let progress = engine.budget_progress();
+        let remaining = cfg.max_insts.saturating_sub(progress);
+        let (budget, switch_bounded) = match switch_at {
+            Some(at) => {
+                let to_switch = at.saturating_sub(progress);
+                if to_switch < remaining {
+                    (to_switch, true)
+                } else {
+                    (remaining, false)
+                }
+            }
+            None => (remaining, false),
+        };
+        // Decide the next stage's configuration; anything other than a
+        // hand-off ends the run.
+        match engine.run(budget) {
+            ExitReason::SwitchRequest(value) => {
+                // Guest-triggered hand-off: decode the full target
+                // configuration from the CSR write.
+                apply_simctrl_to_config(&mut stage, value);
+            }
+            ExitReason::StepLimit if switch_bounded => {
+                // --switch-at boundary: hand off to the --switch-to target.
+                let (mode, pipeline, memory) = stage.switch_target().expect("validated");
+                stage.mode = mode;
+                stage.pipeline = pipeline;
+                stage.memory = memory;
+            }
+            other => break other,
+        }
+        // The hand-off itself is identical for both triggers.
+        switch_at = None;
+        acc_stats.merge(&engine.stats());
+        let snapshot = engine.suspend();
+        engine = resume_engine(&stage, snapshot);
+        stages.push(stage_label(&stage));
+    };
+    let wall = t0.elapsed();
+    acc_stats.merge(&engine.stats());
+    RunReport {
+        exit,
+        wall,
+        total_insts: engine.total_instret(),
+        per_hart: engine.per_hart(),
+        console: engine.console(),
+        model_stats: engine.model_stats(),
+        engine_stats: Some(acc_stats),
+        stages,
     }
 }
 
@@ -264,6 +420,8 @@ mod tests {
         assert!(r.contains("InOrder"));
         assert!(r.contains("MESI"));
         assert!(r.contains("Lockstep execution required"));
+        assert!(r.contains("lockstep"), "engine inventory must be listed");
+        assert!(r.contains("--switch-at"));
     }
 
     #[test]
@@ -272,5 +430,42 @@ mod tests {
         assert_eq!(v & 0b111, 3);
         assert_eq!((v >> 4) & 0b111, 4);
         assert_eq!((v >> 8) & 0xfff, 64);
+        assert_eq!((v >> SIMCTRL_ENGINE_SHIFT) & 0b111, 0, "plain encoding keeps the engine");
+        let full = simctrl_encoding_full(EngineMode::Parallel, "atomic", "atomic", 6);
+        assert_eq!((full >> SIMCTRL_ENGINE_SHIFT) & 0b111, 3);
+    }
+
+    #[test]
+    fn mips_guards_zero_wall_clock() {
+        let report = RunReport {
+            exit: ExitReason::Exited(0),
+            wall: std::time::Duration::ZERO,
+            total_insts: 1_000_000,
+            per_hart: vec![(0, 1_000_000)],
+            console: String::new(),
+            model_stats: Vec::new(),
+            engine_stats: None,
+            stages: vec!["lockstep/simple+atomic".into()],
+        };
+        assert_eq!(report.mips(), 0.0, "zero wall clock must not produce inf");
+        assert!(report.summary().contains("mips=0.0"));
+        let empty = RunReport { total_insts: 0, wall: std::time::Duration::from_secs(1), ..report };
+        assert_eq!(empty.mips(), 0.0);
+    }
+
+    #[test]
+    fn switch_at_hands_off_to_switch_to_target() {
+        let img = countdown(2_000);
+        let mut cfg = SimConfig::default();
+        cfg.set("mode", "parallel").unwrap();
+        cfg.pipeline = "atomic".into();
+        cfg.set("switch-at", "1000").unwrap();
+        let report = run_image(&cfg, &img);
+        assert_eq!(report.exit, ExitReason::Exited(2_000 * 2_001 / 2));
+        assert_eq!(report.stages.len(), 2, "exactly one hand-off: {:?}", report.stages);
+        assert_eq!(report.stages[0], "parallel/atomic+atomic");
+        assert_eq!(report.stages[1], "lockstep/inorder+mesi");
+        // The measured stage runs under MESI: model stats must be present.
+        assert!(!report.model_stats.is_empty());
     }
 }

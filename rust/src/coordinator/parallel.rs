@@ -3,85 +3,373 @@
 //! runs in its own host thread over shared guest DRAM, with host atomics
 //! backing AMO/LR/SC. This is the fastest mode (Figure 5's ">300 MIPS per
 //! core" bar) and is also used to fast-forward boot/preparation phases
-//! before switching to a timing mode.
+//! before handing the guest off to a cycle-level engine.
 //!
-//! Deviations from the lockstep engine (documented in DESIGN.md): each
+//! [`ParallelEngine`] implements [`ExecutionEngine`]: between `run` calls
+//! the hart states live on the engine, and each `run` spawns one thread
+//! per hart, seeds it with that hart's state, and collects the state back
+//! at the join. That makes the engine suspendable — `suspend` produces a
+//! [`SystemSnapshot`] the coordinator can warm-start the lockstep or
+//! interpreter engine from (the fast-forward → measure hand-off).
+//!
+//! Deviations from the lockstep engine (documented in DESIGN.md §6): each
 //! thread owns a private `System` (device state is per-thread, so
-//! cross-hart IPIs are unavailable in this mode; guest workloads
-//! synchronise through shared memory, as the PARSEC-style benchmarks do).
+//! cross-hart IPIs are only folded in at hand-off/join points; guest
+//! workloads synchronise through shared memory, as the PARSEC-style
+//! benchmarks do).
 
 use super::config::SimConfig;
-use super::RunReport;
 use crate::asm::Image;
+use crate::engine::{EngineStats, ExecutionEngine, ExitReason};
 use crate::fiber::FiberEngine;
-use crate::interp::ExitReason;
 use crate::mem::{AtomicModel, PhysMem, DRAM_BASE};
-use crate::sys::System;
+use crate::sys::{EcallMode, Hart, System, SystemSnapshot};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
 
-/// Run `image` with one host thread per hart.
-pub fn run_parallel(cfg: &SimConfig, image: &Image) -> RunReport {
-    let phys = Arc::new(PhysMem::new(DRAM_BASE, cfg.dram_bytes));
-    phys.load_image(image.base, &image.bytes);
-    let entry = image.entry;
-    let shared_exit = Arc::new(AtomicU64::new(u64::MAX));
+/// The multi-threaded functional engine (one host thread per hart).
+pub struct ParallelEngine {
+    num_harts: usize,
+    /// Per-hart pipeline-model names: the guest can retarget a single
+    /// hart's model via SIMCTRL (§3.5), and the choice must survive
+    /// spawn/join rounds.
+    pipelines: Vec<String>,
+    simctrl_state: u64,
+    phys: Arc<PhysMem>,
+    harts: Vec<Hart>,
+    ipi: Vec<u64>,
+    msip: Vec<bool>,
+    mtimecmp: Vec<u64>,
+    console: Vec<u8>,
+    exit: Option<u64>,
+    ecall_mode: EcallMode,
+    brk: u64,
+    mmap_top: u64,
+    /// Trace capture handed off from a previous engine stage; parked here
+    /// untouched (parallel threads have per-thread device state and do
+    /// not record) and returned by `suspend` so a later cycle-level stage
+    /// keeps the earlier records.
+    trace: Option<crate::analytics::trace::TraceCapture>,
+    stats: EngineStats,
+    switch_request: Option<u64>,
+}
 
-    let t0 = Instant::now();
-    let handles: Vec<_> = (0..cfg.harts)
-        .map(|h| {
-            let phys = Arc::clone(&phys);
-            let shared_exit = Arc::clone(&shared_exit);
-            let pipeline = cfg.pipeline.clone();
-            let max_insts = cfg.max_insts;
-            let harts = cfg.harts;
-            std::thread::spawn(move || {
-                let mut sys = System::with_shared_phys(harts, phys, Box::new(AtomicModel));
-                sys.parallel = true;
-                sys.shared_exit = Some(Arc::clone(&shared_exit));
-                let mut eng = FiberEngine::new(sys, &pipeline);
-                eng.set_entry(entry);
-                let exit = eng.run_single(h, max_insts, &shared_exit);
-                let hart = &eng.harts[h];
-                (exit, hart.cycle, hart.instret, eng.sys.bus.uart.output_str())
+impl ParallelEngine {
+    /// Boot a fresh guest from a flat image.
+    pub fn from_image(cfg: &SimConfig, image: &Image) -> ParallelEngine {
+        let phys = Arc::new(PhysMem::new(DRAM_BASE, cfg.dram_bytes));
+        phys.load_image(image.base, &image.bytes);
+        let mut eng = ParallelEngine::hollow(cfg, phys);
+        eng.harts = (0..cfg.harts)
+            .map(|h| {
+                let mut hart = Hart::new(h);
+                hart.pc = image.entry;
+                hart
             })
-        })
-        .collect();
+            .collect();
+        eng
+    }
 
-    let mut per_hart = Vec::new();
-    let mut total_insts = 0;
-    let mut console = String::new();
-    let mut exit = ExitReason::StepLimit;
-    for handle in handles {
-        let (e, cycle, instret, out) = handle.join().expect("hart thread panicked");
-        if let ExitReason::Exited(_) = e {
-            exit = e;
-        }
-        per_hart.push((cycle, instret));
-        total_insts += instret;
-        console.push_str(&out);
+    /// Warm-start from a snapshot handed off by another engine.
+    pub fn from_snapshot(cfg: &SimConfig, snapshot: SystemSnapshot) -> ParallelEngine {
+        let mut eng = ParallelEngine::hollow(cfg, Arc::clone(&snapshot.phys));
+        ExecutionEngine::resume(&mut eng, snapshot);
+        eng
     }
-    let wall = t0.elapsed();
-    if exit == ExitReason::StepLimit {
-        let v = shared_exit.load(Ordering::SeqCst);
-        if v != u64::MAX {
-            exit = ExitReason::Exited(v);
+
+    /// Engine shell without hart state (filled by from_image / resume).
+    fn hollow(cfg: &SimConfig, phys: Arc<PhysMem>) -> ParallelEngine {
+        let size = phys.size();
+        ParallelEngine {
+            num_harts: cfg.harts,
+            pipelines: vec![cfg.pipeline.clone(); cfg.harts],
+            simctrl_state: super::simctrl_encoding_full(
+                super::EngineMode::Parallel,
+                &cfg.pipeline,
+                &cfg.memory,
+                cfg.line_shift,
+            ),
+            phys,
+            harts: Vec::new(),
+            ipi: vec![0; cfg.harts],
+            msip: vec![false; cfg.harts],
+            mtimecmp: vec![u64::MAX; cfg.harts],
+            console: Vec::new(),
+            exit: None,
+            ecall_mode: EcallMode::Sbi,
+            brk: crate::sys::default_brk(size),
+            mmap_top: crate::sys::default_mmap_top(size),
+            trace: None,
+            stats: EngineStats::default(),
+            switch_request: None,
         }
     }
-    RunReport {
-        exit,
-        wall,
-        total_insts,
-        per_hart,
-        console,
-        model_stats: Vec::new(),
-        engine_stats: None,
+
+    /// One run stage: spawn a thread per hart, seed it with the hart's
+    /// carried state, and join all threads, merging state back. `budget`
+    /// is a per-hart instruction allowance (the threads are independent,
+    /// so a global retired-instruction budget has no meaningful total
+    /// order — documented in DESIGN.md §6). When every thread parks in
+    /// WFI but the join-time merge collected deliverable wake sources
+    /// (cross-hart IPIs / CLINT writes), the spawn/join round repeats so
+    /// the seeds reach their targets; a round that changes nothing ends
+    /// the stage (each re-seeded hart may retire up to `budget` more
+    /// instructions in its round).
+    fn run_stage(&mut self, budget: u64) -> ExitReason {
+        if let Some(code) = self.exit {
+            return ExitReason::Exited(code);
+        }
+        if let Some(value) = self.switch_request {
+            return ExitReason::SwitchRequest(value);
+        }
+        if budget == 0 {
+            return ExitReason::StepLimit;
+        }
+        let mut prev_wake_sig: Option<(Vec<u64>, Vec<bool>, Vec<u64>)> = None;
+        loop {
+            match self.run_round(budget) {
+                ExitReason::Deadlock => {
+                    // The merge may have just collected a wake source for
+                    // a sleeping hart; retry while re-seeding can still
+                    // change something (IPI seeds are consumed on
+                    // delivery, so this converges).
+                    let wake_possible = (0..self.num_harts).any(|t| {
+                        self.harts[t].wfi
+                            && !self.harts[t].halted
+                            && (self.ipi[t] != 0
+                                || self.msip[t]
+                                || self.mtimecmp[t] != u64::MAX)
+                    });
+                    let sig =
+                        (self.ipi.clone(), self.msip.clone(), self.mtimecmp.clone());
+                    if !wake_possible || prev_wake_sig.as_ref() == Some(&sig) {
+                        return ExitReason::Deadlock;
+                    }
+                    prev_wake_sig = Some(sig);
+                }
+                other => return other,
+            }
+        }
+    }
+
+    /// One spawn/join round of a stage.
+    fn run_round(&mut self, budget: u64) -> ExitReason {
+        let shared_exit = Arc::new(AtomicU64::new(u64::MAX));
+        let shared_switch = Arc::new(AtomicU64::new(u64::MAX));
+
+        let seed_simctrl = self.simctrl_state;
+        let handles: Vec<_> = (0..self.num_harts)
+            .map(|h| {
+                let phys = Arc::clone(&self.phys);
+                let shared_exit = Arc::clone(&shared_exit);
+                let shared_switch = Arc::clone(&shared_switch);
+                let pipeline = self.pipelines[h].clone();
+                let num_harts = self.num_harts;
+                let hart = std::mem::replace(&mut self.harts[h], Hart::new(h));
+                let limit = hart.instret.saturating_add(budget);
+                let ipi_seed = self.ipi[h];
+                let msip_seed = self.msip[h];
+                let mtimecmp_seed = self.mtimecmp[h];
+                let simctrl_state = self.simctrl_state;
+                let ecall_mode = self.ecall_mode;
+                let brk = self.brk;
+                let mmap_top = self.mmap_top;
+                std::thread::spawn(move || {
+                    let mut sys =
+                        System::with_shared_phys(num_harts, phys, Box::new(AtomicModel));
+                    sys.parallel = true;
+                    sys.shared_exit = Some(shared_exit);
+                    sys.shared_switch = Some(shared_switch);
+                    sys.simctrl_state = simctrl_state;
+                    sys.ecall_mode = ecall_mode;
+                    sys.brk = brk;
+                    sys.mmap_top = mmap_top;
+                    sys.ipi[h] = ipi_seed;
+                    sys.bus.clint.msip[h] = msip_seed;
+                    sys.bus.clint.mtimecmp[h] = mtimecmp_seed;
+                    let mut eng = FiberEngine::new(sys, &pipeline);
+                    eng.harts[h] = hart;
+                    let exit = eng.run_single(h, limit);
+                    let hart = eng.harts.swap_remove(h);
+                    let console = std::mem::take(&mut eng.sys.bus.uart.output);
+                    let ipi = std::mem::take(&mut eng.sys.ipi);
+                    let msip = std::mem::take(&mut eng.sys.bus.clint.msip);
+                    let mtimecmp = std::mem::take(&mut eng.sys.bus.clint.mtimecmp);
+                    // Model-level SIMCTRL writes (engine field 0) are
+                    // applied thread-locally; report the hart's final
+                    // pipeline choice and SIMCTRL view so they survive
+                    // the next spawn/join round.
+                    let pipeline_after = eng.pipelines[h].name();
+                    let simctrl_after = eng.sys.simctrl_state;
+                    (
+                        exit,
+                        hart,
+                        eng.stats,
+                        console,
+                        ipi,
+                        msip,
+                        mtimecmp,
+                        eng.sys.brk,
+                        eng.sys.mmap_top,
+                        pipeline_after,
+                        simctrl_after,
+                    )
+                })
+            })
+            .collect();
+
+        // Join in hart order so the merge below is deterministic for a
+        // given set of per-thread states. Cross-hart device writes (SBI
+        // IPIs, CLINT msip/mtimecmp MMIO aimed at another hart) land in
+        // the writer thread's private System; this is where they are
+        // folded back together (DESIGN.md §6). For a hart's own CLINT
+        // entries its thread is authoritative; for foreign entries a
+        // set msip bit ORs in and a programmed (non-reset) mtimecmp
+        // overwrites in hart order.
+        for bits in self.ipi.iter_mut() {
+            *bits = 0;
+        }
+        let results: Vec<_> = handles
+            .into_iter()
+            .map(|handle| handle.join().expect("hart thread panicked"))
+            .collect();
+        let mut all_deadlocked = true;
+        // Pass 1: each hart's own state, for which its thread is
+        // authoritative.
+        for (h, (exit, _hart, stats, console, ipi, msip, mtimecmp, brk, mmap_top, pipeline, simctrl)) in
+            results.iter().enumerate()
+        {
+            all_deadlocked &= *exit == ExitReason::Deadlock;
+            self.stats.merge(stats);
+            self.console.extend_from_slice(console);
+            for (target, bits) in ipi.iter().enumerate() {
+                self.ipi[target] |= bits;
+            }
+            self.msip[h] = msip[h];
+            self.mtimecmp[h] = mtimecmp[h];
+            // brk/mmap bump pointers only grow; keep the furthest.
+            self.brk = self.brk.max(*brk);
+            self.mmap_top = self.mmap_top.max(*mmap_top);
+            self.pipelines[h] = (*pipeline).into();
+            // A thread that changed its SIMCTRL view did so via a guest
+            // write; keep it (hart order if several wrote).
+            if *simctrl != seed_simctrl {
+                self.simctrl_state = *simctrl;
+            }
+        }
+        // Pass 2: foreign CLINT writes (MMIO aimed at another hart) — a
+        // set msip bit ORs in, a programmed (non-reset) mtimecmp
+        // overwrites in hart order.
+        for (h, (_, _, _, _, _, msip, mtimecmp, _, _, _, _)) in results.iter().enumerate() {
+            for target in 0..self.num_harts {
+                if target == h {
+                    continue;
+                }
+                if msip[target] {
+                    self.msip[target] = true;
+                }
+                if mtimecmp[target] != u64::MAX {
+                    self.mtimecmp[target] = mtimecmp[target];
+                }
+            }
+        }
+        for (h, (_, hart, ..)) in results.into_iter().enumerate() {
+            self.harts[h] = hart;
+        }
+
+        let exited = shared_exit.load(Ordering::SeqCst);
+        if exited != u64::MAX {
+            self.exit = Some(exited);
+            return ExitReason::Exited(exited);
+        }
+        let switch = shared_switch.load(Ordering::SeqCst);
+        if switch != u64::MAX {
+            self.switch_request = Some(switch);
+            self.simctrl_state = switch;
+            return ExitReason::SwitchRequest(switch);
+        }
+        if all_deadlocked {
+            return ExitReason::Deadlock;
+        }
+        ExitReason::StepLimit
+    }
+}
+
+impl ExecutionEngine for ParallelEngine {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn run(&mut self, budget: u64) -> ExitReason {
+        self.run_stage(budget)
+    }
+
+    fn suspend(&mut self) -> SystemSnapshot {
+        let mut harts = std::mem::take(&mut self.harts);
+        SystemSnapshot::normalize_harts(&mut harts);
+        SystemSnapshot {
+            harts,
+            phys: Arc::clone(&self.phys),
+            ipi: self.ipi.clone(),
+            msip: self.msip.clone(),
+            mtimecmp: self.mtimecmp.clone(),
+            console: std::mem::take(&mut self.console),
+            exit: self.exit,
+            ecall_mode: self.ecall_mode,
+            brk: self.brk,
+            mmap_top: self.mmap_top,
+            // Parallel threads do not record (per-thread device state),
+            // but a capture handed off from an earlier cycle-level stage
+            // is preserved through this leg.
+            trace: self.trace.take(),
+        }
+    }
+
+    fn resume(&mut self, snapshot: SystemSnapshot) {
+        assert_eq!(snapshot.harts.len(), self.num_harts, "hart count is fixed across hand-offs");
+        self.phys = Arc::clone(&snapshot.phys);
+        self.harts = snapshot.harts;
+        self.ipi = snapshot.ipi;
+        self.msip = snapshot.msip;
+        self.mtimecmp = snapshot.mtimecmp;
+        self.console = snapshot.console;
+        self.exit = snapshot.exit;
+        self.ecall_mode = snapshot.ecall_mode;
+        self.brk = snapshot.brk;
+        self.mmap_top = snapshot.mmap_top;
+        self.trace = snapshot.trace;
+    }
+
+    fn stats(&self) -> EngineStats {
+        self.stats
+    }
+
+    fn total_instret(&self) -> u64 {
+        self.harts.iter().map(|h| h.instret).sum()
+    }
+
+    fn budget_progress(&self) -> u64 {
+        // Budgets are per hart in this engine (see run_stage); report the
+        // furthest hart so coordinator budget arithmetic matches.
+        self.harts.iter().map(|h| h.instret).max().unwrap_or(0)
+    }
+
+    fn per_hart(&self) -> Vec<(u64, u64)> {
+        self.harts.iter().map(|h| (h.cycle, h.instret)).collect()
+    }
+
+    fn console(&self) -> String {
+        String::from_utf8_lossy(&self.console).into_owned()
+    }
+
+    fn model_stats(&self) -> Vec<(&'static str, u64)> {
+        Vec::new()
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::run_image;
     use super::*;
     use crate::asm::*;
     use crate::isa::csr::CSR_MHARTID;
@@ -125,7 +413,7 @@ mod tests {
         cfg.harts = 4;
         cfg.pipeline = "atomic".into();
         cfg.set("mode", "parallel").unwrap();
-        let report = run_parallel(&cfg, &img);
+        let report = run_image(&cfg, &img);
         assert_eq!(report.exit, ExitReason::Exited(40_000));
     }
 
@@ -180,7 +468,34 @@ mod tests {
         cfg.harts = 2;
         cfg.pipeline = "atomic".into();
         cfg.set("mode", "parallel").unwrap();
-        let report = run_parallel(&cfg, &img);
+        let report = run_image(&cfg, &img);
         assert_eq!(report.exit, ExitReason::Exited(10_000), "no lost increments under the lock");
+    }
+
+    #[test]
+    fn parallel_budget_suspends_into_snapshot() {
+        // A finite budget stops every hart thread; the collected snapshot
+        // must carry the harts' progress so a later stage can continue.
+        let mut a = Assembler::new(DRAM_BASE);
+        a.li(A0, 1_000_000);
+        let top = a.here();
+        a.addi(A0, A0, -1);
+        a.bnez(A0, top);
+        a.li(A7, 93);
+        a.ecall();
+        let img = a.finish();
+
+        let mut cfg = SimConfig::default();
+        cfg.harts = 2;
+        cfg.pipeline = "atomic".into();
+        cfg.set("mode", "parallel").unwrap();
+        let mut eng = ParallelEngine::from_image(&cfg, &img);
+        assert_eq!(ExecutionEngine::run(&mut eng, 5_000), ExitReason::StepLimit);
+        let snap = ExecutionEngine::suspend(&mut eng);
+        assert_eq!(snap.harts.len(), 2);
+        for hart in &snap.harts {
+            assert!(hart.instret >= 5_000, "hart must have used its budget");
+            assert!(hart.pc >= DRAM_BASE, "pc must be written back");
+        }
     }
 }

@@ -1,0 +1,295 @@
+//! The common execution-engine abstraction.
+//!
+//! The repo grows three run loops — the naive per-cycle interpreter
+//! (`interp`), the lockstep fiber DBT engine (`fiber`), and the
+//! functional-parallel engine (`coordinator::parallel`). Historically each
+//! carried its own copy of the interrupt-poll / WFI-wakeup / exit-reason
+//! plumbing and could only be selected *before* a run started. This module
+//! factors the shared plumbing out and defines [`ExecutionEngine`], the
+//! interface every engine implements so the coordinator can tear one down
+//! mid-run and warm-start another over the same guest state (paper §3.5:
+//! "it is possible to switch between functional and timing modes at
+//! run-time") — e.g. fast-forward boot under the parallel engine, then
+//! hand off to lockstep InOrder+MESI for the region of interest.
+//!
+//! The hand-off vehicle is [`crate::sys::SystemSnapshot`]: suspend()
+//! captures hart architectural state, pending IPIs and device state, and
+//! drops engine-private residue (DBT code caches, L0 contents — the new
+//! engine starts cold, which is always safe); resume() installs the
+//! snapshot into a freshly-built engine.
+
+use crate::isa::csr::{SIMCTRL_ENGINE_MASK, SIMCTRL_ENGINE_SHIFT};
+use crate::mem::{MemTiming, MemoryModel};
+use crate::sys::{Hart, System, SystemSnapshot};
+
+/// Why an engine run loop stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExitReason {
+    /// Guest requested exit with this code.
+    Exited(u64),
+    /// Instruction/step budget exhausted.
+    StepLimit,
+    /// All harts are halted or in unwakeable WFI.
+    Deadlock,
+    /// The guest wrote the SIMCTRL CSR requesting a different execution
+    /// engine (the raw CSR value is carried so the coordinator can decode
+    /// the full target configuration). The engine has stopped at an
+    /// architecturally consistent point and must be suspended.
+    SwitchRequest(u64),
+}
+
+/// Engine statistics (yields, translations, chaining efficacy). All zero
+/// for engines without a DBT layer (the interpreter).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct EngineStats {
+    pub slices: u64,
+    pub yields: u64,
+    pub blocks_translated: u64,
+    pub block_entries: u64,
+    pub chain_hits: u64,
+    pub retranslations: u64,
+}
+
+impl EngineStats {
+    /// Field-wise accumulate (across hart threads or hand-off stages).
+    pub fn merge(&mut self, other: &EngineStats) {
+        self.slices += other.slices;
+        self.yields += other.yields;
+        self.blocks_translated += other.blocks_translated;
+        self.block_entries += other.block_entries;
+        self.chain_hits += other.chain_hits;
+        self.retranslations += other.retranslations;
+    }
+}
+
+/// A run-to-completion execution engine over a guest system.
+///
+/// Engines are built by the coordinator (from a [`crate::asm::Image`] or a
+/// [`SystemSnapshot`]) and driven in stages: `run` executes until the
+/// guest exits, deadlocks, exhausts `budget`, or requests an engine
+/// switch; `suspend`/`resume` move the guest between engines without
+/// architecturally visible divergence.
+pub trait ExecutionEngine {
+    /// Engine name as used by the `--mode` flag / SIMCTRL engine field.
+    fn name(&self) -> &'static str;
+
+    /// Run until exit, deadlock, or switch request, or until (roughly —
+    /// engines stop at the next safe boundary) `budget` more instructions
+    /// have retired.
+    fn run(&mut self, budget: u64) -> ExitReason;
+
+    /// Capture all guest-visible state and tear down engine residue. The
+    /// engine is hollow afterwards and must be dropped.
+    fn suspend(&mut self) -> SystemSnapshot;
+
+    /// Install guest state captured from another engine. Must be called on
+    /// a freshly-built engine over the snapshot's own `PhysMem`.
+    fn resume(&mut self, snapshot: SystemSnapshot);
+
+    /// Engine statistics accumulated so far.
+    fn stats(&self) -> EngineStats;
+
+    /// Total instructions retired across all harts.
+    fn total_instret(&self) -> u64;
+
+    /// Instructions counted against `run` budgets (`--max-insts` /
+    /// `--switch-at`). Serial engines count the total across harts; the
+    /// parallel engine counts per hart (its threads are independent, so
+    /// a global total has no meaningful order) and reports the furthest
+    /// hart here so the coordinator's budget arithmetic stays in the
+    /// same unit `run` consumes.
+    fn budget_progress(&self) -> u64 {
+        self.total_instret()
+    }
+
+    /// Per-hart (mcycle, minstret).
+    fn per_hart(&self) -> Vec<(u64, u64)>;
+
+    /// Console output accumulated so far.
+    fn console(&self) -> String;
+
+    /// Memory-model statistics snapshot.
+    fn model_stats(&self) -> Vec<(&'static str, u64)>;
+}
+
+/// Simulation exit requested by the guest through any channel (SBI
+/// shutdown / proxy exit / SIMIO tohost write).
+#[inline]
+pub fn exit_code(sys: &System) -> Option<u64> {
+    sys.exit.or(sys.bus.simio.exit_code)
+}
+
+/// Fold pending IPIs into the hart and take a pending interrupt if any.
+pub fn poll_interrupt(hart: &mut Hart, sys: &mut System) {
+    if sys.ipi[hart.id] != 0 {
+        hart.mip |= std::mem::take(&mut sys.ipi[hart.id]);
+    }
+    let ext = sys.bus.clint.mip_bits(hart.id, hart.now());
+    if let Some(cause) = hart.pending_interrupt(ext) {
+        hart.wfi = false;
+        let target = hart.take_trap(crate::sys::Trap::new(cause, 0), hart.pc);
+        hart.pc = target;
+    }
+}
+
+/// The shared "event-loop fiber" (§3.3): every runnable hart is in WFI, so
+/// advance their clocks to the next CLINT timer deadline and poll for
+/// wakeups. Returns `false` when no hart can ever wake again (no WFI
+/// sleepers left, no programmed deadline, or the deadline wakes nobody) —
+/// the caller reports [`ExitReason::Deadlock`].
+pub fn wake_at_next_deadline(harts: &mut [Hart], sys: &mut System) -> bool {
+    if !harts.iter().any(|h| !h.halted && h.wfi) {
+        return false;
+    }
+    let Some(deadline) = sys.bus.clint.next_timer_deadline() else {
+        return false;
+    };
+    let mut woke = false;
+    for hart in harts.iter_mut() {
+        if hart.halted || !hart.wfi {
+            continue;
+        }
+        if hart.cycle < deadline {
+            hart.cycle = deadline;
+        }
+        poll_interrupt(hart, sys);
+        if !hart.wfi {
+            woke = true;
+        }
+    }
+    woke
+}
+
+/// Valid memory-model names — the single source for CLI and
+/// switch-target validation (the name↔code maps below must cover
+/// exactly this set).
+pub const MEMORY_MODEL_NAMES: &[&str] = &["atomic", "tlb", "cache", "mesi"];
+
+/// Memory model from its SIMCTRL code (shared by every engine's SIMCTRL
+/// handler and the coordinator's config decoding).
+pub fn memory_model_by_code(
+    code: u64,
+    harts: usize,
+    timing: MemTiming,
+) -> Option<Box<dyn MemoryModel>> {
+    match code {
+        1 => Some(Box::new(crate::mem::AtomicModel)),
+        2 => Some(Box::new(crate::mem::tlb_model::TlbModel::new(harts, timing))),
+        3 => Some(Box::new(crate::mem::cache_model::CacheModel::new(harts, timing))),
+        4 => Some(Box::new(crate::mem::mesi::MesiModel::new(harts, timing))),
+        _ => None,
+    }
+}
+
+/// Pipeline-model name from its SIMCTRL code.
+pub fn pipeline_name_by_code(code: u64) -> Option<&'static str> {
+    match code {
+        1 => Some("atomic"),
+        2 => Some("simple"),
+        3 => Some("inorder"),
+        _ => None,
+    }
+}
+
+/// Memory-model name from its SIMCTRL code.
+pub fn memory_name_by_code(code: u64) -> Option<&'static str> {
+    match code {
+        1 => Some("atomic"),
+        2 => Some("tlb"),
+        3 => Some("cache"),
+        4 => Some("mesi"),
+        _ => None,
+    }
+}
+
+/// L0 line shift from a SIMCTRL write's line-size field (bits [19:8],
+/// bytes; 0 or malformed = keep current).
+pub fn line_shift_by_code(value: u64) -> Option<u32> {
+    let line = (value >> 8) & 0xfff;
+    if line != 0 && line.is_power_of_two() && (4..=4096).contains(&line) {
+        Some(line.trailing_zeros())
+    } else {
+        None
+    }
+}
+
+/// Resolve a SIMCTRL write against the current packed state: nonzero
+/// fields of `write` override, zero fields keep `current`. Engines store
+/// (and hand off) the *merged* value, so guest reads of SIMCTRL and the
+/// coordinator's hand-off decoding always see the full live
+/// configuration — a write that only changes the memory model must not
+/// erase the recorded pipeline/line/engine fields.
+pub fn merge_simctrl(current: u64, write: u64) -> u64 {
+    let mut merged = current;
+    if write & 0b111 != 0 {
+        merged = (merged & !0b111) | (write & 0b111);
+    }
+    if (write >> 4) & 0b111 != 0 {
+        merged = (merged & !(0b111 << 4)) | (write & (0b111 << 4));
+    }
+    if (write >> 8) & 0xfff != 0 {
+        merged = (merged & !(0xfff << 8)) | (write & (0xfff << 8));
+    }
+    if matches!((write >> SIMCTRL_ENGINE_SHIFT) & 0b111, 1..=3) {
+        merged = (merged & !SIMCTRL_ENGINE_MASK) | (write & SIMCTRL_ENGINE_MASK);
+    }
+    merged
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_merge_accumulates() {
+        let mut a = EngineStats { slices: 1, yields: 2, ..Default::default() };
+        let b = EngineStats { slices: 10, chain_hits: 5, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.slices, 11);
+        assert_eq!(a.yields, 2);
+        assert_eq!(a.chain_hits, 5);
+    }
+
+    #[test]
+    fn code_lookups() {
+        assert_eq!(pipeline_name_by_code(3), Some("inorder"));
+        assert_eq!(pipeline_name_by_code(0), None);
+        assert_eq!(memory_name_by_code(4), Some("mesi"));
+        assert_eq!(memory_name_by_code(7), None);
+        assert!(memory_model_by_code(4, 2, MemTiming::default()).is_some());
+        assert!(memory_model_by_code(0, 2, MemTiming::default()).is_none());
+        assert_eq!(line_shift_by_code(64 << 8), Some(6));
+        assert_eq!(line_shift_by_code(4096 << 8), None, "truncated to 12 bits");
+        assert_eq!(line_shift_by_code(0), None);
+        assert_eq!(line_shift_by_code(48 << 8), None, "not a power of two");
+    }
+
+    #[test]
+    fn simctrl_merge_keeps_zero_fields() {
+        let current = 3 | (4 << 4) | (64 << 8) | (2 << SIMCTRL_ENGINE_SHIFT);
+        // Memory-only write keeps pipeline, line size, and engine.
+        let merged = merge_simctrl(current, 3 << 4);
+        assert_eq!(merged, 3 | (3 << 4) | (64 << 8) | (2 << SIMCTRL_ENGINE_SHIFT));
+        // Engine-only write keeps the models.
+        let merged = merge_simctrl(current, 1 << SIMCTRL_ENGINE_SHIFT);
+        assert_eq!(merged, 3 | (4 << 4) | (64 << 8) | (1 << SIMCTRL_ENGINE_SHIFT));
+        // Full write overrides everything.
+        let full = 1 | (1 << 4) | (128 << 8) | (3 << SIMCTRL_ENGINE_SHIFT);
+        assert_eq!(merge_simctrl(current, full), full);
+        // Invalid engine codes are not merged in.
+        assert_eq!(merge_simctrl(current, 7 << SIMCTRL_ENGINE_SHIFT), current);
+    }
+
+    #[test]
+    fn wake_requires_deadline() {
+        let mut sys = System::new(1, 1 << 20);
+        let mut harts = vec![Hart::new(0)];
+        harts[0].wfi = true;
+        // No mtimecmp programmed: deadlock.
+        assert!(!wake_at_next_deadline(&mut harts, &mut sys));
+        // Programmed deadline advances the clock.
+        sys.bus.clint.mtimecmp[0] = 100;
+        wake_at_next_deadline(&mut harts, &mut sys);
+        assert!(harts[0].cycle >= 100);
+    }
+}

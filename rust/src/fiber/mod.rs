@@ -16,19 +16,32 @@
 //!    (the ~10% optimisation; `yield_per_instruction` reverts to naive
 //!    per-instruction yielding for the A1 ablation);
 //!  * interrupts are checked only at basic-block boundaries;
-//!  * an "event-loop fiber" — here the scheduler's timer handling — wakes
-//!    WFI sleepers at CLINT deadlines.
+//!  * an "event-loop fiber" — here the shared scheduler helper
+//!    [`crate::engine::wake_at_next_deadline`] — wakes WFI sleepers at
+//!    CLINT deadlines.
+//!
+//! The engine implements [`crate::engine::ExecutionEngine`], so the
+//! coordinator can suspend it mid-run into a
+//! [`crate::sys::SystemSnapshot`] and hand the guest to another engine
+//! (or receive one fast-forwarded by the parallel engine, §3.5).
+
+pub use crate::engine::EngineStats;
 
 use crate::dbt::block::{TermKind, NO_CHAIN};
 use crate::dbt::{translate, BlockId, CodeCache};
-use crate::interp::{poll_interrupt, ExitReason};
-use crate::isa::csr::{EXC_ECALL_M, EXC_ECALL_S, EXC_ECALL_U};
+use crate::engine::{
+    exit_code, line_shift_by_code, memory_model_by_code, merge_simctrl, pipeline_name_by_code,
+    poll_interrupt, wake_at_next_deadline, ExecutionEngine, ExitReason,
+};
+use crate::isa::csr::{
+    EXC_ECALL_M, EXC_ECALL_S, EXC_ECALL_U, SIMCTRL_ENGINE_LOCKSTEP, SIMCTRL_ENGINE_PARALLEL,
+    SIMCTRL_ENGINE_SHIFT,
+};
 use crate::mem::mmu::{translate as mmu_translate, AccessKind};
-use crate::mem::{MemTiming, MemoryModel};
 use crate::pipeline::PipelineModel;
 use crate::sys::exec::{cold_fetch, exec_op, Flow};
 use crate::sys::hart::{Hart, Trap};
-use crate::sys::{handle_ecall, System};
+use crate::sys::{handle_ecall, System, SystemSnapshot};
 
 /// Per-hart continuation — the fiber state.
 struct Cont {
@@ -50,17 +63,6 @@ impl Cont {
     }
 }
 
-/// Engine statistics (yields, translations, chaining efficacy).
-#[derive(Debug, Default, Clone, Copy)]
-pub struct EngineStats {
-    pub slices: u64,
-    pub yields: u64,
-    pub blocks_translated: u64,
-    pub block_entries: u64,
-    pub chain_hits: u64,
-    pub retranslations: u64,
-}
-
 /// The lockstep DBT engine.
 pub struct FiberEngine {
     pub harts: Vec<Hart>,
@@ -76,8 +78,6 @@ pub struct FiberEngine {
     pub yield_per_instruction: bool,
     /// A3 ablation: disable block chaining.
     pub chaining: bool,
-    /// Timing parameters used when SIMCTRL constructs new memory models.
-    pub timing: MemTiming,
     pub stats: EngineStats,
     total_retired: u64,
 }
@@ -105,7 +105,6 @@ impl FiberEngine {
             nominal,
             yield_per_instruction: false,
             chaining: true,
-            timing: MemTiming::default(),
             stats: EngineStats::default(),
             total_retired: 0,
         }
@@ -267,16 +266,28 @@ impl FiberEngine {
     /// Runtime reconfiguration via the vendor SIMCTRL CSR (§3.5).
     /// Encoding documented at `isa::csr::CSR_SIMCTRL`.
     pub fn apply_simctrl(&mut self, h: usize, value: u64) -> bool {
+        // Resolve "keep" (zero) fields against the live configuration, so
+        // earlier in-place model changes survive this write and any
+        // hand-off it triggers.
+        let state = merge_simctrl(self.sys.simctrl_state, value);
+        // Engine-level hand-off (§3.5 extended): bits [22:20] request a
+        // different execution engine. This engine only records the request
+        // — the model fields of the same write are applied when the
+        // coordinator relaunches the guest under the target engine.
+        let engine = (value >> SIMCTRL_ENGINE_SHIFT) & 0b111;
+        let current =
+            if self.sys.parallel { SIMCTRL_ENGINE_PARALLEL } else { SIMCTRL_ENGINE_LOCKSTEP };
+        if matches!(engine, 1..=3) && engine != current {
+            self.sys.simctrl_state = state;
+            self.sys.request_engine_switch(state);
+            self.conts[h].hint = NO_CHAIN;
+            return true;
+        }
         let mut invalidated = false;
         // Pipeline model: per-hart (§3.5), flushes that hart's code cache.
         let pm = value & 0b111;
         if pm != 0 {
-            let name = match pm {
-                1 => "atomic",
-                2 => "simple",
-                3 => "inorder",
-                _ => "simple",
-            };
+            let name = pipeline_name_by_code(pm).unwrap_or("simple");
             if let Some(model) = crate::pipeline::by_name(name) {
                 self.nominal[h] = !model.tracks_cycles();
                 self.pipelines[h] = model;
@@ -289,22 +300,14 @@ impl FiberEngine {
         let mm = (value >> 4) & 0b111;
         if mm != 0 {
             let n = self.sys.num_harts;
-            let model: Option<Box<dyn MemoryModel>> = match mm {
-                1 => Some(Box::new(crate::mem::AtomicModel)),
-                2 => Some(Box::new(crate::mem::tlb_model::TlbModel::new(n, self.timing))),
-                3 => Some(Box::new(crate::mem::cache_model::CacheModel::new(n, self.timing))),
-                4 => Some(Box::new(crate::mem::mesi::MesiModel::new(n, self.timing))),
-                _ => None,
-            };
-            if let Some(m) = model {
-                self.sys.set_model(m);
+            if let Some(model) = memory_model_by_code(mm, n, self.sys.timing) {
+                self.sys.set_model(model);
             }
         }
         // Cache-line size (bytes): turning the L0 D-cache into an L0 TLB
         // at 4096 (§3.5).
-        let line = (value >> 8) & 0xfff;
-        if line != 0 && line.is_power_of_two() && (4..=4096).contains(&line) {
-            self.sys.set_line_shift(line.trailing_zeros());
+        if let Some(shift) = line_shift_by_code(value) {
+            self.sys.set_line_shift(shift);
             for c in &mut self.caches {
                 c.flush(); // icache-check placement depends on line size
             }
@@ -313,7 +316,7 @@ impl FiberEngine {
             }
             invalidated = true;
         }
-        self.sys.simctrl_state = value;
+        self.sys.simctrl_state = state;
         invalidated
     }
 
@@ -567,42 +570,59 @@ impl FiberEngine {
     }
 
     /// Run only hart `h` (functional-parallel mode, §3.5: one engine per
-    /// host thread over shared DRAM). `shared_exit` propagates the first
-    /// exit across threads (`u64::MAX` = still running).
-    pub fn run_single(
-        &mut self,
-        h: usize,
-        max_insts: u64,
-        shared_exit: &std::sync::atomic::AtomicU64,
-    ) -> ExitReason {
+    /// host thread over shared DRAM) until `instret_limit` *absolute*
+    /// retired instructions. Exit and engine-switch requests propagate
+    /// across hart threads via `sys.shared_exit` / `sys.shared_switch`.
+    pub fn run_single(&mut self, h: usize, instret_limit: u64) -> ExitReason {
         use std::sync::atomic::Ordering;
         let mut check = 0u32;
         loop {
-            if self.harts[h].instret >= max_insts {
+            if let Some(value) = self.sys.switch_request {
+                return ExitReason::SwitchRequest(value);
+            }
+            if self.harts[h].instret >= instret_limit {
                 return ExitReason::StepLimit;
             }
-            if let Some(code) = self.sys.exit.or(self.sys.bus.simio.exit_code) {
-                let _ = shared_exit.compare_exchange(
-                    u64::MAX,
-                    code,
-                    Ordering::SeqCst,
-                    Ordering::SeqCst,
-                );
+            if let Some(code) = exit_code(&self.sys) {
+                if let Some(flag) = &self.sys.shared_exit {
+                    let _ =
+                        flag.compare_exchange(u64::MAX, code, Ordering::SeqCst, Ordering::SeqCst);
+                }
                 return ExitReason::Exited(code);
             }
-            // Poll the cross-thread exit flag periodically (not every
-            // slice — it is a shared cache line).
+            // Poll the cross-thread flags periodically (not every slice —
+            // they are shared cache lines).
             check = check.wrapping_add(1);
             if check % 64 == 0 {
-                let v = shared_exit.load(Ordering::Relaxed);
-                if v != u64::MAX {
-                    return ExitReason::Exited(v);
+                if let Some(flag) = &self.sys.shared_exit {
+                    let v = flag.load(Ordering::Relaxed);
+                    if v != u64::MAX {
+                        return ExitReason::Exited(v);
+                    }
+                }
+                if let Some(flag) = &self.sys.shared_switch {
+                    let v = flag.load(Ordering::Relaxed);
+                    if v != u64::MAX {
+                        return ExitReason::SwitchRequest(v);
+                    }
                 }
             }
             match self.run_slice(h, u64::MAX, usize::MAX) {
                 Slice::Ran => {}
                 Slice::Waiting => {
-                    // Functional mode: WFI spins on the interrupt poll.
+                    // Functional mode: WFI spins on the interrupt poll. A
+                    // sleeping hart in this mode can only be woken by its
+                    // own CLINT timer (cross-hart device state is merged
+                    // at stage boundaries, DESIGN.md §6). Park the thread
+                    // instead of spinning the join forever when no future
+                    // deadline can fire: none programmed, or it already
+                    // passed without waking the hart (interrupt masked).
+                    let cmp = self.sys.bus.clint.mtimecmp[h];
+                    if cmp == u64::MAX
+                        || self.sys.bus.clint.mtime(self.harts[h].cycle) >= cmp
+                    {
+                        return ExitReason::Deadlock;
+                    }
                     let hart = &mut self.harts[h];
                     hart.cycle += 16;
                 }
@@ -610,15 +630,42 @@ impl FiberEngine {
         }
     }
 
+    /// Write back a consistent architectural PC for every hart paused
+    /// mid-block (`hart.pc` is only committed at block boundaries), fold
+    /// pending cycles, and drop the continuations. After this the hart
+    /// vector is a faithful architectural snapshot — the basis of
+    /// [`ExecutionEngine::suspend`].
+    fn sync_arch_state(&mut self) {
+        for h in 0..self.harts.len() {
+            if self.conts[h].block != NO_CHAIN {
+                let block = self.caches[h].block(self.conts[h].block);
+                let si = self.conts[h].step as usize;
+                let pc_off =
+                    if si < block.steps.len() { block.steps[si].pc_off } else { block.term.pc_off };
+                self.harts[h].pc = block.start + pc_off as u64;
+                self.conts[h].clear();
+                self.conts[h].hint = NO_CHAIN;
+            }
+            let hart = &mut self.harts[h];
+            hart.cycle += std::mem::take(&mut hart.pending);
+        }
+    }
+
     // -----------------------------------------------------------------------
     // Scheduler: deterministic lockstep by minimum (cycle, hart id).
     // -----------------------------------------------------------------------
+    /// Run until exit, deadlock, engine-switch request, or until
+    /// `max_insts` *more* instructions retire (block-granular).
     pub fn run(&mut self, max_insts: u64) -> ExitReason {
+        let limit = self.total_retired.saturating_add(max_insts);
         loop {
-            if let Some(code) = self.sys.exit.or(self.sys.bus.simio.exit_code) {
+            if let Some(code) = exit_code(&self.sys) {
                 return ExitReason::Exited(code);
             }
-            if self.total_retired >= max_insts {
+            if let Some(value) = self.sys.switch_request {
+                return ExitReason::SwitchRequest(value);
+            }
+            if self.total_retired >= limit {
                 return ExitReason::StepLimit;
             }
 
@@ -655,36 +702,12 @@ impl FiberEngine {
             }
 
             if all_waiting {
-                // Event-loop fiber: advance time to the next CLINT deadline.
-                let wfi_harts: Vec<usize> = self
-                    .harts
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, h)| !h.halted && h.wfi)
-                    .map(|(i, _)| i)
-                    .collect();
-                if wfi_harts.is_empty() {
+                // Event-loop fiber: advance time to the next CLINT deadline
+                // (shared with the interpreter via crate::engine).
+                if !wake_at_next_deadline(&mut self.harts, &mut self.sys) {
                     return ExitReason::Deadlock;
                 }
-                match self.sys.bus.clint.next_timer_deadline() {
-                    Some(t) => {
-                        let mut any_woke = false;
-                        for i in wfi_harts {
-                            if self.harts[i].cycle < t {
-                                self.harts[i].cycle = t;
-                            }
-                            poll_interrupt(&mut self.harts[i], &mut self.sys);
-                            if !self.harts[i].wfi {
-                                any_woke = true;
-                            }
-                        }
-                        if !any_woke {
-                            return ExitReason::Deadlock;
-                        }
-                        continue;
-                    }
-                    None => return ExitReason::Deadlock,
-                }
+                continue;
             }
 
             let h = match best {
@@ -710,12 +733,58 @@ impl FiberEngine {
     }
 }
 
+impl ExecutionEngine for FiberEngine {
+    fn name(&self) -> &'static str {
+        if self.sys.parallel {
+            "parallel"
+        } else {
+            "lockstep"
+        }
+    }
+
+    fn run(&mut self, budget: u64) -> ExitReason {
+        FiberEngine::run(self, budget)
+    }
+
+    fn suspend(&mut self) -> SystemSnapshot {
+        self.sync_arch_state();
+        for cache in &mut self.caches {
+            cache.flush();
+        }
+        SystemSnapshot::capture(std::mem::take(&mut self.harts), &mut self.sys)
+    }
+
+    fn resume(&mut self, snapshot: SystemSnapshot) {
+        self.harts = snapshot.install(&mut self.sys);
+    }
+
+    fn stats(&self) -> EngineStats {
+        self.stats
+    }
+
+    fn total_instret(&self) -> u64 {
+        FiberEngine::total_instret(self)
+    }
+
+    fn per_hart(&self) -> Vec<(u64, u64)> {
+        self.harts.iter().map(|h| (h.cycle, h.instret)).collect()
+    }
+
+    fn console(&self) -> String {
+        self.sys.bus.uart.output_str()
+    }
+
+    fn model_stats(&self) -> Vec<(&'static str, u64)> {
+        self.sys.model.stats()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::asm::*;
     use crate::isa::csr::*;
-    use crate::mem::DRAM_BASE;
+    use crate::mem::{MemTiming, DRAM_BASE};
     use crate::sys::loader::load_flat;
 
     fn countdown_img(n: i64) -> crate::asm::Image {
@@ -888,6 +957,59 @@ mod tests {
         assert_eq!(eng.pipelines[0].name(), "inorder");
         assert_eq!(eng.sys.model.name(), "cache");
         assert_eq!(eng.sys.simctrl_state, 3 | (3 << 4));
+    }
+
+    #[test]
+    fn simctrl_engine_bits_stop_the_run() {
+        // A write with engine bits != lockstep must stop the engine with a
+        // switch request, leaving the PC after the csrw.
+        let mut a = Assembler::new(DRAM_BASE);
+        let value = 3 | (4 << 4) | (SIMCTRL_ENGINE_PARALLEL << SIMCTRL_ENGINE_SHIFT);
+        a.li(A0, 50);
+        a.li(A1, 0);
+        let top = a.here();
+        a.add(A1, A1, A0);
+        a.addi(A0, A0, -1);
+        a.bnez(A0, top);
+        a.li(T0, value as i64);
+        a.csrw(CSR_SIMCTRL, T0);
+        a.mv(A0, A1);
+        a.li(A7, 93);
+        a.ecall();
+        let img = a.finish();
+        let mut eng = engine_with(&img, 1, "simple");
+        assert_eq!(eng.run(1_000_000), ExitReason::SwitchRequest(value));
+        // Models of the same write must NOT have been applied locally.
+        assert_eq!(eng.pipelines[0].name(), "simple");
+        assert_eq!(eng.sys.model.name(), "atomic");
+        // A second run call must return the same request, not re-execute.
+        assert_eq!(eng.run(1_000_000), ExitReason::SwitchRequest(value));
+    }
+
+    #[test]
+    fn suspend_resume_lockstep_round_trip() {
+        // Budget-suspend mid-run, snapshot, resume in a fresh lockstep
+        // engine: results must match an uninterrupted run exactly.
+        use crate::engine::ExecutionEngine;
+        use std::sync::Arc;
+        let img = countdown_img(400);
+        let mut whole = engine_with(&img, 1, "inorder");
+        assert_eq!(whole.run(1_000_000), ExitReason::Exited(400 * 401 / 2));
+
+        let mut first = engine_with(&img, 1, "inorder");
+        assert_eq!(first.run(500), ExitReason::StepLimit);
+        let snap = ExecutionEngine::suspend(&mut first);
+        let sys2 = System::with_shared_phys(
+            1,
+            Arc::clone(&snap.phys),
+            Box::new(crate::mem::AtomicModel),
+        );
+        let mut second = FiberEngine::new(sys2, "inorder");
+        ExecutionEngine::resume(&mut second, snap);
+        assert_eq!(second.run(1_000_000), ExitReason::Exited(400 * 401 / 2));
+        assert_eq!(second.harts[0].instret, whole.harts[0].instret);
+        assert_eq!(second.harts[0].cycle, whole.harts[0].cycle, "timing preserved across hand-off");
+        assert_eq!(second.harts[0].regs, whole.harts[0].regs);
     }
 
     #[test]

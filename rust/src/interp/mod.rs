@@ -6,48 +6,64 @@
 //! drop"), re-fetching and re-decoding every instruction with no
 //! translation cache. This is the slow end of Figure 5; the DBT engine's
 //! speedup is measured against it.
+//!
+//! The interrupt-poll / WFI-wakeup / exit plumbing shared with the other
+//! engines lives in [`crate::engine`]; `ExitReason` and `poll_interrupt`
+//! are re-exported here for backwards compatibility.
 
-use crate::isa::csr::{EXC_ECALL_M, EXC_ECALL_S, EXC_ECALL_U};
+pub use crate::engine::{poll_interrupt, ExitReason};
+
+use crate::engine::{
+    exit_code, line_shift_by_code, memory_model_by_code, merge_simctrl, wake_at_next_deadline,
+    EngineStats, ExecutionEngine,
+};
+use crate::isa::csr::{
+    EXC_ECALL_M, EXC_ECALL_S, EXC_ECALL_U, SIMCTRL_ENGINE_INTERP, SIMCTRL_ENGINE_SHIFT,
+};
 use crate::isa::{decode, Op};
 use crate::sys::exec::{exec_op, fetch_raw, Flow};
 use crate::sys::hart::Hart;
-use crate::sys::{handle_ecall, System};
+use crate::sys::{handle_ecall, System, SystemSnapshot};
 
-/// Why an engine run loop stopped.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ExitReason {
-    /// Guest requested exit with this code.
-    Exited(u64),
-    /// Instruction/step budget exhausted.
-    StepLimit,
-    /// All harts are halted or in unwakeable WFI.
-    Deadlock,
-}
-
-/// Fold pending IPIs into the hart and take a pending interrupt if any.
-pub fn poll_interrupt(hart: &mut Hart, sys: &mut System) {
-    if sys.ipi[hart.id] != 0 {
-        hart.mip |= std::mem::take(&mut sys.ipi[hart.id]);
-    }
-    let ext = sys.bus.clint.mip_bits(hart.id, hart.now());
-    if let Some(cause) = hart.pending_interrupt(ext) {
-        hart.wfi = false;
-        let target = hart.take_trap(crate::sys::Trap::new(cause, 0), hart.pc);
-        hart.pc = target;
-    }
-}
-
-/// Process pending side effects (fence.i / sfence.vma). The interpreter
-/// holds no translated code, so only memory-model/L0 state is flushed.
+/// Process pending side effects (fence.i / sfence.vma / SIMCTRL). The
+/// interpreter holds no translated code, so only memory-model/L0 state is
+/// flushed.
 fn process_effects(hart: &mut Hart, sys: &mut System) {
-    if hart.effects.sfence {
+    let fx = hart.effects;
+    hart.effects.clear();
+    if fx.sfence {
         sys.model.flush_hart(&mut sys.l0, hart.id);
         sys.l0[hart.id].clear();
     }
-    if hart.effects.flush_l0 {
+    if fx.flush_l0 {
         sys.l0[hart.id].clear();
     }
-    hart.effects.clear();
+    if let Some(value) = fx.simctrl {
+        apply_simctrl(sys, value);
+    }
+}
+
+/// SIMCTRL handling for the interpreter (§3.5): the engine field requests
+/// a hand-off; the memory-model and line-size fields apply directly.
+/// Pipeline-model bits are ignored — the interpreter's timing is fixed at
+/// one cycle per instruction.
+fn apply_simctrl(sys: &mut System, value: u64) {
+    // Resolve "keep" (zero) fields against the live configuration before
+    // recording, so hand-off decoding sees the full state.
+    let state = merge_simctrl(sys.simctrl_state, value);
+    let engine = (value >> SIMCTRL_ENGINE_SHIFT) & 0b111;
+    if matches!(engine, 1..=3) && engine != SIMCTRL_ENGINE_INTERP {
+        sys.simctrl_state = state;
+        sys.request_engine_switch(state);
+        return;
+    }
+    if let Some(model) = memory_model_by_code((value >> 4) & 0b111, sys.num_harts, sys.timing) {
+        sys.set_model(model);
+    }
+    if let Some(shift) = line_shift_by_code(value) {
+        sys.set_line_shift(shift);
+    }
+    sys.simctrl_state = state;
 }
 
 /// Execute one instruction on `hart`. Returns `false` if the hart cannot
@@ -133,37 +149,35 @@ impl InterpEngine {
         InterpEngine { harts, sys }
     }
 
-    /// Run until exit, deadlock, or `max_steps` total instructions.
+    /// Run until exit, deadlock, engine-switch request, or `max_steps`
+    /// total instructions (counted per call).
     pub fn run(&mut self, max_steps: u64) -> ExitReason {
         let mut steps = 0u64;
         loop {
+            if steps >= max_steps {
+                return ExitReason::StepLimit;
+            }
             let mut progressed = false;
             for hart in &mut self.harts {
                 if step_hart(hart, &mut self.sys) {
                     progressed = true;
                     steps += 1;
                 }
-                if let Some(code) = self.sys.exit.or(self.sys.bus.simio.exit_code) {
+                if let Some(code) = exit_code(&self.sys) {
                     return ExitReason::Exited(code);
                 }
-            }
-            if steps >= max_steps {
-                return ExitReason::StepLimit;
+                if let Some(value) = self.sys.switch_request {
+                    return ExitReason::SwitchRequest(value);
+                }
+                if steps >= max_steps {
+                    return ExitReason::StepLimit;
+                }
             }
             if !progressed {
-                // All harts waiting: advance time to the next timer event.
-                if self.harts.iter().all(|h| h.halted) {
+                // All harts waiting: shared event-loop advances time to the
+                // next timer event, or reports deadlock.
+                if !wake_at_next_deadline(&mut self.harts, &mut self.sys) {
                     return ExitReason::Deadlock;
-                }
-                match self.sys.bus.clint.next_timer_deadline() {
-                    Some(t) => {
-                        for h in &mut self.harts {
-                            if !h.halted && h.cycle < t {
-                                h.cycle = t;
-                            }
-                        }
-                    }
-                    None => return ExitReason::Deadlock,
                 }
             }
         }
@@ -171,6 +185,44 @@ impl InterpEngine {
 
     pub fn total_instret(&self) -> u64 {
         self.harts.iter().map(|h| h.instret).sum()
+    }
+}
+
+impl ExecutionEngine for InterpEngine {
+    fn name(&self) -> &'static str {
+        "interp"
+    }
+
+    fn run(&mut self, budget: u64) -> ExitReason {
+        InterpEngine::run(self, budget)
+    }
+
+    fn suspend(&mut self) -> SystemSnapshot {
+        SystemSnapshot::capture(std::mem::take(&mut self.harts), &mut self.sys)
+    }
+
+    fn resume(&mut self, snapshot: SystemSnapshot) {
+        self.harts = snapshot.install(&mut self.sys);
+    }
+
+    fn stats(&self) -> EngineStats {
+        EngineStats::default()
+    }
+
+    fn total_instret(&self) -> u64 {
+        InterpEngine::total_instret(self)
+    }
+
+    fn per_hart(&self) -> Vec<(u64, u64)> {
+        self.harts.iter().map(|h| (h.cycle, h.instret)).collect()
+    }
+
+    fn console(&self) -> String {
+        self.sys.bus.uart.output_str()
+    }
+
+    fn model_stats(&self) -> Vec<(&'static str, u64)> {
+        self.sys.model.stats()
     }
 }
 
@@ -355,5 +407,37 @@ mod tests {
         let r = eng.run(1_000_000);
         assert_eq!(r, ExitReason::Exited(42));
         assert!(eng.harts[0].cycle >= 500, "must have slept until mtimecmp");
+    }
+
+    #[test]
+    fn simctrl_engine_bits_raise_switch_request() {
+        use crate::isa::csr::CSR_SIMCTRL;
+        let mut a = Assembler::new(DRAM_BASE);
+        // Request the lockstep engine with inorder+mesi models.
+        let value = 3 | (4 << 4) | (2u64 << SIMCTRL_ENGINE_SHIFT);
+        a.li(T0, value as i64);
+        a.csrw(CSR_SIMCTRL, T0);
+        emit_exit(&mut a, 7);
+        let (eng, r) = run_image(&a.finish(), 1, 100_000);
+        assert_eq!(r, ExitReason::SwitchRequest(value));
+        // PC must already point past the csrw so the relaunched engine
+        // does not re-execute it.
+        assert!(eng.harts[0].pc > DRAM_BASE);
+        assert_eq!(eng.sys.switch_request, Some(value));
+    }
+
+    #[test]
+    fn simctrl_memory_bits_swap_model_in_place() {
+        use crate::isa::csr::CSR_SIMCTRL;
+        let mut a = Assembler::new(DRAM_BASE);
+        // Memory model -> cache (3), no engine change: handled locally.
+        a.li(T0, 3 << 4);
+        a.csrw(CSR_SIMCTRL, T0);
+        a.li(A0, 123);
+        a.li(A7, 93);
+        a.ecall();
+        let (eng, r) = run_image(&a.finish(), 1, 100_000);
+        assert_eq!(r, ExitReason::Exited(123));
+        assert_eq!(eng.sys.model.name(), "cache");
     }
 }

@@ -44,12 +44,29 @@ pub const CSR_MINSTRET: u16 = 0xB02;
 
 // ---- Vendor (paper §3.5: runtime reconfiguration) ---------------------------
 /// Writing this CSR switches the hart's pipeline model / the system's
-/// memory model at runtime. Layout (see `coordinator::simctrl`):
-///   bits [2:0]  pipeline model (0 = keep, 1 = atomic, 2 = simple, 3 = in-order)
-///   bits [6:4]  memory model   (0 = keep, 1 = atomic, 2 = tlb, 3 = cache, 4 = mesi)
-///   bits [19:8] cache-line size in bytes (0 = keep)
+/// memory model — and, via the engine field, the *execution engine*
+/// itself — at runtime. Layout (see `coordinator::simctrl_encoding`):
+///   bits [2:0]   pipeline model (0 = keep, 1 = atomic, 2 = simple, 3 = in-order)
+///   bits [6:4]   memory model   (0 = keep, 1 = atomic, 2 = tlb, 3 = cache, 4 = mesi)
+///   bits [19:8]  cache-line size in bytes (0 = keep)
+///   bits [22:20] execution engine (0 = keep, 1 = interp, 2 = lockstep,
+///                3 = parallel). Writing an engine different from the one
+///                currently running suspends the simulation, snapshots all
+///                guest-visible state ([`crate::sys::SystemSnapshot`]) and
+///                warm-starts the requested engine — the fast-forward →
+///                measure workflow. The pipeline/memory/line fields of the
+///                same write are applied by the relaunched engine.
 /// Reads return the packed current configuration.
 pub const CSR_SIMCTRL: u16 = 0x7C0;
+
+/// Bit position of the SIMCTRL engine-request field.
+pub const SIMCTRL_ENGINE_SHIFT: u32 = 20;
+/// Mask of the SIMCTRL engine-request field.
+pub const SIMCTRL_ENGINE_MASK: u64 = 0b111 << SIMCTRL_ENGINE_SHIFT;
+/// SIMCTRL engine codes.
+pub const SIMCTRL_ENGINE_INTERP: u64 = 1;
+pub const SIMCTRL_ENGINE_LOCKSTEP: u64 = 2;
+pub const SIMCTRL_ENGINE_PARALLEL: u64 = 3;
 /// Read-only: statistics scratch (dcache accesses low 32 / hits high 32).
 pub const CSR_SIMSTATS: u16 = 0x7C1;
 /// Write: region-of-interest marker (value is an arbitrary tag recorded in

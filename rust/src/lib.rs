@@ -19,6 +19,7 @@ pub mod analytics;
 pub mod bench;
 pub mod coordinator;
 pub mod asm;
+pub mod engine;
 pub mod interp;
 pub mod isa;
 pub mod dbt;

@@ -25,7 +25,14 @@ options:
   --pipeline M       atomic | simple | inorder (default simple)
   --memory M         atomic | tlb | cache | mesi (default atomic)
   --mode M           lockstep | parallel | interp (default lockstep)
-  --max-insts N      instruction budget
+  --max-insts N      instruction budget (per hart in parallel mode)
+  --switch-at N      engine hand-off: after N retired instructions (per
+                     hart in parallel mode), suspend the engine and
+                     warm-start the --switch-to target over the same
+                     guest state (fast-forward -> measure, paper 3.5)
+  --switch-to T      hand-off target as mode:pipeline:memory
+                     (default lockstep:inorder:mesi); guests can also
+                     trigger a hand-off via SIMCTRL bits [22:20]
   --dram-mb N        guest DRAM size (default 64)
   --line-bytes N     L0 line size (64; 4096 = L0-as-TLB)
   --trace N          capture N memory/branch trace records

@@ -6,10 +6,13 @@
 //! artifacts/meta.json): chunk length `T`, geometry (S sets × W ways,
 //! 2^B predictor entries). Shorter chunks are padded with a sentinel that
 //! the models ignore.
+//!
+//! Without the `xla-runtime` feature the `Xla*Sim` types are stubs whose
+//! `load` fails with a descriptive error; callers check
+//! [`crate::runtime::xla_available`] first.
 
-use super::XlaExe;
+use super::{rt_err, Result};
 use crate::analytics::trace::{BranchRecord, MemRecord};
-use anyhow::{bail, Context, Result};
 use std::path::Path;
 
 /// Sentinel line/pc value for padding (ignored by the models).
@@ -20,7 +23,7 @@ pub const PAD: i64 = -1;
 pub const INVALID_AGE: i32 = 1 << 30;
 
 /// Geometry + chunk length metadata, mirrored from artifacts/meta.json.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct AnalyticsMeta {
     pub chunk: usize,
     pub sets: usize,
@@ -35,11 +38,14 @@ impl AnalyticsMeta {
     pub fn parse(text: &str) -> Result<AnalyticsMeta> {
         let get = |key: &str| -> Result<usize> {
             let pat = format!("\"{}\":", key);
-            let at = text.find(&pat).with_context(|| format!("meta.json missing {}", key))?;
+            let at = text.find(&pat).ok_or_else(|| rt_err(format!("meta.json missing {}", key)))?;
             let rest = &text[at + pat.len()..];
-            let num: String =
-                rest.chars().skip_while(|c| c.is_whitespace()).take_while(|c| c.is_ascii_digit()).collect();
-            num.parse::<usize>().with_context(|| format!("bad value for {}", key))
+            let num: String = rest
+                .chars()
+                .skip_while(|c| c.is_whitespace())
+                .take_while(|c| c.is_ascii_digit())
+                .collect();
+            num.parse::<usize>().map_err(|_| rt_err(format!("bad value for {}", key)))
         };
         Ok(AnalyticsMeta {
             chunk: get("chunk")?,
@@ -51,8 +57,9 @@ impl AnalyticsMeta {
     }
 
     pub fn load(dir: &Path) -> Result<AnalyticsMeta> {
-        let text = std::fs::read_to_string(dir.join("meta.json"))
-            .with_context(|| format!("reading {}/meta.json — run `make artifacts`", dir.display()))?;
+        let text = std::fs::read_to_string(dir.join("meta.json")).map_err(|e| {
+            rt_err(format!("reading {}/meta.json — run `make artifacts`: {e}", dir.display()))
+        })?;
         Self::parse(&text)
     }
 }
@@ -64,8 +71,9 @@ impl AnalyticsMeta {
 ///   ages: i32[S, W]
 /// Chunk input: lines i64[T] (paddr >> line_shift; PAD to skip).
 /// Output tuple: (tags', ages', hits i64, processed i64).
+#[cfg(feature = "xla-runtime")]
 pub struct XlaCacheSim {
-    exe: XlaExe,
+    exe: super::XlaExe,
     pub meta: AnalyticsMeta,
     tags: xla::Literal,
     ages: xla::Literal,
@@ -73,21 +81,29 @@ pub struct XlaCacheSim {
     pub hits: u64,
 }
 
+#[cfg(feature = "xla-runtime")]
 impl XlaCacheSim {
     pub fn load(dir: &Path) -> Result<XlaCacheSim> {
         let meta = AnalyticsMeta::load(dir)?;
-        let exe = XlaExe::load(&dir.join("cache_sim.hlo.txt"))?;
+        let exe = super::XlaExe::load(&dir.join("cache_sim.hlo.txt"))?;
         let (s, w) = (meta.sets, meta.ways);
-        let tags = xla::Literal::vec1(&vec![PAD; s * w]).reshape(&[s as i64, w as i64])?;
-        let ages =
-            xla::Literal::vec1(&vec![INVALID_AGE; s * w]).reshape(&[s as i64, w as i64])?;
+        let tags = xla::Literal::vec1(&vec![PAD; s * w])
+            .reshape(&[s as i64, w as i64])
+            .map_err(|e| rt_err(format!("reshaping tags: {e}")))?;
+        let ages = xla::Literal::vec1(&vec![INVALID_AGE; s * w])
+            .reshape(&[s as i64, w as i64])
+            .map_err(|e| rt_err(format!("reshaping ages: {e}")))?;
         Ok(XlaCacheSim { exe, meta, tags, ages, accesses: 0, hits: 0 })
     }
 
     /// Replay one chunk of records (≤ meta.chunk); returns hits in chunk.
     pub fn run_chunk(&mut self, records: &[MemRecord]) -> Result<u64> {
         if records.len() > self.meta.chunk {
-            bail!("chunk too large: {} > {}", records.len(), self.meta.chunk);
+            return Err(rt_err(format!(
+                "chunk too large: {} > {}",
+                records.len(),
+                self.meta.chunk
+            )));
         }
         let mut lines = vec![PAD; self.meta.chunk];
         for (i, r) in records.iter().enumerate() {
@@ -100,9 +116,13 @@ impl XlaCacheSim {
             input,
         ])?;
         let mut out = out.into_iter();
-        self.tags = out.next().context("missing tags output")?;
-        self.ages = out.next().context("missing ages output")?;
-        let hits: i64 = out.next().context("missing hits output")?.get_first_element()?;
+        self.tags = out.next().ok_or_else(|| rt_err("missing tags output"))?;
+        self.ages = out.next().ok_or_else(|| rt_err("missing ages output"))?;
+        let hits: i64 = out
+            .next()
+            .ok_or_else(|| rt_err("missing hits output"))?
+            .get_first_element()
+            .map_err(|e| rt_err(format!("reading hits: {e}")))?;
         self.accesses += records.len() as u64;
         self.hits += hits as u64;
         Ok(hits as u64)
@@ -121,25 +141,31 @@ impl XlaCacheSim {
 ///
 /// State: counters i32[E]. Chunk input: idx i64[T] (PAD to skip),
 /// taken i32[T]. Output: (counters', correct i64).
+#[cfg(feature = "xla-runtime")]
 pub struct XlaBpredSim {
-    exe: XlaExe,
+    exe: super::XlaExe,
     pub meta: AnalyticsMeta,
     counters: xla::Literal,
     pub predictions: u64,
     pub correct: u64,
 }
 
+#[cfg(feature = "xla-runtime")]
 impl XlaBpredSim {
     pub fn load(dir: &Path) -> Result<XlaBpredSim> {
         let meta = AnalyticsMeta::load(dir)?;
-        let exe = XlaExe::load(&dir.join("bpred.hlo.txt"))?;
+        let exe = super::XlaExe::load(&dir.join("bpred.hlo.txt"))?;
         let counters = xla::Literal::vec1(&vec![1i32; meta.bpred_entries]);
         Ok(XlaBpredSim { exe, meta, counters, predictions: 0, correct: 0 })
     }
 
     pub fn run_chunk(&mut self, records: &[BranchRecord]) -> Result<u64> {
         if records.len() > self.meta.chunk {
-            bail!("chunk too large: {} > {}", records.len(), self.meta.chunk);
+            return Err(rt_err(format!(
+                "chunk too large: {} > {}",
+                records.len(),
+                self.meta.chunk
+            )));
         }
         let mut idx = vec![PAD; self.meta.chunk];
         let mut taken = vec![0i32; self.meta.chunk];
@@ -153,8 +179,12 @@ impl XlaBpredSim {
             xla::Literal::vec1(&taken),
         ])?;
         let mut out = out.into_iter();
-        self.counters = out.next().context("missing counters output")?;
-        let correct: i64 = out.next().context("missing correct output")?.get_first_element()?;
+        self.counters = out.next().ok_or_else(|| rt_err("missing counters output"))?;
+        let correct: i64 = out
+            .next()
+            .ok_or_else(|| rt_err("missing correct output"))?
+            .get_first_element()
+            .map_err(|e| rt_err(format!("reading correct: {e}")))?;
         self.predictions += records.len() as u64;
         self.correct += correct as u64;
         Ok(correct as u64)
@@ -166,6 +196,62 @@ impl XlaBpredSim {
         } else {
             self.correct as f64 / self.predictions as f64
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dependency-free stubs (default build): same shape, `load` always fails.
+// ---------------------------------------------------------------------------
+
+#[cfg(not(feature = "xla-runtime"))]
+const UNAVAILABLE: &str =
+    "PJRT/XLA runtime not compiled in (rebuild with --features xla-runtime)";
+
+/// Stub standing in for the XLA-offloaded cache simulation when the crate
+/// is built without `xla-runtime`.
+#[cfg(not(feature = "xla-runtime"))]
+pub struct XlaCacheSim {
+    pub meta: AnalyticsMeta,
+    pub accesses: u64,
+    pub hits: u64,
+}
+
+#[cfg(not(feature = "xla-runtime"))]
+impl XlaCacheSim {
+    pub fn load(_dir: &Path) -> Result<XlaCacheSim> {
+        Err(rt_err(UNAVAILABLE))
+    }
+
+    pub fn run_chunk(&mut self, _records: &[MemRecord]) -> Result<u64> {
+        Err(rt_err(UNAVAILABLE))
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        0.0
+    }
+}
+
+/// Stub standing in for the XLA-offloaded branch predictor when the crate
+/// is built without `xla-runtime`.
+#[cfg(not(feature = "xla-runtime"))]
+pub struct XlaBpredSim {
+    pub meta: AnalyticsMeta,
+    pub predictions: u64,
+    pub correct: u64,
+}
+
+#[cfg(not(feature = "xla-runtime"))]
+impl XlaBpredSim {
+    pub fn load(_dir: &Path) -> Result<XlaBpredSim> {
+        Err(rt_err(UNAVAILABLE))
+    }
+
+    pub fn run_chunk(&mut self, _records: &[BranchRecord]) -> Result<u64> {
+        Err(rt_err(UNAVAILABLE))
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        0.0
     }
 }
 
@@ -188,5 +274,13 @@ mod tests {
     #[test]
     fn meta_parse_missing_key_fails() {
         assert!(AnalyticsMeta::parse(r#"{"chunk": 10}"#).is_err());
+    }
+
+    #[cfg(not(feature = "xla-runtime"))]
+    #[test]
+    fn stubs_report_unavailable() {
+        assert!(!crate::runtime::xla_available());
+        assert!(XlaCacheSim::load(Path::new(".")).is_err());
+        assert!(XlaBpredSim::load(Path::new(".")).is_err());
     }
 }

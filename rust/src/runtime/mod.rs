@@ -6,41 +6,81 @@
 //! them with the XLA CPU PJRT client at startup and invokes them on trace
 //! chunks. (HLO text — not serialized protos — is the interchange format;
 //! see DESIGN.md §5.)
+//!
+//! The PJRT path needs the `xla` and `anyhow` crates plus a libxla
+//! install, none of which are available offline. It is therefore gated
+//! behind the `xla-runtime` cargo feature; the default build ships
+//! dependency-free stubs whose `load` constructors report the runtime as
+//! unavailable, so every consumer (tests, examples) skips cleanly.
 
 pub mod analytics_exe;
 
-use anyhow::{Context, Result};
-use std::path::Path;
+/// Error type for the runtime layer (dependency-free `anyhow` stand-in).
+#[derive(Debug)]
+pub struct RuntimeError(pub String);
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+/// Shorthand constructor used across the runtime layer.
+pub fn rt_err(msg: impl Into<String>) -> RuntimeError {
+    RuntimeError(msg.into())
+}
+
+/// Was the crate built with the PJRT/XLA runtime? Consumers (the
+/// analytics-integration tests, the trace-analytics example) check this
+/// before attempting to load artifacts.
+pub const XLA_AVAILABLE: bool = cfg!(feature = "xla-runtime");
+
+pub fn xla_available() -> bool {
+    XLA_AVAILABLE
+}
 
 /// A compiled XLA executable with its PJRT client.
+#[cfg(feature = "xla-runtime")]
 pub struct XlaExe {
     pub client: xla::PjRtClient,
     pub exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "xla-runtime")]
 impl XlaExe {
     /// Load an HLO-text artifact and compile it on the CPU PJRT client.
-    pub fn load(path: &Path) -> Result<XlaExe> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+    pub fn load(path: &std::path::Path) -> Result<XlaExe> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| rt_err(format!("creating PJRT CPU client: {e}")))?;
         Self::load_with_client(client, path)
     }
 
-    pub fn load_with_client(client: xla::PjRtClient, path: &Path) -> Result<XlaExe> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not UTF-8")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    pub fn load_with_client(client: xla::PjRtClient, path: &std::path::Path) -> Result<XlaExe> {
+        let text_path = path.to_str().ok_or_else(|| rt_err("artifact path not UTF-8"))?;
+        let proto = xla::HloModuleProto::from_text_file(text_path)
+            .map_err(|e| rt_err(format!("parsing HLO text {}: {e}", path.display())))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).context("compiling HLO on PJRT CPU")?;
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| rt_err(format!("compiling HLO on PJRT CPU: {e}")))?;
         Ok(XlaExe { client, exe })
     }
 
     /// Execute with literal inputs; returns the flattened output tuple
     /// (aot.py lowers with `return_tuple=True`).
     pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let result = self.exe.execute::<xla::Literal>(inputs)?;
-        let out = result[0][0].to_literal_sync()?;
-        Ok(out.to_tuple()?)
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| rt_err(format!("executing: {e}")))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| rt_err(format!("fetching result: {e}")))?;
+        out.to_tuple().map_err(|e| rt_err(format!("untupling result: {e}")))
     }
 }
 

@@ -6,13 +6,15 @@ pub mod exec;
 pub mod hart;
 pub mod loader;
 pub mod sbi;
+pub mod snapshot;
 pub mod syscall;
 
 pub use hart::{Hart, SideEffects, Trap};
+pub use snapshot::SystemSnapshot;
 
 use crate::analytics::trace::TraceCapture;
 use crate::mem::l0::L0Set;
-use crate::mem::{AtomicModel, MemoryModel, PhysMem, DRAM_BASE};
+use crate::mem::{AtomicModel, MemTiming, MemoryModel, PhysMem, DRAM_BASE};
 use dev::DeviceBus;
 use std::sync::atomic::AtomicU64;
 use std::sync::Arc;
@@ -70,7 +72,26 @@ pub struct System {
     pub parallel: bool,
     /// Cross-thread exit flag for parallel mode (u64::MAX = running).
     pub shared_exit: Option<Arc<AtomicU64>>,
+    /// Cross-thread engine-switch flag for parallel mode (u64::MAX = no
+    /// request; otherwise the raw SIMCTRL value).
+    pub shared_switch: Option<Arc<AtomicU64>>,
+    /// Pending engine-switch request (raw SIMCTRL value). Engines return
+    /// [`crate::engine::ExitReason::SwitchRequest`] when they observe it.
+    pub switch_request: Option<u64>,
+    /// Timing parameters used when SIMCTRL constructs new memory models.
+    pub timing: MemTiming,
     pub num_harts: usize,
+}
+
+/// Default program break: the DRAM midpoint (guest memory-layout split
+/// shared by every engine's `System` seeding).
+pub fn default_brk(dram_size: u64) -> u64 {
+    DRAM_BASE + dram_size / 2
+}
+
+/// Default anonymous-mmap bump base: the top quarter of DRAM.
+pub fn default_mmap_top(dram_size: u64) -> u64 {
+    DRAM_BASE + dram_size * 3 / 4
 }
 
 impl System {
@@ -104,8 +125,8 @@ impl System {
             reservations: vec![None; num_harts],
             active_reservations: 0,
             ipi: vec![0; num_harts],
-            brk: DRAM_BASE + (dram_size as u64) / 2,
-            mmap_top: DRAM_BASE + (dram_size as u64) * 3 / 4,
+            brk: default_brk(dram_size as u64),
+            mmap_top: default_mmap_top(dram_size as u64),
             ecall_mode: EcallMode::Sbi,
             exit: None,
             simctrl_state: 0,
@@ -113,7 +134,21 @@ impl System {
             force_cold: false,
             parallel: false,
             shared_exit: None,
+            shared_switch: None,
+            switch_request: None,
+            timing: MemTiming::default(),
             num_harts,
+        }
+    }
+
+    /// Record a guest request to switch execution engines (SIMCTRL engine
+    /// field, §3.5 extended). In parallel mode the request is also posted
+    /// on the cross-thread flag so sibling hart threads stop too.
+    pub fn request_engine_switch(&mut self, value: u64) {
+        self.switch_request = Some(value);
+        if let Some(flag) = &self.shared_switch {
+            use std::sync::atomic::Ordering;
+            let _ = flag.compare_exchange(u64::MAX, value, Ordering::SeqCst, Ordering::SeqCst);
         }
     }
 

@@ -1,0 +1,155 @@
+//! The engine hand-off snapshot (paper §3.5 extended to engine-level
+//! switching).
+//!
+//! A [`SystemSnapshot`] is everything the *guest* can observe: hart
+//! architectural state (registers, CSR file, privilege, counters, WFI
+//! flag), guest DRAM (shared by `Arc`, so a hand-off never copies it),
+//! pending inter-processor interrupts, and device state (CLINT timers and
+//! software-interrupt bits, accumulated console output, the exit latch).
+//!
+//! What it deliberately does *not* carry is engine residue: DBT code
+//! caches, fiber continuations, L0 cache/TLB contents, and memory-model
+//! replacement state are all rebuilt cold by the next engine. Dropping
+//! them is always architecturally safe (caches and translations are pure
+//! acceleration state), and it is exactly the "memory-model residue" flush
+//! the SIMCTRL model-switch path already performs.
+
+use super::{EcallMode, Hart, System};
+use crate::analytics::trace::TraceCapture;
+use crate::mem::PhysMem;
+use std::sync::Arc;
+
+/// Guest-visible system state in transit between two execution engines.
+pub struct SystemSnapshot {
+    /// Architectural hart state; `pending` cycles are folded into `cycle`
+    /// and side-effect latches are cleared before capture.
+    pub harts: Vec<Hart>,
+    /// Guest DRAM — shared, not copied. The resuming engine's `System`
+    /// must be built over this same allocation.
+    pub phys: Arc<PhysMem>,
+    /// Pending inter-processor interrupt bits per hart.
+    pub ipi: Vec<u64>,
+    /// CLINT software-interrupt bits per hart.
+    pub msip: Vec<bool>,
+    /// CLINT timer compare registers per hart.
+    pub mtimecmp: Vec<u64>,
+    /// UART console output accumulated so far.
+    pub console: Vec<u8>,
+    /// Exit latch (SBI shutdown / proxy exit / SIMIO tohost).
+    pub exit: Option<u64>,
+    pub ecall_mode: EcallMode,
+    /// Program break / mmap bump pointer for user-level emulation.
+    pub brk: u64,
+    pub mmap_top: u64,
+    /// Analytics trace capture in flight, if enabled.
+    pub trace: Option<TraceCapture>,
+}
+
+impl SystemSnapshot {
+    /// Fold pending cycles into each hart's committed clock and clear
+    /// side-effect latches — the normalization every engine performs on
+    /// its hart vector before snapshotting it.
+    pub fn normalize_harts(harts: &mut [Hart]) {
+        for hart in harts {
+            hart.cycle += std::mem::take(&mut hart.pending);
+            hart.effects.clear();
+        }
+    }
+
+    /// Capture guest-visible state from an engine's hart vector + system.
+    /// The engine must already be at an architecturally consistent point
+    /// (PCs written back, no partially-executed instruction).
+    pub fn capture(mut harts: Vec<Hart>, sys: &mut System) -> SystemSnapshot {
+        Self::normalize_harts(&mut harts);
+        SystemSnapshot {
+            harts,
+            phys: Arc::clone(&sys.phys),
+            ipi: sys.ipi.clone(),
+            msip: sys.bus.clint.msip.clone(),
+            mtimecmp: sys.bus.clint.mtimecmp.clone(),
+            console: std::mem::take(&mut sys.bus.uart.output),
+            exit: sys.exit.or(sys.bus.simio.exit_code),
+            ecall_mode: sys.ecall_mode,
+            brk: sys.brk,
+            mmap_top: sys.mmap_top,
+            trace: sys.trace.take(),
+        }
+    }
+
+    /// Install the snapshot into a freshly-built `System` over the same
+    /// `PhysMem`, returning the hart vector for the engine. The target
+    /// system starts with cold L0s/code caches, so no stale translation
+    /// state can survive the hand-off.
+    pub fn install(self, sys: &mut System) -> Vec<Hart> {
+        assert!(
+            Arc::ptr_eq(&self.phys, &sys.phys),
+            "snapshot must be resumed over its own guest DRAM"
+        );
+        assert_eq!(self.harts.len(), sys.num_harts, "hart count is fixed across hand-offs");
+        sys.ipi = self.ipi;
+        sys.bus.clint.msip = self.msip;
+        sys.bus.clint.mtimecmp = self.mtimecmp;
+        sys.bus.uart.output = self.console;
+        sys.exit = self.exit;
+        sys.ecall_mode = self.ecall_mode;
+        sys.brk = self.brk;
+        sys.mmap_top = self.mmap_top;
+        if self.trace.is_some() {
+            sys.trace = self.trace;
+        }
+        self.harts
+    }
+
+    /// Total retired instructions across all harts at capture time.
+    pub fn total_instret(&self) -> u64 {
+        self.harts.iter().map(|h| h.instret).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::DRAM_BASE;
+
+    #[test]
+    fn capture_folds_pending_and_install_round_trips() {
+        let mut sys = System::new(2, 1 << 20);
+        sys.ipi[1] = 2;
+        sys.bus.clint.mtimecmp[0] = 777;
+        sys.bus.uart.output = b"boot".to_vec();
+        let mut harts: Vec<Hart> = (0..2).map(Hart::new).collect();
+        harts[0].pc = DRAM_BASE + 64;
+        harts[0].cycle = 10;
+        harts[0].pending = 5;
+        harts[0].regs[10] = 0xabcd;
+        harts[1].instret = 42;
+
+        let snap = SystemSnapshot::capture(harts, &mut sys);
+        assert_eq!(snap.harts[0].cycle, 15);
+        assert_eq!(snap.harts[0].pending, 0);
+        assert_eq!(snap.total_instret(), 42);
+        assert_eq!(snap.console, b"boot");
+
+        // Resume over the same DRAM in a fresh system.
+        let mut sys2 = System::with_shared_phys(
+            2,
+            Arc::clone(&snap.phys),
+            Box::new(crate::mem::AtomicModel),
+        );
+        let harts = snap.install(&mut sys2);
+        assert_eq!(harts[0].pc, DRAM_BASE + 64);
+        assert_eq!(harts[0].regs[10], 0xabcd);
+        assert_eq!(sys2.ipi[1], 2);
+        assert_eq!(sys2.bus.clint.mtimecmp[0], 777);
+        assert_eq!(sys2.bus.uart.output, b"boot");
+    }
+
+    #[test]
+    #[should_panic(expected = "own guest DRAM")]
+    fn install_rejects_foreign_dram() {
+        let mut sys = System::new(1, 1 << 20);
+        let snap = SystemSnapshot::capture(vec![Hart::new(0)], &mut sys);
+        let mut other = System::new(1, 1 << 20);
+        let _ = snap.install(&mut other);
+    }
+}

@@ -13,6 +13,10 @@ use r2vm::runtime::analytics_exe::{XlaBpredSim, XlaCacheSim};
 use r2vm::runtime::artifacts_dir;
 
 fn have_artifacts() -> bool {
+    if !r2vm::runtime::xla_available() {
+        eprintln!("skipping: built without the xla-runtime feature");
+        return false;
+    }
     let dir = artifacts_dir();
     if dir.join("cache_sim.hlo.txt").is_file() && dir.join("meta.json").is_file() {
         true

@@ -1,0 +1,217 @@
+//! Engine-level hand-off equivalence: the same deterministic workload run
+//! (a) pure lockstep and (b) parallel-then-hand-off must produce identical
+//! final hart register state and instret totals, because a hand-off moves
+//! only guest-visible state ([`r2vm::sys::SystemSnapshot`]) and drops only
+//! acceleration residue (code caches, L0s).
+
+use r2vm::asm::*;
+use r2vm::coordinator::{
+    apply_simctrl_to_config, build_engine, resume_engine, run_image, simctrl_encoding_full,
+    EngineMode, SimConfig,
+};
+use r2vm::engine::{ExecutionEngine, ExitReason};
+use r2vm::isa::csr::CSR_SIMCTRL;
+use r2vm::mem::DRAM_BASE;
+
+const WORDS: i64 = 512;
+const CHECKSUM: u64 = (WORDS as u64) * (WORDS as u64 + 1) / 2;
+
+/// Deterministic single-hart workload: initialise a buffer (fast-forward
+/// phase), request `lockstep/inorder+mesi` via SIMCTRL, checksum the
+/// buffer (measured phase), exit with the checksum.
+fn switching_image() -> r2vm::asm::Image {
+    let mut a = Assembler::new(DRAM_BASE);
+    let scratch = a.new_label();
+    a.la(S0, scratch);
+    a.li(T0, WORDS);
+    let init = a.here();
+    a.sd(T0, S0, 0);
+    a.addi(S0, S0, 8);
+    a.addi(T0, T0, -1);
+    a.bnez(T0, init);
+    // Engine hand-off request. Under a lockstep run the engine field
+    // matches the running engine, so only the models switch in place.
+    a.li(T1, simctrl_encoding_full(EngineMode::Lockstep, "inorder", "mesi", 6) as i64);
+    a.csrw(CSR_SIMCTRL, T1);
+    a.la(S0, scratch);
+    a.li(T0, WORDS);
+    a.li(S1, 0);
+    let roi = a.here();
+    a.ld(T2, S0, 0);
+    a.add(S1, S1, T2);
+    a.addi(S0, S0, 8);
+    a.addi(T0, T0, -1);
+    a.bnez(T0, roi);
+    a.mv(A0, S1);
+    a.li(A7, 93);
+    a.ecall();
+    a.align(64);
+    a.bind(scratch);
+    a.zero_fill((WORDS as usize) * 8 + 64);
+    a.finish()
+}
+
+#[test]
+fn parallel_handoff_matches_pure_lockstep() {
+    let img = switching_image();
+
+    // (a) lockstep from the start; the SIMCTRL write is a model-level
+    // switch within the same engine.
+    let mut lockstep = SimConfig::default();
+    lockstep.pipeline = "simple".into();
+    let a = run_image(&lockstep, &img);
+    assert_eq!(a.exit, ExitReason::Exited(CHECKSUM));
+    assert_eq!(a.stages.len(), 1, "no engine change expected: {:?}", a.stages);
+
+    // (b) parallel/atomic fast-forward; the same write is an engine-level
+    // hand-off.
+    let mut par = SimConfig::default();
+    par.set("mode", "parallel").unwrap();
+    par.pipeline = "atomic".into();
+    let b = run_image(&par, &img);
+    assert_eq!(b.exit, ExitReason::Exited(CHECKSUM));
+    assert_eq!(b.stages.len(), 2, "one hand-off expected: {:?}", b.stages);
+    assert_eq!(b.stages[1], "lockstep/inorder+mesi");
+
+    let instret = |r: &r2vm::coordinator::RunReport| {
+        r.per_hart.iter().map(|&(_, i)| i).collect::<Vec<_>>()
+    };
+    assert_eq!(instret(&a), instret(&b), "identical instret totals across engines");
+}
+
+#[test]
+fn handoff_preserves_register_state() {
+    let img = switching_image();
+
+    // (a) pure lockstep reference run, to completion.
+    let mut cfg_a = SimConfig::default();
+    cfg_a.pipeline = "simple".into();
+    let mut eng_a = build_engine(&cfg_a, &img);
+    assert!(matches!(eng_a.run(u64::MAX), ExitReason::Exited(_)));
+    let snap_a = eng_a.suspend();
+
+    // (b) parallel fast-forward until the guest requests the switch, then
+    // an explicit suspend → resume hand-off into lockstep.
+    let mut cfg_b = SimConfig::default();
+    cfg_b.set("mode", "parallel").unwrap();
+    cfg_b.pipeline = "atomic".into();
+    let mut eng_b = build_engine(&cfg_b, &img);
+    let value = match eng_b.run(u64::MAX) {
+        ExitReason::SwitchRequest(v) => v,
+        other => panic!("expected a switch request, got {:?}", other),
+    };
+    apply_simctrl_to_config(&mut cfg_b, value);
+    assert_eq!(cfg_b.mode, EngineMode::Lockstep);
+    assert_eq!(cfg_b.pipeline, "inorder");
+    assert_eq!(cfg_b.memory, "mesi");
+    let snapshot = eng_b.suspend();
+    let mut eng_b2 = resume_engine(&cfg_b, snapshot);
+    assert_eq!(eng_b2.run(u64::MAX), ExitReason::Exited(CHECKSUM));
+    let snap_b = eng_b2.suspend();
+
+    assert_eq!(snap_a.harts.len(), snap_b.harts.len());
+    for (ha, hb) in snap_a.harts.iter().zip(snap_b.harts.iter()) {
+        assert_eq!(ha.regs, hb.regs, "register files must match after hand-off");
+        assert_eq!(ha.instret, hb.instret, "retired-instruction totals must match");
+        assert_eq!(ha.pc, hb.pc, "final PCs must match");
+        assert_eq!(ha.prv, hb.prv);
+    }
+}
+
+#[test]
+fn interp_can_hand_off_too() {
+    // The interpreter honours the same engine-request bits: every engine
+    // plugs into the one hand-off mechanism.
+    let img = switching_image();
+    let mut cfg = SimConfig::default();
+    cfg.set("mode", "interp").unwrap();
+    let r = run_image(&cfg, &img);
+    assert_eq!(r.exit, ExitReason::Exited(CHECKSUM));
+    assert_eq!(r.stages.len(), 2, "{:?}", r.stages);
+    assert_eq!(r.stages[0], "interp/simple+atomic");
+    assert_eq!(r.stages[1], "lockstep/inorder+mesi");
+}
+
+#[test]
+fn switch_at_with_wfi_secondary_hart_does_not_hang() {
+    // The fast-forward workflow's standard shape: the secondary hart
+    // parks in WFI with no timer programmed while the primary does boot
+    // work. A budget-bounded parallel stage must park that thread and
+    // stop at the budget (not hang the join), then hand off.
+    let mut a = Assembler::new(DRAM_BASE);
+    let work = a.new_label();
+    a.csrr(T0, r2vm::isa::csr::CSR_MHARTID);
+    a.beqz(T0, work);
+    let sleep = a.here();
+    a.wfi();
+    a.j(sleep);
+    a.bind(work);
+    a.li(T1, 5_000);
+    let top = a.here();
+    a.addi(T1, T1, -1);
+    a.bnez(T1, top);
+    a.li(A0, 77);
+    a.li(A7, 93);
+    a.ecall();
+    let img = a.finish();
+
+    let mut cfg = SimConfig::default();
+    cfg.harts = 2;
+    cfg.pipeline = "atomic".into();
+    cfg.set("mode", "parallel").unwrap();
+    cfg.set("switch-at", "1000").unwrap();
+    let r = run_image(&cfg, &img);
+    assert_eq!(r.exit, ExitReason::Exited(77));
+    assert_eq!(r.stages.len(), 2, "{:?}", r.stages);
+    assert_eq!(r.stages[1], "lockstep/inorder+mesi");
+}
+
+#[test]
+fn multi_hart_parallel_handoff_keeps_memory_result() {
+    // 2-hart version: harts synchronise through shared memory before the
+    // switch, so the final memory result is engine-independent even
+    // though per-hart interleaving during fast-forward is not.
+    let harts = 2u64;
+    let mut a = Assembler::new(DRAM_BASE);
+    let counter = a.new_label();
+    let done = a.new_label();
+    a.la(T1, counter);
+    a.li(T2, 1_000);
+    let loop_ = a.here();
+    a.li(T0, 1);
+    a.amoadd_w(ZERO, T0, T1);
+    a.addi(T2, T2, -1);
+    a.bnez(T2, loop_);
+    a.la(T3, done);
+    a.li(T4, 1);
+    a.amoadd_w(ZERO, T4, T3);
+    // Wait for all harts to finish phase 1.
+    let barrier = a.here();
+    a.lw(T4, T3, 0);
+    a.slti(T5, T4, harts as i64);
+    a.bnez(T5, barrier);
+    // Hart 0 requests the hand-off; others spin on the counter value
+    // (which no longer changes), then hart 0 exits with it.
+    a.csrr(T0, r2vm::isa::csr::CSR_MHARTID);
+    let park = a.here();
+    a.bnez(T0, park);
+    a.li(T6, simctrl_encoding_full(EngineMode::Lockstep, "inorder", "mesi", 6) as i64);
+    a.csrw(CSR_SIMCTRL, T6);
+    a.lw(A0, T1, 0);
+    a.li(A7, 93);
+    a.ecall();
+    a.align(8);
+    a.bind(counter);
+    a.d32(0);
+    a.bind(done);
+    a.d32(0);
+    let img = a.finish();
+
+    let mut cfg = SimConfig::default();
+    cfg.harts = harts as usize;
+    cfg.set("mode", "parallel").unwrap();
+    cfg.pipeline = "atomic".into();
+    let r = run_image(&cfg, &img);
+    assert_eq!(r.exit, ExitReason::Exited(harts * 1_000), "no updates lost across hand-off");
+    assert_eq!(r.stages.len(), 2, "{:?}", r.stages);
+}
