@@ -1,0 +1,142 @@
+//! Dependency-free little-endian binary encoding for checkpoint files
+//! (serde is unavailable offline; the format is small enough that a
+//! hand-rolled writer/reader keeps the on-disk layout fully explicit and
+//! versionable — see the format table in `ckpt::mod`).
+
+use std::io::{Error, ErrorKind, Result};
+
+/// Append-only little-endian byte writer.
+#[derive(Default)]
+pub struct Writer {
+    pub buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Writer {
+        Writer { buf: Vec::new() }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Length-prefixed byte string (u64 length).
+    pub fn blob(&mut self, v: &[u8]) {
+        self.u64(v.len() as u64);
+        self.bytes(v);
+    }
+}
+
+/// Cursor over a byte slice; every read is bounds-checked and reports a
+/// clean `InvalidData` error instead of panicking on truncated files.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+fn truncated(what: &str) -> Error {
+    Error::new(ErrorKind::InvalidData, format!("truncated checkpoint: reading {}", what))
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(truncated(what));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    /// Length-prefixed byte string, with the length sanity-bounded by the
+    /// bytes actually present (a corrupt length must not trigger a huge
+    /// allocation).
+    pub fn blob(&mut self, what: &str) -> Result<Vec<u8>> {
+        let len = self.u64(what)? as usize;
+        if len > self.remaining() {
+            return Err(truncated(what));
+        }
+        Ok(self.take(len, what)?.to_vec())
+    }
+}
+
+/// FNV-1a 64-bit hash — the checkpoint payload checksum. Not
+/// cryptographic; it exists to catch truncation and bit rot, matching what
+/// a version/magic check cannot see.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_round_trip() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.u32(0xdead_beef);
+        w.u64(0x0123_4567_89ab_cdef);
+        w.blob(b"hello");
+        let mut r = Reader::new(&w.buf);
+        assert_eq!(r.u8("a").unwrap(), 7);
+        assert_eq!(r.u32("b").unwrap(), 0xdead_beef);
+        assert_eq!(r.u64("c").unwrap(), 0x0123_4567_89ab_cdef);
+        assert_eq!(r.blob("d").unwrap(), b"hello");
+        assert_eq!(r.remaining(), 0);
+        assert!(r.u8("past end").is_err());
+    }
+
+    #[test]
+    fn truncated_blob_is_an_error_not_a_panic() {
+        let mut w = Writer::new();
+        w.u64(1 << 40); // absurd length, no payload
+        let mut r = Reader::new(&w.buf);
+        assert!(r.blob("x").is_err());
+    }
+
+    #[test]
+    fn fnv_vectors() {
+        // Standard FNV-1a test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(fnv1a(b"ab"), fnv1a(b"ba"));
+    }
+}

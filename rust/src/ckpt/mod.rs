@@ -1,0 +1,531 @@
+//! On-disk checkpoint/restore of guest system state.
+//!
+//! PR 1's [`crate::sys::SystemSnapshot`] made the guest portable *between
+//! engines inside one process*; this module makes it portable *between
+//! processes and across time*, the way gem5/FireSim checkpoints make long
+//! benchmarks tractable: boot once under the fast functional engine,
+//! checkpoint to disk, then fork as many cycle-level experiments as needed
+//! from the same instant without re-running the fast-forward.
+//!
+//! A checkpoint carries exactly the guest-visible state a snapshot does —
+//! hart architectural state, CLINT/IPI/console device state, the ecall
+//! emulation layer, and guest DRAM — plus nothing else: engine residue
+//! (DBT code caches, L0s, simulated cache/TLB contents) is acceleration
+//! state and is rebuilt cold by the restoring engine. DRAM is serialized
+//! *sparsely*: only pages with a non-zero byte are stored (guest DRAM is
+//! zero-initialised, so zero pages reconstruct for free).
+//!
+//! ## On-disk format (version 1, little-endian)
+//!
+//! ```text
+//! [0..8)    magic  "R2VMCKPT"
+//! [8..12)   format version (u32)
+//! [12..16)  reserved (u32, zero)
+//! [16..24)  FNV-1a 64 checksum of the payload
+//! [24..)    payload:
+//!   num_harts u32, ecall_mode u8, exit_flag u8, exit u64,
+//!   brk u64, mmap_top u64, dram_base u64, dram_size u64,
+//!   per hart: regs 32xu64, pc u64, prv u8, 18 CSRs u64
+//!             (mstatus mie mip medeleg mideleg mtvec mscratch mepc mcause
+//!              mtval mcounteren stvec sscratch sepc scause stval
+//!              scounteren satp), instret u64, cycle u64, wfi u8, halted u8
+//!   ipi num_harts x u64, msip num_harts x u8, mtimecmp num_harts x u64,
+//!   console blob (u64 length + bytes),
+//!   page_count u64, per page: paddr u64, len u32, bytes
+//! ```
+//!
+//! Unknown versions and checksum mismatches are rejected at load; the
+//! `ckpt` CLI subcommand prints the decoded header for inspection.
+
+pub mod io;
+
+use crate::mem::{PhysMem, CKPT_PAGE};
+use crate::sys::{EcallMode, Hart, SystemSnapshot};
+use self::io::{fnv1a, Reader, Writer};
+use std::io::{Error, ErrorKind, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// File magic.
+pub const CKPT_MAGIC: &[u8; 8] = b"R2VMCKPT";
+/// Current format version.
+pub const CKPT_VERSION: u32 = 1;
+/// Header length in bytes (magic + version + reserved + checksum).
+const HEADER_LEN: usize = 24;
+
+fn bad(msg: impl Into<String>) -> Error {
+    Error::new(ErrorKind::InvalidData, msg.into())
+}
+
+/// A decoded checkpoint: guest-visible state plus the sparse DRAM image.
+pub struct Checkpoint {
+    pub version: u32,
+    pub harts: Vec<Hart>,
+    pub ipi: Vec<u64>,
+    pub msip: Vec<bool>,
+    pub mtimecmp: Vec<u64>,
+    pub console: Vec<u8>,
+    pub exit: Option<u64>,
+    pub ecall_mode: EcallMode,
+    pub brk: u64,
+    pub mmap_top: u64,
+    pub dram_base: u64,
+    pub dram_size: u64,
+    /// Non-zero DRAM pages as (physical base address, bytes).
+    pub pages: Vec<(u64, Vec<u8>)>,
+}
+
+fn ecall_mode_code(mode: EcallMode) -> u8 {
+    match mode {
+        EcallMode::Machine => 0,
+        EcallMode::Sbi => 1,
+        EcallMode::Syscall => 2,
+    }
+}
+
+fn ecall_mode_from_code(code: u8) -> Result<EcallMode> {
+    match code {
+        0 => Ok(EcallMode::Machine),
+        1 => Ok(EcallMode::Sbi),
+        2 => Ok(EcallMode::Syscall),
+        other => Err(bad(format!("unknown ecall mode code {}", other))),
+    }
+}
+
+/// The CSR file serialized per hart, in on-disk order — the encoder's
+/// read view. `hart_csrs_mut` below MUST list the same fields in the same
+/// order; the unit round-trip test pins the pairing.
+fn hart_csr_values(hart: &Hart) -> [u64; 18] {
+    [
+        hart.mstatus,
+        hart.mie,
+        hart.mip,
+        hart.medeleg,
+        hart.mideleg,
+        hart.mtvec,
+        hart.mscratch,
+        hart.mepc,
+        hart.mcause,
+        hart.mtval,
+        hart.mcounteren,
+        hart.stvec,
+        hart.sscratch,
+        hart.sepc,
+        hart.scause,
+        hart.stval,
+        hart.scounteren,
+        hart.satp,
+    ]
+}
+
+/// The decoder's write view of the same CSR list, same order.
+fn hart_csrs_mut(hart: &mut Hart) -> [&mut u64; 18] {
+    [
+        &mut hart.mstatus,
+        &mut hart.mie,
+        &mut hart.mip,
+        &mut hart.medeleg,
+        &mut hart.mideleg,
+        &mut hart.mtvec,
+        &mut hart.mscratch,
+        &mut hart.mepc,
+        &mut hart.mcause,
+        &mut hart.mtval,
+        &mut hart.mcounteren,
+        &mut hart.stvec,
+        &mut hart.sscratch,
+        &mut hart.sepc,
+        &mut hart.scause,
+        &mut hart.stval,
+        &mut hart.scounteren,
+        &mut hart.satp,
+    ]
+}
+
+fn encode_hart(w: &mut Writer, hart: &Hart) {
+    for r in hart.regs {
+        w.u64(r);
+    }
+    w.u64(hart.pc);
+    w.u8(hart.prv as u8);
+    for csr in hart_csr_values(hart) {
+        w.u64(csr);
+    }
+    w.u64(hart.instret);
+    // `pending` is folded into `cycle` by snapshot normalization before a
+    // checkpoint is taken, so only the committed clock is stored.
+    w.u64(hart.cycle);
+    w.u8(hart.wfi as u8);
+    w.u8(hart.halted as u8);
+}
+
+fn decode_hart(r: &mut Reader, id: usize) -> Result<Hart> {
+    let mut hart = Hart::new(id);
+    for i in 0..32 {
+        hart.regs[i] = r.u64("hart regs")?;
+    }
+    hart.pc = r.u64("hart pc")?;
+    hart.prv = crate::isa::csr::Priv::from_bits(r.u8("hart prv")? as u64);
+    for csr in hart_csrs_mut(&mut hart) {
+        *csr = r.u64("hart csr")?;
+    }
+    hart.instret = r.u64("hart instret")?;
+    hart.cycle = r.u64("hart cycle")?;
+    hart.wfi = r.u8("hart wfi")? != 0;
+    hart.halted = r.u8("hart halted")? != 0;
+    Ok(hart)
+}
+
+impl Checkpoint {
+    /// Serialize a snapshot's guest-visible state (the snapshot stays
+    /// usable — a periodic checkpoint resumes the same engine afterwards).
+    /// The in-flight analytics trace capture, if any, is deliberately not
+    /// persisted: it is measurement residue, not guest state.
+    pub fn from_snapshot(snap: &SystemSnapshot) -> Checkpoint {
+        let pages = snap
+            .phys
+            .nonzero_pages()
+            .into_iter()
+            .map(|paddr| {
+                let end = snap.phys.base() + snap.phys.size();
+                let len = CKPT_PAGE.min(end - paddr) as usize;
+                (paddr, snap.phys.read_bulk(paddr, len))
+            })
+            .collect();
+        Checkpoint {
+            version: CKPT_VERSION,
+            harts: snap.harts.clone(),
+            ipi: snap.ipi.clone(),
+            msip: snap.msip.clone(),
+            mtimecmp: snap.mtimecmp.clone(),
+            console: snap.console.clone(),
+            exit: snap.exit,
+            ecall_mode: snap.ecall_mode,
+            brk: snap.brk,
+            mmap_top: snap.mmap_top,
+            dram_base: snap.phys.base(),
+            dram_size: snap.phys.size(),
+            pages,
+        }
+    }
+
+    /// Rebuild a [`SystemSnapshot`] over freshly-allocated DRAM, ready for
+    /// [`crate::coordinator::resume_engine`]. Consumes the checkpoint (the
+    /// page data moves into the new DRAM).
+    pub fn into_snapshot(self) -> SystemSnapshot {
+        let phys = Arc::new(PhysMem::new(self.dram_base, self.dram_size as usize));
+        for (paddr, bytes) in &self.pages {
+            phys.write_bulk(*paddr, bytes);
+        }
+        SystemSnapshot {
+            harts: self.harts,
+            phys,
+            ipi: self.ipi,
+            msip: self.msip,
+            mtimecmp: self.mtimecmp,
+            console: self.console,
+            exit: self.exit,
+            ecall_mode: self.ecall_mode,
+            brk: self.brk,
+            mmap_top: self.mmap_top,
+            trace: None,
+        }
+    }
+
+    pub fn num_harts(&self) -> usize {
+        self.harts.len()
+    }
+
+    /// Total retired instructions across all harts at capture time.
+    pub fn total_instret(&self) -> u64 {
+        self.harts.iter().map(|h| h.instret).sum()
+    }
+
+    fn encode_payload(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u32(self.harts.len() as u32);
+        w.u8(ecall_mode_code(self.ecall_mode));
+        w.u8(self.exit.is_some() as u8);
+        w.u64(self.exit.unwrap_or(0));
+        w.u64(self.brk);
+        w.u64(self.mmap_top);
+        w.u64(self.dram_base);
+        w.u64(self.dram_size);
+        for hart in &self.harts {
+            encode_hart(&mut w, hart);
+        }
+        for &v in &self.ipi {
+            w.u64(v);
+        }
+        for &v in &self.msip {
+            w.u8(v as u8);
+        }
+        for &v in &self.mtimecmp {
+            w.u64(v);
+        }
+        w.blob(&self.console);
+        w.u64(self.pages.len() as u64);
+        for (paddr, bytes) in &self.pages {
+            w.u64(*paddr);
+            w.u32(bytes.len() as u32);
+            w.bytes(bytes);
+        }
+        w.buf
+    }
+
+    fn decode_payload(version: u32, payload: &[u8]) -> Result<Checkpoint> {
+        let mut r = Reader::new(payload);
+        let num_harts = r.u32("hart count")? as usize;
+        if num_harts == 0 || num_harts > 32 {
+            return Err(bad(format!("implausible hart count {}", num_harts)));
+        }
+        let ecall_mode = ecall_mode_from_code(r.u8("ecall mode")?)?;
+        let exit_flag = r.u8("exit flag")? != 0;
+        let exit_code = r.u64("exit code")?;
+        let brk = r.u64("brk")?;
+        let mmap_top = r.u64("mmap top")?;
+        let dram_base = r.u64("dram base")?;
+        let dram_size = r.u64("dram size")?;
+        if dram_size == 0 || dram_size > (1 << 40) {
+            return Err(bad(format!("implausible DRAM size {:#x}", dram_size)));
+        }
+        let dram_end = dram_base
+            .checked_add(dram_size)
+            .ok_or_else(|| bad("DRAM range overflows the address space"))?;
+        let mut harts = Vec::with_capacity(num_harts);
+        for id in 0..num_harts {
+            harts.push(decode_hart(&mut r, id)?);
+        }
+        let mut ipi = Vec::with_capacity(num_harts);
+        for _ in 0..num_harts {
+            ipi.push(r.u64("ipi")?);
+        }
+        let mut msip = Vec::with_capacity(num_harts);
+        for _ in 0..num_harts {
+            msip.push(r.u8("msip")? != 0);
+        }
+        let mut mtimecmp = Vec::with_capacity(num_harts);
+        for _ in 0..num_harts {
+            mtimecmp.push(r.u64("mtimecmp")?);
+        }
+        let console = r.blob("console")?;
+        let page_count = r.u64("page count")?;
+        let mut pages = Vec::new();
+        for _ in 0..page_count {
+            let paddr = r.u64("page address")?;
+            let len = r.u32("page length")? as u64;
+            if len > CKPT_PAGE {
+                return Err(bad(format!("page length {} exceeds page size", len)));
+            }
+            let in_dram = paddr >= dram_base
+                && paddr.checked_add(len).map_or(false, |end| end <= dram_end);
+            if !in_dram {
+                return Err(bad(format!("page {:#x} outside checkpointed DRAM", paddr)));
+            }
+            pages.push((paddr, r.take(len as usize, "page data")?.to_vec()));
+        }
+        Ok(Checkpoint {
+            version,
+            harts,
+            ipi,
+            msip,
+            mtimecmp,
+            console,
+            exit: exit_flag.then_some(exit_code),
+            ecall_mode,
+            brk,
+            mmap_top,
+            dram_base,
+            dram_size,
+            pages,
+        })
+    }
+
+    /// Serialize to `path` (header + checksummed payload).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let payload = self.encode_payload();
+        let mut file = Vec::with_capacity(HEADER_LEN + payload.len());
+        file.extend_from_slice(CKPT_MAGIC);
+        file.extend_from_slice(&CKPT_VERSION.to_le_bytes());
+        file.extend_from_slice(&0u32.to_le_bytes());
+        file.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+        file.extend_from_slice(&payload);
+        std::fs::write(path, file)
+    }
+
+    /// Load and fully validate a checkpoint file.
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let data = std::fs::read(path)?;
+        if data.len() < HEADER_LEN {
+            return Err(bad("file shorter than the checkpoint header"));
+        }
+        if &data[0..8] != CKPT_MAGIC {
+            return Err(bad("bad magic: not an r2vm checkpoint"));
+        }
+        let version = u32::from_le_bytes(data[8..12].try_into().unwrap());
+        if version != CKPT_VERSION {
+            return Err(bad(format!(
+                "unsupported checkpoint version {} (this build reads version {})",
+                version, CKPT_VERSION
+            )));
+        }
+        let checksum = u64::from_le_bytes(data[16..24].try_into().unwrap());
+        let payload = &data[HEADER_LEN..];
+        if fnv1a(payload) != checksum {
+            return Err(bad("checksum mismatch: checkpoint is corrupt or truncated"));
+        }
+        Checkpoint::decode_payload(version, payload)
+    }
+
+    /// Human-readable summary for the `ckpt` inspection subcommand.
+    pub fn describe(&self) -> String {
+        let mut s = format!(
+            "r2vm checkpoint v{}\n  harts={} total_instret={} exit={:?}\n  dram: base={:#x} size={} MiB, {} non-zero pages ({} KiB stored)\n  brk={:#x} mmap_top={:#x} ecall_mode={:?} console_bytes={}\n",
+            self.version,
+            self.harts.len(),
+            self.total_instret(),
+            self.exit,
+            self.dram_base,
+            self.dram_size >> 20,
+            self.pages.len(),
+            self.pages.iter().map(|(_, b)| b.len() as u64).sum::<u64>() >> 10,
+            self.brk,
+            self.mmap_top,
+            self.ecall_mode,
+            self.console.len(),
+        );
+        for hart in &self.harts {
+            s.push_str(&format!(
+                "  hart{}: pc={:#x} prv={:?} mcycle={} minstret={}{}{} mtimecmp={}\n",
+                hart.id,
+                hart.pc,
+                hart.prv,
+                hart.cycle,
+                hart.instret,
+                if hart.wfi { " wfi" } else { "" },
+                if hart.halted { " halted" } else { "" },
+                self.mtimecmp[hart.id],
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::DRAM_BASE;
+    use crate::sys::System;
+
+    fn synthetic_snapshot() -> SystemSnapshot {
+        let mut sys = System::new(2, 1 << 20);
+        sys.ipi[1] = 2;
+        sys.bus.clint.msip[0] = true;
+        sys.bus.clint.mtimecmp[1] = 12345;
+        sys.bus.uart.output = b"booting\n".to_vec();
+        sys.brk = DRAM_BASE + 0x1000;
+        sys.phys.write_u64(DRAM_BASE + 0x200, 0xfeed_f00d);
+        sys.phys.write_u8(DRAM_BASE + 0x9_0000, 0x5a);
+        let mut harts: Vec<Hart> = (0..2).map(Hart::new).collect();
+        harts[0].pc = DRAM_BASE + 64;
+        harts[0].regs[10] = 0xabcd;
+        harts[0].satp = 8 << 60;
+        harts[0].mstatus = 0x8;
+        harts[0].cycle = 777;
+        harts[0].instret = 500;
+        harts[1].wfi = true;
+        harts[1].instret = 42;
+        SystemSnapshot::capture(harts, &mut sys)
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("r2vm-ckpt-test-{}-{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn disk_round_trip_preserves_everything() {
+        let snap = synthetic_snapshot();
+        let ckpt = Checkpoint::from_snapshot(&snap);
+        let path = tmp("roundtrip");
+        ckpt.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        assert_eq!(loaded.version, CKPT_VERSION);
+        assert_eq!(loaded.num_harts(), 2);
+        assert_eq!(loaded.total_instret(), 542);
+        assert_eq!(loaded.ipi, vec![0, 2]);
+        assert_eq!(loaded.msip, vec![true, false]);
+        assert_eq!(loaded.mtimecmp[1], 12345);
+        assert_eq!(loaded.console, b"booting\n");
+        assert_eq!(loaded.brk, DRAM_BASE + 0x1000);
+        assert_eq!(loaded.harts[0].regs[10], 0xabcd);
+        assert_eq!(loaded.harts[0].satp, 8 << 60);
+        assert_eq!(loaded.harts[0].pc, DRAM_BASE + 64);
+        assert!(loaded.harts[1].wfi);
+        assert_eq!(loaded.pages.len(), 2, "two dirtied pages stored sparsely");
+
+        // The rebuilt snapshot reproduces DRAM bit-for-bit where written.
+        let restored = loaded.into_snapshot();
+        assert_eq!(restored.phys.read_u64(DRAM_BASE + 0x200), 0xfeed_f00d);
+        assert_eq!(restored.phys.read_u8(DRAM_BASE + 0x9_0000), 0x5a);
+        assert_eq!(restored.phys.read_u64(DRAM_BASE + 0x8000), 0, "untouched DRAM is zero");
+        assert_eq!(restored.harts[0].cycle, 777);
+        assert!(restored.trace.is_none());
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let snap = synthetic_snapshot();
+        let ckpt = Checkpoint::from_snapshot(&snap);
+        let path = tmp("corrupt");
+        ckpt.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        std::fs::remove_file(&path).ok();
+        assert!(err.to_string().contains("checksum"), "{}", err);
+    }
+
+    #[test]
+    fn wrong_magic_and_version_rejected() {
+        let path = tmp("magic");
+        std::fs::write(&path, b"NOTACKPTxxxxxxxxxxxxxxxxxxxx").unwrap();
+        assert!(Checkpoint::load(&path).unwrap_err().to_string().contains("magic"));
+        let snap = synthetic_snapshot();
+        Checkpoint::from_snapshot(&snap).save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[8] = 99; // future version
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        std::fs::remove_file(&path).ok();
+        assert!(err.to_string().contains("version"), "{}", err);
+    }
+
+    #[test]
+    fn csr_encode_decode_views_stay_paired() {
+        // hart_csr_values and hart_csrs_mut must list the same fields in
+        // the same order: write distinct markers through the mut view and
+        // read them back through the value view.
+        let mut hart = Hart::new(0);
+        for (i, csr) in hart_csrs_mut(&mut hart).into_iter().enumerate() {
+            *csr = 0x1000 + i as u64;
+        }
+        for (i, v) in hart_csr_values(&hart).into_iter().enumerate() {
+            assert_eq!(v, 0x1000 + i as u64, "CSR list drift at index {}", i);
+        }
+    }
+
+    #[test]
+    fn describe_lists_harts_and_pages() {
+        let ckpt = Checkpoint::from_snapshot(&synthetic_snapshot());
+        let d = ckpt.describe();
+        assert!(d.contains("harts=2"));
+        assert!(d.contains("hart0"));
+        assert!(d.contains("non-zero pages"));
+    }
+}

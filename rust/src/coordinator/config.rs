@@ -82,8 +82,20 @@ pub struct SimConfig {
     /// (per hart in parallel mode) suspend the engine and warm-start the
     /// `switch_to` target — the fast-forward → measure workflow.
     pub switch_at: Option<u64>,
-    /// Hand-off target as `mode:pipeline:memory`.
+    /// Hand-off target as `mode:pipeline:memory`. Also the measured
+    /// configuration of a sampled run.
     pub switch_to: String,
+    /// Checkpoint output path: the guest state at run end is serialized
+    /// here; with `ckpt_every` set, periodic checkpoints also go to
+    /// `<path>.<seq>`.
+    pub ckpt_out: Option<String>,
+    /// Periodic-checkpoint interval in retired instructions (per hart in
+    /// parallel mode, like `switch_at`).
+    pub ckpt_every: Option<u64>,
+    /// Start from this checkpoint file instead of booting an image.
+    pub restore: Option<String>,
+    /// SMARTS-style sampling plan (`--sample n:warmup:measure[:interval]`).
+    pub sample: Option<crate::sampling::SamplePlan>,
 }
 
 impl Default for SimConfig {
@@ -106,6 +118,10 @@ impl Default for SimConfig {
             console: false,
             switch_at: None,
             switch_to: "lockstep:inorder:mesi".into(),
+            ckpt_out: None,
+            ckpt_every: None,
+            restore: None,
+            sample: None,
         }
     }
 }
@@ -170,6 +186,19 @@ impl SimConfig {
                 parse_switch_target(value)?; // validate eagerly for a good error
                 self.switch_to = value.into();
             }
+            "ckpt-out" => self.ckpt_out = Some(value.into()),
+            "ckpt-every" => {
+                let n: u64 = value.parse().map_err(|_| bad("ckpt-every"))?;
+                if n == 0 {
+                    return Err(bad("ckpt-every"));
+                }
+                self.ckpt_every = Some(n);
+            }
+            "restore" => self.restore = Some(value.into()),
+            "sample" => {
+                self.sample =
+                    Some(crate::sampling::SamplePlan::parse(value).map_err(ParseError)?)
+            }
             _ => return Err(ParseError(format!("unknown option --{}", key))),
         }
         Ok(())
@@ -195,6 +224,29 @@ impl SimConfig {
         }
         if self.switch_at.is_some() {
             self.switch_target()?;
+        }
+        if self.ckpt_every.is_some() && self.ckpt_out.is_none() {
+            return Err(ParseError("--ckpt-every requires --ckpt-out".into()));
+        }
+        if self.sample.is_some() {
+            // The measured windows come from the switch target; it must be
+            // a cycle-counting engine.
+            let (mode, _, _) = self.switch_target()?;
+            if mode == EngineMode::Parallel {
+                return Err(ParseError(
+                    "sampling measures under the --switch-to target, which cannot be the \
+                     parallel engine (it does not track cycles)"
+                        .into(),
+                ));
+            }
+            if self.switch_at.is_some() {
+                return Err(ParseError("--sample and --switch-at are mutually exclusive".into()));
+            }
+            if self.ckpt_out.is_some() || self.restore.is_some() {
+                return Err(ParseError(
+                    "--sample cannot be combined with --ckpt-out/--restore".into(),
+                ));
+            }
         }
         Ok(())
     }
@@ -278,6 +330,31 @@ mod tests {
         }
         assert_eq!(EngineMode::from_code(0), None);
         assert_eq!(EngineMode::from_code(7), None);
+    }
+
+    #[test]
+    fn ckpt_and_sample_flags_validate() {
+        let mut c = SimConfig::default();
+        c.set("ckpt-every", "1000").unwrap();
+        assert!(c.validate().is_err(), "--ckpt-every without --ckpt-out");
+        c.set("ckpt-out", "/tmp/x.ckpt").unwrap();
+        c.validate().unwrap();
+        assert!(c.set("ckpt-every", "0").is_err());
+
+        let mut c = SimConfig::default();
+        c.set("sample", "8:50000:200000").unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.sample.as_ref().unwrap().periods, 8);
+        assert!(c.set("sample", "8:50000").is_err());
+        c.set("switch-at", "100").unwrap();
+        assert!(c.validate().is_err(), "--sample excludes --switch-at");
+        c.switch_at = None;
+        c.set("switch-to", "parallel:atomic:atomic").unwrap();
+        assert!(c.validate().is_err(), "parallel target cannot be measured");
+        c.set("switch-to", "lockstep:simple:cache").unwrap();
+        c.validate().unwrap();
+        c.set("ckpt-out", "/tmp/x.ckpt").unwrap();
+        assert!(c.validate().is_err(), "--sample excludes checkpointing");
     }
 
     #[test]

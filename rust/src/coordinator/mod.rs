@@ -15,6 +15,7 @@ pub mod parallel;
 
 pub use config::{EngineMode, SimConfig};
 pub use parallel::ParallelEngine;
+pub use crate::sampling::run_sampled;
 
 use crate::analytics::trace::TraceCapture;
 use crate::asm::Image;
@@ -100,6 +101,48 @@ pub fn models_report() -> String {
     s
 }
 
+/// One stage's attributed share of a run. Counters are captured per stage
+/// instead of accumulating silently across hand-offs, so the numbers in a
+/// report are always attributable to the stage that produced them (the
+/// boot phase's cache misses no longer pollute the ROI's hit rate).
+#[derive(Debug, Clone)]
+pub struct StageReport {
+    pub label: String,
+    /// Instructions retired during this stage (summed over harts).
+    pub insts: u64,
+    /// Cycles elapsed during this stage (summed over harts).
+    pub cycles: u64,
+    /// Memory-model statistics attributable to this stage, accumulated
+    /// across any checkpoint re-spawns within it.
+    pub model_stats: Vec<(&'static str, u64)>,
+    /// Engine statistics attributable to this stage.
+    pub engine_stats: EngineStats,
+}
+
+/// Sum `add` into `acc` by key; keys keep first-seen order so repeated
+/// merges of the same model's stats stay in the model's own order.
+pub fn merge_model_stats(acc: &mut Vec<(&'static str, u64)>, add: &[(&'static str, u64)]) {
+    for &(k, v) in add {
+        if let Some(entry) = acc.iter_mut().find(|(key, _)| *key == k) {
+            entry.1 += v;
+        } else {
+            acc.push((k, v));
+        }
+    }
+}
+
+/// Summed (cycles, instret) across harts (shared with the sampling
+/// driver's window arithmetic).
+pub(crate) fn hart_totals(engine: &dyn ExecutionEngine) -> (u64, u64) {
+    let mut cycles = 0;
+    let mut insts = 0;
+    for (c, i) in engine.per_hart() {
+        cycles += c;
+        insts += i;
+    }
+    (cycles, insts)
+}
+
 /// Result of one simulation run.
 pub struct RunReport {
     pub exit: ExitReason,
@@ -108,12 +151,18 @@ pub struct RunReport {
     /// Per-hart (cycle, instret).
     pub per_hart: Vec<(u64, u64)>,
     pub console: String,
-    /// Memory-model statistics snapshot (final stage).
+    /// Memory-model statistics of the final stage (accumulated across its
+    /// checkpoint re-spawns).
     pub model_stats: Vec<(&'static str, u64)>,
     /// Engine statistics accumulated across all stages.
     pub engine_stats: Option<EngineStats>,
     /// Engine/model configuration of each stage, in hand-off order.
     pub stages: Vec<String>,
+    /// Per-stage attributed counters, parallel to `stages` for staged
+    /// runs (empty for sampled runs, which report through `sampling`).
+    pub stage_reports: Vec<StageReport>,
+    /// Sampled-run aggregate (present only for `--sample` runs).
+    pub sampling: Option<crate::sampling::SamplingSummary>,
 }
 
 impl RunReport {
@@ -138,6 +187,17 @@ impl RunReport {
         );
         if self.stages.len() > 1 {
             s.push_str(&format!("  stages: {}\n", self.stages.join(" -> ")));
+        }
+        if self.stage_reports.len() > 1 {
+            for sr in &self.stage_reports {
+                s.push_str(&format!(
+                    "  stage {}: insts={} cycles={}\n",
+                    sr.label, sr.insts, sr.cycles
+                ));
+            }
+        }
+        if let Some(sampling) = &self.sampling {
+            s.push_str(&sampling.report());
         }
         for (i, (cyc, ins)) in self.per_hart.iter().enumerate() {
             s.push_str(&format!("  hart{}: mcycle={} minstret={}\n", i, cyc, ins));
@@ -223,8 +283,9 @@ pub fn apply_simctrl_to_config(cfg: &mut SimConfig, value: u64) {
     }
 }
 
-/// Human-readable stage label for reports.
-fn stage_label(cfg: &SimConfig) -> String {
+/// Human-readable stage label for reports (shared with the sampling
+/// driver).
+pub(crate) fn stage_label(cfg: &SimConfig) -> String {
     format!("{}/{}+{}", cfg.mode.as_str(), cfg.pipeline, cfg.memory)
 }
 
@@ -276,69 +337,199 @@ pub fn resume_engine(cfg: &SimConfig, snapshot: SystemSnapshot) -> Box<dyn Execu
 }
 
 /// Run `image` to completion under `cfg`, performing engine hand-offs as
-/// requested by the guest (SIMCTRL engine field) or by `--switch-at`.
+/// requested by the guest (SIMCTRL engine field) or by `--switch-at`, and
+/// writing checkpoints at `--ckpt-every` boundaries / run end when
+/// `--ckpt-out` is set.
 pub fn run_image(cfg: &SimConfig, image: &Image) -> RunReport {
     cfg.validate().expect("invalid configuration");
+    let stage = cfg.clone();
+    let engine = build_engine(&stage, image);
+    drive(cfg, stage, engine)
+}
+
+/// Resume a run from an on-disk checkpoint instead of booting an image.
+/// The checkpoint is authoritative for guest topology (hart count, DRAM
+/// geometry); `cfg` supplies everything else — models, engine mode,
+/// budgets (`--max-insts` counts *total* retired instructions, including
+/// those retired before the checkpoint was taken).
+pub fn run_restored(cfg: &SimConfig, ckpt: crate::ckpt::Checkpoint) -> RunReport {
+    let mut cfg = cfg.clone();
+    cfg.harts = ckpt.num_harts();
+    cfg.dram_bytes = ckpt.dram_size as usize;
+    cfg.validate().expect("invalid configuration");
+    let stage = cfg.clone();
+    let engine = resume_engine(&stage, ckpt.into_snapshot());
+    drive(&cfg, stage, engine)
+}
+
+/// A budget boundary hit inside the staged loop.
+enum Boundary {
+    /// Hand off to a new stage configuration; `Some` carries a guest
+    /// SIMCTRL request, `None` means the `--switch-at` budget elapsed.
+    Switch(Option<u64>),
+    /// A `--ckpt-every` boundary: serialize and continue the same stage.
+    Ckpt,
+}
+
+/// The staged run loop shared by [`run_image`] and [`run_restored`]: drive
+/// the engine between budget boundaries, performing engine hand-offs and
+/// periodic checkpoints, and attribute counters to the stage that produced
+/// them.
+fn drive(cfg: &SimConfig, mut stage: SimConfig, mut engine: Box<dyn ExecutionEngine>) -> RunReport {
     let t0 = Instant::now();
-    let mut stage = cfg.clone();
-    let mut engine = build_engine(&stage, image);
     let mut stages = vec![stage_label(&stage)];
+    let mut stage_reports: Vec<StageReport> = Vec::new();
     let mut acc_stats = EngineStats::default();
     let mut switch_at = stage.switch_at;
+    // Per-stage attribution baselines (stat hygiene): hart clocks persist
+    // across hand-offs, so stage counts are deltas against these.
+    let (mut stage_cycles0, mut stage_insts0) = hart_totals(engine.as_ref());
+    let mut stage_engine_stats = EngineStats::default();
+    let mut stage_model_stats: Vec<(&'static str, u64)> = Vec::new();
+    // Periodic checkpoint schedule (absolute budget-progress marks).
+    let mut ckpt_seq = 0u32;
+    let mut next_ckpt = match (&cfg.ckpt_out, cfg.ckpt_every) {
+        (Some(_), Some(every)) => Some(engine.budget_progress().saturating_add(every)),
+        _ => None,
+    };
 
     let exit = loop {
         // Budgets are in the unit the engine's `run` consumes: total
         // retired instructions for serial engines, per-hart for the
-        // parallel engine (`budget_progress` reports the same unit).
+        // parallel engine (`budget_progress` reports the same unit). The
+        // nearest boundary — run end, `--switch-at`, `--ckpt-every` —
+        // bounds this leg and decides what its `StepLimit` means.
         let progress = engine.budget_progress();
-        let remaining = cfg.max_insts.saturating_sub(progress);
-        let (budget, switch_bounded) = match switch_at {
-            Some(at) => {
-                let to_switch = at.saturating_sub(progress);
-                if to_switch < remaining {
-                    (to_switch, true)
-                } else {
-                    (remaining, false)
+        let mut budget = cfg.max_insts.saturating_sub(progress);
+        let mut bounded_by: Option<Boundary> = None;
+        if let Some(at) = switch_at {
+            let to_switch = at.saturating_sub(progress);
+            if to_switch < budget {
+                budget = to_switch;
+                bounded_by = Some(Boundary::Switch(None));
+            }
+        }
+        if let Some(at) = next_ckpt {
+            let to_ckpt = at.saturating_sub(progress);
+            if to_ckpt < budget {
+                budget = to_ckpt;
+                bounded_by = Some(Boundary::Ckpt);
+            }
+        }
+        // Decide what the stop means; anything other than a boundary ends
+        // the run.
+        let boundary = match engine.run(budget) {
+            ExitReason::SwitchRequest(value) => Boundary::Switch(Some(value)),
+            ExitReason::StepLimit => match bounded_by {
+                Some(b) => b,
+                None => break ExitReason::StepLimit,
+            },
+            other => break other,
+        };
+        match boundary {
+            Boundary::Switch(trigger) => {
+                // Close the finishing stage's attributed counters.
+                stage_engine_stats.merge(&engine.stats());
+                merge_model_stats(&mut stage_model_stats, &engine.model_stats());
+                let (cycles1, insts1) = hart_totals(engine.as_ref());
+                stage_reports.push(StageReport {
+                    label: stages.last().expect("stages is never empty").clone(),
+                    insts: insts1 - stage_insts0,
+                    cycles: cycles1 - stage_cycles0,
+                    model_stats: std::mem::take(&mut stage_model_stats),
+                    engine_stats: std::mem::take(&mut stage_engine_stats),
+                });
+                // Decode the next stage's configuration.
+                match trigger {
+                    Some(value) => apply_simctrl_to_config(&mut stage, value),
+                    None => {
+                        let (mode, pipeline, memory) =
+                            stage.switch_target().expect("validated");
+                        stage.mode = mode;
+                        stage.pipeline = pipeline;
+                        stage.memory = memory;
+                    }
+                }
+                // The hand-off itself is identical for both triggers.
+                switch_at = None;
+                acc_stats.merge(&engine.stats());
+                let snapshot = engine.suspend();
+                engine = resume_engine(&stage, snapshot);
+                stages.push(stage_label(&stage));
+                let (cycles, insts) = hart_totals(engine.as_ref());
+                stage_cycles0 = cycles;
+                stage_insts0 = insts;
+                // `budget_progress` units can change across engines
+                // (per-hart for parallel, total for serial): re-anchor the
+                // periodic-checkpoint schedule at the hand-off point so a
+                // unit jump cannot fire checkpoints early or late.
+                if next_ckpt.is_some() {
+                    next_ckpt =
+                        cfg.ckpt_every.map(|n| engine.budget_progress().saturating_add(n));
                 }
             }
-            None => (remaining, false),
-        };
-        // Decide the next stage's configuration; anything other than a
-        // hand-off ends the run.
-        match engine.run(budget) {
-            ExitReason::SwitchRequest(value) => {
-                // Guest-triggered hand-off: decode the full target
-                // configuration from the CSR write.
-                apply_simctrl_to_config(&mut stage, value);
+            Boundary::Ckpt => {
+                // Serialize the guest and continue the same stage over the
+                // same DRAM. The respawned engine starts with cold
+                // acceleration state but a fresh memory model too, so its
+                // counters are folded into the stage's accumulator here.
+                stage_engine_stats.merge(&engine.stats());
+                merge_model_stats(&mut stage_model_stats, &engine.model_stats());
+                acc_stats.merge(&engine.stats());
+                let snapshot = engine.suspend();
+                ckpt_seq += 1;
+                let base = cfg.ckpt_out.as_deref().expect("ckpt boundary implies --ckpt-out");
+                let path = format!("{}.{}", base, ckpt_seq);
+                let ckpt = crate::ckpt::Checkpoint::from_snapshot(&snapshot);
+                if let Err(e) = ckpt.save(std::path::Path::new(&path)) {
+                    // A full disk must not abort a long simulation: the run
+                    // continues, only the checkpoint is lost.
+                    eprintln!("warning: failed to write checkpoint {}: {}", path, e);
+                }
+                engine = resume_engine(&stage, snapshot);
+                next_ckpt =
+                    cfg.ckpt_every.map(|n| engine.budget_progress().saturating_add(n));
             }
-            ExitReason::StepLimit if switch_bounded => {
-                // --switch-at boundary: hand off to the --switch-to target.
-                let (mode, pipeline, memory) = stage.switch_target().expect("validated");
-                stage.mode = mode;
-                stage.pipeline = pipeline;
-                stage.memory = memory;
-            }
-            other => break other,
         }
-        // The hand-off itself is identical for both triggers.
-        switch_at = None;
-        acc_stats.merge(&engine.stats());
-        let snapshot = engine.suspend();
-        engine = resume_engine(&stage, snapshot);
-        stages.push(stage_label(&stage));
     };
     let wall = t0.elapsed();
     acc_stats.merge(&engine.stats());
-    RunReport {
+    // Close the final stage.
+    stage_engine_stats.merge(&engine.stats());
+    merge_model_stats(&mut stage_model_stats, &engine.model_stats());
+    let (cycles1, insts1) = hart_totals(engine.as_ref());
+    let final_model_stats = stage_model_stats.clone();
+    stage_reports.push(StageReport {
+        label: stages.last().expect("stages is never empty").clone(),
+        insts: insts1 - stage_insts0,
+        cycles: cycles1 - stage_cycles0,
+        model_stats: stage_model_stats,
+        engine_stats: stage_engine_stats,
+    });
+    let report = RunReport {
         exit,
         wall,
         total_insts: engine.total_instret(),
         per_hart: engine.per_hart(),
         console: engine.console(),
-        model_stats: engine.model_stats(),
+        model_stats: final_model_stats,
         engine_stats: Some(acc_stats),
         stages,
+        stage_reports,
+        sampling: None,
+    };
+    // Terminal checkpoint: `--ckpt-out` always records the end-of-run
+    // state at the base path (the report is assembled first — suspending
+    // consumes the engine).
+    if let Some(base) = &cfg.ckpt_out {
+        let snapshot = engine.suspend();
+        let ckpt = crate::ckpt::Checkpoint::from_snapshot(&snapshot);
+        if let Err(e) = ckpt.save(std::path::Path::new(base)) {
+            // The completed run's report must survive a write failure.
+            eprintln!("warning: failed to write checkpoint {}: {}", base, e);
+        }
     }
+    report
 }
 
 #[cfg(test)]
@@ -446,6 +637,8 @@ mod tests {
             model_stats: Vec::new(),
             engine_stats: None,
             stages: vec!["lockstep/simple+atomic".into()],
+            stage_reports: Vec::new(),
+            sampling: None,
         };
         assert_eq!(report.mips(), 0.0, "zero wall clock must not produce inf");
         assert!(report.summary().contains("mips=0.0"));
@@ -467,5 +660,85 @@ mod tests {
         assert_eq!(report.stages[1], "lockstep/inorder+mesi");
         // The measured stage runs under MESI: model stats must be present.
         assert!(!report.model_stats.is_empty());
+    }
+
+    #[test]
+    fn stage_reports_attribute_counters_per_stage() {
+        let img = countdown(2_000);
+        let mut cfg = SimConfig::default();
+        cfg.set("switch-at", "1000").unwrap();
+        cfg.set("switch-to", "lockstep:inorder:cache").unwrap();
+        let report = run_image(&cfg, &img);
+        assert_eq!(report.exit, ExitReason::Exited(2_000 * 2_001 / 2));
+        assert_eq!(report.stage_reports.len(), 2, "one report per stage");
+        let (first, second) = (&report.stage_reports[0], &report.stage_reports[1]);
+        assert_eq!(first.label, report.stages[0]);
+        assert_eq!(second.label, report.stages[1]);
+        // Stage instruction counts partition the run exactly.
+        assert_eq!(first.insts + second.insts, report.total_insts);
+        assert!(first.insts >= 1000, "fast-forward covered its budget: {}", first.insts);
+        assert!(second.insts > 0, "measured stage retired the rest");
+        // The first stage ran the atomic model: no cache counters may leak
+        // into it; the second ran the cache model and must have them (the
+        // countdown loop is register-only, so the I-side is the live one).
+        assert!(first.model_stats.is_empty(), "{:?}", first.model_stats);
+        assert!(second.model_stats.iter().any(|&(k, v)| k == "icache_cold_accesses" && v > 0));
+        // RunReport's model_stats belong to the final stage alone.
+        assert_eq!(report.model_stats, second.model_stats);
+        // summary() prints per-stage attribution for staged runs.
+        assert!(report.summary().contains("stage lockstep/simple+atomic:"));
+    }
+
+    #[test]
+    fn merge_model_stats_sums_by_key() {
+        let mut acc = vec![("hits", 3), ("misses", 1)];
+        merge_model_stats(&mut acc, &[("misses", 2), ("evictions", 5)]);
+        assert_eq!(acc, vec![("hits", 3), ("misses", 3), ("evictions", 5)]);
+        let mut empty: Vec<(&'static str, u64)> = Vec::new();
+        merge_model_stats(&mut empty, &[("hits", 1)]);
+        assert_eq!(empty, vec![("hits", 1)]);
+    }
+
+    #[test]
+    fn periodic_checkpoints_do_not_perturb_the_run() {
+        // inorder+atomic: cycle costs are translation-baked and the cold
+        // path charges nothing, so suspend/serialize/resume must be fully
+        // timing-neutral. (Timing memory models legitimately diverge at a
+        // boundary — simulated-cache residue is dropped and re-warmed.)
+        let img = countdown(3_000);
+        let mut plain = SimConfig::default();
+        plain.pipeline = "inorder".into();
+        let a = run_image(&plain, &img);
+
+        let base = std::env::temp_dir()
+            .join(format!("r2vm-coord-ckpt-{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let mut ck = plain.clone();
+        ck.ckpt_out = Some(base.clone());
+        ck.ckpt_every = Some(4_000); // two boundaries across ~9k insts
+        let b = run_image(&ck, &img);
+
+        assert_eq!(a.exit, b.exit);
+        assert_eq!(a.per_hart, b.per_hart, "suspend/serialize/resume must be timing-neutral");
+        // Periodic files <base>.1.. plus the terminal <base> exist and load.
+        let terminal = crate::ckpt::Checkpoint::load(std::path::Path::new(&base)).unwrap();
+        assert_eq!(terminal.total_instret(), b.total_insts);
+        assert_eq!(terminal.exit, Some(3_000 * 3_001 / 2));
+        let first = crate::ckpt::Checkpoint::load(std::path::Path::new(&format!("{}.1", base)))
+            .expect("first periodic checkpoint written");
+        assert!(first.total_instret() >= 4_000);
+        assert!(first.total_instret() < b.total_insts);
+        // Restoring the first periodic checkpoint finishes with identical
+        // architectural state.
+        let c = run_restored(&plain, first);
+        assert_eq!(c.exit, a.exit);
+        assert_eq!(c.per_hart, a.per_hart, "restore must reproduce the unbroken run");
+        // Cleanup.
+        let mut k = 1;
+        while std::fs::remove_file(format!("{}.{}", base, k)).is_ok() {
+            k += 1;
+        }
+        std::fs::remove_file(&base).ok();
     }
 }

@@ -110,6 +110,13 @@ pub trait ExecutionEngine {
 
     /// Memory-model statistics snapshot.
     fn model_stats(&self) -> Vec<(&'static str, u64)>;
+
+    /// Zero the memory-model statistics counters while keeping simulated
+    /// cache/TLB/coherence *contents* warm. The sampling driver calls this
+    /// at the end of a warm-up window so the measurement window's counters
+    /// are attributable to it alone; engines without a live memory model
+    /// (the parallel engine's per-thread systems) may ignore it.
+    fn reset_model_stats(&mut self) {}
 }
 
 /// Simulation exit requested by the guest through any channel (SBI

@@ -777,6 +777,10 @@ impl ExecutionEngine for FiberEngine {
     fn model_stats(&self) -> Vec<(&'static str, u64)> {
         self.sys.model.stats()
     }
+
+    fn reset_model_stats(&mut self) {
+        self.sys.model.reset_stats();
+    }
 }
 
 #[cfg(test)]

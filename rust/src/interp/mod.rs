@@ -224,6 +224,10 @@ impl ExecutionEngine for InterpEngine {
     fn model_stats(&self) -> Vec<(&'static str, u64)> {
         self.sys.model.stats()
     }
+
+    fn reset_model_stats(&mut self) {
+        self.sys.model.reset_stats();
+    }
 }
 
 #[cfg(test)]

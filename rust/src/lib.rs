@@ -17,6 +17,7 @@
 
 pub mod analytics;
 pub mod bench;
+pub mod ckpt;
 pub mod coordinator;
 pub mod asm;
 pub mod engine;
@@ -29,5 +30,6 @@ pub mod pipeline;
 pub mod prop;
 pub mod refsim;
 pub mod runtime;
+pub mod sampling;
 pub mod workloads;
 pub mod sys;

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   run       — run a built-in workload or an ELF under a model config
+//!   ckpt      — inspect an on-disk checkpoint file
 //!   models    — print the pipeline/memory model inventory (Tables 1-2)
 //!   workloads — list built-in workloads
 //!   validate  — quick accuracy check of the InOrder model vs refsim
@@ -15,7 +16,8 @@ use r2vm::workloads;
 fn usage() -> ! {
     eprintln!(
         "usage:
-  r2vm-repro run [--workload NAME | --elf PATH] [options]
+  r2vm-repro run [--workload NAME | --elf PATH | --restore CKPT] [options]
+  r2vm-repro ckpt PATH
   r2vm-repro models
   r2vm-repro workloads
   r2vm-repro validate
@@ -33,6 +35,20 @@ options:
   --switch-to T      hand-off target as mode:pipeline:memory
                      (default lockstep:inorder:mesi); guests can also
                      trigger a hand-off via SIMCTRL bits [22:20]
+  --ckpt-out PATH    serialize the end-of-run guest state to PATH; with
+                     --ckpt-every also write PATH.1, PATH.2, ... mid-run
+  --ckpt-every N     periodic checkpoints every N retired instructions
+                     (per hart in parallel mode; requires --ckpt-out)
+  --restore PATH     resume from a checkpoint instead of booting an image
+                     (hart count and DRAM size come from the file)
+  --sample SPEC      SMARTS-style sampled run, SPEC = n:warmup:measure
+                     [:interval]: n periods of parallel/atomic fast-
+                     forward (interval insts/hart, default 4x the window),
+                     then warm-up + measurement windows under the
+                     --switch-to target; reports mean CPI +/- 95% CI and
+                     writes BENCH_sampling.json (see --json)
+  --json PATH        where --sample writes its machine-readable report
+                     (default BENCH_sampling.json)
   --dram-mb N        guest DRAM size (default 64)
   --line-bytes N     L0 line size (64; 4096 = L0-as-TLB)
   --trace N          capture N memory/branch trace records
@@ -59,11 +75,25 @@ fn main() {
             let report = r2vm::refsim::validate_inorder_quick();
             print!("{}", report);
         }
+        "ckpt" => {
+            let Some(path) = args.get(1) else {
+                eprintln!("ckpt needs a checkpoint file path");
+                usage();
+            };
+            match r2vm::ckpt::Checkpoint::load(std::path::Path::new(path)) {
+                Ok(ckpt) => print!("{}", ckpt.describe()),
+                Err(e) => {
+                    eprintln!("reading {}: {}", path, e);
+                    std::process::exit(2);
+                }
+            }
+        }
         "run" => {
             let mut cfg = SimConfig::default();
             let mut workload: Option<String> = None;
             let mut elf: Option<String> = None;
             let mut quiet = false;
+            let mut json_out = "BENCH_sampling.json".to_string();
             let mut it = args[1..].iter();
             while let Some(arg) = it.next() {
                 let Some(key) = arg.strip_prefix("--") else {
@@ -73,6 +103,13 @@ fn main() {
                 match key {
                     "workload" => workload = it.next().cloned(),
                     "elf" => elf = it.next().cloned(),
+                    "json" => {
+                        let Some(path) = it.next() else {
+                            eprintln!("--json needs a value");
+                            usage();
+                        };
+                        json_out = path.clone();
+                    }
                     "naive-yield" => cfg.naive_yield = true,
                     "no-chaining" => cfg.no_chaining = true,
                     "no-l0" => cfg.no_l0 = true,
@@ -94,49 +131,76 @@ fn main() {
                 eprintln!("{}", e);
                 std::process::exit(2);
             }
-            let image = match (workload, elf) {
-                (Some(w), None) => match workloads::build(&w, cfg.harts) {
-                    Some(img) => img,
-                    None => {
-                        eprintln!("unknown workload '{}' (see `r2vm-repro workloads`)", w);
+            // Restored runs need no image; everything else needs exactly
+            // one source.
+            if cfg.restore.is_some() && (workload.is_some() || elf.is_some()) {
+                eprintln!("--restore replaces --workload/--elf");
+                usage();
+            }
+            let report = if let Some(path) = cfg.restore.clone() {
+                match r2vm::ckpt::Checkpoint::load(std::path::Path::new(&path)) {
+                    Ok(ckpt) => coordinator::run_restored(&cfg, ckpt),
+                    Err(e) => {
+                        eprintln!("reading {}: {}", path, e);
                         std::process::exit(2);
                     }
-                },
-                (None, Some(path)) => {
-                    let bytes = match std::fs::read(&path) {
-                        Ok(b) => b,
-                        Err(e) => {
-                            eprintln!("reading {}: {}", path, e);
-                            std::process::exit(2);
-                        }
-                    };
-                    // Convert the ELF into a flat image by loading into a
-                    // scratch system and copying the populated range out.
-                    let sys = r2vm::sys::System::new(1, cfg.dram_bytes);
-                    let entry = match loader::load_elf(&sys, &bytes) {
-                        Ok(e) => e,
-                        Err(e) => {
-                            eprintln!("loading {}: {}", path, e);
-                            std::process::exit(2);
-                        }
-                    };
-                    let size = cfg.dram_bytes.min(32 << 20);
-                    let mut img = r2vm::asm::Image {
-                        base: r2vm::mem::DRAM_BASE,
-                        bytes: sys.phys.read_bytes(r2vm::mem::DRAM_BASE, size),
-                        entry,
-                    };
-                    while img.bytes.last() == Some(&0) && img.bytes.len() > 4096 {
-                        img.bytes.pop();
-                    }
-                    img
                 }
-                _ => {
-                    eprintln!("exactly one of --workload or --elf is required");
-                    usage();
+            } else {
+                let image = match (workload, elf) {
+                    (Some(w), None) => match workloads::build(&w, cfg.harts) {
+                        Some(img) => img,
+                        None => {
+                            eprintln!("unknown workload '{}' (see `r2vm-repro workloads`)", w);
+                            std::process::exit(2);
+                        }
+                    },
+                    (None, Some(path)) => {
+                        let bytes = match std::fs::read(&path) {
+                            Ok(b) => b,
+                            Err(e) => {
+                                eprintln!("reading {}: {}", path, e);
+                                std::process::exit(2);
+                            }
+                        };
+                        // Convert the ELF into a flat image by loading into a
+                        // scratch system and copying the populated range out.
+                        let sys = r2vm::sys::System::new(1, cfg.dram_bytes);
+                        let entry = match loader::load_elf(&sys, &bytes) {
+                            Ok(e) => e,
+                            Err(e) => {
+                                eprintln!("loading {}: {}", path, e);
+                                std::process::exit(2);
+                            }
+                        };
+                        let size = cfg.dram_bytes.min(32 << 20);
+                        let mut img = r2vm::asm::Image {
+                            base: r2vm::mem::DRAM_BASE,
+                            bytes: sys.phys.read_bytes(r2vm::mem::DRAM_BASE, size),
+                            entry,
+                        };
+                        while img.bytes.last() == Some(&0) && img.bytes.len() > 4096 {
+                            img.bytes.pop();
+                        }
+                        img
+                    }
+                    _ => {
+                        eprintln!("exactly one of --workload, --elf or --restore is required");
+                        usage();
+                    }
+                };
+                if cfg.sample.is_some() {
+                    coordinator::run_sampled(&cfg, &image)
+                } else {
+                    coordinator::run_image(&cfg, &image)
                 }
             };
-            let report = coordinator::run_image(&cfg, &image);
+            if let Some(sampling) = &report.sampling {
+                if let Err(e) = std::fs::write(&json_out, sampling.to_json()) {
+                    eprintln!("writing {}: {}", json_out, e);
+                } else if !quiet {
+                    println!("sampling report written to {}", json_out);
+                }
+            }
             if !quiet {
                 print!("{}", report.summary());
             }

@@ -114,6 +114,12 @@ impl SimCache {
         self.fifo.fill(0);
     }
 
+    /// Zero the hit/access counters, keeping the cache contents warm.
+    pub fn reset_stats(&mut self) {
+        self.accesses = 0;
+        self.hits = 0;
+    }
+
     pub fn hit_rate(&self) -> f64 {
         if self.accesses == 0 {
             0.0
@@ -234,6 +240,13 @@ impl MemoryModel for CacheModel {
             ("icache_cold_accesses", ia),
             ("icache_hits", ih),
         ]
+    }
+
+    fn reset_stats(&mut self) {
+        for c in &mut self.harts {
+            c.icache.reset_stats();
+            c.dcache.reset_stats();
+        }
     }
 }
 

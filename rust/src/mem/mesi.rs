@@ -463,6 +463,19 @@ impl MemoryModel for MesiModel {
             ("back_invalidations", self.coherence.back_invalidations),
         ]
     }
+
+    fn reset_stats(&mut self) {
+        for c in &mut self.l1 {
+            c.accesses = 0;
+            c.hits = 0;
+        }
+        for c in &mut self.icache {
+            c.reset_stats();
+        }
+        self.l2.accesses = 0;
+        self.l2.hits = 0;
+        self.coherence = MesiStats::default();
+    }
 }
 
 #[cfg(test)]

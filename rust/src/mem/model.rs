@@ -80,6 +80,12 @@ pub trait MemoryModel: Send {
     fn stats(&self) -> ModelStats {
         Vec::new()
     }
+
+    /// Zero the statistics counters without touching simulated cache/TLB
+    /// *contents*. Used for per-stage stat attribution and to discard the
+    /// warm-up window of a sampled measurement (the SMARTS workflow): the
+    /// state stays warm, only the counters restart.
+    fn reset_stats(&mut self) {}
 }
 
 /// `Atomic` memory model (Table 2): memory accesses are not tracked; every

@@ -74,6 +74,12 @@ impl SimTlb {
         self.fifo.fill(0);
     }
 
+    /// Zero the hit/access counters, keeping the TLB contents warm.
+    pub fn reset_stats(&mut self) {
+        self.accesses = 0;
+        self.hits = 0;
+    }
+
     pub fn hit_rate(&self) -> f64 {
         if self.accesses == 0 {
             0.0
@@ -214,6 +220,13 @@ impl MemoryModel for TlbModel {
         v.push(("itlb_cold_accesses", ia));
         v.push(("itlb_hits", ih));
         v
+    }
+
+    fn reset_stats(&mut self) {
+        for t in &mut self.harts {
+            t.itlb.reset_stats();
+            t.dtlb.reset_stats();
+        }
     }
 }
 

@@ -1,0 +1,446 @@
+//! SMARTS-style sampled cycle-level simulation (Wunderlich et al., ISCA
+//! 2003, applied to the paper's engine hand-off machinery).
+//!
+//! Instead of one long cycle-level region of interest, a sampled run
+//! alternates three legs, repeated for `n` periods:
+//!
+//!  1. **fast-forward** — the functional-parallel engine over atomic
+//!     models (the paper's QEMU-like >300 MIPS mode) advances the guest
+//!     `interval` instructions per hart;
+//!  2. **warm-up** — the guest hands off to the measured configuration
+//!     (default `lockstep/inorder+mesi`, the `--switch-to` target) and
+//!     runs `warmup` instructions while caches, TLBs and MESI directory
+//!     state fill from cold. The statistics of this window are discarded:
+//!     a hand-off drops simulated-cache residue, so the first accesses of
+//!     a window see compulsory misses that a continuous run would not;
+//!  3. **measure** — `measure` further instructions run with freshly
+//!     zeroed counters; the window's CPI and memory-model statistics are
+//!     recorded as one sample.
+//!
+//! The per-sample CPIs aggregate into a mean with a Student-t 95%
+//! confidence interval ([`stats`]) — functional-mode speed for most of the
+//! run, cycle-level accuracy estimates with quantified error. After the
+//! last period the remainder of the workload completes under the
+//! fast-forward engine, so a sampled run still executes the whole program.
+//!
+//! The driver sits *above* the coordinator's engine builders and owns the
+//! engine schedule outright; guest SIMCTRL engine-switch requests during a
+//! sampled run are dropped (the leg's configuration is rebuilt over the
+//! same guest state and execution continues).
+
+pub mod stats;
+
+use crate::asm::Image;
+use crate::coordinator::{
+    build_engine, hart_totals, resume_engine, stage_label, EngineMode, RunReport, SimConfig,
+};
+use crate::engine::{EngineStats, ExecutionEngine, ExitReason};
+use std::time::Instant;
+
+/// The sampling schedule, parsed from `--sample n:warmup:measure[:interval]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SamplePlan {
+    /// Number of sample periods.
+    pub periods: u32,
+    /// Warm-up window length per period (instructions; stats discarded).
+    pub warmup: u64,
+    /// Measurement window length per period (instructions).
+    pub measure: u64,
+    /// Fast-forward length per period (instructions per hart).
+    pub interval: u64,
+}
+
+impl SamplePlan {
+    /// Default fast-forward interval as a multiple of the measured part of
+    /// a period, when the 4th field is omitted.
+    pub const DEFAULT_INTERVAL_FACTOR: u64 = 4;
+
+    /// Parse `n:warmup:measure[:interval]`.
+    pub fn parse(s: &str) -> Result<SamplePlan, String> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() != 3 && parts.len() != 4 {
+            return Err(format!("--sample must be n:warmup:measure[:interval], got '{}'", s));
+        }
+        let field = |i: usize, name: &str| -> Result<u64, String> {
+            parts[i].parse::<u64>().map_err(|_| format!("invalid --sample {}: '{}'", name, parts[i]))
+        };
+        let periods = field(0, "period count")?;
+        if periods == 0 || periods > 100_000 {
+            return Err("--sample needs 1..=100000 periods".into());
+        }
+        let warmup = field(1, "warmup length")?;
+        let measure = field(2, "measure length")?;
+        if measure == 0 {
+            return Err("--sample measurement window must be non-empty".into());
+        }
+        let interval = if parts.len() == 4 {
+            let v = field(3, "interval")?;
+            if v == 0 {
+                return Err("--sample fast-forward interval must be non-zero".into());
+            }
+            v
+        } else {
+            warmup.saturating_add(measure).saturating_mul(Self::DEFAULT_INTERVAL_FACTOR)
+        };
+        Ok(SamplePlan { periods: periods as u32, warmup, measure, interval })
+    }
+}
+
+/// One measurement window's results.
+#[derive(Debug, Clone)]
+pub struct SampleRecord {
+    /// Period index (0-based).
+    pub index: u32,
+    /// Instructions retired in the window (summed over harts).
+    pub insts: u64,
+    /// Cycles elapsed in the window (summed over harts).
+    pub cycles: u64,
+    pub cpi: f64,
+    /// Memory-model counters for the window alone (zeroed at warm-up end).
+    pub model_stats: Vec<(&'static str, u64)>,
+}
+
+/// Aggregate results of a sampled run.
+#[derive(Debug, Clone)]
+pub struct SamplingSummary {
+    pub plan: SamplePlan,
+    pub samples: Vec<SampleRecord>,
+    /// Mean of the per-sample CPIs.
+    pub mean_cpi: f64,
+    /// Half-width of the 95% confidence interval of the mean CPI.
+    pub ci95: f64,
+    /// Instructions retired over the whole run (all legs).
+    pub total_insts: u64,
+    pub wall_secs: f64,
+    /// Stage labels for reporting.
+    pub ff_label: String,
+    pub measure_label: String,
+}
+
+impl SamplingSummary {
+    /// Host-side rate over the whole run, guarded like
+    /// [`RunReport::mips`].
+    pub fn mips(&self) -> f64 {
+        if self.wall_secs <= 0.0 || self.total_insts == 0 {
+            return 0.0;
+        }
+        self.total_insts as f64 / self.wall_secs / 1e6
+    }
+
+    /// Text block appended to [`RunReport::summary`].
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "  sampling: {}/{} periods measured, mean CPI {:.4} ± {:.4} (95% CI)\n  plan: warmup={} measure={} interval={} ({} -> {})\n",
+            self.samples.len(),
+            self.plan.periods,
+            self.mean_cpi,
+            self.ci95,
+            self.plan.warmup,
+            self.plan.measure,
+            self.plan.interval,
+            self.ff_label,
+            self.measure_label,
+        );
+        for r in &self.samples {
+            s.push_str(&format!(
+                "    sample {}: insts={} cycles={} cpi={:.4}\n",
+                r.index, r.insts, r.cycles, r.cpi
+            ));
+        }
+        s
+    }
+
+    /// Machine-readable report (`BENCH_sampling.json`). Hand-rolled: the
+    /// crate is dependency-free, and every emitted string is from the
+    /// fixed model/engine vocabulary, so no escaping is needed.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"r2vm-sampling-v1\",\n");
+        s.push_str(&format!("  \"periods\": {},\n", self.plan.periods));
+        s.push_str(&format!("  \"warmup\": {},\n", self.plan.warmup));
+        s.push_str(&format!("  \"measure\": {},\n", self.plan.measure));
+        s.push_str(&format!("  \"interval\": {},\n", self.plan.interval));
+        s.push_str(&format!("  \"fast_forward\": \"{}\",\n", self.ff_label));
+        s.push_str(&format!("  \"measured\": \"{}\",\n", self.measure_label));
+        s.push_str("  \"samples\": [\n");
+        for (i, r) in self.samples.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"index\": {}, \"insts\": {}, \"cycles\": {}, \"cpi\": {:.6}, \"stats\": {{",
+                r.index, r.insts, r.cycles, r.cpi
+            ));
+            for (j, (k, v)) in r.model_stats.iter().enumerate() {
+                if j > 0 {
+                    s.push_str(", ");
+                }
+                s.push_str(&format!("\"{}\": {}", k, v));
+            }
+            s.push_str("}}");
+            if i + 1 < self.samples.len() {
+                s.push(',');
+            }
+            s.push('\n');
+        }
+        s.push_str("  ],\n");
+        s.push_str(&format!("  \"sample_count\": {},\n", self.samples.len()));
+        s.push_str(&format!("  \"mean_cpi\": {:.6},\n", self.mean_cpi));
+        s.push_str(&format!("  \"ci95\": {:.6},\n", self.ci95));
+        s.push_str(&format!("  \"total_insts\": {},\n", self.total_insts));
+        s.push_str(&format!("  \"wall_seconds\": {:.6},\n", self.wall_secs));
+        s.push_str(&format!("  \"mips\": {:.6}\n", self.mips()));
+        s.push_str("}\n");
+        s
+    }
+}
+
+/// Run one leg: `budget` more instructions (in the engine's budget unit)
+/// under `leg`'s configuration, absorbing guest engine-switch requests.
+/// Returns `StepLimit` when the budget is consumed, or the terminal exit.
+/// `respawned` is set when a switch request forced an engine rebuild —
+/// rebuilds drop warmed model state, so a measurement window containing
+/// one is no longer comparable with clean windows.
+fn run_leg(
+    engine: &mut Box<dyn ExecutionEngine>,
+    leg: &SimConfig,
+    budget: u64,
+    acc: &mut EngineStats,
+    respawned: &mut bool,
+) -> ExitReason {
+    let target = engine.budget_progress().saturating_add(budget);
+    loop {
+        let progress = engine.budget_progress();
+        if progress >= target {
+            return ExitReason::StepLimit;
+        }
+        match engine.run(target - progress) {
+            ExitReason::SwitchRequest(_) => {
+                // The sampling driver owns the engine schedule; rebuilding
+                // the leg's own configuration over the guest state drops
+                // the request and continues execution.
+                *respawned = true;
+                acc.merge(&engine.stats());
+                let snapshot = engine.suspend();
+                *engine = resume_engine(leg, snapshot);
+            }
+            ExitReason::StepLimit => {}
+            other => return other,
+        }
+    }
+}
+
+/// Drive a full sampled run of `image` under `cfg` (which must carry a
+/// `--sample` plan). The measured configuration is `cfg`'s `--switch-to`
+/// target; fast-forward always uses the functional-parallel engine.
+pub fn run_sampled(cfg: &SimConfig, image: &Image) -> RunReport {
+    cfg.validate().expect("invalid configuration");
+    let plan = cfg.sample.clone().expect("run_sampled requires a --sample plan");
+    let t0 = Instant::now();
+
+    // Fast-forward leg: parallel/atomic+atomic (Table 2's only parallel-
+    // capable combination).
+    let mut ff = cfg.clone();
+    ff.mode = EngineMode::Parallel;
+    ff.pipeline = "atomic".into();
+    ff.memory = "atomic".into();
+    ff.sample = None;
+    ff.switch_at = None;
+
+    // Measured leg: the --switch-to target (validated non-parallel).
+    let (mode, pipeline, memory) = cfg.switch_target().expect("validated");
+    let mut meas = cfg.clone();
+    meas.mode = mode;
+    meas.pipeline = pipeline;
+    meas.memory = memory;
+    meas.sample = None;
+    meas.switch_at = None;
+
+    let mut acc_stats = EngineStats::default();
+    let mut engine = build_engine(&ff, image);
+    let mut samples: Vec<SampleRecord> = Vec::new();
+    let mut terminal: Option<ExitReason> = None;
+
+    // Remaining global instruction budget (`--max-insts`), in the current
+    // engine's budget unit. The schedule must honour it leg by leg, not
+    // only in the tail.
+    let remaining =
+        |engine: &Box<dyn ExecutionEngine>| cfg.max_insts.saturating_sub(engine.budget_progress());
+
+    'periods: for k in 0..plan.periods {
+        // 1. Fast-forward between samples.
+        let left = remaining(&engine);
+        let mut respawned = false;
+        match run_leg(&mut engine, &ff, plan.interval.min(left), &mut acc_stats, &mut respawned) {
+            ExitReason::StepLimit => {}
+            other => {
+                terminal = Some(other);
+                break 'periods;
+            }
+        }
+        if remaining(&engine) == 0 {
+            terminal = Some(ExitReason::StepLimit);
+            break 'periods;
+        }
+        // 2. Hand off to the measured configuration and warm up; the new
+        // engine's simulated caches/TLBs start cold by construction.
+        acc_stats.merge(&engine.stats());
+        engine = resume_engine(&meas, engine.suspend());
+        let left = remaining(&engine);
+        let mut respawned = false;
+        let warm =
+            run_leg(&mut engine, &meas, plan.warmup.min(left), &mut acc_stats, &mut respawned);
+        if !matches!(warm, ExitReason::StepLimit) {
+            terminal = Some(warm);
+            break 'periods;
+        }
+        if remaining(&engine) == 0 {
+            terminal = Some(ExitReason::StepLimit);
+            break 'periods;
+        }
+        // 3. Measure with warm state and freshly zeroed counters. Windows
+        // that are not comparable with clean full ones — truncated by a
+        // guest exit or the --max-insts budget, or perturbed by a guest
+        // engine-switch respawn — are not recorded.
+        engine.reset_model_stats();
+        let full_window = remaining(&engine) >= plan.measure;
+        let (c0, i0) = hart_totals(engine.as_ref());
+        let mut respawned = false;
+        let measured = run_leg(
+            &mut engine,
+            &meas,
+            plan.measure.min(remaining(&engine)),
+            &mut acc_stats,
+            &mut respawned,
+        );
+        let (c1, i1) = hart_totals(engine.as_ref());
+        if matches!(measured, ExitReason::StepLimit) && full_window && !respawned && i1 > i0 {
+            samples.push(SampleRecord {
+                index: k,
+                insts: i1 - i0,
+                cycles: c1 - c0,
+                cpi: (c1 - c0) as f64 / (i1 - i0) as f64,
+                model_stats: engine.model_stats(),
+            });
+        }
+        if !matches!(measured, ExitReason::StepLimit) {
+            terminal = Some(measured);
+            break 'periods;
+        }
+        if remaining(&engine) == 0 {
+            terminal = Some(ExitReason::StepLimit);
+            break 'periods;
+        }
+        // Back to the fast-forward engine for the next period.
+        acc_stats.merge(&engine.stats());
+        engine = resume_engine(&ff, engine.suspend());
+    }
+
+    // Sampling done: complete the rest of the workload at functional
+    // speed (still bounded by --max-insts).
+    let exit = match terminal {
+        Some(e) => e,
+        None => {
+            let left = remaining(&engine);
+            let mut respawned = false;
+            run_leg(&mut engine, &ff, left, &mut acc_stats, &mut respawned)
+        }
+    };
+
+    acc_stats.merge(&engine.stats());
+    let wall = t0.elapsed();
+    let cpis: Vec<f64> = samples.iter().map(|s| s.cpi).collect();
+    let summary = SamplingSummary {
+        mean_cpi: stats::mean(&cpis),
+        ci95: stats::ci95_half_width(&cpis),
+        total_insts: engine.total_instret(),
+        wall_secs: wall.as_secs_f64(),
+        ff_label: stage_label(&ff),
+        measure_label: stage_label(&meas),
+        plan,
+        samples,
+    };
+    RunReport {
+        exit,
+        wall,
+        total_insts: engine.total_instret(),
+        per_hart: engine.per_hart(),
+        console: engine.console(),
+        model_stats: summary
+            .samples
+            .last()
+            .map(|s| s.model_stats.clone())
+            .unwrap_or_default(),
+        engine_stats: Some(acc_stats),
+        stages: vec![summary.ff_label.clone(), summary.measure_label.clone()],
+        stage_reports: Vec::new(),
+        sampling: Some(summary),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_parse_and_defaults() {
+        let p = SamplePlan::parse("8:50000:200000").unwrap();
+        assert_eq!(p, SamplePlan { periods: 8, warmup: 50_000, measure: 200_000, interval: 1_000_000 });
+        let p = SamplePlan::parse("4:0:1000:5000").unwrap();
+        assert_eq!(p.warmup, 0);
+        assert_eq!(p.interval, 5_000);
+        assert!(SamplePlan::parse("8:50000").is_err(), "missing field");
+        assert!(SamplePlan::parse("0:1:1").is_err(), "zero periods");
+        assert!(SamplePlan::parse("2:1:0").is_err(), "empty measure window");
+        assert!(SamplePlan::parse("2:1:1:0").is_err(), "zero interval");
+        assert!(SamplePlan::parse("two:1:1").is_err());
+    }
+
+    #[test]
+    fn json_shape() {
+        let summary = SamplingSummary {
+            plan: SamplePlan { periods: 2, warmup: 10, measure: 20, interval: 120 },
+            samples: vec![
+                SampleRecord {
+                    index: 0,
+                    insts: 20,
+                    cycles: 30,
+                    cpi: 1.5,
+                    model_stats: vec![("l1d_hits", 7)],
+                },
+                SampleRecord { index: 1, insts: 20, cycles: 20, cpi: 1.0, model_stats: vec![] },
+            ],
+            mean_cpi: 1.25,
+            ci95: 0.1,
+            total_insts: 1000,
+            wall_secs: 0.5,
+            ff_label: "parallel/atomic+atomic".into(),
+            measure_label: "lockstep/inorder+mesi".into(),
+        };
+        let json = summary.to_json();
+        assert!(json.contains("\"schema\": \"r2vm-sampling-v1\""));
+        assert!(json.contains("\"mean_cpi\": 1.250000"));
+        assert!(json.contains("\"l1d_hits\": 7"));
+        assert!(json.contains("\"sample_count\": 2"));
+        assert!(json.contains("\"mips\": 0.002000"));
+        // Crude structural checks (no JSON parser offline): balanced
+        // braces/brackets, no trailing comma before a closing bracket.
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+        assert!(!json.contains(",\n  ]"));
+        assert!(!json.contains(",}"));
+    }
+
+    #[test]
+    fn summary_mips_guarded() {
+        let summary = SamplingSummary {
+            plan: SamplePlan { periods: 1, warmup: 0, measure: 1, interval: 1 },
+            samples: Vec::new(),
+            mean_cpi: 0.0,
+            ci95: 0.0,
+            total_insts: 0,
+            wall_secs: 0.0,
+            ff_label: String::new(),
+            measure_label: String::new(),
+        };
+        assert_eq!(summary.mips(), 0.0);
+    }
+}

@@ -1,0 +1,86 @@
+//! Small-sample statistics for the sampling driver: mean, sample standard
+//! deviation, and the two-sided 95% confidence interval via Student's t
+//! (SMARTS reports sampled CPI as mean ± CI; with the handful of periods a
+//! sampled run uses, the normal-approximation z=1.96 would understate the
+//! interval, so the exact t quantiles are tabulated for small df).
+
+/// Arithmetic mean; 0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator); 0 when n < 2.
+pub fn sample_std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64;
+    var.sqrt()
+}
+
+/// 0.975 quantile of Student's t with `df` degrees of freedom (the
+/// two-sided 95% critical value). Tabulated for df 1..=30; beyond that the
+/// normal value 1.96 is within 1.5% and is used directly.
+pub fn student_t_975(df: usize) -> f64 {
+    const TABLE: [f64; 30] = [
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228, 2.201, 2.179,
+        2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086, 2.080, 2.074, 2.069, 2.064,
+        2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+    ];
+    match df {
+        0 => f64::INFINITY,
+        1..=30 => TABLE[df - 1],
+        _ => 1.96,
+    }
+}
+
+/// Half-width of the 95% confidence interval of the mean: t_{.975,n-1} *
+/// s / sqrt(n). Zero when fewer than two samples exist (a single sample
+/// has no estimable variance; callers report the point estimate alone).
+pub fn ci95_half_width(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    student_t_975(xs.len() - 1) * sample_std(xs) / (xs.len() as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        assert_eq!(sample_std(&[5.0]), 0.0);
+        // Known case: {2, 4, 4, 4, 5, 5, 7, 9} has sample variance 32/7.
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((sample_std(&xs) - (32.0f64 / 7.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn t_table_edges() {
+        assert_eq!(student_t_975(1), 12.706);
+        assert_eq!(student_t_975(7), 2.365);
+        assert_eq!(student_t_975(30), 2.042);
+        assert_eq!(student_t_975(1000), 1.96);
+        assert!(student_t_975(0).is_infinite());
+    }
+
+    #[test]
+    fn ci_shrinks_with_n_and_vanishes_without_variance() {
+        assert_eq!(ci95_half_width(&[1.0]), 0.0);
+        assert_eq!(ci95_half_width(&[3.0, 3.0, 3.0, 3.0]), 0.0);
+        let narrow = ci95_half_width(&[1.0, 1.1, 0.9, 1.0, 1.05, 0.95, 1.0, 1.0]);
+        let wide = ci95_half_width(&[1.0, 2.0, 0.5, 1.5]);
+        assert!(narrow > 0.0 && wide > narrow);
+        // The CI must bracket the true mean for an exact-mean sample set.
+        let xs = [0.9, 1.1, 1.0, 1.0];
+        let (m, ci) = (mean(&xs), ci95_half_width(&xs));
+        assert!(m - ci <= 1.0 && 1.0 <= m + ci);
+    }
+}

@@ -46,7 +46,9 @@ impl SideEffects {
     }
 }
 
-/// One simulated hardware thread.
+/// One simulated hardware thread. `Clone` is derived so checkpointing can
+/// serialize a snapshot's hart vector without consuming it.
+#[derive(Clone)]
 pub struct Hart {
     pub id: usize,
     pub regs: [u64; 32],

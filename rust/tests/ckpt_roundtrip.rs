@@ -1,0 +1,224 @@
+//! Checkpoint/restore round-trip equivalence: running N instructions,
+//! serializing the guest to disk, deserializing into a fresh
+//! process-like context (new DRAM allocation, new engine, cold
+//! acceleration state) and continuing must be indistinguishable — in
+//! registers, CSRs, device state, and subsequent retirement — from a run
+//! that was never interrupted.
+
+use r2vm::asm::*;
+use r2vm::ckpt::Checkpoint;
+use r2vm::coordinator::{run_image, run_restored, SimConfig};
+use r2vm::engine::{ExecutionEngine, ExitReason};
+use r2vm::fiber::FiberEngine;
+use r2vm::mem::DRAM_BASE;
+use r2vm::sys::loader::load_flat;
+use r2vm::sys::System;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("r2vm-roundtrip-{}-{}", std::process::id(), name));
+    p
+}
+
+/// Deterministic workload with rich observable state: programs the CLINT
+/// timer, prints over the UART via SBI, fills a buffer, then checksums it
+/// and exits with the checksum.
+fn workload() -> Image {
+    let words: i64 = 600;
+    let mut a = Assembler::new(DRAM_BASE);
+    let scratch = a.new_label();
+    // mtimecmp[0] = 0x123456 via CLINT MMIO (device state the checkpoint
+    // must carry; far enough out to never actually fire).
+    a.li(T0, (r2vm::sys::dev::CLINT_BASE + 0x4000) as i64);
+    a.li(T1, 0x123456);
+    a.sd(T1, T0, 0);
+    // Console marker before the checkpoint region.
+    a.li(A0, b'A' as i64);
+    a.li(A7, 1); // SBI putchar
+    a.ecall();
+    // Fill phase.
+    a.la(S0, scratch);
+    a.li(T0, words);
+    let fill = a.here();
+    a.sd(T0, S0, 0);
+    a.addi(S0, S0, 8);
+    a.addi(T0, T0, -1);
+    a.bnez(T0, fill);
+    // Console marker after the fill.
+    a.li(A0, b'B' as i64);
+    a.li(A7, 1);
+    a.ecall();
+    // Checksum phase.
+    a.la(S0, scratch);
+    a.li(T0, words);
+    a.li(S1, 0);
+    let sum = a.here();
+    a.ld(T2, S0, 0);
+    a.add(S1, S1, T2);
+    a.addi(S0, S0, 8);
+    a.addi(T0, T0, -1);
+    a.bnez(T0, sum);
+    a.mv(A0, S1);
+    a.li(A7, 93);
+    a.ecall();
+    a.align(64);
+    a.bind(scratch);
+    a.zero_fill(words as usize * 8 + 64);
+    a.finish()
+}
+
+const CHECKSUM: u64 = 600 * 601 / 2;
+
+fn fresh_engine(img: &Image, harts: usize, pipeline: &str) -> FiberEngine {
+    let sys = System::new(harts, 4 << 20);
+    let mut eng = FiberEngine::new(sys, pipeline);
+    let entry = load_flat(&eng.sys, img);
+    eng.set_entry(entry);
+    eng
+}
+
+#[test]
+fn ckpt_restore_matches_unbroken_run() {
+    let img = workload();
+
+    // Reference: one uninterrupted lockstep run.
+    let mut whole = fresh_engine(&img, 1, "inorder");
+    assert_eq!(whole.run(u64::MAX), ExitReason::Exited(CHECKSUM));
+    let snap_whole = ExecutionEngine::suspend(&mut whole);
+
+    // Interrupted: run N instructions, checkpoint to disk, drop everything.
+    let path = tmp("mid");
+    {
+        let mut first = fresh_engine(&img, 1, "inorder");
+        assert_eq!(first.run(900), ExitReason::StepLimit);
+        let snap = ExecutionEngine::suspend(&mut first);
+        Checkpoint::from_snapshot(&snap).save(&path).unwrap();
+    }
+
+    // Restore into a fresh context and inspect the carried state.
+    let ckpt = Checkpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(ckpt.num_harts(), 1);
+    assert!(ckpt.total_instret() >= 900);
+    assert_eq!(ckpt.mtimecmp[0], 0x123456, "CLINT state must be checkpointed");
+    assert_eq!(ckpt.console, b"A", "pre-checkpoint console output is carried");
+    assert_eq!(ckpt.exit, None);
+
+    // Continue to completion and compare every architectural observable.
+    let snapshot = ckpt.into_snapshot();
+    let sys2 = System::with_shared_phys(
+        1,
+        Arc::clone(&snapshot.phys),
+        Box::new(r2vm::mem::AtomicModel),
+    );
+    let mut second = FiberEngine::new(sys2, "inorder");
+    ExecutionEngine::resume(&mut second, snapshot);
+    assert_eq!(second.run(u64::MAX), ExitReason::Exited(CHECKSUM));
+    let snap_resumed = ExecutionEngine::suspend(&mut second);
+
+    assert_eq!(snap_resumed.console, snap_whole.console, "console: {:?}", snap_resumed.console);
+    assert_eq!(snap_resumed.mtimecmp, snap_whole.mtimecmp);
+    assert_eq!(snap_resumed.msip, snap_whole.msip);
+    assert_eq!(snap_resumed.exit, snap_whole.exit);
+    for (ha, hb) in snap_whole.harts.iter().zip(snap_resumed.harts.iter()) {
+        assert_eq!(ha.regs, hb.regs, "bit-identical register file");
+        assert_eq!(ha.pc, hb.pc);
+        assert_eq!(ha.prv, hb.prv);
+        assert_eq!(ha.instret, hb.instret, "instret-for-M-instructions must match");
+        assert_eq!(ha.cycle, hb.cycle, "inorder+atomic timing is checkpoint-neutral");
+        assert_eq!(ha.mstatus, hb.mstatus);
+        assert_eq!(ha.mtvec, hb.mtvec);
+        assert_eq!(ha.mepc, hb.mepc);
+        assert_eq!(ha.mcause, hb.mcause);
+        assert_eq!(ha.satp, hb.satp);
+        assert_eq!(ha.mie, hb.mie);
+        assert_eq!(ha.mscratch, hb.mscratch);
+    }
+}
+
+#[test]
+fn coordinator_ckpt_out_restore_pair() {
+    // The CLI-level workflow from the acceptance criteria: a
+    // --ckpt-out/--restore pair reproduces bit-identical guest register
+    // state versus an unbroken run.
+    let img = workload();
+    let mut cfg = SimConfig::default();
+    cfg.pipeline = "inorder".into();
+    let unbroken = run_image(&cfg, &img);
+    assert_eq!(unbroken.exit, ExitReason::Exited(CHECKSUM));
+
+    // Bounded run writes its end state to the checkpoint.
+    let path = tmp("pair").to_string_lossy().into_owned();
+    let mut bounded = cfg.clone();
+    bounded.max_insts = 1_200;
+    bounded.ckpt_out = Some(path.clone());
+    let partial = run_image(&bounded, &img);
+    assert_eq!(partial.exit, ExitReason::StepLimit);
+
+    // Restore and finish.
+    let ckpt = Checkpoint::load(std::path::Path::new(&path)).unwrap();
+    std::fs::remove_file(&path).ok();
+    let resumed = run_restored(&cfg, ckpt);
+    assert_eq!(resumed.exit, ExitReason::Exited(CHECKSUM));
+    assert_eq!(resumed.per_hart, unbroken.per_hart, "cycle/instret identical at exit");
+    assert_eq!(resumed.console, unbroken.console);
+}
+
+#[test]
+fn multi_hart_checkpoint_carries_every_hart() {
+    // Two harts cooperate through an AMO counter; checkpoint mid-run under
+    // the interpreter, restore under the interpreter, and the final result
+    // must be unchanged.
+    let harts = 2u64;
+    let mut a = Assembler::new(DRAM_BASE);
+    let counter = a.new_label();
+    let done = a.new_label();
+    a.la(T1, counter);
+    a.li(T2, 800);
+    let loop_ = a.here();
+    a.li(T0, 1);
+    a.amoadd_w(ZERO, T0, T1);
+    a.addi(T2, T2, -1);
+    a.bnez(T2, loop_);
+    a.la(T3, done);
+    a.li(T4, 1);
+    a.amoadd_w(ZERO, T4, T3);
+    a.csrr(T0, r2vm::isa::csr::CSR_MHARTID);
+    let park = a.here();
+    a.bnez(T0, park);
+    let wait = a.here();
+    a.lw(T4, T3, 0);
+    a.slti(T5, T4, harts as i64);
+    a.bnez(T5, wait);
+    a.lw(A0, T1, 0);
+    a.li(A7, 93);
+    a.ecall();
+    a.align(8);
+    a.bind(counter);
+    a.d32(0);
+    a.bind(done);
+    a.d32(0);
+    let img = a.finish();
+
+    let mut cfg = SimConfig::default();
+    cfg.harts = harts as usize;
+    cfg.set("mode", "interp").unwrap();
+
+    let path = tmp("mh").to_string_lossy().into_owned();
+    let mut bounded = cfg.clone();
+    bounded.max_insts = 1_000;
+    bounded.ckpt_out = Some(path.clone());
+    assert_eq!(run_image(&bounded, &img).exit, ExitReason::StepLimit);
+
+    let ckpt = Checkpoint::load(std::path::Path::new(&path)).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(ckpt.num_harts(), 2);
+    // run_restored takes the hart count from the file even if cfg says 1.
+    let mut restore_cfg = cfg.clone();
+    restore_cfg.harts = 1;
+    let resumed = run_restored(&restore_cfg, ckpt);
+    assert_eq!(resumed.exit, ExitReason::Exited(harts * 800));
+    assert_eq!(resumed.per_hart.len(), 2);
+}

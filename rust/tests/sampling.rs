@@ -1,0 +1,125 @@
+//! Sampled-simulation math: on a deterministic synthetic workload whose
+//! full-lockstep CPI is known exactly, the sampled estimate's 95%
+//! confidence interval must bracket the true value; and the sampled run
+//! must execute the complete workload (same exit code / console as an
+//! ordinary run).
+
+use r2vm::asm::*;
+use r2vm::coordinator::{run_image, run_sampled, SimConfig};
+use r2vm::engine::ExitReason;
+use r2vm::mem::DRAM_BASE;
+
+/// A long, uniform countdown loop: under `lockstep/simple+atomic` every
+/// instruction is exactly one cycle (the paper's E2 validation invariant),
+/// so the true CPI is 1.0 with zero variance.
+fn uniform_loop(n: i64) -> Image {
+    let mut a = Assembler::new(DRAM_BASE);
+    a.li(A0, n);
+    a.li(A1, 0);
+    let top = a.here();
+    a.add(A1, A1, A0);
+    a.addi(A0, A0, -1);
+    a.bnez(A0, top);
+    a.mv(A0, A1);
+    a.li(A7, 93);
+    a.ecall();
+    a.finish()
+}
+
+#[test]
+fn sampled_ci_brackets_known_cpi() {
+    // ~600k instructions total; 4 periods of (2k ff + 500 warm + 2k
+    // measure) sample a fraction of it.
+    let n = 200_000i64;
+    let img = uniform_loop(n);
+
+    // Reference: full lockstep run under the measured configuration.
+    let mut full = SimConfig::default();
+    full.pipeline = "simple".into();
+    let r = run_image(&full, &img);
+    assert_eq!(r.exit, ExitReason::Exited(n as u64 * (n as u64 + 1) / 2));
+    let (cycles, insts) = r.per_hart[0];
+    let true_cpi = cycles as f64 / insts as f64;
+    assert!((true_cpi - 1.0).abs() < 1e-9, "simple+atomic is CPI=1 by construction");
+
+    // Sampled estimate, measured under the same configuration.
+    let mut cfg = SimConfig::default();
+    cfg.set("sample", "4:500:2000:2000").unwrap();
+    cfg.set("switch-to", "lockstep:simple:atomic").unwrap();
+    let report = run_sampled(&cfg, &img);
+    let sampling = report.sampling.as_ref().expect("sampled run carries a summary");
+
+    assert_eq!(sampling.samples.len(), 4, "all periods measured");
+    for s in &sampling.samples {
+        assert!(s.insts >= 2_000, "window covered its budget: {}", s.insts);
+        assert!((s.cpi - 1.0).abs() < 1e-9, "uniform workload: every window is CPI=1");
+    }
+    let (mean, ci) = (sampling.mean_cpi, sampling.ci95);
+    assert!(
+        mean - ci - 1e-9 <= true_cpi && true_cpi <= mean + ci + 1e-9,
+        "CI [{} ± {}] must bracket the true CPI {}",
+        mean,
+        ci,
+        true_cpi
+    );
+
+    // The sampled run still executes the whole workload.
+    assert_eq!(report.exit, r.exit, "sampled run completes the program");
+    assert!(report.total_insts >= r.total_insts, "nothing skipped");
+}
+
+#[test]
+fn sampled_run_with_timing_models_reports_windows() {
+    // Under inorder+cache the per-window CPI exceeds 1 and the measure
+    // windows carry cache counters that were zeroed after warm-up.
+    let img = uniform_loop(100_000);
+    let mut cfg = SimConfig::default();
+    cfg.set("sample", "3:1000:3000:5000").unwrap();
+    cfg.set("switch-to", "lockstep:inorder:cache").unwrap();
+    let report = run_sampled(&cfg, &img);
+    let sampling = report.sampling.as_ref().unwrap();
+    assert_eq!(sampling.samples.len(), 3);
+    for s in &sampling.samples {
+        assert!(s.cpi > 1.0, "inorder charges hazards: cpi={}", s.cpi);
+        let accesses = s
+            .model_stats
+            .iter()
+            .find(|(k, _)| *k == "dcache_cold_accesses")
+            .map(|&(_, v)| v)
+            .unwrap_or(0);
+        // The loop body is register-only, so the D-side is nearly silent,
+        // but the counters must exist and be window-scoped (tiny), not
+        // cumulative since boot.
+        assert!(accesses < 10_000, "stats must be window-scoped, got {}", accesses);
+    }
+    assert!(sampling.mean_cpi > 1.0);
+    let json = sampling.to_json();
+    assert!(json.contains("\"sample_count\": 3"));
+    assert!(json.contains("\"measured\": \"lockstep/inorder+cache\""));
+
+    // Sampled runs surface their stage labels in the report.
+    assert_eq!(report.stages[0], "parallel/atomic+atomic");
+    assert_eq!(report.stages[1], "lockstep/inorder+cache");
+    assert!(report.summary().contains("mean CPI"));
+}
+
+#[test]
+fn workload_exiting_mid_sampling_is_handled() {
+    // The guest exits partway through the sampling schedule: the samples
+    // measured so far are kept (a truncated window is dropped) and the
+    // exit code is preserved.
+    let img = uniform_loop(2_000); // ~6k instructions
+    let mut cfg = SimConfig::default();
+    cfg.set("sample", "8:200:1000:2000").unwrap();
+    cfg.set("switch-to", "lockstep:simple:atomic").unwrap();
+    let report = run_sampled(&cfg, &img);
+    assert!(matches!(report.exit, ExitReason::Exited(_)));
+    let sampling = report.sampling.as_ref().unwrap();
+    assert!(
+        !sampling.samples.is_empty() && sampling.samples.len() < 8,
+        "short workload yields a truncated sample set: {}",
+        sampling.samples.len()
+    );
+    // Aggregates stay finite with a small sample count.
+    assert!(sampling.mean_cpi.is_finite() && sampling.ci95.is_finite());
+}
