@@ -1,0 +1,762 @@
+//! Seeded, deterministic RV64IMAC guest-program generator.
+//!
+//! Programs are generated as a *structured* [`TestProgram`] — a list of
+//! basic blocks with explicit terminators — rather than raw bytes, so that
+//! (a) termination is guaranteed by construction (control flow only goes
+//! forward, except bounded counted loops), and (b) the shrinker
+//! (`crate::difftest::shrink_program`) can remove blocks and instructions
+//! while keeping the program well-formed.
+//!
+//! The generated body exercises: 64/32-bit ALU ops, multiply/divide
+//! (including divide-by-zero and overflow operands), compressed encodings
+//! (emitted as raw 16-bit words through `isa::encode`'s C-extension
+//! helpers), loads/stores of every width with deliberate aliasing inside a
+//! small hot window, AMOs and LR/SC pairs, CSR reads/writes, SBI console
+//! ecalls, forward conditional branches, direct and indirect jumps, counted
+//! back-edges, and blocks deliberately placed to straddle 4 KiB page
+//! boundaries (stressing the DBT's cross-page translation guard).
+//!
+//! ## Register discipline
+//!
+//! The comparison in the differential driver covers the *entire* register
+//! file, so every register must end a run with an engine-independent value:
+//!
+//! * pool registers (`a0-a5`, `t0-t2`, `s2-s4`) — free for body items;
+//! * `s0` — private-scratch base (`scratch + mhartid * PRIV_BYTES`);
+//! * `sp` — second private window (`s0 + 1024`) for SP-relative compressed
+//!   forms;
+//! * `s1` — counted-loop register (0 outside loop bodies);
+//! * `t3-t6`, `ra`, `gp` — harness scratch, reset to engine-independent
+//!   values before exit;
+//! * everything else is never written.
+//!
+//! Multi-hart programs run the same body on every hart over disjoint
+//! private windows (so per-hart register files stay schedule-independent),
+//! then contend on a shared LR/SC spinlock + AMO counters; any register
+//! that could carry a schedule-dependent value is zeroed before the exit
+//! barrier.
+
+use crate::asm::{
+    Assembler, Image, A0, A1, A2, A3, A4, A5, A7, GP, RA, S0, S1, S2, S3, S4, SP, T0, T1, T2, T3,
+    T4, T5, T6, ZERO,
+};
+use crate::isa::csr::{CSR_INSTRET, CSR_MHARTID, CSR_MSCRATCH, CSR_MTVAL, CSR_MTVEC, CSR_SSCRATCH};
+use crate::isa::encode;
+use crate::isa::op::*;
+use crate::prop::Rng;
+
+/// Per-hart private scratch stride: 1 KiB addressed off `s0` plus 1 KiB
+/// addressed off `sp`.
+pub const PRIV_BYTES: u64 = 2048;
+const PRIV_SHIFT: i32 = 11;
+const SP_WINDOW_OFF: i32 = 1024;
+/// Hot window (bytes) for s0-relative accesses — small so that accesses of
+/// different widths alias the same bytes often.
+const HOT_WINDOW: u64 = 96;
+
+/// Registers the body may freely overwrite.
+pub const POOL: &[u8] = &[A0, A1, A2, A3, A4, A5, T0, T1, T2, S2, S3, S4];
+/// Compressed-form destination registers (must be x8-x15 *and* in POOL).
+const CPOOL: &[u8] = &[A0, A1, A2, A3, A4, A5];
+/// Registers the body may read but not write.
+const READ_EXTRA: &[u8] = &[S0, ZERO];
+
+/// One straight-line body instruction (or short fixed sequence).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Item {
+    /// A 32-bit base-ISA instruction with fixed operands (no control flow;
+    /// loads/stores address `off(s0)`).
+    Op(Op),
+    /// A raw compressed encoding (SP-relative forms address the `sp`
+    /// window, others `s0`/registers).
+    C(u16),
+    /// `addi t3, s0, off` + the AMO on `(t3)`.
+    Amo { op: AmoOp, wide: bool, rd: u8, rs2: u8, off: i32 },
+    /// `addi t3, s0, off` + `lr` + immediately-succeeding `sc`.
+    LrSc { wide: bool, rd_lr: u8, rd_sc: u8, rs2: u8, off: i32 },
+    /// SBI console putchar: `li a7, 1; li a0, ch; ecall`.
+    Putchar(u8),
+}
+
+impl Item {
+    /// Number of guest instructions this item expands to (shrink-report
+    /// accounting).
+    pub fn insts(&self) -> usize {
+        match self {
+            Item::Op(_) | Item::C(_) => 1,
+            Item::Amo { .. } => 2,
+            Item::LrSc { .. } => 3,
+            Item::Putchar(_) => 3,
+        }
+    }
+}
+
+/// How a block ends. Every terminator compiles to *explicit* control flow
+/// (no implicit fall-through), so blocks can be freely reordered/removed
+/// and padding can be inserted between them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Term {
+    /// `j next`
+    Next,
+    /// `bCC rs1, rs2, blocks[target]` (forward; clamped to the epilogue),
+    /// else `j next`.
+    Skip { cond: BrCond, rs1: u8, rs2: u8, target: usize },
+    /// `li s1, count` before the body; `addi s1, s1, -1; bnez s1, top;
+    /// j next` after it.
+    Loop { count: u8 },
+    /// `la t4, next; jr t4` — exercises indirect-jump chaining.
+    IndirectNext,
+}
+
+/// A generated basic block.
+#[derive(Debug, Clone)]
+pub struct Block {
+    /// When `Some(k)`, pad with zero bytes until the block starts `k`
+    /// bytes *before* a 4 KiB page boundary (k even, small), so its first
+    /// instructions straddle the boundary.
+    pub page_pad: Option<u32>,
+    pub items: Vec<Item>,
+    pub term: Term,
+}
+
+/// A complete generated guest program.
+#[derive(Debug, Clone)]
+pub struct TestProgram {
+    pub seed: u64,
+    pub harts: usize,
+    /// Initial values materialised into the pool registers.
+    pub reg_seed: Vec<(u8, u64)>,
+    pub blocks: Vec<Block>,
+    /// Shared-memory contention rounds per hart (multi-hart only).
+    pub contention_rounds: u32,
+}
+
+/// Deliberate mis-assembly used to validate that the differential harness
+/// actually catches divergence (the engines run the sabotaged image, the
+/// reference simulator runs the clean one).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BugInjection {
+    None,
+    /// Emit every body `xor`/`xori` as `or`/`ori` — models a DBT/decoder
+    /// mismatch on one opcode.
+    XorBecomesOr,
+}
+
+/// Layout facts the differential driver needs for memory comparison.
+pub struct Assembled {
+    pub image: Image,
+    /// Base physical address of the shared cells (lock / counter / AMO
+    /// counter / done flag — 32 bytes).
+    pub shared: u64,
+    /// Base physical address of the private scratch windows.
+    pub scratch: u64,
+    /// Total scratch length (`harts * PRIV_BYTES`).
+    pub scratch_len: usize,
+}
+
+// ---------------------------------------------------------------------------
+// Generation
+// ---------------------------------------------------------------------------
+
+fn pick_reg(r: &mut Rng) -> u8 {
+    *r.pick(POOL)
+}
+
+fn pick_read_reg(r: &mut Rng) -> u8 {
+    if r.below(8) == 0 {
+        *r.pick(READ_EXTRA)
+    } else {
+        pick_reg(r)
+    }
+}
+
+/// Aligned offset inside the hot window for a `width`-byte access.
+fn hot_off(r: &mut Rng, width: u64) -> i32 {
+    (width * r.below(HOT_WINDOW / width)) as i32
+}
+
+fn gen_alu(r: &mut Rng) -> Item {
+    let rd = pick_reg(r);
+    let rs1 = pick_read_reg(r);
+    let rs2 = pick_read_reg(r);
+    match r.below(4) {
+        0 => {
+            // register-register ALU
+            let op = *r.pick(&[
+                AluOp::Add,
+                AluOp::Sub,
+                AluOp::Sll,
+                AluOp::Slt,
+                AluOp::Sltu,
+                AluOp::Xor,
+                AluOp::Srl,
+                AluOp::Sra,
+                AluOp::Or,
+                AluOp::And,
+            ]);
+            let word = matches!(op, AluOp::Add | AluOp::Sub | AluOp::Sll | AluOp::Srl | AluOp::Sra)
+                && r.bool();
+            Item::Op(Op::Alu { op, word, rd, rs1, rs2 })
+        }
+        1 => {
+            // immediate ALU (no Sub immediate form)
+            let op = *r.pick(&[
+                AluOp::Add,
+                AluOp::Slt,
+                AluOp::Sltu,
+                AluOp::Xor,
+                AluOp::Or,
+                AluOp::And,
+                AluOp::Sll,
+                AluOp::Srl,
+                AluOp::Sra,
+            ]);
+            let word = matches!(op, AluOp::Add | AluOp::Sll | AluOp::Srl | AluOp::Sra) && r.bool();
+            let imm = match op {
+                AluOp::Sll | AluOp::Srl | AluOp::Sra => {
+                    if word {
+                        r.below(32) as i32
+                    } else {
+                        r.below(64) as i32
+                    }
+                }
+                _ => r.range_i64(-2048, 2047) as i32,
+            };
+            Item::Op(Op::AluImm { op, word, rd, rs1, imm })
+        }
+        2 => {
+            // M extension, including div/rem by (possibly) zero
+            let op = *r.pick(&[
+                MulOp::Mul,
+                MulOp::Mulh,
+                MulOp::Mulhsu,
+                MulOp::Mulhu,
+                MulOp::Div,
+                MulOp::Divu,
+                MulOp::Rem,
+                MulOp::Remu,
+            ]);
+            let word = matches!(op, MulOp::Mul | MulOp::Div | MulOp::Divu | MulOp::Rem | MulOp::Remu)
+                && r.bool();
+            Item::Op(Op::Mul { op, word, rd, rs1, rs2 })
+        }
+        _ => Item::Op(Op::Lui { rd, imm: ((r.range_i64(-(1 << 19), (1 << 19) - 1) as i32) << 12) }),
+    }
+}
+
+fn gen_mem(r: &mut Rng) -> Item {
+    let widths = [MemWidth::B, MemWidth::H, MemWidth::W, MemWidth::D];
+    let width = *r.pick(&widths);
+    let off = hot_off(r, width.bytes());
+    if r.bool() {
+        let signed = width == MemWidth::D || r.bool();
+        Item::Op(Op::Load { width, signed, rd: pick_reg(r), rs1: S0, imm: off })
+    } else {
+        Item::Op(Op::Store { width, rs1: S0, rs2: pick_read_reg(r), imm: off })
+    }
+}
+
+fn gen_compressed(r: &mut Rng) -> Item {
+    let crd = *r.pick(CPOOL);
+    let crs2 = *r.pick(&[A0, A1, A2, A3, A4, A5, S0, S1]);
+    let rd = pick_reg(r);
+    let imm6 = r.range_i64(-32, 31) as i32;
+    let enc = match r.below(12) {
+        0 => encode::c_addi(rd, imm6),
+        1 => encode::c_addiw(rd, imm6),
+        2 => encode::c_li(rd, imm6),
+        3 => {
+            let nz = if imm6 == 0 { 1 } else { imm6 };
+            encode::c_lui(crd, nz)
+        }
+        4 => encode::c_andi(crd, imm6),
+        5 => match r.below(3) {
+            0 => encode::c_srli(crd, r.below(63) as u32 + 1),
+            1 => encode::c_srai(crd, r.below(63) as u32 + 1),
+            _ => encode::c_slli(rd, r.below(63) as u32 + 1),
+        },
+        6 => match r.below(6) {
+            0 => encode::c_sub(crd, crs2),
+            1 => encode::c_xor(crd, crs2),
+            2 => encode::c_or(crd, crs2),
+            3 => encode::c_and(crd, crs2),
+            4 => encode::c_subw(crd, crs2),
+            _ => encode::c_addw(crd, crs2),
+        },
+        7 => {
+            if r.bool() {
+                encode::c_mv(rd, crs2.max(1))
+            } else {
+                encode::c_add(rd, crs2.max(1))
+            }
+        }
+        8 => {
+            // s0-relative compressed load
+            if r.bool() {
+                encode::c_lw(crd, S0, hot_off(r, 4) as u32)
+            } else {
+                encode::c_ld(crd, S0, hot_off(r, 8) as u32)
+            }
+        }
+        9 => {
+            // s0-relative compressed store
+            if r.bool() {
+                encode::c_sw(crs2, S0, hot_off(r, 4) as u32)
+            } else {
+                encode::c_sd(crs2, S0, hot_off(r, 8) as u32)
+            }
+        }
+        10 => {
+            // sp-relative (second private window)
+            let imm4 = (4 * r.below(24)) as u32;
+            let imm8 = (8 * r.below(24)) as u32;
+            match r.below(4) {
+                0 => encode::c_lwsp(rd, imm4),
+                1 => encode::c_ldsp(rd, imm8),
+                2 => encode::c_swsp(*r.pick(POOL), imm4),
+                _ => encode::c_sdsp(*r.pick(POOL), imm8),
+            }
+        }
+        _ => encode::c_addi4spn(crd, (4 * (1 + r.below(120))) as u32),
+    };
+    Item::C(enc)
+}
+
+fn gen_csr(r: &mut Rng) -> Item {
+    let rd = pick_reg(r);
+    if r.below(3) == 0 {
+        // Stable read-only / counter reads. CYCLE/TIME are deliberately
+        // excluded: their values are timing-model-dependent, which is
+        // exactly the kind of legitimate divergence the functional
+        // comparison must not observe.
+        let csr = *r.pick(&[CSR_MHARTID, CSR_INSTRET]);
+        Item::Op(Op::Csr { op: CsrOp::Rs, imm_form: false, rd, rs1: ZERO, csr })
+    } else {
+        let csr = *r.pick(&[CSR_MSCRATCH, CSR_SSCRATCH, CSR_MTVAL]);
+        let op = *r.pick(&[CsrOp::Rw, CsrOp::Rs, CsrOp::Rc]);
+        let imm_form = r.bool();
+        let rs1 = if imm_form { r.below(32) as u8 } else { pick_reg(r) };
+        Item::Op(Op::Csr { op, imm_form, rd, rs1, csr })
+    }
+}
+
+fn gen_amo(r: &mut Rng) -> Item {
+    let wide = r.bool();
+    let width = if wide { 8 } else { 4 };
+    Item::Amo {
+        op: *r.pick(&[
+            AmoOp::Swap,
+            AmoOp::Add,
+            AmoOp::Xor,
+            AmoOp::And,
+            AmoOp::Or,
+            AmoOp::Min,
+            AmoOp::Max,
+            AmoOp::Minu,
+            AmoOp::Maxu,
+        ]),
+        wide,
+        rd: if r.below(4) == 0 { ZERO } else { pick_reg(r) },
+        rs2: pick_read_reg(r),
+        off: hot_off(r, width),
+    }
+}
+
+fn gen_item(r: &mut Rng, multi: bool) -> Item {
+    match r.below(20) {
+        0..=6 => gen_alu(r),
+        7..=9 => gen_mem(r),
+        10..=12 => gen_compressed(r),
+        13..=14 => gen_csr(r),
+        15 => gen_amo(r),
+        16 => {
+            let wide = r.bool();
+            let width = if wide { 8 } else { 4 };
+            Item::LrSc {
+                wide,
+                rd_lr: pick_reg(r),
+                rd_sc: pick_reg(r),
+                rs2: pick_read_reg(r),
+                off: hot_off(r, width),
+            }
+        }
+        17 if !multi => Item::Putchar(b'a' + (r.below(26) as u8)),
+        _ => gen_alu(r),
+    }
+}
+
+fn gen_term(r: &mut Rng, index: usize, num_blocks: usize) -> Term {
+    match r.below(10) {
+        0..=3 => Term::Next,
+        4..=5 => {
+            // forward skip; target past the next block, clamped to the
+            // epilogue at assembly
+            let remaining = num_blocks - index; // >= 1
+            let target = index + 1 + r.below(remaining as u64 + 1) as usize;
+            let cond =
+                *r.pick(&[BrCond::Eq, BrCond::Ne, BrCond::Lt, BrCond::Ge, BrCond::Ltu, BrCond::Geu]);
+            Term::Skip { cond, rs1: pick_read_reg(r), rs2: pick_read_reg(r), target }
+        }
+        6..=7 => Term::Loop { count: 2 + r.below(5) as u8 },
+        _ => Term::IndirectNext,
+    }
+}
+
+/// Generate the program for `seed`.
+pub fn generate(seed: u64, harts: usize) -> TestProgram {
+    let mut r = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15);
+    // Register seeds draw from a forked sub-stream, so their values do not
+    // shift whenever the block generator's draw count changes.
+    let mut reg_rng = r.fork(0x5EED_5EED);
+    let multi = harts > 1;
+    let num_blocks = 2 + r.below(6) as usize;
+    let blocks = (0..num_blocks)
+        .map(|i| {
+            let n_items = 2 + r.below(9);
+            Block {
+                page_pad: if i > 0 && r.chance(14) {
+                    Some(*r.pick(&[0u32, 2, 4, 6]))
+                } else {
+                    None
+                },
+                items: (0..n_items).map(|_| gen_item(&mut r, multi)).collect(),
+                term: gen_term(&mut r, i, num_blocks),
+            }
+        })
+        .collect();
+    TestProgram {
+        seed,
+        harts,
+        reg_seed: POOL.iter().map(|&reg| (reg, reg_rng.interesting_u64())).collect(),
+        blocks,
+        contention_rounds: if multi { 8 + r.below(24) as u32 } else { 0 },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Assembly
+// ---------------------------------------------------------------------------
+
+fn invert(cond: BrCond) -> BrCond {
+    match cond {
+        BrCond::Eq => BrCond::Ne,
+        BrCond::Ne => BrCond::Eq,
+        BrCond::Lt => BrCond::Ge,
+        BrCond::Ge => BrCond::Lt,
+        BrCond::Ltu => BrCond::Geu,
+        BrCond::Geu => BrCond::Ltu,
+    }
+}
+
+/// Apply the bug injection to a body op.
+fn sabotage(op: Op, bug: BugInjection) -> Op {
+    if bug == BugInjection::XorBecomesOr {
+        match op {
+            Op::Alu { op: AluOp::Xor, word, rd, rs1, rs2 } => {
+                return Op::Alu { op: AluOp::Or, word, rd, rs1, rs2 };
+            }
+            Op::AluImm { op: AluOp::Xor, word, rd, rs1, imm } => {
+                return Op::AluImm { op: AluOp::Or, word, rd, rs1, imm };
+            }
+            _ => {}
+        }
+    }
+    op
+}
+
+impl TestProgram {
+    /// Assemble into a flat image. `bug` sabotages *body* instructions
+    /// only — the harness (prologue/epilogue/trap handler) always
+    /// assembles faithfully, so an injected bug is only observable through
+    /// generated code, the way a real decoder bug would be.
+    pub fn assemble(&self, bug: BugInjection) -> Assembled {
+        let mut a = Assembler::new(crate::mem::DRAM_BASE);
+        let n = self.blocks.len();
+        let labels: Vec<_> = (0..=n).map(|_| a.new_label()).collect();
+        let trap_l = a.new_label();
+        let shared_l = a.new_label();
+        let scratch_l = a.new_label();
+
+        // ---- prologue ----------------------------------------------------
+        a.la(T0, trap_l);
+        a.csrw(CSR_MTVEC, T0);
+        a.csrr(T6, CSR_MHARTID);
+        a.slli(T5, T6, PRIV_SHIFT);
+        a.la(S0, scratch_l);
+        a.add(S0, S0, T5);
+        a.addi(SP, S0, SP_WINDOW_OFF);
+        a.li(S1, 0);
+        for &(reg, value) in &self.reg_seed {
+            a.li(reg, value as i64);
+        }
+        a.j(labels[0]);
+
+        // ---- body blocks -------------------------------------------------
+        for (i, block) in self.blocks.iter().enumerate() {
+            if let Some(offs) = block.page_pad {
+                while (a.pc() + offs as u64) % 4096 != 0 {
+                    a.d8(0);
+                }
+            }
+            a.bind(labels[i]);
+            let loop_top = match block.term {
+                Term::Loop { count } => {
+                    a.li(S1, count as i64);
+                    Some(a.here())
+                }
+                _ => None,
+            };
+            for item in &block.items {
+                match *item {
+                    Item::Op(op) => a.emit(sabotage(op, bug)),
+                    Item::C(enc) => a.emit_raw16(enc),
+                    Item::Amo { op, wide, rd, rs2, off } => {
+                        let width = if wide { MemWidth::D } else { MemWidth::W };
+                        a.addi(T3, S0, off);
+                        a.emit(Op::Amo { op, width, rd, rs1: T3, rs2 });
+                    }
+                    Item::LrSc { wide, rd_lr, rd_sc, rs2, off } => {
+                        let width = if wide { MemWidth::D } else { MemWidth::W };
+                        a.addi(T3, S0, off);
+                        a.emit(Op::Lr { width, rd: rd_lr, rs1: T3 });
+                        a.emit(Op::Sc { width, rd: rd_sc, rs1: T3, rs2 });
+                    }
+                    Item::Putchar(ch) => {
+                        a.li(A7, 1);
+                        a.li(A0, ch as i64);
+                        a.ecall();
+                    }
+                }
+            }
+            let next = labels[i + 1];
+            match block.term {
+                Term::Next => a.j(next),
+                Term::Skip { cond, rs1, rs2, target } => {
+                    // Inverted branch over a long-range `j`, so padded
+                    // blocks stay reachable regardless of distance.
+                    let over = a.new_label();
+                    a.branch(invert(cond), rs1, rs2, over);
+                    a.j(labels[target.min(n)]);
+                    a.bind(over);
+                    a.j(next);
+                }
+                Term::Loop { .. } => {
+                    a.addi(S1, S1, -1);
+                    a.bnez(S1, loop_top.expect("loop top bound above"));
+                    a.j(next);
+                }
+                Term::IndirectNext => {
+                    a.la(T4, next);
+                    a.jr(T4);
+                }
+            }
+        }
+
+        // ---- epilogue ----------------------------------------------------
+        a.bind(labels[n]);
+        if self.harts > 1 {
+            // Shared-memory contention: LR/SC spinlock protecting a plain
+            // increment, plus an AMO side counter. Layout: lock at
+            // shared+0, locked counter at shared+8, AMO counter at
+            // shared+16, done flag at shared+24.
+            a.la(T3, shared_l);
+            a.li(T5, self.contention_rounds as i64);
+            let round = a.here();
+            let acquire = a.here();
+            a.lr_w(T6, T3);
+            a.bnez(T6, acquire);
+            a.li(RA, 1);
+            a.sc_w(T6, RA, T3);
+            a.bnez(T6, acquire);
+            a.lw(GP, T3, 8);
+            a.addi(GP, GP, 1);
+            a.sw(GP, T3, 8);
+            a.fence();
+            a.amoswap_w(ZERO, ZERO, T3); // release the lock
+            a.addi(T4, T3, 16);
+            a.amoadd_w(ZERO, RA, T4);
+            a.addi(T5, T5, -1);
+            a.bnez(T5, round);
+            // Zero everything whose final value depends on the schedule.
+            a.li(GP, 0);
+            a.li(T6, 0);
+            a.li(RA, 0);
+        }
+        // Completion barrier: bump the done flag, park non-zero harts in a
+        // single-instruction self-loop, hart 0 waits for every hart then
+        // exits with a register-fold signature.
+        //
+        // Ordering matters for cross-engine determinism: every register
+        // must hold its final value *before* the done-flag AMO, and the
+        // only instruction after the AMO is the self-branch itself. A
+        // sibling hart can then be frozen (by hart 0's exit) at any point
+        // after its AMO and still present exactly the parked pc/registers,
+        // regardless of how the engine interleaved the final instructions.
+        a.csrr(T5, CSR_MHARTID);
+        a.la(T3, shared_l);
+        a.addi(T3, T3, 24);
+        a.li(T4, 1);
+        a.li(T6, 0);
+        a.amoadd_w(ZERO, T4, T3);
+        let park = a.here();
+        a.bnez(T5, park);
+        a.li(T6, self.harts as i64);
+        let wait = a.here();
+        a.lw(T4, T3, 0);
+        a.blt(T4, T6, wait);
+        for &reg in &POOL[1..] {
+            a.xor(A0, A0, reg);
+        }
+        a.li(A7, 93);
+        a.ecall();
+
+        // ---- trap handler ------------------------------------------------
+        a.align(4);
+        a.bind(trap_l);
+        a.csrr(A0, crate::isa::csr::CSR_MCAUSE);
+        a.addi(A0, A0, 100);
+        a.li(A7, 93);
+        a.ecall();
+
+        // ---- data --------------------------------------------------------
+        a.align(64);
+        let shared = a.pc();
+        a.bind(shared_l);
+        a.d64(0); // +0  lock
+        a.d64(0); // +8  locked counter
+        a.d64(0); // +16 AMO counter
+        a.d64(0); // +24 done flag
+        a.align(64);
+        let scratch = a.pc();
+        a.bind(scratch_l);
+        a.zero_fill(self.harts * PRIV_BYTES as usize);
+
+        Assembled {
+            image: a.finish(),
+            shared,
+            scratch,
+            scratch_len: self.harts * PRIV_BYTES as usize,
+        }
+    }
+
+    /// Total body instructions (the size the shrinker minimises).
+    pub fn body_insts(&self) -> usize {
+        self.blocks.iter().map(|b| b.items.iter().map(Item::insts).sum::<usize>()).sum()
+    }
+
+    /// Human-readable listing of the body, with compressed encodings
+    /// disassembled through their expanded form.
+    pub fn listing(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "seed {:#x}, {} hart(s), {} block(s), {} body instruction(s):",
+            self.seed,
+            self.harts,
+            self.blocks.len(),
+            self.body_insts()
+        );
+        for (i, block) in self.blocks.iter().enumerate() {
+            let pad = match block.page_pad {
+                Some(k) => format!(" (page boundary - {} bytes)", k),
+                None => String::new(),
+            };
+            let _ = writeln!(s, "block {}{}:", i, pad);
+            for item in &block.items {
+                match *item {
+                    Item::Op(op) => {
+                        let _ = writeln!(s, "    {}", op);
+                    }
+                    Item::C(enc) => {
+                        let _ = writeln!(s, "    c.{:04x}  ({})", enc, crate::isa::decode16(enc));
+                    }
+                    Item::Amo { op, wide, rd, rs2, off } => {
+                        let width = if wide { MemWidth::D } else { MemWidth::W };
+                        let _ = writeln!(s, "    addi t3, s0, {}", off);
+                        let _ = writeln!(s, "    {}", Op::Amo { op, width, rd, rs1: T3, rs2 });
+                    }
+                    Item::LrSc { wide, rd_lr, rd_sc, rs2, off } => {
+                        let width = if wide { MemWidth::D } else { MemWidth::W };
+                        let _ = writeln!(s, "    addi t3, s0, {}", off);
+                        let _ = writeln!(s, "    {}", Op::Lr { width, rd: rd_lr, rs1: T3 });
+                        let _ = writeln!(s, "    {}", Op::Sc { width, rd: rd_sc, rs1: T3, rs2 });
+                    }
+                    Item::Putchar(ch) => {
+                        let _ = writeln!(s, "    putchar '{}'", ch as char);
+                    }
+                }
+            }
+            let _ = writeln!(s, "    -> {:?}", block.term);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = generate(42, 1);
+        let b = generate(42, 1);
+        assert_eq!(a.blocks.len(), b.blocks.len());
+        assert_eq!(a.reg_seed, b.reg_seed);
+        for (x, y) in a.blocks.iter().zip(b.blocks.iter()) {
+            assert_eq!(x.items, y.items);
+            assert_eq!(x.term, y.term);
+        }
+        // Different seeds diverge.
+        let c = generate(43, 1);
+        let same = a.blocks.len() == c.blocks.len()
+            && a.reg_seed == c.reg_seed
+            && a.blocks.iter().zip(c.blocks.iter()).all(|(x, y)| x.items == y.items);
+        assert!(!same, "seed must select the program");
+    }
+
+    #[test]
+    fn assembly_is_reproducible_and_loads() {
+        for seed in 0..20 {
+            for harts in [1usize, 2] {
+                let prog = generate(seed, harts);
+                let a = prog.assemble(BugInjection::None);
+                let b = prog.assemble(BugInjection::None);
+                assert_eq!(a.image.bytes, b.image.bytes, "seed {}", seed);
+                assert_eq!(a.scratch, b.scratch);
+                assert!(a.scratch_len == harts * PRIV_BYTES as usize);
+                assert!(a.image.bytes.len() > 64);
+            }
+        }
+    }
+
+    #[test]
+    fn sabotage_only_changes_xor_sites() {
+        // Find a seed whose body contains a 32-bit xor; its sabotaged
+        // image must differ, and a xor-free program's must not.
+        let mut found = false;
+        for seed in 0..200 {
+            let prog = generate(seed, 1);
+            let has_xor = prog.blocks.iter().flat_map(|b| &b.items).any(|i| {
+                matches!(
+                    i,
+                    Item::Op(Op::Alu { op: AluOp::Xor, .. })
+                        | Item::Op(Op::AluImm { op: AluOp::Xor, .. })
+                )
+            });
+            let clean = prog.assemble(BugInjection::None);
+            let bad = prog.assemble(BugInjection::XorBecomesOr);
+            assert_eq!(clean.image.bytes == bad.image.bytes, !has_xor, "seed {}", seed);
+            found |= has_xor;
+        }
+        assert!(found, "corpus must contain xor sites");
+    }
+
+    #[test]
+    fn listing_mentions_blocks() {
+        let prog = generate(7, 1);
+        let l = prog.listing();
+        assert!(l.contains("block 0"));
+        assert!(l.contains("body instruction"));
+    }
+}

@@ -1,0 +1,709 @@
+//! Differential co-simulation fuzzer.
+//!
+//! The paper's validation story (§4.1) rests on the DBT engine agreeing
+//! with an independent cycle-level reference. This module turns that
+//! one-off validation into a continuous, randomized harness: a seeded
+//! generator ([`generator`]) emits self-contained RV64IMAC guest images,
+//! and every execution engine — the naive interpreter, the lockstep DBT
+//! engine, and the multi-threaded parallel engine — runs the same image
+//! and is cross-checked against the reference simulator
+//! ([`crate::refsim::RefSim`]), which shares only the instruction
+//! semantics layer (`sys::exec`) with the engines under test: fetch,
+//! translation, scheduling, caching and timing are all independent.
+//!
+//! Checked per seed:
+//!
+//! 1. **End state vs the reference** for each engine: exit code, the full
+//!    register file, pc, privilege, key CSRs, retired-instruction counts
+//!    (single-hart), console output, and all guest memory the program can
+//!    dirty (private scratch windows + shared cells).
+//! 2. **Per-instruction lockstep** (single-hart): the interpreter and the
+//!    reference are stepped one instruction at a time and compared after
+//!    every step — the first diverging instruction is reported directly.
+//! 3. **Per-block lockstep** (single-hart): the DBT engine runs one
+//!    translated block at a time and the interpreter is advanced by the
+//!    same number of retired instructions, pinning divergence to a block.
+//! 4. **Cycle cross-check** (single-hart): the DBT InOrder pipeline's
+//!    cycle count must stay within a configurable tolerance of the
+//!    reference's — a smoke-level guard against gross timing-accounting
+//!    regressions (the tight <1% claim is validated on the structured
+//!    workloads, see `refsim::validate_inorder_quick`).
+//!
+//! A failing seed is reduced by [`shrink_program`] — block removal, item
+//! removal, terminator simplification, register-seed dropping — to a
+//! minimal body that still diverges, printed with `isa::disasm`.
+
+pub mod generator;
+
+pub use generator::{BugInjection, TestProgram};
+
+use crate::coordinator::{build_system, EngineMode, SimConfig};
+use crate::engine::{ExecutionEngine, ExitReason};
+use crate::fiber::FiberEngine;
+use crate::interp::InterpEngine;
+use crate::isa::disasm::REG_NAMES;
+use crate::mem::PhysMem;
+use crate::refsim::RefSim;
+use crate::sys::loader::load_flat;
+use crate::sys::{Hart, SystemSnapshot};
+use generator::{Assembled, Term};
+use std::fmt;
+
+/// Differential-run configuration.
+#[derive(Debug, Clone)]
+pub struct DiffConfig {
+    pub harts: usize,
+    /// Memory model for the reference and the serial engines (the
+    /// parallel engine always runs atomic, per Table 2).
+    pub memory: String,
+    /// Pipeline model for the lockstep DBT engine.
+    pub pipeline: String,
+    /// Per-engine instruction budget; generated programs terminate well
+    /// under this, so hitting it is itself reported as a divergence.
+    pub max_insts: u64,
+    /// Run the per-instruction and per-block lockstep comparisons
+    /// (single-hart only).
+    pub lockstep: bool,
+    /// Cross-check DBT cycles against the reference. Only applied on
+    /// single-hart runs under the *atomic* memory model: with a timing
+    /// memory model the reference charges every access while the DBT
+    /// filters through the L0, so their cycle counts legitimately drift.
+    pub check_cycles: bool,
+    /// Relative cycle tolerance (fraction of the reference count).
+    pub cycle_rel_tol: f64,
+    /// Absolute cycle slack added on top of the relative tolerance.
+    pub cycle_abs_tol: u64,
+}
+
+impl DiffConfig {
+    pub fn new(harts: usize) -> DiffConfig {
+        DiffConfig {
+            harts,
+            // Multi-hart runs default to MESI so coherence-driven L0
+            // flushes are part of the checked surface.
+            memory: if harts > 1 { "mesi".into() } else { "atomic".into() },
+            pipeline: "inorder".into(),
+            max_insts: 2_000_000,
+            lockstep: true,
+            check_cycles: harts == 1,
+            cycle_rel_tol: 0.75,
+            cycle_abs_tol: 5_000,
+        }
+    }
+}
+
+/// One confirmed divergence.
+#[derive(Debug, Clone)]
+pub struct Divergence {
+    pub seed: u64,
+    /// Which comparison failed (engine name, or a check label like
+    /// `interp(step)` / `lockstep(cycles)`).
+    pub engine: String,
+    pub detail: String,
+}
+
+impl fmt::Display for Divergence {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "seed {:#x} [{}]: {}", self.seed, self.engine, self.detail)
+    }
+}
+
+fn div(seed: u64, engine: &str, detail: String) -> Divergence {
+    Divergence { seed, engine: engine.into(), detail }
+}
+
+// ---------------------------------------------------------------------------
+// State capture and comparison
+// ---------------------------------------------------------------------------
+
+/// Guest-visible end state, captured uniformly from every engine.
+struct State {
+    harts: Vec<Hart>,
+    exit: Option<u64>,
+    console: Vec<u8>,
+    shared: Vec<u8>,
+    scratch: Vec<u8>,
+}
+
+impl State {
+    fn from_snapshot(snap: &SystemSnapshot, layout: &Assembled) -> State {
+        State {
+            harts: snap.harts.clone(),
+            exit: snap.exit,
+            console: snap.console.clone(),
+            shared: snap.phys.read_bytes(layout.shared, 32),
+            scratch: snap.phys.read_bytes(layout.scratch, layout.scratch_len),
+        }
+    }
+
+    fn from_refsim(rsim: &RefSim, layout: &Assembled) -> State {
+        let mut harts = rsim.harts.clone();
+        SystemSnapshot::normalize_harts(&mut harts);
+        State {
+            harts,
+            exit: rsim.sys.exit.or(rsim.sys.bus.simio.exit_code),
+            console: rsim.sys.bus.uart.output.clone(),
+            shared: rsim.sys.phys.read_bytes(layout.shared, 32),
+            scratch: rsim.sys.phys.read_bytes(layout.scratch, layout.scratch_len),
+        }
+    }
+
+    /// First difference between the reference (`self`) and an engine
+    /// (`other`), if any. `instret` is only compared on single-hart runs —
+    /// parked sibling harts legitimately retire a schedule-dependent
+    /// number of park-loop iterations.
+    fn diff(&self, other: &State, compare_instret: bool) -> Option<String> {
+        if self.exit != other.exit {
+            return Some(format!(
+                "exit latch: reference {:?} vs engine {:?}",
+                self.exit, other.exit
+            ));
+        }
+        for (h, (a, b)) in self.harts.iter().zip(other.harts.iter()).enumerate() {
+            if let Some(msg) = diff_hart(a, b, compare_instret) {
+                return Some(format!("hart {}: {}", h, msg));
+            }
+        }
+        if self.console != other.console {
+            return Some(format!(
+                "console: reference {:?} vs engine {:?}",
+                String::from_utf8_lossy(&self.console),
+                String::from_utf8_lossy(&other.console)
+            ));
+        }
+        if let Some(at) = first_mismatch(&self.shared, &other.shared) {
+            return Some(format!(
+                "shared cell byte +{}: reference {:#04x} vs engine {:#04x}",
+                at, self.shared[at], other.shared[at]
+            ));
+        }
+        if let Some(at) = first_mismatch(&self.scratch, &other.scratch) {
+            return Some(format!(
+                "scratch byte +{}: reference {:#04x} vs engine {:#04x}",
+                at, self.scratch[at], other.scratch[at]
+            ));
+        }
+        None
+    }
+}
+
+fn first_mismatch(a: &[u8], b: &[u8]) -> Option<usize> {
+    a.iter().zip(b.iter()).position(|(x, y)| x != y)
+}
+
+/// Architectural (functional) comparison of two harts.
+fn diff_hart(a: &Hart, b: &Hart, compare_instret: bool) -> Option<String> {
+    for r in 0..32 {
+        if a.regs[r] != b.regs[r] {
+            return Some(format!(
+                "{} = {:#x} (reference) vs {:#x} (engine)",
+                REG_NAMES[r], a.regs[r], b.regs[r]
+            ));
+        }
+    }
+    if a.pc != b.pc {
+        return Some(format!("pc = {:#x} (reference) vs {:#x} (engine)", a.pc, b.pc));
+    }
+    if a.prv != b.prv {
+        return Some(format!("privilege {:?} vs {:?}", a.prv, b.prv));
+    }
+    if compare_instret && a.instret != b.instret {
+        return Some(format!("instret {} vs {}", a.instret, b.instret));
+    }
+    let csrs = [
+        ("mstatus", a.mstatus, b.mstatus),
+        ("mtvec", a.mtvec, b.mtvec),
+        ("mscratch", a.mscratch, b.mscratch),
+        ("sscratch", a.sscratch, b.sscratch),
+        ("mepc", a.mepc, b.mepc),
+        ("mcause", a.mcause, b.mcause),
+        ("mtval", a.mtval, b.mtval),
+        ("satp", a.satp, b.satp),
+    ];
+    for (name, x, y) in csrs {
+        if x != y {
+            return Some(format!("{} = {:#x} (reference) vs {:#x} (engine)", name, x, y));
+        }
+    }
+    None
+}
+
+/// Disassemble the instruction at `pc` (flat physical addressing).
+fn disasm_at(phys: &PhysMem, pc: u64) -> String {
+    if !phys.contains(pc, 2) {
+        return format!("{:#x}: <outside DRAM>", pc);
+    }
+    let lo = phys.read_u16(pc);
+    let raw = if crate::isa::inst_len(lo) == 4 && phys.contains(pc + 2, 2) {
+        (lo as u32) | ((phys.read_u16(pc + 2) as u32) << 16)
+    } else {
+        lo as u32
+    };
+    let (op, _) = crate::isa::decode(raw);
+    format!("{:#x}: {}", pc, op)
+}
+
+// ---------------------------------------------------------------------------
+// Engine construction helpers
+// ---------------------------------------------------------------------------
+
+fn sim_config(harts: usize, mode: EngineMode, pipeline: &str, memory: &str) -> SimConfig {
+    SimConfig {
+        harts,
+        mode,
+        pipeline: pipeline.into(),
+        memory: memory.into(),
+        ..SimConfig::default()
+    }
+}
+
+fn fresh_refsim(image: &crate::asm::Image, harts: usize, memory: &str) -> RefSim {
+    let cfg = sim_config(harts, EngineMode::Lockstep, "inorder", memory);
+    let mut rsim = RefSim::new(build_system(&cfg));
+    rsim.load(image);
+    rsim
+}
+
+fn fresh_interp(image: &crate::asm::Image, harts: usize, memory: &str) -> InterpEngine {
+    let cfg = sim_config(harts, EngineMode::Interp, "atomic", memory);
+    let mut eng = InterpEngine::new(build_system(&cfg));
+    let entry = load_flat(&eng.sys, image);
+    for h in &mut eng.harts {
+        h.pc = entry;
+    }
+    eng
+}
+
+fn fresh_fiber(
+    image: &crate::asm::Image,
+    harts: usize,
+    pipeline: &str,
+    memory: &str,
+) -> FiberEngine {
+    let cfg = sim_config(harts, EngineMode::Lockstep, pipeline, memory);
+    let mut eng = FiberEngine::new(build_system(&cfg), pipeline);
+    let entry = load_flat(&eng.sys, image);
+    eng.set_entry(entry);
+    eng
+}
+
+// ---------------------------------------------------------------------------
+// The differential check
+// ---------------------------------------------------------------------------
+
+/// Run one generated program through every engine and the reference.
+pub fn check_program(
+    prog: &TestProgram,
+    cfg: &DiffConfig,
+    bug: BugInjection,
+) -> Result<(), Divergence> {
+    let clean = prog.assemble(BugInjection::None);
+    let dut = prog.assemble(bug);
+
+    // Reference run (always on the clean image — under injection the
+    // engines run the sabotaged one, modelling a decode/translate bug).
+    let mut rsim = fresh_refsim(&clean.image, cfg.harts, &cfg.memory);
+    let re = rsim.run(cfg.max_insts);
+    let ref_exit = match re {
+        ExitReason::Exited(code) => code,
+        other => {
+            return Err(div(
+                prog.seed,
+                "refsim",
+                format!("reference did not exit cleanly: {:?} (generator bug?)", other),
+            ));
+        }
+    };
+    let ref_state = State::from_refsim(&rsim, &clean);
+
+    for mode in [EngineMode::Interp, EngineMode::Lockstep, EngineMode::Parallel] {
+        let label = mode.as_str();
+        let memory = if mode == EngineMode::Parallel { "atomic" } else { cfg.memory.as_str() };
+        let pipeline = if mode == EngineMode::Lockstep { cfg.pipeline.as_str() } else { "atomic" };
+        let ec = sim_config(cfg.harts, mode, pipeline, memory);
+        let mut eng = crate::coordinator::build_engine(&ec, &dut.image);
+        match eng.run(cfg.max_insts) {
+            ExitReason::Exited(code) if code == ref_exit => {}
+            ExitReason::Exited(code) => {
+                return Err(div(
+                    prog.seed,
+                    label,
+                    format!("exit code {} != reference {}", code, ref_exit),
+                ));
+            }
+            other => {
+                return Err(div(
+                    prog.seed,
+                    label,
+                    format!("did not exit: {:?} (reference exited {})", other, ref_exit),
+                ));
+            }
+        }
+        let snap = eng.suspend();
+        let state = State::from_snapshot(&snap, &dut);
+        if let Some(msg) = ref_state.diff(&state, cfg.harts == 1) {
+            return Err(div(prog.seed, label, msg));
+        }
+        if mode == EngineMode::Lockstep && cfg.harts == 1 && cfg.check_cycles && cfg.memory == "atomic"
+        {
+            let dbt = state.harts[0].cycle;
+            let rc = ref_state.harts[0].cycle;
+            let tol = (cfg.cycle_rel_tol * rc as f64) as u64 + cfg.cycle_abs_tol;
+            let delta = dbt.abs_diff(rc);
+            if delta > tol {
+                return Err(div(
+                    prog.seed,
+                    "lockstep(cycles)",
+                    format!(
+                        "DBT {} vs reference {} cycles (|delta| = {} > tolerance {})",
+                        dbt, rc, delta, tol
+                    ),
+                ));
+            }
+        }
+    }
+
+    if cfg.lockstep && cfg.harts == 1 {
+        step_check(prog.seed, &dut.image, cfg)?;
+        block_check(prog.seed, &dut.image, cfg)?;
+    }
+    Ok(())
+}
+
+/// Per-instruction lockstep: interpreter vs reference, compared after
+/// every step. Both engines count trap deliveries as steps, so they stay
+/// aligned through the trap path too.
+fn step_check(seed: u64, image: &crate::asm::Image, cfg: &DiffConfig) -> Result<(), Divergence> {
+    let mut rsim = fresh_refsim(image, 1, "atomic");
+    let mut interp = fresh_interp(image, 1, "atomic");
+    let mut steps = 0u64;
+    loop {
+        let prev_pc = rsim.harts[0].pc;
+        let rr = rsim.run(1);
+        let ir = InterpEngine::run(&mut interp, 1);
+        if let Some(msg) = diff_hart(&rsim.harts[0], &interp.harts[0], true) {
+            return Err(div(
+                seed,
+                "interp(step)",
+                format!("step {} (after {}): {}", steps, disasm_at(&rsim.sys.phys, prev_pc), msg),
+            ));
+        }
+        match (rr, ir) {
+            (ExitReason::Exited(a), ExitReason::Exited(b)) => {
+                if a != b {
+                    return Err(div(seed, "interp(step)", format!("exit {} vs {}", a, b)));
+                }
+                return Ok(());
+            }
+            (ExitReason::StepLimit, ExitReason::StepLimit) => {}
+            (a, b) => {
+                return Err(div(
+                    seed,
+                    "interp(step)",
+                    format!(
+                        "step {} (after {}): reference stopped {:?}, interpreter {:?}",
+                        steps,
+                        disasm_at(&rsim.sys.phys, prev_pc),
+                        a,
+                        b
+                    ),
+                ));
+            }
+        }
+        steps += 1;
+        if steps > cfg.max_insts {
+            return Err(div(seed, "interp(step)", "no exit within the step budget".into()));
+        }
+    }
+}
+
+/// Per-block lockstep: the DBT engine advances one translated block at a
+/// time; the interpreter is advanced by the same number of *retired*
+/// instructions, and the architectural state must match at every block
+/// boundary.
+fn block_check(seed: u64, image: &crate::asm::Image, cfg: &DiffConfig) -> Result<(), Divergence> {
+    let mut fib = fresh_fiber(image, 1, &cfg.pipeline, "atomic");
+    let mut interp = fresh_interp(image, 1, "atomic");
+    let mut blocks = 0u64;
+    let mut retired = 0u64;
+    loop {
+        let before = fib.harts[0].instret;
+        let fr = FiberEngine::run(&mut fib, 1);
+        let n = fib.harts[0].instret - before;
+        retired += n;
+        // Advance the interpreter by the same retired count (its own trap
+        // deliveries retire nothing, so step until instret catches up).
+        let target = fib.harts[0].instret;
+        let mut ir = ExitReason::StepLimit;
+        let mut guard = 0u64;
+        while interp.harts[0].instret < target {
+            ir = InterpEngine::run(&mut interp, 1);
+            if matches!(ir, ExitReason::Exited(_)) {
+                break;
+            }
+            guard += 1;
+            if guard > cfg.max_insts {
+                return Err(div(
+                    seed,
+                    "lockstep(block)",
+                    format!("interpreter stalled catching up to instret {}", target),
+                ));
+            }
+        }
+        if let Some(msg) = diff_hart(&fib.harts[0], &interp.harts[0], true) {
+            return Err(div(
+                seed,
+                "lockstep(block)",
+                format!(
+                    "block {} (ending {}): DBT-vs-interpreter {}",
+                    blocks,
+                    disasm_at(&fib.sys.phys, fib.harts[0].pc),
+                    msg
+                ),
+            ));
+        }
+        match (fr, ir) {
+            (ExitReason::Exited(a), ExitReason::Exited(b)) => {
+                if a != b {
+                    return Err(div(seed, "lockstep(block)", format!("exit {} vs {}", a, b)));
+                }
+                return Ok(());
+            }
+            (ExitReason::StepLimit, ExitReason::StepLimit) => {}
+            (a, b) => {
+                return Err(div(
+                    seed,
+                    "lockstep(block)",
+                    format!("block {}: DBT stopped {:?}, interpreter {:?}", blocks, a, b),
+                ));
+            }
+        }
+        blocks += 1;
+        if retired > cfg.max_insts {
+            return Err(div(seed, "lockstep(block)", "no exit within the block budget".into()));
+        }
+    }
+}
+
+/// Generate and check one seed.
+pub fn run_seed(seed: u64, cfg: &DiffConfig, bug: BugInjection) -> Result<(), Divergence> {
+    let prog = generator::generate(seed, cfg.harts);
+    check_program(&prog, cfg, bug)
+}
+
+// ---------------------------------------------------------------------------
+// Sweeps
+// ---------------------------------------------------------------------------
+
+/// Result of a seed sweep.
+pub struct SweepReport {
+    pub start: u64,
+    pub count: u64,
+    pub harts: usize,
+    pub failures: Vec<Divergence>,
+}
+
+impl SweepReport {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "difftest: {} seed(s) [{}..{}), {} hart(s): {} failure(s)\n",
+            self.count,
+            self.start,
+            self.start.saturating_add(self.count),
+            self.harts,
+            self.failures.len()
+        );
+        for f in &self.failures {
+            s.push_str(&format!("  {}\n", f));
+        }
+        s
+    }
+
+    /// One failing seed per line — the CI artifact format.
+    pub fn failing_seeds(&self) -> String {
+        let mut s = String::new();
+        for f in &self.failures {
+            s.push_str(&format!("{}\n", f.seed));
+        }
+        s
+    }
+}
+
+/// Check `count` consecutive seeds starting at `start`.
+pub fn sweep(start: u64, count: u64, cfg: &DiffConfig, bug: BugInjection) -> SweepReport {
+    let mut failures = Vec::new();
+    for seed in start..start.saturating_add(count) {
+        if let Err(d) = run_seed(seed, cfg, bug) {
+            failures.push(d);
+        }
+    }
+    SweepReport { start, count, harts: cfg.harts, failures }
+}
+
+// ---------------------------------------------------------------------------
+// Shrinking
+// ---------------------------------------------------------------------------
+
+/// A minimized failing case.
+pub struct Shrunk {
+    pub program: TestProgram,
+    pub divergence: Divergence,
+    pub body_insts: usize,
+}
+
+impl Shrunk {
+    pub fn report(&self) -> String {
+        format!(
+            "minimal repro — {}\n{}\nreproduce with: r2vm-repro difftest --seed {} --harts {}\n",
+            self.divergence,
+            self.program.listing(),
+            self.program.seed,
+            self.program.harts
+        )
+    }
+}
+
+fn remove_block(prog: &TestProgram, k: usize) -> TestProgram {
+    let mut p = prog.clone();
+    p.blocks.remove(k);
+    for b in &mut p.blocks {
+        if let Term::Skip { target, .. } = &mut b.term {
+            if *target > k {
+                *target -= 1;
+            }
+        }
+    }
+    p
+}
+
+/// Shrink a failing seed to a minimal body. Returns `None` if the seed
+/// does not actually fail under `cfg`/`bug`.
+pub fn shrink_seed(seed: u64, cfg: &DiffConfig, bug: BugInjection) -> Option<Shrunk> {
+    let prog = generator::generate(seed, cfg.harts);
+    match check_program(&prog, cfg, bug) {
+        Ok(()) => None,
+        Err(first) => Some(shrink_program(prog, first, cfg, bug)),
+    }
+}
+
+/// Greedy fixpoint reduction: drop whole blocks, then single items, then
+/// simplify terminators/padding, then drop register seeds — keeping every
+/// removal that still diverges — until a pass changes nothing.
+pub fn shrink_program(
+    mut prog: TestProgram,
+    mut last: Divergence,
+    cfg: &DiffConfig,
+    bug: BugInjection,
+) -> Shrunk {
+    loop {
+        let mut changed = false;
+
+        // Whole blocks (keep at least one so the program stays non-trivial).
+        let mut i = prog.blocks.len();
+        while i > 0 {
+            i -= 1;
+            if prog.blocks.len() <= 1 || i >= prog.blocks.len() {
+                continue;
+            }
+            let cand = remove_block(&prog, i);
+            if let Err(d) = check_program(&cand, cfg, bug) {
+                prog = cand;
+                last = d;
+                changed = true;
+            }
+        }
+
+        // Single items.
+        for b in (0..prog.blocks.len()).rev() {
+            let mut j = prog.blocks[b].items.len();
+            while j > 0 {
+                j -= 1;
+                let mut cand = prog.clone();
+                cand.blocks[b].items.remove(j);
+                if let Err(d) = check_program(&cand, cfg, bug) {
+                    prog = cand;
+                    last = d;
+                    changed = true;
+                }
+            }
+        }
+
+        // Terminator/padding simplification.
+        for b in 0..prog.blocks.len() {
+            if prog.blocks[b].term == Term::Next && prog.blocks[b].page_pad.is_none() {
+                continue;
+            }
+            let mut cand = prog.clone();
+            cand.blocks[b].term = Term::Next;
+            cand.blocks[b].page_pad = None;
+            if let Err(d) = check_program(&cand, cfg, bug) {
+                prog = cand;
+                last = d;
+                changed = true;
+            }
+        }
+
+        // Register seeds.
+        for k in (0..prog.reg_seed.len()).rev() {
+            let mut cand = prog.clone();
+            cand.reg_seed.remove(k);
+            if let Err(d) = check_program(&cand, cfg, bug) {
+                prog = cand;
+                last = d;
+                changed = true;
+            }
+        }
+
+        if !changed {
+            break;
+        }
+    }
+    Shrunk { body_insts: prog.body_insts(), program: prog, divergence: last }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_hart_smoke_seed() {
+        let cfg = DiffConfig::new(1);
+        run_seed(1, &cfg, BugInjection::None).unwrap();
+    }
+
+    #[test]
+    fn dual_hart_smoke_seed() {
+        let cfg = DiffConfig::new(2);
+        run_seed(1, &cfg, BugInjection::None).unwrap();
+    }
+
+    #[test]
+    fn sweep_reports_format() {
+        let report = SweepReport {
+            start: 0,
+            count: 3,
+            harts: 1,
+            failures: vec![div(2, "interp", "pc mismatch".into())],
+        };
+        assert!(!report.passed());
+        assert!(report.summary().contains("1 failure"));
+        assert_eq!(report.failing_seeds(), "2\n");
+    }
+
+    #[test]
+    fn diff_hart_reports_first_register() {
+        let a = Hart::new(0);
+        let mut b = Hart::new(0);
+        b.regs[10] = 7;
+        let msg = diff_hart(&a, &b, true).unwrap();
+        assert!(msg.contains("a0"), "{}", msg);
+        b.regs[10] = 0;
+        b.instret = 3;
+        assert!(diff_hart(&a, &b, false).is_none(), "instret ignored when asked");
+        assert!(diff_hart(&a, &b, true).is_some());
+    }
+}

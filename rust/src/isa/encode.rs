@@ -166,10 +166,289 @@ pub fn encode(op: Op) -> u32 {
     }
 }
 
+// ---------------------------------------------------------------------------
+// C extension (RV64C) encoders.
+//
+// The decoder expands compressed instructions at decode time, so there is no
+// `Op`-level representation to encode from; these helpers build raw 16-bit
+// encodings directly. They are used by the differential fuzzer
+// (`crate::difftest`) to exercise the compressed decode paths of every
+// engine, and each form is pinned against `decode16` by the tests below.
+// ---------------------------------------------------------------------------
+
+#[inline]
+fn bit16(v: u32, from: u32, to: u32) -> u16 {
+    (((v >> from) & 1) << to) as u16
+}
+
+#[inline]
+fn creg_field(r: u8, at: u32) -> u16 {
+    debug_assert!((8..=15).contains(&r), "compressed register must be x8-x15");
+    ((r as u16) - 8) << at
+}
+
+/// CI-format immediate scatter: imm[5] at bit 12, imm[4:0] at bits 6:2.
+#[inline]
+fn ci_bits(imm: i32) -> u16 {
+    debug_assert!((-32..=31).contains(&imm), "CI immediate is 6-bit signed");
+    let i = imm as u32;
+    bit16(i, 5, 12) | (((i & 0x1f) as u16) << 2)
+}
+
+/// c.nop
+pub fn c_nop() -> u16 {
+    0x0001
+}
+
+/// c.addi rd, imm (rd may be x0 only as c.nop with imm 0)
+pub fn c_addi(rd: u8, imm: i32) -> u16 {
+    0b01 | ((rd as u16) << 7) | ci_bits(imm)
+}
+
+/// c.addiw rd, imm (rd != x0)
+pub fn c_addiw(rd: u8, imm: i32) -> u16 {
+    debug_assert!(rd != 0);
+    0b01 | (0b001 << 13) | ((rd as u16) << 7) | ci_bits(imm)
+}
+
+/// c.li rd, imm
+pub fn c_li(rd: u8, imm: i32) -> u16 {
+    0b01 | (0b010 << 13) | ((rd as u16) << 7) | ci_bits(imm)
+}
+
+/// c.lui rd, imm6 — `imm6` is the (signed, nonzero) value placed in bits
+/// 17:12 of the expanded LUI immediate; rd must not be x0 or x2.
+pub fn c_lui(rd: u8, imm6: i32) -> u16 {
+    debug_assert!(rd != 0 && rd != 2 && imm6 != 0 && (-32..=31).contains(&imm6));
+    0b01 | (0b011 << 13) | ((rd as u16) << 7) | ci_bits(imm6)
+}
+
+/// c.addi16sp imm (multiple of 16, nonzero, -512..=496)
+pub fn c_addi16sp(imm: i32) -> u16 {
+    debug_assert!(imm != 0 && imm % 16 == 0 && (-512..=496).contains(&imm));
+    let i = imm as u32;
+    0b01 | (0b011 << 13)
+        | (2u16 << 7)
+        | bit16(i, 9, 12)
+        | bit16(i, 8, 4)
+        | bit16(i, 7, 3)
+        | bit16(i, 6, 5)
+        | bit16(i, 5, 2)
+        | bit16(i, 4, 6)
+}
+
+#[inline]
+fn cb_arith(sub: u16, r: u8, bits: u16) -> u16 {
+    0b01 | (0b100 << 13) | (sub << 10) | creg_field(r, 7) | bits
+}
+
+/// c.srli rd', shamt
+pub fn c_srli(r: u8, shamt: u32) -> u16 {
+    debug_assert!((1..=63).contains(&shamt));
+    cb_arith(0b00, r, ci_bits(shamt as i32 & 0x1f) | bit16(shamt, 5, 12))
+}
+
+/// c.srai rd', shamt
+pub fn c_srai(r: u8, shamt: u32) -> u16 {
+    debug_assert!((1..=63).contains(&shamt));
+    cb_arith(0b01, r, ci_bits(shamt as i32 & 0x1f) | bit16(shamt, 5, 12))
+}
+
+/// c.andi rd', imm
+pub fn c_andi(r: u8, imm: i32) -> u16 {
+    cb_arith(0b10, r, ci_bits(imm))
+}
+
+#[inline]
+fn ca(r: u8, r2: u8, hi: u16, f2: u16) -> u16 {
+    0b01 | (0b100 << 13) | (0b11 << 10) | (hi << 12) | creg_field(r, 7) | (f2 << 5) | creg_field(r2, 2)
+}
+
+/// c.sub rd', rs2'
+pub fn c_sub(r: u8, r2: u8) -> u16 {
+    ca(r, r2, 0, 0b00)
+}
+/// c.xor rd', rs2'
+pub fn c_xor(r: u8, r2: u8) -> u16 {
+    ca(r, r2, 0, 0b01)
+}
+/// c.or rd', rs2'
+pub fn c_or(r: u8, r2: u8) -> u16 {
+    ca(r, r2, 0, 0b10)
+}
+/// c.and rd', rs2'
+pub fn c_and(r: u8, r2: u8) -> u16 {
+    ca(r, r2, 0, 0b11)
+}
+/// c.subw rd', rs2'
+pub fn c_subw(r: u8, r2: u8) -> u16 {
+    ca(r, r2, 1, 0b00)
+}
+/// c.addw rd', rs2'
+pub fn c_addw(r: u8, r2: u8) -> u16 {
+    ca(r, r2, 1, 0b01)
+}
+
+/// c.j offset (even, 12-bit signed range)
+pub fn c_j(imm: i32) -> u16 {
+    debug_assert!(imm % 2 == 0 && (-2048..=2046).contains(&imm));
+    let i = imm as u32;
+    0b01 | (0b101 << 13)
+        | bit16(i, 11, 12)
+        | bit16(i, 10, 8)
+        | bit16(i, 9, 10)
+        | bit16(i, 8, 9)
+        | bit16(i, 7, 6)
+        | bit16(i, 6, 7)
+        | bit16(i, 5, 2)
+        | bit16(i, 4, 11)
+        | bit16(i, 3, 5)
+        | bit16(i, 2, 4)
+        | bit16(i, 1, 3)
+}
+
+#[inline]
+fn cb_branch(f3: u16, r: u8, imm: i32) -> u16 {
+    debug_assert!(imm % 2 == 0 && (-256..=254).contains(&imm));
+    let i = imm as u32;
+    0b01 | (f3 << 13)
+        | creg_field(r, 7)
+        | bit16(i, 8, 12)
+        | bit16(i, 7, 6)
+        | bit16(i, 6, 5)
+        | bit16(i, 5, 2)
+        | bit16(i, 4, 11)
+        | bit16(i, 3, 10)
+        | bit16(i, 2, 4)
+        | bit16(i, 1, 3)
+}
+
+/// c.beqz rs1', offset
+pub fn c_beqz(r: u8, imm: i32) -> u16 {
+    cb_branch(0b110, r, imm)
+}
+/// c.bnez rs1', offset
+pub fn c_bnez(r: u8, imm: i32) -> u16 {
+    cb_branch(0b111, r, imm)
+}
+
+/// c.addi4spn rd', imm (multiple of 4, 0 < imm < 1024)
+pub fn c_addi4spn(r: u8, imm: u32) -> u16 {
+    debug_assert!(imm % 4 == 0 && imm > 0 && imm < 1024);
+    // quadrant 00: no low bits set
+    (((imm >> 6) & 0xf) as u16) << 7
+        | (((imm >> 4) & 0x3) as u16) << 11
+        | bit16(imm, 3, 5)
+        | bit16(imm, 2, 6)
+        | creg_field(r, 2)
+}
+
+#[inline]
+fn cl_w_bits(imm: u32) -> u16 {
+    debug_assert!(imm % 4 == 0 && imm < 128);
+    bit16(imm, 6, 5) | ((((imm >> 3) & 0x7) as u16) << 10) | bit16(imm, 2, 6)
+}
+
+#[inline]
+fn cl_d_bits(imm: u32) -> u16 {
+    debug_assert!(imm % 8 == 0 && imm < 256);
+    ((((imm >> 6) & 0x3) as u16) << 5) | ((((imm >> 3) & 0x7) as u16) << 10)
+}
+
+/// c.lw rd', imm(rs1')
+pub fn c_lw(rd: u8, rs1: u8, imm: u32) -> u16 {
+    (0b010 << 13) | cl_w_bits(imm) | creg_field(rs1, 7) | creg_field(rd, 2)
+}
+/// c.ld rd', imm(rs1')
+pub fn c_ld(rd: u8, rs1: u8, imm: u32) -> u16 {
+    (0b011 << 13) | cl_d_bits(imm) | creg_field(rs1, 7) | creg_field(rd, 2)
+}
+/// c.sw rs2', imm(rs1')
+pub fn c_sw(rs2: u8, rs1: u8, imm: u32) -> u16 {
+    (0b110 << 13) | cl_w_bits(imm) | creg_field(rs1, 7) | creg_field(rs2, 2)
+}
+/// c.sd rs2', imm(rs1')
+pub fn c_sd(rs2: u8, rs1: u8, imm: u32) -> u16 {
+    (0b111 << 13) | cl_d_bits(imm) | creg_field(rs1, 7) | creg_field(rs2, 2)
+}
+
+/// c.slli rd, shamt (rd != x0)
+pub fn c_slli(rd: u8, shamt: u32) -> u16 {
+    debug_assert!(rd != 0 && (1..=63).contains(&shamt));
+    0b10 | ((rd as u16) << 7) | ci_bits(shamt as i32 & 0x1f) | bit16(shamt, 5, 12)
+}
+
+/// c.lwsp rd, imm(sp) (rd != x0; imm multiple of 4, < 256)
+pub fn c_lwsp(rd: u8, imm: u32) -> u16 {
+    debug_assert!(rd != 0 && imm % 4 == 0 && imm < 256);
+    0b10 | (0b010 << 13)
+        | ((rd as u16) << 7)
+        | ((((imm >> 6) & 0x3) as u16) << 2)
+        | bit16(imm, 5, 12)
+        | ((((imm >> 2) & 0x7) as u16) << 4)
+}
+
+/// c.ldsp rd, imm(sp) (rd != x0; imm multiple of 8, < 512)
+pub fn c_ldsp(rd: u8, imm: u32) -> u16 {
+    debug_assert!(rd != 0 && imm % 8 == 0 && imm < 512);
+    0b10 | (0b011 << 13)
+        | ((rd as u16) << 7)
+        | ((((imm >> 6) & 0x7) as u16) << 2)
+        | bit16(imm, 5, 12)
+        | ((((imm >> 3) & 0x3) as u16) << 5)
+}
+
+/// c.swsp rs2, imm(sp) (imm multiple of 4, < 256)
+pub fn c_swsp(rs2: u8, imm: u32) -> u16 {
+    debug_assert!(imm % 4 == 0 && imm < 256);
+    0b10 | (0b110 << 13)
+        | ((rs2 as u16) << 2)
+        | ((((imm >> 6) & 0x3) as u16) << 7)
+        | ((((imm >> 2) & 0xf) as u16) << 9)
+}
+
+/// c.sdsp rs2, imm(sp) (imm multiple of 8, < 512)
+pub fn c_sdsp(rs2: u8, imm: u32) -> u16 {
+    debug_assert!(imm % 8 == 0 && imm < 512);
+    0b10 | (0b111 << 13)
+        | ((rs2 as u16) << 2)
+        | ((((imm >> 6) & 0x7) as u16) << 7)
+        | ((((imm >> 3) & 0x7) as u16) << 10)
+}
+
+/// c.mv rd, rs2 (both != x0)
+pub fn c_mv(rd: u8, rs2: u8) -> u16 {
+    debug_assert!(rd != 0 && rs2 != 0);
+    0b10 | (0b100 << 13) | ((rd as u16) << 7) | ((rs2 as u16) << 2)
+}
+
+/// c.add rd, rs2 (both != x0)
+pub fn c_add(rd: u8, rs2: u8) -> u16 {
+    debug_assert!(rd != 0 && rs2 != 0);
+    0b10 | (0b100 << 13) | (1 << 12) | ((rd as u16) << 7) | ((rs2 as u16) << 2)
+}
+
+/// c.jr rs1 (rs1 != x0)
+pub fn c_jr(rs1: u8) -> u16 {
+    debug_assert!(rs1 != 0);
+    0b10 | (0b100 << 13) | ((rs1 as u16) << 7)
+}
+
+/// c.jalr rs1 (rs1 != x0)
+pub fn c_jalr(rs1: u8) -> u16 {
+    debug_assert!(rs1 != 0);
+    0b10 | (0b100 << 13) | (1 << 12) | ((rs1 as u16) << 7)
+}
+
+/// c.ebreak
+pub fn c_ebreak() -> u16 {
+    0b10 | (0b100 << 13) | (1 << 12)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::isa::decode::decode32;
+    use crate::isa::decode::{decode16, decode32};
 
     fn roundtrip(op: Op) {
         let enc = encode(op);
@@ -277,5 +556,88 @@ mod tests {
         roundtrip(Op::Wfi);
         roundtrip(Op::FenceI);
         roundtrip(Op::SfenceVma { rs1: 0, rs2: 0 });
+    }
+
+    /// Every compressed encoder must decode (via `decode16`) to exactly
+    /// the base-ISA expansion the spec prescribes.
+    fn c16(enc: u16, want: Op) {
+        let got = decode16(enc);
+        assert_eq!(got, want, "encoding {:#06x}", enc);
+        // The low two bits must mark a compressed encoding.
+        assert_ne!(enc & 0b11, 0b11, "not a 16-bit encoding: {:#06x}", enc);
+    }
+
+    #[test]
+    fn compressed_ci_forms() {
+        c16(c_nop(), Op::AluImm { op: AluOp::Add, word: false, rd: 0, rs1: 0, imm: 0 });
+        for imm in [-32, -1, 0, 1, 31] {
+            c16(c_addi(9, imm), Op::AluImm { op: AluOp::Add, word: false, rd: 9, rs1: 9, imm });
+            c16(c_addiw(10, imm), Op::AluImm { op: AluOp::Add, word: true, rd: 10, rs1: 10, imm });
+            c16(c_li(11, imm), Op::AluImm { op: AluOp::Add, word: false, rd: 11, rs1: 0, imm });
+        }
+        for imm6 in [-32, -1, 1, 31] {
+            c16(c_lui(12, imm6), Op::Lui { rd: 12, imm: imm6 << 12 });
+        }
+        for imm in [-512, -16, 16, 496] {
+            c16(c_addi16sp(imm), Op::AluImm { op: AluOp::Add, word: false, rd: 2, rs1: 2, imm });
+        }
+        for sh in [1u32, 5, 31, 32, 63] {
+            c16(c_slli(7, sh), Op::AluImm { op: AluOp::Sll, word: false, rd: 7, rs1: 7, imm: sh as i32 });
+            c16(c_srli(8, sh), Op::AluImm { op: AluOp::Srl, word: false, rd: 8, rs1: 8, imm: sh as i32 });
+            c16(c_srai(15, sh), Op::AluImm { op: AluOp::Sra, word: false, rd: 15, rs1: 15, imm: sh as i32 });
+        }
+        c16(c_andi(9, -7), Op::AluImm { op: AluOp::And, word: false, rd: 9, rs1: 9, imm: -7 });
+    }
+
+    #[test]
+    fn compressed_ca_and_cr_forms() {
+        c16(c_sub(8, 15), Op::Alu { op: AluOp::Sub, word: false, rd: 8, rs1: 8, rs2: 15 });
+        c16(c_xor(9, 14), Op::Alu { op: AluOp::Xor, word: false, rd: 9, rs1: 9, rs2: 14 });
+        c16(c_or(10, 13), Op::Alu { op: AluOp::Or, word: false, rd: 10, rs1: 10, rs2: 13 });
+        c16(c_and(11, 12), Op::Alu { op: AluOp::And, word: false, rd: 11, rs1: 11, rs2: 12 });
+        c16(c_subw(12, 11), Op::Alu { op: AluOp::Sub, word: true, rd: 12, rs1: 12, rs2: 11 });
+        c16(c_addw(13, 10), Op::Alu { op: AluOp::Add, word: true, rd: 13, rs1: 13, rs2: 10 });
+        c16(c_mv(5, 6), Op::Alu { op: AluOp::Add, word: false, rd: 5, rs1: 0, rs2: 6 });
+        c16(c_add(5, 6), Op::Alu { op: AluOp::Add, word: false, rd: 5, rs1: 5, rs2: 6 });
+        c16(c_jr(1), Op::Jalr { rd: 0, rs1: 1, imm: 0 });
+        c16(c_jalr(5), Op::Jalr { rd: 1, rs1: 5, imm: 0 });
+        c16(c_ebreak(), Op::Ebreak);
+    }
+
+    #[test]
+    fn compressed_mem_forms() {
+        for imm in [0u32, 4, 64, 124] {
+            c16(c_lw(8, 9, imm), Op::Load { width: MemWidth::W, signed: true, rd: 8, rs1: 9, imm: imm as i32 });
+            c16(c_sw(10, 11, imm), Op::Store { width: MemWidth::W, rs1: 11, rs2: 10, imm: imm as i32 });
+        }
+        for imm in [0u32, 8, 128, 248] {
+            c16(c_ld(12, 13, imm), Op::Load { width: MemWidth::D, signed: true, rd: 12, rs1: 13, imm: imm as i32 });
+            c16(c_sd(14, 15, imm), Op::Store { width: MemWidth::D, rs1: 15, rs2: 14, imm: imm as i32 });
+        }
+        for imm in [0u32, 4, 92, 252] {
+            c16(c_lwsp(7, imm), Op::Load { width: MemWidth::W, signed: true, rd: 7, rs1: 2, imm: imm as i32 });
+            c16(c_swsp(31, imm), Op::Store { width: MemWidth::W, rs1: 2, rs2: 31, imm: imm as i32 });
+        }
+        for imm in [0u32, 8, 184, 504] {
+            c16(c_ldsp(6, imm), Op::Load { width: MemWidth::D, signed: true, rd: 6, rs1: 2, imm: imm as i32 });
+            c16(c_sdsp(30, imm), Op::Store { width: MemWidth::D, rs1: 2, rs2: 30, imm: imm as i32 });
+        }
+        for imm in [4u32, 8, 128, 1020] {
+            c16(
+                c_addi4spn(8, imm),
+                Op::AluImm { op: AluOp::Add, word: false, rd: 8, rs1: 2, imm: imm as i32 },
+            );
+        }
+    }
+
+    #[test]
+    fn compressed_control_flow_forms() {
+        for imm in [-2048, -2, 0, 2, 2046] {
+            c16(c_j(imm), Op::Jal { rd: 0, imm });
+        }
+        for imm in [-256, -2, 0, 2, 254] {
+            c16(c_beqz(8, imm), Op::Branch { cond: BrCond::Eq, rs1: 8, rs2: 0, imm });
+            c16(c_bnez(15, imm), Op::Branch { cond: BrCond::Ne, rs1: 15, rs2: 0, imm });
+        }
     }
 }

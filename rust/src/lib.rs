@@ -20,6 +20,7 @@ pub mod bench;
 pub mod ckpt;
 pub mod coordinator;
 pub mod asm;
+pub mod difftest;
 pub mod engine;
 pub mod interp;
 pub mod isa;

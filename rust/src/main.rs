@@ -6,6 +6,7 @@
 //!   models    — print the pipeline/memory model inventory (Tables 1-2)
 //!   workloads — list built-in workloads
 //!   validate  — quick accuracy check of the InOrder model vs refsim
+//!   difftest  — differential fuzzing of every engine vs the reference
 //!
 //! (clap is unavailable offline; this is a small hand-rolled parser.)
 
@@ -21,8 +22,28 @@ fn usage() -> ! {
   r2vm-repro models
   r2vm-repro workloads
   r2vm-repro validate
+  r2vm-repro difftest [--seeds N] [--seed X] [--harts H] [--shrink]
 
-options:
+difftest options (differential co-simulation fuzzer — every engine vs the
+cycle-level reference; see DESIGN.md \u{a7}8):
+  --seeds N          sweep N consecutive seeds (default 50)
+  --start N          first seed of the sweep (default 0)
+  --seed X           check exactly one seed (overrides --seeds/--start)
+  --harts H          harts per generated program (default 1)
+  --memory M         memory model for reference + serial engines
+                     (default: atomic for 1 hart, mesi for >1)
+  --max-insts N      per-engine instruction budget (default 2000000)
+  --shrink           reduce each failing seed to a minimal listed repro
+  --no-lockstep      skip the per-instruction/per-block lockstep passes
+  --no-cycle-check   skip the DBT-vs-reference cycle tolerance check
+                     (only applied under --memory atomic anyway)
+  --cycle-tol PCT    relative cycle tolerance in percent (default 75)
+  --fail-out PATH    write failing seeds (one per line) for CI artifacts
+  --quiet            suppress the sweep summary
+  --inject-bug K     sabotage engines to prove the harness catches bugs
+                     (K = xor-or: assemble body xor as or)
+
+run options:
   --harts N          number of harts (default 1)
   --pipeline M       atomic | simple | inorder (default simple)
   --memory M         atomic | tlb | cache | mesi (default atomic)
@@ -86,6 +107,132 @@ fn main() {
                     eprintln!("reading {}: {}", path, e);
                     std::process::exit(2);
                 }
+            }
+        }
+        "difftest" => {
+            use r2vm::difftest::{self, BugInjection, DiffConfig};
+            let mut seeds = 50u64;
+            let mut start = 0u64;
+            let mut single: Option<u64> = None;
+            let mut harts = 1usize;
+            let mut memory: Option<String> = None;
+            let mut max_insts: Option<u64> = None;
+            let mut cycle_tol: Option<f64> = None;
+            let mut shrink = false;
+            let mut no_lockstep = false;
+            let mut no_cycle_check = false;
+            let mut quiet = false;
+            let mut fail_out: Option<String> = None;
+            let mut bug = BugInjection::None;
+            let mut it = args[1..].iter();
+            // Accepts decimal or 0x-prefixed hex — failure reports print
+            // seeds as hex, and the documented repro workflow pastes them
+            // straight back into --seed.
+            let parse_num = |key: &str, v: Option<&String>| -> u64 {
+                let parsed = v.and_then(|s| {
+                    if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+                        u64::from_str_radix(hex, 16).ok()
+                    } else {
+                        s.parse().ok()
+                    }
+                });
+                match parsed {
+                    Some(n) => n,
+                    None => {
+                        eprintln!("--{} needs a numeric value", key);
+                        usage();
+                    }
+                }
+            };
+            while let Some(arg) = it.next() {
+                let Some(key) = arg.strip_prefix("--") else {
+                    eprintln!("unexpected argument: {}", arg);
+                    usage();
+                };
+                let want_value = |key: &str, v: Option<&String>| -> String {
+                    match v {
+                        Some(s) => s.clone(),
+                        None => {
+                            eprintln!("--{} needs a value", key);
+                            usage();
+                        }
+                    }
+                };
+                match key {
+                    "seeds" => seeds = parse_num(key, it.next()),
+                    "start" => start = parse_num(key, it.next()),
+                    "seed" => single = Some(parse_num(key, it.next())),
+                    "harts" => harts = parse_num(key, it.next()) as usize,
+                    "max-insts" => max_insts = Some(parse_num(key, it.next())),
+                    "cycle-tol" => cycle_tol = Some(parse_num(key, it.next()) as f64 / 100.0),
+                    "memory" => memory = Some(want_value(key, it.next())),
+                    "shrink" => shrink = true,
+                    "no-lockstep" => no_lockstep = true,
+                    "no-cycle-check" => no_cycle_check = true,
+                    "quiet" => quiet = true,
+                    "fail-out" => fail_out = Some(want_value(key, it.next())),
+                    "inject-bug" => match it.next().map(|s| s.as_str()) {
+                        Some("xor-or") => bug = BugInjection::XorBecomesOr,
+                        other => {
+                            eprintln!("unknown --inject-bug kind {:?} (xor-or)", other);
+                            usage();
+                        }
+                    },
+                    _ => {
+                        eprintln!("unknown difftest option --{}", key);
+                        usage();
+                    }
+                }
+            }
+            if harts == 0 || harts > 32 {
+                eprintln!("--harts must be in 1..=32");
+                usage();
+            }
+            let mut cfg = DiffConfig::new(harts);
+            if let Some(m) = memory {
+                if !r2vm::engine::MEMORY_MODEL_NAMES.contains(&m.as_str()) {
+                    eprintln!("unknown memory model '{}' (atomic|tlb|cache|mesi)", m);
+                    usage();
+                }
+                cfg.memory = m;
+            }
+            if let Some(n) = max_insts {
+                cfg.max_insts = n;
+            }
+            if let Some(t) = cycle_tol {
+                cfg.cycle_rel_tol = t;
+            }
+            cfg.lockstep = !no_lockstep;
+            cfg.check_cycles = cfg.check_cycles && !no_cycle_check;
+
+            let report = match single {
+                Some(seed) => difftest::SweepReport {
+                    start: seed,
+                    count: 1,
+                    harts,
+                    failures: difftest::run_seed(seed, &cfg, bug).err().into_iter().collect(),
+                },
+                None => difftest::sweep(start, seeds, &cfg, bug),
+            };
+            if !quiet {
+                print!("{}", report.summary());
+            }
+            if let Some(path) = &fail_out {
+                if !report.passed() {
+                    if let Err(e) = std::fs::write(path, report.failing_seeds()) {
+                        eprintln!("writing {}: {}", path, e);
+                    }
+                }
+            }
+            if shrink {
+                for failure in &report.failures {
+                    if let Some(min) = difftest::shrink_seed(failure.seed, &cfg, bug) {
+                        print!("{}", min.report());
+                    }
+                }
+            }
+            if !report.passed() {
+                std::process::exit(1);
             }
         }
         "run" => {

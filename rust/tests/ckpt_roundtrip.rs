@@ -166,6 +166,92 @@ fn coordinator_ckpt_out_restore_pair() {
     assert_eq!(resumed.console, unbroken.console);
 }
 
+/// A compact on-disk checkpoint for corruption sweeps (small DRAM, two
+/// dirtied pages) so flipping every byte stays fast.
+fn small_ckpt_bytes() -> Vec<u8> {
+    let mut sys = System::new(2, 1 << 20);
+    sys.bus.clint.mtimecmp[1] = 4242;
+    sys.bus.uart.output = b"hi".to_vec();
+    sys.phys.write_u64(r2vm::mem::DRAM_BASE + 0x100, 0x1122_3344_5566_7788);
+    sys.phys.write_u8(r2vm::mem::DRAM_BASE + 0x2_0000, 9);
+    let mut harts: Vec<r2vm::sys::Hart> = (0..2).map(r2vm::sys::Hart::new).collect();
+    harts[0].pc = r2vm::mem::DRAM_BASE + 4;
+    harts[0].regs[5] = 55;
+    let snap = r2vm::sys::SystemSnapshot::capture(harts, &mut sys);
+    let path = tmp("small");
+    Checkpoint::from_snapshot(&snap).save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    bytes
+}
+
+/// Restoring a bit-flipped checkpoint must return an error — never panic
+/// and never silently restore corrupted state. Every byte of the file is
+/// flipped in turn; only the reserved header word (offsets 12..16, not
+/// covered by magic/version/checksum by design) may load successfully.
+#[test]
+fn bit_flipped_checkpoint_errors_not_panics() {
+    let bytes = small_ckpt_bytes();
+    let path = tmp("flip");
+    // Sanity: the pristine file loads.
+    std::fs::write(&path, &bytes).unwrap();
+    Checkpoint::load(&path).unwrap();
+    for i in 0..bytes.len() {
+        let mut bad = bytes.clone();
+        bad[i] ^= 0x80;
+        std::fs::write(&path, &bad).unwrap();
+        let result = Checkpoint::load(&path);
+        if (12..16).contains(&i) {
+            continue; // reserved header word: flips are format-neutral
+        }
+        assert!(result.is_err(), "flip at byte {} must be rejected", i);
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Truncation at any length must be rejected cleanly (header too short,
+/// or payload checksum mismatch) — never a panic or an out-of-bounds read.
+#[test]
+fn truncated_checkpoint_errors_not_panics() {
+    let bytes = small_ckpt_bytes();
+    let path = tmp("trunc");
+    let mut lens: Vec<usize> = (0..32).collect();
+    lens.extend([bytes.len() / 3, bytes.len() / 2, bytes.len() - 1]);
+    for len in lens {
+        std::fs::write(&path, &bytes[..len]).unwrap();
+        assert!(Checkpoint::load(&path).is_err(), "truncation to {} bytes must be rejected", len);
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Corruption that *fixes up the checksum* (a hostile or wildly unlucky
+/// file) must still never panic the decoder: every structural field is
+/// bounds-checked. Semantic-neutral flips may legitimately load.
+#[test]
+fn checksum_fixed_corruption_never_panics() {
+    let bytes = small_ckpt_bytes();
+    let path = tmp("fixup");
+    let header = 24usize;
+    let payload_len = bytes.len() - header;
+    // Walk a stride of payload offsets plus the first 64 (the structural
+    // fields live up front: counts, sizes, dram geometry).
+    let mut offsets: Vec<usize> = (0..64.min(payload_len)).collect();
+    offsets.extend((64..payload_len).step_by(97));
+    for off in offsets {
+        for flip in [0x01u8, 0xff] {
+            let mut bad = bytes.clone();
+            bad[header + off] ^= flip;
+            let checksum = r2vm::ckpt::io::fnv1a(&bad[header..]);
+            bad[16..24].copy_from_slice(&checksum.to_le_bytes());
+            std::fs::write(&path, &bad).unwrap();
+            // Must not panic; Err or (for semantic-neutral flips) Ok are
+            // both acceptable.
+            let _ = Checkpoint::load(&path);
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
 #[test]
 fn multi_hart_checkpoint_carries_every_hart() {
     // Two harts cooperate through an AMO counter; checkpoint mid-run under

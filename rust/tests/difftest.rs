@@ -1,0 +1,129 @@
+//! Differential co-simulation fuzzer: fixed-seed smoke corpus plus the
+//! harness self-test — an intentionally injected "decoder bug" must be
+//! detected and shrunk to a tiny printed repro (the acceptance criterion
+//! of the difftest subsystem).
+
+use r2vm::difftest::{
+    self, generator::generate, run_seed, shrink_seed, sweep, BugInjection, DiffConfig,
+};
+
+/// Single-hart smoke corpus: every engine must agree with the reference
+/// on exit code, registers, CSRs, memory, console — and the DBT's cycle
+/// count must stay within tolerance — for a block of fixed seeds.
+#[test]
+fn single_hart_corpus_agrees() {
+    let cfg = DiffConfig::new(1);
+    let report = sweep(0, 20, &cfg, BugInjection::None);
+    assert!(report.passed(), "{}", report.summary());
+}
+
+/// Dual-hart corpus under MESI: same body per hart over private windows,
+/// then spinlock/AMO contention on shared lines. Schedules differ per
+/// engine; final state must not.
+#[test]
+fn dual_hart_corpus_agrees() {
+    let cfg = DiffConfig::new(2);
+    let report = sweep(0, 8, &cfg, BugInjection::None);
+    assert!(report.passed(), "{}", report.summary());
+}
+
+/// A second single-hart band further out in the seed space, with the
+/// cache memory model on the serial engines (cycle check stays meaningful
+/// because tolerance is configured per run).
+#[test]
+fn single_hart_cache_model_band() {
+    let mut cfg = DiffConfig::new(1);
+    cfg.memory = "cache".into();
+    // Reference charges the memory model on *every* access while the DBT
+    // filters through the L0, so cycle counts legitimately drift; this
+    // band checks functional agreement only.
+    cfg.check_cycles = false;
+    let report = sweep(1000, 10, &cfg, BugInjection::None);
+    assert!(report.passed(), "{}", report.summary());
+}
+
+/// The harness must catch a sabotaged engine: body `xor` assembled as
+/// `or` for the engines (the reference runs the clean image) — and the
+/// shrinker must reduce the failing seed to a tiny listed repro.
+#[test]
+fn injected_decoder_bug_is_caught_and_shrunk() {
+    let mut cfg = DiffConfig::new(1);
+    // The injection is visible in the end state; skip the (unsabotaged)
+    // lockstep/cycle passes to keep shrinking fast.
+    cfg.lockstep = false;
+    cfg.check_cycles = false;
+
+    // Find a seed the injection breaks. Not every seed contains a 64-bit
+    // xor whose result reaches the compared state, so scan a fixed band —
+    // deterministic, and the generator's own tests pin that xor sites
+    // exist in this band.
+    let mut caught = None;
+    for seed in 0..60 {
+        if run_seed(seed, &cfg, BugInjection::XorBecomesOr).is_err() {
+            caught = Some(seed);
+            break;
+        }
+    }
+    let seed = caught.expect("injected xor->or bug must be caught within 60 seeds");
+
+    // The same seed must pass without the injection (the divergence is the
+    // injection, not a latent engine bug).
+    run_seed(seed, &cfg, BugInjection::None).unwrap_or_else(|d| {
+        panic!("seed {} must pass clean: {}", seed, d);
+    });
+
+    let min = shrink_seed(seed, &cfg, BugInjection::XorBecomesOr)
+        .expect("failing seed must shrink");
+    assert!(
+        min.body_insts <= 8,
+        "shrunk repro must be <= 8 body instructions, got {}:\n{}",
+        min.body_insts,
+        min.report()
+    );
+    let report = min.report();
+    assert!(
+        report.contains(&format!("--seed {}", seed)),
+        "report must print the reproducing seed:\n{}",
+        report
+    );
+    assert!(report.contains("block 0"), "report must list the program:\n{}", report);
+
+    // The minimized program still diverges, and its divergence names a
+    // concrete architectural observable.
+    let err = difftest::check_program(&min.program, &cfg, BugInjection::XorBecomesOr)
+        .expect_err("minimized program must still fail");
+    assert!(!err.detail.is_empty());
+}
+
+/// Shrinking a healthy seed is a no-op.
+#[test]
+fn shrink_passes_on_healthy_seed() {
+    let mut cfg = DiffConfig::new(1);
+    cfg.lockstep = false;
+    cfg.check_cycles = false;
+    assert!(shrink_seed(3, &cfg, BugInjection::None).is_none());
+}
+
+/// Generated programs terminate with a clean guest exit well under the
+/// budget — the generator's termination-by-construction invariant, checked
+/// through the reference simulator alone (cheap, so a wider band).
+#[test]
+fn generated_programs_terminate() {
+    for seed in 0..40 {
+        for harts in [1usize, 2] {
+            let prog = generate(seed, harts);
+            let asm = prog.assemble(BugInjection::None);
+            let mut cfg = r2vm::coordinator::SimConfig::default();
+            cfg.harts = harts;
+            cfg.max_insts = 2_000_000; // budget, so a hang shows as StepLimit
+            let report = r2vm::coordinator::run_image(&cfg, &asm.image);
+            assert!(
+                matches!(report.exit, r2vm::engine::ExitReason::Exited(_)),
+                "seed {} harts {}: {:?}",
+                seed,
+                harts,
+                report.exit
+            );
+        }
+    }
+}

@@ -5,7 +5,7 @@ use r2vm::asm::*;
 use r2vm::coordinator::{run_image, SimConfig};
 use r2vm::interp::ExitReason;
 use r2vm::isa::op::*;
-use r2vm::isa::{decode32, encode};
+use r2vm::isa::{decode16, decode32, encode};
 use r2vm::mem::l0::L0DCache;
 use r2vm::mem::DRAM_BASE;
 use r2vm::prop::{forall, Rng};
@@ -35,7 +35,7 @@ fn arb_op(r: &mut Rng) -> Op {
         AluOp::And,
     ];
     let widths = [MemWidth::B, MemWidth::H, MemWidth::W, MemWidth::D];
-    match r.below(12) {
+    match r.below(13) {
         0 => Op::Lui { rd, imm: uimm },
         1 => Op::Auipc { rd, imm: uimm },
         2 => Op::Jal { rd, imm: jimm },
@@ -123,13 +123,25 @@ fn arb_op(r: &mut Rng) -> Op {
                 },
             }
         }
-        _ => Op::Csr {
+        11 => Op::Csr {
             op: *r.pick(&[CsrOp::Rw, CsrOp::Rs, CsrOp::Rc]),
             imm_form: r.bool(),
             rd,
             rs1,
             csr: r.below(4096) as u16,
         },
+        // System / fence instructions: fixed encodings and sfence.vma's
+        // register fields must survive the round trip too.
+        _ => *r.pick(&[
+            Op::Fence,
+            Op::FenceI,
+            Op::Ecall,
+            Op::Ebreak,
+            Op::Mret,
+            Op::Sret,
+            Op::Wfi,
+            Op::SfenceVma { rs1, rs2 },
+        ]),
     }
 }
 
@@ -144,6 +156,74 @@ fn prop_decode_encode_roundtrip() {
             Err(format!("{:#010x} decoded to {:?}", enc, dec))
         }
     });
+}
+
+// ---------------------------------------------------------------------------
+// ISA: decode is a projection — decode(encode(decode(w))) == decode(w) for
+// *arbitrary* 32-bit words. This is the inverse-direction property of the
+// roundtrip above: any word the decoder accepts must canonicalise (drop
+// ignored fields like AMO aq/rl or fence pred/succ) to an encoding that
+// decodes back to the same op. A lenient decoder field-check shows up here
+// as a fixpoint violation.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_decode_encode_decode_fixpoint() {
+    forall(
+        0xF1C5_0B57,
+        20_000,
+        |r| (r.next_u64() as u32) | 0b11, // low bits 11 = 32-bit encoding space
+        |&word| {
+            let op = decode32(word);
+            if matches!(op, Op::Illegal { .. }) {
+                return Ok(());
+            }
+            let canon = encode(op);
+            let again = decode32(canon);
+            if again == op {
+                Ok(())
+            } else {
+                Err(format!(
+                    "{:#010x} -> {:?} -> {:#010x} -> {:?}",
+                    word, op, canon, again
+                ))
+            }
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// ISA: every accepted compressed encoding expands to a base instruction
+// that is itself encodable and decodes back to the identical expansion
+// (the C extension is sugar, never new semantics).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_compressed_expansion_is_base_isa() {
+    forall(
+        0xC0_DEC5,
+        20_000,
+        |r| r.next_u64() as u16,
+        |&half| {
+            if half & 0b11 == 0b11 {
+                return Ok(()); // 32-bit prefix: not a compressed encoding
+            }
+            let op = decode16(half);
+            if matches!(op, Op::Illegal { .. }) {
+                return Ok(());
+            }
+            let base = encode(op);
+            let again = decode32(base);
+            if again == op {
+                Ok(())
+            } else {
+                Err(format!(
+                    "c {:#06x} -> {:?} but base {:#010x} -> {:?}",
+                    half, op, base, again
+                ))
+            }
+        },
+    );
 }
 
 // ---------------------------------------------------------------------------
