@@ -1,0 +1,457 @@
+//! The `bench` subcommand: a reproducible benchmark baseline across
+//! workload × engine × model cells, written to `BENCH_engines.json`.
+//!
+//! Every built-in workload is run under a fixed configuration matrix —
+//! the functional-parallel engine (QEMU-comparable, Figure 5's fast bar)
+//! and the lockstep DBT engine under simple/atomic and inorder with the
+//! tlb/cache/mesi memory models — plus a dispatch-ablation pair on the
+//! coremark workload: chain-following dispatch (the default) against
+//! block-lookup-only dispatch (`--no-chaining`), so every future PR can
+//! read the dispatch win straight out of the JSON trajectory.
+//!
+//! Methodology (DESIGN.md §9): one untimed warm-up run, then best-of-N
+//! wall time via [`crate::bench::bench`], with the best run's own work
+//! count paired to its time. Each timed run boots a fresh engine, so the
+//! numbers include translation warm-up — deliberately: they are
+//! end-to-end run MIPS, reproducible without a steady-state protocol.
+//! Counter fields (insts/cycles/chain/model stats) also come from the
+//! best timed run, so every field of a cell describes the same run.
+
+use crate::bench::{bench_with, Measurement};
+use crate::coordinator::{run_image, EngineMode, SimConfig};
+use crate::engine::{EngineStats, ExitReason};
+use crate::workloads;
+use std::time::Duration;
+
+/// Options for one `bench` invocation.
+#[derive(Debug, Clone)]
+pub struct BenchOptions {
+    /// Timed runs per cell (after one warm-up); clamped to >= 1.
+    pub runs: u32,
+    /// Reduced workload sizes (the CI smoke configuration).
+    pub quick: bool,
+    /// Restrict to one workload by name.
+    pub workload: Option<String>,
+    /// Where the machine-readable report is written.
+    pub json_path: String,
+}
+
+impl Default for BenchOptions {
+    fn default() -> Self {
+        BenchOptions {
+            runs: 3,
+            quick: false,
+            workload: None,
+            json_path: "BENCH_engines.json".into(),
+        }
+    }
+}
+
+/// (workload, harts): multi-core workloads run with two harts so the
+/// coherent models have actual sharing to simulate.
+pub const BENCH_WORKLOADS: &[(&str, usize)] = &[
+    ("coremark-lite", 1),
+    ("memlat", 1),
+    ("dedup", 2),
+    ("spinlock", 2),
+    ("vm-sv39", 1),
+];
+
+/// (mode, pipeline, memory) configuration matrix, Table 1 × Table 2's
+/// valid engine/model combinations at benchmark-relevant points.
+const MATRIX: &[(&str, &str, &str)] = &[
+    ("parallel", "atomic", "atomic"),
+    ("lockstep", "simple", "atomic"),
+    ("lockstep", "inorder", "tlb"),
+    ("lockstep", "inorder", "cache"),
+    ("lockstep", "inorder", "mesi"),
+];
+
+/// One measured workload × configuration cell.
+pub struct Cell {
+    pub workload: String,
+    pub mode: &'static str,
+    pub pipeline: &'static str,
+    pub memory: &'static str,
+    /// "chain" (default dispatch) or "lookup" (`--no-chaining` ablation).
+    pub dispatch: &'static str,
+    pub harts: usize,
+    pub measurement: Measurement,
+    /// Guest instructions / simulated cycles of the best timed run (the
+    /// run `measurement.best` measures).
+    pub insts: u64,
+    pub cycles: u64,
+    /// Exit code if the guest exited cleanly.
+    pub exit: Option<u64>,
+    pub engine_stats: EngineStats,
+    pub model_stats: Vec<(&'static str, u64)>,
+}
+
+/// The one label format shared by live cells and skipped-cell records.
+fn cell_label(
+    workload: &str,
+    mode: &str,
+    pipeline: &str,
+    memory: &str,
+    lookup_dispatch: bool,
+) -> String {
+    let ablation = if lookup_dispatch { "/nochain" } else { "" };
+    format!("{} {}/{}+{}{}", workload, mode, pipeline, memory, ablation)
+}
+
+impl Cell {
+    pub fn label(&self) -> String {
+        cell_label(
+            &self.workload,
+            self.mode,
+            self.pipeline,
+            self.memory,
+            self.dispatch == "lookup",
+        )
+    }
+
+    pub fn mips(&self) -> f64 {
+        self.measurement.mips()
+    }
+}
+
+/// The full bench report.
+pub struct BenchReport {
+    pub quick: bool,
+    pub runs: u32,
+    pub cells: Vec<Cell>,
+    /// Labels of matrix cells that could not run at all (workload failed
+    /// to build, configuration rejected): recorded in the JSON so a
+    /// vanished row reads as "failed", never as "not measured".
+    pub skipped: Vec<String>,
+    pub host_cpus: usize,
+}
+
+/// Run one cell: boot a fresh engine per timed run, best-of-N.
+fn run_cell(
+    workload: &str,
+    harts: usize,
+    mode: &'static str,
+    pipeline: &'static str,
+    memory: &'static str,
+    lookup_dispatch: bool,
+    runs: u32,
+    quick: bool,
+) -> Option<Cell> {
+    let image = workloads::build_bench(workload, harts, quick)?;
+    let mut cfg = SimConfig::default();
+    cfg.harts = harts;
+    cfg.mode = EngineMode::parse(mode)?;
+    cfg.pipeline = pipeline.into();
+    cfg.memory = memory.into();
+    cfg.no_chaining = lookup_dispatch;
+    // Backstop so a regressed workload shows up as a truncated cell
+    // instead of a hung bench (generous: every built-in workload retires
+    // orders of magnitude less).
+    cfg.max_insts = 4_000_000_000;
+    if cfg.validate().is_err() {
+        return None;
+    }
+
+    let dispatch = if lookup_dispatch { "lookup" } else { "chain" };
+    let mut cell = Cell {
+        workload: workload.into(),
+        mode,
+        pipeline,
+        memory,
+        dispatch,
+        harts,
+        measurement: Measurement {
+            name: String::new(),
+            best: Duration::ZERO,
+            mean: Duration::ZERO,
+            work: 0,
+            runs: 0,
+        },
+        insts: 0,
+        cycles: 0,
+        exit: None,
+        engine_stats: EngineStats::default(),
+        model_stats: Vec::new(),
+    };
+    // bench_with carries the best run's full report alongside the
+    // measurement, so every field of the cell — work, best_secs, insts,
+    // cycles, engine/model stats — describes the same run (per-run counts
+    // vary in the parallel engine).
+    let label = cell.label();
+    let (measurement, report) = bench_with(&label, runs.max(1), || {
+        let report = run_image(&cfg, &image);
+        (report.total_insts, report)
+    })?;
+    cell.measurement = measurement;
+    cell.insts = report.total_insts;
+    cell.cycles = report.per_hart.iter().map(|&(c, _)| c).sum();
+    cell.exit = match report.exit {
+        ExitReason::Exited(code) => Some(code),
+        _ => None,
+    };
+    cell.engine_stats = report.engine_stats.unwrap_or_default();
+    cell.model_stats = report.model_stats.clone();
+    Some(cell)
+}
+
+/// Run the full matrix.
+pub fn run_bench(opts: &BenchOptions) -> BenchReport {
+    let runs = opts.runs.max(1);
+    let mut cells = Vec::new();
+    let mut skipped = Vec::new();
+    for &(workload, harts) in BENCH_WORKLOADS {
+        if let Some(only) = &opts.workload {
+            if only != workload {
+                continue;
+            }
+        }
+        for &(mode, pipeline, memory) in MATRIX {
+            let mut variants = vec![false];
+            // Dispatch ablation: the chain-vs-lookup pair is measured on
+            // the coremark cell only (hot loops, pipeline-bound — the
+            // configuration where dispatch cost is most visible).
+            if workload == "coremark-lite" && mode == "lockstep" && memory == "atomic" {
+                variants.push(true);
+            }
+            for lookup in variants {
+                match run_cell(workload, harts, mode, pipeline, memory, lookup, runs, opts.quick)
+                {
+                    Some(cell) => cells.push(cell),
+                    None => {
+                        let label = cell_label(workload, mode, pipeline, memory, lookup);
+                        eprintln!("warning: bench cell {} could not run (skipped)", label);
+                        skipped.push(label);
+                    }
+                }
+            }
+        }
+    }
+    BenchReport {
+        quick: opts.quick,
+        runs,
+        cells,
+        skipped,
+        host_cpus: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+impl BenchReport {
+    fn coremark_mips(&self, dispatch: &str) -> Option<f64> {
+        self.cells
+            .iter()
+            .find(|c| {
+                c.workload == "coremark-lite"
+                    && c.mode == "lockstep"
+                    && c.memory == "atomic"
+                    && c.dispatch == dispatch
+            })
+            .map(Cell::mips)
+    }
+
+    /// Chain-following dispatch MIPS on the coremark cell.
+    pub fn coremark_chain_mips(&self) -> Option<f64> {
+        self.coremark_mips("chain")
+    }
+
+    /// Block-lookup-only dispatch MIPS on the coremark cell.
+    pub fn coremark_lookup_mips(&self) -> Option<f64> {
+        self.coremark_mips("lookup")
+    }
+
+    /// Human-readable table.
+    pub fn table(&self) -> String {
+        let mut s = format!(
+            "bench: {} cell(s), best of {} run(s){}, {} host cpu(s)\n",
+            self.cells.len(),
+            self.runs,
+            if self.quick { " [quick sizes]" } else { "" },
+            self.host_cpus
+        );
+        for cell in &self.cells {
+            let stats = &cell.engine_stats;
+            s.push_str(&format!(
+                "{:<44} {:>9.2} MIPS  best {:>8.3}s  insts {:>12}  chain {:.1}%{}\n",
+                cell.label(),
+                cell.mips(),
+                cell.measurement.best.as_secs_f64(),
+                cell.insts,
+                100.0 * stats.chain_hit_rate(),
+                if cell.exit.is_some() { "" } else { "  [NO CLEAN EXIT]" },
+            ));
+        }
+        for label in &self.skipped {
+            s.push_str(&format!("{:<44}    [SKIPPED — could not run]\n", label));
+        }
+        if let (Some(chain), Some(lookup)) = (self.coremark_chain_mips(), self.coremark_lookup_mips())
+        {
+            if lookup > 0.0 {
+                s.push_str(&format!(
+                    "coremark dispatch: chain {:.2} MIPS vs lookup {:.2} MIPS ({:.2}x)\n",
+                    chain,
+                    lookup,
+                    chain / lookup
+                ));
+            }
+        }
+        s
+    }
+
+    /// Machine-readable report (schema `r2vm-bench-engines-v1`).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"r2vm-bench-engines-v1\",\n");
+        s.push_str(&format!("  \"quick\": {},\n", self.quick));
+        s.push_str(&format!("  \"runs\": {},\n", self.runs));
+        s.push_str(&format!(
+            "  \"host\": {{\"os\": \"{}\", \"arch\": \"{}\", \"cpus\": {}}},\n",
+            std::env::consts::OS,
+            std::env::consts::ARCH,
+            self.host_cpus
+        ));
+        s.push_str("  \"cells\": [\n");
+        for (i, cell) in self.cells.iter().enumerate() {
+            let stats = &cell.engine_stats;
+            s.push_str(&format!(
+                "    {{\"workload\": \"{}\", \"mode\": \"{}\", \"pipeline\": \"{}\", \
+                 \"memory\": \"{}\", \"dispatch\": \"{}\", \"harts\": {}, ",
+                cell.workload, cell.mode, cell.pipeline, cell.memory, cell.dispatch, cell.harts
+            ));
+            s.push_str(&format!(
+                "\"mips\": {:.6}, \"best_secs\": {:.6}, \"mean_secs\": {:.6}, \"runs\": {}, ",
+                cell.mips(),
+                cell.measurement.best.as_secs_f64(),
+                cell.measurement.mean.as_secs_f64(),
+                cell.measurement.runs
+            ));
+            s.push_str(&format!(
+                "\"insts\": {}, \"cycles\": {}, \"exit_ok\": {}, ",
+                cell.insts,
+                cell.cycles,
+                cell.exit.is_some()
+            ));
+            s.push_str(&format!(
+                "\"chain_hits\": {}, \"chain_misses\": {}, \"chain_hit_rate\": {:.6}, \
+                 \"block_entries\": {}, \"blocks_translated\": {}, ",
+                stats.chain_hits,
+                stats.chain_misses,
+                stats.chain_hit_rate(),
+                stats.block_entries,
+                stats.blocks_translated
+            ));
+            s.push_str("\"model_stats\": {");
+            for (j, (k, v)) in cell.model_stats.iter().enumerate() {
+                if j > 0 {
+                    s.push_str(", ");
+                }
+                s.push_str(&format!("\"{}\": {}", k, v));
+            }
+            s.push_str("}}");
+            if i + 1 < self.cells.len() {
+                s.push(',');
+            }
+            s.push('\n');
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"skipped_cells\": [");
+        for (i, label) in self.skipped.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!("\"{}\"", label));
+        }
+        s.push_str("],\n");
+        let fmt_opt = |v: Option<f64>| match v {
+            Some(x) => format!("{:.6}", x),
+            None => "null".into(),
+        };
+        s.push_str(&format!(
+            "  \"coremark_chain_mips\": {},\n",
+            fmt_opt(self.coremark_chain_mips())
+        ));
+        s.push_str(&format!(
+            "  \"coremark_lookup_mips\": {},\n",
+            fmt_opt(self.coremark_lookup_mips())
+        ));
+        let speedup = match (self.coremark_chain_mips(), self.coremark_lookup_mips()) {
+            (Some(c), Some(l)) if l > 0.0 => Some(c / l),
+            _ => None,
+        };
+        s.push_str(&format!("  \"coremark_chain_speedup\": {}\n", fmt_opt(speedup)));
+        s.push_str("}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One tiny cell end-to-end: the workload runs, exits cleanly, and
+    /// chain-following dispatch serves the vast majority of entries.
+    #[test]
+    fn single_cell_runs_and_chains() {
+        let cell = run_cell("coremark-lite", 1, "lockstep", "simple", "atomic", false, 1, true)
+            .expect("cell must run");
+        assert!(cell.exit.is_some(), "workload must exit cleanly");
+        assert!(cell.insts > 0);
+        assert!(cell.measurement.work > 0);
+        let stats = &cell.engine_stats;
+        assert!(stats.block_entries > 0);
+        assert!(
+            stats.chain_hit_rate() > 0.5,
+            "chain dispatch must dominate: {:?}",
+            stats
+        );
+    }
+
+    /// The lookup-dispatch ablation cell records zero chain hits.
+    #[test]
+    fn lookup_cell_has_no_chain_hits() {
+        let cell = run_cell("coremark-lite", 1, "lockstep", "simple", "atomic", true, 1, true)
+            .expect("cell must run");
+        assert_eq!(cell.engine_stats.chain_hits, 0);
+        assert!(cell.engine_stats.chain_misses > 0);
+        assert_eq!(cell.dispatch, "lookup");
+    }
+
+    /// Quick-matrix smoke on one workload + JSON structural checks.
+    #[test]
+    fn quick_report_schema_is_stable() {
+        let opts = BenchOptions {
+            runs: 1,
+            quick: true,
+            workload: Some("coremark-lite".into()),
+            ..Default::default()
+        };
+        let report = run_bench(&opts);
+        // 5 matrix cells + the lookup-dispatch ablation cell.
+        assert_eq!(report.cells.len(), MATRIX.len() + 1, "every cell must complete");
+        assert!(report.cells.iter().all(|c| c.exit.is_some()));
+        assert!(report.coremark_chain_mips().is_some());
+        assert!(report.coremark_lookup_mips().is_some());
+
+        assert!(report.skipped.is_empty(), "skipped: {:?}", report.skipped);
+
+        let json = report.to_json();
+        assert!(json.contains("\"schema\": \"r2vm-bench-engines-v1\""));
+        assert!(json.contains("\"skipped_cells\": []"));
+        assert!(json.contains("\"dispatch\": \"chain\""));
+        assert!(json.contains("\"dispatch\": \"lookup\""));
+        assert!(json.contains("\"chain_hit_rate\""));
+        assert!(json.contains("\"coremark_chain_mips\""));
+        assert!(json.contains("\"coremark_lookup_mips\""));
+        assert!(json.contains("\"coremark_chain_speedup\""));
+        // Crude structural checks (no JSON parser offline): balanced
+        // braces/brackets, no trailing comma before a closing bracket.
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+        assert!(!json.contains(",\n  ]"));
+        assert!(!json.contains(",}"));
+
+        let table = report.table();
+        assert!(table.contains("coremark-lite"));
+        assert!(table.contains("coremark dispatch: chain"));
+    }
+}

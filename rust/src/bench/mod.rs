@@ -1,6 +1,12 @@
 //! Internal benchmarking harness (criterion is unavailable offline; see
 //! DESIGN.md §3). Measures wall time over repeated runs and reports the
-//! MIPS-style numbers the paper's Figure 5 uses.
+//! MIPS-style numbers the paper's Figure 5 uses. The [`engines`]
+//! submodule drives the `bench` CLI subcommand's workload × engine ×
+//! model matrix and writes `BENCH_engines.json`.
+
+pub mod engines;
+
+pub use engines::{run_bench, BenchOptions, BenchReport};
 
 use std::time::{Duration, Instant};
 
@@ -11,15 +17,22 @@ pub struct Measurement {
     /// Best (minimum) wall time across runs.
     pub best: Duration,
     pub mean: Duration,
-    /// Work units (e.g. guest instructions) per run.
+    /// Work units (e.g. guest instructions) performed by the *best* run —
+    /// paired with `best` so the reported rate is internally consistent
+    /// even when per-run work varies.
     pub work: u64,
     pub runs: u32,
 }
 
 impl Measurement {
-    /// Work units per second at the best run.
+    /// Work units per second at the best run. 0 when nothing was measured
+    /// (zero runs, zero work, or a sub-tick wall clock) — never inf/NaN.
     pub fn rate(&self) -> f64 {
-        self.work as f64 / self.best.as_secs_f64()
+        let secs = self.best.as_secs_f64();
+        if self.runs == 0 || self.work == 0 || secs <= 0.0 {
+            return 0.0;
+        }
+        self.work as f64 / secs
     }
 
     /// Millions of work units per second (MIPS when work = instructions).
@@ -41,22 +54,54 @@ impl Measurement {
 }
 
 /// Run `f` (which returns the number of work units performed) `runs` times
-/// after one warmup, reporting the best time.
+/// after one warmup, reporting the best time paired with that same run's
+/// work (per-run work can vary, so pairing the best time with another
+/// run's work would misreport the rate). `runs == 0` yields an empty
+/// measurement (zero time/work, rate 0) instead of a `Duration::MAX` best.
 pub fn bench(name: &str, runs: u32, mut f: impl FnMut() -> u64) -> Measurement {
+    match bench_with(name, runs, || (f(), ())) {
+        Some((m, ())) => m,
+        None => Measurement {
+            name: name.into(),
+            best: Duration::ZERO,
+            mean: Duration::ZERO,
+            work: 0,
+            runs: 0,
+        },
+    }
+}
+
+/// The same warm-up / best-of-N / pair-best-with-its-own-work protocol as
+/// [`bench`], for closures that also produce a payload (e.g. a full run
+/// report): the payload returned is the *best run's*, so every derived
+/// number describes the same run the measurement timed. This is the one
+/// copy of the measurement protocol — [`bench`] delegates here. `None`
+/// when `runs == 0` (nothing was measured, so there is no payload).
+pub fn bench_with<T>(
+    name: &str,
+    runs: u32,
+    mut f: impl FnMut() -> (u64, T),
+) -> Option<(Measurement, T)> {
+    if runs == 0 {
+        return None;
+    }
     let _ = f(); // warmup (fills code caches, page cache, etc.)
-    let mut best = Duration::MAX;
+    let mut best: Option<(Duration, u64, T)> = None;
     let mut total = Duration::ZERO;
-    let mut work = 0;
     for _ in 0..runs {
         let t0 = Instant::now();
-        work = f();
+        let (work, payload) = f();
         let dt = t0.elapsed();
         total += dt;
-        if dt < best {
-            best = dt;
+        if best.as_ref().map_or(true, |&(b, _, _)| dt < b) {
+            best = Some((dt, work, payload));
         }
     }
-    Measurement { name: name.into(), best, mean: total / runs.max(1), work, runs }
+    let (best_dt, work, payload) = best?;
+    Some((
+        Measurement { name: name.into(), best: best_dt, mean: total / runs, work, runs },
+        payload,
+    ))
 }
 
 /// Simple fixed-width table printer for benchmark reports.
@@ -85,5 +130,74 @@ mod tests {
         assert!(m.best <= m.mean);
         assert!(m.rate() > 0.0);
         assert!(m.row().contains("spin"));
+    }
+
+    #[test]
+    fn best_time_pairs_with_its_own_work() {
+        // Per-run work varies: a short run does little work, a long run
+        // does a lot. The best (shortest) time must report the short
+        // run's work, not whatever the last run happened to do.
+        let mut call = 0u32;
+        let m = bench("varying", 3, || {
+            call += 1;
+            match call {
+                1 => 0,                  // warmup (excluded)
+                2 => {
+                    std::thread::sleep(Duration::from_millis(1));
+                    100
+                }
+                _ => {
+                    std::thread::sleep(Duration::from_millis(60));
+                    1_000_000
+                }
+            }
+        });
+        assert_eq!(m.runs, 3);
+        assert_eq!(m.work, 100, "best time must carry the fast run's work");
+        assert!(m.best < Duration::from_millis(60));
+        // The paired rate can never exceed fast-run work / fast-run time
+        // misattributed from the slow runs' work.
+        assert!(m.rate() < 100.0 / 0.001 + 1.0);
+    }
+
+    #[test]
+    fn bench_with_returns_best_runs_payload() {
+        // The payload handed back must belong to the same run as the
+        // measurement's best time and work.
+        let mut call = 0u32;
+        let r = bench_with("payload", 2, || {
+            call += 1;
+            match call {
+                1 => (0, "warmup"),
+                2 => {
+                    std::thread::sleep(Duration::from_millis(50));
+                    (7, "slow")
+                }
+                _ => {
+                    std::thread::sleep(Duration::from_millis(1));
+                    (3, "fast")
+                }
+            }
+        });
+        let (m, payload) = r.expect("two runs measured");
+        assert_eq!(payload, "fast");
+        assert_eq!(m.work, 3, "work comes from the same run as the payload");
+        assert_eq!(m.runs, 2);
+        assert!(bench_with("none", 0, || (1, ())).is_none());
+    }
+
+    #[test]
+    fn zero_runs_produces_empty_measurement() {
+        let mut calls = 0u32;
+        let m = bench("none", 0, || {
+            calls += 1;
+            42
+        });
+        assert_eq!(calls, 0, "no warmup either — nothing is measured");
+        assert_eq!(m.runs, 0);
+        assert_eq!(m.work, 0);
+        assert_eq!(m.best, Duration::ZERO);
+        assert_eq!(m.rate(), 0.0, "no Duration::MAX nonsense rates");
+        assert!(m.mips().is_finite());
     }
 }

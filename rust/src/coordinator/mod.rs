@@ -202,6 +202,17 @@ impl RunReport {
         for (i, (cyc, ins)) in self.per_hart.iter().enumerate() {
             s.push_str(&format!("  hart{}: mcycle={} minstret={}\n", i, cyc, ins));
         }
+        if let Some(stats) = &self.engine_stats {
+            if stats.block_entries > 0 {
+                s.push_str(&format!(
+                    "  dispatch: entries={} chain_hits={} chain_misses={} hit_rate={:.1}%\n",
+                    stats.block_entries,
+                    stats.chain_hits,
+                    stats.chain_misses,
+                    100.0 * stats.chain_hit_rate()
+                ));
+            }
+        }
         for (k, v) in &self.model_stats {
             s.push_str(&format!("  {}={}\n", k, v));
         }

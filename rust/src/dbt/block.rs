@@ -15,6 +15,52 @@ use std::cell::Cell;
 /// Index of a block within its (per-hart) code cache arena.
 pub type BlockId = u32;
 
+/// A block-chaining link (§3.1): the successor block id packed with the
+/// code-cache generation at install time. Following validates the
+/// generation, so a link installed before a cache flush is dead the moment
+/// the flush bumps the generation — block ids are reused across flushes
+/// and a naked id could otherwise name an unrelated translation.
+///
+/// Layout: `(generation & 0xffff_ffff) << 32 | id`; `u64::MAX` = empty.
+/// (Truncating the generation to 32 bits is safe: a collision needs 2^32
+/// flushes between install and follow with the link cell itself surviving,
+/// and flushes destroy every block, link cells included.)
+#[derive(Debug)]
+pub struct ChainLink(Cell<u64>);
+
+const NO_LINK: u64 = u64::MAX;
+
+impl ChainLink {
+    pub fn empty() -> ChainLink {
+        ChainLink(Cell::new(NO_LINK))
+    }
+
+    /// Target block id, if a link was installed in generation `gen`.
+    #[inline(always)]
+    pub fn follow(&self, gen: u64) -> Option<BlockId> {
+        let v = self.0.get();
+        if v != NO_LINK && (v >> 32) == (gen & 0xffff_ffff) {
+            Some(v as u32)
+        } else {
+            None
+        }
+    }
+
+    /// Install a link to `id`, stamped with generation `gen`.
+    #[inline]
+    pub fn install(&self, gen: u64, id: BlockId) {
+        self.0.set(((gen & 0xffff_ffff) << 32) | id as u64);
+    }
+
+    pub fn clear(&self) {
+        self.0.set(NO_LINK);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.get() == NO_LINK
+    }
+}
+
 /// A translated non-terminator instruction.
 #[derive(Debug, Clone, Copy)]
 pub struct Step {
@@ -84,10 +130,12 @@ pub struct Block {
     /// 16-32 instructions at 64-byte lines).
     pub icache_checks: Vec<u64>,
     pub cross_page: Option<CrossPageStub>,
-    /// Block chaining (§3.1): resolved successor block ids, validated
-    /// against the code-cache generation. `u32::MAX` = unresolved.
-    pub chain_taken: Cell<BlockId>,
-    pub chain_seq: Cell<BlockId>,
+    /// Block chaining (§3.1): generation-validated successor links,
+    /// followed directly by the dispatch loop without re-hashing the PC.
+    /// `chain_taken` holds the taken-branch / jump / indirect-last-target
+    /// successor, `chain_seq` the sequential one.
+    pub chain_taken: ChainLink,
+    pub chain_seq: ChainLink,
 }
 
 pub const NO_CHAIN: BlockId = u32::MAX;
@@ -157,8 +205,8 @@ mod tests {
             },
             icache_checks: vec![0x8000_0000],
             cross_page: None,
-            chain_taken: Cell::new(NO_CHAIN),
-            chain_seq: Cell::new(NO_CHAIN),
+            chain_taken: ChainLink::empty(),
+            chain_seq: ChainLink::empty(),
         }
     }
 
@@ -169,5 +217,24 @@ mod tests {
         assert_eq!(b.seq_target(), 0x8000_0008);
         assert_eq!(b.taken_target(), 0x8000_0000);
         assert_eq!(b.inst_count(), 2);
+    }
+
+    #[test]
+    fn chain_link_generation_validation() {
+        let link = ChainLink::empty();
+        assert!(link.is_empty());
+        assert_eq!(link.follow(0), None);
+        link.install(3, 17);
+        assert_eq!(link.follow(3), Some(17), "same generation follows");
+        // A stale-generation link must never be followed after a flush
+        // bumps the cache generation.
+        assert_eq!(link.follow(4), None, "newer generation rejects");
+        assert_eq!(link.follow(2), None, "older generation rejects");
+        link.clear();
+        assert!(link.is_empty());
+        assert_eq!(link.follow(3), None);
+        // id 0 in generation 0 is a valid link, not the empty sentinel.
+        link.install(0, 0);
+        assert_eq!(link.follow(0), Some(0));
     }
 }

@@ -5,7 +5,7 @@
 //! needed to modify it — the design decision the paper takes in contrast to
 //! Cota et al.'s shared cache.
 
-use super::block::{Block, BlockId, NO_CHAIN};
+use super::block::{Block, BlockId};
 use std::collections::HashMap;
 use std::hash::{BuildHasherDefault, Hasher};
 
@@ -124,30 +124,23 @@ impl CodeCache {
         self.flushes += 1;
     }
 
-    /// Resolve + store a chain link (§3.1 block chaining). Returns the
-    /// target id if present.
+    /// Store a chain link to an already-resolved target, stamped with the
+    /// current generation (the eager installation the dispatch loop does
+    /// right after a lookup/translation, so no PC re-hash is ever needed).
     #[inline]
-    pub fn chain_to(&mut self, from: BlockId, taken: bool, pc: u64, prv: u8) -> Option<BlockId> {
-        let target = self.get(pc, prv)?;
+    pub fn install_link(&self, from: BlockId, taken: bool, target: BlockId) {
         let b = self.block(from);
-        if taken {
-            b.chain_taken.set(target);
-        } else {
-            b.chain_seq.set(target);
-        }
-        Some(target)
+        let link = if taken { &b.chain_taken } else { &b.chain_seq };
+        link.install(self.generation, target);
     }
 
-    /// Follow a previously-established chain link.
+    /// Follow a previously-established chain link. Links from a stale
+    /// generation (installed before a flush) are never followed.
     #[inline]
     pub fn follow_chain(&self, from: BlockId, taken: bool) -> Option<BlockId> {
         let b = self.block(from);
-        let id = if taken { b.chain_taken.get() } else { b.chain_seq.get() };
-        if id == NO_CHAIN {
-            None
-        } else {
-            Some(id)
-        }
+        let link = if taken { &b.chain_taken } else { &b.chain_seq };
+        link.follow(self.generation)
     }
 }
 
@@ -208,14 +201,41 @@ mod tests {
         let a = c.insert(0x1000, 3, trivial_block(0x1000));
         let b = c.insert(0x2000, 3, trivial_block(0x2000));
         assert_eq!(c.follow_chain(a, true), None);
-        assert_eq!(c.chain_to(a, true, 0x2000, 3), Some(b));
+        c.install_link(a, true, b);
         assert_eq!(c.follow_chain(a, true), Some(b));
-        assert_eq!(c.follow_chain(a, false), None);
+        assert_eq!(c.follow_chain(a, false), None, "slots are independent");
+        c.install_link(a, false, a);
+        assert_eq!(c.follow_chain(a, false), Some(a), "self-links allowed");
     }
 
     #[test]
     fn key_privilege_separation() {
         assert_ne!(cache_key(0x1000, 0), cache_key(0x1000, 3));
         assert_eq!(cache_key(0x1000, 3), cache_key(0x1000, 3));
+    }
+
+    #[test]
+    fn stale_generation_chain_links_are_never_followed() {
+        // A link installed before a flush must be dead afterwards, even
+        // when block ids are reused by post-flush translations at the very
+        // same addresses.
+        let mut c = CodeCache::new();
+        let a = c.insert(0x1000, 3, trivial_block(0x1000));
+        let b = c.insert(0x2000, 3, trivial_block(0x2000));
+        c.install_link(a, true, b);
+        assert_eq!(c.follow_chain(a, true), Some(b));
+        c.flush();
+        let a2 = c.insert(0x1000, 3, trivial_block(0x1000));
+        let b2 = c.insert(0x2000, 3, trivial_block(0x2000));
+        assert_eq!((a2, b2), (a, b), "ids are reused across the flush");
+        assert_eq!(c.follow_chain(a2, true), None, "fresh blocks start unlinked");
+        // Re-install under the new generation and it works again.
+        c.install_link(a2, true, b2);
+        assert_eq!(c.follow_chain(a2, true), Some(b2));
+        // A link cell stamped with an old generation (simulating a cell
+        // that somehow survived) is rejected by the generation check.
+        let blk = c.block(a2);
+        blk.chain_seq.install(c.generation - 1, b2);
+        assert_eq!(c.follow_chain(a2, false), None, "stale generation rejected");
     }
 }

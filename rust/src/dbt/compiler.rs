@@ -2,12 +2,11 @@
 //! trace, invoking the pipeline model's hooks per instruction so cycle
 //! counts are baked into the translation (paper §3.2, Listing 1).
 
-use super::block::{Block, CrossPageStub, Step, Term, TermKind, NO_CHAIN};
+use super::block::{Block, ChainLink, CrossPageStub, Step, Term, TermKind};
 use crate::isa::decode::{decode16, decode32, inst_len};
 use crate::isa::op::Op;
 use crate::pipeline::PipelineModel;
 use crate::sys::Trap;
-use std::cell::Cell;
 
 /// Maximum instructions translated into one block (long straight-line code
 /// is split; the tail continues in the next block).
@@ -129,8 +128,8 @@ pub fn translate(
                 term,
                 icache_checks,
                 cross_page,
-                chain_taken: Cell::new(NO_CHAIN),
-                chain_seq: Cell::new(NO_CHAIN),
+                chain_taken: ChainLink::empty(),
+                chain_seq: ChainLink::empty(),
             });
         }
 

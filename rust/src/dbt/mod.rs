@@ -6,6 +6,6 @@ pub mod block;
 pub mod cache;
 pub mod compiler;
 
-pub use block::{Block, BlockId, CrossPageStub, Step, Term, TermKind, NO_CHAIN};
+pub use block::{Block, BlockId, ChainLink, CrossPageStub, Step, Term, TermKind, NO_CHAIN};
 pub use cache::CodeCache;
 pub use compiler::{translate, DbtCompiler, FetchProbe, MAX_BLOCK_INSTS};

@@ -46,7 +46,10 @@ pub struct EngineStats {
     pub yields: u64,
     pub blocks_translated: u64,
     pub block_entries: u64,
+    /// Block entries served by following a chain link (no PC re-hash).
     pub chain_hits: u64,
+    /// Block entries that fell back to the PC-map lookup / translation.
+    pub chain_misses: u64,
     pub retranslations: u64,
 }
 
@@ -58,7 +61,18 @@ impl EngineStats {
         self.blocks_translated += other.blocks_translated;
         self.block_entries += other.block_entries;
         self.chain_hits += other.chain_hits;
+        self.chain_misses += other.chain_misses;
         self.retranslations += other.retranslations;
+    }
+
+    /// Fraction of block entries served by chain-following dispatch.
+    pub fn chain_hit_rate(&self) -> f64 {
+        let total = self.chain_hits + self.chain_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.chain_hits as f64 / total as f64
+        }
     }
 }
 
@@ -234,7 +248,11 @@ pub fn merge_simctrl(current: u64, write: u64) -> u64 {
     if (write >> 4) & 0b111 != 0 {
         merged = (merged & !(0b111 << 4)) | (write & (0b111 << 4));
     }
-    if (write >> 8) & 0xfff != 0 {
+    // The line-size field merges only when it would actually be applied:
+    // a malformed value (non-power-of-two, or outside 4..=4096 bytes) is
+    // rejected by every engine's SIMCTRL handler, so recording it would
+    // make guest reads report a line size that was never installed.
+    if line_shift_by_code(write).is_some() {
         merged = (merged & !(0xfff << 8)) | (write & (0xfff << 8));
     }
     if matches!((write >> SIMCTRL_ENGINE_SHIFT) & 0b111, 1..=3) {
@@ -249,12 +267,20 @@ mod tests {
 
     #[test]
     fn stats_merge_accumulates() {
-        let mut a = EngineStats { slices: 1, yields: 2, ..Default::default() };
-        let b = EngineStats { slices: 10, chain_hits: 5, ..Default::default() };
+        let mut a = EngineStats { slices: 1, yields: 2, chain_misses: 1, ..Default::default() };
+        let b = EngineStats { slices: 10, chain_hits: 5, chain_misses: 2, ..Default::default() };
         a.merge(&b);
         assert_eq!(a.slices, 11);
         assert_eq!(a.yields, 2);
         assert_eq!(a.chain_hits, 5);
+        assert_eq!(a.chain_misses, 3);
+    }
+
+    #[test]
+    fn chain_hit_rate_guards_empty() {
+        assert_eq!(EngineStats::default().chain_hit_rate(), 0.0);
+        let s = EngineStats { chain_hits: 3, chain_misses: 1, ..Default::default() };
+        assert!((s.chain_hit_rate() - 0.75).abs() < 1e-12);
     }
 
     #[test]
@@ -285,6 +311,32 @@ mod tests {
         assert_eq!(merge_simctrl(current, full), full);
         // Invalid engine codes are not merged in.
         assert_eq!(merge_simctrl(current, 7 << SIMCTRL_ENGINE_SHIFT), current);
+    }
+
+    #[test]
+    fn simctrl_merge_rejects_invalid_line_size() {
+        // Round-trip invariant: what merges into the recorded state is
+        // exactly what line_shift_by_code would apply — a guest read of
+        // SIMCTRL must never report a line size that was rejected.
+        let current = 3 | (4 << 4) | (64 << 8);
+        // Non-power-of-two line size: field kept, other fields merge.
+        let merged = merge_simctrl(current, (2 << 4) | (48 << 8));
+        assert_eq!(merged, 3 | (2 << 4) | (64 << 8), "48 B is not a power of two");
+        assert_eq!(line_shift_by_code(merged), Some(6), "recorded state stays applicable");
+        // Below the valid range (2 bytes).
+        assert_eq!(merge_simctrl(current, 2 << 8), current);
+        // Valid sizes still merge.
+        let merged = merge_simctrl(current, 128 << 8);
+        assert_eq!((merged >> 8) & 0xfff, 128);
+        // Every merged line field round-trips through the validator.
+        for write in [0u64, 1 << 8, 48 << 8, 64 << 8, 4095 << 8] {
+            let m = merge_simctrl(current, write);
+            assert!(
+                line_shift_by_code(m).is_some(),
+                "merged state {:#x} must hold an applicable line size",
+                m
+            );
+        }
     }
 
     #[test]

@@ -51,15 +51,51 @@ struct Cont {
     step: u32,
     /// `true` when resuming *at* a sync point whose yield already happened.
     resumed: bool,
-    /// Chain hint for the next block boundary (validated by start PC).
-    hint: BlockId,
+    /// Chain-followed successor to enter at the next block boundary
+    /// (NO_CHAIN = none), read from the finished block's chain link.
+    next: BlockId,
+    /// Code-cache generation `next` was read under; a flush in between
+    /// (mid-boundary SIMCTRL from another hart, etc.) kills the hop.
+    next_gen: u64,
+    /// Whether `next` came from a direct terminator (static target —
+    /// entered without re-validating the start PC) or a dynamic one
+    /// (cached last target — must match the live PC at entry).
+    next_direct: bool,
+    /// Pending eager link install (NO_CHAIN = none): the block whose exit
+    /// edge gets linked to whatever block the next entry resolves, so
+    /// every edge pays at most one hash lookup per generation.
+    prev: BlockId,
+    prev_taken: bool,
+    prev_gen: u64,
 }
 
 impl Cont {
+    fn new() -> Cont {
+        Cont {
+            block: NO_CHAIN,
+            step: 0,
+            resumed: false,
+            next: NO_CHAIN,
+            next_gen: 0,
+            next_direct: false,
+            prev: NO_CHAIN,
+            prev_taken: false,
+            prev_gen: 0,
+        }
+    }
+
     fn clear(&mut self) {
         self.block = NO_CHAIN;
         self.step = 0;
         self.resumed = false;
+    }
+
+    /// Drop the recorded exit edge (redirects, traps, flushes): neither
+    /// following a chained successor nor installing a link is valid once
+    /// control flow left the recorded edge.
+    fn clear_chain(&mut self) {
+        self.next = NO_CHAIN;
+        self.prev = NO_CHAIN;
     }
 }
 
@@ -99,9 +135,7 @@ impl FiberEngine {
             sys,
             caches: (0..n).map(|_| CodeCache::new()).collect(),
             pipelines,
-            conts: (0..n)
-                .map(|_| Cont { block: NO_CHAIN, step: 0, resumed: false, hint: NO_CHAIN })
-                .collect(),
+            conts: (0..n).map(|_| Cont::new()).collect(),
             nominal,
             yield_per_instruction: false,
             chaining: true,
@@ -145,28 +179,38 @@ impl FiberEngine {
         translate(&mut probe, self.pipelines[h].as_mut(), pc, line_shift)
     }
 
-    /// Enter the block at the hart's current PC: chain-follow or look up or
-    /// translate; validate cross-page stubs; perform the runtime L0
-    /// I-cache checks (§3.4.2).
+    /// Enter the block at the hart's current PC: chain-follow (the primary
+    /// path — no PC re-hash), else look up or translate and eagerly
+    /// install the chain link on the edge that brought us here; validate
+    /// cross-page stubs; perform the runtime L0 I-cache checks (§3.4.2).
     fn enter_block(&mut self, h: usize) -> Result<BlockId, Trap> {
         self.stats.block_entries += 1;
         let pc = self.harts[h].pc;
         let prv = self.harts[h].prv as u8;
+        let gen = self.caches[h].generation;
 
-        // Chain hint (block chaining §3.1 + the L0-icache indirect-target
-        // trick §3.4.2): valid if it still maps this PC.
+        // Chain-following primary path (§3.1 + §3.4.2): the finished
+        // block's exit recorded its generation-validated successor link.
+        // Direct terminators (branch / jal / sequential) are entered
+        // without re-hashing or re-validating the PC — the target is
+        // static for the life of the generation, and exits that leave the
+        // recorded edge (traps, interrupts, privilege changes) clear the
+        // chain state. Dynamic targets (jalr, mret/sret) cached the last
+        // successor and re-validate it against the live PC.
         let mut id = NO_CHAIN;
-        if self.chaining {
-            let hint = self.conts[h].hint;
-            if hint != NO_CHAIN
-                && (hint as usize) < self.caches[h].len()
-                && self.caches[h].block(hint).start == pc
-            {
-                id = hint;
-                self.stats.chain_hits += 1;
+        let next = self.conts[h].next;
+        if next != NO_CHAIN && self.conts[h].next_gen == gen {
+            if self.conts[h].next_direct {
+                debug_assert_eq!(self.caches[h].block(next).start, pc);
+                id = next;
+            } else if self.caches[h].block(next).start == pc {
+                id = next;
             }
         }
-        if id == NO_CHAIN {
+        if id != NO_CHAIN {
+            self.stats.chain_hits += 1;
+        } else {
+            self.stats.chain_misses += 1;
             id = match self.caches[h].get(pc, prv) {
                 Some(i) => i,
                 None => {
@@ -174,10 +218,20 @@ impl FiberEngine {
                     self.caches[h].insert(pc, prv, block)
                 }
             };
+            // Eager link installation: the edge we just resolved becomes
+            // chain-followable from its source block's next exit, whether
+            // the target was already translated or not — each edge pays
+            // at most one hash lookup per generation.
+            let prev = self.conts[h].prev;
+            if prev != NO_CHAIN && self.conts[h].prev_gen == self.caches[h].generation {
+                self.caches[h].install_link(prev, self.conts[h].prev_taken, id);
+            }
         }
+        self.conts[h].clear_chain();
 
-        // Cross-page guard (§3.1): re-read the second-page halfword and
-        // retranslate if the mapping changed.
+        // Cross-page fallback (§3.1): re-read the second-page halfword and
+        // retranslate if the mapping changed (applies to chained entries
+        // too — the link survives, the content check does not).
         if let Some(stub) = self.caches[h].block(id).cross_page {
             let seen = Self::probe_fetch(&self.harts[h], &self.sys, stub.vaddr)?;
             if seen != stub.expected {
@@ -188,11 +242,12 @@ impl FiberEngine {
         }
 
         // Runtime L0 I-cache checks: block entry + each crossed line.
+        let force_cold = self.sys.force_cold;
         let n_checks = self.caches[h].block(id).icache_checks.len();
         for k in 0..n_checks {
             let vaddr = self.caches[h].block(id).icache_checks[k];
             let hart = &mut self.harts[h];
-            if self.sys.force_cold || self.sys.l0[h].i.lookup(vaddr).is_none() {
+            if force_cold || self.sys.l0[h].i.lookup(vaddr).is_none() {
                 cold_fetch(hart, &mut self.sys, vaddr)?;
             }
         }
@@ -226,7 +281,7 @@ impl FiberEngine {
             self.sys.l0[h].clear();
         }
         self.conts[h].clear();
-        self.conts[h].hint = NO_CHAIN;
+        self.conts[h].clear_chain();
     }
 
     /// Apply pending side effects after a system instruction. Returns
@@ -280,7 +335,7 @@ impl FiberEngine {
         if matches!(engine, 1..=3) && engine != current {
             self.sys.simctrl_state = state;
             self.sys.request_engine_switch(state);
-            self.conts[h].hint = NO_CHAIN;
+            self.conts[h].clear_chain();
             return true;
         }
         let mut invalidated = false;
@@ -292,7 +347,7 @@ impl FiberEngine {
                 self.nominal[h] = !model.tracks_cycles();
                 self.pipelines[h] = model;
                 self.caches[h].flush();
-                self.conts[h].hint = NO_CHAIN;
+                self.conts[h].clear_chain();
                 invalidated = true;
             }
         }
@@ -305,14 +360,33 @@ impl FiberEngine {
             }
         }
         // Cache-line size (bytes): turning the L0 D-cache into an L0 TLB
-        // at 4096 (§3.5).
+        // at 4096 (§3.5). This flushes *every* hart's code cache, so any
+        // sibling hart suspended mid-block (yielded at a sync point)
+        // would resume into a cleared arena: write back its architectural
+        // PC from its continuation first (as sync_arch_state does) so it
+        // re-enters through a fresh lookup instead. The writing hart `h`
+        // itself is handled by the `invalidated` return — its run_slice
+        // caller drops the continuation without touching the arena.
         if let Some(shift) = line_shift_by_code(value) {
+            for o in 0..self.harts.len() {
+                if o == h || self.conts[o].block == NO_CHAIN {
+                    continue;
+                }
+                let block = self.caches[o].block(self.conts[o].block);
+                let si = self.conts[o].step as usize;
+                let pc_off =
+                    if si < block.steps.len() { block.steps[si].pc_off } else { block.term.pc_off };
+                self.harts[o].pc = block.start + pc_off as u64;
+                self.conts[o].clear();
+            }
             self.sys.set_line_shift(shift);
             for c in &mut self.caches {
                 c.flush(); // icache-check placement depends on line size
             }
             for cont in &mut self.conts {
-                cont.hint = NO_CHAIN;
+                // The flush's generation bump already kills these; clear
+                // anyway so the state never outlives its meaning.
+                cont.clear_chain();
             }
             invalidated = true;
         }
@@ -341,16 +415,27 @@ impl FiberEngine {
             if self.harts[h].wfi {
                 return Slice::Waiting;
             }
+            // Waking redirects the PC into the trap vector; any recorded
+            // exit edge is dead (WFI exits never record one, but the
+            // wake-up path must not depend on that).
             self.conts[h].clear();
+            self.conts[h].clear_chain();
         }
 
         // ---- block boundary ------------------------------------------------
         if self.conts[h].block == NO_CHAIN {
             // Interrupts are checked at block ends only (§3.3.2).
             let pc_before = self.harts[h].pc;
+            let prv_before = self.harts[h].prv;
             poll_interrupt(&mut self.harts[h], &mut self.sys);
-            if self.harts[h].pc != pc_before {
-                self.conts[h].hint = NO_CHAIN; // redirected to trap vector
+            if self.harts[h].pc != pc_before || self.harts[h].prv != prv_before {
+                // Redirected to the trap vector: neither the chained
+                // successor nor the pending link install describes the
+                // edge actually taken. The privilege comparison matters
+                // even when the PC happens to be unchanged (trap vector ==
+                // interrupted PC): translations are privilege-keyed and a
+                // chained entry skips that check.
+                self.conts[h].clear_chain();
             }
             match self.enter_block(h) {
                 Ok(id) => {
@@ -407,10 +492,15 @@ impl FiberEngine {
             }
             self.conts[h].resumed = false;
 
-            // Fast path for the dominant trap-free ALU step classes: skip
-            // the full exec_op dispatch (measured ~15% of lockstep time).
-            // (Disabled under the A1 naive-yield ablation, which must
-            // yield after every instruction.)
+            // Fast path for the dominant trap-free step classes: ALU ops
+            // skip the full exec_op dispatch (measured ~15% of lockstep
+            // time), and loads/stores inline the L0 hit path so a hit
+            // costs the paper's 3 host memory operations (§3.4.1) without
+            // crossing the sys::exec function boundary — misses continue
+            // in the shared #[cold] continuation, so L0/model counters
+            // stay bit-identical with the interpreter. (Disabled under
+            // the A1 naive-yield ablation, which must yield after every
+            // instruction.)
             if !self.yield_per_instruction {
             match step.op {
                 crate::isa::Op::AluImm { op, word, rd, rs1, imm } => {
@@ -433,6 +523,68 @@ impl FiberEngine {
                     self.conts[h].step += 1;
                     continue;
                 }
+                crate::isa::Op::Load { width, signed, rd, rs1, imm } => {
+                    // read_mem is #[inline(always)]: the L0 hit path (tag
+                    // compare, XOR, data read — no device check, hits
+                    // never cover MMIO) lands here inline, misses continue
+                    // in the #[cold] read_mem_miss continuation. What this
+                    // arm saves over the generic path is the exec_op
+                    // dispatch and the post-exec effects check (loads
+                    // never raise side effects).
+                    let vaddr = self.harts[h].reg(rs1).wrapping_add(imm as i64 as u64);
+                    match crate::sys::exec::read_mem(
+                        &mut self.harts[h],
+                        &mut self.sys,
+                        vaddr,
+                        width,
+                    ) {
+                        Ok(raw) => {
+                            let hart = &mut self.harts[h];
+                            hart.set_reg(rd, crate::sys::exec::sext_load(raw, width, signed));
+                            hart.instret += 1;
+                            hart.pending += step.cycles as u64;
+                            retired_in_slice += 1;
+                            self.conts[h].step += 1;
+                            continue;
+                        }
+                        Err(trap) => {
+                            if self.nominal[h] {
+                                self.harts[h].pending += retired_in_slice;
+                            }
+                            self.deliver_trap(h, trap, pc, npc);
+                            self.yield_now(h);
+                            return Slice::Ran;
+                        }
+                    }
+                }
+                crate::isa::Op::Store { width, rs1, rs2, imm } => {
+                    let vaddr = self.harts[h].reg(rs1).wrapping_add(imm as i64 as u64);
+                    let value = self.harts[h].reg(rs2);
+                    match crate::sys::exec::write_mem(
+                        &mut self.harts[h],
+                        &mut self.sys,
+                        vaddr,
+                        width,
+                        value,
+                    ) {
+                        Ok(()) => {
+                            let hart = &mut self.harts[h];
+                            hart.instret += 1;
+                            hart.pending += step.cycles as u64;
+                            retired_in_slice += 1;
+                            self.conts[h].step += 1;
+                            continue;
+                        }
+                        Err(trap) => {
+                            if self.nominal[h] {
+                                self.harts[h].pending += retired_in_slice;
+                            }
+                            self.deliver_trap(h, trap, pc, npc);
+                            self.yield_now(h);
+                            return Slice::Ran;
+                        }
+                    }
+                }
                 _ => {}
             }
             }
@@ -449,7 +601,7 @@ impl FiberEngine {
                         // the next instruction through a fresh lookup.
                         self.harts[h].pc = npc;
                         self.conts[h].clear();
-                        self.conts[h].hint = NO_CHAIN;
+                        self.conts[h].clear_chain();
                         if self.nominal[h] {
                             self.harts[h].pending += retired_in_slice;
                         }
@@ -519,9 +671,9 @@ impl FiberEngine {
                 hart.pending += if taken { term.cycles_taken } else { term.cycles_nt } as u64;
                 retired_in_slice += 1;
                 hart.pc = next_pc;
-                if self.harts[h].prv != prv_before_term {
+                let prv_changed = self.harts[h].prv != prv_before_term;
+                if prv_changed {
                     self.sys.l0[h].clear();
-                    self.conts[h].hint = NO_CHAIN;
                 }
                 if self.nominal[h] {
                     self.harts[h].pending += retired_in_slice;
@@ -529,29 +681,56 @@ impl FiberEngine {
                 let invalidated =
                     if self.harts[h].effects.any() { self.process_effects(h) } else { false };
 
-                // Block chaining (§3.1): remember the successor block so the
-                // next entry skips the hash lookup. For indirect jumps this
-                // caches the last target (§3.4.2's cross-page jump trick —
-                // the hint is validated against the target PC on entry).
-                self.conts[h].hint = NO_CHAIN;
-                if self.chaining && !invalidated {
-                    let prv = self.harts[h].prv as u8;
-                    match term.kind {
-                        TermKind::Branch | TermKind::Jump { .. } | TermKind::Fallthrough => {
-                            if let Some(t) = self.caches[h].follow_chain(id, taken) {
-                                self.conts[h].hint = t;
-                            } else if let Some(t) = self.caches[h].chain_to(id, taken, next_pc, prv)
-                            {
-                                self.conts[h].hint = t;
+                // Block chaining (§3.1): record the exit edge. If this
+                // block already carries a generation-valid link for the
+                // edge, the next entry follows it directly (no PC re-hash,
+                // and for static targets no re-validation either);
+                // otherwise the entry's lookup installs the link eagerly.
+                // Privilege-changing exits never chain — translations are
+                // keyed by (pc, privilege) and a chained entry skips that
+                // key check. WFI exits never chain — the wake-up redirects
+                // into the trap vector.
+                self.conts[h].clear_chain();
+                if self.chaining
+                    && !invalidated
+                    && !prv_changed
+                    && !matches!(flow, Flow::Wfi)
+                {
+                    // Which link slot this exit uses, and whether its
+                    // target is static for the whole generation (trusted
+                    // on entry) or dynamic (validated by PC on entry).
+                    let (slot_taken, direct) = match term.kind {
+                        TermKind::Branch => (taken, true),
+                        TermKind::Jump { .. } => (true, true),
+                        // jalr: cache the last target in the taken slot
+                        // (§3.4.2's indirect-target trick).
+                        TermKind::IndirectJump => (true, false),
+                        // Sequential fall-through is static; mret/sret
+                        // leave a Fallthrough terminator via Flow::Jump
+                        // toward a dynamic mepc/sepc target.
+                        TermKind::Fallthrough => (false, !matches!(flow, Flow::Jump(_))),
+                    };
+                    let gen = self.caches[h].generation;
+                    match self.caches[h].follow_chain(id, slot_taken) {
+                        Some(t) => {
+                            self.conts[h].next = t;
+                            self.conts[h].next_gen = gen;
+                            self.conts[h].next_direct = direct;
+                            if !direct {
+                                // Keep the source edge too: if the entry's
+                                // PC validation rejects the cached target
+                                // (the indirect retargeted), the fallback
+                                // lookup refreshes the link instead of
+                                // missing for the rest of the generation.
+                                self.conts[h].prev = id;
+                                self.conts[h].prev_taken = slot_taken;
+                                self.conts[h].prev_gen = gen;
                             }
                         }
-                        TermKind::IndirectJump => {
-                            if let Some(t) = self.caches[h].follow_chain(id, true) {
-                                self.conts[h].hint = t; // validated on entry
-                            } else if let Some(t) = self.caches[h].chain_to(id, true, next_pc, prv)
-                            {
-                                self.conts[h].hint = t;
-                            }
+                        None => {
+                            self.conts[h].prev = id;
+                            self.conts[h].prev_taken = slot_taken;
+                            self.conts[h].prev_gen = gen;
                         }
                     }
                 }
@@ -644,8 +823,8 @@ impl FiberEngine {
                     if si < block.steps.len() { block.steps[si].pc_off } else { block.term.pc_off };
                 self.harts[h].pc = block.start + pc_off as u64;
                 self.conts[h].clear();
-                self.conts[h].hint = NO_CHAIN;
             }
+            self.conts[h].clear_chain();
             let hart = &mut self.harts[h];
             hart.cycle += std::mem::take(&mut hart.pending);
         }
@@ -1130,5 +1309,184 @@ mod tests {
         let stats = eng.sys.model.stats();
         let inval = stats.iter().find(|(k, _)| *k == "invalidations").unwrap().1;
         assert!(inval > 0, "contended lock must produce invalidations");
+    }
+
+    #[test]
+    fn simctrl_invalid_line_size_round_trip() {
+        // A SIMCTRL write carrying a malformed line-size field (48 B is
+        // not a power of two) must neither change the live L0 line size
+        // nor appear in a subsequent SIMCTRL read-back — the read must
+        // keep reporting the configuration actually applied.
+        let live = 2u64 | (1 << 4) | (64 << 8);
+        let mut a = Assembler::new(DRAM_BASE);
+        a.li(T0, (48 << 8) as i64);
+        a.csrw(CSR_SIMCTRL, T0);
+        a.csrr(A0, CSR_SIMCTRL);
+        a.li(A7, 93);
+        a.ecall();
+        let img = a.finish();
+        let mut eng = engine_with(&img, 1, "simple");
+        eng.sys.simctrl_state = live;
+        assert_eq!(eng.run(100_000), ExitReason::Exited(live));
+        assert_eq!(eng.sys.simctrl_state, live);
+        assert_eq!(eng.sys.l0[0].d.line_shift(), 6, "line size must be unchanged");
+        // A valid line size in the same field does round-trip.
+        let mut b = Assembler::new(DRAM_BASE);
+        b.li(T0, (128 << 8) as i64);
+        b.csrw(CSR_SIMCTRL, T0);
+        b.csrr(A0, CSR_SIMCTRL);
+        b.li(A7, 93);
+        b.ecall();
+        let img = b.finish();
+        let mut eng = engine_with(&img, 1, "simple");
+        eng.sys.simctrl_state = live;
+        assert_eq!(eng.run(100_000), ExitReason::Exited(2 | (1 << 4) | (128 << 8)));
+        assert_eq!(eng.sys.l0[0].d.line_shift(), 7, "128 B line applied");
+    }
+
+    #[test]
+    fn indirect_chain_alternating_targets() {
+        // A single jalr block whose target alternates every iteration
+        // (branchless select, so both targets flow through one indirect
+        // terminator): the chain link caches the *last* target, so every
+        // entry after the first must fail the PC re-validation and fall
+        // back — and the result must stay correct throughout.
+        let mut a = Assembler::new(DRAM_BASE);
+        let f1 = a.new_label();
+        let f2 = a.new_label();
+        a.li(S2, 100);
+        a.li(A1, 0);
+        a.la(S3, f1);
+        a.la(S4, f2);
+        let top = a.here();
+        // t1 = (s2 & 1) != 0 ? s3 : s4, without branches.
+        a.andi(T0, S2, 1);
+        a.neg(T0, T0); // 0 or all-ones mask
+        a.xor(T1, S3, S4);
+        a.and(T1, T1, T0);
+        a.xor(T1, T1, S4);
+        a.jalr(RA, T1, 0);
+        a.addi(S2, S2, -1);
+        a.bnez(S2, top);
+        a.mv(A0, A1);
+        a.li(A7, 93);
+        a.ecall();
+        a.bind(f1);
+        a.addi(A1, A1, 1);
+        a.ret();
+        a.bind(f2);
+        a.addi(A1, A1, 3);
+        a.ret();
+        let img = a.finish();
+        let mut eng = engine_with(&img, 1, "simple");
+        // s2 runs 100..1: 50 odd calls (+1), 50 even calls (+3).
+        assert_eq!(eng.run(1_000_000), ExitReason::Exited(50 * 1 + 50 * 3));
+        // Direct edges (the loop back-edge, the returns — each function
+        // has one call block, so its return target is stable) chain; the
+        // alternating jalr target forces a miss on every call without
+        // ever entering a wrong block.
+        assert!(eng.stats.chain_hits > 150, "{:?}", eng.stats);
+        assert!(eng.stats.chain_misses > 90, "{:?}", eng.stats);
+    }
+
+    #[test]
+    fn cross_hart_line_size_flush_mid_block() {
+        // Hart 1 reconfigures the L0 line size via SIMCTRL — which
+        // flushes *every* hart's code cache — while hart 0 is parked
+        // mid-block at a sync point (its long load runs yield every
+        // step). Hart 0 must resume through a fresh lookup at a written-
+        // back PC, not index a dangling block id into the cleared arena.
+        let mut a = Assembler::new(DRAM_BASE);
+        let data = a.new_label();
+        let h1 = a.new_label();
+        let done = a.new_label();
+        a.csrr(T0, CSR_MHARTID);
+        a.la(S0, data);
+        a.bnez(T0, h1);
+        // hart 0: long blocks of loads, each step a sync point.
+        a.li(S1, 300);
+        let loop0 = a.here();
+        for _ in 0..24 {
+            a.lw(T1, S0, 0);
+        }
+        a.addi(S1, S1, -1);
+        a.bnez(S1, loop0);
+        a.j(done);
+        // hart 1: some loads, the line-size write, more loads, park.
+        a.bind(h1);
+        a.li(S1, 50);
+        let loop1 = a.here();
+        a.lw(T1, S0, 8);
+        a.addi(S1, S1, -1);
+        a.bnez(S1, loop1);
+        a.li(T2, (128 << 8) as i64);
+        a.csrw(CSR_SIMCTRL, T2);
+        a.li(S1, 50);
+        let loop2 = a.here();
+        a.lw(T1, S0, 8);
+        a.addi(S1, S1, -1);
+        a.bnez(S1, loop2);
+        let park = a.here();
+        a.j(park); // hart 0's exit ends the run
+        a.bind(done);
+        a.li(A0, 7);
+        a.li(A7, 93);
+        a.ecall();
+        a.align(8);
+        a.bind(data);
+        a.d64(0);
+        a.d64(0);
+        let img = a.finish();
+        let mut eng = engine_with(&img, 2, "simple");
+        assert_eq!(eng.run(10_000_000), ExitReason::Exited(7));
+        assert_eq!(eng.sys.l0[0].d.line_shift(), 7, "line size applied to every hart");
+    }
+
+    #[test]
+    fn self_modifying_code_never_follows_stale_chains() {
+        // Phase 1 runs a hot, fully-chained loop adding 2 per iteration;
+        // the guest then patches the loop body to add 1, issues fence.i
+        // (code-cache flush -> generation bump), and runs the loop again.
+        // Any stale chain link or translation surviving the flush would
+        // execute the old body and corrupt the sum.
+        let patched = crate::isa::encode(crate::isa::Op::AluImm {
+            op: crate::isa::AluOp::Add,
+            word: false,
+            rd: crate::asm::A1,
+            rs1: crate::asm::A1,
+            imm: 1,
+        });
+        let mut a = Assembler::new(DRAM_BASE);
+        let body = a.new_label();
+        let finish = a.new_label();
+        a.li(S2, 0); // phase flag
+        a.li(A1, 0); // accumulator
+        let restart = a.here();
+        a.li(A0, 100);
+        let top = a.here();
+        a.bind(body);
+        a.addi(A1, A1, 2); // patched to +1 in phase 2
+        a.addi(A0, A0, -1);
+        a.bnez(A0, top);
+        a.bnez(S2, finish);
+        a.li(S2, 1);
+        a.la(T0, body);
+        a.li(T1, patched as i64);
+        a.sw(T1, T0, 0);
+        a.fence_i();
+        a.j(restart);
+        a.bind(finish);
+        a.mv(A0, A1);
+        a.li(A7, 93);
+        a.ecall();
+        let img = a.finish();
+        let mut eng = engine_with(&img, 1, "simple");
+        assert_eq!(
+            eng.run(1_000_000),
+            ExitReason::Exited(100 * 2 + 100 * 1),
+            "stale translation or chain link executed after fence.i"
+        );
+        assert!(eng.caches[0].flushes >= 1);
+        assert!(eng.stats.chain_hits > 150, "both phases must chain: {:?}", eng.stats);
     }
 }

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   run       — run a built-in workload or an ELF under a model config
+//!   bench     — workload × engine × model baseline -> BENCH_engines.json
 //!   ckpt      — inspect an on-disk checkpoint file
 //!   models    — print the pipeline/memory model inventory (Tables 1-2)
 //!   workloads — list built-in workloads
@@ -18,11 +19,21 @@ fn usage() -> ! {
     eprintln!(
         "usage:
   r2vm-repro run [--workload NAME | --elf PATH | --restore CKPT] [options]
+  r2vm-repro bench [--runs N] [--quick] [--workload NAME] [--json PATH]
   r2vm-repro ckpt PATH
   r2vm-repro models
   r2vm-repro workloads
   r2vm-repro validate
   r2vm-repro difftest [--seeds N] [--seed X] [--harts H] [--shrink]
+
+bench options (reproducible baseline: every built-in workload across the
+engine x model matrix, incl. the chain-vs-lookup dispatch ablation on
+coremark; see DESIGN.md \u{a7}9):
+  --runs N           timed runs per cell, best-of-N (default 3)
+  --quick            reduced workload sizes (the CI smoke configuration)
+  --workload NAME    bench only this workload
+  --json PATH        machine-readable report (default BENCH_engines.json)
+  --quiet            suppress the table
 
 difftest options (differential co-simulation fuzzer — every engine vs the
 cycle-level reference; see DESIGN.md \u{a7}8):
@@ -95,6 +106,75 @@ fn main() {
         "validate" => {
             let report = r2vm::refsim::validate_inorder_quick();
             print!("{}", report);
+        }
+        "bench" => {
+            let mut opts = r2vm::bench::BenchOptions::default();
+            let mut quiet = false;
+            let mut it = args[1..].iter();
+            while let Some(arg) = it.next() {
+                let Some(key) = arg.strip_prefix("--") else {
+                    eprintln!("unexpected argument: {}", arg);
+                    usage();
+                };
+                match key {
+                    "runs" => {
+                        let parsed = it.next().and_then(|s| s.parse::<u32>().ok());
+                        let Some(n) = parsed else {
+                            eprintln!("--runs needs a numeric value");
+                            usage();
+                        };
+                        opts.runs = n.max(1);
+                    }
+                    "quick" => opts.quick = true,
+                    "quiet" => quiet = true,
+                    "workload" => {
+                        let Some(name) = it.next() else {
+                            eprintln!("--workload needs a value");
+                            usage();
+                        };
+                        if r2vm::bench::engines::BENCH_WORKLOADS
+                            .iter()
+                            .all(|&(w, _)| w != name.as_str())
+                        {
+                            let names: Vec<&str> = r2vm::bench::engines::BENCH_WORKLOADS
+                                .iter()
+                                .map(|&(w, _)| w)
+                                .collect();
+                            eprintln!(
+                                "unknown bench workload '{}' (benched: {})",
+                                name,
+                                names.join("|")
+                            );
+                            usage();
+                        }
+                        opts.workload = Some(name.clone());
+                    }
+                    "json" => {
+                        let Some(path) = it.next() else {
+                            eprintln!("--json needs a value");
+                            usage();
+                        };
+                        opts.json_path = path.clone();
+                    }
+                    _ => {
+                        eprintln!("unknown bench option --{}", key);
+                        usage();
+                    }
+                }
+            }
+            let report = r2vm::bench::run_bench(&opts);
+            if let Err(e) = std::fs::write(&opts.json_path, report.to_json()) {
+                eprintln!("writing {}: {}", opts.json_path, e);
+                std::process::exit(2);
+            }
+            if !quiet {
+                print!("{}", report.table());
+                println!("bench report written to {}", opts.json_path);
+            }
+            if report.cells.iter().any(|c| c.exit.is_none()) || !report.skipped.is_empty() {
+                eprintln!("warning: some cells were skipped or did not exit cleanly");
+                std::process::exit(1);
+            }
         }
         "ckpt" => {
             let Some(path) = args.get(1) else {

@@ -99,24 +99,19 @@ fn cold_data_access(
     Ok(tr.paddr)
 }
 
-/// Load `width` bytes at `vaddr` (unsigned). The L0 fast path is inlined;
-/// misses go through the memory model.
-#[inline(always)]
-pub fn read_mem(hart: &mut Hart, sys: &mut System, vaddr: u64, width: MemWidth) -> Result<u64, Trap> {
-    // Line-crossing misaligned accesses trap (RISC-V permits this; guest
-    // workloads are compiled aligned).
-    let line_mask = (1u64 << sys.l0[hart.id].d.line_shift()) - 1;
-    if (vaddr & line_mask) + width.bytes() > line_mask + 1 {
-        return Err(Trap::new(EXC_LOAD_MISALIGNED, vaddr));
-    }
-    let paddr = if sys.force_cold {
-        cold_data_access(hart, sys, vaddr, false)?
-    } else {
-        match sys.l0[hart.id].d.lookup_read(vaddr) {
-            Some(p) => p,
-            None => cold_data_access(hart, sys, vaddr, false)?,
-        }
-    };
+/// Cold continuation of a load after an L0 miss (also the entire path
+/// under `force_cold`): translate + memory model, MMIO, trace. Keeping
+/// this out of line leaves [`read_mem`]'s inlined body as just the
+/// alignment check + the 3-host-op L0 hit (§3.4.1) wherever it lands —
+/// including the DBT step loop's load fast path.
+#[cold]
+fn read_mem_miss(
+    hart: &mut Hart,
+    sys: &mut System,
+    vaddr: u64,
+    width: MemWidth,
+) -> Result<u64, Trap> {
+    let paddr = cold_data_access(hart, sys, vaddr, false)?;
     if DeviceBus::is_mmio(paddr) {
         let now = hart.now();
         return Ok(sys.bus.read(paddr, width.bytes(), now));
@@ -125,6 +120,60 @@ pub fn read_mem(hart: &mut Hart, sys: &mut System, vaddr: u64, width: MemWidth) 
         t.record_mem(paddr, false, hart.id as u8);
     }
     Ok(phys_read(sys, paddr, width))
+}
+
+/// Load `width` bytes at `vaddr` (unsigned). The L0 fast path is inlined;
+/// misses go through the memory model. An L0 hit costs the paper's 3 host
+/// memory operations (tag compare, XOR, data read) — hits never cover
+/// MMIO, so no device check is needed on the hot path.
+#[inline(always)]
+pub fn read_mem(hart: &mut Hart, sys: &mut System, vaddr: u64, width: MemWidth) -> Result<u64, Trap> {
+    // Line-crossing misaligned accesses trap (RISC-V permits this; guest
+    // workloads are compiled aligned).
+    let line_mask = (1u64 << sys.l0[hart.id].d.line_shift()) - 1;
+    if (vaddr & line_mask) + width.bytes() > line_mask + 1 {
+        return Err(Trap::new(EXC_LOAD_MISALIGNED, vaddr));
+    }
+    if !sys.force_cold {
+        if let Some(paddr) = sys.l0[hart.id].d.lookup_read(vaddr) {
+            if let Some(t) = sys.trace.as_mut() {
+                t.record_mem(paddr, false, hart.id as u8);
+            }
+            return Ok(phys_read(sys, paddr, width));
+        }
+    }
+    read_mem_miss(hart, sys, vaddr, width)
+}
+
+/// Non-MMIO store commit: reservation clearing, trace, physical write
+/// (shared by the hit and miss paths so the protocol cannot drift).
+#[inline(always)]
+fn commit_store(hart_id: usize, sys: &mut System, paddr: u64, width: MemWidth, value: u64) {
+    if sys.active_reservations != 0 {
+        sys.clear_reservations(paddr, hart_id);
+    }
+    if let Some(t) = sys.trace.as_mut() {
+        t.record_mem(paddr, true, hart_id as u8);
+    }
+    phys_write(sys, paddr, width, value);
+}
+
+/// Cold continuation of a store after an L0 miss (see [`read_mem_miss`]).
+#[cold]
+fn write_mem_miss(
+    hart: &mut Hart,
+    sys: &mut System,
+    vaddr: u64,
+    width: MemWidth,
+    value: u64,
+) -> Result<(), Trap> {
+    let paddr = cold_data_access(hart, sys, vaddr, true)?;
+    if DeviceBus::is_mmio(paddr) {
+        sys.bus.write(paddr, value, width.bytes());
+        return Ok(());
+    }
+    commit_store(hart.id, sys, paddr, width, value);
+    Ok(())
 }
 
 /// Store `width` bytes at `vaddr`.
@@ -140,30 +189,18 @@ pub fn write_mem(
     if (vaddr & line_mask) + width.bytes() > line_mask + 1 {
         return Err(Trap::new(EXC_STORE_MISALIGNED, vaddr));
     }
-    let paddr = if sys.force_cold {
-        cold_data_access(hart, sys, vaddr, true)?
-    } else {
-        match sys.l0[hart.id].d.lookup_write(vaddr) {
-            Some(p) => p,
-            None => cold_data_access(hart, sys, vaddr, true)?,
+    if !sys.force_cold {
+        if let Some(paddr) = sys.l0[hart.id].d.lookup_write(vaddr) {
+            commit_store(hart.id, sys, paddr, width, value);
+            return Ok(());
         }
-    };
-    if DeviceBus::is_mmio(paddr) {
-        sys.bus.write(paddr, value, width.bytes());
-        return Ok(());
     }
-    if sys.active_reservations != 0 {
-        sys.clear_reservations(paddr, hart.id);
-    }
-    if let Some(t) = sys.trace.as_mut() {
-        t.record_mem(paddr, true, hart.id as u8);
-    }
-    phys_write(sys, paddr, width, value);
-    Ok(())
+    write_mem_miss(hart, sys, vaddr, width, value)
 }
 
-#[inline]
-fn sext_load(value: u64, width: MemWidth, signed: bool) -> u64 {
+/// Sign- or zero-extend a loaded value (public for the DBT fast path).
+#[inline(always)]
+pub fn sext_load(value: u64, width: MemWidth, signed: bool) -> u64 {
     if !signed {
         return value;
     }

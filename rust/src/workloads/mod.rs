@@ -47,6 +47,25 @@ pub fn build(name: &str, harts: usize) -> Option<Image> {
     }
 }
 
+/// Build a workload at benchmarking size. `quick` selects reduced sizes so
+/// the CI bench smoke job finishes in seconds while exercising the same
+/// code paths; the full sizes match [`build`]'s defaults so `bench`
+/// numbers are comparable with ad-hoc `run` invocations.
+pub fn build_bench(name: &str, harts: usize, quick: bool) -> Option<Image> {
+    if !quick {
+        return build(name, harts);
+    }
+    match name {
+        "coremark-lite" => Some(coremark::build(5)),
+        "dedup" => Some(dedup::build(harts, 8)),
+        "memlat" => Some(memlat::build(16 << 10, 20_000)),
+        "spinlock" => Some(spinlock::build(harts.max(2), 200)),
+        "vm-sv39" => Some(vm::build(100)),
+        "hello" => Some(hello()),
+        _ => None,
+    }
+}
+
 /// SBI console hello world.
 pub fn hello() -> Image {
     use crate::asm::*;

@@ -27,6 +27,62 @@ fn dual_hart_corpus_agrees() {
     assert!(report.passed(), "{}", report.summary());
 }
 
+/// Four-hart corpus under MESI — above CI's 1/2-hart sweeps. Four harts
+/// quadruple the contention on the shared spinlock/AMO cells and the
+/// exit barrier, and give the coherence protocol real invalidation
+/// fan-out; pinned after the hot-path dispatch overhaul so the
+/// chain-following fast path stays exercised under maximum lockstep
+/// interleaving.
+#[test]
+fn four_hart_corpus_agrees() {
+    let cfg = DiffConfig::new(4);
+    let report = sweep(0, 6, &cfg, BugInjection::None);
+    assert!(report.passed(), "{}", report.summary());
+}
+
+/// A second 4-hart band further out in the seed space (different block
+/// shapes / contention rounds), pinned as part of the deep-sweep
+/// campaign.
+#[test]
+fn four_hart_deep_band_agrees() {
+    let cfg = DiffConfig::new(4);
+    let report = sweep(40, 4, &cfg, BugInjection::None);
+    assert!(report.passed(), "{}", report.summary());
+}
+
+/// Deep single-hart band (seeds 2000+) with the default config — outside
+/// every band previously swept by CI (0..200) or the cache-model band
+/// (1000..1010); pinned with the dispatch overhaul so chain-following
+/// dispatch, eager link installation, and the inlined L0 fast path get
+/// corpus shapes none of the existing fixed bands contain.
+#[test]
+fn single_hart_deep_band_agrees() {
+    let cfg = DiffConfig::new(1);
+    let report = sweep(2000, 12, &cfg, BugInjection::None);
+    assert!(report.passed(), "{}", report.summary());
+}
+
+/// Regression pins from the dispatch-overhaul review sweep: seeds whose
+/// generated shapes hit the paths changed by the overhaul — indirect
+/// jumps whose chained last-target must be re-validated (IndirectNext
+/// terminators), page-straddling blocks entered through a chain link
+/// (cross-page fallback), and counted back-edges (eager link install on
+/// the hot edge). Kept as named single seeds so a future failure points
+/// at the exact construct.
+#[test]
+fn dispatch_overhaul_regression_seeds() {
+    let cfg = DiffConfig::new(1);
+    for seed in [3u64, 7, 11, 19, 42, 57, 101, 137] {
+        run_seed(seed, &cfg, BugInjection::None)
+            .unwrap_or_else(|d| panic!("pinned seed {:#x} regressed: {}", seed, d));
+    }
+    let cfg2 = DiffConfig::new(2);
+    for seed in [5u64, 13, 29] {
+        run_seed(seed, &cfg2, BugInjection::None)
+            .unwrap_or_else(|d| panic!("pinned 2-hart seed {:#x} regressed: {}", seed, d));
+    }
+}
+
 /// A second single-hart band further out in the seed space, with the
 /// cache memory model on the serial engines (cycle check stays meaningful
 /// because tolerance is configured per run).

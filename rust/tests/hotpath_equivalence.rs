@@ -1,0 +1,223 @@
+//! Equivalence tests for the optimised DBT hot path: chain-following
+//! dispatch and the inlined L0 load/store fast path must be pure
+//! optimisations — bit-identical architectural end state and identical
+//! L0/memory-model counters against the unoptimised paths, across the
+//! difftest program corpus.
+//!
+//! Three baselines triangulate the new code:
+//!  * the interpreter (independent fetch/dispatch; shares only exec_op) —
+//!    architectural state + D-side L0 counters (the I-side differs by
+//!    design: the DBT checks once per block, the interpreter per fetch);
+//!  * the A1 naive-yield DBT configuration, which disables the inlined
+//!    fast-path arms entirely — every counter must match;
+//!  * the A3 no-chaining DBT configuration, which disables chain
+//!    dispatch — every counter must match.
+
+use r2vm::coordinator::{build_system, EngineMode, SimConfig};
+use r2vm::difftest::generator::generate;
+use r2vm::difftest::BugInjection;
+use r2vm::engine::ExitReason;
+use r2vm::fiber::FiberEngine;
+use r2vm::interp::InterpEngine;
+use r2vm::sys::loader::load_flat;
+use r2vm::sys::Hart;
+
+fn cfg_for(harts: usize, mode: EngineMode, pipeline: &str, memory: &str) -> SimConfig {
+    SimConfig {
+        harts,
+        mode,
+        pipeline: pipeline.into(),
+        memory: memory.into(),
+        ..SimConfig::default()
+    }
+}
+
+fn fiber_for(image: &r2vm::asm::Image, harts: usize, pipeline: &str, memory: &str) -> FiberEngine {
+    let cfg = cfg_for(harts, EngineMode::Lockstep, pipeline, memory);
+    let mut eng = FiberEngine::new(build_system(&cfg), pipeline);
+    let entry = load_flat(&eng.sys, image);
+    eng.set_entry(entry);
+    eng
+}
+
+fn interp_for(image: &r2vm::asm::Image, harts: usize, memory: &str) -> InterpEngine {
+    let cfg = cfg_for(harts, EngineMode::Interp, "atomic", memory);
+    let mut eng = InterpEngine::new(build_system(&cfg));
+    let entry = load_flat(&eng.sys, image);
+    for h in &mut eng.harts {
+        h.pc = entry;
+    }
+    eng
+}
+
+fn assert_harts_equal(a: &Hart, b: &Hart, what: &str, seed: u64) {
+    assert_eq!(a.regs, b.regs, "{} seed {}: register file", what, seed);
+    assert_eq!(a.pc, b.pc, "{} seed {}: pc", what, seed);
+    assert_eq!(a.prv, b.prv, "{} seed {}: privilege", what, seed);
+    assert_eq!(a.instret, b.instret, "{} seed {}: instret", what, seed);
+}
+
+const BUDGET: u64 = 2_000_000;
+
+/// Optimised DBT vs the interpreter on the corpus: identical architectural
+/// end state, console, and D-side L0 counters (under the atomic model the
+/// L0 install/hit sequence is purely access-driven, so the counts must
+/// match an engine that takes the unoptimised path every time).
+#[test]
+fn dbt_fast_path_matches_interpreter_on_corpus() {
+    for seed in 0..15u64 {
+        let prog = generate(seed, 1);
+        let asm = prog.assemble(BugInjection::None);
+
+        let mut fib = fiber_for(&asm.image, 1, "simple", "atomic");
+        let fr = fib.run(BUDGET);
+        let mut interp = interp_for(&asm.image, 1, "atomic");
+        let ir = interp.run(BUDGET);
+
+        assert!(matches!(fr, ExitReason::Exited(_)), "seed {}: DBT {:?}", seed, fr);
+        assert_eq!(fr, ir, "seed {}: exit reasons", seed);
+        assert_harts_equal(&interp.harts[0], &fib.harts[0], "interp-vs-dbt", seed);
+        assert_eq!(
+            interp.sys.bus.uart.output, fib.sys.bus.uart.output,
+            "seed {}: console",
+            seed
+        );
+        assert_eq!(
+            interp.sys.l0[0].d.stats(),
+            fib.sys.l0[0].d.stats(),
+            "seed {}: D-side L0 (accesses, misses) must be identical",
+            seed
+        );
+    }
+}
+
+/// Optimised DBT vs the same engine with the fast-path arms disabled
+/// (A1 naive-yield executes every op through exec_op): every counter —
+/// cycles, L0 D and I, memory model — must be bit-identical.
+#[test]
+fn inlined_l0_fast_path_changes_no_counters() {
+    for seed in 0..12u64 {
+        let prog = generate(seed, 1);
+        let asm = prog.assemble(BugInjection::None);
+
+        let mut fast = fiber_for(&asm.image, 1, "inorder", "cache");
+        let fr = fast.run(BUDGET);
+        let mut slow = fiber_for(&asm.image, 1, "inorder", "cache");
+        slow.yield_per_instruction = true;
+        let sr = slow.run(BUDGET);
+
+        assert!(matches!(fr, ExitReason::Exited(_)), "seed {}: {:?}", seed, fr);
+        assert_eq!(fr, sr, "seed {}: exit reasons", seed);
+        assert_harts_equal(&slow.harts[0], &fast.harts[0], "naive-vs-fast", seed);
+        assert_eq!(
+            slow.harts[0].cycle, fast.harts[0].cycle,
+            "seed {}: simulated cycles",
+            seed
+        );
+        assert_eq!(
+            slow.sys.l0[0].d.stats(),
+            fast.sys.l0[0].d.stats(),
+            "seed {}: D-side L0 counters",
+            seed
+        );
+        assert_eq!(
+            slow.sys.l0[0].i.stats(),
+            fast.sys.l0[0].i.stats(),
+            "seed {}: I-side L0 counters",
+            seed
+        );
+        assert_eq!(
+            slow.sys.model.stats(),
+            fast.sys.model.stats(),
+            "seed {}: memory-model counters",
+            seed
+        );
+    }
+}
+
+/// Chain-following dispatch vs block-lookup-only dispatch: identical end
+/// state and counters, with the chain path actually exercised.
+#[test]
+fn chain_dispatch_changes_no_counters() {
+    let mut total_chain_hits = 0u64;
+    for seed in 0..12u64 {
+        let prog = generate(seed, 1);
+        let asm = prog.assemble(BugInjection::None);
+
+        let mut chained = fiber_for(&asm.image, 1, "inorder", "cache");
+        let cr = chained.run(BUDGET);
+        let mut lookup = fiber_for(&asm.image, 1, "inorder", "cache");
+        lookup.chaining = false;
+        let lr = lookup.run(BUDGET);
+
+        assert!(matches!(cr, ExitReason::Exited(_)), "seed {}: {:?}", seed, cr);
+        assert_eq!(cr, lr, "seed {}: exit reasons", seed);
+        assert_harts_equal(&lookup.harts[0], &chained.harts[0], "lookup-vs-chain", seed);
+        assert_eq!(
+            lookup.harts[0].cycle, chained.harts[0].cycle,
+            "seed {}: chaining must not change timing",
+            seed
+        );
+        assert_eq!(
+            lookup.sys.l0[0].d.stats(),
+            chained.sys.l0[0].d.stats(),
+            "seed {}: D-side L0 counters",
+            seed
+        );
+        assert_eq!(
+            lookup.sys.model.stats(),
+            chained.sys.model.stats(),
+            "seed {}: memory-model counters",
+            seed
+        );
+        assert_eq!(lookup.stats.chain_hits, 0, "ablation must not chain");
+        assert_eq!(
+            lookup.stats.block_entries, chained.stats.block_entries,
+            "seed {}: same block entries either way",
+            seed
+        );
+        total_chain_hits += chained.stats.chain_hits;
+    }
+    // Straight-line seeds legitimately chain nothing (every edge runs
+    // once); across the corpus the looped seeds must exercise the path.
+    assert!(total_chain_hits > 0, "corpus must exercise chain dispatch");
+}
+
+/// Multi-hart lockstep under MESI: chain dispatch must leave the
+/// deterministic schedule (and hence every per-hart counter and the
+/// coherence traffic) untouched.
+#[test]
+fn chain_dispatch_deterministic_under_mesi() {
+    for seed in 0..6u64 {
+        let prog = generate(seed, 2);
+        let asm = prog.assemble(BugInjection::None);
+
+        let mut chained = fiber_for(&asm.image, 2, "inorder", "mesi");
+        let cr = chained.run(20_000_000);
+        let mut lookup = fiber_for(&asm.image, 2, "inorder", "mesi");
+        lookup.chaining = false;
+        let lr = lookup.run(20_000_000);
+
+        assert!(matches!(cr, ExitReason::Exited(_)), "seed {}: {:?}", seed, cr);
+        assert_eq!(cr, lr, "seed {}: exit reasons", seed);
+        for h in 0..2 {
+            assert_harts_equal(
+                &lookup.harts[h],
+                &chained.harts[h],
+                &format!("hart {} lookup-vs-chain", h),
+                seed,
+            );
+            assert_eq!(
+                lookup.harts[h].cycle, chained.harts[h].cycle,
+                "seed {} hart {}: cycles",
+                seed, h
+            );
+        }
+        assert_eq!(
+            lookup.sys.model.stats(),
+            chained.sys.model.stats(),
+            "seed {}: MESI counters (incl. invalidations) must match",
+            seed
+        );
+    }
+}
