@@ -48,12 +48,14 @@ impl Default for BenchOptions {
 }
 
 /// (workload, harts): multi-core workloads run with two harts so the
-/// coherent models have actual sharing to simulate.
+/// coherent models have actual sharing to simulate; `multicore` runs with
+/// four so the shard-scaling rows have something to spread.
 pub const BENCH_WORKLOADS: &[(&str, usize)] = &[
     ("coremark-lite", 1),
     ("memlat", 1),
     ("dedup", 2),
     ("spinlock", 2),
+    ("multicore", 4),
     ("vm-sv39", 1),
 ];
 
@@ -67,6 +69,22 @@ const MATRIX: &[(&str, &str, &str)] = &[
     ("lockstep", "inorder", "mesi"),
 ];
 
+/// Shard-scaling matrix (DESIGN.md §10), measured on the 4-hart
+/// `multicore` workload under the cycle-level inorder+cache configuration:
+/// shards × quantum. `(1, 1)` doubles as the serialized-sharding baseline
+/// (bit-identical to lockstep), `(4, 1024)` is the headline parallel cell.
+const SHARD_MATRIX: &[(usize, u64)] = &[
+    (1, 1),
+    (1, 64),
+    (1, 1024),
+    (2, 1),
+    (2, 64),
+    (2, 1024),
+    (4, 1),
+    (4, 64),
+    (4, 1024),
+];
+
 /// One measured workload × configuration cell.
 pub struct Cell {
     pub workload: String,
@@ -76,6 +94,9 @@ pub struct Cell {
     /// "chain" (default dispatch) or "lookup" (`--no-chaining` ablation).
     pub dispatch: &'static str,
     pub harts: usize,
+    /// Sharded-engine cells: (shards, quantum); `None` for every other
+    /// engine (their JSON rows keep the pre-sharding schema).
+    pub sharding: Option<(usize, u64)>,
     pub measurement: Measurement,
     /// Guest instructions / simulated cycles of the best timed run (the
     /// run `measurement.best` measures).
@@ -94,9 +115,14 @@ fn cell_label(
     pipeline: &str,
     memory: &str,
     lookup_dispatch: bool,
+    sharding: Option<(usize, u64)>,
 ) -> String {
     let ablation = if lookup_dispatch { "/nochain" } else { "" };
-    format!("{} {}/{}+{}{}", workload, mode, pipeline, memory, ablation)
+    let shard = match sharding {
+        Some((s, q)) => format!("[s{},q{}]", s, q),
+        None => String::new(),
+    };
+    format!("{} {}{}/{}+{}{}", workload, mode, shard, pipeline, memory, ablation)
 }
 
 impl Cell {
@@ -107,6 +133,7 @@ impl Cell {
             self.pipeline,
             self.memory,
             self.dispatch == "lookup",
+            self.sharding,
         )
     }
 
@@ -128,6 +155,7 @@ pub struct BenchReport {
 }
 
 /// Run one cell: boot a fresh engine per timed run, best-of-N.
+#[allow(clippy::too_many_arguments)]
 fn run_cell(
     workload: &str,
     harts: usize,
@@ -135,6 +163,7 @@ fn run_cell(
     pipeline: &'static str,
     memory: &'static str,
     lookup_dispatch: bool,
+    sharding: Option<(usize, u64)>,
     runs: u32,
     quick: bool,
 ) -> Option<Cell> {
@@ -145,6 +174,10 @@ fn run_cell(
     cfg.pipeline = pipeline.into();
     cfg.memory = memory.into();
     cfg.no_chaining = lookup_dispatch;
+    if let Some((shards, quantum)) = sharding {
+        cfg.shards = shards;
+        cfg.quantum = quantum;
+    }
     // Backstop so a regressed workload shows up as a truncated cell
     // instead of a hung bench (generous: every built-in workload retires
     // orders of magnitude less).
@@ -161,6 +194,7 @@ fn run_cell(
         memory,
         dispatch,
         harts,
+        sharding,
         measurement: Measurement {
             name: String::new(),
             best: Duration::ZERO,
@@ -215,11 +249,32 @@ pub fn run_bench(opts: &BenchOptions) -> BenchReport {
                 variants.push(true);
             }
             for lookup in variants {
-                match run_cell(workload, harts, mode, pipeline, memory, lookup, runs, opts.quick)
-                {
+                match run_cell(
+                    workload, harts, mode, pipeline, memory, lookup, None, runs, opts.quick,
+                ) {
                     Some(cell) => cells.push(cell),
                     None => {
-                        let label = cell_label(workload, mode, pipeline, memory, lookup);
+                        let label = cell_label(workload, mode, pipeline, memory, lookup, None);
+                        eprintln!("warning: bench cell {} could not run (skipped)", label);
+                        skipped.push(label);
+                    }
+                }
+            }
+        }
+        // Shard-scaling rows (DESIGN.md §10): the sharded engine across
+        // SHARD_MATRIX on the 4-hart multicore workload under the
+        // cycle-level inorder+cache configuration.
+        if workload == "multicore" {
+            for &(shards, quantum) in SHARD_MATRIX {
+                let sharding = Some((shards, quantum));
+                match run_cell(
+                    workload, harts, "sharded", "inorder", "cache", false, sharding, runs,
+                    opts.quick,
+                ) {
+                    Some(cell) => cells.push(cell),
+                    None => {
+                        let label =
+                            cell_label(workload, "sharded", "inorder", "cache", false, sharding);
                         eprintln!("warning: bench cell {} could not run (skipped)", label);
                         skipped.push(label);
                     }
@@ -259,6 +314,22 @@ impl BenchReport {
         self.coremark_mips("lookup")
     }
 
+    /// MIPS of the sharded multicore cell at `(shards, quantum)`.
+    pub fn shard_mips(&self, shards: usize, quantum: u64) -> Option<f64> {
+        self.cells
+            .iter()
+            .find(|c| c.workload == "multicore" && c.sharding == Some((shards, quantum)))
+            .map(Cell::mips)
+    }
+
+    /// The headline shard-scaling ratio: S=4 over S=1 at quantum 1024.
+    pub fn shard_speedup_q1024(&self) -> Option<f64> {
+        match (self.shard_mips(1, 1024), self.shard_mips(4, 1024)) {
+            (Some(s1), Some(s4)) if s1 > 0.0 => Some(s4 / s1),
+            _ => None,
+        }
+    }
+
     /// Human-readable table.
     pub fn table(&self) -> String {
         let mut s = format!(
@@ -294,6 +365,14 @@ impl BenchReport {
                 ));
             }
         }
+        if let (Some(s1), Some(s4), Some(ratio)) =
+            (self.shard_mips(1, 1024), self.shard_mips(4, 1024), self.shard_speedup_q1024())
+        {
+            s.push_str(&format!(
+                "multicore shard scaling @q1024: s1 {:.2} MIPS vs s4 {:.2} MIPS ({:.2}x)\n",
+                s1, s4, ratio
+            ));
+        }
         s
     }
 
@@ -318,6 +397,11 @@ impl BenchReport {
                  \"memory\": \"{}\", \"dispatch\": \"{}\", \"harts\": {}, ",
                 cell.workload, cell.mode, cell.pipeline, cell.memory, cell.dispatch, cell.harts
             ));
+            if let Some((shards, quantum)) = cell.sharding {
+                // Sharded-engine rows only: pre-sharding rows keep their
+                // exact schema.
+                s.push_str(&format!("\"shards\": {}, \"quantum\": {}, ", shards, quantum));
+            }
             s.push_str(&format!(
                 "\"mips\": {:.6}, \"best_secs\": {:.6}, \"mean_secs\": {:.6}, \"runs\": {}, ",
                 cell.mips(),
@@ -378,7 +462,19 @@ impl BenchReport {
             (Some(c), Some(l)) if l > 0.0 => Some(c / l),
             _ => None,
         };
-        s.push_str(&format!("  \"coremark_chain_speedup\": {}\n", fmt_opt(speedup)));
+        s.push_str(&format!("  \"coremark_chain_speedup\": {},\n", fmt_opt(speedup)));
+        s.push_str(&format!(
+            "  \"shard_s1_q1024_mips\": {},\n",
+            fmt_opt(self.shard_mips(1, 1024))
+        ));
+        s.push_str(&format!(
+            "  \"shard_s4_q1024_mips\": {},\n",
+            fmt_opt(self.shard_mips(4, 1024))
+        ));
+        s.push_str(&format!(
+            "  \"shard_speedup_s4_q1024\": {}\n",
+            fmt_opt(self.shard_speedup_q1024())
+        ));
         s.push_str("}\n");
         s
     }
@@ -392,8 +488,9 @@ mod tests {
     /// chain-following dispatch serves the vast majority of entries.
     #[test]
     fn single_cell_runs_and_chains() {
-        let cell = run_cell("coremark-lite", 1, "lockstep", "simple", "atomic", false, 1, true)
-            .expect("cell must run");
+        let cell =
+            run_cell("coremark-lite", 1, "lockstep", "simple", "atomic", false, None, 1, true)
+                .expect("cell must run");
         assert!(cell.exit.is_some(), "workload must exit cleanly");
         assert!(cell.insts > 0);
         assert!(cell.measurement.work > 0);
@@ -409,8 +506,9 @@ mod tests {
     /// The lookup-dispatch ablation cell records zero chain hits.
     #[test]
     fn lookup_cell_has_no_chain_hits() {
-        let cell = run_cell("coremark-lite", 1, "lockstep", "simple", "atomic", true, 1, true)
-            .expect("cell must run");
+        let cell =
+            run_cell("coremark-lite", 1, "lockstep", "simple", "atomic", true, None, 1, true)
+                .expect("cell must run");
         assert_eq!(cell.engine_stats.chain_hits, 0);
         assert!(cell.engine_stats.chain_misses > 0);
         assert_eq!(cell.dispatch, "lookup");
@@ -453,5 +551,46 @@ mod tests {
         let table = report.table();
         assert!(table.contains("coremark-lite"));
         assert!(table.contains("coremark dispatch: chain"));
+    }
+
+    /// The multicore workload produces the shard-scaling rows: the
+    /// standard matrix plus SHARD_MATRIX sharded cells, all exiting
+    /// cleanly, with the shards/quantum keys only on sharded rows.
+    #[test]
+    fn sharded_rows_present_and_schema_stable() {
+        let opts = BenchOptions {
+            runs: 1,
+            quick: true,
+            workload: Some("multicore".into()),
+            ..Default::default()
+        };
+        let report = run_bench(&opts);
+        assert_eq!(
+            report.cells.len(),
+            MATRIX.len() + SHARD_MATRIX.len(),
+            "matrix + shard-scaling cells must all complete: {:?}",
+            report.skipped
+        );
+        assert!(report.cells.iter().all(|c| c.exit.is_some()));
+        // Every sharded cell retired the same guest work (determinism of
+        // the workload across shard/quantum points).
+        let expected = crate::workloads::multicore::expected_sum(4, 5_000);
+        for cell in report.cells.iter().filter(|c| c.sharding.is_some()) {
+            assert_eq!(cell.exit, Some(expected), "cell {}", cell.label());
+            assert_eq!(cell.mode, "sharded");
+        }
+        assert!(report.shard_mips(1, 1024).is_some());
+        assert!(report.shard_mips(4, 1024).is_some());
+        assert!(report.shard_speedup_q1024().is_some());
+        let json = report.to_json();
+        assert!(json.contains("\"shards\": 4, \"quantum\": 1024"));
+        assert!(json.contains("\"shard_speedup_s4_q1024\""));
+        // Non-sharded rows keep the pre-sharding schema (no shard keys on
+        // a lockstep row).
+        assert!(!json
+            .lines()
+            .any(|l| l.contains("\"mode\": \"lockstep\"") && l.contains("\"shards\"")));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert!(report.table().contains("multicore sharded[s4,q1024]/inorder+cache"));
     }
 }

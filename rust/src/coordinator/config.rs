@@ -14,6 +14,10 @@ pub enum EngineMode {
     Lockstep,
     /// Multi-threaded functional DBT (QEMU-like; atomic models only).
     Parallel,
+    /// Sharded cycle-level DBT: harts partitioned across host threads
+    /// with deterministic quantum barriers (DESIGN.md §10). Quantum 1
+    /// serializes into the exact single-threaded lockstep schedule.
+    Sharded,
 }
 
 impl EngineMode {
@@ -22,6 +26,7 @@ impl EngineMode {
             "interp" => Some(EngineMode::Interp),
             "lockstep" => Some(EngineMode::Lockstep),
             "parallel" => Some(EngineMode::Parallel),
+            "sharded" => Some(EngineMode::Sharded),
             _ => None,
         }
     }
@@ -31,6 +36,7 @@ impl EngineMode {
             EngineMode::Interp => "interp",
             EngineMode::Lockstep => "lockstep",
             EngineMode::Parallel => "parallel",
+            EngineMode::Sharded => "sharded",
         }
     }
 
@@ -40,6 +46,7 @@ impl EngineMode {
             EngineMode::Interp => 1,
             EngineMode::Lockstep => 2,
             EngineMode::Parallel => 3,
+            EngineMode::Sharded => 4,
         }
     }
 
@@ -49,6 +56,7 @@ impl EngineMode {
             1 => Some(EngineMode::Interp),
             2 => Some(EngineMode::Lockstep),
             3 => Some(EngineMode::Parallel),
+            4 => Some(EngineMode::Sharded),
             _ => None,
         }
     }
@@ -68,6 +76,13 @@ pub struct SimConfig {
     pub l2_geom: CacheGeometry,
     /// L0 line shift (6 = 64 B lines; 12 turns L0 into a TLB, §3.5).
     pub line_shift: u32,
+    /// Sharded mode: number of host threads ("shards") the harts are
+    /// partitioned across (clamped to the hart count at engine build).
+    pub shards: usize,
+    /// Sharded mode: barrier quantum in cycles. 1 = serialized execution,
+    /// bit-identical to the single-threaded lockstep engine; larger quanta
+    /// trade bounded cross-shard timing skew for parallel speed.
+    pub quantum: u64,
     /// Enable analytics trace capture with this many records.
     pub trace_capacity: usize,
     /// A1 ablation: yield per instruction.
@@ -111,6 +126,8 @@ impl Default for SimConfig {
             l1_geom: CacheGeometry::default_l1(),
             l2_geom: CacheGeometry { sets: 256, ways: 8, line_shift: 6 },
             line_shift: 6,
+            shards: 1,
+            quantum: 1024,
             trace_capacity: 0,
             naive_yield: false,
             no_chaining: false,
@@ -171,6 +188,20 @@ impl SimConfig {
                     .ok_or_else(|| ParseError(format!("unknown mode '{}'", value)))?;
             }
             "max-insts" => self.max_insts = value.parse().map_err(|_| bad("max-insts"))?,
+            "shards" => {
+                let s: usize = value.parse().map_err(|_| bad("shards"))?;
+                if s == 0 {
+                    return Err(bad("shards"));
+                }
+                self.shards = s;
+            }
+            "quantum" => {
+                let q: u64 = value.parse().map_err(|_| bad("quantum"))?;
+                if q == 0 {
+                    return Err(bad("quantum"));
+                }
+                self.quantum = q;
+            }
             "line-bytes" => {
                 let b: u64 = value.parse().map_err(|_| bad("line-bytes"))?;
                 if !b.is_power_of_two() || !(4..=4096).contains(&b) {
@@ -221,6 +252,9 @@ impl SimConfig {
         }
         if self.memory == "mesi" && self.mode == EngineMode::Parallel {
             return Err(ParseError("MESI requires lockstep execution (Table 2)".into()));
+        }
+        if self.shards > 32 {
+            return Err(ParseError("shards must be in 1..=32".into()));
         }
         if self.switch_at.is_some() {
             self.switch_target()?;
@@ -324,12 +358,40 @@ mod tests {
 
     #[test]
     fn engine_mode_codes_round_trip() {
-        for mode in [EngineMode::Interp, EngineMode::Lockstep, EngineMode::Parallel] {
+        for mode in [
+            EngineMode::Interp,
+            EngineMode::Lockstep,
+            EngineMode::Parallel,
+            EngineMode::Sharded,
+        ] {
             assert_eq!(EngineMode::from_code(mode.code()), Some(mode));
             assert_eq!(EngineMode::parse(mode.as_str()), Some(mode));
         }
         assert_eq!(EngineMode::from_code(0), None);
         assert_eq!(EngineMode::from_code(7), None);
+    }
+
+    #[test]
+    fn sharded_flags_parse_and_validate() {
+        let mut c = SimConfig::default();
+        c.set("mode", "sharded").unwrap();
+        c.set("harts", "4").unwrap();
+        c.set("shards", "4").unwrap();
+        c.set("quantum", "1024").unwrap();
+        c.set("memory", "mesi").unwrap(); // MESI is legal under sharding
+        c.validate().unwrap();
+        assert_eq!((c.shards, c.quantum), (4, 1024));
+        assert!(c.set("shards", "0").is_err(), "zero shards rejected");
+        assert!(c.set("quantum", "0").is_err(), "zero quantum rejected");
+        c.set("shards", "33").unwrap();
+        assert!(c.validate().is_err(), "shard count capped");
+        // The sharded engine is a valid hand-off target.
+        c.set("shards", "2").unwrap();
+        c.set("switch-to", "sharded:inorder:cache").unwrap();
+        assert_eq!(
+            c.switch_target().unwrap(),
+            (EngineMode::Sharded, "inorder".into(), "cache".into())
+        );
     }
 
     #[test]

@@ -23,7 +23,7 @@ use crate::engine::{
     line_shift_by_code, memory_name_by_code, pipeline_name_by_code, EngineStats, ExecutionEngine,
     ExitReason,
 };
-use crate::fiber::FiberEngine;
+use crate::fiber::{FiberEngine, ShardedEngine};
 use crate::interp::InterpEngine;
 use crate::isa::csr::SIMCTRL_ENGINE_SHIFT;
 use crate::mem::cache_model::CacheModel;
@@ -74,6 +74,11 @@ pub const ENGINE_TABLE: &[(&str, &str)] = &[
     ("interp", "Naive per-cycle interpreter (gem5-like lockstep baseline)"),
     ("lockstep", "Single-threaded lockstep DBT; supports every timing model"),
     ("parallel", "One host thread per hart over shared DRAM; atomic memory model only"),
+    (
+        "sharded",
+        "Cycle-level DBT over --shards host threads with deterministic --quantum barriers; \
+         quantum 1 reproduces lockstep bit-exactly",
+    ),
 ];
 
 /// Render Tables 1 + 2 and the engine inventory for the `models` command.
@@ -93,10 +98,12 @@ pub fn models_report() -> String {
     }
     s.push_str(
         "\nEngine hand-off: the guest writes SIMCTRL (0x7C0) bits [22:20]\n\
-         (1=interp 2=lockstep 3=parallel, 0=keep), or pass --switch-at N to\n\
-         hand off to the --switch-to target after N retired instructions.\n\
-         Hart state, DRAM, IPIs and device state carry over; the new engine\n\
-         starts with cold code caches and L0s.\n",
+         (1=interp 2=lockstep 3=parallel 4=sharded, 0=keep), or pass\n\
+         --switch-at N to hand off to the --switch-to target after N retired\n\
+         instructions. Hart state, DRAM, IPIs and device state carry over;\n\
+         the new engine starts with cold code caches and L0s.\n\
+         The sharded engine takes --shards S and --quantum Q: results are a\n\
+         pure function of (image, S, Q); Q=1 is bit-identical to lockstep.\n",
     );
     s
 }
@@ -322,6 +329,15 @@ pub fn build_engine(cfg: &SimConfig, image: &Image) -> Box<dyn ExecutionEngine> 
             Box::new(eng)
         }
         EngineMode::Parallel => Box::new(ParallelEngine::from_image(cfg, image)),
+        EngineMode::Sharded => {
+            let phys = Arc::new(PhysMem::new(DRAM_BASE, cfg.dram_bytes));
+            phys.load_image(image.base, &image.bytes);
+            let mut eng = ShardedEngine::new(cfg.harts, cfg.shards, cfg.quantum, &cfg.pipeline, || {
+                system_over(cfg, Arc::clone(&phys))
+            });
+            eng.set_entry(image.entry);
+            Box::new(eng)
+        }
     }
 }
 
@@ -344,6 +360,14 @@ pub fn resume_engine(cfg: &SimConfig, snapshot: SystemSnapshot) -> Box<dyn Execu
             Box::new(eng)
         }
         EngineMode::Parallel => Box::new(ParallelEngine::from_snapshot(cfg, snapshot)),
+        EngineMode::Sharded => {
+            let phys = Arc::clone(&snapshot.phys);
+            let mut eng = ShardedEngine::new(cfg.harts, cfg.shards, cfg.quantum, &cfg.pipeline, || {
+                system_over(cfg, Arc::clone(&phys))
+            });
+            eng.resume(snapshot);
+            Box::new(eng)
+        }
     }
 }
 

@@ -178,6 +178,7 @@ impl ParallelEngine {
                     let mut sys =
                         System::with_shared_phys(num_harts, phys, Box::new(AtomicModel));
                     sys.parallel = true;
+                    sys.engine_code = crate::isa::csr::SIMCTRL_ENGINE_PARALLEL;
                     sys.shared_exit = Some(shared_exit);
                     sys.shared_switch = Some(shared_switch);
                     sys.simctrl_state = simctrl_state;

@@ -1,0 +1,159 @@
+//! Quantum-boundary mailboxes for the sharded cycle-level engine
+//! (DESIGN.md §10).
+//!
+//! Shards never mutate each other's state directly. Every cross-shard
+//! interaction — MESI coherence traffic, CLINT software-interrupt and
+//! timer writes aimed at a remote hart, SBI IPIs, SIMCTRL broadcasts — is
+//! carried as a timestamped [`Msg`] posted into the target shard's
+//! [`Mailbox`] and drained at the next quantum barrier.
+//!
+//! Determinism argument: messages are applied in ascending
+//! `(cycle, sender hart id, sender sequence number)` order. The first two
+//! components mirror the lockstep scheduler's global order; the per-sender
+//! sequence number breaks the remaining ties (a hart can emit several
+//! messages in one cycle), so the drain order is a *total* order that
+//! depends only on what each shard deterministically produced — never on
+//! host-thread interleaving of the posts.
+
+use std::sync::Mutex;
+
+/// Payload of a cross-shard message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MsgKind {
+    /// A remote hart took this physical line into Modified: drop local
+    /// copies (L1 + L0), writing back a dirty local copy.
+    MesiInvalidate { line: u64 },
+    /// A remote hart read this physical line: downgrade local M/E copies
+    /// to Shared, writing back a dirty local copy.
+    MesiShare { line: u64 },
+    /// CLINT software-interrupt bit written for a hart local to the
+    /// receiving shard.
+    SetMsip { hart: usize, value: bool },
+    /// CLINT timer compare written for a hart local to the receiving
+    /// shard.
+    SetTimecmp { hart: usize, value: u64 },
+    /// SBI inter-processor-interrupt bits for a local hart.
+    Ipi { hart: usize, bits: u64 },
+    /// A remote hart wrote SIMCTRL with globally scoped fields (memory
+    /// model / line size): apply them and flush local code caches.
+    Simctrl { value: u64 },
+}
+
+/// One timestamped cross-shard message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Msg {
+    /// Sender hart's simulated clock when the message was generated.
+    pub cycle: u64,
+    /// Global id of the generating hart.
+    pub hart: usize,
+    /// Per-sender sequence number (monotonic per shard core).
+    pub seq: u64,
+    pub kind: MsgKind,
+}
+
+impl Msg {
+    /// The canonical delivery key: `(cycle, hart, seq)`.
+    #[inline]
+    pub fn key(&self) -> (u64, usize, u64) {
+        (self.cycle, self.hart, self.seq)
+    }
+}
+
+/// One shard's inbox. Senders post concurrently between barriers; the
+/// owner drains at the barrier in canonical key order.
+#[derive(Default)]
+pub struct Mailbox {
+    queue: Mutex<Vec<Msg>>,
+}
+
+impl Mailbox {
+    pub fn new() -> Mailbox {
+        Mailbox::default()
+    }
+
+    /// Post a batch of messages (called by sender shards before the
+    /// barrier; the mutex makes concurrent posts safe, the drain-time sort
+    /// makes their interleaving irrelevant).
+    pub fn post(&self, msgs: &[Msg]) {
+        if msgs.is_empty() {
+            return;
+        }
+        self.queue.lock().expect("mailbox poisoned").extend_from_slice(msgs);
+    }
+
+    /// Take every queued message, sorted by the canonical
+    /// `(cycle, hart, seq)` delivery key.
+    pub fn drain_sorted(&self) -> Vec<Msg> {
+        let mut msgs = std::mem::take(&mut *self.queue.lock().expect("mailbox poisoned"));
+        msgs.sort_unstable_by_key(Msg::key);
+        msgs
+    }
+
+    /// Number of queued messages (used by the barrier leader's
+    /// quiescence/deadlock test).
+    pub fn len(&self) -> usize {
+        self.queue.lock().expect("mailbox poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(cycle: u64, hart: usize, seq: u64) -> Msg {
+        Msg { cycle, hart, seq, kind: MsgKind::MesiInvalidate { line: cycle ^ seq } }
+    }
+
+    #[test]
+    fn drain_orders_by_cycle_then_hart_then_seq() {
+        let mb = Mailbox::new();
+        // Post from two "shards" in deliberately scrambled order.
+        mb.post(&[msg(20, 3, 7), msg(10, 3, 6), msg(10, 3, 5)]);
+        mb.post(&[msg(10, 0, 2), msg(20, 0, 3), msg(5, 1, 0)]);
+        let drained = mb.drain_sorted();
+        let keys: Vec<_> = drained.iter().map(Msg::key).collect();
+        assert_eq!(
+            keys,
+            vec![(5, 1, 0), (10, 0, 2), (10, 3, 5), (10, 3, 6), (20, 0, 3), (20, 3, 7)],
+            "canonical (cycle, hart, seq) order"
+        );
+        assert!(mb.is_empty(), "drain must consume the queue");
+    }
+
+    #[test]
+    fn drain_order_is_independent_of_post_interleaving() {
+        // The same message set posted in two different interleavings must
+        // drain identically — the property the quantum barrier relies on.
+        let set = [msg(4, 1, 0), msg(4, 0, 0), msg(4, 0, 1), msg(3, 2, 9), msg(4, 2, 1)];
+        let a = Mailbox::new();
+        a.post(&set);
+        let b = Mailbox::new();
+        for m in set.iter().rev() {
+            b.post(std::slice::from_ref(m));
+        }
+        assert_eq!(a.drain_sorted(), b.drain_sorted());
+    }
+
+    #[test]
+    fn same_cycle_messages_keep_hart_order() {
+        // Equal cycles: the lower hart id wins, mirroring the lockstep
+        // scheduler's (cycle, hart-id) tie-break.
+        let mb = Mailbox::new();
+        mb.post(&[msg(100, 5, 0), msg(100, 1, 4), msg(100, 2, 0)]);
+        let harts: Vec<_> = mb.drain_sorted().iter().map(|m| m.hart).collect();
+        assert_eq!(harts, vec![1, 2, 5]);
+    }
+
+    #[test]
+    fn empty_post_and_drain_are_noops() {
+        let mb = Mailbox::new();
+        mb.post(&[]);
+        assert!(mb.is_empty());
+        assert!(mb.drain_sorted().is_empty());
+        assert_eq!(mb.len(), 0);
+    }
+}

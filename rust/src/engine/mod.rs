@@ -18,6 +18,8 @@
 //! engine starts cold, which is always safe); resume() installs the
 //! snapshot into a freshly-built engine.
 
+pub mod mailbox;
+
 use crate::isa::csr::{SIMCTRL_ENGINE_MASK, SIMCTRL_ENGINE_SHIFT};
 use crate::mem::{MemTiming, MemoryModel};
 use crate::sys::{Hart, System, SystemSnapshot};
@@ -154,28 +156,58 @@ pub fn poll_interrupt(hart: &mut Hart, sys: &mut System) {
 }
 
 /// The shared "event-loop fiber" (§3.3): every runnable hart is in WFI, so
-/// advance their clocks to the next CLINT timer deadline and poll for
-/// wakeups. Returns `false` when no hart can ever wake again (no WFI
-/// sleepers left, no programmed deadline, or the deadline wakes nobody) —
-/// the caller reports [`ExitReason::Deadlock`].
+/// deliver any wake source that is already pending (a sibling hart's IPI /
+/// msip write — no clock advance required), else advance the sleepers'
+/// clocks to the next CLINT timer deadline and poll for wakeups. Returns
+/// `false` when no hart can ever wake again (no WFI sleepers left, no
+/// pending wake source, no programmed deadline, or the deadline wakes
+/// nobody) — the caller reports [`ExitReason::Deadlock`].
 pub fn wake_at_next_deadline(harts: &mut [Hart], sys: &mut System) -> bool {
-    if !harts.iter().any(|h| !h.halted && h.wfi) {
+    wake_at_next_deadline_multi(&mut [harts], sys)
+}
+
+/// [`wake_at_next_deadline`] over hart vectors partitioned across shard
+/// cores sharing one system (the serialized sharded scheduler) — the one
+/// implementation of the wake policy, so the single-threaded engine and
+/// the sharded engine cannot drift apart.
+pub fn wake_at_next_deadline_multi(chunks: &mut [&mut [Hart]], sys: &mut System) -> bool {
+    if !chunks.iter().any(|c| c.iter().any(|h| !h.halted && h.wfi)) {
         return false;
+    }
+    // Already-deliverable wake sources first: an IPI posted while the
+    // sleeper was parked (the scheduler never runs WFI harts, so nobody
+    // polled it) must wake it *without* time jumping to the — possibly
+    // unrelated — next timer deadline.
+    let mut woke = false;
+    for chunk in chunks.iter_mut() {
+        for hart in chunk.iter_mut() {
+            if hart.halted || !hart.wfi {
+                continue;
+            }
+            poll_interrupt(hart, sys);
+            if !hart.wfi {
+                woke = true;
+            }
+        }
+    }
+    if woke {
+        return true;
     }
     let Some(deadline) = sys.bus.clint.next_timer_deadline() else {
         return false;
     };
-    let mut woke = false;
-    for hart in harts.iter_mut() {
-        if hart.halted || !hart.wfi {
-            continue;
-        }
-        if hart.cycle < deadline {
-            hart.cycle = deadline;
-        }
-        poll_interrupt(hart, sys);
-        if !hart.wfi {
-            woke = true;
+    for chunk in chunks.iter_mut() {
+        for hart in chunk.iter_mut() {
+            if hart.halted || !hart.wfi {
+                continue;
+            }
+            if hart.cycle < deadline {
+                hart.cycle = deadline;
+            }
+            poll_interrupt(hart, sys);
+            if !hart.wfi {
+                woke = true;
+            }
         }
     }
     woke
@@ -255,7 +287,7 @@ pub fn merge_simctrl(current: u64, write: u64) -> u64 {
     if line_shift_by_code(write).is_some() {
         merged = (merged & !(0xfff << 8)) | (write & (0xfff << 8));
     }
-    if matches!((write >> SIMCTRL_ENGINE_SHIFT) & 0b111, 1..=3) {
+    if matches!((write >> SIMCTRL_ENGINE_SHIFT) & 0b111, 1..=4) {
         merged = (merged & !SIMCTRL_ENGINE_MASK) | (write & SIMCTRL_ENGINE_MASK);
     }
     merged

@@ -20,732 +20,71 @@
 //!    [`crate::engine::wake_at_next_deadline`] — wakes WFI sleepers at
 //!    CLINT deadlines.
 //!
+//! The scheduler/continuation machinery itself lives in [`shard::ShardCore`]
+//! (one core per hart *range*), so the same code drives both this
+//! single-threaded engine (one core over every hart) and the sharded
+//! cycle-level engine ([`sharded::ShardedEngine`], DESIGN.md §10) that
+//! spreads cores across host threads under deterministic quantum barriers.
+//!
 //! The engine implements [`crate::engine::ExecutionEngine`], so the
 //! coordinator can suspend it mid-run into a
 //! [`crate::sys::SystemSnapshot`] and hand the guest to another engine
 //! (or receive one fast-forwarded by the parallel engine, §3.5).
 
+pub mod shard;
+pub mod sharded;
+
 pub use crate::engine::EngineStats;
+pub use shard::{ShardCore, WindowOutcome};
+pub use sharded::ShardedEngine;
 
-use crate::dbt::block::{TermKind, NO_CHAIN};
-use crate::dbt::{translate, BlockId, CodeCache};
-use crate::engine::{
-    exit_code, line_shift_by_code, memory_model_by_code, merge_simctrl, pipeline_name_by_code,
-    poll_interrupt, wake_at_next_deadline, ExecutionEngine, ExitReason,
-};
-use crate::isa::csr::{
-    EXC_ECALL_M, EXC_ECALL_S, EXC_ECALL_U, SIMCTRL_ENGINE_LOCKSTEP, SIMCTRL_ENGINE_PARALLEL,
-    SIMCTRL_ENGINE_SHIFT,
-};
-use crate::mem::mmu::{translate as mmu_translate, AccessKind};
-use crate::pipeline::PipelineModel;
-use crate::sys::exec::{cold_fetch, exec_op, Flow};
-use crate::sys::hart::{Hart, Trap};
-use crate::sys::{handle_ecall, System, SystemSnapshot};
+use crate::engine::{exit_code, wake_at_next_deadline, ExecutionEngine, ExitReason};
+use crate::sys::{System, SystemSnapshot};
 
-/// Per-hart continuation — the fiber state.
-struct Cont {
-    /// Current block (NO_CHAIN = at a block boundary).
-    block: BlockId,
-    /// Next step index to execute within the block.
-    step: u32,
-    /// `true` when resuming *at* a sync point whose yield already happened.
-    resumed: bool,
-    /// Chain-followed successor to enter at the next block boundary
-    /// (NO_CHAIN = none), read from the finished block's chain link.
-    next: BlockId,
-    /// Code-cache generation `next` was read under; a flush in between
-    /// (mid-boundary SIMCTRL from another hart, etc.) kills the hop.
-    next_gen: u64,
-    /// Whether `next` came from a direct terminator (static target —
-    /// entered without re-validating the start PC) or a dynamic one
-    /// (cached last target — must match the live PC at entry).
-    next_direct: bool,
-    /// Pending eager link install (NO_CHAIN = none): the block whose exit
-    /// edge gets linked to whatever block the next entry resolves, so
-    /// every edge pays at most one hash lookup per generation.
-    prev: BlockId,
-    prev_taken: bool,
-    prev_gen: u64,
-}
-
-impl Cont {
-    fn new() -> Cont {
-        Cont {
-            block: NO_CHAIN,
-            step: 0,
-            resumed: false,
-            next: NO_CHAIN,
-            next_gen: 0,
-            next_direct: false,
-            prev: NO_CHAIN,
-            prev_taken: false,
-            prev_gen: 0,
-        }
-    }
-
-    fn clear(&mut self) {
-        self.block = NO_CHAIN;
-        self.step = 0;
-        self.resumed = false;
-    }
-
-    /// Drop the recorded exit edge (redirects, traps, flushes): neither
-    /// following a chained successor nor installing a link is valid once
-    /// control flow left the recorded edge.
-    fn clear_chain(&mut self) {
-        self.next = NO_CHAIN;
-        self.prev = NO_CHAIN;
-    }
-}
-
-/// The lockstep DBT engine.
+/// The lockstep DBT engine: one [`ShardCore`] scheduling every hart of the
+/// system in a single host thread.
+///
+/// `Deref`s to its core, so the per-hart state (`harts`, `caches`,
+/// `pipelines`, `stats`, the ablation switches) reads exactly as it did
+/// when the engine was monolithic.
 pub struct FiberEngine {
-    pub harts: Vec<Hart>,
     pub sys: System,
-    pub caches: Vec<CodeCache>,
-    pub pipelines: Vec<Box<dyn PipelineModel>>,
-    conts: Vec<Cont>,
-    /// Nominal clock (1 cycle/instruction) for harts whose pipeline model
-    /// does not track cycles (atomic).
-    nominal: Vec<bool>,
-    /// A1 ablation: yield after every instruction instead of batching to
-    /// synchronisation points.
-    pub yield_per_instruction: bool,
-    /// A3 ablation: disable block chaining.
-    pub chaining: bool,
-    pub stats: EngineStats,
-    total_retired: u64,
+    core: ShardCore,
 }
 
-/// What a slice did (scheduler feedback).
-enum Slice {
-    Ran,
-    Waiting,
+impl std::ops::Deref for FiberEngine {
+    type Target = ShardCore;
+    fn deref(&self) -> &ShardCore {
+        &self.core
+    }
+}
+
+impl std::ops::DerefMut for FiberEngine {
+    fn deref_mut(&mut self) -> &mut ShardCore {
+        &mut self.core
+    }
 }
 
 impl FiberEngine {
     pub fn new(sys: System, pipeline: &str) -> FiberEngine {
         let n = sys.num_harts;
-        let pipelines: Vec<Box<dyn PipelineModel>> =
-            (0..n).map(|_| crate::pipeline::by_name(pipeline).expect("unknown pipeline model")).collect();
-        let nominal = pipelines.iter().map(|p| !p.tracks_cycles()).collect();
-        FiberEngine {
-            harts: (0..n).map(Hart::new).collect(),
-            sys,
-            caches: (0..n).map(|_| CodeCache::new()).collect(),
-            pipelines,
-            conts: (0..n).map(|_| Cont::new()).collect(),
-            nominal,
-            yield_per_instruction: false,
-            chaining: true,
-            stats: EngineStats::default(),
-            total_retired: 0,
-        }
+        FiberEngine { sys, core: ShardCore::new(0, n, pipeline) }
     }
 
     /// Set all hart PCs (after loading an image).
     pub fn set_entry(&mut self, entry: u64) {
-        for h in &mut self.harts {
+        for h in &mut self.core.harts {
             h.pc = entry;
         }
     }
 
     pub fn total_instret(&self) -> u64 {
-        self.harts.iter().map(|h| h.instret).sum()
-    }
-
-    // -----------------------------------------------------------------------
-    // Translation-time fetch probe: functional-only walk + read, no timing.
-    // -----------------------------------------------------------------------
-    fn probe_fetch(hart: &Hart, sys: &System, vaddr: u64) -> Result<u16, Trap> {
-        let ctx = hart.mmu_fetch_ctx();
-        let tr = mmu_translate(&sys.phys, &ctx, vaddr, AccessKind::Execute).map_err(|_| {
-            Trap::new(crate::isa::csr::EXC_INSN_PAGE_FAULT, vaddr)
-        })?;
-        if !sys.phys.contains(tr.paddr, 2) {
-            return Err(Trap::new(crate::isa::csr::EXC_INSN_ACCESS, vaddr));
-        }
-        Ok(sys.phys.read_u16(tr.paddr))
-    }
-
-    /// Translate the block at `pc` for hart `h`.
-    fn translate_block(&mut self, h: usize, pc: u64) -> Result<crate::dbt::Block, Trap> {
-        self.stats.blocks_translated += 1;
-        let line_shift = self.sys.l0[h].i.line_shift();
-        let hart = &self.harts[h];
-        let sys = &self.sys;
-        let mut probe = |vaddr: u64| Self::probe_fetch(hart, sys, vaddr);
-        translate(&mut probe, self.pipelines[h].as_mut(), pc, line_shift)
-    }
-
-    /// Enter the block at the hart's current PC: chain-follow (the primary
-    /// path — no PC re-hash), else look up or translate and eagerly
-    /// install the chain link on the edge that brought us here; validate
-    /// cross-page stubs; perform the runtime L0 I-cache checks (§3.4.2).
-    fn enter_block(&mut self, h: usize) -> Result<BlockId, Trap> {
-        self.stats.block_entries += 1;
-        let pc = self.harts[h].pc;
-        let prv = self.harts[h].prv as u8;
-        let gen = self.caches[h].generation;
-
-        // Chain-following primary path (§3.1 + §3.4.2): the finished
-        // block's exit recorded its generation-validated successor link.
-        // Direct terminators (branch / jal / sequential) are entered
-        // without re-hashing or re-validating the PC — the target is
-        // static for the life of the generation, and exits that leave the
-        // recorded edge (traps, interrupts, privilege changes) clear the
-        // chain state. Dynamic targets (jalr, mret/sret) cached the last
-        // successor and re-validate it against the live PC.
-        let mut id = NO_CHAIN;
-        let next = self.conts[h].next;
-        if next != NO_CHAIN && self.conts[h].next_gen == gen {
-            if self.conts[h].next_direct {
-                debug_assert_eq!(self.caches[h].block(next).start, pc);
-                id = next;
-            } else if self.caches[h].block(next).start == pc {
-                id = next;
-            }
-        }
-        if id != NO_CHAIN {
-            self.stats.chain_hits += 1;
-        } else {
-            self.stats.chain_misses += 1;
-            id = match self.caches[h].get(pc, prv) {
-                Some(i) => i,
-                None => {
-                    let block = self.translate_block(h, pc)?;
-                    self.caches[h].insert(pc, prv, block)
-                }
-            };
-            // Eager link installation: the edge we just resolved becomes
-            // chain-followable from its source block's next exit, whether
-            // the target was already translated or not — each edge pays
-            // at most one hash lookup per generation.
-            let prev = self.conts[h].prev;
-            if prev != NO_CHAIN && self.conts[h].prev_gen == self.caches[h].generation {
-                self.caches[h].install_link(prev, self.conts[h].prev_taken, id);
-            }
-        }
-        self.conts[h].clear_chain();
-
-        // Cross-page fallback (§3.1): re-read the second-page halfword and
-        // retranslate if the mapping changed (applies to chained entries
-        // too — the link survives, the content check does not).
-        if let Some(stub) = self.caches[h].block(id).cross_page {
-            let seen = Self::probe_fetch(&self.harts[h], &self.sys, stub.vaddr)?;
-            if seen != stub.expected {
-                self.stats.retranslations += 1;
-                let block = self.translate_block(h, pc)?;
-                self.caches[h].replace(id, block);
-            }
-        }
-
-        // Runtime L0 I-cache checks: block entry + each crossed line.
-        let force_cold = self.sys.force_cold;
-        let n_checks = self.caches[h].block(id).icache_checks.len();
-        for k in 0..n_checks {
-            let vaddr = self.caches[h].block(id).icache_checks[k];
-            let hart = &mut self.harts[h];
-            if force_cold || self.sys.l0[h].i.lookup(vaddr).is_none() {
-                cold_fetch(hart, &mut self.sys, vaddr)?;
-            }
-        }
-        Ok(id)
-    }
-
-    /// Commit pending cycles — the (multi-cycle) yield of Listing 3.
-    #[inline]
-    fn yield_now(&mut self, h: usize) {
-        self.stats.yields += 1;
-        let hart = &mut self.harts[h];
-        hart.cycle += std::mem::take(&mut hart.pending);
-    }
-
-    /// Handle a trap raised during execution, including environment-call
-    /// emulation. `npc` = address after the trapping instruction.
-    fn deliver_trap(&mut self, h: usize, trap: Trap, pc: u64, npc: u64) {
-        let prv_before = self.harts[h].prv;
-        let hart = &mut self.harts[h];
-        let is_ecall = matches!(trap.cause, EXC_ECALL_U | EXC_ECALL_S | EXC_ECALL_M);
-        if is_ecall && handle_ecall(hart, &mut self.sys) {
-            let hart = &mut self.harts[h];
-            hart.instret += 1;
-            hart.pending += 1;
-            hart.pc = npc;
-        } else {
-            let hart = &mut self.harts[h];
-            hart.pc = hart.take_trap(trap, pc);
-        }
-        if self.harts[h].prv != prv_before {
-            self.sys.l0[h].clear();
-        }
-        self.conts[h].clear();
-        self.conts[h].clear_chain();
-    }
-
-    /// Apply pending side effects after a system instruction. Returns
-    /// `true` if the current translation was invalidated.
-    fn process_effects(&mut self, h: usize) -> bool {
-        let fx = self.harts[h].effects;
-        self.harts[h].effects.clear();
-        let mut invalidated = false;
-        if fx.fence_i {
-            self.caches[h].flush();
-            self.sys.l0[h].i.clear();
-            invalidated = true;
-        }
-        if fx.sfence {
-            self.caches[h].flush();
-            self.sys.model.flush_hart(&mut self.sys.l0, h);
-            self.sys.l0[h].clear();
-            invalidated = true;
-        }
-        if fx.flush_l0 {
-            // Translation context changed (SUM/MXR/MPRV/MPP): L0 entries
-            // are virtually tagged without a mode tag, so drop them. The
-            // code cache is keyed by (pc, privilege) and survives.
-            self.sys.l0[h].clear();
-        }
-        if let Some(v) = fx.simctrl {
-            invalidated |= self.apply_simctrl(h, v);
-        }
-        if fx.mark.is_some() {
-            // Region-of-interest marker: reset per-hart counters so the
-            // bracketed region can be measured in isolation.
-            // (Recorded value currently unused beyond the reset.)
-        }
-        invalidated
+        self.core.total_instret()
     }
 
     /// Runtime reconfiguration via the vendor SIMCTRL CSR (§3.5).
-    /// Encoding documented at `isa::csr::CSR_SIMCTRL`.
     pub fn apply_simctrl(&mut self, h: usize, value: u64) -> bool {
-        // Resolve "keep" (zero) fields against the live configuration, so
-        // earlier in-place model changes survive this write and any
-        // hand-off it triggers.
-        let state = merge_simctrl(self.sys.simctrl_state, value);
-        // Engine-level hand-off (§3.5 extended): bits [22:20] request a
-        // different execution engine. This engine only records the request
-        // — the model fields of the same write are applied when the
-        // coordinator relaunches the guest under the target engine.
-        let engine = (value >> SIMCTRL_ENGINE_SHIFT) & 0b111;
-        let current =
-            if self.sys.parallel { SIMCTRL_ENGINE_PARALLEL } else { SIMCTRL_ENGINE_LOCKSTEP };
-        if matches!(engine, 1..=3) && engine != current {
-            self.sys.simctrl_state = state;
-            self.sys.request_engine_switch(state);
-            self.conts[h].clear_chain();
-            return true;
-        }
-        let mut invalidated = false;
-        // Pipeline model: per-hart (§3.5), flushes that hart's code cache.
-        let pm = value & 0b111;
-        if pm != 0 {
-            let name = pipeline_name_by_code(pm).unwrap_or("simple");
-            if let Some(model) = crate::pipeline::by_name(name) {
-                self.nominal[h] = !model.tracks_cycles();
-                self.pipelines[h] = model;
-                self.caches[h].flush();
-                self.conts[h].clear_chain();
-                invalidated = true;
-            }
-        }
-        // Memory model: global, flushes L0s.
-        let mm = (value >> 4) & 0b111;
-        if mm != 0 {
-            let n = self.sys.num_harts;
-            if let Some(model) = memory_model_by_code(mm, n, self.sys.timing) {
-                self.sys.set_model(model);
-            }
-        }
-        // Cache-line size (bytes): turning the L0 D-cache into an L0 TLB
-        // at 4096 (§3.5). This flushes *every* hart's code cache, so any
-        // sibling hart suspended mid-block (yielded at a sync point)
-        // would resume into a cleared arena: write back its architectural
-        // PC from its continuation first (as sync_arch_state does) so it
-        // re-enters through a fresh lookup instead. The writing hart `h`
-        // itself is handled by the `invalidated` return — its run_slice
-        // caller drops the continuation without touching the arena.
-        if let Some(shift) = line_shift_by_code(value) {
-            for o in 0..self.harts.len() {
-                if o == h || self.conts[o].block == NO_CHAIN {
-                    continue;
-                }
-                let block = self.caches[o].block(self.conts[o].block);
-                let si = self.conts[o].step as usize;
-                let pc_off =
-                    if si < block.steps.len() { block.steps[si].pc_off } else { block.term.pc_off };
-                self.harts[o].pc = block.start + pc_off as u64;
-                self.conts[o].clear();
-            }
-            self.sys.set_line_shift(shift);
-            for c in &mut self.caches {
-                c.flush(); // icache-check placement depends on line size
-            }
-            for cont in &mut self.conts {
-                // The flush's generation bump already kills these; clear
-                // anyway so the state never outlives its meaning.
-                cont.clear_chain();
-            }
-            invalidated = true;
-        }
-        self.sys.simctrl_state = state;
-        invalidated
-    }
-
-    // -----------------------------------------------------------------------
-    // The fiber body: run hart `h` until it yields.
-    // -----------------------------------------------------------------------
-    /// Run hart `h` until it must hand control back: at a synchronisation
-    /// point once its clock reaches `bound` (the next hart's position in
-    /// the lockstep order), at a block end, or on a trap/WFI.
-    ///
-    /// Passing the bound in lets a hart that is still strictly the
-    /// scheduling minimum execute *through* its sync points without a
-    /// scheduler round trip — the multi-cycle-yield optimisation taken one
-    /// step further. The order of memory operations is identical to
-    /// yielding at every sync point: an operation executes only while its
-    /// hart is the global (cycle, id) minimum.
-    fn run_slice(&mut self, h: usize, bound: u64, bound_id: usize) -> Slice {
-        self.stats.slices += 1;
-
-        if self.harts[h].wfi {
-            poll_interrupt(&mut self.harts[h], &mut self.sys);
-            if self.harts[h].wfi {
-                return Slice::Waiting;
-            }
-            // Waking redirects the PC into the trap vector; any recorded
-            // exit edge is dead (WFI exits never record one, but the
-            // wake-up path must not depend on that).
-            self.conts[h].clear();
-            self.conts[h].clear_chain();
-        }
-
-        // ---- block boundary ------------------------------------------------
-        if self.conts[h].block == NO_CHAIN {
-            // Interrupts are checked at block ends only (§3.3.2).
-            let pc_before = self.harts[h].pc;
-            let prv_before = self.harts[h].prv;
-            poll_interrupt(&mut self.harts[h], &mut self.sys);
-            if self.harts[h].pc != pc_before || self.harts[h].prv != prv_before {
-                // Redirected to the trap vector: neither the chained
-                // successor nor the pending link install describes the
-                // edge actually taken. The privilege comparison matters
-                // even when the PC happens to be unchanged (trap vector ==
-                // interrupted PC): translations are privilege-keyed and a
-                // chained entry skips that check.
-                self.conts[h].clear_chain();
-            }
-            match self.enter_block(h) {
-                Ok(id) => {
-                    self.conts[h].block = id;
-                    self.conts[h].step = 0;
-                    self.conts[h].resumed = false;
-                }
-                Err(trap) => {
-                    let pc = self.harts[h].pc;
-                    self.deliver_trap(h, trap, pc, pc);
-                    self.yield_now(h);
-                    return Slice::Ran;
-                }
-            }
-        }
-
-        let id = self.conts[h].block;
-        // SAFETY: `block_ptr` points into this hart's code-cache arena. The
-        // arena is only mutated by process_effects / deliver_trap /
-        // apply_simctrl, and every such path returns from this function
-        // without dereferencing the pointer again. Between mutations the
-        // pointer is re-derefenced fresh each iteration.
-        let block_ptr: *const crate::dbt::Block = self.caches[h].block(id);
-        let block = unsafe { &*block_ptr };
-        let block_start = block.start;
-        let n_steps = block.steps.len();
-        let steps_ptr = block.steps.as_ptr();
-        let mut retired_in_slice = 0u64;
-
-        // ---- steps ----------------------------------------------------------
-        while (self.conts[h].step as usize) < n_steps {
-            let si = self.conts[h].step as usize;
-            // Steps are small Copy values; read by value, no borrow held.
-            debug_assert!(si < n_steps);
-            // SAFETY: si < n_steps; steps_ptr valid per block_ptr argument above.
-            let step = unsafe { *steps_ptr.add(si) };
-            let pc = block_start + step.pc_off as u64;
-            let npc = pc + step.len as u64;
-
-            // Synchronisation point (§3.3.2): yield pending cycles before
-            // executing. Hand control back only if another hart is now at
-            // or ahead of our position in the lockstep order.
-            if step.sync && !self.conts[h].resumed {
-                if self.nominal[h] {
-                    self.harts[h].pending += retired_in_slice;
-                    retired_in_slice = 0;
-                }
-                self.yield_now(h);
-                let c = self.harts[h].cycle;
-                if c > bound || (c == bound && bound_id < h) {
-                    self.conts[h].resumed = true;
-                    return Slice::Ran;
-                }
-            }
-            self.conts[h].resumed = false;
-
-            // Fast path for the dominant trap-free step classes: ALU ops
-            // skip the full exec_op dispatch (measured ~15% of lockstep
-            // time), and loads/stores inline the L0 hit path so a hit
-            // costs the paper's 3 host memory operations (§3.4.1) without
-            // crossing the sys::exec function boundary — misses continue
-            // in the shared #[cold] continuation, so L0/model counters
-            // stay bit-identical with the interpreter. (Disabled under
-            // the A1 naive-yield ablation, which must yield after every
-            // instruction.)
-            if !self.yield_per_instruction {
-            match step.op {
-                crate::isa::Op::AluImm { op, word, rd, rs1, imm } => {
-                    let hart = &mut self.harts[h];
-                    let v = crate::sys::exec::alu_value(op, word, hart.reg(rs1), imm as i64 as u64);
-                    hart.set_reg(rd, v);
-                    hart.instret += 1;
-                    hart.pending += step.cycles as u64;
-                    retired_in_slice += 1;
-                    self.conts[h].step += 1;
-                    continue;
-                }
-                crate::isa::Op::Alu { op, word, rd, rs1, rs2 } => {
-                    let hart = &mut self.harts[h];
-                    let v = crate::sys::exec::alu_value(op, word, hart.reg(rs1), hart.reg(rs2));
-                    hart.set_reg(rd, v);
-                    hart.instret += 1;
-                    hart.pending += step.cycles as u64;
-                    retired_in_slice += 1;
-                    self.conts[h].step += 1;
-                    continue;
-                }
-                crate::isa::Op::Load { width, signed, rd, rs1, imm } => {
-                    // read_mem is #[inline(always)]: the L0 hit path (tag
-                    // compare, XOR, data read — no device check, hits
-                    // never cover MMIO) lands here inline, misses continue
-                    // in the #[cold] read_mem_miss continuation. What this
-                    // arm saves over the generic path is the exec_op
-                    // dispatch and the post-exec effects check (loads
-                    // never raise side effects).
-                    let vaddr = self.harts[h].reg(rs1).wrapping_add(imm as i64 as u64);
-                    match crate::sys::exec::read_mem(
-                        &mut self.harts[h],
-                        &mut self.sys,
-                        vaddr,
-                        width,
-                    ) {
-                        Ok(raw) => {
-                            let hart = &mut self.harts[h];
-                            hart.set_reg(rd, crate::sys::exec::sext_load(raw, width, signed));
-                            hart.instret += 1;
-                            hart.pending += step.cycles as u64;
-                            retired_in_slice += 1;
-                            self.conts[h].step += 1;
-                            continue;
-                        }
-                        Err(trap) => {
-                            if self.nominal[h] {
-                                self.harts[h].pending += retired_in_slice;
-                            }
-                            self.deliver_trap(h, trap, pc, npc);
-                            self.yield_now(h);
-                            return Slice::Ran;
-                        }
-                    }
-                }
-                crate::isa::Op::Store { width, rs1, rs2, imm } => {
-                    let vaddr = self.harts[h].reg(rs1).wrapping_add(imm as i64 as u64);
-                    let value = self.harts[h].reg(rs2);
-                    match crate::sys::exec::write_mem(
-                        &mut self.harts[h],
-                        &mut self.sys,
-                        vaddr,
-                        width,
-                        value,
-                    ) {
-                        Ok(()) => {
-                            let hart = &mut self.harts[h];
-                            hart.instret += 1;
-                            hart.pending += step.cycles as u64;
-                            retired_in_slice += 1;
-                            self.conts[h].step += 1;
-                            continue;
-                        }
-                        Err(trap) => {
-                            if self.nominal[h] {
-                                self.harts[h].pending += retired_in_slice;
-                            }
-                            self.deliver_trap(h, trap, pc, npc);
-                            self.yield_now(h);
-                            return Slice::Ran;
-                        }
-                    }
-                }
-                _ => {}
-            }
-            }
-
-            match exec_op(&mut self.harts[h], &mut self.sys, &step.op, pc, npc) {
-                Ok(_) => {
-                    let hart = &mut self.harts[h];
-                    hart.instret += 1;
-                    hart.pending += step.cycles as u64;
-                    retired_in_slice += 1;
-                    self.conts[h].step += 1;
-                    if step.sync && self.harts[h].effects.any() && self.process_effects(h) {
-                        // Current translation flushed mid-block: resume at
-                        // the next instruction through a fresh lookup.
-                        self.harts[h].pc = npc;
-                        self.conts[h].clear();
-                        self.conts[h].clear_chain();
-                        if self.nominal[h] {
-                            self.harts[h].pending += retired_in_slice;
-                        }
-                        self.yield_now(h);
-                        return Slice::Ran;
-                    }
-                }
-                Err(trap) => {
-                    if self.nominal[h] {
-                        self.harts[h].pending += retired_in_slice;
-                    }
-                    self.deliver_trap(h, trap, pc, npc);
-                    self.yield_now(h);
-                    return Slice::Ran;
-                }
-            }
-
-            // A1 ablation: naive per-instruction yielding (always a full
-            // scheduler round trip, as in pre-batching R2VM).
-            if self.yield_per_instruction {
-                if self.nominal[h] {
-                    self.harts[h].pending += retired_in_slice;
-                }
-                self.yield_now(h);
-                return Slice::Ran;
-            }
-        }
-
-        // ---- terminator ------------------------------------------------------
-        let term = unsafe { &*block_ptr }.term;
-        let pc = block_start + term.pc_off as u64;
-        let npc = pc + term.len as u64;
-
-        if term.sync && !self.conts[h].resumed {
-            if self.nominal[h] {
-                self.harts[h].pending += retired_in_slice;
-                retired_in_slice = 0;
-            }
-            self.yield_now(h);
-            let c = self.harts[h].cycle;
-            if c > bound || (c == bound && bound_id < h) {
-                self.conts[h].resumed = true;
-                return Slice::Ran;
-            }
-        }
-        self.conts[h].resumed = false;
-
-        let prv_before_term = self.harts[h].prv;
-        match exec_op(&mut self.harts[h], &mut self.sys, &term.op, pc, npc) {
-            Ok(flow) => {
-                let (next_pc, taken) = match flow {
-                    Flow::Next => (npc, false),
-                    Flow::Taken => (unsafe { &*block_ptr }.taken_target(), true),
-                    Flow::Jump(t) => (t, !matches!(term.kind, TermKind::Fallthrough)),
-                    Flow::Wfi => {
-                        self.harts[h].wfi = true;
-                        (npc, false)
-                    }
-                };
-                if term.kind == TermKind::Branch {
-                    if let Some(t) = self.sys.trace.as_mut() {
-                        t.record_branch(pc, taken, h as u8);
-                    }
-                }
-                let hart = &mut self.harts[h];
-                hart.instret += 1;
-                hart.pending += if taken { term.cycles_taken } else { term.cycles_nt } as u64;
-                retired_in_slice += 1;
-                hart.pc = next_pc;
-                let prv_changed = self.harts[h].prv != prv_before_term;
-                if prv_changed {
-                    self.sys.l0[h].clear();
-                }
-                if self.nominal[h] {
-                    self.harts[h].pending += retired_in_slice;
-                }
-                let invalidated =
-                    if self.harts[h].effects.any() { self.process_effects(h) } else { false };
-
-                // Block chaining (§3.1): record the exit edge. If this
-                // block already carries a generation-valid link for the
-                // edge, the next entry follows it directly (no PC re-hash,
-                // and for static targets no re-validation either);
-                // otherwise the entry's lookup installs the link eagerly.
-                // Privilege-changing exits never chain — translations are
-                // keyed by (pc, privilege) and a chained entry skips that
-                // key check. WFI exits never chain — the wake-up redirects
-                // into the trap vector.
-                self.conts[h].clear_chain();
-                if self.chaining
-                    && !invalidated
-                    && !prv_changed
-                    && !matches!(flow, Flow::Wfi)
-                {
-                    // Which link slot this exit uses, and whether its
-                    // target is static for the whole generation (trusted
-                    // on entry) or dynamic (validated by PC on entry).
-                    let (slot_taken, direct) = match term.kind {
-                        TermKind::Branch => (taken, true),
-                        TermKind::Jump { .. } => (true, true),
-                        // jalr: cache the last target in the taken slot
-                        // (§3.4.2's indirect-target trick).
-                        TermKind::IndirectJump => (true, false),
-                        // Sequential fall-through is static; mret/sret
-                        // leave a Fallthrough terminator via Flow::Jump
-                        // toward a dynamic mepc/sepc target.
-                        TermKind::Fallthrough => (false, !matches!(flow, Flow::Jump(_))),
-                    };
-                    let gen = self.caches[h].generation;
-                    match self.caches[h].follow_chain(id, slot_taken) {
-                        Some(t) => {
-                            self.conts[h].next = t;
-                            self.conts[h].next_gen = gen;
-                            self.conts[h].next_direct = direct;
-                            if !direct {
-                                // Keep the source edge too: if the entry's
-                                // PC validation rejects the cached target
-                                // (the indirect retargeted), the fallback
-                                // lookup refreshes the link instead of
-                                // missing for the rest of the generation.
-                                self.conts[h].prev = id;
-                                self.conts[h].prev_taken = slot_taken;
-                                self.conts[h].prev_gen = gen;
-                            }
-                        }
-                        None => {
-                            self.conts[h].prev = id;
-                            self.conts[h].prev_taken = slot_taken;
-                            self.conts[h].prev_gen = gen;
-                        }
-                    }
-                }
-                self.conts[h].clear();
-                self.yield_now(h);
-            }
-            Err(trap) => {
-                if self.nominal[h] {
-                    self.harts[h].pending += retired_in_slice;
-                }
-                self.deliver_trap(h, trap, pc, npc);
-                self.yield_now(h);
-            }
-        }
-        Slice::Ran
+        self.core.apply_simctrl(&mut self.sys, h, value)
     }
 
     /// Run only hart `h` (functional-parallel mode, §3.5: one engine per
@@ -759,7 +98,7 @@ impl FiberEngine {
             if let Some(value) = self.sys.switch_request {
                 return ExitReason::SwitchRequest(value);
             }
-            if self.harts[h].instret >= instret_limit {
+            if self.core.harts[h].instret >= instret_limit {
                 return ExitReason::StepLimit;
             }
             if let Some(code) = exit_code(&self.sys) {
@@ -786,9 +125,9 @@ impl FiberEngine {
                     }
                 }
             }
-            match self.run_slice(h, u64::MAX, usize::MAX) {
-                Slice::Ran => {}
-                Slice::Waiting => {
+            match self.core.run_slice(&mut self.sys, h, u64::MAX, usize::MAX) {
+                shard::Slice::Ran => {}
+                shard::Slice::Waiting => {
                     // Functional mode: WFI spins on the interrupt poll. A
                     // sleeping hart in this mode can only be woken by its
                     // own CLINT timer (cross-hart device state is merged
@@ -798,35 +137,14 @@ impl FiberEngine {
                     // passed without waking the hart (interrupt masked).
                     let cmp = self.sys.bus.clint.mtimecmp[h];
                     if cmp == u64::MAX
-                        || self.sys.bus.clint.mtime(self.harts[h].cycle) >= cmp
+                        || self.sys.bus.clint.mtime(self.core.harts[h].cycle) >= cmp
                     {
                         return ExitReason::Deadlock;
                     }
-                    let hart = &mut self.harts[h];
+                    let hart = &mut self.core.harts[h];
                     hart.cycle += 16;
                 }
             }
-        }
-    }
-
-    /// Write back a consistent architectural PC for every hart paused
-    /// mid-block (`hart.pc` is only committed at block boundaries), fold
-    /// pending cycles, and drop the continuations. After this the hart
-    /// vector is a faithful architectural snapshot — the basis of
-    /// [`ExecutionEngine::suspend`].
-    fn sync_arch_state(&mut self) {
-        for h in 0..self.harts.len() {
-            if self.conts[h].block != NO_CHAIN {
-                let block = self.caches[h].block(self.conts[h].block);
-                let si = self.conts[h].step as usize;
-                let pc_off =
-                    if si < block.steps.len() { block.steps[si].pc_off } else { block.term.pc_off };
-                self.harts[h].pc = block.start + pc_off as u64;
-                self.conts[h].clear();
-            }
-            self.conts[h].clear_chain();
-            let hart = &mut self.harts[h];
-            hart.cycle += std::mem::take(&mut hart.pending);
         }
     }
 
@@ -836,77 +154,22 @@ impl FiberEngine {
     /// Run until exit, deadlock, engine-switch request, or until
     /// `max_insts` *more* instructions retire (block-granular).
     pub fn run(&mut self, max_insts: u64) -> ExitReason {
-        let limit = self.total_retired.saturating_add(max_insts);
+        let mut budget = max_insts;
         loop {
-            if let Some(code) = exit_code(&self.sys) {
-                return ExitReason::Exited(code);
-            }
-            if let Some(value) = self.sys.switch_request {
-                return ExitReason::SwitchRequest(value);
-            }
-            if self.total_retired >= limit {
-                return ExitReason::StepLimit;
-            }
-
-            // Pick the runnable hart with minimum (cycle, id), and the
-            // runner-up position: the chosen hart may keep executing
-            // through its sync points until its clock passes the runner-up
-            // (same memory-operation order as yielding every time, far
-            // fewer scheduler round trips).
-            let mut best: Option<usize> = None;
-            let mut bound = u64::MAX;
-            let mut bound_id = usize::MAX;
-            let mut all_waiting = true;
-            for (i, hart) in self.harts.iter().enumerate() {
-                if hart.halted {
-                    continue;
-                }
-                if !hart.wfi {
-                    all_waiting = false;
-                    match best {
-                        Some(b) if hart.cycle >= self.harts[b].cycle => {
-                            if hart.cycle < bound {
-                                bound = hart.cycle;
-                                bound_id = i;
-                            }
-                        }
-                        Some(b) => {
-                            bound = self.harts[b].cycle;
-                            bound_id = b;
-                            best = Some(i);
-                        }
-                        None => best = Some(i),
+            match self.core.run_window(&mut self.sys, u64::MAX, &mut budget) {
+                WindowOutcome::Stopped(reason) => return reason,
+                WindowOutcome::Budget => return ExitReason::StepLimit,
+                WindowOutcome::Idle => {
+                    // Event-loop fiber: advance time to the next CLINT
+                    // deadline (shared with the interpreter via
+                    // crate::engine).
+                    if !wake_at_next_deadline(&mut self.core.harts, &mut self.sys) {
+                        return ExitReason::Deadlock;
                     }
                 }
-            }
-
-            if all_waiting {
-                // Event-loop fiber: advance time to the next CLINT deadline
-                // (shared with the interpreter via crate::engine).
-                if !wake_at_next_deadline(&mut self.harts, &mut self.sys) {
-                    return ExitReason::Deadlock;
-                }
-                continue;
-            }
-
-            let h = match best {
-                Some(h) => h,
-                // Runnable set empty but some hart is in WFI: handled above.
-                None => continue,
-            };
-            let before = self.harts[h].instret;
-            match self.run_slice(h, bound, bound_id) {
-                Slice::Ran => {
-                    self.total_retired += self.harts[h].instret - before;
-                }
-                Slice::Waiting => {
-                    // WFI with interrupts possible later: nudge this hart's
-                    // clock past others so the scheduler doesn't spin on it.
-                    let max_cycle =
-                        self.harts.iter().filter(|x| !x.halted).map(|x| x.cycle).max().unwrap_or(0);
-                    let hart = &mut self.harts[h];
-                    hart.cycle = hart.cycle.max(max_cycle).max(hart.cycle + 16);
-                }
+                // No window end was given, so the window can never be
+                // "reached".
+                WindowOutcome::Reached => unreachable!("unbounded window"),
             }
         }
     }
@@ -926,19 +189,19 @@ impl ExecutionEngine for FiberEngine {
     }
 
     fn suspend(&mut self) -> SystemSnapshot {
-        self.sync_arch_state();
-        for cache in &mut self.caches {
+        self.core.sync_arch_state();
+        for cache in &mut self.core.caches {
             cache.flush();
         }
-        SystemSnapshot::capture(std::mem::take(&mut self.harts), &mut self.sys)
+        SystemSnapshot::capture(std::mem::take(&mut self.core.harts), &mut self.sys)
     }
 
     fn resume(&mut self, snapshot: SystemSnapshot) {
-        self.harts = snapshot.install(&mut self.sys);
+        self.core.harts = snapshot.install(&mut self.sys);
     }
 
     fn stats(&self) -> EngineStats {
-        self.stats
+        self.core.stats
     }
 
     fn total_instret(&self) -> u64 {
@@ -946,7 +209,7 @@ impl ExecutionEngine for FiberEngine {
     }
 
     fn per_hart(&self) -> Vec<(u64, u64)> {
-        self.harts.iter().map(|h| (h.cycle, h.instret)).collect()
+        self.core.harts.iter().map(|h| (h.cycle, h.instret)).collect()
     }
 
     fn console(&self) -> String {

@@ -1,0 +1,961 @@
+//! The per-shard fiber scheduler — the heart of the lockstep DBT engine,
+//! extracted from the monolithic `FiberEngine` loop so it can drive either
+//! *all* harts of a system (the classic single-threaded engine, paper
+//! §3.3) or one shard's contiguous subset of them (the sharded cycle-level
+//! engine, DESIGN.md §10).
+//!
+//! A [`ShardCore`] owns the engine-private, per-hart acceleration state of
+//! its hart range — fiber continuations, DBT code caches, pipeline
+//! models — but *not* the [`System`]: every run method borrows the system
+//! so the same core type works over a globally shared system (the
+//! single-threaded and quantum=1 serialized configurations) or a
+//! shard-private system over shared guest DRAM (the multi-threaded
+//! quantum>1 configuration).
+//!
+//! Scheduling invariant (unchanged from the monolithic loop): a memory
+//! operation executes only while its hart is the minimum of the core's
+//! `(cycle, global hart id)` order, and [`ShardCore::run_window`] bounds
+//! that order by a window-end cycle so a barrier can align multiple cores
+//! on global time.
+
+use crate::dbt::block::{TermKind, NO_CHAIN};
+use crate::dbt::{translate, BlockId, CodeCache};
+use crate::engine::mailbox::{Msg, MsgKind};
+use crate::engine::{
+    exit_code, line_shift_by_code, memory_model_by_code, merge_simctrl, pipeline_name_by_code,
+    poll_interrupt, EngineStats, ExitReason,
+};
+use crate::isa::csr::{EXC_ECALL_M, EXC_ECALL_S, EXC_ECALL_U, SIMCTRL_ENGINE_SHIFT};
+use crate::mem::mmu::{translate as mmu_translate, AccessKind};
+use crate::pipeline::PipelineModel;
+use crate::sys::exec::{cold_fetch, exec_op, Flow};
+use crate::sys::hart::{Hart, Trap};
+use crate::sys::{handle_ecall, System};
+
+/// Per-hart continuation — the fiber state.
+struct Cont {
+    /// Current block (NO_CHAIN = at a block boundary).
+    block: BlockId,
+    /// Next step index to execute within the block.
+    step: u32,
+    /// `true` when resuming *at* a sync point whose yield already happened.
+    resumed: bool,
+    /// Chain-followed successor to enter at the next block boundary
+    /// (NO_CHAIN = none), read from the finished block's chain link.
+    next: BlockId,
+    /// Code-cache generation `next` was read under; a flush in between
+    /// (mid-boundary SIMCTRL from another hart, etc.) kills the hop.
+    next_gen: u64,
+    /// Whether `next` came from a direct terminator (static target —
+    /// entered without re-validating the start PC) or a dynamic one
+    /// (cached last target — must match the live PC at entry).
+    next_direct: bool,
+    /// Pending eager link install (NO_CHAIN = none): the block whose exit
+    /// edge gets linked to whatever block the next entry resolves, so
+    /// every edge pays at most one hash lookup per generation.
+    prev: BlockId,
+    prev_taken: bool,
+    prev_gen: u64,
+}
+
+impl Cont {
+    fn new() -> Cont {
+        Cont {
+            block: NO_CHAIN,
+            step: 0,
+            resumed: false,
+            next: NO_CHAIN,
+            next_gen: 0,
+            next_direct: false,
+            prev: NO_CHAIN,
+            prev_taken: false,
+            prev_gen: 0,
+        }
+    }
+
+    fn clear(&mut self) {
+        self.block = NO_CHAIN;
+        self.step = 0;
+        self.resumed = false;
+    }
+
+    /// Drop the recorded exit edge (redirects, traps, flushes): neither
+    /// following a chained successor nor installing a link is valid once
+    /// control flow left the recorded edge.
+    fn clear_chain(&mut self) {
+        self.next = NO_CHAIN;
+        self.prev = NO_CHAIN;
+    }
+}
+
+/// What a slice did (scheduler feedback).
+pub(crate) enum Slice {
+    Ran,
+    Waiting,
+}
+
+/// Why [`ShardCore::run_window`] returned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WindowOutcome {
+    /// Every runnable hart reached the window-end cycle at a yield point.
+    Reached,
+    /// No hart can run: all members are halted or waiting in WFI.
+    Idle,
+    /// The system stopped the run (guest exit or engine-switch request).
+    Stopped(ExitReason),
+    /// The instruction budget for this window call was exhausted.
+    Budget,
+}
+
+/// The per-shard fiber scheduler: fiber continuations, code caches and
+/// pipeline models for a contiguous range of harts starting at global
+/// hart id `base`.
+pub struct ShardCore {
+    /// This core's harts — `harts[l]` is global hart `base + l`.
+    pub harts: Vec<Hart>,
+    pub caches: Vec<CodeCache>,
+    pub pipelines: Vec<Box<dyn PipelineModel>>,
+    conts: Vec<Cont>,
+    /// Nominal clock (1 cycle/instruction) for harts whose pipeline model
+    /// does not track cycles (atomic).
+    nominal: Vec<bool>,
+    /// Global hart id of `harts[0]`.
+    pub base: usize,
+    /// A1 ablation: yield after every instruction instead of batching to
+    /// synchronisation points.
+    pub yield_per_instruction: bool,
+    /// A3 ablation: disable block chaining.
+    pub chaining: bool,
+    pub stats: EngineStats,
+    /// Record cross-shard coherence traffic into `outbox` (set only by the
+    /// multi-threaded sharded driver; the single-threaded engine never
+    /// pays for the drain).
+    pub record_msgs: bool,
+    /// Outgoing quantum-boundary messages (drained by the sharded driver).
+    pub outbox: Vec<Msg>,
+    msg_seq: u64,
+}
+
+impl ShardCore {
+    /// A core over `count` harts with global ids `base..base + count`.
+    pub fn new(base: usize, count: usize, pipeline: &str) -> ShardCore {
+        let pipelines: Vec<Box<dyn PipelineModel>> = (0..count)
+            .map(|_| crate::pipeline::by_name(pipeline).expect("unknown pipeline model"))
+            .collect();
+        let nominal = pipelines.iter().map(|p| !p.tracks_cycles()).collect();
+        ShardCore {
+            harts: (0..count).map(|l| Hart::new(base + l)).collect(),
+            caches: (0..count).map(|_| CodeCache::new()).collect(),
+            pipelines,
+            conts: (0..count).map(|_| Cont::new()).collect(),
+            nominal,
+            base,
+            yield_per_instruction: false,
+            chaining: true,
+            stats: EngineStats::default(),
+            record_msgs: false,
+            outbox: Vec::new(),
+            msg_seq: 0,
+        }
+    }
+
+    /// Instructions retired by this core's harts.
+    pub fn total_instret(&self) -> u64 {
+        self.harts.iter().map(|h| h.instret).sum()
+    }
+
+    // -----------------------------------------------------------------------
+    // Translation-time fetch probe: functional-only walk + read, no timing.
+    // -----------------------------------------------------------------------
+    fn probe_fetch(hart: &Hart, sys: &System, vaddr: u64) -> Result<u16, Trap> {
+        let ctx = hart.mmu_fetch_ctx();
+        let tr = mmu_translate(&sys.phys, &ctx, vaddr, AccessKind::Execute)
+            .map_err(|_| Trap::new(crate::isa::csr::EXC_INSN_PAGE_FAULT, vaddr))?;
+        if !sys.phys.contains(tr.paddr, 2) {
+            return Err(Trap::new(crate::isa::csr::EXC_INSN_ACCESS, vaddr));
+        }
+        Ok(sys.phys.read_u16(tr.paddr))
+    }
+
+    /// Translate the block at `pc` for local hart `l`.
+    fn translate_block(
+        &mut self,
+        sys: &System,
+        l: usize,
+        pc: u64,
+    ) -> Result<crate::dbt::Block, Trap> {
+        self.stats.blocks_translated += 1;
+        let line_shift = sys.l0[self.base + l].i.line_shift();
+        let hart = &self.harts[l];
+        let mut probe = |vaddr: u64| Self::probe_fetch(hart, sys, vaddr);
+        translate(&mut probe, self.pipelines[l].as_mut(), pc, line_shift)
+    }
+
+    /// Enter the block at the hart's current PC: chain-follow (the primary
+    /// path — no PC re-hash), else look up or translate and eagerly
+    /// install the chain link on the edge that brought us here; validate
+    /// cross-page stubs; perform the runtime L0 I-cache checks (§3.4.2).
+    fn enter_block(&mut self, sys: &mut System, l: usize) -> Result<BlockId, Trap> {
+        self.stats.block_entries += 1;
+        let g = self.base + l;
+        let pc = self.harts[l].pc;
+        let prv = self.harts[l].prv as u8;
+        let gen = self.caches[l].generation;
+
+        // Chain-following primary path (§3.1 + §3.4.2): the finished
+        // block's exit recorded its generation-validated successor link.
+        // Direct terminators (branch / jal / sequential) are entered
+        // without re-hashing or re-validating the PC — the target is
+        // static for the life of the generation, and exits that leave the
+        // recorded edge (traps, interrupts, privilege changes) clear the
+        // chain state. Dynamic targets (jalr, mret/sret) cached the last
+        // successor and re-validate it against the live PC.
+        let mut id = NO_CHAIN;
+        let next = self.conts[l].next;
+        if next != NO_CHAIN && self.conts[l].next_gen == gen {
+            if self.conts[l].next_direct {
+                debug_assert_eq!(self.caches[l].block(next).start, pc);
+                id = next;
+            } else if self.caches[l].block(next).start == pc {
+                id = next;
+            }
+        }
+        if id != NO_CHAIN {
+            self.stats.chain_hits += 1;
+        } else {
+            self.stats.chain_misses += 1;
+            id = match self.caches[l].get(pc, prv) {
+                Some(i) => i,
+                None => {
+                    let block = self.translate_block(sys, l, pc)?;
+                    self.caches[l].insert(pc, prv, block)
+                }
+            };
+            // Eager link installation: the edge we just resolved becomes
+            // chain-followable from its source block's next exit, whether
+            // the target was already translated or not — each edge pays
+            // at most one hash lookup per generation.
+            let prev = self.conts[l].prev;
+            if prev != NO_CHAIN && self.conts[l].prev_gen == self.caches[l].generation {
+                self.caches[l].install_link(prev, self.conts[l].prev_taken, id);
+            }
+        }
+        self.conts[l].clear_chain();
+
+        // Cross-page fallback (§3.1): re-read the second-page halfword and
+        // retranslate if the mapping changed (applies to chained entries
+        // too — the link survives, the content check does not).
+        if let Some(stub) = self.caches[l].block(id).cross_page {
+            let seen = Self::probe_fetch(&self.harts[l], sys, stub.vaddr)?;
+            if seen != stub.expected {
+                self.stats.retranslations += 1;
+                let block = self.translate_block(sys, l, pc)?;
+                self.caches[l].replace(id, block);
+            }
+        }
+
+        // Runtime L0 I-cache checks: block entry + each crossed line.
+        let force_cold = sys.force_cold;
+        let n_checks = self.caches[l].block(id).icache_checks.len();
+        for k in 0..n_checks {
+            let vaddr = self.caches[l].block(id).icache_checks[k];
+            let hart = &mut self.harts[l];
+            if force_cold || sys.l0[g].i.lookup(vaddr).is_none() {
+                cold_fetch(hart, sys, vaddr)?;
+            }
+        }
+        Ok(id)
+    }
+
+    /// Commit pending cycles — the (multi-cycle) yield of Listing 3.
+    #[inline]
+    fn yield_now(&mut self, l: usize) {
+        self.stats.yields += 1;
+        let hart = &mut self.harts[l];
+        hart.cycle += std::mem::take(&mut hart.pending);
+    }
+
+    /// Handle a trap raised during execution, including environment-call
+    /// emulation. `npc` = address after the trapping instruction.
+    fn deliver_trap(&mut self, sys: &mut System, l: usize, trap: Trap, pc: u64, npc: u64) {
+        let g = self.base + l;
+        let prv_before = self.harts[l].prv;
+        let hart = &mut self.harts[l];
+        let is_ecall = matches!(trap.cause, EXC_ECALL_U | EXC_ECALL_S | EXC_ECALL_M);
+        if is_ecall && handle_ecall(hart, sys) {
+            let hart = &mut self.harts[l];
+            hart.instret += 1;
+            hart.pending += 1;
+            hart.pc = npc;
+        } else {
+            let hart = &mut self.harts[l];
+            hart.pc = hart.take_trap(trap, pc);
+        }
+        if self.harts[l].prv != prv_before {
+            sys.l0[g].clear();
+        }
+        self.conts[l].clear();
+        self.conts[l].clear_chain();
+    }
+
+    /// Apply pending side effects after a system instruction. Returns
+    /// `true` if the current translation was invalidated.
+    fn process_effects(&mut self, sys: &mut System, l: usize) -> bool {
+        let g = self.base + l;
+        let fx = self.harts[l].effects;
+        self.harts[l].effects.clear();
+        let mut invalidated = false;
+        if fx.fence_i {
+            self.caches[l].flush();
+            sys.l0[g].i.clear();
+            invalidated = true;
+        }
+        if fx.sfence {
+            self.caches[l].flush();
+            sys.model.flush_hart(&mut sys.l0, g);
+            sys.l0[g].clear();
+            invalidated = true;
+        }
+        if fx.flush_l0 {
+            // Translation context changed (SUM/MXR/MPRV/MPP): L0 entries
+            // are virtually tagged without a mode tag, so drop them. The
+            // code cache is keyed by (pc, privilege) and survives.
+            sys.l0[g].clear();
+        }
+        if let Some(v) = fx.simctrl {
+            invalidated |= self.apply_simctrl(sys, l, v);
+        }
+        if fx.mark.is_some() {
+            // Region-of-interest marker: reset per-hart counters so the
+            // bracketed region can be measured in isolation.
+            // (Recorded value currently unused beyond the reset.)
+        }
+        invalidated
+    }
+
+    /// Runtime reconfiguration via the vendor SIMCTRL CSR (§3.5).
+    /// Encoding documented at `isa::csr::CSR_SIMCTRL`.
+    pub fn apply_simctrl(&mut self, sys: &mut System, l: usize, value: u64) -> bool {
+        // Resolve "keep" (zero) fields against the live configuration, so
+        // earlier in-place model changes survive this write and any
+        // hand-off it triggers.
+        let state = merge_simctrl(sys.simctrl_state, value);
+        // Engine-level hand-off (§3.5 extended): bits [22:20] request a
+        // different execution engine. This engine only records the request
+        // — the model fields of the same write are applied when the
+        // coordinator relaunches the guest under the target engine.
+        let engine = (value >> SIMCTRL_ENGINE_SHIFT) & 0b111;
+        let current = sys.engine_code;
+        if matches!(engine, 1..=4) && engine != current {
+            sys.simctrl_state = state;
+            sys.request_engine_switch(state);
+            self.conts[l].clear_chain();
+            return true;
+        }
+        let mut invalidated = false;
+        // Pipeline model: per-hart (§3.5), flushes that hart's code cache.
+        let pm = value & 0b111;
+        if pm != 0 {
+            let name = pipeline_name_by_code(pm).unwrap_or("simple");
+            if let Some(model) = crate::pipeline::by_name(name) {
+                self.nominal[l] = !model.tracks_cycles();
+                self.pipelines[l] = model;
+                self.caches[l].flush();
+                self.conts[l].clear_chain();
+                invalidated = true;
+            }
+        }
+        // Memory model: global, flushes L0s. Model state lives in the
+        // System, so under a shared system (single-threaded / quantum=1)
+        // this is immediately global; shard-private systems propagate it
+        // through the broadcast recorded below.
+        let mm = (value >> 4) & 0b111;
+        let mut broadcast = false;
+        if mm != 0 {
+            let n = sys.num_harts;
+            if let Some(model) = memory_model_by_code(mm, n, sys.timing) {
+                sys.set_model(model);
+                broadcast = true;
+            }
+        }
+        // Cache-line size (bytes): turning the L0 D-cache into an L0 TLB
+        // at 4096 (§3.5). This flushes *every* hart's code cache, so any
+        // sibling hart suspended mid-block (yielded at a sync point)
+        // would resume into a cleared arena: write back its architectural
+        // PC from its continuation first (as sync_arch_state does) so it
+        // re-enters through a fresh lookup instead. The writing hart
+        // itself is handled by the `invalidated` return — its run_slice
+        // caller drops the continuation without touching the arena.
+        // Sibling harts owned by *other* cores are fixed up by the driver
+        // through the broadcast (immediately under a shared system, at the
+        // next quantum boundary across shard-private systems).
+        if let Some(shift) = line_shift_by_code(value) {
+            // Skip the writing hart itself: its continuation no longer
+            // describes an unexecuted position (a terminator-time SIMCTRL
+            // write has already retired the terminator and redirected the
+            // PC), and the `invalidated` return drops it without touching
+            // the arena.
+            self.writeback_paused_pcs_except(Some(l));
+            sys.set_line_shift(shift);
+            for c in &mut self.caches {
+                c.flush(); // icache-check placement depends on line size
+            }
+            for cont in &mut self.conts {
+                // The flush's generation bump already kills these; clear
+                // anyway so the state never outlives its meaning.
+                cont.clear_chain();
+            }
+            invalidated = true;
+            broadcast = true;
+        }
+        if broadcast {
+            sys.pending_broadcast = Some(value);
+        }
+        sys.simctrl_state = state;
+        invalidated
+    }
+
+    /// Write back a consistent architectural PC for every hart paused
+    /// mid-block and drop its continuation (without touching clocks) —
+    /// required before any code-cache arena is cleared under it. Parked
+    /// harts always point at their next *unexecuted* step or terminator,
+    /// so the written-back PC re-enters exactly where execution stopped.
+    pub fn writeback_paused_pcs(&mut self) {
+        self.writeback_paused_pcs_except(None);
+    }
+
+    /// [`ShardCore::writeback_paused_pcs`] minus one hart — the hart that
+    /// is *currently executing* (its continuation may sit past an
+    /// already-retired terminator; its own run_slice return handles it).
+    fn writeback_paused_pcs_except(&mut self, skip: Option<usize>) {
+        for o in 0..self.harts.len() {
+            if skip == Some(o) || self.conts[o].block == NO_CHAIN {
+                continue;
+            }
+            let block = self.caches[o].block(self.conts[o].block);
+            let si = self.conts[o].step as usize;
+            let pc_off =
+                if si < block.steps.len() { block.steps[si].pc_off } else { block.term.pc_off };
+            self.harts[o].pc = block.start + pc_off as u64;
+            self.conts[o].clear();
+        }
+    }
+
+    /// Apply a SIMCTRL broadcast that originated on another core (sharded
+    /// execution): the global fields — memory model, line size — of the
+    /// original write, plus the code-cache flush that protects against
+    /// stale cross-shard chain state. Pipeline bits are per-hart and stay
+    /// with the writing core.
+    pub fn apply_remote_simctrl(&mut self, sys: &mut System, value: u64) {
+        let mm = (value >> 4) & 0b111;
+        if mm != 0 {
+            if let Some(model) = memory_model_by_code(mm, sys.num_harts, sys.timing) {
+                sys.set_model(model);
+            }
+        }
+        if let Some(shift) = line_shift_by_code(value) {
+            self.writeback_paused_pcs();
+            sys.set_line_shift(shift);
+            for c in &mut self.caches {
+                c.flush();
+            }
+        }
+        for cont in &mut self.conts {
+            cont.clear_chain();
+        }
+        // Merge only the global fields into this shard's recorded state
+        // (the pipeline field tracks the *local* harts' configuration).
+        sys.simctrl_state = merge_simctrl(sys.simctrl_state, value & !0b111);
+    }
+
+    /// Fix up this core after *another* core reconfigured the shared
+    /// system's line size in place (quantum=1 serialized sharding, where
+    /// `sys.set_line_shift` already ran): write back paused PCs and flush
+    /// the local code caches, exactly as the writing hart's own core did.
+    pub fn apply_shared_line_reconfig(&mut self) {
+        self.writeback_paused_pcs();
+        for c in &mut self.caches {
+            c.flush();
+        }
+        for cont in &mut self.conts {
+            cont.clear_chain();
+        }
+    }
+
+    /// Drain memory-model bus events generated by local hart `l`'s slice
+    /// into the outbox as timestamped messages.
+    fn drain_model_events(&mut self, sys: &mut System, l: usize) {
+        let events = sys.model.drain_bus_events();
+        if events.is_empty() {
+            return;
+        }
+        let cycle = self.harts[l].cycle + self.harts[l].pending;
+        let hart = self.base + l;
+        for (line, write) in events {
+            let kind =
+                if write { MsgKind::MesiInvalidate { line } } else { MsgKind::MesiShare { line } };
+            self.outbox.push(Msg { cycle, hart, seq: self.msg_seq, kind });
+            self.msg_seq += 1;
+        }
+    }
+
+    /// Enqueue a boundary message generated outside a slice (CLINT/IPI
+    /// forwarding, SIMCTRL broadcasts) stamped with `cycle`.
+    pub fn push_msg(&mut self, cycle: u64, hart: usize, kind: MsgKind) {
+        self.outbox.push(Msg { cycle, hart, seq: self.msg_seq, kind });
+        self.msg_seq += 1;
+    }
+
+    // -----------------------------------------------------------------------
+    // The fiber body: run local hart `l` until it yields.
+    // -----------------------------------------------------------------------
+    /// Run local hart `l` until it must hand control back: at a
+    /// synchronisation point once its clock reaches `bound` (the next
+    /// hart's position in the lockstep order, as a *global* `(cycle, id)`
+    /// pair), at a block end, or on a trap/WFI.
+    ///
+    /// Passing the bound in lets a hart that is still strictly the
+    /// scheduling minimum execute *through* its sync points without a
+    /// scheduler round trip — the multi-cycle-yield optimisation taken one
+    /// step further. The order of memory operations is identical to
+    /// yielding at every sync point: an operation executes only while its
+    /// hart is the global (cycle, id) minimum.
+    pub(crate) fn run_slice(
+        &mut self,
+        sys: &mut System,
+        l: usize,
+        bound: u64,
+        bound_id: usize,
+    ) -> Slice {
+        self.stats.slices += 1;
+        let g = self.base + l;
+
+        if self.harts[l].wfi {
+            poll_interrupt(&mut self.harts[l], sys);
+            if self.harts[l].wfi {
+                return Slice::Waiting;
+            }
+            // Waking redirects the PC into the trap vector; any recorded
+            // exit edge is dead (WFI exits never record one, but the
+            // wake-up path must not depend on that).
+            self.conts[l].clear();
+            self.conts[l].clear_chain();
+        }
+
+        // ---- block boundary ------------------------------------------------
+        if self.conts[l].block == NO_CHAIN {
+            // Interrupts are checked at block ends only (§3.3.2).
+            let pc_before = self.harts[l].pc;
+            let prv_before = self.harts[l].prv;
+            poll_interrupt(&mut self.harts[l], sys);
+            if self.harts[l].pc != pc_before || self.harts[l].prv != prv_before {
+                // Redirected to the trap vector: neither the chained
+                // successor nor the pending link install describes the
+                // edge actually taken. The privilege comparison matters
+                // even when the PC happens to be unchanged (trap vector ==
+                // interrupted PC): translations are privilege-keyed and a
+                // chained entry skips that check.
+                self.conts[l].clear_chain();
+            }
+            match self.enter_block(sys, l) {
+                Ok(id) => {
+                    self.conts[l].block = id;
+                    self.conts[l].step = 0;
+                    self.conts[l].resumed = false;
+                }
+                Err(trap) => {
+                    let pc = self.harts[l].pc;
+                    self.deliver_trap(sys, l, trap, pc, pc);
+                    self.yield_now(l);
+                    return Slice::Ran;
+                }
+            }
+        }
+
+        let id = self.conts[l].block;
+        // SAFETY: `block_ptr` points into this hart's code-cache arena. The
+        // arena is only mutated by process_effects / deliver_trap /
+        // apply_simctrl, and every such path returns from this function
+        // without dereferencing the pointer again. Between mutations the
+        // pointer is re-derefenced fresh each iteration.
+        let block_ptr: *const crate::dbt::Block = self.caches[l].block(id);
+        let block = unsafe { &*block_ptr };
+        let block_start = block.start;
+        let n_steps = block.steps.len();
+        let steps_ptr = block.steps.as_ptr();
+        let mut retired_in_slice = 0u64;
+
+        // ---- steps ----------------------------------------------------------
+        while (self.conts[l].step as usize) < n_steps {
+            let si = self.conts[l].step as usize;
+            // Steps are small Copy values; read by value, no borrow held.
+            debug_assert!(si < n_steps);
+            // SAFETY: si < n_steps; steps_ptr valid per block_ptr argument above.
+            let step = unsafe { *steps_ptr.add(si) };
+            let pc = block_start + step.pc_off as u64;
+            let npc = pc + step.len as u64;
+
+            // Synchronisation point (§3.3.2): yield pending cycles before
+            // executing. Hand control back only if another hart is now at
+            // or ahead of our position in the lockstep order.
+            if step.sync && !self.conts[l].resumed {
+                if self.nominal[l] {
+                    self.harts[l].pending += retired_in_slice;
+                    retired_in_slice = 0;
+                }
+                self.yield_now(l);
+                let c = self.harts[l].cycle;
+                if c > bound || (c == bound && bound_id < g) {
+                    self.conts[l].resumed = true;
+                    return Slice::Ran;
+                }
+            }
+            self.conts[l].resumed = false;
+
+            // Fast path for the dominant trap-free step classes: ALU ops
+            // skip the full exec_op dispatch (measured ~15% of lockstep
+            // time), and loads/stores inline the L0 hit path so a hit
+            // costs the paper's 3 host memory operations (§3.4.1) without
+            // crossing the sys::exec function boundary — misses continue
+            // in the shared #[cold] continuation, so L0/model counters
+            // stay bit-identical with the interpreter. (Disabled under
+            // the A1 naive-yield ablation, which must yield after every
+            // instruction.)
+            if !self.yield_per_instruction {
+                match step.op {
+                    crate::isa::Op::AluImm { op, word, rd, rs1, imm } => {
+                        let hart = &mut self.harts[l];
+                        let v =
+                            crate::sys::exec::alu_value(op, word, hart.reg(rs1), imm as i64 as u64);
+                        hart.set_reg(rd, v);
+                        hart.instret += 1;
+                        hart.pending += step.cycles as u64;
+                        retired_in_slice += 1;
+                        self.conts[l].step += 1;
+                        continue;
+                    }
+                    crate::isa::Op::Alu { op, word, rd, rs1, rs2 } => {
+                        let hart = &mut self.harts[l];
+                        let v =
+                            crate::sys::exec::alu_value(op, word, hart.reg(rs1), hart.reg(rs2));
+                        hart.set_reg(rd, v);
+                        hart.instret += 1;
+                        hart.pending += step.cycles as u64;
+                        retired_in_slice += 1;
+                        self.conts[l].step += 1;
+                        continue;
+                    }
+                    crate::isa::Op::Load { width, signed, rd, rs1, imm } => {
+                        // read_mem is #[inline(always)]: the L0 hit path (tag
+                        // compare, XOR, data read — no device check, hits
+                        // never cover MMIO) lands here inline, misses continue
+                        // in the #[cold] read_mem_miss continuation. What this
+                        // arm saves over the generic path is the exec_op
+                        // dispatch and the post-exec effects check (loads
+                        // never raise side effects).
+                        let vaddr = self.harts[l].reg(rs1).wrapping_add(imm as i64 as u64);
+                        match crate::sys::exec::read_mem(&mut self.harts[l], sys, vaddr, width) {
+                            Ok(raw) => {
+                                let hart = &mut self.harts[l];
+                                hart.set_reg(rd, crate::sys::exec::sext_load(raw, width, signed));
+                                hart.instret += 1;
+                                hart.pending += step.cycles as u64;
+                                retired_in_slice += 1;
+                                self.conts[l].step += 1;
+                                continue;
+                            }
+                            Err(trap) => {
+                                if self.nominal[l] {
+                                    self.harts[l].pending += retired_in_slice;
+                                }
+                                self.deliver_trap(sys, l, trap, pc, npc);
+                                self.yield_now(l);
+                                return Slice::Ran;
+                            }
+                        }
+                    }
+                    crate::isa::Op::Store { width, rs1, rs2, imm } => {
+                        let vaddr = self.harts[l].reg(rs1).wrapping_add(imm as i64 as u64);
+                        let value = self.harts[l].reg(rs2);
+                        match crate::sys::exec::write_mem(
+                            &mut self.harts[l],
+                            sys,
+                            vaddr,
+                            width,
+                            value,
+                        ) {
+                            Ok(()) => {
+                                let hart = &mut self.harts[l];
+                                hart.instret += 1;
+                                hart.pending += step.cycles as u64;
+                                retired_in_slice += 1;
+                                self.conts[l].step += 1;
+                                continue;
+                            }
+                            Err(trap) => {
+                                if self.nominal[l] {
+                                    self.harts[l].pending += retired_in_slice;
+                                }
+                                self.deliver_trap(sys, l, trap, pc, npc);
+                                self.yield_now(l);
+                                return Slice::Ran;
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+
+            match exec_op(&mut self.harts[l], sys, &step.op, pc, npc) {
+                Ok(_) => {
+                    let hart = &mut self.harts[l];
+                    hart.instret += 1;
+                    hart.pending += step.cycles as u64;
+                    retired_in_slice += 1;
+                    self.conts[l].step += 1;
+                    if step.sync && self.harts[l].effects.any() && self.process_effects(sys, l) {
+                        // Current translation flushed mid-block: resume at
+                        // the next instruction through a fresh lookup.
+                        self.harts[l].pc = npc;
+                        self.conts[l].clear();
+                        self.conts[l].clear_chain();
+                        if self.nominal[l] {
+                            self.harts[l].pending += retired_in_slice;
+                        }
+                        self.yield_now(l);
+                        return Slice::Ran;
+                    }
+                }
+                Err(trap) => {
+                    if self.nominal[l] {
+                        self.harts[l].pending += retired_in_slice;
+                    }
+                    self.deliver_trap(sys, l, trap, pc, npc);
+                    self.yield_now(l);
+                    return Slice::Ran;
+                }
+            }
+
+            // A1 ablation: naive per-instruction yielding (always a full
+            // scheduler round trip, as in pre-batching R2VM).
+            if self.yield_per_instruction {
+                if self.nominal[l] {
+                    self.harts[l].pending += retired_in_slice;
+                }
+                self.yield_now(l);
+                return Slice::Ran;
+            }
+        }
+
+        // ---- terminator ------------------------------------------------------
+        let term = unsafe { &*block_ptr }.term;
+        let pc = block_start + term.pc_off as u64;
+        let npc = pc + term.len as u64;
+
+        if term.sync && !self.conts[l].resumed {
+            if self.nominal[l] {
+                self.harts[l].pending += retired_in_slice;
+                retired_in_slice = 0;
+            }
+            self.yield_now(l);
+            let c = self.harts[l].cycle;
+            if c > bound || (c == bound && bound_id < g) {
+                self.conts[l].resumed = true;
+                return Slice::Ran;
+            }
+        }
+        self.conts[l].resumed = false;
+
+        let prv_before_term = self.harts[l].prv;
+        match exec_op(&mut self.harts[l], sys, &term.op, pc, npc) {
+            Ok(flow) => {
+                let (next_pc, taken) = match flow {
+                    Flow::Next => (npc, false),
+                    Flow::Taken => (unsafe { &*block_ptr }.taken_target(), true),
+                    Flow::Jump(t) => (t, !matches!(term.kind, TermKind::Fallthrough)),
+                    Flow::Wfi => {
+                        self.harts[l].wfi = true;
+                        (npc, false)
+                    }
+                };
+                if term.kind == TermKind::Branch {
+                    if let Some(t) = sys.trace.as_mut() {
+                        t.record_branch(pc, taken, g as u8);
+                    }
+                }
+                let hart = &mut self.harts[l];
+                hart.instret += 1;
+                hart.pending += if taken { term.cycles_taken } else { term.cycles_nt } as u64;
+                retired_in_slice += 1;
+                hart.pc = next_pc;
+                let prv_changed = self.harts[l].prv != prv_before_term;
+                if prv_changed {
+                    sys.l0[g].clear();
+                }
+                if self.nominal[l] {
+                    self.harts[l].pending += retired_in_slice;
+                }
+                let invalidated =
+                    if self.harts[l].effects.any() { self.process_effects(sys, l) } else { false };
+
+                // Block chaining (§3.1): record the exit edge. If this
+                // block already carries a generation-valid link for the
+                // edge, the next entry follows it directly (no PC re-hash,
+                // and for static targets no re-validation either);
+                // otherwise the entry's lookup installs the link eagerly.
+                // Privilege-changing exits never chain — translations are
+                // keyed by (pc, privilege) and a chained entry skips that
+                // key check. WFI exits never chain — the wake-up redirects
+                // into the trap vector.
+                self.conts[l].clear_chain();
+                if self.chaining && !invalidated && !prv_changed && !matches!(flow, Flow::Wfi) {
+                    // Which link slot this exit uses, and whether its
+                    // target is static for the whole generation (trusted
+                    // on entry) or dynamic (validated by PC on entry).
+                    let (slot_taken, direct) = match term.kind {
+                        TermKind::Branch => (taken, true),
+                        TermKind::Jump { .. } => (true, true),
+                        // jalr: cache the last target in the taken slot
+                        // (§3.4.2's indirect-target trick).
+                        TermKind::IndirectJump => (true, false),
+                        // Sequential fall-through is static; mret/sret
+                        // leave a Fallthrough terminator via Flow::Jump
+                        // toward a dynamic mepc/sepc target.
+                        TermKind::Fallthrough => (false, !matches!(flow, Flow::Jump(_))),
+                    };
+                    let gen = self.caches[l].generation;
+                    match self.caches[l].follow_chain(id, slot_taken) {
+                        Some(t) => {
+                            self.conts[l].next = t;
+                            self.conts[l].next_gen = gen;
+                            self.conts[l].next_direct = direct;
+                            if !direct {
+                                // Keep the source edge too: if the entry's
+                                // PC validation rejects the cached target
+                                // (the indirect retargeted), the fallback
+                                // lookup refreshes the link instead of
+                                // missing for the rest of the generation.
+                                self.conts[l].prev = id;
+                                self.conts[l].prev_taken = slot_taken;
+                                self.conts[l].prev_gen = gen;
+                            }
+                        }
+                        None => {
+                            self.conts[l].prev = id;
+                            self.conts[l].prev_taken = slot_taken;
+                            self.conts[l].prev_gen = gen;
+                        }
+                    }
+                }
+                self.conts[l].clear();
+                self.yield_now(l);
+            }
+            Err(trap) => {
+                if self.nominal[l] {
+                    self.harts[l].pending += retired_in_slice;
+                }
+                self.deliver_trap(sys, l, trap, pc, npc);
+                self.yield_now(l);
+            }
+        }
+        Slice::Ran
+    }
+
+    // -----------------------------------------------------------------------
+    // Scheduler: deterministic local lockstep by minimum (cycle, global id),
+    // bounded by a window-end cycle.
+    // -----------------------------------------------------------------------
+    /// Run this core's harts in lockstep until every runnable hart has
+    /// reached `end` at a yield point (`end == u64::MAX` never ends the
+    /// window — the single-threaded engine's configuration), the run
+    /// stops, every hart idles, or `*budget` more instructions retire
+    /// (decremented in place, block-granular).
+    pub fn run_window(&mut self, sys: &mut System, end: u64, budget: &mut u64) -> WindowOutcome {
+        loop {
+            if let Some(code) = exit_code(sys) {
+                return WindowOutcome::Stopped(ExitReason::Exited(code));
+            }
+            if let Some(value) = sys.switch_request {
+                return WindowOutcome::Stopped(ExitReason::SwitchRequest(value));
+            }
+            if *budget == 0 {
+                return WindowOutcome::Budget;
+            }
+
+            // Pick the runnable hart with minimum (cycle, id), and the
+            // runner-up position: the chosen hart may keep executing
+            // through its sync points until its clock passes the runner-up
+            // (same memory-operation order as yielding every time, far
+            // fewer scheduler round trips). Harts already at or past the
+            // window end wait for the barrier.
+            let mut best: Option<usize> = None;
+            let mut bound = u64::MAX;
+            let mut bound_id = usize::MAX;
+            let mut reached = false;
+            for (i, hart) in self.harts.iter().enumerate() {
+                if hart.halted || hart.wfi {
+                    continue;
+                }
+                if hart.cycle >= end {
+                    reached = true;
+                    continue;
+                }
+                match best {
+                    Some(b) if hart.cycle >= self.harts[b].cycle => {
+                        if hart.cycle < bound {
+                            bound = hart.cycle;
+                            bound_id = self.base + i;
+                        }
+                    }
+                    Some(b) => {
+                        bound = self.harts[b].cycle;
+                        bound_id = self.base + b;
+                        best = Some(i);
+                    }
+                    None => best = Some(i),
+                }
+            }
+
+            let Some(l) = best else {
+                return if reached { WindowOutcome::Reached } else { WindowOutcome::Idle };
+            };
+            // Cap the bound at the window end: the hart may execute
+            // operations *up to* cycle `end - 1` freely (no runner-up
+            // inside the window outranks it), and must pause at its next
+            // sync point once its clock reaches `end`.
+            if end != u64::MAX && bound >= end {
+                bound = end - 1;
+                bound_id = usize::MAX;
+            }
+            let before = self.harts[l].instret;
+            match self.run_slice(sys, l, bound, bound_id) {
+                Slice::Ran => {
+                    let retired = self.harts[l].instret - before;
+                    *budget = budget.saturating_sub(retired);
+                    if self.record_msgs {
+                        self.drain_model_events(sys, l);
+                    }
+                }
+                Slice::Waiting => {
+                    // The picked hart entered WFI since the scan (only
+                    // possible through an interposed wake/poll path);
+                    // rescan — the WFI filter above will skip it.
+                }
+            }
+        }
+    }
+
+    /// Write back a consistent architectural PC for every hart paused
+    /// mid-block (`hart.pc` is only committed at block boundaries), fold
+    /// pending cycles, and drop the continuations. After this the hart
+    /// vector is a faithful architectural snapshot — the basis of
+    /// [`crate::engine::ExecutionEngine::suspend`].
+    pub fn sync_arch_state(&mut self) {
+        self.writeback_paused_pcs();
+        for l in 0..self.harts.len() {
+            self.conts[l].clear_chain();
+            let hart = &mut self.harts[l];
+            hart.cycle += std::mem::take(&mut hart.pending);
+        }
+    }
+}

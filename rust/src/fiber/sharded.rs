@@ -1,0 +1,989 @@
+//! The sharded cycle-level engine (DESIGN.md §10): harts are partitioned
+//! into contiguous shards, each driven by its own [`ShardCore`] fiber
+//! scheduler, synchronised by a deterministic barrier every `quantum`
+//! cycles of simulated time.
+//!
+//! Two drivers share all of the per-shard machinery:
+//!
+//!  * **quantum == 1 — serialized sharding.** One host thread walks the
+//!    global minimum-`(cycle, hart id)` order across every core over one
+//!    shared [`System`] — the *same* schedule, memory-model state and
+//!    device state as the single-threaded [`crate::fiber::FiberEngine`],
+//!    so results are bit-identical to it for every shard count. This is
+//!    the verification configuration the equivalence suite pins.
+//!
+//!  * **quantum > 1 — threaded sharding.** One host thread per shard, each
+//!    owning a private `System` over the shared guest DRAM. Within a
+//!    quantum a shard only touches its own state (plus host-atomic guest
+//!    DRAM); every cross-shard interaction — MESI ownership traffic,
+//!    CLINT msip/mtimecmp writes aimed at a remote hart, SBI IPIs,
+//!    SIMCTRL broadcasts — travels as a timestamped message in the target
+//!    shard's [`Mailbox`], drained in canonical `(cycle, hart, seq)` order
+//!    at the next quantum barrier. For a fixed `(image, shards, quantum)`
+//!    the barrier schedule, message streams and delivery order are all
+//!    pure functions of guest state, so runs are reproducible bit-for-bit
+//!    as long as the guest's own cross-shard memory accesses are
+//!    data-race-free at quantum granularity (the mailboxed channels —
+//!    IPIs, AMO-built synchronisation — are always safe).
+
+use crate::engine::mailbox::{Mailbox, Msg, MsgKind};
+use crate::engine::{exit_code, poll_interrupt, EngineStats, ExecutionEngine, ExitReason};
+use crate::fiber::shard::{ShardCore, WindowOutcome};
+use crate::isa::csr::SIMCTRL_ENGINE_SHARDED;
+use crate::sys::{Hart, System, SystemSnapshot};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A reusable spinning barrier. Quantum windows are short (a few thousand
+/// simulated cycles), so two futex sleeps per window — what
+/// `std::sync::Barrier` costs — would eat a large slice of the shard
+/// speedup; spinning with a yield fallback keeps the boundary in the
+/// sub-microsecond range when every shard has a core.
+struct SpinBarrier {
+    n: usize,
+    count: AtomicUsize,
+    generation: AtomicUsize,
+    /// A participating thread panicked: every current and future wait
+    /// panics too, so a shard failure surfaces as a failed run instead of
+    /// the siblings spinning at the barrier forever.
+    poisoned: AtomicBool,
+}
+
+impl SpinBarrier {
+    fn new(n: usize) -> SpinBarrier {
+        SpinBarrier {
+            n,
+            count: AtomicUsize::new(0),
+            generation: AtomicUsize::new(0),
+            poisoned: AtomicBool::new(false),
+        }
+    }
+
+    fn poison(&self) {
+        self.poisoned.store(true, Ordering::Release);
+        // Release current waiters so they observe the poison.
+        self.generation.fetch_add(1, Ordering::AcqRel);
+    }
+
+    fn check_poison(&self) {
+        if self.poisoned.load(Ordering::Acquire) {
+            panic!("quantum barrier poisoned: a sibling shard panicked");
+        }
+    }
+
+    fn wait(&self) {
+        self.check_poison();
+        let generation = self.generation.load(Ordering::Acquire);
+        // The last arriver resets the count *before* releasing the
+        // generation, so early re-arrivals for the next round start from
+        // zero; waiters only watch the generation, never the count.
+        if self.count.fetch_add(1, Ordering::AcqRel) + 1 == self.n {
+            self.count.store(0, Ordering::Release);
+            self.generation.fetch_add(1, Ordering::AcqRel);
+        } else {
+            let mut spins = 0u32;
+            while self.generation.load(Ordering::Acquire) == generation {
+                spins += 1;
+                if spins < 10_000 {
+                    std::hint::spin_loop();
+                } else {
+                    // Oversubscribed host: stop burning the sibling
+                    // shard's core.
+                    std::thread::yield_now();
+                }
+            }
+            self.check_poison();
+        }
+    }
+}
+
+/// Poisons the barrier when dropped during a panic unwind.
+struct BarrierPoisonGuard<'a>(&'a SpinBarrier);
+
+impl Drop for BarrierPoisonGuard<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.poison();
+        }
+    }
+}
+
+/// Per-shard state published at each quantum boundary.
+#[derive(Default)]
+struct ShardReport {
+    /// Outcome of the window just run (`None` at the initial boundary).
+    outcome: Option<WindowOutcome>,
+    /// Minimum cycle among this shard's runnable (non-halted, non-WFI)
+    /// harts; `u64::MAX` if none.
+    min_runnable: u64,
+    /// Earliest CLINT timer deadline (in cycles) armed for a member hart;
+    /// `u64::MAX` if none.
+    deadline: u64,
+    /// Total instructions retired by this shard so far (absolute).
+    retired: u64,
+    /// Messages posted by this shard at this boundary.
+    msgs_sent: usize,
+    /// Console bytes produced during the window.
+    console: Vec<u8>,
+    /// Guest exit latched in this shard's system.
+    exit: Option<u64>,
+    /// Engine-switch request latched in this shard's system.
+    switch: Option<u64>,
+}
+
+/// The barrier leader's verdict for the next window.
+#[derive(Clone, Copy)]
+struct Decision {
+    /// Stop the run at this boundary.
+    stop: Option<ExitReason>,
+    /// Absolute cycle at which the next window ends.
+    end: u64,
+    /// All harts idle: coast WFI sleepers to this cycle before polling
+    /// (the global timer-deadline jump).
+    wake: Option<u64>,
+    /// Per-shard instruction allowance for the next window (the global
+    /// remaining budget; overshoot is bounded by one window per shard).
+    allowance: u64,
+}
+
+/// Leader-owned cross-boundary state.
+struct Control {
+    decision: Decision,
+    /// Console bytes merged in (boundary, shard) order.
+    console: Vec<u8>,
+    /// Total instructions retired across shards when this `run` started.
+    start_retired: u64,
+    /// Deadline the last all-idle wake jumped to (deadlock detection: a
+    /// second all-idle boundary at the same deadline means nobody can ever
+    /// wake).
+    last_idle_deadline: Option<u64>,
+}
+
+/// The sharded cycle-level execution engine.
+pub struct ShardedEngine {
+    cores: Vec<ShardCore>,
+    /// `quantum == 1`: exactly one globally shared system.
+    /// `quantum > 1`: one private system per shard over shared DRAM.
+    systems: Vec<System>,
+    pub quantum: u64,
+    num_harts: usize,
+    /// Merged console output (threaded mode; the serialized mode
+    /// accumulates in the shared system's UART).
+    console: Vec<u8>,
+    exit: Option<u64>,
+    switch_request: Option<u64>,
+    /// Trace capture handed off from an earlier stage, parked across
+    /// threaded legs (shard-private device state does not record).
+    trace: Option<crate::analytics::trace::TraceCapture>,
+}
+
+/// Contiguous hart ranges for `shards` shards over `n` harts (shard count
+/// is clamped to the hart count; earlier shards take the remainder).
+pub fn partition(n: usize, shards: usize) -> Vec<(usize, usize)> {
+    let s = shards.clamp(1, n);
+    let (div, rem) = (n / s, n % s);
+    let mut ranges = Vec::with_capacity(s);
+    let mut base = 0;
+    for i in 0..s {
+        let count = div + usize::from(i < rem);
+        ranges.push((base, count));
+        base += count;
+    }
+    ranges
+}
+
+impl ShardedEngine {
+    /// Build the engine. `make_sys` constructs one full-width `System`
+    /// over the same guest DRAM each call — once for the serialized
+    /// (quantum 1) layout, once per shard for the threaded layout.
+    pub fn new(
+        num_harts: usize,
+        shards: usize,
+        quantum: u64,
+        pipeline: &str,
+        mut make_sys: impl FnMut() -> System,
+    ) -> ShardedEngine {
+        let quantum = quantum.max(1);
+        let ranges = partition(num_harts, shards);
+        let threaded = quantum > 1;
+        let cores: Vec<ShardCore> = ranges
+            .iter()
+            .map(|&(base, count)| {
+                let mut core = ShardCore::new(base, count, pipeline);
+                core.record_msgs = threaded;
+                core
+            })
+            .collect();
+        let n_systems = if threaded { cores.len() } else { 1 };
+        let systems: Vec<System> = (0..n_systems)
+            .map(|_| {
+                let mut sys = make_sys();
+                sys.engine_code = SIMCTRL_ENGINE_SHARDED;
+                if threaded {
+                    // Cross-shard AMO/LR-SC must use host atomics (shards
+                    // share guest DRAM but run concurrently), and the
+                    // memory model records ownership traffic for the
+                    // quantum mailboxes (`record_bus_events` keeps that
+                    // true across runtime model switches too).
+                    sys.parallel = true;
+                    sys.record_bus_events = true;
+                    sys.model.set_bus_recording(true);
+                    // Shard-private device state does not trace.
+                    sys.trace = None;
+                }
+                sys
+            })
+            .collect();
+        assert!(
+            systems.iter().all(|s| Arc::ptr_eq(&s.phys, &systems[0].phys)),
+            "shard systems must share guest DRAM"
+        );
+        ShardedEngine {
+            cores,
+            systems,
+            quantum,
+            num_harts,
+            console: Vec::new(),
+            exit: None,
+            switch_request: None,
+            trace: None,
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// Set all hart PCs (after loading an image).
+    pub fn set_entry(&mut self, entry: u64) {
+        for core in &mut self.cores {
+            for hart in &mut core.harts {
+                hart.pc = entry;
+            }
+        }
+    }
+
+    fn owner_of(&self, hart: usize) -> usize {
+        self.cores
+            .iter()
+            .position(|c| hart >= c.base && hart < c.base + c.harts.len())
+            .expect("hart id out of range")
+    }
+
+    // -----------------------------------------------------------------------
+    // quantum == 1: serialized sharding over one shared system.
+    // -----------------------------------------------------------------------
+    /// Walk the global minimum-(cycle, hart id) order across every core —
+    /// the exact schedule of the single-threaded fiber engine, with each
+    /// slice dispatched to the core owning the hart.
+    fn run_serialized(&mut self, max_insts: u64) -> ExitReason {
+        let cores = &mut self.cores;
+        let sys = &mut self.systems[0];
+        let mut remaining = max_insts;
+        loop {
+            // Exit/switch latches persist in the shared system, so they do
+            // not need engine-level mirroring here.
+            if let Some(code) = exit_code(sys) {
+                return ExitReason::Exited(code);
+            }
+            if let Some(value) = sys.switch_request {
+                return ExitReason::SwitchRequest(value);
+            }
+            if remaining == 0 {
+                return ExitReason::StepLimit;
+            }
+
+            // Global scheduling pick, identical to the single-core loop:
+            // minimum (cycle, id) runs; the runner-up position bounds it.
+            let mut best: Option<(usize, usize)> = None;
+            let mut best_cycle = 0u64;
+            let mut best_gid = usize::MAX;
+            let mut bound = u64::MAX;
+            let mut bound_id = usize::MAX;
+            let mut all_waiting = true;
+            for (ci, core) in cores.iter().enumerate() {
+                for (l, hart) in core.harts.iter().enumerate() {
+                    if hart.halted || hart.wfi {
+                        continue;
+                    }
+                    all_waiting = false;
+                    match best {
+                        Some(_) if hart.cycle >= best_cycle => {
+                            if hart.cycle < bound {
+                                bound = hart.cycle;
+                                bound_id = core.base + l;
+                            }
+                        }
+                        Some(_) => {
+                            bound = best_cycle;
+                            bound_id = best_gid;
+                            best = Some((ci, l));
+                            best_cycle = hart.cycle;
+                            best_gid = core.base + l;
+                        }
+                        None => {
+                            best = Some((ci, l));
+                            best_cycle = hart.cycle;
+                            best_gid = core.base + l;
+                        }
+                    }
+                }
+            }
+
+            if all_waiting {
+                // Event-loop fiber across every shard: deliver pending
+                // IPIs, else advance to the next CLINT deadline (the same
+                // policy as engine::wake_at_next_deadline, spread over the
+                // core-partitioned hart vectors).
+                if !wake_all_cores(cores, sys) {
+                    return ExitReason::Deadlock;
+                }
+                continue;
+            }
+            let Some((ci, l)) = best else { continue };
+            let before = cores[ci].harts[l].instret;
+            cores[ci].run_slice(sys, l, bound, bound_id);
+            remaining = remaining.saturating_sub(cores[ci].harts[l].instret - before);
+            // A SIMCTRL write with global scope: the shared system already
+            // carries the new model/line size, but sibling *cores* hold
+            // paused continuations and code caches of their own — fix them
+            // up immediately, exactly as the single-core engine fixes its
+            // sibling harts (a stale chained hop must never survive the
+            // reconfiguration).
+            if let Some(v) = sys.pending_broadcast.take() {
+                if crate::engine::line_shift_by_code(v).is_some() {
+                    for (cj, core) in cores.iter_mut().enumerate() {
+                        if cj != ci {
+                            core.apply_shared_line_reconfig();
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // -----------------------------------------------------------------------
+    // quantum > 1: one host thread per shard + deterministic barriers.
+    // -----------------------------------------------------------------------
+    fn run_threaded(&mut self, max_insts: u64) -> ExitReason {
+        if let Some(code) = self.exit {
+            return ExitReason::Exited(code);
+        }
+        if let Some(value) = self.switch_request {
+            return ExitReason::SwitchRequest(value);
+        }
+        let shards = self.cores.len();
+        let quantum = self.quantum;
+        let owner: Vec<usize> = (0..self.num_harts).map(|h| self.owner_of(h)).collect();
+        let inboxes: Vec<Mailbox> = (0..shards).map(|_| Mailbox::new()).collect();
+        let barrier = SpinBarrier::new(shards);
+        let reports: Vec<Mutex<ShardReport>> =
+            (0..shards).map(|_| Mutex::new(ShardReport::default())).collect();
+        let start_retired: u64 = self.cores.iter().map(|c| c.total_instret()).sum();
+        let control = Mutex::new(Control {
+            decision: Decision { stop: None, end: 0, wake: None, allowance: max_insts },
+            console: Vec::new(),
+            start_retired,
+            last_idle_deadline: None,
+        });
+        let shared = BoundaryShared {
+            inboxes: &inboxes,
+            barrier: &barrier,
+            reports: &reports,
+            control: &control,
+            owner: &owner,
+            quantum,
+            shards,
+            max_insts,
+        };
+
+        let mut pairs: Vec<(usize, &mut ShardCore, &mut System)> = self
+            .cores
+            .iter_mut()
+            .zip(self.systems.iter_mut())
+            .enumerate()
+            .map(|(si, (core, sys))| (si, core, sys))
+            .collect();
+        std::thread::scope(|scope| {
+            let rest = pairs.split_off(1);
+            for (si, core, sys) in rest {
+                let shared = &shared;
+                scope.spawn(move || shard_worker(si, core, sys, shared));
+            }
+            let (si, core, sys) = pairs.pop().expect("shard 0");
+            shard_worker(si, core, sys, &shared);
+        });
+
+        let mut ctl = control.into_inner().expect("control poisoned");
+        self.console.append(&mut ctl.console);
+        let reason = ctl.decision.stop.expect("threaded run stopped without a decision");
+        match reason {
+            ExitReason::Exited(code) => self.exit = Some(code),
+            ExitReason::SwitchRequest(value) => self.switch_request = Some(value),
+            _ => {}
+        }
+        reason
+    }
+
+    /// Drain per-shard UART residue into the merged console buffer
+    /// (threaded mode bookkeeping at suspend time; boundaries already
+    /// drained everything produced before the final one).
+    fn drain_threaded_console(&mut self) {
+        let console = &mut self.console;
+        for sys in &mut self.systems {
+            console.append(&mut sys.bus.uart.output);
+        }
+    }
+}
+
+/// Shared references for one threaded run.
+struct BoundaryShared<'a> {
+    inboxes: &'a [Mailbox],
+    barrier: &'a SpinBarrier,
+    reports: &'a [Mutex<ShardReport>],
+    control: &'a Mutex<Control>,
+    owner: &'a [usize],
+    quantum: u64,
+    shards: usize,
+    max_insts: u64,
+}
+
+/// Publish this shard's boundary report.
+fn publish_report(
+    si: usize,
+    core: &ShardCore,
+    sys: &mut System,
+    outcome: Option<WindowOutcome>,
+    msgs_sent: usize,
+    shared: &BoundaryShared<'_>,
+) {
+    let mut rep = shared.reports[si].lock().expect("report poisoned");
+    rep.outcome = outcome;
+    rep.min_runnable = core
+        .harts
+        .iter()
+        .filter(|h| !h.halted && !h.wfi)
+        .map(|h| h.cycle)
+        .min()
+        .unwrap_or(u64::MAX);
+    rep.deadline = (core.base..core.base + core.harts.len())
+        .map(|g| sys.bus.clint.mtimecmp[g])
+        .filter(|&t| t != u64::MAX)
+        .min()
+        .map(|t| t << sys.bus.clint.time_shift)
+        .unwrap_or(u64::MAX);
+    rep.retired = core.total_instret();
+    rep.msgs_sent = msgs_sent;
+    rep.console.append(&mut sys.bus.uart.output);
+    rep.exit = exit_code(sys);
+    rep.switch = sys.switch_request;
+}
+
+/// The barrier leader: fold the shard reports into the next decision.
+fn decide(shared: &BoundaryShared<'_>) {
+    let mut ctl = shared.control.lock().expect("control poisoned");
+    let mut exit: Option<u64> = None;
+    let mut switch: Option<u64> = None;
+    let mut all_idle = true;
+    let mut min_runnable = u64::MAX;
+    let mut deadline = u64::MAX;
+    let mut retired = 0u64;
+    let mut msgs = 0usize;
+    for slot in shared.reports {
+        let mut rep = slot.lock().expect("report poisoned");
+        // Console bytes merge in (boundary, shard) order — a deterministic
+        // quantum-granular interleaving.
+        ctl.console.append(&mut rep.console);
+        if exit.is_none() {
+            exit = rep.exit;
+        }
+        if switch.is_none() {
+            switch = rep.switch;
+        }
+        all_idle &= matches!(rep.outcome, Some(WindowOutcome::Idle));
+        min_runnable = min_runnable.min(rep.min_runnable);
+        deadline = deadline.min(rep.deadline);
+        retired += rep.retired;
+        msgs += rep.msgs_sent;
+    }
+    let consumed = retired - ctl.start_retired;
+    let prev_end = ctl.decision.end;
+    let quantum = shared.quantum;
+    let next_multiple = |c: u64| (c / quantum + 1) * quantum;
+
+    let mut decision = Decision {
+        stop: None,
+        end: prev_end.max(if min_runnable == u64::MAX {
+            prev_end + quantum
+        } else {
+            next_multiple(min_runnable)
+        }),
+        wake: None,
+        allowance: shared.max_insts.saturating_sub(consumed),
+    };
+    if let Some(code) = exit {
+        decision.stop = Some(ExitReason::Exited(code));
+    } else if let Some(value) = switch {
+        decision.stop = Some(ExitReason::SwitchRequest(value));
+    } else if consumed >= shared.max_insts {
+        decision.stop = Some(ExitReason::StepLimit);
+    } else if all_idle && msgs == 0 {
+        // Quiescent: nobody can run and nothing is in flight. Jump to the
+        // next timer deadline once; a second quiescent boundary at the
+        // same deadline means the wake fired nobody (masked) — deadlock.
+        if deadline == u64::MAX || ctl.last_idle_deadline == Some(deadline) {
+            decision.stop = Some(ExitReason::Deadlock);
+        } else {
+            ctl.last_idle_deadline = Some(deadline);
+            decision.wake = Some(deadline);
+            decision.end = prev_end.max(next_multiple(deadline));
+        }
+    } else {
+        ctl.last_idle_deadline = None;
+    }
+    ctl.decision = decision;
+}
+
+/// Forward this shard's externally visible writes as boundary messages:
+/// CLINT msip/mtimecmp writes aimed at remote harts (edge-/write-latched),
+/// SBI IPI bits for remote harts (drained), and SIMCTRL broadcasts. MESI
+/// ownership traffic was already recorded into the outbox during the
+/// window. Returns the number of messages routed.
+fn forward_boundary_msgs(
+    si: usize,
+    core: &mut ShardCore,
+    sys: &mut System,
+    boundary_cycle: u64,
+    shared: &BoundaryShared<'_>,
+) -> usize {
+    let from = core.base;
+    if let Some(value) = sys.pending_broadcast.take() {
+        core.push_msg(boundary_cycle, from, MsgKind::Simctrl { value });
+    }
+    let members = core.base..core.base + core.harts.len();
+    for r in 0..sys.num_harts {
+        if members.contains(&r) {
+            continue;
+        }
+        if sys.bus.clint.msip[r] {
+            // Edge-triggered IPI mailbox: forward the raised bit and
+            // re-arm the local latch. The receiving hart owns *clearing*
+            // its own msip, so a raised remote copy is a send, not state —
+            // leaving it set would swallow every subsequent IPI to the
+            // same hart (no edge to diff).
+            sys.bus.clint.msip[r] = false;
+            core.push_msg(boundary_cycle, from, MsgKind::SetMsip { hart: r, value: true });
+        }
+        if std::mem::take(&mut sys.bus.clint.mtimecmp_written[r]) {
+            // Forward on the *write latch*, not a value diff: a rewrite of
+            // the current value or a disarm back to u64::MAX (equal to the
+            // never-armed local copy) must reach the owner too.
+            let value = sys.bus.clint.mtimecmp[r];
+            core.push_msg(boundary_cycle, from, MsgKind::SetTimecmp { hart: r, value });
+        }
+        let bits = std::mem::take(&mut sys.ipi[r]);
+        if bits != 0 {
+            core.push_msg(boundary_cycle, from, MsgKind::Ipi { hart: r, bits });
+        }
+    }
+    // Route: hart-addressed messages to the owner shard, ownership/config
+    // broadcasts to every other shard. Batched per destination — one
+    // mailbox lock per sibling shard per boundary, not one per message
+    // (coherence-heavy windows record thousands of bus events).
+    let msgs = std::mem::take(&mut core.outbox);
+    let sent = msgs.len();
+    let mut batch: Vec<Msg> = Vec::new();
+    for sj in 0..shared.shards {
+        if sj == si {
+            continue;
+        }
+        batch.clear();
+        batch.extend(msgs.iter().filter(|m| match m.kind {
+            MsgKind::SetMsip { hart, .. }
+            | MsgKind::SetTimecmp { hart, .. }
+            | MsgKind::Ipi { hart, .. } => shared.owner[hart] == sj,
+            MsgKind::MesiInvalidate { .. }
+            | MsgKind::MesiShare { .. }
+            | MsgKind::Simctrl { .. } => true,
+        }));
+        shared.inboxes[sj].post(&batch);
+    }
+    sent
+}
+
+/// Deliver this shard's inbox in canonical order.
+fn apply_inbox(core: &mut ShardCore, sys: &mut System, msgs: Vec<Msg>) {
+    for m in msgs {
+        match m.kind {
+            MsgKind::MesiInvalidate { line } => sys.model.remote_probe(&mut sys.l0, line, true),
+            MsgKind::MesiShare { line } => sys.model.remote_probe(&mut sys.l0, line, false),
+            MsgKind::SetMsip { hart, value } => sys.bus.clint.msip[hart] = value,
+            MsgKind::SetTimecmp { hart, value } => sys.bus.clint.mtimecmp[hart] = value,
+            MsgKind::Ipi { hart, bits } => sys.ipi[hart] |= bits,
+            MsgKind::Simctrl { value } => core.apply_remote_simctrl(sys, value),
+        }
+    }
+}
+
+/// One shard's thread: alternate window execution with barrier phases.
+fn shard_worker(si: usize, core: &mut ShardCore, sys: &mut System, shared: &BoundaryShared<'_>) {
+    // Sibling panics must not leave this thread spinning at the barrier:
+    // poison it on the way out of an unwinding worker so every shard
+    // fails loudly together.
+    let _poison_guard = BarrierPoisonGuard(shared.barrier);
+    let mut prev_end = 0u64;
+    // Initial boundary: publish starting positions so the leader can place
+    // the first window.
+    publish_report(si, core, sys, None, 0, shared);
+    loop {
+        shared.barrier.wait();
+        if si == 0 {
+            decide(shared);
+        }
+        shared.barrier.wait();
+        let decision = shared.control.lock().expect("control poisoned").decision;
+        // Coast idle sleepers through the window they sat out (their WFI
+        // burns simulated time), then deliver the mailbox and poll them —
+        // a delivered IPI/msip/timer wake takes effect at this boundary.
+        let coast = decision.wake.unwrap_or(prev_end);
+        for hart in core.harts.iter_mut() {
+            if !hart.halted && hart.wfi && hart.cycle < coast {
+                hart.cycle = coast;
+            }
+        }
+        apply_inbox(core, sys, shared.inboxes[si].drain_sorted());
+        for l in 0..core.harts.len() {
+            if !core.harts[l].halted && core.harts[l].wfi {
+                poll_interrupt(&mut core.harts[l], sys);
+            }
+        }
+        if decision.stop.is_some() {
+            // Stop *after* delivery so no message is lost across a
+            // StepLimit boundary or an engine hand-off.
+            return;
+        }
+        let mut allowance = decision.allowance;
+        let mut outcome = core.run_window(sys, decision.end, &mut allowance);
+        // An Idle shard may hold its own wake source: a *same-shard* IPI
+        // (the scheduler never polls WFI harts mid-window) or an already
+        // expired local timer. Deliver those locally and keep the window
+        // going; only a shard with no deliverable wake left reports Idle
+        // to the leader's quiescence check.
+        while matches!(outcome, WindowOutcome::Idle) {
+            let mut woke = false;
+            for hart in core.harts.iter_mut() {
+                if !hart.halted && hart.wfi {
+                    poll_interrupt(hart, sys);
+                    if !hart.wfi {
+                        woke = true;
+                    }
+                }
+            }
+            if !woke {
+                break;
+            }
+            outcome = core.run_window(sys, decision.end, &mut allowance);
+        }
+        prev_end = decision.end;
+        let sent = forward_boundary_msgs(si, core, sys, prev_end, shared);
+        publish_report(si, core, sys, Some(outcome), sent, shared);
+    }
+}
+
+/// The all-waiting wake policy over core-partitioned hart vectors sharing
+/// one system — delegates to the single shared implementation so the
+/// serialized sharded schedule cannot drift from the fiber engine's.
+fn wake_all_cores(cores: &mut [ShardCore], sys: &mut System) -> bool {
+    let mut chunks: Vec<&mut [Hart]> =
+        cores.iter_mut().map(|c| c.harts.as_mut_slice()).collect();
+    crate::engine::wake_at_next_deadline_multi(&mut chunks, sys)
+}
+
+impl ExecutionEngine for ShardedEngine {
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn run(&mut self, budget: u64) -> ExitReason {
+        if let Some(code) = self.exit {
+            return ExitReason::Exited(code);
+        }
+        if self.quantum == 1 {
+            self.run_serialized(budget)
+        } else {
+            self.run_threaded(budget)
+        }
+    }
+
+    fn suspend(&mut self) -> SystemSnapshot {
+        for core in &mut self.cores {
+            core.sync_arch_state();
+            for cache in &mut core.caches {
+                cache.flush();
+            }
+        }
+        let mut harts = Vec::with_capacity(self.num_harts);
+        for core in &mut self.cores {
+            harts.append(&mut core.harts);
+        }
+        if self.quantum == 1 {
+            return SystemSnapshot::capture(harts, &mut self.systems[0]);
+        }
+        // Threaded layout: merge the shard-private systems. Each shard is
+        // authoritative for its members' CLINT entries and IPI bits
+        // (remote-aimed writes were forwarded and cleared at boundaries).
+        self.drain_threaded_console();
+        SystemSnapshot::normalize_harts(&mut harts);
+        let mut ipi = vec![0u64; self.num_harts];
+        let mut msip = vec![false; self.num_harts];
+        let mut mtimecmp = vec![u64::MAX; self.num_harts];
+        let mut exit = self.exit;
+        let mut brk = 0u64;
+        let mut mmap_top = 0u64;
+        for (core_range, sys) in partition(self.num_harts, self.systems.len())
+            .into_iter()
+            .zip(self.systems.iter_mut())
+        {
+            let (base, count) = core_range;
+            for g in base..base + count {
+                ipi[g] |= sys.ipi[g];
+                msip[g] = sys.bus.clint.msip[g];
+                mtimecmp[g] = sys.bus.clint.mtimecmp[g];
+            }
+            if exit.is_none() {
+                exit = sys.exit.or(sys.bus.simio.exit_code);
+            }
+            brk = brk.max(sys.brk);
+            mmap_top = mmap_top.max(sys.mmap_top);
+        }
+        SystemSnapshot {
+            harts,
+            phys: Arc::clone(&self.systems[0].phys),
+            ipi,
+            msip,
+            mtimecmp,
+            console: std::mem::take(&mut self.console),
+            exit,
+            ecall_mode: self.systems[0].ecall_mode,
+            brk,
+            mmap_top,
+            trace: self.trace.take(),
+        }
+    }
+
+    fn resume(&mut self, snapshot: SystemSnapshot) {
+        assert_eq!(snapshot.harts.len(), self.num_harts, "hart count is fixed across hand-offs");
+        if self.quantum == 1 {
+            let mut harts = snapshot.install(&mut self.systems[0]);
+            for core in self.cores.iter_mut().rev() {
+                core.harts = harts.split_off(core.base);
+            }
+            return;
+        }
+        assert!(
+            Arc::ptr_eq(&snapshot.phys, &self.systems[0].phys),
+            "snapshot must be resumed over its own guest DRAM"
+        );
+        for (s, sys) in self.systems.iter_mut().enumerate() {
+            let (base, count) = partition(self.num_harts, self.cores.len())[s];
+            // Members get real CLINT/IPI state; remote entries start
+            // neutral (they are diff-forwarded mailboxes, not state).
+            for g in 0..self.num_harts {
+                let member = g >= base && g < base + count;
+                sys.ipi[g] = if member { snapshot.ipi[g] } else { 0 };
+                sys.bus.clint.msip[g] = member && snapshot.msip[g];
+                sys.bus.clint.mtimecmp[g] =
+                    if member { snapshot.mtimecmp[g] } else { u64::MAX };
+            }
+            sys.ecall_mode = snapshot.ecall_mode;
+            sys.brk = snapshot.brk;
+            sys.mmap_top = snapshot.mmap_top;
+            sys.exit = None;
+        }
+        self.exit = snapshot.exit;
+        self.console = snapshot.console;
+        self.trace = snapshot.trace;
+        let mut harts = snapshot.harts;
+        for core in self.cores.iter_mut().rev() {
+            core.harts = harts.split_off(core.base);
+        }
+    }
+
+    fn stats(&self) -> EngineStats {
+        let mut stats = EngineStats::default();
+        for core in &self.cores {
+            stats.merge(&core.stats);
+        }
+        stats
+    }
+
+    fn total_instret(&self) -> u64 {
+        self.cores.iter().map(|c| c.total_instret()).sum()
+    }
+
+    fn per_hart(&self) -> Vec<(u64, u64)> {
+        self.cores
+            .iter()
+            .flat_map(|c| c.harts.iter().map(|h| (h.cycle, h.instret)))
+            .collect()
+    }
+
+    fn console(&self) -> String {
+        let mut out = String::from_utf8_lossy(&self.console).into_owned();
+        for sys in &self.systems {
+            out.push_str(&sys.bus.uart.output_str());
+        }
+        out
+    }
+
+    fn model_stats(&self) -> Vec<(&'static str, u64)> {
+        // One shared model (quantum 1) reports directly; shard-private
+        // models sum by key (each key appears in every instance, in the
+        // model's own order).
+        let mut acc: Vec<(&'static str, u64)> = Vec::new();
+        for sys in &self.systems {
+            for (k, v) in sys.model.stats() {
+                if let Some(entry) = acc.iter_mut().find(|(key, _)| *key == k) {
+                    entry.1 += v;
+                } else {
+                    acc.push((k, v));
+                }
+            }
+        }
+        acc
+    }
+
+    fn reset_model_stats(&mut self) {
+        for sys in &mut self.systems {
+            sys.model.reset_stats();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::*;
+    use crate::mem::{PhysMem, DRAM_BASE};
+    use crate::sys::loader::load_flat;
+
+    #[test]
+    fn partition_is_contiguous_balanced_and_clamped() {
+        assert_eq!(partition(4, 2), vec![(0, 2), (2, 2)]);
+        assert_eq!(partition(4, 4), vec![(0, 1), (1, 1), (2, 1), (3, 1)]);
+        assert_eq!(partition(5, 2), vec![(0, 3), (3, 2)]);
+        assert_eq!(partition(2, 8), vec![(0, 1), (1, 1)], "shards clamp to harts");
+        assert_eq!(partition(3, 1), vec![(0, 3)]);
+        // Ranges always cover 0..n exactly.
+        for (n, s) in [(7, 3), (32, 5), (1, 1)] {
+            let ranges = partition(n, s);
+            let mut next = 0;
+            for (base, count) in ranges {
+                assert_eq!(base, next);
+                assert!(count > 0);
+                next = base + count;
+            }
+            assert_eq!(next, n);
+        }
+    }
+
+    #[test]
+    fn spin_barrier_synchronizes_rounds() {
+        use std::sync::atomic::AtomicU64;
+        const THREADS: usize = 4;
+        const ROUNDS: u64 = 200;
+        let barrier = SpinBarrier::new(THREADS);
+        let counter = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..THREADS {
+                scope.spawn(|| {
+                    for round in 1..=ROUNDS {
+                        counter.fetch_add(1, Ordering::AcqRel);
+                        barrier.wait();
+                        // Between the two waits every thread must observe
+                        // the full round's increments.
+                        assert_eq!(
+                            counter.load(Ordering::Acquire),
+                            round * THREADS as u64
+                        );
+                        barrier.wait();
+                    }
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::Acquire), ROUNDS * THREADS as u64);
+    }
+
+    fn countdown_img(n: i64) -> Image {
+        let mut a = Assembler::new(DRAM_BASE);
+        a.li(A0, n);
+        a.li(A1, 0);
+        let top = a.here();
+        a.add(A1, A1, A0);
+        a.addi(A0, A0, -1);
+        a.bnez(A0, top);
+        a.mv(A0, A1);
+        a.li(A7, 93);
+        a.ecall();
+        a.finish()
+    }
+
+    fn sharded_with(
+        img: &Image,
+        harts: usize,
+        shards: usize,
+        quantum: u64,
+        pipeline: &str,
+    ) -> ShardedEngine {
+        let phys = Arc::new(PhysMem::new(DRAM_BASE, 4 << 20));
+        let mut eng = ShardedEngine::new(harts, shards, quantum, pipeline, || {
+            System::with_shared_phys(harts, Arc::clone(&phys), Box::new(crate::mem::AtomicModel))
+        });
+        let entry = load_flat(&eng.systems[0], img);
+        eng.set_entry(entry);
+        eng
+    }
+
+    #[test]
+    fn serialized_single_hart_runs() {
+        let img = countdown_img(10);
+        let mut eng = sharded_with(&img, 1, 1, 1, "simple");
+        assert_eq!(ExecutionEngine::run(&mut eng, 1_000_000), ExitReason::Exited(55));
+        let per_hart = eng.per_hart();
+        assert_eq!(per_hart.len(), 1);
+        assert!(per_hart[0].1 > 0);
+    }
+
+    #[test]
+    fn threaded_single_hart_runs() {
+        let img = countdown_img(10);
+        let mut eng = sharded_with(&img, 1, 1, 64, "simple");
+        assert_eq!(ExecutionEngine::run(&mut eng, 1_000_000), ExitReason::Exited(55));
+        // A second run call must keep returning the latched exit.
+        assert_eq!(ExecutionEngine::run(&mut eng, 1_000_000), ExitReason::Exited(55));
+    }
+
+    #[test]
+    fn threaded_two_shards_disjoint_work() {
+        // Two harts count down in disjoint memory; hart 0 exits. The
+        // threaded driver must terminate both shards at a boundary.
+        let img = countdown_img(100);
+        let mut eng = sharded_with(&img, 2, 2, 64, "simple");
+        assert_eq!(ExecutionEngine::run(&mut eng, 10_000_000), ExitReason::Exited(5050));
+        assert_eq!(eng.per_hart().len(), 2);
+    }
+
+    #[test]
+    fn step_limit_stops_at_boundary_and_resumes() {
+        let img = countdown_img(100_000);
+        let mut eng = sharded_with(&img, 2, 2, 256, "simple");
+        assert_eq!(ExecutionEngine::run(&mut eng, 5_000), ExitReason::StepLimit);
+        let retired = eng.total_instret();
+        assert!(retired >= 5_000, "budget consumed: {}", retired);
+        // Continue to completion.
+        assert_eq!(
+            ExecutionEngine::run(&mut eng, u64::MAX),
+            ExitReason::Exited((100_000u64 * 100_001 / 2) & u64::MAX)
+        );
+    }
+}

@@ -52,7 +52,7 @@ fn apply_simctrl(sys: &mut System, value: u64) {
     // recording, so hand-off decoding sees the full state.
     let state = merge_simctrl(sys.simctrl_state, value);
     let engine = (value >> SIMCTRL_ENGINE_SHIFT) & 0b111;
-    if matches!(engine, 1..=3) && engine != SIMCTRL_ENGINE_INTERP {
+    if matches!(engine, 1..=4) && engine != SIMCTRL_ENGINE_INTERP {
         sys.simctrl_state = state;
         sys.request_engine_switch(state);
         return;
@@ -144,7 +144,8 @@ pub struct InterpEngine {
 }
 
 impl InterpEngine {
-    pub fn new(sys: System) -> InterpEngine {
+    pub fn new(mut sys: System) -> InterpEngine {
+        sys.engine_code = SIMCTRL_ENGINE_INTERP;
         let harts = (0..sys.num_harts).map(Hart::new).collect();
         InterpEngine { harts, sys }
     }

@@ -50,7 +50,7 @@ pub const CSR_MINSTRET: u16 = 0xB02;
 ///   bits [6:4]   memory model   (0 = keep, 1 = atomic, 2 = tlb, 3 = cache, 4 = mesi)
 ///   bits [19:8]  cache-line size in bytes (0 = keep)
 ///   bits [22:20] execution engine (0 = keep, 1 = interp, 2 = lockstep,
-///                3 = parallel). Writing an engine different from the one
+///                3 = parallel, 4 = sharded). Writing an engine different from the one
 ///                currently running suspends the simulation, snapshots all
 ///                guest-visible state ([`crate::sys::SystemSnapshot`]) and
 ///                warm-starts the requested engine — the fast-forward →
@@ -67,6 +67,7 @@ pub const SIMCTRL_ENGINE_MASK: u64 = 0b111 << SIMCTRL_ENGINE_SHIFT;
 pub const SIMCTRL_ENGINE_INTERP: u64 = 1;
 pub const SIMCTRL_ENGINE_LOCKSTEP: u64 = 2;
 pub const SIMCTRL_ENGINE_PARALLEL: u64 = 3;
+pub const SIMCTRL_ENGINE_SHARDED: u64 = 4;
 /// Read-only: statistics scratch (dcache accesses low 32 / hits high 32).
 pub const CSR_SIMSTATS: u16 = 0x7C1;
 /// Write: region-of-interest marker (value is an arbitrary tag recorded in

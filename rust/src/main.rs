@@ -58,7 +58,14 @@ run options:
   --harts N          number of harts (default 1)
   --pipeline M       atomic | simple | inorder (default simple)
   --memory M         atomic | tlb | cache | mesi (default atomic)
-  --mode M           lockstep | parallel | interp (default lockstep)
+  --mode M           lockstep | parallel | interp | sharded (default lockstep)
+  --shards S         sharded mode: host threads the harts are partitioned
+                     across (default 1; clamped to the hart count)
+  --quantum Q        sharded mode: deterministic barrier quantum in cycles
+                     (default 1024). Q=1 serializes the shards into the
+                     exact lockstep schedule (bit-identical to --mode
+                     lockstep); larger Q runs shards concurrently with
+                     cross-shard effects delivered at quantum boundaries
   --max-insts N      instruction budget (per hart in parallel mode)
   --switch-at N      engine hand-off: after N retired instructions (per
                      hart in parallel mode), suspend the engine and

@@ -167,6 +167,10 @@ pub struct MesiModel {
     l2: L2Cache,
     timing: MemTiming,
     pub coherence: MesiStats,
+    /// Record ownership-changing bus events for cross-shard broadcast
+    /// (sharded execution, DESIGN.md §10). Off by default.
+    record_bus: bool,
+    bus_events: Vec<(u64, bool)>,
 }
 
 impl MesiModel {
@@ -194,6 +198,16 @@ impl MesiModel {
             l2: L2Cache::new(l2_geom),
             timing,
             coherence: MesiStats::default(),
+            record_bus: false,
+            bus_events: Vec::new(),
+        }
+    }
+
+    /// Record an ownership-changing bus event for cross-shard broadcast.
+    #[inline]
+    fn record_bus_event(&mut self, line_paddr: u64, write: bool) {
+        if self.record_bus {
+            self.bus_events.push((line_paddr, write));
         }
     }
 
@@ -297,12 +311,15 @@ impl MemoryModel for MesiModel {
                     };
                 }
                 (MesiState::Exclusive, true) => {
-                    // Silent E→M upgrade.
+                    // Silent E→M upgrade. (Silent on a real bus, but still
+                    // broadcast across shards: a remote shard's private
+                    // directory may hold a skewed copy of the line.)
                     self.l1[hart].lines[i].state = MesiState::Modified;
                     if let Some(j) = self.l2.find(ltag) {
                         self.l2.lines[j].dirty = true;
                         self.l2.lines[j].owner = Some(hart as u8);
                     }
+                    self.record_bus_event(line_paddr, true);
                     return ColdAccess { cycles, install: Some(tr.writable) };
                 }
                 (MesiState::Shared, true) => {
@@ -323,6 +340,7 @@ impl MemoryModel for MesiModel {
                     if let Some(i) = self.l1[hart].find(ltag) {
                         self.l1[hart].lines[i].state = MesiState::Modified;
                     }
+                    self.record_bus_event(line_paddr, true);
                     return ColdAccess { cycles, install: Some(tr.writable) };
                 }
             }
@@ -405,6 +423,11 @@ impl MemoryModel for MesiModel {
             l0[hart].d.invalidate_paddr(victim_paddr);
         }
 
+        // Every L1 miss fill changes line ownership somewhere on the bus:
+        // broadcast it so remote shards drop (write) or downgrade (read)
+        // their copies at the next quantum boundary.
+        self.record_bus_event(line_paddr, write);
+
         let writable = matches!(new_state, MesiState::Modified | MesiState::Exclusive);
         ColdAccess { cycles, install: Some(writable && tr.writable) }
     }
@@ -475,6 +498,48 @@ impl MemoryModel for MesiModel {
         self.l2.accesses = 0;
         self.l2.hits = 0;
         self.coherence = MesiStats::default();
+    }
+
+    fn set_bus_recording(&mut self, on: bool) {
+        self.record_bus = on;
+        if !on {
+            self.bus_events.clear();
+        }
+    }
+
+    fn drain_bus_events(&mut self) -> Vec<(u64, bool)> {
+        std::mem::take(&mut self.bus_events)
+    }
+
+    /// A remote shard's hart changed ownership of `line_paddr`: on a
+    /// remote *write*, drop every local copy (L1 invalidation + L0 flush,
+    /// with a writeback if a local copy was Modified) and evict the stale
+    /// local L2/directory entry; on a remote *read*, downgrade local M/E
+    /// copies to Shared (writing back Modified data). This is the
+    /// quantum-boundary delivery half of the mailbox protocol — the same
+    /// transitions [`MesiModel::invalidate_hart_line`] /
+    /// [`MesiModel::downgrade_hart_line`] perform under direct lockstep
+    /// sharing, minus the cycle charge (boundary delivery bills no hart).
+    fn remote_probe(&mut self, l0: &mut [L0Set], line_paddr: u64, write: bool) {
+        let n = self.l1.len();
+        if write {
+            for h in 0..n {
+                self.invalidate_hart_line(l0, h, line_paddr);
+            }
+            // Inclusive L2: the remote owner's copy supersedes ours.
+            let ltag = line_paddr >> self.l2.geom.line_shift;
+            if let Some(j) = self.l2.find(ltag) {
+                self.l2.lines[j] = L2Line { tag: EMPTY, sharers: 0, owner: None, dirty: false };
+            }
+        } else {
+            for h in 0..n {
+                self.downgrade_hart_line(l0, h, line_paddr);
+            }
+            let ltag = line_paddr >> self.l2.geom.line_shift;
+            if let Some(j) = self.l2.find(ltag) {
+                self.l2.lines[j].owner = None;
+            }
+        }
     }
 }
 
@@ -739,5 +804,67 @@ mod tests {
             pingpong,
             private
         );
+    }
+
+    #[test]
+    fn bus_events_record_ownership_changes_only_when_enabled() {
+        let (mut m, mut l0) = setup(1);
+        // Recording off: nothing is collected.
+        m.data_access(&mut l0, 0, 0x1000, &tr(0x8000_1000), true);
+        assert!(m.drain_bus_events().is_empty());
+        m.set_bus_recording(true);
+        // Write miss fill -> invalidate broadcast.
+        m.data_access(&mut l0, 0, 0x2000, &tr(0x8000_2000), true);
+        // Read miss fill -> share broadcast.
+        m.data_access(&mut l0, 0, 0x3000, &tr(0x8000_3000), false);
+        // M-state write hit: no ownership change, no event.
+        m.data_access(&mut l0, 0, 0x2000, &tr(0x8000_2000), true);
+        // E->M silent upgrade IS broadcast (remote shards may hold a
+        // skewed copy).
+        m.data_access(&mut l0, 0, 0x3000, &tr(0x8000_3000), true);
+        let events = m.drain_bus_events();
+        assert_eq!(
+            events,
+            vec![(0x8000_2000, true), (0x8000_3000, false), (0x8000_3000, true)]
+        );
+        assert!(m.drain_bus_events().is_empty(), "drain consumes");
+        // Disabling recording clears any residue.
+        m.data_access(&mut l0, 0, 0x4000, &tr(0x8000_4000), true);
+        m.set_bus_recording(false);
+        assert!(m.drain_bus_events().is_empty());
+    }
+
+    #[test]
+    fn remote_probe_write_invalidates_l1_l0_and_l2() {
+        const P: u64 = 0x8000_6000;
+        let (mut m, mut l0) = setup(2);
+        // Both local harts share the line; hart 0 has it in its L0 too.
+        m.data_access(&mut l0, 0, 0x6000, &tr(P), false);
+        m.data_access(&mut l0, 1, 0x6000, &tr(P), false);
+        l0[0].d.insert(0x6000, P, true);
+        let inval_before = m.coherence.invalidations;
+        // A remote shard's hart wrote the line.
+        m.remote_probe(&mut l0, P, true);
+        assert_eq!(line_state(&m, 0, P), None);
+        assert_eq!(line_state(&m, 1, P), None);
+        assert!(l0[0].d.lookup_read(0x6000).is_none(), "L0 flushed at delivery");
+        assert_eq!(m.coherence.invalidations, inval_before + 2);
+        assert!(m.l2.find(P >> 6).is_none(), "stale local L2 entry evicted");
+    }
+
+    #[test]
+    fn remote_probe_read_downgrades_modified_with_writeback() {
+        const P: u64 = 0x8000_6040;
+        let (mut m, mut l0) = setup(1);
+        m.data_access(&mut l0, 0, 0x6040, &tr(P), true); // M
+        let wb_before = m.coherence.writebacks;
+        m.remote_probe(&mut l0, P, false);
+        assert_eq!(line_state(&m, 0, P), Some(MesiState::Shared));
+        assert_eq!(m.coherence.writebacks, wb_before + 1, "dirty copy written back");
+        // A line we never held is a no-op.
+        let stats_before = (m.coherence.invalidations, m.coherence.downgrades);
+        m.remote_probe(&mut l0, 0x8000_7000, true);
+        m.remote_probe(&mut l0, 0x8000_7000, false);
+        assert_eq!((m.coherence.invalidations, m.coherence.downgrades), stats_before);
     }
 }

@@ -86,6 +86,27 @@ pub trait MemoryModel: Send {
     /// warm-up window of a sampled measurement (the SMARTS workflow): the
     /// state stays warm, only the counters restart.
     fn reset_stats(&mut self) {}
+
+    // --- sharded execution hooks (DESIGN.md §10) ---------------------------
+    // Under the sharded cycle-level engine each shard drives a private
+    // model instance for its own harts; cross-shard coherence travels as
+    // quantum-boundary mailbox messages instead of direct sibling
+    // mutation. Models without cross-hart state ignore all three hooks.
+
+    /// Record ownership-changing bus events (`(line paddr, write)`) for
+    /// cross-shard broadcast. Off by default; only the sharded driver pays
+    /// for the recording.
+    fn set_bus_recording(&mut self, _on: bool) {}
+
+    /// Take the bus events recorded since the last drain.
+    fn drain_bus_events(&mut self) -> Vec<(u64, bool)> {
+        Vec::new()
+    }
+
+    /// Apply a remote shard's bus event to the local state: `write` drops
+    /// local copies of the line (invalidation), `!write` downgrades them
+    /// to Shared — either way writing back a dirty local copy first.
+    fn remote_probe(&mut self, _l0: &mut [L0Set], _line_paddr: u64, _write: bool) {}
 }
 
 /// `Atomic` memory model (Table 2): memory accesses are not tracked; every

@@ -32,13 +32,23 @@ pub const MMIO_LATENCY: u64 = 20;
 pub struct Clint {
     pub msip: Vec<bool>,
     pub mtimecmp: Vec<u64>,
+    /// Per-hart "mtimecmp was written" latches — the sharded engine's
+    /// boundary forwarding consumes these so *every* cross-shard timer
+    /// write is forwarded, including rewrites of the current value and
+    /// disarms back to `u64::MAX` (a value diff would miss both).
+    pub mtimecmp_written: Vec<bool>,
     /// Ratio of cycles per mtime tick (1 = mtime counts cycles).
     pub time_shift: u32,
 }
 
 impl Clint {
     pub fn new(harts: usize) -> Clint {
-        Clint { msip: vec![false; harts], mtimecmp: vec![u64::MAX; harts], time_shift: 0 }
+        Clint {
+            msip: vec![false; harts],
+            mtimecmp: vec![u64::MAX; harts],
+            mtimecmp_written: vec![false; harts],
+            time_shift: 0,
+        }
     }
 
     #[inline]
@@ -121,6 +131,7 @@ impl Clint {
                         self.mtimecmp[idx] =
                             (self.mtimecmp[idx] & 0xffff_ffff) | ((value & 0xffff_ffff) << 32);
                     }
+                    self.mtimecmp_written[idx] = true;
                 }
             }
             _ => {}
@@ -372,6 +383,25 @@ mod tests {
         c.write(0x4000, 0xdead_beef, 4);
         c.write(0x4004, 0x1234, 4);
         assert_eq!(c.mtimecmp[0], 0x1234_dead_beef);
+    }
+
+    #[test]
+    fn clint_mtimecmp_write_latch() {
+        // The sharded boundary forwarding keys off the write latch, so
+        // value-preserving writes (a disarm of an already-MAX entry, a
+        // rewrite of the current deadline) must still set it.
+        let mut c = Clint::new(2);
+        assert!(!c.mtimecmp_written[1]);
+        c.write(0x4008, u64::MAX, 8); // disarm == current value
+        assert!(c.mtimecmp_written[1], "rewrite of the current value must latch");
+        assert!(!c.mtimecmp_written[0]);
+        c.mtimecmp_written[1] = false;
+        c.write(0x4008, 500, 8);
+        assert!(c.mtimecmp_written[1]);
+        // msip writes do not touch the timer latch.
+        c.mtimecmp_written[1] = false;
+        c.write(4, 1, 4);
+        assert!(!c.mtimecmp_written[1]);
     }
 
     #[test]

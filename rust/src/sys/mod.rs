@@ -78,6 +78,23 @@ pub struct System {
     /// Pending engine-switch request (raw SIMCTRL value). Engines return
     /// [`crate::engine::ExitReason::SwitchRequest`] when they observe it.
     pub switch_request: Option<u64>,
+    /// SIMCTRL engine code of the engine currently driving this system
+    /// (`isa::csr::SIMCTRL_ENGINE_*`): a guest SIMCTRL write requesting
+    /// this code is a no-op, any other valid code stops the engine with a
+    /// switch request.
+    pub engine_code: u64,
+    /// A SIMCTRL write with globally scoped fields (memory model / line
+    /// size) happened: the raw value, for the engine driver to propagate
+    /// to sibling shard cores (immediately under a shared system, at the
+    /// next quantum boundary across shard-private systems). Meaningless —
+    /// and ignored — under the single-core engines, whose own core already
+    /// covers every hart.
+    pub pending_broadcast: Option<u64>,
+    /// This system's memory model must record cross-shard bus events
+    /// (threaded sharded execution). Kept at the system level so a
+    /// runtime model switch ([`System::set_model`]) re-arms the fresh
+    /// model instead of silently dropping the mailbox traffic.
+    pub record_bus_events: bool,
     /// Timing parameters used when SIMCTRL constructs new memory models.
     pub timing: MemTiming,
     pub num_harts: usize,
@@ -136,6 +153,9 @@ impl System {
             shared_exit: None,
             shared_switch: None,
             switch_request: None,
+            engine_code: crate::isa::csr::SIMCTRL_ENGINE_LOCKSTEP,
+            pending_broadcast: None,
+            record_bus_events: false,
             timing: MemTiming::default(),
             num_harts,
         }
@@ -153,10 +173,14 @@ impl System {
     }
 
     /// Replace the memory model at runtime (§3.5): flushes all L0 caches
-    /// and the old model's state.
+    /// and the old model's state. The sharded bus-recording mode carries
+    /// over to the fresh model.
     pub fn set_model(&mut self, model: Box<dyn MemoryModel>) {
         self.model.flush_all(&mut self.l0);
         self.model = model;
+        if self.record_bus_events {
+            self.model.set_bus_recording(true);
+        }
         for set in &mut self.l0 {
             set.clear();
         }

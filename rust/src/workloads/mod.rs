@@ -19,6 +19,7 @@
 pub mod coremark;
 pub mod dedup;
 pub mod memlat;
+pub mod multicore;
 pub mod spinlock;
 pub mod vm;
 
@@ -29,6 +30,7 @@ pub const WORKLOADS: &[(&str, &str)] = &[
     ("coremark-lite", "CRC-16 + 8x8 matmul + linked list; pipeline validation"),
     ("dedup", "parallel rolling-hash dedup with shared hash table (PARSEC-dedup role)"),
     ("memlat", "dependent pointer chase, 64 KiB working set (MemLat role)"),
+    ("multicore", "per-hart private xorshift kernels + AMO join (shard scaling)"),
     ("spinlock", "2+ harts contending an LR/SC spinlock (MESI validation)"),
     ("vm-sv39", "Sv39 paging enabled; countdown under translation"),
     ("hello", "SBI console hello world"),
@@ -40,6 +42,7 @@ pub fn build(name: &str, harts: usize) -> Option<Image> {
         "coremark-lite" => Some(coremark::build(coremark::DEFAULT_ITERS)),
         "dedup" => Some(dedup::build(harts, dedup::DEFAULT_CHUNKS)),
         "memlat" => Some(memlat::build(64 << 10, 200_000)),
+        "multicore" => Some(multicore::build(harts, 200_000)),
         "spinlock" => Some(spinlock::build(harts.max(2), 2_000)),
         "vm-sv39" => Some(vm::build(500)),
         "hello" => Some(hello()),
@@ -59,6 +62,7 @@ pub fn build_bench(name: &str, harts: usize, quick: bool) -> Option<Image> {
         "coremark-lite" => Some(coremark::build(5)),
         "dedup" => Some(dedup::build(harts, 8)),
         "memlat" => Some(memlat::build(16 << 10, 20_000)),
+        "multicore" => Some(multicore::build(harts, 5_000)),
         "spinlock" => Some(spinlock::build(harts.max(2), 200)),
         "vm-sv39" => Some(vm::build(100)),
         "hello" => Some(hello()),

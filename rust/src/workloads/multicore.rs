@@ -1,0 +1,210 @@
+//! `multicore`: embarrassingly parallel per-hart integer kernels — the
+//! shard-scaling workload (DESIGN.md §10).
+//!
+//! Each hart runs an independent xorshift64 stream over a *private* 4 KiB
+//! buffer placed 4 KiB apart from its neighbours (no line is ever shared,
+//! so cycle-level timing is a pure function of each hart's own stream),
+//! then publishes its checksum and joins on an AMO barrier; hart 0 exits
+//! with the wrapping sum of every hart's checksum. This is the workload
+//! shape the sharded engine is built for: cross-core interaction bounded
+//! to the join, cycle-level models busy the whole time — so the quantum
+//! barrier, not coherence traffic, is the only scaling limit.
+
+use crate::asm::*;
+use crate::mem::DRAM_BASE;
+
+/// Private work buffers: 4 KiB per hart, 1 MiB into DRAM (clear of any
+/// image this generator emits).
+const WORK_BASE: u64 = DRAM_BASE + 0x10_0000;
+/// Per-hart checksum slots (8 bytes each), one page below the buffers.
+const RESULT_BASE: u64 = DRAM_BASE + 0x0F_F000;
+/// AMO join counter.
+const DONE_ADDR: u64 = DRAM_BASE + 0x0F_EF00;
+
+/// One xorshift64 step (the guest kernel's exact update).
+fn xorshift64(mut x: u64) -> u64 {
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    x
+}
+
+/// Rust model of the guest computation: the expected exit code.
+pub fn expected_sum(harts: usize, iters: u32) -> u64 {
+    let mut total = 0u64;
+    for h in 0..harts as u64 {
+        let mut x = h + 1;
+        let mut sum = 0u64;
+        for _ in 0..iters {
+            x = xorshift64(x);
+            // The guest stores x into its private buffer and reloads it;
+            // the reload always returns the just-stored value, so the
+            // checksum is the plain running sum of the stream.
+            sum = sum.wrapping_add(x);
+        }
+        total = total.wrapping_add(sum);
+    }
+    total
+}
+
+/// Expected exit code of [`build_nojoin`]: hart 0's own stream checksum.
+pub fn expected_sum_hart0(iters: u32) -> u64 {
+    let mut x = 1u64;
+    let mut sum = 0u64;
+    for _ in 0..iters {
+        x = xorshift64(x);
+        sum = sum.wrapping_add(x);
+    }
+    sum
+}
+
+/// Join-free variant for the determinism suites: every hart runs the same
+/// private kernel, then non-zero harts park in WFI and hart 0 exits with
+/// its *own* checksum — no cross-hart spin loop whose iteration count
+/// would depend on host-thread timing, so a threaded sharded run is a
+/// pure function of `(image, shards, quantum)` end to end.
+pub fn build_nojoin(iters: u32) -> Image {
+    let mut a = Assembler::new(DRAM_BASE);
+
+    a.csrr(T6, crate::isa::csr::CSR_MHARTID);
+    a.li(S0, WORK_BASE as i64);
+    a.slli(T0, T6, 12);
+    a.add(S0, S0, T0);
+    a.li(S1, iters as i64);
+    a.addi(S2, T6, 1);
+    a.li(S3, 0);
+
+    let top = a.here();
+    a.slli(T0, S2, 13);
+    a.xor(S2, S2, T0);
+    a.srli(T0, S2, 7);
+    a.xor(S2, S2, T0);
+    a.slli(T0, S2, 17);
+    a.xor(S2, S2, T0);
+    a.srli(T1, S2, 5);
+    a.andi(T1, T1, 511);
+    a.slli(T1, T1, 3);
+    a.add(T1, T1, S0);
+    a.sd(S2, T1, 0);
+    a.ld(T2, T1, 0);
+    a.add(S3, S3, T2);
+    a.addi(S1, S1, -1);
+    a.bnez(S1, top);
+
+    // Publish, then park (WFI, never woken) or exit.
+    a.li(T3, RESULT_BASE as i64);
+    a.slli(T4, T6, 3);
+    a.add(T3, T3, T4);
+    a.sd(S3, T3, 0);
+    let exit = a.new_label();
+    a.beqz(T6, exit);
+    let park = a.here();
+    a.wfi();
+    a.j(park);
+    a.bind(exit);
+    a.mv(A0, S3);
+    a.li(A7, 93);
+    a.ecall();
+    a.finish()
+}
+
+/// Each of `harts` harts runs `iters` xorshift64 + private store/load
+/// iterations; hart 0 exits with the wrapping sum of all checksums.
+pub fn build(harts: usize, iters: u32) -> Image {
+    let harts = harts.max(1);
+    let mut a = Assembler::new(DRAM_BASE);
+
+    a.csrr(T6, crate::isa::csr::CSR_MHARTID);
+    // Private buffer base: WORK_BASE + hart * 4096.
+    a.li(S0, WORK_BASE as i64);
+    a.slli(T0, T6, 12);
+    a.add(S0, S0, T0);
+    a.li(S1, iters as i64);
+    a.addi(S2, T6, 1); // xorshift state (nonzero per hart)
+    a.li(S3, 0); // checksum
+
+    let top = a.here();
+    // xorshift64
+    a.slli(T0, S2, 13);
+    a.xor(S2, S2, T0);
+    a.srli(T0, S2, 7);
+    a.xor(S2, S2, T0);
+    a.slli(T0, S2, 17);
+    a.xor(S2, S2, T0);
+    // Private-buffer slot: ((x >> 5) & 511) * 8
+    a.srli(T1, S2, 5);
+    a.andi(T1, T1, 511);
+    a.slli(T1, T1, 3);
+    a.add(T1, T1, S0);
+    a.sd(S2, T1, 0);
+    a.ld(T2, T1, 0);
+    a.add(S3, S3, T2);
+    a.addi(S1, S1, -1);
+    a.bnez(S1, top);
+
+    // Publish the checksum and join.
+    a.li(T3, RESULT_BASE as i64);
+    a.slli(T4, T6, 3);
+    a.add(T3, T3, T4);
+    a.sd(S3, T3, 0);
+    a.li(T4, DONE_ADDR as i64);
+    a.li(T0, 1);
+    a.amoadd_d(ZERO, T0, T4);
+    let park = a.here();
+    a.bnez(T6, park);
+    // Hart 0: wait for everyone, sum the checksums, exit.
+    let wait = a.here();
+    a.ld(T1, T4, 0);
+    a.li(T2, harts as i64);
+    a.blt(T1, T2, wait);
+    a.li(T3, RESULT_BASE as i64);
+    a.li(T5, harts as i64);
+    a.li(A0, 0);
+    let sum = a.here();
+    a.ld(T2, T3, 0);
+    a.add(A0, A0, T2);
+    a.addi(T3, T3, 8);
+    a.addi(T5, T5, -1);
+    a.bnez(T5, sum);
+    a.li(A7, 93);
+    a.ecall();
+    a.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_image, SimConfig};
+    use crate::interp::ExitReason;
+
+    #[test]
+    fn model_matches_guest_lockstep() {
+        let img = build(2, 300);
+        let mut cfg = SimConfig::default();
+        cfg.harts = 2;
+        cfg.pipeline = "inorder".into();
+        cfg.set("memory", "cache").unwrap();
+        cfg.max_insts = 50_000_000;
+        let r = run_image(&cfg, &img);
+        assert_eq!(r.exit, ExitReason::Exited(expected_sum(2, 300)));
+    }
+
+    #[test]
+    fn four_harts_atomic() {
+        let img = build(4, 100);
+        let mut cfg = SimConfig::default();
+        cfg.harts = 4;
+        cfg.pipeline = "simple".into();
+        cfg.max_insts = 50_000_000;
+        let r = run_image(&cfg, &img);
+        assert_eq!(r.exit, ExitReason::Exited(expected_sum(4, 100)));
+    }
+
+    #[test]
+    fn single_hart_degenerates_cleanly() {
+        let img = build(1, 50);
+        let cfg = SimConfig::default();
+        let r = run_image(&cfg, &img);
+        assert_eq!(r.exit, ExitReason::Exited(expected_sum(1, 50)));
+    }
+}

@@ -1,0 +1,509 @@
+//! Sharded cycle-level engine: equivalence + determinism suites
+//! (DESIGN.md §10).
+//!
+//! * **Equivalence**: with `quantum == 1` the sharded engine serializes
+//!   into the exact single-threaded lockstep schedule, so for every shard
+//!   count its results must be *bit-identical* to the `FiberEngine` —
+//!   registers, CSRs, instret, cycles, console, and all memory-model
+//!   counters — on coremark and the 2-/4-hart MESI workloads.
+//!
+//! * **Determinism**: for a fixed `(image, shards, quantum)` the threaded
+//!   driver must reproduce the full run report bit-for-bit across runs;
+//!   across shard counts (fixed quantum) the architectural results —
+//!   exit code, registers, per-hart instret — must be invariant for
+//!   programs whose cross-shard communication rides the mailboxed
+//!   channels (the WFI/IPI ping-pong below covers the cross-shard wake
+//!   path; only cycle counts may move with the partitioning).
+
+use r2vm::asm::*;
+use r2vm::coordinator::{build_engine, EngineMode, SimConfig};
+use r2vm::engine::{ExecutionEngine, ExitReason};
+use r2vm::isa::csr::{
+    CSR_MHARTID, CSR_MIE, CSR_MSTATUS, CSR_MTVEC, IRQ_MSIP, MSTATUS_MIE,
+};
+use r2vm::mem::DRAM_BASE;
+use r2vm::sys::dev::CLINT_BASE;
+use r2vm::sys::Hart;
+use r2vm::workloads::{coremark, multicore, spinlock};
+
+const BUDGET: u64 = 100_000_000;
+
+/// Everything a run can observably produce.
+struct EndState {
+    exit: ExitReason,
+    /// Per-hart (cycle, instret) from the suspended snapshot.
+    per_hart: Vec<(u64, u64)>,
+    model_stats: Vec<(&'static str, u64)>,
+    console: String,
+    harts: Vec<Hart>,
+    /// (block_entries, chain_hits, chain_misses, blocks_translated).
+    dispatch: (u64, u64, u64, u64),
+}
+
+fn run_end_state(cfg: &SimConfig, img: &Image) -> EndState {
+    let mut eng = build_engine(cfg, img);
+    let exit = eng.run(BUDGET);
+    let model_stats = eng.model_stats();
+    let console = eng.console();
+    let stats = eng.stats();
+    let snap = eng.suspend();
+    EndState {
+        exit,
+        per_hart: snap.harts.iter().map(|h| (h.cycle, h.instret)).collect(),
+        model_stats,
+        console,
+        harts: snap.harts,
+        dispatch: (
+            stats.block_entries,
+            stats.chain_hits,
+            stats.chain_misses,
+            stats.blocks_translated,
+        ),
+    }
+}
+
+fn sharded_cfg(base: &SimConfig, shards: usize, quantum: u64) -> SimConfig {
+    let mut cfg = base.clone();
+    cfg.mode = EngineMode::Sharded;
+    cfg.shards = shards;
+    cfg.quantum = quantum;
+    cfg
+}
+
+/// Architectural hart comparison (the bit-identity contract).
+fn assert_harts_identical(a: &[Hart], b: &[Hart], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{}: hart count", ctx);
+    for (h, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.regs, y.regs, "{}: hart {} registers", ctx, h);
+        assert_eq!(x.pc, y.pc, "{}: hart {} pc", ctx, h);
+        assert_eq!(x.prv, y.prv, "{}: hart {} privilege", ctx, h);
+        assert_eq!(x.instret, y.instret, "{}: hart {} instret", ctx, h);
+        assert_eq!(x.cycle, y.cycle, "{}: hart {} cycle", ctx, h);
+        assert_eq!(x.mstatus, y.mstatus, "{}: hart {} mstatus", ctx, h);
+        assert_eq!(x.mie, y.mie, "{}: hart {} mie", ctx, h);
+        assert_eq!(x.mip, y.mip, "{}: hart {} mip", ctx, h);
+        assert_eq!(x.mtvec, y.mtvec, "{}: hart {} mtvec", ctx, h);
+        assert_eq!(x.mepc, y.mepc, "{}: hart {} mepc", ctx, h);
+        assert_eq!(x.mcause, y.mcause, "{}: hart {} mcause", ctx, h);
+        assert_eq!(x.mtval, y.mtval, "{}: hart {} mtval", ctx, h);
+        assert_eq!(x.mscratch, y.mscratch, "{}: hart {} mscratch", ctx, h);
+        assert_eq!(x.satp, y.satp, "{}: hart {} satp", ctx, h);
+    }
+}
+
+/// The full bit-identity check used by the quantum-1 equivalence suite.
+fn assert_bit_identical(a: &EndState, b: &EndState, ctx: &str) {
+    assert_eq!(a.exit, b.exit, "{}: exit", ctx);
+    assert_eq!(a.per_hart, b.per_hart, "{}: per-hart (cycle, instret)", ctx);
+    assert_eq!(a.model_stats, b.model_stats, "{}: model counters", ctx);
+    assert_eq!(a.console, b.console, "{}: console", ctx);
+    assert_eq!(a.dispatch, b.dispatch, "{}: dispatch statistics", ctx);
+    assert_harts_identical(&a.harts, &b.harts, ctx);
+}
+
+// ---------------------------------------------------------------------------
+// Equivalence: quantum 1 == single-threaded fiber engine, for S in {1,2,4}
+// ---------------------------------------------------------------------------
+
+fn equivalence_matrix(name: &str, img: &Image, base: &SimConfig) {
+    let fiber = run_end_state(base, img);
+    assert!(
+        matches!(fiber.exit, ExitReason::Exited(_)),
+        "{}: lockstep reference must exit cleanly, got {:?}",
+        name,
+        fiber.exit
+    );
+    for shards in [1usize, 2, 4] {
+        let cfg = sharded_cfg(base, shards, 1);
+        let sharded = run_end_state(&cfg, img);
+        assert_bit_identical(&fiber, &sharded, &format!("{} S={} Q=1", name, shards));
+    }
+}
+
+#[test]
+fn coremark_q1_bit_identical_to_lockstep() {
+    let img = coremark::build(2);
+    let mut base = SimConfig::default();
+    base.pipeline = "inorder".into();
+    base.memory = "cache".into();
+    equivalence_matrix("coremark", &img, &base);
+}
+
+#[test]
+fn mesi_spinlock_2harts_q1_bit_identical_to_lockstep() {
+    let img = spinlock::build(2, 250);
+    let mut base = SimConfig::default();
+    base.harts = 2;
+    base.pipeline = "inorder".into();
+    base.memory = "mesi".into();
+    equivalence_matrix("spinlock-2h", &img, &base);
+}
+
+#[test]
+fn mesi_spinlock_4harts_q1_bit_identical_to_lockstep() {
+    let img = spinlock::build(4, 120);
+    let mut base = SimConfig::default();
+    base.harts = 4;
+    base.pipeline = "inorder".into();
+    base.memory = "mesi".into();
+    equivalence_matrix("spinlock-4h", &img, &base);
+}
+
+#[test]
+fn mesi_multicore_4harts_q1_bit_identical_to_lockstep() {
+    let img = multicore::build(4, 500);
+    let mut base = SimConfig::default();
+    base.harts = 4;
+    base.pipeline = "inorder".into();
+    base.memory = "mesi".into();
+    equivalence_matrix("multicore-4h", &img, &base);
+}
+
+// ---------------------------------------------------------------------------
+// WFI/IPI ping-pong: the cross-shard wake path
+// ---------------------------------------------------------------------------
+
+/// Hart 0 pings hart 1 through the CLINT software interrupt and sleeps in
+/// WFI; hart 1's trap handler replies with an IPI back. `rounds` round
+/// trips, no spin loops anywhere — every hart's retired-instruction count
+/// is a pure function of `rounds`, independent of wake latency, so the
+/// architectural end state is invariant across shard counts even though
+/// boundary-delivered wakes shift the cycle counts.
+fn pingpong_img(rounds: i64) -> Image {
+    let mut a = Assembler::new(DRAM_BASE);
+    let handler0 = a.new_label();
+    let handler1 = a.new_label();
+    let h1setup = a.new_label();
+
+    a.csrr(T0, CSR_MHARTID);
+    // S8 = &msip[self], S9 = &msip[peer] (peer = hart id ^ 1).
+    a.li(S8, CLINT_BASE as i64);
+    a.slli(T1, T0, 2);
+    a.add(S8, S8, T1);
+    a.xori(T2, T0, 1);
+    a.li(S9, CLINT_BASE as i64);
+    a.slli(T3, T2, 2);
+    a.add(S9, S9, T3);
+    a.li(S3, 0); // completed rounds
+    a.li(S4, rounds);
+    a.bnez(T0, h1setup);
+
+    // ---- hart 0: initiator ----
+    a.la(T4, handler0);
+    a.csrw(CSR_MTVEC, T4);
+    a.li(T4, IRQ_MSIP as i64);
+    a.csrw(CSR_MIE, T4);
+    a.li(T4, MSTATUS_MIE as i64);
+    a.csrrs(ZERO, CSR_MSTATUS, T4);
+    a.li(T5, 1);
+    a.sw(T5, S9, 0); // first ping
+    let park0 = a.here();
+    a.wfi();
+    a.blt(S3, S4, park0);
+    a.mv(A0, S3);
+    a.li(A7, 93);
+    a.ecall();
+
+    // ---- hart 1: responder ----
+    a.bind(h1setup);
+    a.la(T4, handler1);
+    a.csrw(CSR_MTVEC, T4);
+    a.li(T4, IRQ_MSIP as i64);
+    a.csrw(CSR_MIE, T4);
+    a.li(T4, MSTATUS_MIE as i64);
+    a.csrrs(ZERO, CSR_MSTATUS, T4);
+    let park1 = a.here();
+    a.wfi();
+    a.j(park1);
+
+    // ---- handlers (no live temporaries in the park loops) ----
+    a.align(4);
+    a.bind(handler0);
+    a.sw(ZERO, S8, 0); // consume the reply
+    a.addi(S3, S3, 1);
+    let h0done = a.new_label();
+    a.bge(S3, S4, h0done);
+    a.li(T5, 1);
+    a.sw(T5, S9, 0); // next ping
+    a.bind(h0done);
+    a.mret();
+    a.align(4);
+    a.bind(handler1);
+    a.sw(ZERO, S8, 0); // consume the ping
+    a.li(T5, 1);
+    a.sw(T5, S9, 0); // reply
+    a.mret();
+
+    a.finish()
+}
+
+// ---------------------------------------------------------------------------
+// Determinism suites
+// ---------------------------------------------------------------------------
+
+/// Fixed (image, S, Q): three threaded runs must agree on *everything*.
+#[test]
+fn threaded_runs_reproduce_bit_for_bit() {
+    let cases: Vec<(&str, Image, SimConfig)> = {
+        let mut multicore_cfg = SimConfig::default();
+        multicore_cfg.harts = 4;
+        multicore_cfg.pipeline = "inorder".into();
+        multicore_cfg.memory = "cache".into();
+        let mut mesi_cfg = SimConfig::default();
+        mesi_cfg.harts = 4;
+        mesi_cfg.pipeline = "inorder".into();
+        mesi_cfg.memory = "mesi".into();
+        let mut pp_cfg = SimConfig::default();
+        pp_cfg.harts = 2;
+        pp_cfg.pipeline = "simple".into();
+        pp_cfg.memory = "cache".into();
+        // Only the join-free multicore variant is eligible here: the
+        // joining variant's hart-0 spin loop reads a cross-shard counter
+        // mid-quantum, whose arrival time depends on host-thread timing —
+        // exactly the quantum-granularity data race the determinism
+        // contract excludes (DESIGN.md §10). The WFI/IPI ping-pong covers
+        // the mailboxed cross-shard wake path.
+        vec![
+            ("multicore", multicore::build_nojoin(800), multicore_cfg),
+            ("multicore-mesi", multicore::build_nojoin(400), mesi_cfg),
+            ("pingpong", pingpong_img(40), pp_cfg),
+        ]
+    };
+    for (name, img, base) in &cases {
+        for (shards, quantum) in [(2usize, 64u64), (2, 1024), (4, 256)] {
+            if *name == "pingpong" && shards > 2 {
+                continue;
+            }
+            let cfg = sharded_cfg(base, shards, quantum);
+            let first = run_end_state(&cfg, img);
+            assert!(
+                matches!(first.exit, ExitReason::Exited(_)),
+                "{} S={} Q={}: must exit cleanly, got {:?}",
+                name,
+                shards,
+                quantum,
+                first.exit
+            );
+            for round in 1..3 {
+                let again = run_end_state(&cfg, img);
+                assert_bit_identical(
+                    &first,
+                    &again,
+                    &format!("{} S={} Q={} rerun {}", name, shards, quantum, round),
+                );
+            }
+        }
+    }
+}
+
+/// Fixed quantum, varying shard count: architectural results are
+/// invariant for mailbox-communicating programs. (Cycle counts move with
+/// the partitioning at quantum > 1 — only the serialized quantum-1
+/// configuration pins them, which the equivalence suite covers.)
+#[test]
+fn pingpong_arch_state_invariant_across_shard_counts() {
+    const ROUNDS: i64 = 25;
+    let img = pingpong_img(ROUNDS);
+    let mut base = SimConfig::default();
+    base.harts = 2;
+    base.pipeline = "simple".into();
+    base.memory = "cache".into();
+    for quantum in [64u64, 512] {
+        let s1 = run_end_state(&sharded_cfg(&base, 1, quantum), &img);
+        assert_eq!(
+            s1.exit,
+            ExitReason::Exited(ROUNDS as u64),
+            "Q={}: all rounds must complete",
+            quantum
+        );
+        let s2 = run_end_state(&sharded_cfg(&base, 2, quantum), &img);
+        assert_eq!(s1.exit, s2.exit, "Q={}: exit invariant across shard counts", quantum);
+        for (h, (a, b)) in s1.harts.iter().zip(s2.harts.iter()).enumerate() {
+            assert_eq!(a.regs, b.regs, "Q={}: hart {} registers", quantum, h);
+            assert_eq!(a.pc, b.pc, "Q={}: hart {} pc", quantum, h);
+            assert_eq!(a.prv, b.prv, "Q={}: hart {} privilege", quantum, h);
+            assert_eq!(
+                a.instret, b.instret,
+                "Q={}: hart {} instret (spin-free program retires a pure function of rounds)",
+                quantum, h
+            );
+        }
+    }
+}
+
+/// The ping-pong also runs under the serialized configuration and the
+/// plain lockstep engine — the wake path must exist there too (pending
+/// IPIs wake WFI sleepers without a CLINT timer), and quantum 1 must stay
+/// bit-identical to lockstep on an interrupt-driven program.
+#[test]
+fn pingpong_q1_matches_lockstep() {
+    let img = pingpong_img(30);
+    let mut base = SimConfig::default();
+    base.harts = 2;
+    base.pipeline = "simple".into();
+    base.memory = "cache".into();
+    let fiber = run_end_state(&base, &img);
+    assert_eq!(fiber.exit, ExitReason::Exited(30));
+    for shards in [1usize, 2] {
+        let sharded = run_end_state(&sharded_cfg(&base, shards, 1), &img);
+        assert_bit_identical(&fiber, &sharded, &format!("pingpong S={} Q=1", shards));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cross-shard stale-generation protection (PR 4 ChainLink tests, sharded)
+// ---------------------------------------------------------------------------
+
+/// Hart 1 reconfigures the L0 line size via SIMCTRL — flushing *every*
+/// core's code cache — while hart 0 (another shard) sits mid-block with a
+/// hot chained loop. A stale cross-shard chain hop or dangling block id
+/// would corrupt hart 0's sum or crash; the serialized driver must apply
+/// the broadcast immediately, the threaded driver at the quantum boundary.
+fn line_reconfig_img() -> Image {
+    let mut a = Assembler::new(DRAM_BASE);
+    let data = a.new_label();
+    let h1 = a.new_label();
+    let done = a.new_label();
+    a.csrr(T0, CSR_MHARTID);
+    a.la(S0, data);
+    a.bnez(T0, h1);
+    // hart 0: hot, fully chained load loop (every step a sync point).
+    a.li(S1, 400);
+    a.li(S2, 0);
+    let loop0 = a.here();
+    for _ in 0..16 {
+        a.lw(T1, S0, 0);
+        a.add(S2, S2, T1);
+    }
+    a.addi(S1, S1, -1);
+    a.bnez(S1, loop0);
+    a.j(done);
+    // hart 1: warm up, reconfigure the line size, keep running, park.
+    a.bind(h1);
+    a.li(S1, 60);
+    let loop1 = a.here();
+    a.lw(T1, S0, 8);
+    a.addi(S1, S1, -1);
+    a.bnez(S1, loop1);
+    a.li(T2, (128 << 8) as i64);
+    a.csrw(r2vm::isa::csr::CSR_SIMCTRL, T2);
+    a.li(S1, 60);
+    let loop2 = a.here();
+    a.lw(T1, S0, 8);
+    a.addi(S1, S1, -1);
+    a.bnez(S1, loop2);
+    let park = a.here();
+    a.j(park);
+    a.bind(done);
+    // data word holds 3 -> sum = 400 * 16 * 3.
+    a.mv(A0, S2);
+    a.li(A7, 93);
+    a.ecall();
+    a.align(8);
+    a.bind(data);
+    a.d32(3);
+    a.d32(0);
+    a.d64(0);
+    a.finish()
+}
+
+#[test]
+fn cross_shard_simctrl_line_flush_kills_stale_chains() {
+    let img = line_reconfig_img();
+    let want = ExitReason::Exited(400 * 16 * 3);
+    let mut base = SimConfig::default();
+    base.harts = 2;
+    base.pipeline = "simple".into();
+    base.memory = "atomic".into();
+    // Lockstep reference.
+    let fiber = run_end_state(&base, &img);
+    assert_eq!(fiber.exit, want);
+    // Serialized sharding: the broadcast applies immediately and the run
+    // stays bit-identical to lockstep.
+    let serialized = run_end_state(&sharded_cfg(&base, 2, 1), &img);
+    assert_bit_identical(&fiber, &serialized, "line-reconfig S=2 Q=1");
+    // Threaded sharding: the broadcast lands at a quantum boundary; the
+    // sum must still be exact (no stale chain executed) for every layout.
+    for (shards, quantum) in [(1usize, 64u64), (2, 64), (2, 1024)] {
+        let threaded = run_end_state(&sharded_cfg(&base, shards, quantum), &img);
+        assert_eq!(
+            threaded.exit, want,
+            "S={} Q={}: stale cross-shard chain state survived the SIMCTRL flush",
+            shards, quantum
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator integration: SIMCTRL engine code 4 + hand-offs
+// ---------------------------------------------------------------------------
+
+/// A guest can request the sharded engine via SIMCTRL engine code 4 and
+/// return to lockstep, with guest state carried across both hand-offs.
+#[test]
+fn guest_simctrl_hand_off_into_and_out_of_sharded() {
+    use r2vm::coordinator::{run_image, simctrl_encoding_full};
+    use r2vm::isa::csr::CSR_SIMCTRL;
+    let mut a = Assembler::new(DRAM_BASE);
+    a.li(A1, 0);
+    a.li(A0, 300);
+    let top1 = a.here();
+    a.add(A1, A1, A0);
+    a.addi(A0, A0, -1);
+    a.bnez(A0, top1);
+    // Request the sharded engine (code 4), keeping simple+atomic models.
+    a.li(T0, simctrl_encoding_full(EngineMode::Sharded, "simple", "atomic", 6) as i64);
+    a.csrw(CSR_SIMCTRL, T0);
+    a.li(A0, 300);
+    let top2 = a.here();
+    a.add(A1, A1, A0);
+    a.addi(A0, A0, -1);
+    a.bnez(A0, top2);
+    // And back to lockstep.
+    a.li(T0, simctrl_encoding_full(EngineMode::Lockstep, "simple", "atomic", 6) as i64);
+    a.csrw(CSR_SIMCTRL, T0);
+    a.li(A0, 300);
+    let top3 = a.here();
+    a.add(A1, A1, A0);
+    a.addi(A0, A0, -1);
+    a.bnez(A0, top3);
+    a.mv(A0, A1);
+    a.li(A7, 93);
+    a.ecall();
+    let img = a.finish();
+
+    let mut cfg = SimConfig::default();
+    cfg.quantum = 64; // the guest-requested sharded stage runs threaded
+    let report = run_image(&cfg, &img);
+    assert_eq!(report.exit, ExitReason::Exited(3 * (300 * 301 / 2)));
+    assert_eq!(
+        report.stages,
+        vec![
+            "lockstep/simple+atomic".to_string(),
+            "sharded/simple+atomic".to_string(),
+            "lockstep/simple+atomic".to_string(),
+        ],
+        "one hand-off into the sharded engine and one back"
+    );
+}
+
+/// `--switch-at` can target the sharded engine, and a sharded stage can
+/// be suspended into a snapshot mid-run (StepLimit path) without losing
+/// state.
+#[test]
+fn switch_at_into_sharded_and_budget_suspend() {
+    use r2vm::coordinator::run_image;
+    let img = multicore::build(2, 600);
+    let mut cfg = SimConfig::default();
+    cfg.harts = 2;
+    cfg.pipeline = "inorder".into();
+    cfg.memory = "cache".into();
+    cfg.shards = 2;
+    cfg.quantum = 128;
+    cfg.set("switch-at", "1000").unwrap();
+    cfg.set("switch-to", "sharded:inorder:cache").unwrap();
+    let report = run_image(&cfg, &img);
+    assert_eq!(report.exit, ExitReason::Exited(multicore::expected_sum(2, 600)));
+    assert_eq!(report.stages.len(), 2, "{:?}", report.stages);
+    assert_eq!(report.stages[1], "sharded/inorder+cache");
+}
