@@ -34,6 +34,8 @@ pub struct BenchOptions {
     pub workload: Option<String>,
     /// Where the machine-readable report is written.
     pub json_path: String,
+    /// Baseline JSON to diff against (`--compare`): per-row MIPS deltas.
+    pub compare_path: Option<String>,
 }
 
 impl Default for BenchOptions {
@@ -43,6 +45,7 @@ impl Default for BenchOptions {
             quick: false,
             workload: None,
             json_path: "BENCH_engines.json".into(),
+            compare_path: None,
         }
     }
 }
@@ -97,6 +100,9 @@ pub struct Cell {
     /// Sharded-engine cells: (shards, quantum); `None` for every other
     /// engine (their JSON rows keep the pre-sharding schema).
     pub sharding: Option<(usize, u64)>,
+    /// `Some("native")` on native-DBT-backend rows; `None` on the default
+    /// micro-op rows, which keep their exact pre-native schema.
+    pub backend: Option<&'static str>,
     pub measurement: Measurement,
     /// Guest instructions / simulated cycles of the best timed run (the
     /// run `measurement.best` measures).
@@ -116,13 +122,18 @@ fn cell_label(
     memory: &str,
     lookup_dispatch: bool,
     sharding: Option<(usize, u64)>,
+    backend: Option<&str>,
 ) -> String {
     let ablation = if lookup_dispatch { "/nochain" } else { "" };
+    let native = match backend {
+        Some(b) => format!("/{}", b),
+        None => String::new(),
+    };
     let shard = match sharding {
         Some((s, q)) => format!("[s{},q{}]", s, q),
         None => String::new(),
     };
-    format!("{} {}{}/{}+{}{}", workload, mode, shard, pipeline, memory, ablation)
+    format!("{} {}{}/{}+{}{}{}", workload, mode, shard, pipeline, memory, ablation, native)
 }
 
 impl Cell {
@@ -134,6 +145,26 @@ impl Cell {
             self.memory,
             self.dispatch == "lookup",
             self.sharding,
+            self.backend,
+        )
+    }
+
+    /// Identity key for baseline comparison — every dimension that makes a
+    /// row distinct, in a fixed order shared with [`line_key`].
+    pub fn key(&self) -> String {
+        let shard = match self.sharding {
+            Some((s, q)) => format!("[s{},q{}]", s, q),
+            None => String::new(),
+        };
+        format!(
+            "{} {}{}/{}+{}/{}/{}",
+            self.workload,
+            self.mode,
+            shard,
+            self.pipeline,
+            self.memory,
+            self.dispatch,
+            self.backend.unwrap_or("microop")
         )
     }
 
@@ -164,6 +195,7 @@ fn run_cell(
     memory: &'static str,
     lookup_dispatch: bool,
     sharding: Option<(usize, u64)>,
+    backend: Option<&'static str>,
     runs: u32,
     quick: bool,
 ) -> Option<Cell> {
@@ -174,6 +206,9 @@ fn run_cell(
     cfg.pipeline = pipeline.into();
     cfg.memory = memory.into();
     cfg.no_chaining = lookup_dispatch;
+    if backend == Some("native") {
+        cfg.backend = crate::dbt::Backend::Native;
+    }
     if let Some((shards, quantum)) = sharding {
         cfg.shards = shards;
         cfg.quantum = quantum;
@@ -195,6 +230,7 @@ fn run_cell(
         dispatch,
         harts,
         sharding,
+        backend,
         measurement: Measurement {
             name: String::new(),
             best: Duration::ZERO,
@@ -248,15 +284,32 @@ pub fn run_bench(opts: &BenchOptions) -> BenchReport {
             if workload == "coremark-lite" && mode == "lockstep" && memory == "atomic" {
                 variants.push(true);
             }
-            for lookup in variants {
-                match run_cell(
-                    workload, harts, mode, pipeline, memory, lookup, None, runs, opts.quick,
-                ) {
-                    Some(cell) => cells.push(cell),
-                    None => {
-                        let label = cell_label(workload, mode, pipeline, memory, lookup, None);
-                        eprintln!("warning: bench cell {} could not run (skipped)", label);
-                        skipped.push(label);
+            // Backend ablation: every coremark lockstep row gains a
+            // native-code twin where the host supports it, so the
+            // micro-op-vs-native win is readable per memory model. Gated
+            // on availability up front — an unavailable backend is not a
+            // failed cell.
+            let mut backends: Vec<Option<&'static str>> = vec![None];
+            if workload == "coremark-lite"
+                && mode == "lockstep"
+                && crate::dbt::native_available()
+            {
+                backends.push(Some("native"));
+            }
+            for backend in backends {
+                for &lookup in &variants {
+                    match run_cell(
+                        workload, harts, mode, pipeline, memory, lookup, None, backend, runs,
+                        opts.quick,
+                    ) {
+                        Some(cell) => cells.push(cell),
+                        None => {
+                            let label = cell_label(
+                                workload, mode, pipeline, memory, lookup, None, backend,
+                            );
+                            eprintln!("warning: bench cell {} could not run (skipped)", label);
+                            skipped.push(label);
+                        }
                     }
                 }
             }
@@ -268,13 +321,14 @@ pub fn run_bench(opts: &BenchOptions) -> BenchReport {
             for &(shards, quantum) in SHARD_MATRIX {
                 let sharding = Some((shards, quantum));
                 match run_cell(
-                    workload, harts, "sharded", "inorder", "cache", false, sharding, runs,
+                    workload, harts, "sharded", "inorder", "cache", false, sharding, None, runs,
                     opts.quick,
                 ) {
                     Some(cell) => cells.push(cell),
                     None => {
-                        let label =
-                            cell_label(workload, "sharded", "inorder", "cache", false, sharding);
+                        let label = cell_label(
+                            workload, "sharded", "inorder", "cache", false, sharding, None,
+                        );
                         eprintln!("warning: bench cell {} could not run (skipped)", label);
                         skipped.push(label);
                     }
@@ -291,6 +345,57 @@ pub fn run_bench(opts: &BenchOptions) -> BenchReport {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Baseline comparison (`bench --compare`)
+// ---------------------------------------------------------------------------
+//
+// The report's own JSON is line-oriented — one cell object per line — so a
+// committed baseline can be diffed without a JSON parser (none offline):
+// each cell line is keyed by its identity fields and its "mips" value.
+
+/// Raw text of `"key": <value>` in a single-line JSON object, exclusive of
+/// the trailing comma/brace.
+fn json_field_raw<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{}\": ", key);
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    let end = rest.find([',', '}']).unwrap_or(rest.len());
+    Some(rest[..end].trim())
+}
+
+fn json_str_field(line: &str, key: &str) -> Option<String> {
+    let raw = json_field_raw(line, key)?;
+    Some(raw.strip_prefix('"')?.strip_suffix('"')?.to_string())
+}
+
+fn json_num_field(line: &str, key: &str) -> Option<f64> {
+    json_field_raw(line, key)?.parse().ok()
+}
+
+/// Identity key of one baseline cell line — same format as [`Cell::key`].
+/// Baselines predating the backend dimension read as "microop".
+fn line_key(line: &str) -> Option<String> {
+    let workload = json_str_field(line, "workload")?;
+    let mode = json_str_field(line, "mode")?;
+    let pipeline = json_str_field(line, "pipeline")?;
+    let memory = json_str_field(line, "memory")?;
+    let dispatch = json_str_field(line, "dispatch")?;
+    let backend = json_str_field(line, "backend").unwrap_or_else(|| "microop".into());
+    let shard = match (json_num_field(line, "shards"), json_num_field(line, "quantum")) {
+        (Some(s), Some(q)) => format!("[s{},q{}]", s as u64, q as u64),
+        _ => String::new(),
+    };
+    Some(format!("{} {}{}/{}+{}/{}/{}", workload, mode, shard, pipeline, memory, dispatch, backend))
+}
+
+/// Extract `(identity key, mips)` per cell row of a baseline report JSON.
+pub fn parse_baseline_cells(json: &str) -> Vec<(String, f64)> {
+    json.lines()
+        .filter(|l| l.trim_start().starts_with("{\"workload\""))
+        .filter_map(|l| Some((line_key(l)?, json_num_field(l, "mips")?)))
+        .collect()
+}
+
 impl BenchReport {
     fn coremark_mips(&self, dispatch: &str) -> Option<f64> {
         self.cells
@@ -300,6 +405,22 @@ impl BenchReport {
                     && c.mode == "lockstep"
                     && c.memory == "atomic"
                     && c.dispatch == dispatch
+                    && c.backend.is_none()
+            })
+            .map(Cell::mips)
+    }
+
+    /// Native-backend chain-dispatch MIPS on the coremark atomic cell
+    /// (`None` where the native backend is unavailable).
+    pub fn coremark_native_mips(&self) -> Option<f64> {
+        self.cells
+            .iter()
+            .find(|c| {
+                c.workload == "coremark-lite"
+                    && c.mode == "lockstep"
+                    && c.memory == "atomic"
+                    && c.dispatch == "chain"
+                    && c.backend == Some("native")
             })
             .map(Cell::mips)
     }
@@ -373,6 +494,66 @@ impl BenchReport {
                 s1, s4, ratio
             ));
         }
+        if let (Some(micro), Some(native)) =
+            (self.coremark_chain_mips(), self.coremark_native_mips())
+        {
+            if micro > 0.0 {
+                s.push_str(&format!(
+                    "coremark backend: microop {:.2} MIPS vs native {:.2} MIPS ({:.2}x)\n",
+                    micro,
+                    native,
+                    native / micro
+                ));
+            }
+        }
+        s
+    }
+
+    /// Per-row MIPS deltas against a baseline report's JSON (the
+    /// `--compare` mode). Rows are matched by identity key; rows present
+    /// on only one side are listed as new/gone instead of failing, so a
+    /// baseline captured before a matrix extension stays usable.
+    pub fn compare(&self, baseline_json: &str) -> String {
+        let base = parse_baseline_cells(baseline_json);
+        let mut matched = vec![false; base.len()];
+        let mut s = String::from("=== vs baseline (per-row MIPS) ===\n");
+        for cell in &self.cells {
+            let key = cell.key();
+            match base.iter().position(|(k, _)| *k == key) {
+                Some(i) => {
+                    matched[i] = true;
+                    let (_, b) = base[i];
+                    let cur = cell.mips();
+                    let delta = if b > 0.0 {
+                        format!("{:+.1}%", (cur - b) / b * 100.0)
+                    } else {
+                        "n/a".into()
+                    };
+                    s.push_str(&format!(
+                        "{:<52} {:>9.2} -> {:>9.2} MIPS  ({})\n",
+                        cell.label(),
+                        b,
+                        cur,
+                        delta
+                    ));
+                }
+                None => {
+                    s.push_str(&format!(
+                        "{:<52} {:>22.2} MIPS  [new — not in baseline]\n",
+                        cell.label(),
+                        cell.mips()
+                    ));
+                }
+            }
+        }
+        for (i, (key, mips)) in base.iter().enumerate() {
+            if !matched[i] {
+                s.push_str(&format!(
+                    "{:<52} {:>9.2} MIPS  [gone — baseline row not measured]\n",
+                    key, mips
+                ));
+            }
+        }
         s
     }
 
@@ -401,6 +582,11 @@ impl BenchReport {
                 // Sharded-engine rows only: pre-sharding rows keep their
                 // exact schema.
                 s.push_str(&format!("\"shards\": {}, \"quantum\": {}, ", shards, quantum));
+            }
+            if let Some(backend) = cell.backend {
+                // Native-backend rows only: micro-op rows keep their exact
+                // pre-native schema.
+                s.push_str(&format!("\"backend\": \"{}\", ", backend));
             }
             s.push_str(&format!(
                 "\"mips\": {:.6}, \"best_secs\": {:.6}, \"mean_secs\": {:.6}, \"runs\": {}, ",
@@ -464,6 +650,18 @@ impl BenchReport {
         };
         s.push_str(&format!("  \"coremark_chain_speedup\": {},\n", fmt_opt(speedup)));
         s.push_str(&format!(
+            "  \"coremark_native_mips\": {},\n",
+            fmt_opt(self.coremark_native_mips())
+        ));
+        let native_speedup = match (self.coremark_chain_mips(), self.coremark_native_mips()) {
+            (Some(m), Some(n)) if m > 0.0 => Some(n / m),
+            _ => None,
+        };
+        s.push_str(&format!(
+            "  \"coremark_native_speedup\": {},\n",
+            fmt_opt(native_speedup)
+        ));
+        s.push_str(&format!(
             "  \"shard_s1_q1024_mips\": {},\n",
             fmt_opt(self.shard_mips(1, 1024))
         ));
@@ -488,9 +686,10 @@ mod tests {
     /// chain-following dispatch serves the vast majority of entries.
     #[test]
     fn single_cell_runs_and_chains() {
-        let cell =
-            run_cell("coremark-lite", 1, "lockstep", "simple", "atomic", false, None, 1, true)
-                .expect("cell must run");
+        let cell = run_cell(
+            "coremark-lite", 1, "lockstep", "simple", "atomic", false, None, None, 1, true,
+        )
+        .expect("cell must run");
         assert!(cell.exit.is_some(), "workload must exit cleanly");
         assert!(cell.insts > 0);
         assert!(cell.measurement.work > 0);
@@ -506,9 +705,10 @@ mod tests {
     /// The lookup-dispatch ablation cell records zero chain hits.
     #[test]
     fn lookup_cell_has_no_chain_hits() {
-        let cell =
-            run_cell("coremark-lite", 1, "lockstep", "simple", "atomic", true, None, 1, true)
-                .expect("cell must run");
+        let cell = run_cell(
+            "coremark-lite", 1, "lockstep", "simple", "atomic", true, None, None, 1, true,
+        )
+        .expect("cell must run");
         assert_eq!(cell.engine_stats.chain_hits, 0);
         assert!(cell.engine_stats.chain_misses > 0);
         assert_eq!(cell.dispatch, "lookup");
@@ -524,11 +724,19 @@ mod tests {
             ..Default::default()
         };
         let report = run_bench(&opts);
-        // 5 matrix cells + the lookup-dispatch ablation cell.
-        assert_eq!(report.cells.len(), MATRIX.len() + 1, "every cell must complete");
+        // 5 matrix cells + the lookup-dispatch ablation cell, plus (where
+        // the native backend is available) native twins of the 4 lockstep
+        // rows and of the nochain ablation.
+        let native_rows = if crate::dbt::native_available() { 5 } else { 0 };
+        assert_eq!(
+            report.cells.len(),
+            MATRIX.len() + 1 + native_rows,
+            "every cell must complete"
+        );
         assert!(report.cells.iter().all(|c| c.exit.is_some()));
         assert!(report.coremark_chain_mips().is_some());
         assert!(report.coremark_lookup_mips().is_some());
+        assert_eq!(report.coremark_native_mips().is_some(), native_rows > 0);
 
         assert!(report.skipped.is_empty(), "skipped: {:?}", report.skipped);
 
@@ -541,6 +749,18 @@ mod tests {
         assert!(json.contains("\"coremark_chain_mips\""));
         assert!(json.contains("\"coremark_lookup_mips\""));
         assert!(json.contains("\"coremark_chain_speedup\""));
+        assert!(json.contains("\"coremark_native_mips\""));
+        // The backend key appears on native rows only — micro-op rows keep
+        // their exact pre-native schema.
+        assert_eq!(json.contains("\"backend\": \"native\""), native_rows > 0);
+        assert!(!json.contains("\"backend\": \"microop\""));
+
+        // Self-comparison: every row matches its own baseline at ~0.0%
+        // (the sign jitters with the 6-decimal JSON rounding).
+        let cmp = report.compare(&json);
+        assert!(!cmp.contains("[new"), "{}", cmp);
+        assert!(!cmp.contains("[gone"), "{}", cmp);
+        assert!(cmp.contains("0.0%"), "{}", cmp);
         // Crude structural checks (no JSON parser offline): balanced
         // braces/brackets, no trailing comma before a closing bracket.
         assert_eq!(json.matches('{').count(), json.matches('}').count());
@@ -551,6 +771,24 @@ mod tests {
         let table = report.table();
         assert!(table.contains("coremark-lite"));
         assert!(table.contains("coremark dispatch: chain"));
+    }
+
+    /// The baseline line-parser keys every row dimension and defaults the
+    /// backend on pre-native baselines.
+    #[test]
+    fn baseline_parsing_and_row_keys() {
+        let baseline = "{\n  \"cells\": [\n    {\"workload\": \"w\", \"mode\": \"lockstep\", \
+                        \"pipeline\": \"simple\", \"memory\": \"atomic\", \"dispatch\": \"chain\", \
+                        \"harts\": 1, \"mips\": 25.500000, \"insts\": 5}\n  ]\n}\n";
+        let cells = parse_baseline_cells(baseline);
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].0, "w lockstep/simple+atomic/chain/microop");
+        assert!((cells[0].1 - 25.5).abs() < 1e-9);
+        let row = "    {\"workload\": \"w\", \"mode\": \"sharded\", \"pipeline\": \"inorder\", \
+                   \"memory\": \"cache\", \"dispatch\": \"chain\", \"harts\": 4, \"shards\": 2, \
+                   \"quantum\": 64, \"backend\": \"native\", \"mips\": 1.000000}";
+        assert_eq!(line_key(row).unwrap(), "w sharded[s2,q64]/inorder+cache/chain/native");
+        assert_eq!(parse_baseline_cells("not json at all"), Vec::<(String, f64)>::new());
     }
 
     /// The multicore workload produces the shard-scaling rows: the

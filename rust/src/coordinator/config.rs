@@ -89,6 +89,12 @@ pub struct SimConfig {
     pub naive_yield: bool,
     /// A3 ablation: disable block chaining.
     pub no_chaining: bool,
+    /// Which DBT backend executes translated blocks (`--backend`).
+    /// `Native` requires an x86-64 Linux host (validated eagerly).
+    pub backend: crate::dbt::Backend,
+    /// `--dump-native <pc>`: dump the emitted host code of the block
+    /// containing this guest PC to stderr (native backend diagnostics).
+    pub dump_native: Option<u64>,
     /// A2 ablation: bypass L0 (memory model on every access).
     pub no_l0: bool,
     /// Echo guest console output to stdout.
@@ -131,6 +137,8 @@ impl Default for SimConfig {
             trace_capacity: 0,
             naive_yield: false,
             no_chaining: false,
+            backend: crate::dbt::Backend::default(),
+            dump_native: None,
             no_l0: false,
             console: false,
             switch_at: None,
@@ -209,6 +217,19 @@ impl SimConfig {
                 }
                 self.line_shift = b.trailing_zeros();
             }
+            "backend" => {
+                self.backend = crate::dbt::Backend::parse(value).ok_or_else(|| {
+                    ParseError(format!("unknown backend '{}' (microop|native)", value))
+                })?;
+            }
+            "dump-native" => {
+                let pc = if let Some(hex) = value.strip_prefix("0x") {
+                    u64::from_str_radix(hex, 16).map_err(|_| bad("dump-native"))
+                } else {
+                    value.parse().map_err(|_| bad("dump-native"))
+                }?;
+                self.dump_native = Some(pc);
+            }
             "trace" => self.trace_capacity = value.parse().map_err(|_| bad("trace"))?,
             "switch-at" => {
                 self.switch_at = Some(value.parse().map_err(|_| bad("switch-at"))?)
@@ -261,6 +282,13 @@ impl SimConfig {
         }
         if self.ckpt_every.is_some() && self.ckpt_out.is_none() {
             return Err(ParseError("--ckpt-every requires --ckpt-out".into()));
+        }
+        if self.backend == crate::dbt::Backend::Native && !crate::dbt::native_available() {
+            return Err(ParseError(
+                "--backend native requires an x86-64 Linux host (and a passing \
+                 emitter self-check); use --backend microop"
+                    .into(),
+            ));
         }
         if self.sample.is_some() {
             // The measured windows come from the switch target; it must be
@@ -417,6 +445,23 @@ mod tests {
         c.validate().unwrap();
         c.set("ckpt-out", "/tmp/x.ckpt").unwrap();
         assert!(c.validate().is_err(), "--sample excludes checkpointing");
+    }
+
+    #[test]
+    fn backend_flags_parse_and_validate() {
+        let mut c = SimConfig::default();
+        assert_eq!(c.backend, crate::dbt::Backend::Microop);
+        c.set("backend", "microop").unwrap();
+        c.validate().unwrap();
+        assert!(c.set("backend", "jit").is_err());
+        c.set("dump-native", "0x80000000").unwrap();
+        assert_eq!(c.dump_native, Some(0x8000_0000));
+        c.set("dump-native", "4096").unwrap();
+        assert_eq!(c.dump_native, Some(4096));
+        assert!(c.set("dump-native", "zzz").is_err());
+        c.set("backend", "native").unwrap();
+        // Native must validate exactly when the host supports it.
+        assert_eq!(c.validate().is_ok(), crate::dbt::native_available());
     }
 
     #[test]

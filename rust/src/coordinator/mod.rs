@@ -324,6 +324,8 @@ pub fn build_engine(cfg: &SimConfig, image: &Image) -> Box<dyn ExecutionEngine> 
             let mut eng = FiberEngine::new(sys, &cfg.pipeline);
             eng.yield_per_instruction = cfg.naive_yield;
             eng.chaining = !cfg.no_chaining;
+            eng.backend = cfg.backend;
+            eng.dump_native = cfg.dump_native;
             let entry = load_flat(&eng.sys, image);
             eng.set_entry(entry);
             Box::new(eng)
@@ -335,6 +337,7 @@ pub fn build_engine(cfg: &SimConfig, image: &Image) -> Box<dyn ExecutionEngine> 
             let mut eng = ShardedEngine::new(cfg.harts, cfg.shards, cfg.quantum, &cfg.pipeline, || {
                 system_over(cfg, Arc::clone(&phys))
             });
+            eng.set_backend(cfg.backend, cfg.dump_native);
             eng.set_entry(image.entry);
             Box::new(eng)
         }
@@ -356,6 +359,8 @@ pub fn resume_engine(cfg: &SimConfig, snapshot: SystemSnapshot) -> Box<dyn Execu
             let mut eng = FiberEngine::new(sys, &cfg.pipeline);
             eng.yield_per_instruction = cfg.naive_yield;
             eng.chaining = !cfg.no_chaining;
+            eng.backend = cfg.backend;
+            eng.dump_native = cfg.dump_native;
             eng.resume(snapshot);
             Box::new(eng)
         }
@@ -365,6 +370,7 @@ pub fn resume_engine(cfg: &SimConfig, snapshot: SystemSnapshot) -> Box<dyn Execu
             let mut eng = ShardedEngine::new(cfg.harts, cfg.shards, cfg.quantum, &cfg.pipeline, || {
                 system_over(cfg, Arc::clone(&phys))
             });
+            eng.set_backend(cfg.backend, cfg.dump_native);
             eng.resume(snapshot);
             Box::new(eng)
         }

@@ -57,6 +57,11 @@ pub struct CodeCache {
     pub lookups: u64,
     pub misses: u64,
     pub flushes: u64,
+    /// Native x86-64 code for this cache's blocks (`--backend native`).
+    /// Lazily populated; invalidated by generation stamping, so `flush`
+    /// needs no extra bookkeeping here.
+    #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+    pub native: super::codegen::NativeCache,
 }
 
 /// Compose the lookup key. Sv39 virtual addresses are canonical (bits
@@ -76,6 +81,8 @@ impl CodeCache {
             lookups: 0,
             misses: 0,
             flushes: 0,
+            #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+            native: super::codegen::NativeCache::new(),
         }
     }
 
@@ -101,6 +108,17 @@ impl CodeCache {
     /// Replace an existing translation (cross-page stub mismatch).
     pub fn replace(&mut self, id: BlockId, block: Block) {
         self.blocks[id as usize] = block;
+        #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+        self.native.invalidate(id);
+    }
+
+    /// Compile block `id` to native code if needed (generation-checked).
+    /// `line_shift` is the current L0 D-cache line shift, baked into the
+    /// emitted probes.
+    #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+    pub fn ensure_native(&mut self, id: BlockId, line_shift: u32) {
+        let block = &self.blocks[id as usize];
+        self.native.ensure(self.generation, line_shift, id, block);
     }
 
     #[inline]

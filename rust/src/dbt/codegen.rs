@@ -1,0 +1,1197 @@
+//! Native x86-64 block codegen for the DBT.
+//!
+//! Lowers translated blocks to host machine code in a W^X [`ExecBuf`].
+//! The unit of native execution is a *segment*: an optional leading
+//! synchronising Load/Store followed by a run of non-synchronising
+//! lowerable steps (ALU, LUI/AUIPC, MUL via helper, FENCE). Segments never
+//! include the terminator; terminators of kind Branch / Jump /
+//! IndirectJump get separate native code. All scheduler, yield, chaining,
+//! interrupt and trap bookkeeping stays in Rust, which is what makes the
+//! backend bit-identical to the micro-op interpreter by construction: the
+//! emitted code only replicates the exact per-step arithmetic and the L0
+//! hit path (including its counter updates), and calls back into the
+//! `#[cold]` Rust continuations for everything else.
+//!
+//! Exit protocol (return value of a native call):
+//!   * [`RC_SEG_DONE`]  — segment retired completely;
+//!   * [`RC_TRAP`]      — the segment's leading memory op trapped
+//!     (cause/tval are in the [`NativeCtx`]); only the first step of a
+//!     segment can trap, so no step index is needed;
+//!   * [`RC_TERM`]      — terminator executed (taken / jump_target in ctx);
+//!   * `(id << 8) | RC_CHAINED` — terminator executed and a patched chain
+//!     `jmp` landed in block `id`'s identify thunk. Handled identically to
+//!     `RC_TERM` by the caller: the thunk exists so that a chained jump
+//!     *exits to Rust* instead of staying in host code, keeping the
+//!     deterministic scheduler in charge.
+//!
+//! Trampoline ABI: `extern "sysv64" fn(ctx: *mut NativeCtx, body: u64)`.
+//! A shared prologue at buffer offset 0 pushes rbx/rbp/r12/r13/r14, loads
+//! `rbx = ctx`, `rbp = ctx.regs`, and jumps to `body`. Five pushes leave
+//! rsp ≡ 0 (mod 16) in the body, so helper `call`s see a correctly
+//! aligned SysV stack. Every exit point inlines the matching epilogue.
+
+use super::block::{Block, TermKind};
+use super::exec_buf::ExecBuf;
+use super::x86::{self, AluKind, Asm, Reg, ShiftKind};
+use crate::isa::op::{AluOp, BrCond, MemWidth, MulOp, Op};
+use crate::mem::l0::L0_ENTRIES;
+
+// ---------------------------------------------------------------------------
+// Context handed to native code (rbx points here for the whole call).
+// ---------------------------------------------------------------------------
+
+/// Runtime context for a native call. Field order is ABI: the emitted code
+/// addresses fields by the `OFF_*` byte offsets below (verified by test).
+#[repr(C)]
+pub struct NativeCtx {
+    /// Guest integer register file (`hart.regs`); rbp caches this.
+    pub regs: *mut u64,
+    /// L0 D-cache packed tag array.
+    pub d_tags: *const u64,
+    /// L0 D-cache `vaddr ^ paddr` array.
+    pub d_xors: *const u64,
+    /// L0 D-cache `accesses` counter (bumped inline on hits only; the
+    /// slow-path helper re-runs the Rust lookup which does its own bump).
+    pub d_acc: *mut u64,
+    /// `host_base - DRAM_BASE`: add to a paddr to get the host address.
+    pub dram_bias: u64,
+    /// `System::active_reservations` (stores with live reservations take
+    /// the slow path so LR/SC bookkeeping stays in Rust).
+    pub resv: *const u32,
+    /// Out: indirect-jump target (Jalr terminators).
+    pub jump_target: u64,
+    /// Out: branch outcome (0 = not taken).
+    pub taken: u64,
+    /// `fiber::native::helper_read` as a raw fn address.
+    pub helper_read: usize,
+    /// `fiber::native::helper_write`.
+    pub helper_write: usize,
+    /// `fiber::native::helper_mul`.
+    pub helper_mul: usize,
+    /// Out: trap cause (valid when the call returns [`RC_TRAP`]).
+    pub trap_cause: u64,
+    /// Out: trap tval.
+    pub trap_tval: u64,
+    /// The `Hart`, for helper re-entry (opaque to emitted code).
+    pub hart: *mut u8,
+    /// The `System`, for helper re-entry (opaque to emitted code).
+    pub sys: *mut u8,
+}
+
+pub const OFF_REGS: i32 = 0x00;
+pub const OFF_DTAGS: i32 = 0x08;
+pub const OFF_DXORS: i32 = 0x10;
+pub const OFF_DACC: i32 = 0x18;
+pub const OFF_BIAS: i32 = 0x20;
+pub const OFF_RESV: i32 = 0x28;
+pub const OFF_JTARGET: i32 = 0x30;
+pub const OFF_TAKEN: i32 = 0x38;
+pub const OFF_HREAD: i32 = 0x40;
+pub const OFF_HWRITE: i32 = 0x48;
+pub const OFF_HMUL: i32 = 0x50;
+pub const OFF_TCAUSE: i32 = 0x58;
+pub const OFF_TTVAL: i32 = 0x60;
+
+/// Segment retired completely.
+pub const RC_SEG_DONE: u64 = 0;
+/// Terminator executed.
+pub const RC_TERM: u64 = 1;
+/// Leading memory op trapped.
+pub const RC_TRAP: u64 = 2;
+/// Low byte of a chained exit; bits 8.. carry the successor block id.
+pub const RC_CHAINED: u64 = 3;
+
+// ---------------------------------------------------------------------------
+// Helper-call argument packing (shared with fiber::native's decoders).
+// ---------------------------------------------------------------------------
+
+pub fn pack_mem(width: MemWidth, signed: bool) -> u32 {
+    width_code(width) | (signed as u32) << 2
+}
+
+pub fn unpack_mem(packed: u32) -> (MemWidth, bool) {
+    (width_of(packed & 3), packed & 4 != 0)
+}
+
+fn width_code(width: MemWidth) -> u32 {
+    match width {
+        MemWidth::B => 0,
+        MemWidth::H => 1,
+        MemWidth::W => 2,
+        MemWidth::D => 3,
+    }
+}
+
+fn width_of(code: u32) -> MemWidth {
+    match code {
+        0 => MemWidth::B,
+        1 => MemWidth::H,
+        2 => MemWidth::W,
+        _ => MemWidth::D,
+    }
+}
+
+pub fn pack_mul(op: MulOp, word: bool) -> u32 {
+    let c = match op {
+        MulOp::Mul => 0,
+        MulOp::Mulh => 1,
+        MulOp::Mulhsu => 2,
+        MulOp::Mulhu => 3,
+        MulOp::Div => 4,
+        MulOp::Divu => 5,
+        MulOp::Rem => 6,
+        MulOp::Remu => 7,
+    };
+    c | (word as u32) << 3
+}
+
+pub fn unpack_mul(packed: u32) -> (MulOp, bool) {
+    let op = match packed & 7 {
+        0 => MulOp::Mul,
+        1 => MulOp::Mulh,
+        2 => MulOp::Mulhsu,
+        3 => MulOp::Mulhu,
+        4 => MulOp::Div,
+        5 => MulOp::Divu,
+        6 => MulOp::Rem,
+        _ => MulOp::Remu,
+    };
+    (op, packed & 8 != 0)
+}
+
+// ---------------------------------------------------------------------------
+// Native block metadata
+// ---------------------------------------------------------------------------
+
+/// One native segment: steps `[first, end)` of the block.
+#[derive(Clone, Copy)]
+pub struct NativeSeg {
+    /// One past the last step index covered.
+    pub end: u16,
+    /// Retired instruction count (`end - first`).
+    pub count: u16,
+    /// Buffer offset of the segment entry.
+    pub entry: u32,
+    /// Sum of the covered steps' model cycles.
+    pub cycles: u64,
+}
+
+/// Compiled form of one translated block.
+pub struct NativeBlock {
+    pub segs: Vec<NativeSeg>,
+    /// Per step index: index into `segs` of the segment *starting* there,
+    /// or `u16::MAX`.
+    pub seg_start: Box<[u16]>,
+    /// Buffer offset of the terminator code, if the terminator lowers.
+    pub term_entry: Option<u32>,
+    /// Buffer offset of the identify thunk (chain patches land here).
+    thunk: u32,
+    /// rel32 field offset of the taken-edge chain slot.
+    slot_taken: Option<u32>,
+    /// rel32 field offset of the sequential-edge chain slot.
+    slot_seq: Option<u32>,
+}
+
+enum NativeState {
+    NotCompiled,
+    /// Does not fit even in an empty buffer, or contains nothing to lower.
+    Failed,
+    Ready(NativeBlock),
+}
+
+/// Default per-core code buffer capacity.
+const DEFAULT_CAPACITY: usize = 4 << 20;
+
+/// Per-core native code cache, owned by [`crate::dbt::CodeCache`].
+///
+/// Invalidation is generation-stamped and lazy: `ensure` compares the
+/// owning code cache's generation (and the current L0 line shift, which is
+/// baked into emitted probes) and discards everything on mismatch — this
+/// single rule covers `fence.i`, `sfence.vma`, SIMCTRL reconfiguration and
+/// engine switches, because all of those flush the translation cache and
+/// bump its generation. Buffer exhaustion resets only the native side
+/// (architecturally invisible: patched jumps merely mirror `ChainLink`s
+/// that Rust still consults).
+pub struct NativeCache {
+    buf: Option<ExecBuf>,
+    capacity: usize,
+    gen: u64,
+    line_shift: u32,
+    blocks: Vec<NativeState>,
+    /// Dump emitted code for the block containing this guest PC.
+    pub dump_pc: Option<u64>,
+    /// Stats (tests assert on these; also surfaced by `--dump-native`).
+    pub compiles: u64,
+    pub patches: u64,
+    pub resets: u64,
+    pub exhaustions: u64,
+}
+
+impl Default for NativeCache {
+    fn default() -> Self {
+        NativeCache::new()
+    }
+}
+
+impl NativeCache {
+    pub fn new() -> NativeCache {
+        NativeCache {
+            buf: None,
+            capacity: DEFAULT_CAPACITY,
+            gen: 0,
+            line_shift: 0,
+            blocks: Vec::new(),
+            dump_pc: None,
+            compiles: 0,
+            patches: 0,
+            resets: 0,
+            exhaustions: 0,
+        }
+    }
+
+    /// Shrink the code buffer (test hook for exhaustion coverage). Takes
+    /// effect immediately; everything compiled so far is discarded.
+    pub fn set_capacity(&mut self, bytes: usize) {
+        self.capacity = bytes;
+        self.buf = None;
+        self.blocks.clear();
+    }
+
+    /// Discard all native code and re-emit the shared prologue.
+    fn reset(&mut self) {
+        self.resets += 1;
+        for s in &mut self.blocks {
+            *s = NativeState::NotCompiled;
+        }
+        let buf = match &mut self.buf {
+            Some(b) => {
+                b.reset();
+                b
+            }
+            None => return,
+        };
+        let mut a = Asm::new();
+        emit_prologue(&mut a);
+        buf.append(&a.code).expect("prologue must fit");
+    }
+
+    /// Make sure block `id` has an up-to-date native compilation attempt.
+    /// `gen` is the owning `CodeCache::generation`; `line_shift` the
+    /// current L0 D-cache line shift.
+    pub fn ensure(&mut self, gen: u64, line_shift: u32, id: u32, block: &Block) {
+        if self.buf.is_none() {
+            self.buf = ExecBuf::new(self.capacity);
+            if self.buf.is_none() {
+                return; // mmap failed: native stays unavailable
+            }
+            self.gen = gen;
+            self.line_shift = line_shift;
+            self.reset();
+            self.resets = 0; // the initial prologue emit is not a reset
+        }
+        if self.gen != gen || self.line_shift != line_shift {
+            self.gen = gen;
+            self.line_shift = line_shift;
+            self.reset();
+        }
+        if self.blocks.len() <= id as usize {
+            self.blocks.resize_with(id as usize + 1, || NativeState::NotCompiled);
+        }
+        if matches!(self.blocks[id as usize], NativeState::NotCompiled) {
+            self.blocks[id as usize] = self.compile(id, block);
+        }
+    }
+
+    /// Forget block `id`'s native code (its translation was replaced in
+    /// place — cross-page stub invalidation). Stale chain patches keep
+    /// jumping to the *old* identify thunk, which still returns the same
+    /// id; the Rust chain protocol re-validates, so this is benign.
+    pub fn invalidate(&mut self, id: u32) {
+        if let Some(s) = self.blocks.get_mut(id as usize) {
+            *s = NativeState::NotCompiled;
+        }
+    }
+
+    /// The compiled block, if ready.
+    pub fn block(&self, id: u32) -> Option<&NativeBlock> {
+        match self.blocks.get(id as usize) {
+            Some(NativeState::Ready(nb)) => Some(nb),
+            _ => None,
+        }
+    }
+
+    /// The segment starting at step `si` of block `id`, if any.
+    pub fn seg_at(&self, id: u32, si: usize) -> Option<NativeSeg> {
+        let nb = self.block(id)?;
+        match nb.seg_start.get(si) {
+            Some(&s) if s != u16::MAX => Some(nb.segs[s as usize]),
+            _ => None,
+        }
+    }
+
+    /// The terminator entry of block `id`, if it lowered.
+    pub fn term_at(&self, id: u32) -> Option<u32> {
+        self.block(id)?.term_entry
+    }
+
+    /// Mirror a `ChainLink` install as a patched direct `jmp`: the edge
+    /// slot of `from` is redirected to `to`'s identify thunk. Skipped
+    /// silently when either side has no native code — the Rust protocol
+    /// alone then drives the edge.
+    pub fn patch_link(&mut self, from: u32, taken: bool, to: u32) {
+        let slot = match self.block(from) {
+            Some(nb) => {
+                if taken {
+                    nb.slot_taken
+                } else {
+                    nb.slot_seq
+                }
+            }
+            None => None,
+        };
+        let (slot, thunk) = match (slot, self.block(to).map(|nb| nb.thunk)) {
+            (Some(s), Some(t)) => (s, t),
+            _ => return,
+        };
+        let buf = self.buf.as_mut().expect("blocks exist, buffer exists");
+        let rel = (thunk as i64 - (slot as i64 + 4)) as i32;
+        buf.make_writable();
+        buf.write4(slot, rel.to_le_bytes());
+        self.patches += 1;
+    }
+
+    /// Execute native code at buffer offset `entry`.
+    ///
+    /// # Safety
+    /// `ctx` must be fully populated with live pointers (regs, L0 arrays,
+    /// helpers, hart, sys) and `entry` must be an offset handed out by
+    /// `ensure` in the current generation.
+    pub unsafe fn run(&mut self, entry: u32, ctx: *mut NativeCtx) -> u64 {
+        let buf = self.buf.as_mut().expect("run without buffer");
+        buf.make_exec();
+        let f: extern "sysv64" fn(*mut NativeCtx, u64) -> u64 =
+            std::mem::transmute(buf.addr(0) as *const u8);
+        f(ctx, buf.addr(entry))
+    }
+
+    fn compile(&mut self, id: u32, block: &Block) -> NativeState {
+        let plan = plan_block(block);
+        if plan.segs.is_empty() && plan.term_kind.is_none() {
+            return NativeState::Failed;
+        }
+        let mut a = Asm::new();
+        let code = emit_block(&mut a, id, block, &plan, self.line_shift);
+
+        let buf = self.buf.as_mut().expect("ensure allocated the buffer");
+        buf.make_writable();
+        let base = match buf.append(&a.code) {
+            Some(b) => b,
+            None => {
+                // Exhausted: drop all native code (Rust chaining state is
+                // untouched) and retry once in the empty buffer.
+                self.exhaustions += 1;
+                self.reset();
+                let buf = self.buf.as_mut().unwrap();
+                match buf.append(&a.code) {
+                    Some(b) => b,
+                    None => return NativeState::Failed,
+                }
+            }
+        };
+        self.compiles += 1;
+
+        let nb = NativeBlock {
+            segs: code
+                .segs
+                .iter()
+                .map(|s| NativeSeg { entry: base + s.entry, ..*s })
+                .collect(),
+            seg_start: plan.seg_start.clone().into_boxed_slice(),
+            term_entry: code.term_entry.map(|t| base + t),
+            thunk: base + code.thunk,
+            slot_taken: code.slot_taken.map(|s| base + s),
+            slot_seq: code.slot_seq.map(|s| base + s),
+        };
+        if let Some(pc) = self.dump_pc {
+            if pc >= block.start && pc < block.end {
+                dump_block(id, block, &nb, base, &a.code);
+            }
+        }
+        NativeState::Ready(nb)
+    }
+}
+
+fn dump_block(id: u32, block: &Block, nb: &NativeBlock, base: u32, code: &[u8]) {
+    eprintln!(
+        "--dump-native: block {} pc {:#x}..{:#x}, {} bytes at buffer offset {:#x}",
+        id,
+        block.start,
+        block.end,
+        code.len(),
+        base
+    );
+    for (i, s) in nb.segs.iter().enumerate() {
+        eprintln!(
+            "  seg {}: steps ..{} ({} insts, {} cycles) entry {:#x}",
+            i, s.end, s.count, s.cycles, s.entry
+        );
+    }
+    if let Some(t) = nb.term_entry {
+        eprintln!("  term entry {:#x} (kind {:?})", t, block.term.kind);
+    }
+    eprintln!("  thunk {:#x} slots taken={:?} seq={:?}", nb.thunk, nb.slot_taken, nb.slot_seq);
+    let hex: Vec<String> = code.iter().map(|b| format!("{:02x}", b)).collect();
+    for chunk in hex.chunks(16) {
+        eprintln!("    {}", chunk.join(" "));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Block planning: segment formation + register allocation
+// ---------------------------------------------------------------------------
+
+struct Plan {
+    /// (first, end) step ranges.
+    segs: Vec<(usize, usize)>,
+    seg_start: Vec<u16>,
+    /// Lowerable terminator kind (Branch/Jump/IndirectJump only).
+    term_kind: Option<TermKind>,
+    /// Guest registers allocated to r12/r13/r14 (0 = slot unused).
+    alloc: [u8; 3],
+}
+
+/// Non-synchronising ops the segment body can lower.
+fn plain_lowerable(op: &Op) -> bool {
+    matches!(
+        op,
+        Op::Alu { .. }
+            | Op::AluImm { .. }
+            | Op::Lui { .. }
+            | Op::Auipc { .. }
+            | Op::Mul { .. }
+            | Op::Fence
+    )
+}
+
+fn plan_block(block: &Block) -> Plan {
+    let steps = &block.steps;
+    let mut segs = Vec::new();
+    let mut i = 0;
+    while i < steps.len() {
+        let op = &steps[i].op;
+        let leads = matches!(op, Op::Load { .. } | Op::Store { .. })
+            || (plain_lowerable(op) && !steps[i].sync);
+        if !leads {
+            i += 1;
+            continue;
+        }
+        let first = i;
+        let has_mem = matches!(op, Op::Load { .. } | Op::Store { .. });
+        i += 1;
+        while i < steps.len() && plain_lowerable(&steps[i].op) && !steps[i].sync {
+            i += 1;
+        }
+        // A lone ALU step is cheaper through the Rust fast-path arm than
+        // through a native call; memory ops always pay off (inline L0).
+        if has_mem || i - first >= 2 {
+            segs.push((first, i));
+        }
+    }
+
+    let mut seg_start = vec![u16::MAX; steps.len()];
+    for (s, &(first, _)) in segs.iter().enumerate() {
+        seg_start[first] = s as u16;
+    }
+
+    let term_kind = match (&block.term.kind, &block.term.op) {
+        (TermKind::Branch, Op::Branch { .. }) => Some(block.term.kind),
+        (TermKind::Jump { .. }, Op::Jal { .. }) => Some(block.term.kind),
+        (TermKind::IndirectJump, Op::Jalr { .. }) => Some(block.term.kind),
+        _ => None,
+    };
+
+    // Register allocation: the three most-referenced guest registers
+    // across the lowered segments (x0 excluded) live in r12/r13/r14 for
+    // each segment's lifetime.
+    let mut uses = [0u32; 32];
+    for &(first, end) in &segs {
+        for step in &steps[first..end] {
+            let (rs1, rs2) = step.op.srcs();
+            for r in [rs1, rs2].into_iter().flatten() {
+                uses[r as usize] += 1;
+            }
+            if let Some(rd) = step.op.rd() {
+                uses[rd as usize] += 1;
+            }
+        }
+    }
+    uses[0] = 0;
+    let mut alloc = [0u8; 3];
+    for slot in &mut alloc {
+        let (best, &n) = uses.iter().enumerate().max_by_key(|&(_, &n)| n).unwrap();
+        if n == 0 {
+            break;
+        }
+        *slot = best as u8;
+        uses[best] = 0;
+    }
+
+    Plan { segs, seg_start, term_kind, alloc }
+}
+
+// ---------------------------------------------------------------------------
+// Emission
+// ---------------------------------------------------------------------------
+
+/// Host registers holding allocated guest registers.
+const ALLOC_HOST: [Reg; 3] = [x86::R12, x86::R13, x86::R14];
+
+struct BlockCode {
+    segs: Vec<NativeSeg>,
+    term_entry: Option<u32>,
+    thunk: u32,
+    slot_taken: Option<u32>,
+    slot_seq: Option<u32>,
+}
+
+fn emit_prologue(a: &mut Asm) {
+    a.push_r(x86::RBX);
+    a.push_r(x86::RBP);
+    a.push_r(x86::R12);
+    a.push_r(x86::R13);
+    a.push_r(x86::R14);
+    a.mov_rr(x86::RBX, x86::RDI);
+    a.mov_rm(x86::RBP, x86::RDI, OFF_REGS);
+    a.jmp_r(x86::RSI);
+}
+
+fn emit_epilogue(a: &mut Asm) {
+    a.pop_r(x86::R14);
+    a.pop_r(x86::R13);
+    a.pop_r(x86::R12);
+    a.pop_r(x86::RBP);
+    a.pop_r(x86::RBX);
+    a.ret();
+}
+
+fn emit_exit(a: &mut Asm, code: u64) {
+    a.mov_imm(x86::RAX, code);
+    emit_epilogue(a);
+}
+
+fn host_for(alloc: &[u8; 3], g: u8) -> Option<Reg> {
+    alloc.iter().position(|&x| x == g && g != 0).map(|i| ALLOC_HOST[i])
+}
+
+/// Materialise guest register `g` into host register `dst`.
+fn load_guest(a: &mut Asm, alloc: &[u8; 3], g: u8, dst: Reg) {
+    if g == 0 {
+        a.alu32_rr(AluKind::Xor, dst, dst);
+    } else if let Some(h) = host_for(alloc, g) {
+        a.mov_rr(dst, h);
+    } else {
+        a.mov_rm(dst, x86::RBP, g as i32 * 8);
+    }
+}
+
+/// Store host register `src` into guest register `g` (x0 writes vanish).
+fn store_guest(a: &mut Asm, alloc: &[u8; 3], g: u8, src: Reg) {
+    if g == 0 {
+        return;
+    }
+    if let Some(h) = host_for(alloc, g) {
+        a.mov_rr(h, src);
+    } else {
+        a.mov_mr(x86::RBP, g as i32 * 8, src);
+    }
+}
+
+fn load_allocs(a: &mut Asm, alloc: &[u8; 3]) {
+    for (i, &g) in alloc.iter().enumerate() {
+        if g != 0 {
+            a.mov_rm(ALLOC_HOST[i], x86::RBP, g as i32 * 8);
+        }
+    }
+}
+
+fn spill_allocs(a: &mut Asm, alloc: &[u8; 3]) {
+    for (i, &g) in alloc.iter().enumerate() {
+        if g != 0 {
+            a.mov_mr(x86::RBP, g as i32 * 8, ALLOC_HOST[i]);
+        }
+    }
+}
+
+fn cc_of(cond: BrCond) -> u8 {
+    match cond {
+        BrCond::Eq => x86::CC_E,
+        BrCond::Ne => x86::CC_NE,
+        BrCond::Lt => x86::CC_L,
+        BrCond::Ge => x86::CC_GE,
+        BrCond::Ltu => x86::CC_B,
+        BrCond::Geu => x86::CC_AE,
+    }
+}
+
+/// rax = alu(op, word, rax, rcx) — the exact semantics of
+/// `sys::exec::alu_value`. Shared by block codegen and `self_check`.
+fn emit_alu_value(a: &mut Asm, op: AluOp, word: bool) {
+    use AluKind::*;
+    if !word {
+        match op {
+            AluOp::Add => a.alu_rr(Add, x86::RAX, x86::RCX),
+            AluOp::Sub => a.alu_rr(Sub, x86::RAX, x86::RCX),
+            AluOp::And => a.alu_rr(And, x86::RAX, x86::RCX),
+            AluOp::Or => a.alu_rr(Or, x86::RAX, x86::RCX),
+            AluOp::Xor => a.alu_rr(Xor, x86::RAX, x86::RCX),
+            // x86 masks the cl count to 6 bits in 64-bit mode — exactly
+            // `b as u32 & 63`.
+            AluOp::Sll => a.shift_cl(ShiftKind::Shl, x86::RAX),
+            AluOp::Srl => a.shift_cl(ShiftKind::Shr, x86::RAX),
+            AluOp::Sra => a.shift_cl(ShiftKind::Sar, x86::RAX),
+            AluOp::Slt | AluOp::Sltu => {
+                a.alu_rr(Cmp, x86::RAX, x86::RCX);
+                a.setcc(if op == AluOp::Slt { x86::CC_L } else { x86::CC_B }, x86::RAX);
+                a.movzx8_rr(x86::RAX, x86::RAX);
+            }
+        }
+    } else {
+        match op {
+            AluOp::Add => a.alu32_rr(Add, x86::RAX, x86::RCX),
+            AluOp::Sub => a.alu32_rr(Sub, x86::RAX, x86::RCX),
+            AluOp::And => a.alu32_rr(And, x86::RAX, x86::RCX),
+            AluOp::Or => a.alu32_rr(Or, x86::RAX, x86::RCX),
+            AluOp::Xor => a.alu32_rr(Xor, x86::RAX, x86::RCX),
+            // 32-bit shifts mask cl to 5 bits — exactly `b32 & 31`.
+            AluOp::Sll => a.shift32_cl(ShiftKind::Shl, x86::RAX),
+            AluOp::Srl => a.shift32_cl(ShiftKind::Shr, x86::RAX),
+            AluOp::Sra => a.shift32_cl(ShiftKind::Sar, x86::RAX),
+            AluOp::Slt | AluOp::Sltu => {
+                a.alu32_rr(Cmp, x86::RAX, x86::RCX);
+                a.setcc(if op == AluOp::Slt { x86::CC_L } else { x86::CC_B }, x86::RAX);
+                a.movzx8_rr(x86::RAX, x86::RAX);
+                return; // 0/1 needs no sign extension
+            }
+        }
+        a.movsxd_rr(x86::RAX, x86::RAX);
+    }
+}
+
+/// rax = alu(op, word, rax, imm as i64 as u64) — immediate form.
+fn emit_alu_imm(a: &mut Asm, op: AluOp, word: bool, imm: i32) {
+    use AluKind::*;
+    if !word {
+        match op {
+            AluOp::Add => a.alu_ri(Add, x86::RAX, imm),
+            AluOp::Sub => a.alu_ri(Sub, x86::RAX, imm),
+            AluOp::And => a.alu_ri(And, x86::RAX, imm),
+            AluOp::Or => a.alu_ri(Or, x86::RAX, imm),
+            AluOp::Xor => a.alu_ri(Xor, x86::RAX, imm),
+            AluOp::Sll => a.shift_ri(ShiftKind::Shl, x86::RAX, (imm as u32 & 63) as u8),
+            AluOp::Srl => a.shift_ri(ShiftKind::Shr, x86::RAX, (imm as u32 & 63) as u8),
+            AluOp::Sra => a.shift_ri(ShiftKind::Sar, x86::RAX, (imm as u32 & 63) as u8),
+            AluOp::Slt | AluOp::Sltu => {
+                a.cmp_ri(x86::RAX, imm);
+                a.setcc(if op == AluOp::Slt { x86::CC_L } else { x86::CC_B }, x86::RAX);
+                a.movzx8_rr(x86::RAX, x86::RAX);
+            }
+        }
+    } else {
+        match op {
+            AluOp::Add => a.alu32_ri(Add, x86::RAX, imm),
+            AluOp::Sub => a.alu32_ri(Sub, x86::RAX, imm),
+            AluOp::And => a.alu32_ri(And, x86::RAX, imm),
+            AluOp::Or => a.alu32_ri(Or, x86::RAX, imm),
+            AluOp::Xor => a.alu32_ri(Xor, x86::RAX, imm),
+            AluOp::Sll => a.shift32_ri(ShiftKind::Shl, x86::RAX, (imm as u32 & 31) as u8),
+            AluOp::Srl => a.shift32_ri(ShiftKind::Shr, x86::RAX, (imm as u32 & 31) as u8),
+            AluOp::Sra => a.shift32_ri(ShiftKind::Sar, x86::RAX, (imm as u32 & 31) as u8),
+            AluOp::Slt | AluOp::Sltu => {
+                a.alu32_ri(Cmp, x86::RAX, imm);
+                a.setcc(if op == AluOp::Slt { x86::CC_L } else { x86::CC_B }, x86::RAX);
+                a.movzx8_rr(x86::RAX, x86::RAX);
+                return;
+            }
+        }
+        a.movsxd_rr(x86::RAX, x86::RAX);
+    }
+}
+
+/// Emit one whole block's native code into `a`. Offsets in the returned
+/// `BlockCode` are relative to `a`'s start.
+fn emit_block(a: &mut Asm, id: u32, block: &Block, plan: &Plan, line_shift: u32) -> BlockCode {
+    let mut segs = Vec::with_capacity(plan.segs.len());
+    for &(first, end) in &plan.segs {
+        let entry = emit_segment(a, block, first, end, &plan.alloc, line_shift);
+        let cycles: u64 = block.steps[first..end].iter().map(|s| s.cycles as u64).sum();
+        segs.push(NativeSeg {
+            end: end as u16,
+            count: (end - first) as u16,
+            entry,
+            cycles,
+        });
+    }
+
+    let (term_entry, slot_taken, slot_seq) = match plan.term_kind {
+        Some(kind) => emit_term(a, block, kind),
+        None => (None, None, None),
+    };
+
+    // Identify thunk: patched chain jumps land here and exit to Rust with
+    // this block's id.
+    let thunk = a.len() as u32;
+    emit_exit(a, (id as u64) << 8 | RC_CHAINED);
+
+    BlockCode { segs, term_entry, thunk, slot_taken, slot_seq }
+}
+
+/// Emit steps `[first, end)` as one native segment; returns its entry.
+fn emit_segment(
+    a: &mut Asm,
+    block: &Block,
+    first: usize,
+    end: usize,
+    alloc: &[u8; 3],
+    line_shift: u32,
+) -> u32 {
+    let entry = a.len() as u32;
+    load_allocs(a, alloc);
+    let mut trap_jumps = Vec::new();
+    for si in first..end {
+        let step = &block.steps[si];
+        match step.op {
+            Op::Load { width, signed, rd, rs1, imm } => {
+                emit_load(a, alloc, line_shift, width, signed, rd, rs1, imm, &mut trap_jumps);
+            }
+            Op::Store { width, rs1, rs2, imm } => {
+                emit_store(a, alloc, line_shift, width, rs1, rs2, imm, &mut trap_jumps);
+            }
+            Op::Alu { op, word, rd, rs1, rs2 } => {
+                load_guest(a, alloc, rs1, x86::RAX);
+                load_guest(a, alloc, rs2, x86::RCX);
+                emit_alu_value(a, op, word);
+                store_guest(a, alloc, rd, x86::RAX);
+            }
+            Op::AluImm { op, word, rd, rs1, imm } => {
+                load_guest(a, alloc, rs1, x86::RAX);
+                emit_alu_imm(a, op, word, imm);
+                store_guest(a, alloc, rd, x86::RAX);
+            }
+            Op::Lui { rd, imm } => {
+                a.mov_imm(x86::RAX, imm as i64 as u64);
+                store_guest(a, alloc, rd, x86::RAX);
+            }
+            Op::Auipc { rd, imm } => {
+                let pc = block.start + step.pc_off as u64;
+                a.mov_imm(x86::RAX, pc.wrapping_add(imm as i64 as u64));
+                store_guest(a, alloc, rd, x86::RAX);
+            }
+            Op::Mul { op, word, rd, rs1, rs2 } => {
+                load_guest(a, alloc, rs1, x86::RDI);
+                load_guest(a, alloc, rs2, x86::RSI);
+                a.mov32_ri(x86::RDX, pack_mul(op, word));
+                a.mov_rm(x86::RAX, x86::RBX, OFF_HMUL);
+                a.call_r(x86::RAX);
+                store_guest(a, alloc, rd, x86::RAX);
+            }
+            Op::Fence => {}
+            _ => unreachable!("non-lowerable step in segment"),
+        }
+    }
+    spill_allocs(a, alloc);
+    emit_exit(a, RC_SEG_DONE);
+
+    if !trap_jumps.is_empty() {
+        let trap = a.len();
+        for j in trap_jumps {
+            a.patch_rel32(j, trap);
+        }
+        spill_allocs(a, alloc);
+        emit_exit(a, RC_TRAP);
+    }
+    entry
+}
+
+/// rax = guest rs1 + imm; then the L0 probe. Jumps to a local slow path
+/// (which calls the Rust helper) on misalignment or L0 miss.
+/// On the hit path, leaves rsi = host address and bumps the access
+/// counter. `write` selects the write-hit tag check + reservation guard.
+fn emit_probe(
+    a: &mut Asm,
+    alloc: &[u8; 3],
+    line_shift: u32,
+    width: MemWidth,
+    rs1: u8,
+    imm: i32,
+    write: bool,
+) -> Vec<usize> {
+    let mut slow = Vec::new();
+    load_guest(a, alloc, rs1, x86::RAX);
+    if imm != 0 {
+        a.alu_ri(AluKind::Add, x86::RAX, imm);
+    }
+    // Misaligned line-crossing accesses take the slow path, which re-runs
+    // the full Rust check and raises the trap (byte accesses never cross).
+    let line_mask = (1u64 << line_shift) - 1;
+    if width != MemWidth::B {
+        a.mov_rr(x86::RDX, x86::RAX);
+        a.alu_ri(AluKind::And, x86::RDX, line_mask as i32);
+        a.cmp_ri(x86::RDX, (line_mask + 1 - width.bytes()) as i32);
+        slow.push(a.jcc_rel32(x86::CC_A));
+    }
+    // r9 = vtag, rdx = index, rsi = packed tag word.
+    a.mov_rr(x86::R9, x86::RAX);
+    a.shift_ri(ShiftKind::Shr, x86::R9, line_shift as u8);
+    a.mov_rr(x86::RDX, x86::R9);
+    a.alu_ri(AluKind::And, x86::RDX, (L0_ENTRIES - 1) as i32);
+    a.mov_rm(x86::R8, x86::RBX, OFF_DTAGS);
+    a.mov_rm_sib8(x86::RSI, x86::R8, x86::RDX);
+    if write {
+        // Figure 4 write check: vtag << 1 == T.
+        a.mov_rr(x86::RCX, x86::R9);
+        a.shift_ri(ShiftKind::Shl, x86::RCX, 1);
+        a.alu_rr(AluKind::Cmp, x86::RSI, x86::RCX);
+        slow.push(a.jcc_rel32(x86::CC_NE));
+        // Live LR reservations force the slow path (reservation clearing
+        // needs the Rust store-commit protocol).
+        a.mov_rm(x86::R8, x86::RBX, OFF_RESV);
+        a.mov32_rm(x86::RCX, x86::R8, 0);
+        a.test_rr(x86::RCX, x86::RCX);
+        slow.push(a.jcc_rel32(x86::CC_NE));
+    } else {
+        // Figure 4 read check: T >> 1 == vtag.
+        a.mov_rr(x86::RCX, x86::RSI);
+        a.shift_ri(ShiftKind::Shr, x86::RCX, 1);
+        a.alu_rr(AluKind::Cmp, x86::RCX, x86::R9);
+        slow.push(a.jcc_rel32(x86::CC_NE));
+    }
+    // Hit: bump the access counter (the slow path must leave counters
+    // untouched — the helper's Rust lookup does the counting there).
+    a.mov_rm(x86::R8, x86::RBX, OFF_DACC);
+    a.add_m_i8(x86::R8, 0, 1);
+    // rsi = host address = (vaddr ^ xors[idx]) + dram_bias.
+    a.mov_rm(x86::R8, x86::RBX, OFF_DXORS);
+    a.mov_rm_sib8(x86::RSI, x86::R8, x86::RDX);
+    a.alu_rr(AluKind::Xor, x86::RSI, x86::RAX);
+    a.mov_rm(x86::R8, x86::RBX, OFF_BIAS);
+    a.alu_rr(AluKind::Add, x86::RSI, x86::R8);
+    slow
+}
+
+#[allow(clippy::too_many_arguments)]
+fn emit_load(
+    a: &mut Asm,
+    alloc: &[u8; 3],
+    line_shift: u32,
+    width: MemWidth,
+    signed: bool,
+    rd: u8,
+    rs1: u8,
+    imm: i32,
+    trap_jumps: &mut Vec<usize>,
+) {
+    let slow = emit_probe(a, alloc, line_shift, width, rs1, imm, false);
+    // rcx = sign/zero-extended loaded value (matches `sext_load`).
+    match (width, signed) {
+        (MemWidth::B, false) => a.movzx8_rm(x86::RCX, x86::RSI, 0),
+        (MemWidth::B, true) => a.movsx8_rm(x86::RCX, x86::RSI, 0),
+        (MemWidth::H, false) => a.movzx16_rm(x86::RCX, x86::RSI, 0),
+        (MemWidth::H, true) => a.movsx16_rm(x86::RCX, x86::RSI, 0),
+        (MemWidth::W, false) => a.mov32_rm(x86::RCX, x86::RSI, 0),
+        (MemWidth::W, true) => a.movsxd_rm(x86::RCX, x86::RSI, 0),
+        (MemWidth::D, _) => a.mov_rm(x86::RCX, x86::RSI, 0),
+    }
+    let write_rd = a.len();
+    store_guest(a, alloc, rd, x86::RCX);
+    let done = a.jmp_rel32();
+    // Slow path: helper_read(ctx, vaddr, packed) -> { rax = value, rdx = trap }.
+    let slow_at = a.len();
+    for j in slow {
+        a.patch_rel32(j, slow_at);
+    }
+    a.mov_rr(x86::RDI, x86::RBX);
+    a.mov_rr(x86::RSI, x86::RAX);
+    a.mov32_ri(x86::RDX, pack_mem(width, signed));
+    a.mov_rm(x86::RAX, x86::RBX, OFF_HREAD);
+    a.call_r(x86::RAX);
+    a.test_rr(x86::RDX, x86::RDX);
+    trap_jumps.push(a.jcc_rel32(x86::CC_NE));
+    a.mov_rr(x86::RCX, x86::RAX);
+    let back = a.jmp_rel32();
+    a.patch_rel32(back, write_rd);
+    let end = a.len();
+    a.patch_rel32(done, end);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn emit_store(
+    a: &mut Asm,
+    alloc: &[u8; 3],
+    line_shift: u32,
+    width: MemWidth,
+    rs1: u8,
+    rs2: u8,
+    imm: i32,
+    trap_jumps: &mut Vec<usize>,
+) {
+    let slow = emit_probe(a, alloc, line_shift, width, rs1, imm, true);
+    load_guest(a, alloc, rs2, x86::RCX);
+    match width {
+        MemWidth::B => a.mov8_mr(x86::RSI, 0, x86::RCX),
+        MemWidth::H => a.mov16_mr(x86::RSI, 0, x86::RCX),
+        MemWidth::W => a.mov32_mr(x86::RSI, 0, x86::RCX),
+        MemWidth::D => a.mov_mr(x86::RSI, 0, x86::RCX),
+    }
+    let done = a.jmp_rel32();
+    // Slow path: helper_write(ctx, vaddr, value, packed) -> 0 ok / 1 trap.
+    let slow_at = a.len();
+    for j in slow {
+        a.patch_rel32(j, slow_at);
+    }
+    a.mov_rr(x86::RDI, x86::RBX);
+    a.mov_rr(x86::RSI, x86::RAX);
+    load_guest(a, alloc, rs2, x86::RDX);
+    a.mov32_ri(x86::RCX, pack_mem(width, false));
+    a.mov_rm(x86::RAX, x86::RBX, OFF_HWRITE);
+    a.call_r(x86::RAX);
+    a.test_rr(x86::RAX, x86::RAX);
+    trap_jumps.push(a.jcc_rel32(x86::CC_NE));
+    let end = a.len();
+    a.patch_rel32(done, end);
+}
+
+/// Emit the terminator. Returns (entry, slot_taken, slot_seq) relative
+/// offsets; slots are the rel32 fields of the chain `jmp`s.
+fn emit_term(
+    a: &mut Asm,
+    block: &Block,
+    kind: TermKind,
+) -> (Option<u32>, Option<u32>, Option<u32>) {
+    let term = &block.term;
+    let pc = block.start + term.pc_off as u64;
+    let npc = pc + term.len as u64;
+    let entry = a.len() as u32;
+    match (kind, term.op) {
+        (TermKind::Branch, Op::Branch { cond, rs1, rs2, .. }) => {
+            let none = [0u8; 3]; // terminators use no allocated registers
+            load_guest(a, &none, rs1, x86::RAX);
+            load_guest(a, &none, rs2, x86::RCX);
+            a.alu_rr(AluKind::Cmp, x86::RAX, x86::RCX);
+            a.setcc(cc_of(cond), x86::RAX);
+            a.movzx8_rr(x86::RAX, x86::RAX);
+            a.mov_mr(x86::RBX, OFF_TAKEN, x86::RAX);
+            a.test_rr(x86::RAX, x86::RAX);
+            let to_taken = a.jcc_rel32(x86::CC_NE);
+            // Sequential chain slot: a patchable jmp, initially to the
+            // plain RC_TERM exit just below.
+            let slot_seq = a.jmp_rel32();
+            let taken_at = a.len();
+            a.patch_rel32(to_taken, taken_at);
+            let slot_taken = a.jmp_rel32();
+            let exit = a.len();
+            a.patch_rel32(slot_seq, exit);
+            a.patch_rel32(slot_taken, exit);
+            emit_exit(a, RC_TERM);
+            (Some(entry), Some(slot_taken as u32), Some(slot_seq as u32))
+        }
+        (TermKind::Jump { .. }, Op::Jal { rd, .. }) => {
+            if rd != 0 {
+                a.mov_imm(x86::RAX, npc);
+                a.mov_mr(x86::RBP, rd as i32 * 8, x86::RAX);
+            }
+            let slot_taken = a.jmp_rel32();
+            let exit = a.len();
+            a.patch_rel32(slot_taken, exit);
+            emit_exit(a, RC_TERM);
+            (Some(entry), Some(slot_taken as u32), None)
+        }
+        (TermKind::IndirectJump, Op::Jalr { rd, rs1, imm }) => {
+            let none = [0u8; 3];
+            // Target before the rd write: rd may alias rs1.
+            load_guest(a, &none, rs1, x86::RAX);
+            if imm != 0 {
+                a.alu_ri(AluKind::Add, x86::RAX, imm);
+            }
+            a.alu_ri(AluKind::And, x86::RAX, -2);
+            a.mov_mr(x86::RBX, OFF_JTARGET, x86::RAX);
+            if rd != 0 {
+                a.mov_imm(x86::RAX, npc);
+                a.mov_mr(x86::RBP, rd as i32 * 8, x86::RAX);
+            }
+            let slot_taken = a.jmp_rel32();
+            let exit = a.len();
+            a.patch_rel32(slot_taken, exit);
+            emit_exit(a, RC_TERM);
+            (Some(entry), Some(slot_taken as u32), None)
+        }
+        _ => (None, None, None),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Runtime self-check
+// ---------------------------------------------------------------------------
+
+/// Verify the ALU and branch-condition lowering against the Rust
+/// semantics on an edge-case vector, executing real emitted code. Run
+/// once (cached by `dbt::native_available`); on any mismatch the native
+/// backend reports itself unavailable instead of running wrong code.
+pub fn self_check() -> bool {
+    const VALS: [u64; 10] = [
+        0,
+        1,
+        u64::MAX,
+        i64::MIN as u64,
+        i64::MAX as u64,
+        0x7fff_ffff,
+        0x8000_0000,
+        0xffff_ffff,
+        63,
+        0x1234_5678_9abc_def0,
+    ];
+    const IMMS: [i32; 6] = [0, 1, -1, 31, 63, -2048];
+    const ALU_OPS: [AluOp; 10] = [
+        AluOp::Add,
+        AluOp::Sub,
+        AluOp::Sll,
+        AluOp::Slt,
+        AluOp::Sltu,
+        AluOp::Xor,
+        AluOp::Srl,
+        AluOp::Sra,
+        AluOp::Or,
+        AluOp::And,
+    ];
+    const CONDS: [BrCond; 6] =
+        [BrCond::Eq, BrCond::Ne, BrCond::Lt, BrCond::Ge, BrCond::Ltu, BrCond::Geu];
+
+    let mut a = Asm::new();
+    let mut probes: Vec<(usize, Box<dyn Fn(u64, u64) -> u64>)> = Vec::new();
+    let mut probe = |a: &mut Asm, body: &dyn Fn(&mut Asm)| -> usize {
+        let entry = a.len();
+        a.mov_rr(x86::RAX, x86::RDI);
+        a.mov_rr(x86::RCX, x86::RSI);
+        body(a);
+        a.ret();
+        entry
+    };
+    for op in ALU_OPS {
+        for word in [false, true] {
+            let entry = probe(&mut a, &|a| emit_alu_value(a, op, word));
+            probes.push((
+                entry,
+                Box::new(move |x, y| crate::sys::exec::alu_value(op, word, x, y)),
+            ));
+            for imm in IMMS {
+                let entry = probe(&mut a, &|a| emit_alu_imm(a, op, word, imm));
+                probes.push((
+                    entry,
+                    Box::new(move |x, _| {
+                        crate::sys::exec::alu_value(op, word, x, imm as i64 as u64)
+                    }),
+                ));
+            }
+        }
+    }
+    for cond in CONDS {
+        let entry = probe(&mut a, &|a| {
+            a.alu_rr(AluKind::Cmp, x86::RAX, x86::RCX);
+            a.setcc(cc_of(cond), x86::RAX);
+            a.movzx8_rr(x86::RAX, x86::RAX);
+        });
+        probes.push((entry, Box::new(move |x, y| cond.eval(x, y) as u64)));
+    }
+
+    let mut buf = match ExecBuf::new((a.len() + 4095) & !4095) {
+        Some(b) => b,
+        None => return false,
+    };
+    let base = match buf.append(&a.code) {
+        Some(b) => b,
+        None => return false,
+    };
+    buf.make_exec();
+    for (entry, reference) in &probes {
+        let f: extern "sysv64" fn(u64, u64) -> u64 = unsafe {
+            std::mem::transmute(buf.addr(base + *entry as u32) as *const u8)
+        };
+        for &x in &VALS {
+            for &y in &VALS {
+                if f(x, y) != reference(x, y) {
+                    return false;
+                }
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::ptr::addr_of;
+
+    #[test]
+    fn ctx_offsets_match_layout() {
+        let ctx = NativeCtx {
+            regs: std::ptr::null_mut(),
+            d_tags: std::ptr::null(),
+            d_xors: std::ptr::null(),
+            d_acc: std::ptr::null_mut(),
+            dram_bias: 0,
+            resv: std::ptr::null(),
+            jump_target: 0,
+            taken: 0,
+            helper_read: 0,
+            helper_write: 0,
+            helper_mul: 0,
+            trap_cause: 0,
+            trap_tval: 0,
+            hart: std::ptr::null_mut(),
+            sys: std::ptr::null_mut(),
+        };
+        let base = &ctx as *const NativeCtx as usize;
+        let off = |p: usize| (p - base) as i32;
+        assert_eq!(off(addr_of!(ctx.regs) as usize), OFF_REGS);
+        assert_eq!(off(addr_of!(ctx.d_tags) as usize), OFF_DTAGS);
+        assert_eq!(off(addr_of!(ctx.d_xors) as usize), OFF_DXORS);
+        assert_eq!(off(addr_of!(ctx.d_acc) as usize), OFF_DACC);
+        assert_eq!(off(addr_of!(ctx.dram_bias) as usize), OFF_BIAS);
+        assert_eq!(off(addr_of!(ctx.resv) as usize), OFF_RESV);
+        assert_eq!(off(addr_of!(ctx.jump_target) as usize), OFF_JTARGET);
+        assert_eq!(off(addr_of!(ctx.taken) as usize), OFF_TAKEN);
+        assert_eq!(off(addr_of!(ctx.helper_read) as usize), OFF_HREAD);
+        assert_eq!(off(addr_of!(ctx.helper_write) as usize), OFF_HWRITE);
+        assert_eq!(off(addr_of!(ctx.helper_mul) as usize), OFF_HMUL);
+        assert_eq!(off(addr_of!(ctx.trap_cause) as usize), OFF_TCAUSE);
+        assert_eq!(off(addr_of!(ctx.trap_tval) as usize), OFF_TTVAL);
+    }
+
+    #[test]
+    fn mem_and_mul_packing_roundtrip() {
+        for width in [MemWidth::B, MemWidth::H, MemWidth::W, MemWidth::D] {
+            for signed in [false, true] {
+                assert_eq!(unpack_mem(pack_mem(width, signed)), (width, signed));
+            }
+        }
+        for op in [
+            MulOp::Mul,
+            MulOp::Mulh,
+            MulOp::Mulhsu,
+            MulOp::Mulhu,
+            MulOp::Div,
+            MulOp::Divu,
+            MulOp::Rem,
+            MulOp::Remu,
+        ] {
+            for word in [false, true] {
+                assert_eq!(unpack_mul(pack_mul(op, word)), (op, word));
+            }
+        }
+    }
+
+    #[test]
+    fn alu_lowering_self_check_passes() {
+        assert!(self_check(), "emitted ALU code diverges from Rust semantics");
+    }
+}

@@ -1,0 +1,192 @@
+//! W^X executable code buffer for the native DBT backend.
+//!
+//! The buffer is mmap'd RW for emission and patching, then remapped RX for
+//! execution (`make_exec`), and back (`make_writable`) when a chain patch
+//! or new block needs to touch it. Whole-buffer mprotect keeps the
+//! protocol simple; emission is rare relative to execution.
+//!
+//! Only compiled on x86-64 Linux — the only host the native backend
+//! supports — so the raw mmap externs never reach other targets.
+
+use std::ffi::c_void;
+
+// std already links libc; declare the three calls we need rather than
+// adding a crate dependency.
+extern "C" {
+    fn mmap(
+        addr: *mut c_void,
+        len: usize,
+        prot: i32,
+        flags: i32,
+        fd: i32,
+        offset: i64,
+    ) -> *mut c_void;
+    fn mprotect(addr: *mut c_void, len: usize, prot: i32) -> i32;
+    fn munmap(addr: *mut c_void, len: usize) -> i32;
+}
+
+const PROT_READ: i32 = 1;
+const PROT_WRITE: i32 = 2;
+const PROT_EXEC: i32 = 4;
+const MAP_PRIVATE: i32 = 2;
+const MAP_ANONYMOUS: i32 = 0x20;
+
+/// An mmap'd code buffer with a bump allocator and a W^X protection
+/// toggle.
+pub struct ExecBuf {
+    base: *mut u8,
+    cap: usize,
+    len: usize,
+    exec: bool,
+}
+
+// The buffer is owned by exactly one `ShardCore` at a time; raw pointers
+// just make the auto-trait opt-out conservative. Moving it across threads
+// (the sharded engine moves cores into workers) is fine.
+unsafe impl Send for ExecBuf {}
+
+impl ExecBuf {
+    /// Map a fresh RW buffer of `cap` bytes. Returns `None` if mmap fails.
+    pub fn new(cap: usize) -> Option<ExecBuf> {
+        let base = unsafe {
+            mmap(
+                std::ptr::null_mut(),
+                cap,
+                PROT_READ | PROT_WRITE,
+                MAP_PRIVATE | MAP_ANONYMOUS,
+                -1,
+                0,
+            )
+        };
+        if base as isize == -1 || base.is_null() {
+            return None;
+        }
+        Some(ExecBuf { base: base as *mut u8, cap, len: 0, exec: false })
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.cap - self.len
+    }
+
+    /// Absolute address of buffer offset `off`.
+    pub fn addr(&self, off: u32) -> u64 {
+        debug_assert!((off as usize) <= self.len);
+        self.base as u64 + off as u64
+    }
+
+    /// Remap RX. Idempotent.
+    pub fn make_exec(&mut self) {
+        if !self.exec {
+            let r = unsafe { mprotect(self.base as *mut c_void, self.cap, PROT_READ | PROT_EXEC) };
+            assert_eq!(r, 0, "mprotect RX failed");
+            self.exec = true;
+        }
+    }
+
+    /// Remap RW. Idempotent.
+    pub fn make_writable(&mut self) {
+        if self.exec {
+            let r = unsafe { mprotect(self.base as *mut c_void, self.cap, PROT_READ | PROT_WRITE) };
+            assert_eq!(r, 0, "mprotect RW failed");
+            self.exec = false;
+        }
+    }
+
+    /// Append `code`, returning its start offset, or `None` if it does not
+    /// fit. The buffer must be writable.
+    pub fn append(&mut self, code: &[u8]) -> Option<u32> {
+        debug_assert!(!self.exec, "append on executable buffer");
+        if code.len() > self.remaining() {
+            return None;
+        }
+        let off = self.len;
+        unsafe {
+            std::ptr::copy_nonoverlapping(code.as_ptr(), self.base.add(off), code.len());
+        }
+        self.len += code.len();
+        Some(off as u32)
+    }
+
+    /// Overwrite 4 bytes at `off` (rel32 chain patching). The buffer must
+    /// be writable.
+    pub fn write4(&mut self, off: u32, bytes: [u8; 4]) {
+        debug_assert!(!self.exec, "patch on executable buffer");
+        assert!((off as usize) + 4 <= self.len);
+        unsafe {
+            std::ptr::copy_nonoverlapping(bytes.as_ptr(), self.base.add(off as usize), 4);
+        }
+    }
+
+    /// Read back `len` bytes at `off` (for `--dump-native`).
+    pub fn read(&self, off: u32, len: usize) -> Vec<u8> {
+        assert!((off as usize) + len <= self.len);
+        let mut out = vec![0u8; len];
+        unsafe {
+            std::ptr::copy_nonoverlapping(self.base.add(off as usize), out.as_mut_ptr(), len);
+        }
+        out
+    }
+
+    /// Discard all emitted code: the bump pointer rewinds to zero and the
+    /// buffer becomes writable. Previously handed-out offsets are dead.
+    pub fn reset(&mut self) {
+        self.make_writable();
+        self.len = 0;
+    }
+}
+
+impl Drop for ExecBuf {
+    fn drop(&mut self) {
+        unsafe {
+            munmap(self.base as *mut c_void, self.cap);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_protect_execute_roundtrip() {
+        let mut buf = ExecBuf::new(4096).expect("mmap");
+        // mov rax, 42; ret
+        let code = [0x48, 0xC7, 0xC0, 0x2A, 0x00, 0x00, 0x00, 0xC3];
+        let off = buf.append(&code).unwrap();
+        buf.make_exec();
+        let f: extern "sysv64" fn() -> u64 =
+            unsafe { std::mem::transmute(buf.addr(off) as *const u8) };
+        assert_eq!(f(), 42);
+        // Patch the imm32 to 7 and re-run.
+        buf.make_writable();
+        buf.write4(off + 3, 7u32.to_le_bytes());
+        buf.make_exec();
+        assert_eq!(f(), 7);
+    }
+
+    #[test]
+    fn exhaustion_and_reset() {
+        let mut buf = ExecBuf::new(4096).expect("mmap");
+        let chunk = [0x90u8; 1024]; // nops
+        assert!(buf.append(&chunk).is_some());
+        assert!(buf.append(&chunk).is_some());
+        assert!(buf.append(&chunk).is_some());
+        assert!(buf.append(&chunk).is_some());
+        assert!(buf.append(&chunk).is_none(), "fifth KiB must not fit");
+        buf.reset();
+        assert_eq!(buf.len(), 0);
+        assert!(buf.append(&chunk).is_some());
+    }
+}

@@ -4,8 +4,81 @@
 
 pub mod block;
 pub mod cache;
+#[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+pub mod codegen;
 pub mod compiler;
+#[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+pub mod exec_buf;
+pub mod x86;
 
 pub use block::{Block, BlockId, ChainLink, CrossPageStub, Step, Term, TermKind, NO_CHAIN};
 pub use cache::CodeCache;
 pub use compiler::{translate, DbtCompiler, FetchProbe, MAX_BLOCK_INSTS};
+
+/// Which backend executes translated blocks.
+///
+/// `Microop` walks the translated `Step` sequence in the Rust dispatch
+/// loop; `Native` additionally compiles blocks to x86-64 host code
+/// (falling back to the micro-op path per block / per step class). The
+/// two are architecturally bit-identical — counters included — by
+/// construction; see DESIGN.md §11.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    #[default]
+    Microop,
+    Native,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "microop" => Some(Backend::Microop),
+            "native" => Some(Backend::Native),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Backend::Microop => "microop",
+            Backend::Native => "native",
+        }
+    }
+}
+
+/// Is the native backend usable on this host? Requires an x86-64 Linux
+/// build *and* a passing runtime self-check of the emitted ALU code
+/// (cached after the first call). Everywhere else this is a compile-time
+/// `false`, keeping the micro-op path the only option.
+pub fn native_available() -> bool {
+    #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+    {
+        use std::sync::OnceLock;
+        static CHECK: OnceLock<bool> = OnceLock::new();
+        *CHECK.get_or_init(codegen::self_check)
+    }
+    #[cfg(not(all(target_arch = "x86_64", target_os = "linux")))]
+    {
+        false
+    }
+}
+
+#[cfg(test)]
+mod backend_tests {
+    use super::Backend;
+
+    #[test]
+    fn backend_parse_roundtrip() {
+        assert_eq!(Backend::parse("microop"), Some(Backend::Microop));
+        assert_eq!(Backend::parse("native"), Some(Backend::Native));
+        assert_eq!(Backend::parse("jit"), None);
+        assert_eq!(Backend::default(), Backend::Microop);
+        assert_eq!(Backend::Native.as_str(), "native");
+    }
+
+    #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+    #[test]
+    fn native_is_available_on_x86_64_linux() {
+        assert!(super::native_available());
+    }
+}

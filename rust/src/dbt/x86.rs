@@ -1,0 +1,666 @@
+//! Minimal x86-64 instruction encoder for the native DBT backend.
+//!
+//! Emits raw machine code into a `Vec<u8>`. Coverage is exactly what the
+//! block codegen pass (`dbt/codegen.rs`) needs: 64/32-bit ALU reg-reg and
+//! reg-imm forms, moves between registers / memory (8/16/32/64-bit widths,
+//! zero/sign extension), shifts, compare + setcc, relative jumps with
+//! post-hoc patching, indirect calls, and push/pop/ret for the trampoline.
+//!
+//! The encoder is pure byte emission with no host-architecture dependence,
+//! so it compiles (and its unit tests run) on every target; only the code
+//! *executor* (`exec_buf.rs` / `codegen.rs`) is x86-64-gated.
+
+/// Host register number (the 4-bit encoding: REX.B/R extends to 8-15).
+pub type Reg = u8;
+
+pub const RAX: Reg = 0;
+pub const RCX: Reg = 1;
+pub const RDX: Reg = 2;
+pub const RBX: Reg = 3;
+pub const RSP: Reg = 4;
+pub const RBP: Reg = 5;
+pub const RSI: Reg = 6;
+pub const RDI: Reg = 7;
+pub const R8: Reg = 8;
+pub const R9: Reg = 9;
+pub const R10: Reg = 10;
+pub const R11: Reg = 11;
+pub const R12: Reg = 12;
+pub const R13: Reg = 13;
+pub const R14: Reg = 14;
+pub const R15: Reg = 15;
+
+/// Condition codes (the `cc` nibble of `setcc` / `jcc`).
+pub const CC_B: u8 = 0x2; // below (unsigned <)
+pub const CC_AE: u8 = 0x3; // above-or-equal (unsigned >=)
+pub const CC_E: u8 = 0x4; // equal
+pub const CC_NE: u8 = 0x5; // not equal
+pub const CC_A: u8 = 0x7; // above (unsigned >)
+pub const CC_L: u8 = 0xC; // less (signed <)
+pub const CC_GE: u8 = 0xD; // greater-or-equal (signed >=)
+
+/// Two-operand ALU opcodes, encoded as the /r opcode for the
+/// `op r/m, reg` form; the reg-imm form uses `0x81 /modrm_ext`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum AluKind {
+    Add,
+    Or,
+    And,
+    Sub,
+    Xor,
+    Cmp,
+}
+
+impl AluKind {
+    /// Opcode byte for the `op r/m, reg` (store-form, MR) encoding.
+    fn mr_opcode(self) -> u8 {
+        match self {
+            AluKind::Add => 0x01,
+            AluKind::Or => 0x09,
+            AluKind::And => 0x21,
+            AluKind::Sub => 0x29,
+            AluKind::Xor => 0x31,
+            AluKind::Cmp => 0x39,
+        }
+    }
+
+    /// ModRM `/n` extension for the `0x81` imm32 form.
+    fn imm_ext(self) -> u8 {
+        match self {
+            AluKind::Add => 0,
+            AluKind::Or => 1,
+            AluKind::And => 4,
+            AluKind::Sub => 5,
+            AluKind::Xor => 6,
+            AluKind::Cmp => 7,
+        }
+    }
+}
+
+/// Shift opcodes (ModRM `/n` extension of `0xC1` / `0xD3`).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ShiftKind {
+    Shl,
+    Shr,
+    Sar,
+}
+
+impl ShiftKind {
+    fn ext(self) -> u8 {
+        match self {
+            ShiftKind::Shl => 4,
+            ShiftKind::Shr => 5,
+            ShiftKind::Sar => 7,
+        }
+    }
+}
+
+/// Byte-buffer assembler.
+#[derive(Default)]
+pub struct Asm {
+    pub code: Vec<u8>,
+}
+
+impl Asm {
+    pub fn new() -> Asm {
+        Asm { code: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.code.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.code.is_empty()
+    }
+
+    fn byte(&mut self, b: u8) {
+        self.code.push(b);
+    }
+
+    fn imm32(&mut self, v: u32) {
+        self.code.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn imm64(&mut self, v: u64) {
+        self.code.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// REX prefix. `w` selects 64-bit operands; `r` is the ModRM.reg
+    /// register, `x` the SIB index, `b` the ModRM.rm / SIB base register.
+    /// Emitted unconditionally when `w` or any high register requires it.
+    fn rex(&mut self, w: bool, r: Reg, x: Reg, b: Reg) {
+        let v = 0x40u8
+            | (w as u8) << 3
+            | ((r >> 3) & 1) << 2
+            | ((x >> 3) & 1) << 1
+            | ((b >> 3) & 1);
+        if v != 0x40 || w {
+            self.byte(v);
+        }
+    }
+
+    /// REX that must also be emitted for low byte registers spl/bpl/sil/dil
+    /// (8-bit operations on rsp/rbp/rsi/rdi need a REX to avoid the legacy
+    /// ah/ch/dh/bh encodings).
+    fn rex_byte_op(&mut self, r: Reg, b: Reg) {
+        let v = 0x40u8 | ((r >> 3) & 1) << 2 | ((b >> 3) & 1);
+        if v != 0x40 || (4..8).contains(&r) || (4..8).contains(&b) {
+            self.byte(v);
+        }
+    }
+
+    fn modrm(&mut self, md: u8, reg: Reg, rm: Reg) {
+        self.byte(md << 6 | (reg & 7) << 3 | (rm & 7));
+    }
+
+    /// ModRM + displacement for a `[base + disp32]` memory operand.
+    /// Handles the two irregular base encodings: base&7 == 4 (rsp/r12)
+    /// needs a SIB byte, and base&7 == 5 (rbp/r13) has no disp-less form.
+    fn mem(&mut self, reg: Reg, base: Reg, disp: i32) {
+        let need_sib = base & 7 == 4;
+        let small = i8::try_from(disp).is_ok();
+        let md = if disp == 0 && base & 7 != 5 {
+            0
+        } else if small {
+            1
+        } else {
+            2
+        };
+        self.modrm(md, reg, base);
+        if need_sib {
+            // scale=0, index=100 (none), base=100 (only rsp/r12 reach here).
+            self.byte(0x24);
+        }
+        match md {
+            1 => self.byte(disp as i8 as u8),
+            2 => self.imm32(disp as u32),
+            _ => {}
+        }
+    }
+
+    /// ModRM + SIB for `[base + index*scale]` (scale = 1/2/4/8).
+    fn mem_sib(&mut self, reg: Reg, base: Reg, index: Reg, scale: u8) {
+        debug_assert!(index & 7 != 4, "rsp cannot be an index");
+        let ss = match scale {
+            1 => 0,
+            2 => 1,
+            4 => 2,
+            8 => 3,
+            _ => unreachable!("bad scale"),
+        };
+        if base & 7 == 5 {
+            // rbp/r13 base needs an explicit disp8 of 0.
+            self.modrm(1, reg, 4);
+            self.byte(ss << 6 | (index & 7) << 3 | (base & 7));
+            self.byte(0);
+        } else {
+            self.modrm(0, reg, 4);
+            self.byte(ss << 6 | (index & 7) << 3 | (base & 7));
+        }
+    }
+
+    // ---- stack / control ----
+
+    pub fn push_r(&mut self, r: Reg) {
+        self.rex(false, 0, 0, r);
+        self.byte(0x50 + (r & 7));
+    }
+
+    pub fn pop_r(&mut self, r: Reg) {
+        self.rex(false, 0, 0, r);
+        self.byte(0x58 + (r & 7));
+    }
+
+    pub fn ret(&mut self) {
+        self.byte(0xC3);
+    }
+
+    /// `call reg` (indirect near call).
+    pub fn call_r(&mut self, r: Reg) {
+        self.rex(false, 0, 0, r);
+        self.byte(0xFF);
+        self.modrm(3, 2, r);
+    }
+
+    /// `jmp reg` (indirect near jump).
+    pub fn jmp_r(&mut self, r: Reg) {
+        self.rex(false, 0, 0, r);
+        self.byte(0xFF);
+        self.modrm(3, 4, r);
+    }
+
+    /// `jmp rel32`; returns the offset of the rel32 field for patching.
+    pub fn jmp_rel32(&mut self) -> usize {
+        self.byte(0xE9);
+        let at = self.code.len();
+        self.imm32(0);
+        at
+    }
+
+    /// `jcc rel32`; returns the offset of the rel32 field for patching.
+    pub fn jcc_rel32(&mut self, cc: u8) -> usize {
+        self.byte(0x0F);
+        self.byte(0x80 + cc);
+        let at = self.code.len();
+        self.imm32(0);
+        at
+    }
+
+    /// Patch a previously emitted rel32 field (offset from `jmp_rel32` /
+    /// `jcc_rel32`) to jump to `target` (an offset within this buffer).
+    pub fn patch_rel32(&mut self, at: usize, target: usize) {
+        let rel = (target as i64 - (at as i64 + 4)) as i32;
+        self.code[at..at + 4].copy_from_slice(&rel.to_le_bytes());
+    }
+
+    /// Compute the rel32 value for a jump whose rel32 field lives at
+    /// absolute address `field_addr`, targeting absolute address `target`.
+    pub fn rel32_for(field_addr: u64, target: u64) -> i32 {
+        (target.wrapping_sub(field_addr.wrapping_add(4))) as i64 as i32
+    }
+
+    // ---- moves ----
+
+    /// `mov dst, src` (64-bit reg-reg).
+    pub fn mov_rr(&mut self, dst: Reg, src: Reg) {
+        self.rex(true, src, 0, dst);
+        self.byte(0x89);
+        self.modrm(3, src, dst);
+    }
+
+    /// `mov dst, imm64` (movabs).
+    pub fn mov_ri64(&mut self, dst: Reg, imm: u64) {
+        self.rex(true, 0, 0, dst);
+        self.byte(0xB8 + (dst & 7));
+        self.imm64(imm);
+    }
+
+    /// `mov dst, imm32` sign-extended to 64 bits (REX.W C7 /0).
+    pub fn mov_ri32s(&mut self, dst: Reg, imm: i32) {
+        self.rex(true, 0, 0, dst);
+        self.byte(0xC7);
+        self.modrm(3, 0, dst);
+        self.imm32(imm as u32);
+    }
+
+    /// `mov dst32, imm32` (zero-extends to 64 bits).
+    pub fn mov32_ri(&mut self, dst: Reg, imm: u32) {
+        self.rex(false, 0, 0, dst);
+        self.byte(0xB8 + (dst & 7));
+        self.imm32(imm);
+    }
+
+    /// Pick the shortest encoding that materialises `imm` into `dst`.
+    pub fn mov_imm(&mut self, dst: Reg, imm: u64) {
+        if let Ok(v) = i32::try_from(imm as i64) {
+            if v >= 0 {
+                self.mov32_ri(dst, v as u32);
+            } else {
+                self.mov_ri32s(dst, v);
+            }
+        } else if let Ok(v) = u32::try_from(imm) {
+            self.mov32_ri(dst, v);
+        } else {
+            self.mov_ri64(dst, imm);
+        }
+    }
+
+    /// `mov dst, [base + disp]` (64-bit load).
+    pub fn mov_rm(&mut self, dst: Reg, base: Reg, disp: i32) {
+        self.rex(true, dst, 0, base);
+        self.byte(0x8B);
+        self.mem(dst, base, disp);
+    }
+
+    /// `mov [base + disp], src` (64-bit store).
+    pub fn mov_mr(&mut self, base: Reg, disp: i32, src: Reg) {
+        self.rex(true, src, 0, base);
+        self.byte(0x89);
+        self.mem(src, base, disp);
+    }
+
+    /// `mov dst32, [base + disp]` (32-bit load, zero-extends).
+    pub fn mov32_rm(&mut self, dst: Reg, base: Reg, disp: i32) {
+        self.rex(false, dst, 0, base);
+        self.byte(0x8B);
+        self.mem(dst, base, disp);
+    }
+
+    /// `mov [base + disp], src32` (32-bit store).
+    pub fn mov32_mr(&mut self, base: Reg, disp: i32, src: Reg) {
+        self.rex(false, src, 0, base);
+        self.byte(0x89);
+        self.mem(src, base, disp);
+    }
+
+    /// `mov [base + disp], src16` (16-bit store).
+    pub fn mov16_mr(&mut self, base: Reg, disp: i32, src: Reg) {
+        self.byte(0x66);
+        self.rex(false, src, 0, base);
+        self.byte(0x89);
+        self.mem(src, base, disp);
+    }
+
+    /// `mov [base + disp], src8` (8-bit store).
+    pub fn mov8_mr(&mut self, base: Reg, disp: i32, src: Reg) {
+        self.rex_byte_op(src, base);
+        self.byte(0x88);
+        self.mem(src, base, disp);
+    }
+
+    /// `movzx dst, byte [base + disp]`.
+    pub fn movzx8_rm(&mut self, dst: Reg, base: Reg, disp: i32) {
+        self.rex(false, dst, 0, base);
+        self.byte(0x0F);
+        self.byte(0xB6);
+        self.mem(dst, base, disp);
+    }
+
+    /// `movsx dst, byte [base + disp]` (to 64 bits).
+    pub fn movsx8_rm(&mut self, dst: Reg, base: Reg, disp: i32) {
+        self.rex(true, dst, 0, base);
+        self.byte(0x0F);
+        self.byte(0xBE);
+        self.mem(dst, base, disp);
+    }
+
+    /// `movzx dst, word [base + disp]`.
+    pub fn movzx16_rm(&mut self, dst: Reg, base: Reg, disp: i32) {
+        self.rex(false, dst, 0, base);
+        self.byte(0x0F);
+        self.byte(0xB7);
+        self.mem(dst, base, disp);
+    }
+
+    /// `movsx dst, word [base + disp]` (to 64 bits).
+    pub fn movsx16_rm(&mut self, dst: Reg, base: Reg, disp: i32) {
+        self.rex(true, dst, 0, base);
+        self.byte(0x0F);
+        self.byte(0xBF);
+        self.mem(dst, base, disp);
+    }
+
+    /// `movsxd dst, dword [base + disp]` (32→64 sign extension load).
+    pub fn movsxd_rm(&mut self, dst: Reg, base: Reg, disp: i32) {
+        self.rex(true, dst, 0, base);
+        self.byte(0x63);
+        self.mem(dst, base, disp);
+    }
+
+    /// `movsxd dst, src32` (reg-reg 32→64 sign extension).
+    pub fn movsxd_rr(&mut self, dst: Reg, src: Reg) {
+        self.rex(true, dst, 0, src);
+        self.byte(0x63);
+        self.modrm(3, dst, src);
+    }
+
+    /// `mov dst32, src32` (zero-extends into 64-bit dst).
+    pub fn mov32_rr(&mut self, dst: Reg, src: Reg) {
+        self.rex(false, src, 0, dst);
+        self.byte(0x89);
+        self.modrm(3, src, dst);
+    }
+
+    /// `movzx dst32, src8` (byte→dword zero-extend, reg form).
+    pub fn movzx8_rr(&mut self, dst: Reg, src: Reg) {
+        // REX needed for spl/sil etc. as source byte regs.
+        let v = 0x40u8 | ((dst >> 3) & 1) << 2 | ((src >> 3) & 1);
+        if v != 0x40 || (4..8).contains(&src) {
+            self.byte(v);
+        }
+        self.byte(0x0F);
+        self.byte(0xB6);
+        self.modrm(3, dst, src);
+    }
+
+    /// `mov dst, [base + index*8]` (64-bit SIB-indexed load).
+    pub fn mov_rm_sib8(&mut self, dst: Reg, base: Reg, index: Reg) {
+        self.rex(true, dst, index, base);
+        self.byte(0x8B);
+        self.mem_sib(dst, base, index, 8);
+    }
+
+    // ---- ALU ----
+
+    /// `op dst, src` (64-bit reg-reg).
+    pub fn alu_rr(&mut self, op: AluKind, dst: Reg, src: Reg) {
+        self.rex(true, src, 0, dst);
+        self.byte(op.mr_opcode());
+        self.modrm(3, src, dst);
+    }
+
+    /// `op dst32, src32` (32-bit reg-reg; zero-extends dst).
+    pub fn alu32_rr(&mut self, op: AluKind, dst: Reg, src: Reg) {
+        self.rex(false, src, 0, dst);
+        self.byte(op.mr_opcode());
+        self.modrm(3, src, dst);
+    }
+
+    /// `op dst, imm32` (sign-extended, 64-bit).
+    pub fn alu_ri(&mut self, op: AluKind, dst: Reg, imm: i32) {
+        self.rex(true, 0, 0, dst);
+        self.byte(0x81);
+        self.modrm(3, op.imm_ext(), dst);
+        self.imm32(imm as u32);
+    }
+
+    /// `op dst32, imm32` (32-bit form; zero-extends dst).
+    pub fn alu32_ri(&mut self, op: AluKind, dst: Reg, imm: i32) {
+        self.rex(false, 0, 0, dst);
+        self.byte(0x81);
+        self.modrm(3, op.imm_ext(), dst);
+        self.imm32(imm as u32);
+    }
+
+    /// `add qword [base + disp], imm8` (read-modify-write).
+    pub fn add_m_i8(&mut self, base: Reg, disp: i32, imm: i8) {
+        self.rex(true, 0, 0, base);
+        self.byte(0x83);
+        self.mem(0, base, disp);
+        self.byte(imm as u8);
+    }
+
+    /// `cmp dst, imm32` (sign-extended, 64-bit) — alias via alu_ri.
+    pub fn cmp_ri(&mut self, dst: Reg, imm: i32) {
+        self.alu_ri(AluKind::Cmp, dst, imm);
+    }
+
+    /// `test dst, src` (64-bit).
+    pub fn test_rr(&mut self, dst: Reg, src: Reg) {
+        self.rex(true, src, 0, dst);
+        self.byte(0x85);
+        self.modrm(3, src, dst);
+    }
+
+    /// `setcc dst8`.
+    pub fn setcc(&mut self, cc: u8, dst: Reg) {
+        let v = 0x40u8 | ((dst >> 3) & 1);
+        if v != 0x40 || (4..8).contains(&dst) {
+            self.byte(v);
+        }
+        self.byte(0x0F);
+        self.byte(0x90 + cc);
+        self.modrm(3, 0, dst);
+    }
+
+    // ---- shifts ----
+
+    /// `shift dst, imm8` (64-bit).
+    pub fn shift_ri(&mut self, kind: ShiftKind, dst: Reg, imm: u8) {
+        self.rex(true, 0, 0, dst);
+        self.byte(0xC1);
+        self.modrm(3, kind.ext(), dst);
+        self.byte(imm);
+    }
+
+    /// `shift dst32, imm8` (32-bit; zero-extends dst).
+    pub fn shift32_ri(&mut self, kind: ShiftKind, dst: Reg, imm: u8) {
+        self.rex(false, 0, 0, dst);
+        self.byte(0xC1);
+        self.modrm(3, kind.ext(), dst);
+        self.byte(imm);
+    }
+
+    /// `shift dst, cl` (64-bit; hardware masks the count to 6 bits, which
+    /// matches RV64 shift semantics exactly).
+    pub fn shift_cl(&mut self, kind: ShiftKind, dst: Reg) {
+        self.rex(true, 0, 0, dst);
+        self.byte(0xD3);
+        self.modrm(3, kind.ext(), dst);
+    }
+
+    /// `shift dst32, cl` (32-bit; hardware masks to 5 bits = RV32 word op).
+    pub fn shift32_cl(&mut self, kind: ShiftKind, dst: Reg) {
+        self.rex(false, 0, 0, dst);
+        self.byte(0xD3);
+        self.modrm(3, kind.ext(), dst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn emit(f: impl FnOnce(&mut Asm)) -> Vec<u8> {
+        let mut a = Asm::new();
+        f(&mut a);
+        a.code
+    }
+
+    #[test]
+    fn textbook_encodings() {
+        assert_eq!(emit(|a| a.push_r(RBX)), [0x53]);
+        assert_eq!(emit(|a| a.push_r(R12)), [0x41, 0x54]);
+        assert_eq!(emit(|a| a.pop_r(R14)), [0x41, 0x5E]);
+        assert_eq!(emit(|a| a.ret()), [0xC3]);
+        // mov rax, rdi
+        assert_eq!(emit(|a| a.mov_rr(RAX, RDI)), [0x48, 0x89, 0xF8]);
+        // mov rax, [rbx+0x10]
+        assert_eq!(emit(|a| a.mov_rm(RAX, RBX, 0x10)), [0x48, 0x8B, 0x43, 0x10]);
+        // mov [rbp+8], rax
+        assert_eq!(emit(|a| a.mov_mr(RBP, 8, RAX)), [0x48, 0x89, 0x45, 0x08]);
+        // add rax, rcx
+        assert_eq!(emit(|a| a.alu_rr(AluKind::Add, RAX, RCX)), [0x48, 0x01, 0xC8]);
+        // shl rax, 3
+        assert_eq!(
+            emit(|a| a.shift_ri(ShiftKind::Shl, RAX, 3)),
+            [0x48, 0xC1, 0xE0, 0x03]
+        );
+        // sar rax, cl
+        assert_eq!(emit(|a| a.shift_cl(ShiftKind::Sar, RAX)), [0x48, 0xD3, 0xF8]);
+        // cmp rax, rcx
+        assert_eq!(emit(|a| a.alu_rr(AluKind::Cmp, RAX, RCX)), [0x48, 0x39, 0xC8]);
+        // sete al
+        assert_eq!(emit(|a| a.setcc(CC_E, RAX)), [0x0F, 0x94, 0xC0]);
+        // movzx eax, al
+        assert_eq!(emit(|a| a.movzx8_rr(RAX, RAX)), [0x0F, 0xB6, 0xC0]);
+        // movsxd rax, eax
+        assert_eq!(emit(|a| a.movsxd_rr(RAX, RAX)), [0x48, 0x63, 0xC0]);
+        // call rax
+        assert_eq!(emit(|a| a.call_r(RAX)), [0xFF, 0xD0]);
+        // mov rsi, [r8 + rdx*8]
+        assert_eq!(
+            emit(|a| a.mov_rm_sib8(RSI, R8, RDX)),
+            [0x49, 0x8B, 0x34, 0xD0]
+        );
+    }
+
+    #[test]
+    fn rbp_r13_base_always_has_displacement() {
+        // [rbp+0] must encode as disp8=0, not the rip-relative md=0 form.
+        assert_eq!(emit(|a| a.mov_rm(RAX, RBP, 0)), [0x48, 0x8B, 0x45, 0x00]);
+        assert_eq!(
+            emit(|a| a.mov_rm(RAX, R13, 0)),
+            [0x49, 0x8B, 0x45, 0x00]
+        );
+        // [r13 + rdx*8] needs the SIB + disp8 form too.
+        assert_eq!(
+            emit(|a| a.mov_rm_sib8(RAX, R13, RDX)),
+            [0x49, 0x8B, 0x44, 0xD5, 0x00]
+        );
+    }
+
+    #[test]
+    fn rsp_r12_base_needs_sib() {
+        // mov rax, [rsp+8] = 48 8B 44 24 08
+        assert_eq!(
+            emit(|a| a.mov_rm(RAX, RSP, 8)),
+            [0x48, 0x8B, 0x44, 0x24, 0x08]
+        );
+        // mov rax, [r12] = 49 8B 04 24
+        assert_eq!(emit(|a| a.mov_rm(RAX, R12, 0)), [0x49, 0x8B, 0x04, 0x24]);
+    }
+
+    #[test]
+    fn byte_stores_use_rex_for_sil_dil() {
+        // mov [rbx], sil needs REX (40 88 33); without it this would be dh.
+        assert_eq!(emit(|a| a.mov8_mr(RBX, 0, RSI)), [0x40, 0x88, 0x33]);
+        // mov [rbx], cl has no REX (88 0B).
+        assert_eq!(emit(|a| a.mov8_mr(RBX, 0, RCX)), [0x88, 0x0B]);
+    }
+
+    #[test]
+    fn imm_and_disp_sizing() {
+        // mov rax, imm64
+        assert_eq!(
+            emit(|a| a.mov_ri64(RAX, 0x1122334455667788)),
+            [0x48, 0xB8, 0x88, 0x77, 0x66, 0x55, 0x44, 0x33, 0x22, 0x11]
+        );
+        // mov rax, -1 via C7 /0 (sign-extended imm32)
+        assert_eq!(
+            emit(|a| a.mov_ri32s(RAX, -1)),
+            [0x48, 0xC7, 0xC0, 0xFF, 0xFF, 0xFF, 0xFF]
+        );
+        // mov eax, 5 (zero-extends)
+        assert_eq!(emit(|a| a.mov32_ri(RAX, 5)), [0xB8, 0x05, 0x00, 0x00, 0x00]);
+        // mov_imm picks the right form
+        assert_eq!(emit(|a| a.mov_imm(RAX, 5)), emit(|a| a.mov32_ri(RAX, 5)));
+        assert_eq!(
+            emit(|a| a.mov_imm(RAX, u64::MAX)),
+            emit(|a| a.mov_ri32s(RAX, -1))
+        );
+        assert_eq!(
+            emit(|a| a.mov_imm(RAX, 0x8000_0000)),
+            emit(|a| a.mov32_ri(RAX, 0x8000_0000))
+        );
+        // large disp32
+        assert_eq!(
+            emit(|a| a.mov_rm(RAX, RBX, 0x1000)),
+            [0x48, 0x8B, 0x83, 0x00, 0x10, 0x00, 0x00]
+        );
+        // add qword [rbx+0x18], 1
+        assert_eq!(
+            emit(|a| a.add_m_i8(RBX, 0x18, 1)),
+            [0x48, 0x83, 0x43, 0x18, 0x01]
+        );
+    }
+
+    #[test]
+    fn jump_patching() {
+        let mut a = Asm::new();
+        let j = a.jmp_rel32();
+        a.mov_rr(RAX, RCX); // 3 bytes we jump over
+        let target = a.len();
+        a.ret();
+        a.patch_rel32(j, target);
+        // E9 rel32 where rel32 = target - (j + 4) = 8 - 5 = 3
+        assert_eq!(a.code[0], 0xE9);
+        assert_eq!(&a.code[1..5], &3i32.to_le_bytes());
+
+        let mut b = Asm::new();
+        let jc = b.jcc_rel32(CC_NE);
+        let t = b.len();
+        b.patch_rel32(jc, t);
+        assert_eq!(&b.code[..2], &[0x0F, 0x85]);
+        assert_eq!(&b.code[2..6], &0i32.to_le_bytes());
+    }
+
+    #[test]
+    fn rel32_for_absolute_addresses() {
+        // field at 0x1000, target 0x2000: rel = 0x2000 - 0x1004
+        assert_eq!(Asm::rel32_for(0x1000, 0x2000), 0xFFC);
+        // backwards
+        assert_eq!(Asm::rel32_for(0x2000, 0x1000), -(0x1004i32));
+    }
+}

@@ -73,6 +73,9 @@ pub struct DiffConfig {
     pub cycle_rel_tol: f64,
     /// Absolute cycle slack added on top of the relative tolerance.
     pub cycle_abs_tol: u64,
+    /// DBT backend for the lockstep/sharded engines under test (the
+    /// micro-op interpreter, or natively emitted x86-64 code).
+    pub backend: crate::dbt::Backend,
 }
 
 impl DiffConfig {
@@ -88,6 +91,7 @@ impl DiffConfig {
             check_cycles: harts == 1,
             cycle_rel_tol: 0.75,
             cycle_abs_tol: 5_000,
+            backend: crate::dbt::Backend::default(),
         }
     }
 }
@@ -320,7 +324,8 @@ pub fn check_program(
         let label = mode.as_str();
         let memory = if mode == EngineMode::Parallel { "atomic" } else { cfg.memory.as_str() };
         let pipeline = if mode == EngineMode::Lockstep { cfg.pipeline.as_str() } else { "atomic" };
-        let ec = sim_config(cfg.harts, mode, pipeline, memory);
+        let mut ec = sim_config(cfg.harts, mode, pipeline, memory);
+        ec.backend = cfg.backend;
         let mut eng = crate::coordinator::build_engine(&ec, &dut.image);
         match eng.run(cfg.max_insts) {
             ExitReason::Exited(code) if code == ref_exit => {}
@@ -370,7 +375,16 @@ pub fn check_program(
     // its cycle counts may skew within the quantum bound, which the
     // multi-hart `diff` already tolerates by not comparing instret, and
     // the explicit band below checks for the single-hart case.
-    let shard_counts: &[usize] = if cfg.harts == 1 { &[1] } else { &[2] };
+    let shard_counts: &[usize] = if cfg.harts == 1 {
+        &[1]
+    } else if cfg.harts >= 4 {
+        // Wider topologies (4- and 8-hart sweeps) also exercise a deeper
+        // shard split, so cross-shard mailbox traffic covers more than one
+        // remote shard per hart.
+        &[2, 4]
+    } else {
+        &[2]
+    };
     for &shards in shard_counts {
         for &quantum in &[1u64, 64] {
             let mut ec = sim_config(
@@ -381,6 +395,7 @@ pub fn check_program(
             );
             ec.shards = shards;
             ec.quantum = quantum;
+            ec.backend = cfg.backend;
             let label = format!("sharded[s{},q{}]", shards, quantum);
             let mut eng = crate::coordinator::build_engine(&ec, &dut.image);
             match eng.run(cfg.max_insts) {
@@ -487,6 +502,7 @@ fn step_check(seed: u64, image: &crate::asm::Image, cfg: &DiffConfig) -> Result<
 /// boundary.
 fn block_check(seed: u64, image: &crate::asm::Image, cfg: &DiffConfig) -> Result<(), Divergence> {
     let mut fib = fresh_fiber(image, 1, &cfg.pipeline, "atomic");
+    fib.backend = cfg.backend;
     let mut interp = fresh_interp(image, 1, "atomic");
     let mut blocks = 0u64;
     let mut retired = 0u64;
@@ -743,6 +759,26 @@ mod tests {
     fn dual_hart_smoke_seed() {
         let cfg = DiffConfig::new(2);
         run_seed(1, &cfg, BugInjection::None).unwrap();
+    }
+
+    #[test]
+    fn native_backend_smoke_seed() {
+        // The native x86-64 backend must be bit-identical to the micro-op
+        // interpreter on the same seed; skipped where unavailable.
+        if !crate::dbt::native_available() {
+            return;
+        }
+        let mut cfg = DiffConfig::new(1);
+        cfg.backend = crate::dbt::Backend::Native;
+        run_seed(1, &cfg, BugInjection::None).unwrap();
+    }
+
+    #[test]
+    fn eight_hart_smoke_seed() {
+        // The widest generated topology: 8 harts across 2- and 4-shard
+        // sharded splits (plus the serial engines) on one seed.
+        let cfg = DiffConfig::new(8);
+        run_seed(3, &cfg, BugInjection::None).unwrap();
     }
 
     #[test]

@@ -37,6 +37,15 @@ pub enum MsgKind {
     /// A remote hart wrote SIMCTRL with globally scoped fields (memory
     /// model / line size): apply them and flush local code caches.
     Simctrl { value: u64 },
+    /// Request the authoritative `mtimecmp[hart]` from the owning shard.
+    /// Posted when a guest *reads* a remote hart's timer compare (the read
+    /// latch in [`crate::sys::dev::Clint`]); `shard` is the requester, so
+    /// the owner knows where to send the reply.
+    ReadTimecmp { hart: usize, shard: usize },
+    /// Reply to [`MsgKind::ReadTimecmp`]: the owner's current
+    /// `mtimecmp[hart]`, routed back to requester `shard`, which installs
+    /// it as a refreshed snapshot (no write latch — it must not echo).
+    TimecmpValue { hart: usize, shard: usize, value: u64 },
 }
 
 /// One timestamped cross-shard message.

@@ -31,6 +31,8 @@
 //! [`crate::sys::SystemSnapshot`] and hand the guest to another engine
 //! (or receive one fast-forwarded by the parallel engine, §3.5).
 
+#[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+pub mod native;
 pub mod shard;
 pub mod sharded;
 

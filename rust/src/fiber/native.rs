@@ -1,0 +1,103 @@
+//! Rust-side runtime support for the native DBT backend: the `#[cold]`
+//! slow-path helpers that emitted code calls back into, and the
+//! [`NativeCtx`] construction used by the dispatch loop.
+//!
+//! The helpers deliberately never read or write the guest register file —
+//! emitted code may hold guest registers in host registers for a
+//! segment's lifetime, and values flow in and out through the SysV
+//! argument/return registers instead. `helper_read`'s result is already
+//! sign-extended; the native code writes `rd` itself.
+
+use crate::dbt::codegen::{unpack_mem, unpack_mul, NativeCtx};
+use crate::sys::exec;
+use crate::sys::{Hart, System};
+
+/// Two-eightbyte POD: returned in rax (value) / rdx (trap flag) under the
+/// SysV ABI, which is exactly how the emitted call site consumes it.
+#[repr(C)]
+pub struct ReadRet {
+    pub value: u64,
+    pub trap: u64,
+}
+
+/// Load slow path: L0 miss, misaligned, MMIO, or trap. Re-runs the full
+/// Rust `read_mem` (whose own lookup does the L0 counter bookkeeping —
+/// the emitted fast path has touched nothing on this path).
+///
+/// # Safety
+/// Called from emitted code with a [`NativeCtx`] whose `hart`/`sys`
+/// pointers are live and exclusive for the duration of the native call.
+pub unsafe extern "sysv64" fn helper_read(ctx: *mut NativeCtx, vaddr: u64, packed: u32) -> ReadRet {
+    let ctx = &mut *ctx;
+    let hart = &mut *(ctx.hart as *mut Hart);
+    let sys = &mut *(ctx.sys as *mut System);
+    let (width, signed) = unpack_mem(packed);
+    match exec::read_mem(hart, sys, vaddr, width) {
+        Ok(raw) => ReadRet { value: exec::sext_load(raw, width, signed), trap: 0 },
+        Err(t) => {
+            ctx.trap_cause = t.cause;
+            ctx.trap_tval = t.tval;
+            ReadRet { value: 0, trap: 1 }
+        }
+    }
+}
+
+/// Store slow path (L0 miss, read-only line, live LR reservation, MMIO,
+/// misaligned, or trap). Returns 0 on success, 1 on trap.
+///
+/// # Safety
+/// See [`helper_read`].
+pub unsafe extern "sysv64" fn helper_write(
+    ctx: *mut NativeCtx,
+    vaddr: u64,
+    value: u64,
+    packed: u32,
+) -> u64 {
+    let ctx = &mut *ctx;
+    let hart = &mut *(ctx.hart as *mut Hart);
+    let sys = &mut *(ctx.sys as *mut System);
+    let (width, _) = unpack_mem(packed);
+    match exec::write_mem(hart, sys, vaddr, width, value) {
+        Ok(()) => 0,
+        Err(t) => {
+            ctx.trap_cause = t.cause;
+            ctx.trap_tval = t.tval;
+            1
+        }
+    }
+}
+
+/// Pure M-extension helper (mul/div/rem and the mulh family share exact
+/// edge-case semantics with the interpreter by calling the same code).
+pub extern "sysv64" fn helper_mul(a: u64, b: u64, packed: u32) -> u64 {
+    let (op, word) = unpack_mul(packed);
+    exec::mul_value(op, word, a, b)
+}
+
+/// Populate a [`NativeCtx`] for one native call on hart `hart`.
+///
+/// The raw pointers stashed inside alias `hart`/`sys`; the caller must
+/// not touch either through Rust references while the native call runs
+/// (the dispatch loop treats the call like any other `exec_op`-style
+/// hand-off, exactly as it already does with its raw block pointers).
+pub fn build_ctx(hart: &mut Hart, sys: &mut System) -> NativeCtx {
+    let id = hart.id;
+    let l0d = &mut sys.l0[id].d;
+    NativeCtx {
+        regs: hart.regs.as_mut_ptr(),
+        d_tags: l0d.tags_ptr(),
+        d_xors: l0d.xors_ptr(),
+        d_acc: l0d.accesses_ptr(),
+        dram_bias: sys.phys.host_bias(),
+        resv: &sys.active_reservations as *const u32,
+        jump_target: 0,
+        taken: 0,
+        helper_read: helper_read as usize,
+        helper_write: helper_write as usize,
+        helper_mul: helper_mul as usize,
+        trap_cause: 0,
+        trap_tval: 0,
+        hart: hart as *mut Hart as *mut u8,
+        sys: sys as *mut System as *mut u8,
+    }
+}

@@ -126,6 +126,14 @@ pub struct ShardCore {
     pub yield_per_instruction: bool,
     /// A3 ablation: disable block chaining.
     pub chaining: bool,
+    /// Which backend executes translated blocks. `Native` emits x86-64
+    /// host code per block (DESIGN.md §11) and dispatches into it from
+    /// the step loop; everything else is unchanged, which is what keeps
+    /// the two backends bit-identical.
+    pub backend: crate::dbt::Backend,
+    /// `--dump-native <pc>`: dump emitted code for the block containing
+    /// this guest PC (diagnostics for failing seeds).
+    pub dump_native: Option<u64>,
     pub stats: EngineStats,
     /// Record cross-shard coherence traffic into `outbox` (set only by the
     /// multi-threaded sharded driver; the single-threaded engine never
@@ -152,6 +160,8 @@ impl ShardCore {
             base,
             yield_per_instruction: false,
             chaining: true,
+            backend: crate::dbt::Backend::default(),
+            dump_native: None,
             stats: EngineStats::default(),
             record_msgs: false,
             outbox: Vec::new(),
@@ -231,6 +241,14 @@ impl ShardCore {
                     self.caches[l].insert(pc, prv, block)
                 }
             };
+            // Native compilation happens on the chain-miss path only: a
+            // chain-followed entry means both blocks were entered this
+            // way before, so the native code (when enabled) exists.
+            #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+            if self.backend == crate::dbt::Backend::Native {
+                self.caches[l].native.dump_pc = self.dump_native;
+                self.caches[l].ensure_native(id, sys.l0[g].d.line_shift());
+            }
             // Eager link installation: the edge we just resolved becomes
             // chain-followable from its source block's next exit, whether
             // the target was already translated or not — each edge pays
@@ -238,6 +256,12 @@ impl ShardCore {
             let prev = self.conts[l].prev;
             if prev != NO_CHAIN && self.conts[l].prev_gen == self.caches[l].generation {
                 self.caches[l].install_link(prev, self.conts[l].prev_taken, id);
+                // Patch the emitted jmp on the same edge so future native
+                // exits take it without returning to Rust (DESIGN.md §11).
+                #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+                if self.backend == crate::dbt::Backend::Native {
+                    self.caches[l].native.patch_link(prev, self.conts[l].prev_taken, id);
+                }
             }
         }
         self.conts[l].clear_chain();
@@ -251,6 +275,10 @@ impl ShardCore {
                 self.stats.retranslations += 1;
                 let block = self.translate_block(sys, l, pc)?;
                 self.caches[l].replace(id, block);
+                #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+                if self.backend == crate::dbt::Backend::Native {
+                    self.caches[l].ensure_native(id, sys.l0[g].d.line_shift());
+                }
             }
         }
 
@@ -585,6 +613,16 @@ impl ShardCore {
         let steps_ptr = block.steps.as_ptr();
         let mut retired_in_slice = 0u64;
 
+        // Native dispatch gate, evaluated once per slice. Ablations,
+        // tracing and forced-cold runs fall back to the micro-op
+        // interpreter; the two backends are architecturally bit-identical
+        // (counters included), so mixing per slice is safe.
+        #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+        let native_ok = self.backend == crate::dbt::Backend::Native
+            && !self.yield_per_instruction
+            && sys.trace.is_none()
+            && !sys.force_cold;
+
         // ---- steps ----------------------------------------------------------
         while (self.conts[l].step as usize) < n_steps {
             let si = self.conts[l].step as usize;
@@ -611,6 +649,35 @@ impl ShardCore {
                 }
             }
             self.conts[l].resumed = false;
+
+            // Native segment dispatch (§3.1, DESIGN.md §11): if the block
+            // has compiled host code covering a run of steps starting at
+            // `si`, execute it and account for the whole run at once. A
+            // segment can only trap at its first step (its one memory
+            // op), so step `si`'s pc/npc is the right trap attribution;
+            // everything after the head is a plain ALU run.
+            #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+            if native_ok {
+                if let Some(seg) = self.caches[l].native.seg_at(id, si) {
+                    let (rc, ctx) = self.run_native(sys, l, seg.entry);
+                    if rc == crate::dbt::codegen::RC_TRAP {
+                        let trap = Trap::new(ctx.trap_cause, ctx.trap_tval);
+                        if self.nominal[l] {
+                            self.harts[l].pending += retired_in_slice;
+                        }
+                        self.deliver_trap(sys, l, trap, pc, npc);
+                        self.yield_now(l);
+                        return Slice::Ran;
+                    }
+                    debug_assert_eq!(rc, crate::dbt::codegen::RC_SEG_DONE);
+                    let hart = &mut self.harts[l];
+                    hart.instret += seg.count as u64;
+                    hart.pending += seg.cycles;
+                    retired_in_slice += seg.count as u64;
+                    self.conts[l].step = seg.end as u32;
+                    continue;
+                }
+            }
 
             // Fast path for the dominant trap-free step classes: ALU ops
             // skip the full exec_op dispatch (measured ~15% of lockstep
@@ -767,6 +834,57 @@ impl ShardCore {
         self.conts[l].resumed = false;
 
         let prv_before_term = self.harts[l].prv;
+
+        // Native terminator dispatch: branch/jal/jalr terminators with
+        // compiled host code perform the comparison / register writes in
+        // emitted code and leave the outcome in `ctx`; flow
+        // reconstruction and all retire/chain bookkeeping go through the
+        // same `retire_terminator` as the micro-op path, which is what
+        // keeps the two backends bit-identical. System terminators
+        // (csr/amo/mret/ecall/wfi/...) never have native code.
+        #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+        if native_ok {
+            if let Some(entry) = self.caches[l].native.term_at(id) {
+                let (rc, ctx) = self.run_native(sys, l, entry);
+                debug_assert!(
+                    rc == crate::dbt::codegen::RC_TERM
+                        || rc & 0xff == crate::dbt::codegen::RC_CHAINED,
+                    "unexpected native terminator exit code {rc:#x}"
+                );
+                let (flow, next_pc, taken) = match term.kind {
+                    TermKind::Branch => {
+                        if ctx.taken != 0 {
+                            (Flow::Taken, unsafe { &*block_ptr }.taken_target(), true)
+                        } else {
+                            (Flow::Next, npc, false)
+                        }
+                    }
+                    TermKind::Jump { .. } => {
+                        let t = unsafe { &*block_ptr }.taken_target();
+                        (Flow::Jump(t), t, true)
+                    }
+                    TermKind::IndirectJump => (Flow::Jump(ctx.jump_target), ctx.jump_target, true),
+                    TermKind::Fallthrough => {
+                        unreachable!("fallthrough terminators are never compiled")
+                    }
+                };
+                let prv_changed = self.harts[l].prv != prv_before_term;
+                self.retire_terminator(
+                    sys,
+                    l,
+                    id,
+                    &term,
+                    pc,
+                    next_pc,
+                    taken,
+                    flow,
+                    prv_changed,
+                    retired_in_slice,
+                );
+                return Slice::Ran;
+            }
+        }
+
         match exec_op(&mut self.harts[l], sys, &term.op, pc, npc) {
             Ok(flow) => {
                 let (next_pc, taken) = match flow {
@@ -778,77 +896,19 @@ impl ShardCore {
                         (npc, false)
                     }
                 };
-                if term.kind == TermKind::Branch {
-                    if let Some(t) = sys.trace.as_mut() {
-                        t.record_branch(pc, taken, g as u8);
-                    }
-                }
-                let hart = &mut self.harts[l];
-                hart.instret += 1;
-                hart.pending += if taken { term.cycles_taken } else { term.cycles_nt } as u64;
-                retired_in_slice += 1;
-                hart.pc = next_pc;
                 let prv_changed = self.harts[l].prv != prv_before_term;
-                if prv_changed {
-                    sys.l0[g].clear();
-                }
-                if self.nominal[l] {
-                    self.harts[l].pending += retired_in_slice;
-                }
-                let invalidated =
-                    if self.harts[l].effects.any() { self.process_effects(sys, l) } else { false };
-
-                // Block chaining (§3.1): record the exit edge. If this
-                // block already carries a generation-valid link for the
-                // edge, the next entry follows it directly (no PC re-hash,
-                // and for static targets no re-validation either);
-                // otherwise the entry's lookup installs the link eagerly.
-                // Privilege-changing exits never chain — translations are
-                // keyed by (pc, privilege) and a chained entry skips that
-                // key check. WFI exits never chain — the wake-up redirects
-                // into the trap vector.
-                self.conts[l].clear_chain();
-                if self.chaining && !invalidated && !prv_changed && !matches!(flow, Flow::Wfi) {
-                    // Which link slot this exit uses, and whether its
-                    // target is static for the whole generation (trusted
-                    // on entry) or dynamic (validated by PC on entry).
-                    let (slot_taken, direct) = match term.kind {
-                        TermKind::Branch => (taken, true),
-                        TermKind::Jump { .. } => (true, true),
-                        // jalr: cache the last target in the taken slot
-                        // (§3.4.2's indirect-target trick).
-                        TermKind::IndirectJump => (true, false),
-                        // Sequential fall-through is static; mret/sret
-                        // leave a Fallthrough terminator via Flow::Jump
-                        // toward a dynamic mepc/sepc target.
-                        TermKind::Fallthrough => (false, !matches!(flow, Flow::Jump(_))),
-                    };
-                    let gen = self.caches[l].generation;
-                    match self.caches[l].follow_chain(id, slot_taken) {
-                        Some(t) => {
-                            self.conts[l].next = t;
-                            self.conts[l].next_gen = gen;
-                            self.conts[l].next_direct = direct;
-                            if !direct {
-                                // Keep the source edge too: if the entry's
-                                // PC validation rejects the cached target
-                                // (the indirect retargeted), the fallback
-                                // lookup refreshes the link instead of
-                                // missing for the rest of the generation.
-                                self.conts[l].prev = id;
-                                self.conts[l].prev_taken = slot_taken;
-                                self.conts[l].prev_gen = gen;
-                            }
-                        }
-                        None => {
-                            self.conts[l].prev = id;
-                            self.conts[l].prev_taken = slot_taken;
-                            self.conts[l].prev_gen = gen;
-                        }
-                    }
-                }
-                self.conts[l].clear();
-                self.yield_now(l);
+                self.retire_terminator(
+                    sys,
+                    l,
+                    id,
+                    &term,
+                    pc,
+                    next_pc,
+                    taken,
+                    flow,
+                    prv_changed,
+                    retired_in_slice,
+                );
             }
             Err(trap) => {
                 if self.nominal[l] {
@@ -859,6 +919,118 @@ impl ShardCore {
             }
         }
         Slice::Ran
+    }
+
+    /// Retire an executed terminator: branch trace, instret/cycle
+    /// accounting, PC update, L0 clear on privilege change, side effects,
+    /// and chain-edge recording. Shared verbatim between the micro-op and
+    /// native backends — the backend only decides *how* the terminator's
+    /// architectural work happened, never how it is retired.
+    #[allow(clippy::too_many_arguments)]
+    fn retire_terminator(
+        &mut self,
+        sys: &mut System,
+        l: usize,
+        id: BlockId,
+        term: &crate::dbt::Term,
+        pc: u64,
+        next_pc: u64,
+        taken: bool,
+        flow: Flow,
+        prv_changed: bool,
+        mut retired_in_slice: u64,
+    ) {
+        let g = self.base + l;
+        if term.kind == TermKind::Branch {
+            if let Some(t) = sys.trace.as_mut() {
+                t.record_branch(pc, taken, g as u8);
+            }
+        }
+        let hart = &mut self.harts[l];
+        hart.instret += 1;
+        hart.pending += if taken { term.cycles_taken } else { term.cycles_nt } as u64;
+        retired_in_slice += 1;
+        hart.pc = next_pc;
+        if prv_changed {
+            sys.l0[g].clear();
+        }
+        if self.nominal[l] {
+            self.harts[l].pending += retired_in_slice;
+        }
+        let invalidated =
+            if self.harts[l].effects.any() { self.process_effects(sys, l) } else { false };
+
+        // Block chaining (§3.1): record the exit edge. If this
+        // block already carries a generation-valid link for the
+        // edge, the next entry follows it directly (no PC re-hash,
+        // and for static targets no re-validation either);
+        // otherwise the entry's lookup installs the link eagerly.
+        // Privilege-changing exits never chain — translations are
+        // keyed by (pc, privilege) and a chained entry skips that
+        // key check. WFI exits never chain — the wake-up redirects
+        // into the trap vector.
+        self.conts[l].clear_chain();
+        if self.chaining && !invalidated && !prv_changed && !matches!(flow, Flow::Wfi) {
+            // Which link slot this exit uses, and whether its
+            // target is static for the whole generation (trusted
+            // on entry) or dynamic (validated by PC on entry).
+            let (slot_taken, direct) = match term.kind {
+                TermKind::Branch => (taken, true),
+                TermKind::Jump { .. } => (true, true),
+                // jalr: cache the last target in the taken slot
+                // (§3.4.2's indirect-target trick).
+                TermKind::IndirectJump => (true, false),
+                // Sequential fall-through is static; mret/sret
+                // leave a Fallthrough terminator via Flow::Jump
+                // toward a dynamic mepc/sepc target.
+                TermKind::Fallthrough => (false, !matches!(flow, Flow::Jump(_))),
+            };
+            let gen = self.caches[l].generation;
+            match self.caches[l].follow_chain(id, slot_taken) {
+                Some(t) => {
+                    self.conts[l].next = t;
+                    self.conts[l].next_gen = gen;
+                    self.conts[l].next_direct = direct;
+                    if !direct {
+                        // Keep the source edge too: if the entry's
+                        // PC validation rejects the cached target
+                        // (the indirect retargeted), the fallback
+                        // lookup refreshes the link instead of
+                        // missing for the rest of the generation.
+                        self.conts[l].prev = id;
+                        self.conts[l].prev_taken = slot_taken;
+                        self.conts[l].prev_gen = gen;
+                    }
+                }
+                None => {
+                    self.conts[l].prev = id;
+                    self.conts[l].prev_taken = slot_taken;
+                    self.conts[l].prev_gen = gen;
+                }
+            }
+        }
+        self.conts[l].clear();
+        self.yield_now(l);
+    }
+
+    /// Call into emitted code at buffer offset `entry` on behalf of local
+    /// hart `l`, returning the exit code and the (possibly trap-carrying)
+    /// context.
+    #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+    fn run_native(
+        &mut self,
+        sys: &mut System,
+        l: usize,
+        entry: u32,
+    ) -> (u64, crate::dbt::codegen::NativeCtx) {
+        let mut ctx = super::native::build_ctx(&mut self.harts[l], sys);
+        // SAFETY: the emitted code only touches guest state through `ctx`,
+        // whose pointers are live for the whole call; the slow-path
+        // helpers re-borrow hart/sys from the raw pointers only while the
+        // Rust side is suspended inside `run` — the same hand-off
+        // discipline `run_slice` already applies to its raw block pointer.
+        let rc = unsafe { self.caches[l].native.run(entry, &mut ctx) };
+        (rc, ctx)
     }
 
     // -----------------------------------------------------------------------

@@ -263,6 +263,16 @@ impl ShardedEngine {
         }
     }
 
+    /// Select the DBT backend (and optional `--dump-native` PC) for every
+    /// core. A no-op beyond bookkeeping when `backend` is the default
+    /// micro-op interpreter.
+    pub fn set_backend(&mut self, backend: crate::dbt::Backend, dump_native: Option<u64>) {
+        for core in &mut self.cores {
+            core.backend = backend;
+            core.dump_native = dump_native;
+        }
+    }
+
     fn owner_of(&self, hart: usize) -> usize {
         self.cores
             .iter()
@@ -581,6 +591,14 @@ fn forward_boundary_msgs(
             let value = sys.bus.clint.mtimecmp[r];
             core.push_msg(boundary_cycle, from, MsgKind::SetTimecmp { hart: r, value });
         }
+        if std::mem::take(&mut sys.bus.clint.mtimecmp_read[r]) {
+            // A guest read of a remote hart's timer compare: the local copy
+            // it returned is only a forwarding snapshot, so ask the owner
+            // for the authoritative value. The reply lands as a
+            // `TimecmpValue` snapshot refresh two boundaries later, so a
+            // polling guest converges on the real deadline.
+            core.push_msg(boundary_cycle, from, MsgKind::ReadTimecmp { hart: r, shard: si });
+        }
         let bits = std::mem::take(&mut sys.ipi[r]);
         if bits != 0 {
             core.push_msg(boundary_cycle, from, MsgKind::Ipi { hart: r, bits });
@@ -601,7 +619,10 @@ fn forward_boundary_msgs(
         batch.extend(msgs.iter().filter(|m| match m.kind {
             MsgKind::SetMsip { hart, .. }
             | MsgKind::SetTimecmp { hart, .. }
-            | MsgKind::Ipi { hart, .. } => shared.owner[hart] == sj,
+            | MsgKind::Ipi { hart, .. }
+            | MsgKind::ReadTimecmp { hart, .. } => shared.owner[hart] == sj,
+            // Replies go back to the requesting shard, not the hart owner.
+            MsgKind::TimecmpValue { shard, .. } => shard == sj,
             MsgKind::MesiInvalidate { .. }
             | MsgKind::MesiShare { .. }
             | MsgKind::Simctrl { .. } => true,
@@ -621,6 +642,19 @@ fn apply_inbox(core: &mut ShardCore, sys: &mut System, msgs: Vec<Msg>) {
             MsgKind::SetTimecmp { hart, value } => sys.bus.clint.mtimecmp[hart] = value,
             MsgKind::Ipi { hart, bits } => sys.ipi[hart] |= bits,
             MsgKind::Simctrl { value } => core.apply_remote_simctrl(sys, value),
+            MsgKind::ReadTimecmp { hart, shard } => {
+                // We own `hart`: reply with the authoritative value. The
+                // reply rides the outbox and is routed to the requesting
+                // shard at this shard's next boundary.
+                let value = sys.bus.clint.mtimecmp[hart];
+                core.push_msg(m.cycle, core.base, MsgKind::TimecmpValue { hart, shard, value });
+            }
+            MsgKind::TimecmpValue { hart, value, .. } => {
+                // Snapshot refresh: a plain assignment, so neither the
+                // write latch (which would echo a `SetTimecmp` back at the
+                // owner) nor the read latch is disturbed.
+                sys.bus.clint.mtimecmp[hart] = value;
+            }
         }
     }
 }
@@ -971,6 +1005,47 @@ mod tests {
         let mut eng = sharded_with(&img, 2, 2, 64, "simple");
         assert_eq!(ExecutionEngine::run(&mut eng, 10_000_000), ExitReason::Exited(5050));
         assert_eq!(eng.per_hart().len(), 2);
+    }
+
+    #[test]
+    fn threaded_remote_mtimecmp_read_converges() {
+        // DESIGN.md §10: a guest reading a *remote* hart's mtimecmp must
+        // see the owner's authoritative value, not a stale forwarding
+        // snapshot, via the ReadTimecmp/TimecmpValue mailbox round trip.
+        // Hart 1 (shard 1) arms its own timer; hart 0 (shard 0) polls the
+        // remote entry and exits with a marker once the value shows up —
+        // without the request/response pair it would spin on the neutral
+        // u64::MAX snapshot until the step limit.
+        const ARMED: i64 = 0x0600_0000;
+        let mtimecmp1 = (crate::sys::dev::CLINT_BASE + 0x4000 + 8) as i64;
+        let mut a = Assembler::new(DRAM_BASE);
+        let hart1 = a.new_label();
+        a.csrr(T0, crate::isa::csr::CSR_MHARTID);
+        a.bnez(T0, hart1);
+        // Hart 0: poll mtimecmp[1] until the armed value appears.
+        a.li(T1, mtimecmp1);
+        a.li(T2, ARMED);
+        let poll = a.here();
+        a.ld(T3, T1, 0);
+        a.bne(T3, T2, poll);
+        a.li(A0, 7);
+        a.li(A7, 93);
+        a.ecall();
+        // Hart 1: arm its own timer (authoritative in its shard), spin.
+        a.bind(hart1);
+        a.li(T1, mtimecmp1);
+        a.li(T2, ARMED);
+        a.sd(T2, T1, 0);
+        let spin = a.here();
+        a.j(spin);
+        let img = a.finish();
+        let mut eng = sharded_with(&img, 2, 2, 64, "simple");
+        assert_eq!(ExecutionEngine::run(&mut eng, 10_000_000), ExitReason::Exited(7));
+        // The poller's snapshot holds the owner's value, and the refresh
+        // must not have latched a write (which would echo back as a
+        // SetTimecmp and clobber the owner on a later boundary).
+        assert_eq!(eng.systems[0].bus.clint.mtimecmp[1], ARMED as u64);
+        assert!(!eng.systems[0].bus.clint.mtimecmp_written[1]);
     }
 
     #[test]

@@ -20,6 +20,7 @@ fn usage() -> ! {
         "usage:
   r2vm-repro run [--workload NAME | --elf PATH | --restore CKPT] [options]
   r2vm-repro bench [--runs N] [--quick] [--workload NAME] [--json PATH]
+                   [--compare BASELINE]
   r2vm-repro ckpt PATH
   r2vm-repro models
   r2vm-repro workloads
@@ -33,6 +34,10 @@ coremark; see DESIGN.md \u{a7}9):
   --quick            reduced workload sizes (the CI smoke configuration)
   --workload NAME    bench only this workload
   --json PATH        machine-readable report (default BENCH_engines.json)
+  --compare PATH     diff this run against a baseline report JSON
+                     (e.g. the committed BENCH_baseline.json): prints
+                     per-row MIPS deltas, with unmatched rows listed as
+                     new/gone
   --quiet            suppress the table
 
 difftest options (differential co-simulation fuzzer — every engine vs the
@@ -49,6 +54,9 @@ cycle-level reference; see DESIGN.md \u{a7}8):
   --no-cycle-check   skip the DBT-vs-reference cycle tolerance check
                      (only applied under --memory atomic anyway)
   --cycle-tol PCT    relative cycle tolerance in percent (default 75)
+  --backend B        DBT backend for the engines under test: microop |
+                     native (default microop; native requires an x86-64
+                     Linux host)
   --fail-out PATH    write failing seeds (one per line) for CI artifacts
   --quiet            suppress the sweep summary
   --inject-bug K     sabotage engines to prove the harness catches bugs
@@ -59,6 +67,12 @@ run options:
   --pipeline M       atomic | simple | inorder (default simple)
   --memory M         atomic | tlb | cache | mesi (default atomic)
   --mode M           lockstep | parallel | interp | sharded (default lockstep)
+  --backend B        DBT backend: microop (portable micro-op interpreter,
+                     default) | native (emit real x86-64 host code per
+                     translated block; requires an x86-64 Linux host,
+                     bit-identical results)
+  --dump-native PC   with --backend native: hex-dump the emitted host
+                     code of the block translated at guest address PC
   --shards S         sharded mode: host threads the harts are partitioned
                      across (default 1; clamped to the hart count)
   --quantum Q        sharded mode: deterministic barrier quantum in cycles
@@ -163,12 +177,30 @@ fn main() {
                         };
                         opts.json_path = path.clone();
                     }
+                    "compare" => {
+                        let Some(path) = it.next() else {
+                            eprintln!("--compare needs a baseline JSON path");
+                            usage();
+                        };
+                        opts.compare_path = Some(path.clone());
+                    }
                     _ => {
                         eprintln!("unknown bench option --{}", key);
                         usage();
                     }
                 }
             }
+            // Read the baseline up front so a bad path fails before the
+            // (long) measurement run, not after it.
+            let baseline = opts.compare_path.as_ref().map(|path| {
+                match std::fs::read_to_string(path) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        eprintln!("reading baseline {}: {}", path, e);
+                        std::process::exit(2);
+                    }
+                }
+            });
             let report = r2vm::bench::run_bench(&opts);
             if let Err(e) = std::fs::write(&opts.json_path, report.to_json()) {
                 eprintln!("writing {}: {}", opts.json_path, e);
@@ -177,6 +209,9 @@ fn main() {
             if !quiet {
                 print!("{}", report.table());
                 println!("bench report written to {}", opts.json_path);
+            }
+            if let Some(base) = baseline {
+                print!("{}", report.compare(&base));
             }
             if report.cells.iter().any(|c| c.exit.is_none()) || !report.skipped.is_empty() {
                 eprintln!("warning: some cells were skipped or did not exit cleanly");
@@ -210,6 +245,7 @@ fn main() {
             let mut no_cycle_check = false;
             let mut quiet = false;
             let mut fail_out: Option<String> = None;
+            let mut backend = r2vm::dbt::Backend::Microop;
             let mut bug = BugInjection::None;
             let mut it = args[1..].iter();
             // Accepts decimal or 0x-prefixed hex — failure reports print
@@ -253,6 +289,16 @@ fn main() {
                     "max-insts" => max_insts = Some(parse_num(key, it.next())),
                     "cycle-tol" => cycle_tol = Some(parse_num(key, it.next()) as f64 / 100.0),
                     "memory" => memory = Some(want_value(key, it.next())),
+                    "backend" => {
+                        let v = want_value(key, it.next());
+                        match r2vm::dbt::Backend::parse(&v) {
+                            Some(b) => backend = b,
+                            None => {
+                                eprintln!("unknown backend '{}' (microop|native)", v);
+                                usage();
+                            }
+                        }
+                    }
                     "shrink" => shrink = true,
                     "no-lockstep" => no_lockstep = true,
                     "no-cycle-check" => no_cycle_check = true,
@@ -289,6 +335,14 @@ fn main() {
             if let Some(t) = cycle_tol {
                 cfg.cycle_rel_tol = t;
             }
+            if backend == r2vm::dbt::Backend::Native && !r2vm::dbt::native_available() {
+                eprintln!(
+                    "--backend native requires an x86-64 Linux host (and a passing \
+                     emitter self-check)"
+                );
+                std::process::exit(2);
+            }
+            cfg.backend = backend;
             cfg.lockstep = !no_lockstep;
             cfg.check_cycles = cfg.check_cycles && !no_cycle_check;
 

@@ -162,6 +162,26 @@ impl L0DCache {
     pub fn stats(&self) -> (u64, u64) {
         (self.accesses, self.misses)
     }
+
+    // ---- raw access for the native DBT backend ----------------------------
+    // Emitted code performs the Figure 4 probe directly on these arrays;
+    // the layout contract (packed tag word, xor word, hit-only counter
+    // bump) is documented in DESIGN.md §11.
+
+    pub fn tags_ptr(&self) -> *const u64 {
+        self.tags.as_ptr()
+    }
+
+    pub fn xors_ptr(&self) -> *const u64 {
+        self.xors.as_ptr()
+    }
+
+    /// Pointer to the `accesses` counter: native code bumps it on hits
+    /// only (every other path funnels through [`Self::lookup_read`] /
+    /// [`Self::lookup_write`], which count for themselves).
+    pub fn accesses_ptr(&mut self) -> *mut u64 {
+        &mut self.accesses
+    }
 }
 
 /// L0 instruction cache. Simpler entry layout (no writable bit, §3.4.2):

@@ -49,6 +49,15 @@ impl PhysMem {
             }
     }
 
+    /// Host-address bias for direct DRAM access: `paddr + host_bias()` is
+    /// the host address of `paddr`'s byte. Used by the native DBT backend
+    /// (whose emitted loads/stores are plain moves — equivalent to the
+    /// relaxed atomics used everywhere else on x86-64).
+    #[inline(always)]
+    pub fn host_bias(&self) -> u64 {
+        (self.mem.as_ptr() as u64).wrapping_sub(self.base)
+    }
+
     #[inline(always)]
     fn idx(&self, paddr: u64) -> usize {
         debug_assert!(self.contains(paddr, 1), "paddr {:#x} out of DRAM", paddr);

@@ -37,6 +37,12 @@ pub struct Clint {
     /// write is forwarded, including rewrites of the current value and
     /// disarms back to `u64::MAX` (a value diff would miss both).
     pub mtimecmp_written: Vec<bool>,
+    /// Per-hart "mtimecmp was read" latches. The sharded engine's boundary
+    /// forwarding turns a latched read of a *remote* hart's entry into a
+    /// mailbox request for the owner's authoritative value, so a guest
+    /// polling another hart's timer converges on the real deadline instead
+    /// of a stale forwarding snapshot.
+    pub mtimecmp_read: Vec<bool>,
     /// Ratio of cycles per mtime tick (1 = mtime counts cycles).
     pub time_shift: u32,
 }
@@ -47,6 +53,7 @@ impl Clint {
             msip: vec![false; harts],
             mtimecmp: vec![u64::MAX; harts],
             mtimecmp_written: vec![false; harts],
+            mtimecmp_read: vec![false; harts],
             time_shift: 0,
         }
     }
@@ -80,7 +87,7 @@ impl Clint {
             .map(|t| t << self.time_shift)
     }
 
-    pub fn read(&self, offset: u64, now_cycle: u64) -> u64 {
+    pub fn read(&mut self, offset: u64, now_cycle: u64) -> u64 {
         match offset {
             // msip registers: 4 bytes per hart
             o if o < 0x4000 => {
@@ -95,6 +102,7 @@ impl Clint {
             o if (0x4000..0xBFF8).contains(&o) => {
                 let hart = ((o - 0x4000) / 8) as usize;
                 if hart < self.mtimecmp.len() {
+                    self.mtimecmp_read[hart] = true;
                     let v = self.mtimecmp[hart];
                     if (o - 0x4000) % 8 == 0 {
                         v
@@ -402,6 +410,23 @@ mod tests {
         c.mtimecmp_written[1] = false;
         c.write(4, 1, 4);
         assert!(!c.mtimecmp_written[1]);
+    }
+
+    #[test]
+    fn clint_mtimecmp_read_latch() {
+        // The sharded boundary forwarding turns latched remote reads into
+        // value requests, so any mtimecmp read — full or split word — must
+        // latch, and nothing else (msip, mtime) may.
+        let mut c = Clint::new(2);
+        c.read(0x4008, 0);
+        assert!(c.mtimecmp_read[1] && !c.mtimecmp_read[0]);
+        c.mtimecmp_read[1] = false;
+        c.read(0x400c, 0); // high word of mtimecmp[1]
+        assert!(c.mtimecmp_read[1]);
+        c.mtimecmp_read[1] = false;
+        c.read(0, 0); // msip
+        c.read(0xBFF8, 0); // mtime
+        assert!(!c.mtimecmp_read[0] && !c.mtimecmp_read[1]);
     }
 
     #[test]

@@ -257,6 +257,14 @@ fn alu(op: AluOp, word: bool, a: u64, b: u64) -> u64 {
     }
 }
 
+/// Public M-extension evaluator — the native DBT backend's mul/div
+/// helper routes through here so edge cases (division by zero, overflow,
+/// mulh) can never diverge from the interpreter.
+#[inline(always)]
+pub fn mul_value(op: MulOp, word: bool, a: u64, b: u64) -> u64 {
+    mul(op, word, a, b)
+}
+
 #[inline(always)]
 fn mul(op: MulOp, word: bool, a: u64, b: u64) -> u64 {
     if word {

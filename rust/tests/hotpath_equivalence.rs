@@ -13,12 +13,14 @@
 //!  * the A3 no-chaining DBT configuration, which disables chain
 //!    dispatch — every counter must match.
 
+use r2vm::asm::*;
 use r2vm::coordinator::{build_system, EngineMode, SimConfig};
 use r2vm::difftest::generator::generate;
 use r2vm::difftest::BugInjection;
 use r2vm::engine::ExitReason;
 use r2vm::fiber::FiberEngine;
 use r2vm::interp::InterpEngine;
+use r2vm::mem::DRAM_BASE;
 use r2vm::sys::loader::load_flat;
 use r2vm::sys::Hart;
 
@@ -181,6 +183,143 @@ fn chain_dispatch_changes_no_counters() {
     // Straight-line seeds legitimately chain nothing (every edge runs
     // once); across the corpus the looped seeds must exercise the path.
     assert!(total_chain_hits > 0, "corpus must exercise chain dispatch");
+}
+
+/// Native x86-64 backend vs the micro-op backend across the corpus:
+/// bit-identical architectural end state and every counter — cycles, L0 D
+/// and I, memory model, chain/block statistics. The native backend only
+/// changes *how* lowered segments execute; all scheduling, chaining and
+/// model bookkeeping stays in shared Rust code, so equality must be exact.
+/// Skipped (vacuously passing) where the native backend is unavailable.
+#[test]
+fn native_backend_matches_microop_on_corpus() {
+    if !r2vm::dbt::native_available() {
+        return;
+    }
+    for seed in 0..10u64 {
+        for (pipeline, memory) in [("simple", "atomic"), ("inorder", "cache")] {
+            let prog = generate(seed, 1);
+            let asm = prog.assemble(BugInjection::None);
+
+            let mut native = fiber_for(&asm.image, 1, pipeline, memory);
+            native.backend = r2vm::dbt::Backend::Native;
+            let nr = native.run(BUDGET);
+            let mut micro = fiber_for(&asm.image, 1, pipeline, memory);
+            let mr = micro.run(BUDGET);
+
+            assert!(matches!(nr, ExitReason::Exited(_)), "seed {}: native {:?}", seed, nr);
+            assert_eq!(nr, mr, "seed {} {}/{}: exit reasons", seed, pipeline, memory);
+            assert_harts_equal(&micro.harts[0], &native.harts[0], "microop-vs-native", seed);
+            assert_eq!(
+                micro.harts[0].cycle, native.harts[0].cycle,
+                "seed {} {}/{}: simulated cycles",
+                seed, pipeline, memory
+            );
+            assert_eq!(
+                micro.sys.bus.uart.output, native.sys.bus.uart.output,
+                "seed {}: console",
+                seed
+            );
+            assert_eq!(
+                micro.sys.l0[0].d.stats(),
+                native.sys.l0[0].d.stats(),
+                "seed {} {}/{}: D-side L0 counters",
+                seed, pipeline, memory
+            );
+            assert_eq!(
+                micro.sys.l0[0].i.stats(),
+                native.sys.l0[0].i.stats(),
+                "seed {} {}/{}: I-side L0 counters",
+                seed, pipeline, memory
+            );
+            assert_eq!(
+                micro.sys.model.stats(),
+                native.sys.model.stats(),
+                "seed {} {}/{}: memory-model counters",
+                seed, pipeline, memory
+            );
+            assert_eq!(
+                micro.stats.chain_hits, native.stats.chain_hits,
+                "seed {} {}/{}: chain hits",
+                seed, pipeline, memory
+            );
+            assert_eq!(
+                micro.stats.chain_misses, native.stats.chain_misses,
+                "seed {} {}/{}: chain misses",
+                seed, pipeline, memory
+            );
+            assert_eq!(
+                micro.stats.block_entries, native.stats.block_entries,
+                "seed {} {}/{}: block entries",
+                seed, pipeline, memory
+            );
+        }
+    }
+}
+
+/// Self-modifying code under both backends: a hot chained loop is patched
+/// by the guest (+2 body rewritten to +1), fence.i flushes translations,
+/// and the loop reruns. Both backends must produce the exact sum and the
+/// same chain statistics — the native backend's generation-stamped buffer
+/// reset must be as thorough as the micro-op path's cache flush.
+#[test]
+fn smc_fence_i_equivalent_across_backends() {
+    let patched = r2vm::isa::encode(r2vm::isa::Op::AluImm {
+        op: r2vm::isa::AluOp::Add,
+        word: false,
+        rd: A1,
+        rs1: A1,
+        imm: 1,
+    });
+    let mut a = Assembler::new(DRAM_BASE);
+    let body = a.new_label();
+    let finish = a.new_label();
+    a.li(S2, 0); // phase flag
+    a.li(A1, 0); // accumulator
+    let restart = a.here();
+    a.li(A0, 100);
+    let top = a.here();
+    a.bind(body);
+    a.addi(A1, A1, 2); // overwritten with +1 before phase 2
+    a.addi(A0, A0, -1);
+    a.bnez(A0, top);
+    a.bnez(S2, finish);
+    a.li(S2, 1);
+    a.la(T0, body);
+    a.li(T1, patched as i64);
+    a.sw(T1, T0, 0);
+    a.fence_i();
+    a.j(restart);
+    a.bind(finish);
+    a.mv(A0, A1);
+    a.li(A7, 93);
+    a.ecall();
+    let img = a.finish();
+
+    let mut micro = fiber_for(&img, 1, "simple", "atomic");
+    assert_eq!(
+        micro.run(1_000_000),
+        ExitReason::Exited(100 * 2 + 100 * 1),
+        "micro-op backend: stale translation or chain link executed after fence.i"
+    );
+    assert!(micro.caches[0].flushes >= 1);
+    assert!(micro.stats.chain_hits > 150, "both phases must chain: {:?}", micro.stats);
+
+    if !r2vm::dbt::native_available() {
+        return;
+    }
+    let mut native = fiber_for(&img, 1, "simple", "atomic");
+    native.backend = r2vm::dbt::Backend::Native;
+    assert_eq!(
+        native.run(1_000_000),
+        ExitReason::Exited(100 * 2 + 100 * 1),
+        "native backend: stale native code or chain patch executed after fence.i"
+    );
+    assert_harts_equal(&micro.harts[0], &native.harts[0], "smc microop-vs-native", 0);
+    assert_eq!(micro.harts[0].cycle, native.harts[0].cycle, "smc: simulated cycles");
+    assert_eq!(micro.stats.chain_hits, native.stats.chain_hits, "smc: chain hits");
+    assert_eq!(micro.stats.chain_misses, native.stats.chain_misses, "smc: chain misses");
+    assert_eq!(micro.stats.block_entries, native.stats.block_entries, "smc: block entries");
 }
 
 /// Multi-hart lockstep under MESI: chain dispatch must leave the

@@ -1,0 +1,197 @@
+//! Native x86-64 backend robustness tests: W^X buffer exhaustion must
+//! flush-and-retranslate cleanly, `fence.i` self-modifying code must
+//! discard native code and its patched chain jmps, and `--dump-native`
+//! must not disturb execution. Every test that runs native code gates on
+//! `native_available()`, so the suite passes vacuously on other hosts.
+
+/// `native_available()` must agree with the compile target: true on
+/// x86-64 Linux (the emitter self-check has to pass there), false
+/// everywhere else.
+#[test]
+fn availability_matches_host() {
+    #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+    assert!(r2vm::dbt::native_available(), "emitter self-check failed on x86-64 Linux");
+    #[cfg(not(all(target_arch = "x86_64", target_os = "linux")))]
+    assert!(!r2vm::dbt::native_available());
+}
+
+#[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+mod native {
+    use r2vm::asm::*;
+    use r2vm::coordinator::{build_system, EngineMode, SimConfig};
+    use r2vm::dbt::Backend;
+    use r2vm::difftest::generator::generate;
+    use r2vm::difftest::BugInjection;
+    use r2vm::engine::ExitReason;
+    use r2vm::fiber::FiberEngine;
+    use r2vm::mem::DRAM_BASE;
+    use r2vm::sys::loader::load_flat;
+
+    const BUDGET: u64 = 2_000_000;
+
+    fn fiber_for(image: &Image, pipeline: &str, memory: &str) -> FiberEngine {
+        let cfg = SimConfig {
+            harts: 1,
+            mode: EngineMode::Lockstep,
+            pipeline: pipeline.into(),
+            memory: memory.into(),
+            ..SimConfig::default()
+        };
+        let mut eng = FiberEngine::new(build_system(&cfg), pipeline);
+        let entry = load_flat(&eng.sys, image);
+        eng.set_entry(entry);
+        eng
+    }
+
+    fn assert_same_end_state(micro: &FiberEngine, native: &FiberEngine, seed: u64) {
+        assert_eq!(micro.harts[0].regs, native.harts[0].regs, "seed {}: registers", seed);
+        assert_eq!(micro.harts[0].pc, native.harts[0].pc, "seed {}: pc", seed);
+        assert_eq!(micro.harts[0].instret, native.harts[0].instret, "seed {}: instret", seed);
+        assert_eq!(micro.harts[0].cycle, native.harts[0].cycle, "seed {}: cycles", seed);
+        assert_eq!(
+            micro.stats.chain_hits, native.stats.chain_hits,
+            "seed {}: chain hits",
+            seed
+        );
+        assert_eq!(
+            micro.stats.chain_misses, native.stats.chain_misses,
+            "seed {}: chain misses",
+            seed
+        );
+        assert_eq!(
+            micro.stats.block_entries, native.stats.block_entries,
+            "seed {}: block entries",
+            seed
+        );
+    }
+
+    /// A 4 KiB code buffer is guaranteed to exhaust on the difftest
+    /// corpus. Exhaustion must reset the native side only and retry —
+    /// execution, timing and chain statistics stay bit-identical to the
+    /// micro-op backend throughout.
+    #[test]
+    fn exhaustion_flushes_and_retranslates_cleanly() {
+        if !r2vm::dbt::native_available() {
+            return;
+        }
+        let mut total_exhaustions = 0u64;
+        for seed in 0..3u64 {
+            let prog = generate(seed, 1);
+            let asm = prog.assemble(BugInjection::None);
+
+            let mut native = fiber_for(&asm.image, "simple", "atomic");
+            native.backend = Backend::Native;
+            native.caches[0].native.set_capacity(4096);
+            let nr = native.run(BUDGET);
+            let mut micro = fiber_for(&asm.image, "simple", "atomic");
+            let mr = micro.run(BUDGET);
+
+            assert!(matches!(nr, ExitReason::Exited(_)), "seed {}: {:?}", seed, nr);
+            assert_eq!(nr, mr, "seed {}: exit reasons", seed);
+            assert_same_end_state(&micro, &native, seed);
+
+            let nc = &native.caches[0].native;
+            assert!(nc.compiles > 0, "seed {}: nothing compiled", seed);
+            assert!(
+                nc.resets >= nc.exhaustions,
+                "seed {}: every exhaustion must reset the buffer",
+                seed
+            );
+            total_exhaustions += nc.exhaustions;
+        }
+        assert!(total_exhaustions > 0, "a 4 KiB buffer must exhaust on this corpus");
+    }
+
+    /// Phase 1 runs a hot, fully-chained loop adding 2 per iteration; the
+    /// guest then patches the loop body to add 1, issues fence.i and reruns
+    /// the loop. The code-cache flush bumps the generation, which must
+    /// discard the native buffer wholesale — including every patched chain
+    /// jmp — or the stale +2 body would execute and corrupt the sum.
+    fn smc_image() -> Image {
+        let patched = r2vm::isa::encode(r2vm::isa::Op::AluImm {
+            op: r2vm::isa::AluOp::Add,
+            word: false,
+            rd: A1,
+            rs1: A1,
+            imm: 1,
+        });
+        let mut a = Assembler::new(DRAM_BASE);
+        let body = a.new_label();
+        let finish = a.new_label();
+        a.li(S2, 0); // phase flag
+        a.li(A1, 0); // accumulator
+        let restart = a.here();
+        a.li(A0, 100);
+        let top = a.here();
+        a.bind(body);
+        a.addi(A1, A1, 2); // overwritten with +1 before phase 2
+        a.addi(A0, A0, -1);
+        a.bnez(A0, top);
+        a.bnez(S2, finish);
+        a.li(S2, 1);
+        a.la(T0, body);
+        a.li(T1, patched as i64);
+        a.sw(T1, T0, 0);
+        a.fence_i();
+        a.j(restart);
+        a.bind(finish);
+        a.mv(A0, A1);
+        a.li(A7, 93);
+        a.ecall();
+        a.finish()
+    }
+
+    #[test]
+    fn fence_i_discards_native_code_and_patched_chains() {
+        if !r2vm::dbt::native_available() {
+            return;
+        }
+        let img = smc_image();
+        let mut native = fiber_for(&img, "simple", "atomic");
+        native.backend = Backend::Native;
+        assert_eq!(
+            native.run(1_000_000),
+            ExitReason::Exited(100 * 2 + 100 * 1),
+            "stale native code or chain patch executed after fence.i"
+        );
+        let mut micro = fiber_for(&img, "simple", "atomic");
+        assert_eq!(micro.run(1_000_000), ExitReason::Exited(100 * 2 + 100 * 1));
+        assert_same_end_state(&micro, &native, 0);
+
+        assert!(native.caches[0].flushes >= 1, "fence.i must flush the code cache");
+        let nc = &native.caches[0].native;
+        assert!(nc.patches >= 1, "the hot loop must patch native chain jmps");
+        assert!(nc.resets >= 1, "the generation bump must reset the native buffer");
+        assert!(
+            native.stats.chain_hits > 150,
+            "both phases must chain: {:?}",
+            native.stats
+        );
+    }
+
+    /// `--dump-native <pc>` plumbs down to the per-hart native cache and
+    /// dumps to stderr without disturbing execution.
+    #[test]
+    fn dump_native_does_not_disturb_execution() {
+        if !r2vm::dbt::native_available() {
+            return;
+        }
+        let mut a = Assembler::new(DRAM_BASE);
+        a.li(S0, 50);
+        a.li(A0, 0);
+        let top = a.here();
+        a.addi(A0, A0, 3);
+        a.addi(S0, S0, -1);
+        a.bnez(S0, top);
+        a.li(A7, 93);
+        a.ecall();
+        let img = a.finish();
+
+        let mut eng = fiber_for(&img, "simple", "atomic");
+        eng.backend = Backend::Native;
+        eng.dump_native = Some(DRAM_BASE);
+        assert_eq!(eng.run(100_000), ExitReason::Exited(150));
+        assert_eq!(eng.caches[0].native.dump_pc, Some(DRAM_BASE));
+        assert!(eng.caches[0].native.compiles > 0);
+    }
+}
