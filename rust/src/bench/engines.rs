@@ -36,6 +36,9 @@ pub struct BenchOptions {
     pub json_path: String,
     /// Baseline JSON to diff against (`--compare`): per-row MIPS deltas.
     pub compare_path: Option<String>,
+    /// With `compare_path`: exit nonzero when any matched row's MIPS
+    /// regresses more than this many percent vs the baseline.
+    pub fail_threshold: Option<f64>,
 }
 
 impl Default for BenchOptions {
@@ -46,6 +49,7 @@ impl Default for BenchOptions {
             workload: None,
             json_path: "BENCH_engines.json".into(),
             compare_path: None,
+            fail_threshold: None,
         }
     }
 }
@@ -103,6 +107,10 @@ pub struct Cell {
     /// `Some("native")` on native-DBT-backend rows; `None` on the default
     /// micro-op rows, which keep their exact pre-native schema.
     pub backend: Option<&'static str>,
+    /// `Some("traced")` on the observability-ablation row (event tracing
+    /// plus block profiling enabled); `None` on every ordinary row, which
+    /// keeps its exact pre-observability schema.
+    pub obs: Option<&'static str>,
     pub measurement: Measurement,
     /// Guest instructions / simulated cycles of the best timed run (the
     /// run `measurement.best` measures).
@@ -123,17 +131,25 @@ fn cell_label(
     lookup_dispatch: bool,
     sharding: Option<(usize, u64)>,
     backend: Option<&str>,
+    obs: Option<&str>,
 ) -> String {
     let ablation = if lookup_dispatch { "/nochain" } else { "" };
     let native = match backend {
         Some(b) => format!("/{}", b),
         None => String::new(),
     };
+    let traced = match obs {
+        Some(o) => format!("/{}", o),
+        None => String::new(),
+    };
     let shard = match sharding {
         Some((s, q)) => format!("[s{},q{}]", s, q),
         None => String::new(),
     };
-    format!("{} {}{}/{}+{}{}{}", workload, mode, shard, pipeline, memory, ablation, native)
+    format!(
+        "{} {}{}/{}+{}{}{}{}",
+        workload, mode, shard, pipeline, memory, ablation, native, traced
+    )
 }
 
 impl Cell {
@@ -146,6 +162,7 @@ impl Cell {
             self.dispatch == "lookup",
             self.sharding,
             self.backend,
+            self.obs,
         )
     }
 
@@ -156,15 +173,20 @@ impl Cell {
             Some((s, q)) => format!("[s{},q{}]", s, q),
             None => String::new(),
         };
+        let traced = match self.obs {
+            Some(o) => format!("/{}", o),
+            None => String::new(),
+        };
         format!(
-            "{} {}{}/{}+{}/{}/{}",
+            "{} {}{}/{}+{}/{}/{}{}",
             self.workload,
             self.mode,
             shard,
             self.pipeline,
             self.memory,
             self.dispatch,
-            self.backend.unwrap_or("microop")
+            self.backend.unwrap_or("microop"),
+            traced
         )
     }
 
@@ -196,6 +218,7 @@ fn run_cell(
     lookup_dispatch: bool,
     sharding: Option<(usize, u64)>,
     backend: Option<&'static str>,
+    traced: bool,
     runs: u32,
     quick: bool,
 ) -> Option<Cell> {
@@ -208,6 +231,12 @@ fn run_cell(
     cfg.no_chaining = lookup_dispatch;
     if backend == Some("native") {
         cfg.backend = crate::dbt::Backend::Native;
+    }
+    if traced {
+        // Observability ablation: event tracing + block profiling on, no
+        // output file — measures the recording overhead itself.
+        cfg.trace_events = true;
+        cfg.profile = true;
     }
     if let Some((shards, quantum)) = sharding {
         cfg.shards = shards;
@@ -231,6 +260,7 @@ fn run_cell(
         harts,
         sharding,
         backend,
+        obs: traced.then_some("traced"),
         measurement: Measurement {
             name: String::new(),
             best: Duration::ZERO,
@@ -299,18 +329,44 @@ pub fn run_bench(opts: &BenchOptions) -> BenchReport {
             for backend in backends {
                 for &lookup in &variants {
                     match run_cell(
-                        workload, harts, mode, pipeline, memory, lookup, None, backend, runs,
-                        opts.quick,
+                        workload, harts, mode, pipeline, memory, lookup, None, backend, false,
+                        runs, opts.quick,
                     ) {
                         Some(cell) => cells.push(cell),
                         None => {
                             let label = cell_label(
-                                workload, mode, pipeline, memory, lookup, None, backend,
+                                workload, mode, pipeline, memory, lookup, None, backend, None,
                             );
                             eprintln!("warning: bench cell {} could not run (skipped)", label);
                             skipped.push(label);
                         }
                     }
+                }
+            }
+        }
+        // Observability ablation (DESIGN.md §12): the coremark chain cell
+        // re-measured with event tracing + block profiling enabled, next
+        // to its untraced twin above, so the trace-on overhead — and the
+        // disabled-path "within noise" contract — is readable per PR.
+        if workload == "coremark-lite" {
+            match run_cell(
+                workload, harts, "lockstep", "simple", "atomic", false, None, None, true, runs,
+                opts.quick,
+            ) {
+                Some(cell) => cells.push(cell),
+                None => {
+                    let label = cell_label(
+                        workload,
+                        "lockstep",
+                        "simple",
+                        "atomic",
+                        false,
+                        None,
+                        None,
+                        Some("traced"),
+                    );
+                    eprintln!("warning: bench cell {} could not run (skipped)", label);
+                    skipped.push(label);
                 }
             }
         }
@@ -321,13 +377,13 @@ pub fn run_bench(opts: &BenchOptions) -> BenchReport {
             for &(shards, quantum) in SHARD_MATRIX {
                 let sharding = Some((shards, quantum));
                 match run_cell(
-                    workload, harts, "sharded", "inorder", "cache", false, sharding, None, runs,
-                    opts.quick,
+                    workload, harts, "sharded", "inorder", "cache", false, sharding, None, false,
+                    runs, opts.quick,
                 ) {
                     Some(cell) => cells.push(cell),
                     None => {
                         let label = cell_label(
-                            workload, "sharded", "inorder", "cache", false, sharding, None,
+                            workload, "sharded", "inorder", "cache", false, sharding, None, None,
                         );
                         eprintln!("warning: bench cell {} could not run (skipped)", label);
                         skipped.push(label);
@@ -381,11 +437,15 @@ fn line_key(line: &str) -> Option<String> {
     let memory = json_str_field(line, "memory")?;
     let dispatch = json_str_field(line, "dispatch")?;
     let backend = json_str_field(line, "backend").unwrap_or_else(|| "microop".into());
+    let traced = json_str_field(line, "obs").map(|o| format!("/{}", o)).unwrap_or_default();
     let shard = match (json_num_field(line, "shards"), json_num_field(line, "quantum")) {
         (Some(s), Some(q)) => format!("[s{},q{}]", s as u64, q as u64),
         _ => String::new(),
     };
-    Some(format!("{} {}{}/{}+{}/{}/{}", workload, mode, shard, pipeline, memory, dispatch, backend))
+    Some(format!(
+        "{} {}{}/{}+{}/{}/{}{}",
+        workload, mode, shard, pipeline, memory, dispatch, backend, traced
+    ))
 }
 
 /// Extract `(identity key, mips)` per cell row of a baseline report JSON.
@@ -406,6 +466,22 @@ impl BenchReport {
                     && c.memory == "atomic"
                     && c.dispatch == dispatch
                     && c.backend.is_none()
+                    && c.obs.is_none()
+            })
+            .map(Cell::mips)
+    }
+
+    /// Traced twin of the coremark chain cell (tracing + profiling on).
+    pub fn coremark_traced_mips(&self) -> Option<f64> {
+        self.cells
+            .iter()
+            .find(|c| {
+                c.workload == "coremark-lite"
+                    && c.mode == "lockstep"
+                    && c.memory == "atomic"
+                    && c.dispatch == "chain"
+                    && c.backend.is_none()
+                    && c.obs == Some("traced")
             })
             .map(Cell::mips)
     }
@@ -421,6 +497,7 @@ impl BenchReport {
                     && c.memory == "atomic"
                     && c.dispatch == "chain"
                     && c.backend == Some("native")
+                    && c.obs.is_none()
             })
             .map(Cell::mips)
     }
@@ -506,6 +583,16 @@ impl BenchReport {
                 ));
             }
         }
+        if let (Some(off), Some(on)) = (self.coremark_chain_mips(), self.coremark_traced_mips()) {
+            if on > 0.0 {
+                s.push_str(&format!(
+                    "coremark tracing: off {:.2} MIPS vs on {:.2} MIPS ({:.2}x)\n",
+                    off,
+                    on,
+                    off / on
+                ));
+            }
+        }
         s
     }
 
@@ -557,6 +644,31 @@ impl BenchReport {
         s
     }
 
+    /// Rows whose MIPS regressed more than `pct` percent against the
+    /// baseline (the `--fail-threshold` gate). Only rows present on both
+    /// sides participate; new/gone rows are reported by [`compare`] but
+    /// never fail the gate (a baseline predating a matrix extension must
+    /// stay usable).
+    pub fn regressions(&self, baseline_json: &str, pct: f64) -> Vec<String> {
+        let base = parse_baseline_cells(baseline_json);
+        let mut out = Vec::new();
+        for cell in &self.cells {
+            let key = cell.key();
+            let Some(&(_, b)) = base.iter().find(|(k, _)| *k == key) else {
+                continue;
+            };
+            if b <= 0.0 {
+                continue;
+            }
+            let cur = cell.mips();
+            let delta = (cur - b) / b * 100.0;
+            if delta < -pct {
+                out.push(format!("{}: {:.2} -> {:.2} MIPS ({:+.1}%)", key, b, cur, delta));
+            }
+        }
+        out
+    }
+
     /// Machine-readable report (schema `r2vm-bench-engines-v1`).
     pub fn to_json(&self) -> String {
         let mut s = String::new();
@@ -587,6 +699,11 @@ impl BenchReport {
                 // Native-backend rows only: micro-op rows keep their exact
                 // pre-native schema.
                 s.push_str(&format!("\"backend\": \"{}\", ", backend));
+            }
+            if let Some(obs) = cell.obs {
+                // Observability-ablation rows only: ordinary rows keep
+                // their exact pre-observability schema.
+                s.push_str(&format!("\"obs\": \"{}\", ", obs));
             }
             s.push_str(&format!(
                 "\"mips\": {:.6}, \"best_secs\": {:.6}, \"mean_secs\": {:.6}, \"runs\": {}, ",
@@ -662,6 +779,18 @@ impl BenchReport {
             fmt_opt(native_speedup)
         ));
         s.push_str(&format!(
+            "  \"coremark_traced_mips\": {},\n",
+            fmt_opt(self.coremark_traced_mips())
+        ));
+        let trace_overhead = match (self.coremark_chain_mips(), self.coremark_traced_mips()) {
+            (Some(off), Some(on)) if on > 0.0 => Some(off / on),
+            _ => None,
+        };
+        s.push_str(&format!(
+            "  \"coremark_trace_overhead\": {},\n",
+            fmt_opt(trace_overhead)
+        ));
+        s.push_str(&format!(
             "  \"shard_s1_q1024_mips\": {},\n",
             fmt_opt(self.shard_mips(1, 1024))
         ));
@@ -687,7 +816,7 @@ mod tests {
     #[test]
     fn single_cell_runs_and_chains() {
         let cell = run_cell(
-            "coremark-lite", 1, "lockstep", "simple", "atomic", false, None, None, 1, true,
+            "coremark-lite", 1, "lockstep", "simple", "atomic", false, None, None, false, 1, true,
         )
         .expect("cell must run");
         assert!(cell.exit.is_some(), "workload must exit cleanly");
@@ -706,7 +835,7 @@ mod tests {
     #[test]
     fn lookup_cell_has_no_chain_hits() {
         let cell = run_cell(
-            "coremark-lite", 1, "lockstep", "simple", "atomic", true, None, None, 1, true,
+            "coremark-lite", 1, "lockstep", "simple", "atomic", true, None, None, false, 1, true,
         )
         .expect("cell must run");
         assert_eq!(cell.engine_stats.chain_hits, 0);
@@ -724,19 +853,40 @@ mod tests {
             ..Default::default()
         };
         let report = run_bench(&opts);
-        // 5 matrix cells + the lookup-dispatch ablation cell, plus (where
-        // the native backend is available) native twins of the 4 lockstep
-        // rows and of the nochain ablation.
+        // 5 matrix cells + the lookup-dispatch ablation cell + the traced
+        // observability-ablation cell, plus (where the native backend is
+        // available) native twins of the 4 lockstep rows and of the
+        // nochain ablation.
         let native_rows = if crate::dbt::native_available() { 5 } else { 0 };
         assert_eq!(
             report.cells.len(),
-            MATRIX.len() + 1 + native_rows,
+            MATRIX.len() + 2 + native_rows,
             "every cell must complete"
         );
         assert!(report.cells.iter().all(|c| c.exit.is_some()));
         assert!(report.coremark_chain_mips().is_some());
         assert!(report.coremark_lookup_mips().is_some());
+        assert!(report.coremark_traced_mips().is_some());
         assert_eq!(report.coremark_native_mips().is_some(), native_rows > 0);
+        // The traced twin retires the same guest work as its untraced
+        // sibling — observability must not perturb execution.
+        {
+            let find = |obs: Option<&'static str>| {
+                report
+                    .cells
+                    .iter()
+                    .find(|c| {
+                        c.memory == "atomic"
+                            && c.mode == "lockstep"
+                            && c.dispatch == "chain"
+                            && c.backend.is_none()
+                            && c.obs == obs
+                    })
+                    .expect("cell present")
+            };
+            assert_eq!(find(None).insts, find(Some("traced")).insts);
+            assert_eq!(find(None).cycles, find(Some("traced")).cycles);
+        }
 
         assert!(report.skipped.is_empty(), "skipped: {:?}", report.skipped);
 
@@ -750,10 +900,13 @@ mod tests {
         assert!(json.contains("\"coremark_lookup_mips\""));
         assert!(json.contains("\"coremark_chain_speedup\""));
         assert!(json.contains("\"coremark_native_mips\""));
+        assert!(json.contains("\"coremark_traced_mips\""));
+        assert!(json.contains("\"coremark_trace_overhead\""));
         // The backend key appears on native rows only — micro-op rows keep
-        // their exact pre-native schema.
+        // their exact pre-native schema; same for the obs key.
         assert_eq!(json.contains("\"backend\": \"native\""), native_rows > 0);
         assert!(!json.contains("\"backend\": \"microop\""));
+        assert_eq!(json.matches("\"obs\": \"traced\"").count(), 1);
 
         // Self-comparison: every row matches its own baseline at ~0.0%
         // (the sign jitters with the 6-decimal JSON rounding).
@@ -771,6 +924,58 @@ mod tests {
         let table = report.table();
         assert!(table.contains("coremark-lite"));
         assert!(table.contains("coremark dispatch: chain"));
+        assert!(table.contains("coremark tracing: off"));
+
+        // The fail-threshold gate: self-comparison never regresses, and
+        // the permissive-threshold sweep is trivially clean too.
+        assert!(report.regressions(&json, 0.5).is_empty());
+    }
+
+    /// The `--fail-threshold` gate flags rows that regressed more than the
+    /// threshold, ignores unmatched rows, and respects the cutoff.
+    #[test]
+    fn regressions_respect_threshold() {
+        let cell = |key_mips: f64| Cell {
+            workload: "w".into(),
+            mode: "lockstep",
+            pipeline: "simple",
+            memory: "atomic",
+            dispatch: "chain",
+            harts: 1,
+            sharding: None,
+            backend: None,
+            obs: None,
+            measurement: Measurement {
+                name: "w".into(),
+                best: Duration::from_secs(1),
+                mean: Duration::from_secs(1),
+                work: (key_mips * 1e6) as u64,
+                runs: 1,
+            },
+            insts: 0,
+            cycles: 0,
+            exit: Some(0),
+            engine_stats: EngineStats::default(),
+            model_stats: Vec::new(),
+        };
+        let report = BenchReport {
+            quick: true,
+            runs: 1,
+            cells: vec![cell(50.0)],
+            skipped: Vec::new(),
+            host_cpus: 1,
+        };
+        // Baseline says 100 MIPS for the same key: a 50% regression.
+        let baseline = "{\"workload\": \"w\", \"mode\": \"lockstep\", \"pipeline\": \"simple\", \
+                        \"memory\": \"atomic\", \"dispatch\": \"chain\", \"harts\": 1, \
+                        \"mips\": 100.000000}\n";
+        let hits = report.regressions(baseline, 10.0);
+        assert_eq!(hits.len(), 1, "{:?}", hits);
+        assert!(hits[0].contains("w lockstep/simple+atomic/chain/microop"), "{}", hits[0]);
+        assert!(hits[0].contains("-50.0%"), "{}", hits[0]);
+        assert!(report.regressions(baseline, 60.0).is_empty(), "cutoff respected");
+        // A baseline without this row never fails the gate.
+        assert!(report.regressions("{}", 0.0).is_empty());
     }
 
     /// The baseline line-parser keys every row dimension and defaults the

@@ -117,6 +117,20 @@ pub struct SimConfig {
     pub restore: Option<String>,
     /// SMARTS-style sampling plan (`--sample n:warmup:measure[:interval]`).
     pub sample: Option<crate::sampling::SamplePlan>,
+    /// `--trace-out <path>`: write the event timeline as Chrome
+    /// trace-event JSON here at run end (implies `trace_events`).
+    pub trace_out: Option<String>,
+    /// `--stats-every <n>`: emit one NDJSON telemetry line to stderr every
+    /// `n` retired instructions (0 = off).
+    pub stats_every: u64,
+    /// Collect per-block execution/cycle counters (the `profile`
+    /// subcommand sets this; also allowed on plain runs).
+    pub profile: bool,
+    /// Record timeline events into the observability ring buffers.
+    pub trace_events: bool,
+    /// Per-observer event ring capacity (`--obs-capacity`); overflow
+    /// drops the newest events and counts them, never silently.
+    pub obs_capacity: usize,
 }
 
 impl Default for SimConfig {
@@ -147,6 +161,11 @@ impl Default for SimConfig {
             ckpt_every: None,
             restore: None,
             sample: None,
+            trace_out: None,
+            stats_every: 0,
+            profile: false,
+            trace_events: false,
+            obs_capacity: 1 << 16,
         }
     }
 }
@@ -247,6 +266,18 @@ impl SimConfig {
                 self.ckpt_every = Some(n);
             }
             "restore" => self.restore = Some(value.into()),
+            "trace-out" => {
+                self.trace_out = Some(value.into());
+                self.trace_events = true;
+            }
+            "stats-every" => self.stats_every = value.parse().map_err(|_| bad("stats-every"))?,
+            "obs-capacity" => {
+                let n: usize = value.parse().map_err(|_| bad("obs-capacity"))?;
+                if n == 0 {
+                    return Err(bad("obs-capacity"));
+                }
+                self.obs_capacity = n;
+            }
             "sample" => {
                 self.sample =
                     Some(crate::sampling::SamplePlan::parse(value).map_err(ParseError)?)
@@ -259,6 +290,12 @@ impl SimConfig {
     /// Parse and validate the `switch_to` hand-off target.
     pub fn switch_target(&self) -> Result<(EngineMode, String, String), ParseError> {
         parse_switch_target(&self.switch_to)
+    }
+
+    /// Whether any observability feature is on. When false, `System.obs`
+    /// stays `None` and the hot path never takes the cold obs branch.
+    pub fn obs_enabled(&self) -> bool {
+        self.trace_events || self.profile || self.stats_every > 0
     }
 
     /// Consistency checks mirroring Table 2's constraints.
@@ -307,6 +344,13 @@ impl SimConfig {
             if self.ckpt_out.is_some() || self.restore.is_some() {
                 return Err(ParseError(
                     "--sample cannot be combined with --ckpt-out/--restore".into(),
+                ));
+            }
+            if self.obs_enabled() {
+                return Err(ParseError(
+                    "--sample cannot be combined with --trace-out/--stats-every/profile \
+                     (sampled windows rebuild engines outside the staged loop)"
+                        .into(),
                 ));
             }
         }
@@ -462,6 +506,35 @@ mod tests {
         c.set("backend", "native").unwrap();
         // Native must validate exactly when the host supports it.
         assert_eq!(c.validate().is_ok(), crate::dbt::native_available());
+    }
+
+    #[test]
+    fn obs_flags_parse_and_gate() {
+        let mut c = SimConfig::default();
+        assert!(!c.obs_enabled(), "observability defaults off");
+        c.set("stats-every", "100000").unwrap();
+        assert_eq!(c.stats_every, 100_000);
+        assert!(c.obs_enabled());
+        assert!(c.set("stats-every", "soon").is_err());
+
+        let mut c = SimConfig::default();
+        c.set("trace-out", "/tmp/trace.json").unwrap();
+        assert_eq!(c.trace_out.as_deref(), Some("/tmp/trace.json"));
+        assert!(c.trace_events, "--trace-out implies event capture");
+        assert!(c.obs_enabled());
+        c.set("obs-capacity", "1024").unwrap();
+        assert_eq!(c.obs_capacity, 1024);
+        assert!(c.set("obs-capacity", "0").is_err());
+        c.validate().unwrap();
+
+        let mut c = SimConfig::default();
+        c.profile = true;
+        assert!(c.obs_enabled());
+
+        let mut c = SimConfig::default();
+        c.set("sample", "4:1000:2000").unwrap();
+        c.set("trace-out", "/tmp/trace.json").unwrap();
+        assert!(c.validate().is_err(), "--sample excludes observability");
     }
 
     #[test]

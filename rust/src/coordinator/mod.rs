@@ -30,6 +30,7 @@ use crate::mem::cache_model::CacheModel;
 use crate::mem::mesi::MesiModel;
 use crate::mem::tlb_model::TlbModel;
 use crate::mem::{AtomicModel, MemoryModel, PhysMem, DRAM_BASE};
+use crate::obs::{Event, EventKind, Harvest, Obs, TRACK_COORDINATOR};
 use crate::sys::loader::load_flat;
 use crate::sys::{System, SystemSnapshot};
 use std::sync::Arc;
@@ -170,6 +171,12 @@ pub struct RunReport {
     pub stage_reports: Vec<StageReport>,
     /// Sampled-run aggregate (present only for `--sample` runs).
     pub sampling: Option<crate::sampling::SamplingSummary>,
+    /// Observability harvest (events, per-PC profile, cache churn),
+    /// merged across all stages. `None` when observability is off.
+    pub obs: Option<Harvest>,
+    /// Records dropped by the analytics `--trace` ring (`TraceCapture`),
+    /// summed across stages — surfaced so truncation is never silent.
+    pub trace_dropped: u64,
 }
 
 impl RunReport {
@@ -223,6 +230,21 @@ impl RunReport {
         for (k, v) in &self.model_stats {
             s.push_str(&format!("  {}={}\n", k, v));
         }
+        if self.trace_dropped > 0 {
+            s.push_str(&format!(
+                "  trace: dropped={} (raise --trace capacity)\n",
+                self.trace_dropped
+            ));
+        }
+        if let Some(obs) = &self.obs {
+            if !obs.is_empty() {
+                s.push_str(&format!("  obs: events={} dropped={}", obs.events.len(), obs.dropped));
+                if obs.dropped > 0 {
+                    s.push_str(" (raise --obs-capacity)");
+                }
+                s.push('\n');
+            }
+        }
         s
     }
 }
@@ -237,6 +259,9 @@ fn system_over(cfg: &SimConfig, phys: Arc<PhysMem>) -> System {
     sys.timing = cfg.timing;
     if cfg.trace_capacity > 0 {
         sys.trace = Some(TraceCapture::new(cfg.trace_capacity));
+    }
+    if cfg.obs_enabled() {
+        sys.obs = Some(Box::new(Obs::new(cfg.obs_capacity, cfg.trace_events, cfg.stats_every)));
     }
     sys.simctrl_state =
         simctrl_encoding_full(cfg.mode, &cfg.pipeline, &cfg.memory, cfg.line_shift);
@@ -309,7 +334,7 @@ pub(crate) fn stage_label(cfg: &SimConfig) -> String {
 
 /// Build an engine for `cfg` and boot it from a flat image.
 pub fn build_engine(cfg: &SimConfig, image: &Image) -> Box<dyn ExecutionEngine> {
-    match cfg.mode {
+    let mut engine: Box<dyn ExecutionEngine> = match cfg.mode {
         EngineMode::Interp => {
             let sys = build_system(cfg);
             let mut eng = InterpEngine::new(sys);
@@ -341,13 +366,17 @@ pub fn build_engine(cfg: &SimConfig, image: &Image) -> Box<dyn ExecutionEngine> 
             eng.set_entry(image.entry);
             Box::new(eng)
         }
+    };
+    if cfg.profile {
+        engine.set_profile(true);
     }
+    engine
 }
 
 /// Build an engine for `cfg` warm-started from a snapshot (the second
 /// half of an engine hand-off).
 pub fn resume_engine(cfg: &SimConfig, snapshot: SystemSnapshot) -> Box<dyn ExecutionEngine> {
-    match cfg.mode {
+    let mut engine: Box<dyn ExecutionEngine> = match cfg.mode {
         EngineMode::Interp => {
             let sys = system_over(cfg, Arc::clone(&snapshot.phys));
             let mut eng = InterpEngine::new(sys);
@@ -374,7 +403,11 @@ pub fn resume_engine(cfg: &SimConfig, snapshot: SystemSnapshot) -> Box<dyn Execu
             eng.resume(snapshot);
             Box::new(eng)
         }
+    };
+    if cfg.profile {
+        engine.set_profile(true);
     }
+    engine
 }
 
 /// Run `image` to completion under `cfg`, performing engine hand-offs as
@@ -418,6 +451,27 @@ enum Boundary {
 /// them.
 fn drive(cfg: &SimConfig, mut stage: SimConfig, mut engine: Box<dyn ExecutionEngine>) -> RunReport {
     let t0 = Instant::now();
+    // Observability accumulation: each engine instance is harvested once,
+    // just before it is suspended or dropped, and the per-stage harvests
+    // merge into one run-wide timeline/profile. Coordinator-side events
+    // (hand-offs, checkpoint writes) land on their own track.
+    let obs_on = cfg.obs_enabled();
+    let mut obs_acc = Harvest::default();
+    let mut trace_dropped = 0u64;
+    let mut coord_seq = 0u64;
+    let mut coord_event = |acc: &mut Harvest, cycle: u64, kind: EventKind| {
+        if !cfg.trace_events {
+            return;
+        }
+        coord_seq += 1;
+        acc.events.push(Event {
+            seq: coord_seq,
+            host_ns: t0.elapsed().as_nanos() as u64,
+            cycle,
+            hart: TRACK_COORDINATOR,
+            kind,
+        });
+    };
     let mut stages = vec![stage_label(&stage)];
     let mut stage_reports: Vec<StageReport> = Vec::new();
     let mut acc_stats = EngineStats::default();
@@ -494,6 +548,18 @@ fn drive(cfg: &SimConfig, mut stage: SimConfig, mut engine: Box<dyn ExecutionEng
                 // The hand-off itself is identical for both triggers.
                 switch_at = None;
                 acc_stats.merge(&engine.stats());
+                if obs_on {
+                    let cycle = engine.per_hart().iter().map(|&(c, _)| c).max().unwrap_or(0);
+                    coord_event(
+                        &mut obs_acc,
+                        cycle,
+                        EventKind::EngineHandoff { value: trigger.unwrap_or(0) },
+                    );
+                    if let Some(h) = engine.take_obs() {
+                        obs_acc.merge(h);
+                    }
+                }
+                trace_dropped += engine.trace_dropped().unwrap_or(0);
                 let snapshot = engine.suspend();
                 engine = resume_engine(&stage, snapshot);
                 stages.push(stage_label(&stage));
@@ -517,8 +583,20 @@ fn drive(cfg: &SimConfig, mut stage: SimConfig, mut engine: Box<dyn ExecutionEng
                 stage_engine_stats.merge(&engine.stats());
                 merge_model_stats(&mut stage_model_stats, &engine.model_stats());
                 acc_stats.merge(&engine.stats());
+                let ckpt_cycle = engine.per_hart().iter().map(|&(c, _)| c).max().unwrap_or(0);
+                if obs_on {
+                    if let Some(h) = engine.take_obs() {
+                        obs_acc.merge(h);
+                    }
+                }
+                trace_dropped += engine.trace_dropped().unwrap_or(0);
                 let snapshot = engine.suspend();
                 ckpt_seq += 1;
+                coord_event(
+                    &mut obs_acc,
+                    ckpt_cycle,
+                    EventKind::CheckpointWrite { seq: ckpt_seq as u64 },
+                );
                 let base = cfg.ckpt_out.as_deref().expect("ckpt boundary implies --ckpt-out");
                 let path = format!("{}.{}", base, ckpt_seq);
                 let ckpt = crate::ckpt::Checkpoint::from_snapshot(&snapshot);
@@ -547,6 +625,20 @@ fn drive(cfg: &SimConfig, mut stage: SimConfig, mut engine: Box<dyn ExecutionEng
         model_stats: stage_model_stats,
         engine_stats: stage_engine_stats,
     });
+    // Harvest the final engine. The terminal checkpoint is written after
+    // the report is assembled (suspend consumes the engine), so its event
+    // is announced here, gated on the same `--ckpt-out` condition.
+    if obs_on {
+        if let Some(h) = engine.take_obs() {
+            obs_acc.merge(h);
+        }
+        if cfg.ckpt_out.is_some() {
+            let cycle = engine.per_hart().iter().map(|&(c, _)| c).max().unwrap_or(0);
+            coord_event(&mut obs_acc, cycle, EventKind::CheckpointWrite { seq: 0 });
+        }
+        obs_acc.sort_events();
+    }
+    trace_dropped += engine.trace_dropped().unwrap_or(0);
     let report = RunReport {
         exit,
         wall,
@@ -558,6 +650,8 @@ fn drive(cfg: &SimConfig, mut stage: SimConfig, mut engine: Box<dyn ExecutionEng
         stages,
         stage_reports,
         sampling: None,
+        obs: obs_on.then_some(obs_acc),
+        trace_dropped,
     };
     // Terminal checkpoint: `--ckpt-out` always records the end-of-run
     // state at the base path (the report is assembled first — suspending
@@ -680,6 +774,8 @@ mod tests {
             stages: vec!["lockstep/simple+atomic".into()],
             stage_reports: Vec::new(),
             sampling: None,
+            obs: None,
+            trace_dropped: 0,
         };
         assert_eq!(report.mips(), 0.0, "zero wall clock must not produce inf");
         assert!(report.summary().contains("mips=0.0"));

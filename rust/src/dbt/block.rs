@@ -117,6 +117,26 @@ pub struct CrossPageStub {
     pub expected: u16,
 }
 
+/// Per-block profiling counters (observability layer, DESIGN.md §12).
+/// `Cell`s because the dispatch loop holds shared borrows of blocks; only
+/// bumped when profiling is enabled, so the disabled hot path never
+/// touches them. Counters are folded into the per-PC
+/// `obs::ProfileTable` when the block is invalidated or harvested.
+#[derive(Debug, Default)]
+pub struct BlockProf {
+    /// Dispatch entries (bumped in `enter_block` for both backends, so
+    /// microop and native attribute identical execution counts).
+    pub exec: Cell<u64>,
+    /// Model cycles charged while executing this block (per-step retire
+    /// for microop, baked per-segment increment for native, terminator
+    /// cycles from the shared retire path).
+    pub cycles: Cell<u64>,
+    /// Entries that arrived via a validated chain link.
+    pub chain_hits: Cell<u64>,
+    /// Entries that paid the hash-lookup slow path.
+    pub chain_misses: Cell<u64>,
+}
+
 /// A translated basic block.
 pub struct Block {
     /// Guest virtual address of the first instruction.
@@ -136,6 +156,9 @@ pub struct Block {
     /// successor, `chain_seq` the sequential one.
     pub chain_taken: ChainLink,
     pub chain_seq: ChainLink,
+    /// Profiling counters; untouched (and never read) unless profiling
+    /// is enabled.
+    pub prof: BlockProf,
 }
 
 pub const NO_CHAIN: BlockId = u32::MAX;
@@ -207,6 +230,7 @@ mod tests {
             cross_page: None,
             chain_taken: ChainLink::empty(),
             chain_seq: ChainLink::empty(),
+            prof: BlockProf::default(),
         }
     }
 

@@ -6,6 +6,7 @@
 //! Cota et al.'s shared cache.
 
 use super::block::{Block, BlockId};
+use crate::obs::ProfileTable;
 use std::collections::HashMap;
 use std::hash::{BuildHasherDefault, Hasher};
 
@@ -57,6 +58,11 @@ pub struct CodeCache {
     pub lookups: u64,
     pub misses: u64,
     pub flushes: u64,
+    /// Per-PC hot-block profile (observability layer); `Some` only when
+    /// profiling is enabled. Block counters are folded in here whenever a
+    /// translation dies (replace/flush) and at harvest time, so churn at
+    /// a PC survives the blocks themselves.
+    pub prof: Option<Box<ProfileTable>>,
     /// Native x86-64 code for this cache's blocks (`--backend native`).
     /// Lazily populated; invalidated by generation stamping, so `flush`
     /// needs no extra bookkeeping here.
@@ -81,6 +87,7 @@ impl CodeCache {
             lookups: 0,
             misses: 0,
             flushes: 0,
+            prof: None,
             #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
             native: super::codegen::NativeCache::new(),
         }
@@ -99,6 +106,9 @@ impl CodeCache {
     }
 
     pub fn insert(&mut self, pc: u64, prv: u8, block: Block) -> BlockId {
+        if let Some(p) = &mut self.prof {
+            p.entry(block.start).compiles += 1;
+        }
         let id = self.blocks.len() as BlockId;
         self.blocks.push(block);
         self.map.insert(cache_key(pc, prv), id);
@@ -107,6 +117,10 @@ impl CodeCache {
 
     /// Replace an existing translation (cross-page stub mismatch).
     pub fn replace(&mut self, id: BlockId, block: Block) {
+        if let Some(p) = &mut self.prof {
+            fold_block(p, &self.blocks[id as usize], true);
+            p.entry(block.start).compiles += 1;
+        }
         self.blocks[id as usize] = block;
         #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
         self.native.invalidate(id);
@@ -118,7 +132,7 @@ impl CodeCache {
     #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
     pub fn ensure_native(&mut self, id: BlockId, line_shift: u32) {
         let block = &self.blocks[id as usize];
-        self.native.ensure(self.generation, line_shift, id, block);
+        self.native.ensure(self.generation, line_shift, self.prof.is_some(), id, block);
     }
 
     #[inline]
@@ -136,10 +150,40 @@ impl CodeCache {
 
     /// Flush all translations (fence.i, satp write, model switch §3.5).
     pub fn flush(&mut self) {
+        if let Some(p) = &mut self.prof {
+            for block in &self.blocks {
+                fold_block(p, block, true);
+            }
+        }
         self.blocks.clear();
         self.map.clear();
         self.generation += 1;
         self.flushes += 1;
+    }
+
+    /// Arm per-PC profiling on this cache (idempotent). The native cache
+    /// picks the flag up through `ensure_native`'s profile stamp.
+    pub fn enable_profile(&mut self) {
+        if self.prof.is_none() {
+            self.prof = Some(Box::default());
+        }
+    }
+
+    #[inline]
+    pub fn profiling(&self) -> bool {
+        self.prof.is_some()
+    }
+
+    /// Harvest the per-PC profile: folds counters from all live blocks
+    /// (without counting an invalidation — the blocks stay hot), returns
+    /// the accumulated table, and re-arms an empty one.
+    pub fn take_profile(&mut self) -> Option<ProfileTable> {
+        let mut table = self.prof.take()?;
+        for block in &self.blocks {
+            fold_block(&mut table, block, false);
+        }
+        self.prof = Some(Box::default());
+        Some(*table)
     }
 
     /// Store a chain link to an already-resolved target, stamped with the
@@ -165,6 +209,27 @@ impl CodeCache {
 impl Default for CodeCache {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+/// Fold one block's profiling cells into the per-PC table, draining the
+/// cells so repeated folds (harvest then flush) never double-count.
+fn fold_block(table: &mut ProfileTable, block: &Block, invalidated: bool) {
+    let s = table.entry(block.start);
+    s.end = block.end;
+    s.exec += block.prof.exec.take();
+    s.cycles += block.prof.cycles.take();
+    s.chain_hits += block.prof.chain_hits.take();
+    s.chain_misses += block.prof.chain_misses.take();
+    if invalidated {
+        s.invalidations += 1;
+    }
+    if s.listing.is_empty() {
+        for step in &block.steps {
+            s.listing.push(format!("{:#x}: {}", block.start + step.pc_off as u64, step.op));
+        }
+        s.listing
+            .push(format!("{:#x}: {}", block.start + block.term.pc_off as u64, block.term.op));
     }
 }
 
@@ -255,5 +320,39 @@ mod tests {
         let blk = c.block(a2);
         blk.chain_seq.install(c.generation - 1, b2);
         assert_eq!(c.follow_chain(a2, false), None, "stale generation rejected");
+    }
+
+    #[test]
+    fn profile_table_tracks_churn_and_folds_counters() {
+        let mut c = CodeCache::new();
+        assert!(!c.profiling());
+        c.enable_profile();
+        let id = c.insert(0x1000, 3, trivial_block(0x1000));
+        c.block(id).prof.exec.set(7);
+        c.block(id).prof.cycles.set(21);
+        // Replace folds the dying block, counting an invalidation and the
+        // retranslation's compile.
+        c.replace(id, trivial_block(0x1000));
+        c.block(id).prof.exec.set(2);
+        c.flush();
+        let table = c.take_profile().unwrap();
+        let s = &table.map[&0x1000];
+        assert_eq!(s.compiles, 2);
+        assert_eq!(s.invalidations, 2, "one from replace, one from flush");
+        assert_eq!(s.exec, 9, "counters from both generations folded");
+        assert_eq!(s.cycles, 21);
+        assert!(s.end > 0x1000, "end PC captured from the translation");
+        assert!(!s.listing.is_empty(), "disassembly captured at fold time");
+        assert!(c.profiling(), "take_profile re-arms an empty table");
+        assert!(c.take_profile().unwrap().map.is_empty());
+    }
+
+    #[test]
+    fn disabled_profiling_keeps_hooks_inert() {
+        let mut c = CodeCache::new();
+        let id = c.insert(0x1000, 3, trivial_block(0x1000));
+        c.replace(id, trivial_block(0x1000));
+        c.flush();
+        assert!(c.take_profile().is_none());
     }
 }

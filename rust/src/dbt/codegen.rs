@@ -76,6 +76,12 @@ pub struct NativeCtx {
     pub hart: *mut u8,
     /// The `System`, for helper re-entry (opaque to emitted code).
     pub sys: *mut u8,
+    /// Profiling: points at the current block's `BlockProf::cycles` cell,
+    /// or null when profiling is off. Profiled segments bake
+    /// `*prof_cycles += seg_cycles` on the fully-retired exit only
+    /// (RC_SEG_DONE) — a trapped segment retires nothing, matching the
+    /// microop engine's per-retired-step charging exactly.
+    pub prof_cycles: *mut u64,
 }
 
 pub const OFF_REGS: i32 = 0x00;
@@ -91,6 +97,7 @@ pub const OFF_HWRITE: i32 = 0x48;
 pub const OFF_HMUL: i32 = 0x50;
 pub const OFF_TCAUSE: i32 = 0x58;
 pub const OFF_TTVAL: i32 = 0x60;
+pub const OFF_PROF: i32 = 0x78;
 
 /// Segment retired completely.
 pub const RC_SEG_DONE: u64 = 0;
@@ -218,6 +225,12 @@ pub struct NativeCache {
     gen: u64,
     line_shift: u32,
     blocks: Vec<NativeState>,
+    /// Whether emitted code carries the per-block profile increment.
+    /// Stamped like `gen`/`line_shift`: a mismatch in `ensure` discards
+    /// everything, so profiled and unprofiled code never mix — and with
+    /// profiling off the emitted bytes are identical to a build without
+    /// the profiler.
+    profile: bool,
     /// Dump emitted code for the block containing this guest PC.
     pub dump_pc: Option<u64>,
     /// Stats (tests assert on these; also surfaced by `--dump-native`).
@@ -241,6 +254,7 @@ impl NativeCache {
             gen: 0,
             line_shift: 0,
             blocks: Vec::new(),
+            profile: false,
             dump_pc: None,
             compiles: 0,
             patches: 0,
@@ -277,8 +291,9 @@ impl NativeCache {
 
     /// Make sure block `id` has an up-to-date native compilation attempt.
     /// `gen` is the owning `CodeCache::generation`; `line_shift` the
-    /// current L0 D-cache line shift.
-    pub fn ensure(&mut self, gen: u64, line_shift: u32, id: u32, block: &Block) {
+    /// current L0 D-cache line shift; `profile` whether emitted code must
+    /// carry the per-block cycle increment.
+    pub fn ensure(&mut self, gen: u64, line_shift: u32, profile: bool, id: u32, block: &Block) {
         if self.buf.is_none() {
             self.buf = ExecBuf::new(self.capacity);
             if self.buf.is_none() {
@@ -286,12 +301,14 @@ impl NativeCache {
             }
             self.gen = gen;
             self.line_shift = line_shift;
+            self.profile = profile;
             self.reset();
             self.resets = 0; // the initial prologue emit is not a reset
         }
-        if self.gen != gen || self.line_shift != line_shift {
+        if self.gen != gen || self.line_shift != line_shift || self.profile != profile {
             self.gen = gen;
             self.line_shift = line_shift;
+            self.profile = profile;
             self.reset();
         }
         if self.blocks.len() <= id as usize {
@@ -380,7 +397,7 @@ impl NativeCache {
             return NativeState::Failed;
         }
         let mut a = Asm::new();
-        let code = emit_block(&mut a, id, block, &plan, self.line_shift);
+        let code = emit_block(&mut a, id, block, &plan, self.line_shift, self.profile);
 
         let buf = self.buf.as_mut().expect("ensure allocated the buffer");
         buf.make_writable();
@@ -719,10 +736,17 @@ fn emit_alu_imm(a: &mut Asm, op: AluOp, word: bool, imm: i32) {
 
 /// Emit one whole block's native code into `a`. Offsets in the returned
 /// `BlockCode` are relative to `a`'s start.
-fn emit_block(a: &mut Asm, id: u32, block: &Block, plan: &Plan, line_shift: u32) -> BlockCode {
+fn emit_block(
+    a: &mut Asm,
+    id: u32,
+    block: &Block,
+    plan: &Plan,
+    line_shift: u32,
+    profile: bool,
+) -> BlockCode {
     let mut segs = Vec::with_capacity(plan.segs.len());
     for &(first, end) in &plan.segs {
-        let entry = emit_segment(a, block, first, end, &plan.alloc, line_shift);
+        let entry = emit_segment(a, block, first, end, &plan.alloc, line_shift, profile);
         let cycles: u64 = block.steps[first..end].iter().map(|s| s.cycles as u64).sum();
         segs.push(NativeSeg {
             end: end as u16,
@@ -753,6 +777,7 @@ fn emit_segment(
     end: usize,
     alloc: &[u8; 3],
     line_shift: u32,
+    profile: bool,
 ) -> u32 {
     let entry = a.len() as u32;
     load_allocs(a, alloc);
@@ -799,6 +824,15 @@ fn emit_segment(
         }
     }
     spill_allocs(a, alloc);
+    if profile {
+        // *ctx.prof_cycles += segment cycles — fully-retired exit only;
+        // the RC_TRAP exit below retires nothing and charges nothing.
+        let cycles: u64 = block.steps[first..end].iter().map(|s| s.cycles as u64).sum();
+        a.mov_rm(x86::R8, x86::RBX, OFF_PROF);
+        a.mov_rm(x86::RAX, x86::R8, 0);
+        a.alu_ri(AluKind::Add, x86::RAX, cycles as i32);
+        a.mov_mr(x86::R8, 0, x86::RAX);
+    }
     emit_exit(a, RC_SEG_DONE);
 
     if !trap_jumps.is_empty() {
@@ -1149,6 +1183,7 @@ mod tests {
             trap_tval: 0,
             hart: std::ptr::null_mut(),
             sys: std::ptr::null_mut(),
+            prof_cycles: std::ptr::null_mut(),
         };
         let base = &ctx as *const NativeCtx as usize;
         let off = |p: usize| (p - base) as i32;
@@ -1165,6 +1200,7 @@ mod tests {
         assert_eq!(off(addr_of!(ctx.helper_mul) as usize), OFF_HMUL);
         assert_eq!(off(addr_of!(ctx.trap_cause) as usize), OFF_TCAUSE);
         assert_eq!(off(addr_of!(ctx.trap_tval) as usize), OFF_TTVAL);
+        assert_eq!(off(addr_of!(ctx.prof_cycles) as usize), OFF_PROF);
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! trace, invoking the pipeline model's hooks per instruction so cycle
 //! counts are baked into the translation (paper §3.2, Listing 1).
 
-use super::block::{Block, ChainLink, CrossPageStub, Step, Term, TermKind};
+use super::block::{Block, BlockProf, ChainLink, CrossPageStub, Step, Term, TermKind};
 use crate::isa::decode::{decode16, decode32, inst_len};
 use crate::isa::op::Op;
 use crate::pipeline::PipelineModel;
@@ -130,6 +130,7 @@ pub fn translate(
                 cross_page,
                 chain_taken: ChainLink::empty(),
                 chain_seq: ChainLink::empty(),
+                prof: BlockProf::default(),
             });
         }
 

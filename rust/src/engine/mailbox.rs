@@ -15,6 +15,7 @@
 //! depends only on what each shard deterministically produced — never on
 //! host-thread interleaving of the posts.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// Payload of a cross-shard message.
@@ -73,6 +74,10 @@ impl Msg {
 #[derive(Default)]
 pub struct Mailbox {
     queue: Mutex<Vec<Msg>>,
+    /// Lifetime totals (observability): messages ever posted / drained.
+    /// Monotonic, never reset by `drain_sorted`.
+    posted: AtomicU64,
+    drained: AtomicU64,
 }
 
 impl Mailbox {
@@ -87,6 +92,7 @@ impl Mailbox {
         if msgs.is_empty() {
             return;
         }
+        self.posted.fetch_add(msgs.len() as u64, Ordering::Relaxed);
         self.queue.lock().expect("mailbox poisoned").extend_from_slice(msgs);
     }
 
@@ -95,7 +101,13 @@ impl Mailbox {
     pub fn drain_sorted(&self) -> Vec<Msg> {
         let mut msgs = std::mem::take(&mut *self.queue.lock().expect("mailbox poisoned"));
         msgs.sort_unstable_by_key(Msg::key);
+        self.drained.fetch_add(msgs.len() as u64, Ordering::Relaxed);
         msgs
+    }
+
+    /// Lifetime `(posted, drained)` message totals.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.posted.load(Ordering::Relaxed), self.drained.load(Ordering::Relaxed))
     }
 
     /// Number of queued messages (used by the barrier leader's
@@ -164,5 +176,16 @@ mod tests {
         assert!(mb.is_empty());
         assert!(mb.drain_sorted().is_empty());
         assert_eq!(mb.len(), 0);
+        assert_eq!(mb.stats(), (0, 0), "empty batches do not count");
+    }
+
+    #[test]
+    fn stats_count_lifetime_totals() {
+        let mb = Mailbox::new();
+        mb.post(&[msg(1, 0, 0), msg(2, 0, 1)]);
+        assert_eq!(mb.stats(), (2, 0));
+        mb.drain_sorted();
+        mb.post(&[msg(3, 1, 0)]);
+        assert_eq!(mb.stats(), (3, 2), "monotonic across drains");
     }
 }

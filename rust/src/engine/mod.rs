@@ -133,6 +133,26 @@ pub trait ExecutionEngine {
     /// are attributable to it alone; engines without a live memory model
     /// (the parallel engine's per-thread systems) may ignore it.
     fn reset_model_stats(&mut self) {}
+
+    /// Arm per-block DBT profiling (the `profile` subcommand / the obs
+    /// layer's hot-block table). Engines without a code cache ignore it.
+    fn set_profile(&mut self, _on: bool) {}
+
+    /// Drain accumulated observability state (timeline events, per-PC
+    /// block profile, drop counts). The coordinator calls this before
+    /// every suspend and at the end of the run; `None` means the
+    /// observability layer is not armed or the engine does not
+    /// participate (the functional-parallel engine).
+    fn take_obs(&mut self) -> Option<crate::obs::Harvest> {
+        None
+    }
+
+    /// Records dropped by the analytics `TraceCapture` ring, if this
+    /// engine carries one (surfaced in `RunReport::summary` so truncated
+    /// analytics chunks are never silent).
+    fn trace_dropped(&self) -> Option<u64> {
+        None
+    }
 }
 
 /// Simulation exit requested by the guest through any channel (SBI
@@ -150,6 +170,9 @@ pub fn poll_interrupt(hart: &mut Hart, sys: &mut System) {
     let ext = sys.bus.clint.mip_bits(hart.id, hart.now());
     if let Some(cause) = hart.pending_interrupt(ext) {
         hart.wfi = false;
+        if let Some(obs) = sys.obs.as_deref_mut() {
+            obs.record(hart.cycle, hart.id as u32, crate::obs::EventKind::Interrupt { cause });
+        }
         let target = hart.take_trap(crate::sys::Trap::new(cause, 0), hart.pc);
         hart.pc = target;
     }
@@ -343,6 +366,20 @@ mod tests {
         assert_eq!(merge_simctrl(current, full), full);
         // Invalid engine codes are not merged in.
         assert_eq!(merge_simctrl(current, 7 << SIMCTRL_ENGINE_SHIFT), current);
+    }
+
+    #[test]
+    fn simctrl_merge_drops_trace_window_pulses() {
+        use crate::isa::csr::{SIMCTRL_TRACE_OFF_BIT, SIMCTRL_TRACE_ON_BIT};
+        // The trace-window pulses (bits 23/24) are write-only actions, not
+        // configuration: they must never reach the recorded state a guest
+        // reads back or an engine hand-off decodes.
+        let current = 3 | (4 << 4) | (64 << 8) | (2 << SIMCTRL_ENGINE_SHIFT);
+        assert_eq!(merge_simctrl(current, SIMCTRL_TRACE_ON_BIT), current);
+        assert_eq!(merge_simctrl(current, SIMCTRL_TRACE_OFF_BIT), current);
+        // A pulse riding a model write merges only the model fields.
+        let merged = merge_simctrl(current, (2 << 4) | SIMCTRL_TRACE_ON_BIT);
+        assert_eq!(merged, 3 | (2 << 4) | (64 << 8) | (2 << SIMCTRL_ENGINE_SHIFT));
     }
 
     #[test]

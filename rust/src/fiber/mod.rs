@@ -225,6 +225,38 @@ impl ExecutionEngine for FiberEngine {
     fn reset_model_stats(&mut self) {
         self.sys.model.reset_stats();
     }
+
+    fn set_profile(&mut self, on: bool) {
+        self.core.set_profile(on);
+    }
+
+    fn take_obs(&mut self) -> Option<crate::obs::Harvest> {
+        if self.sys.obs.is_none() && !self.core.profile {
+            return None;
+        }
+        let mut harvest = crate::obs::Harvest::default();
+        if let Some(obs) = self.sys.obs.as_deref_mut() {
+            harvest.merge(obs.harvest());
+        }
+        for cache in &mut self.core.caches {
+            harvest.cache_flushes += std::mem::take(&mut cache.flushes);
+            #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+            {
+                harvest.native_exhaustions += std::mem::take(&mut cache.native.exhaustions);
+            }
+            if let Some(table) = cache.take_profile() {
+                for (pc, stat) in table.into_entries() {
+                    crate::obs::profile::merge_entry(&mut harvest.profile, pc, stat);
+                }
+            }
+        }
+        harvest.sort_events();
+        Some(harvest)
+    }
+
+    fn trace_dropped(&self) -> Option<u64> {
+        self.sys.trace.as_ref().map(|t| t.dropped)
+    }
 }
 
 #[cfg(test)]

@@ -99,5 +99,8 @@ pub fn build_ctx(hart: &mut Hart, sys: &mut System) -> NativeCtx {
         trap_tval: 0,
         hart: hart as *mut Hart as *mut u8,
         sys: sys as *mut System as *mut u8,
+        // Profiling runs override this per call with the current block's
+        // cycle cell; unprofiled code never dereferences it.
+        prof_cycles: std::ptr::null_mut(),
     }
 }

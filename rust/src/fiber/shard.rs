@@ -25,8 +25,12 @@ use crate::engine::{
     exit_code, line_shift_by_code, memory_model_by_code, merge_simctrl, pipeline_name_by_code,
     poll_interrupt, EngineStats, ExitReason,
 };
-use crate::isa::csr::{EXC_ECALL_M, EXC_ECALL_S, EXC_ECALL_U, SIMCTRL_ENGINE_SHIFT};
+use crate::isa::csr::{
+    EXC_ECALL_M, EXC_ECALL_S, EXC_ECALL_U, SIMCTRL_ENGINE_SHIFT, SIMCTRL_TRACE_OFF_BIT,
+    SIMCTRL_TRACE_ON_BIT,
+};
 use crate::mem::mmu::{translate as mmu_translate, AccessKind};
+use crate::obs::EventKind;
 use crate::pipeline::PipelineModel;
 use crate::sys::exec::{cold_fetch, exec_op, Flow};
 use crate::sys::hart::{Hart, Trap};
@@ -134,6 +138,11 @@ pub struct ShardCore {
     /// `--dump-native <pc>`: dump emitted code for the block containing
     /// this guest PC (diagnostics for failing seeds).
     pub dump_native: Option<u64>,
+    /// Per-block profiling armed (obs layer): bump `Block::prof` counters
+    /// at entry/retire. Mirrors `CodeCache::profiling()` on every cache —
+    /// [`ShardCore::set_profile`] keeps the two in sync so profile-compiled
+    /// native code always receives a live `prof_cycles` pointer.
+    pub profile: bool,
     pub stats: EngineStats,
     /// Record cross-shard coherence traffic into `outbox` (set only by the
     /// multi-threaded sharded driver; the single-threaded engine never
@@ -162,6 +171,7 @@ impl ShardCore {
             chaining: true,
             backend: crate::dbt::Backend::default(),
             dump_native: None,
+            profile: false,
             stats: EngineStats::default(),
             record_msgs: false,
             outbox: Vec::new(),
@@ -172,6 +182,18 @@ impl ShardCore {
     /// Instructions retired by this core's harts.
     pub fn total_instret(&self) -> u64 {
         self.harts.iter().map(|h| h.instret).sum()
+    }
+
+    /// Arm per-block profiling: every code cache gets a fold-in profile
+    /// table (so flushed blocks keep their counts) and the native backend
+    /// recompiles with the baked cycle increment (profile-stamped buffer).
+    pub fn set_profile(&mut self, on: bool) {
+        self.profile = on;
+        if on {
+            for c in &mut self.caches {
+                c.enable_profile();
+            }
+        }
     }
 
     // -----------------------------------------------------------------------
@@ -230,7 +252,8 @@ impl ShardCore {
                 id = next;
             }
         }
-        if id != NO_CHAIN {
+        let chained = id != NO_CHAIN;
+        if chained {
             self.stats.chain_hits += 1;
         } else {
             self.stats.chain_misses += 1;
@@ -238,6 +261,10 @@ impl ShardCore {
                 Some(i) => i,
                 None => {
                     let block = self.translate_block(sys, l, pc)?;
+                    if let Some(obs) = sys.obs.as_deref_mut() {
+                        let cycle = self.harts[l].cycle + self.harts[l].pending;
+                        obs.record(cycle, g as u32, EventKind::BlockTranslate { pc });
+                    }
                     self.caches[l].insert(pc, prv, block)
                 }
             };
@@ -274,11 +301,29 @@ impl ShardCore {
             if seen != stub.expected {
                 self.stats.retranslations += 1;
                 let block = self.translate_block(sys, l, pc)?;
+                if let Some(obs) = sys.obs.as_deref_mut() {
+                    let cycle = self.harts[l].cycle + self.harts[l].pending;
+                    obs.record(cycle, g as u32, EventKind::BlockTranslate { pc });
+                }
                 self.caches[l].replace(id, block);
                 #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
                 if self.backend == crate::dbt::Backend::Native {
                     self.caches[l].ensure_native(id, sys.l0[g].d.line_shift());
                 }
+            }
+        }
+
+        // Per-block profiling (obs layer): the entry counters are bumped
+        // here for *both* backends — this function runs at every block
+        // entry regardless of how the body executes, which is what makes
+        // the profile backend-uniform by construction.
+        if self.profile {
+            let prof = &self.caches[l].block(id).prof;
+            prof.exec.set(prof.exec.get() + 1);
+            if chained {
+                prof.chain_hits.set(prof.chain_hits.get() + 1);
+            } else {
+                prof.chain_misses.set(prof.chain_misses.get() + 1);
             }
         }
 
@@ -316,6 +361,10 @@ impl ShardCore {
             hart.pending += 1;
             hart.pc = npc;
         } else {
+            if let Some(obs) = sys.obs.as_deref_mut() {
+                let cycle = self.harts[l].cycle + self.harts[l].pending;
+                obs.record(cycle, g as u32, EventKind::Trap { cause: trap.cause });
+            }
             let hart = &mut self.harts[l];
             hart.pc = hart.take_trap(trap, pc);
         }
@@ -333,6 +382,13 @@ impl ShardCore {
         let fx = self.harts[l].effects;
         self.harts[l].effects.clear();
         let mut invalidated = false;
+        if fx.fence_i || fx.sfence {
+            let flushed = self.caches[l].len() as u64;
+            if let Some(obs) = sys.obs.as_deref_mut() {
+                let cycle = self.harts[l].cycle + self.harts[l].pending;
+                obs.record(cycle, g as u32, EventKind::BlockInvalidate { blocks: flushed });
+            }
+        }
         if fx.fence_i {
             self.caches[l].flush();
             sys.l0[g].i.clear();
@@ -368,6 +424,18 @@ impl ShardCore {
         // earlier in-place model changes survive this write and any
         // hand-off it triggers.
         let state = merge_simctrl(sys.simctrl_state, value);
+        // Observability trace-window pulses (bits 23/24): actions, not
+        // state — `merge_simctrl` drops them. Handled before the
+        // engine-switch early return below so a hand-off write can still
+        // close the window first. Close wins when both pulses are set.
+        let pulses = value & (SIMCTRL_TRACE_ON_BIT | SIMCTRL_TRACE_OFF_BIT);
+        if pulses != 0 {
+            if let Some(obs) = sys.obs.as_deref_mut() {
+                let on = value & SIMCTRL_TRACE_OFF_BIT == 0;
+                let cycle = self.harts[l].cycle + self.harts[l].pending;
+                obs.set_window(cycle, (self.base + l) as u32, on);
+            }
+        }
         // Engine-level hand-off (§3.5 extended): bits [22:20] request a
         // different execution engine. This engine only records the request
         // — the model fields of the same write are applied when the
@@ -436,7 +504,12 @@ impl ShardCore {
             invalidated = true;
             broadcast = true;
         }
-        if broadcast {
+        // Window pulses broadcast too: under shard-private systems every
+        // shard holds its own event buffer and window flag, and a guest
+        // bracketing its region of interest from one hart means the whole
+        // machine. (Independent of whether obs is armed, so traced and
+        // untraced runs stay bit-identical in message traffic.)
+        if broadcast || pulses != 0 {
             sys.pending_broadcast = Some(value);
         }
         sys.simctrl_state = state;
@@ -475,6 +548,17 @@ impl ShardCore {
     /// stale cross-shard chain state. Pipeline bits are per-hart and stay
     /// with the writing core.
     pub fn apply_remote_simctrl(&mut self, sys: &mut System, value: u64) {
+        // Remote trace-window pulses: applied to this shard's own window
+        // flag. The transition event is stamped with this shard's maximum
+        // local clock (deterministic — the drain point is fixed by the
+        // quantum barrier protocol) and its base hart id.
+        if value & (SIMCTRL_TRACE_ON_BIT | SIMCTRL_TRACE_OFF_BIT) != 0 {
+            let cycle = self.harts.iter().map(|h| h.cycle + h.pending).max().unwrap_or(0);
+            if let Some(obs) = sys.obs.as_deref_mut() {
+                let on = value & SIMCTRL_TRACE_OFF_BIT == 0;
+                obs.set_window(cycle, self.base as u32, on);
+            }
+        }
         let mm = (value >> 4) & 0b111;
         if mm != 0 {
             if let Some(model) = memory_model_by_code(mm, sys.num_harts, sys.timing) {
@@ -563,6 +647,10 @@ impl ShardCore {
             if self.harts[l].wfi {
                 return Slice::Waiting;
             }
+            if let Some(obs) = sys.obs.as_deref_mut() {
+                let h = &self.harts[l];
+                obs.record(h.cycle + h.pending, g as u32, EventKind::WfiWake);
+            }
             // Waking redirects the PC into the trap vector; any recorded
             // exit edge is dead (WFI exits never record one, but the
             // wake-up path must not depend on that).
@@ -612,6 +700,7 @@ impl ShardCore {
         let n_steps = block.steps.len();
         let steps_ptr = block.steps.as_ptr();
         let mut retired_in_slice = 0u64;
+        let prof = self.profile;
 
         // Native dispatch gate, evaluated once per slice. Ablations,
         // tracing and forced-cold runs fall back to the micro-op
@@ -659,7 +748,16 @@ impl ShardCore {
             #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
             if native_ok {
                 if let Some(seg) = self.caches[l].native.seg_at(id, si) {
-                    let (rc, ctx) = self.run_native(sys, l, seg.entry);
+                    // Profile-compiled segments bake `*prof_cycles += seg
+                    // cycles` into their fully-retired exit; hand them the
+                    // block's cycle counter. Unprofiled code never loads
+                    // the pointer.
+                    let prof_cycles = if prof {
+                        unsafe { &(*block_ptr).prof }.cycles.as_ptr()
+                    } else {
+                        std::ptr::null_mut()
+                    };
+                    let (rc, ctx) = self.run_native(sys, l, seg.entry, prof_cycles);
                     if rc == crate::dbt::codegen::RC_TRAP {
                         let trap = Trap::new(ctx.trap_cause, ctx.trap_tval);
                         if self.nominal[l] {
@@ -697,6 +795,10 @@ impl ShardCore {
                         hart.set_reg(rd, v);
                         hart.instret += 1;
                         hart.pending += step.cycles as u64;
+                        if prof {
+                            let p = unsafe { &(*block_ptr).prof };
+                            p.cycles.set(p.cycles.get() + step.cycles as u64);
+                        }
                         retired_in_slice += 1;
                         self.conts[l].step += 1;
                         continue;
@@ -708,6 +810,10 @@ impl ShardCore {
                         hart.set_reg(rd, v);
                         hart.instret += 1;
                         hart.pending += step.cycles as u64;
+                        if prof {
+                            let p = unsafe { &(*block_ptr).prof };
+                            p.cycles.set(p.cycles.get() + step.cycles as u64);
+                        }
                         retired_in_slice += 1;
                         self.conts[l].step += 1;
                         continue;
@@ -727,6 +833,10 @@ impl ShardCore {
                                 hart.set_reg(rd, crate::sys::exec::sext_load(raw, width, signed));
                                 hart.instret += 1;
                                 hart.pending += step.cycles as u64;
+                                if prof {
+                                    let p = unsafe { &(*block_ptr).prof };
+                                    p.cycles.set(p.cycles.get() + step.cycles as u64);
+                                }
                                 retired_in_slice += 1;
                                 self.conts[l].step += 1;
                                 continue;
@@ -755,6 +865,10 @@ impl ShardCore {
                                 let hart = &mut self.harts[l];
                                 hart.instret += 1;
                                 hart.pending += step.cycles as u64;
+                                if prof {
+                                    let p = unsafe { &(*block_ptr).prof };
+                                    p.cycles.set(p.cycles.get() + step.cycles as u64);
+                                }
                                 retired_in_slice += 1;
                                 self.conts[l].step += 1;
                                 continue;
@@ -778,6 +892,10 @@ impl ShardCore {
                     let hart = &mut self.harts[l];
                     hart.instret += 1;
                     hart.pending += step.cycles as u64;
+                    if prof {
+                        let p = unsafe { &(*block_ptr).prof };
+                        p.cycles.set(p.cycles.get() + step.cycles as u64);
+                    }
                     retired_in_slice += 1;
                     self.conts[l].step += 1;
                     if step.sync && self.harts[l].effects.any() && self.process_effects(sys, l) {
@@ -845,7 +963,10 @@ impl ShardCore {
         #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
         if native_ok {
             if let Some(entry) = self.caches[l].native.term_at(id) {
-                let (rc, ctx) = self.run_native(sys, l, entry);
+                // Terminator cycles are charged in retire_terminator (the
+                // path shared with the micro-op backend), so the emitted
+                // terminator never touches the profile pointer.
+                let (rc, ctx) = self.run_native(sys, l, entry, std::ptr::null_mut());
                 debug_assert!(
                     rc == crate::dbt::codegen::RC_TERM
                         || rc & 0xff == crate::dbt::codegen::RC_CHAINED,
@@ -893,6 +1014,10 @@ impl ShardCore {
                     Flow::Jump(t) => (t, !matches!(term.kind, TermKind::Fallthrough)),
                     Flow::Wfi => {
                         self.harts[l].wfi = true;
+                        if let Some(obs) = sys.obs.as_deref_mut() {
+                            let h = &self.harts[l];
+                            obs.record(h.cycle + h.pending, g as u32, EventKind::WfiSleep);
+                        }
                         (npc, false)
                     }
                 };
@@ -953,6 +1078,14 @@ impl ShardCore {
         hart.pc = next_pc;
         if prv_changed {
             sys.l0[g].clear();
+        }
+        if self.profile {
+            // Terminator cycles charged here serve both backends — the
+            // native path retires through this same function. Must happen
+            // before process_effects, which may flush (and fold) the block.
+            let p = &self.caches[l].block(id).prof;
+            let c = if taken { term.cycles_taken } else { term.cycles_nt } as u64;
+            p.cycles.set(p.cycles.get() + c);
         }
         if self.nominal[l] {
             self.harts[l].pending += retired_in_slice;
@@ -1022,8 +1155,10 @@ impl ShardCore {
         sys: &mut System,
         l: usize,
         entry: u32,
+        prof_cycles: *mut u64,
     ) -> (u64, crate::dbt::codegen::NativeCtx) {
         let mut ctx = super::native::build_ctx(&mut self.harts[l], sys);
+        ctx.prof_cycles = prof_cycles;
         // SAFETY: the emitted code only touches guest state through `ctx`,
         // whose pointers are live for the whole call; the slow-path
         // helpers re-borrow hart/sys from the raw pointers only while the
@@ -1107,6 +1242,12 @@ impl ShardCore {
                     if self.record_msgs {
                         self.drain_model_events(sys, l);
                     }
+                    // The observability layer's single cold branch on the
+                    // scheduler path: everything else it does hangs off
+                    // this check.
+                    if sys.obs.is_some() {
+                        self.obs_tick(sys);
+                    }
                 }
                 Slice::Waiting => {
                     // The picked hart entered WFI since the scan (only
@@ -1115,6 +1256,51 @@ impl ShardCore {
                 }
             }
         }
+    }
+
+    /// Observability slow path, entered once per slice only when `sys.obs`
+    /// is armed: consume the guest's SimIo trace-window latch (the
+    /// portable MMIO alternative to the SIMCTRL pulse bits) and emit a
+    /// telemetry NDJSON line to stderr whenever `--stats-every N` more
+    /// instructions have retired since the last one.
+    #[cold]
+    pub(crate) fn obs_tick(&mut self, sys: &mut System) {
+        if let Some(on) = sys.bus.simio.trace_req.take() {
+            let cycle = self.harts.iter().map(|h| h.cycle + h.pending).max().unwrap_or(0);
+            if let Some(obs) = sys.obs.as_deref_mut() {
+                obs.set_window(cycle, self.base as u32, on);
+            }
+        }
+        let (stats_every, next_stats) = match sys.obs.as_deref() {
+            Some(o) if o.stats_every != 0 => (o.stats_every, o.next_stats),
+            _ => return,
+        };
+        let insts: u64 = self.harts.iter().map(|h| h.instret).sum();
+        if insts < next_stats {
+            return;
+        }
+        let per_hart: Vec<(usize, u64, u64)> =
+            self.harts.iter().map(|h| (h.id, h.cycle + h.pending, h.instret)).collect();
+        let chain = (self.stats.chain_hits, self.stats.chain_misses);
+        let mut l0 = (0u64, 0u64);
+        for h in &self.harts {
+            let (acc, miss) = sys.l0[h.id].d.stats();
+            l0.0 += acc;
+            l0.1 += miss;
+        }
+        let Some(obs) = sys.obs.as_deref_mut() else { return };
+        obs.next_stats = insts + stats_every;
+        let now_ns = obs.epoch.elapsed().as_nanos() as u64;
+        let barrier_ns = obs.barrier_wait_ns;
+        let line = crate::obs::telemetry::render_line(
+            &mut obs.telemetry,
+            now_ns,
+            &per_hart,
+            chain,
+            l0,
+            barrier_ns,
+        );
+        eprintln!("{line}");
     }
 
     /// Write back a consistent architectural PC for every hart paused

@@ -30,6 +30,7 @@ use crate::engine::mailbox::{Mailbox, Msg, MsgKind};
 use crate::engine::{exit_code, poll_interrupt, EngineStats, ExecutionEngine, ExitReason};
 use crate::fiber::shard::{ShardCore, WindowOutcome};
 use crate::isa::csr::SIMCTRL_ENGINE_SHARDED;
+use crate::obs::{EventKind, Harvest, TRACK_BARRIER_BASE};
 use crate::sys::{Hart, System, SystemSnapshot};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -354,6 +355,11 @@ impl ShardedEngine {
             let before = cores[ci].harts[l].instret;
             cores[ci].run_slice(sys, l, bound, bound_id);
             remaining = remaining.saturating_sub(cores[ci].harts[l].instret - before);
+            // Serialized sharding dispatches slices itself (no run_window),
+            // so the observability cold path hangs off this loop instead.
+            if sys.obs.is_some() {
+                cores[ci].obs_tick(sys);
+            }
             // A SIMCTRL write with global scope: the shared system already
             // carries the new model/line size, but sibling *cores* hold
             // paused continuations and code caches of their own — fix them
@@ -670,11 +676,27 @@ fn shard_worker(si: usize, core: &mut ShardCore, sys: &mut System, shared: &Boun
     // the first window.
     publish_report(si, core, sys, None, 0, shared);
     loop {
+        // Barrier stall timing (obs layer): only the duration is
+        // host-dependent; the event's (cycle, track) stamp follows the
+        // deterministic boundary schedule, so canonical dumps (which
+        // exclude `wait_ns`) stay byte-identical across reruns.
+        let wait_t0 = sys.obs.is_some().then(std::time::Instant::now);
         shared.barrier.wait();
         if si == 0 {
             decide(shared);
         }
         shared.barrier.wait();
+        if let Some(t0) = wait_t0 {
+            let wait_ns = t0.elapsed().as_nanos() as u64;
+            if let Some(obs) = sys.obs.as_deref_mut() {
+                obs.barrier_wait_ns += wait_ns;
+                obs.record(
+                    prev_end,
+                    TRACK_BARRIER_BASE + si as u32,
+                    EventKind::BarrierWait { shard: si as u32, wait_ns },
+                );
+            }
+        }
         let decision = shared.control.lock().expect("control poisoned").decision;
         // Coast idle sleepers through the window they sat out (their WFI
         // burns simulated time), then deliver the mailbox and poll them —
@@ -685,7 +707,21 @@ fn shard_worker(si: usize, core: &mut ShardCore, sys: &mut System, shared: &Boun
                 hart.cycle = coast;
             }
         }
-        apply_inbox(core, sys, shared.inboxes[si].drain_sorted());
+        let inbox = shared.inboxes[si].drain_sorted();
+        if !inbox.is_empty() {
+            if let Some(obs) = sys.obs.as_deref_mut() {
+                obs.record(
+                    prev_end,
+                    TRACK_BARRIER_BASE + si as u32,
+                    EventKind::MailboxBatch {
+                        shard: si as u32,
+                        count: inbox.len() as u64,
+                        inbound: true,
+                    },
+                );
+            }
+        }
+        apply_inbox(core, sys, inbox);
         for l in 0..core.harts.len() {
             if !core.harts[l].halted && core.harts[l].wfi {
                 poll_interrupt(&mut core.harts[l], sys);
@@ -720,6 +756,19 @@ fn shard_worker(si: usize, core: &mut ShardCore, sys: &mut System, shared: &Boun
         }
         prev_end = decision.end;
         let sent = forward_boundary_msgs(si, core, sys, prev_end, shared);
+        if sent > 0 {
+            if let Some(obs) = sys.obs.as_deref_mut() {
+                obs.record(
+                    prev_end,
+                    TRACK_BARRIER_BASE + si as u32,
+                    EventKind::MailboxBatch {
+                        shard: si as u32,
+                        count: sent as u64,
+                        inbound: false,
+                    },
+                );
+            }
+        }
         publish_report(si, core, sys, Some(outcome), sent, shared);
     }
 }
@@ -891,6 +940,59 @@ impl ExecutionEngine for ShardedEngine {
         for sys in &mut self.systems {
             sys.model.reset_stats();
         }
+    }
+
+    fn set_profile(&mut self, on: bool) {
+        for core in &mut self.cores {
+            core.set_profile(on);
+        }
+    }
+
+    fn take_obs(&mut self) -> Option<Harvest> {
+        let armed = self.systems.iter().any(|s| s.obs.is_some())
+            || self.cores.iter().any(|c| c.profile);
+        if !armed {
+            return None;
+        }
+        let mut harvest = Harvest::default();
+        for sys in &mut self.systems {
+            if let Some(obs) = sys.obs.as_deref_mut() {
+                harvest.merge(obs.harvest());
+            }
+        }
+        for core in &mut self.cores {
+            for cache in &mut core.caches {
+                harvest.cache_flushes += std::mem::take(&mut cache.flushes);
+                #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+                {
+                    harvest.native_exhaustions +=
+                        std::mem::take(&mut cache.native.exhaustions);
+                }
+                if let Some(table) = cache.take_profile() {
+                    for (pc, stat) in table.into_entries() {
+                        crate::obs::profile::merge_entry(&mut harvest.profile, pc, stat);
+                    }
+                }
+            }
+        }
+        harvest.sort_events();
+        Some(harvest)
+    }
+
+    fn trace_dropped(&self) -> Option<u64> {
+        let mut any = false;
+        let mut total = 0u64;
+        if let Some(t) = &self.trace {
+            any = true;
+            total += t.dropped;
+        }
+        for sys in &self.systems {
+            if let Some(t) = &sys.trace {
+                any = true;
+                total += t.dropped;
+            }
+        }
+        any.then_some(total)
     }
 }
 

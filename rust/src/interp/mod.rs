@@ -229,6 +229,20 @@ impl ExecutionEngine for InterpEngine {
     fn reset_model_stats(&mut self) {
         self.sys.model.reset_stats();
     }
+
+    fn take_obs(&mut self) -> Option<crate::obs::Harvest> {
+        // No code cache, so no profile — but the event ring (traps,
+        // interrupts, WFI transitions recorded by the shared poll path)
+        // still drains.
+        let obs = self.sys.obs.as_deref_mut()?;
+        let mut harvest = obs.harvest();
+        harvest.sort_events();
+        Some(harvest)
+    }
+
+    fn trace_dropped(&self) -> Option<u64> {
+        self.sys.trace.as_ref().map(|t| t.dropped)
+    }
 }
 
 #[cfg(test)]

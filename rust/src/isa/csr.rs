@@ -56,6 +56,12 @@ pub const CSR_MINSTRET: u16 = 0xB02;
 ///                warm-starts the requested engine — the fast-forward →
 ///                measure workflow. The pipeline/memory/line fields of the
 ///                same write are applied by the relaunched engine.
+///   bit  23      trace-window open pulse: re-opens observability event
+///                recording (`--trace-out`) from this point.
+///   bit  24      trace-window close pulse: stops event recording so a
+///                workload can bracket its region of interest. Close wins
+///                when both pulse bits are set. The pulses are not state:
+///                reads never return them and `merge_simctrl` drops them.
 /// Reads return the packed current configuration.
 pub const CSR_SIMCTRL: u16 = 0x7C0;
 
@@ -68,6 +74,10 @@ pub const SIMCTRL_ENGINE_INTERP: u64 = 1;
 pub const SIMCTRL_ENGINE_LOCKSTEP: u64 = 2;
 pub const SIMCTRL_ENGINE_PARALLEL: u64 = 3;
 pub const SIMCTRL_ENGINE_SHARDED: u64 = 4;
+/// SIMCTRL write pulse: open the observability trace window (bit 23).
+pub const SIMCTRL_TRACE_ON_BIT: u64 = 1 << 23;
+/// SIMCTRL write pulse: close the observability trace window (bit 24).
+pub const SIMCTRL_TRACE_OFF_BIT: u64 = 1 << 24;
 /// Read-only: statistics scratch (dcache accesses low 32 / hits high 32).
 pub const CSR_SIMSTATS: u16 = 0x7C1;
 /// Write: region-of-interest marker (value is an arbitrary tag recorded in

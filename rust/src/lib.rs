@@ -27,6 +27,7 @@ pub mod isa;
 pub mod dbt;
 pub mod fiber;
 pub mod mem;
+pub mod obs;
 pub mod pipeline;
 pub mod prop;
 pub mod refsim;

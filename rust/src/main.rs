@@ -19,8 +19,10 @@ fn usage() -> ! {
     eprintln!(
         "usage:
   r2vm-repro run [--workload NAME | --elf PATH | --restore CKPT] [options]
+  r2vm-repro profile [--workload NAME | --elf PATH | --restore CKPT]
+                     [--top N] [run options]
   r2vm-repro bench [--runs N] [--quick] [--workload NAME] [--json PATH]
-                   [--compare BASELINE]
+                   [--compare BASELINE] [--fail-threshold PCT]
   r2vm-repro ckpt PATH
   r2vm-repro models
   r2vm-repro workloads
@@ -38,7 +40,14 @@ coremark; see DESIGN.md \u{a7}9):
                      (e.g. the committed BENCH_baseline.json): prints
                      per-row MIPS deltas, with unmatched rows listed as
                      new/gone
+  --fail-threshold P with --compare: exit nonzero when any matched row's
+                     MIPS regresses more than P percent vs the baseline
   --quiet            suppress the table
+
+profile options (hot-block DBT profiler; accepts every run option):
+  --top N            print the N hottest blocks by attributed cycles
+                     (default 10), with disassembly, per-block chain hit
+                     rates, and translation-cache churn
 
 difftest options (differential co-simulation fuzzer — every engine vs the
 cycle-level reference; see DESIGN.md \u{a7}8):
@@ -105,6 +114,20 @@ run options:
   --dram-mb N        guest DRAM size (default 64)
   --line-bytes N     L0 line size (64; 4096 = L0-as-TLB)
   --trace N          capture N memory/branch trace records
+  --trace-out FILE   record the event timeline (block translates, traps,
+                     WFI, barrier waits, hand-offs, ...) and write it as
+                     Chrome trace-event JSON to FILE at run end (open in
+                     Perfetto; one track per hart + per shard barrier).
+                     Guests can bracket a region of interest via SIMCTRL
+                     bits 23/24 (see DESIGN.md \u{a7}12)
+  --stats-every N    emit one NDJSON telemetry line to stderr every N
+                     retired instructions (per-hart MIPS, CPI, chain and
+                     L0 hit rates, barrier stall fraction)
+  --obs-capacity N   event ring capacity per observer (default 65536);
+                     overflow drops the newest events, counted in the
+                     summary — never silent
+  --profile          collect per-block profile counters during a plain
+                     run (the `profile` subcommand implies this)
   --naive-yield      A1 ablation: yield per instruction
   --no-chaining      A3 ablation: disable block chaining
   --no-l0            A2 ablation: bypass the L0 fast path
@@ -184,11 +207,27 @@ fn main() {
                         };
                         opts.compare_path = Some(path.clone());
                     }
+                    "fail-threshold" => {
+                        let parsed = it.next().and_then(|s| s.parse::<f64>().ok());
+                        let Some(pct) = parsed else {
+                            eprintln!("--fail-threshold needs a numeric percent value");
+                            usage();
+                        };
+                        if pct.is_nan() || pct < 0.0 {
+                            eprintln!("--fail-threshold must be >= 0");
+                            usage();
+                        }
+                        opts.fail_threshold = Some(pct);
+                    }
                     _ => {
                         eprintln!("unknown bench option --{}", key);
                         usage();
                     }
                 }
+            }
+            if opts.fail_threshold.is_some() && opts.compare_path.is_none() {
+                eprintln!("--fail-threshold requires --compare");
+                usage();
             }
             // Read the baseline up front so a bad path fails before the
             // (long) measurement run, not after it.
@@ -212,6 +251,20 @@ fn main() {
             }
             if let Some(base) = baseline {
                 print!("{}", report.compare(&base));
+                if let Some(pct) = opts.fail_threshold {
+                    let regressed = report.regressions(&base, pct);
+                    if !regressed.is_empty() {
+                        eprintln!(
+                            "fail-threshold: {} row(s) regressed more than {:.1}% vs baseline:",
+                            regressed.len(),
+                            pct
+                        );
+                        for row in &regressed {
+                            eprintln!("  {}", row);
+                        }
+                        std::process::exit(1);
+                    }
+                }
             }
             if report.cells.iter().any(|c| c.exit.is_none()) || !report.skipped.is_empty() {
                 eprintln!("warning: some cells were skipped or did not exit cleanly");
@@ -376,11 +429,13 @@ fn main() {
                 std::process::exit(1);
             }
         }
-        "run" => {
-            let mut cfg = SimConfig::default();
+        "run" | "profile" => {
+            let profiling = cmd == "profile";
+            let mut cfg = SimConfig { profile: profiling, ..SimConfig::default() };
             let mut workload: Option<String> = None;
             let mut elf: Option<String> = None;
             let mut quiet = false;
+            let mut top = 10usize;
             let mut json_out = "BENCH_sampling.json".to_string();
             let mut it = args[1..].iter();
             while let Some(arg) = it.next() {
@@ -398,10 +453,19 @@ fn main() {
                         };
                         json_out = path.clone();
                     }
+                    "top" if profiling => {
+                        let parsed = it.next().and_then(|s| s.parse::<usize>().ok());
+                        let Some(n) = parsed else {
+                            eprintln!("--top needs a numeric value");
+                            usage();
+                        };
+                        top = n.max(1);
+                    }
                     "naive-yield" => cfg.naive_yield = true,
                     "no-chaining" => cfg.no_chaining = true,
                     "no-l0" => cfg.no_l0 = true,
                     "console" => cfg.console = true,
+                    "profile" => cfg.profile = true,
                     "quiet" => quiet = true,
                     _ => {
                         let Some(value) = it.next() else {
@@ -491,6 +555,33 @@ fn main() {
             }
             if !quiet {
                 print!("{}", report.summary());
+            }
+            if let (Some(path), Some(harvest)) = (&cfg.trace_out, report.obs.as_ref()) {
+                let json = r2vm::obs::chrome::to_chrome_json(harvest, report.per_hart.len());
+                if let Err(e) = std::fs::write(path, json) {
+                    eprintln!("writing {}: {}", path, e);
+                    std::process::exit(2);
+                }
+                if !quiet {
+                    println!(
+                        "trace written to {} ({} events, {} dropped)",
+                        path,
+                        harvest.events.len(),
+                        harvest.dropped
+                    );
+                }
+            }
+            if profiling {
+                let harvest = report.obs.as_ref().expect("profile implies observability");
+                print!(
+                    "{}",
+                    r2vm::obs::profile::render_top(
+                        &harvest.profile,
+                        top,
+                        harvest.cache_flushes,
+                        harvest.native_exhaustions
+                    )
+                );
             }
             if let r2vm::interp::ExitReason::Exited(code) = report.exit {
                 std::process::exit((code & 0x7f) as i32);

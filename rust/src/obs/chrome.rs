@@ -1,0 +1,142 @@
+//! Chrome trace-event JSON serialization (`--trace-out FILE`).
+//!
+//! The emitted file is the "JSON object format" of the Trace Event spec
+//! (loadable in Perfetto / `chrome://tracing`): a `traceEvents` array of
+//! instant events (`"ph":"i"`), one track per hart plus one per shard
+//! barrier lane and one for the coordinator, with `thread_name` metadata
+//! records naming each track. `ts` carries the *guest cycle* (the spec's
+//! microsecond unit is reinterpreted — documented in DESIGN.md §12); the
+//! host-ns stamp rides in `args` so both timelines survive the export.
+
+use super::{Event, EventKind, Harvest, TRACK_BARRIER_BASE, TRACK_COORDINATOR};
+
+fn track_name(tid: u32, num_harts: usize) -> String {
+    if tid == TRACK_COORDINATOR {
+        "coordinator".to_string()
+    } else if tid >= TRACK_BARRIER_BASE {
+        format!("shard {} barrier", tid - TRACK_BARRIER_BASE)
+    } else if (tid as usize) < num_harts {
+        format!("hart {}", tid)
+    } else {
+        format!("track {}", tid)
+    }
+}
+
+fn chrome_args(e: &Event) -> String {
+    let mut args = format!("\"host_ns\":{}", e.host_ns);
+    match e.kind {
+        EventKind::BlockTranslate { pc } => args.push_str(&format!(",\"pc\":\"{:#x}\"", pc)),
+        EventKind::BlockInvalidate { blocks } => args.push_str(&format!(",\"blocks\":{}", blocks)),
+        EventKind::EngineHandoff { value } => {
+            args.push_str(&format!(",\"value\":\"{:#x}\"", value))
+        }
+        EventKind::Trap { cause } | EventKind::Interrupt { cause } => {
+            args.push_str(&format!(",\"cause\":{}", cause))
+        }
+        EventKind::WfiSleep | EventKind::WfiWake => {}
+        EventKind::CheckpointWrite { seq } => args.push_str(&format!(",\"seq\":{}", seq)),
+        EventKind::BarrierWait { shard, wait_ns } => {
+            args.push_str(&format!(",\"shard\":{},\"wait_ns\":{}", shard, wait_ns))
+        }
+        EventKind::MailboxBatch { shard, count, inbound } => args.push_str(&format!(
+            ",\"shard\":{},\"count\":{},\"inbound\":{}",
+            shard, count, inbound
+        )),
+        EventKind::TraceWindow { on } => args.push_str(&format!(",\"on\":{}", on)),
+    }
+    args
+}
+
+/// Serialize a harvest as a complete Chrome trace JSON document.
+pub fn to_chrome_json(harvest: &Harvest, num_harts: usize) -> String {
+    // Every hart gets a named track even if it recorded nothing, so the
+    // viewer shows the full topology; shard/coordinator lanes appear only
+    // when events exist for them.
+    let mut tids: Vec<u32> = (0..num_harts as u32).collect();
+    for e in &harvest.events {
+        if !tids.contains(&e.hart) {
+            tids.push(e.hart);
+        }
+    }
+    tids.sort_unstable();
+
+    let mut out = String::new();
+    out.push_str("{\n\"otherData\": {");
+    out.push_str("\"schema\": \"r2vm-trace-v1\", \"ts_unit\": \"guest_cycle\", ");
+    out.push_str(&format!("\"dropped\": {}", harvest.dropped));
+    out.push_str("},\n\"traceEvents\": [\n");
+    let mut first = true;
+    for tid in &tids {
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        out.push_str(&format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{},\"args\":{{\"name\":\"{}\"}}}}",
+            tid,
+            track_name(*tid, num_harts)
+        ));
+    }
+    for e in &harvest.events {
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"ph\":\"i\",\"s\":\"t\",\"pid\":1,\"tid\":{},\"ts\":{},\"args\":{{{}}}}}",
+            e.kind.name(),
+            e.hart,
+            e.cycle,
+            chrome_args(e)
+        ));
+    }
+    out.push_str("\n]\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(cycle: u64, hart: u32, kind: EventKind) -> Event {
+        Event { seq: cycle, host_ns: 42, cycle, hart, kind }
+    }
+
+    #[test]
+    fn emits_named_tracks_and_instant_events() {
+        let harvest = Harvest {
+            events: vec![
+                ev(10, 0, EventKind::BlockTranslate { pc: 0x8000_0000 }),
+                ev(20, 1, EventKind::Trap { cause: 8 }),
+                ev(30, TRACK_BARRIER_BASE + 1, EventKind::BarrierWait { shard: 1, wait_ns: 99 }),
+                ev(40, TRACK_COORDINATOR, EventKind::EngineHandoff { value: 0x40_0000 }),
+            ],
+            dropped: 5,
+            ..Harvest::default()
+        };
+        let json = to_chrome_json(&harvest, 2);
+        assert!(json.contains("\"name\":\"hart 0\""));
+        assert!(json.contains("\"name\":\"hart 1\""));
+        assert!(json.contains("\"name\":\"shard 1 barrier\""));
+        assert!(json.contains("\"name\":\"coordinator\""));
+        assert!(json.contains("\"dropped\": 5"));
+        assert!(json.contains("\"name\":\"block_translate\""));
+        assert!(json.contains("\"pc\":\"0x80000000\""));
+        assert!(json.contains("\"ts\":30"));
+        assert!(json.contains("\"host_ns\":42"));
+        // Structural sanity: balanced braces/brackets, no trailing comma.
+        let opens = json.matches('{').count();
+        let closes = json.matches('}').count();
+        assert_eq!(opens, closes);
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+        assert!(!json.contains(",\n]"));
+    }
+
+    #[test]
+    fn empty_harvest_still_names_hart_tracks() {
+        let json = to_chrome_json(&Harvest::default(), 3);
+        assert!(json.contains("\"name\":\"hart 2\""));
+        assert!(json.contains("\"dropped\": 0"));
+        assert_eq!(json.matches("thread_name").count(), 3);
+    }
+}

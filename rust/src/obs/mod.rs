@@ -1,0 +1,352 @@
+//! Full-system observability layer: event timeline tracing, the hot-block
+//! DBT profiler, and live telemetry streaming (DESIGN.md §12).
+//!
+//! Everything here is gated behind one cold branch on the hot path —
+//! `sys.obs.is_none()` — so a run without `--trace-out`/`--stats-every`/
+//! `profile` executes bit-identically *and* speed-identically to a build
+//! without this module. When enabled, engines record typed [`Event`]s into
+//! a bounded ring (drop-newest, with [`Obs::dropped`] counted and always
+//! reported, never silent), per-`Block` execution/cycle counters feed the
+//! unified per-PC [`profile::ProfileTable`], and `--stats-every N` emits
+//! schema-stable NDJSON telemetry lines to stderr during the run.
+
+pub mod chrome;
+pub mod profile;
+pub mod telemetry;
+
+pub use profile::{PcStat, ProfileTable};
+
+use std::time::Instant;
+
+/// Chrome-trace track id base for per-shard barrier lanes (`tid = 1000 +
+/// shard`); ordinary events use the hart id as their track.
+pub const TRACK_BARRIER_BASE: u32 = 1000;
+
+/// Track id for coordinator-side events (engine hand-offs, checkpoints).
+pub const TRACK_COORDINATOR: u32 = 2000;
+
+/// A typed timeline event. Host-time fields (`host_ns`, `wait_ns`) are
+/// excluded from the canonical dump so traces stay comparable across
+/// reruns; everything else is a deterministic function of the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A basic block was translated at `pc`.
+    BlockTranslate { pc: u64 },
+    /// A code-cache flush invalidated `blocks` translations.
+    BlockInvalidate { blocks: u64 },
+    /// The coordinator handed the guest to another engine (raw SIMCTRL
+    /// value, 0 for a `--switch-at` budget hand-off).
+    EngineHandoff { value: u64 },
+    /// A trap was delivered to guest code.
+    Trap { cause: u64 },
+    /// An interrupt was taken at a block boundary.
+    Interrupt { cause: u64 },
+    /// A hart entered WFI sleep.
+    WfiSleep,
+    /// A sleeping hart resumed.
+    WfiWake,
+    /// A checkpoint file was written (`seq` 0 = terminal).
+    CheckpointWrite { seq: u64 },
+    /// A shard thread waited on the quantum barrier for `wait_ns` host ns.
+    BarrierWait { shard: u32, wait_ns: u64 },
+    /// A cross-shard mailbox batch was applied (`inbound`) or forwarded.
+    MailboxBatch { shard: u32, count: u64, inbound: bool },
+    /// The guest opened (`on`) or closed its SIMCTRL trace window.
+    TraceWindow { on: bool },
+}
+
+impl EventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::BlockTranslate { .. } => "block_translate",
+            EventKind::BlockInvalidate { .. } => "block_invalidate",
+            EventKind::EngineHandoff { .. } => "engine_handoff",
+            EventKind::Trap { .. } => "trap",
+            EventKind::Interrupt { .. } => "interrupt",
+            EventKind::WfiSleep => "wfi_sleep",
+            EventKind::WfiWake => "wfi_wake",
+            EventKind::CheckpointWrite { .. } => "checkpoint_write",
+            EventKind::BarrierWait { .. } => "barrier_wait",
+            EventKind::MailboxBatch { .. } => "mailbox_batch",
+            EventKind::TraceWindow { .. } => "trace_window",
+        }
+    }
+
+    /// Deterministic argument rendering (host-time fields excluded) — the
+    /// canonical-dump payload the determinism tests compare byte-for-byte.
+    pub fn canon_args(self) -> String {
+        match self {
+            EventKind::BlockTranslate { pc } => format!("pc={:#x}", pc),
+            EventKind::BlockInvalidate { blocks } => format!("blocks={}", blocks),
+            EventKind::EngineHandoff { value } => format!("value={:#x}", value),
+            EventKind::Trap { cause } => format!("cause={}", cause),
+            EventKind::Interrupt { cause } => format!("cause={}", cause),
+            EventKind::WfiSleep | EventKind::WfiWake => String::new(),
+            EventKind::CheckpointWrite { seq } => format!("seq={}", seq),
+            EventKind::BarrierWait { shard, .. } => format!("shard={}", shard),
+            EventKind::MailboxBatch { shard, count, inbound } => {
+                format!("shard={} count={} inbound={}", shard, count, inbound)
+            }
+            EventKind::TraceWindow { on } => format!("on={}", on),
+        }
+    }
+}
+
+/// One recorded event: `(host ns, guest cycle, track)` plus the typed
+/// payload. `seq` is the per-ring record order, used only as a stable
+/// tie-break when merging per-shard rings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    pub seq: u64,
+    pub host_ns: u64,
+    pub cycle: u64,
+    /// Chrome-trace track: hart id, `TRACK_BARRIER_BASE + shard`, or
+    /// `TRACK_COORDINATOR`.
+    pub hart: u32,
+    pub kind: EventKind,
+}
+
+/// Per-system observability state, hung off `System::obs` as the single
+/// cold-path gate.
+pub struct Obs {
+    events: Vec<Event>,
+    /// Ring bound: past this many buffered events, new records are
+    /// dropped (drop-newest) and counted.
+    pub capacity: usize,
+    /// Records dropped on a full ring since the last harvest.
+    pub dropped: u64,
+    seq: u64,
+    /// Guest-controlled trace window (SIMCTRL bits 23/24); starts open.
+    pub window: bool,
+    /// Timeline tracing armed (`--trace-out`); telemetry and profiling
+    /// work without it.
+    pub trace_events: bool,
+    /// Emit one telemetry line every this many retired instructions
+    /// (0 = off).
+    pub stats_every: u64,
+    /// Next retired-instruction mark at which telemetry fires.
+    pub next_stats: u64,
+    /// Accumulated host ns spent waiting on quantum barriers.
+    pub barrier_wait_ns: u64,
+    /// Host-time origin for `host_ns` stamps.
+    pub epoch: Instant,
+    pub telemetry: telemetry::TelemetryState,
+}
+
+impl Obs {
+    pub fn new(capacity: usize, trace_events: bool, stats_every: u64) -> Obs {
+        Obs {
+            events: Vec::new(),
+            capacity,
+            dropped: 0,
+            seq: 0,
+            window: true,
+            trace_events,
+            stats_every,
+            next_stats: stats_every,
+            barrier_wait_ns: 0,
+            epoch: Instant::now(),
+            telemetry: telemetry::TelemetryState::default(),
+        }
+    }
+
+    fn push(&mut self, cycle: u64, hart: u32, kind: EventKind) {
+        if self.events.len() >= self.capacity {
+            self.dropped += 1;
+            return;
+        }
+        let host_ns = self.epoch.elapsed().as_nanos() as u64;
+        self.seq += 1;
+        self.events.push(Event { seq: self.seq, host_ns, cycle, hart, kind });
+    }
+
+    /// Record one event, subject to tracing being armed and the guest
+    /// trace window being open.
+    #[inline]
+    pub fn record(&mut self, cycle: u64, hart: u32, kind: EventKind) {
+        if !self.trace_events || !self.window {
+            return;
+        }
+        self.push(cycle, hart, kind);
+    }
+
+    /// Open/close the guest trace window. The transition itself is
+    /// recorded (even when the window was closed) so a trace shows its
+    /// own brackets.
+    pub fn set_window(&mut self, cycle: u64, hart: u32, on: bool) {
+        if self.trace_events && self.window != on {
+            self.push(cycle, hart, EventKind::TraceWindow { on });
+        }
+        self.window = on;
+    }
+
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    /// Drain the ring into a [`Harvest`] (engine-side counters — profile
+    /// tables, cache churn — are layered on by the engine's `take_obs`).
+    pub fn harvest(&mut self) -> Harvest {
+        Harvest {
+            events: std::mem::take(&mut self.events),
+            dropped: std::mem::take(&mut self.dropped),
+            profile: Vec::new(),
+            cache_flushes: 0,
+            native_exhaustions: 0,
+            barrier_wait_ns: std::mem::take(&mut self.barrier_wait_ns),
+        }
+    }
+}
+
+/// Everything observability collected over one engine's lifetime, merged
+/// across stages/shards by the coordinator and rendered by `--trace-out`
+/// (Chrome JSON) and the `profile` subcommand.
+#[derive(Default)]
+pub struct Harvest {
+    pub events: Vec<Event>,
+    /// Total ring drops — reported in the run summary, never silent.
+    pub dropped: u64,
+    /// Unified per-PC block profile (both DBT backends report here).
+    pub profile: Vec<(u64, PcStat)>,
+    /// Code-cache flushes (whole-cache invalidations) across harts.
+    pub cache_flushes: u64,
+    /// Native code-buffer exhaustion resets (buffer-wide, so not
+    /// attributable per PC; see DESIGN.md §12).
+    pub native_exhaustions: u64,
+    pub barrier_wait_ns: u64,
+}
+
+impl Harvest {
+    pub fn merge(&mut self, mut other: Harvest) {
+        self.events.append(&mut other.events);
+        self.dropped += other.dropped;
+        self.cache_flushes += other.cache_flushes;
+        self.native_exhaustions += other.native_exhaustions;
+        self.barrier_wait_ns += other.barrier_wait_ns;
+        for (pc, stat) in other.profile {
+            profile::merge_entry(&mut self.profile, pc, stat);
+        }
+    }
+
+    /// Deterministic event order: guest cycle, then track, then ring
+    /// order (per-shard rings interleave stably).
+    pub fn sort_events(&mut self) {
+        self.events.sort_by_key(|e| (e.cycle, e.hart, e.seq));
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && self.profile.is_empty() && self.dropped == 0
+    }
+}
+
+/// Canonical dump: one line per event, host-time fields excluded — the
+/// byte-comparable form the determinism tests pin across reruns.
+pub fn canonical(events: &[Event]) -> String {
+    let mut s = String::new();
+    for e in events {
+        s.push_str(&format!("{} {} {}", e.cycle, e.hart, e.kind.name()));
+        let args = e.kind.canon_args();
+        if !args.is_empty() {
+            s.push(' ');
+            s.push_str(&args);
+        }
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_drops_newest_and_counts() {
+        let mut obs = Obs::new(3, true, 0);
+        for i in 0..5u64 {
+            obs.record(i, 0, EventKind::BlockTranslate { pc: 0x1000 + i });
+        }
+        assert_eq!(obs.events().len(), 3);
+        assert_eq!(obs.dropped, 2, "overflow must be counted, never silent");
+        // Drop-newest: the first three records survive.
+        assert_eq!(obs.events()[0].kind, EventKind::BlockTranslate { pc: 0x1000 });
+        let h = obs.harvest();
+        assert_eq!(h.dropped, 2);
+        assert_eq!(h.events.len(), 3);
+        assert_eq!(obs.events().len(), 0, "harvest drains the ring");
+        assert_eq!(obs.dropped, 0);
+    }
+
+    #[test]
+    fn window_gates_records_and_logs_transitions() {
+        let mut obs = Obs::new(64, true, 0);
+        obs.record(1, 0, EventKind::WfiSleep);
+        obs.set_window(2, 0, false);
+        obs.record(3, 0, EventKind::WfiWake); // closed window: dropped silently
+        obs.set_window(4, 0, true);
+        obs.record(5, 0, EventKind::WfiWake);
+        let kinds: Vec<&str> = obs.events().iter().map(|e| e.kind.name()).collect();
+        assert_eq!(
+            kinds,
+            ["wfi_sleep", "trace_window", "trace_window", "wfi_wake"],
+            "closed-window records vanish without counting as drops"
+        );
+        assert_eq!(obs.dropped, 0);
+        // Redundant transitions are not recorded.
+        obs.set_window(6, 0, true);
+        assert_eq!(obs.events().len(), 4);
+    }
+
+    #[test]
+    fn disarmed_tracing_records_nothing() {
+        let mut obs = Obs::new(64, false, 100);
+        obs.record(1, 0, EventKind::WfiSleep);
+        obs.set_window(2, 0, false);
+        assert_eq!(obs.events().len(), 0);
+        assert_eq!(obs.dropped, 0);
+        assert!(!obs.window, "window state still tracks for later re-arm");
+    }
+
+    #[test]
+    fn canonical_excludes_host_time() {
+        let mut obs = Obs::new(64, true, 0);
+        obs.record(10, 1, EventKind::BarrierWait { shard: 2, wait_ns: 12345 });
+        obs.record(11, 0, EventKind::Trap { cause: 5 });
+        let c = canonical(obs.events());
+        assert_eq!(c, "10 1 barrier_wait shard=2\n11 0 trap cause=5\n");
+        assert!(!c.contains("12345"), "host wait time must not appear");
+    }
+
+    #[test]
+    fn harvest_merge_sums_and_sorts() {
+        let mut a = Harvest {
+            events: vec![Event {
+                seq: 1,
+                host_ns: 5,
+                cycle: 20,
+                hart: 0,
+                kind: EventKind::WfiSleep,
+            }],
+            dropped: 1,
+            ..Harvest::default()
+        };
+        let b = Harvest {
+            events: vec![Event {
+                seq: 1,
+                host_ns: 9,
+                cycle: 10,
+                hart: 1,
+                kind: EventKind::WfiWake,
+            }],
+            dropped: 2,
+            cache_flushes: 3,
+            ..Harvest::default()
+        };
+        a.merge(b);
+        a.sort_events();
+        assert_eq!(a.dropped, 3);
+        assert_eq!(a.cache_flushes, 3);
+        assert_eq!(a.events[0].cycle, 10, "sorted by guest cycle");
+        assert!(!a.is_empty());
+        assert!(Harvest::default().is_empty());
+    }
+}

@@ -1,0 +1,188 @@
+//! Unified per-PC hot-block profile (DESIGN.md §12).
+//!
+//! Both DBT backends report through this one table: execution and chain
+//! counters are bumped at block entry in the shared dispatch loop (so
+//! microop and native attribute identical execution counts by
+//! construction), cycles come from the per-step retire sites (microop) or
+//! the baked per-segment increment in emitted code (native), and
+//! translation-cache churn (compiles/invalidations) is folded in by
+//! `dbt::CodeCache` as blocks are inserted, replaced, and flushed.
+
+use std::collections::HashMap;
+
+/// Accumulated counters for one block start PC.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct PcStat {
+    /// End PC of the most recently seen translation at this start PC.
+    pub end: u64,
+    /// Times a block at this PC was entered (dispatches).
+    pub exec: u64,
+    /// Model cycles charged while executing blocks at this PC.
+    pub cycles: u64,
+    /// Entries that arrived via a validated chain link.
+    pub chain_hits: u64,
+    /// Entries that paid the hash-lookup slow path.
+    pub chain_misses: u64,
+    /// Times a block was translated at this PC.
+    pub compiles: u64,
+    /// Times a translation at this PC was invalidated (replace or flush).
+    pub invalidations: u64,
+    /// Disassembly of the most recently folded translation.
+    pub listing: Vec<String>,
+}
+
+impl PcStat {
+    pub fn chain_hit_rate(&self) -> f64 {
+        let total = self.chain_hits + self.chain_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.chain_hits as f64 / total as f64
+        }
+    }
+
+    pub fn absorb(&mut self, other: PcStat) {
+        if !other.listing.is_empty() {
+            self.listing = other.listing;
+        }
+        if other.end != 0 {
+            self.end = other.end;
+        }
+        self.exec += other.exec;
+        self.cycles += other.cycles;
+        self.chain_hits += other.chain_hits;
+        self.chain_misses += other.chain_misses;
+        self.compiles += other.compiles;
+        self.invalidations += other.invalidations;
+    }
+}
+
+/// Per-code-cache profile accumulator, present on `dbt::CodeCache` only
+/// when profiling is enabled.
+#[derive(Debug, Default)]
+pub struct ProfileTable {
+    pub map: HashMap<u64, PcStat>,
+}
+
+impl ProfileTable {
+    pub fn entry(&mut self, pc: u64) -> &mut PcStat {
+        self.map.entry(pc).or_default()
+    }
+
+    pub fn into_entries(self) -> Vec<(u64, PcStat)> {
+        self.map.into_iter().collect()
+    }
+}
+
+/// Merge one per-PC entry into a harvest's entry list.
+pub fn merge_entry(acc: &mut Vec<(u64, PcStat)>, pc: u64, stat: PcStat) {
+    if let Some((_, existing)) = acc.iter_mut().find(|(p, _)| *p == pc) {
+        existing.absorb(stat);
+    } else {
+        acc.push((pc, stat));
+    }
+}
+
+/// Render the top-N blocks by charged cycles (execution count as the
+/// tie-break), with disassembly listings and per-block chain hit rates.
+pub fn render_top(
+    entries: &[(u64, PcStat)],
+    top: usize,
+    cache_flushes: u64,
+    native_exhaustions: u64,
+) -> String {
+    let mut sorted: Vec<&(u64, PcStat)> = entries.iter().filter(|(_, s)| s.exec > 0).collect();
+    sorted.sort_by(|a, b| (b.1.cycles, b.1.exec, a.0).cmp(&(a.1.cycles, a.1.exec, b.0)));
+    let total_cycles: u64 = sorted.iter().map(|(_, s)| s.cycles).sum();
+    let total_exec: u64 = sorted.iter().map(|(_, s)| s.exec).sum();
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "hot blocks: {} distinct PCs, {} entries, {} cycles attributed\n",
+        sorted.len(),
+        total_exec,
+        total_cycles
+    ));
+    out.push_str(&format!(
+        "cache churn: {} whole-cache flushes, {} native buffer exhaustions (buffer-wide; not per-PC)\n",
+        cache_flushes, native_exhaustions
+    ));
+    for (rank, (pc, s)) in sorted.iter().take(top).enumerate() {
+        let share = if total_cycles == 0 {
+            0.0
+        } else {
+            100.0 * s.cycles as f64 / total_cycles as f64
+        };
+        out.push_str(&format!(
+            "#{:<3} {:#010x}..{:#x}  exec {:>10}  cycles {:>12} ({:5.1}%)  chain {:5.1}%  compiles {}  invalidations {}\n",
+            rank + 1,
+            pc,
+            s.end,
+            s.exec,
+            s.cycles,
+            share,
+            100.0 * s.chain_hit_rate(),
+            s.compiles,
+            s.invalidations
+        ));
+        for line in &s.listing {
+            out.push_str("      ");
+            out.push_str(line);
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stat(exec: u64, cycles: u64) -> PcStat {
+        PcStat { exec, cycles, ..PcStat::default() }
+    }
+
+    #[test]
+    fn merge_entry_sums_by_pc() {
+        let mut acc = Vec::new();
+        merge_entry(&mut acc, 0x1000, stat(3, 30));
+        merge_entry(&mut acc, 0x2000, stat(1, 5));
+        merge_entry(
+            &mut acc,
+            0x1000,
+            PcStat { exec: 2, cycles: 20, chain_hits: 4, listing: vec!["nop".into()], ..PcStat::default() },
+        );
+        assert_eq!(acc.len(), 2);
+        let s = &acc.iter().find(|(p, _)| *p == 0x1000).unwrap().1;
+        assert_eq!(s.exec, 5);
+        assert_eq!(s.cycles, 50);
+        assert_eq!(s.chain_hits, 4);
+        assert_eq!(s.listing, ["nop"]);
+    }
+
+    #[test]
+    fn render_orders_by_cycles_and_respects_top_n() {
+        let entries = vec![
+            (0x1000u64, stat(10, 100)),
+            (0x2000u64, stat(50, 500)),
+            (0x3000u64, stat(5, 300)),
+            (0x4000u64, stat(0, 0)), // never executed: filtered out
+        ];
+        let out = render_top(&entries, 2, 7, 1);
+        assert!(out.contains("3 distinct PCs"));
+        assert!(out.contains("7 whole-cache flushes"));
+        assert!(out.contains("1 native buffer exhaustions"));
+        let first = out.find("0x00002000").expect("hottest block listed");
+        let second = out.find("0x00003000").expect("second block listed");
+        assert!(first < second, "sorted by cycles descending");
+        assert!(!out.contains("0x00001000"), "top 2 only");
+        assert!(!out.contains("0x00004000"), "unexecuted PCs filtered");
+    }
+
+    #[test]
+    fn chain_hit_rate_guards_zero() {
+        assert_eq!(PcStat::default().chain_hit_rate(), 0.0);
+        let s = PcStat { chain_hits: 3, chain_misses: 1, ..PcStat::default() };
+        assert!((s.chain_hit_rate() - 0.75).abs() < 1e-12);
+    }
+}

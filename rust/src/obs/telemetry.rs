@@ -1,0 +1,151 @@
+//! Live telemetry streaming (`--stats-every N`).
+//!
+//! While a run is in flight, the engine emits one NDJSON line to stderr
+//! every N retired instructions. Lines follow the schema-stable
+//! `r2vm-telemetry-v1` shape: window deltas for instructions/cycles,
+//! derived MIPS/CPI, chain and L0 hit rates, the barrier stall fraction
+//! (host time spent in quantum-barrier waits over the window), and a
+//! per-hart breakdown. stderr keeps the stream out of guest console
+//! output and `--trace-out`/report files.
+
+/// Previous-window snapshot so each line reports deltas, not cumulatives.
+#[derive(Debug, Default)]
+pub struct TelemetryState {
+    pub prev_host_ns: u64,
+    /// Per-hart `(hart, cycle, instret)` at the last emission.
+    pub prev: Vec<(usize, u64, u64)>,
+    pub prev_chain: (u64, u64),
+    pub prev_l0: (u64, u64),
+    pub prev_barrier_ns: u64,
+    pub lines: u64,
+}
+
+fn ratio(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
+/// Render one telemetry line from current cumulative counters, updating
+/// `state` so the next call reports the following window. Pure except for
+/// `state`, so tests can pin the schema byte-for-byte.
+pub fn render_line(
+    state: &mut TelemetryState,
+    now_ns: u64,
+    per_hart: &[(usize, u64, u64)],
+    chain: (u64, u64),
+    l0: (u64, u64),
+    barrier_ns: u64,
+) -> String {
+    let prev_of = |hart: usize| -> (u64, u64) {
+        state
+            .prev
+            .iter()
+            .find(|(h, _, _)| *h == hart)
+            .map(|(_, c, i)| (*c, *i))
+            .unwrap_or((0, 0))
+    };
+
+    let mut insts = 0u64;
+    let mut cycles = 0u64;
+    let mut harts_json = String::new();
+    for (idx, (hart, cycle, instret)) in per_hart.iter().enumerate() {
+        let (pc, pi) = prev_of(*hart);
+        let dc = cycle.saturating_sub(pc);
+        let di = instret.saturating_sub(pi);
+        insts += di;
+        cycles += dc;
+        if idx > 0 {
+            harts_json.push(',');
+        }
+        harts_json.push_str(&format!(
+            "{{\"hart\":{},\"insts\":{},\"cycles\":{},\"cpi\":{:.3}}}",
+            hart,
+            di,
+            dc,
+            ratio(dc, di)
+        ));
+    }
+
+    let ns = now_ns.saturating_sub(state.prev_host_ns);
+    let mips = if ns == 0 { 0.0 } else { insts as f64 * 1000.0 / ns as f64 };
+    let chain_d = (chain.0 - state.prev_chain.0, chain.1 - state.prev_chain.1);
+    let l0_d = (l0.0 - state.prev_l0.0, l0.1 - state.prev_l0.1);
+    let barrier_d = barrier_ns - state.prev_barrier_ns;
+    let stall = if ns == 0 { 0.0 } else { (barrier_d as f64 / ns as f64).min(1.0) };
+
+    state.lines += 1;
+    let line = format!(
+        "{{\"schema\":\"r2vm-telemetry-v1\",\"seq\":{},\"host_ns\":{},\"insts\":{},\"cycles\":{},\"mips\":{:.3},\"cpi\":{:.3},\"chain_hit_rate\":{:.4},\"l0_hit_rate\":{:.4},\"barrier_stall\":{:.4},\"harts\":[{}]}}",
+        state.lines,
+        now_ns,
+        insts,
+        cycles,
+        mips,
+        ratio(cycles, insts),
+        ratio(chain_d.0, chain_d.0 + chain_d.1),
+        1.0 - ratio(l0_d.1, l0_d.0),
+        stall,
+        harts_json
+    );
+
+    state.prev_host_ns = now_ns;
+    state.prev = per_hart.to_vec();
+    state.prev_chain = chain;
+    state.prev_l0 = l0;
+    state.prev_barrier_ns = barrier_ns;
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_is_schema_stable_and_windowed() {
+        let mut st = TelemetryState::default();
+        let l1 = render_line(
+            &mut st,
+            1_000_000,
+            &[(0, 2000, 1000), (1, 2000, 500)],
+            (90, 10),
+            (1000, 100),
+            0,
+        );
+        assert!(l1.starts_with("{\"schema\":\"r2vm-telemetry-v1\",\"seq\":1,"));
+        assert!(l1.contains("\"insts\":1500"));
+        assert!(l1.contains("\"cycles\":4000"));
+        assert!(l1.contains("\"mips\":1.500"));
+        assert!(l1.contains("\"chain_hit_rate\":0.9000"));
+        assert!(l1.contains("\"l0_hit_rate\":0.9000"));
+        assert!(l1.contains("\"harts\":[{\"hart\":0,"));
+        assert!(l1.ends_with('}'));
+
+        // Second window: deltas, not cumulatives.
+        let l2 = render_line(
+            &mut st,
+            2_000_000,
+            &[(0, 2500, 1100), (1, 3000, 900)],
+            (190, 10),
+            (2000, 100),
+            500_000,
+        );
+        assert!(l2.contains("\"seq\":2"));
+        assert!(l2.contains("\"insts\":500"));
+        assert!(l2.contains("\"cycles\":1500"));
+        assert!(l2.contains("\"chain_hit_rate\":1.0000"), "window saw only hits: {}", l2);
+        assert!(l2.contains("\"l0_hit_rate\":1.0000"));
+        assert!(l2.contains("\"barrier_stall\":0.5000"));
+    }
+
+    #[test]
+    fn zero_windows_do_not_divide_by_zero() {
+        let mut st = TelemetryState::default();
+        let line = render_line(&mut st, 0, &[(0, 0, 0)], (0, 0), (0, 0), 0);
+        assert!(line.contains("\"mips\":0.000"));
+        assert!(line.contains("\"cpi\":0.000"));
+        assert!(line.contains("\"barrier_stall\":0.0000"));
+    }
+}

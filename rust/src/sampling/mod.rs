@@ -373,6 +373,10 @@ pub fn run_sampled(cfg: &SimConfig, image: &Image) -> RunReport {
         stages: vec![summary.ff_label.clone(), summary.measure_label.clone()],
         stage_reports: Vec::new(),
         sampling: Some(summary),
+        // Sampled runs rebuild engines per window; observability is not
+        // threaded through them (--sample excludes --trace-out in main).
+        obs: None,
+        trace_dropped: 0,
     }
 }
 

@@ -264,14 +264,20 @@ impl Plic {
 /// Bare-metal workload interface, riscv-tests `tohost` style:
 ///   +0  write: terminate simulation, exit code = value >> 1 (if lsb set)
 ///   +8  write: console putchar
+///   +16 write: observability trace window (nonzero = open, 0 = close);
+///       MMIO alternative to the SIMCTRL pulse bits for workloads that
+///       bracket their region of interest from C instead of CSR asm
 pub struct SimIo {
     pub exit_code: Option<u64>,
     pub console: Vec<u8>,
+    /// Latched trace-window request; the engine's observability tick
+    /// consumes it (`None` when nothing was written since).
+    pub trace_req: Option<bool>,
 }
 
 impl SimIo {
     pub fn new() -> SimIo {
-        SimIo { exit_code: None, console: Vec::new() }
+        SimIo { exit_code: None, console: Vec::new(), trace_req: None }
     }
 
     pub fn write(&mut self, offset: u64, value: u64) {
@@ -282,6 +288,7 @@ impl SimIo {
                 }
             }
             8 => self.console.push(value as u8),
+            16 => self.trace_req = Some(value != 0),
             _ => {}
         }
     }
@@ -444,6 +451,21 @@ mod tests {
         let mut s = SimIo::new();
         s.write(0, (42 << 1) | 1);
         assert_eq!(s.exit_code, Some(42));
+    }
+
+    #[test]
+    fn simio_trace_window_latch() {
+        let mut s = SimIo::new();
+        assert_eq!(s.trace_req, None);
+        s.write(16, 0);
+        assert_eq!(s.trace_req, Some(false), "zero closes the window");
+        s.write(16, 1);
+        assert_eq!(s.trace_req, Some(true), "last write wins until consumed");
+        assert_eq!(s.trace_req.take(), Some(true), "engine tick consumes the latch");
+        assert_eq!(s.trace_req, None);
+        // Exit/console writes do not disturb the latch.
+        s.write(8, b'x' as u64);
+        assert_eq!(s.trace_req, None);
     }
 
     #[test]

@@ -63,6 +63,10 @@ pub struct System {
     pub simctrl_state: u64,
     /// Optional analytics trace capture.
     pub trace: Option<TraceCapture>,
+    /// Observability layer (event timeline, telemetry; DESIGN.md §12).
+    /// `None` unless `--trace-out`/`--stats-every`/`profile` armed it —
+    /// the single cold branch the disabled hot path pays.
+    pub obs: Option<Box<crate::obs::Obs>>,
     /// Bypass the L0 fast path entirely, invoking the memory model on
     /// every access (paper §3.4.1's exact-replacement escape hatch; also
     /// the A2 ablation and the gem5-like baseline's behaviour).
@@ -148,6 +152,7 @@ impl System {
             exit: None,
             simctrl_state: 0,
             trace: None,
+            obs: None,
             force_cold: false,
             parallel: false,
             shared_exit: None,

@@ -1,0 +1,314 @@
+//! Observability-layer contracts (DESIGN.md §12):
+//!
+//! * **Non-perturbation**: enabling event tracing + block profiling must
+//!   leave every architectural register, cycle count, L0/memory-model
+//!   counter and dispatch statistic bit-identical to an untraced run.
+//! * **Determinism**: the canonical event stream (host-time fields
+//!   excluded) is a pure function of `(image, shards, quantum)` — three
+//!   reruns must agree byte-for-byte, serialized and threaded.
+//! * **Backend uniformity**: the micro-op and native DBT backends report
+//!   through one per-PC profile table with identical execution counts.
+//! * **Guest windowing**: SIMCTRL trace-window pulses bracket the region
+//!   of interest — nothing is recorded while the window is closed.
+
+use r2vm::asm::*;
+use r2vm::coordinator::{build_system, run_image, EngineMode, SimConfig};
+use r2vm::difftest::generator::generate;
+use r2vm::difftest::BugInjection;
+use r2vm::engine::{ExecutionEngine, ExitReason};
+use r2vm::fiber::FiberEngine;
+use r2vm::isa::csr::{CSR_SIMCTRL, SIMCTRL_TRACE_OFF_BIT, SIMCTRL_TRACE_ON_BIT};
+use r2vm::mem::DRAM_BASE;
+use r2vm::obs::{canonical, EventKind, Obs};
+use r2vm::sys::loader::load_flat;
+use r2vm::workloads::multicore;
+
+const BUDGET: u64 = 2_000_000;
+
+fn fiber_for(image: &Image, harts: usize, pipeline: &str, memory: &str) -> FiberEngine {
+    let cfg = SimConfig {
+        harts,
+        mode: EngineMode::Lockstep,
+        pipeline: pipeline.into(),
+        memory: memory.into(),
+        ..SimConfig::default()
+    };
+    let mut eng = FiberEngine::new(build_system(&cfg), pipeline);
+    let entry = load_flat(&eng.sys, image);
+    eng.set_entry(entry);
+    eng
+}
+
+fn arm(eng: &mut FiberEngine) {
+    eng.sys.obs = Some(Box::new(Obs::new(1 << 16, true, 0)));
+    eng.set_profile(true);
+}
+
+/// Enabling tracing + profiling changes nothing observable about the run:
+/// architectural end state, cycles, L0 and memory-model counters, and the
+/// dispatch statistics all stay bit-identical across the corpus.
+#[test]
+fn tracing_leaves_execution_bit_identical() {
+    for seed in 0..10u64 {
+        let prog = generate(seed, 1);
+        let asm = prog.assemble(BugInjection::None);
+
+        let mut plain = fiber_for(&asm.image, 1, "inorder", "cache");
+        let pr = plain.run(BUDGET);
+        let mut traced = fiber_for(&asm.image, 1, "inorder", "cache");
+        arm(&mut traced);
+        let tr = traced.run(BUDGET);
+
+        assert!(matches!(pr, ExitReason::Exited(_)), "seed {}: {:?}", seed, pr);
+        assert_eq!(pr, tr, "seed {}: exit reasons", seed);
+        assert_eq!(plain.harts[0].regs, traced.harts[0].regs, "seed {}: registers", seed);
+        assert_eq!(plain.harts[0].pc, traced.harts[0].pc, "seed {}: pc", seed);
+        assert_eq!(plain.harts[0].instret, traced.harts[0].instret, "seed {}: instret", seed);
+        assert_eq!(plain.harts[0].cycle, traced.harts[0].cycle, "seed {}: cycles", seed);
+        assert_eq!(
+            plain.sys.l0[0].d.stats(),
+            traced.sys.l0[0].d.stats(),
+            "seed {}: D-side L0 counters",
+            seed
+        );
+        assert_eq!(
+            plain.sys.l0[0].i.stats(),
+            traced.sys.l0[0].i.stats(),
+            "seed {}: I-side L0 counters",
+            seed
+        );
+        assert_eq!(
+            plain.sys.model.stats(),
+            traced.sys.model.stats(),
+            "seed {}: memory-model counters",
+            seed
+        );
+        assert_eq!(plain.stats.chain_hits, traced.stats.chain_hits, "seed {}: chain", seed);
+        assert_eq!(
+            plain.stats.block_entries, traced.stats.block_entries,
+            "seed {}: block entries",
+            seed
+        );
+
+        // The traced run actually collected something, and the per-PC
+        // execution counts account for every dispatch exactly.
+        let harvest = traced.take_obs().expect("observability armed");
+        assert!(!harvest.events.is_empty(), "seed {}: events recorded", seed);
+        assert!(
+            harvest.events.iter().any(|e| matches!(e.kind, EventKind::BlockTranslate { .. })),
+            "seed {}: block translates traced",
+            seed
+        );
+        let exec_total: u64 = harvest.profile.iter().map(|(_, s)| s.exec).sum();
+        assert_eq!(
+            exec_total, plain.stats.block_entries,
+            "seed {}: profile exec counts must partition block entries",
+            seed
+        );
+        assert_eq!(harvest.dropped, 0, "seed {}: ring large enough", seed);
+    }
+}
+
+/// Both DBT backends feed the same per-PC table: identical execution,
+/// cycle and chain counts per block start PC. Vacuous where the native
+/// backend is unavailable.
+#[test]
+fn backends_report_identical_profiles() {
+    if !r2vm::dbt::native_available() {
+        return;
+    }
+    for seed in 0..6u64 {
+        let prog = generate(seed, 1);
+        let asm = prog.assemble(BugInjection::None);
+
+        let mut micro = fiber_for(&asm.image, 1, "simple", "atomic");
+        micro.set_profile(true);
+        let mr = micro.run(BUDGET);
+        let mut native = fiber_for(&asm.image, 1, "simple", "atomic");
+        native.backend = r2vm::dbt::Backend::Native;
+        native.set_profile(true);
+        let nr = native.run(BUDGET);
+        assert_eq!(mr, nr, "seed {}: exit reasons", seed);
+
+        let flatten = |h: r2vm::obs::Harvest| {
+            let mut v: Vec<(u64, u64, u64, u64, u64)> = h
+                .profile
+                .into_iter()
+                .map(|(pc, s)| (pc, s.exec, s.cycles, s.chain_hits, s.chain_misses))
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        let mp = flatten(micro.take_obs().expect("microop profile"));
+        let np = flatten(native.take_obs().expect("native profile"));
+        assert!(!mp.is_empty(), "seed {}: profile collected", seed);
+        assert_eq!(mp, np, "seed {}: per-PC (exec, cycles, chain) must be backend-invariant", seed);
+    }
+}
+
+/// Canonical event streams are bit-identical across three reruns, both
+/// under the serialized quantum-1 configuration and a threaded layout,
+/// with per-hart translate activity on every hart and (threaded only)
+/// barrier-lane events present.
+#[test]
+fn sharded_trace_streams_reproduce_bit_for_bit() {
+    let img = multicore::build_nojoin(800);
+    for (shards, quantum) in [(2usize, 1u64), (2, 64)] {
+        let mut cfg = SimConfig::default();
+        cfg.harts = 4;
+        cfg.pipeline = "inorder".into();
+        cfg.memory = "cache".into();
+        cfg.mode = EngineMode::Sharded;
+        cfg.shards = shards;
+        cfg.quantum = quantum;
+        cfg.trace_events = true;
+
+        let run = |cfg: &SimConfig| {
+            let report = run_image(cfg, &img);
+            assert!(
+                matches!(report.exit, ExitReason::Exited(_)),
+                "S={} Q={}: {:?}",
+                shards,
+                quantum,
+                report.exit
+            );
+            report.obs.expect("tracing enabled")
+        };
+        let first = run(&cfg);
+        assert_eq!(first.dropped, 0, "S={} Q={}: no drops expected", shards, quantum);
+        for hart in 0..4u32 {
+            assert!(
+                first.events.iter().any(|e| {
+                    e.hart == hart && matches!(e.kind, EventKind::BlockTranslate { .. })
+                }),
+                "S={} Q={}: hart {} track has translate events",
+                shards,
+                quantum,
+                hart
+            );
+        }
+        if quantum > 1 {
+            assert!(
+                first
+                    .events
+                    .iter()
+                    .any(|e| matches!(e.kind, EventKind::BarrierWait { .. })),
+                "threaded runs must trace quantum-barrier waits"
+            );
+        }
+        let want = canonical(&first.events);
+        for round in 1..3 {
+            let again = canonical(&run(&cfg).events);
+            assert_eq!(
+                want, again,
+                "S={} Q={} rerun {}: canonical event stream must be bit-identical",
+                shards, quantum, round
+            );
+        }
+
+        // The Chrome export of the same harvest is structurally sound.
+        let json = r2vm::obs::chrome::to_chrome_json(&first, 4);
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+        for hart in 0..4 {
+            assert!(json.contains(&format!("\"name\":\"hart {}\"", hart)));
+        }
+        if quantum > 1 {
+            assert!(json.contains("barrier"), "shard barrier lanes named");
+        }
+    }
+}
+
+/// A guest brackets its region of interest with SIMCTRL trace-window
+/// pulses: nothing is recorded between the close and the reopen, and the
+/// transitions themselves appear in the trace.
+#[test]
+fn simctrl_window_brackets_the_trace() {
+    let mut a = Assembler::new(DRAM_BASE);
+    let tail = a.new_label();
+    // Warm-up region: traced (window starts open).
+    a.li(A1, 0);
+    a.li(A0, 50);
+    let warm = a.here();
+    a.add(A1, A1, A0);
+    a.addi(A0, A0, -1);
+    a.bnez(A0, warm);
+    // Close the window.
+    a.li(T0, SIMCTRL_TRACE_OFF_BIT as i64);
+    a.csrw(CSR_SIMCTRL, T0);
+    // Fresh code first executed (hence translated) only while closed.
+    a.li(A0, 50);
+    let quiet = a.here();
+    a.add(A1, A1, A0);
+    a.addi(A0, A0, -1);
+    a.bnez(A0, quiet);
+    // Reopen and jump into a fresh tail region, translated while open.
+    a.li(T0, SIMCTRL_TRACE_ON_BIT as i64);
+    a.csrw(CSR_SIMCTRL, T0);
+    a.j(tail);
+    a.bind(tail);
+    a.mv(A0, A1);
+    a.li(A7, 93);
+    a.ecall();
+    let img = a.finish();
+
+    let mut eng = fiber_for(&img, 1, "simple", "atomic");
+    arm(&mut eng);
+    let exit = eng.run(BUDGET);
+    assert_eq!(exit, ExitReason::Exited(2 * (50 * 51 / 2)));
+    let harvest = eng.take_obs().expect("observability armed");
+
+    let windows: Vec<&r2vm::obs::Event> = harvest
+        .events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::TraceWindow { .. }))
+        .collect();
+    assert_eq!(windows.len(), 2, "one close + one reopen: {:?}", windows);
+    assert_eq!(windows[0].kind, EventKind::TraceWindow { on: false });
+    assert_eq!(windows[1].kind, EventKind::TraceWindow { on: true });
+    let (closed, reopened) = (windows[0].cycle, windows[1].cycle);
+    assert!(closed < reopened);
+
+    for e in &harvest.events {
+        assert!(
+            e.cycle <= closed || e.cycle >= reopened,
+            "event recorded inside the closed window: {:?}",
+            e
+        );
+    }
+    let translate_cycles: Vec<u64> = harvest
+        .events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::BlockTranslate { .. }))
+        .map(|e| e.cycle)
+        .collect();
+    assert!(
+        translate_cycles.iter().any(|&c| c <= closed),
+        "warm-up region traced before the close"
+    );
+    assert!(
+        translate_cycles.iter().any(|&c| c >= reopened),
+        "tail region traced after the reopen"
+    );
+}
+
+/// The run summary surfaces observability: event/drop counts appear, and
+/// drops are counted (never silent) when the ring is undersized.
+#[test]
+fn summary_reports_events_and_drops() {
+    let img = multicore::build_nojoin(200);
+    let mut cfg = SimConfig::default();
+    cfg.harts = 2;
+    cfg.pipeline = "simple".into();
+    cfg.memory = "atomic".into();
+    cfg.trace_events = true;
+    cfg.obs_capacity = 4; // force overflow
+    let report = run_image(&cfg, &img);
+    assert!(matches!(report.exit, ExitReason::Exited(_)));
+    let harvest = report.obs.as_ref().expect("tracing enabled");
+    assert!(harvest.dropped > 0, "a 4-slot ring must overflow");
+    assert_eq!(harvest.events.len(), 4, "drop-newest keeps the ring bound");
+    let s = report.summary();
+    assert!(s.contains("obs: events=4"), "{}", s);
+    assert!(s.contains("dropped="), "{}", s);
+}
