@@ -843,6 +843,60 @@ mod tests {
         assert_eq!(cell.dispatch, "lookup");
     }
 
+    /// A synthetic cell whose MIPS is exactly `mips` (1-second best run).
+    fn synth_cell(workload: &str, mips: f64) -> Cell {
+        let work = (mips * 1e6) as u64;
+        Cell {
+            workload: workload.into(),
+            mode: "lockstep",
+            pipeline: "simple",
+            memory: "atomic",
+            dispatch: "chain",
+            harts: 1,
+            sharding: None,
+            backend: None,
+            obs: None,
+            measurement: Measurement {
+                name: workload.into(),
+                best: std::time::Duration::from_secs(1),
+                mean: std::time::Duration::from_secs(1),
+                work,
+                runs: 1,
+            },
+            insts: work,
+            cycles: work,
+            exit: Some(0),
+            engine_stats: EngineStats::default(),
+            model_stats: Vec::new(),
+        }
+    }
+
+    /// `--fail-threshold` gates only rows present on both sides: a row
+    /// missing from the baseline (printed as `[new]` by compare) must
+    /// never count as a regression no matter how slow it is, or a baseline
+    /// captured before a matrix extension would fail every CI run.
+    #[test]
+    fn regressions_skip_rows_missing_from_the_baseline() {
+        let report = |cells: Vec<Cell>| BenchReport {
+            quick: true,
+            runs: 1,
+            cells,
+            skipped: Vec::new(),
+            host_cpus: 1,
+        };
+        let baseline_json = report(vec![synth_cell("alpha", 100.0)]).to_json();
+        let current = report(vec![synth_cell("alpha", 50.0), synth_cell("beta", 0.001)]);
+        let regressed = current.regressions(&baseline_json, 10.0);
+        assert_eq!(regressed.len(), 1, "only the matched row can regress: {:?}", regressed);
+        assert!(regressed[0].contains("alpha"), "{:?}", regressed);
+        // The glacial unmatched row is visible in compare() output — just
+        // never a gate failure.
+        let cmp = current.compare(&baseline_json);
+        assert!(cmp.contains("[new"), "{}", cmp);
+        // Within the threshold nothing regresses at all.
+        assert!(current.regressions(&baseline_json, 60.0).is_empty());
+    }
+
     /// Quick-matrix smoke on one workload + JSON structural checks.
     #[test]
     fn quick_report_schema_is_stable() {

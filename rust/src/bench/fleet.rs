@@ -1,0 +1,460 @@
+//! Fleet report aggregation: per-instance records from a COW fan-out run
+//! (`coordinator::fleet`) reduced to fleet-wide percentiles and written as
+//! the schema-stable `BENCH_fleet.json` (`r2vm-fleet-v1`, DESIGN.md §13).
+
+/// Measured outcome of one successfully driven fleet instance.
+#[derive(Debug, Clone)]
+pub struct InstanceStats {
+    /// Debug-formatted `ExitReason` of the instance's run.
+    pub exit: String,
+    /// Instructions this instance retired beyond the checkpoint.
+    pub insts: u64,
+    /// Cycles this instance accumulated beyond the checkpoint (summed
+    /// over harts; 0 under non-cycle-tracking configurations).
+    pub cycles: u64,
+    /// Wall time of the drive loop alone.
+    pub wall_secs: f64,
+    /// COW restore + code-seed install time (checkpoint to runnable
+    /// engine) — the number the fan-out exists to shrink.
+    pub restore_secs: f64,
+    /// Checkpoint content pages this instance mapped copy-on-write.
+    pub pages_mapped: u64,
+    /// Pages it actually cloned on first write (sharing evidence:
+    /// cloned ≪ mapped).
+    pub pages_cloned: u64,
+    /// Blocks materialised from the shared code seed instead of being
+    /// retranslated.
+    pub seed_hits: u64,
+    /// Blocks this instance translated itself.
+    pub translations: u64,
+}
+
+impl InstanceStats {
+    /// Cycles per instruction over the post-checkpoint region.
+    pub fn cpi(&self) -> f64 {
+        if self.insts == 0 {
+            0.0
+        } else {
+            self.cycles as f64 / self.insts as f64
+        }
+    }
+
+    /// Post-checkpoint simulation rate; 0 when unmeasurable — never
+    /// inf/NaN (mirrors `RunReport::mips`).
+    pub fn mips(&self) -> f64 {
+        if self.wall_secs <= 0.0 || self.insts == 0 {
+            0.0
+        } else {
+            self.insts as f64 / self.wall_secs / 1e6
+        }
+    }
+}
+
+/// One fleet instance: its sweep parameters and its outcome. A failed
+/// instance (invalid sweep combination) is recorded, never a process
+/// abort — one bad cell must not sink a thousand-instance run.
+#[derive(Debug, Clone)]
+pub struct InstanceResult {
+    pub index: usize,
+    /// Sweep parameters applied on top of the base config (`key=value`).
+    pub params: Vec<(String, String)>,
+    pub outcome: Result<InstanceStats, String>,
+}
+
+/// One `[lo, hi)` bucket of the MIPS histogram (the top bucket is
+/// closed so the maximum lands inside it).
+#[derive(Debug, Clone, Copy)]
+pub struct HistBucket {
+    pub lo: f64,
+    pub hi: f64,
+    pub count: usize,
+}
+
+/// Nearest-rank percentile over an unsorted sample (`p` in 0..=100);
+/// 0.0 for an empty sample. Inputs must not contain NaN.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("percentile input must not be NaN"));
+    let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[idx.min(v.len() - 1)]
+}
+
+/// Fixed-width linear histogram over `xs`. A degenerate sample (all
+/// values equal, or empty) collapses to at most one bucket.
+pub fn histogram(xs: &[f64], buckets: usize) -> Vec<HistBucket> {
+    if xs.is_empty() || buckets == 0 {
+        return Vec::new();
+    }
+    let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if max <= min {
+        return vec![HistBucket { lo: min, hi: max, count: xs.len() }];
+    }
+    let width = (max - min) / buckets as f64;
+    let mut out: Vec<HistBucket> = (0..buckets)
+        .map(|i| HistBucket {
+            lo: min + width * i as f64,
+            hi: min + width * (i + 1) as f64,
+            count: 0,
+        })
+        .collect();
+    for &x in xs {
+        let i = (((x - min) / width) as usize).min(buckets - 1);
+        out[i].count += 1;
+    }
+    out
+}
+
+/// Escape a string for embedding in a JSON literal (the report embeds
+/// user-supplied sweep values and error messages).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Number of MIPS histogram buckets in the JSON report.
+pub const MIPS_BUCKETS: usize = 10;
+
+/// The aggregated result of one fleet run.
+pub struct FleetReport {
+    /// Instances requested (= `results.len()`).
+    pub instances: usize,
+    /// Host worker threads the instances were multiplexed onto.
+    pub workers: usize,
+    /// Wall time of the whole fan-out, warm-up included.
+    pub wall_secs: f64,
+    /// Content pages in the shared checkpoint page set (per-instance
+    /// `pages_mapped` counts this same set).
+    pub shared_pages: u64,
+    /// Blocks the warm-up instance translated to build the code seed
+    /// (0 when code sharing was off or the warm-up found nothing).
+    pub warmup_translations: u64,
+    /// Distinct blocks in the shared seed.
+    pub seed_blocks: u64,
+    pub results: Vec<InstanceResult>,
+}
+
+impl FleetReport {
+    /// Successfully driven instances.
+    pub fn ok(&self) -> Vec<&InstanceStats> {
+        self.results.iter().filter_map(|r| r.outcome.as_ref().ok()).collect()
+    }
+
+    /// Instances that failed to configure or validate.
+    pub fn failed(&self) -> usize {
+        self.results.iter().filter(|r| r.outcome.is_err()).count()
+    }
+
+    /// CPI sample: instances that retired work under a cycle-tracking
+    /// configuration (atomic-pipeline instances report 0 cycles and
+    /// would poison the percentiles).
+    pub fn cpis(&self) -> Vec<f64> {
+        self.ok().iter().filter(|s| s.insts > 0 && s.cycles > 0).map(|s| s.cpi()).collect()
+    }
+
+    /// Post-checkpoint MIPS sample over the successful instances.
+    pub fn mipses(&self) -> Vec<f64> {
+        self.ok().iter().map(|s| s.mips()).collect()
+    }
+
+    /// Restore-time sample in milliseconds over the successful instances.
+    pub fn restores_ms(&self) -> Vec<f64> {
+        self.ok().iter().map(|s| s.restore_secs * 1e3).collect()
+    }
+
+    pub fn pages_mapped_total(&self) -> u64 {
+        self.ok().iter().map(|s| s.pages_mapped).sum()
+    }
+
+    pub fn pages_cloned_total(&self) -> u64 {
+        self.ok().iter().map(|s| s.pages_cloned).sum()
+    }
+
+    pub fn seed_hits_total(&self) -> u64 {
+        self.ok().iter().map(|s| s.seed_hits).sum()
+    }
+
+    pub fn translations_total(&self) -> u64 {
+        self.ok().iter().map(|s| s.translations).sum()
+    }
+
+    /// Machine-readable report (schema `r2vm-fleet-v1`).
+    pub fn to_json(&self) -> String {
+        let cpis = self.cpis();
+        let mipses = self.mipses();
+        let restores = self.restores_ms();
+        let mips_min = mipses.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mips_max = mipses.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"r2vm-fleet-v1\",\n");
+        s.push_str(&format!("  \"instances\": {},\n", self.instances));
+        s.push_str(&format!("  \"workers\": {},\n", self.workers));
+        s.push_str(&format!("  \"failed\": {},\n", self.failed()));
+        s.push_str(&format!("  \"wall_seconds\": {:.6},\n", self.wall_secs));
+        s.push_str(&format!(
+            "  \"restore_ms\": {{\"p50\": {:.6}, \"p99\": {:.6}, \"max\": {:.6}}},\n",
+            percentile(&restores, 50.0),
+            percentile(&restores, 99.0),
+            percentile(&restores, 100.0)
+        ));
+        s.push_str(&format!(
+            "  \"cpi\": {{\"p50\": {:.6}, \"p99\": {:.6}}},\n",
+            percentile(&cpis, 50.0),
+            percentile(&cpis, 99.0)
+        ));
+        s.push_str(&format!(
+            "  \"mips\": {{\"min\": {:.6}, \"p50\": {:.6}, \"max\": {:.6}}},\n",
+            if mips_min.is_finite() { mips_min } else { 0.0 },
+            percentile(&mipses, 50.0),
+            if mips_max.is_finite() { mips_max } else { 0.0 }
+        ));
+        s.push_str("  \"mips_histogram\": [");
+        for (i, b) in histogram(&mipses, MIPS_BUCKETS).iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!(
+                "{{\"lo\": {:.6}, \"hi\": {:.6}, \"count\": {}}}",
+                b.lo, b.hi, b.count
+            ));
+        }
+        s.push_str("],\n");
+        s.push_str(&format!(
+            "  \"cow\": {{\"shared_pages\": {}, \"pages_mapped_total\": {}, \
+             \"pages_cloned_total\": {}}},\n",
+            self.shared_pages,
+            self.pages_mapped_total(),
+            self.pages_cloned_total()
+        ));
+        s.push_str(&format!(
+            "  \"code_seed\": {{\"warmup_translations\": {}, \"seed_blocks\": {}, \
+             \"seed_hits_total\": {}, \"translations_total\": {}}},\n",
+            self.warmup_translations,
+            self.seed_blocks,
+            self.seed_hits_total(),
+            self.translations_total()
+        ));
+        s.push_str("  \"cells\": [\n");
+        for (i, r) in self.results.iter().enumerate() {
+            s.push_str(&format!("    {{\"index\": {}, \"params\": {{", r.index));
+            for (j, (k, v)) in r.params.iter().enumerate() {
+                if j > 0 {
+                    s.push_str(", ");
+                }
+                s.push_str(&format!("\"{}\": \"{}\"", json_escape(k), json_escape(v)));
+            }
+            s.push_str("}, ");
+            match &r.outcome {
+                Ok(st) => s.push_str(&format!(
+                    "\"ok\": true, \"exit\": \"{}\", \"insts\": {}, \"cycles\": {}, \
+                     \"cpi\": {:.6}, \"mips\": {:.6}, \"wall_secs\": {:.6}, \
+                     \"restore_secs\": {:.6}, \"pages_mapped\": {}, \"pages_cloned\": {}, \
+                     \"seed_hits\": {}, \"translations\": {}}}",
+                    json_escape(&st.exit),
+                    st.insts,
+                    st.cycles,
+                    st.cpi(),
+                    st.mips(),
+                    st.wall_secs,
+                    st.restore_secs,
+                    st.pages_mapped,
+                    st.pages_cloned,
+                    st.seed_hits,
+                    st.translations
+                )),
+                Err(e) => {
+                    s.push_str(&format!("\"ok\": false, \"error\": \"{}\"}}", json_escape(e)))
+                }
+            }
+            if i + 1 < self.results.len() {
+                s.push(',');
+            }
+            s.push('\n');
+        }
+        s.push_str("  ]\n");
+        s.push_str("}\n");
+        s
+    }
+
+    /// Human-readable fleet summary.
+    pub fn table(&self) -> String {
+        let cpis = self.cpis();
+        let mipses = self.mipses();
+        let restores = self.restores_ms();
+        let mut s = format!(
+            "=== fleet: {} instances on {} workers in {:.3}s ({} failed) ===\n",
+            self.instances,
+            self.workers,
+            self.wall_secs,
+            self.failed()
+        );
+        s.push_str(&format!(
+            "  restore: p50 {:.3}ms  p99 {:.3}ms  max {:.3}ms\n",
+            percentile(&restores, 50.0),
+            percentile(&restores, 99.0),
+            percentile(&restores, 100.0)
+        ));
+        if !cpis.is_empty() {
+            s.push_str(&format!(
+                "  cpi:     p50 {:.3}  p99 {:.3}\n",
+                percentile(&cpis, 50.0),
+                percentile(&cpis, 99.0)
+            ));
+        }
+        s.push_str(&format!(
+            "  mips:    min {:.1}  p50 {:.1}  max {:.1}\n",
+            percentile(&mipses, 0.0),
+            percentile(&mipses, 50.0),
+            percentile(&mipses, 100.0)
+        ));
+        for b in histogram(&mipses, MIPS_BUCKETS) {
+            s.push_str(&format!(
+                "    [{:>8.1}, {:>8.1})  {:>5}  {}\n",
+                b.lo,
+                b.hi,
+                b.count,
+                "#".repeat(b.count.min(60))
+            ));
+        }
+        s.push_str(&format!(
+            "  cow:     {} shared pages; mapped {} / cloned {} across the fleet\n",
+            self.shared_pages,
+            self.pages_mapped_total(),
+            self.pages_cloned_total()
+        ));
+        s.push_str(&format!(
+            "  code:    {} warm-up translations -> {} seed blocks; \
+             {} seed hits vs {} fleet translations\n",
+            self.warmup_translations,
+            self.seed_blocks,
+            self.seed_hits_total(),
+            self.translations_total()
+        ));
+        for r in &self.results {
+            if let Err(e) = &r.outcome {
+                s.push_str(&format!("  instance {} FAILED: {}\n", r.index, e));
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(insts: u64, cycles: u64, wall: f64, restore: f64) -> InstanceStats {
+        InstanceStats {
+            exit: "Exited(0)".into(),
+            insts,
+            cycles,
+            wall_secs: wall,
+            restore_secs: restore,
+            pages_mapped: 4,
+            pages_cloned: 1,
+            seed_hits: 10,
+            translations: 2,
+        }
+    }
+
+    fn demo_report() -> FleetReport {
+        let results = (0..8)
+            .map(|i| InstanceResult {
+                index: i,
+                params: vec![("pipeline".into(), "simple".into())],
+                outcome: if i == 7 {
+                    Err("unknown option --bogus".into())
+                } else {
+                    Ok(stats(1_000, 2_000 + 100 * i as u64, 0.001 * (i + 1) as f64, 0.0001))
+                },
+            })
+            .collect();
+        FleetReport {
+            instances: 8,
+            workers: 2,
+            wall_secs: 0.5,
+            shared_pages: 4,
+            warmup_translations: 12,
+            seed_blocks: 12,
+            results,
+        }
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[5.0], 99.0), 5.0);
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0, "nearest rank rounds up at .5");
+    }
+
+    #[test]
+    fn histogram_covers_extremes_and_degenerates() {
+        let h = histogram(&[0.0, 5.0, 10.0], 10);
+        assert_eq!(h.len(), 10);
+        assert_eq!(h.iter().map(|b| b.count).sum::<usize>(), 3);
+        assert_eq!(h[0].count, 1);
+        assert_eq!(h[9].count, 1, "the maximum lands in the closed top bucket");
+        let flat = histogram(&[2.0, 2.0], 10);
+        assert_eq!(flat.len(), 1, "degenerate sample collapses");
+        assert_eq!(flat[0].count, 2);
+        assert!(histogram(&[], 10).is_empty());
+    }
+
+    #[test]
+    fn report_json_schema_is_stable() {
+        let r = demo_report();
+        let json = r.to_json();
+        assert!(json.contains("\"schema\": \"r2vm-fleet-v1\""));
+        assert!(json.contains("\"instances\": 8"));
+        assert!(json.contains("\"failed\": 1"));
+        assert!(json.contains("\"restore_ms\""));
+        assert!(json.contains("\"cpi\": {\"p50\":"));
+        assert!(json.contains("\"mips_histogram\""));
+        assert!(json.contains("\"pages_cloned_total\": 7"));
+        assert!(json.contains("\"seed_hits_total\": 70"));
+        assert!(json.contains("\"ok\": false, \"error\": \"unknown option --bogus\""));
+        // Crude structural checks (no JSON parser offline): balanced
+        // braces/brackets, no trailing comma before a closing bracket.
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+        assert!(!json.contains(",\n  ]"));
+        assert!(!json.contains(",}"));
+    }
+
+    #[test]
+    fn json_escaping_defuses_hostile_strings() {
+        let mut r = demo_report();
+        r.results[7].outcome = Err("quote \" backslash \\ newline \n end".into());
+        let json = r.to_json();
+        assert!(json.contains("quote \\\" backslash \\\\ newline \\n end"));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+    }
+
+    #[test]
+    fn table_reports_failures_and_sharing() {
+        let r = demo_report();
+        let t = r.table();
+        assert!(t.contains("8 instances"));
+        assert!(t.contains("instance 7 FAILED"));
+        assert!(t.contains("shared pages"));
+        assert!(t.contains("seed hits"));
+    }
+}

@@ -5,8 +5,10 @@
 //! model matrix and writes `BENCH_engines.json`.
 
 pub mod engines;
+pub mod fleet;
 
 pub use engines::{run_bench, BenchOptions, BenchReport};
+pub use fleet::{FleetReport, InstanceResult, InstanceStats};
 
 use std::time::{Duration, Instant};
 

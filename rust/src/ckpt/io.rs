@@ -84,11 +84,14 @@ impl<'a> Reader<'a> {
     /// bytes actually present (a corrupt length must not trigger a huge
     /// allocation).
     pub fn blob(&mut self, what: &str) -> Result<Vec<u8>> {
-        let len = self.u64(what)? as usize;
-        if len > self.remaining() {
+        let len = self.u64(what)?;
+        // Bound the length in the u64 domain *before* any narrowing: on a
+        // 32-bit host `as usize` would wrap an absurd on-disk length into
+        // a small bogus one that passes the check and misparses the file.
+        if len > self.remaining() as u64 {
             return Err(truncated(what));
         }
-        Ok(self.take(len, what)?.to_vec())
+        Ok(self.take(len as usize, what)?.to_vec())
     }
 }
 
@@ -128,6 +131,18 @@ mod tests {
     fn truncated_blob_is_an_error_not_a_panic() {
         let mut w = Writer::new();
         w.u64(1 << 40); // absurd length, no payload
+        let mut r = Reader::new(&w.buf);
+        assert!(r.blob("x").is_err());
+    }
+
+    #[test]
+    fn blob_length_is_bounded_before_narrowing() {
+        // A length that wraps to a small value when cast to 32-bit usize
+        // ((1<<32)+3 -> 3) must still be rejected: the bound check runs in
+        // the u64 domain.
+        let mut w = Writer::new();
+        w.u64((1u64 << 32) + 3);
+        w.bytes(b"abc");
         let mut r = Reader::new(&w.buf);
         assert!(r.blob("x").is_err());
     }

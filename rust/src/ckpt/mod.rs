@@ -34,12 +34,19 @@
 //!   page_count u64, per page: paddr u64, len u32, bytes
 //! ```
 //!
-//! Unknown versions and checksum mismatches are rejected at load; the
-//! `ckpt` CLI subcommand prints the decoded header for inspection.
+//! Pages are stored page-aligned relative to `dram_base` and in strictly
+//! ascending address order (the encoder scans DRAM front to back); the
+//! decoder enforces both, which also guarantees no duplicates or overlaps
+//! — the invariant the COW fan-out path ([`Checkpoint::shared_pages`])
+//! relies on. Unknown versions and checksum mismatches are rejected at
+//! load; the `ckpt` CLI subcommand prints the decoded header for
+//! inspection. Every decode path returns `Err` on malformed input — a
+//! fleet restoring thousands of files must fail one instance, never the
+//! process.
 
 pub mod io;
 
-use crate::mem::{PhysMem, CKPT_PAGE};
+use crate::mem::{PhysMem, SharedPageSet, CKPT_PAGE};
 use crate::sys::{EcallMode, Hart, SystemSnapshot};
 use self::io::{fnv1a, Reader, Writer};
 use std::io::{Error, ErrorKind, Result};
@@ -165,7 +172,9 @@ fn decode_hart(r: &mut Reader, id: usize) -> Result<Hart> {
         hart.regs[i] = r.u64("hart regs")?;
     }
     hart.pc = r.u64("hart pc")?;
-    hart.prv = crate::isa::csr::Priv::from_bits(r.u8("hart prv")? as u64);
+    let prv = r.u8("hart prv")?;
+    hart.prv = crate::isa::csr::Priv::try_from_bits(prv as u64)
+        .ok_or_else(|| bad(format!("invalid privilege level {} for hart {}", prv, id)))?;
     for csr in hart_csrs_mut(&mut hart) {
         *csr = r.u64("hart csr")?;
     }
@@ -224,6 +233,37 @@ impl Checkpoint {
             msip: self.msip,
             mtimecmp: self.mtimecmp,
             console: self.console,
+            exit: self.exit,
+            ecall_mode: self.ecall_mode,
+            brk: self.brk,
+            mmap_top: self.mmap_top,
+            trace: None,
+        }
+    }
+
+    /// Build the `Arc`-shared read-only page set for COW restore. Decode
+    /// validation guarantees the pages are aligned, in-bounds and strictly
+    /// ascending, which is exactly the invariant [`SharedPageSet`] needs.
+    /// Build once, then mint any number of instances with
+    /// [`Checkpoint::snapshot_cow`].
+    pub fn shared_pages(&self) -> Arc<SharedPageSet> {
+        Arc::new(SharedPageSet::new(self.dram_base, self.dram_size, &self.pages))
+    }
+
+    /// Mint a [`SystemSnapshot`] whose DRAM is copy-on-write over `shared`
+    /// (as produced by [`Checkpoint::shared_pages`] on this checkpoint).
+    /// Unlike [`Checkpoint::into_snapshot`] this borrows the checkpoint:
+    /// restoring an instance copies only the hart/device state (a few KiB),
+    /// not DRAM — the fleet driver restores thousands of instances from one
+    /// decode.
+    pub fn snapshot_cow(&self, shared: &Arc<SharedPageSet>) -> SystemSnapshot {
+        SystemSnapshot {
+            harts: self.harts.clone(),
+            phys: Arc::new(PhysMem::new_cow(Arc::clone(shared))),
+            ipi: self.ipi.clone(),
+            msip: self.msip.clone(),
+            mtimecmp: self.mtimecmp.clone(),
+            console: self.console.clone(),
             exit: self.exit,
             ecall_mode: self.ecall_mode,
             brk: self.brk,
@@ -321,6 +361,17 @@ impl Checkpoint {
                 && paddr.checked_add(len).map_or(false, |end| end <= dram_end);
             if !in_dram {
                 return Err(bad(format!("page {:#x} outside checkpointed DRAM", paddr)));
+            }
+            if (paddr - dram_base) % CKPT_PAGE != 0 {
+                return Err(bad(format!("page {:#x} not aligned to the page grid", paddr)));
+            }
+            if let Some(&(prev, _)) = pages.last() {
+                if paddr <= prev {
+                    return Err(bad(format!(
+                        "page {:#x} out of order or duplicated (previous page {:#x})",
+                        paddr, prev
+                    )));
+                }
             }
             pages.push((paddr, r.take(len as usize, "page data")?.to_vec()));
         }
@@ -527,5 +578,84 @@ mod tests {
         assert!(d.contains("harts=2"));
         assert!(d.contains("hart0"));
         assert!(d.contains("non-zero pages"));
+    }
+
+    /// Recompute the payload checksum after deliberate corruption so the
+    /// mutated bytes reach the decoder instead of the checksum gate.
+    fn refix_checksum(bytes: &mut [u8]) {
+        let sum = fnv1a(&bytes[HEADER_LEN..]);
+        bytes[16..24].copy_from_slice(&sum.to_le_bytes());
+    }
+
+    #[test]
+    fn invalid_privilege_byte_is_an_error_not_a_panic() {
+        let ckpt = Checkpoint::from_snapshot(&synthetic_snapshot());
+        let path = tmp("badprv");
+        ckpt.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Payload layout: 46-byte preamble (hart count, ecall mode, exit
+        // flag+code, brk, mmap_top, dram base+size), then hart0's 32 regs
+        // and pc, then the prv byte.
+        let prv_off = HEADER_LEN + 46 + 32 * 8 + 8;
+        assert_eq!(bytes[prv_off], 3, "hart0 is in M-mode in the fixture");
+        bytes[prv_off] = 2; // reserved privilege encoding
+        refix_checksum(&mut bytes);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        std::fs::remove_file(&path).ok();
+        assert!(err.to_string().contains("privilege"), "{}", err);
+    }
+
+    #[test]
+    fn misaligned_page_is_rejected() {
+        let mut ckpt = Checkpoint::from_snapshot(&synthetic_snapshot());
+        ckpt.pages[0].0 += 8; // off the page grid but still inside DRAM
+        let path = tmp("misaligned");
+        ckpt.save(&path).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        std::fs::remove_file(&path).ok();
+        assert!(err.to_string().contains("aligned"), "{}", err);
+    }
+
+    #[test]
+    fn duplicate_and_unordered_pages_are_rejected() {
+        let mut dup = Checkpoint::from_snapshot(&synthetic_snapshot());
+        dup.pages[1] = dup.pages[0].clone();
+        let path = tmp("duppage");
+        dup.save(&path).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(err.to_string().contains("order"), "{}", err);
+
+        let mut rev = Checkpoint::from_snapshot(&synthetic_snapshot());
+        rev.pages.swap(0, 1);
+        rev.save(&path).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        std::fs::remove_file(&path).ok();
+        assert!(err.to_string().contains("order"), "{}", err);
+    }
+
+    #[test]
+    fn cow_snapshot_matches_flat_restore_and_isolates_instances() {
+        let ckpt = Checkpoint::from_snapshot(&synthetic_snapshot());
+        let shared = ckpt.shared_pages();
+        let a = ckpt.snapshot_cow(&shared);
+        let b = ckpt.snapshot_cow(&shared);
+        let flat = ckpt.into_snapshot();
+        let len = flat.phys.size() as usize;
+        assert_eq!(
+            a.phys.read_bulk(DRAM_BASE, len),
+            flat.phys.read_bulk(DRAM_BASE, len),
+            "COW restore reads bit-identical to the flat restore"
+        );
+        assert_eq!(a.harts[0].regs[10], 0xabcd);
+        assert_eq!(a.phys.cow_pages_cloned(), 0, "restoring clones nothing");
+        assert_eq!(a.phys.cow_pages_mapped(), 2);
+        // A write in one instance clones one page there and stays invisible
+        // to its sibling.
+        a.phys.write_u8(DRAM_BASE + 0x200, 0x77);
+        assert_eq!(a.phys.read_u8(DRAM_BASE + 0x200), 0x77);
+        assert_eq!(b.phys.read_u64(DRAM_BASE + 0x200), 0xfeed_f00d);
+        assert_eq!(a.phys.cow_pages_cloned(), 1);
+        assert_eq!(b.phys.cow_pages_cloned(), 0);
     }
 }

@@ -1,0 +1,409 @@
+//! Fleet mode (DESIGN.md §13): fan one checkpoint out to N concurrent
+//! guest instances over a bounded host worker pool.
+//!
+//! Restoring a checkpoint per instance the naive way costs a full DRAM
+//! copy and a cold retranslation of all guest code — per instance. The
+//! fleet driver amortises both across arbitrarily many instances:
+//!
+//!  - **COW DRAM** — the checkpoint's sparse page set is decoded once
+//!    into an immutable [`SharedPageSet`]; every instance maps it
+//!    read-only via [`Checkpoint::snapshot_cow`] and clones a page only
+//!    on its first write ([`crate::mem::PhysMem`]'s copy-on-write mode).
+//!  - **Shared code seed** — a warm-up instance runs first and its
+//!    translated blocks are harvested into an `Arc`-shared
+//!    [`CodeSeed`]; instances whose translation inputs match the seed's
+//!    stamps materialise blocks from it instead of retranslating.
+//!  - **Parameter sweeps** — per-instance `key=value` overrides from a
+//!    CLI grid ([`sweep_grid`]) or a spec file ([`parse_spec`]); an
+//!    invalid combination fails that instance's cell, never the fleet.
+//!
+//! Per-instance results aggregate into a [`FleetReport`]
+//! (`BENCH_fleet.json`, schema `r2vm-fleet-v1`).
+
+use super::{resume_engine, SimConfig};
+use crate::bench::fleet::{FleetReport, InstanceResult, InstanceStats};
+use crate::ckpt::Checkpoint;
+use crate::dbt::{Backend, CodeSeed};
+use crate::engine::ExecutionEngine;
+use crate::mem::SharedPageSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Keys the fleet driver owns. A sweep that set one would break the
+/// fan-out invariants — shared guest topology, no per-instance file
+/// outputs, and the flat-DRAM-only native backend — so they are
+/// rejected per instance.
+const FLEET_LOCKED_KEYS: &[&str] = &[
+    "restore",
+    "ckpt-out",
+    "ckpt-every",
+    "sample",
+    "trace-out",
+    "stats-every",
+    "backend",
+    "dump-native",
+    "harts",
+    "dram-mb",
+];
+
+/// Options of one fleet invocation.
+#[derive(Debug, Clone)]
+pub struct FleetOptions {
+    /// Guest instances to run.
+    pub instances: usize,
+    /// Host worker threads (0 = one per available core; always clamped
+    /// to the instance count).
+    pub workers: usize,
+    /// Instruction budget of the warm-up instance whose translations
+    /// seed the shared code cache (0 skips the warm-up).
+    pub warmup: u64,
+    /// Share the warm-up instance's translated code with the fleet.
+    pub share_code: bool,
+    /// Per-instance parameter combinations; instance `i` runs combo
+    /// `i % combos.len()`. Never empty — an empty sweep is one empty
+    /// combo.
+    pub combos: Vec<Vec<(String, String)>>,
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        FleetOptions {
+            instances: 1,
+            workers: 0,
+            warmup: 200_000,
+            share_code: true,
+            combos: vec![Vec::new()],
+        }
+    }
+}
+
+/// Expand repeated `--sweep key=v1,v2` options into their cartesian
+/// product, first key varying slowest. No sweeps yield the single empty
+/// combo.
+pub fn sweep_grid(sweeps: &[(String, Vec<String>)]) -> Vec<Vec<(String, String)>> {
+    let mut combos: Vec<Vec<(String, String)>> = vec![Vec::new()];
+    for (key, values) in sweeps {
+        let mut next = Vec::with_capacity(combos.len() * values.len());
+        for combo in &combos {
+            for v in values {
+                let mut c = combo.clone();
+                c.push((key.clone(), v.clone()));
+                next.push(c);
+            }
+        }
+        combos = next;
+    }
+    combos
+}
+
+/// Parse a sweep spec file: one instance combo per non-empty,
+/// non-comment line, each a whitespace-separated list of `key=value`
+/// overrides (an intentionally blank combo is a lone `=`-free line —
+/// not supported; use the CLI with no `--sweep` for unswept fleets).
+pub fn parse_spec(text: &str) -> Result<Vec<Vec<(String, String)>>, String> {
+    let mut combos = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut combo = Vec::new();
+        for token in line.split_whitespace() {
+            let Some((k, v)) = token.split_once('=') else {
+                return Err(format!("spec line {}: '{}' is not key=value", lineno + 1, token));
+            };
+            if k.is_empty() {
+                return Err(format!("spec line {}: empty key in '{}'", lineno + 1, token));
+            }
+            combo.push((k.to_string(), v.to_string()));
+        }
+        combos.push(combo);
+    }
+    if combos.is_empty() {
+        return Err("spec file has no instance lines".into());
+    }
+    Ok(combos)
+}
+
+/// Fan `ckpt` out to `opts.instances` guest instances over a bounded
+/// worker pool. `cfg` is the base configuration every instance starts
+/// from (models, budgets — `--max-insts` counts total retirement
+/// exactly as in [`super::run_restored`]); the checkpoint stays
+/// authoritative for guest topology.
+pub fn run_fleet(cfg: &SimConfig, ckpt: &Checkpoint, opts: &FleetOptions) -> FleetReport {
+    let t0 = Instant::now();
+    let mut base = cfg.clone();
+    base.harts = ckpt.num_harts();
+    base.dram_bytes = ckpt.dram_size as usize;
+    // Fleet-managed fields: instances share the host, so none may write
+    // files or sample; COW DRAM pins the portable micro-op backend (the
+    // native backend's direct-access bias requires flat DRAM).
+    base.restore = None;
+    base.ckpt_out = None;
+    base.ckpt_every = None;
+    base.sample = None;
+    base.trace_out = None;
+    base.trace_events = false;
+    base.stats_every = 0;
+    base.profile = false;
+    base.dump_native = None;
+    base.backend = Backend::Microop;
+    base.validate().expect("fleet base configuration must be valid");
+
+    // Decode the page set once; every instance maps it read-only.
+    let shared = ckpt.shared_pages();
+    // Post-checkpoint deltas are measured against the checkpoint's own
+    // clocks.
+    let insts0 = ckpt.total_instret();
+    let cycles0: u64 = ckpt.harts.iter().map(|h| h.cycle).sum();
+
+    // Warm-up: translate the hot code once, share it with everyone.
+    // Harvest *before* drop — suspending would flush the caches.
+    let mut seed: Option<Arc<CodeSeed>> = None;
+    let mut warmup_translations = 0u64;
+    if opts.share_code && opts.warmup > 0 {
+        let mut engine = resume_engine(&base, ckpt.snapshot_cow(&shared));
+        engine.run(opts.warmup);
+        warmup_translations = engine.stats().blocks_translated;
+        seed = engine.take_code_seed();
+    }
+    let seed_blocks = seed.as_ref().map_or(0, |s| s.len() as u64);
+
+    let n = opts.instances.max(1);
+    let workers = if opts.workers == 0 {
+        std::thread::available_parallelism().map_or(1, |p| p.get())
+    } else {
+        opts.workers
+    }
+    .min(n);
+
+    // Bounded pool over an atomic work index: workers claim the next
+    // unclaimed instance until the fleet is drained.
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<InstanceResult>>> =
+        Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = run_instance(i, &base, ckpt, &shared, seed.as_ref(), opts, insts0, cycles0);
+                results.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    let results = results
+        .into_inner()
+        .expect("no worker panicked holding the results lock")
+        .into_iter()
+        .map(|r| r.expect("every index was claimed by a worker"))
+        .collect();
+    FleetReport {
+        instances: n,
+        workers,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        shared_pages: shared.content_pages(),
+        warmup_translations,
+        seed_blocks,
+        results,
+    }
+}
+
+/// Configure, COW-restore, seed and drive one instance. Every failure
+/// is a recorded cell error, never a panic.
+#[allow(clippy::too_many_arguments)]
+fn run_instance(
+    index: usize,
+    base: &SimConfig,
+    ckpt: &Checkpoint,
+    shared: &Arc<SharedPageSet>,
+    seed: Option<&Arc<CodeSeed>>,
+    opts: &FleetOptions,
+    insts0: u64,
+    cycles0: u64,
+) -> InstanceResult {
+    let params = opts.combos[index % opts.combos.len()].clone();
+    let mut cfg = base.clone();
+    for (k, v) in &params {
+        if FLEET_LOCKED_KEYS.contains(&k.as_str()) {
+            return InstanceResult {
+                index,
+                params: params.clone(),
+                outcome: Err(format!("--{} is fleet-managed and cannot be swept", k)),
+            };
+        }
+        if let Err(e) = cfg.set(k, v) {
+            return InstanceResult { index, params: params.clone(), outcome: Err(e.to_string()) };
+        }
+    }
+    if let Err(e) = cfg.validate() {
+        return InstanceResult { index, params, outcome: Err(e.to_string()) };
+    }
+    // Restore = build a snapshot over the shared page set (no DRAM
+    // copy), resume an engine over it, install the shared code seed.
+    let tr = Instant::now();
+    let snapshot = ckpt.snapshot_cow(shared);
+    let phys = Arc::clone(&snapshot.phys);
+    let stage = cfg.clone();
+    let mut engine = resume_engine(&stage, snapshot);
+    if let Some(seed) = seed {
+        engine.set_code_seed(seed);
+    }
+    let restore_secs = tr.elapsed().as_secs_f64();
+    let report = super::drive(&cfg, stage, engine);
+    let stats = report.engine_stats.unwrap_or_default();
+    let insts = report.total_insts.saturating_sub(insts0);
+    let cycles = report.per_hart.iter().map(|&(c, _)| c).sum::<u64>().saturating_sub(cycles0);
+    InstanceResult {
+        index,
+        params,
+        outcome: Ok(InstanceStats {
+            exit: format!("{:?}", report.exit),
+            insts,
+            cycles,
+            wall_secs: report.wall.as_secs_f64(),
+            restore_secs,
+            pages_mapped: phys.cow_pages_mapped(),
+            pages_cloned: phys.cow_pages_cloned(),
+            seed_hits: stats.seed_hits,
+            translations: stats.blocks_translated,
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::*;
+    use crate::coordinator::{build_engine, run_restored};
+    use crate::engine::ExitReason;
+    use crate::mem::DRAM_BASE;
+
+    /// Computes sum(1..=n), storing the running sum into its own
+    /// (checkpointed) page each iteration so restored instances dirty a
+    /// shared COW page.
+    fn store_countdown(n: i64) -> Image {
+        let mut a = Assembler::new(DRAM_BASE);
+        let cell = a.new_label();
+        a.li(A0, n);
+        a.li(A1, 0);
+        a.la(T0, cell);
+        let top = a.here();
+        a.add(A1, A1, A0);
+        a.sd(A1, T0, 0);
+        a.addi(A0, A0, -1);
+        a.bnez(A0, top);
+        a.mv(A0, A1);
+        a.li(A7, 93);
+        a.ecall();
+        a.align(8);
+        a.bind(cell);
+        a.d64(0);
+        a.finish()
+    }
+
+    fn mid_run_ckpt() -> Checkpoint {
+        let cfg = SimConfig::default();
+        let img = store_countdown(2_000);
+        let mut engine = build_engine(&cfg, &img);
+        assert_eq!(engine.run(1_000), ExitReason::StepLimit);
+        let snap = engine.suspend();
+        Checkpoint::from_snapshot(&snap)
+    }
+
+    #[test]
+    fn sweep_grid_is_cartesian() {
+        assert_eq!(sweep_grid(&[]), vec![Vec::new()], "no sweep = one empty combo");
+        let grid = sweep_grid(&[
+            ("pipeline".into(), vec!["simple".into(), "inorder".into()]),
+            ("memory".into(), vec!["atomic".into(), "cache".into(), "tlb".into()]),
+        ]);
+        assert_eq!(grid.len(), 6);
+        assert_eq!(
+            grid[0],
+            vec![("pipeline".into(), "simple".into()), ("memory".into(), "atomic".into())]
+        );
+        assert_eq!(
+            grid[5],
+            vec![("pipeline".into(), "inorder".into()), ("memory".into(), "tlb".into())]
+        );
+    }
+
+    #[test]
+    fn spec_lines_parse() {
+        let combos = parse_spec(
+            "# comment\n\npipeline=simple memory=cache\n  pipeline=inorder\t max-insts=5000 \n",
+        )
+        .unwrap();
+        assert_eq!(combos.len(), 2);
+        assert_eq!(
+            combos[0],
+            vec![("pipeline".into(), "simple".into()), ("memory".into(), "cache".into())]
+        );
+        assert_eq!(combos[1][1], ("max-insts".into(), "5000".into()));
+        assert!(parse_spec("pipeline simple\n").is_err(), "not key=value");
+        assert!(parse_spec("=x\n").is_err(), "empty key");
+        assert!(parse_spec("# only comments\n").is_err(), "no instances");
+    }
+
+    #[test]
+    fn fleet_shares_pages_and_code_across_instances() {
+        let ckpt = mid_run_ckpt();
+        let opts = FleetOptions { instances: 4, workers: 2, warmup: 500_000, ..Default::default() };
+        let report = run_fleet(&SimConfig::default(), &ckpt, &opts);
+        assert_eq!(report.failed(), 0, "{}", report.table());
+        let ok = report.ok();
+        assert_eq!(ok.len(), 4);
+        for s in &ok {
+            assert!(s.exit.contains("Exited"), "{}", s.exit);
+            assert_eq!(s.insts, ok[0].insts, "identical configs retire identically");
+            assert!(s.pages_mapped >= 1);
+            assert!(s.pages_cloned >= 1, "the store dirties a shared page");
+            assert!(s.pages_cloned <= s.pages_mapped, "cloning is bounded by the mapping");
+        }
+        assert!(report.warmup_translations > 0);
+        assert!(report.seed_blocks > 0);
+        assert!(report.seed_hits_total() > 0, "instances reuse the warm-up's translations");
+        // Code amortisation: a solo restore translates everything cold;
+        // the whole seeded fleet must translate no more than that.
+        let solo = run_restored(&SimConfig::default(), mid_run_ckpt());
+        let solo_tx = solo.engine_stats.unwrap_or_default().blocks_translated;
+        assert!(solo_tx > 0);
+        assert!(
+            report.translations_total() <= solo_tx,
+            "fleet translated {} vs solo {}",
+            report.translations_total(),
+            solo_tx
+        );
+    }
+
+    #[test]
+    fn sweep_varies_instances_and_locked_keys_fail_only_their_cell() {
+        let ckpt = mid_run_ckpt();
+        let opts = FleetOptions {
+            instances: 3,
+            workers: 1,
+            warmup: 0,
+            combos: vec![
+                vec![("pipeline".into(), "inorder".into())],
+                vec![("ckpt-out".into(), "/tmp/forbidden".into())],
+                vec![("pipeline".into(), "nonsense".into())],
+            ],
+            ..Default::default()
+        };
+        let report = run_fleet(&SimConfig::default(), &ckpt, &opts);
+        assert_eq!(report.failed(), 2, "{}", report.table());
+        assert!(report.results[0].outcome.is_ok());
+        let locked = report.results[1].outcome.as_ref().unwrap_err();
+        assert!(locked.contains("fleet-managed"), "{}", locked);
+        let unknown = report.results[2].outcome.as_ref().unwrap_err();
+        assert!(unknown.contains("pipeline"), "{}", unknown);
+        // The surviving inorder instance tracked cycles.
+        let s = report.results[0].outcome.as_ref().unwrap();
+        assert!(s.cycles > 0);
+        assert!(s.insts > 0);
+    }
+}

@@ -11,9 +11,11 @@
 //! of interest.
 
 pub mod config;
+pub mod fleet;
 pub mod parallel;
 
 pub use config::{EngineMode, SimConfig};
+pub use fleet::{parse_spec, run_fleet, sweep_grid, FleetOptions};
 pub use parallel::ParallelEngine;
 pub use crate::sampling::run_sampled;
 

@@ -6,9 +6,11 @@
 //! Cota et al.'s shared cache.
 
 use super::block::{Block, BlockId};
+use super::seed::CodeSeed;
 use crate::obs::ProfileTable;
 use std::collections::HashMap;
 use std::hash::{BuildHasherDefault, Hasher};
+use std::sync::Arc;
 
 /// Multiply-xor hasher for PC keys (std SipHash is needlessly slow on the
 /// block-lookup path; no untrusted keys here).
@@ -68,6 +70,13 @@ pub struct CodeCache {
     /// needs no extra bookkeeping here.
     #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
     pub native: super::codegen::NativeCache,
+    /// Shared warm-start seed (fleet mode): consulted on lookup miss to
+    /// materialise a block instead of retranslating. Dropped by `flush` —
+    /// whatever invalidated the cache (fence.i, satp, model switch) also
+    /// invalidates the premise the seed was built under.
+    pub seed: Option<Arc<CodeSeed>>,
+    /// Lookup misses satisfied from the seed (no translation performed).
+    pub seed_hits: u64,
 }
 
 /// Compose the lookup key. Sv39 virtual addresses are canonical (bits
@@ -90,19 +99,45 @@ impl CodeCache {
             prof: None,
             #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
             native: super::codegen::NativeCache::new(),
+            seed: None,
+            seed_hits: 0,
+        }
+    }
+
+    /// Install a shared warm-start seed. The caller is responsible for the
+    /// stamp check (pipeline model + line shift) — see
+    /// `ShardCore::install_code_seed`.
+    pub fn set_seed(&mut self, seed: Arc<CodeSeed>) {
+        self.seed = Some(seed);
+    }
+
+    /// Contribute every live translation of this cache to a warm-start
+    /// seed (first writer wins on key collisions across caches).
+    pub fn fold_into_seed(&self, seed: &mut CodeSeed) {
+        for (&key, &id) in &self.map {
+            seed.add(key, &self.blocks[id as usize]);
         }
     }
 
     #[inline]
     pub fn get(&mut self, pc: u64, prv: u8) -> Option<BlockId> {
         self.lookups += 1;
-        match self.map.get(&cache_key(pc, prv)) {
-            Some(&id) => Some(id),
-            None => {
-                self.misses += 1;
-                None
+        let key = cache_key(pc, prv);
+        if let Some(&id) = self.map.get(&key) {
+            return Some(id);
+        }
+        // Miss: materialise from the shared seed when it carries this key.
+        // `misses` keeps meaning "translations this cache had to perform",
+        // so a seeded entry counts as a seed hit instead.
+        if let Some(seed) = self.seed.clone() {
+            if let Some(sb) = seed.lookup(key) {
+                self.seed_hits += 1;
+                let block = sb.instantiate();
+                return Some(self.insert(pc, prv, block));
             }
         }
+        self.misses += 1;
+        None
     }
 
     pub fn insert(&mut self, pc: u64, prv: u8, block: Block) -> BlockId {
@@ -157,6 +192,9 @@ impl CodeCache {
         }
         self.blocks.clear();
         self.map.clear();
+        // The seed was built under pre-flush conditions (guest code bytes,
+        // address-space mapping, pipeline model); drop it with them.
+        self.seed = None;
         self.generation += 1;
         self.flushes += 1;
     }
@@ -354,5 +392,46 @@ mod tests {
         c.replace(id, trivial_block(0x1000));
         c.flush();
         assert!(c.take_profile().is_none());
+    }
+
+    #[test]
+    fn seed_materializes_blocks_without_counting_a_miss() {
+        let mut warm = CodeCache::new();
+        let warm_id = warm.insert(0x1000, 3, trivial_block(0x1000));
+        let mut seed = CodeSeed::new("simple", 6);
+        warm.fold_into_seed(&mut seed);
+        assert_eq!(seed.len(), 1);
+
+        let mut cold = CodeCache::new();
+        cold.set_seed(Arc::new(seed));
+        let got = cold.get(0x1000, 3).expect("seed satisfies the miss");
+        assert_eq!(cold.seed_hits, 1);
+        assert_eq!(cold.misses, 0, "a seeded entry is not a translation miss");
+        // Identical translation payload, fresh per-instance mutable state.
+        let b = cold.block(got);
+        let w = warm.block(warm_id);
+        assert_eq!((b.start, b.end), (w.start, w.end));
+        assert_eq!(b.steps.len(), w.steps.len());
+        assert!(b.chain_taken.is_empty() && b.chain_seq.is_empty());
+        // Unseeded keys still miss normally.
+        assert_eq!(cold.get(0x2000, 3), None);
+        assert_eq!(cold.misses, 1);
+        // Later lookups hit the materialised copy, not the seed again.
+        assert_eq!(cold.get(0x1000, 3), Some(got));
+        assert_eq!(cold.seed_hits, 1);
+    }
+
+    #[test]
+    fn flush_drops_the_seed() {
+        let mut warm = CodeCache::new();
+        warm.insert(0x1000, 3, trivial_block(0x1000));
+        let mut seed = CodeSeed::new("simple", 6);
+        warm.fold_into_seed(&mut seed);
+        let mut c = CodeCache::new();
+        c.set_seed(Arc::new(seed));
+        assert!(c.get(0x1000, 3).is_some());
+        c.flush();
+        assert!(c.seed.is_none(), "fence.i/satp invalidation also kills the seed");
+        assert_eq!(c.get(0x1000, 3), None);
     }
 }

@@ -9,11 +9,13 @@ pub mod codegen;
 pub mod compiler;
 #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
 pub mod exec_buf;
+pub mod seed;
 pub mod x86;
 
 pub use block::{Block, BlockId, ChainLink, CrossPageStub, Step, Term, TermKind, NO_CHAIN};
 pub use cache::CodeCache;
 pub use compiler::{translate, DbtCompiler, FetchProbe, MAX_BLOCK_INSTS};
+pub use seed::{CodeSeed, SeedBlock};
 
 /// Which backend executes translated blocks.
 ///

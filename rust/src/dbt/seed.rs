@@ -1,0 +1,157 @@
+//! Shared warm-start code seed (fleet mode).
+//!
+//! Translation is the dominant cold-start cost when the same checkpoint is
+//! restored many times: every instance retranslates the same guest code.
+//! A [`CodeSeed`] is the immutable, `Arc`-shareable essence of a warmed-up
+//! code cache — the translated micro-op payload of every block, *without*
+//! any per-instance mutable residue (chain links, profiling cells, native
+//! code). A fleet warms one instance, harvests its caches into a seed, and
+//! hands the `Arc` to every subsequent instance; each cache materialises
+//! blocks from the seed on lookup miss instead of retranslating
+//! ([`crate::dbt::CodeCache::get`]).
+//!
+//! Safety argument (why sharing translations cannot leak state between
+//! instances):
+//!  - A [`SeedBlock`] carries only data that is a pure function of the
+//!    guest bytes, the pipeline model and the L0 I-cache line shift — the
+//!    exact inputs of `dbt::compiler::translate`. Pipeline hooks run at
+//!    translation time and reset per block, so a materialised block is
+//!    bit-identical to the one the instance would have translated itself.
+//!  - The seed is stamped with the pipeline name and line shift it was
+//!    built under; installation refuses mismatched caches, and any cache
+//!    flush (fence.i, satp write, SIMCTRL model switch) drops the seed —
+//!    the flush invalidates the premise the seed was built under.
+//!  - Mutable state (chain links, profiling counters) is created fresh at
+//!    materialisation, so no writes ever flow between instances.
+
+use super::block::{Block, BlockProf, ChainLink, CrossPageStub, Step, Term};
+use super::cache::PcHasher;
+use std::collections::HashMap;
+use std::hash::BuildHasherDefault;
+
+/// The immutable translation payload of one [`Block`] — everything
+/// `translate` produced, nothing the dispatch loop mutates.
+pub struct SeedBlock {
+    pub start: u64,
+    pub end: u64,
+    pub steps: Vec<Step>,
+    pub term: Term,
+    pub icache_checks: Vec<u64>,
+    pub cross_page: Option<CrossPageStub>,
+}
+
+impl SeedBlock {
+    pub fn from_block(b: &Block) -> SeedBlock {
+        SeedBlock {
+            start: b.start,
+            end: b.end,
+            steps: b.steps.clone(),
+            term: b.term,
+            icache_checks: b.icache_checks.clone(),
+            cross_page: b.cross_page,
+        }
+    }
+
+    /// Mint a live [`Block`] with fresh (empty) chain links and zeroed
+    /// profiling cells.
+    pub fn instantiate(&self) -> Block {
+        Block {
+            start: self.start,
+            end: self.end,
+            steps: self.steps.clone(),
+            term: self.term,
+            icache_checks: self.icache_checks.clone(),
+            cross_page: self.cross_page,
+            chain_taken: ChainLink::empty(),
+            chain_seq: ChainLink::empty(),
+            prof: BlockProf::default(),
+        }
+    }
+}
+
+/// A read-only, `Arc`-shareable set of translations keyed exactly like a
+/// [`crate::dbt::CodeCache`] (`cache_key(pc, prv)`), stamped with the
+/// translation inputs it is valid for.
+pub struct CodeSeed {
+    /// Pipeline model the blocks were translated under.
+    pub pipeline: &'static str,
+    /// L0 I-cache line shift baked into the icache check lists.
+    pub line_shift: u32,
+    map: HashMap<u64, u32, BuildHasherDefault<PcHasher>>,
+    blocks: Vec<SeedBlock>,
+}
+
+impl CodeSeed {
+    pub fn new(pipeline: &'static str, line_shift: u32) -> CodeSeed {
+        CodeSeed { pipeline, line_shift, map: HashMap::default(), blocks: Vec::new() }
+    }
+
+    /// Contribute one translation under `key`. First writer wins: when
+    /// several warmed caches carry the same key (SMP harts running the
+    /// same code), the copies are identical by the purity argument above,
+    /// so keeping the first is arbitrary but sound.
+    pub fn add(&mut self, key: u64, block: &Block) {
+        if !self.map.contains_key(&key) {
+            self.map.insert(key, self.blocks.len() as u32);
+            self.blocks.push(SeedBlock::from_block(block));
+        }
+    }
+
+    #[inline]
+    pub fn lookup(&self, key: u64) -> Option<&SeedBlock> {
+        self.map.get(&key).map(|&i| &self.blocks[i as usize])
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_block() -> Block {
+        Block {
+            start: 0x1000,
+            end: 0x1008,
+            steps: Vec::new(),
+            term: Term {
+                op: crate::isa::op::Op::Jal { rd: 0, imm: 0 },
+                pc_off: 4,
+                len: 4,
+                kind: super::super::block::TermKind::Jump { target: 0x1000 },
+                cycles_nt: 1,
+                cycles_taken: 1,
+                sync: false,
+            },
+            icache_checks: vec![0x1000],
+            cross_page: None,
+            chain_taken: ChainLink::empty(),
+            chain_seq: ChainLink::empty(),
+            prof: BlockProf::default(),
+        }
+    }
+
+    #[test]
+    fn first_writer_wins_and_instantiation_is_fresh() {
+        let mut seed = CodeSeed::new("simple", 6);
+        assert!(seed.is_empty());
+        let b = demo_block();
+        b.chain_taken.install(5, 99); // residue that must NOT be shared
+        b.prof.exec.set(1234);
+        seed.add(7, &b);
+        seed.add(7, &demo_block());
+        assert_eq!(seed.len(), 1, "duplicate key ignored");
+        let minted = seed.lookup(7).unwrap().instantiate();
+        assert_eq!(minted.start, 0x1000);
+        assert_eq!(minted.icache_checks, vec![0x1000]);
+        assert!(minted.chain_taken.is_empty(), "chain links start empty");
+        assert_eq!(minted.prof.exec.get(), 0, "profiling cells start zeroed");
+        assert!(seed.lookup(8).is_none());
+    }
+}

@@ -53,6 +53,10 @@ pub struct EngineStats {
     /// Block entries that fell back to the PC-map lookup / translation.
     pub chain_misses: u64,
     pub retranslations: u64,
+    /// Cache misses satisfied by materialising a block from a shared
+    /// warm-start [`crate::dbt::CodeSeed`] instead of translating
+    /// (fleet mode).
+    pub seed_hits: u64,
 }
 
 impl EngineStats {
@@ -65,6 +69,7 @@ impl EngineStats {
         self.chain_hits += other.chain_hits;
         self.chain_misses += other.chain_misses;
         self.retranslations += other.retranslations;
+        self.seed_hits += other.seed_hits;
     }
 
     /// Fraction of block entries served by chain-following dispatch.
@@ -153,6 +158,20 @@ pub trait ExecutionEngine {
     fn trace_dropped(&self) -> Option<u64> {
         None
     }
+
+    /// Harvest a shareable warm-start code seed from this engine's live
+    /// code caches (fleet mode). Must be called *before* `suspend`, which
+    /// flushes the caches. `None` for engines without a DBT layer or
+    /// without the capability.
+    fn take_code_seed(&self) -> Option<std::sync::Arc<crate::dbt::CodeSeed>> {
+        None
+    }
+
+    /// Install a shared warm-start code seed into this engine's caches.
+    /// Implementations must gate installation on the seed's stamps
+    /// (pipeline model, L0 line shift); engines without the capability
+    /// ignore it.
+    fn set_code_seed(&mut self, _seed: &std::sync::Arc<crate::dbt::CodeSeed>) {}
 }
 
 /// Simulation exit requested by the guest through any channel (SBI

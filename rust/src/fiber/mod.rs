@@ -203,7 +203,9 @@ impl ExecutionEngine for FiberEngine {
     }
 
     fn stats(&self) -> EngineStats {
-        self.core.stats
+        let mut s = self.core.stats;
+        s.seed_hits = self.core.seed_hits();
+        s
     }
 
     fn total_instret(&self) -> u64 {
@@ -256,6 +258,19 @@ impl ExecutionEngine for FiberEngine {
 
     fn trace_dropped(&self) -> Option<u64> {
         self.sys.trace.as_ref().map(|t| t.dropped)
+    }
+
+    fn take_code_seed(&self) -> Option<std::sync::Arc<crate::dbt::CodeSeed>> {
+        let seed = self.core.build_code_seed(&self.sys);
+        if seed.is_empty() {
+            None
+        } else {
+            Some(std::sync::Arc::new(seed))
+        }
+    }
+
+    fn set_code_seed(&mut self, seed: &std::sync::Arc<crate::dbt::CodeSeed>) {
+        self.core.install_code_seed(&self.sys, seed);
     }
 }
 

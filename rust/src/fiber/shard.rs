@@ -196,6 +196,49 @@ impl ShardCore {
         }
     }
 
+    /// Fold every live translation of this core into a warm-start
+    /// [`crate::dbt::CodeSeed`] stamped with hart `base`'s translation
+    /// inputs (fleet mode). Caches whose pipeline model or L0 line shift
+    /// diverged (per-hart SIMCTRL reconfiguration) are skipped — their
+    /// blocks were translated under different inputs.
+    pub fn build_code_seed(&self, sys: &System) -> crate::dbt::CodeSeed {
+        let pipeline = self.pipelines[0].name();
+        let line_shift = sys.l0[self.base].i.line_shift();
+        let mut seed = crate::dbt::CodeSeed::new(pipeline, line_shift);
+        for (l, cache) in self.caches.iter().enumerate() {
+            if self.pipelines[l].name() == pipeline
+                && sys.l0[self.base + l].i.line_shift() == line_shift
+            {
+                cache.fold_into_seed(&mut seed);
+            }
+        }
+        seed
+    }
+
+    /// Install a shared warm-start seed into every cache whose translation
+    /// inputs (pipeline model, L0 I-cache line shift) match the seed's
+    /// stamps; mismatched caches are simply left cold — a block translated
+    /// under other inputs would carry the wrong cycle costs.
+    pub fn install_code_seed(
+        &mut self,
+        sys: &System,
+        seed: &std::sync::Arc<crate::dbt::CodeSeed>,
+    ) {
+        for (l, cache) in self.caches.iter_mut().enumerate() {
+            if self.pipelines[l].name() == seed.pipeline
+                && sys.l0[self.base + l].i.line_shift() == seed.line_shift
+            {
+                cache.set_seed(std::sync::Arc::clone(seed));
+            }
+        }
+    }
+
+    /// Seed hits accumulated across this core's caches (the counter lives
+    /// per cache; engines fold it into [`EngineStats::seed_hits`]).
+    pub fn seed_hits(&self) -> u64 {
+        self.caches.iter().map(|c| c.seed_hits).sum()
+    }
+
     // -----------------------------------------------------------------------
     // Translation-time fetch probe: functional-only walk + read, no timing.
     // -----------------------------------------------------------------------

@@ -134,11 +134,25 @@ pub enum Priv {
 }
 
 impl Priv {
+    /// Architectural two-bit decode: hardware WARL fields (e.g. mstatus.MPP)
+    /// never hold the reserved encoding 2, so it maps to Machine.
     pub fn from_bits(b: u64) -> Priv {
         match b & 3 {
             0 => Priv::User,
             1 => Priv::Supervisor,
             _ => Priv::Machine,
+        }
+    }
+
+    /// Exact decode for untrusted input (checkpoint bytes): only the three
+    /// architected privilege levels are accepted; the reserved encoding 2
+    /// and anything wider than two bits are rejected.
+    pub fn try_from_bits(b: u64) -> Option<Priv> {
+        match b {
+            0 => Some(Priv::User),
+            1 => Some(Priv::Supervisor),
+            3 => Some(Priv::Machine),
+            _ => None,
         }
     }
 }

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   run       — run a built-in workload or an ELF under a model config
 //!   bench     — workload × engine × model baseline -> BENCH_engines.json
+//!   fleet     — fan one checkpoint out to N COW-restored instances
 //!   ckpt      — inspect an on-disk checkpoint file
 //!   models    — print the pipeline/memory model inventory (Tables 1-2)
 //!   workloads — list built-in workloads
@@ -23,6 +24,9 @@ fn usage() -> ! {
                      [--top N] [run options]
   r2vm-repro bench [--runs N] [--quick] [--workload NAME] [--json PATH]
                    [--compare BASELINE] [--fail-threshold PCT]
+  r2vm-repro fleet --restore CKPT --instances N [--workers W] [--warmup I]
+                   [--sweep key=v1,v2]... [--spec FILE] [--json PATH]
+                   [run options]
   r2vm-repro ckpt PATH
   r2vm-repro models
   r2vm-repro workloads
@@ -43,6 +47,31 @@ coremark; see DESIGN.md \u{a7}9):
   --fail-threshold P with --compare: exit nonzero when any matched row's
                      MIPS regresses more than P percent vs the baseline
   --quiet            suppress the table
+
+fleet options (fan one checkpoint out to N concurrent guest instances;
+restored DRAM pages are shared copy-on-write and translated code is
+seeded from one warm-up instance — see DESIGN.md \u{a7}13):
+  --restore CKPT     checkpoint every instance starts from (required;
+                     hart count and DRAM size come from the file)
+  --instances N      guest instances to run (required, >= 1)
+  --workers W        host worker threads (default: one per host core,
+                     clamped to the instance count)
+  --warmup I         instruction budget of the code-seeding warm-up
+                     instance (default 200000; 0 skips the warm-up)
+  --no-share-code    do not seed instances from the warm-up translation
+                     cache (measures the sharing ablation)
+  --sweep key=v1,v2  sweep a run option across instances; repeatable,
+                     the grid is the cartesian product and instance i
+                     runs combo i mod grid-size. Fleet-managed keys
+                     (restore, ckpt-out/-every, sample, trace-out,
+                     stats-every, backend, dump-native, harts, dram-mb)
+                     cannot be swept
+  --spec FILE        per-instance combos from a file instead (one line
+                     per combo: key=value pairs separated by spaces;
+                     # comments); mutually exclusive with --sweep
+  --json PATH        machine-readable report (default BENCH_fleet.json)
+  --quiet            suppress the table
+  remaining options are base run options applied to every instance
 
 profile options (hot-block DBT profiler; accepts every run option):
   --top N            print the N hottest blocks by attributed cycles
@@ -268,6 +297,153 @@ fn main() {
             }
             if report.cells.iter().any(|c| c.exit.is_none()) || !report.skipped.is_empty() {
                 eprintln!("warning: some cells were skipped or did not exit cleanly");
+                std::process::exit(1);
+            }
+        }
+        "fleet" => {
+            let mut cfg = SimConfig::default();
+            let mut opts = coordinator::FleetOptions::default();
+            let mut sweeps: Vec<(String, Vec<String>)> = Vec::new();
+            let mut spec: Option<String> = None;
+            let mut json_out = "BENCH_fleet.json".to_string();
+            let mut quiet = false;
+            let mut instances: Option<usize> = None;
+            let mut it = args[1..].iter();
+            while let Some(arg) = it.next() {
+                let Some(key) = arg.strip_prefix("--") else {
+                    eprintln!("unexpected argument: {}", arg);
+                    usage();
+                };
+                match key {
+                    "instances" => {
+                        let parsed = it.next().and_then(|s| s.parse::<usize>().ok());
+                        let Some(n) = parsed else {
+                            eprintln!("--instances needs a numeric value");
+                            usage();
+                        };
+                        if n == 0 {
+                            eprintln!("--instances must be >= 1");
+                            usage();
+                        }
+                        instances = Some(n);
+                    }
+                    "workers" => {
+                        let parsed = it.next().and_then(|s| s.parse::<usize>().ok());
+                        let Some(n) = parsed else {
+                            eprintln!("--workers needs a numeric value");
+                            usage();
+                        };
+                        opts.workers = n;
+                    }
+                    "warmup" => {
+                        let parsed = it.next().and_then(|s| s.parse::<u64>().ok());
+                        let Some(n) = parsed else {
+                            eprintln!("--warmup needs a numeric value");
+                            usage();
+                        };
+                        opts.warmup = n;
+                    }
+                    "no-share-code" => opts.share_code = false,
+                    "sweep" => {
+                        let Some(v) = it.next() else {
+                            eprintln!("--sweep needs key=v1,v2,...");
+                            usage();
+                        };
+                        let Some((k, vals)) = v.split_once('=') else {
+                            eprintln!("--sweep needs key=v1,v2,..., got '{}'", v);
+                            usage();
+                        };
+                        let values: Vec<String> = vals.split(',').map(str::to_string).collect();
+                        if k.is_empty() || values.iter().any(|s| s.is_empty()) {
+                            eprintln!("--sweep needs key=v1,v2,..., got '{}'", v);
+                            usage();
+                        }
+                        sweeps.push((k.to_string(), values));
+                    }
+                    "spec" => {
+                        let Some(path) = it.next() else {
+                            eprintln!("--spec needs a file path");
+                            usage();
+                        };
+                        spec = Some(path.clone());
+                    }
+                    "json" => {
+                        let Some(path) = it.next() else {
+                            eprintln!("--json needs a value");
+                            usage();
+                        };
+                        json_out = path.clone();
+                    }
+                    "naive-yield" => cfg.naive_yield = true,
+                    "no-chaining" => cfg.no_chaining = true,
+                    "no-l0" => cfg.no_l0 = true,
+                    "console" => cfg.console = true,
+                    "quiet" => quiet = true,
+                    _ => {
+                        let Some(value) = it.next() else {
+                            eprintln!("--{} needs a value", key);
+                            usage();
+                        };
+                        if let Err(e) = cfg.set(key, value) {
+                            eprintln!("{}", e);
+                            usage();
+                        }
+                    }
+                }
+            }
+            let Some(n) = instances else {
+                eprintln!("fleet requires --instances N");
+                usage();
+            };
+            opts.instances = n;
+            if spec.is_some() && !sweeps.is_empty() {
+                eprintln!("--spec and --sweep are mutually exclusive");
+                usage();
+            }
+            opts.combos = match &spec {
+                Some(path) => {
+                    let text = match std::fs::read_to_string(path) {
+                        Ok(t) => t,
+                        Err(e) => {
+                            eprintln!("reading {}: {}", path, e);
+                            std::process::exit(2);
+                        }
+                    };
+                    match coordinator::parse_spec(&text) {
+                        Ok(combos) => combos,
+                        Err(e) => {
+                            eprintln!("{}: {}", path, e);
+                            std::process::exit(2);
+                        }
+                    }
+                }
+                None => coordinator::sweep_grid(&sweeps),
+            };
+            let Some(path) = cfg.restore.clone() else {
+                eprintln!("fleet requires --restore CKPT (the state every instance starts from)");
+                usage();
+            };
+            if let Err(e) = cfg.validate() {
+                eprintln!("{}", e);
+                std::process::exit(2);
+            }
+            let ckpt = match r2vm::ckpt::Checkpoint::load(std::path::Path::new(&path)) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("reading {}: {}", path, e);
+                    std::process::exit(2);
+                }
+            };
+            let report = coordinator::run_fleet(&cfg, &ckpt, &opts);
+            if let Err(e) = std::fs::write(&json_out, report.to_json()) {
+                eprintln!("writing {}: {}", json_out, e);
+                std::process::exit(2);
+            }
+            if !quiet {
+                print!("{}", report.table());
+                println!("fleet report written to {}", json_out);
+            }
+            if report.failed() > 0 {
                 std::process::exit(1);
             }
         }

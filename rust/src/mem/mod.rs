@@ -12,4 +12,4 @@ pub mod tlb_model;
 pub use l0::{L0DCache, L0ICache, L0Set};
 pub use mmu::{translate, AccessKind, MmuCtx, PageFault, Translation};
 pub use model::{AtomicModel, ColdAccess, MemTiming, MemoryModel, ModelStats};
-pub use phys::{PhysMem, CKPT_PAGE, DRAM_BASE};
+pub use phys::{PhysMem, SharedPageSet, CKPT_PAGE, DRAM_BASE};

@@ -6,16 +6,241 @@
 //! memory model permits parallel execution) can share the DRAM between hart
 //! threads without data-race UB; on x86-64 hosts relaxed atomic loads/stores
 //! compile to plain moves, so the lockstep hot path pays nothing for this.
+//!
+//! # Copy-on-write restore (fleet mode)
+//!
+//! A [`PhysMem`] can alternatively be minted over a [`SharedPageSet`] — the
+//! immutable, `Arc`-shared decoded page set of one checkpoint. Reads of
+//! still-shared pages are served straight from the shared blob; the first
+//! write to a page clones that one page into the instance's private store
+//! and flips its state to private. A fleet of N instances restored from one
+//! checkpoint therefore keeps exactly one copy of every clean page, and each
+//! instance pays only for the pages it actually dirties
+//! ([`PhysMem::cow_pages_cloned`] ≪ [`PhysMem::cow_pages_mapped`]).
+//!
+//! Clone protocol (safe under the parallel engines): per page one atomic
+//! state byte, `SHARED → CLONING → PRIVATE`. A writer CASes `SHARED →
+//! CLONING`, copies the blob page into the private store, then
+//! Release-stores `PRIVATE`; concurrent writers spin on `CLONING`; readers
+//! Acquire-load the state and read the blob unless it is `PRIVATE` (the
+//! blob is immutable, so a reader that still observes `SHARED` linearizes
+//! before the racing write — exactly the reordering real hardware permits).
 
 use std::sync::atomic::{AtomicU16, AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::sync::Arc;
 
 /// Default guest DRAM base address.
 pub const DRAM_BASE: u64 = 0x8000_0000;
+
+/// Checkpoint page granularity (4 KiB — the guest page size).
+pub const CKPT_PAGE: u64 = 4096;
+
+/// log2([`CKPT_PAGE`]).
+const PAGE_SHIFT: u32 = 12;
+
+/// [`SharedPageSet`] index sentinel: page has no content (all zero).
+const ZERO_PAGE: u32 = u32::MAX;
+
+/// Per-page COW state: page reads/writes go to the shared blob.
+const PAGE_SHARED: u8 = 0;
+/// Per-page COW state: a writer is copying the page right now.
+const PAGE_CLONING: u8 = 1;
+/// Per-page COW state: the page lives in the instance's private store.
+const PAGE_PRIVATE: u8 = 2;
+
+/// The decoded non-zero pages of one checkpoint, in a form many restored
+/// instances can share read-only behind an `Arc`.
+///
+/// `index` maps page number (within DRAM) to a slot in `blob`, or
+/// [`ZERO_PAGE`] for pages the checkpoint did not carry (all-zero). Each
+/// blob slot is padded to [`CKPT_PAGE`] bytes so slot addressing is a
+/// shift.
+pub struct SharedPageSet {
+    base: u64,
+    size: u64,
+    index: Box<[u32]>,
+    blob: Box<[u8]>,
+}
+
+impl SharedPageSet {
+    /// Build from `(paddr, bytes)` pairs as decoded from a checkpoint.
+    /// Pages must be page-aligned, in-bounds and strictly ascending —
+    /// checkpoint decoding validates this before constructing the set, so
+    /// violations here are internal bugs, not bad input.
+    pub fn new(base: u64, size: u64, pages: &[(u64, Vec<u8>)]) -> SharedPageSet {
+        let npages = (size as usize).div_ceil(CKPT_PAGE as usize);
+        assert!((pages.len() as u64) < ZERO_PAGE as u64, "page set too large");
+        let mut index = vec![ZERO_PAGE; npages];
+        let mut blob = Vec::with_capacity(pages.len() * CKPT_PAGE as usize);
+        for (slot, (paddr, bytes)) in pages.iter().enumerate() {
+            let off = paddr.checked_sub(base).expect("page below DRAM base");
+            assert!(off % CKPT_PAGE == 0, "page {paddr:#x} not page-aligned");
+            assert!(
+                bytes.len() as u64 <= CKPT_PAGE && off + bytes.len() as u64 <= size,
+                "page {paddr:#x} out of bounds"
+            );
+            let page = (off >> PAGE_SHIFT) as usize;
+            assert!(index[page] == ZERO_PAGE, "duplicate page {paddr:#x}");
+            index[page] = slot as u32;
+            blob.extend_from_slice(bytes);
+            blob.resize((slot + 1) * CKPT_PAGE as usize, 0);
+        }
+        SharedPageSet {
+            base,
+            size,
+            index: index.into_boxed_slice(),
+            blob: blob.into_boxed_slice(),
+        }
+    }
+
+    #[inline(always)]
+    pub fn base(&self) -> u64 {
+        self.base
+    }
+
+    #[inline(always)]
+    pub fn size(&self) -> u64 {
+        self.size
+    }
+
+    /// Number of content (non-zero) pages the set carries.
+    pub fn content_pages(&self) -> u64 {
+        (self.blob.len() as u64) >> PAGE_SHIFT
+    }
+
+    /// The padded [`CKPT_PAGE`]-byte content of page `page`, or `None` for
+    /// an all-zero page.
+    #[inline(always)]
+    fn page_data(&self, page: usize) -> Option<&[u8]> {
+        let slot = self.index[page];
+        if slot == ZERO_PAGE {
+            None
+        } else {
+            let s = (slot as usize) << PAGE_SHIFT;
+            Some(&self.blob[s..s + CKPT_PAGE as usize])
+        }
+    }
+
+    // Reads take the byte offset within DRAM (`paddr - base`). Aligned
+    // accesses never cross a page boundary, so one page lookup suffices.
+
+    #[inline(always)]
+    fn read_u8(&self, i: usize) -> u8 {
+        match self.page_data(i >> PAGE_SHIFT) {
+            Some(d) => d[i & (CKPT_PAGE as usize - 1)],
+            None => 0,
+        }
+    }
+
+    #[inline(always)]
+    fn read_u16(&self, i: usize) -> u16 {
+        match self.page_data(i >> PAGE_SHIFT) {
+            Some(d) => {
+                let k = i & (CKPT_PAGE as usize - 1);
+                u16::from_le_bytes(d[k..k + 2].try_into().unwrap())
+            }
+            None => 0,
+        }
+    }
+
+    #[inline(always)]
+    fn read_u32(&self, i: usize) -> u32 {
+        match self.page_data(i >> PAGE_SHIFT) {
+            Some(d) => {
+                let k = i & (CKPT_PAGE as usize - 1);
+                u32::from_le_bytes(d[k..k + 4].try_into().unwrap())
+            }
+            None => 0,
+        }
+    }
+
+    #[inline(always)]
+    fn read_u64(&self, i: usize) -> u64 {
+        match self.page_data(i >> PAGE_SHIFT) {
+            Some(d) => {
+                let k = i & (CKPT_PAGE as usize - 1);
+                u64::from_le_bytes(d[k..k + 8].try_into().unwrap())
+            }
+            None => 0,
+        }
+    }
+}
+
+/// COW bookkeeping for a [`PhysMem`] minted over a [`SharedPageSet`].
+struct CowState {
+    shared: Arc<SharedPageSet>,
+    /// One state byte per DRAM page ([`PAGE_SHARED`] / [`PAGE_CLONING`] /
+    /// [`PAGE_PRIVATE`]).
+    state: Box<[AtomicU8]>,
+    pages_cloned: AtomicU64,
+}
+
+impl CowState {
+    /// Clone `page` from the shared blob into the private store and mark
+    /// it private. Cold: runs at most once per dirtied page per instance.
+    #[cold]
+    #[inline(never)]
+    fn materialize(&self, mem: &[AtomicU8], page: usize) {
+        loop {
+            match self.state[page].compare_exchange(
+                PAGE_SHARED,
+                PAGE_CLONING,
+                Ordering::Acquire,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => {
+                    if let Some(src) = self.shared.page_data(page) {
+                        let dst = page << PAGE_SHIFT;
+                        // The final DRAM page may be shorter than the
+                        // padded blob page.
+                        let n = src.len().min(mem.len() - dst);
+                        let mut k = 0;
+                        while k + 8 <= n {
+                            let v = u64::from_le_bytes(src[k..k + 8].try_into().unwrap());
+                            // SAFETY: dst is page-aligned so dst+k is
+                            // 8-aligned and in bounds; AtomicU8 storage
+                            // reinterpreted as AtomicU64 (same layout).
+                            unsafe {
+                                (*(mem.as_ptr().add(dst + k) as *const AtomicU64))
+                                    .store(v, Ordering::Relaxed)
+                            };
+                            k += 8;
+                        }
+                        while k < n {
+                            mem[dst + k].store(src[k], Ordering::Relaxed);
+                            k += 1;
+                        }
+                    }
+                    self.pages_cloned.fetch_add(1, Ordering::Relaxed);
+                    self.state[page].store(PAGE_PRIVATE, Ordering::Release);
+                    return;
+                }
+                Err(PAGE_PRIVATE) => return,
+                // Another writer is mid-clone; wait for it.
+                Err(_) => std::hint::spin_loop(),
+            }
+        }
+    }
+}
+
+/// Allocate a zero-filled atomic byte store. `vec![0u8; n]` lowers to a
+/// zeroed (calloc-style) allocation the OS maps lazily — fleets of mostly-
+/// clean COW instances never fault in most of it — and the bytes are then
+/// reinterpreted in place.
+fn zeroed_store(size: usize) -> Box<[AtomicU8]> {
+    let bytes: Box<[u8]> = vec![0u8; size].into_boxed_slice();
+    // SAFETY: AtomicU8 is guaranteed to have the same size, alignment and
+    // bit validity as u8, so the allocation can be reinterpreted in place
+    // (and freed through either type).
+    unsafe { Box::from_raw(Box::into_raw(bytes) as *mut [AtomicU8]) }
+}
 
 /// Guest physical memory.
 pub struct PhysMem {
     mem: Box<[AtomicU8]>,
     base: u64,
+    /// `Some` iff this instance was COW-restored over a shared page set.
+    cow: Option<CowState>,
 }
 
 // AtomicU8 is Sync; the Box is Send. Explicit impls not required.
@@ -23,9 +248,50 @@ pub struct PhysMem {
 impl PhysMem {
     /// Allocate `size` bytes of DRAM at physical address `base`.
     pub fn new(base: u64, size: usize) -> PhysMem {
-        let mut v = Vec::with_capacity(size);
-        v.resize_with(size, || AtomicU8::new(0));
-        PhysMem { mem: v.into_boxed_slice(), base }
+        PhysMem { mem: zeroed_store(size), base, cow: None }
+    }
+
+    /// Mint a copy-on-write instance over a shared checkpoint page set.
+    /// All-zero pages start private (the store is already zero-filled);
+    /// content pages start shared and clone on first write.
+    pub fn new_cow(shared: Arc<SharedPageSet>) -> PhysMem {
+        let size = shared.size as usize;
+        let npages = size.div_ceil(CKPT_PAGE as usize);
+        let mut state = Vec::with_capacity(npages);
+        for page in 0..npages {
+            state.push(AtomicU8::new(if shared.index[page] == ZERO_PAGE {
+                PAGE_PRIVATE
+            } else {
+                PAGE_SHARED
+            }));
+        }
+        let base = shared.base;
+        PhysMem {
+            mem: zeroed_store(size),
+            base,
+            cow: Some(CowState {
+                shared,
+                state: state.into_boxed_slice(),
+                pages_cloned: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// `true` for plain flat DRAM (no COW indirection).
+    #[inline(always)]
+    pub fn is_flat(&self) -> bool {
+        self.cow.is_none()
+    }
+
+    /// Checkpoint content pages this instance maps copy-on-write (0 for
+    /// flat DRAM).
+    pub fn cow_pages_mapped(&self) -> u64 {
+        self.cow.as_ref().map_or(0, |c| c.shared.content_pages())
+    }
+
+    /// Pages this instance has cloned out of the shared set so far.
+    pub fn cow_pages_cloned(&self) -> u64 {
+        self.cow.as_ref().map_or(0, |c| c.pages_cloned.load(Ordering::Relaxed))
     }
 
     #[inline(always)]
@@ -52,9 +318,12 @@ impl PhysMem {
     /// Host-address bias for direct DRAM access: `paddr + host_bias()` is
     /// the host address of `paddr`'s byte. Used by the native DBT backend
     /// (whose emitted loads/stores are plain moves — equivalent to the
-    /// relaxed atomics used everywhere else on x86-64).
+    /// relaxed atomics used everywhere else on x86-64). Only valid for
+    /// flat DRAM: emitted code bypasses the COW state machine, so
+    /// COW-restored instances must use the micro-op backend.
     #[inline(always)]
     pub fn host_bias(&self) -> u64 {
+        assert!(self.is_flat(), "host_bias requires flat (non-COW) DRAM");
         (self.mem.as_ptr() as u64).wrapping_sub(self.base)
     }
 
@@ -64,16 +333,46 @@ impl PhysMem {
         (paddr - self.base) as usize
     }
 
+    /// If byte offset `i` falls on a still-shared COW page, the shared set
+    /// to read it from; `None` means read the private store.
+    #[inline(always)]
+    fn cow_read(&self, i: usize) -> Option<&SharedPageSet> {
+        match &self.cow {
+            Some(cow) if cow.state[i >> PAGE_SHIFT].load(Ordering::Acquire) != PAGE_PRIVATE => {
+                Some(&cow.shared)
+            }
+            _ => None,
+        }
+    }
+
+    /// Make the page holding byte offset `i` private (cloning it if still
+    /// shared) so it can be written in place.
+    #[inline(always)]
+    fn ensure_private(&self, i: usize) {
+        if let Some(cow) = &self.cow {
+            let page = i >> PAGE_SHIFT;
+            if cow.state[page].load(Ordering::Acquire) != PAGE_PRIVATE {
+                cow.materialize(&self.mem, page);
+            }
+        }
+    }
+
     // ---- aligned atomic accessors (hot path) -------------------------------
 
     #[inline(always)]
     pub fn read_u8(&self, paddr: u64) -> u8 {
-        self.mem[self.idx(paddr)].load(Ordering::Relaxed)
+        let i = self.idx(paddr);
+        if let Some(shared) = self.cow_read(i) {
+            return shared.read_u8(i);
+        }
+        self.mem[i].load(Ordering::Relaxed)
     }
 
     #[inline(always)]
     pub fn write_u8(&self, paddr: u64, v: u8) {
-        self.mem[self.idx(paddr)].store(v, Ordering::Relaxed);
+        let i = self.idx(paddr);
+        self.ensure_private(i);
+        self.mem[i].store(v, Ordering::Relaxed);
     }
 
     #[inline(always)]
@@ -81,6 +380,9 @@ impl PhysMem {
         let i = self.idx(paddr);
         if paddr & 1 == 0 {
             debug_assert!(self.contains(paddr, 2));
+            if let Some(shared) = self.cow_read(i) {
+                return shared.read_u16(i);
+            }
             // SAFETY: in-bounds (checked), aligned, AtomicU8 array reinterpreted
             // as AtomicU16 — same layout, atomic ops valid on any memory.
             unsafe { (*(self.mem.as_ptr().add(i) as *const AtomicU16)).load(Ordering::Relaxed) }
@@ -94,6 +396,7 @@ impl PhysMem {
         let i = self.idx(paddr);
         if paddr & 1 == 0 {
             debug_assert!(self.contains(paddr, 2));
+            self.ensure_private(i);
             unsafe { (*(self.mem.as_ptr().add(i) as *const AtomicU16)).store(v, Ordering::Relaxed) }
         } else {
             let b = v.to_le_bytes();
@@ -107,6 +410,9 @@ impl PhysMem {
         let i = self.idx(paddr);
         if paddr & 3 == 0 {
             debug_assert!(self.contains(paddr, 4));
+            if let Some(shared) = self.cow_read(i) {
+                return shared.read_u32(i);
+            }
             unsafe { (*(self.mem.as_ptr().add(i) as *const AtomicU32)).load(Ordering::Relaxed) }
         } else {
             let mut b = [0u8; 4];
@@ -122,6 +428,7 @@ impl PhysMem {
         let i = self.idx(paddr);
         if paddr & 3 == 0 {
             debug_assert!(self.contains(paddr, 4));
+            self.ensure_private(i);
             unsafe { (*(self.mem.as_ptr().add(i) as *const AtomicU32)).store(v, Ordering::Relaxed) }
         } else {
             for (k, byte) in v.to_le_bytes().iter().enumerate() {
@@ -135,6 +442,9 @@ impl PhysMem {
         let i = self.idx(paddr);
         if paddr & 7 == 0 {
             debug_assert!(self.contains(paddr, 8));
+            if let Some(shared) = self.cow_read(i) {
+                return shared.read_u64(i);
+            }
             unsafe { (*(self.mem.as_ptr().add(i) as *const AtomicU64)).load(Ordering::Relaxed) }
         } else {
             let mut b = [0u8; 8];
@@ -150,6 +460,7 @@ impl PhysMem {
         let i = self.idx(paddr);
         if paddr & 7 == 0 {
             debug_assert!(self.contains(paddr, 8));
+            self.ensure_private(i);
             unsafe { (*(self.mem.as_ptr().add(i) as *const AtomicU64)).store(v, Ordering::Relaxed) }
         } else {
             for (k, byte) in v.to_le_bytes().iter().enumerate() {
@@ -164,6 +475,7 @@ impl PhysMem {
     pub fn cas_u32(&self, paddr: u64, expect: u32, new: u32) -> Result<u32, u32> {
         assert!(paddr & 3 == 0 && self.contains(paddr, 4));
         let i = self.idx(paddr);
+        self.ensure_private(i);
         unsafe {
             (*(self.mem.as_ptr().add(i) as *const AtomicU32)).compare_exchange(
                 expect,
@@ -178,6 +490,7 @@ impl PhysMem {
     pub fn cas_u64(&self, paddr: u64, expect: u64, new: u64) -> Result<u64, u64> {
         assert!(paddr & 7 == 0 && self.contains(paddr, 8));
         let i = self.idx(paddr);
+        self.ensure_private(i);
         unsafe {
             (*(self.mem.as_ptr().add(i) as *const AtomicU64)).compare_exchange(
                 expect,
@@ -192,6 +505,11 @@ impl PhysMem {
     pub fn load_acq_u32(&self, paddr: u64) -> u32 {
         assert!(paddr & 3 == 0 && self.contains(paddr, 4));
         let i = self.idx(paddr);
+        if let Some(shared) = self.cow_read(i) {
+            // Still-shared page: the blob is immutable, so this read
+            // linearizes before any racing first write to the page.
+            return shared.read_u32(i);
+        }
         unsafe { (*(self.mem.as_ptr().add(i) as *const AtomicU32)).load(Ordering::SeqCst) }
     }
 
@@ -199,6 +517,9 @@ impl PhysMem {
     pub fn load_acq_u64(&self, paddr: u64) -> u64 {
         assert!(paddr & 7 == 0 && self.contains(paddr, 8));
         let i = self.idx(paddr);
+        if let Some(shared) = self.cow_read(i) {
+            return shared.read_u64(i);
+        }
         unsafe { (*(self.mem.as_ptr().add(i) as *const AtomicU64)).load(Ordering::SeqCst) }
     }
 
@@ -301,9 +622,6 @@ impl PhysMem {
     }
 }
 
-/// Checkpoint page granularity (4 KiB — the guest page size).
-pub const CKPT_PAGE: u64 = 4096;
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -386,5 +704,103 @@ mod tests {
         // Zeroing a byte back leaves the page clean again.
         m.write_u8(DRAM_BASE + 5, 0);
         assert_eq!(m.nonzero_pages().len(), 2);
+    }
+
+    // ---- COW ----------------------------------------------------------------
+
+    fn demo_set() -> Arc<SharedPageSet> {
+        // 4-page DRAM; pages 0 and 2 carry content, 1 and 3 are zero.
+        let mut p0 = vec![0u8; CKPT_PAGE as usize];
+        p0[0] = 0xaa;
+        p0[8] = 0xbb;
+        // Short content page: exercises the CKPT_PAGE padding path.
+        let mut p2 = vec![0u8; 16];
+        p2[0] = 0xcc;
+        Arc::new(SharedPageSet::new(
+            DRAM_BASE,
+            4 * CKPT_PAGE,
+            &[(DRAM_BASE, p0), (DRAM_BASE + 2 * CKPT_PAGE, p2)],
+        ))
+    }
+
+    #[test]
+    fn cow_reads_through_without_cloning() {
+        let m = PhysMem::new_cow(demo_set());
+        assert!(!m.is_flat());
+        assert_eq!(m.cow_pages_mapped(), 2);
+        assert_eq!(m.read_u8(DRAM_BASE), 0xaa);
+        assert_eq!(m.read_u64(DRAM_BASE + 8), 0xbb);
+        assert_eq!(m.read_u8(DRAM_BASE + 2 * CKPT_PAGE), 0xcc);
+        assert_eq!(m.read_u8(DRAM_BASE + 2 * CKPT_PAGE + 20), 0, "padded tail reads zero");
+        assert_eq!(m.read_u32(DRAM_BASE + CKPT_PAGE), 0, "zero page reads zero");
+        assert_eq!(m.cow_pages_cloned(), 0, "reads never clone");
+        // SeqCst load path reads through too.
+        assert_eq!(m.load_acq_u64(DRAM_BASE + 8), 0xbb);
+    }
+
+    #[test]
+    fn cow_first_write_clones_only_that_page() {
+        let m = PhysMem::new_cow(demo_set());
+        m.write_u8(DRAM_BASE + 1, 0x11);
+        assert_eq!(m.cow_pages_cloned(), 1);
+        // Cloned page keeps its checkpoint content plus the write.
+        assert_eq!(m.read_u8(DRAM_BASE), 0xaa);
+        assert_eq!(m.read_u8(DRAM_BASE + 1), 0x11);
+        assert_eq!(m.read_u64(DRAM_BASE + 8), 0xbb);
+        // Other content page still shared.
+        assert_eq!(m.read_u8(DRAM_BASE + 2 * CKPT_PAGE), 0xcc);
+        assert_eq!(m.cow_pages_cloned(), 1);
+        // Repeat writes don't clone again.
+        m.write_u64(DRAM_BASE + 16, 7);
+        assert_eq!(m.cow_pages_cloned(), 1);
+    }
+
+    #[test]
+    fn cow_zero_page_writes_cost_no_clone() {
+        let m = PhysMem::new_cow(demo_set());
+        m.write_u64(DRAM_BASE + CKPT_PAGE + 40, 99);
+        assert_eq!(m.read_u64(DRAM_BASE + CKPT_PAGE + 40), 99);
+        assert_eq!(m.cow_pages_cloned(), 0, "zero pages are born private");
+    }
+
+    #[test]
+    fn cow_instances_are_isolated() {
+        let shared = demo_set();
+        let a = PhysMem::new_cow(Arc::clone(&shared));
+        let b = PhysMem::new_cow(Arc::clone(&shared));
+        a.write_u8(DRAM_BASE, 0x55);
+        assert_eq!(a.read_u8(DRAM_BASE), 0x55);
+        assert_eq!(b.read_u8(DRAM_BASE), 0xaa, "writes never leak across instances");
+        assert_eq!(a.cow_pages_cloned(), 1);
+        assert_eq!(b.cow_pages_cloned(), 0);
+    }
+
+    #[test]
+    fn cow_cas_clones_and_unaligned_write_spans_pages() {
+        let m = PhysMem::new_cow(demo_set());
+        assert_eq!(m.cas_u64(DRAM_BASE + 8, 0xbb, 0xdd), Ok(0xbb));
+        assert_eq!(m.read_u64(DRAM_BASE + 8), 0xdd);
+        assert_eq!(m.cow_pages_cloned(), 1);
+        // Unaligned write straddling pages 2 (content) and 3 (zero).
+        m.write_u64(DRAM_BASE + 3 * CKPT_PAGE - 4, 0x1122_3344_5566_7788);
+        assert_eq!(m.read_u64(DRAM_BASE + 3 * CKPT_PAGE - 4), 0x1122_3344_5566_7788);
+        assert_eq!(m.read_u8(DRAM_BASE + 2 * CKPT_PAGE), 0xcc, "page 2 content kept");
+        assert_eq!(m.cow_pages_cloned(), 2);
+    }
+
+    #[test]
+    fn cow_checkpoint_rescan_sees_through() {
+        // nonzero_pages on a clean COW instance must see the shared
+        // content (re-checkpointing a restored instance).
+        let m = PhysMem::new_cow(demo_set());
+        assert_eq!(m.nonzero_pages(), vec![DRAM_BASE, DRAM_BASE + 2 * CKPT_PAGE]);
+    }
+
+    #[test]
+    fn flat_mem_reports_no_cow() {
+        let m = PhysMem::new(DRAM_BASE, 4096);
+        assert!(m.is_flat());
+        assert_eq!(m.cow_pages_mapped(), 0);
+        assert_eq!(m.cow_pages_cloned(), 0);
     }
 }

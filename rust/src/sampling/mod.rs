@@ -399,6 +399,19 @@ mod tests {
     }
 
     #[test]
+    fn plan_period_count_never_truncates() {
+        // `periods` is stored as u32; the range check must run in the u64
+        // domain *before* the narrowing cast — 2^32+1 would otherwise
+        // truncate to a quietly tiny 1-period plan.
+        assert!(SamplePlan::parse("4294967297:1:1").is_err(), "2^32+1 periods");
+        assert!(SamplePlan::parse("4294967296:1:1").is_err(), "2^32 periods");
+        assert!(SamplePlan::parse("100001:1:1").is_err(), "above the cap");
+        assert!(SamplePlan::parse("18446744073709551616:1:1").is_err(), "u64 overflow");
+        let p = SamplePlan::parse("100000:1:1").unwrap();
+        assert_eq!(p.periods, 100_000, "the cap itself is accepted");
+    }
+
+    #[test]
     fn json_shape() {
         let summary = SamplingSummary {
             plan: SamplePlan { periods: 2, warmup: 10, measure: 20, interval: 120 },

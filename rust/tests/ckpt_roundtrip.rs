@@ -215,9 +215,10 @@ fn bit_flipped_checkpoint_errors_not_panics() {
 fn truncated_checkpoint_errors_not_panics() {
     let bytes = small_ckpt_bytes();
     let path = tmp("trunc");
-    let mut lens: Vec<usize> = (0..32).collect();
-    lens.extend([bytes.len() / 3, bytes.len() / 2, bytes.len() - 1]);
-    for len in lens {
+    // Every truncation length: header cuts, preamble cuts, mid-hart,
+    // mid-page and the one-byte-short file all exercise different
+    // length-prefixed decode paths.
+    for len in 0..bytes.len() {
         std::fs::write(&path, &bytes[..len]).unwrap();
         assert!(Checkpoint::load(&path).is_err(), "truncation to {} bytes must be rejected", len);
     }
@@ -233,11 +234,9 @@ fn checksum_fixed_corruption_never_panics() {
     let path = tmp("fixup");
     let header = 24usize;
     let payload_len = bytes.len() - header;
-    // Walk a stride of payload offsets plus the first 64 (the structural
-    // fields live up front: counts, sizes, dram geometry).
-    let mut offsets: Vec<usize> = (0..64.min(payload_len)).collect();
-    offsets.extend((64..payload_len).step_by(97));
-    for off in offsets {
+    // Every payload offset: structural fields (counts, sizes, dram
+    // geometry, page addresses, length prefixes) and bulk data alike.
+    for off in 0..payload_len {
         for flip in [0x01u8, 0xff] {
             let mut bad = bytes.clone();
             bad[header + off] ^= flip;
@@ -249,6 +248,62 @@ fn checksum_fixed_corruption_never_panics() {
             let _ = Checkpoint::load(&path);
         }
     }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Beyond checksum coverage: a checkpoint whose checksum has been
+/// refreshed after a targeted edit must still be rejected when the edit
+/// breaks a structural invariant — a reserved privilege encoding, a page
+/// off the 4 KiB grid, a duplicated page address. These are exactly the
+/// invariants the COW fan-out path (`Checkpoint::shared_pages`) relies on.
+#[test]
+fn semantic_corruptions_with_valid_checksums_are_rejected() {
+    let bytes = small_ckpt_bytes();
+    let path = tmp("semantic");
+    let refix = |bad: &mut [u8]| {
+        let checksum = r2vm::ckpt::io::fnv1a(&bad[24..]);
+        bad[16..24].copy_from_slice(&checksum.to_le_bytes());
+    };
+    let expect_err = |bad: Vec<u8>, needle: &str, what: &str| {
+        std::fs::write(&path, &bad).unwrap();
+        let err = match Checkpoint::load(&path) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("{}: corrupted checkpoint loaded", what),
+        };
+        assert!(err.contains(needle), "{}: {}", what, err);
+    };
+
+    // Hart 0's privilege byte sits right after its 32 GPRs + pc (header
+    // 24 + preamble 46 + 256 + 8); 2 is the reserved encoding of the
+    // 2-bit field.
+    let prv_off = 24 + 46 + 256 + 8;
+    assert_eq!(bytes[prv_off], 3, "hart 0 runs in M-mode");
+    let mut bad = bytes.clone();
+    bad[prv_off] = 2;
+    refix(&mut bad);
+    expect_err(bad, "privilege", "reserved privilege encoding");
+
+    // First page record's address: the last LE occurrence of DRAM_BASE
+    // (the preamble's dram_base field comes much earlier; the second
+    // dirtied page is at +0x2_0000 and cannot match).
+    let pat = r2vm::mem::DRAM_BASE.to_le_bytes();
+    let addr_off = (0..bytes.len() - 8)
+        .rev()
+        .find(|&i| bytes[i..i + 8] == pat)
+        .expect("page record present");
+    assert!(addr_off > 24 + 46, "page record lies past the preamble");
+
+    let mut bad = bytes.clone();
+    bad[addr_off..addr_off + 8].copy_from_slice(&(r2vm::mem::DRAM_BASE + 8).to_le_bytes());
+    refix(&mut bad);
+    expect_err(bad, "aligned", "page off the 4 KiB grid");
+
+    let mut bad = bytes.clone();
+    bad[addr_off..addr_off + 8]
+        .copy_from_slice(&(r2vm::mem::DRAM_BASE + 0x2_0000).to_le_bytes());
+    refix(&mut bad);
+    expect_err(bad, "order", "duplicated page address");
+
     std::fs::remove_file(&path).ok();
 }
 

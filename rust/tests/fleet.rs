@@ -1,0 +1,234 @@
+//! Fleet-mode integration: fanning one checkpoint out to many COW-restored
+//! instances must (a) leave every instance bit-equivalent to a solo
+//! restore — concurrent neighbours never bleed state through the shared
+//! pages, (b) amortise translation through the warm-up code seed,
+//! (c) apply per-instance sweep parameters, and (d) aggregate into a
+//! schema-stable `BENCH_fleet.json`.
+
+use r2vm::asm::*;
+use r2vm::ckpt::Checkpoint;
+use r2vm::coordinator::{run_fleet, run_restored, FleetOptions, SimConfig};
+use r2vm::engine::{ExecutionEngine, ExitReason};
+use r2vm::fiber::FiberEngine;
+use r2vm::mem::DRAM_BASE;
+use r2vm::sys::loader::load_flat;
+use r2vm::sys::System;
+
+const WORDS: i64 = 600;
+const CHECKSUM: u64 = 600 * 601 / 2;
+
+/// Fill-then-checksum workload. The fill loop keeps storing after the
+/// mid-fill checkpoint, so every restored instance dirties checkpointed
+/// pages (the COW clone path); the checksum phase then reads the mix of
+/// shared and private pages back.
+fn workload() -> Image {
+    let mut a = Assembler::new(DRAM_BASE);
+    let scratch = a.new_label();
+    a.la(S0, scratch);
+    a.li(T0, WORDS);
+    let fill = a.here();
+    a.sd(T0, S0, 0);
+    a.addi(S0, S0, 8);
+    a.addi(T0, T0, -1);
+    a.bnez(T0, fill);
+    a.la(S0, scratch);
+    a.li(T0, WORDS);
+    a.li(S1, 0);
+    let sum = a.here();
+    a.ld(T2, S0, 0);
+    a.add(S1, S1, T2);
+    a.addi(S0, S0, 8);
+    a.addi(T0, T0, -1);
+    a.bnez(T0, sum);
+    a.mv(A0, S1);
+    a.li(A7, 93);
+    a.ecall();
+    a.align(64);
+    a.bind(scratch);
+    a.zero_fill(WORDS as usize * 8 + 64);
+    a.finish()
+}
+
+/// Checkpoint the workload mid-fill (deterministic, so two calls build
+/// identical checkpoints).
+fn mid_ckpt() -> Checkpoint {
+    let img = workload();
+    let sys = System::new(1, 4 << 20);
+    let mut eng = FiberEngine::new(sys, "simple");
+    let entry = load_flat(&eng.sys, &img);
+    eng.set_entry(entry);
+    assert_eq!(eng.run(900), ExitReason::StepLimit);
+    let snap = ExecutionEngine::suspend(&mut eng);
+    Checkpoint::from_snapshot(&snap)
+}
+
+#[test]
+fn concurrent_instances_are_bit_equivalent_to_a_solo_restore() {
+    let ckpt = mid_ckpt();
+    let insts0 = ckpt.total_instret();
+    let cycles0: u64 = ckpt.harts.iter().map(|h| h.cycle).sum();
+
+    // Reference: one instance restored the ordinary (non-COW) way.
+    let solo = run_restored(&SimConfig::default(), mid_ckpt());
+    assert_eq!(solo.exit, ExitReason::Exited(CHECKSUM));
+    let want_insts = solo.total_insts - insts0;
+    let want_cycles = solo.per_hart.iter().map(|&(c, _)| c).sum::<u64>() - cycles0;
+    assert!(want_insts > 0);
+
+    // Eight concurrent instances over the same shared page set.
+    let opts = FleetOptions { instances: 8, workers: 4, ..Default::default() };
+    let report = run_fleet(&SimConfig::default(), &ckpt, &opts);
+    assert_eq!(report.failed(), 0, "{}", report.table());
+    assert_eq!(report.workers, 4);
+    assert!(report.shared_pages > 0);
+    let ok = report.ok();
+    assert_eq!(ok.len(), 8);
+    let want_exit = format!("{:?}", ExitReason::Exited(CHECKSUM));
+    for s in &ok {
+        assert_eq!(s.exit, want_exit);
+        assert_eq!(s.insts, want_insts, "retirement identical to the solo restore");
+        assert_eq!(s.cycles, want_cycles, "cycle-level timing identical too");
+        assert_eq!(s.pages_mapped, report.shared_pages);
+        assert!(s.pages_cloned >= 1, "the fill loop dirties checkpointed pages");
+        assert!(s.pages_cloned <= s.pages_mapped, "most pages stay shared");
+        assert!(s.restore_secs >= 0.0 && s.wall_secs >= 0.0);
+    }
+}
+
+#[test]
+fn warmup_code_seed_amortises_translation() {
+    let ckpt = mid_ckpt();
+
+    let seeded = run_fleet(
+        &SimConfig::default(),
+        &ckpt,
+        &FleetOptions { instances: 6, workers: 2, ..Default::default() },
+    );
+    assert_eq!(seeded.failed(), 0, "{}", seeded.table());
+    assert!(seeded.warmup_translations > 0, "the warm-up instance translated the program");
+    assert!(seeded.seed_blocks > 0);
+    assert!(seeded.seed_hits_total() > 0, "instances materialised blocks from the seed");
+
+    let cold = run_fleet(
+        &SimConfig::default(),
+        &ckpt,
+        &FleetOptions { instances: 6, workers: 2, share_code: false, ..Default::default() },
+    );
+    assert_eq!(cold.failed(), 0, "{}", cold.table());
+    assert_eq!(cold.seed_blocks, 0);
+    assert_eq!(cold.seed_hits_total(), 0);
+    assert!(
+        seeded.translations_total() < cold.translations_total(),
+        "seeded fleet translated {} blocks, unseeded {}",
+        seeded.translations_total(),
+        cold.translations_total()
+    );
+}
+
+#[test]
+fn sweeps_apply_per_instance_and_locked_keys_fail_only_their_cell() {
+    let ckpt = mid_ckpt();
+    let opts = FleetOptions {
+        instances: 4,
+        workers: 2,
+        combos: vec![
+            vec![("pipeline".to_string(), "simple".to_string())],
+            vec![("pipeline".to_string(), "inorder".to_string())],
+        ],
+        ..Default::default()
+    };
+    let report = run_fleet(&SimConfig::default(), &ckpt, &opts);
+    assert_eq!(report.failed(), 0, "{}", report.table());
+    let stats: Vec<_> =
+        report.results.iter().map(|r| r.outcome.as_ref().unwrap().clone()).collect();
+    // Instances 0/2 ran combo 0, instances 1/3 combo 1.
+    assert_eq!(report.results[0].params[0].1, "simple");
+    assert_eq!(report.results[1].params[0].1, "inorder");
+    assert_eq!(stats[0].cycles, stats[2].cycles, "same combo, same timing");
+    assert_eq!(stats[1].cycles, stats[3].cycles);
+    assert_eq!(stats[0].insts, stats[1].insts, "retirement is model-independent");
+    assert_ne!(stats[0].cycles, stats[1].cycles, "the swept pipeline changes the timing");
+
+    // A fleet-managed key fails its cell with a diagnostic; the rest of
+    // the fleet is unaffected.
+    let opts = FleetOptions {
+        instances: 2,
+        workers: 1,
+        combos: vec![
+            Vec::new(),
+            vec![("harts".to_string(), "4".to_string())],
+        ],
+        ..Default::default()
+    };
+    let report = run_fleet(&SimConfig::default(), &ckpt, &opts);
+    assert_eq!(report.failed(), 1, "{}", report.table());
+    assert!(report.results[0].outcome.is_ok());
+    let err = report.results[1].outcome.as_ref().unwrap_err();
+    assert!(err.contains("fleet-managed"), "{}", err);
+    assert!(report.table().contains("FAILED"), "failures are visible in the table");
+}
+
+#[test]
+fn fleet_report_json_is_schema_stable() {
+    let ckpt = mid_ckpt();
+    let opts = FleetOptions {
+        instances: 3,
+        workers: 2,
+        combos: vec![Vec::new(), vec![("memory".to_string(), "nonsense".to_string())]],
+        ..Default::default()
+    };
+    let report = run_fleet(&SimConfig::default(), &ckpt, &opts);
+    assert_eq!(report.failed(), 1);
+    let json = report.to_json();
+    for key in [
+        "\"schema\": \"r2vm-fleet-v1\"",
+        "\"instances\": 3",
+        "\"workers\": 2",
+        "\"failed\": 1",
+        "\"wall_seconds\"",
+        "\"restore_ms\"",
+        "\"cpi\"",
+        "\"mips\"",
+        "\"mips_histogram\"",
+        "\"cow\"",
+        "\"shared_pages\"",
+        "\"pages_cloned_total\"",
+        "\"code_seed\"",
+        "\"seed_hits_total\"",
+        "\"cells\"",
+        "\"error\"",
+    ] {
+        assert!(json.contains(key), "missing {} in:\n{}", key, json);
+    }
+    let open = json.matches('{').count();
+    let close = json.matches('}').count();
+    assert_eq!(open, close, "balanced objects");
+    assert_eq!(json.matches('[').count(), json.matches(']').count(), "balanced arrays");
+    assert!(!json.contains(",\n  ]"), "no trailing commas");
+    assert!(json.ends_with('\n'));
+}
+
+#[test]
+fn large_fleet_drains_on_a_small_worker_pool() {
+    // The acceptance-criteria shape: hundreds of instances on a bounded
+    // pool. Every instance must complete, agree with its neighbours, and
+    // the aggregate percentiles must be internally consistent.
+    let ckpt = mid_ckpt();
+    let opts = FleetOptions { instances: 256, workers: 8, ..Default::default() };
+    let report = run_fleet(&SimConfig::default(), &ckpt, &opts);
+    assert_eq!(report.failed(), 0);
+    let ok = report.ok();
+    assert_eq!(ok.len(), 256);
+    let first = &ok[0];
+    assert!(first.insts > 0);
+    for s in &ok {
+        assert_eq!(s.insts, first.insts);
+        assert_eq!(s.cycles, first.cycles);
+    }
+    let json = report.to_json();
+    assert!(json.contains("\"instances\": 256"));
+    // p50 <= p99 by construction; both positive since every cell ran.
+    let cpis = report.cpis();
+    assert_eq!(cpis.len(), 256);
+    assert!(cpis.iter().all(|&c| c > 0.0));
+}
