@@ -370,6 +370,29 @@ pub fn run_bench(opts: &BenchOptions) -> BenchReport {
                 }
             }
         }
+        // Dynamic-tier rows (DESIGN.md §14): the o3 model next to an
+        // inorder twin under the same lockstep+atomic configuration, so
+        // the static-vs-dynamic timing-tier cost is a single ratio
+        // (`inorder_o3_mips_ratio`). These extend the matrix as new rows;
+        // the `--fail-threshold` gate never fails on rows missing from an
+        // older baseline.
+        if workload == "coremark-lite" {
+            for &pipeline in &["inorder", "o3"] {
+                match run_cell(
+                    workload, harts, "lockstep", pipeline, "atomic", false, None, None, false,
+                    runs, opts.quick,
+                ) {
+                    Some(cell) => cells.push(cell),
+                    None => {
+                        let label = cell_label(
+                            workload, "lockstep", pipeline, "atomic", false, None, None, None,
+                        );
+                        eprintln!("warning: bench cell {} could not run (skipped)", label);
+                        skipped.push(label);
+                    }
+                }
+            }
+        }
         // Shard-scaling rows (DESIGN.md §10): the sharded engine across
         // SHARD_MATRIX on the 4-hart multicore workload under the
         // cycle-level inorder+cache configuration.
@@ -388,6 +411,20 @@ pub fn run_bench(opts: &BenchOptions) -> BenchReport {
                         eprintln!("warning: bench cell {} could not run (skipped)", label);
                         skipped.push(label);
                     }
+                }
+            }
+            // The o3 model on the 4-hart coherent configuration: the
+            // dynamic tier must also hold up under multicore MESI timing.
+            match run_cell(
+                workload, harts, "lockstep", "o3", "mesi", false, None, None, false, runs,
+                opts.quick,
+            ) {
+                Some(cell) => cells.push(cell),
+                None => {
+                    let label =
+                        cell_label(workload, "lockstep", "o3", "mesi", false, None, None, None);
+                    eprintln!("warning: bench cell {} could not run (skipped)", label);
+                    skipped.push(label);
                 }
             }
         }
@@ -502,6 +539,38 @@ impl BenchReport {
             .map(Cell::mips)
     }
 
+    /// MIPS of the plain (chain, micro-op, untraced) lockstep coremark
+    /// cell running `pipeline` under the atomic memory model.
+    fn coremark_pipeline_mips(&self, pipeline: &str) -> Option<f64> {
+        self.cells
+            .iter()
+            .find(|c| {
+                c.workload == "coremark-lite"
+                    && c.mode == "lockstep"
+                    && c.pipeline == pipeline
+                    && c.memory == "atomic"
+                    && c.dispatch == "chain"
+                    && c.backend.is_none()
+                    && c.obs.is_none()
+            })
+            .map(Cell::mips)
+    }
+
+    /// Dynamic-tier (o3) coremark MIPS.
+    pub fn coremark_o3_mips(&self) -> Option<f64> {
+        self.coremark_pipeline_mips("o3")
+    }
+
+    /// Static-vs-dynamic tier cost: inorder MIPS over o3 MIPS on the same
+    /// lockstep+atomic coremark cell (how much the runtime retire hook
+    /// costs relative to translation-time baked cycle counts).
+    pub fn inorder_o3_mips_ratio(&self) -> Option<f64> {
+        match (self.coremark_pipeline_mips("inorder"), self.coremark_o3_mips()) {
+            (Some(i), Some(o)) if o > 0.0 => Some(i / o),
+            _ => None,
+        }
+    }
+
     /// Chain-following dispatch MIPS on the coremark cell.
     pub fn coremark_chain_mips(&self) -> Option<f64> {
         self.coremark_mips("chain")
@@ -592,6 +661,16 @@ impl BenchReport {
                     off / on
                 ));
             }
+        }
+        if let (Some(i), Some(o), Some(ratio)) = (
+            self.coremark_pipeline_mips("inorder"),
+            self.coremark_o3_mips(),
+            self.inorder_o3_mips_ratio(),
+        ) {
+            s.push_str(&format!(
+                "coremark timing tier: inorder {:.2} MIPS vs o3 {:.2} MIPS ({:.2}x)\n",
+                i, o, ratio
+            ));
         }
         s
     }
@@ -791,6 +870,14 @@ impl BenchReport {
             fmt_opt(trace_overhead)
         ));
         s.push_str(&format!(
+            "  \"coremark_o3_mips\": {},\n",
+            fmt_opt(self.coremark_o3_mips())
+        ));
+        s.push_str(&format!(
+            "  \"inorder_o3_mips_ratio\": {},\n",
+            fmt_opt(self.inorder_o3_mips_ratio())
+        ));
+        s.push_str(&format!(
             "  \"shard_s1_q1024_mips\": {},\n",
             fmt_opt(self.shard_mips(1, 1024))
         ));
@@ -908,19 +995,21 @@ mod tests {
         };
         let report = run_bench(&opts);
         // 5 matrix cells + the lookup-dispatch ablation cell + the traced
-        // observability-ablation cell, plus (where the native backend is
-        // available) native twins of the 4 lockstep rows and of the
-        // nochain ablation.
+        // observability-ablation cell + the inorder/o3 timing-tier pair,
+        // plus (where the native backend is available) native twins of
+        // the 4 lockstep rows and of the nochain ablation.
         let native_rows = if crate::dbt::native_available() { 5 } else { 0 };
         assert_eq!(
             report.cells.len(),
-            MATRIX.len() + 2 + native_rows,
+            MATRIX.len() + 4 + native_rows,
             "every cell must complete"
         );
         assert!(report.cells.iter().all(|c| c.exit.is_some()));
         assert!(report.coremark_chain_mips().is_some());
         assert!(report.coremark_lookup_mips().is_some());
         assert!(report.coremark_traced_mips().is_some());
+        assert!(report.coremark_o3_mips().is_some());
+        assert!(report.inorder_o3_mips_ratio().is_some());
         assert_eq!(report.coremark_native_mips().is_some(), native_rows > 0);
         // The traced twin retires the same guest work as its untraced
         // sibling — observability must not perturb execution.
@@ -956,6 +1045,11 @@ mod tests {
         assert!(json.contains("\"coremark_native_mips\""));
         assert!(json.contains("\"coremark_traced_mips\""));
         assert!(json.contains("\"coremark_trace_overhead\""));
+        assert!(json.contains("\"coremark_o3_mips\""));
+        assert!(json.contains("\"inorder_o3_mips_ratio\""));
+        // The o3 rows carry the ordinary schema with pipeline "o3" — no
+        // new per-row keys.
+        assert!(json.contains("\"pipeline\": \"o3\""));
         // The backend key appears on native rows only — micro-op rows keep
         // their exact pre-native schema; same for the obs key.
         assert_eq!(json.contains("\"backend\": \"native\""), native_rows > 0);
@@ -979,6 +1073,7 @@ mod tests {
         assert!(table.contains("coremark-lite"));
         assert!(table.contains("coremark dispatch: chain"));
         assert!(table.contains("coremark tracing: off"));
+        assert!(table.contains("coremark timing tier: inorder"));
 
         // The fail-threshold gate: self-comparison never regresses, and
         // the permissive-threshold sweep is trivially clean too.
@@ -1064,11 +1159,16 @@ mod tests {
         let report = run_bench(&opts);
         assert_eq!(
             report.cells.len(),
-            MATRIX.len() + SHARD_MATRIX.len(),
-            "matrix + shard-scaling cells must all complete: {:?}",
+            MATRIX.len() + SHARD_MATRIX.len() + 1,
+            "matrix + shard-scaling + o3 cells must all complete: {:?}",
             report.skipped
         );
         assert!(report.cells.iter().all(|c| c.exit.is_some()));
+        // The dynamic-tier row: 4-hart o3 under MESI, clean exit with the
+        // workload's expected result.
+        let o3 = report.cells.iter().find(|c| c.pipeline == "o3").expect("o3 row present");
+        assert_eq!((o3.mode, o3.memory, o3.harts), ("lockstep", "mesi", 4));
+        assert_eq!(o3.exit, Some(crate::workloads::multicore::expected_sum(4, 5_000)));
         // Every sharded cell retired the same guest work (determinism of
         // the workload across shard/quantum points).
         let expected = crate::workloads::multicore::expected_sum(4, 5_000);

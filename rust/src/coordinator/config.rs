@@ -195,8 +195,9 @@ impl SimConfig {
             "pipeline" => {
                 if crate::pipeline::by_name(value).is_none() {
                     return Err(ParseError(format!(
-                        "unknown pipeline model '{}' (atomic|simple|inorder)",
-                        value
+                        "unknown pipeline model '{}' ({})",
+                        value,
+                        crate::pipeline::model_names()
                     )));
                 }
                 self.pipeline = value.into();
@@ -371,7 +372,11 @@ pub fn parse_switch_target(s: &str) -> Result<(EngineMode, String, String), Pars
     let mode = EngineMode::parse(parts[0])
         .ok_or_else(|| ParseError(format!("unknown switch-to mode '{}'", parts[0])))?;
     if crate::pipeline::by_name(parts[1]).is_none() {
-        return Err(ParseError(format!("unknown switch-to pipeline '{}'", parts[1])));
+        return Err(ParseError(format!(
+            "unknown switch-to pipeline '{}' ({})",
+            parts[1],
+            crate::pipeline::model_names()
+        )));
     }
     if !crate::engine::MEMORY_MODEL_NAMES.contains(&parts[2]) {
         return Err(ParseError(format!("unknown switch-to memory '{}'", parts[2])));
@@ -402,7 +407,12 @@ mod tests {
         c.set("line-bytes", "4096").unwrap();
         assert_eq!(c.line_shift, 12);
         c.validate().unwrap();
-        assert!(c.set("pipeline", "o3").is_err());
+        // "o3" is a registered model; aliases resolve too (registry-driven).
+        c.set("pipeline", "o3").unwrap();
+        c.set("pipeline", "out-of-order").unwrap();
+        c.validate().unwrap();
+        let err = c.set("pipeline", "warp").unwrap_err();
+        assert!(err.0.contains("atomic|simple|inorder|o3"), "registry-derived list: {}", err.0);
         assert!(c.set("nonsense", "1").is_err());
         assert!(c.set("line-bytes", "48").is_err());
     }

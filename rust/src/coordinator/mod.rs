@@ -57,12 +57,6 @@ pub fn memory_model_by_name(
     }
 }
 
-/// Pre-implemented pipeline models — Table 1 of the paper.
-pub const PIPELINE_TABLE: &[(&str, &str)] = &[
-    ("Atomic", "Cycle count not tracked"),
-    ("Simple", "Each non-memory instruction takes one cycle"),
-    ("InOrder", "Models a simple 5-stage in-order scalar pipeline"),
-];
 
 /// Pre-implemented memory models — Table 2 of the paper.
 pub const MEMORY_TABLE: &[(&str, &str)] = &[
@@ -88,8 +82,10 @@ pub const ENGINE_TABLE: &[(&str, &str)] = &[
 pub fn models_report() -> String {
     let mut s = String::new();
     s.push_str("Table 1: pipeline models\n");
-    for (name, desc) in PIPELINE_TABLE {
-        s.push_str(&format!("  {:<8} {}\n", name, desc));
+    // Derived from the model registry so a new pipeline model shows up
+    // here (and in CLI error messages) without touching this file.
+    for m in crate::pipeline::MODELS {
+        s.push_str(&format!("  {:<8} {}\n", m.display, m.summary));
     }
     s.push_str("\nTable 2: memory models\n");
     for (name, desc) in MEMORY_TABLE {
@@ -278,12 +274,7 @@ pub fn build_system(cfg: &SimConfig) -> System {
 /// Pack the current model configuration in the SIMCTRL CSR encoding
 /// (engine field left at 0 = keep).
 pub fn simctrl_encoding(pipeline: &str, memory: &str, line_shift: u32) -> u64 {
-    let p = match pipeline {
-        "atomic" => 1,
-        "simple" => 2,
-        "inorder" | "in-order" => 3,
-        _ => 0,
-    };
+    let p = crate::pipeline::code_by_name(pipeline);
     let m: u64 = match memory {
         "atomic" => 1,
         "tlb" => 2,
@@ -707,7 +698,7 @@ mod tests {
     fn model_matrix_smoke() {
         let img = countdown(25);
         for memory in ["atomic", "tlb", "cache", "mesi"] {
-            for pipeline in ["atomic", "simple", "inorder"] {
+            for pipeline in ["atomic", "simple", "inorder", "o3"] {
                 let mut cfg = SimConfig::default();
                 cfg.set("memory", memory).unwrap();
                 cfg.pipeline = pipeline.into();
@@ -746,6 +737,7 @@ mod tests {
     fn models_report_lists_tables() {
         let r = models_report();
         assert!(r.contains("InOrder"));
+        assert!(r.contains("O3"), "registry-derived table lists the o3 model");
         assert!(r.contains("MESI"));
         assert!(r.contains("Lockstep execution required"));
         assert!(r.contains("lockstep"), "engine inventory must be listed");
@@ -756,6 +748,8 @@ mod tests {
     fn simctrl_encoding_roundtrip() {
         let v = simctrl_encoding("inorder", "mesi", 6);
         assert_eq!(v & 0b111, 3);
+        assert_eq!(simctrl_encoding("o3", "mesi", 6) & 0b111, 4);
+        assert_eq!(simctrl_encoding("out-of-order", "mesi", 6) & 0b111, 4, "aliases encode too");
         assert_eq!((v >> 4) & 0b111, 4);
         assert_eq!((v >> 8) & 0xfff, 64);
         assert_eq!((v >> SIMCTRL_ENGINE_SHIFT) & 0b111, 0, "plain encoding keeps the engine");

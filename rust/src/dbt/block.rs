@@ -10,6 +10,7 @@
 //! block chaining, cross-page stubs) are preserved; see DESIGN.md §3.
 
 use crate::isa::op::Op;
+use crate::pipeline::InstDesc;
 use std::cell::Cell;
 
 /// Index of a block within its (per-hart) code cache arena.
@@ -156,6 +157,11 @@ pub struct Block {
     /// successor, `chain_seq` the sequential one.
     pub chain_taken: ChainLink,
     pub chain_seq: ChainLink,
+    /// Dynamic-tier descriptor trace (DESIGN.md §14): one [`InstDesc`]
+    /// per step plus one for the terminator (always `steps.len() + 1`
+    /// long), recorded only when the block was translated for a
+    /// dynamic-tier pipeline model; empty for static models.
+    pub dtrace: Vec<InstDesc>,
     /// Profiling counters; untouched (and never read) unless profiling
     /// is enabled.
     pub prof: BlockProf,
@@ -230,6 +236,7 @@ mod tests {
             cross_page: None,
             chain_taken: ChainLink::empty(),
             chain_seq: ChainLink::empty(),
+            dtrace: Vec::new(),
             prof: BlockProf::default(),
         }
     }

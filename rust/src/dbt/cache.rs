@@ -163,11 +163,19 @@ impl CodeCache {
 
     /// Compile block `id` to native code if needed (generation-checked).
     /// `line_shift` is the current L0 D-cache line shift, baked into the
-    /// emitted probes.
+    /// emitted probes; `model_digest` the pipeline model's configuration
+    /// digest (stamped so reconfigured models never reuse old code).
     #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
-    pub fn ensure_native(&mut self, id: BlockId, line_shift: u32) {
+    pub fn ensure_native(&mut self, id: BlockId, line_shift: u32, model_digest: u64) {
         let block = &self.blocks[id as usize];
-        self.native.ensure(self.generation, line_shift, self.prof.is_some(), id, block);
+        self.native.ensure(
+            self.generation,
+            line_shift,
+            model_digest,
+            self.prof.is_some(),
+            id,
+            block,
+        );
     }
 
     #[inline]
@@ -398,7 +406,7 @@ mod tests {
     fn seed_materializes_blocks_without_counting_a_miss() {
         let mut warm = CodeCache::new();
         let warm_id = warm.insert(0x1000, 3, trivial_block(0x1000));
-        let mut seed = CodeSeed::new("simple", 6);
+        let mut seed = CodeSeed::new("simple", 0, 6);
         warm.fold_into_seed(&mut seed);
         assert_eq!(seed.len(), 1);
 
@@ -425,7 +433,7 @@ mod tests {
     fn flush_drops_the_seed() {
         let mut warm = CodeCache::new();
         warm.insert(0x1000, 3, trivial_block(0x1000));
-        let mut seed = CodeSeed::new("simple", 6);
+        let mut seed = CodeSeed::new("simple", 0, 6);
         warm.fold_into_seed(&mut seed);
         let mut c = CodeCache::new();
         c.set_seed(Arc::new(seed));

@@ -224,6 +224,10 @@ pub struct NativeCache {
     capacity: usize,
     gen: u64,
     line_shift: u32,
+    /// Pipeline-model configuration digest stamped like `gen`: two
+    /// differently-parameterised models must never share native code
+    /// (their baked cycle counts / descriptor interpretation differ).
+    model_digest: u64,
     blocks: Vec<NativeState>,
     /// Whether emitted code carries the per-block profile increment.
     /// Stamped like `gen`/`line_shift`: a mismatch in `ensure` discards
@@ -253,6 +257,7 @@ impl NativeCache {
             capacity: DEFAULT_CAPACITY,
             gen: 0,
             line_shift: 0,
+            model_digest: 0,
             blocks: Vec::new(),
             profile: false,
             dump_pc: None,
@@ -291,9 +296,18 @@ impl NativeCache {
 
     /// Make sure block `id` has an up-to-date native compilation attempt.
     /// `gen` is the owning `CodeCache::generation`; `line_shift` the
-    /// current L0 D-cache line shift; `profile` whether emitted code must
-    /// carry the per-block cycle increment.
-    pub fn ensure(&mut self, gen: u64, line_shift: u32, profile: bool, id: u32, block: &Block) {
+    /// current L0 D-cache line shift; `model_digest` the pipeline model's
+    /// configuration digest; `profile` whether emitted code must carry
+    /// the per-block cycle increment.
+    pub fn ensure(
+        &mut self,
+        gen: u64,
+        line_shift: u32,
+        model_digest: u64,
+        profile: bool,
+        id: u32,
+        block: &Block,
+    ) {
         if self.buf.is_none() {
             self.buf = ExecBuf::new(self.capacity);
             if self.buf.is_none() {
@@ -301,13 +315,19 @@ impl NativeCache {
             }
             self.gen = gen;
             self.line_shift = line_shift;
+            self.model_digest = model_digest;
             self.profile = profile;
             self.reset();
             self.resets = 0; // the initial prologue emit is not a reset
         }
-        if self.gen != gen || self.line_shift != line_shift || self.profile != profile {
+        if self.gen != gen
+            || self.line_shift != line_shift
+            || self.model_digest != model_digest
+            || self.profile != profile
+        {
             self.gen = gen;
             self.line_shift = line_shift;
+            self.model_digest = model_digest;
             self.profile = profile;
             self.reset();
         }

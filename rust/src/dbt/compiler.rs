@@ -5,7 +5,7 @@
 use super::block::{Block, BlockProf, ChainLink, CrossPageStub, Step, Term, TermKind};
 use crate::isa::decode::{decode16, decode32, inst_len};
 use crate::isa::op::Op;
-use crate::pipeline::PipelineModel;
+use crate::pipeline::{InstDesc, PipelineModel, Tier};
 use crate::sys::Trap;
 
 /// Maximum instructions translated into one block (long straight-line code
@@ -71,6 +71,11 @@ pub fn translate(
     let mut cross_page: Option<CrossPageStub> = None;
     let mut cur = pc;
     let mut comp = DbtCompiler::new(pc);
+    // Dynamic-tier models charge nothing at translation time; instead the
+    // block carries a descriptor per instruction for the runtime retire
+    // hook (DESIGN.md §14).
+    let dynamic = model.tier() == Tier::Dynamic;
+    let mut dtrace: Vec<InstDesc> = Vec::new();
     model.block_start(&mut comp);
 
     loop {
@@ -121,6 +126,9 @@ pub fn translate(
             let cycles_taken = comp.take_cycles();
             let sync = op.is_mem() || op.is_system();
             let term = Term { op, pc_off, len: raw_len, kind, cycles_nt, cycles_taken, sync };
+            if dynamic {
+                dtrace.push(InstDesc::from_op(&op, pc_off, raw_len));
+            }
             return Ok(Block {
                 start: pc,
                 end: cur + raw_len as u64,
@@ -130,6 +138,7 @@ pub fn translate(
                 cross_page,
                 chain_taken: ChainLink::empty(),
                 chain_seq: ChainLink::empty(),
+                dtrace,
                 prof: BlockProf::default(),
             });
         }
@@ -137,6 +146,9 @@ pub fn translate(
         model.after_instruction(&mut comp, &op, compressed);
         let cycles = comp.take_cycles();
         let sync = op.is_mem() || op.is_system();
+        if dynamic {
+            dtrace.push(InstDesc::from_op(&op, pc_off, raw_len));
+        }
         steps.push(Step { op, pc_off, len: raw_len, cycles, sync });
         comp.at_block_start = false;
         cur += raw_len as u64;
@@ -260,6 +272,38 @@ mod tests {
             imm: 1,
         });
         assert_eq!(stub.expected, (enc >> 16) as u16);
+    }
+
+    #[test]
+    fn dynamic_model_records_dtrace_and_bakes_no_cycles() {
+        use crate::asm::*;
+        use crate::pipeline::{by_name, OpClass};
+        let bytes = asm_bytes(|a| {
+            a.addi(A0, A0, 1);
+            a.ld(A1, A0, 8);
+            let l = a.new_label();
+            a.beqz(A0, l);
+            a.bind(l);
+        });
+        let mut f = probe(bytes.clone());
+        let mut m = by_name("o3").unwrap();
+        let b = translate(&mut f, &mut *m, 0, 6).unwrap();
+        // One descriptor per step plus the terminator.
+        assert_eq!(b.dtrace.len(), b.steps.len() + 1);
+        assert_eq!(b.dtrace[0].class, OpClass::Alu);
+        assert_eq!(b.dtrace[1].class, OpClass::Load);
+        assert_eq!(b.dtrace[1].imm, 8);
+        assert_eq!(b.dtrace[2].class, OpClass::Branch);
+        assert_eq!(b.dtrace[2].pc_off, b.term.pc_off);
+        // Dynamic models bake zero cycles into the translation.
+        assert!(b.steps.iter().all(|s| s.cycles == 0));
+        assert_eq!(b.term.cycles_nt, 0);
+        assert_eq!(b.term.cycles_taken, 0);
+        // Static models record no dtrace.
+        let mut f = probe(bytes);
+        let mut m = SimpleModel::default();
+        let b = translate(&mut f, &mut m, 0, 6).unwrap();
+        assert!(b.dtrace.is_empty());
     }
 
     #[test]

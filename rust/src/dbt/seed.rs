@@ -38,6 +38,8 @@ pub struct SeedBlock {
     pub term: Term,
     pub icache_checks: Vec<u64>,
     pub cross_page: Option<CrossPageStub>,
+    /// Dynamic-tier descriptor trace (empty for static models).
+    pub dtrace: Vec<crate::pipeline::InstDesc>,
 }
 
 impl SeedBlock {
@@ -49,6 +51,7 @@ impl SeedBlock {
             term: b.term,
             icache_checks: b.icache_checks.clone(),
             cross_page: b.cross_page,
+            dtrace: b.dtrace.clone(),
         }
     }
 
@@ -64,6 +67,7 @@ impl SeedBlock {
             cross_page: self.cross_page,
             chain_taken: ChainLink::empty(),
             chain_seq: ChainLink::empty(),
+            dtrace: self.dtrace.clone(),
             prof: BlockProf::default(),
         }
     }
@@ -75,6 +79,12 @@ impl SeedBlock {
 pub struct CodeSeed {
     /// Pipeline model the blocks were translated under.
     pub pipeline: &'static str,
+    /// Configuration digest of that model
+    /// ([`crate::pipeline::PipelineModel::config_digest`]): two same-named
+    /// models with different parameters must never share translations
+    /// (dynamic models bake their parameters into the descriptor-trace
+    /// interpretation and future static models could bake latencies).
+    pub model_digest: u64,
     /// L0 I-cache line shift baked into the icache check lists.
     pub line_shift: u32,
     map: HashMap<u64, u32, BuildHasherDefault<PcHasher>>,
@@ -82,8 +92,8 @@ pub struct CodeSeed {
 }
 
 impl CodeSeed {
-    pub fn new(pipeline: &'static str, line_shift: u32) -> CodeSeed {
-        CodeSeed { pipeline, line_shift, map: HashMap::default(), blocks: Vec::new() }
+    pub fn new(pipeline: &'static str, model_digest: u64, line_shift: u32) -> CodeSeed {
+        CodeSeed { pipeline, model_digest, line_shift, map: HashMap::default(), blocks: Vec::new() }
     }
 
     /// Contribute one translation under `key`. First writer wins: when
@@ -133,13 +143,14 @@ mod tests {
             cross_page: None,
             chain_taken: ChainLink::empty(),
             chain_seq: ChainLink::empty(),
+            dtrace: Vec::new(),
             prof: BlockProf::default(),
         }
     }
 
     #[test]
     fn first_writer_wins_and_instantiation_is_fresh() {
-        let mut seed = CodeSeed::new("simple", 6);
+        let mut seed = CodeSeed::new("simple", 0, 6);
         assert!(seed.is_empty());
         let b = demo_block();
         b.chain_taken.install(5, 99); // residue that must NOT be shared

@@ -88,7 +88,10 @@ impl DiffConfig {
             pipeline: "inorder".into(),
             max_insts: 2_000_000,
             lockstep: true,
-            check_cycles: harts == 1,
+            // The individual cycle checks gate themselves on hart count
+            // and model (inorder-vs-reference needs one hart; the dynamic
+            // band runs at any width), so the master switch defaults on.
+            check_cycles: true,
             cycle_rel_tol: 0.75,
             cycle_abs_tol: 5_000,
             backend: crate::dbt::Backend::default(),
@@ -349,7 +352,14 @@ pub fn check_program(
         if let Some(msg) = ref_state.diff(&state, cfg.harts == 1) {
             return Err(div(prog.seed, label, msg));
         }
-        if mode == EngineMode::Lockstep && cfg.harts == 1 && cfg.check_cycles && cfg.memory == "atomic"
+        // The reference models the in-order pipeline; cross-checking its
+        // cycle count only makes sense when the DBT runs the same model.
+        // Dynamic-tier pipelines get their own band below.
+        if mode == EngineMode::Lockstep
+            && cfg.harts == 1
+            && cfg.check_cycles
+            && cfg.memory == "atomic"
+            && cfg.pipeline == "inorder"
         {
             let dbt = state.harts[0].cycle;
             let rc = ref_state.harts[0].cycle;
@@ -425,7 +435,12 @@ pub fn check_program(
             if let Some(msg) = ref_state.diff(&state, cfg.harts == 1) {
                 return Err(div(prog.seed, &label, msg));
             }
-            if quantum > 1 && cfg.harts == 1 && cfg.check_cycles && cfg.memory == "atomic" {
+            if quantum > 1
+                && cfg.harts == 1
+                && cfg.check_cycles
+                && cfg.memory == "atomic"
+                && cfg.pipeline == "inorder"
+            {
                 // Single hart: threaded sharding may not drift beyond the
                 // DBT tolerance band either.
                 let got = state.harts[0].cycle;
@@ -442,9 +457,105 @@ pub fn check_program(
         }
     }
 
+    // Dynamic-tier pipelines (o3) have no cycle-level reference to compare
+    // against, so they get their own band: CPI plausibility plus rerun
+    // determinism (the retire hook is a pure function of the retired
+    // stream, DESIGN.md §14). The architectural comparison above already
+    // ran with `cfg.pipeline` and must have been exact.
+    let dynamic_pipeline = crate::pipeline::by_name(&cfg.pipeline)
+        .map_or(false, |m| m.tier() == crate::pipeline::Tier::Dynamic);
+    if dynamic_pipeline && cfg.check_cycles {
+        dynamic_band_check(prog.seed, &dut, cfg, ref_exit)?;
+    }
+
     if cfg.lockstep && cfg.harts == 1 {
         step_check(prog.seed, &dut.image, cfg)?;
         block_check(prog.seed, &dut.image, cfg)?;
+    }
+    Ok(())
+}
+
+/// Dynamic-tier timing band. Three runs of each configuration — lockstep,
+/// and on multi-hart topologies the serialized 2-shard sharded engine —
+/// must produce bit-identical per-hart `(cycle, instret)` vectors, and the
+/// lead hart's CPI must fall inside a generous plausibility window (an
+/// out-of-order core on straight-line integer code cannot plausibly
+/// sustain CPI below 0.2 with a 4-wide retire, nor above 10 without a
+/// timing-accounting bug). The sharded leg runs quantum 1: generated
+/// programs join through spin loops, which the threaded quantum>1 driver
+/// is explicitly not rerun-deterministic for (DESIGN.md §10) — the
+/// serialized schedule exercises the sharded dynamic-tier charge paths
+/// without that race.
+fn dynamic_band_check(
+    seed: u64,
+    dut: &Assembled,
+    cfg: &DiffConfig,
+    ref_exit: u64,
+) -> Result<(), Divergence> {
+    let mut configs: Vec<(String, SimConfig)> = Vec::new();
+    let mut ec = sim_config(cfg.harts, EngineMode::Lockstep, cfg.pipeline.as_str(), &cfg.memory);
+    ec.backend = cfg.backend;
+    configs.push((format!("{}-lockstep", cfg.pipeline), ec));
+    if cfg.harts > 1 {
+        let mut ec =
+            sim_config(cfg.harts, EngineMode::Sharded, cfg.pipeline.as_str(), &cfg.memory);
+        ec.shards = 2;
+        ec.quantum = 1;
+        ec.backend = cfg.backend;
+        configs.push((format!("{}-sharded[s2,q1]", cfg.pipeline), ec));
+    }
+    for (label, ec) in &configs {
+        let mut baseline: Option<Vec<(u64, u64)>> = None;
+        for rerun in 0..3 {
+            let mut eng = crate::coordinator::build_engine(ec, &dut.image);
+            match eng.run(cfg.max_insts) {
+                ExitReason::Exited(code) if code == ref_exit => {}
+                other => {
+                    return Err(div(
+                        seed,
+                        label,
+                        format!(
+                            "rerun {}: stopped {:?} (reference exited {})",
+                            rerun, other, ref_exit
+                        ),
+                    ));
+                }
+            }
+            let snap = eng.suspend();
+            let cycles: Vec<(u64, u64)> =
+                snap.harts.iter().map(|h| (h.cycle, h.instret)).collect();
+            match &baseline {
+                None => {
+                    let (cyc, ret) = cycles[0];
+                    if ret > 0 {
+                        let cpi = cyc as f64 / ret as f64;
+                        if !(0.2..=10.0).contains(&cpi) {
+                            return Err(div(
+                                seed,
+                                label,
+                                format!(
+                                    "implausible CPI {:.2} ({} cycles / {} insts)",
+                                    cpi, cyc, ret
+                                ),
+                            ));
+                        }
+                    }
+                    baseline = Some(cycles);
+                }
+                Some(base) => {
+                    if *base != cycles {
+                        return Err(div(
+                            seed,
+                            label,
+                            format!(
+                                "rerun {} not bit-identical: {:?} vs {:?}",
+                                rerun, base, cycles
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
     }
     Ok(())
 }
@@ -770,6 +881,27 @@ mod tests {
         }
         let mut cfg = DiffConfig::new(1);
         cfg.backend = crate::dbt::Backend::Native;
+        run_seed(1, &cfg, BugInjection::None).unwrap();
+    }
+
+    #[test]
+    fn o3_single_hart_smoke_seed() {
+        // Dynamic-tier pipeline: architectural end state must still be
+        // exact vs the reference, and the o3 band (CPI plausibility +
+        // 3x-rerun bit-identical cycles) must hold.
+        let mut cfg = DiffConfig::new(1);
+        cfg.pipeline = "o3".into();
+        run_seed(1, &cfg, BugInjection::None).unwrap();
+    }
+
+    #[test]
+    fn o3_dual_hart_smoke_seed() {
+        // Multi-hart o3 also covers the serialized 2-shard sharded engine
+        // in the dynamic band (rerun determinism of the sharded driver's
+        // dynamic-tier charge paths at quantum 1).
+        let mut cfg = DiffConfig::new(2);
+        cfg.pipeline = "o3".into();
+        cfg.check_cycles = true;
         run_seed(1, &cfg, BugInjection::None).unwrap();
     }
 

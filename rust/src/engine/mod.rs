@@ -57,6 +57,10 @@ pub struct EngineStats {
     /// warm-start [`crate::dbt::CodeSeed`] instead of translating
     /// (fleet mode).
     pub seed_hits: u64,
+    /// Block entries by dynamic-tier harts under `--backend native` that
+    /// fell back to the micro-op backend (the retire hook is only driven
+    /// by the step loop; see DESIGN.md §14).
+    pub dyn_native_fallbacks: u64,
 }
 
 impl EngineStats {
@@ -70,6 +74,7 @@ impl EngineStats {
         self.chain_misses += other.chain_misses;
         self.retranslations += other.retranslations;
         self.seed_hits += other.seed_hits;
+        self.dyn_native_fallbacks += other.dyn_native_fallbacks;
     }
 
     /// Fraction of block entries served by chain-following dispatch.
@@ -276,14 +281,11 @@ pub fn memory_model_by_code(
     }
 }
 
-/// Pipeline-model name from its SIMCTRL code.
+/// Pipeline-model name from its SIMCTRL code (delegates to the model
+/// registry — `pipeline::MODELS` is the single source of truth for
+/// names, aliases and codes).
 pub fn pipeline_name_by_code(code: u64) -> Option<&'static str> {
-    match code {
-        1 => Some("atomic"),
-        2 => Some("simple"),
-        3 => Some("inorder"),
-        _ => None,
-    }
+    crate::pipeline::name_by_code(code)
 }
 
 /// Memory-model name from its SIMCTRL code.
@@ -360,6 +362,7 @@ mod tests {
     #[test]
     fn code_lookups() {
         assert_eq!(pipeline_name_by_code(3), Some("inorder"));
+        assert_eq!(pipeline_name_by_code(4), Some("o3"));
         assert_eq!(pipeline_name_by_code(0), None);
         assert_eq!(memory_name_by_code(4), Some("mesi"));
         assert_eq!(memory_name_by_code(7), None);

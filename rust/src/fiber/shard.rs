@@ -31,7 +31,7 @@ use crate::isa::csr::{
 };
 use crate::mem::mmu::{translate as mmu_translate, AccessKind};
 use crate::obs::EventKind;
-use crate::pipeline::PipelineModel;
+use crate::pipeline::{PipelineModel, RetireInfo, Tier};
 use crate::sys::exec::{cold_fetch, exec_op, Flow};
 use crate::sys::hart::{Hart, Trap};
 use crate::sys::{handle_ecall, System};
@@ -44,6 +44,12 @@ struct Cont {
     step: u32,
     /// `true` when resuming *at* a sync point whose yield already happened.
     resumed: bool,
+    /// Dynamic-tier high-water mark: number of leading `dtrace`
+    /// descriptors already charged through `retire_trace`. The charge
+    /// sites are idempotent because of this marker (charging a prefix
+    /// then the remainder equals one full charge — the incremental
+    /// invariant the dynamic tier guarantees).
+    charged: u32,
     /// Chain-followed successor to enter at the next block boundary
     /// (NO_CHAIN = none), read from the finished block's chain link.
     next: BlockId,
@@ -68,6 +74,7 @@ impl Cont {
             block: NO_CHAIN,
             step: 0,
             resumed: false,
+            charged: 0,
             next: NO_CHAIN,
             next_gen: 0,
             next_direct: false,
@@ -81,6 +88,7 @@ impl Cont {
         self.block = NO_CHAIN;
         self.step = 0;
         self.resumed = false;
+        self.charged = 0;
     }
 
     /// Drop the recorded exit edge (redirects, traps, flushes): neither
@@ -123,6 +131,10 @@ pub struct ShardCore {
     /// Nominal clock (1 cycle/instruction) for harts whose pipeline model
     /// does not track cycles (atomic).
     nominal: Vec<bool>,
+    /// Dynamic-tier harts (DESIGN.md §14): translation bakes no cycles;
+    /// the block's descriptor trace is charged through the model's
+    /// `retire_trace` hook as instructions retire.
+    dynamic: Vec<bool>,
     /// Global hart id of `harts[0]`.
     pub base: usize,
     /// A1 ablation: yield after every instruction instead of batching to
@@ -160,12 +172,14 @@ impl ShardCore {
             .map(|_| crate::pipeline::by_name(pipeline).expect("unknown pipeline model"))
             .collect();
         let nominal = pipelines.iter().map(|p| !p.tracks_cycles()).collect();
+        let dynamic = pipelines.iter().map(|p| p.tier() == Tier::Dynamic).collect();
         ShardCore {
             harts: (0..count).map(|l| Hart::new(base + l)).collect(),
             caches: (0..count).map(|_| CodeCache::new()).collect(),
             pipelines,
             conts: (0..count).map(|_| Cont::new()).collect(),
             nominal,
+            dynamic,
             base,
             yield_per_instruction: false,
             chaining: true,
@@ -203,10 +217,12 @@ impl ShardCore {
     /// blocks were translated under different inputs.
     pub fn build_code_seed(&self, sys: &System) -> crate::dbt::CodeSeed {
         let pipeline = self.pipelines[0].name();
+        let digest = self.pipelines[0].config_digest();
         let line_shift = sys.l0[self.base].i.line_shift();
-        let mut seed = crate::dbt::CodeSeed::new(pipeline, line_shift);
+        let mut seed = crate::dbt::CodeSeed::new(pipeline, digest, line_shift);
         for (l, cache) in self.caches.iter().enumerate() {
             if self.pipelines[l].name() == pipeline
+                && self.pipelines[l].config_digest() == digest
                 && sys.l0[self.base + l].i.line_shift() == line_shift
             {
                 cache.fold_into_seed(&mut seed);
@@ -216,8 +232,8 @@ impl ShardCore {
     }
 
     /// Install a shared warm-start seed into every cache whose translation
-    /// inputs (pipeline model, L0 I-cache line shift) match the seed's
-    /// stamps; mismatched caches are simply left cold — a block translated
+    /// inputs (pipeline model + its configuration digest, L0 I-cache line
+    /// shift) match the seed's stamps; mismatched caches are simply left cold — a block translated
     /// under other inputs would carry the wrong cycle costs.
     pub fn install_code_seed(
         &mut self,
@@ -226,6 +242,7 @@ impl ShardCore {
     ) {
         for (l, cache) in self.caches.iter_mut().enumerate() {
             if self.pipelines[l].name() == seed.pipeline
+                && self.pipelines[l].config_digest() == seed.model_digest
                 && sys.l0[self.base + l].i.line_shift() == seed.line_shift
             {
                 cache.set_seed(std::sync::Arc::clone(seed));
@@ -314,10 +331,18 @@ impl ShardCore {
             // Native compilation happens on the chain-miss path only: a
             // chain-followed entry means both blocks were entered this
             // way before, so the native code (when enabled) exists.
+            // Dynamic-tier harts never compile: their timing lives in the
+            // runtime retire hook, which only the micro-op step loop
+            // invokes — they fall back with an explicit counter.
             #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
             if self.backend == crate::dbt::Backend::Native {
-                self.caches[l].native.dump_pc = self.dump_native;
-                self.caches[l].ensure_native(id, sys.l0[g].d.line_shift());
+                if self.dynamic[l] {
+                    self.stats.dyn_native_fallbacks += 1;
+                } else {
+                    self.caches[l].native.dump_pc = self.dump_native;
+                    let digest = self.pipelines[l].config_digest();
+                    self.caches[l].ensure_native(id, sys.l0[g].d.line_shift(), digest);
+                }
             }
             // Eager link installation: the edge we just resolved becomes
             // chain-followable from its source block's next exit, whether
@@ -350,8 +375,9 @@ impl ShardCore {
                 }
                 self.caches[l].replace(id, block);
                 #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
-                if self.backend == crate::dbt::Backend::Native {
-                    self.caches[l].ensure_native(id, sys.l0[g].d.line_shift());
+                if self.backend == crate::dbt::Backend::Native && !self.dynamic[l] {
+                    let digest = self.pipelines[l].config_digest();
+                    self.caches[l].ensure_native(id, sys.l0[g].d.line_shift(), digest);
                 }
             }
         }
@@ -391,10 +417,46 @@ impl ShardCore {
         hart.cycle += std::mem::take(&mut hart.pending);
     }
 
+    /// Charge local hart `l`'s retired-but-uncharged step descriptors
+    /// through its dynamic-tier retire hook (no-op for static harts).
+    ///
+    /// Idempotent via `Cont::charged`, and called from every path that may
+    /// flush the code-cache arena (trap delivery, mid-block invalidation,
+    /// sibling writeback) *before* the flush — `CodeCache::flush` destroys
+    /// the block and its descriptor trace with it.
+    fn dyn_charge_steps(&mut self, l: usize) {
+        if !self.dynamic[l] || self.conts[l].block == NO_CHAIN {
+            return;
+        }
+        let id = self.conts[l].block;
+        let from = self.conts[l].charged as usize;
+        let to = self.conts[l].step as usize;
+        if to <= from {
+            return;
+        }
+        let block = self.caches[l].block(id);
+        debug_assert_eq!(block.dtrace.len(), block.steps.len() + 1);
+        let info = RetireInfo { block_start: block.start, has_term: false, taken: false, next_pc: 0 };
+        let delta = self.pipelines[l].retire_trace(&block.dtrace[from..to], &info);
+        if self.profile {
+            let p = &block.prof;
+            p.cycles.set(p.cycles.get() + delta);
+        }
+        self.conts[l].charged = to as u32;
+        self.harts[l].pending += delta;
+    }
+
     /// Handle a trap raised during execution, including environment-call
     /// emulation. `npc` = address after the trapping instruction.
     fn deliver_trap(&mut self, sys: &mut System, l: usize, trap: Trap, pc: u64, npc: u64) {
         let g = self.base + l;
+        // Dynamic tier: charge what retired before the trap while the
+        // block (and its descriptor trace) is still alive, then tell the
+        // model the fetch stream is redirected off the recorded path.
+        self.dyn_charge_steps(l);
+        if self.dynamic[l] {
+            self.pipelines[l].on_redirect();
+        }
         let prv_before = self.harts[l].prv;
         let hart = &mut self.harts[l];
         let is_ecall = matches!(trap.cause, EXC_ECALL_U | EXC_ECALL_S | EXC_ECALL_M);
@@ -498,6 +560,7 @@ impl ShardCore {
             let name = pipeline_name_by_code(pm).unwrap_or("simple");
             if let Some(model) = crate::pipeline::by_name(name) {
                 self.nominal[l] = !model.tracks_cycles();
+                self.dynamic[l] = model.tier() == Tier::Dynamic;
                 self.pipelines[l] = model;
                 self.caches[l].flush();
                 self.conts[l].clear_chain();
@@ -576,6 +639,9 @@ impl ShardCore {
             if skip == Some(o) || self.conts[o].block == NO_CHAIN {
                 continue;
             }
+            // Dynamic tier: the caller is about to clear the arena this
+            // continuation points into; settle the retired prefix first.
+            self.dyn_charge_steps(o);
             let block = self.caches[o].block(self.conts[o].block);
             let si = self.conts[o].step as usize;
             let pc_off =
@@ -699,6 +765,9 @@ impl ShardCore {
             // wake-up path must not depend on that).
             self.conts[l].clear();
             self.conts[l].clear_chain();
+            if self.dynamic[l] {
+                self.pipelines[l].on_redirect();
+            }
         }
 
         // ---- block boundary ------------------------------------------------
@@ -715,6 +784,9 @@ impl ShardCore {
                 // interrupted PC): translations are privilege-keyed and a
                 // chained entry skips that check.
                 self.conts[l].clear_chain();
+                if self.dynamic[l] {
+                    self.pipelines[l].on_redirect();
+                }
             }
             match self.enter_block(sys, l) {
                 Ok(id) => {
@@ -752,6 +824,7 @@ impl ShardCore {
         #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
         let native_ok = self.backend == crate::dbt::Backend::Native
             && !self.yield_per_instruction
+            && !self.dynamic[l]
             && sys.trace.is_none()
             && !sys.force_cold;
 
@@ -941,17 +1014,26 @@ impl ShardCore {
                     }
                     retired_in_slice += 1;
                     self.conts[l].step += 1;
-                    if step.sync && self.harts[l].effects.any() && self.process_effects(sys, l) {
-                        // Current translation flushed mid-block: resume at
-                        // the next instruction through a fresh lookup.
-                        self.harts[l].pc = npc;
-                        self.conts[l].clear();
-                        self.conts[l].clear_chain();
-                        if self.nominal[l] {
-                            self.harts[l].pending += retired_in_slice;
+                    if step.sync && self.harts[l].effects.any() {
+                        // Dynamic tier: the effects may flush this very
+                        // translation — charge the retired prefix (this
+                        // sync step included) while the trace is alive.
+                        self.dyn_charge_steps(l);
+                        if self.process_effects(sys, l) {
+                            // Current translation flushed mid-block: resume
+                            // at the next instruction through a fresh lookup.
+                            self.harts[l].pc = npc;
+                            self.conts[l].clear();
+                            self.conts[l].clear_chain();
+                            if self.dynamic[l] {
+                                self.pipelines[l].on_redirect();
+                            }
+                            if self.nominal[l] {
+                                self.harts[l].pending += retired_in_slice;
+                            }
+                            self.yield_now(l);
+                            return Slice::Ran;
                         }
-                        self.yield_now(l);
-                        return Slice::Ran;
                     }
                 }
                 Err(trap) => {
@@ -1121,6 +1203,25 @@ impl ShardCore {
         hart.pc = next_pc;
         if prv_changed {
             sys.l0[g].clear();
+        }
+        // Dynamic tier: charge the rest of the descriptor trace — the
+        // terminator included, with its real outcome — through the retire
+        // hook. Baked terminator cycles are zero for dynamic translations,
+        // so the static charge above is inert. Must run before
+        // process_effects, which may flush the block out from under us.
+        if self.dynamic[l] {
+            let block = self.caches[l].block(id);
+            debug_assert_eq!(block.dtrace.len(), block.steps.len() + 1);
+            let from = (self.conts[l].charged as usize).min(block.dtrace.len());
+            let info =
+                RetireInfo { block_start: block.start, has_term: true, taken, next_pc };
+            let delta = self.pipelines[l].retire_trace(&block.dtrace[from..], &info);
+            if self.profile {
+                let p = &block.prof;
+                p.cycles.set(p.cycles.get() + delta);
+            }
+            self.conts[l].charged = block.dtrace.len() as u32;
+            self.harts[l].pending += delta;
         }
         if self.profile {
             // Terminator cycles charged here serve both backends — the

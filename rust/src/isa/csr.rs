@@ -46,7 +46,8 @@ pub const CSR_MINSTRET: u16 = 0xB02;
 /// Writing this CSR switches the hart's pipeline model / the system's
 /// memory model — and, via the engine field, the *execution engine*
 /// itself — at runtime. Layout (see `coordinator::simctrl_encoding`):
-///   bits [2:0]   pipeline model (0 = keep, 1 = atomic, 2 = simple, 3 = in-order)
+///   bits [2:0]   pipeline model (0 = keep, 1 = atomic, 2 = simple,
+///                3 = in-order, 4 = o3; codes come from `pipeline::MODELS`)
 ///   bits [6:4]   memory model   (0 = keep, 1 = atomic, 2 = tlb, 3 = cache, 4 = mesi)
 ///   bits [19:8]  cache-line size in bytes (0 = keep)
 ///   bits [22:20] execution engine (0 = keep, 1 = interp, 2 = lockstep,

@@ -84,6 +84,10 @@ cycle-level reference; see DESIGN.md \u{a7}8):
   --start N          first seed of the sweep (default 0)
   --seed X           check exactly one seed (overrides --seeds/--start)
   --harts H          harts per generated program (default 1)
+  --pipeline P       pipeline model for the DBT engines under test
+                     (default inorder; o3 swaps the reference cycle
+                     cross-check for the dynamic-tier band: CPI
+                     plausibility + 3x-rerun bit-identical cycles)
   --memory M         memory model for reference + serial engines
                      (default: atomic for 1 hart, mesi for >1)
   --max-insts N      per-engine instruction budget (default 2000000)
@@ -102,7 +106,9 @@ cycle-level reference; see DESIGN.md \u{a7}8):
 
 run options:
   --harts N          number of harts (default 1)
-  --pipeline M       atomic | simple | inorder (default simple)
+  --pipeline M       atomic | simple | inorder | o3 (default simple;
+                     o3 is the dynamic-tier out-of-order model,
+                     micro-op backend only — see DESIGN.md \u{a7}14)
   --memory M         atomic | tlb | cache | mesi (default atomic)
   --mode M           lockstep | parallel | interp | sharded (default lockstep)
   --backend B        DBT backend: microop (portable micro-op interpreter,
@@ -467,6 +473,7 @@ fn main() {
             let mut single: Option<u64> = None;
             let mut harts = 1usize;
             let mut memory: Option<String> = None;
+            let mut pipeline: Option<String> = None;
             let mut max_insts: Option<u64> = None;
             let mut cycle_tol: Option<f64> = None;
             let mut shrink = false;
@@ -518,6 +525,7 @@ fn main() {
                     "max-insts" => max_insts = Some(parse_num(key, it.next())),
                     "cycle-tol" => cycle_tol = Some(parse_num(key, it.next()) as f64 / 100.0),
                     "memory" => memory = Some(want_value(key, it.next())),
+                    "pipeline" => pipeline = Some(want_value(key, it.next())),
                     "backend" => {
                         let v = want_value(key, it.next());
                         match r2vm::dbt::Backend::parse(&v) {
@@ -557,6 +565,17 @@ fn main() {
                     usage();
                 }
                 cfg.memory = m;
+            }
+            if let Some(p) = pipeline {
+                if r2vm::pipeline::by_name(&p).is_none() {
+                    eprintln!(
+                        "unknown pipeline model '{}' ({})",
+                        p,
+                        r2vm::pipeline::model_names()
+                    );
+                    usage();
+                }
+                cfg.pipeline = p;
             }
             if let Some(n) = max_insts {
                 cfg.max_insts = n;

@@ -1,18 +1,176 @@
-//! Pipeline models (paper Table 1): Atomic / Simple / InOrder.
+//! Pipeline models (paper Table 1): Atomic / Simple / InOrder / O3.
 //!
-//! A pipeline model's hooks run at *translation* time (§3.2, Listing 1):
-//! they inspect each instruction as the DBT compiler translates it and call
-//! [`DbtCompiler::insert_cycle_count`] to bake the instruction's cycle cost
-//! into the micro-op trace. No model code runs during simulation.
+//! Timing models come in two tiers (DESIGN.md §14):
+//!
+//!  * **Static tier** — the paper's translation-time scheme (§3.2,
+//!    Listing 1): the model's hooks inspect each instruction as the DBT
+//!    compiler translates it and call
+//!    [`DbtCompiler::insert_cycle_count`] to bake the instruction's cycle
+//!    cost into the micro-op trace. No model code runs during simulation.
+//!    Atomic/Simple/InOrder are static and keep their exact pre-refactor
+//!    behaviour (bit-identical output).
+//!
+//!  * **Dynamic tier** — models whose state must evolve at *run* time
+//!    (out-of-order structures, history-based predictors). Translation
+//!    bakes no cycles; instead it records one compact [`InstDesc`] per
+//!    instruction into the block's descriptor trace, and the dispatch
+//!    loop invokes [`PipelineModel::retire_trace`] over the retired
+//!    descriptors. The contract is *incremental*: charging a prefix of a
+//!    block and later the remainder must cost exactly what one full call
+//!    would (the engine charges partial blocks at traps, pipeline
+//!    switches and engine hand-offs).
 
 use crate::dbt::compiler::DbtCompiler;
 use crate::isa::op::{MemWidth, MulOp, Op};
 
 pub mod inorder;
+pub mod o3;
 
 pub use inorder::InOrderModel;
+pub use o3::{O3Config, O3Model};
 
-/// Pipeline model hook interface (paper Listing 1).
+/// Which tier a model's timing runs in.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Tier {
+    /// Cycle costs baked into the translation; nothing runs at retire.
+    Static,
+    /// Translation records descriptors; `retire_trace` charges at run time.
+    Dynamic,
+}
+
+/// Coarse operation class of one instruction, as seen by dynamic-tier
+/// models. Chosen so a descriptor stays independent of the exact `Op`
+/// encoding (the trace is persisted in [`crate::dbt::CodeSeed`]s).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum OpClass {
+    /// Single-cycle integer op (incl. lui/auipc).
+    Alu,
+    /// Pipelined multiplier op.
+    Mul,
+    /// Unpipelined divider op.
+    Div,
+    /// Memory load (incl. lr).
+    Load,
+    /// Memory store.
+    Store,
+    /// Read-modify-write memory op (amo*/sc) — serializing.
+    Amo,
+    /// Conditional branch (always a block terminator in this DBT).
+    Branch,
+    /// Direct jump (jal).
+    Jump,
+    /// Indirect jump (jalr).
+    JumpInd,
+    /// CSR access — serializing.
+    Csr,
+    /// Fences, ecall/ebreak, *ret, wfi, sfence — serializing.
+    System,
+}
+
+/// One instruction of a dynamic-tier block trace: just enough to rebuild
+/// data dependencies, memory identity and control behaviour at retire
+/// time. Register 0 means "none" (x0 is never a real dependency).
+#[derive(Clone, Copy, Debug)]
+pub struct InstDesc {
+    pub class: OpClass,
+    /// Destination register (0 = none).
+    pub rd: u8,
+    /// First source register (0 = none).
+    pub rs1: u8,
+    /// Second source register (0 = none).
+    pub rs2: u8,
+    /// Access width for Load/Store/Amo (meaningless otherwise).
+    pub width: MemWidth,
+    /// Immediate: address offset for memory ops, branch/jump displacement
+    /// for control ops (static address proxy for the LSQ, static target
+    /// for the predictor).
+    pub imm: i32,
+    /// Offset of this instruction from the block start PC.
+    pub pc_off: u16,
+    /// Encoded length in bytes (2 or 4) — return-address arithmetic for
+    /// the RAS.
+    pub len: u8,
+}
+
+impl InstDesc {
+    pub fn from_op(op: &Op, pc_off: u16, len: u8) -> InstDesc {
+        let (s1, s2) = op.srcs();
+        let mut d = InstDesc {
+            class: OpClass::System,
+            rd: op.rd().unwrap_or(0),
+            rs1: s1.unwrap_or(0),
+            rs2: s2.unwrap_or(0),
+            width: MemWidth::D,
+            imm: 0,
+            pc_off,
+            len,
+        };
+        match *op {
+            Op::Lui { .. } | Op::Auipc { .. } | Op::Alu { .. } | Op::AluImm { .. } => {
+                d.class = OpClass::Alu;
+            }
+            Op::Mul { op: mop, .. } => {
+                d.class = match mop {
+                    MulOp::Mul | MulOp::Mulh | MulOp::Mulhsu | MulOp::Mulhu => OpClass::Mul,
+                    MulOp::Div | MulOp::Divu | MulOp::Rem | MulOp::Remu => OpClass::Div,
+                };
+            }
+            Op::Load { width, imm, .. } => {
+                d.class = OpClass::Load;
+                d.width = width;
+                d.imm = imm;
+            }
+            Op::Store { width, imm, .. } => {
+                d.class = OpClass::Store;
+                d.width = width;
+                d.imm = imm;
+            }
+            Op::Lr { width, .. } => {
+                d.class = OpClass::Load;
+                d.width = width;
+            }
+            Op::Sc { width, .. } | Op::Amo { width, .. } => {
+                d.class = OpClass::Amo;
+                d.width = width;
+            }
+            Op::Branch { imm, .. } => {
+                d.class = OpClass::Branch;
+                d.imm = imm;
+            }
+            Op::Jal { imm, .. } => {
+                d.class = OpClass::Jump;
+                d.imm = imm;
+            }
+            Op::Jalr { imm, .. } => {
+                d.class = OpClass::JumpInd;
+                d.imm = imm;
+            }
+            Op::Csr { .. } => d.class = OpClass::Csr,
+            _ => d.class = OpClass::System,
+        }
+        d
+    }
+}
+
+/// Context for one `retire_trace` call.
+#[derive(Clone, Copy, Debug)]
+pub struct RetireInfo {
+    /// PC of the block's first instruction (descriptor PCs are
+    /// `block_start + pc_off`).
+    pub block_start: u64,
+    /// Whether the last descriptor is the block terminator. `false` when
+    /// the engine charges a partial block (trap, reconfiguration).
+    pub has_term: bool,
+    /// Terminator outcome: did the control transfer take? (Only
+    /// meaningful with `has_term`.)
+    pub taken: bool,
+    /// Architectural next PC after the last retired descriptor (the
+    /// resolved branch/jump target; only meaningful with `has_term`).
+    pub next_pc: u64,
+}
+
+/// Pipeline model hook interface (paper Listing 1, extended with the
+/// dynamic tier).
 pub trait PipelineModel: Send {
     fn name(&self) -> &'static str;
 
@@ -34,6 +192,33 @@ pub trait PipelineModel: Send {
     /// simulation and parallel execution.)
     fn tracks_cycles(&self) -> bool {
         true
+    }
+
+    /// Which tier this model runs in. Dynamic models get a descriptor
+    /// trace recorded at translation and `retire_trace` calls at run time;
+    /// their static hooks must bake zero cycles.
+    fn tier(&self) -> Tier {
+        Tier::Static
+    }
+
+    /// Dynamic tier: charge cycles for `descs`, retired in program order.
+    /// Returns the cycle delta to add to the hart's clock. Must be
+    /// incremental: the model keeps persistent state, so charging a prefix
+    /// of a block and then the remainder equals one full-block call.
+    fn retire_trace(&mut self, _descs: &[InstDesc], _info: &RetireInfo) -> u64 {
+        0
+    }
+
+    /// Dynamic tier: the hart left the recorded path (trap delivery,
+    /// interrupt, pipeline reconfiguration) — squash in-flight speculative
+    /// state so the next trace starts from a redirected front end.
+    fn on_redirect(&mut self) {}
+
+    /// Digest of the model's timing-relevant parameters. Translated-code
+    /// seeds and native-code stamps include it, so two same-named models
+    /// with different parameters never share baked timing.
+    fn config_digest(&self) -> u64 {
+        0
     }
 }
 
@@ -78,14 +263,85 @@ impl PipelineModel for SimpleModel {
     }
 }
 
+/// One registry row: everything the rest of the system needs to know
+/// about a pipeline model — CLI names, the SIMCTRL code, the Table 1
+/// report line — so a new model cannot drift out of error messages,
+/// usage text or the encode/decode paths.
+pub struct ModelInfo {
+    /// Canonical CLI name (`--pipeline` value, seed stamp).
+    pub name: &'static str,
+    /// Accepted aliases.
+    pub aliases: &'static [&'static str],
+    /// SIMCTRL pipeline-field code (CSR 0x7C0 bits [2:0]; 0 = keep).
+    pub code: u64,
+    /// Display name for the `models` report (Table 1).
+    pub display: &'static str,
+    /// One-line summary for the `models` report.
+    pub summary: &'static str,
+    ctor: fn() -> Box<dyn PipelineModel>,
+}
+
+/// The single source of truth for pipeline-model names and codes.
+pub const MODELS: &[ModelInfo] = &[
+    ModelInfo {
+        name: "atomic",
+        aliases: &[],
+        code: 1,
+        display: "Atomic",
+        summary: "Cycle count not tracked",
+        ctor: || Box::new(AtomicPipeline),
+    },
+    ModelInfo {
+        name: "simple",
+        aliases: &[],
+        code: 2,
+        display: "Simple",
+        summary: "Each non-memory instruction takes one cycle",
+        ctor: || Box::<SimpleModel>::default(),
+    },
+    ModelInfo {
+        name: "inorder",
+        aliases: &["in-order"],
+        code: 3,
+        display: "InOrder",
+        summary: "Models a simple 5-stage in-order scalar pipeline",
+        ctor: || Box::<InOrderModel>::default(),
+    },
+    ModelInfo {
+        name: "o3",
+        aliases: &["ooo", "out-of-order"],
+        code: 4,
+        display: "O3",
+        summary: "Out-of-order superscalar: ROB, RAT, LSQ, gshare predictor (dynamic tier)",
+        ctor: || Box::<O3Model>::default(),
+    },
+];
+
 /// Factory by name (CLI / SIMCTRL reconfiguration).
 pub fn by_name(name: &str) -> Option<Box<dyn PipelineModel>> {
-    match name {
-        "atomic" => Some(Box::new(AtomicPipeline)),
-        "simple" => Some(Box::<SimpleModel>::default()),
-        "inorder" | "in-order" => Some(Box::<InOrderModel>::default()),
-        _ => None,
-    }
+    MODELS
+        .iter()
+        .find(|m| m.name == name || m.aliases.contains(&name))
+        .map(|m| (m.ctor)())
+}
+
+/// Canonical model names joined with `|` — the one string CLI help and
+/// error messages print.
+pub fn model_names() -> String {
+    MODELS.iter().map(|m| m.name).collect::<Vec<_>>().join("|")
+}
+
+/// SIMCTRL code → canonical name (0 = keep → None).
+pub fn name_by_code(code: u64) -> Option<&'static str> {
+    MODELS.iter().find(|m| m.code == code).map(|m| m.name)
+}
+
+/// Canonical (or aliased) name → SIMCTRL code (unknown → 0 = keep).
+pub fn code_by_name(name: &str) -> u64 {
+    MODELS
+        .iter()
+        .find(|m| m.name == name || m.aliases.contains(&name))
+        .map_or(0, |m| m.code)
 }
 
 /// Latency of a multiply/divide unit operation in the in-order model.
@@ -136,6 +392,114 @@ mod tests {
         assert!(by_name("atomic").is_some());
         assert!(by_name("simple").is_some());
         assert!(by_name("inorder").is_some());
-        assert!(by_name("o3").is_none());
+        assert!(by_name("o3").is_some());
+        assert!(by_name("warp9").is_none());
+    }
+
+    #[test]
+    fn registry_is_consistent() {
+        // Codes are unique, nonzero, and round-trip through the lookups.
+        for m in MODELS {
+            assert!(m.code != 0, "{}: 0 is the SIMCTRL keep code", m.name);
+            assert_eq!(name_by_code(m.code), Some(m.name));
+            assert_eq!(code_by_name(m.name), m.code);
+            for alias in m.aliases {
+                assert_eq!(code_by_name(alias), m.code);
+                assert!(by_name(alias).is_some());
+            }
+            assert_eq!(by_name(m.name).unwrap().name(), m.name);
+        }
+        assert_eq!(name_by_code(0), None);
+        assert_eq!(code_by_name("warp9"), 0);
+        assert_eq!(model_names(), "atomic|simple|inorder|o3");
+    }
+
+    #[test]
+    fn tiers_and_digests() {
+        // Static models: default tier, zero digest, no retire charge.
+        for name in ["atomic", "simple", "inorder"] {
+            let mut m = by_name(name).unwrap();
+            assert_eq!(m.tier(), Tier::Static, "{}", name);
+            assert_eq!(m.config_digest(), 0, "{}", name);
+            assert_eq!(m.retire_trace(&[], &RetireInfo {
+                block_start: 0,
+                has_term: false,
+                taken: false,
+                next_pc: 0,
+            }), 0);
+        }
+        let o3 = by_name("o3").unwrap();
+        assert_eq!(o3.tier(), Tier::Dynamic);
+        assert_ne!(o3.config_digest(), 0);
+    }
+
+    #[test]
+    fn inst_desc_classification() {
+        let d = InstDesc::from_op(
+            &Op::Load { width: MemWidth::W, signed: true, rd: 5, rs1: 2, imm: -8 },
+            4,
+            4,
+        );
+        assert_eq!(d.class, OpClass::Load);
+        assert_eq!((d.rd, d.rs1, d.rs2), (5, 2, 0));
+        assert_eq!(d.width, MemWidth::W);
+        assert_eq!(d.imm, -8);
+        assert_eq!(d.pc_off, 4);
+
+        let d = InstDesc::from_op(&Op::Store { width: MemWidth::D, rs1: 2, rs2: 7, imm: 16 }, 0, 4);
+        assert_eq!(d.class, OpClass::Store);
+        assert_eq!((d.rd, d.rs1, d.rs2), (0, 2, 7));
+
+        let d = InstDesc::from_op(
+            &Op::Mul { op: MulOp::Div, word: false, rd: 3, rs1: 1, rs2: 2 },
+            0,
+            4,
+        );
+        assert_eq!(d.class, OpClass::Div);
+        let d = InstDesc::from_op(
+            &Op::Mul { op: MulOp::Mulh, word: false, rd: 3, rs1: 1, rs2: 2 },
+            0,
+            4,
+        );
+        assert_eq!(d.class, OpClass::Mul);
+
+        let d = InstDesc::from_op(&Op::Jalr { rd: 0, rs1: 1, imm: 0 }, 8, 4);
+        assert_eq!(d.class, OpClass::JumpInd);
+        assert_eq!(d.rs1, 1);
+
+        let d = InstDesc::from_op(&Op::Branch { cond: crate::isa::BrCond::Ne, rs1: 4, rs2: 0, imm: -12 }, 12, 4);
+        assert_eq!(d.class, OpClass::Branch);
+        assert_eq!(d.imm, -12);
+
+        // x0 destinations are "none".
+        let d = InstDesc::from_op(&Op::Jal { rd: 0, imm: 64 }, 0, 2);
+        assert_eq!(d.rd, 0);
+        assert_eq!(d.class, OpClass::Jump);
+
+        assert_eq!(InstDesc::from_op(&Op::Ecall, 0, 4).class, OpClass::System);
+        assert_eq!(
+            InstDesc::from_op(
+                &Op::Csr { op: crate::isa::CsrOp::Rw, imm_form: false, rd: 1, rs1: 2, csr: 0x300 },
+                0,
+                4
+            )
+            .class,
+            OpClass::Csr
+        );
+        assert_eq!(
+            InstDesc::from_op(
+                &Op::Amo {
+                    op: crate::isa::AmoOp::Add,
+                    width: MemWidth::W,
+                    rd: 1,
+                    rs1: 2,
+                    rs2: 3
+                },
+                0,
+                4
+            )
+            .class,
+            OpClass::Amo
+        );
     }
 }

@@ -1,0 +1,144 @@
+//! Load-store queue: a ring of in-flight stores keyed by their *static*
+//! address proxy `(base register, offset, width)` — the only address
+//! identity a translation-recorded descriptor carries — plus a capacity
+//! ring over all memory operations mirroring the ROB occupancy scheme.
+//!
+//! Store-to-load forwarding: a load whose proxy exactly matches a younger-
+//! than-`lsq_size` store reads the store buffer instead of the D-cache
+//! (latency 1 instead of `load_use_latency`). The proxy is conservative in
+//! the *hit* direction only — two different dynamic addresses with the
+//! same `(reg, imm, width)` triple would alias — but in straight-line
+//! guest code the triple is exactly how compilers re-load a just-stored
+//! slot (spill/reload, struct field write-then-read), which is the case
+//! the forwarding path exists for.
+
+use crate::isa::op::MemWidth;
+
+#[derive(Clone, Copy)]
+struct StoreEntry {
+    rs1: u8,
+    imm: i32,
+    width: MemWidth,
+    /// Cycle at which the store's data is available to forward.
+    ready: u64,
+    valid: bool,
+}
+
+pub struct Lsq {
+    stores: Vec<StoreEntry>,
+    next: usize,
+    /// Completion cycles of the last `size` memory ops (capacity model).
+    complete: Vec<u64>,
+    mem_seq: u64,
+}
+
+impl Lsq {
+    pub fn new(size: usize) -> Lsq {
+        assert!(size > 0, "LSQ must hold at least one entry");
+        let nil = StoreEntry { rs1: 0, imm: 0, width: MemWidth::B, ready: 0, valid: false };
+        Lsq { stores: vec![nil; size], next: 0, complete: vec![0; size], mem_seq: 0 }
+    }
+
+    /// Earliest cycle the next memory op has a free LSQ slot.
+    pub fn dispatch_ready(&self) -> u64 {
+        if (self.mem_seq as usize) < self.complete.len() {
+            return 0;
+        }
+        self.complete[self.mem_seq as usize % self.complete.len()]
+    }
+
+    /// Account one memory op's completion (advances the capacity ring).
+    pub fn record_complete(&mut self, cycle: u64) {
+        let slot = self.mem_seq as usize % self.complete.len();
+        self.complete[slot] = cycle;
+        self.mem_seq += 1;
+    }
+
+    /// Enter a store into the forwarding window.
+    pub fn push_store(&mut self, rs1: u8, imm: i32, width: MemWidth, ready: u64) {
+        self.stores[self.next] = StoreEntry { rs1, imm, width, ready, valid: true };
+        self.next = (self.next + 1) % self.stores.len();
+    }
+
+    /// Probe the forwarding window: youngest store matching the load's
+    /// static address proxy. Returns the store's data-ready cycle.
+    pub fn forward(&self, rs1: u8, imm: i32, width: MemWidth) -> Option<u64> {
+        let n = self.stores.len();
+        for k in 1..=n {
+            // Walk youngest-first from the slot before `next`.
+            let e = &self.stores[(self.next + n - k) % n];
+            if e.valid && e.rs1 == rs1 && e.imm == imm && e.width == width {
+                return Some(e.ready);
+            }
+        }
+        None
+    }
+
+    /// Drop the forwarding window (redirect/serialization: the base
+    /// register may be rewritten, invalidating the static proxy).
+    pub fn flush_window(&mut self) {
+        self.stores.iter_mut().for_each(|e| e.valid = false);
+    }
+
+    pub fn reset(&mut self) {
+        self.flush_window();
+        self.complete.iter_mut().for_each(|c| *c = 0);
+        self.mem_seq = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_to_load_forwarding_matches_proxy() {
+        let mut lsq = Lsq::new(4);
+        lsq.push_store(2, 16, MemWidth::D, 100);
+        // Exact proxy match forwards the store's data-ready cycle.
+        assert_eq!(lsq.forward(2, 16, MemWidth::D), Some(100));
+        // Different offset, width or base register: no forward.
+        assert_eq!(lsq.forward(2, 8, MemWidth::D), None);
+        assert_eq!(lsq.forward(2, 16, MemWidth::W), None);
+        assert_eq!(lsq.forward(3, 16, MemWidth::D), None);
+    }
+
+    #[test]
+    fn youngest_matching_store_wins() {
+        let mut lsq = Lsq::new(4);
+        lsq.push_store(2, 0, MemWidth::D, 10);
+        lsq.push_store(2, 0, MemWidth::D, 50);
+        assert_eq!(lsq.forward(2, 0, MemWidth::D), Some(50));
+    }
+
+    #[test]
+    fn window_wraps_and_evicts_oldest() {
+        let mut lsq = Lsq::new(2);
+        lsq.push_store(1, 0, MemWidth::W, 5);
+        lsq.push_store(2, 0, MemWidth::W, 6);
+        lsq.push_store(3, 0, MemWidth::W, 7); // evicts rs1=1
+        assert_eq!(lsq.forward(1, 0, MemWidth::W), None);
+        assert_eq!(lsq.forward(2, 0, MemWidth::W), Some(6));
+        assert_eq!(lsq.forward(3, 0, MemWidth::W), Some(7));
+    }
+
+    #[test]
+    fn flush_window_clears_forwarding() {
+        let mut lsq = Lsq::new(4);
+        lsq.push_store(2, 0, MemWidth::D, 10);
+        lsq.flush_window();
+        assert_eq!(lsq.forward(2, 0, MemWidth::D), None);
+    }
+
+    #[test]
+    fn capacity_ring_constrains_like_rob() {
+        let mut lsq = Lsq::new(2);
+        assert_eq!(lsq.dispatch_ready(), 0);
+        lsq.record_complete(30);
+        lsq.record_complete(40);
+        // Third mem op reuses the first slot: blocked until cycle 30.
+        assert_eq!(lsq.dispatch_ready(), 30);
+        lsq.record_complete(50);
+        assert_eq!(lsq.dispatch_ready(), 40);
+    }
+}

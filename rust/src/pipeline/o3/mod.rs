@@ -1,0 +1,569 @@
+//! `O3` pipeline model: a parameterized out-of-order superscalar core,
+//! run in the *dynamic* timing tier (DESIGN.md §14). Translation records
+//! an [`InstDesc`] per instruction; this model replays the retired
+//! descriptor stream through an analytic pipeline — per instruction it
+//! computes fetch → dispatch → issue → complete → in-order retire cycles
+//! against persistent structures:
+//!
+//!  * fetch: `fetch_width` instructions per cycle, groups broken at taken
+//!    control transfers, front end redirected on mispredictions;
+//!  * dispatch: bounded by ROB occupancy ([`rob::Rob`]), issue-queue
+//!    occupancy and LSQ capacity ([`lsq::Lsq`]);
+//!  * issue: operands from the register alias table ([`rat::Rat`]),
+//!    structural contention on per-class ports (ALU / memory / mul-div,
+//!    divider unpipelined) reusing `muldiv_latency`/`load_use_latency`;
+//!  * loads probe the LSQ store window for store-to-load forwarding;
+//!  * retire: `retire_width` per cycle, in program order — the hart's
+//!    cycle delta is the movement of the retire frontier;
+//!  * control: gshare + BTB + RAS ([`bpred::Bpred`]); mispredictions
+//!    redirect fetch at `complete + mispredict_penalty`.
+//!
+//! The model is a pure function of the retired descriptor stream, so
+//! cycle counts are deterministic across reruns and shard counts (the
+//! stream per hart is interleave-independent).
+
+pub mod bpred;
+pub mod lsq;
+pub mod rat;
+pub mod rob;
+
+use super::{
+    load_use_latency, muldiv_latency, InstDesc, OpClass, PipelineModel, RetireInfo, Tier,
+};
+use crate::dbt::compiler::DbtCompiler;
+use crate::isa::op::{MulOp, Op};
+
+/// Microarchitectural parameters. Defaults sketch a mid-size 4-wide core
+/// (Rocket-BOOM-ish proportions; the validation methodology follows
+/// "Towards Accurate Performance Modeling of RISC-V Designs").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct O3Config {
+    /// Instructions fetched per cycle.
+    pub fetch_width: u32,
+    /// Instructions retired per cycle.
+    pub retire_width: u32,
+    /// Fetch-to-dispatch depth in cycles (decode/rename stages).
+    pub frontend_depth: u32,
+    /// Reorder-buffer entries.
+    pub rob_size: usize,
+    /// Issue-queue entries (unified scheduler window).
+    pub iq_size: usize,
+    /// Load-store-queue entries.
+    pub lsq_size: usize,
+    /// Single-cycle integer issue ports.
+    pub alu_ports: usize,
+    /// Load/store issue ports.
+    pub mem_ports: usize,
+    /// Multiply/divide issue ports.
+    pub muldiv_ports: usize,
+    /// gshare history length (counter table holds `2^ghr_bits`).
+    pub ghr_bits: u32,
+    /// Direct-mapped BTB entries.
+    pub btb_entries: usize,
+    /// Return-address-stack depth.
+    pub ras_depth: usize,
+    /// Front-end redirect penalty on a mispredicted branch (cycles from
+    /// branch completion to the first correct-path fetch).
+    pub mispredict_penalty: u32,
+}
+
+impl Default for O3Config {
+    fn default() -> O3Config {
+        O3Config {
+            fetch_width: 4,
+            retire_width: 4,
+            frontend_depth: 3,
+            rob_size: 64,
+            iq_size: 32,
+            lsq_size: 24,
+            alu_ports: 4,
+            mem_ports: 2,
+            muldiv_ports: 1,
+            ghr_bits: 10,
+            btb_entries: 256,
+            ras_depth: 8,
+            mispredict_penalty: 8,
+        }
+    }
+}
+
+impl O3Config {
+    /// FNV-1a over every timing-relevant parameter (plus a schema salt):
+    /// the stamp that keeps differently-parameterized o3 instances from
+    /// sharing seeded or native-compiled code.
+    pub fn digest(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= u64::from(b);
+                h = h.wrapping_mul(0x1000_0000_01b3);
+            }
+        };
+        mix(1); // schema version of the digest itself
+        mix(self.fetch_width.into());
+        mix(self.retire_width.into());
+        mix(self.frontend_depth.into());
+        mix(self.rob_size as u64);
+        mix(self.iq_size as u64);
+        mix(self.lsq_size as u64);
+        mix(self.alu_ports as u64);
+        mix(self.mem_ports as u64);
+        mix(self.muldiv_ports as u64);
+        mix(self.ghr_bits.into());
+        mix(self.btb_entries as u64);
+        mix(self.ras_depth as u64);
+        mix(self.mispredict_penalty.into());
+        h
+    }
+}
+
+/// RISC-V link-register calling-convention hint (x1/x5).
+fn is_link(reg: u8) -> bool {
+    reg == 1 || reg == 5
+}
+
+pub struct O3Model {
+    cfg: O3Config,
+    digest: u64,
+    /// Global retired-instruction sequence number.
+    seq: u64,
+    /// Retire frontier already reported to the engine.
+    watermark: u64,
+    /// Earliest cycle the front end may fetch the next instruction.
+    fetch_ready: u64,
+    fetch_cycle: u64,
+    fetch_in_cycle: u32,
+    last_retire: u64,
+    retire_in_cycle: u32,
+    rob: rob::Rob,
+    /// Issue-queue occupancy ring (issue cycles by sequence number).
+    iq: Vec<u64>,
+    rat: rat::Rat,
+    lsq: lsq::Lsq,
+    bpred: bpred::Bpred,
+    alu_free: Vec<u64>,
+    mem_free: Vec<u64>,
+    muldiv_free: Vec<u64>,
+}
+
+impl Default for O3Model {
+    fn default() -> O3Model {
+        O3Model::with_config(O3Config::default())
+    }
+}
+
+impl O3Model {
+    pub fn with_config(cfg: O3Config) -> O3Model {
+        O3Model {
+            digest: cfg.digest(),
+            seq: 0,
+            watermark: 0,
+            fetch_ready: 0,
+            fetch_cycle: 0,
+            fetch_in_cycle: 0,
+            last_retire: 0,
+            retire_in_cycle: 0,
+            rob: rob::Rob::new(cfg.rob_size),
+            iq: vec![0; cfg.iq_size.max(1)],
+            rat: rat::Rat::default(),
+            lsq: lsq::Lsq::new(cfg.lsq_size),
+            bpred: bpred::Bpred::new(cfg.ghr_bits, cfg.btb_entries, cfg.ras_depth),
+            alu_free: vec![0; cfg.alu_ports.max(1)],
+            mem_free: vec![0; cfg.mem_ports.max(1)],
+            muldiv_free: vec![0; cfg.muldiv_ports.max(1)],
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &O3Config {
+        &self.cfg
+    }
+
+    /// Branch-predictor accuracy counters (lookups, mispredicts).
+    pub fn bpred_stats(&self) -> (u64, u64) {
+        (self.bpred.lookups, self.bpred.mispredicts)
+    }
+
+    /// Claim the earliest-free port of `ports` no earlier than `ready`;
+    /// the port stays busy for `occupy` cycles (1 = fully pipelined).
+    fn claim_port(ports: &mut [u64], ready: u64, occupy: u64) -> u64 {
+        let mut best = 0;
+        for i in 1..ports.len() {
+            if ports[i] < ports[best] {
+                best = i;
+            }
+        }
+        let issue = ready.max(ports[best]);
+        ports[best] = issue + occupy;
+        issue
+    }
+
+    /// Process one retired instruction; returns its retire cycle.
+    fn retire_one(&mut self, d: &InstDesc, pc: u64, term: Option<(bool, u64)>) -> u64 {
+        // --- fetch -----------------------------------------------------
+        if self.fetch_cycle < self.fetch_ready {
+            self.fetch_cycle = self.fetch_ready;
+            self.fetch_in_cycle = 0;
+        }
+        if self.fetch_in_cycle >= self.cfg.fetch_width {
+            self.fetch_cycle += 1;
+            self.fetch_in_cycle = 0;
+        }
+        let fetch = self.fetch_cycle;
+        self.fetch_in_cycle += 1;
+
+        // --- dispatch --------------------------------------------------
+        let mut dispatch = fetch + u64::from(self.cfg.frontend_depth);
+        dispatch = dispatch.max(self.rob.dispatch_ready(self.seq));
+        // Issue-queue occupancy: seq's IQ slot frees when seq - iq_size
+        // issued.
+        if self.seq as usize >= self.iq.len() {
+            dispatch = dispatch.max(self.iq[self.seq as usize % self.iq.len()]);
+        }
+        let is_mem = matches!(d.class, OpClass::Load | OpClass::Store | OpClass::Amo);
+        if is_mem {
+            dispatch = dispatch.max(self.lsq.dispatch_ready());
+        }
+        // Serializing classes drain the machine: dispatch only once every
+        // older instruction has retired.
+        let serializing = matches!(d.class, OpClass::Csr | OpClass::System | OpClass::Amo);
+        if serializing {
+            dispatch = dispatch.max(self.last_retire + 1);
+        }
+
+        // --- issue -----------------------------------------------------
+        let ready = dispatch.max(self.rat.ready(d.rs1)).max(self.rat.ready(d.rs2));
+        let (latency, issue) = match d.class {
+            OpClass::Alu | OpClass::Branch | OpClass::Jump | OpClass::JumpInd => {
+                (1, Self::claim_port(&mut self.alu_free, ready, 1))
+            }
+            OpClass::Mul => (
+                u64::from(muldiv_latency(MulOp::Mul)),
+                Self::claim_port(&mut self.muldiv_free, ready, 1),
+            ),
+            OpClass::Div => {
+                // Unpipelined divider: occupies its port for the full
+                // latency.
+                let lat = u64::from(muldiv_latency(MulOp::Div));
+                (lat, Self::claim_port(&mut self.muldiv_free, ready, lat))
+            }
+            OpClass::Load => {
+                let issue = Self::claim_port(&mut self.mem_free, ready, 1);
+                // Store-to-load forwarding: an exact static-proxy hit
+                // bypasses the D-cache (latency 1), and the data can be
+                // no earlier than the store produced it.
+                let lat = match self.lsq.forward(d.rs1, d.imm, d.width) {
+                    Some(store_ready) => 1 + store_ready.saturating_sub(issue),
+                    None => u64::from(load_use_latency(d.width)),
+                };
+                (lat, issue)
+            }
+            OpClass::Store | OpClass::Amo => {
+                let lat = if d.class == OpClass::Amo {
+                    u64::from(load_use_latency(d.width)) + 1
+                } else {
+                    1
+                };
+                (lat, Self::claim_port(&mut self.mem_free, ready, 1))
+            }
+            OpClass::Csr | OpClass::System => (1, ready),
+        };
+        let complete = issue + latency;
+        if is_mem {
+            self.lsq.record_complete(complete);
+            if d.class == OpClass::Store {
+                self.lsq.push_store(d.rs1, d.imm, d.width, complete);
+            } else if d.class == OpClass::Amo {
+                // RMW ops serialize the memory window anyway; their write
+                // invalidates any forwarding entry for the same proxy.
+                self.lsq.flush_window();
+            }
+        }
+        if d.rd != 0 {
+            self.rat.set(d.rd, complete);
+        }
+
+        // --- in-order retire, retire_width per cycle -------------------
+        let mut retire = complete.max(self.last_retire);
+        if retire == self.last_retire && self.retire_in_cycle >= self.cfg.retire_width {
+            retire += 1;
+        }
+        if retire == self.last_retire {
+            self.retire_in_cycle += 1;
+        } else {
+            self.retire_in_cycle = 1;
+        }
+        self.rob.record_retire(self.seq, retire);
+        self.iq[self.seq as usize % self.iq.len()] = issue;
+        self.last_retire = retire;
+        self.seq += 1;
+
+        // --- control flow at the block terminator ----------------------
+        if let Some((taken, next_pc)) = term {
+            let mut mispredict = false;
+            match d.class {
+                OpClass::Branch => {
+                    self.bpred.lookups += 1;
+                    mispredict = self.bpred.predict_branch(pc) != taken;
+                    self.bpred.update_branch(pc, taken);
+                }
+                OpClass::Jump => {
+                    // Direction and target are static: always predicted.
+                    if taken && is_link(d.rd) {
+                        self.bpred.push_ras(pc + u64::from(d.len));
+                    }
+                }
+                OpClass::JumpInd => {
+                    self.bpred.lookups += 1;
+                    let is_return = is_link(d.rs1) && !is_link(d.rd);
+                    let predicted = if is_return {
+                        self.bpred.pop_ras()
+                    } else {
+                        self.bpred.predict_target(pc)
+                    };
+                    mispredict = predicted != Some(next_pc);
+                    if !is_return {
+                        self.bpred.update_target(pc, next_pc);
+                    }
+                    if is_link(d.rd) {
+                        self.bpred.push_ras(pc + u64::from(d.len));
+                    }
+                }
+                _ => {}
+            }
+            if mispredict {
+                self.bpred.mispredicts += 1;
+                self.fetch_ready =
+                    self.fetch_ready.max(complete + u64::from(self.cfg.mispredict_penalty));
+            }
+            // A control transfer (or block end) closes the fetch group.
+            self.fetch_in_cycle = self.cfg.fetch_width;
+        }
+        if serializing {
+            // Younger instructions refetch after the serializing op
+            // completes.
+            self.fetch_ready = self.fetch_ready.max(complete + 1);
+            self.lsq.flush_window();
+        }
+        retire
+    }
+}
+
+impl PipelineModel for O3Model {
+    fn name(&self) -> &'static str {
+        "o3"
+    }
+
+    // Dynamic tier: the static hooks bake nothing.
+    fn after_instruction(&mut self, _compiler: &mut DbtCompiler, _op: &Op, _compressed: bool) {}
+
+    fn after_taken_branch(&mut self, _compiler: &mut DbtCompiler, _op: &Op, _compressed: bool) {}
+
+    fn tier(&self) -> Tier {
+        Tier::Dynamic
+    }
+
+    fn retire_trace(&mut self, descs: &[InstDesc], info: &RetireInfo) -> u64 {
+        for (i, d) in descs.iter().enumerate() {
+            let term = (info.has_term && i + 1 == descs.len())
+                .then_some((info.taken, info.next_pc));
+            self.retire_one(d, info.block_start + u64::from(d.pc_off), term);
+        }
+        // Everything retired is architectural now.
+        self.rat.commit();
+        let delta = self.last_retire - self.watermark;
+        self.watermark = self.last_retire;
+        delta
+    }
+
+    fn on_redirect(&mut self) {
+        // Precise trap/interrupt or reconfiguration: squash in-flight
+        // speculative state and restart the front end after a full
+        // redirect penalty.
+        self.rat.rollback_all();
+        self.bpred.flush_ras();
+        self.lsq.flush_window();
+        self.fetch_ready = self
+            .fetch_ready
+            .max(self.last_retire + u64::from(self.cfg.mispredict_penalty));
+        self.fetch_cycle = self.fetch_ready;
+        self.fetch_in_cycle = 0;
+    }
+
+    fn config_digest(&self) -> u64 {
+        self.digest
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::op::MemWidth;
+
+    fn alu(rd: u8, rs1: u8, rs2: u8) -> InstDesc {
+        InstDesc {
+            class: OpClass::Alu,
+            rd,
+            rs1,
+            rs2,
+            width: MemWidth::D,
+            imm: 0,
+            pc_off: 0,
+            len: 4,
+        }
+    }
+
+    fn seq_trace(n: usize) -> Vec<InstDesc> {
+        // Independent ALU ops at consecutive PCs.
+        (0..n)
+            .map(|i| {
+                let mut d = alu((1 + (i % 8)) as u8, 0, 0);
+                d.pc_off = (4 * i) as u16;
+                d
+            })
+            .collect()
+    }
+
+    fn info(term: bool) -> RetireInfo {
+        RetireInfo { block_start: 0x8000_0000, has_term: term, taken: false, next_pc: 0 }
+    }
+
+    #[test]
+    fn independent_alus_retire_superscalar() {
+        // 64 independent single-cycle ops on a 4-wide machine: the retire
+        // frontier should move ~16 cycles, far below 1 CPI.
+        let mut m = O3Model::default();
+        let delta = m.retire_trace(&seq_trace(64), &info(false));
+        assert!(delta >= 16, "delta {}", delta);
+        assert!(delta <= 32, "4-wide machine must beat scalar: {}", delta);
+    }
+
+    #[test]
+    fn dependent_chain_is_serial() {
+        // A dependency chain retires ~1 per cycle; it cannot beat the
+        // chain length no matter the width.
+        let mut m = O3Model::default();
+        let chain: Vec<InstDesc> = (0..64).map(|_| alu(5, 5, 0)).collect();
+        let delta = m.retire_trace(&chain, &info(false));
+        assert!(delta >= 64, "dependency chain bounds ILP: {}", delta);
+    }
+
+    #[test]
+    fn incremental_charging_matches_one_shot() {
+        // The retire_trace contract: prefix + remainder == full call.
+        let descs = seq_trace(32);
+        let mut full_info = info(true);
+        full_info.taken = true;
+        full_info.next_pc = 0x8000_0200;
+
+        let mut one = O3Model::default();
+        let full = one.retire_trace(&descs, &full_info);
+
+        let mut split = O3Model::default();
+        let a = split.retire_trace(&descs[..10], &info(false));
+        let b = split.retire_trace(&descs[10..], &full_info);
+        assert_eq!(full, a + b, "incremental charge must equal one-shot");
+    }
+
+    #[test]
+    fn mispredict_costs_more_than_predicted() {
+        let br = |taken| {
+            let mut d = alu(0, 3, 4);
+            d.class = OpClass::Branch;
+            d.pc_off = 0;
+            let mut i = info(true);
+            i.taken = taken;
+            i.next_pc = if taken { 0x7fff_ff00 } else { 0x8000_0004 };
+            (vec![d], i)
+        };
+        // Train a model until the branch is predicted taken, then compare
+        // a predicted iteration against a fresh model's mispredict.
+        let mut trained = O3Model::default();
+        let (descs, i_taken) = br(true);
+        for _ in 0..32 {
+            trained.retire_trace(&descs, &i_taken);
+        }
+        let predicted = trained.retire_trace(&descs, &i_taken);
+        let mut cold = O3Model::default();
+        let mispredicted = cold.retire_trace(&descs, &i_taken);
+        assert!(
+            mispredicted > predicted,
+            "mispredict {} must outweigh predicted {}",
+            mispredicted,
+            predicted
+        );
+        let (_, miss) = trained.bpred_stats();
+        assert!(miss > 0);
+    }
+
+    #[test]
+    fn store_load_forwarding_beats_cache_latency() {
+        let mk = |forwarded: bool| {
+            let mut st = alu(0, 2, 7);
+            st.class = OpClass::Store;
+            st.width = MemWidth::D;
+            st.imm = 16;
+            let mut ld = alu(8, 2, 0);
+            ld.class = OpClass::Load;
+            ld.width = MemWidth::D;
+            ld.imm = if forwarded { 16 } else { 64 };
+            ld.pc_off = 4;
+            // Consumer of the load, so the load latency lands on the
+            // retire frontier.
+            let mut use_ = alu(9, 8, 0);
+            use_.pc_off = 8;
+            vec![st, ld, use_]
+        };
+        let mut fwd = O3Model::default();
+        let hit = fwd.retire_trace(&mk(true), &info(false));
+        let mut cold = O3Model::default();
+        let miss = cold.retire_trace(&mk(false), &info(false));
+        assert!(hit <= miss, "forwarded load {} must not exceed cache path {}", hit, miss);
+    }
+
+    #[test]
+    fn divider_is_unpipelined_and_slow() {
+        let mut m = O3Model::default();
+        let mut div = alu(5, 1, 2);
+        div.class = OpClass::Div;
+        let delta = m.retire_trace(&[div, alu(6, 5, 0)], &info(false));
+        assert!(delta >= u64::from(muldiv_latency(MulOp::Div)), "delta {}", delta);
+    }
+
+    #[test]
+    fn redirect_monotone_and_penalized() {
+        let mut m = O3Model::default();
+        m.retire_trace(&seq_trace(8), &info(false));
+        let before = m.watermark;
+        m.on_redirect();
+        // The next instruction fetches after the redirect penalty.
+        let delta = m.retire_trace(&seq_trace(1), &info(false));
+        assert!(m.watermark >= before);
+        assert!(delta >= u64::from(m.cfg.mispredict_penalty), "delta {}", delta);
+    }
+
+    #[test]
+    fn digest_separates_configs() {
+        let a = O3Config::default();
+        let mut b = O3Config::default();
+        b.rob_size = 128;
+        assert_ne!(a.digest(), b.digest());
+        assert_eq!(a.digest(), O3Config::default().digest());
+        let model = O3Model::with_config(b);
+        assert_eq!(model.config_digest(), b.digest());
+    }
+
+    #[test]
+    fn determinism_same_stream_same_cycles() {
+        let descs = seq_trace(40);
+        let run = || {
+            let mut m = O3Model::default();
+            let mut total = 0;
+            for chunk in descs.chunks(7) {
+                total += m.retire_trace(chunk, &info(false));
+            }
+            total
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,111 @@
+//! Register alias table, reduced to what a trace-driven timing model
+//! needs: for each architectural register, the cycle at which its newest
+//! value is ready. Writes are journaled so a speculative window can be
+//! rolled back when the front end redirects (mispredicted branch, trap).
+
+pub struct Rat {
+    ready: [u64; 32],
+    /// (register, previous ready cycle) for every `set` since the last
+    /// `commit` — the rename-checkpoint restore path.
+    journal: Vec<(u8, u64)>,
+}
+
+impl Default for Rat {
+    fn default() -> Rat {
+        Rat { ready: [0; 32], journal: Vec::new() }
+    }
+}
+
+impl Rat {
+    /// Cycle at which `reg`'s value is ready (x0 is always ready).
+    pub fn ready(&self, reg: u8) -> u64 {
+        if reg == 0 {
+            return 0;
+        }
+        self.ready[reg as usize]
+    }
+
+    /// Rename `reg` to a result ready at `cycle` (journaled).
+    pub fn set(&mut self, reg: u8, cycle: u64) {
+        if reg == 0 {
+            return;
+        }
+        self.journal.push((reg, self.ready[reg as usize]));
+        self.ready[reg as usize] = cycle;
+    }
+
+    /// Checkpoint for a speculative window (a journal mark).
+    pub fn checkpoint(&self) -> usize {
+        self.journal.len()
+    }
+
+    /// Undo every `set` made since `mark`, youngest first — the redirect
+    /// recovery path.
+    pub fn rollback(&mut self, mark: usize) {
+        while self.journal.len() > mark {
+            let (reg, prev) = self.journal.pop().expect("journal underflow");
+            self.ready[reg as usize] = prev;
+        }
+    }
+
+    /// Retire the journal up to the present: the entries are architectural
+    /// now and can no longer be rolled back.
+    pub fn commit(&mut self) {
+        self.journal.clear();
+    }
+
+    /// Undo everything uncommitted (full pipeline flush).
+    pub fn rollback_all(&mut self) {
+        self.rollback(0);
+    }
+
+    pub fn reset(&mut self) {
+        self.ready = [0; 32];
+        self.journal.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rat_rollback_on_redirect() {
+        let mut rat = Rat::default();
+        rat.set(5, 10);
+        rat.set(6, 12);
+        rat.commit(); // architectural baseline
+        let mark = rat.checkpoint();
+        // Speculative window: rename r5 twice and r7 once.
+        rat.set(5, 20);
+        rat.set(5, 25);
+        rat.set(7, 30);
+        assert_eq!(rat.ready(5), 25);
+        assert_eq!(rat.ready(7), 30);
+        // Redirect: the window squashes back to the checkpoint.
+        rat.rollback(mark);
+        assert_eq!(rat.ready(5), 10, "nested renames unwind youngest-first");
+        assert_eq!(rat.ready(6), 12, "untouched registers keep their mapping");
+        assert_eq!(rat.ready(7), 0, "speculative first-writer restores to ready");
+        // A second rollback to the same mark is a no-op.
+        rat.rollback(mark);
+        assert_eq!(rat.ready(5), 10);
+    }
+
+    #[test]
+    fn x0_is_never_renamed() {
+        let mut rat = Rat::default();
+        rat.set(0, 99);
+        assert_eq!(rat.ready(0), 0);
+        assert_eq!(rat.checkpoint(), 0, "x0 writes leave no journal entry");
+    }
+
+    #[test]
+    fn commit_freezes_the_window() {
+        let mut rat = Rat::default();
+        rat.set(3, 7);
+        rat.commit();
+        rat.rollback_all();
+        assert_eq!(rat.ready(3), 7, "committed renames survive a flush");
+    }
+}

@@ -1,0 +1,72 @@
+//! Reorder buffer occupancy model: a ring of retire cycles indexed by the
+//! global retired-instruction sequence number. Instruction `seq` can only
+//! dispatch once instruction `seq - size` has retired and freed its entry.
+
+pub struct Rob {
+    retire: Vec<u64>,
+    size: usize,
+}
+
+impl Rob {
+    pub fn new(size: usize) -> Rob {
+        assert!(size > 0, "ROB must hold at least one instruction");
+        Rob { retire: vec![0; size], size }
+    }
+
+    /// Earliest cycle at which instruction `seq` has a free ROB entry:
+    /// the retire cycle of `seq - size` (0 while the ROB has never been
+    /// full — ring slots start at 0).
+    pub fn dispatch_ready(&self, seq: u64) -> u64 {
+        if (seq as usize) < self.size {
+            return 0;
+        }
+        self.retire[seq as usize % self.size]
+    }
+
+    /// Record `seq`'s retire cycle (call *after* `dispatch_ready(seq)` —
+    /// the slot being overwritten belongs to `seq - size`).
+    pub fn record_retire(&mut self, seq: u64, cycle: u64) {
+        let slot = seq as usize % self.size;
+        self.retire[slot] = cycle;
+    }
+
+    pub fn reset(&mut self) {
+        self.retire.iter_mut().for_each(|c| *c = 0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rob_wrap_constrains_dispatch() {
+        // 4-entry ROB: instruction N can dispatch only after N-4 retired.
+        let mut rob = Rob::new(4);
+        // First four instructions see no constraint.
+        for seq in 0..4u64 {
+            assert_eq!(rob.dispatch_ready(seq), 0, "seq {}", seq);
+            rob.record_retire(seq, 10 + seq);
+        }
+        // seq 4 reuses seq 0's slot: blocked until cycle 10.
+        assert_eq!(rob.dispatch_ready(4), 10);
+        rob.record_retire(4, 20);
+        // seq 5 blocked on seq 1 (cycle 11), not the fresher seq 4.
+        assert_eq!(rob.dispatch_ready(5), 11);
+        // Wrap all the way around again: seq 8 blocked on seq 4.
+        for seq in 5..8u64 {
+            rob.record_retire(seq, 30 + seq);
+        }
+        assert_eq!(rob.dispatch_ready(8), 20);
+    }
+
+    #[test]
+    fn reset_clears_occupancy() {
+        let mut rob = Rob::new(2);
+        rob.record_retire(0, 100);
+        rob.record_retire(1, 200);
+        assert_eq!(rob.dispatch_ready(2), 100);
+        rob.reset();
+        assert_eq!(rob.dispatch_ready(2), 0);
+    }
+}

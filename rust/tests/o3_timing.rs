@@ -1,0 +1,232 @@
+//! O3 dynamic-tier timing suite (DESIGN.md §14).
+//!
+//! The out-of-order model has no cycle-level reference implementation, so
+//! its contract is pinned structurally instead:
+//!
+//! * **Completion** — coremark and the 4-hart multicore workload run to
+//!   their exact architectural exits under `--pipeline o3`, with a
+//!   plausible CPI.
+//! * **Determinism** — `retire_trace` is a pure per-hart function of the
+//!   retired instruction stream, so reruns must be bit-identical and the
+//!   serialized sharded schedule (quantum 1, any shard count) must equal
+//!   lockstep exactly — cycles included.
+//! * **Static tier untouched** — the refactor must not change what the
+//!   static models compute: the architectural end state is independent of
+//!   the timing model, and only the timing differs.
+//! * **Digest-keyed code sharing** — warm-start seeds are stamped with the
+//!   model's configuration digest; a mismatched stamp must leave every
+//!   cache cold (two differently-parameterized o3 instances never share
+//!   baked timing).
+
+use r2vm::coordinator::{build_engine, EngineMode, SimConfig};
+use r2vm::engine::{ExecutionEngine, ExitReason};
+use r2vm::sys::Hart;
+use r2vm::workloads::{coremark, multicore};
+
+const BUDGET: u64 = 100_000_000;
+
+/// Everything a run can observably produce.
+struct EndState {
+    exit: ExitReason,
+    /// Per-hart (cycle, instret) from the suspended snapshot.
+    per_hart: Vec<(u64, u64)>,
+    model_stats: Vec<(&'static str, u64)>,
+    console: String,
+    harts: Vec<Hart>,
+}
+
+fn run_end_state(cfg: &SimConfig, img: &r2vm::asm::Image) -> EndState {
+    let mut eng = build_engine(cfg, img);
+    let exit = eng.run(BUDGET);
+    let model_stats = eng.model_stats();
+    let console = eng.console();
+    let snap = eng.suspend();
+    EndState {
+        exit,
+        per_hart: snap.harts.iter().map(|h| (h.cycle, h.instret)).collect(),
+        model_stats,
+        console,
+        harts: snap.harts,
+    }
+}
+
+fn o3_cfg(harts: usize, memory: &str) -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.harts = harts;
+    cfg.pipeline = "o3".into();
+    cfg.memory = memory.into();
+    cfg
+}
+
+fn sharded_cfg(base: &SimConfig, shards: usize, quantum: u64) -> SimConfig {
+    let mut cfg = base.clone();
+    cfg.mode = EngineMode::Sharded;
+    cfg.shards = shards;
+    cfg.quantum = quantum;
+    cfg
+}
+
+fn assert_bit_identical(a: &EndState, b: &EndState, ctx: &str) {
+    assert_eq!(a.exit, b.exit, "{}: exit", ctx);
+    assert_eq!(a.per_hart, b.per_hart, "{}: per-hart (cycle, instret)", ctx);
+    assert_eq!(a.model_stats, b.model_stats, "{}: model counters", ctx);
+    assert_eq!(a.console, b.console, "{}: console", ctx);
+    for (h, (x, y)) in a.harts.iter().zip(b.harts.iter()).enumerate() {
+        assert_eq!(x.regs, y.regs, "{}: hart {} registers", ctx, h);
+        assert_eq!(x.pc, y.pc, "{}: hart {} pc", ctx, h);
+        assert_eq!(x.instret, y.instret, "{}: hart {} instret", ctx, h);
+        assert_eq!(x.cycle, y.cycle, "{}: hart {} cycle", ctx, h);
+    }
+}
+
+fn assert_plausible_cpi(state: &EndState, ctx: &str) {
+    let (cyc, ret) = state.per_hart[0];
+    assert!(ret > 0, "{}: hart 0 retired nothing", ctx);
+    let cpi = cyc as f64 / ret as f64;
+    assert!(
+        (0.2..=10.0).contains(&cpi),
+        "{}: implausible CPI {:.2} ({} cycles / {} insts)",
+        ctx,
+        cpi,
+        cyc,
+        ret
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Completion + rerun determinism
+// ---------------------------------------------------------------------------
+
+#[test]
+fn coremark_o3_completes_and_reruns_bit_identical() {
+    let img = coremark::build(2);
+    let cfg = o3_cfg(1, "cache");
+    let first = run_end_state(&cfg, &img);
+    assert_eq!(first.exit, ExitReason::Exited(coremark::expected_checksum(2)));
+    assert_plausible_cpi(&first, "coremark o3");
+    for round in 1..3 {
+        let again = run_end_state(&cfg, &img);
+        assert_bit_identical(&first, &again, &format!("coremark o3 rerun {}", round));
+    }
+}
+
+#[test]
+fn multicore_4harts_o3_completes_and_reruns_bit_identical() {
+    let img = multicore::build(4, 300);
+    let cfg = o3_cfg(4, "mesi");
+    let first = run_end_state(&cfg, &img);
+    assert_eq!(first.exit, ExitReason::Exited(multicore::expected_sum(4, 300)));
+    assert_plausible_cpi(&first, "multicore o3");
+    let again = run_end_state(&cfg, &img);
+    assert_bit_identical(&first, &again, "multicore o3 rerun");
+}
+
+// ---------------------------------------------------------------------------
+// Sharded quantum-1 equivalence (the serialized schedule IS the lockstep
+// schedule; retire_trace purity makes o3 cycles follow it exactly)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn o3_sharded_q1_bit_identical_to_lockstep() {
+    let img = coremark::build(2);
+    let base = o3_cfg(1, "cache");
+    let fiber = run_end_state(&base, &img);
+    assert!(matches!(fiber.exit, ExitReason::Exited(_)));
+    let sharded = run_end_state(&sharded_cfg(&base, 1, 1), &img);
+    assert_bit_identical(&fiber, &sharded, "coremark o3 S=1 Q=1");
+
+    let img = multicore::build(4, 300);
+    let base = o3_cfg(4, "mesi");
+    let fiber = run_end_state(&base, &img);
+    assert_eq!(fiber.exit, ExitReason::Exited(multicore::expected_sum(4, 300)));
+    for shards in [1usize, 2, 4] {
+        let sharded = run_end_state(&sharded_cfg(&base, shards, 1), &img);
+        assert_bit_identical(&fiber, &sharded, &format!("multicore o3 S={} Q=1", shards));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Static tier untouched: architecture is model-independent, timing is not
+// ---------------------------------------------------------------------------
+
+#[test]
+fn o3_changes_timing_but_not_architecture() {
+    let img = coremark::build(2);
+    let inorder = run_end_state(
+        &{
+            let mut c = o3_cfg(1, "cache");
+            c.pipeline = "inorder".into();
+            c
+        },
+        &img,
+    );
+    let o3 = run_end_state(&o3_cfg(1, "cache"), &img);
+    assert_eq!(inorder.exit, o3.exit, "exit code is architectural");
+    assert_eq!(inorder.harts[0].regs, o3.harts[0].regs, "registers are architectural");
+    assert_eq!(
+        inorder.per_hart[0].1,
+        o3.per_hart[0].1,
+        "retired-instruction count is architectural"
+    );
+    assert_ne!(
+        inorder.per_hart[0].0,
+        o3.per_hart[0].0,
+        "a superscalar out-of-order core must not time like the scalar in-order pipe"
+    );
+    // And the static model itself stays deterministic under the refactor.
+    let again = run_end_state(
+        &{
+            let mut c = o3_cfg(1, "cache");
+            c.pipeline = "inorder".into();
+            c
+        },
+        &img,
+    );
+    assert_bit_identical(&inorder, &again, "inorder rerun");
+}
+
+// ---------------------------------------------------------------------------
+// Digest-keyed warm-start code sharing (fleet seeds)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn o3_code_seed_digest_gates_sharing() {
+    use std::sync::Arc;
+    let img = coremark::build(2);
+    let cfg = o3_cfg(1, "atomic");
+
+    let mut warm = build_engine(&cfg, &img);
+    let exit = warm.run(BUDGET);
+    assert!(matches!(exit, ExitReason::Exited(_)));
+    let reference = warm.per_hart();
+    let seed = warm.take_code_seed().expect("warm o3 caches must harvest a seed");
+    assert_eq!(seed.pipeline, "o3");
+    let live_digest = r2vm::pipeline::O3Config::default().digest();
+    assert_ne!(live_digest, 0);
+    assert_eq!(
+        seed.model_digest, live_digest,
+        "harvested seed must carry the live model's configuration digest"
+    );
+
+    // Matching stamps: the seed installs, serves translations, and the
+    // seeded run stays bit-identical to the warm one.
+    let mut seeded = build_engine(&cfg, &img);
+    seeded.set_code_seed(&seed);
+    assert_eq!(seeded.run(BUDGET), exit);
+    assert!(seeded.stats().seed_hits > 0, "matching digest must install and hit");
+    assert_eq!(seeded.per_hart(), reference, "seeded run must be bit-identical");
+
+    // Forged digest (a differently-parameterized o3): installation must be
+    // refused — caches stay cold, the run retranslates, results unchanged.
+    let forged = {
+        let fresh = warm.take_code_seed().expect("second harvest");
+        let mut owned = Arc::try_unwrap(fresh).ok().expect("sole owner of the fresh harvest");
+        owned.model_digest ^= 0x5eed;
+        Arc::new(owned)
+    };
+    let mut cold = build_engine(&cfg, &img);
+    cold.set_code_seed(&forged);
+    assert_eq!(cold.run(BUDGET), exit);
+    assert_eq!(cold.stats().seed_hits, 0, "mismatched digest must leave every cache cold");
+    assert_eq!(cold.per_hart(), reference);
+}
