@@ -104,6 +104,10 @@ pub struct Cell {
     /// Sharded-engine cells: (shards, quantum); `None` for every other
     /// engine (their JSON rows keep the pre-sharding schema).
     pub sharding: Option<(usize, u64)>,
+    /// `true` on the adaptive-quantum twin row (`--adaptive-quantum`
+    /// controller on, DESIGN.md §15); `false` everywhere else — the
+    /// fixed-quantum rows keep their exact pre-adaptive schema.
+    pub adaptive: bool,
     /// `Some("native")` on native-DBT-backend rows; `None` on the default
     /// micro-op rows, which keep their exact pre-native schema.
     pub backend: Option<&'static str>,
@@ -130,6 +134,7 @@ fn cell_label(
     memory: &str,
     lookup_dispatch: bool,
     sharding: Option<(usize, u64)>,
+    adaptive: bool,
     backend: Option<&str>,
     obs: Option<&str>,
 ) -> String {
@@ -143,7 +148,7 @@ fn cell_label(
         None => String::new(),
     };
     let shard = match sharding {
-        Some((s, q)) => format!("[s{},q{}]", s, q),
+        Some((s, q)) => format!("[s{},q{}{}]", s, q, if adaptive { ",aq" } else { "" }),
         None => String::new(),
     };
     format!(
@@ -161,6 +166,7 @@ impl Cell {
             self.memory,
             self.dispatch == "lookup",
             self.sharding,
+            self.adaptive,
             self.backend,
             self.obs,
         )
@@ -170,7 +176,9 @@ impl Cell {
     /// row distinct, in a fixed order shared with [`line_key`].
     pub fn key(&self) -> String {
         let shard = match self.sharding {
-            Some((s, q)) => format!("[s{},q{}]", s, q),
+            Some((s, q)) => {
+                format!("[s{},q{}{}]", s, q, if self.adaptive { ",aq" } else { "" })
+            }
             None => String::new(),
         };
         let traced = match self.obs {
@@ -217,6 +225,7 @@ fn run_cell(
     memory: &'static str,
     lookup_dispatch: bool,
     sharding: Option<(usize, u64)>,
+    adaptive: bool,
     backend: Option<&'static str>,
     traced: bool,
     runs: u32,
@@ -242,6 +251,9 @@ fn run_cell(
         cfg.shards = shards;
         cfg.quantum = quantum;
     }
+    // Adaptive twin: epoch controller on, bounds at their documented
+    // defaults — `sharding` seeds the starting quantum.
+    cfg.adaptive_quantum = adaptive;
     // Backstop so a regressed workload shows up as a truncated cell
     // instead of a hung bench (generous: every built-in workload retires
     // orders of magnitude less).
@@ -259,6 +271,7 @@ fn run_cell(
         dispatch,
         harts,
         sharding,
+        adaptive,
         backend,
         obs: traced.then_some("traced"),
         measurement: Measurement {
@@ -329,13 +342,14 @@ pub fn run_bench(opts: &BenchOptions) -> BenchReport {
             for backend in backends {
                 for &lookup in &variants {
                     match run_cell(
-                        workload, harts, mode, pipeline, memory, lookup, None, backend, false,
-                        runs, opts.quick,
+                        workload, harts, mode, pipeline, memory, lookup, None, false, backend,
+                        false, runs, opts.quick,
                     ) {
                         Some(cell) => cells.push(cell),
                         None => {
                             let label = cell_label(
-                                workload, mode, pipeline, memory, lookup, None, backend, None,
+                                workload, mode, pipeline, memory, lookup, None, false, backend,
+                                None,
                             );
                             eprintln!("warning: bench cell {} could not run (skipped)", label);
                             skipped.push(label);
@@ -350,8 +364,8 @@ pub fn run_bench(opts: &BenchOptions) -> BenchReport {
         // disabled-path "within noise" contract — is readable per PR.
         if workload == "coremark-lite" {
             match run_cell(
-                workload, harts, "lockstep", "simple", "atomic", false, None, None, true, runs,
-                opts.quick,
+                workload, harts, "lockstep", "simple", "atomic", false, None, false, None, true,
+                runs, opts.quick,
             ) {
                 Some(cell) => cells.push(cell),
                 None => {
@@ -362,6 +376,7 @@ pub fn run_bench(opts: &BenchOptions) -> BenchReport {
                         "atomic",
                         false,
                         None,
+                        false,
                         None,
                         Some("traced"),
                     );
@@ -379,13 +394,14 @@ pub fn run_bench(opts: &BenchOptions) -> BenchReport {
         if workload == "coremark-lite" {
             for &pipeline in &["inorder", "o3"] {
                 match run_cell(
-                    workload, harts, "lockstep", pipeline, "atomic", false, None, None, false,
-                    runs, opts.quick,
+                    workload, harts, "lockstep", pipeline, "atomic", false, None, false, None,
+                    false, runs, opts.quick,
                 ) {
                     Some(cell) => cells.push(cell),
                     None => {
                         let label = cell_label(
-                            workload, "lockstep", pipeline, "atomic", false, None, None, None,
+                            workload, "lockstep", pipeline, "atomic", false, None, false, None,
+                            None,
                         );
                         eprintln!("warning: bench cell {} could not run (skipped)", label);
                         skipped.push(label);
@@ -400,29 +416,49 @@ pub fn run_bench(opts: &BenchOptions) -> BenchReport {
             for &(shards, quantum) in SHARD_MATRIX {
                 let sharding = Some((shards, quantum));
                 match run_cell(
-                    workload, harts, "sharded", "inorder", "cache", false, sharding, None, false,
-                    runs, opts.quick,
+                    workload, harts, "sharded", "inorder", "cache", false, sharding, false, None,
+                    false, runs, opts.quick,
                 ) {
                     Some(cell) => cells.push(cell),
                     None => {
                         let label = cell_label(
-                            workload, "sharded", "inorder", "cache", false, sharding, None, None,
+                            workload, "sharded", "inorder", "cache", false, sharding, false, None,
+                            None,
                         );
                         eprintln!("warning: bench cell {} could not run (skipped)", label);
                         skipped.push(label);
                     }
                 }
             }
+            // Adaptive-quantum twin (DESIGN.md §15): the headline (4, 1024)
+            // sharded cell re-measured with the epoch controller on, so
+            // the adaptive-vs-fixed-quantum win is a single JSON ratio
+            // (`adaptive_q_speedup`).
+            let sharding = Some((4, 1024));
+            match run_cell(
+                workload, harts, "sharded", "inorder", "cache", false, sharding, true, None,
+                false, runs, opts.quick,
+            ) {
+                Some(cell) => cells.push(cell),
+                None => {
+                    let label = cell_label(
+                        workload, "sharded", "inorder", "cache", false, sharding, true, None, None,
+                    );
+                    eprintln!("warning: bench cell {} could not run (skipped)", label);
+                    skipped.push(label);
+                }
+            }
             // The o3 model on the 4-hart coherent configuration: the
             // dynamic tier must also hold up under multicore MESI timing.
             match run_cell(
-                workload, harts, "lockstep", "o3", "mesi", false, None, None, false, runs,
+                workload, harts, "lockstep", "o3", "mesi", false, None, false, None, false, runs,
                 opts.quick,
             ) {
                 Some(cell) => cells.push(cell),
                 None => {
-                    let label =
-                        cell_label(workload, "lockstep", "o3", "mesi", false, None, None, None);
+                    let label = cell_label(
+                        workload, "lockstep", "o3", "mesi", false, None, false, None, None,
+                    );
                     eprintln!("warning: bench cell {} could not run (skipped)", label);
                     skipped.push(label);
                 }
@@ -475,8 +511,11 @@ fn line_key(line: &str) -> Option<String> {
     let dispatch = json_str_field(line, "dispatch")?;
     let backend = json_str_field(line, "backend").unwrap_or_else(|| "microop".into());
     let traced = json_str_field(line, "obs").map(|o| format!("/{}", o)).unwrap_or_default();
+    let adaptive = json_field_raw(line, "adaptive_quantum") == Some("true");
     let shard = match (json_num_field(line, "shards"), json_num_field(line, "quantum")) {
-        (Some(s), Some(q)) => format!("[s{},q{}]", s as u64, q as u64),
+        (Some(s), Some(q)) => {
+            format!("[s{},q{}{}]", s as u64, q as u64, if adaptive { ",aq" } else { "" })
+        }
         _ => String::new(),
     };
     Some(format!(
@@ -581,11 +620,15 @@ impl BenchReport {
         self.coremark_mips("lookup")
     }
 
-    /// MIPS of the sharded multicore cell at `(shards, quantum)`.
+    /// MIPS of the fixed-quantum sharded multicore cell at
+    /// `(shards, quantum)` (the adaptive twin is excluded — it shares the
+    /// seed configuration but measures the controller).
     pub fn shard_mips(&self, shards: usize, quantum: u64) -> Option<f64> {
         self.cells
             .iter()
-            .find(|c| c.workload == "multicore" && c.sharding == Some((shards, quantum)))
+            .find(|c| {
+                c.workload == "multicore" && c.sharding == Some((shards, quantum)) && !c.adaptive
+            })
             .map(Cell::mips)
     }
 
@@ -593,6 +636,23 @@ impl BenchReport {
     pub fn shard_speedup_q1024(&self) -> Option<f64> {
         match (self.shard_mips(1, 1024), self.shard_mips(4, 1024)) {
             (Some(s1), Some(s4)) if s1 > 0.0 => Some(s4 / s1),
+            _ => None,
+        }
+    }
+
+    /// MIPS of the adaptive-quantum multicore twin (epoch controller on,
+    /// seeded at the headline S=4, q=1024 configuration).
+    pub fn adaptive_q_mips(&self) -> Option<f64> {
+        self.cells
+            .iter()
+            .find(|c| c.workload == "multicore" && c.adaptive)
+            .map(Cell::mips)
+    }
+
+    /// Adaptive-vs-fixed-quantum ratio on the headline S=4 sharded cell.
+    pub fn adaptive_q_speedup(&self) -> Option<f64> {
+        match (self.shard_mips(4, 1024), self.adaptive_q_mips()) {
+            (Some(fixed), Some(adaptive)) if fixed > 0.0 => Some(adaptive / fixed),
             _ => None,
         }
     }
@@ -638,6 +698,14 @@ impl BenchReport {
             s.push_str(&format!(
                 "multicore shard scaling @q1024: s1 {:.2} MIPS vs s4 {:.2} MIPS ({:.2}x)\n",
                 s1, s4, ratio
+            ));
+        }
+        if let (Some(fixed), Some(adaptive), Some(ratio)) =
+            (self.shard_mips(4, 1024), self.adaptive_q_mips(), self.adaptive_q_speedup())
+        {
+            s.push_str(&format!(
+                "multicore adaptive quantum @s4: fixed {:.2} MIPS vs adaptive {:.2} MIPS ({:.2}x)\n",
+                fixed, adaptive, ratio
             ));
         }
         if let (Some(micro), Some(native)) =
@@ -774,6 +842,11 @@ impl BenchReport {
                 // exact schema.
                 s.push_str(&format!("\"shards\": {}, \"quantum\": {}, ", shards, quantum));
             }
+            if cell.adaptive {
+                // Adaptive-quantum twin rows only: fixed-quantum rows keep
+                // their exact pre-adaptive schema.
+                s.push_str("\"adaptive_quantum\": true, ");
+            }
             if let Some(backend) = cell.backend {
                 // Native-backend rows only: micro-op rows keep their exact
                 // pre-native schema.
@@ -886,8 +959,16 @@ impl BenchReport {
             fmt_opt(self.shard_mips(4, 1024))
         ));
         s.push_str(&format!(
-            "  \"shard_speedup_s4_q1024\": {}\n",
+            "  \"shard_speedup_s4_q1024\": {},\n",
             fmt_opt(self.shard_speedup_q1024())
+        ));
+        s.push_str(&format!(
+            "  \"adaptive_q_mips\": {},\n",
+            fmt_opt(self.adaptive_q_mips())
+        ));
+        s.push_str(&format!(
+            "  \"adaptive_q_speedup\": {}\n",
+            fmt_opt(self.adaptive_q_speedup())
         ));
         s.push_str("}\n");
         s
@@ -903,7 +984,8 @@ mod tests {
     #[test]
     fn single_cell_runs_and_chains() {
         let cell = run_cell(
-            "coremark-lite", 1, "lockstep", "simple", "atomic", false, None, None, false, 1, true,
+            "coremark-lite", 1, "lockstep", "simple", "atomic", false, None, false, None, false,
+            1, true,
         )
         .expect("cell must run");
         assert!(cell.exit.is_some(), "workload must exit cleanly");
@@ -922,7 +1004,8 @@ mod tests {
     #[test]
     fn lookup_cell_has_no_chain_hits() {
         let cell = run_cell(
-            "coremark-lite", 1, "lockstep", "simple", "atomic", true, None, None, false, 1, true,
+            "coremark-lite", 1, "lockstep", "simple", "atomic", true, None, false, None, false,
+            1, true,
         )
         .expect("cell must run");
         assert_eq!(cell.engine_stats.chain_hits, 0);
@@ -941,6 +1024,7 @@ mod tests {
             dispatch: "chain",
             harts: 1,
             sharding: None,
+            adaptive: false,
             backend: None,
             obs: None,
             measurement: Measurement {
@@ -1092,6 +1176,7 @@ mod tests {
             dispatch: "chain",
             harts: 1,
             sharding: None,
+            adaptive: false,
             backend: None,
             obs: None,
             measurement: Measurement {
@@ -1142,6 +1227,16 @@ mod tests {
                    \"memory\": \"cache\", \"dispatch\": \"chain\", \"harts\": 4, \"shards\": 2, \
                    \"quantum\": 64, \"backend\": \"native\", \"mips\": 1.000000}";
         assert_eq!(line_key(row).unwrap(), "w sharded[s2,q64]/inorder+cache/chain/native");
+        // The adaptive-quantum marker keys the twin row distinctly from
+        // its fixed-quantum sibling.
+        let adaptive_row = "    {\"workload\": \"w\", \"mode\": \"sharded\", \
+                   \"pipeline\": \"inorder\", \"memory\": \"cache\", \"dispatch\": \"chain\", \
+                   \"harts\": 4, \"shards\": 4, \"quantum\": 1024, \
+                   \"adaptive_quantum\": true, \"mips\": 1.000000}";
+        assert_eq!(
+            line_key(adaptive_row).unwrap(),
+            "w sharded[s4,q1024,aq]/inorder+cache/chain/microop"
+        );
         assert_eq!(parse_baseline_cells("not json at all"), Vec::<(String, f64)>::new());
     }
 
@@ -1159,8 +1254,8 @@ mod tests {
         let report = run_bench(&opts);
         assert_eq!(
             report.cells.len(),
-            MATRIX.len() + SHARD_MATRIX.len() + 1,
-            "matrix + shard-scaling + o3 cells must all complete: {:?}",
+            MATRIX.len() + SHARD_MATRIX.len() + 2,
+            "matrix + shard-scaling + adaptive twin + o3 cells must all complete: {:?}",
             report.skipped
         );
         assert!(report.cells.iter().all(|c| c.exit.is_some()));
@@ -1179,9 +1274,21 @@ mod tests {
         assert!(report.shard_mips(1, 1024).is_some());
         assert!(report.shard_mips(4, 1024).is_some());
         assert!(report.shard_speedup_q1024().is_some());
+        // The adaptive twin: exactly one adaptive row, retiring the same
+        // guest work as its fixed-quantum sibling, keyed distinctly.
+        let adaptive: Vec<_> = report.cells.iter().filter(|c| c.adaptive).collect();
+        assert_eq!(adaptive.len(), 1);
+        assert_eq!(adaptive[0].sharding, Some((4, 1024)));
+        assert_eq!(adaptive[0].exit, Some(expected));
+        assert!(report.adaptive_q_mips().is_some());
+        assert!(report.adaptive_q_speedup().is_some());
         let json = report.to_json();
         assert!(json.contains("\"shards\": 4, \"quantum\": 1024"));
         assert!(json.contains("\"shard_speedup_s4_q1024\""));
+        assert!(json.contains("\"adaptive_q_mips\""));
+        assert!(json.contains("\"adaptive_q_speedup\""));
+        // The adaptive_quantum key appears on the twin row only.
+        assert_eq!(json.matches("\"adaptive_quantum\": true").count(), 1);
         // Non-sharded rows keep the pre-sharding schema (no shard keys on
         // a lockstep row).
         assert!(!json
@@ -1189,5 +1296,12 @@ mod tests {
             .any(|l| l.contains("\"mode\": \"lockstep\"") && l.contains("\"shards\"")));
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert!(report.table().contains("multicore sharded[s4,q1024]/inorder+cache"));
+        assert!(report.table().contains("multicore sharded[s4,q1024,aq]/inorder+cache"));
+        assert!(report.table().contains("multicore adaptive quantum @s4: fixed"));
+        // Round-trip: the twin and its sibling match their own baseline
+        // rows (distinct keys — neither reads as new/gone).
+        let cmp = report.compare(&json);
+        assert!(!cmp.contains("[new"), "{}", cmp);
+        assert!(!cmp.contains("[gone"), "{}", cmp);
     }
 }

@@ -21,6 +21,21 @@ pub enum EngineMode {
 }
 
 impl EngineMode {
+    /// Every engine mode, in presentation order — the registry diagnostics
+    /// (`--mode`/`--switch-to` errors, the self-tuning flag checks) derive
+    /// their candidate lists from here, mirroring `pipeline::MODELS`.
+    pub const MODES: [EngineMode; 4] = [
+        EngineMode::Interp,
+        EngineMode::Lockstep,
+        EngineMode::Parallel,
+        EngineMode::Sharded,
+    ];
+
+    /// `"interp|lockstep|parallel|sharded"` — for error messages.
+    pub fn names() -> String {
+        Self::MODES.map(|m| m.as_str()).join("|")
+    }
+
     pub fn parse(s: &str) -> Option<EngineMode> {
         match s {
             "interp" => Some(EngineMode::Interp),
@@ -83,6 +98,21 @@ pub struct SimConfig {
     /// bit-identical to the single-threaded lockstep engine; larger quanta
     /// trade bounded cross-shard timing skew for parallel speed.
     pub quantum: u64,
+    /// Sharded mode: enable the adaptive-quantum controller
+    /// (`--adaptive-quantum`, DESIGN.md §15). The barrier leader resizes
+    /// the quantum each epoch from the previous epoch's cross-shard
+    /// message count — deterministic, never wall-clock-driven.
+    pub adaptive_quantum: bool,
+    /// Adaptive-quantum floor (`--quantum-min`); defaults to
+    /// [`SimConfig::DEFAULT_QUANTUM_MIN`].
+    pub quantum_min: Option<u64>,
+    /// Adaptive-quantum ceiling (`--quantum-max`); defaults to
+    /// [`SimConfig::DEFAULT_QUANTUM_MAX`].
+    pub quantum_max: Option<u64>,
+    /// Sharded mode: re-cut the hart→shard assignment from per-hart
+    /// retirement rates every this many retired instructions
+    /// (`--repartition-every`); 0 = static partition.
+    pub repartition_every: u64,
     /// Enable analytics trace capture with this many records.
     pub trace_capacity: usize,
     /// A1 ablation: yield per instruction.
@@ -148,6 +178,10 @@ impl Default for SimConfig {
             line_shift: 6,
             shards: 1,
             quantum: 1024,
+            adaptive_quantum: false,
+            quantum_min: None,
+            quantum_max: None,
+            repartition_every: 0,
             trace_capacity: 0,
             naive_yield: false,
             no_chaining: false,
@@ -183,6 +217,19 @@ impl std::fmt::Display for ParseError {
 impl std::error::Error for ParseError {}
 
 impl SimConfig {
+    /// Adaptive-quantum default floor when `--quantum-min` is not given.
+    pub const DEFAULT_QUANTUM_MIN: u64 = 64;
+    /// Adaptive-quantum default ceiling when `--quantum-max` is not given.
+    pub const DEFAULT_QUANTUM_MAX: u64 = 16384;
+
+    /// The `[min, max]` band the adaptive-quantum controller operates in.
+    pub fn quantum_bounds(&self) -> (u64, u64) {
+        (
+            self.quantum_min.unwrap_or(Self::DEFAULT_QUANTUM_MIN),
+            self.quantum_max.unwrap_or(Self::DEFAULT_QUANTUM_MAX),
+        )
+    }
+
     /// Apply one `--key value` pair; returns Err on unknown keys/values.
     pub fn set(&mut self, key: &str, value: &str) -> Result<(), ParseError> {
         let bad = |what: &str| ParseError(format!("invalid value for --{}: {}", what, value));
@@ -212,8 +259,9 @@ impl SimConfig {
                 self.memory = value.into();
             }
             "mode" => {
-                self.mode = EngineMode::parse(value)
-                    .ok_or_else(|| ParseError(format!("unknown mode '{}'", value)))?;
+                self.mode = EngineMode::parse(value).ok_or_else(|| {
+                    ParseError(format!("unknown mode '{}' ({})", value, EngineMode::names()))
+                })?;
             }
             "max-insts" => self.max_insts = value.parse().map_err(|_| bad("max-insts"))?,
             "shards" => {
@@ -229,6 +277,34 @@ impl SimConfig {
                     return Err(bad("quantum"));
                 }
                 self.quantum = q;
+            }
+            "adaptive-quantum" => {
+                self.adaptive_quantum = match value {
+                    "true" | "on" | "1" => true,
+                    "false" | "off" | "0" => false,
+                    _ => return Err(bad("adaptive-quantum")),
+                };
+            }
+            "quantum-min" => {
+                let q: u64 = value.parse().map_err(|_| bad("quantum-min"))?;
+                if q == 0 {
+                    return Err(bad("quantum-min"));
+                }
+                self.quantum_min = Some(q);
+            }
+            "quantum-max" => {
+                let q: u64 = value.parse().map_err(|_| bad("quantum-max"))?;
+                if q == 0 {
+                    return Err(bad("quantum-max"));
+                }
+                self.quantum_max = Some(q);
+            }
+            "repartition-every" => {
+                let n: u64 = value.parse().map_err(|_| bad("repartition-every"))?;
+                if n == 0 {
+                    return Err(bad("repartition-every"));
+                }
+                self.repartition_every = n;
             }
             "line-bytes" => {
                 let b: u64 = value.parse().map_err(|_| bad("line-bytes"))?;
@@ -315,6 +391,47 @@ impl SimConfig {
         if self.shards > 32 {
             return Err(ParseError("shards must be in 1..=32".into()));
         }
+        // Self-tuning flags only mean something under the sharded engine's
+        // threaded driver — reject contradictory combinations instead of
+        // silently ignoring them (the diagnostics derive candidate lists
+        // from the registries, like the pipeline errors do).
+        let tuning = self.adaptive_quantum
+            || self.quantum_min.is_some()
+            || self.quantum_max.is_some()
+            || self.repartition_every > 0;
+        if tuning && self.mode != EngineMode::Sharded {
+            return Err(ParseError(format!(
+                "--adaptive-quantum/--quantum-min/--quantum-max/--repartition-every \
+                 require --mode sharded (engine modes: {}; --mode is {})",
+                EngineMode::names(),
+                self.mode.as_str()
+            )));
+        }
+        if tuning && self.quantum == 1 {
+            return Err(ParseError(
+                "--quantum 1 is the serialized verification schedule; the adaptive \
+                 controller and re-partitioning need the threaded driver (--quantum > 1)"
+                    .into(),
+            ));
+        }
+        if (self.quantum_min.is_some() || self.quantum_max.is_some()) && !self.adaptive_quantum {
+            return Err(ParseError(
+                "--quantum-min/--quantum-max only apply with --adaptive-quantum".into(),
+            ));
+        }
+        let (qmin, qmax) = self.quantum_bounds();
+        if self.adaptive_quantum && qmin > qmax {
+            return Err(ParseError(format!(
+                "--quantum-min {} exceeds --quantum-max {}",
+                qmin, qmax
+            )));
+        }
+        if self.repartition_every > 0 && self.shards < 2 {
+            return Err(ParseError(
+                "--repartition-every needs at least two shards to re-balance (--shards >= 2)"
+                    .into(),
+            ));
+        }
         if self.switch_at.is_some() {
             self.switch_target()?;
         }
@@ -338,6 +455,13 @@ impl SimConfig {
                      parallel engine (it does not track cycles)"
                         .into(),
                 ));
+            }
+            if self.mode == EngineMode::Sharded && mode != EngineMode::Sharded {
+                return Err(ParseError(format!(
+                    "--mode sharded with --sample measures under the sharded engine; \
+                     set --switch-to sharded:<pipeline>:<memory> (target mode is {})",
+                    mode.as_str()
+                )));
             }
             if self.switch_at.is_some() {
                 return Err(ParseError("--sample and --switch-at are mutually exclusive".into()));
@@ -369,8 +493,9 @@ pub fn parse_switch_target(s: &str) -> Result<(EngineMode, String, String), Pars
             s
         )));
     }
-    let mode = EngineMode::parse(parts[0])
-        .ok_or_else(|| ParseError(format!("unknown switch-to mode '{}'", parts[0])))?;
+    let mode = EngineMode::parse(parts[0]).ok_or_else(|| {
+        ParseError(format!("unknown switch-to mode '{}' ({})", parts[0], EngineMode::names()))
+    })?;
     if crate::pipeline::by_name(parts[1]).is_none() {
         return Err(ParseError(format!(
             "unknown switch-to pipeline '{}' ({})",
@@ -499,6 +624,95 @@ mod tests {
         c.validate().unwrap();
         c.set("ckpt-out", "/tmp/x.ckpt").unwrap();
         assert!(c.validate().is_err(), "--sample excludes checkpointing");
+    }
+
+    #[test]
+    fn adaptive_and_repartition_flags_validate() {
+        // Happy path: sharded, threaded quantum, bounds in order.
+        let mut c = SimConfig::default();
+        c.set("mode", "sharded").unwrap();
+        c.set("harts", "4").unwrap();
+        c.set("shards", "2").unwrap();
+        c.set("adaptive-quantum", "true").unwrap();
+        c.set("quantum-min", "64").unwrap();
+        c.set("quantum-max", "8192").unwrap();
+        c.set("repartition-every", "100000").unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.quantum_bounds(), (64, 8192));
+
+        // Defaults apply when the bounds are not given.
+        let mut c = SimConfig::default();
+        c.set("mode", "sharded").unwrap();
+        c.set("adaptive-quantum", "on").unwrap();
+        c.validate().unwrap();
+        assert_eq!(
+            c.quantum_bounds(),
+            (SimConfig::DEFAULT_QUANTUM_MIN, SimConfig::DEFAULT_QUANTUM_MAX)
+        );
+
+        // Self-tuning flags under a non-sharded mode are contradictory,
+        // and the diagnostic names the engine-mode registry.
+        let mut c = SimConfig::default();
+        c.set("adaptive-quantum", "true").unwrap();
+        let err = c.validate().unwrap_err();
+        assert!(err.0.contains("interp|lockstep|parallel|sharded"), "registry list: {}", err.0);
+
+        // Bounds without the controller are silently-dead flags — reject.
+        let mut c = SimConfig::default();
+        c.set("mode", "sharded").unwrap();
+        c.set("quantum-min", "64").unwrap();
+        assert!(c.validate().is_err(), "--quantum-min needs --adaptive-quantum");
+
+        // Inverted bounds.
+        let mut c = SimConfig::default();
+        c.set("mode", "sharded").unwrap();
+        c.set("adaptive-quantum", "true").unwrap();
+        c.set("quantum-min", "4096").unwrap();
+        c.set("quantum-max", "128").unwrap();
+        assert!(c.validate().is_err(), "inverted bounds rejected");
+
+        // The serialized schedule (quantum 1) has no barrier to tune.
+        let mut c = SimConfig::default();
+        c.set("mode", "sharded").unwrap();
+        c.set("quantum", "1").unwrap();
+        c.set("adaptive-quantum", "true").unwrap();
+        assert!(c.validate().is_err(), "adaptive under quantum 1 rejected");
+
+        // Re-partitioning a single shard cannot re-balance anything.
+        let mut c = SimConfig::default();
+        c.set("mode", "sharded").unwrap();
+        c.set("repartition-every", "100000").unwrap();
+        assert!(c.validate().is_err(), "--repartition-every with --shards 1 rejected");
+
+        // Zero values are rejected at parse time, like --quantum 0.
+        let mut c = SimConfig::default();
+        assert!(c.set("quantum-min", "0").is_err());
+        assert!(c.set("quantum-max", "0").is_err());
+        assert!(c.set("repartition-every", "0").is_err());
+        assert!(c.set("adaptive-quantum", "maybe").is_err());
+
+        // The mode registry itself drives the --mode diagnostic.
+        let err = c.set("mode", "warp").unwrap_err();
+        assert!(err.0.contains("interp|lockstep|parallel|sharded"), "registry list: {}", err.0);
+    }
+
+    #[test]
+    fn sampled_sharded_validation() {
+        // Sampling under --mode sharded must measure under the sharded
+        // engine: a non-sharded switch target would silently measure
+        // something else entirely.
+        let mut c = SimConfig::default();
+        c.set("mode", "sharded").unwrap();
+        c.set("harts", "4").unwrap();
+        c.set("shards", "2").unwrap();
+        c.set("sample", "4:1000:2000").unwrap();
+        let err = c.validate().unwrap_err();
+        assert!(err.0.contains("sharded:<pipeline>:<memory>"), "got: {}", err.0);
+        c.set("switch-to", "sharded:inorder:cache").unwrap();
+        c.validate().unwrap();
+        // The adaptive controller composes with sampling.
+        c.set("adaptive-quantum", "true").unwrap();
+        c.validate().unwrap();
     }
 
     #[test]

@@ -356,6 +356,13 @@ pub fn build_engine(cfg: &SimConfig, image: &Image) -> Box<dyn ExecutionEngine> 
                 system_over(cfg, Arc::clone(&phys))
             });
             eng.set_backend(cfg.backend, cfg.dump_native);
+            if cfg.adaptive_quantum {
+                let (qmin, qmax) = cfg.quantum_bounds();
+                eng.set_adaptive(qmin, qmax);
+            }
+            if cfg.repartition_every > 0 {
+                eng.set_repartition(cfg.repartition_every);
+            }
             eng.set_entry(image.entry);
             Box::new(eng)
         }
@@ -393,6 +400,13 @@ pub fn resume_engine(cfg: &SimConfig, snapshot: SystemSnapshot) -> Box<dyn Execu
                 system_over(cfg, Arc::clone(&phys))
             });
             eng.set_backend(cfg.backend, cfg.dump_native);
+            if cfg.adaptive_quantum {
+                let (qmin, qmax) = cfg.quantum_bounds();
+                eng.set_adaptive(qmin, qmax);
+            }
+            if cfg.repartition_every > 0 {
+                eng.set_repartition(cfg.repartition_every);
+            }
             eng.resume(snapshot);
             Box::new(eng)
         }

@@ -14,6 +14,12 @@
 //! messages in one cycle), so the drain order is a *total* order that
 //! depends only on what each shard deterministically produced — never on
 //! host-thread interleaving of the posts.
+//!
+//! The self-tuning engine (DESIGN.md §15) leaves this invariant
+//! untouched: adaptive epochs only move *where* the drain points fall
+//! (the quantum boundaries), and re-partitioning migrates pending
+//! messages with their shard's snapshot — the `(cycle, hart, seq)` keys
+//! are host-placement-independent, so the total order survives both.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;

@@ -25,12 +25,29 @@
 //!    as long as the guest's own cross-shard memory accesses are
 //!    data-race-free at quantum granularity (the mailboxed channels —
 //!    IPIs, AMO-built synchronisation — are always safe).
+//!
+//! The threaded driver can additionally self-tune (DESIGN.md §15), while
+//! keeping the same determinism contract:
+//!
+//!  * **Adaptive quantum** ([`ShardedEngine::set_adaptive`]): the barrier
+//!    leader resizes the quantum each epoch from the *previous* epoch's
+//!    cross-shard message count — shrinking toward the floor during
+//!    coherence storms so remote effects land sooner, growing toward the
+//!    ceiling while shards run private so the barrier tax fades. Every
+//!    controller input is a guest-visible counter, never wall-clock, so
+//!    results stay a pure function of (image, shards, policy).
+//!
+//!  * **Rate-driven re-partitioning** ([`ShardedEngine::set_repartition`]):
+//!    at fixed retired-instruction marks the engine re-cuts the contiguous
+//!    hart→shard assignment from per-hart retirement rates, migrating all
+//!    state through the suspend/resume snapshot merge path, so WFI-heavy
+//!    harts share a host thread instead of pinning one each.
 
 use crate::engine::mailbox::{Mailbox, Msg, MsgKind};
 use crate::engine::{exit_code, poll_interrupt, EngineStats, ExecutionEngine, ExitReason};
 use crate::fiber::shard::{ShardCore, WindowOutcome};
 use crate::isa::csr::SIMCTRL_ENGINE_SHARDED;
-use crate::obs::{EventKind, Harvest, TRACK_BARRIER_BASE};
+use crate::obs::{EventKind, Harvest, TRACK_BARRIER_BASE, TRACK_COORDINATOR};
 use crate::sys::{Hart, System, SystemSnapshot};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -72,6 +89,16 @@ impl SpinBarrier {
         }
     }
 
+    /// Backoff accounting for one spin iteration. Saturating: a
+    /// long-stalled wait (oversubscribed host, a sibling descheduled for
+    /// seconds) must stay in the yield phase forever — an unchecked `+= 1`
+    /// wraps after 2^32 iterations, which in a debug build is an overflow
+    /// panic that poisons the barrier with a misleading "sibling shard
+    /// panicked" diagnostic.
+    fn backoff_step(spins: u32) -> u32 {
+        spins.saturating_add(1)
+    }
+
     fn wait(&self) {
         self.check_poison();
         let generation = self.generation.load(Ordering::Acquire);
@@ -84,7 +111,7 @@ impl SpinBarrier {
         } else {
             let mut spins = 0u32;
             while self.generation.load(Ordering::Acquire) == generation {
-                spins += 1;
+                spins = SpinBarrier::backoff_step(spins);
                 if spins < 10_000 {
                     std::hint::spin_loop();
                 } else {
@@ -145,6 +172,10 @@ struct Decision {
     /// Per-shard instruction allowance for the next window (the global
     /// remaining budget; overshoot is bounded by one window per shard).
     allowance: u64,
+    /// The quantum this decision's window was placed with (constant
+    /// without the adaptive controller; shard 0 records changes as
+    /// timeline events).
+    quantum: u64,
 }
 
 /// Leader-owned cross-boundary state.
@@ -158,6 +189,9 @@ struct Control {
     /// second all-idle boundary at the same deadline means nobody can ever
     /// wake).
     last_idle_deadline: Option<u64>,
+    /// Current barrier quantum — resized per epoch by the adaptive
+    /// controller, otherwise pinned to the configured value.
+    cur_quantum: u64,
 }
 
 /// The sharded cycle-level execution engine.
@@ -176,6 +210,25 @@ pub struct ShardedEngine {
     /// Trace capture handed off from an earlier stage, parked across
     /// threaded legs (shard-private device state does not record).
     trace: Option<crate::analytics::trace::TraceCapture>,
+    /// Pipeline model name, kept for rebuilding cores at re-partition.
+    pipeline: String,
+    backend: crate::dbt::Backend,
+    dump_native: Option<u64>,
+    profile: bool,
+    /// Adaptive-quantum bounds `(min, max)`; `None` pins the quantum.
+    adaptive: Option<(u64, u64)>,
+    /// The controller's current quantum, persisted across `run` calls so a
+    /// resumed leg continues where the controller left off.
+    cur_quantum: u64,
+    /// Re-partition period in retired instructions; 0 disables.
+    repartition_every: u64,
+    /// Per-hart instret at the last re-partition (rate window base).
+    repart_base: Vec<u64>,
+    /// Stats folded out of cores that were torn down at a re-partition.
+    accum_stats: EngineStats,
+    /// Test hook: panic inside this shard's worker right after the initial
+    /// boundary report, exercising the poison/teardown recovery path.
+    pub fault_injection: Option<usize>,
 }
 
 /// Contiguous hart ranges for `shards` shards over `n` harts (shard count
@@ -189,6 +242,47 @@ pub fn partition(n: usize, shards: usize) -> Vec<(usize, usize)> {
         let count = div + usize::from(i < rem);
         ranges.push((base, count));
         base += count;
+    }
+    ranges
+}
+
+/// Contiguous hart ranges balanced by per-hart weight (retired-instruction
+/// rates): each shard greedily takes harts until it reaches an even share
+/// of the *remaining* weight, so a WFI-parked hart (weight ~0) packs with
+/// its busy neighbour instead of pinning a host thread. Every shard keeps
+/// at least one hart; all-zero weights fall back to the even cut.
+pub fn partition_weighted(weights: &[u64], shards: usize) -> Vec<(usize, usize)> {
+    let n = weights.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let s = shards.clamp(1, n);
+    let total: u64 = weights.iter().sum();
+    if total == 0 {
+        return partition(n, s);
+    }
+    let mut ranges = Vec::with_capacity(s);
+    let mut base = 0usize;
+    let mut assigned = 0u64;
+    for i in 0..s {
+        if i == s - 1 {
+            ranges.push((base, n - base));
+            break;
+        }
+        let left_weight = total - assigned;
+        let left_shards = (s - i) as u64;
+        // Ceiling of an even split of what's left — the greedy cut point.
+        let target = assigned + (left_weight + left_shards - 1) / left_shards;
+        // Leave at least one hart for each remaining shard.
+        let max_end = n - (s - i - 1);
+        let mut end = base + 1;
+        assigned += weights[base];
+        while end < max_end && assigned < target {
+            assigned += weights[end];
+            end += 1;
+        }
+        ranges.push((base, end - base));
+        base = end;
     }
     ranges
 }
@@ -248,7 +342,34 @@ impl ShardedEngine {
             exit: None,
             switch_request: None,
             trace: None,
+            pipeline: pipeline.to_string(),
+            backend: crate::dbt::Backend::default(),
+            dump_native: None,
+            profile: false,
+            adaptive: None,
+            cur_quantum: quantum,
+            repartition_every: 0,
+            repart_base: vec![0; num_harts],
+            accum_stats: EngineStats::default(),
+            fault_injection: None,
         }
+    }
+
+    /// Enable the adaptive-quantum controller (threaded mode only): the
+    /// barrier leader resizes the quantum within `[min, max]` from the
+    /// previous epoch's cross-shard message count. Deterministic — every
+    /// input is a guest-visible counter.
+    pub fn set_adaptive(&mut self, min: u64, max: u64) {
+        let min = min.max(1);
+        let max = max.max(min);
+        self.adaptive = Some((min, max));
+        self.cur_quantum = self.quantum.clamp(min, max);
+    }
+
+    /// Enable rate-driven re-partitioning every `every` retired
+    /// instructions (threaded mode only); 0 disables.
+    pub fn set_repartition(&mut self, every: u64) {
+        self.repartition_every = every;
     }
 
     pub fn shards(&self) -> usize {
@@ -268,6 +389,8 @@ impl ShardedEngine {
     /// core. A no-op beyond bookkeeping when `backend` is the default
     /// micro-op interpreter.
     pub fn set_backend(&mut self, backend: crate::dbt::Backend, dump_native: Option<u64>) {
+        self.backend = backend;
+        self.dump_native = dump_native;
         for core in &mut self.cores {
             core.backend = backend;
             core.dump_native = dump_native;
@@ -279,6 +402,87 @@ impl ShardedEngine {
             .iter()
             .position(|c| hart >= c.base && hart < c.base + c.harts.len())
             .expect("hart id out of range")
+    }
+
+    /// The current hart→shard ranges, derived from core bases so they stay
+    /// correct after a re-partition — and even while `suspend` has drained
+    /// the hart vectors (bases survive the drain).
+    fn core_ranges(&self) -> Vec<(usize, usize)> {
+        (0..self.cores.len())
+            .map(|s| {
+                let base = self.cores[s].base;
+                let end =
+                    self.cores.get(s + 1).map(|c| c.base).unwrap_or(self.num_harts);
+                (base, end - base)
+            })
+            .collect()
+    }
+
+    /// Re-cut the hart→shard assignment from the retirement rates of the
+    /// last re-partition window, migrating all state through the same
+    /// suspend/resume snapshot merge path an engine hand-off uses. A no-op
+    /// when the weighted cut matches the current one.
+    fn repartition_now(&mut self) {
+        // Per-hart retirement in the window just ended. Cores are kept in
+        // base order, so the flat-map enumerates global hart order.
+        let instret: Vec<u64> = self
+            .cores
+            .iter()
+            .flat_map(|c| c.harts.iter().map(|h| h.instret))
+            .collect();
+        let weights: Vec<u64> = instret
+            .iter()
+            .zip(self.repart_base.iter())
+            .map(|(now, base)| now.saturating_sub(*base))
+            .collect();
+        self.repart_base = instret;
+        let ranges = partition_weighted(&weights, self.systems.len());
+        let old_ranges = self.core_ranges();
+        if ranges == old_ranges {
+            return;
+        }
+        let owner_map = |ranges: &[(usize, usize)]| {
+            let mut owners = vec![0usize; self.num_harts];
+            for (s, &(base, count)) in ranges.iter().enumerate() {
+                for owner in owners.iter_mut().skip(base).take(count) {
+                    *owner = s;
+                }
+            }
+            owners
+        };
+        let moved = owner_map(&ranges)
+            .iter()
+            .zip(owner_map(&old_ranges).iter())
+            .filter(|(a, b)| a != b)
+            .count() as u64;
+        let snapshot = self.suspend();
+        // Stats live on the cores being torn down: fold them into the
+        // engine-level accumulator first so `stats()` stays monotonic.
+        for core in &self.cores {
+            self.accum_stats.merge(&core.stats);
+        }
+        let pipeline = self.pipeline.clone();
+        self.cores = ranges
+            .iter()
+            .map(|&(base, count)| {
+                let mut core = ShardCore::new(base, count, &pipeline);
+                core.record_msgs = true;
+                core.backend = self.backend;
+                core.dump_native = self.dump_native;
+                if self.profile {
+                    core.set_profile(true);
+                }
+                core
+            })
+            .collect();
+        self.resume(snapshot);
+        // Record the decision on the coordinator track: the boundary cycle
+        // is the max hart cycle (the barrier end every hart stopped at).
+        let cycle =
+            self.cores.iter().flat_map(|c| c.harts.iter().map(|h| h.cycle)).max().unwrap_or(0);
+        if let Some(obs) = self.systems[0].obs.as_deref_mut() {
+            obs.record(cycle, TRACK_COORDINATOR, EventKind::ShardRepartition { moved });
+        }
     }
 
     // -----------------------------------------------------------------------
@@ -389,28 +593,37 @@ impl ShardedEngine {
             return ExitReason::SwitchRequest(value);
         }
         let shards = self.cores.len();
-        let quantum = self.quantum;
         let owner: Vec<usize> = (0..self.num_harts).map(|h| self.owner_of(h)).collect();
         let inboxes: Vec<Mailbox> = (0..shards).map(|_| Mailbox::new()).collect();
         let barrier = SpinBarrier::new(shards);
         let reports: Vec<Mutex<ShardReport>> =
             (0..shards).map(|_| Mutex::new(ShardReport::default())).collect();
+        let failures: Mutex<Vec<String>> = Mutex::new(Vec::new());
         let start_retired: u64 = self.cores.iter().map(|c| c.total_instret()).sum();
         let control = Mutex::new(Control {
-            decision: Decision { stop: None, end: 0, wake: None, allowance: max_insts },
+            decision: Decision {
+                stop: None,
+                end: 0,
+                wake: None,
+                allowance: max_insts,
+                quantum: self.cur_quantum,
+            },
             console: Vec::new(),
             start_retired,
             last_idle_deadline: None,
+            cur_quantum: self.cur_quantum,
         });
         let shared = BoundaryShared {
             inboxes: &inboxes,
             barrier: &barrier,
             reports: &reports,
             control: &control,
+            failures: &failures,
             owner: &owner,
-            quantum,
             shards,
             max_insts,
+            adaptive: self.adaptive,
+            fault: self.fault_injection,
         };
 
         let mut pairs: Vec<(usize, &mut ShardCore, &mut System)> = self
@@ -424,14 +637,29 @@ impl ShardedEngine {
             let rest = pairs.split_off(1);
             for (si, core, sys) in rest {
                 let shared = &shared;
-                scope.spawn(move || shard_worker(si, core, sys, shared));
+                scope.spawn(move || run_guarded(si, core, sys, shared));
             }
             let (si, core, sys) = pairs.pop().expect("shard 0");
-            shard_worker(si, core, sys, &shared);
+            run_guarded(si, core, sys, &shared);
         });
 
-        let mut ctl = control.into_inner().expect("control poisoned");
+        // Teardown must not manufacture a *second* panic out of poisoned
+        // state: a shard that died mid-window leaves its report and the
+        // control mutex poisoned, and `decision.stop` unset. Recover every
+        // payload via `into_inner` and surface the original shard failure
+        // — preferring a recorded root cause over the "barrier poisoned"
+        // echoes the sibling shards die with.
+        let failures = failures.into_inner().unwrap_or_else(|e| e.into_inner());
+        let mut ctl = control.into_inner().unwrap_or_else(|e| e.into_inner());
         self.console.append(&mut ctl.console);
+        self.cur_quantum = ctl.cur_quantum;
+        if !failures.is_empty() {
+            let root = failures
+                .iter()
+                .find(|m| !m.contains("quantum barrier poisoned"))
+                .unwrap_or(&failures[0]);
+            panic!("sharded run failed: {}", root);
+        }
         let reason = ctl.decision.stop.expect("threaded run stopped without a decision");
         match reason {
             ExitReason::Exited(code) => self.exit = Some(code),
@@ -458,13 +686,46 @@ struct BoundaryShared<'a> {
     barrier: &'a SpinBarrier,
     reports: &'a [Mutex<ShardReport>],
     control: &'a Mutex<Control>,
+    /// Panic messages captured by [`run_guarded`], one per dead shard.
+    failures: &'a Mutex<Vec<String>>,
     owner: &'a [usize],
-    quantum: u64,
     shards: usize,
     max_insts: u64,
+    /// Adaptive-quantum bounds; `None` pins the configured quantum.
+    adaptive: Option<(u64, u64)>,
+    /// Test hook: the worker for this shard index panics at startup.
+    fault: Option<usize>,
 }
 
-/// Publish this shard's boundary report.
+/// Run one shard's worker, converting a panic into a recorded failure.
+/// The unwind still poisons the barrier (the guard drops inside the
+/// catch), so siblings stop; but the thread then exits cleanly instead of
+/// re-throwing into `std::thread::scope` — which would panic the whole
+/// scope *before* `run_threaded`'s teardown could report anything better
+/// than "a scoped thread panicked". The teardown re-raises the recorded
+/// root cause instead of the cascade of "barrier poisoned" echoes.
+fn run_guarded(si: usize, core: &mut ShardCore, sys: &mut System, shared: &BoundaryShared<'_>) {
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        shard_worker(si, core, sys, shared)
+    }));
+    if let Err(payload) = result {
+        let msg = payload
+            .downcast_ref::<&'static str>()
+            .map(|s| (*s).to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "non-string panic payload".to_string());
+        shared
+            .failures
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(format!("shard {} panicked: {}", si, msg));
+    }
+}
+
+/// Publish this shard's boundary report. Lock recovery rather than
+/// `expect`: a poisoned report means a sibling died mid-boundary, and the
+/// useful diagnostic is *that* failure (already captured by
+/// [`run_guarded`]), not a "report poisoned" panic from this shard.
 fn publish_report(
     si: usize,
     core: &ShardCore,
@@ -473,7 +734,7 @@ fn publish_report(
     msgs_sent: usize,
     shared: &BoundaryShared<'_>,
 ) {
-    let mut rep = shared.reports[si].lock().expect("report poisoned");
+    let mut rep = shared.reports[si].lock().unwrap_or_else(|e| e.into_inner());
     rep.outcome = outcome;
     rep.min_runnable = core
         .harts
@@ -497,7 +758,7 @@ fn publish_report(
 
 /// The barrier leader: fold the shard reports into the next decision.
 fn decide(shared: &BoundaryShared<'_>) {
-    let mut ctl = shared.control.lock().expect("control poisoned");
+    let mut ctl = shared.control.lock().unwrap_or_else(|e| e.into_inner());
     let mut exit: Option<u64> = None;
     let mut switch: Option<u64> = None;
     let mut all_idle = true;
@@ -506,7 +767,7 @@ fn decide(shared: &BoundaryShared<'_>) {
     let mut retired = 0u64;
     let mut msgs = 0usize;
     for slot in shared.reports {
-        let mut rep = slot.lock().expect("report poisoned");
+        let mut rep = slot.lock().unwrap_or_else(|e| e.into_inner());
         // Console bytes merge in (boundary, shard) order — a deterministic
         // quantum-granular interleaving.
         ctl.console.append(&mut rep.console);
@@ -524,7 +785,23 @@ fn decide(shared: &BoundaryShared<'_>) {
     }
     let consumed = retired - ctl.start_retired;
     let prev_end = ctl.decision.end;
-    let quantum = shared.quantum;
+    // Adaptive controller (DESIGN.md §15): multiplicative, driven only by
+    // the previous epoch's cross-shard message count. A storm — more
+    // messages than shards at one boundary — halves the quantum toward
+    // the floor so remote effects land sooner; a fully private epoch
+    // doubles it toward the ceiling so the barrier tax fades. The middle
+    // band holds steady, giving the controller hysteresis.
+    if let Some((qmin, qmax)) = shared.adaptive {
+        let q = ctl.cur_quantum;
+        ctl.cur_quantum = if msgs > shared.shards {
+            (q / 2).max(qmin)
+        } else if msgs == 0 {
+            q.saturating_mul(2).min(qmax)
+        } else {
+            q
+        };
+    }
+    let quantum = ctl.cur_quantum;
     let next_multiple = |c: u64| (c / quantum + 1) * quantum;
 
     let mut decision = Decision {
@@ -536,6 +813,7 @@ fn decide(shared: &BoundaryShared<'_>) {
         }),
         wake: None,
         allowance: shared.max_insts.saturating_sub(consumed),
+        quantum,
     };
     if let Some(code) = exit {
         decision.stop = Some(ExitReason::Exited(code));
@@ -672,9 +950,14 @@ fn shard_worker(si: usize, core: &mut ShardCore, sys: &mut System, shared: &Boun
     // fails loudly together.
     let _poison_guard = BarrierPoisonGuard(shared.barrier);
     let mut prev_end = 0u64;
+    // Last quantum this shard recorded a timeline event for (leader only).
+    let mut last_quantum = 0u64;
     // Initial boundary: publish starting positions so the leader can place
     // the first window.
     publish_report(si, core, sys, None, 0, shared);
+    if shared.fault == Some(si) {
+        panic!("injected shard fault (test hook)");
+    }
     loop {
         // Barrier stall timing (obs layer): only the duration is
         // host-dependent; the event's (cycle, track) stamp follows the
@@ -697,7 +980,21 @@ fn shard_worker(si: usize, core: &mut ShardCore, sys: &mut System, shared: &Boun
                 );
             }
         }
-        let decision = shared.control.lock().expect("control poisoned").decision;
+        let decision = shared.control.lock().unwrap_or_else(|e| e.into_inner()).decision;
+        // Epoch decisions are timeline events: shard 0 records every
+        // controller resize at the deterministic boundary cycle. Gated on
+        // the adaptive option so plain sharded runs keep byte-identical
+        // canonical obs streams.
+        if si == 0 && shared.adaptive.is_some() && decision.quantum != last_quantum {
+            last_quantum = decision.quantum;
+            if let Some(obs) = sys.obs.as_deref_mut() {
+                obs.record(
+                    prev_end,
+                    TRACK_COORDINATOR,
+                    EventKind::QuantumAdjust { quantum: decision.quantum },
+                );
+            }
+        }
         // Coast idle sleepers through the window they sat out (their WFI
         // burns simulated time), then deliver the mailbox and poll them —
         // a delivered IPI/msip/timer wake takes effect at this boundary.
@@ -792,9 +1089,24 @@ impl ExecutionEngine for ShardedEngine {
             return ExitReason::Exited(code);
         }
         if self.quantum == 1 {
-            self.run_serialized(budget)
-        } else {
-            self.run_threaded(budget)
+            return self.run_serialized(budget);
+        }
+        if self.repartition_every == 0 {
+            return self.run_threaded(budget);
+        }
+        // Re-partitioning: chunk the budget at the re-partition period and
+        // re-cut between chunks. The chunk boundary is counted in retired
+        // instructions — a guest-visible quantity — so the re-partition
+        // schedule is as deterministic as the barrier schedule itself.
+        let mut remaining = budget;
+        loop {
+            let before = self.total_instret();
+            let reason = self.run_threaded(remaining.min(self.repartition_every));
+            remaining = remaining.saturating_sub(self.total_instret() - before);
+            if !matches!(reason, ExitReason::StepLimit) || remaining == 0 {
+                return reason;
+            }
+            self.repartition_now();
         }
     }
 
@@ -823,11 +1135,8 @@ impl ExecutionEngine for ShardedEngine {
         let mut exit = self.exit;
         let mut brk = 0u64;
         let mut mmap_top = 0u64;
-        for (core_range, sys) in partition(self.num_harts, self.systems.len())
-            .into_iter()
-            .zip(self.systems.iter_mut())
-        {
-            let (base, count) = core_range;
+        let ranges = self.core_ranges();
+        for ((base, count), sys) in ranges.into_iter().zip(self.systems.iter_mut()) {
             for g in base..base + count {
                 ipi[g] |= sys.ipi[g];
                 msip[g] = sys.bus.clint.msip[g];
@@ -867,8 +1176,9 @@ impl ExecutionEngine for ShardedEngine {
             Arc::ptr_eq(&snapshot.phys, &self.systems[0].phys),
             "snapshot must be resumed over its own guest DRAM"
         );
+        let ranges = self.core_ranges();
         for (s, sys) in self.systems.iter_mut().enumerate() {
-            let (base, count) = partition(self.num_harts, self.cores.len())[s];
+            let (base, count) = ranges[s];
             // Members get real CLINT/IPI state; remote entries start
             // neutral (they are diff-forwarded mailboxes, not state).
             for g in 0..self.num_harts {
@@ -893,7 +1203,9 @@ impl ExecutionEngine for ShardedEngine {
     }
 
     fn stats(&self) -> EngineStats {
-        let mut stats = EngineStats::default();
+        // Cores torn down at re-partitions folded their stats into the
+        // engine accumulator; live cores contribute directly.
+        let mut stats = self.accum_stats;
         for core in &self.cores {
             stats.merge(&core.stats);
         }
@@ -943,6 +1255,7 @@ impl ExecutionEngine for ShardedEngine {
     }
 
     fn set_profile(&mut self, on: bool) {
+        self.profile = on;
         for core in &mut self.cores {
             core.set_profile(on);
         }
@@ -1162,5 +1475,155 @@ mod tests {
             ExecutionEngine::run(&mut eng, u64::MAX),
             ExitReason::Exited((100_000u64 * 100_001 / 2) & u64::MAX)
         );
+    }
+
+    #[test]
+    fn spin_barrier_backoff_saturates_instead_of_overflowing() {
+        // Regression (ISSUE 10): the spin counter must saturate. Before
+        // the fix, `spins += 1` overflowed after 2^32 iterations of a
+        // long-stalled wait, which in a debug build panicked and poisoned
+        // the barrier with a misleading "sibling shard panicked".
+        assert_eq!(SpinBarrier::backoff_step(u32::MAX), u32::MAX);
+        assert_eq!(SpinBarrier::backoff_step(u32::MAX - 1), u32::MAX);
+        assert_eq!(SpinBarrier::backoff_step(0), 1);
+    }
+
+    #[test]
+    fn shard_panic_surfaces_original_failure() {
+        // Regression (ISSUE 10): a panicking shard must surface *its own*
+        // failure from `run`, not a second misleading panic out of the
+        // poisoned report/control mutexes on the teardown path.
+        let img = countdown_img(100_000);
+        let mut eng = sharded_with(&img, 2, 2, 64, "simple");
+        eng.fault_injection = Some(1);
+        // The injected panic and the sibling's poison panic both print via
+        // the global hook before being caught; silence them for the
+        // duration so the test log stays readable.
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            ExecutionEngine::run(&mut eng, 1_000_000)
+        }));
+        std::panic::set_hook(hook);
+        let payload = result.expect_err("run must fail when a shard panics");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "non-string payload".to_string());
+        assert!(
+            msg.contains("injected shard fault"),
+            "teardown must surface the original shard panic, got: {}",
+            msg
+        );
+        assert!(
+            !msg.contains("report poisoned") && !msg.contains("without a decision"),
+            "teardown must not re-panic on poisoned state, got: {}",
+            msg
+        );
+    }
+
+    #[test]
+    fn adaptive_quantum_reruns_bit_identical_and_bounded() {
+        // Determinism contract (DESIGN.md §15): with the controller on,
+        // results are a pure function of (image, shards, policy) — three
+        // fresh engines over the same image must agree bit-for-bit, and
+        // the controller must land inside its configured bounds.
+        let img = countdown_img(50_000);
+        let run_once = || {
+            let mut eng = sharded_with(&img, 4, 2, 256, "simple");
+            eng.set_adaptive(16, 4096);
+            let reason = ExecutionEngine::run(&mut eng, u64::MAX);
+            assert!(
+                (16..=4096).contains(&eng.cur_quantum),
+                "controller out of bounds: {}",
+                eng.cur_quantum
+            );
+            (reason, eng.per_hart(), eng.cur_quantum)
+        };
+        let first = run_once();
+        assert!(matches!(first.0, ExitReason::Exited(_)));
+        for _ in 0..2 {
+            assert_eq!(run_once(), first, "adaptive rerun diverged");
+        }
+    }
+
+    #[test]
+    fn partition_weighted_balances_rates() {
+        // A single hot hart gets its own shard; the idle tail packs.
+        assert_eq!(partition_weighted(&[100, 0, 0, 0], 2), vec![(0, 1), (1, 3)]);
+        // A hot tail leaves the idle prefix together.
+        assert_eq!(partition_weighted(&[0, 0, 0, 10], 2), vec![(0, 3), (3, 1)]);
+        // Uniform rates reproduce the even cut.
+        assert_eq!(partition_weighted(&[10, 10, 10, 10], 2), vec![(0, 2), (2, 2)]);
+        // All-idle windows fall back to the even cut too.
+        assert_eq!(partition_weighted(&[0, 0, 0, 0], 2), partition(4, 2));
+        // Shards clamp to harts.
+        assert_eq!(partition_weighted(&[5], 4), vec![(0, 1)]);
+        // Ranges always cover 0..n contiguously with non-empty shards.
+        for (weights, s) in [
+            (vec![1u64, 1000, 1, 1, 1000, 1], 3usize),
+            (vec![7, 0, 0, 9, 2], 2),
+            (vec![1; 32], 5),
+        ] {
+            let ranges = partition_weighted(&weights, s);
+            let mut next = 0;
+            for (base, count) in ranges {
+                assert_eq!(base, next);
+                assert!(count > 0);
+                next = base + count;
+            }
+            assert_eq!(next, weights.len());
+        }
+    }
+
+    /// Hart 0 runs the countdown and exits; every other hart parks in WFI
+    /// immediately — the rate-skewed workload re-partitioning targets.
+    fn skewed_img(n: i64) -> Image {
+        let mut a = Assembler::new(DRAM_BASE);
+        let sleep = a.new_label();
+        a.csrr(T0, crate::isa::csr::CSR_MHARTID);
+        a.bnez(T0, sleep);
+        a.li(A0, n);
+        a.li(A1, 0);
+        let top = a.here();
+        a.add(A1, A1, A0);
+        a.addi(A0, A0, -1);
+        a.bnez(A0, top);
+        a.mv(A0, A1);
+        a.li(A7, 93);
+        a.ecall();
+        a.bind(sleep);
+        let spin = a.here();
+        a.wfi();
+        a.j(spin);
+        a.finish()
+    }
+
+    #[test]
+    fn repartition_preserves_results_and_rebalances() {
+        const N: i64 = 100_000;
+        let img = skewed_img(N);
+        let expected = ExitReason::Exited((N as u64) * (N as u64 + 1) / 2);
+        // Baseline: static partition.
+        let mut baseline = sharded_with(&img, 4, 2, 64, "simple");
+        assert_eq!(ExecutionEngine::run(&mut baseline, u64::MAX), expected);
+        // Re-partitioning run: same guest result, and the weighted cut
+        // must have isolated the one hot hart after the first window.
+        let run_once = || {
+            let mut eng = sharded_with(&img, 4, 2, 64, "simple");
+            eng.set_repartition(10_000);
+            let reason = ExecutionEngine::run(&mut eng, u64::MAX);
+            let ranges = eng.core_ranges();
+            (reason, ranges, eng.per_hart())
+        };
+        let first = run_once();
+        assert_eq!(first.0, expected, "re-partitioning changed the guest result");
+        assert_eq!(
+            first.1,
+            vec![(0, 1), (1, 3)],
+            "the hot hart must end up isolated on its own shard"
+        );
+        // Deterministic: a rerun reproduces partition and timing exactly.
+        assert_eq!(run_once(), first, "re-partitioned rerun diverged");
     }
 }

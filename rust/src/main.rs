@@ -124,6 +124,20 @@ run options:
                      exact lockstep schedule (bit-identical to --mode
                      lockstep); larger Q runs shards concurrently with
                      cross-shard effects delivered at quantum boundaries
+  --adaptive-quantum sharded mode: let the barrier leader resize the
+                     quantum each epoch from the previous epoch's
+                     cross-shard message count (shrink during coherence
+                     storms, grow while shards run private). Driven only
+                     by guest-visible counters, so runs stay bit-identical
+                     across reruns (DESIGN.md \u{a7}15)
+  --quantum-min Q    adaptive-quantum floor (default 64)
+  --quantum-max Q    adaptive-quantum ceiling (default 16384)
+  --repartition-every N
+                     sharded mode: every N retired instructions, re-cut the
+                     hart->shard assignment from per-hart retirement rates
+                     (WFI-heavy harts pack together instead of pinning a
+                     host thread); state migrates through the snapshot
+                     merge path (requires --shards >= 2)
   --max-insts N      instruction budget (per hart in parallel mode)
   --switch-at N      engine hand-off: after N retired instructions (per
                      hart in parallel mode), suspend the engine and
@@ -657,6 +671,7 @@ fn main() {
                         top = n.max(1);
                     }
                     "naive-yield" => cfg.naive_yield = true,
+                    "adaptive-quantum" => cfg.adaptive_quantum = true,
                     "no-chaining" => cfg.no_chaining = true,
                     "no-l0" => cfg.no_l0 = true,
                     "console" => cfg.console = true,

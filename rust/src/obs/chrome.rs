@@ -43,6 +43,10 @@ fn chrome_args(e: &Event) -> String {
             shard, count, inbound
         )),
         EventKind::TraceWindow { on } => args.push_str(&format!(",\"on\":{}", on)),
+        EventKind::QuantumAdjust { quantum } => {
+            args.push_str(&format!(",\"quantum\":{}", quantum))
+        }
+        EventKind::ShardRepartition { moved } => args.push_str(&format!(",\"moved\":{}", moved)),
     }
     args
 }

@@ -53,6 +53,13 @@ pub enum EventKind {
     MailboxBatch { shard: u32, count: u64, inbound: bool },
     /// The guest opened (`on`) or closed its SIMCTRL trace window.
     TraceWindow { on: bool },
+    /// The adaptive-quantum controller resized the barrier quantum
+    /// (DESIGN.md §15); recorded by shard 0 on the coordinator track at
+    /// the epoch boundary the new quantum takes effect.
+    QuantumAdjust { quantum: u64 },
+    /// The engine re-cut the hart→shard assignment from retirement rates;
+    /// `moved` is the number of harts that changed shards.
+    ShardRepartition { moved: u64 },
 }
 
 impl EventKind {
@@ -69,6 +76,8 @@ impl EventKind {
             EventKind::BarrierWait { .. } => "barrier_wait",
             EventKind::MailboxBatch { .. } => "mailbox_batch",
             EventKind::TraceWindow { .. } => "trace_window",
+            EventKind::QuantumAdjust { .. } => "quantum_adjust",
+            EventKind::ShardRepartition { .. } => "shard_repartition",
         }
     }
 
@@ -88,6 +97,8 @@ impl EventKind {
                 format!("shard={} count={} inbound={}", shard, count, inbound)
             }
             EventKind::TraceWindow { on } => format!("on={}", on),
+            EventKind::QuantumAdjust { quantum } => format!("quantum={}", quantum),
+            EventKind::ShardRepartition { moved } => format!("moved={}", moved),
         }
     }
 }

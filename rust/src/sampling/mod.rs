@@ -27,6 +27,20 @@
 //! engine schedule outright; guest SIMCTRL engine-switch requests during a
 //! sampled run are dropped (the leg's configuration is rebuilt over the
 //! same guest state and execution continues).
+//!
+//! **Sampling under `--mode sharded`** (DESIGN.md §15): with a
+//! `sharded:<pipeline>:<memory>` switch target (validation requires one),
+//! the measured windows run under the sharded engine — `--shards`,
+//! `--quantum` and the self-tuning flags carry into every measured leg.
+//! Per-window model-stat attribution works across shards because the
+//! window edges fan out through the engine: `reset_model_stats` zeroes
+//! every shard-private memory model at the warm-up/measure edge, and the
+//! window's `model_stats` sum the shard-private counters by key. The
+//! counters themselves were produced under the deterministic barrier
+//! schedule (messages applied in `(cycle, hart, seq)` order), so a window
+//! is as reproducible as the sharded run it is cut from — and at
+//! `--quantum 1` bit-identical to the same window measured under the
+//! single-threaded lockstep engine.
 
 pub mod stats;
 
@@ -244,8 +258,16 @@ pub fn run_sampled(cfg: &SimConfig, image: &Image) -> RunReport {
     ff.memory = "atomic".into();
     ff.sample = None;
     ff.switch_at = None;
+    // Sharded self-tuning flags describe the *measured* engine; the
+    // functional fast-forward leg never sees a barrier.
+    ff.adaptive_quantum = false;
+    ff.quantum_min = None;
+    ff.quantum_max = None;
+    ff.repartition_every = 0;
 
-    // Measured leg: the --switch-to target (validated non-parallel).
+    // Measured leg: the --switch-to target (validated non-parallel; under
+    // --mode sharded, validated to be the sharded engine itself, so the
+    // shards/quantum/self-tuning flags carry into every measured window).
     let (mode, pipeline, memory) = cfg.switch_target().expect("validated");
     let mut meas = cfg.clone();
     meas.mode = mode;

@@ -31,6 +31,7 @@ pub const WORKLOADS: &[(&str, &str)] = &[
     ("dedup", "parallel rolling-hash dedup with shared hash table (PARSEC-dedup role)"),
     ("memlat", "dependent pointer chase, 64 KiB working set (MemLat role)"),
     ("multicore", "per-hart private xorshift kernels + AMO join (shard scaling)"),
+    ("multicore-nojoin", "join-free multicore variant (threaded-sharding determinism gates)"),
     ("spinlock", "2+ harts contending an LR/SC spinlock (MESI validation)"),
     ("vm-sv39", "Sv39 paging enabled; countdown under translation"),
     ("hello", "SBI console hello world"),
@@ -43,6 +44,7 @@ pub fn build(name: &str, harts: usize) -> Option<Image> {
         "dedup" => Some(dedup::build(harts, dedup::DEFAULT_CHUNKS)),
         "memlat" => Some(memlat::build(64 << 10, 200_000)),
         "multicore" => Some(multicore::build(harts, 200_000)),
+        "multicore-nojoin" => Some(multicore::build_nojoin(200_000)),
         "spinlock" => Some(spinlock::build(harts.max(2), 2_000)),
         "vm-sv39" => Some(vm::build(500)),
         "hello" => Some(hello()),
@@ -63,6 +65,7 @@ pub fn build_bench(name: &str, harts: usize, quick: bool) -> Option<Image> {
         "dedup" => Some(dedup::build(harts, 8)),
         "memlat" => Some(memlat::build(16 << 10, 20_000)),
         "multicore" => Some(multicore::build(harts, 5_000)),
+        "multicore-nojoin" => Some(multicore::build_nojoin(5_000)),
         "spinlock" => Some(spinlock::build(harts.max(2), 200)),
         "vm-sv39" => Some(vm::build(100)),
         "hello" => Some(hello()),

@@ -1,0 +1,290 @@
+//! Self-tuning sharded engine: determinism and sampled-measurement
+//! suites (DESIGN.md §15).
+//!
+//! * **Adaptive quantum**: the per-epoch controller is driven only by
+//!   guest-visible counters, so for a fixed `(image, shards, policy)` the
+//!   full run report — exit, registers, per-hart counters, model stats,
+//!   console — must reproduce bit-for-bit across reruns.
+//!
+//! * **Rate-driven re-partitioning**: migrating harts between shards
+//!   through the snapshot merge path must preserve architectural results
+//!   and stay just as reproducible.
+//!
+//! * **Sampling under sharding**: with `quantum == 1` the sharded engine
+//!   serializes into the exact lockstep schedule, so every sampled
+//!   window's counters must match a lockstep-measured run bit-for-bit;
+//!   and at quantum > 1 the sampled CPI estimate must bracket the
+//!   unsharded truth.
+
+use r2vm::asm::*;
+use r2vm::coordinator::{build_engine, run_image, run_sampled, EngineMode, SimConfig};
+use r2vm::engine::{ExecutionEngine, ExitReason};
+use r2vm::isa::csr::CSR_MHARTID;
+use r2vm::mem::DRAM_BASE;
+use r2vm::sys::Hart;
+use r2vm::workloads::{coremark, multicore};
+
+const BUDGET: u64 = 100_000_000;
+
+/// Everything a run can observably produce.
+struct EndState {
+    exit: ExitReason,
+    per_hart: Vec<(u64, u64)>,
+    model_stats: Vec<(&'static str, u64)>,
+    console: String,
+    harts: Vec<Hart>,
+}
+
+fn run_end_state(cfg: &SimConfig, img: &Image) -> EndState {
+    let mut eng = build_engine(cfg, img);
+    let exit = eng.run(BUDGET);
+    let model_stats = eng.model_stats();
+    let console = eng.console();
+    let snap = eng.suspend();
+    EndState {
+        exit,
+        per_hart: snap.harts.iter().map(|h| (h.cycle, h.instret)).collect(),
+        model_stats,
+        console,
+        harts: snap.harts,
+    }
+}
+
+fn assert_bit_identical(a: &EndState, b: &EndState, ctx: &str) {
+    assert_eq!(a.exit, b.exit, "{}: exit", ctx);
+    assert_eq!(a.per_hart, b.per_hart, "{}: per-hart (cycle, instret)", ctx);
+    assert_eq!(a.model_stats, b.model_stats, "{}: model counters", ctx);
+    assert_eq!(a.console, b.console, "{}: console", ctx);
+    for (h, (x, y)) in a.harts.iter().zip(b.harts.iter()).enumerate() {
+        assert_eq!(x.regs, y.regs, "{}: hart {} registers", ctx, h);
+        assert_eq!(x.pc, y.pc, "{}: hart {} pc", ctx, h);
+        assert_eq!(x.instret, y.instret, "{}: hart {} instret", ctx, h);
+        assert_eq!(x.cycle, y.cycle, "{}: hart {} cycle", ctx, h);
+    }
+}
+
+/// 4-hart inorder+cache sharded configuration with the epoch controller
+/// on, built through the CLI parsing path so the flag plumbing is
+/// exercised end to end.
+fn adaptive_cfg(shards: usize, quantum: u64) -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.harts = 4;
+    cfg.pipeline = "inorder".into();
+    cfg.memory = "cache".into();
+    cfg.mode = EngineMode::Sharded;
+    cfg.shards = shards;
+    cfg.quantum = quantum;
+    cfg.set("adaptive-quantum", "on").unwrap();
+    cfg.set("quantum-min", "16").unwrap();
+    cfg.set("quantum-max", "4096").unwrap();
+    cfg.validate().expect("adaptive sharded configuration must validate");
+    cfg
+}
+
+// ---------------------------------------------------------------------------
+// Adaptive-quantum determinism
+// ---------------------------------------------------------------------------
+
+/// Fixed `(image, shards, policy)`: three adaptive runs agree on
+/// everything, for S in {2, 4}.
+#[test]
+fn adaptive_quantum_reruns_bit_identical() {
+    const ITERS: u32 = 1_500;
+    let img = multicore::build_nojoin(ITERS);
+    let want = ExitReason::Exited(multicore::expected_sum_hart0(ITERS));
+    for shards in [2usize, 4] {
+        let cfg = adaptive_cfg(shards, 256);
+        let first = run_end_state(&cfg, &img);
+        assert_eq!(first.exit, want, "S={}: adaptive run must exit with the checksum", shards);
+        for round in 1..3 {
+            let again = run_end_state(&cfg, &img);
+            assert_bit_identical(&first, &again, &format!("adaptive S={} rerun {}", shards, round));
+        }
+    }
+}
+
+/// Adaptive quantum plus rate-driven re-partitioning together: results
+/// match the untuned static run's architectural outcome, and the tuned
+/// runs reproduce bit-for-bit.
+#[test]
+fn tuning_with_repartition_preserves_results_and_reproduces() {
+    const ITERS: u32 = 4_000;
+    let img = multicore::build_nojoin(ITERS);
+    let want = ExitReason::Exited(multicore::expected_sum_hart0(ITERS));
+
+    let mut static_cfg = SimConfig::default();
+    static_cfg.harts = 4;
+    static_cfg.pipeline = "inorder".into();
+    static_cfg.memory = "cache".into();
+    static_cfg.mode = EngineMode::Sharded;
+    static_cfg.shards = 2;
+    static_cfg.quantum = 256;
+    let static_run = run_end_state(&static_cfg, &img);
+    assert_eq!(static_run.exit, want);
+
+    let mut cfg = adaptive_cfg(2, 256);
+    cfg.set("repartition-every", "20000").unwrap();
+    cfg.validate().unwrap();
+    let tuned = run_end_state(&cfg, &img);
+    assert_eq!(tuned.exit, want, "tuning must not change the computed result");
+    let again = run_end_state(&cfg, &img);
+    assert_bit_identical(&tuned, &again, "tuned rerun");
+}
+
+// ---------------------------------------------------------------------------
+// Sampling under sharding
+// ---------------------------------------------------------------------------
+
+/// Per-window counters of a sampled run, in comparable form (CPI by bit
+/// pattern — the windows must match exactly, not approximately).
+type WindowRecord = (u32, u64, u64, u64, Vec<(&'static str, u64)>);
+
+fn sampled_windows(cfg: &SimConfig, img: &Image) -> (ExitReason, Vec<WindowRecord>) {
+    let report = run_sampled(cfg, img);
+    let sampling = report.sampling.as_ref().expect("sampled run carries a summary");
+    let windows = sampling
+        .samples
+        .iter()
+        .map(|s| (s.index, s.insts, s.cycles, s.cpi.to_bits(), s.model_stats.clone()))
+        .collect();
+    (report.exit, windows)
+}
+
+/// Quantum 1 serializes the sharded engine into the lockstep schedule:
+/// every sampled window's counters — instructions, cycles, CPI bits,
+/// memory-model stats — must be bit-identical to the lockstep-measured
+/// run, on coremark and the 4-hart MESI multicore workload.
+#[test]
+fn q1_sampled_windows_bit_identical_to_lockstep() {
+    struct Case {
+        name: &'static str,
+        img: Image,
+        harts: usize,
+        pipeline: &'static str,
+        memory: &'static str,
+    }
+    let cases = [
+        Case {
+            name: "coremark",
+            img: coremark::build(2),
+            harts: 1,
+            pipeline: "inorder",
+            memory: "cache",
+        },
+        Case {
+            name: "multicore-mesi",
+            img: multicore::build_nojoin(20_000),
+            harts: 4,
+            pipeline: "inorder",
+            memory: "mesi",
+        },
+    ];
+    for case in &cases {
+        let mut lockstep = SimConfig::default();
+        lockstep.harts = case.harts;
+        lockstep.set("sample", "3:500:2000:8000").unwrap();
+        lockstep
+            .set("switch-to", &format!("lockstep:{}:{}", case.pipeline, case.memory))
+            .unwrap();
+        lockstep.validate().unwrap();
+        let (ref_exit, ref_windows) = sampled_windows(&lockstep, &case.img);
+        assert!(!ref_windows.is_empty(), "{}: reference run must record windows", case.name);
+
+        for shards in [1usize, 2] {
+            let mut sharded = SimConfig::default();
+            sharded.harts = case.harts;
+            sharded.mode = EngineMode::Sharded;
+            sharded.shards = shards;
+            sharded.quantum = 1;
+            sharded.pipeline = case.pipeline.into();
+            sharded.memory = case.memory.into();
+            sharded.set("sample", "3:500:2000:8000").unwrap();
+            sharded
+                .set("switch-to", &format!("sharded:{}:{}", case.pipeline, case.memory))
+                .unwrap();
+            sharded.validate().unwrap();
+            let (exit, windows) = sampled_windows(&sharded, &case.img);
+            assert_eq!(exit, ref_exit, "{} S={} Q=1: exit", case.name, shards);
+            assert_eq!(
+                windows, ref_windows,
+                "{} S={} Q=1: sampled windows must match lockstep bit-for-bit",
+                case.name, shards
+            );
+        }
+    }
+}
+
+/// A 2-hart all-register workload: hart 0 runs the accumulating
+/// countdown and exits with the sum; hart 1 spins in pure arithmetic.
+/// Under `simple+atomic` every instruction is one cycle, so the true CPI
+/// is exactly 1 on both harts.
+fn two_hart_uniform(n: i64) -> Image {
+    let mut a = Assembler::new(DRAM_BASE);
+    let spin = a.new_label();
+    a.csrr(T0, CSR_MHARTID);
+    a.bnez(T0, spin);
+    a.li(A0, n);
+    a.li(A1, 0);
+    let top = a.here();
+    a.add(A1, A1, A0);
+    a.addi(A0, A0, -1);
+    a.bnez(A0, top);
+    a.mv(A0, A1);
+    a.li(A7, 93);
+    a.ecall();
+    a.bind(spin);
+    let forever = a.here();
+    a.addi(T1, T1, 1);
+    a.j(forever);
+    a.finish()
+}
+
+/// At quantum > 1 the threaded sharded engine's sampled CPI estimate
+/// must bracket the unsharded truth (the acceptance bound for sampled
+/// measurement under sharding).
+#[test]
+fn sampled_sharded_cpi_brackets_unsharded() {
+    const N: i64 = 150_000;
+    let img = two_hart_uniform(N);
+
+    // Unsharded truth: a full lockstep run under the measured models.
+    let mut full = SimConfig::default();
+    full.harts = 2;
+    full.pipeline = "simple".into();
+    let r = run_image(&full, &img);
+    assert_eq!(r.exit, ExitReason::Exited(N as u64 * (N as u64 + 1) / 2));
+    let (cycles, insts) =
+        r.per_hart.iter().fold((0u64, 0u64), |(c, i), &(hc, hi)| (c + hc, i + hi));
+    let true_cpi = cycles as f64 / insts as f64;
+    assert!((true_cpi - 1.0).abs() < 1e-9, "simple+atomic is CPI=1 by construction");
+
+    // Sampled estimate measured in the threaded sharded engine.
+    let mut cfg = SimConfig::default();
+    cfg.harts = 2;
+    cfg.mode = EngineMode::Sharded;
+    cfg.shards = 2;
+    cfg.quantum = 64;
+    cfg.set("sample", "4:500:2000:2000").unwrap();
+    cfg.set("switch-to", "sharded:simple:atomic").unwrap();
+    cfg.validate().unwrap();
+    let report = run_sampled(&cfg, &img);
+    let sampling = report.sampling.as_ref().expect("sampled run carries a summary");
+    assert_eq!(sampling.samples.len(), 4, "all periods measured");
+    for s in &sampling.samples {
+        assert!(s.insts >= 2_000, "window covered its budget: {}", s.insts);
+        assert!(
+            (s.cpi - 1.0).abs() < 1e-9,
+            "uniform workload: every sharded window is CPI=1, got {}",
+            s.cpi
+        );
+    }
+    let (mean, ci) = (sampling.mean_cpi, sampling.ci95);
+    assert!(
+        mean - ci - 1e-9 <= true_cpi && true_cpi <= mean + ci + 1e-9,
+        "sharded CI [{} ± {}] must bracket the unsharded CPI {}",
+        mean,
+        ci,
+        true_cpi
+    );
+    assert_eq!(report.exit, r.exit, "sampled sharded run completes the program");
+}
